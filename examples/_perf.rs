@@ -1,0 +1,20 @@
+use emmerald::bench::{gemm_flops, Bencher, FlushMode};
+use emmerald::blas::{Matrix, Transpose};
+use emmerald::gemm::{avx2, simd, BlockParams};
+fn main() {
+    for n in [320usize, 448, 640] {
+        let a = Matrix::random(n, n, 1, -1.0, 1.0);
+        let b = Matrix::random(n, n, 2, -1.0, 1.0);
+        let mut c = Matrix::zeros(n, n);
+        let flops = gemm_flops(n, n, n);
+        for (name, is_avx) in [("sse", false), ("avx2", true)] {
+            let p = if is_avx { BlockParams::emmerald_avx2() } else { BlockParams::emmerald_sse() };
+            let mut be = Bencher::new(2, 7).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+            let r = be.run(name, flops, || {
+                if is_avx { avx2::gemm(&p, Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut()); }
+                else { simd::gemm(&p, Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut()); }
+            });
+            println!("{name} n={n}: median {:.0} best {:.0} MFlop/s", r.mflops(), r.mflops_best());
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Design-choice sensitivity study: how the simulated Emmerald rate
+//! responds to the machine's cache geometry — the experiment behind the
+//! paper's parameter choices (kb=336 exists *because* L1 is 16 KB; the
+//! re-buffering exists *because* the DTLB has 64 entries).
+//!
+//! ```bash
+//! cargo run --release --example cache_sensitivity
+//! ```
+
+use emmerald::sim::cache::CacheConfig;
+use emmerald::sim::hierarchy::Hierarchy;
+use emmerald::sim::piii::{coppermine_600, piii_450, MachineSpec};
+use emmerald::sim::trace::{trace_emmerald, trace_naive, Layout};
+use emmerald::util::table::{fnum, Table};
+
+fn emmerald_mflops(machine: &MachineSpec, size: usize, stride: usize, kb: usize) -> f64 {
+    let mut h = machine.hierarchy();
+    let lay = Layout::with_stride(stride);
+    trace_emmerald(&mut h, size, size, size, &lay, kb, 192, 5, true);
+    let flops = 2.0 * (size as f64).powi(3);
+    let cycles = flops / 2.2 + h.stats().stall_cycles as f64;
+    flops / (cycles / (machine.clock_mhz * 1e6)) / 1e6
+}
+
+fn naive_mflops_with(mut h: Hierarchy, clock_mhz: f64, size: usize, stride: usize) -> f64 {
+    let lay = Layout::with_stride(stride);
+    trace_naive(&mut h, size, size, size, &lay);
+    let flops = 2.0 * (size as f64).powi(3);
+    let cycles = flops / 0.66 + h.stats().stall_cycles as f64;
+    flops / (cycles / (clock_mhz * 1e6)) / 1e6
+}
+
+fn main() {
+    let size = 320usize;
+    let stride = 700usize;
+
+    // ------------------------------------------------ L1 capacity vs kb
+    // Probe at size 672 so every kb candidate is fully exercised
+    // (kb_eff = min(kb, k)); panel bytes = kb × 5 × 4.
+    println!("== kb (panel depth) vs L1 capacity — why the paper picked 336 ==");
+    let kb_probe = 672usize;
+    let mut t = Table::new(["L1", "kb=84", "kb=168", "kb=336", "kb=672"]);
+    for l1_kb in [8usize, 16, 32] {
+        let mut machine = piii_450();
+        machine.l1 = CacheConfig { capacity: l1_kb * 1024, ways: 4, line_bytes: 32 };
+        let mut row = vec![format!("{l1_kb} KB")];
+        for kb in [84usize, 168, 336, 672] {
+            row.push(fnum(emmerald_mflops(&machine, kb_probe, kb_probe, kb), 0));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+    println!("expected: the best kb tracks the L1 size; at 16 KB (the PIII), 336 is near-optimal.\n");
+
+    // ------------------------------------------------ TLB entries
+    println!("== TLB size — why re-buffering minimises TLB misses ==");
+    let mut t = Table::new(["DTLB entries", "emmerald", "naive"]);
+    for entries in [16usize, 64, 256] {
+        let mut machine = piii_450();
+        machine.tlb_entries = entries;
+        let emm = emmerald_mflops(&machine, size, stride, 336);
+        let nai = naive_mflops_with(machine.hierarchy(), machine.clock_mhz, 160, stride);
+        t.row([format!("{entries}"), fnum(emm, 0), fnum(nai, 0)]);
+    }
+    println!("{}", t.render());
+    println!("expected: emmerald is insensitive (packed panels are page-dense);\nnaive's strided column walks live and die by the TLB.\n");
+
+    // ------------------------------------------------ machine presets
+    println!("== machine presets ==");
+    let mut t = Table::new(["machine", "emmerald @320", "x clock"]);
+    for machine in [piii_450(), emmerald::sim::piii_550(), coppermine_600()] {
+        let m = emmerald_mflops(&machine, size, 320, 336);
+        t.row([machine.name.to_string(), fnum(m, 0), fnum(m / machine.clock_mhz, 2)]);
+    }
+    println!("{}", t.render());
+    println!("paper: 890 (1.97x) on the 450; 940 large-matrix on the 550.");
+}

@@ -1,0 +1,57 @@
+//! Reproduce Fig. 2 on the simulated Pentium III — the paper's own units.
+//!
+//! ```bash
+//! cargo run --release --example piii_sim
+//! cargo run --release --example piii_sim -- --clock 550 --sizes 320,448
+//! ```
+
+use emmerald::sim::{piii_450, piii_550, simulate_gemm, Algorithm};
+use emmerald::util::cli::Cli;
+use emmerald::util::table::{fnum, Table};
+
+fn main() {
+    let cli = Cli::new("piii_sim", "simulated-PIII GEMM rates (Fig. 2 in paper units)")
+        .opt("sizes", "16,32,64,96,128,192,256,320,448", "comma-separated sizes")
+        .opt("stride", "700", "fixed row stride (paper methodology)")
+        .opt("clock", "450", "450 or 550 MHz");
+    let m = cli.parse();
+    let machine = if m.get_u64("clock").unwrap() == 550 { piii_550() } else { piii_450() };
+    let stride = m.get_usize("stride").unwrap();
+
+    println!(
+        "{} — peak SSE {} MFlop/s; paper's Emmerald peak: 890 @ size 320\n",
+        machine.name,
+        machine.peak_sse_mflops()
+    );
+    let mut table = Table::new([
+        "size",
+        "naive",
+        "atlas",
+        "emmerald",
+        "emm x clock",
+        "emm/atlas",
+        "emm L1 hit%",
+    ]);
+    for tok in m.get("sizes").unwrap().split(',') {
+        let size: usize = tok.trim().parse().expect("size");
+        let st = stride.max(size);
+        let n = simulate_gemm(&machine, Algorithm::Naive, size, st);
+        let a = simulate_gemm(&machine, Algorithm::Atlas, size, st);
+        let e = simulate_gemm(&machine, Algorithm::Emmerald, size, st);
+        table.row([
+            size.to_string(),
+            fnum(n.mflops, 0),
+            fnum(a.mflops, 0),
+            fnum(e.mflops, 0),
+            fnum(e.mflops / machine.clock_mhz, 2),
+            fnum(e.mflops / a.mflops, 2),
+            fnum(e.stats.l1.hit_rate() * 100.0, 1),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "paper: Emmerald avg (size>100) = 1.69 × clock = 2.09 × ATLAS; peak 1.97 × clock.\n\
+         The simulated curves should show the same ordering, the same flat\n\
+         Emmerald profile, and ATLAS ≈ 0.83 × clock."
+    );
+}

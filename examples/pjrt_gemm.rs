@@ -1,0 +1,58 @@
+//! Run the AOT-compiled Pallas GEMM artifacts from Rust via PJRT and
+//! compare them with the native backends — the L1↔RT bridge in isolation.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example pjrt_gemm
+//! ```
+
+use emmerald::bench::{gemm_flops, Bencher};
+use emmerald::blas::{sgemm, Backend, Matrix, Transpose};
+use emmerald::runtime::{PjrtGemm, Runtime};
+use emmerald::util::cli::Cli;
+use emmerald::util::table::{fnum, Table};
+
+fn main() {
+    let cli = Cli::new("pjrt_gemm", "execute Pallas GEMM artifacts through PJRT")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("samples", "3", "timing samples");
+    let m = cli.parse();
+    let rt = Runtime::new(m.get("artifacts").unwrap())
+        .expect("artifacts missing — run `make artifacts`");
+    println!("PJRT platform: {}\n", rt.platform());
+
+    let mut table = Table::new(["artifact", "size", "max|err| vs naive", "PJRT MFlop/s"]);
+    for name in rt.registry().names() {
+        if !name.starts_with("gemm_") {
+            continue;
+        }
+        let g = PjrtGemm::new(&rt, &name).expect("bind artifact");
+        let n = g.n;
+        let a = Matrix::random(n, n, 1, -1.0, 1.0);
+        let b = Matrix::random(n, n, 2, -1.0, 1.0);
+
+        // Correctness vs the native naive oracle.
+        let mut c_ref = Matrix::zeros(n, n);
+        let ldc = c_ref.ld();
+        sgemm(Backend::Naive, Transpose::No, Transpose::No, n, n, n, 1.0, a.data(), n, b.data(), n, 0.0, c_ref.data_mut(), ldc)
+            .unwrap();
+        let out = g.matmul(a.data(), b.data()).expect("pjrt execute");
+        let err = out
+            .iter()
+            .zip(c_ref.data())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+
+        // Rate (compiled executable is cached; this times execution only).
+        let mut bencher = Bencher::new(1, m.get_usize("samples").unwrap());
+        let r = bencher.run(&name, gemm_flops(n, n, n), || {
+            let _ = g.matmul(a.data(), b.data()).unwrap();
+        });
+        table.row([name.clone(), n.to_string(), format!("{err:.2e}"), fnum(r.mflops(), 1)]);
+    }
+    println!("{}", table.render());
+    println!(
+        "note: interpret-mode Pallas lowers the tile schedule to plain HLO loops —\n\
+         these rates measure the artifact path end-to-end, not TPU kernel speed\n\
+         (real-TPU performance is estimated in DESIGN.md §Hardware-Adaptation)."
+    );
+}

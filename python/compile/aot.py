@@ -1,0 +1,159 @@
+"""AOT lowering: jax/Pallas graphs -> artifacts/*.hlo.txt + manifest.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``make artifacts`` target). Python never runs after this step; the Rust
+binary loads the text artifacts through PJRT.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.emmerald import emmerald_matmul  # noqa: F401  (re-export for tests)
+from .kernels.naive import naive_matmul
+
+GEMM_SIZES = (64, 128, 256, 320, 512)
+
+MANIFEST_NAME = "manifest.txt"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(s) -> str:
+    dims = "x".join(str(d) for d in s.shape)
+    return f"f32[{dims}]" if dims else "f32[]"
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+class Artifact:
+    """One lowered graph + its manifest row."""
+
+    def __init__(self, name, fn, in_specs, flops, extra=""):
+        self.name = name
+        self.fn = fn
+        self.in_specs = in_specs
+        self.flops = flops
+        self.extra = extra
+
+    def lower_and_write(self, out_dir) -> str:
+        lowered = jax.jit(self.fn).lower(*self.in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{self.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        inputs = ",".join(_shape_str(s) for s in self.in_specs)
+        return (
+            f"name={self.name} file={fname} inputs={inputs} "
+            f"flops={self.flops:.0f}"
+            + (f" extra={self.extra}" if self.extra else "")
+        )
+
+
+def build_artifacts():
+    """The full artifact set (every graph the Rust side loads)."""
+    arts = []
+
+    # GEMM artifacts: one per benchmark size, Emmerald kernel.
+    for n in GEMM_SIZES:
+        arts.append(
+            Artifact(
+                name=f"gemm_{n}",
+                fn=model.gemm_fn,
+                in_specs=[_spec((n, n)), _spec((n, n))],
+                flops=2.0 * n * n * n,
+                extra="kernel:emmerald-pallas",
+            )
+        )
+
+    # A naive (un-tiled) comparator at one size, for the PJRT bench.
+    arts.append(
+        Artifact(
+            name="gemm_naive_320",
+            fn=lambda a, b: (naive_matmul(a, b),),
+            in_specs=[_spec((320, 320)), _spec((320, 320))],
+            flops=2.0 * 320**3,
+            extra="kernel:naive-pallas",
+        )
+    )
+
+    # The MLP application (paper section 4).
+    sizes = model.LAYER_SIZES
+    batch = model.BATCH
+    pshapes = []
+    for (w, b) in model.param_shapes(sizes):
+        pshapes.extend([_spec(w), _spec(b)])
+    sizes_str = "-".join(str(s) for s in sizes)
+
+    arts.append(
+        Artifact(
+            name="mlp_forward",
+            fn=model.forward_fn,
+            in_specs=pshapes + [_spec((batch, sizes[0]))],
+            flops=model.train_step_flops(sizes, batch) / 3.0,
+            extra=f"sizes:{sizes_str},batch:{batch},params:{model.param_count(sizes)}",
+        )
+    )
+    arts.append(
+        Artifact(
+            name="mlp_grad",
+            fn=model.grad_fn,
+            in_specs=pshapes + [_spec((batch, sizes[0])), _spec((batch, sizes[-1]))],
+            flops=model.train_step_flops(sizes, batch),
+            extra=f"sizes:{sizes_str},batch:{batch},params:{model.param_count(sizes)}",
+        )
+    )
+    return arts
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--only", default="", help="comma-separated artifact names to (re)build"
+    )
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(filter(None, args.only.split(",")))
+
+    rows = []
+    for art in build_artifacts():
+        if only and art.name not in only:
+            continue
+        row = art.lower_and_write(args.out_dir)
+        rows.append(row)
+        print(f"[aot] {row}", file=sys.stderr)
+
+    # The manifest is written last so `make` sees a complete artifact set
+    # or none (manifest.txt is the Makefile's stamp file).
+    if not only:
+        with open(os.path.join(args.out_dir, MANIFEST_NAME), "w") as f:
+            f.write("# emmerald artifact manifest: name/file/inputs/flops[/extra]\n")
+            f.write("\n".join(rows) + "\n")
+        print(f"[aot] wrote {len(rows)} artifacts + {MANIFEST_NAME} to {args.out_dir}",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

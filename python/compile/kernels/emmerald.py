@@ -1,0 +1,146 @@
+"""L1: the Emmerald GEMM as a Pallas kernel — the TPU rethink.
+
+The paper's insight is *maximise register-level reuse per memory access and
+block for the fastest memory*. On the PIII that meant: five dot products
+accumulated in XMM registers, a 336x5 panel of B re-buffered into the 16 KB
+L1, rows of A streamed with prefetch. The TPU mapping (DESIGN.md
+section Hardware-Adaptation):
+
+* XMM accumulators  -> a VMEM accumulator tile held across the k-grid
+  (the output block is revisited with the k index innermost).
+* 4-wide mulps/addps dot products -> the MXU systolic matmul over
+  (bm x bk) @ (bk x bn) tiles.
+* L1 re-buffered B' panel -> BlockSpec-staged VMEM tiles; the index maps
+  express the same HBM->fast-memory schedule the paper hand-coded.
+* SSE prefetch of A' -> Pallas grid pipelining (tile N+1 is copied while
+  tile N multiplies).
+
+The kernel is lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers the same schedule to
+plain HLO that runs anywhere (see /opt/xla-example/README.md). Real-TPU
+performance is therefore *estimated*, not measured — see EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-aligned (128 lanes) and VMEM-sized. With f32,
+# a (128,128) A-tile + (128,128) B-tile + (128,128) accumulator is 192 KiB,
+# far under the ~16 MiB VMEM budget; production would widen bn/bk, but the
+# structure is what matters here (interpret mode gives no TPU timing).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: o[i,j] (+)= a[i,k] @ b[k,j].
+
+    The k axis is the innermost grid dimension, so the (i, j) output block
+    stays resident (the VMEM analogue of the paper's register
+    accumulation) while k-tiles stream through.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, rows, cols):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def emmerald_matmul(
+    a,
+    b,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+):
+    """C = A @ B with Emmerald-style blocked accumulation.
+
+    Shapes need not be multiples of the tile sizes; operands are
+    zero-padded to the grid and the result sliced back (zero padding is
+    exact for matmul).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    assert a.dtype == b.dtype == jnp.float32, "SGEMM is f32"
+
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    gm, gn, gk = pl.cdiv(m, bm_), pl.cdiv(n, bn_), pl.cdiv(k, bk_)
+    a_p = _pad_to(a, gm * bm_, gk * bk_)
+    b_p = _pad_to(b, gk * bk_, gn * bn_)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm_, gn * bn_), jnp.float32),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def emmerald_sgemm(
+    a,
+    b,
+    c,
+    alpha=1.0,
+    beta=0.0,
+    *,
+    transa: bool = False,
+    transb: bool = False,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+):
+    """Full SGEMM: C' = alpha * op(A) op(B) + beta * C via the kernel."""
+    opa = a.T if transa else a
+    opb = b.T if transb else b
+    prod = emmerald_matmul(opa, opb, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return alpha * prod + beta * c
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4):
+    """Estimated VMEM bytes for one grid step (A-tile + B-tile + C-tile),
+    x2 for Pallas double-buffering of the streamed inputs.
+
+    Used by DESIGN.md section Perf to justify tile choices in lieu of real
+    TPU timing.
+    """
+    a_tile = bm * bk * dtype_bytes
+    b_tile = bk * bn * dtype_bytes
+    c_tile = bm * bn * dtype_bytes
+    return 2 * (a_tile + b_tile) + c_tile
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int, bn: int, bk: int):
+    """Fraction of MXU-issued flops that are useful (non-padding), i.e.
+    2mnk / (2 * ceil-padded volume). 1.0 when tiles divide the problem."""
+    gm, gn, gk = -(-m // bm), -(-n // bn), -(-k // bk)
+    useful = 2.0 * m * n * k
+    issued = 2.0 * (gm * bm) * (gn * bn) * (gk * bk)
+    return useful / issued

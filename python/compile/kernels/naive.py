@@ -1,0 +1,27 @@
+"""The naive comparator as a Pallas kernel: one program, no tiling.
+
+This is the Pallas analogue of the paper's three-loop multiply: the entire
+operands are brought into (V)MEM as a single block and multiplied in one
+step. On a real TPU this caps the problem at what fits VMEM and loses all
+pipelining — exactly the "no blocking" baseline the paper draws in Fig. 2.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _naive_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def naive_matmul(a, b, *, interpret: bool = True):
+    """C = A @ B with a single un-tiled Pallas program."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    return pl.pallas_call(
+        _naive_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

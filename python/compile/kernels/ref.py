@@ -1,0 +1,25 @@
+"""Pure-jnp SGEMM oracle.
+
+The correctness reference for the Pallas kernels: a direct transcription of
+the Level-3 BLAS SGEMM contract with no tiling, no Pallas, no cleverness.
+Every kernel test asserts allclose against this.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_matmul(a, b):
+    """Plain C = A @ B in f32."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def ref_sgemm(a, b, c, alpha=1.0, beta=0.0, transa=False, transb=False):
+    """Full SGEMM semantics: C' = alpha * op(A) op(B) + beta * C.
+
+    Mirrors the Rust `blas::sgemm` contract (row-major logical matrices;
+    transposition is logical).
+    """
+    opa = a.T if transa else a
+    opb = b.T if transb else b
+    prod = jnp.matmul(opa, opb, preferred_element_type=jnp.float32)
+    return alpha * prod + beta * c

@@ -1,0 +1,142 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the Rust runtime.
+
+Two families:
+
+* ``gemm_fn`` — plain C = A @ B through the Emmerald Pallas kernel; one
+  artifact per benchmark size.
+* the MLP — the paper's section 4 application (ref [1]: ultra-large-scale
+  neural-network training with Emmerald as the kernel). Forward, loss and
+  gradient graphs all funnel their matmuls through the same Pallas kernel,
+  so the full training step exercises the L1 kernel end-to-end.
+
+Everything here runs at *build* time only; the Rust coordinator executes
+the lowered HLO through PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.emmerald import emmerald_matmul
+
+# The paper's application trains networks with "more than one million
+# adjustable parameters" (section 4). These sizes give ~0.86M.
+LAYER_SIZES = (256, 768, 768, 10)
+BATCH = 64
+DEFAULT_LR = 0.05
+
+
+# --------------------------------------------------------------------------
+# Kernel-backed matmul with a custom VJP so jax.grad differentiates through
+# the Pallas call (both tangent matmuls also go through the kernel — the
+# backward pass is Emmerald all the way down).
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def k_matmul(a, b):
+    """C = A @ B through the Emmerald Pallas kernel."""
+    return emmerald_matmul(a, b)
+
+
+def _k_matmul_fwd(a, b):
+    return k_matmul(a, b), (a, b)
+
+
+def _k_matmul_bwd(res, g):
+    a, b = res
+    return emmerald_matmul(g, b.T), emmerald_matmul(a.T, g)
+
+
+k_matmul.defvjp(_k_matmul_fwd, _k_matmul_bwd)
+
+
+# --------------------------------------------------------------------------
+# GEMM artifact builders
+# --------------------------------------------------------------------------
+def gemm_fn(a, b):
+    """The artifact body for gemm_<n>: a 1-tuple (rust unwraps to_tuple1)."""
+    return (emmerald_matmul(a, b),)
+
+
+# --------------------------------------------------------------------------
+# MLP (the section-4 application)
+# --------------------------------------------------------------------------
+def param_shapes(sizes=LAYER_SIZES):
+    """[(W0, b0), (W1, b1), ...] shapes for the given layer sizes."""
+    shapes = []
+    for fan_in, fan_out in zip(sizes[:-1], sizes[1:]):
+        shapes.append(((fan_in, fan_out), (fan_out,)))
+    return shapes
+
+
+def param_count(sizes=LAYER_SIZES):
+    """Total adjustable parameters."""
+    return sum(w[0] * w[1] + b[0] for w, b in param_shapes(sizes))
+
+
+def init_params(key, sizes=LAYER_SIZES):
+    """Glorot-ish init, returned as the flat [W0, b0, W1, b1, ...] list
+    used by the artifact ABI."""
+    flat = []
+    for (w_shape, b_shape) in param_shapes(sizes):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / (w_shape[0] + w_shape[1])).astype(jnp.float32)
+        flat.append(jax.random.normal(sub, w_shape, jnp.float32) * scale)
+        flat.append(jnp.zeros(b_shape, jnp.float32))
+    return flat
+
+
+def forward(flat_params, x):
+    """Logits for a batch. tanh hidden activations (period-appropriate —
+    ref [1] trained tanh networks), linear output layer."""
+    h = x
+    n_layers = len(flat_params) // 2
+    for i in range(n_layers):
+        w, b = flat_params[2 * i], flat_params[2 * i + 1]
+        h = k_matmul(h, w) + b
+        if i < n_layers - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def loss_fn(flat_params, x, y_onehot):
+    """Mean softmax cross-entropy against one-hot targets."""
+    logits = forward(flat_params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def grad_fn(*args):
+    """Artifact body for mlp_grad: (W0, b0, ..., x, y) -> (loss, dW0, db0, ...).
+
+    SGD itself happens on the Rust side (the coordinator owns the
+    parameters and the learning-rate schedule); this graph is pure
+    compute, which keeps the artifact reusable for any optimiser.
+    """
+    flat_params = list(args[:-2])
+    x, y = args[-2], args[-1]
+    loss, grads = jax.value_and_grad(loss_fn)(flat_params, x, y)
+    return (loss, *grads)
+
+
+def forward_fn(*args):
+    """Artifact body for mlp_forward: (W0, b0, ..., x) -> (logits,)."""
+    flat_params = list(args[:-1])
+    x = args[-1]
+    return (forward(flat_params, x),)
+
+
+def train_step_flops(sizes=LAYER_SIZES, batch=BATCH):
+    """Flop estimate for one grad step: forward 2mnk per layer, backward
+    approximately 2x forward (dX and dW matmuls)."""
+    fwd = sum(2.0 * batch * fan_in * fan_out for fan_in, fan_out in zip(sizes[:-1], sizes[1:]))
+    return 3.0 * fwd
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def reference_train_step(flat_params, x, y, lr=DEFAULT_LR):
+    """Build-time reference: one SGD step entirely in JAX. Used by the
+    python test-suite to validate the grad graph the Rust side consumes."""
+    loss, grads = jax.value_and_grad(loss_fn)(flat_params, x, y)
+    new_params = [p - lr * g for p, g in zip(flat_params, grads)]
+    return new_params, loss

@@ -1,0 +1,93 @@
+"""Cross-layer ABI guarantees: the contracts the Rust side relies on.
+
+These tests pin the properties `rust/src/runtime` and the coordinator
+assume — if any of them breaks, the Rust integration tests fail at a much
+later (and more confusing) stage, so they are asserted here first.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_gemm_artifact_is_a_one_tuple():
+    # rust PjrtGemm unwraps exactly one output.
+    out = model.gemm_fn(jnp.ones((4, 4), jnp.float32), jnp.ones((4, 4), jnp.float32))
+    assert isinstance(out, tuple) and len(out) == 1
+
+
+def test_grad_output_arity_and_shapes_match_params():
+    sizes = (6, 8, 3)
+    params = model.init_params(jax.random.PRNGKey(0), sizes)
+    x = jnp.zeros((4, 6), jnp.float32)
+    y = jax.nn.one_hot(jnp.zeros(4, jnp.int32), 3, dtype=jnp.float32)
+    out = model.grad_fn(*params, x, y)
+    # (loss, dW0, db0, dW1, db1) — same order and shapes as the inputs.
+    assert len(out) == 1 + len(params)
+    assert out[0].shape == ()
+    for p, g in zip(params, out[1:]):
+        assert p.shape == g.shape
+        assert g.dtype == jnp.float32
+
+
+def test_row_major_layout_of_literals():
+    # The Rust Tensor<->Literal bridge assumes row-major flattening: the
+    # HLO parameter for a (2,3) array must consume values in C order.
+    a = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+    b = jnp.eye(3, dtype=jnp.float32)
+    (c,) = model.gemm_fn(a, b)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(a))
+    assert np.asarray(a).flags["C_CONTIGUOUS"]
+
+
+def test_hlo_entry_signature_matches_manifest_order():
+    # Parameter count and shapes in the HLO text must equal the manifest's
+    # `inputs=` field, in order.
+    sizes = (6, 8, 3)
+    pshapes = []
+    for (w, b) in model.param_shapes(sizes):
+        pshapes.extend([_spec(w), _spec(b)])
+    in_specs = pshapes + [_spec((4, 6)), _spec((4, 3))]
+    lowered = jax.jit(model.grad_fn).lower(*in_specs)
+    text = aot.to_hlo_text(lowered)
+    for i in range(len(in_specs)):
+        assert f"parameter({i})" in text, f"missing parameter({i})"
+    assert f"parameter({len(in_specs)})" not in text
+
+
+def test_losses_are_finite_for_extreme_inputs():
+    # The coordinator feeds raw synthetic data; the loss must stay finite
+    # for large-magnitude inputs (log-softmax stability).
+    sizes = (4, 6, 2)
+    params = model.init_params(jax.random.PRNGKey(1), sizes)
+    x = jnp.full((8, 4), 1e4, jnp.float32)
+    y = jax.nn.one_hot(jnp.zeros(8, jnp.int32), 2, dtype=jnp.float32)
+    loss = model.loss_fn(params, x, y)
+    assert bool(jnp.isfinite(loss)), f"loss blew up: {loss}"
+
+
+def test_artifact_flops_fields_are_consistent():
+    arts = {a.name: a for a in aot.build_artifacts()}
+    for n in aot.GEMM_SIZES:
+        assert arts[f"gemm_{n}"].flops == 2.0 * n**3
+    assert arts["mlp_grad"].flops == pytest.approx(3 * arts["mlp_forward"].flops)
+
+
+def test_manifest_row_format_is_stable():
+    art = aot.Artifact(
+        name="t", fn=model.gemm_fn, in_specs=[_spec((2, 2)), _spec((2, 2))], flops=16.0
+    )
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        row = art.lower_and_write(d)
+    fields = dict(kv.split("=", 1) for kv in row.split(" "))
+    assert set(fields) == {"name", "file", "inputs", "flops"}
+    assert fields["inputs"] == "f32[2x2],f32[2x2]"

@@ -1,0 +1,79 @@
+"""AOT pipeline: lowering produces loadable HLO text + a parseable manifest."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_structure():
+    lowered = jax.jit(model.gemm_fn).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32),
+        jax.ShapeDtypeStruct((16, 16), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    # HLO text must have an ENTRY computation and f32 parameters; the
+    # xla crate's text parser keys off this structure.
+    assert "ENTRY" in text
+    assert "f32[16,16]" in text
+    assert "parameter(0)" in text
+
+
+def test_artifact_lower_and_write(tmp_path):
+    art = aot.Artifact(
+        name="gemm_test16",
+        fn=model.gemm_fn,
+        in_specs=[
+            jax.ShapeDtypeStruct((16, 16), jnp.float32),
+            jax.ShapeDtypeStruct((16, 16), jnp.float32),
+        ],
+        flops=2.0 * 16**3,
+        extra="kernel:emmerald-pallas",
+    )
+    row = art.lower_and_write(str(tmp_path))
+    assert (tmp_path / "gemm_test16.hlo.txt").exists()
+    assert "name=gemm_test16" in row
+    assert "inputs=f32[16x16],f32[16x16]" in row
+    assert "flops=8192" in row
+
+
+def test_build_artifacts_inventory():
+    arts = aot.build_artifacts()
+    names = [a.name for a in arts]
+    # Every benchmark size plus the naive comparator and both MLP graphs.
+    for n in aot.GEMM_SIZES:
+        assert f"gemm_{n}" in names
+    assert "gemm_naive_320" in names
+    assert "mlp_forward" in names
+    assert "mlp_grad" in names
+    # MLP grad inputs: params + x + y.
+    grad = next(a for a in arts if a.name == "mlp_grad")
+    n_params = 2 * (len(model.LAYER_SIZES) - 1)
+    assert len(grad.in_specs) == n_params + 2
+
+
+def test_main_only_subset(tmp_path):
+    # --only rebuilds one artifact without touching the manifest.
+    aot.main(["--out-dir", str(tmp_path), "--only", "gemm_64"])
+    assert (tmp_path / "gemm_64.hlo.txt").exists()
+    assert not (tmp_path / aot.MANIFEST_NAME).exists()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_existing_manifest_is_parseable():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.txt")
+    with open(path) as f:
+        rows = [l.strip() for l in f if l.strip() and not l.startswith("#")]
+    assert len(rows) >= 8
+    for row in rows:
+        fields = dict(kv.split("=", 1) for kv in row.split(" "))
+        assert "name" in fields and "file" in fields and "inputs" in fields
+        assert float(fields["flops"]) > 0
+        for shape in fields["inputs"].split(","):
+            assert shape.startswith("f32[")

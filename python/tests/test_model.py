@@ -1,0 +1,111 @@
+"""L2 correctness: the MLP graphs the Rust coordinator consumes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+SMALL = (12, 16, 10)  # fast layer sizes for gradient checks
+
+
+def make_batch(key, batch, sizes):
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (batch, sizes[0]), jnp.float32)
+    labels = jax.random.randint(ky, (batch,), 0, sizes[-1])
+    y = jax.nn.one_hot(labels, sizes[-1], dtype=jnp.float32)
+    return x, y
+
+
+def test_param_shapes_and_count():
+    shapes = model.param_shapes((4, 8, 2))
+    assert shapes == [((4, 8), (8,)), ((8, 2), (2,))]
+    assert model.param_count((4, 8, 2)) == 4 * 8 + 8 + 8 * 2 + 2
+
+
+def test_default_network_is_about_a_million_params():
+    # Paper section 4: "more than one million adjustable parameters";
+    # our default is the same order of magnitude.
+    n = model.param_count()
+    assert 5e5 < n < 2e6
+
+
+def test_init_params_shapes():
+    params = model.init_params(jax.random.PRNGKey(0), SMALL)
+    assert len(params) == 2 * (len(SMALL) - 1)
+    assert params[0].shape == (12, 16)
+    assert params[1].shape == (16,)
+    assert all(p.dtype == jnp.float32 for p in params)
+
+
+def test_forward_shape_and_finiteness():
+    params = model.init_params(jax.random.PRNGKey(1), SMALL)
+    x, _ = make_batch(jax.random.PRNGKey(2), 8, SMALL)
+    logits = model.forward(params, x)
+    assert logits.shape == (8, SMALL[-1])
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_loss_is_log_nclasses_at_init_scale():
+    # With random init, softmax CE should be near log(n_classes).
+    params = model.init_params(jax.random.PRNGKey(3), SMALL)
+    x, y = make_batch(jax.random.PRNGKey(4), 32, SMALL)
+    loss = float(model.loss_fn(params, x, y))
+    assert abs(loss - np.log(SMALL[-1])) < 0.5
+
+
+def test_grad_matches_finite_differences():
+    params = model.init_params(jax.random.PRNGKey(5), SMALL)
+    x, y = make_batch(jax.random.PRNGKey(6), 4, SMALL)
+    out = model.grad_fn(*params, x, y)
+    grads = out[1:]
+    # Check a handful of coordinates of W0 and b1 by central differences.
+    eps = 1e-3
+    rng = np.random.RandomState(0)
+    for (pi, gi) in [(0, 0), (1, 1), (2, 2)]:
+        p = np.asarray(params[pi])
+        flat_idx = rng.randint(p.size)
+        idx = np.unravel_index(flat_idx, p.shape)
+        bump = np.zeros_like(p)
+        bump[idx] = eps
+        plus = list(params)
+        plus[pi] = params[pi] + bump
+        minus = list(params)
+        minus[pi] = params[pi] - bump
+        fd = (float(model.loss_fn(plus, x, y)) - float(model.loss_fn(minus, x, y))) / (2 * eps)
+        got = float(np.asarray(grads[gi])[idx])
+        assert got == pytest.approx(fd, rel=0.05, abs=1e-3), f"param {pi} idx {idx}"
+
+
+def test_training_reduces_loss():
+    params = model.init_params(jax.random.PRNGKey(7), SMALL)
+    x, y = make_batch(jax.random.PRNGKey(8), 64, SMALL)
+    first = None
+    last = None
+    for _ in range(30):
+        params, loss = model.reference_train_step(params, x, y, lr=0.5)
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+    assert last < first * 0.7, f"loss did not fall: {first} -> {last}"
+
+
+def test_grad_fn_abi_matches_value_and_grad():
+    """The artifact ABI (flat in, (loss, *grads) out) must equal jax's own
+    value_and_grad on the structured loss."""
+    params = model.init_params(jax.random.PRNGKey(9), SMALL)
+    x, y = make_batch(jax.random.PRNGKey(10), 8, SMALL)
+    out = model.grad_fn(*params, x, y)
+    loss2, grads2 = jax.value_and_grad(model.loss_fn)(params, x, y)
+    assert float(out[0]) == pytest.approx(float(loss2), rel=1e-5)
+    assert len(out) - 1 == len(grads2)
+    for g1, g2 in zip(out[1:], grads2):
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-6)
+
+
+def test_train_step_flops_formula():
+    # 2*batch*in*hidden per layer forward, x3 for fwd+bwd.
+    flops = model.train_step_flops((10, 20, 5), batch=4)
+    fwd = 2 * 4 * 10 * 20 + 2 * 4 * 20 * 5
+    assert flops == 3.0 * fwd

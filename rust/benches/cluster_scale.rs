@@ -1,0 +1,81 @@
+//! CLUSTER: the paper's §4 application numbers — *"196 Intel Pentium III
+//! 550 MHz processors … sustained performance of 152 GFlops/s for a price
+//! performance ratio of 98¢ USD/MFlop/s"* — regenerated from the cluster
+//! model, plus a real mini-cluster measurement (thread-per-worker
+//! training on this host) fed through the same arithmetic.
+
+use emmerald::blas::Backend;
+use emmerald::coordinator::{ClusterSpec, Coordinator, EngineFactory, NativeEngine, TrainConfig};
+use emmerald::nn::{Dataset, Mlp};
+use emmerald::util::table::{fnum, Table};
+use std::sync::Arc;
+
+fn main() {
+    // ------------------------------------------------ paper-model numbers
+    let paper = ClusterSpec::piii_cluster_1999();
+    let grad_bytes = 1.0e6 * 4.0; // ~1M params, f32
+    let step_flops = 8.0e9; // large local batches (ref [1])
+    let gf = paper.sustained_gflops(step_flops, grad_bytes);
+    let cents = paper.cents_per_mflops(gf);
+
+    println!("== CLUSTER — §4 price/performance ==");
+    println!(
+        "model of the paper's cluster (196 x PIII-550, 100 Mbit ring allreduce):\n\
+         sustained {gf:.0} GFlop/s, {cents:.0} c/MFlop/s  (paper: 152 GFlop/s @ 98c)\n"
+    );
+
+    // Scaling table: nodes vs sustained rate and efficiency.
+    let mut table = Table::new(["nodes", "GFlop/s", "efficiency", "c/MFlop/s"]);
+    for nodes in [1usize, 8, 32, 64, 128, 196] {
+        let c = ClusterSpec { nodes, ..paper };
+        let g = c.sustained_gflops(step_flops, grad_bytes);
+        table.row([
+            nodes.to_string(),
+            fnum(g, 1),
+            fnum(c.efficiency(step_flops, grad_bytes), 3),
+            fnum(c.cents_per_mflops(g), 1),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // ------------------------------------------- measured mini-cluster
+    // Thread-per-worker training on this host; per-node rate measured,
+    // then extrapolated with the same arithmetic.
+    println!("measuring a real mini-cluster (4 worker threads, native SSE engine)...");
+    let sizes = [64usize, 256, 256, 10];
+    let mlp = Mlp::init(&sizes, 3, Backend::Auto);
+    let data = Dataset::gaussian_clusters(2048, 64, 10, 0.5, 9);
+    let cfg = TrainConfig { workers: 4, shard_batch: 64, steps: 30, lr: 0.2, log_every: 0 };
+    let mut coord = Coordinator::new(cfg, mlp, data).expect("coordinator");
+    let factory: Arc<EngineFactory> =
+        Arc::new(|_| Ok(Box::new(NativeEngine::new(Backend::Auto)) as _));
+    let r = coord.train_threaded(factory).expect("training");
+    let per_node = r.sustained_mflops() / 4.0;
+    println!(
+        "measured: {:.0} MFlop/s total over 4 workers ({:.0}/node), loss {:.3} -> {:.3}\n",
+        r.sustained_mflops(),
+        per_node,
+        r.first_loss(),
+        r.final_loss
+    );
+    let host = ClusterSpec::host_cluster(196, per_node, 1500.0);
+    let gfh = host.sustained_gflops(step_flops, grad_bytes);
+    println!(
+        "196 x this-host nodes at $1500: sustained {:.0} GFlop/s, {:.1} c/MFlop/s\n\
+         (the 1999 -> 2026 price/perf improvement factor: ~{:.0}x)",
+        gfh,
+        host.cents_per_mflops(gfh),
+        cents / host.cents_per_mflops(gfh)
+    );
+
+    let _ = std::fs::create_dir_all("target/bench-results");
+    let doc = emmerald::util::json::Json::obj([
+        ("bench", "cluster_scale".into()),
+        ("paper_model_gflops", emmerald::util::json::Json::Num(gf)),
+        ("paper_model_cents_per_mflops", emmerald::util::json::Json::Num(cents)),
+        ("measured_per_node_mflops", emmerald::util::json::Json::Num(per_node)),
+        ("host_cluster_gflops", emmerald::util::json::Json::Num(gfh)),
+    ]);
+    let _ = std::fs::write("target/bench-results/cluster_scale.json", doc.render());
+    println!("[wrote target/bench-results/cluster_scale.json]");
+}

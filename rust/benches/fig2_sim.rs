@@ -1,0 +1,79 @@
+//! FIG2-SIM: Figure 2 in the paper's own units — the trace-driven PIII-450
+//! simulation of all three algorithms (naive / ATLAS proxy / Emmerald)
+//! with the paper's fixed-stride-700, cold-cache methodology.
+//!
+//! Expected (paper): Emmerald rises to ≈890 MFlop/s by size 320 and stays
+//! flat; ATLAS ≈ 0.83 × clock ≈ 375; naive collapses once a column of B
+//! no longer fits L1. Average Emmerald/ATLAS for size > 100 ≈ 2.09×.
+
+use emmerald::sim::{piii_450, simulate_gemm, Algorithm};
+use emmerald::util::json::Json;
+use emmerald::util::table::{fnum, Table};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: Vec<usize> = if quick {
+        vec![32, 96, 192, 320]
+    } else {
+        vec![16, 32, 48, 64, 96, 128, 160, 224, 256, 320, 384, 448, 512, 576, 700]
+    };
+    let stride = 700usize;
+    let machine = piii_450();
+
+    println!("simulating {} on {} sizes (stride {stride}, cold caches)...", machine.name, sizes.len());
+    let mut table = Table::new(["size", "naive", "atlas", "emmerald", "emm x clock", "emm/atlas"]);
+    let mut rows_json = Vec::new();
+    let mut ratios = Vec::new();
+    let mut peak = (0usize, 0.0f64);
+    for &size in &sizes {
+        let st = stride.max(size);
+        // Naive at ≥576 costs ~2·n³ simulated accesses; cap it in quick runs.
+        let naive = if quick && size > 320 {
+            None
+        } else {
+            Some(simulate_gemm(&machine, Algorithm::Naive, size, st))
+        };
+        let atlas = simulate_gemm(&machine, Algorithm::Atlas, size, st);
+        let emm = simulate_gemm(&machine, Algorithm::Emmerald, size, st);
+        if size > 100 {
+            ratios.push(emm.mflops / atlas.mflops);
+        }
+        if emm.mflops > peak.1 {
+            peak = (size, emm.mflops);
+        }
+        table.row([
+            size.to_string(),
+            naive.as_ref().map(|r| fnum(r.mflops, 0)).unwrap_or_else(|| "-".into()),
+            fnum(atlas.mflops, 0),
+            fnum(emm.mflops, 0),
+            fnum(emm.mflops / machine.clock_mhz, 2),
+            fnum(emm.mflops / atlas.mflops, 2),
+        ]);
+        rows_json.push(Json::obj([
+            ("size", size.into()),
+            ("naive", naive.map(|r| Json::Num(r.mflops)).unwrap_or(Json::Null)),
+            ("atlas", Json::Num(atlas.mflops)),
+            ("emmerald", Json::Num(emm.mflops)),
+        ]));
+    }
+    println!("== FIG2-SIM — simulated PIII-450 MFlop/s ==");
+    println!("{}", table.render());
+    let avg = ratios.iter().sum::<f64>() / ratios.len().max(1) as f64;
+    println!("AVG209: mean emmerald/atlas for size>100 = {avg:.2}x (paper: 2.09x)");
+    println!(
+        "PEAK: emmerald {:.0} MFlop/s at size {} = {:.2} x clock (paper: 890 at 320 = 1.97x)",
+        peak.1,
+        peak.0,
+        peak.1 / machine.clock_mhz
+    );
+    let doc = Json::obj([
+        ("bench", "fig2_sim".into()),
+        ("rows", Json::Arr(rows_json)),
+        ("avg_ratio_gt100", Json::Num(avg)),
+        ("peak_mflops", Json::Num(peak.1)),
+        ("peak_size", peak.0.into()),
+    ]);
+    let _ = std::fs::create_dir_all("target/bench-results");
+    let _ = std::fs::write("target/bench-results/fig2_sim.json", doc.render());
+    println!("[wrote target/bench-results/fig2_sim.json]");
+}

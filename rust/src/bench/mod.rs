@@ -1,0 +1,49 @@
+//! Benchmark harness substrate (criterion is unavailable offline).
+//!
+//! Reproduces the paper's measurement methodology (§4):
+//!
+//! * **wall-clock** time on an unloaded machine (not CPU time),
+//! * caches **flushed between calls** to `sgemm()` (optional per bench),
+//! * rates reported as **MFlop/s** with `flops = 2·M·N·K`.
+//!
+//! [`Bencher`] measures closures with warmup + repeated samples and returns
+//! a [`BenchResult`] carrying the full sample distribution; [`Report`]
+//! collects rows and renders the table/CSV/JSON outputs every bench target
+//! prints.
+
+mod harness;
+mod report;
+
+pub use harness::{BenchResult, Bencher, FlushMode};
+pub use report::Report;
+
+/// Floating point operations of an M×N×K GEMM (the paper's `2MNK`).
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> f64 {
+    2.0 * m as f64 * n as f64 * k as f64
+}
+
+/// MFlop/s given a flop count and seconds.
+pub fn mflops(flops: f64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        0.0
+    } else {
+        flops / seconds / 1.0e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops_is_2mnk() {
+        assert_eq!(gemm_flops(10, 20, 30), 12_000.0);
+    }
+
+    #[test]
+    fn mflops_conversion() {
+        // 2e9 flops in 1s = 2000 MFlop/s
+        assert!((mflops(2.0e9, 1.0) - 2000.0).abs() < 1e-9);
+        assert_eq!(mflops(1.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Bench report assembly: table + CSV + JSON for each bench target.
+
+use super::BenchResult;
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+/// Collects bench rows and renders the standard three output forms.
+pub struct Report {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<(Vec<String>, Option<BenchResult>)>,
+    notes: Vec<String>,
+}
+
+impl Report {
+    /// New report with a title and extra leading columns (e.g. "size").
+    pub fn new<S: Into<String>>(title: S, leading_columns: &[&str]) -> Self {
+        let mut columns: Vec<String> = leading_columns.iter().map(|s| s.to_string()).collect();
+        columns.extend(
+            ["impl", "median_s", "mflops", "mflops_best", "rsd_pct"].iter().map(|s| s.to_string()),
+        );
+        Self { title: title.into(), columns, rows: Vec::new(), notes: Vec::new() }
+    }
+
+    /// Add a measured row; `leading` must match the leading columns.
+    pub fn add(&mut self, leading: &[String], result: BenchResult) {
+        let mut cells = leading.to_vec();
+        cells.push(result.name.clone());
+        cells.push(format!("{:.6e}", result.seconds.median));
+        cells.push(fnum(result.mflops(), 1));
+        cells.push(fnum(result.mflops_best(), 1));
+        cells.push(fnum(result.seconds.rsd() * 100.0, 1));
+        self.rows.push((cells, Some(result)));
+    }
+
+    /// Add an unmeasured informational row (e.g. derived ratios).
+    pub fn add_info(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "info row arity");
+        self.rows.push((cells, None));
+    }
+
+    /// Attach a free-form note printed under the table.
+    pub fn note<S: Into<String>>(&mut self, s: S) {
+        self.notes.push(s.into());
+    }
+
+    /// Render the aligned table with title and notes.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(self.columns.iter().map(|s| s.as_str()));
+        for (cells, _) in &self.rows {
+            t.row(cells.iter().map(|s| s.as_str()));
+        }
+        let mut out = format!("== {} ==\n{}", self.title, t.render());
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    /// Render CSV rows (same cells as the table).
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(self.columns.iter().map(|s| s.as_str()));
+        for (cells, _) in &self.rows {
+            t.row(cells.iter().map(|s| s.as_str()));
+        }
+        t.to_csv()
+    }
+
+    /// Render a JSON document with the full sample summaries.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(cells, result)| {
+                let mut obj: Vec<(&'static str, Json)> = vec![("cells", {
+                    Json::arr(cells.iter().map(|c| Json::Str(c.clone())))
+                })];
+                if let Some(r) = result {
+                    obj.push(("median_s", Json::Num(r.seconds.median)));
+                    obj.push(("mean_s", Json::Num(r.seconds.mean)));
+                    obj.push(("std_s", Json::Num(r.seconds.std)));
+                    obj.push(("samples", Json::Num(r.seconds.n as f64)));
+                    obj.push(("mflops", Json::Num(r.mflops())));
+                }
+                Json::obj(obj)
+            })
+            .collect();
+        Json::obj([
+            ("title", Json::Str(self.title.clone())),
+            ("columns", Json::arr(self.columns.iter().map(|c| Json::Str(c.clone())))),
+            ("rows", Json::Arr(rows)),
+            ("notes", Json::arr(self.notes.iter().map(|n| Json::Str(n.clone())))),
+        ])
+        .render()
+    }
+
+    /// Print table to stdout and write CSV + JSON next to `basename` under
+    /// `target/bench-results/`.
+    pub fn emit(&self, basename: &str) {
+        println!("{}", self.render());
+        let dir = std::path::Path::new("target/bench-results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{basename}.csv")), self.to_csv());
+            let _ = std::fs::write(dir.join(format!("{basename}.json")), self.to_json());
+            println!("[wrote target/bench-results/{basename}.{{csv,json}}]");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    fn fake(name: &str, secs: f64, flops: f64) -> BenchResult {
+        BenchResult { name: name.into(), seconds: Summary::from(&[secs, secs, secs]), flops }
+    }
+
+    #[test]
+    fn report_renders_rows_and_notes() {
+        let mut r = Report::new("test", &["size"]);
+        r.add(&["320".to_string()], fake("emmerald", 0.01, 2.0 * 320f64.powi(3)));
+        r.note("hello");
+        let s = r.render();
+        assert!(s.contains("== test =="));
+        assert!(s.contains("emmerald"));
+        assert!(s.contains("note: hello"));
+    }
+
+    #[test]
+    fn csv_and_json_agree_on_rows() {
+        let mut r = Report::new("t", &["size"]);
+        r.add(&["16".to_string()], fake("naive", 0.001, 8192.0));
+        r.add(&["32".to_string()], fake("naive", 0.002, 65536.0));
+        assert_eq!(r.to_csv().lines().count(), 3); // header + 2 rows
+        assert!(r.to_json().contains("\"rows\":["));
+    }
+
+    #[test]
+    #[should_panic(expected = "info row arity")]
+    fn info_row_arity_checked() {
+        let mut r = Report::new("t", &["size"]);
+        r.add_info(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,114 @@
+//! BLAS argument-validation errors.
+
+use std::fmt;
+
+/// Errors surfaced by the SGEMM entry points before any compute happens.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BlasError {
+    /// Leading dimension smaller than the stored row length.
+    BadLeadingDim {
+        /// Which operand ("A", "B", "C" or "?" inside view construction).
+        operand: &'static str,
+        /// The offending leading dimension.
+        ld: usize,
+        /// The stored column count it must cover.
+        cols: usize,
+    },
+    /// The slice is too short for the described matrix.
+    BufferTooSmall {
+        /// Which operand.
+        operand: &'static str,
+        /// Required element count `(rows-1)*ld + cols`.
+        need: usize,
+        /// Actual slice length.
+        got: usize,
+    },
+    /// `op(A)`'s k and `op(B)`'s k disagree (matrix-wrapper API only).
+    DimMismatch {
+        /// Output rows.
+        m: usize,
+        /// Output cols.
+        n: usize,
+        /// k from `op(A)`.
+        k: usize,
+        /// k from `op(B)`.
+        other_k: usize,
+    },
+    /// An operand has the wrong shape (matrix-wrapper API only).
+    ShapeMismatch {
+        /// Which operand.
+        what: &'static str,
+        /// Expected (rows, cols).
+        expect: (usize, usize),
+        /// Actual (rows, cols).
+        got: (usize, usize),
+    },
+    /// Invalid BLAS transpose character.
+    BadTranspose(char),
+    /// The requested backend is not available on this CPU.
+    BackendUnavailable(&'static str),
+}
+
+impl BlasError {
+    /// Re-tag a view-construction error with the operand name.
+    pub(crate) fn operand(self, name: &'static str) -> Self {
+        match self {
+            BlasError::BadLeadingDim { ld, cols, .. } => {
+                BlasError::BadLeadingDim { operand: name, ld, cols }
+            }
+            BlasError::BufferTooSmall { need, got, .. } => {
+                BlasError::BufferTooSmall { operand: name, need, got }
+            }
+            other => other,
+        }
+    }
+}
+
+impl fmt::Display for BlasError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BlasError::BadLeadingDim { operand, ld, cols } => {
+                write!(f, "operand {operand}: leading dimension {ld} < stored columns {cols}")
+            }
+            BlasError::BufferTooSmall { operand, need, got } => {
+                write!(f, "operand {operand}: buffer holds {got} elements, needs {need}")
+            }
+            BlasError::DimMismatch { m, n, k, other_k } => {
+                write!(f, "inner dimensions disagree: op(A) is {m}x{k}, op(B) is {other_k}x{n}")
+            }
+            BlasError::ShapeMismatch { what, expect, got } => {
+                write!(f, "operand {what}: expected {}x{}, got {}x{}", expect.0, expect.1, got.0, got.1)
+            }
+            BlasError::BadTranspose(c) => write!(f, "invalid transpose flag '{c}' (want n/N/t/T)"),
+            BlasError::BackendUnavailable(b) => {
+                write!(f, "backend {b} is not available on this CPU")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BlasError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        let e = BlasError::BadLeadingDim { operand: "A", ld: 2, cols: 5 };
+        assert!(e.to_string().contains("leading dimension 2"));
+        let e = BlasError::DimMismatch { m: 1, n: 2, k: 3, other_k: 4 };
+        assert!(e.to_string().contains("1x3"));
+        let e = BlasError::BadTranspose('x');
+        assert!(e.to_string().contains('x'));
+    }
+
+    #[test]
+    fn operand_retag() {
+        let e = BlasError::BufferTooSmall { operand: "?", need: 10, got: 5 };
+        match e.operand("B") {
+            BlasError::BufferTooSmall { operand, .. } => assert_eq!(operand, "B"),
+            _ => panic!(),
+        }
+    }
+}

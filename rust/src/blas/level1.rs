@@ -1,0 +1,159 @@
+//! Level-1 BLAS on the Emmerald micro-kernel machinery.
+//!
+//! The paper positions Emmerald as a BLAS building block ("may be used
+//! immediately to improve the performance of single-precision libraries
+//! based on BLAS"); these are the Level-1 routines a consumer library
+//! expects, vectorised with the same SSE primitives as the GEMM kernel.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Dot product `xᵀ y` (SDOT).
+pub fn sdot(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len(), "sdot length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        // SAFETY: SSE is part of the x86-64 baseline; one column, width 1.
+        unsafe {
+            let mut out = [0.0f32; 1];
+            crate::gemm::microkernel::sse_dot_panel_dyn(
+                x.as_ptr(),
+                x.len(),
+                &[y.as_ptr()],
+                crate::gemm::Unroll::X4,
+                false,
+                &mut out,
+            );
+            return out[0];
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// `y += alpha * x` (SAXPY).
+pub fn saxpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "saxpy length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        // SAFETY: SSE baseline; in-bounds by the length assert.
+        unsafe {
+            let n = x.len();
+            let va = _mm_set1_ps(alpha);
+            let mut i = 0;
+            while i + 4 <= n {
+                let vy = _mm_loadu_ps(y.as_ptr().add(i));
+                let vx = _mm_loadu_ps(x.as_ptr().add(i));
+                _mm_storeu_ps(y.as_mut_ptr().add(i), _mm_add_ps(vy, _mm_mul_ps(va, vx)));
+                i += 4;
+            }
+            while i < n {
+                y[i] += alpha * x[i];
+                i += 1;
+            }
+            return;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha` (SSCAL).
+pub fn sscal(alpha: f32, x: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // SAFETY: SSE baseline.
+        unsafe {
+            let n = x.len();
+            let va = _mm_set1_ps(alpha);
+            let mut i = 0;
+            while i + 4 <= n {
+                let vx = _mm_loadu_ps(x.as_ptr().add(i));
+                _mm_storeu_ps(x.as_mut_ptr().add(i), _mm_mul_ps(va, vx));
+                i += 4;
+            }
+            while i < n {
+                x[i] *= alpha;
+                i += 1;
+            }
+            return;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Euclidean norm ‖x‖₂ (SNRM2), with f64 accumulation for stability.
+pub fn snrm2(x: &[f32]) -> f32 {
+    (x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()).sqrt() as f32
+}
+
+/// Index of the element with the largest absolute value (ISAMAX);
+/// `None` on empty input.
+pub fn isamax(x: &[f32]) -> Option<usize> {
+    x.iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| a.abs().partial_cmp(&b.abs()).expect("NaN in isamax"))
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn rv(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_f32(&mut v, -1.0, 1.0);
+        v
+    }
+
+    #[test]
+    fn sdot_matches_scalar_all_lengths() {
+        for n in [0usize, 1, 3, 4, 5, 17, 100, 337] {
+            let x = rv(1, n);
+            let y = rv(2, n);
+            let want: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!((sdot(&x, &y) - want).abs() < 1e-4 * (1.0 + want.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn saxpy_matches_scalar() {
+        for n in [1usize, 4, 7, 33] {
+            let x = rv(3, n);
+            let mut y = rv(4, n);
+            let mut want = y.clone();
+            for i in 0..n {
+                want[i] += 0.75 * x[i];
+            }
+            saxpy(0.75, &x, &mut y);
+            crate::util::testkit::assert_allclose(&y, &want, 1e-6, 1e-7, "saxpy");
+        }
+    }
+
+    #[test]
+    fn sscal_matches_scalar() {
+        let mut x = rv(5, 19);
+        let want: Vec<f32> = x.iter().map(|v| v * -2.5).collect();
+        sscal(-2.5, &mut x);
+        crate::util::testkit::assert_allclose(&x, &want, 1e-6, 1e-7, "sscal");
+    }
+
+    #[test]
+    fn snrm2_known() {
+        assert!((snrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert_eq!(snrm2(&[]), 0.0);
+    }
+
+    #[test]
+    fn isamax_picks_largest_abs() {
+        assert_eq!(isamax(&[1.0, -5.0, 3.0]), Some(1));
+        assert_eq!(isamax(&[]), None);
+    }
+}

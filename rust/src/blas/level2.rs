@@ -1,0 +1,140 @@
+//! Level-2 BLAS: SGEMV on the Emmerald dot-product kernel.
+//!
+//! `y = alpha · op(A) x + beta · y`. The no-transpose case runs each row
+//! of `A` through the same SSE dot-product kernel as the GEMM (width-1
+//! panels); the transpose case is an SAXPY sweep, which is the canonical
+//! column-major-friendly formulation.
+
+use super::level1::{saxpy, sscal};
+use super::matrix::MatRef;
+use super::{BlasError, Transpose};
+
+/// `y = alpha * op(A) x + beta * y` (SGEMV).
+///
+/// `a` is the stored matrix (row-major, leading dimension `ld`); when
+/// `trans == Yes`, `op(A) = Aᵀ` so `x` has `a.rows()` entries and `y` has
+/// `a.cols()`.
+pub fn sgemv(
+    trans: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    x: &[f32],
+    beta: f32,
+    y: &mut [f32],
+) -> Result<(), BlasError> {
+    let (xn, yn) = match trans {
+        Transpose::No => (a.cols(), a.rows()),
+        Transpose::Yes => (a.rows(), a.cols()),
+    };
+    if x.len() != xn {
+        return Err(BlasError::ShapeMismatch { what: "x", expect: (xn, 1), got: (x.len(), 1) });
+    }
+    if y.len() != yn {
+        return Err(BlasError::ShapeMismatch { what: "y", expect: (yn, 1), got: (y.len(), 1) });
+    }
+    sscal(beta, y);
+    if alpha == 0.0 || xn == 0 {
+        return Ok(());
+    }
+    match trans {
+        Transpose::No => {
+            // One kernel dot product per row of A.
+            for r in 0..a.rows() {
+                #[cfg(target_arch = "x86_64")]
+                // SAFETY: row r is readable for cols() elements; SSE baseline.
+                let dot = unsafe {
+                    let mut out = [0.0f32; 1];
+                    crate::gemm::microkernel::sse_dot_panel_dyn(
+                        a.row_ptr(r),
+                        a.cols(),
+                        &[x.as_ptr()],
+                        crate::gemm::Unroll::X4,
+                        false,
+                        &mut out,
+                    );
+                    out[0]
+                };
+                #[cfg(not(target_arch = "x86_64"))]
+                let dot: f32 = (0..a.cols()).map(|c| a.get(r, c) * x[c]).sum();
+                y[r] += alpha * dot;
+            }
+        }
+        Transpose::Yes => {
+            // y += alpha * Σ_r x[r] · A[r, :]  (row-major-friendly SAXPYs).
+            for r in 0..a.rows() {
+                let row =
+                    unsafe { std::slice::from_raw_parts(a.row_ptr(r), a.cols()) };
+                saxpy(alpha * x[r], row, y);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+    use crate::util::testkit::assert_allclose;
+
+    fn gemv_ref(trans: Transpose, alpha: f32, a: &Matrix, x: &[f32], beta: f32, y: &[f32]) -> Vec<f32> {
+        let (rows, cols) = (a.rows(), a.cols());
+        match trans {
+            Transpose::No => (0..rows)
+                .map(|r| {
+                    alpha * (0..cols).map(|c| a.get(r, c) * x[c]).sum::<f32>() + beta * y[r]
+                })
+                .collect(),
+            Transpose::Yes => (0..cols)
+                .map(|c| {
+                    alpha * (0..rows).map(|r| a.get(r, c) * x[r]).sum::<f32>() + beta * y[c]
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn matches_reference_both_transposes() {
+        for &(m, n) in &[(1usize, 1usize), (5, 7), (16, 16), (33, 20)] {
+            let a = Matrix::random(m, n, 1, -1.0, 1.0);
+            for trans in [Transpose::No, Transpose::Yes] {
+                let (xn, yn) = if trans == Transpose::No { (n, m) } else { (m, n) };
+                let x = crate::util::prng::random_f32(2, xn, -1.0, 1.0);
+                let y0 = crate::util::prng::random_f32(3, yn, -1.0, 1.0);
+                let want = gemv_ref(trans, 0.5, &a, &x, 1.5, &y0);
+                let mut y = y0.clone();
+                sgemv(trans, 0.5, a.view(), &x, 1.5, &mut y).unwrap();
+                assert_allclose(&y, &want, 1e-4, 1e-5, &format!("gemv {m}x{n} {trans:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn strided_a() {
+        let a = Matrix::random_strided(6, 4, 9, 7);
+        let x = vec![1.0f32; 4];
+        let mut y = vec![0.0f32; 6];
+        sgemv(Transpose::No, 1.0, a.view(), &x, 0.0, &mut y).unwrap();
+        for r in 0..6 {
+            let want: f32 = (0..4).map(|c| a.get(r, c)).sum();
+            assert!((y[r] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Matrix::zeros(3, 4);
+        let mut y = vec![0.0f32; 3];
+        assert!(sgemv(Transpose::No, 1.0, a.view(), &[0.0; 3], 0.0, &mut y).is_err());
+        let mut y_bad = vec![0.0f32; 2];
+        assert!(sgemv(Transpose::No, 1.0, a.view(), &[0.0; 4], 0.0, &mut y_bad).is_err());
+    }
+
+    #[test]
+    fn alpha_zero_is_beta_scale() {
+        let a = Matrix::from_fn(2, 2, |_, _| f32::NAN);
+        let mut y = vec![2.0f32, 4.0];
+        sgemv(Transpose::No, 0.0, a.view(), &[1.0, 1.0], 0.5, &mut y).unwrap();
+        assert_eq!(y, vec![1.0, 2.0]);
+    }
+}

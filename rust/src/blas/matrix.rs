@@ -1,0 +1,463 @@
+//! Strided matrix storage and views.
+//!
+//! All Emmerald matrices are **row-major** with an explicit leading
+//! dimension (`ld`): element `(r, c)` lives at `data[r * ld + c]` and
+//! `ld >= cols`. The paper's benchmark methodology fixes the stride at 700
+//! for every size, so strided views (rows longer than their logical width)
+//! are first-class throughout.
+
+use super::error::BlasError;
+
+/// Immutable strided view over `f32` data.
+#[derive(Clone, Copy, Debug)]
+pub struct MatRef<'a> {
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+    ld: usize,
+}
+
+impl<'a> MatRef<'a> {
+    /// Construct a view, validating `ld` and the backing length.
+    pub fn new(data: &'a [f32], rows: usize, cols: usize, ld: usize) -> Result<Self, BlasError> {
+        validate(rows, cols, ld, data.len())?;
+        Ok(Self { data, rows, cols, ld })
+    }
+
+    /// Rows of the stored matrix.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns of the stored matrix.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Leading dimension (row stride, in elements).
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+
+    /// Raw backing slice.
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Bounds-checked element access.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        assert!(r < self.rows && c < self.cols, "({r},{c}) out of {}x{}", self.rows, self.cols);
+        self.data[r * self.ld + c]
+    }
+
+    /// Unchecked element access for hot paths.
+    ///
+    /// # Safety
+    /// Caller must guarantee `r < rows && c < cols`.
+    #[inline(always)]
+    pub unsafe fn get_unchecked(&self, r: usize, c: usize) -> f32 {
+        *self.data.get_unchecked(r * self.ld + c)
+    }
+
+    /// Pointer to the start of row `r`.
+    #[inline(always)]
+    pub fn row_ptr(&self, r: usize) -> *const f32 {
+        debug_assert!(r < self.rows);
+        unsafe { self.data.as_ptr().add(r * self.ld) }
+    }
+
+    /// Sub-view of `nr × nc` starting at `(r0, c0)` (same stride).
+    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> MatRef<'a> {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols, "block out of range");
+        MatRef {
+            data: &self.data[r0 * self.ld + c0..],
+            rows: nr,
+            cols: nc,
+            ld: self.ld,
+        }
+    }
+}
+
+/// Mutable strided view over `f32` data.
+#[derive(Debug)]
+pub struct MatMut<'a> {
+    data: &'a mut [f32],
+    rows: usize,
+    cols: usize,
+    ld: usize,
+}
+
+impl<'a> MatMut<'a> {
+    /// Construct a view, validating `ld` and the backing length.
+    pub fn new(data: &'a mut [f32], rows: usize, cols: usize, ld: usize) -> Result<Self, BlasError> {
+        validate(rows, cols, ld, data.len())?;
+        Ok(Self { data, rows, cols, ld })
+    }
+
+    /// Rows of the stored matrix.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns of the stored matrix.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Leading dimension (row stride, in elements).
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+
+    /// Bounds-checked element read.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        assert!(r < self.rows && c < self.cols);
+        self.data[r * self.ld + c]
+    }
+
+    /// Bounds-checked element write.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        assert!(r < self.rows && c < self.cols);
+        self.data[r * self.ld + c] = v;
+    }
+
+    /// Unchecked element read.
+    ///
+    /// # Safety
+    /// Caller must guarantee `r < rows && c < cols`.
+    #[inline(always)]
+    pub unsafe fn get_unchecked(&self, r: usize, c: usize) -> f32 {
+        *self.data.get_unchecked(r * self.ld + c)
+    }
+
+    /// Unchecked element write.
+    ///
+    /// # Safety
+    /// Caller must guarantee `r < rows && c < cols`.
+    #[inline(always)]
+    pub unsafe fn set_unchecked(&mut self, r: usize, c: usize, v: f32) {
+        *self.data.get_unchecked_mut(r * self.ld + c) = v;
+    }
+
+    /// Mutable pointer to the start of row `r`.
+    #[inline(always)]
+    pub fn row_ptr_mut(&mut self, r: usize) -> *mut f32 {
+        debug_assert!(r < self.rows);
+        unsafe { self.data.as_mut_ptr().add(r * self.ld) }
+    }
+
+    /// Reborrow as an immutable view.
+    pub fn as_ref(&self) -> MatRef<'_> {
+        MatRef { data: self.data, rows: self.rows, cols: self.cols, ld: self.ld }
+    }
+
+    /// Reborrow as a shorter-lived mutable view.
+    pub fn reborrow(&mut self) -> MatMut<'_> {
+        MatMut { data: self.data, rows: self.rows, cols: self.cols, ld: self.ld }
+    }
+
+    /// Split into two disjoint row ranges at row `r` (the matrix analogue
+    /// of `split_at_mut`); used by the thread-parallel GEMM driver.
+    pub fn split_rows(self, r: usize) -> (MatMut<'a>, MatMut<'a>) {
+        assert!(r <= self.rows, "split row {r} > rows {}", self.rows);
+        let (top, bottom) = self.data.split_at_mut(r * self.ld);
+        (
+            MatMut { data: top, rows: r, cols: self.cols, ld: self.ld },
+            MatMut { data: bottom, rows: self.rows - r, cols: self.cols, ld: self.ld },
+        )
+    }
+
+    /// Reborrow a mutable sub-view of `nr × nc` starting at `(r0, c0)`.
+    pub fn block_mut(&mut self, r0: usize, c0: usize, nr: usize, nc: usize) -> MatMut<'_> {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols, "block out of range");
+        MatMut {
+            data: &mut self.data[r0 * self.ld + c0..],
+            rows: nr,
+            cols: nc,
+            ld: self.ld,
+        }
+    }
+
+    /// Scale every element of the logical matrix by `beta`
+    /// (`beta == 0` writes zeros, discarding any NaN/Inf in C, matching
+    /// BLAS semantics).
+    pub fn scale(&mut self, beta: f32) {
+        if beta == 1.0 {
+            return;
+        }
+        for r in 0..self.rows {
+            let base = r * self.ld;
+            if beta == 0.0 {
+                self.data[base..base + self.cols].fill(0.0);
+            } else {
+                for v in &mut self.data[base..base + self.cols] {
+                    *v *= beta;
+                }
+            }
+        }
+    }
+}
+
+fn validate(rows: usize, cols: usize, ld: usize, len: usize) -> Result<(), BlasError> {
+    if rows == 0 || cols == 0 {
+        return Ok(()); // empty views never touch memory
+    }
+    if ld < cols {
+        return Err(BlasError::BadLeadingDim { operand: "?", ld, cols });
+    }
+    let need = (rows - 1) * ld + cols;
+    if len < need {
+        return Err(BlasError::BufferTooSmall { operand: "?", need, got: len });
+    }
+    Ok(())
+}
+
+/// Owned row-major matrix (contiguous or padded to a stride).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+    ld: usize,
+}
+
+impl Matrix {
+    /// Zero-filled `rows × cols` matrix with `ld == cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { data: vec![0.0; rows * cols], rows, cols, ld: cols }
+    }
+
+    /// Zero-filled matrix with an explicit stride (`ld >= cols`), matching
+    /// the paper's fixed-stride benchmarking layout.
+    pub fn zeros_strided(rows: usize, cols: usize, ld: usize) -> Self {
+        assert!(ld >= cols, "ld {ld} < cols {cols}");
+        Self { data: vec![0.0; rows.max(1) * ld], rows, cols, ld }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn<F: FnMut(usize, usize) -> f32>(rows: usize, cols: usize, mut f: F) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    /// Uniform-random matrix in `[lo, hi)` from a seed (deterministic).
+    pub fn random(rows: usize, cols: usize, seed: u64, lo: f32, hi: f32) -> Self {
+        let mut rng = crate::util::prng::Pcg32::new(seed);
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_f32(&mut m.data, lo, hi);
+        m
+    }
+
+    /// Uniform-random matrix with explicit stride; the padding tail of each
+    /// row is filled with a sentinel so tests can detect stray writes.
+    pub fn random_strided(rows: usize, cols: usize, ld: usize, seed: u64) -> Self {
+        let mut m = Self::zeros_strided(rows, cols, ld);
+        let mut rng = crate::util::prng::Pcg32::new(seed);
+        for r in 0..rows {
+            for c in 0..ld {
+                m.data[r * ld + c] = if c < cols { rng.f32_range(-1.0, 1.0) } else { -77.0 };
+            }
+        }
+        m
+    }
+
+    /// Rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Leading dimension.
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+
+    /// Backing storage.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable backing storage.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Element read.
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        assert!(r < self.rows && c < self.cols);
+        self.data[r * self.ld + c]
+    }
+
+    /// Element write.
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        assert!(r < self.rows && c < self.cols);
+        self.data[r * self.ld + c] = v;
+    }
+
+    /// Immutable view of the whole matrix.
+    pub fn view(&self) -> MatRef<'_> {
+        MatRef { data: &self.data, rows: self.rows, cols: self.cols, ld: self.ld }
+    }
+
+    /// Mutable view of the whole matrix.
+    pub fn view_mut(&mut self) -> MatMut<'_> {
+        MatMut { data: &mut self.data, rows: self.rows, cols: self.cols, ld: self.ld }
+    }
+
+    /// Logical transpose (materialised copy).
+    pub fn transposed(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+    }
+
+    /// Maximum absolute element difference over the logical area.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut worst = 0.0f32;
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                worst = worst.max((self.get(r, c) - other.get(r, c)).abs());
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_validate() {
+        let d = vec![0.0f32; 10];
+        assert!(MatRef::new(&d, 2, 5, 5).is_ok());
+        assert!(MatRef::new(&d, 2, 5, 4).is_err()); // ld < cols
+        assert!(MatRef::new(&d, 3, 5, 5).is_err()); // too short
+        assert!(MatRef::new(&d, 2, 4, 6).is_ok()); // (2-1)*6+4 = 10 fits exactly
+        assert!(MatRef::new(&[], 0, 5, 5).is_ok()); // empty is fine
+    }
+
+    #[test]
+    fn get_set_strided() {
+        let mut m = Matrix::zeros_strided(3, 2, 4);
+        m.set(2, 1, 9.0);
+        assert_eq!(m.get(2, 1), 9.0);
+        assert_eq!(m.data()[2 * 4 + 1], 9.0);
+        assert_eq!(m.ld(), 4);
+    }
+
+    #[test]
+    fn block_views() {
+        let m = Matrix::from_fn(4, 5, |r, c| (r * 10 + c) as f32);
+        let b = m.view().block(1, 2, 2, 3);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.cols(), 3);
+        assert_eq!(b.get(0, 0), 12.0);
+        assert_eq!(b.get(1, 2), 24.0);
+    }
+
+    #[test]
+    fn block_mut_writes_through() {
+        let mut m = Matrix::zeros(4, 4);
+        {
+            let mut b = m.view_mut();
+            let mut b = b.block_mut(2, 2, 2, 2);
+            b.set(0, 0, 5.0);
+            b.set(1, 1, 6.0);
+        }
+        assert_eq!(m.get(2, 2), 5.0);
+        assert_eq!(m.get(3, 3), 6.0);
+        assert_eq!(m.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn scale_semantics() {
+        let mut m = Matrix::from_fn(2, 2, |_, _| 3.0);
+        m.view_mut().scale(2.0);
+        assert_eq!(m.get(0, 0), 6.0);
+        // beta = 0 must overwrite even NaN.
+        m.set(1, 1, f32::NAN);
+        m.view_mut().scale(0.0);
+        assert_eq!(m.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn scale_respects_padding() {
+        let mut m = Matrix::random_strided(2, 3, 5, 1);
+        let pad_before = m.data()[3]; // sentinel -77
+        m.view_mut().scale(0.0);
+        assert_eq!(m.data()[3], pad_before, "padding must not be scaled");
+        assert_eq!(m.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn split_rows_disjoint_and_complete() {
+        let mut m = Matrix::from_fn(6, 3, |r, c| (r * 10 + c) as f32);
+        {
+            let v = m.view_mut();
+            let (mut top, mut bottom) = v.split_rows(2);
+            assert_eq!(top.rows(), 2);
+            assert_eq!(bottom.rows(), 4);
+            assert_eq!(top.get(1, 2), 12.0);
+            assert_eq!(bottom.get(0, 0), 20.0);
+            top.set(0, 0, -1.0);
+            bottom.set(3, 2, -2.0);
+        }
+        assert_eq!(m.get(0, 0), -1.0);
+        assert_eq!(m.get(5, 2), -2.0);
+    }
+
+    #[test]
+    fn split_rows_edges() {
+        let mut m = Matrix::zeros(3, 2);
+        let (top, bottom) = m.view_mut().split_rows(0);
+        assert_eq!(top.rows(), 0);
+        assert_eq!(bottom.rows(), 3);
+        let (top, bottom) = m.view_mut().split_rows(3);
+        assert_eq!(top.rows(), 3);
+        assert_eq!(bottom.rows(), 0);
+    }
+
+    #[test]
+    fn reborrow_shares_storage() {
+        let mut m = Matrix::zeros(2, 2);
+        {
+            let mut v = m.view_mut();
+            let mut r = v.reborrow();
+            r.set(1, 1, 5.0);
+        }
+        assert_eq!(m.get(1, 1), 5.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::random(3, 5, 7, -1.0, 1.0);
+        let tt = m.transposed().transposed();
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = Matrix::random(4, 4, 42, -1.0, 1.0);
+        let b = Matrix::random(4, 4, 42, -1.0, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_get_panics() {
+        let m = Matrix::zeros(2, 2);
+        let _ = m.get(2, 0);
+    }
+}

@@ -1,0 +1,301 @@
+//! Level-3 BLAS `SGEMM` public interface.
+//!
+//! Emmerald implements the `SGEMM` interface of Level-3 BLAS (paper §1) so
+//! it can drop into BLAS-based libraries. This module is the public API:
+//!
+//! ```
+//! use emmerald::blas::{sgemm, Backend, Transpose};
+//!
+//! // C = alpha * A*B + beta * C  with row-major storage and explicit
+//! // leading dimensions (row strides), exactly like the paper's fixed
+//! // stride-700 benchmark methodology.
+//! let (m, n, k) = (3, 4, 5);
+//! let a: Vec<f32> = (0..m * k).map(|i| i as f32).collect();
+//! let b: Vec<f32> = (0..k * n).map(|i| (i % 7) as f32).collect();
+//! let mut c = vec![0.0f32; m * n];
+//! sgemm(Backend::Auto, Transpose::No, Transpose::No,
+//!       m, n, k, 1.0, &a, k, &b, n, 0.0, &mut c, n).unwrap();
+//! ```
+//!
+//! Storage is **row-major** with a leading dimension (`ld*`) giving the
+//! distance in elements between consecutive rows; `ld >= cols` of the
+//! stored matrix. Transposition is expressed logically via [`Transpose`] —
+//! no data is moved.
+
+mod backend;
+mod error;
+pub mod level1;
+pub mod level2;
+mod matrix;
+pub mod syrk;
+
+pub use backend::{available_backends, Backend};
+pub use level1::{isamax, saxpy, sdot, snrm2, sscal};
+pub use level2::sgemv;
+pub use syrk::ssyrk_lower;
+pub use error::BlasError;
+pub use matrix::{MatMut, MatRef, Matrix};
+
+/// Logical transposition of an operand (`op(X) = X` or `Xᵀ`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transpose {
+    /// `op(X) = X`
+    No,
+    /// `op(X) = Xᵀ`
+    Yes,
+}
+
+impl Transpose {
+    /// Parse from the BLAS character convention ('n'/'N' or 't'/'T').
+    pub fn from_char(c: char) -> Result<Self, BlasError> {
+        match c {
+            'n' | 'N' => Ok(Transpose::No),
+            't' | 'T' => Ok(Transpose::Yes),
+            other => Err(BlasError::BadTranspose(other)),
+        }
+    }
+}
+
+/// General matrix-matrix multiply: `C = alpha * op(A) * op(B) + beta * C`.
+///
+/// * `op(A)` is `m × k`, `op(B)` is `k × n`, `C` is `m × n`.
+/// * `a` stores `A` row-major with leading dimension `lda` (so `A` is
+///   `m × k` storage when `transa == No`, `k × m` when `Yes`); same for `b`.
+/// * Degenerate dimensions (`m`, `n` or `k` = 0) are valid: `k == 0`
+///   scales `C` by `beta`; `m == 0` or `n == 0` is a no-op.
+///
+/// This is the crate's primary entry point; `backend` selects the
+/// implementation ([`Backend::Auto`] picks the fastest available).
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+) -> Result<(), BlasError> {
+    // Stored shapes of A and B.
+    let (ar, ac) = match transa {
+        Transpose::No => (m, k),
+        Transpose::Yes => (k, m),
+    };
+    let (br, bc) = match transb {
+        Transpose::No => (k, n),
+        Transpose::Yes => (n, k),
+    };
+    let a = MatRef::new(a, ar, ac, lda).map_err(|e| e.operand("A"))?;
+    let b = MatRef::new(b, br, bc, ldb).map_err(|e| e.operand("B"))?;
+    let c = MatMut::new(c, m, n, ldc).map_err(|e| e.operand("C"))?;
+
+    if m == 0 || n == 0 {
+        return Ok(());
+    }
+
+    backend.resolve()?.dispatch(transa, transb, alpha, a, b, beta, c);
+    Ok(())
+}
+
+/// Convenience wrapper over [`sgemm`] for owned [`Matrix`] values
+/// (`C = alpha * op(A) op(B) + beta * C`).
+pub fn sgemm_matrix(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: &Matrix,
+    b: &Matrix,
+    beta: f32,
+    c: &mut Matrix,
+) -> Result<(), BlasError> {
+    let (m, ka) = match transa {
+        Transpose::No => (a.rows(), a.cols()),
+        Transpose::Yes => (a.cols(), a.rows()),
+    };
+    let (kb, n) = match transb {
+        Transpose::No => (b.rows(), b.cols()),
+        Transpose::Yes => (b.cols(), b.rows()),
+    };
+    if ka != kb {
+        return Err(BlasError::DimMismatch { m, n, k: ka, other_k: kb });
+    }
+    if c.rows() != m || c.cols() != n {
+        return Err(BlasError::ShapeMismatch {
+            what: "C",
+            expect: (m, n),
+            got: (c.rows(), c.cols()),
+        });
+    }
+    let (lda, ldb, ldc) = (a.ld(), b.ld(), c.ld());
+    sgemm(
+        backend,
+        transa,
+        transb,
+        m,
+        n,
+        ka,
+        alpha,
+        a.data(),
+        lda,
+        b.data(),
+        ldb,
+        beta,
+        c.data_mut(),
+        ldc,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_oracle(
+        transa: Transpose,
+        transb: Transpose,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        a: &[f32],
+        lda: usize,
+        b: &[f32],
+        ldb: usize,
+        beta: f32,
+        c: &mut [f32],
+        ldc: usize,
+    ) {
+        // Independent triple loop written directly against the docs'
+        // storage convention, used to validate the public entry point.
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    let av = match transa {
+                        Transpose::No => a[i * lda + p],
+                        Transpose::Yes => a[p * lda + i],
+                    };
+                    let bv = match transb {
+                        Transpose::No => b[p * ldb + j],
+                        Transpose::Yes => b[j * ldb + p],
+                    };
+                    acc += (av as f64) * (bv as f64);
+                }
+                c[i * ldc + j] = alpha * acc as f32 + beta * c[i * ldc + j];
+            }
+        }
+    }
+
+    #[test]
+    fn sgemm_matches_inline_oracle() {
+        let (m, n, k) = (5, 7, 3);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32) * 0.25 - 1.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| 2.0 - (i as f32) * 0.125).collect();
+        let mut c1: Vec<f32> = (0..m * n).map(|i| i as f32).collect();
+        let mut c2 = c1.clone();
+        sgemm(Backend::Naive, Transpose::No, Transpose::No, m, n, k, 1.5, &a, k, &b, n, 0.5, &mut c1, n)
+            .unwrap();
+        naive_oracle(Transpose::No, Transpose::No, m, n, k, 1.5, &a, k, &b, n, 0.5, &mut c2, n);
+        crate::util::testkit::assert_allclose(&c1, &c2, 1e-5, 1e-6, "sgemm vs oracle");
+    }
+
+    #[test]
+    fn transposed_operands() {
+        let (m, n, k) = (4, 3, 6);
+        // A stored k×m (transa=Yes), B stored n×k (transb=Yes).
+        let a: Vec<f32> = (0..k * m).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..n * k).map(|i| (i as f32).cos()).collect();
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        sgemm(Backend::Naive, Transpose::Yes, Transpose::Yes, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c1, n)
+            .unwrap();
+        naive_oracle(Transpose::Yes, Transpose::Yes, m, n, k, 1.0, &a, m, &b, k, 0.0, &mut c2, n);
+        crate::util::testkit::assert_allclose(&c1, &c2, 1e-5, 1e-6, "tt");
+    }
+
+    #[test]
+    fn strided_storage() {
+        // Paper methodology: stride fixed to 700 regardless of row length.
+        let (m, n, k) = (3, 4, 2);
+        let (lda, ldb, ldc) = (10, 11, 12);
+        let a: Vec<f32> = (0..m * lda).map(|i| i as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..k * ldb).map(|i| i as f32 * 0.2).collect();
+        let mut c1 = vec![7.0f32; m * ldc];
+        let mut c2 = c1.clone();
+        sgemm(Backend::Naive, Transpose::No, Transpose::No, m, n, k, 1.0, &a, lda, &b, ldb, 2.0, &mut c1, ldc)
+            .unwrap();
+        naive_oracle(Transpose::No, Transpose::No, m, n, k, 1.0, &a, lda, &b, ldb, 2.0, &mut c2, ldc);
+        assert_eq!(c1, c2);
+        // Padding between rows untouched.
+        assert_eq!(c1[n], 7.0);
+    }
+
+    #[test]
+    fn k_zero_scales_by_beta() {
+        let mut c = vec![2.0f32; 4];
+        sgemm(Backend::Naive, Transpose::No, Transpose::No, 2, 2, 0, 1.0, &[], 1, &[], 1, 0.5, &mut c, 2)
+            .unwrap();
+        assert_eq!(c, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn m_zero_is_noop() {
+        let mut c: Vec<f32> = vec![];
+        sgemm(Backend::Naive, Transpose::No, Transpose::No, 0, 5, 3, 1.0, &[], 3, &[1.0; 15], 5, 0.0, &mut c, 5)
+            .unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_ld() {
+        let a = vec![0.0f32; 6];
+        let b = vec![0.0f32; 6];
+        let mut c = vec![0.0f32; 4];
+        // lda=1 < k=3 for a 2x3 A.
+        let err = sgemm(Backend::Naive, Transpose::No, Transpose::No, 2, 2, 3, 1.0, &a, 1, &b, 2, 0.0, &mut c, 2);
+        assert!(matches!(err, Err(BlasError::BadLeadingDim { .. })));
+    }
+
+    #[test]
+    fn rejects_short_buffer() {
+        let a = vec![0.0f32; 5]; // needs 2*3=6
+        let b = vec![0.0f32; 6];
+        let mut c = vec![0.0f32; 4];
+        let err = sgemm(Backend::Naive, Transpose::No, Transpose::No, 2, 2, 3, 1.0, &a, 3, &b, 2, 0.0, &mut c, 2);
+        assert!(matches!(err, Err(BlasError::BufferTooSmall { .. })));
+    }
+
+    #[test]
+    fn transpose_from_char() {
+        assert_eq!(Transpose::from_char('n').unwrap(), Transpose::No);
+        assert_eq!(Transpose::from_char('T').unwrap(), Transpose::Yes);
+        assert!(Transpose::from_char('q').is_err());
+    }
+
+    #[test]
+    fn sgemm_matrix_wrapper() {
+        let a = Matrix::from_fn(3, 2, |i, j| (i + j) as f32);
+        let b = Matrix::from_fn(2, 4, |i, j| (i * 4 + j) as f32);
+        let mut c = Matrix::zeros(3, 4);
+        sgemm_matrix(Backend::Naive, Transpose::No, Transpose::No, 1.0, &a, &b, 0.0, &mut c).unwrap();
+        // spot check c[1][2] = sum_p a[1][p] * b[p][2] = 1*2 + 2*6 = 14
+        assert_eq!(c.get(1, 2), 14.0);
+    }
+
+    #[test]
+    fn sgemm_matrix_dim_mismatch() {
+        let a = Matrix::zeros(3, 2);
+        let b = Matrix::zeros(3, 4); // k mismatch: 2 vs 3
+        let mut c = Matrix::zeros(3, 4);
+        assert!(matches!(
+            sgemm_matrix(Backend::Naive, Transpose::No, Transpose::No, 1.0, &a, &b, 0.0, &mut c),
+            Err(BlasError::DimMismatch { .. })
+        ));
+    }
+}

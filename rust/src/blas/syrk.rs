@@ -1,0 +1,140 @@
+//! SSYRK: symmetric rank-k update, `C = alpha · A Aᵀ + beta · C` (lower
+//! triangle), built on the Emmerald GEMM — the Level-3 sibling LAPACK's
+//! Cholesky factorisation consumes.
+//!
+//! The update is computed block-wise: diagonal blocks via a small direct
+//! kernel that touches only the lower triangle, off-diagonal blocks as
+//! plain SGEMM tiles (where all the flops are), so the heavy work runs at
+//! full kernel speed.
+
+use super::matrix::{MatMut, MatRef};
+use super::{sgemm, Backend, BlasError, Transpose};
+
+/// Block size for the tiled update.
+const NB: usize = 64;
+
+/// `C = alpha * A * Aᵀ + beta * C`, updating only the lower triangle of
+/// the `n × n` matrix `C` (`A` is `n × k`). The strict upper triangle is
+/// left untouched.
+pub fn ssyrk_lower(
+    backend: Backend,
+    alpha: f32,
+    a: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+) -> Result<(), BlasError> {
+    let n = a.rows();
+    let k = a.cols();
+    if c.rows() != n || c.cols() != n {
+        return Err(BlasError::ShapeMismatch { what: "C", expect: (n, n), got: (c.rows(), c.cols()) });
+    }
+    let mut i0 = 0;
+    while i0 < n {
+        let ib = NB.min(n - i0);
+        // Diagonal block: direct lower-triangle dot products.
+        for i in i0..i0 + ib {
+            for j in i0..=i {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    // SAFETY: i, j < n and p < k.
+                    unsafe { acc += a.get_unchecked(i, p) * a.get_unchecked(j, p) };
+                }
+                let old = c.get(i, j);
+                c.set(i, j, alpha * acc + beta * old);
+            }
+        }
+        // Off-diagonal row panel: C[i0+ib.., i0..i0+ib] — one GEMM.
+        if i0 + ib < n {
+            let rows = n - (i0 + ib);
+            let a_lo = a.block(i0 + ib, 0, rows, k);
+            let a_diag = a.block(i0, 0, ib, k);
+            let mut c_panel = c.block_mut(i0 + ib, i0, rows, ib);
+            let ld = c_panel.ld();
+            // C_panel = alpha * A_lo · A_diagᵀ + beta * C_panel.
+            let (pr, pc) = (c_panel.rows(), c_panel.cols());
+            let panel_slice = unsafe {
+                std::slice::from_raw_parts_mut(c_panel.row_ptr_mut(0), (pr - 1) * ld + pc)
+            };
+            sgemm(
+                backend,
+                Transpose::No,
+                Transpose::Yes,
+                rows,
+                ib,
+                k,
+                alpha,
+                a_lo.data(),
+                a_lo.ld(),
+                a_diag.data(),
+                a_diag.ld(),
+                beta,
+                panel_slice,
+                ld,
+            )?;
+        }
+        i0 += ib;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+
+    fn syrk_ref(alpha: f32, a: &Matrix, beta: f32, c0: &Matrix) -> Matrix {
+        let n = a.rows();
+        let mut out = c0.clone();
+        for i in 0..n {
+            for j in 0..=i {
+                let mut acc = 0.0f32;
+                for p in 0..a.cols() {
+                    acc += a.get(i, p) * a.get(j, p);
+                }
+                out.set(i, j, alpha * acc + beta * c0.get(i, j));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_reference_lower_triangle() {
+        for &(n, k) in &[(1usize, 3usize), (8, 8), (65, 40), (130, 70)] {
+            let a = Matrix::random(n, k, 1, -1.0, 1.0);
+            let c0 = Matrix::random(n, n, 2, -1.0, 1.0);
+            let want = syrk_ref(0.7, &a, 1.3, &c0);
+            let mut c = c0.clone();
+            ssyrk_lower(Backend::Simd, 0.7, a.view(), 1.3, &mut c.view_mut()).unwrap();
+            for i in 0..n {
+                for j in 0..=i {
+                    assert!(
+                        (c.get(i, j) - want.get(i, j)).abs() < 1e-3,
+                        "({i},{j}) n={n} k={k}: {} vs {}",
+                        c.get(i, j),
+                        want.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn upper_triangle_untouched() {
+        let n = 70;
+        let a = Matrix::random(n, 20, 3, -1.0, 1.0);
+        let mut c = Matrix::from_fn(n, n, |_, _| 42.0);
+        ssyrk_lower(Backend::Simd, 1.0, a.view(), 0.0, &mut c.view_mut()).unwrap();
+        for i in 0..n {
+            for j in i + 1..n {
+                assert_eq!(c.get(i, j), 42.0, "upper ({i},{j}) was written");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = Matrix::zeros(4, 3);
+        let mut c = Matrix::zeros(5, 5);
+        assert!(ssyrk_lower(Backend::Naive, 1.0, a.view(), 0.0, &mut c.view_mut()).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! The 1999 cluster model: nodes, network, sustained rate, price/perf.
+//!
+//! Paper §4: *"By distributing training over 196 Intel Pentium III 550 MHz
+//! processors, and using Emmerald as the kernel of the training procedure,
+//! we achieved a sustained performance of 152 GFlops/s for a price
+//! performance ratio of 98 ¢ USD/MFlop/s."*
+//!
+//! The original cluster ("Bunyip", ref [1]) is long gone; this model
+//! reproduces its arithmetic from first principles: per-node kernel rate
+//! (measured by our benches, or the paper's PIII numbers), ring-allreduce
+//! gradient synchronisation over 100 Mbit Ethernet, and the 1999 price
+//! book. The `cluster_scale` bench feeds measured single-node rates in and
+//! checks the sustained-GFlop/s and ¢/MFlop/s outputs against the paper.
+
+/// One cluster node.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeSpec {
+    /// CPU clock in MHz.
+    pub clock_mhz: f64,
+    /// Sustained single-node compute rate in MFlop/s while training.
+    pub sustained_mflops: f64,
+    /// Node price in USD (1999 price book; includes its share of switches).
+    pub price_usd: f64,
+}
+
+/// Interconnect model (flat switched Ethernet, ring allreduce).
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkSpec {
+    /// Per-message latency in seconds.
+    pub latency_s: f64,
+    /// Per-link bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+/// A homogeneous cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterSpec {
+    /// Node count.
+    pub nodes: usize,
+    /// Node description.
+    pub node: NodeSpec,
+    /// Interconnect description.
+    pub network: NetworkSpec,
+}
+
+impl ClusterSpec {
+    /// The paper's cluster: 196 × PIII-550. Per-node sustained rate uses
+    /// the paper's own large-matrix measurement (940 MFlop/s at 550 MHz,
+    /// §4) derated by the training procedure's non-GEMM work; the price
+    /// book is ref [1]'s (AUD ~$250k ≈ USD ~$149k for the full machine).
+    pub fn piii_cluster_1999() -> Self {
+        Self {
+            nodes: 196,
+            node: NodeSpec {
+                clock_mhz: 550.0,
+                // 940 MFlop/s kernel peak × ~0.87 training efficiency.
+                sustained_mflops: 820.0,
+                price_usd: 760.0,
+            },
+            network: NetworkSpec {
+                // 100 Mbit switched Ethernet, MPI-ish latency.
+                latency_s: 100e-6,
+                bandwidth_bps: 100e6 / 8.0,
+            },
+        }
+    }
+
+    /// A cluster of `nodes` copies of *this host*, given a measured
+    /// single-node sustained rate (from the training bench) and a modern
+    /// price per node.
+    pub fn host_cluster(nodes: usize, sustained_mflops: f64, price_usd: f64) -> Self {
+        Self {
+            nodes,
+            node: NodeSpec { clock_mhz: 2100.0, sustained_mflops, price_usd },
+            network: NetworkSpec { latency_s: 20e-6, bandwidth_bps: 10e9 / 8.0 },
+        }
+    }
+
+    /// Ring-allreduce time for `bytes` of gradients: `2(n-1)/n · bytes/bw`
+    /// transfer plus `2(n-1)` latency hops.
+    pub fn allreduce_seconds(&self, bytes: f64) -> f64 {
+        if self.nodes <= 1 {
+            return 0.0;
+        }
+        let n = self.nodes as f64;
+        2.0 * (n - 1.0) / n * bytes / self.network.bandwidth_bps
+            + 2.0 * (n - 1.0) * self.network.latency_s
+    }
+
+    /// Wall-clock seconds for one synchronous step: per-node compute plus
+    /// gradient allreduce.
+    pub fn step_seconds(&self, flops_per_node: f64, grad_bytes: f64) -> f64 {
+        let compute = flops_per_node / (self.node.sustained_mflops * 1e6);
+        compute + self.allreduce_seconds(grad_bytes)
+    }
+
+    /// Parallel efficiency of a step (compute / (compute + comm)).
+    pub fn efficiency(&self, flops_per_node: f64, grad_bytes: f64) -> f64 {
+        let compute = flops_per_node / (self.node.sustained_mflops * 1e6);
+        compute / self.step_seconds(flops_per_node, grad_bytes)
+    }
+
+    /// Sustained cluster rate in GFlop/s for a steady stream of steps.
+    pub fn sustained_gflops(&self, flops_per_node: f64, grad_bytes: f64) -> f64 {
+        let per_step = flops_per_node * self.nodes as f64;
+        per_step / self.step_seconds(flops_per_node, grad_bytes) / 1e9
+    }
+
+    /// Total cluster price (USD).
+    pub fn total_price_usd(&self) -> f64 {
+        self.nodes as f64 * self.node.price_usd
+    }
+
+    /// The paper's headline metric: US cents per sustained MFlop/s.
+    pub fn cents_per_mflops(&self, sustained_gflops: f64) -> f64 {
+        self.total_price_usd() * 100.0 / (sustained_gflops * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Gradient bytes for the paper's ~1M-parameter network (f32).
+    const GRAD_BYTES: f64 = 1.0e6 * 4.0;
+    /// Per-node flops between gradient syncs. Ref [1] trained with very
+    /// large local batches (a ~million-example corpus sharded over 196
+    /// nodes), so each sync amortises several seconds of GEMM work:
+    /// batch_per_node ≈ 1300 × 3 × 2 × 1M-param ≈ 8 GFlop.
+    const STEP_FLOPS: f64 = 8.0e9;
+
+    #[test]
+    fn paper_cluster_reproduces_headline_numbers() {
+        let c = ClusterSpec::piii_cluster_1999();
+        let gf = c.sustained_gflops(STEP_FLOPS, GRAD_BYTES);
+        // Paper: 152 GFlop/s sustained. Our model must land in the band.
+        assert!(
+            (130.0..170.0).contains(&gf),
+            "sustained {gf:.1} GFlop/s outside the paper's band"
+        );
+        let cents = c.cents_per_mflops(gf);
+        // Paper: 98 ¢/MFlop/s.
+        assert!((80.0..120.0).contains(&cents), "price/perf {cents:.0} ¢/MFlop/s");
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes_and_nodes() {
+        let c = ClusterSpec::piii_cluster_1999();
+        assert!(c.allreduce_seconds(8e6) > c.allreduce_seconds(4e6));
+        let small = ClusterSpec { nodes: 2, ..c };
+        assert!(small.allreduce_seconds(4e6) < c.allreduce_seconds(4e6));
+        let single = ClusterSpec { nodes: 1, ..c };
+        assert_eq!(single.allreduce_seconds(4e6), 0.0);
+    }
+
+    #[test]
+    fn efficiency_in_unit_interval_and_monotone_in_compute() {
+        let c = ClusterSpec::piii_cluster_1999();
+        let e_small = c.efficiency(1e8, GRAD_BYTES);
+        let e_large = c.efficiency(4e9, GRAD_BYTES);
+        assert!(e_small > 0.0 && e_small < 1.0);
+        assert!(e_large > e_small, "bigger local batches amortise comm");
+    }
+
+    #[test]
+    fn sustained_rate_saturates_at_node_sum() {
+        let c = ClusterSpec::piii_cluster_1999();
+        let gf = c.sustained_gflops(1e12, GRAD_BYTES); // comm-negligible
+        let peak = c.nodes as f64 * c.node.sustained_mflops / 1e3;
+        assert!(gf <= peak * 1.001);
+        assert!(gf > peak * 0.99);
+    }
+
+    #[test]
+    fn host_cluster_constructor() {
+        let c = ClusterSpec::host_cluster(16, 20_000.0, 2_000.0);
+        assert_eq!(c.nodes, 16);
+        assert_eq!(c.total_price_usd(), 32_000.0);
+        let gf = c.sustained_gflops(1e9, GRAD_BYTES);
+        assert!(gf > 0.0);
+    }
+}

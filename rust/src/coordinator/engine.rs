@@ -1,0 +1,181 @@
+//! Gradient engines: how a worker computes `(loss, grads)` for its shard.
+
+use anyhow::{bail, Context, Result};
+
+use crate::blas::{Backend, Matrix};
+use crate::nn::mlp::{Mlp, MlpGrads};
+use crate::runtime::{Runtime, Tensor};
+
+/// A worker's compute engine. Engines are constructed *inside* the worker
+/// thread (see [`EngineFactory`]), so implementations need not be `Send`.
+pub trait GradEngine {
+    /// Compute loss and gradients of `mlp` on one batch shard.
+    fn loss_and_grad(&mut self, mlp: &Mlp, x: &Matrix, y: &Matrix) -> Result<(f32, MlpGrads)>;
+
+    /// Engine label for logs.
+    fn name(&self) -> String;
+
+    /// Fixed batch size required by the engine (None = any).
+    fn required_batch(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Constructs a fresh engine for worker `id` on the worker's own thread.
+pub type EngineFactory = dyn Fn(usize) -> Result<Box<dyn GradEngine>> + Send + Sync;
+
+/// Native engine: Rust backprop with a selectable SGEMM backend.
+pub struct NativeEngine {
+    backend: Backend,
+}
+
+impl NativeEngine {
+    /// New native engine over the given backend.
+    pub fn new(backend: Backend) -> Self {
+        Self { backend }
+    }
+}
+
+impl GradEngine for NativeEngine {
+    fn loss_and_grad(&mut self, mlp: &Mlp, x: &Matrix, y: &Matrix) -> Result<(f32, MlpGrads)> {
+        // Re-target the snapshot at this engine's backend (cheap relative
+        // to the GEMMs; parameters are already a per-step snapshot).
+        let mut local = mlp.clone();
+        local.backend = self.backend;
+        Ok(local.loss_and_grad(x, y))
+    }
+
+    fn name(&self) -> String {
+        format!("native/{}", self.backend.name())
+    }
+}
+
+/// PJRT engine: executes the AOT-compiled `mlp_grad` artifact (JAX graph
+/// wrapping the Emmerald Pallas kernel). Python is *not* involved — the
+/// artifact was lowered at build time.
+pub struct PjrtEngine {
+    runtime: Runtime,
+    artifact: String,
+    sizes: Vec<usize>,
+    batch: usize,
+}
+
+impl PjrtEngine {
+    /// Load the `mlp_grad` artifact from `artifact_dir`.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::with_artifact(artifact_dir, "mlp_grad")
+    }
+
+    /// Load a specific grad artifact by name.
+    pub fn with_artifact(
+        artifact_dir: impl AsRef<std::path::Path>,
+        artifact: &str,
+    ) -> Result<Self> {
+        let runtime = Runtime::new(artifact_dir)?;
+        let meta = runtime.registry().get(artifact)?.clone();
+        let sizes: Vec<usize> = meta
+            .extra
+            .get("sizes")
+            .context("mlp artifact missing sizes extra")?
+            .split('-')
+            .map(|s| s.parse::<usize>().context("bad size"))
+            .collect::<Result<_>>()?;
+        let batch: usize =
+            meta.extra.get("batch").context("mlp artifact missing batch extra")?.parse()?;
+        runtime.ensure_compiled(artifact)?;
+        Ok(Self { runtime, artifact: artifact.to_string(), sizes, batch })
+    }
+
+    /// Layer sizes baked into the artifact.
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Batch size baked into the artifact.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn params_to_tensors(mlp: &Mlp) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(mlp.weights.len() * 2);
+        for (w, b) in mlp.weights.iter().zip(&mlp.biases) {
+            // Matrix data may be strided; weights are created contiguous.
+            if w.ld() != w.cols() {
+                bail!("strided weight matrices are not supported by the PJRT ABI");
+            }
+            out.push(Tensor::new(vec![w.rows(), w.cols()], w.data().to_vec())?);
+            out.push(Tensor::new(vec![b.len()], b.clone())?);
+        }
+        Ok(out)
+    }
+}
+
+impl GradEngine for PjrtEngine {
+    fn loss_and_grad(&mut self, mlp: &Mlp, x: &Matrix, y: &Matrix) -> Result<(f32, MlpGrads)> {
+        if mlp.sizes != self.sizes {
+            bail!(
+                "artifact '{}' was lowered for sizes {:?}, model has {:?}",
+                self.artifact,
+                self.sizes,
+                mlp.sizes
+            );
+        }
+        if x.rows() != self.batch {
+            bail!("artifact batch is {}, shard has {} rows", self.batch, x.rows());
+        }
+        let mut inputs = Self::params_to_tensors(mlp)?;
+        inputs.push(Tensor::new(vec![x.rows(), x.cols()], x.data().to_vec())?);
+        inputs.push(Tensor::new(vec![y.rows(), y.cols()], y.data().to_vec())?);
+        let outputs = self.runtime.execute(&self.artifact, &inputs)?;
+        if outputs.len() != 1 + 2 * mlp.n_layers() {
+            bail!("mlp_grad returned {} outputs, expected {}", outputs.len(), 1 + 2 * mlp.n_layers());
+        }
+        let loss = outputs[0].item()?;
+        let mut d_weights = Vec::with_capacity(mlp.n_layers());
+        let mut d_biases = Vec::with_capacity(mlp.n_layers());
+        for l in 0..mlp.n_layers() {
+            let dw = &outputs[1 + 2 * l];
+            let (r, c) = dw.as_2d()?;
+            let mut m = Matrix::zeros(r, c);
+            m.data_mut().copy_from_slice(dw.data());
+            d_weights.push(m);
+            d_biases.push(outputs[2 + 2 * l].data().to_vec());
+        }
+        Ok((loss, MlpGrads { d_weights, d_biases }))
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt/{}", self.artifact)
+    }
+
+    fn required_batch(&self) -> Option<usize> {
+        Some(self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::data::Dataset;
+
+    #[test]
+    fn native_engine_matches_direct_backprop() {
+        let mlp = Mlp::init(&[6, 10, 3], 3, Backend::Naive);
+        let d = Dataset::gaussian_clusters(16, 6, 3, 0.2, 4);
+        let (x, y) = d.slice(0, 16);
+        let (l_direct, g_direct) = mlp.loss_and_grad(&x, &y);
+        let mut engine = NativeEngine::new(Backend::Simd);
+        let (l_eng, g_eng) = engine.loss_and_grad(&mlp, &x, &y).unwrap();
+        assert!((l_direct - l_eng).abs() < 1e-4);
+        for (a, b) in g_direct.d_weights.iter().zip(&g_eng.d_weights) {
+            assert!(a.max_abs_diff(b) < 1e-4);
+        }
+        assert!(engine.name().contains("emmerald-sse"));
+        assert_eq!(engine.required_batch(), None);
+    }
+
+    #[test]
+    fn pjrt_engine_requires_artifacts() {
+        assert!(PjrtEngine::new("/definitely/not/here").is_err());
+    }
+}

@@ -1,0 +1,448 @@
+//! The synchronous data-parallel training loop (leader + workers).
+//!
+//! Per step: the leader snapshots the parameters, dispatches one batch
+//! shard per worker, collects per-shard gradients, averages them weighted
+//! by shard size (so the result equals the serial full-batch gradient —
+//! tested in `nn::sgd`), applies SGD, and meters flops.
+//!
+//! Workers run on their own threads with engines constructed in-thread
+//! (see [`super::engine::EngineFactory`]); a worker whose engine fails has
+//! its shard rerouted to a healthy worker, mirroring the restartable
+//! training of the paper's cluster application.
+
+use anyhow::{bail, Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use super::engine::{EngineFactory, GradEngine};
+use crate::blas::Matrix;
+use crate::nn::data::Dataset;
+use crate::nn::mlp::{Mlp, MlpGrads};
+use crate::nn::sgd::{average_grads, Sgd};
+use crate::util::timer::Stopwatch;
+
+/// Training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Number of workers (cluster nodes).
+    pub workers: usize,
+    /// Samples per worker per step.
+    pub shard_batch: usize,
+    /// Training steps.
+    pub steps: usize,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// Print a progress line every `log_every` steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { workers: 4, shard_batch: 64, steps: 50, lr: 0.2, log_every: 10 }
+    }
+}
+
+/// Per-step record.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    /// Step index.
+    pub step: usize,
+    /// Batch-weighted mean loss across shards.
+    pub loss: f32,
+    /// Wall-clock seconds for the step (dispatch → update).
+    pub seconds: f64,
+    /// Aggregate MFlop/s across all workers for this step.
+    pub mflops: f64,
+}
+
+/// Full training-run record.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Per-step stats (loss curve).
+    pub steps: Vec<StepStats>,
+    /// Loss at the final step.
+    pub final_loss: f32,
+    /// Accuracy over the training set at the end.
+    pub final_accuracy: f32,
+    /// Total useful flops executed.
+    pub total_flops: f64,
+    /// Total wall-clock seconds.
+    pub wall_seconds: f64,
+    /// Number of shards rerouted due to worker failure.
+    pub rerouted: usize,
+}
+
+impl TrainReport {
+    /// Sustained MFlop/s over the whole run.
+    pub fn sustained_mflops(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.total_flops / self.wall_seconds / 1e6
+        }
+    }
+
+    /// Loss of the first recorded step.
+    pub fn first_loss(&self) -> f32 {
+        self.steps.first().map(|s| s.loss).unwrap_or(f32::NAN)
+    }
+}
+
+enum WorkMsg {
+    Step { step: usize, params: Arc<Mlp>, x: Matrix, y: Matrix },
+    Stop,
+}
+
+enum ResultMsg {
+    Done { n: usize, loss: f32, grads: MlpGrads },
+    Failed { worker: usize, step: usize, x: Matrix, y: Matrix, error: String },
+}
+
+/// The leader: owns parameters, the dataset and the step loop.
+pub struct Coordinator {
+    cfg: TrainConfig,
+    mlp: Mlp,
+    data: Dataset,
+}
+
+impl Coordinator {
+    /// New coordinator over an initialised model and dataset.
+    pub fn new(cfg: TrainConfig, mlp: Mlp, data: Dataset) -> Result<Self> {
+        if cfg.workers == 0 || cfg.shard_batch == 0 || cfg.steps == 0 {
+            bail!("workers, shard_batch and steps must all be positive");
+        }
+        if data.len() < cfg.shard_batch {
+            bail!("dataset ({} samples) smaller than one shard ({})", data.len(), cfg.shard_batch);
+        }
+        if data.x.cols() != mlp.sizes[0] {
+            bail!("dataset features {} != model input {}", data.x.cols(), mlp.sizes[0]);
+        }
+        Ok(Self { cfg, mlp, data })
+    }
+
+    /// Current parameters (e.g. for evaluation after training).
+    pub fn model(&self) -> &Mlp {
+        &self.mlp
+    }
+
+    /// Deterministic shard for (step, worker): contiguous `shard_batch`
+    /// rows, round-robin over the dataset.
+    fn shard(&self, step: usize, worker: usize) -> (Matrix, Matrix) {
+        let n = self.data.len();
+        let b = self.cfg.shard_batch;
+        let nshards = n / b; // full shards only (fixed-size engine ABI)
+        let idx = (step * self.cfg.workers + worker) % nshards.max(1);
+        self.data.slice(idx * b, b)
+    }
+
+    /// Train with one engine on the caller's thread (shards processed
+    /// sequentially; the aggregation logic is identical to threaded mode).
+    pub fn train_sequential(&mut self, engine: &mut dyn GradEngine) -> Result<TrainReport> {
+        if let Some(rb) = engine.required_batch() {
+            if rb != self.cfg.shard_batch {
+                bail!("engine requires batch {rb}, config has {}", self.cfg.shard_batch);
+            }
+        }
+        let sgd = Sgd::new(self.cfg.lr);
+        let wall = Stopwatch::start();
+        let mut steps = Vec::with_capacity(self.cfg.steps);
+        let mut total_flops = 0.0;
+        for step in 0..self.cfg.steps {
+            let t = Stopwatch::start();
+            let mut parts = Vec::with_capacity(self.cfg.workers);
+            let mut loss_sum = 0.0f64;
+            for w in 0..self.cfg.workers {
+                let (x, y) = self.shard(step, w);
+                let (loss, grads) = engine
+                    .loss_and_grad(&self.mlp, &x, &y)
+                    .with_context(|| format!("step {step} worker {w}"))?;
+                loss_sum += loss as f64 * x.rows() as f64;
+                parts.push((x.rows(), grads));
+            }
+            let total_n: usize = parts.iter().map(|(n, _)| n).sum();
+            let avg = average_grads(&parts, &self.mlp);
+            sgd.apply(&mut self.mlp, &avg);
+            let seconds = t.seconds();
+            let flops =
+                self.mlp.train_step_flops(self.cfg.shard_batch) * self.cfg.workers as f64;
+            total_flops += flops;
+            let stats = StepStats {
+                step,
+                loss: (loss_sum / total_n as f64) as f32,
+                seconds,
+                mflops: flops / seconds / 1e6,
+            };
+            self.log(&stats);
+            steps.push(stats);
+        }
+        self.finish(steps, total_flops, wall.seconds(), 0)
+    }
+
+    /// Train with one thread per worker (engines built in-thread by the
+    /// factory — the process-scale analogue of the paper's cluster).
+    pub fn train_threaded(&mut self, factory: Arc<EngineFactory>) -> Result<TrainReport> {
+        let workers = self.cfg.workers;
+        let (res_tx, res_rx): (Sender<ResultMsg>, Receiver<ResultMsg>) = channel();
+        let mut work_txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let (tx, rx) = channel::<WorkMsg>();
+            work_txs.push(tx);
+            let res_tx = res_tx.clone();
+            let factory = Arc::clone(&factory);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("emmerald-trainer-{wid}"))
+                    .spawn(move || worker_loop(wid, rx, res_tx, factory))
+                    .expect("spawn trainer"),
+            );
+        }
+        drop(res_tx);
+
+        let sgd = Sgd::new(self.cfg.lr);
+        let wall = Stopwatch::start();
+        let mut steps = Vec::with_capacity(self.cfg.steps);
+        let mut total_flops = 0.0;
+        let mut rerouted = 0usize;
+        let mut alive: Vec<bool> = vec![true; workers];
+
+        let run = (|| -> Result<()> {
+            for step in 0..self.cfg.steps {
+                let t = Stopwatch::start();
+                let params = Arc::new(self.mlp.clone());
+                let mut outstanding = 0usize;
+                for w in 0..workers {
+                    if !alive[w] {
+                        continue;
+                    }
+                    let (x, y) = self.shard(step, w);
+                    work_txs[w]
+                        .send(WorkMsg::Step { step, params: Arc::clone(&params), x, y })
+                        .with_context(|| format!("worker {w} hung up"))?;
+                    outstanding += 1;
+                }
+                if outstanding == 0 {
+                    bail!("all workers failed");
+                }
+                let mut parts = Vec::with_capacity(outstanding);
+                let mut loss_sum = 0.0f64;
+                while outstanding > 0 {
+                    match res_rx.recv().context("all workers disconnected")? {
+                        ResultMsg::Done { n, loss, grads } => {
+                            loss_sum += loss as f64 * n as f64;
+                            parts.push((n, grads));
+                            outstanding -= 1;
+                        }
+                        ResultMsg::Failed { worker, step: s, x, y, error } => {
+                            // Mark dead and reroute the shard to a healthy
+                            // worker (paper's cluster survives node loss).
+                            eprintln!("[leader] worker {worker} failed at step {s}: {error}");
+                            alive[worker] = false;
+                            rerouted += 1;
+                            let target = alive
+                                .iter()
+                                .position(|&a| a)
+                                .context("no healthy workers left")?;
+                            work_txs[target]
+                                .send(WorkMsg::Step {
+                                    step: s,
+                                    params: Arc::clone(&params),
+                                    x,
+                                    y,
+                                })
+                                .context("reroute send failed")?;
+                        }
+                    }
+                }
+                let total_n: usize = parts.iter().map(|(n, _)| n).sum();
+                let avg = average_grads(&parts, &self.mlp);
+                sgd.apply(&mut self.mlp, &avg);
+                let seconds = t.seconds();
+                let flops = self.mlp.train_step_flops(self.cfg.shard_batch) * parts.len() as f64;
+                total_flops += flops;
+                let stats = StepStats {
+                    step,
+                    loss: (loss_sum / total_n as f64) as f32,
+                    seconds,
+                    mflops: flops / seconds / 1e6,
+                };
+                self.log(&stats);
+                steps.push(stats);
+            }
+            Ok(())
+        })();
+
+        for tx in &work_txs {
+            let _ = tx.send(WorkMsg::Stop);
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        run?;
+        self.finish(steps, total_flops, wall.seconds(), rerouted)
+    }
+
+    fn log(&self, s: &StepStats) {
+        if self.cfg.log_every > 0 && s.step % self.cfg.log_every == 0 {
+            println!(
+                "[leader] step {:>4}  loss {:.4}  {:.1} MFlop/s  ({:.1} ms)",
+                s.step,
+                s.loss,
+                s.mflops,
+                s.seconds * 1e3
+            );
+        }
+    }
+
+    fn finish(
+        &self,
+        steps: Vec<StepStats>,
+        total_flops: f64,
+        wall_seconds: f64,
+        rerouted: usize,
+    ) -> Result<TrainReport> {
+        let final_loss = steps.last().map(|s| s.loss).context("no steps recorded")?;
+        // Evaluate on (up to) the first 512 samples.
+        let n_eval = self.data.len().min(512);
+        let (x, y) = self.data.slice(0, n_eval);
+        let final_accuracy = Mlp::accuracy(&self.mlp.forward(&x), &y);
+        Ok(TrainReport { steps, final_loss, final_accuracy, total_flops, wall_seconds, rerouted })
+    }
+}
+
+fn worker_loop(
+    wid: usize,
+    rx: Receiver<WorkMsg>,
+    tx: Sender<ResultMsg>,
+    factory: Arc<EngineFactory>,
+) {
+    let mut engine: Box<dyn GradEngine> = match factory(wid) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[worker {wid}] engine construction failed: {e:#}");
+            return; // leader sees the hangup on first send
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkMsg::Step { step, params, x, y } => {
+                let n = x.rows();
+                match engine.loss_and_grad(&params, &x, &y) {
+                    Ok((loss, grads)) => {
+                        if tx.send(ResultMsg::Done { n, loss, grads }).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(ResultMsg::Failed {
+                            worker: wid,
+                            step,
+                            x,
+                            y,
+                            error: format!("{e:#}"),
+                        });
+                        return; // engine is considered dead
+                    }
+                }
+            }
+            WorkMsg::Stop => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Backend;
+    use crate::coordinator::engine::NativeEngine;
+
+    fn setup(workers: usize, steps: usize) -> Coordinator {
+        let mlp = Mlp::init(&[8, 16, 3], 1, Backend::Simd);
+        let data = Dataset::gaussian_clusters(256, 8, 3, 0.3, 2);
+        let cfg = TrainConfig { workers, shard_batch: 16, steps, lr: 0.5, log_every: 0 };
+        Coordinator::new(cfg, mlp, data).unwrap()
+    }
+
+    #[test]
+    fn sequential_training_reduces_loss() {
+        let mut c = setup(2, 40);
+        let mut engine = NativeEngine::new(Backend::Simd);
+        let r = c.train_sequential(&mut engine).unwrap();
+        assert!(r.final_loss < r.first_loss() * 0.5, "{} -> {}", r.first_loss(), r.final_loss);
+        assert!(r.final_accuracy > 0.8);
+        assert_eq!(r.steps.len(), 40);
+        assert!(r.sustained_mflops() > 0.0);
+    }
+
+    #[test]
+    fn threaded_training_matches_structure() {
+        let mut c = setup(3, 20);
+        let factory: Arc<EngineFactory> =
+            Arc::new(|_wid| Ok(Box::new(NativeEngine::new(Backend::Simd)) as Box<dyn GradEngine>));
+        let r = c.train_threaded(factory).unwrap();
+        assert_eq!(r.steps.len(), 20);
+        assert!(r.final_loss < r.first_loss());
+        assert_eq!(r.rerouted, 0);
+    }
+
+    #[test]
+    fn threaded_equals_sequential_given_same_seeds() {
+        // Synchronous SGD must be deterministic: threaded and sequential
+        // runs see the same shards and average the same gradients.
+        let mut c1 = setup(2, 8);
+        let mut c2 = setup(2, 8);
+        let mut engine = NativeEngine::new(Backend::Naive);
+        let r1 = c1.train_sequential(&mut engine).unwrap();
+        let factory: Arc<EngineFactory> =
+            Arc::new(|_| Ok(Box::new(NativeEngine::new(Backend::Naive)) as Box<dyn GradEngine>));
+        let r2 = c2.train_threaded(factory).unwrap();
+        for (a, b) in r1.steps.iter().zip(&r2.steps) {
+            assert!((a.loss - b.loss).abs() < 1e-5, "step {}: {} vs {}", a.step, a.loss, b.loss);
+        }
+        assert!(c1.model().weights[0].max_abs_diff(&c2.model().weights[0]) < 1e-5);
+    }
+
+    #[test]
+    fn failed_worker_is_rerouted() {
+        struct Flaky {
+            inner: NativeEngine,
+            fail: bool,
+        }
+        impl GradEngine for Flaky {
+            fn loss_and_grad(
+                &mut self,
+                mlp: &Mlp,
+                x: &Matrix,
+                y: &Matrix,
+            ) -> Result<(f32, MlpGrads)> {
+                if self.fail {
+                    bail!("injected failure");
+                }
+                self.inner.loss_and_grad(mlp, x, y)
+            }
+            fn name(&self) -> String {
+                "flaky".into()
+            }
+        }
+        let mut c = setup(3, 5);
+        let factory: Arc<EngineFactory> = Arc::new(|wid| {
+            Ok(Box::new(Flaky { inner: NativeEngine::new(Backend::Naive), fail: wid == 1 })
+                as Box<dyn GradEngine>)
+        });
+        let r = c.train_threaded(factory).unwrap();
+        assert_eq!(r.rerouted, 1, "exactly one shard rerouted");
+        assert_eq!(r.steps.len(), 5, "training completed despite the failure");
+    }
+
+    #[test]
+    fn config_validation() {
+        let mlp = Mlp::init(&[4, 4, 2], 1, Backend::Naive);
+        let data = Dataset::gaussian_clusters(8, 4, 2, 0.1, 1);
+        let bad = TrainConfig { workers: 0, ..TrainConfig::default() };
+        assert!(Coordinator::new(bad, mlp.clone(), data.clone()).is_err());
+        let bad = TrainConfig { shard_batch: 999, ..TrainConfig::default() };
+        assert!(Coordinator::new(bad, mlp.clone(), data.clone()).is_err());
+        let mismatched = Dataset::gaussian_clusters(64, 7, 2, 0.1, 1);
+        assert!(Coordinator::new(TrainConfig { shard_batch: 8, ..Default::default() }, mlp, mismatched).is_err());
+    }
+}

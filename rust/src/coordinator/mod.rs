@@ -1,0 +1,26 @@
+//! The distributed training coordinator — the paper's §4 application.
+//!
+//! Ref [1] of the paper ("98¢/MFlop: ultra-large-scale neural-network
+//! training on a PIII cluster") distributed synchronous SGD over 196
+//! Pentium III nodes with Emmerald as the compute kernel. This module
+//! rebuilds that system at process scale:
+//!
+//! * [`engine`] — the per-worker gradient engine. Two implementations:
+//!   native Rust backprop over [`crate::blas`] (pick any backend), and the
+//!   PJRT engine executing the AOT-lowered JAX/Pallas `mlp_grad` artifact —
+//!   the full three-layer stack on the hot path.
+//! * [`leader`] — the synchronous data-parallel loop: shard batches,
+//!   broadcast parameters, collect gradients, average ([`crate::nn::sgd`]),
+//!   update, and meter flops. Thread-per-worker (the cluster analogue) or
+//!   sequential (single-process) execution; worker failures are rerouted.
+//! * [`cluster`] — the 1999 cluster model: node price book, ring-allreduce
+//!   communication cost, sustained-GFlop/s and ¢/MFlop/s accounting that
+//!   regenerates the paper's 152 GFlop/s @ 98¢ figures.
+
+pub mod cluster;
+pub mod engine;
+pub mod leader;
+
+pub use cluster::ClusterSpec;
+pub use engine::{EngineFactory, GradEngine, NativeEngine, PjrtEngine};
+pub use leader::{Coordinator, StepStats, TrainConfig, TrainReport};

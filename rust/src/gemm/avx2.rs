@@ -1,0 +1,66 @@
+//! Emmerald re-tuned for AVX2 + FMA — the "what this algorithm becomes on
+//! a modern core" extension.
+//!
+//! The structure is identical to [`super::simd`] (same re-buffering, same
+//! blocking, same `nr`-dot-product register strategy); only the vector
+//! width (8) and the fused multiply-add change. This is the hardware
+//! progression the paper itself anticipates: the algorithm is parameterised
+//! by SIMD width and register count, not tied to the PIII.
+
+use super::params::BlockParams;
+use super::simd::{gemm_vec, VecIsa};
+use crate::blas::{MatMut, MatRef, Transpose};
+
+/// Emmerald SGEMM on AVX2+FMA: `C = alpha * op(A) op(B) + beta * C`.
+///
+/// Callers must ensure AVX2 and FMA are available (the
+/// [`crate::blas::Backend`] dispatcher checks at resolve time).
+pub fn gemm(
+    params: &BlockParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+) {
+    gemm_vec(VecIsa::Avx2, params, transa, transb, alpha, a, b, beta, c);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::testutil::check_grid;
+
+    fn have_avx2() -> bool {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+
+    #[test]
+    fn matches_naive_on_grid() {
+        if !have_avx2() {
+            eprintln!("skipping: no AVX2+FMA");
+            return;
+        }
+        check_grid(
+            &|ta, tb, alpha, a, b, beta, c| {
+                gemm(&BlockParams::emmerald_avx2(), ta, tb, alpha, a, b, beta, c)
+            },
+            "avx2",
+        );
+    }
+
+    #[test]
+    fn matches_naive_with_odd_blocks() {
+        if !have_avx2() {
+            eprintln!("skipping: no AVX2+FMA");
+            return;
+        }
+        let p = BlockParams { kb: 7, mb: 3, nr: 6, ..BlockParams::emmerald_avx2() };
+        check_grid(
+            &move |ta, tb, alpha, a, b, beta, c| gemm(&p, ta, tb, alpha, a, b, beta, c),
+            "avx2-odd",
+        );
+    }
+}

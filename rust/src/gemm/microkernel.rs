@@ -1,0 +1,555 @@
+//! Dot-product micro-kernels.
+//!
+//! The heart of the paper (§2, fig. 1a): the inner loop performs `W`
+//! dot products simultaneously. One SIMD register is loaded with four
+//! consecutive values of the `A` row and re-used `W` times against four
+//! consecutive values of each of `W` packed columns of `B`; `W` registers
+//! accumulate partial sums. With the paper's `W = 5` on SSE the register
+//! budget is exactly the PIII's eight XMM registers:
+//!
+//! ```text
+//! xmm0      : A row chunk (re-used 5×)
+//! xmm1-xmm2 : B column chunks (2 in flight)
+//! xmm3-xmm7 : 5 accumulators, one per dot product
+//! ```
+//!
+//! At the end of the loop each accumulator holds four partial sums which
+//! are reduced horizontally and written back — one store per `kb`
+//! multiply-adds, which is the whole point.
+//!
+//! Three kernel families are provided:
+//!
+//! * [`sse_dot_panel_dyn`] — the paper's kernel (SSE, 4-wide).
+//! * [`avx2_dot_panel_dyn`] — the same structure on AVX2+FMA (8-wide).
+//! * [`scalar_dot_tile`] — a scalar register-tiled kernel used by the
+//!   ATLAS-proxy backend (ATLAS did not use SSE on the PIII).
+//!
+//! Plus [`sse_dot_panel_strided`], which reads `B` through its original
+//! strided layout — the "no re-buffering" ablation.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+use super::params::Unroll;
+
+/// Prefetch distance in elements (16 f32 = one 64-byte line; fetch four
+/// lines ahead of the current position, tuned in the perf pass).
+pub const PREFETCH_DIST: usize = 64;
+
+/// Horizontal sum of a 128-bit vector (SSE1-only instruction selection,
+/// as on the PIII).
+///
+/// # Safety
+/// Requires SSE (part of the x86-64 baseline).
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+unsafe fn hsum128(v: __m128) -> f32 {
+    // [a b c d] + [c d c d] = [a+c b+d . .]
+    let hi = _mm_movehl_ps(v, v);
+    let sum2 = _mm_add_ps(v, hi);
+    // [a+c b+d . .] + [b+d . . .]
+    let hi1 = _mm_shuffle_ps::<0x55>(sum2, sum2);
+    _mm_cvtss_f32(_mm_add_ss(sum2, hi1))
+}
+
+/// Horizontal sum of a 256-bit vector.
+///
+/// # Safety
+/// Requires AVX.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+unsafe fn hsum256(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    hsum128(_mm_add_ps(lo, hi))
+}
+
+/// SSE micro-kernel: `W` simultaneous dot products of length `len`.
+///
+/// `a` streams the row of `A'`; `cols` are the `W` packed (unit-stride)
+/// columns of `B'`. `U` is the unroll factor in 4-float vector steps.
+///
+/// # Safety
+/// * `a` must be readable for `len` f32s.
+/// * every `cols[j]` must be readable for `len` f32s.
+/// * SSE must be available (x86-64 baseline).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse,sse2")]
+pub unsafe fn sse_dot_panel<const W: usize, const U: usize>(
+    a: *const f32,
+    len: usize,
+    cols: [*const f32; W],
+    prefetch: bool,
+) -> [f32; W] {
+    let mut acc = [_mm_setzero_ps(); W];
+    let step = 4 * U;
+    let mut p = 0;
+    // Main unrolled loop: U vector steps per iteration. The paper unrolls
+    // the whole L1 block; U=4 plus LLVM's scheduling reproduces the effect
+    // without hand-writing 336 iterations.
+    while p + step <= len {
+        if prefetch {
+            // One line of A' per 16 floats consumed, fetched ahead of use
+            // (paper §3: "SSE pre-fetch … to bring A' values into L1").
+            _mm_prefetch::<_MM_HINT_T0>(a.add(p + PREFETCH_DIST).cast());
+        }
+        for u in 0..U {
+            let off = p + 4 * u;
+            let va = _mm_loadu_ps(a.add(off));
+            for j in 0..W {
+                let vb = _mm_loadu_ps(cols[j].add(off));
+                acc[j] = _mm_add_ps(acc[j], _mm_mul_ps(va, vb));
+            }
+        }
+        p += step;
+    }
+    // Vector remainder.
+    while p + 4 <= len {
+        let va = _mm_loadu_ps(a.add(p));
+        for j in 0..W {
+            acc[j] = _mm_add_ps(acc[j], _mm_mul_ps(va, _mm_loadu_ps(cols[j].add(p))));
+        }
+        p += 4;
+    }
+    // Horizontal reduction, then the scalar tail (unpacked-A case).
+    let mut out = [0.0f32; W];
+    for j in 0..W {
+        out[j] = hsum128(acc[j]);
+    }
+    while p < len {
+        let av = *a.add(p);
+        for j in 0..W {
+            out[j] += av * *cols[j].add(p);
+        }
+        p += 1;
+    }
+    out
+}
+
+/// Runtime-width dispatcher over [`sse_dot_panel`].
+///
+/// # Safety
+/// Same contract as [`sse_dot_panel`]; `1 <= cols.len() <= 8` and
+/// `out.len() >= cols.len()`.
+#[cfg(target_arch = "x86_64")]
+pub unsafe fn sse_dot_panel_dyn(
+    a: *const f32,
+    len: usize,
+    cols: &[*const f32],
+    unroll: Unroll,
+    prefetch: bool,
+    out: &mut [f32],
+) {
+    macro_rules! go {
+        ($w:literal) => {{
+            let mut arr = [std::ptr::null::<f32>(); $w];
+            arr.copy_from_slice(&cols[..$w]);
+            let r = match unroll {
+                Unroll::X1 => sse_dot_panel::<$w, 1>(a, len, arr, prefetch),
+                Unroll::X2 => sse_dot_panel::<$w, 2>(a, len, arr, prefetch),
+                Unroll::X4 => sse_dot_panel::<$w, 4>(a, len, arr, prefetch),
+            };
+            out[..$w].copy_from_slice(&r);
+        }};
+    }
+    match cols.len() {
+        1 => go!(1),
+        2 => go!(2),
+        3 => go!(3),
+        4 => go!(4),
+        5 => go!(5),
+        6 => go!(6),
+        7 => go!(7),
+        8 => go!(8),
+        w => unreachable!("panel width {w} out of range"),
+    }
+}
+
+/// The "no re-buffering" ablation: SIMD arithmetic, but `B` is read
+/// through its original layout — each column is a `(ptr, stride)` stream
+/// gathered element-wise. Without the packed panel the five-column
+/// register re-use of fig. 1(a) is impossible, so columns are processed
+/// one at a time (re-reading `A`), exactly the cost the paper's
+/// re-buffering avoids.
+///
+/// # Safety
+/// `a` readable for `len` f32s; each `cols[j].0` readable at offsets
+/// `p * cols[j].1` for `p < len`. `out.len() >= cols.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse,sse2")]
+pub unsafe fn sse_dot_panel_strided(
+    a: *const f32,
+    len: usize,
+    cols: &[(*const f32, usize)],
+    out: &mut [f32],
+) {
+    for (j, &(bp, stride)) in cols.iter().enumerate() {
+        let mut acc = _mm_setzero_ps();
+        let mut p = 0;
+        while p + 4 <= len {
+            let va = _mm_loadu_ps(a.add(p));
+            // Strided gather, one element at a time (SSE has no gather).
+            let vb = _mm_set_ps(
+                *bp.add((p + 3) * stride),
+                *bp.add((p + 2) * stride),
+                *bp.add((p + 1) * stride),
+                *bp.add(p * stride),
+            );
+            acc = _mm_add_ps(acc, _mm_mul_ps(va, vb));
+            p += 4;
+        }
+        let mut s = hsum128(acc);
+        while p < len {
+            s += *a.add(p) * *bp.add(p * stride);
+            p += 1;
+        }
+        out[j] = s;
+    }
+}
+
+/// AVX2+FMA micro-kernel: the Emmerald structure at 8-wide.
+///
+/// # Safety
+/// Pointer contract as [`sse_dot_panel`]; AVX2 and FMA must be available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn avx2_dot_panel<const W: usize, const U: usize>(
+    a: *const f32,
+    len: usize,
+    cols: [*const f32; W],
+    prefetch: bool,
+) -> [f32; W] {
+    let mut acc = [_mm256_setzero_ps(); W];
+    let step = 8 * U;
+    let mut p = 0;
+    while p + step <= len {
+        if prefetch {
+            _mm_prefetch::<_MM_HINT_T0>(a.add(p + PREFETCH_DIST).cast());
+        }
+        for u in 0..U {
+            let off = p + 8 * u;
+            let va = _mm256_loadu_ps(a.add(off));
+            for j in 0..W {
+                acc[j] = _mm256_fmadd_ps(va, _mm256_loadu_ps(cols[j].add(off)), acc[j]);
+            }
+        }
+        p += step;
+    }
+    while p + 8 <= len {
+        let va = _mm256_loadu_ps(a.add(p));
+        for j in 0..W {
+            acc[j] = _mm256_fmadd_ps(va, _mm256_loadu_ps(cols[j].add(p)), acc[j]);
+        }
+        p += 8;
+    }
+    let mut out = [0.0f32; W];
+    for j in 0..W {
+        out[j] = hsum256(acc[j]);
+    }
+    while p < len {
+        let av = *a.add(p);
+        for j in 0..W {
+            out[j] += av * *cols[j].add(p);
+        }
+        p += 1;
+    }
+    out
+}
+
+/// AVX2+FMA micro-kernel over **two** rows of `A` at once.
+///
+/// The paper's 1×W structure issues `W+1` loads per `W` FMAs, which on a
+/// modern two-load-port core caps throughput at `2W/(W+1)` FMAs/cycle —
+/// load-bound. Re-using each `B` vector against two `A` rows halves the
+/// load pressure (`W+2` loads per `2W` FMAs) and makes the kernel
+/// FMA-bound. This is the natural continuation of the paper's register
+/// strategy on a 16-register file (2 A + 2·W accumulators ≤ 16 for W=6)
+/// and the main host-side win of the perf pass (see EXPERIMENTS.md §Perf).
+///
+/// # Safety
+/// `a0`, `a1` and every `cols[j]` readable for `len` f32s; AVX2+FMA.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn avx2_dot_panel2<const W: usize, const U: usize>(
+    a0: *const f32,
+    a1: *const f32,
+    len: usize,
+    cols: [*const f32; W],
+    prefetch: bool,
+) -> [[f32; W]; 2] {
+    let mut acc0 = [_mm256_setzero_ps(); W];
+    let mut acc1 = [_mm256_setzero_ps(); W];
+    let step = 8 * U;
+    let mut p = 0;
+    while p + step <= len {
+        if prefetch {
+            _mm_prefetch::<_MM_HINT_T0>(a0.add(p + PREFETCH_DIST).cast());
+            _mm_prefetch::<_MM_HINT_T0>(a1.add(p + PREFETCH_DIST).cast());
+        }
+        for u in 0..U {
+            let off = p + 8 * u;
+            let va0 = _mm256_loadu_ps(a0.add(off));
+            let va1 = _mm256_loadu_ps(a1.add(off));
+            for j in 0..W {
+                let vb = _mm256_loadu_ps(cols[j].add(off));
+                acc0[j] = _mm256_fmadd_ps(va0, vb, acc0[j]);
+                acc1[j] = _mm256_fmadd_ps(va1, vb, acc1[j]);
+            }
+        }
+        p += step;
+    }
+    while p + 8 <= len {
+        let va0 = _mm256_loadu_ps(a0.add(p));
+        let va1 = _mm256_loadu_ps(a1.add(p));
+        for j in 0..W {
+            let vb = _mm256_loadu_ps(cols[j].add(p));
+            acc0[j] = _mm256_fmadd_ps(va0, vb, acc0[j]);
+            acc1[j] = _mm256_fmadd_ps(va1, vb, acc1[j]);
+        }
+        p += 8;
+    }
+    let mut out = [[0.0f32; W]; 2];
+    for j in 0..W {
+        out[0][j] = hsum256(acc0[j]);
+        out[1][j] = hsum256(acc1[j]);
+    }
+    while p < len {
+        let av0 = *a0.add(p);
+        let av1 = *a1.add(p);
+        for j in 0..W {
+            let bv = *cols[j].add(p);
+            out[0][j] += av0 * bv;
+            out[1][j] += av1 * bv;
+        }
+        p += 1;
+    }
+    out
+}
+
+/// Runtime-width dispatcher over [`avx2_dot_panel2`]. Writes row 0's dot
+/// products to `out0` and row 1's to `out1`.
+///
+/// # Safety
+/// Same contract as [`avx2_dot_panel2`]; `1 <= cols.len() <= 8`,
+/// `out0.len() >= cols.len()`, `out1.len() >= cols.len()`.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn avx2_dot_panel2_dyn(
+    a0: *const f32,
+    a1: *const f32,
+    len: usize,
+    cols: &[*const f32],
+    unroll: Unroll,
+    prefetch: bool,
+    out0: &mut [f32],
+    out1: &mut [f32],
+) {
+    macro_rules! go {
+        ($w:literal) => {{
+            let mut arr = [std::ptr::null::<f32>(); $w];
+            arr.copy_from_slice(&cols[..$w]);
+            let r = match unroll {
+                Unroll::X1 => avx2_dot_panel2::<$w, 1>(a0, a1, len, arr, prefetch),
+                Unroll::X2 => avx2_dot_panel2::<$w, 2>(a0, a1, len, arr, prefetch),
+                Unroll::X4 => avx2_dot_panel2::<$w, 4>(a0, a1, len, arr, prefetch),
+            };
+            out0[..$w].copy_from_slice(&r[0]);
+            out1[..$w].copy_from_slice(&r[1]);
+        }};
+    }
+    match cols.len() {
+        1 => go!(1),
+        2 => go!(2),
+        3 => go!(3),
+        4 => go!(4),
+        5 => go!(5),
+        6 => go!(6),
+        7 => go!(7),
+        8 => go!(8),
+        w => unreachable!("panel width {w} out of range"),
+    }
+}
+
+/// Runtime-width dispatcher over [`avx2_dot_panel`].
+///
+/// # Safety
+/// Same contract as [`avx2_dot_panel`]; `1 <= cols.len() <= 8` and
+/// `out.len() >= cols.len()`.
+#[cfg(target_arch = "x86_64")]
+pub unsafe fn avx2_dot_panel_dyn(
+    a: *const f32,
+    len: usize,
+    cols: &[*const f32],
+    unroll: Unroll,
+    prefetch: bool,
+    out: &mut [f32],
+) {
+    macro_rules! go {
+        ($w:literal) => {{
+            let mut arr = [std::ptr::null::<f32>(); $w];
+            arr.copy_from_slice(&cols[..$w]);
+            let r = match unroll {
+                Unroll::X1 => avx2_dot_panel::<$w, 1>(a, len, arr, prefetch),
+                Unroll::X2 => avx2_dot_panel::<$w, 2>(a, len, arr, prefetch),
+                Unroll::X4 => avx2_dot_panel::<$w, 4>(a, len, arr, prefetch),
+            };
+            out[..$w].copy_from_slice(&r);
+        }};
+    }
+    match cols.len() {
+        1 => go!(1),
+        2 => go!(2),
+        3 => go!(3),
+        4 => go!(4),
+        5 => go!(5),
+        6 => go!(6),
+        7 => go!(7),
+        8 => go!(8),
+        w => unreachable!("panel width {w} out of range"),
+    }
+}
+
+/// Scalar register-tiled kernel: an `MR × NR` tile of `C` accumulated in
+/// scalar registers over a length-`len` dot product. This is the ATLAS
+/// proxy's kernel — same blocking discipline as Emmerald, no SIMD. Each
+/// accumulator is an independent serial FP chain, which (absent
+/// fast-math) the compiler cannot legally vectorise, faithfully modelling
+/// ATLAS's scalar code generation.
+///
+/// # Safety
+/// Every `arows[i]` and `bcols[j]` must be readable for `len` f32s.
+pub unsafe fn scalar_dot_tile<const MR: usize, const NR: usize>(
+    arows: [*const f32; MR],
+    len: usize,
+    bcols: [*const f32; NR],
+) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..len {
+        let mut av = [0.0f32; MR];
+        for i in 0..MR {
+            av[i] = *arows[i].add(p);
+        }
+        for (j, &bc) in bcols.iter().enumerate() {
+            let bv = *bc.add(p);
+            for i in 0..MR {
+                acc[i][j] += av[i] * bv;
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::testkit::assert_allclose;
+
+    fn ref_dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    fn rand_vec(seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        let mut v = vec![0.0f32; len];
+        rng.fill_f32(&mut v, -1.0, 1.0);
+        v
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn sse_matches_reference_all_widths_and_unrolls() {
+        for &len in &[1usize, 3, 4, 5, 8, 15, 16, 17, 64, 100, 336] {
+            let a = rand_vec(1, len);
+            let bs: Vec<Vec<f32>> = (0..8).map(|j| rand_vec(100 + j, len)).collect();
+            for w in 1..=8usize {
+                let cols: Vec<*const f32> = bs[..w].iter().map(|b| b.as_ptr()).collect();
+                for unroll in [Unroll::X1, Unroll::X2, Unroll::X4] {
+                    for prefetch in [false, true] {
+                        let mut out = vec![0.0f32; w];
+                        unsafe {
+                            sse_dot_panel_dyn(a.as_ptr(), len, &cols, unroll, prefetch, &mut out)
+                        };
+                        let expect: Vec<f32> = bs[..w].iter().map(|b| ref_dot(&a, b)).collect();
+                        assert_allclose(&out, &expect, 1e-4, 1e-5, &format!("sse w={w} len={len}"));
+                    }
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_matches_reference() {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            eprintln!("skipping: no AVX2+FMA");
+            return;
+        }
+        for &len in &[1usize, 7, 8, 9, 31, 32, 33, 336] {
+            let a = rand_vec(2, len);
+            let bs: Vec<Vec<f32>> = (0..8).map(|j| rand_vec(200 + j, len)).collect();
+            for w in [1usize, 5, 6, 8] {
+                let cols: Vec<*const f32> = bs[..w].iter().map(|b| b.as_ptr()).collect();
+                let mut out = vec![0.0f32; w];
+                unsafe {
+                    avx2_dot_panel_dyn(a.as_ptr(), len, &cols, Unroll::X4, true, &mut out)
+                };
+                let expect: Vec<f32> = bs[..w].iter().map(|b| ref_dot(&a, b)).collect();
+                assert_allclose(&out, &expect, 1e-4, 1e-5, &format!("avx2 w={w} len={len}"));
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn strided_matches_reference() {
+        let len = 50;
+        let a = rand_vec(3, len);
+        // B stored with stride 7: column j starts at j, elements at p*7+j.
+        let stride = 7usize;
+        let raw = rand_vec(4, len * stride);
+        let cols: Vec<(*const f32, usize)> =
+            (0..3).map(|j| (unsafe { raw.as_ptr().add(j) }, stride)).collect();
+        let mut out = vec![0.0f32; 3];
+        unsafe { sse_dot_panel_strided(a.as_ptr(), len, &cols, &mut out) };
+        for j in 0..3 {
+            let expect: f32 = (0..len).map(|p| a[p] * raw[p * stride + j]).sum();
+            assert!((out[j] - expect).abs() < 1e-4, "col {j}: {} vs {expect}", out[j]);
+        }
+    }
+
+    #[test]
+    fn scalar_tile_matches_reference() {
+        let len = 77;
+        let a0 = rand_vec(5, len);
+        let a1 = rand_vec(6, len);
+        let b0 = rand_vec(7, len);
+        let b1 = rand_vec(8, len);
+        let acc = unsafe {
+            scalar_dot_tile::<2, 2>([a0.as_ptr(), a1.as_ptr()], len, [b0.as_ptr(), b1.as_ptr()])
+        };
+        assert!((acc[0][0] - ref_dot(&a0, &b0)).abs() < 1e-4);
+        assert!((acc[0][1] - ref_dot(&a0, &b1)).abs() < 1e-4);
+        assert!((acc[1][0] - ref_dot(&a1, &b0)).abs() < 1e-4);
+        assert!((acc[1][1] - ref_dot(&a1, &b1)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn scalar_tile_len_zero() {
+        let acc = unsafe { scalar_dot_tile::<1, 1>([std::ptr::NonNull::dangling().as_ptr()], 0, [std::ptr::NonNull::dangling().as_ptr()]) };
+        assert_eq!(acc[0][0], 0.0);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn paper_register_budget() {
+        // Documentation-level invariant: the paper's W=5 at 4-wide SSE
+        // uses 1 (A) + 2 (B streams) + 5 (accumulators) = 8 XMM registers.
+        let w = 5;
+        let a_regs = 1;
+        let b_regs = 2;
+        assert_eq!(a_regs + b_regs + w, 8);
+    }
+}

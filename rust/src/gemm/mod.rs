@@ -1,0 +1,109 @@
+//! The Emmerald GEMM engine — the paper's contribution.
+//!
+//! Emmerald's performance comes from two ideas (paper §2–§3):
+//!
+//! 1. **SIMD register strategy**: the inner loop performs *five dot
+//!    products at once*. One SSE register holds four consecutive values of
+//!    a row of `A`; it is re-used five times against four-value chunks of
+//!    five columns of `B`; five SSE registers accumulate the partial sums
+//!    (1 + 2 + 5 = 8 = all the PIII's XMM registers).
+//! 2. **Memory hierarchy**: `B` is *re-buffered* — reordered into
+//!    column-contiguous panels resident in L1 — while rows of `A` stream
+//!    through with prefetch hints; the inner loop is unrolled; an outer
+//!    L2-level blocking keeps peak rates for matrices far larger than L2.
+//!
+//! Modules:
+//!
+//! * [`params`] — block geometry + optimisation toggles (every §3 technique
+//!   can be switched off individually for the ablation benches).
+//! * [`naive`] — the paper's naive 3-loop comparator.
+//! * [`pack`] — re-buffering: panel-major packing of `B`, row packing of `A`.
+//! * [`microkernel`] — the SSE dot-product micro-kernels (`nr` = 1..=8) and
+//!   their scalar + AVX2 counterparts.
+//! * [`blocked`] — the ATLAS proxy: identical blocking, *scalar* kernel.
+//! * [`simd`] — the Emmerald driver (SSE).
+//! * [`avx2`] — the Emmerald driver re-tuned for AVX2 + FMA (extension).
+
+pub mod avx2;
+pub mod blocked;
+pub mod parallel;
+pub mod strassen;
+pub mod microkernel;
+pub mod naive;
+pub mod pack;
+pub mod params;
+pub mod simd;
+
+pub use params::{BlockParams, Unroll};
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared helpers for the GEMM test-suite: every backend is validated
+    //! against [`naive`] on a grid of shapes, strides and transposes.
+
+    use crate::blas::{MatMut, MatRef, Matrix, Transpose};
+    use crate::util::testkit::assert_allclose;
+
+    /// Type of a full GEMM implementation under test.
+    pub type GemmFn = dyn Fn(Transpose, Transpose, f32, MatRef<'_>, MatRef<'_>, f32, &mut MatMut<'_>);
+
+    /// Check `imp` against the naive oracle for one configuration.
+    #[allow(clippy::too_many_arguments)]
+    pub fn check_one(
+        imp: &GemmFn,
+        what: &str,
+        transa: Transpose,
+        transb: Transpose,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        seed: u64,
+    ) {
+        let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+        let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+        // Strided storage shakes out indexing bugs that contiguous hides.
+        let a = Matrix::random_strided(ar, ac.max(1), ac.max(1) + 3, seed);
+        let b = Matrix::random_strided(br, bc.max(1), bc.max(1) + 1, seed ^ 0xABCD);
+        let mut c_ref = Matrix::random_strided(m, n.max(1), n.max(1) + 2, seed ^ 0x1234);
+        let mut c_got = c_ref.clone();
+
+        super::naive::gemm(transa, transb, alpha, a.view(), b.view(), beta, &mut c_ref.view_mut());
+        imp(transa, transb, alpha, a.view(), b.view(), beta, &mut c_got.view_mut());
+
+        let label = format!("{what} m={m} n={n} k={k} ta={transa:?} tb={transb:?} α={alpha} β={beta}");
+        assert_allclose(c_got.data(), c_ref.data(), 2e-4, 1e-5, &label);
+    }
+
+    /// Standard grid used by each backend's test module.
+    pub fn check_grid(imp: &GemmFn, what: &str) {
+        let shapes = [
+            (1, 1, 1),
+            (1, 5, 4),
+            (2, 3, 1),
+            (4, 5, 8),
+            (5, 5, 5),
+            (7, 11, 13),
+            (8, 10, 16),
+            (16, 16, 16),
+            (17, 19, 23),
+            (32, 6, 40),
+            (3, 64, 7),
+            (33, 34, 35),
+            (64, 64, 64),
+            (5, 1, 9),
+        ];
+        let mut seed = 0x5EED;
+        for &(m, n, k) in &shapes {
+            for transa in [Transpose::No, Transpose::Yes] {
+                for transb in [Transpose::No, Transpose::Yes] {
+                    for &(alpha, beta) in &[(1.0, 0.0), (0.5, 2.0), (-1.0, 1.0), (0.0, 0.5)] {
+                        check_one(imp, what, transa, transb, m, n, k, alpha, beta, seed);
+                        seed += 1;
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! The paper's naive comparator: three nested loops, no blocking, no SIMD.
+//!
+//! This is both the lower baseline of Fig. 2 and the in-crate correctness
+//! oracle every other backend is tested against. It is deliberately
+//! straightforward; the accumulation is done in `f32` like the optimised
+//! kernels so results are bit-comparable in tolerance terms.
+
+use crate::blas::{MatMut, MatRef, Transpose};
+
+/// `C = alpha * op(A) op(B) + beta * C`, three-loop version.
+pub fn gemm(
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+) {
+    let m = c.rows();
+    let n = c.cols();
+    let k = match transa {
+        Transpose::No => a.cols(),
+        Transpose::Yes => a.rows(),
+    };
+    c.scale(beta);
+    if alpha == 0.0 || k == 0 {
+        return;
+    }
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                // SAFETY: i < m, j < n, p < k by loop bounds; view shapes
+                // were validated at construction.
+                let av = unsafe {
+                    match transa {
+                        Transpose::No => a.get_unchecked(i, p),
+                        Transpose::Yes => a.get_unchecked(p, i),
+                    }
+                };
+                let bv = unsafe {
+                    match transb {
+                        Transpose::No => b.get_unchecked(p, j),
+                        Transpose::Yes => b.get_unchecked(j, p),
+                    }
+                };
+                acc += av * bv;
+            }
+            let old = unsafe { c.get_unchecked(i, j) };
+            unsafe { c.set_unchecked(i, j, old + alpha * acc) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+
+    #[test]
+    fn identity_times_x_is_x() {
+        let eye = Matrix::from_fn(4, 4, |r, c| if r == c { 1.0 } else { 0.0 });
+        let x = Matrix::random(4, 4, 3, -1.0, 1.0);
+        let mut c = Matrix::zeros(4, 4);
+        gemm(Transpose::No, Transpose::No, 1.0, eye.view(), x.view(), 0.0, &mut c.view_mut());
+        assert_eq!(c, x);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[1,2],[3,4]] * [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = Matrix::from_fn(2, 2, |r, c| (r * 2 + c + 1) as f32);
+        let b = Matrix::from_fn(2, 2, |r, c| (r * 2 + c + 5) as f32);
+        let mut c = Matrix::zeros(2, 2);
+        gemm(Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut());
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn alpha_beta_combine() {
+        let a = Matrix::from_fn(2, 2, |_, _| 1.0);
+        let b = Matrix::from_fn(2, 2, |_, _| 1.0);
+        let mut c = Matrix::from_fn(2, 2, |_, _| 10.0);
+        // C = 3 * (A*B) + 0.5 * C = 3*2 + 5 = 11
+        gemm(Transpose::No, Transpose::No, 3.0, a.view(), b.view(), 0.5, &mut c.view_mut());
+        assert!(c.data().iter().all(|&x| (x - 11.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn transpose_equals_materialised_transpose() {
+        // C(5,4) = Aᵀ(5,3) · Bᵀ(3,4) with A stored 3×5 and B stored 4×3.
+        let a = Matrix::random(3, 5, 1, -1.0, 1.0);
+        let b = Matrix::random(4, 3, 2, -1.0, 1.0);
+        let mut c1 = Matrix::zeros(5, 4);
+        gemm(Transpose::Yes, Transpose::Yes, 1.0, a.view(), b.view(), 0.0, &mut c1.view_mut());
+        let at = a.transposed();
+        let bt = b.transposed();
+        let mut c2 = Matrix::zeros(5, 4);
+        gemm(Transpose::No, Transpose::No, 1.0, at.view(), bt.view(), 0.0, &mut c2.view_mut());
+        assert!(c1.max_abs_diff(&c2) < 1e-5);
+    }
+
+    #[test]
+    fn alpha_zero_short_circuits_to_beta_scale() {
+        let a = Matrix::from_fn(2, 3, |_, _| f32::NAN); // must never be read into C
+        let b = Matrix::from_fn(3, 2, |_, _| f32::NAN);
+        let mut c = Matrix::from_fn(2, 2, |_, _| 4.0);
+        gemm(Transpose::No, Transpose::No, 0.0, a.view(), b.view(), 0.25, &mut c.view_mut());
+        assert!(c.data().iter().all(|&x| x == 1.0));
+    }
+}

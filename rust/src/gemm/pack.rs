@@ -1,0 +1,273 @@
+//! Re-buffering (paper §3): copying blocks of `A` and `B` into contiguous,
+//! padded scratch buffers.
+//!
+//! The paper deliberately buffers `B'` (the `kb × nr` panel) into L1 and
+//! *reorders* it "to enforce optimal memory access patterns [and] minimise
+//! translation look-aside buffer misses". [`PackedB`] implements exactly
+//! that layout: the k-block of `op(B)` is stored panel-major — `nr`
+//! columns per panel, each column contiguous in `k` and zero-padded to a
+//! SIMD-friendly length — so the micro-kernel's five column streams are
+//! unit-stride and TLB-dense.
+//!
+//! [`PackedA`] packs a row block of `op(A)` the same way; the paper does
+//! not pack `A` (it streams rows with prefetch), but packing becomes
+//! necessary when `A` is logically transposed (its rows are then strided
+//! in memory) and is exposed as an ablation toggle otherwise.
+
+use crate::blas::{MatRef, Transpose};
+
+/// Columns are padded to a multiple of this many f32 lanes so both the
+/// 4-wide SSE and 8-wide AVX2 kernels can run their full-vector loop on
+/// the same buffer.
+pub const K_PAD_LANES: usize = 8;
+
+/// Round `k` up to the padding granule.
+pub fn kpad_for(k: usize) -> usize {
+    k.div_ceil(K_PAD_LANES) * K_PAD_LANES
+}
+
+/// A k-block of `op(B)` packed panel-major (see module docs).
+///
+/// Layout: panel `p` starts at `p * nr * kpad`; within a panel, column `j`
+/// (logical column `p*nr + j`) occupies `kpad` consecutive floats, the
+/// first `kb_eff` holding data and the rest zeros.
+#[derive(Debug)]
+pub struct PackedB {
+    buf: Vec<f32>,
+    nr: usize,
+    kpad: usize,
+    kb_eff: usize,
+    n: usize,
+}
+
+impl PackedB {
+    /// An empty packed buffer for panels of `nr` columns.
+    pub fn new(nr: usize) -> Self {
+        assert!((1..=8).contains(&nr));
+        Self { buf: Vec::new(), nr, kpad: 0, kb_eff: 0, n: 0 }
+    }
+
+    /// Pack rows `kk .. kk+kb_eff` of `op(B)` (all `n` columns).
+    ///
+    /// `b` is the *stored* matrix; `transb` says whether `op(B) = B` or
+    /// `Bᵀ`. The buffer is reused across calls (no allocation once warm).
+    pub fn pack(&mut self, b: MatRef<'_>, transb: Transpose, kk: usize, kb_eff: usize, n: usize) {
+        let kpad = kpad_for(kb_eff);
+        let panels = n.div_ceil(self.nr).max(1);
+        let need = panels * self.nr * kpad;
+        self.buf.clear();
+        self.buf.resize(need, 0.0);
+        self.kpad = kpad;
+        self.kb_eff = kb_eff;
+        self.n = n;
+        for j in 0..n {
+            let panel = j / self.nr;
+            let lane = j % self.nr;
+            let base = panel * self.nr * kpad + lane * kpad;
+            match transb {
+                Transpose::No => {
+                    // Column j of B: strided by ldb in storage.
+                    for p in 0..kb_eff {
+                        // SAFETY: kk+p < b.rows(), j < b.cols() — caller
+                        // guarantees the block is in range.
+                        self.buf[base + p] = unsafe { b.get_unchecked(kk + p, j) };
+                    }
+                }
+                Transpose::Yes => {
+                    // Column j of Bᵀ = row j of B: contiguous in storage.
+                    for p in 0..kb_eff {
+                        self.buf[base + p] = unsafe { b.get_unchecked(j, kk + p) };
+                    }
+                }
+            }
+        }
+    }
+
+    /// Number of panels currently packed.
+    pub fn panels(&self) -> usize {
+        self.n.div_ceil(self.nr)
+    }
+
+    /// Logical width of panel `p` (last panel may be narrower than `nr`).
+    pub fn panel_width(&self, p: usize) -> usize {
+        let j0 = p * self.nr;
+        debug_assert!(j0 < self.n.max(1));
+        self.nr.min(self.n - j0)
+    }
+
+    /// Pointer to the packed column `j` (0-based within panel `p`).
+    #[inline(always)]
+    pub fn col_ptr(&self, p: usize, j: usize) -> *const f32 {
+        debug_assert!(j < self.panel_width(p));
+        unsafe { self.buf.as_ptr().add((p * self.nr + j) * self.kpad) }
+    }
+
+    /// Padded column length.
+    pub fn kpad(&self) -> usize {
+        self.kpad
+    }
+
+    /// Unpadded (logical) column length.
+    pub fn kb_eff(&self) -> usize {
+        self.kb_eff
+    }
+
+    /// Bytes currently held (diagnostic; the L1-residency argument).
+    pub fn bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// A row block of `op(A)` packed row-major with zero-padded rows.
+#[derive(Debug)]
+pub struct PackedA {
+    buf: Vec<f32>,
+    kpad: usize,
+    rows: usize,
+}
+
+impl PackedA {
+    /// An empty packed buffer.
+    pub fn new() -> Self {
+        Self { buf: Vec::new(), kpad: 0, rows: 0 }
+    }
+
+    /// Pack the `mb_eff × kb_eff` block of `op(A)` at `(ii, kk)`.
+    pub fn pack(
+        &mut self,
+        a: MatRef<'_>,
+        transa: Transpose,
+        ii: usize,
+        mb_eff: usize,
+        kk: usize,
+        kb_eff: usize,
+    ) {
+        let kpad = kpad_for(kb_eff);
+        self.buf.clear();
+        self.buf.resize(mb_eff.max(1) * kpad, 0.0);
+        self.kpad = kpad;
+        self.rows = mb_eff;
+        for i in 0..mb_eff {
+            let base = i * kpad;
+            match transa {
+                Transpose::No => {
+                    for p in 0..kb_eff {
+                        // SAFETY: block range guaranteed by caller.
+                        self.buf[base + p] = unsafe { a.get_unchecked(ii + i, kk + p) };
+                    }
+                }
+                Transpose::Yes => {
+                    for p in 0..kb_eff {
+                        self.buf[base + p] = unsafe { a.get_unchecked(kk + p, ii + i) };
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pointer to packed row `i` (length `kpad`, zero-padded tail).
+    #[inline(always)]
+    pub fn row_ptr(&self, i: usize) -> *const f32 {
+        debug_assert!(i < self.rows);
+        unsafe { self.buf.as_ptr().add(i * self.kpad) }
+    }
+
+    /// Padded row length.
+    pub fn kpad(&self) -> usize {
+        self.kpad
+    }
+}
+
+impl Default for PackedA {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+
+    #[test]
+    fn kpad_rounds_up() {
+        assert_eq!(kpad_for(1), 8);
+        assert_eq!(kpad_for(8), 8);
+        assert_eq!(kpad_for(9), 16);
+        assert_eq!(kpad_for(336), 336);
+    }
+
+    #[test]
+    fn packs_b_columns_contiguously() {
+        // B is 6x7; pack rows 1..5 (kb_eff=4) with nr=3.
+        let b = Matrix::from_fn(6, 7, |r, c| (r * 10 + c) as f32);
+        let mut pb = PackedB::new(3);
+        pb.pack(b.view(), Transpose::No, 1, 4, 7);
+        assert_eq!(pb.panels(), 3);
+        assert_eq!(pb.panel_width(0), 3);
+        assert_eq!(pb.panel_width(2), 1);
+        assert_eq!(pb.kpad(), 8);
+        // Column 4 lives in panel 1, lane 1: values B[1..5][4].
+        let col = pb.col_ptr(1, 1);
+        let vals: Vec<f32> = (0..8).map(|p| unsafe { *col.add(p) }).collect();
+        assert_eq!(&vals[..4], &[14.0, 24.0, 34.0, 44.0]);
+        assert_eq!(&vals[4..], &[0.0; 4], "padding must be zero");
+    }
+
+    #[test]
+    fn packs_transposed_b() {
+        // op(B) = Bᵀ where B is stored 5x6; op(B) is 6x5.
+        let b = Matrix::from_fn(5, 6, |r, c| (r * 10 + c) as f32);
+        let mut pb = PackedB::new(2);
+        pb.pack(b.view(), Transpose::Yes, 2, 3, 5);
+        // op(B)[k][j] = B[j][k]; column j=3 over k=2..5 → B[3][2..5].
+        let col = pb.col_ptr(1, 1);
+        let vals: Vec<f32> = (0..3).map(|p| unsafe { *col.add(p) }).collect();
+        assert_eq!(vals, vec![32.0, 33.0, 34.0]);
+    }
+
+    #[test]
+    fn packs_a_rows() {
+        let a = Matrix::from_fn(4, 9, |r, c| (r * 100 + c) as f32);
+        let mut pa = PackedA::new();
+        pa.pack(a.view(), Transpose::No, 1, 2, 3, 5);
+        let r0: Vec<f32> = (0..8).map(|p| unsafe { *pa.row_ptr(0).add(p) }).collect();
+        assert_eq!(&r0[..5], &[103.0, 104.0, 105.0, 106.0, 107.0]);
+        assert_eq!(&r0[5..], &[0.0; 3]);
+        let r1: Vec<f32> = (0..5).map(|p| unsafe { *pa.row_ptr(1).add(p) }).collect();
+        assert_eq!(r1, vec![203.0, 204.0, 205.0, 206.0, 207.0]);
+    }
+
+    #[test]
+    fn packs_transposed_a() {
+        // op(A) = Aᵀ with A stored 6x3; block rows 0..2 of op(A), k 1..4.
+        let a = Matrix::from_fn(6, 3, |r, c| (r * 10 + c) as f32);
+        let mut pa = PackedA::new();
+        pa.pack(a.view(), Transpose::Yes, 0, 2, 1, 3);
+        // op(A)[i][p] = A[p][i]; row 1, k=1..4 → A[1..4][1] = 11, 21, 31.
+        let r1: Vec<f32> = (0..3).map(|p| unsafe { *pa.row_ptr(1).add(p) }).collect();
+        assert_eq!(r1, vec![11.0, 21.0, 31.0]);
+    }
+
+    #[test]
+    fn reuse_shrinks_and_grows() {
+        let b = Matrix::from_fn(20, 20, |r, c| (r + c) as f32);
+        let mut pb = PackedB::new(5);
+        pb.pack(b.view(), Transpose::No, 0, 16, 20);
+        let big = pb.bytes();
+        pb.pack(b.view(), Transpose::No, 0, 2, 3);
+        assert!(pb.bytes() < big);
+        assert_eq!(pb.panels(), 1);
+        assert_eq!(pb.kb_eff(), 2);
+    }
+
+    #[test]
+    fn paper_panel_footprint() {
+        // The paper's B' (336 × 5 f32) must land at ≈6.7 KB — the L1
+        // residency argument of fig. 1(b).
+        let b = Matrix::zeros(336, 5);
+        let mut pb = PackedB::new(5);
+        pb.pack(b.view(), Transpose::No, 0, 336, 5);
+        assert_eq!(pb.bytes(), 336 * 5 * 4);
+    }
+}

@@ -1,0 +1,148 @@
+//! Thread-parallel GEMM driver.
+//!
+//! The paper scaled across nodes (196 PIIIs, one process per CPU);
+//! the modern single-box analogue is thread parallelism over row blocks
+//! of `C`. Each thread runs the same Emmerald driver on an `m/t`-row
+//! horizontal slice — slices write disjoint rows of `C`, so no
+//! synchronisation is needed beyond the final join. `B` is shared
+//! read-only (each thread re-packs its own panels, like each cluster node
+//! did).
+
+use crate::blas::{BlasError, MatMut, MatRef, Transpose};
+use crate::gemm::{simd, BlockParams};
+
+/// `C = alpha · A·B + beta · C` over `threads` worker threads
+/// (no-transpose operands; the coordinator's training path never needs
+/// transposed parallel GEMM — transposes are handled by the serial API).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_parallel(
+    threads: usize,
+    params: &BlockParams,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+) -> Result<(), BlasError> {
+    let m = c.rows();
+    let n = c.cols();
+    let k = a.cols();
+    if a.rows() != m || b.rows() != k || b.cols() != n {
+        return Err(BlasError::DimMismatch { m, n, k, other_k: b.rows() });
+    }
+    let threads = threads.max(1).min(m.max(1));
+    if threads == 1 || m < 2 {
+        simd::gemm(params, Transpose::No, Transpose::No, alpha, a, b, beta, c);
+        return Ok(());
+    }
+
+    // Split C (and A) into `threads` disjoint row slices via the safe
+    // `MatMut::split_rows` (the matrix analogue of `split_at_mut`).
+    let rows_per = m.div_ceil(threads);
+    let mut slices: Vec<(usize, MatMut<'_>)> = Vec::with_capacity(threads);
+    let mut rest = c.reborrow();
+    let mut r0 = 0;
+    while r0 < m {
+        let rows = rows_per.min(m - r0);
+        let (top, bottom) = rest.split_rows(rows);
+        slices.push((r0, top));
+        rest = bottom;
+        r0 += rows;
+    }
+    std::thread::scope(|scope| {
+        for (r0, mut c_slice) in slices {
+            let rows = c_slice.rows();
+            let a_slice = a.block(r0, 0, rows, k);
+            let params = *params;
+            scope.spawn(move || {
+                simd::gemm(
+                    &params,
+                    Transpose::No,
+                    Transpose::No,
+                    alpha,
+                    a_slice,
+                    b,
+                    beta,
+                    &mut c_slice,
+                );
+            });
+        }
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{Backend, Matrix};
+    use crate::util::testkit::assert_allclose;
+
+    fn check(threads: usize, m: usize, n: usize, k: usize) {
+        let a = Matrix::random(m, k, 1, -1.0, 1.0);
+        let b = Matrix::random(k, n, 2, -1.0, 1.0);
+        let mut c = Matrix::from_fn(m, n, |r, c| (r + c) as f32 * 0.01);
+        let mut c_ref = c.clone();
+        gemm_parallel(
+            threads,
+            &BlockParams::emmerald_sse(),
+            0.5,
+            a.view(),
+            b.view(),
+            1.5,
+            &mut c.view_mut(),
+        )
+        .unwrap();
+        crate::blas::sgemm_matrix(Backend::Naive, Transpose::No, Transpose::No, 0.5, &a, &b, 1.5, &mut c_ref)
+            .unwrap();
+        assert_allclose(c.data(), c_ref.data(), 5e-4, 1e-4, &format!("parallel t={threads} {m}x{n}x{k}"));
+    }
+
+    #[test]
+    fn matches_serial_various_thread_counts() {
+        for threads in [1usize, 2, 3, 4, 7] {
+            check(threads, 67, 45, 83);
+        }
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        check(16, 5, 9, 12);
+    }
+
+    #[test]
+    fn single_row() {
+        check(4, 1, 33, 21);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let a = Matrix::zeros(4, 5);
+        let b = Matrix::zeros(6, 3); // k mismatch
+        let mut c = Matrix::zeros(4, 3);
+        let err = gemm_parallel(
+            2,
+            &BlockParams::emmerald_sse(),
+            1.0,
+            a.view(),
+            b.view(),
+            0.0,
+            &mut c.view_mut(),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn strided_c_padding_untouched() {
+        let (m, n, k) = (9usize, 7usize, 11usize);
+        let a = Matrix::random(m, k, 3, -1.0, 1.0);
+        let b = Matrix::random(k, n, 4, -1.0, 1.0);
+        let mut c = Matrix::random_strided(m, n, n + 3, 5); // padding = -77 sentinel
+        gemm_parallel(3, &BlockParams::emmerald_sse(), 1.0, a.view(), b.view(), 0.0, &mut c.view_mut())
+            .unwrap();
+        for r in 0..m {
+            for p in n..n + 3 {
+                assert_eq!(c.data()[r * (n + 3) + p], -77.0, "padding clobbered at row {r}");
+            }
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Block geometry and optimisation toggles.
+//!
+//! The paper's §3 optimisations are individually switchable so the
+//! `ablation_opts` bench can quantify each one, and the autotuner can
+//! search the geometry the way ATLAS does.
+
+/// Inner-loop unroll factor, in units of SIMD vectors per iteration.
+///
+/// The paper unrolls the dot-product loop completely for every possible k
+/// in an L1 block; with a compiler (rather than an assembler macro) the
+/// practical equivalent is a fixed unroll factor large enough to hide loop
+/// overhead without blowing the instruction cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unroll {
+    /// No unrolling — one vector step per iteration.
+    X1,
+    /// Two vector steps per iteration.
+    X2,
+    /// Four vector steps per iteration (default; ≈ paper's full unroll).
+    X4,
+}
+
+impl Unroll {
+    /// Vector steps per loop iteration.
+    pub fn factor(&self) -> usize {
+        match self {
+            Unroll::X1 => 1,
+            Unroll::X2 => 2,
+            Unroll::X4 => 4,
+        }
+    }
+}
+
+/// Geometry and feature toggles for the blocked GEMM drivers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockParams {
+    /// L1 block depth: the dot-product length `k'` (paper: 336, chosen so
+    /// the re-buffered `B'` panel of `kb × nr` floats plus a streaming row
+    /// of `A'` fits the PIII's 16 KB L1).
+    pub kb: usize,
+    /// L2 block height: rows of `A` kept hot in L2 across panels.
+    pub mb: usize,
+    /// Dot products per inner loop = C columns produced at once (paper: 5,
+    /// found experimentally — reproduced by the `ablation_nr` bench).
+    pub nr: usize,
+    /// Inner-loop unroll factor.
+    pub unroll: Unroll,
+    /// Issue prefetch hints for the streaming `A` row (paper §3).
+    pub prefetch: bool,
+    /// Re-buffer `B` into L1-resident column panels (paper §3). Turning
+    /// this off makes the kernel read `B` through its strided layout.
+    pub pack_b: bool,
+    /// Copy the `A` block into contiguous rows. The paper does *not* pack
+    /// `A` (it streams with prefetch); packing is forced internally when
+    /// `A` is transposed, and available as an ablation toggle otherwise.
+    pub pack_a: bool,
+}
+
+impl BlockParams {
+    /// The paper's exact Emmerald geometry on the PIII: `kb = 336`,
+    /// `nr = 5` (B' = 336×5 ≈ 6.7 KB in a 16 KB L1).
+    pub fn emmerald_piii() -> Self {
+        Self {
+            kb: 336,
+            mb: 128,
+            nr: 5,
+            unroll: Unroll::X4,
+            prefetch: true,
+            pack_b: true,
+            pack_a: false,
+        }
+    }
+
+    /// Emmerald geometry for the host SSE backend (same structure; kb kept
+    /// at the paper's value — the host L1 is larger, and the autotuner can
+    /// confirm or improve this choice).
+    pub fn emmerald_sse() -> Self {
+        Self::emmerald_piii()
+    }
+
+    /// Emmerald re-tuned for AVX2 + FMA: 8-wide vectors and more named
+    /// registers allow a deeper accumulator set (nr = 6 keeps within 16
+    /// YMM registers: 1 for A, 6 accumulators, the rest for B streams).
+    pub fn emmerald_avx2() -> Self {
+        Self {
+            kb: 336,
+            mb: 128,
+            nr: 6,
+            unroll: Unroll::X4,
+            prefetch: true,
+            pack_b: true,
+            pack_a: false,
+        }
+    }
+
+    /// The ATLAS proxy: the same cache blocking discipline, scalar
+    /// arithmetic, both operands packed (ATLAS copies blocks), 2×2
+    /// register tile expressed as nr = 2 with two A rows per kernel call.
+    pub fn atlas_proxy() -> Self {
+        Self {
+            kb: 336,
+            mb: 128,
+            nr: 2,
+            unroll: Unroll::X2,
+            prefetch: false,
+            pack_b: true,
+            pack_a: true,
+        }
+    }
+
+    /// Effective k-block size (never zero, never beyond k).
+    pub fn kb_eff(&self, k: usize, kk: usize) -> usize {
+        self.kb.min(k - kk).max(1)
+    }
+
+    /// Bytes of L1 the re-buffered B panel occupies (diagnostic, used by
+    /// DESIGN.md §Perf notes and the simulator presets).
+    pub fn panel_bytes(&self) -> usize {
+        self.kb * self.nr * std::mem::size_of::<f32>()
+    }
+
+    /// Validate invariants (positive blocks, supported nr).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.kb == 0 || self.mb == 0 {
+            return Err(format!("block sizes must be positive: kb={} mb={}", self.kb, self.mb));
+        }
+        if !(1..=8).contains(&self.nr) {
+            return Err(format!("nr must be in 1..=8, got {}", self.nr));
+        }
+        Ok(())
+    }
+}
+
+impl Default for BlockParams {
+    fn default() -> Self {
+        Self::emmerald_sse()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let p = BlockParams::emmerald_piii();
+        assert_eq!(p.kb, 336);
+        assert_eq!(p.nr, 5);
+        // B' must fit comfortably in the PIII's 16 KB L1 (paper fig. 1b).
+        assert!(p.panel_bytes() < 16 * 1024 / 2);
+    }
+
+    #[test]
+    fn kb_eff_clamps() {
+        let p = BlockParams { kb: 100, ..BlockParams::default() };
+        assert_eq!(p.kb_eff(250, 0), 100);
+        assert_eq!(p.kb_eff(250, 200), 50);
+        assert_eq!(p.kb_eff(1, 0), 1);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(BlockParams::default().validate().is_ok());
+        assert!(BlockParams { nr: 0, ..BlockParams::default() }.validate().is_err());
+        assert!(BlockParams { nr: 9, ..BlockParams::default() }.validate().is_err());
+        assert!(BlockParams { kb: 0, ..BlockParams::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn unroll_factors() {
+        assert_eq!(Unroll::X1.factor(), 1);
+        assert_eq!(Unroll::X2.factor(), 2);
+        assert_eq!(Unroll::X4.factor(), 4);
+    }
+}

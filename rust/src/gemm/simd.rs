@@ -1,0 +1,262 @@
+//! The Emmerald driver: L1/L2 blocking around the SIMD micro-kernel.
+//!
+//! Structure (paper fig. 1b):
+//!
+//! ```text
+//! for each k-block kk (depth kb, paper: 336):          // L1 blocking
+//!     re-buffer B' = op(B)[kk.., :] into packed panels  // §3 re-buffering
+//!     for each row-block ii (height mb):                // L2 blocking
+//!         for each panel (nr columns, paper: 5):
+//!             for each row i in the block:
+//!                 C'[i, j0..j0+nr] += A'[i, kk..] · B'-panel   // micro-kernel
+//! ```
+//!
+//! The B panel (`kb × nr` ≈ 6.7 KB) stays L1-resident across all `mb`
+//! rows; the `A` row streams through with prefetch; `C` accumulates in
+//! registers inside the micro-kernel and is written once per panel.
+
+use super::microkernel;
+use super::pack::{PackedA, PackedB};
+use super::params::BlockParams;
+use crate::blas::{MatMut, MatRef, Transpose};
+
+/// Which vector ISA the shared driver dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum VecIsa {
+    /// 4-wide SSE (the paper's kernel).
+    Sse,
+    /// 8-wide AVX2 + FMA (modern extension).
+    Avx2,
+}
+
+/// Emmerald SGEMM on SSE: `C = alpha * op(A) op(B) + beta * C`.
+pub fn gemm(
+    params: &BlockParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+) {
+    gemm_vec(VecIsa::Sse, params, transa, transb, alpha, a, b, beta, c);
+}
+
+/// Shared blocked driver over the SSE / AVX2 micro-kernels.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_vec(
+    isa: VecIsa,
+    params: &BlockParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+) {
+    params.validate().expect("invalid block parameters");
+    let m = c.rows();
+    let n = c.cols();
+    let k = match transa {
+        Transpose::No => a.cols(),
+        Transpose::Yes => a.rows(),
+    };
+    c.scale(beta);
+    if alpha == 0.0 || k == 0 || m == 0 || n == 0 {
+        return;
+    }
+
+    // The paper streams rows of A unpacked (prefetch covers the latency);
+    // packing becomes mandatory when op(A)'s rows are strided in storage.
+    let need_pack_a = params.pack_a || transa == Transpose::Yes;
+
+    let mut packed_b = PackedB::new(params.nr);
+    let mut packed_a = PackedA::new();
+    let mut sums = [0.0f32; 8];
+    let mut sums2 = [0.0f32; 8];
+    let mut cols: Vec<*const f32> = Vec::with_capacity(params.nr);
+    let mut cols_strided: Vec<(*const f32, usize)> = Vec::with_capacity(params.nr);
+
+    let mut kk = 0;
+    while kk < k {
+        let kb_eff = params.kb_eff(k, kk);
+        if params.pack_b {
+            packed_b.pack(b, transb, kk, kb_eff, n);
+        }
+        let mut ii = 0;
+        while ii < m {
+            let mb_eff = params.mb.min(m - ii);
+            if need_pack_a {
+                packed_a.pack(a, transa, ii, mb_eff, kk, kb_eff);
+            }
+            let npanels = n.div_ceil(params.nr);
+            for p in 0..npanels {
+                let j0 = p * params.nr;
+                let w = params.nr.min(n - j0);
+                if params.pack_b {
+                    cols.clear();
+                    for j in 0..w {
+                        cols.push(packed_b.col_ptr(p, j));
+                    }
+                } else {
+                    // Ablation path: read op(B) through its stored layout.
+                    cols_strided.clear();
+                    for j in 0..w {
+                        let (ptr, stride) = match transb {
+                            Transpose::No => (b.row_ptr(kk).wrapping_add(j0 + j), b.ld()),
+                            Transpose::Yes => (b.row_ptr(j0 + j).wrapping_add(kk), 1),
+                        };
+                        cols_strided.push((ptr, stride));
+                    }
+                }
+                let mut i = 0;
+                while i < mb_eff {
+                    let arow: *const f32 = if need_pack_a {
+                        packed_a.row_ptr(i)
+                    } else {
+                        // Row ii+i of A, offset kk: contiguous kb_eff f32s.
+                        a.row_ptr(ii + i).wrapping_add(kk)
+                    };
+                    // AVX2 fast path: two A rows per pass re-use every B
+                    // vector (see microkernel::avx2_dot_panel2).
+                    if isa == VecIsa::Avx2 && params.pack_b && i + 1 < mb_eff {
+                        let arow1: *const f32 = if need_pack_a {
+                            packed_a.row_ptr(i + 1)
+                        } else {
+                            a.row_ptr(ii + i + 1).wrapping_add(kk)
+                        };
+                        // SAFETY: same bounds argument as the single-row
+                        // path, applied to rows i and i+1.
+                        unsafe {
+                            microkernel::avx2_dot_panel2_dyn(
+                                arow,
+                                arow1,
+                                kb_eff,
+                                &cols,
+                                params.unroll,
+                                params.prefetch,
+                                &mut sums,
+                                &mut sums2,
+                            );
+                            for j in 0..w {
+                                let o0 = c.get_unchecked(ii + i, j0 + j);
+                                c.set_unchecked(ii + i, j0 + j, o0 + alpha * sums[j]);
+                                let o1 = c.get_unchecked(ii + i + 1, j0 + j);
+                                c.set_unchecked(ii + i + 1, j0 + j, o1 + alpha * sums2[j]);
+                            }
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    // SAFETY: arow is readable for kb_eff elements (packed
+                    // rows are kpad >= kb_eff long; unpacked rows have
+                    // kk + kb_eff <= k <= a.cols()). Packed columns are
+                    // kpad long; strided columns were validated by the
+                    // MatRef bounds. w <= 8 and sums has 8 slots.
+                    unsafe {
+                        if params.pack_b {
+                            match isa {
+                                VecIsa::Sse => microkernel::sse_dot_panel_dyn(
+                                    arow,
+                                    kb_eff,
+                                    &cols,
+                                    params.unroll,
+                                    params.prefetch,
+                                    &mut sums,
+                                ),
+                                VecIsa::Avx2 => microkernel::avx2_dot_panel_dyn(
+                                    arow,
+                                    kb_eff,
+                                    &cols,
+                                    params.unroll,
+                                    params.prefetch,
+                                    &mut sums,
+                                ),
+                            }
+                        } else {
+                            microkernel::sse_dot_panel_strided(
+                                arow,
+                                kb_eff,
+                                &cols_strided,
+                                &mut sums,
+                            );
+                        }
+                    }
+                    for j in 0..w {
+                        // SAFETY: ii+i < m, j0+j < n.
+                        unsafe {
+                            let old = c.get_unchecked(ii + i, j0 + j);
+                            c.set_unchecked(ii + i, j0 + j, old + alpha * sums[j]);
+                        }
+                    }
+                    i += 1;
+                }
+            }
+            ii += mb_eff;
+        }
+        kk += kb_eff;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::params::Unroll;
+    use crate::gemm::testutil::check_grid;
+
+    #[test]
+    fn matches_naive_on_grid() {
+        check_grid(
+            &|ta, tb, alpha, a, b, beta, c| {
+                gemm(&BlockParams::emmerald_sse(), ta, tb, alpha, a, b, beta, c)
+            },
+            "simd",
+        );
+    }
+
+    #[test]
+    fn matches_naive_with_tiny_blocks() {
+        // Tiny blocks force every fringe path (k fringe, m fringe, panels).
+        let p = BlockParams {
+            kb: 3,
+            mb: 2,
+            nr: 5,
+            unroll: Unroll::X2,
+            prefetch: false,
+            pack_b: true,
+            pack_a: false,
+        };
+        check_grid(&move |ta, tb, alpha, a, b, beta, c| gemm(&p, ta, tb, alpha, a, b, beta, c), "simd-tiny");
+    }
+
+    #[test]
+    fn matches_naive_without_packing() {
+        let p = BlockParams { pack_b: false, ..BlockParams::emmerald_sse() };
+        check_grid(
+            &move |ta, tb, alpha, a, b, beta, c| gemm(&p, ta, tb, alpha, a, b, beta, c),
+            "simd-nopack",
+        );
+    }
+
+    #[test]
+    fn matches_naive_with_forced_a_packing() {
+        let p = BlockParams { pack_a: true, ..BlockParams::emmerald_sse() };
+        check_grid(
+            &move |ta, tb, alpha, a, b, beta, c| gemm(&p, ta, tb, alpha, a, b, beta, c),
+            "simd-packa",
+        );
+    }
+
+    #[test]
+    fn all_nr_widths_correct() {
+        for nr in 1..=8 {
+            let p = BlockParams { nr, kb: 16, mb: 8, ..BlockParams::emmerald_sse() };
+            check_grid(
+                &move |ta, tb, alpha, a, b, beta, c| gemm(&p, ta, tb, alpha, a, b, beta, c),
+                &format!("simd-nr{nr}"),
+            );
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! LAPACK-style consumers of the Emmerald kernel.
+//!
+//! The paper's adoption argument (§1): Emmerald "implements the SGEMM
+//! interface of Level-3 BLAS, and so may be used immediately to improve
+//! the performance of single-precision libraries based on BLAS (such as
+//! LAPACK)". This module demonstrates that claim with the canonical
+//! LAPACK building block — blocked Cholesky factorisation — whose flops
+//! are dominated by SGEMM/SSYRK calls into our kernel.
+
+mod chol;
+
+pub use chol::{cholesky_blocked, cholesky_solve, LapackError};

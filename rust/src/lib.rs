@@ -1,0 +1,63 @@
+//! # Emmerald
+//!
+//! A reproduction of *"General Matrix-Matrix Multiplication using SIMD
+//! features of the PIII"* (Aberdeen & Baxter, ANU) as a production-shaped
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`blas`] — a Level-3 BLAS `SGEMM` interface with selectable backends,
+//!   the public API most users want ([`blas::sgemm`]).
+//! * [`gemm`] — the paper's contribution: the Emmerald SSE micro-kernel
+//!   (five concurrent dot products in eight XMM registers), B re-buffering,
+//!   L1/L2 cache blocking, prefetching and full inner-loop unrolling,
+//!   together with the naive and ATLAS-proxy baselines it is evaluated
+//!   against.
+//! * [`sim`] — a trace-driven Pentium III memory-hierarchy simulator
+//!   (L1/L2/TLB + 4-wide SIMD timing model) used to reproduce the paper's
+//!   figures in the paper's own units (MFlop/s on a 450 MHz PIII).
+//! * [`autotune`] — an ATLAS-style empirical block-size tuner (the
+//!   baseline methodology the paper compares against).
+//! * [`nn`] + [`coordinator`] — the paper's §4 application: data-parallel
+//!   neural-network training with SGEMM as the kernel, including the
+//!   196-node cluster price/performance accounting.
+//! * [`runtime`] — the PJRT execution path that loads the AOT-compiled
+//!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and runs them from Rust.
+//! * [`bench`] + [`util`] — benchmarking and library substrates (the
+//!   offline build carries no criterion/clap/proptest, so these are
+//!   first-class modules here).
+//!
+//! ## Quick start
+//!
+//! ```
+//! use emmerald::blas::{sgemm, Backend, Transpose};
+//!
+//! let (m, n, k) = (4, 3, 2);
+//! let a = vec![1.0f32; m * k];
+//! let b = vec![1.0f32; k * n];
+//! let mut c = vec![0.0f32; m * n];
+//! sgemm(
+//!     Backend::Simd,
+//!     Transpose::No,
+//!     Transpose::No,
+//!     m, n, k,
+//!     1.0, &a, k, &b, n,
+//!     0.0, &mut c, n,
+//! )
+//! .unwrap();
+//! assert!(c.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+//! ```
+
+pub mod autotune;
+pub mod bench;
+pub mod blas;
+pub mod coordinator;
+pub mod gemm;
+pub mod lapack;
+pub mod nn;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,337 @@
+//! The `emmerald` command-line tool.
+//!
+//! Subcommands:
+//!
+//! * `gemm`      — run one SGEMM on the host, verify against naive.
+//! * `sweep`     — Fig. 2 on the host: MFlop/s vs size for all backends.
+//! * `sim`       — Fig. 2 on the simulated PIII (the paper's units).
+//! * `train`     — distributed MLP training (the §4 application).
+//! * `autotune`  — ATLAS-style parameter search for the host kernels.
+//! * `artifacts` — list the AOT artifacts and their metadata.
+//! * `verify`    — cross-check every backend (and PJRT if artifacts are
+//!                 built) against the naive oracle.
+
+use emmerald::bench::{gemm_flops, Bencher, FlushMode};
+use emmerald::blas::{available_backends, sgemm, Backend, Matrix, Transpose};
+use emmerald::coordinator::{Coordinator, NativeEngine, PjrtEngine, TrainConfig};
+use emmerald::nn::{Dataset, Mlp};
+use emmerald::runtime::Runtime;
+use emmerald::sim::{piii_450, piii_550, simulate_gemm, Algorithm};
+use emmerald::util::cli::Cli;
+use emmerald::util::table::{fnum, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let cmd = args.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = std::iter::once(format!("emmerald-{cmd}"))
+        .chain(args.iter().skip(2).cloned())
+        .collect();
+    let code = match cmd {
+        "gemm" => cmd_gemm(rest),
+        "sweep" => cmd_sweep(rest),
+        "sim" => cmd_sim(rest),
+        "train" => cmd_train(rest),
+        "autotune" => cmd_autotune(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "verify" => cmd_verify(rest),
+        _ => {
+            println!(
+                "emmerald {} — SGEMM reproduction (Aberdeen & Baxter)\n\n\
+                 USAGE: emmerald <gemm|sweep|sim|train|autotune|artifacts|verify> [options]\n\
+                 Run a subcommand with --help for its options.",
+                emmerald::VERSION
+            );
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse(cli: &Cli, argv: Vec<String>) -> emmerald::util::cli::Matches {
+    cli.parse_from(argv).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    })
+}
+
+fn run_square(backend: Backend, n: usize, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (lda, ldb, ldc) = (a.ld(), b.ld(), c.ld());
+    sgemm(
+        backend,
+        Transpose::No,
+        Transpose::No,
+        n,
+        n,
+        n,
+        1.0,
+        a.data(),
+        lda,
+        b.data(),
+        ldb,
+        0.0,
+        c.data_mut(),
+        ldc,
+    )
+    .expect("sgemm");
+}
+
+fn cmd_gemm(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("emmerald gemm", "run one SGEMM and verify against naive")
+        .opt("size", "320", "square size (m=n=k)")
+        .opt("backend", "auto", "naive|blocked|simd|avx2|auto")
+        .opt("samples", "5", "timing samples");
+    let m = parse(&cli, argv);
+    let n = m.get_usize("size").unwrap();
+    let backend = Backend::parse(m.get("backend").unwrap()).expect("backend");
+    let a = Matrix::random(n, n, 1, -1.0, 1.0);
+    let b = Matrix::random(n, n, 2, -1.0, 1.0);
+    let mut c = Matrix::zeros(n, n);
+    let mut c_ref = Matrix::zeros(n, n);
+    run_square(backend, n, &a, &b, &mut c);
+    run_square(Backend::Naive, n, &a, &b, &mut c_ref);
+    let err = c.max_abs_diff(&c_ref);
+    let mut bencher = Bencher::new(1, m.get_usize("samples").unwrap()).min_sample_secs(0.02);
+    let r = bencher.run(backend.name(), gemm_flops(n, n, n), || {
+        run_square(backend, n, &a, &b, &mut c);
+    });
+    println!(
+        "{} {}x{}x{}: {:.1} MFlop/s (best {:.1}), max|err| {err:.2e}",
+        backend.name(),
+        n,
+        n,
+        n,
+        r.mflops(),
+        r.mflops_best()
+    );
+    0
+}
+
+fn cmd_sweep(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("emmerald sweep", "host Fig. 2: MFlop/s vs size, all backends")
+        .opt("max", "700", "largest size")
+        .opt("step", "64", "size step")
+        .opt("stride", "700", "fixed row stride (paper methodology)")
+        .flag("no-flush", "keep caches warm between calls");
+    let m = parse(&cli, argv);
+    let max = m.get_usize("max").unwrap();
+    let step = m.get_usize("step").unwrap().max(1);
+    let stride = m.get_usize("stride").unwrap().max(max);
+    let flush = if m.flag("no-flush") { FlushMode::Warm } else { FlushMode::Flush };
+    let backends = available_backends();
+    let mut table = Table::new(
+        std::iter::once("size".to_string()).chain(backends.iter().map(|b| b.name().to_string())),
+    );
+    let mut size = 16;
+    while size <= max {
+        let a = Matrix::random_strided(size, size, stride, 1);
+        let b = Matrix::random_strided(size, size, stride, 2);
+        let mut c = Matrix::zeros_strided(size, size, stride);
+        let mut row = vec![size.to_string()];
+        for &backend in &backends {
+            let mut bencher = Bencher::new(1, 3).flush_mode(flush).min_sample_secs(0.01);
+            let r = bencher.run(backend.name(), gemm_flops(size, size, size), || {
+                run_square(backend, size, &a, &b, &mut c);
+            });
+            row.push(fnum(r.mflops(), 1));
+        }
+        table.row(row);
+        size += step;
+    }
+    println!("{}", table.render());
+    0
+}
+
+fn cmd_sim(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("emmerald sim", "Fig. 2 on the simulated PIII")
+        .opt("sizes", "16,32,64,96,128,192,256,320,448", "comma-separated sizes")
+        .opt("stride", "700", "fixed row stride")
+        .opt("clock", "450", "PIII clock (450 or 550)");
+    let m = parse(&cli, argv);
+    let machine = if m.get_u64("clock").unwrap() == 550 { piii_550() } else { piii_450() };
+    let stride = m.get_usize("stride").unwrap();
+    let mut table = Table::new(["size", "naive", "atlas", "emmerald", "emm/atlas"]);
+    for tok in m.get("sizes").unwrap().split(',') {
+        let size: usize = tok.trim().parse().expect("size");
+        let st = stride.max(size);
+        let n = simulate_gemm(&machine, Algorithm::Naive, size, st);
+        let a = simulate_gemm(&machine, Algorithm::Atlas, size, st);
+        let e = simulate_gemm(&machine, Algorithm::Emmerald, size, st);
+        table.row([
+            size.to_string(),
+            fnum(n.mflops, 0),
+            fnum(a.mflops, 0),
+            fnum(e.mflops, 0),
+            fnum(e.mflops / a.mflops, 2),
+        ]);
+    }
+    println!("{} @ {} MHz (simulated MFlop/s)", machine.name, machine.clock_mhz);
+    println!("{}", table.render());
+    0
+}
+
+fn cmd_train(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("emmerald train", "distributed MLP training (§4 application)")
+        .opt("workers", "4", "worker count")
+        .opt("steps", "60", "training steps")
+        .opt("batch", "64", "samples per worker per step")
+        .opt("lr", "0.2", "learning rate")
+        .opt("engine", "native", "native|pjrt")
+        .opt("backend", "auto", "native engine SGEMM backend")
+        .opt("artifacts", "artifacts", "artifact dir (pjrt engine)")
+        .opt("sizes", "64-128-10", "layer sizes (native engine)")
+        .opt("samples", "4096", "dataset size");
+    let m = parse(&cli, argv);
+    let workers = m.get_usize("workers").unwrap();
+    let steps = m.get_usize("steps").unwrap();
+    let batch = m.get_usize("batch").unwrap();
+    let lr = m.get_f64("lr").unwrap() as f32;
+    let engine_kind = m.get("engine").unwrap().to_string();
+
+    let (sizes, pjrt): (Vec<usize>, Option<PjrtEngine>) = if engine_kind == "pjrt" {
+        let e = PjrtEngine::new(m.get("artifacts").unwrap())
+            .expect("pjrt engine (run `make artifacts`)");
+        (e.sizes().to_vec(), Some(e))
+    } else {
+        let sizes: Vec<usize> =
+            m.get("sizes").unwrap().split('-').map(|s| s.parse().expect("size")).collect();
+        (sizes, None)
+    };
+
+    let mlp = Mlp::init(&sizes, 7, Backend::Auto);
+    println!(
+        "training {}-layer MLP ({} params) with {workers} workers × batch {batch}, engine {engine_kind}",
+        mlp.n_layers(),
+        mlp.param_count(),
+    );
+    let data = Dataset::gaussian_clusters(
+        m.get_usize("samples").unwrap(),
+        sizes[0],
+        *sizes.last().unwrap(),
+        0.5,
+        42,
+    );
+    let cfg = TrainConfig { workers, shard_batch: batch, steps, lr, log_every: 10 };
+    let mut coord = Coordinator::new(cfg, mlp, data).expect("coordinator");
+    let report = match pjrt {
+        Some(mut engine) => coord.train_sequential(&mut engine).expect("train"),
+        None => {
+            let backend = Backend::parse(m.get("backend").unwrap()).expect("backend");
+            let factory: std::sync::Arc<emmerald::coordinator::EngineFactory> =
+                std::sync::Arc::new(move |_| Ok(Box::new(NativeEngine::new(backend)) as _));
+            coord.train_threaded(factory).expect("train")
+        }
+    };
+    println!(
+        "done: loss {:.4} -> {:.4}, accuracy {:.1}%, sustained {:.1} MFlop/s, rerouted {}",
+        report.first_loss(),
+        report.final_loss,
+        report.final_accuracy * 100.0,
+        report.sustained_mflops(),
+        report.rerouted
+    );
+    0
+}
+
+fn cmd_autotune(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("emmerald autotune", "ATLAS-style block-size search")
+        .opt("kernel", "sse", "sse|avx2|blocked")
+        .opt("probe", "448", "probe problem size");
+    let m = parse(&cli, argv);
+    let probe = m.get_usize("probe").unwrap();
+    let mut spec = match m.get("kernel").unwrap() {
+        "blocked" => emmerald::autotune::TuneSpec::blocked_default(probe),
+        "avx2" => {
+            let mut s = emmerald::autotune::TuneSpec::sse_default(probe);
+            s.kernel = emmerald::autotune::TuneKernel::Avx2;
+            s
+        }
+        _ => emmerald::autotune::TuneSpec::sse_default(probe),
+    };
+    spec.samples = 3;
+    let r = emmerald::autotune::tune(&spec);
+    let mut table = Table::new(["kb", "mb", "nr", "MFlop/s"]);
+    for p in &r.log {
+        table.row([
+            p.params.kb.to_string(),
+            p.params.mb.to_string(),
+            p.params.nr.to_string(),
+            fnum(p.mflops, 1),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "winner: kb={} mb={} nr={} at {:.1} MFlop/s (paper: kb=336, nr=5)",
+        r.best.kb, r.best.mb, r.best.nr, r.best_mflops
+    );
+    0
+}
+
+fn cmd_artifacts(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("emmerald artifacts", "list AOT artifacts")
+        .opt("dir", "artifacts", "artifact directory");
+    let m = parse(&cli, argv);
+    match Runtime::new(m.get("dir").unwrap()) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            let mut table = Table::new(["artifact", "inputs", "flops"]);
+            for name in rt.registry().names() {
+                let meta = rt.registry().get(&name).unwrap();
+                table.row([
+                    name.clone(),
+                    meta.inputs.len().to_string(),
+                    format!("{:.3e}", meta.flops),
+                ]);
+            }
+            println!("{}", table.render());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}\nhint: run `make artifacts` first");
+            1
+        }
+    }
+}
+
+fn cmd_verify(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("emmerald verify", "cross-check all backends vs naive")
+        .opt("size", "130", "square size")
+        .opt("artifacts", "artifacts", "artifact dir for the PJRT check");
+    let m = parse(&cli, argv);
+    let n = m.get_usize("size").unwrap();
+    let a = Matrix::random(n, n, 3, -1.0, 1.0);
+    let b = Matrix::random(n, n, 4, -1.0, 1.0);
+    let mut c_ref = Matrix::zeros(n, n);
+    run_square(Backend::Naive, n, &a, &b, &mut c_ref);
+    let mut failures = 0;
+    for backend in available_backends() {
+        let mut c = Matrix::zeros(n, n);
+        run_square(backend, n, &a, &b, &mut c);
+        let err = c.max_abs_diff(&c_ref);
+        let ok = err < 1e-3;
+        println!("{:<14} max|err| {err:.2e} {}", backend.name(), if ok { "OK" } else { "FAIL" });
+        failures += i32::from(!ok);
+    }
+    // PJRT path (artifact sizes only).
+    if let Ok(rt) = Runtime::new(m.get("artifacts").unwrap()) {
+        if rt.registry().names().iter().any(|n| n == "gemm_320") {
+            let gm = emmerald::runtime::PjrtGemm::new(&rt, "gemm_320").expect("bind gemm_320");
+            let n = gm.n;
+            let a = Matrix::random(n, n, 5, -1.0, 1.0);
+            let b = Matrix::random(n, n, 6, -1.0, 1.0);
+            let mut c_ref = Matrix::zeros(n, n);
+            run_square(Backend::Naive, n, &a, &b, &mut c_ref);
+            let out = gm.matmul(a.data(), b.data()).expect("pjrt matmul");
+            let err = out
+                .iter()
+                .zip(c_ref.data())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            let ok = err < 1e-2;
+            println!("{:<14} max|err| {err:.2e} {}", "pjrt/gemm_320", if ok { "OK" } else { "FAIL" });
+            failures += i32::from(!ok);
+        }
+    } else {
+        println!("pjrt          skipped (no artifacts; run `make artifacts`)");
+    }
+    failures
+}

@@ -1,0 +1,199 @@
+//! Convolution via GEMM (im2col) — the other workload the paper's intro
+//! motivates ("a range of applications such as artificial neural networks
+//! benefit from GEMM").
+//!
+//! A 2-D convolution over NCHW input is lowered to one SGEMM:
+//!
+//! ```text
+//! patches = im2col(input)         # (N·OH·OW) × (C·KH·KW)
+//! output  = patches · kernelsᵀ    # (N·OH·OW) × F   — one Emmerald GEMM
+//! ```
+//!
+//! which is exactly how 1999-era (and many current) frameworks spent
+//! their convolution flops in SGEMM.
+
+use crate::blas::{sgemm_matrix, Backend, Matrix, Transpose};
+
+/// Convolution geometry (valid padding, unit dilation).
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2d {
+    /// Input channels.
+    pub in_channels: usize,
+    /// Output channels (filters).
+    pub out_channels: usize,
+    /// Kernel height/width.
+    pub kernel: usize,
+    /// Stride.
+    pub stride: usize,
+}
+
+impl Conv2d {
+    /// Output spatial size for an `h × w` input.
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        assert!(h >= self.kernel && w >= self.kernel, "input smaller than kernel");
+        ((h - self.kernel) / self.stride + 1, (w - self.kernel) / self.stride + 1)
+    }
+
+    /// im2col: lower an NCHW batch (`n × c × h × w`, flat slice) into the
+    /// patch matrix of shape `(n·oh·ow) × (c·k·k)`.
+    pub fn im2col(&self, input: &[f32], n: usize, h: usize, w: usize) -> Matrix {
+        let c = self.in_channels;
+        assert_eq!(input.len(), n * c * h * w, "input length mismatch");
+        let (oh, ow) = self.out_hw(h, w);
+        let k = self.kernel;
+        let mut out = Matrix::zeros(n * oh * ow, c * k * k);
+        for img in 0..n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = (img * oh + oy) * ow + ox;
+                    for ch in 0..c {
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = oy * self.stride + ky;
+                                let ix = ox * self.stride + kx;
+                                let v = input[((img * c + ch) * h + iy) * w + ix];
+                                out.set(row, (ch * k + ky) * k + kx, v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Forward convolution: `kernels` is `F × (C·K·K)` row-major, output
+    /// is `(n·oh·ow) × F` (one GEMM through the selected backend).
+    pub fn forward(
+        &self,
+        input: &[f32],
+        n: usize,
+        h: usize,
+        w: usize,
+        kernels: &Matrix,
+        backend: Backend,
+    ) -> Matrix {
+        assert_eq!(kernels.rows(), self.out_channels);
+        assert_eq!(kernels.cols(), self.in_channels * self.kernel * self.kernel);
+        let patches = self.im2col(input, n, h, w);
+        let mut out = Matrix::zeros(patches.rows(), self.out_channels);
+        sgemm_matrix(backend, Transpose::No, Transpose::Yes, 1.0, &patches, kernels, 0.0, &mut out)
+            .expect("conv sgemm");
+        out
+    }
+
+    /// GEMM flops of one forward call.
+    pub fn flops(&self, n: usize, h: usize, w: usize) -> f64 {
+        let (oh, ow) = self.out_hw(h, w);
+        2.0 * (n * oh * ow) as f64
+            * (self.in_channels * self.kernel * self.kernel) as f64
+            * self.out_channels as f64
+    }
+}
+
+/// Direct (nested-loop) convolution used as the oracle in tests.
+pub fn conv2d_direct(
+    cfg: &Conv2d,
+    input: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    kernels: &Matrix,
+) -> Matrix {
+    let (oh, ow) = cfg.out_hw(h, w);
+    let c = cfg.in_channels;
+    let k = cfg.kernel;
+    let mut out = Matrix::zeros(n * oh * ow, cfg.out_channels);
+    for img in 0..n {
+        for f in 0..cfg.out_channels {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ch in 0..c {
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = oy * cfg.stride + ky;
+                                let ix = ox * cfg.stride + kx;
+                                acc += input[((img * c + ch) * h + iy) * w + ix]
+                                    * kernels.get(f, (ch * k + ky) * k + kx);
+                            }
+                        }
+                    }
+                    out.set((img * oh + oy) * ow + ox, f, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+    use crate::util::testkit::assert_allclose;
+
+    fn rand_input(seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        let mut v = vec![0.0; len];
+        rng.fill_f32(&mut v, -1.0, 1.0);
+        v
+    }
+
+    #[test]
+    fn output_geometry() {
+        let cfg = Conv2d { in_channels: 3, out_channels: 8, kernel: 3, stride: 1 };
+        assert_eq!(cfg.out_hw(8, 10), (6, 8));
+        let cfg2 = Conv2d { kernel: 3, stride: 2, ..cfg };
+        assert_eq!(cfg2.out_hw(9, 9), (4, 4));
+    }
+
+    #[test]
+    fn im2col_identity_kernel_1x1() {
+        // 1×1 kernel, stride 1: patches are just the channel values.
+        let cfg = Conv2d { in_channels: 2, out_channels: 2, kernel: 1, stride: 1 };
+        let input: Vec<f32> = (0..2 * 2 * 2 * 2).map(|i| i as f32).collect(); // n=2,c=2,h=2,w=2
+        let p = cfg.im2col(&input, 2, 2, 2);
+        assert_eq!((p.rows(), p.cols()), (8, 2));
+        // First patch row = pixel (0,0) of both channels of image 0.
+        assert_eq!(p.get(0, 0), 0.0);
+        assert_eq!(p.get(0, 1), 4.0);
+    }
+
+    #[test]
+    fn gemm_conv_matches_direct_all_backends() {
+        let cfg = Conv2d { in_channels: 3, out_channels: 5, kernel: 3, stride: 1 };
+        let (n, h, w) = (2usize, 7usize, 9usize);
+        let input = rand_input(1, n * 3 * h * w);
+        let kernels = Matrix::random(5, 3 * 3 * 3, 2, -1.0, 1.0);
+        let want = conv2d_direct(&cfg, &input, n, h, w, &kernels);
+        for backend in crate::blas::available_backends() {
+            let got = cfg.forward(&input, n, h, w, &kernels, backend);
+            assert_allclose(
+                got.data(),
+                want.data(),
+                2e-4,
+                1e-4,
+                &format!("conv {}", backend.name()),
+            );
+        }
+    }
+
+    #[test]
+    fn strided_conv_matches_direct() {
+        let cfg = Conv2d { in_channels: 2, out_channels: 4, kernel: 3, stride: 2 };
+        let (n, h, w) = (1usize, 11usize, 11usize);
+        let input = rand_input(3, n * 2 * h * w);
+        let kernels = Matrix::random(4, 2 * 9, 4, -1.0, 1.0);
+        let want = conv2d_direct(&cfg, &input, n, h, w, &kernels);
+        let got = cfg.forward(&input, n, h, w, &kernels, Backend::Simd);
+        assert_allclose(got.data(), want.data(), 2e-4, 1e-4, "strided conv");
+    }
+
+    #[test]
+    fn flops_formula() {
+        let cfg = Conv2d { in_channels: 3, out_channels: 8, kernel: 3, stride: 1 };
+        let (oh, ow) = cfg.out_hw(8, 8);
+        assert_eq!(cfg.flops(2, 8, 8), 2.0 * (2 * oh * ow) as f64 * 27.0 * 8.0);
+    }
+}

@@ -1,0 +1,434 @@
+//! A tanh MLP with SGEMM-powered forward and backward passes.
+//!
+//! Layer l computes `h_{l+1} = tanh(h_l W_l + b_l)` (linear on the output
+//! layer); the loss is mean softmax cross-entropy. Backprop is hand-derived
+//! and expressed as SGEMMs:
+//!
+//! ```text
+//! dW_l = h_lᵀ · dz_l          (sgemm, transa = Yes)
+//! dh_l = dz_l · W_lᵀ          (sgemm, transb = Yes)
+//! dz_{l-1} = dh_l ⊙ (1 - h_l²)
+//! ```
+//!
+//! which matches the paper's application: *all* heavy math is GEMM.
+
+use crate::blas::{sgemm, Backend, Matrix, Transpose};
+use crate::util::prng::Pcg32;
+
+/// MLP parameters: per layer a weight matrix (fan_in × fan_out) and bias.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mlp {
+    /// Layer sizes, e.g. `[256, 768, 768, 10]`.
+    pub sizes: Vec<usize>,
+    /// Weights, one per layer.
+    pub weights: Vec<Matrix>,
+    /// Biases, one per layer.
+    pub biases: Vec<Vec<f32>>,
+    /// Backend used for all SGEMM calls.
+    pub backend: Backend,
+}
+
+/// Gradients with the same structure as the parameters.
+#[derive(Clone, Debug)]
+pub struct MlpGrads {
+    /// dL/dW per layer.
+    pub d_weights: Vec<Matrix>,
+    /// dL/db per layer.
+    pub d_biases: Vec<Vec<f32>>,
+}
+
+impl Mlp {
+    /// Glorot-ish random init (deterministic in `seed`).
+    pub fn init(sizes: &[usize], seed: u64, backend: Backend) -> Self {
+        assert!(sizes.len() >= 2, "need at least input and output sizes");
+        let mut rng = Pcg32::new(seed);
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for (&fan_in, &fan_out) in sizes.iter().zip(&sizes[1..]) {
+            let scale = (2.0 / (fan_in + fan_out) as f32).sqrt();
+            let mut w = Matrix::zeros(fan_in, fan_out);
+            for v in w.data_mut() {
+                *v = rng.normal() * scale;
+            }
+            weights.push(w);
+            biases.push(vec![0.0; fan_out]);
+        }
+        Self { sizes: sizes.to_vec(), weights, biases, backend }
+    }
+
+    /// Number of layers.
+    pub fn n_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Total adjustable parameters.
+    pub fn param_count(&self) -> usize {
+        self.weights.iter().map(|w| w.rows() * w.cols()).sum::<usize>()
+            + self.biases.iter().map(|b| b.len()).sum::<usize>()
+    }
+
+    /// Forward pass: returns per-layer activations, `acts[0] = x`,
+    /// `acts[n] = logits` (length `n_layers + 1`).
+    pub fn forward_all(&self, x: &Matrix) -> Vec<Matrix> {
+        assert_eq!(x.cols(), self.sizes[0], "input width mismatch");
+        let batch = x.rows();
+        let mut acts = vec![x.clone()];
+        for l in 0..self.n_layers() {
+            let w = &self.weights[l];
+            let mut z = Matrix::zeros(batch, w.cols());
+            sgemm(
+                self.backend,
+                Transpose::No,
+                Transpose::No,
+                batch,
+                w.cols(),
+                w.rows(),
+                1.0,
+                acts[l].data(),
+                acts[l].ld(),
+                w.data(),
+                w.ld(),
+                0.0,
+                z.data_mut(),
+                w.cols(),
+            )
+            .expect("forward sgemm");
+            // Bias + activation.
+            let last = l == self.n_layers() - 1;
+            for r in 0..batch {
+                for c in 0..w.cols() {
+                    let mut v = z.get(r, c) + self.biases[l][c];
+                    if !last {
+                        v = v.tanh();
+                    }
+                    z.set(r, c, v);
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Logits only.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        self.forward_all(x).pop().expect("nonempty activations")
+    }
+
+    /// Mean softmax cross-entropy of logits vs one-hot targets.
+    pub fn loss_from_logits(logits: &Matrix, y_onehot: &Matrix) -> f32 {
+        assert_eq!(logits.rows(), y_onehot.rows());
+        assert_eq!(logits.cols(), y_onehot.cols());
+        let batch = logits.rows();
+        let mut total = 0.0f64;
+        for r in 0..batch {
+            let mut maxv = f32::NEG_INFINITY;
+            for c in 0..logits.cols() {
+                maxv = maxv.max(logits.get(r, c));
+            }
+            let mut lse = 0.0f64;
+            for c in 0..logits.cols() {
+                lse += ((logits.get(r, c) - maxv) as f64).exp();
+            }
+            let lse = lse.ln() as f32 + maxv;
+            for c in 0..logits.cols() {
+                if y_onehot.get(r, c) != 0.0 {
+                    total += (y_onehot.get(r, c) * (lse - logits.get(r, c))) as f64;
+                }
+            }
+        }
+        (total / batch as f64) as f32
+    }
+
+    /// Loss + full gradients for a batch (one-hot targets).
+    pub fn loss_and_grad(&self, x: &Matrix, y_onehot: &Matrix) -> (f32, MlpGrads) {
+        let acts = self.forward_all(x);
+        let logits = &acts[self.n_layers()];
+        let loss = Self::loss_from_logits(logits, y_onehot);
+        let batch = x.rows();
+
+        // dz at the output: (softmax(logits) - y) / batch.
+        let mut dz = Matrix::zeros(batch, logits.cols());
+        for r in 0..batch {
+            let mut maxv = f32::NEG_INFINITY;
+            for c in 0..logits.cols() {
+                maxv = maxv.max(logits.get(r, c));
+            }
+            let mut denom = 0.0f32;
+            for c in 0..logits.cols() {
+                denom += (logits.get(r, c) - maxv).exp();
+            }
+            for c in 0..logits.cols() {
+                let sm = (logits.get(r, c) - maxv).exp() / denom;
+                dz.set(r, c, (sm - y_onehot.get(r, c)) / batch as f32);
+            }
+        }
+
+        let mut d_weights = vec![Matrix::zeros(0, 0); self.n_layers()];
+        let mut d_biases = vec![Vec::new(); self.n_layers()];
+        for l in (0..self.n_layers()).rev() {
+            let h = &acts[l]; // input to layer l
+            let w = &self.weights[l];
+            // dW = hᵀ dz  (fan_in × fan_out)
+            let mut dw = Matrix::zeros(w.rows(), w.cols());
+            sgemm(
+                self.backend,
+                Transpose::Yes,
+                Transpose::No,
+                w.rows(),
+                w.cols(),
+                batch,
+                1.0,
+                h.data(),
+                h.ld(),
+                dz.data(),
+                dz.ld(),
+                0.0,
+                dw.data_mut(),
+                w.cols(),
+            )
+            .expect("dW sgemm");
+            // db = column sums of dz.
+            let mut db = vec![0.0f32; w.cols()];
+            for r in 0..batch {
+                for c in 0..w.cols() {
+                    db[c] += dz.get(r, c);
+                }
+            }
+            d_weights[l] = dw;
+            d_biases[l] = db;
+            if l > 0 {
+                // dh = dz Wᵀ  (batch × fan_in), then dz_{l-1} = dh ⊙ tanh'.
+                let mut dh = Matrix::zeros(batch, w.rows());
+                sgemm(
+                    self.backend,
+                    Transpose::No,
+                    Transpose::Yes,
+                    batch,
+                    w.rows(),
+                    w.cols(),
+                    1.0,
+                    dz.data(),
+                    dz.ld(),
+                    w.data(),
+                    w.ld(),
+                    0.0,
+                    dh.data_mut(),
+                    w.rows(),
+                )
+                .expect("dh sgemm");
+                for r in 0..batch {
+                    for c in 0..w.rows() {
+                        let hv = acts[l].get(r, c); // = tanh(z_{l-1})
+                        dh.set(r, c, dh.get(r, c) * (1.0 - hv * hv));
+                    }
+                }
+                dz = dh;
+            }
+        }
+        (loss, MlpGrads { d_weights, d_biases })
+    }
+
+    /// Classification accuracy of logits vs one-hot targets.
+    pub fn accuracy(logits: &Matrix, y_onehot: &Matrix) -> f32 {
+        let batch = logits.rows();
+        let mut correct = 0usize;
+        for r in 0..batch {
+            let (mut arg_l, mut max_l) = (0, f32::NEG_INFINITY);
+            let (mut arg_y, mut max_y) = (0, f32::NEG_INFINITY);
+            for c in 0..logits.cols() {
+                if logits.get(r, c) > max_l {
+                    max_l = logits.get(r, c);
+                    arg_l = c;
+                }
+                if y_onehot.get(r, c) > max_y {
+                    max_y = y_onehot.get(r, c);
+                    arg_y = c;
+                }
+            }
+            correct += usize::from(arg_l == arg_y);
+        }
+        correct as f32 / batch as f32
+    }
+
+    /// Flops for one forward+backward over `batch` rows (3 × forward GEMM
+    /// flops — the same formula as `model.train_step_flops` in Python).
+    pub fn train_step_flops(&self, batch: usize) -> f64 {
+        let fwd: f64 = self
+            .sizes
+            .iter()
+            .zip(&self.sizes[1..])
+            .map(|(&i, &o)| 2.0 * batch as f64 * i as f64 * o as f64)
+            .sum();
+        3.0 * fwd
+    }
+}
+
+impl MlpGrads {
+    /// Element-wise sum with another gradient set.
+    pub fn add_assign(&mut self, other: &MlpGrads) {
+        assert_eq!(self.d_weights.len(), other.d_weights.len());
+        for (a, b) in self.d_weights.iter_mut().zip(&other.d_weights) {
+            for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+                *x += *y;
+            }
+        }
+        for (a, b) in self.d_biases.iter_mut().zip(&other.d_biases) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += *y;
+            }
+        }
+    }
+
+    /// Scale all gradients by `s`.
+    pub fn scale(&mut self, s: f32) {
+        for w in &mut self.d_weights {
+            for v in w.data_mut() {
+                *v *= s;
+            }
+        }
+        for b in &mut self.d_biases {
+            for v in b.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Zero-valued gradients matching a parameter structure.
+    pub fn zeros_like(mlp: &Mlp) -> Self {
+        Self {
+            d_weights: mlp.weights.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect(),
+            d_biases: mlp.biases.iter().map(|b| vec![0.0; b.len()]).collect(),
+        }
+    }
+
+    /// Max absolute component (for tests / divergence watchdogs).
+    pub fn max_abs(&self) -> f32 {
+        let mut m = 0.0f32;
+        for w in &self.d_weights {
+            for v in w.data() {
+                m = m.max(v.abs());
+            }
+        }
+        for b in &self.d_biases {
+            for v in b {
+                m = m.max(v.abs());
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Backend;
+
+    fn onehot(labels: &[usize], classes: usize) -> Matrix {
+        Matrix::from_fn(labels.len(), classes, |r, c| if labels[r] == c { 1.0 } else { 0.0 })
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mlp = Mlp::init(&[6, 8, 3], 1, Backend::Naive);
+        let x = Matrix::random(5, 6, 2, -1.0, 1.0);
+        let acts = mlp.forward_all(&x);
+        assert_eq!(acts.len(), 3);
+        assert_eq!((acts[1].rows(), acts[1].cols()), (5, 8));
+        assert_eq!((acts[2].rows(), acts[2].cols()), (5, 3));
+    }
+
+    #[test]
+    fn param_count() {
+        let mlp = Mlp::init(&[4, 8, 2], 1, Backend::Naive);
+        assert_eq!(mlp.param_count(), 4 * 8 + 8 + 8 * 2 + 2);
+    }
+
+    #[test]
+    fn loss_at_init_is_log_nclasses() {
+        let mlp = Mlp::init(&[10, 16, 7], 3, Backend::Naive);
+        let x = Matrix::random(64, 10, 4, -1.0, 1.0);
+        let y = onehot(&(0..64).map(|i| i % 7).collect::<Vec<_>>(), 7);
+        let loss = Mlp::loss_from_logits(&mlp.forward(&x), &y);
+        assert!((loss - (7.0f32).ln()).abs() < 0.5, "loss {loss}");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut mlp = Mlp::init(&[5, 6, 3], 7, Backend::Naive);
+        let x = Matrix::random(4, 5, 8, -1.0, 1.0);
+        let y = onehot(&[0, 2, 1, 2], 3);
+        let (_, grads) = mlp.loss_and_grad(&x, &y);
+        let eps = 1e-3f32;
+        // Spot-check several weight coordinates in both layers and a bias.
+        for &(l, r, c) in &[(0usize, 0usize, 0usize), (0, 4, 5), (1, 3, 2), (1, 0, 1)] {
+            let orig = mlp.weights[l].get(r, c);
+            mlp.weights[l].set(r, c, orig + eps);
+            let lp = Mlp::loss_from_logits(&mlp.forward(&x), &y);
+            mlp.weights[l].set(r, c, orig - eps);
+            let lm = Mlp::loss_from_logits(&mlp.forward(&x), &y);
+            mlp.weights[l].set(r, c, orig);
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = grads.d_weights[l].get(r, c);
+            assert!(
+                (fd - an).abs() < 5e-3 * (1.0 + fd.abs()),
+                "W[{l}][{r},{c}]: fd={fd} analytic={an}"
+            );
+        }
+        // A bias coordinate.
+        let orig = mlp.biases[0][2];
+        mlp.biases[0][2] = orig + eps;
+        let lp = Mlp::loss_from_logits(&mlp.forward(&x), &y);
+        mlp.biases[0][2] = orig - eps;
+        let lm = Mlp::loss_from_logits(&mlp.forward(&x), &y);
+        mlp.biases[0][2] = orig;
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!((fd - grads.d_biases[0][2]).abs() < 5e-3);
+    }
+
+    #[test]
+    fn grads_identical_across_backends() {
+        let mlp_n = Mlp::init(&[8, 12, 4], 11, Backend::Naive);
+        let mut mlp_s = mlp_n.clone();
+        mlp_s.backend = Backend::Simd;
+        let x = Matrix::random(6, 8, 12, -1.0, 1.0);
+        let y = onehot(&[0, 1, 2, 3, 0, 1], 4);
+        let (l1, g1) = mlp_n.loss_and_grad(&x, &y);
+        let (l2, g2) = mlp_s.loss_and_grad(&x, &y);
+        assert!((l1 - l2).abs() < 1e-4);
+        for (a, b) in g1.d_weights.iter().zip(&g2.d_weights) {
+            assert!(a.max_abs_diff(b) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn grad_utilities() {
+        let mlp = Mlp::init(&[3, 4, 2], 5, Backend::Naive);
+        let x = Matrix::random(2, 3, 6, -1.0, 1.0);
+        let y = onehot(&[0, 1], 2);
+        let (_, g) = mlp.loss_and_grad(&x, &y);
+        let mut sum = MlpGrads::zeros_like(&mlp);
+        sum.add_assign(&g);
+        sum.add_assign(&g);
+        sum.scale(0.5);
+        // sum should now equal g.
+        for (a, b) in sum.d_weights.iter().zip(&g.d_weights) {
+            assert!(a.max_abs_diff(b) < 1e-6);
+        }
+        assert!(g.max_abs() > 0.0);
+    }
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = Matrix::from_fn(3, 2, |r, c| if (r + c) % 2 == 0 { 1.0 } else { 0.0 });
+        // argmax rows: [0, 1, 0]
+        let y = onehot(&[0, 1, 1], 2);
+        assert!((Mlp::accuracy(&logits, &y) - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flops_formula() {
+        let mlp = Mlp::init(&[10, 20, 5], 1, Backend::Naive);
+        let fwd = 2.0 * 4.0 * 10.0 * 20.0 + 2.0 * 4.0 * 20.0 * 5.0;
+        assert_eq!(mlp.train_step_flops(4), 3.0 * fwd);
+    }
+}

@@ -1,0 +1,22 @@
+//! Neural-network substrate for the paper's §4 application.
+//!
+//! The paper's motivating workload is large-scale neural-network training
+//! with SGEMM as the kernel (ref [1]: "98¢/MFlop ultra-large-scale neural
+//! network training on a PIII cluster"). This module provides the network:
+//! a tanh MLP whose forward *and* backward passes are expressed entirely
+//! as SGEMM calls through [`crate::blas`], so every training flop goes
+//! through the Emmerald kernel — natively here, or through the AOT Pallas
+//! artifact via [`crate::runtime`].
+//!
+//! * [`mlp`] — parameters, forward, softmax cross-entropy, full backprop.
+//! * [`data`] — deterministic synthetic classification data (Gaussian
+//!   clusters) so training runs are reproducible without external files.
+//! * [`sgd`] — plain SGD and gradient averaging for data parallelism.
+
+pub mod conv;
+pub mod data;
+pub mod mlp;
+pub mod sgd;
+
+pub use data::Dataset;
+pub use mlp::{Mlp, MlpGrads};

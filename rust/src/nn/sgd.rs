@@ -1,0 +1,123 @@
+//! Plain SGD and the gradient averaging used by data parallelism.
+//!
+//! The paper's cluster (ref [1]) runs synchronous data-parallel SGD: each
+//! node computes gradients on its batch shard, gradients are averaged, and
+//! every node applies the same update. The averaging here is exactly what
+//! the leader performs after collecting worker results.
+
+use super::mlp::{Mlp, MlpGrads};
+
+/// SGD configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Sgd {
+    /// Learning rate.
+    pub lr: f32,
+}
+
+impl Sgd {
+    /// New optimiser.
+    pub fn new(lr: f32) -> Self {
+        assert!(lr > 0.0, "learning rate must be positive");
+        Self { lr }
+    }
+
+    /// In-place parameter update: `p -= lr * g`.
+    pub fn apply(&self, mlp: &mut Mlp, grads: &MlpGrads) {
+        assert_eq!(mlp.weights.len(), grads.d_weights.len());
+        for (w, dw) in mlp.weights.iter_mut().zip(&grads.d_weights) {
+            for (p, g) in w.data_mut().iter_mut().zip(dw.data()) {
+                *p -= self.lr * g;
+            }
+        }
+        for (b, db) in mlp.biases.iter_mut().zip(&grads.d_biases) {
+            for (p, g) in b.iter_mut().zip(db) {
+                *p -= self.lr * g;
+            }
+        }
+    }
+}
+
+/// Weighted average of per-shard gradients (weights = shard sizes, so the
+/// result equals the gradient of the concatenated batch).
+pub fn average_grads(parts: &[(usize, MlpGrads)], template: &Mlp) -> MlpGrads {
+    assert!(!parts.is_empty(), "no gradients to average");
+    let total: usize = parts.iter().map(|(n, _)| n).sum();
+    assert!(total > 0);
+    let mut acc = MlpGrads::zeros_like(template);
+    for (n, g) in parts {
+        let mut weighted = g.clone();
+        weighted.scale(*n as f32 / total as f32);
+        acc.add_assign(&weighted);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{Backend, Matrix};
+
+    #[test]
+    fn apply_moves_against_gradient() {
+        let mut mlp = Mlp::init(&[2, 3, 2], 1, Backend::Naive);
+        let before = mlp.weights[0].get(0, 0);
+        let mut g = MlpGrads::zeros_like(&mlp);
+        g.d_weights[0].set(0, 0, 2.0);
+        Sgd::new(0.1).apply(&mut mlp, &g);
+        assert!((mlp.weights[0].get(0, 0) - (before - 0.2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sharded_average_equals_full_batch_gradient() {
+        // Gradient averaging over shards must equal the serial gradient of
+        // the whole batch — the core data-parallel invariant.
+        let mlp = Mlp::init(&[6, 8, 3], 5, Backend::Naive);
+        let d = crate::nn::data::Dataset::gaussian_clusters(24, 6, 3, 0.3, 11);
+        let (x_full, y_full) = d.slice(0, 24);
+        let (_, g_full) = mlp.loss_and_grad(&x_full, &y_full);
+
+        let mut parts = Vec::new();
+        for (s, n) in [(0usize, 10usize), (10, 8), (18, 6)] {
+            let (x, y) = d.slice(s, n);
+            let (_, g) = mlp.loss_and_grad(&x, &y);
+            parts.push((n, g));
+        }
+        let g_avg = average_grads(&parts, &mlp);
+        for (a, b) in g_avg.d_weights.iter().zip(&g_full.d_weights) {
+            assert!(a.max_abs_diff(b) < 1e-5, "sharded avg != full gradient");
+        }
+        for (a, b) in g_avg.d_biases.iter().zip(&g_full.d_biases) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let mut mlp = Mlp::init(&[8, 16, 3], 2, Backend::Simd);
+        let d = crate::nn::data::Dataset::gaussian_clusters(128, 8, 3, 0.3, 13);
+        let sgd = Sgd::new(0.5);
+        let (x, y) = d.slice(0, 128);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..40 {
+            let (loss, g) = mlp.loss_and_grad(&x, &y);
+            sgd.apply(&mut mlp, &g);
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        let first = first.unwrap();
+        assert!(last < first * 0.5, "loss did not fall: {first} -> {last}");
+        // And accuracy should be high on this easy task.
+        let acc = Mlp::accuracy(&mlp.forward(&x), &y);
+        assert!(acc > 0.9, "accuracy {acc}");
+        let _ = Matrix::zeros(1, 1); // keep import used in all cfg combinations
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_lr_rejected() {
+        let _ = Sgd::new(0.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Artifact manifest parsing.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt` with one line per
+//! artifact:
+//!
+//! ```text
+//! name=gemm_320 file=gemm_320.hlo.txt inputs=f32[320x320],f32[320x320] flops=65536000 extra=kernel:emmerald-pallas
+//! ```
+//!
+//! [`Registry`] parses this and resolves artifact files; it is the only
+//! bridge between the build-time Python world and the run-time Rust world.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A parsed `f32[AxB]` input shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeSpec {
+    /// Dimensions (empty = scalar).
+    pub dims: Vec<usize>,
+}
+
+impl ShapeSpec {
+    /// Parse `f32[64x256]` / `f32[768]` / `f32[]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let body = s
+            .strip_prefix("f32[")
+            .and_then(|r| r.strip_suffix(']'))
+            .with_context(|| format!("bad shape spec '{s}' (want f32[..])"))?;
+        if body.is_empty() {
+            return Ok(Self { dims: vec![] });
+        }
+        let dims = body
+            .split('x')
+            .map(|d| d.parse::<usize>().with_context(|| format!("bad dim in '{s}'")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { dims })
+    }
+
+    /// Element count.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Manifest row for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Artifact name (e.g. `gemm_320`).
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Input shapes in ABI order.
+    pub inputs: Vec<ShapeSpec>,
+    /// Useful flops per execution (the paper's 2MNK for GEMMs).
+    pub flops: f64,
+    /// Free-form `key:value` extras (kernel name, layer sizes, ...).
+    pub extra: BTreeMap<String, String>,
+}
+
+impl ArtifactMeta {
+    fn parse_line(line: &str) -> Result<Self> {
+        let mut name = None;
+        let mut file = None;
+        let mut inputs = Vec::new();
+        let mut flops = 0.0;
+        let mut extra = BTreeMap::new();
+        for field in line.split_whitespace() {
+            let (key, value) =
+                field.split_once('=').with_context(|| format!("bad field '{field}'"))?;
+            match key {
+                "name" => name = Some(value.to_string()),
+                "file" => file = Some(value.to_string()),
+                "inputs" => {
+                    inputs = value.split(',').map(ShapeSpec::parse).collect::<Result<Vec<_>>>()?;
+                }
+                "flops" => flops = value.parse::<f64>().context("bad flops")?,
+                "extra" => {
+                    for kv in value.split(',') {
+                        if let Some((k, v)) = kv.split_once(':') {
+                            extra.insert(k.to_string(), v.to_string());
+                        }
+                    }
+                }
+                _ => {} // forward-compatible: ignore unknown fields
+            }
+        }
+        Ok(Self {
+            name: name.context("manifest row missing name")?,
+            file: file.context("manifest row missing file")?,
+            inputs,
+            flops,
+            extra,
+        })
+    }
+}
+
+/// Parsed manifest + artifact directory.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    dir: PathBuf,
+    artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(dir: PathBuf, text: &str) -> Result<Self> {
+        let mut artifacts = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let meta = ArtifactMeta::parse_line(line)?;
+            if artifacts.insert(meta.name.clone(), meta).is_some() {
+                bail!("duplicate artifact in manifest");
+            }
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    /// Artifact metadata by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts.get(name).with_context(|| {
+            format!(
+                "artifact '{name}' not in manifest (have: {})",
+                self.names().join(", ")
+            )
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    /// All artifact names (sorted).
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.keys().cloned().collect()
+    }
+
+    /// Artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    /// True when the manifest has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+name=gemm_64 file=gemm_64.hlo.txt inputs=f32[64x64],f32[64x64] flops=524288 extra=kernel:emmerald-pallas
+name=mlp_grad file=mlp_grad.hlo.txt inputs=f32[256x768],f32[768],f32[64x256],f32[64x10] flops=304939008 extra=sizes:256-768-768-10,batch:64
+";
+
+    #[test]
+    fn parses_shapes() {
+        assert_eq!(ShapeSpec::parse("f32[64x256]").unwrap().dims, vec![64, 256]);
+        assert_eq!(ShapeSpec::parse("f32[768]").unwrap().dims, vec![768]);
+        assert_eq!(ShapeSpec::parse("f32[]").unwrap().dims, Vec::<usize>::new());
+        assert!(ShapeSpec::parse("i32[3]").is_err());
+        assert!(ShapeSpec::parse("f32[3x]").is_err());
+        assert_eq!(ShapeSpec::parse("f32[4x5]").unwrap().elements(), 20);
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let reg = Registry::parse(PathBuf::from("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(reg.len(), 2);
+        let g = reg.get("gemm_64").unwrap();
+        assert_eq!(g.file, "gemm_64.hlo.txt");
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.flops, 524288.0);
+        assert_eq!(g.extra.get("kernel").unwrap(), "emmerald-pallas");
+        let m = reg.get("mlp_grad").unwrap();
+        assert_eq!(m.extra.get("batch").unwrap(), "64");
+        assert_eq!(m.extra.get("sizes").unwrap(), "256-768-768-10");
+        assert_eq!(reg.path_of("gemm_64").unwrap(), PathBuf::from("/tmp/a/gemm_64.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let reg = Registry::parse(PathBuf::from("."), SAMPLE).unwrap();
+        let err = format!("{:#}", reg.get("nope").unwrap_err());
+        assert!(err.contains("gemm_64"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let dup = format!("{SAMPLE}\nname=gemm_64 file=x.hlo.txt inputs=f32[] flops=1\n");
+        assert!(Registry::parse(PathBuf::from("."), &dup).is_err());
+    }
+
+    #[test]
+    fn empty_manifest_ok() {
+        let reg = Registry::parse(PathBuf::from("."), "# nothing\n").unwrap();
+        assert!(reg.is_empty());
+    }
+}

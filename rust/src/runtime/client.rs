@@ -1,0 +1,152 @@
+//! The PJRT runtime: compile-cached execution of HLO-text artifacts.
+
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::artifact::Registry;
+use super::tensor::Tensor;
+
+/// A PJRT CPU client plus a per-artifact compile cache.
+///
+/// Compilation happens once per artifact name; subsequent `execute` calls
+/// reuse the loaded executable, keeping Python (and XLA compilation) off
+/// the hot path entirely.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: Registry,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let registry = Registry::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, registry, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// The artifact registry.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Backend platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact (no-op if already cached).
+    pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.registry.path_of(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with tensor inputs, returning all tuple outputs.
+    ///
+    /// Inputs are validated against the manifest shapes before execution
+    /// so ABI drift between `aot.py` and the caller fails loudly.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self.registry.get(name)?;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.dims() != spec.dims.as_slice() {
+                bail!(
+                    "artifact '{name}' input {i}: expected shape {:?}, got {:?}",
+                    spec.dims,
+                    t.dims()
+                );
+            }
+        }
+        self.ensure_compiled(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("ensure_compiled populated the cache");
+        // Single-device CPU execution: one replica, one partition.
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the output is always a tuple.
+        let parts = result.to_tuple().context("decomposing output tuple")?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Useful flops per execution of an artifact (from the manifest).
+    pub fn flops_of(&self, name: &str) -> Result<f64> {
+        Ok(self.registry.get(name)?.flops)
+    }
+}
+
+/// SGEMM through a fixed-size PJRT artifact — the Pallas-kernel-backed
+/// counterpart of [`crate::blas::Backend`]. One instance wraps one
+/// `gemm_<n>` artifact.
+pub struct PjrtGemm<'rt> {
+    runtime: &'rt Runtime,
+    name: String,
+    /// Square size n of the artifact (shapes are n×n).
+    pub n: usize,
+}
+
+impl<'rt> PjrtGemm<'rt> {
+    /// Bind to a `gemm_<n>` artifact, pre-compiling it.
+    pub fn new(runtime: &'rt Runtime, name: &str) -> Result<Self> {
+        let meta = runtime.registry.get(name)?;
+        if meta.inputs.len() != 2 {
+            bail!("'{name}' is not a GEMM artifact (has {} inputs)", meta.inputs.len());
+        }
+        let dims = &meta.inputs[0].dims;
+        if dims.len() != 2 || dims[0] != dims[1] {
+            bail!("'{name}' is not a square GEMM artifact (shape {dims:?})");
+        }
+        runtime.ensure_compiled(name)?;
+        Ok(Self { runtime, name: name.to_string(), n: dims[0] })
+    }
+
+    /// C = A·B for n×n row-major slices.
+    pub fn matmul(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let n = self.n;
+        let ta = Tensor::new(vec![n, n], a.to_vec())?;
+        let tb = Tensor::new(vec![n, n], b.to_vec())?;
+        let mut out = self.runtime.execute(&self.name, &[ta, tb])?;
+        if out.len() != 1 {
+            bail!("GEMM artifact returned {} outputs", out.len());
+        }
+        Ok(out.remove(0).into_data())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests that don't need built artifacts live here; integration
+    //! tests against real artifacts are in rust/tests/integration_runtime.rs.
+
+    use super::*;
+
+    #[test]
+    fn runtime_requires_manifest() {
+        match Runtime::new("/nonexistent-dir") {
+            Ok(_) => panic!("expected missing-manifest error"),
+            Err(err) => assert!(format!("{err:#}").contains("manifest")),
+        }
+    }
+}

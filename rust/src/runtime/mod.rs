@@ -1,0 +1,26 @@
+//! PJRT execution path: load AOT artifacts and run them from Rust.
+//!
+//! Python (JAX + Pallas) runs once at build time — `make artifacts` lowers
+//! every graph to HLO *text* under `artifacts/`. At run time this module:
+//!
+//! 1. parses the [`artifact`] manifest,
+//! 2. loads HLO text with `xla::HloModuleProto::from_text_file`,
+//! 3. compiles it on the PJRT CPU client (compile results are cached per
+//!    artifact), and
+//! 4. executes with [`Tensor`] inputs/outputs.
+//!
+//! HLO text (not serialized protos) is the interchange format because the
+//! crate's bundled XLA (xla_extension 0.5.1) rejects jax≥0.5's 64-bit
+//! instruction ids; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+mod artifact;
+mod client;
+mod tensor;
+
+pub use artifact::{ArtifactMeta, Registry, ShapeSpec};
+pub use client::{PjrtGemm, Runtime};
+pub use tensor::Tensor;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

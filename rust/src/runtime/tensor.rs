@@ -1,0 +1,155 @@
+//! Host-side f32 tensors and their Literal conversions.
+
+use anyhow::{bail, Context, Result};
+
+/// A dense row-major f32 tensor (the only dtype in the SGEMM/MLP ABI).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from dims + data (len must equal the product of dims).
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let expect: usize = dims.iter().product();
+        if data.len() != expect {
+            bail!("tensor data length {} != product of dims {:?}", data.len(), dims);
+        }
+        Ok(Self { dims, data })
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n: usize = dims.iter().product();
+        Self { dims, data: vec![0.0; n] }
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(v: f32) -> Self {
+        Self { dims: vec![], data: vec![v] }
+    }
+
+    /// Deterministic uniform-random tensor in `[lo, hi)`.
+    pub fn random(dims: Vec<usize>, seed: u64, lo: f32, hi: f32) -> Self {
+        let n: usize = dims.iter().product();
+        Self { dims, data: crate::util::prng::random_f32(seed, n, lo, hi) }
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Flat data.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat data.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat data vector.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True for zero-element tensors.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Scalar value of a 0-d (or 1-element) tensor.
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor with {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.dims.is_empty() {
+            // 0-d scalar: reshape to [].
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Convert from an XLA literal (must be f32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal is not an array")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().context("literal is not f32")?;
+        Tensor::new(dims, data)
+    }
+
+    /// View as a [`crate::blas::Matrix`]-compatible 2-d (rows, cols) pair.
+    pub fn as_2d(&self) -> Result<(usize, usize)> {
+        match self.dims.len() {
+            2 => Ok((self.dims[0], self.dims[1])),
+            _ => bail!("tensor is {}-d, expected 2-d", self.dims.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_len() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_item() {
+        let t = Tensor::scalar(4.5);
+        assert_eq!(t.item().unwrap(), 4.5);
+        assert!(t.dims().is_empty());
+        let m = Tensor::zeros(vec![2]);
+        assert!(m.item().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_2d() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = Tensor::scalar(7.25);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.item().unwrap(), 7.25);
+    }
+
+    #[test]
+    fn literal_roundtrip_1d() {
+        let t = Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.dims(), &[4]);
+        assert_eq!(back.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = Tensor::random(vec![3, 3], 9, -1.0, 1.0);
+        let b = Tensor::random(vec![3, 3], 9, -1.0, 1.0);
+        assert_eq!(a, b);
+    }
+}

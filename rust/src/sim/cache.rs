@@ -1,0 +1,271 @@
+//! Set-associative LRU cache model.
+
+/// Cache geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Total capacity in bytes.
+    pub capacity: usize,
+    /// Associativity (ways per set).
+    pub ways: usize,
+    /// Line size in bytes (power of two).
+    pub line_bytes: usize,
+}
+
+impl CacheConfig {
+    /// Number of sets.
+    pub fn sets(&self) -> usize {
+        self.capacity / (self.ways * self.line_bytes)
+    }
+
+    /// Validate the geometry.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.line_bytes.is_power_of_two() {
+            return Err(format!("line_bytes {} not a power of two", self.line_bytes));
+        }
+        if self.ways == 0 || self.capacity == 0 {
+            return Err("zero ways or capacity".into());
+        }
+        if self.capacity % (self.ways * self.line_bytes) != 0 {
+            return Err(format!(
+                "capacity {} not divisible by ways*line ({}*{})",
+                self.capacity, self.ways, self.line_bytes
+            ));
+        }
+        if !self.sets().is_power_of_two() {
+            return Err(format!("sets {} not a power of two", self.sets()));
+        }
+        Ok(())
+    }
+}
+
+/// Access counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Total lookups.
+    pub accesses: u64,
+    /// Lookups that hit.
+    pub hits: u64,
+    /// Lookups that missed.
+    pub misses: u64,
+    /// Misses that evicted a dirty line (write-back traffic).
+    pub writebacks: u64,
+}
+
+impl CacheStats {
+    /// Hit rate in [0,1] (1.0 when empty).
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            1.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    /// LRU stamp: larger = more recently used.
+    stamp: u64,
+}
+
+const EMPTY: Line = Line { tag: 0, valid: false, dirty: false, stamp: 0 };
+
+/// A set-associative, write-back, write-allocate cache with LRU
+/// replacement — the PIII's L1D and L2 policies.
+#[derive(Clone, Debug)]
+pub struct Cache {
+    cfg: CacheConfig,
+    lines: Vec<Line>, // sets × ways
+    set_mask: u64,
+    line_shift: u32,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl Cache {
+    /// Build a cache from a validated geometry.
+    pub fn new(cfg: CacheConfig) -> Self {
+        cfg.validate().expect("invalid cache config");
+        let sets = cfg.sets();
+        Self {
+            cfg,
+            lines: vec![EMPTY; sets * cfg.ways],
+            set_mask: sets as u64 - 1,
+            line_shift: cfg.line_bytes.trailing_zeros(),
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Geometry.
+    pub fn config(&self) -> CacheConfig {
+        self.cfg
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Reset contents and counters.
+    pub fn flush(&mut self) {
+        self.lines.fill(EMPTY);
+        self.clock = 0;
+        self.stats = CacheStats::default();
+    }
+
+    /// Access one byte address. Returns `true` on hit. On miss the line is
+    /// allocated (evicting LRU; dirty evictions count as writebacks).
+    pub fn access(&mut self, addr: u64, write: bool) -> bool {
+        self.clock += 1;
+        self.stats.accesses += 1;
+        let line_addr = addr >> self.line_shift;
+        let set = (line_addr & self.set_mask) as usize;
+        let tag = line_addr >> self.set_mask.count_ones();
+        let base = set * self.cfg.ways;
+        let ways = &mut self.lines[base..base + self.cfg.ways];
+
+        for l in ways.iter_mut() {
+            if l.valid && l.tag == tag {
+                l.stamp = self.clock;
+                l.dirty |= write;
+                self.stats.hits += 1;
+                return true;
+            }
+        }
+        self.stats.misses += 1;
+        // Victim: invalid way first, else LRU.
+        let victim = ways
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| if l.valid { l.stamp } else { 0 })
+            .map(|(i, _)| i)
+            .expect("ways nonempty");
+        if ways[victim].valid && ways[victim].dirty {
+            self.stats.writebacks += 1;
+        }
+        ways[victim] = Line { tag, valid: true, dirty: write, stamp: self.clock };
+        false
+    }
+
+    /// True if the address is currently resident (no state change).
+    pub fn probe(&self, addr: u64) -> bool {
+        let line_addr = addr >> self.line_shift;
+        let set = (line_addr & self.set_mask) as usize;
+        let tag = line_addr >> self.set_mask.count_ones();
+        let base = set * self.cfg.ways;
+        self.lines[base..base + self.cfg.ways].iter().any(|l| l.valid && l.tag == tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Cache {
+        // 4 sets × 2 ways × 32B = 256B.
+        Cache::new(CacheConfig { capacity: 256, ways: 2, line_bytes: 32 })
+    }
+
+    #[test]
+    fn geometry() {
+        let c = tiny();
+        assert_eq!(c.config().sets(), 4);
+        assert!(CacheConfig { capacity: 255, ways: 2, line_bytes: 32 }.validate().is_err());
+        assert!(CacheConfig { capacity: 256, ways: 2, line_bytes: 33 }.validate().is_err());
+    }
+
+    #[test]
+    fn spatial_locality_hits_within_line() {
+        let mut c = tiny();
+        assert!(!c.access(0, false)); // cold miss
+        for b in 1..32 {
+            assert!(c.access(b, false), "byte {b} same line");
+        }
+        assert_eq!(c.stats().misses, 1);
+        assert_eq!(c.stats().hits, 31);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = tiny();
+        // Three lines mapping to set 0: line addresses 0, 4, 8 (set = line & 3).
+        let a0 = 0u64;
+        let a1 = 4 * 32;
+        let a2 = 8 * 32;
+        c.access(a0, false);
+        c.access(a1, false);
+        c.access(a0, false); // a0 now MRU
+        c.access(a2, false); // evicts a1 (LRU)
+        assert!(c.probe(a0));
+        assert!(!c.probe(a1));
+        assert!(c.probe(a2));
+    }
+
+    #[test]
+    fn hits_plus_misses_equals_accesses() {
+        let mut c = tiny();
+        let mut rng = crate::util::prng::Pcg32::new(1);
+        for _ in 0..10_000 {
+            c.access(rng.next_u32() as u64 % 4096, rng.chance(0.3));
+        }
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, s.accesses);
+        assert_eq!(s.accesses, 10_000);
+    }
+
+    #[test]
+    fn writeback_only_for_dirty_victims() {
+        let mut c = tiny();
+        // Fill set 0 with clean lines, then evict: no writeback.
+        c.access(0, false);
+        c.access(4 * 32, false);
+        c.access(8 * 32, false);
+        assert_eq!(c.stats().writebacks, 0);
+        // Dirty a line, then evict it: one writeback.
+        let mut c = tiny();
+        c.access(0, true);
+        c.access(4 * 32, false);
+        c.access(8 * 32, false); // evicts line 0 (dirty)
+        assert_eq!(c.stats().writebacks, 1);
+    }
+
+    #[test]
+    fn capacity_miss_when_working_set_exceeds_cache() {
+        let mut c = tiny(); // 256 B
+        // Stream 1 KiB twice: second pass still misses (LRU streaming).
+        for pass in 0..2 {
+            for line in 0..32u64 {
+                let hit = c.access(line * 32, false);
+                if pass == 1 {
+                    assert!(!hit, "line {line} should have been evicted");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn working_set_within_capacity_all_hits_second_pass() {
+        let mut c = tiny();
+        for line in 0..8u64 {
+            c.access(line * 32, false);
+        }
+        let before = c.stats().hits;
+        for line in 0..8u64 {
+            assert!(c.access(line * 32, false));
+        }
+        assert_eq!(c.stats().hits, before + 8);
+    }
+
+    #[test]
+    fn flush_resets() {
+        let mut c = tiny();
+        c.access(0, true);
+        c.flush();
+        assert_eq!(c.stats(), CacheStats::default());
+        assert!(!c.probe(0));
+    }
+}

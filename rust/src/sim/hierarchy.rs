@@ -1,0 +1,223 @@
+//! The composed memory hierarchy: L1D → L2 → DRAM, with a DTLB in front.
+//!
+//! Every data access is translated (TLB), then looked up in L1, then L2.
+//! The returned cost is the *stall* contribution in CPU cycles beyond a
+//! pipelined L1 hit (whose latency the PIII hides under independent work,
+//! as do our micro-kernels' independent accumulator chains).
+
+use super::cache::{Cache, CacheConfig, CacheStats};
+use super::tlb::{Tlb, TlbStats};
+
+/// Stall latencies (CPU cycles) for each miss level.
+#[derive(Clone, Copy, Debug)]
+pub struct Latencies {
+    /// Extra cycles for an L1 miss that hits L2.
+    pub l2_hit: u64,
+    /// Extra cycles for a *random* access that misses L2 (DRAM row miss).
+    pub memory: u64,
+    /// Extra cycles for a DRAM miss on the line directly following the
+    /// previous DRAM miss: SDRAM bursts + page hits pipeline sequential
+    /// streams far below the random-access latency.
+    pub memory_seq: u64,
+    /// Page-walk penalty for a DTLB miss (PDE/PTE usually hit L2 on P6).
+    pub tlb_miss: u64,
+}
+
+/// Aggregate counters for a simulation run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HierarchyStats {
+    /// L1 counters.
+    pub l1: CacheStats,
+    /// L2 counters.
+    pub l2: CacheStats,
+    /// TLB counters.
+    pub tlb: TlbStats,
+    /// Total stall cycles charged.
+    pub stall_cycles: u64,
+    /// Total element accesses.
+    pub accesses: u64,
+}
+
+/// L1 + L2 + TLB with stall accounting.
+#[derive(Clone, Debug)]
+pub struct Hierarchy {
+    l1: Cache,
+    l2: Cache,
+    tlb: Tlb,
+    lat: Latencies,
+    stall_cycles: u64,
+    accesses: u64,
+    /// Recent DRAM-miss line addresses (one per open SDRAM bank/stream):
+    /// a miss on `line+1` of any tracked stream is a sequential burst.
+    mem_streams: [u64; 8],
+    mem_stream_next: usize,
+}
+
+impl Hierarchy {
+    /// Build from geometries + latencies.
+    pub fn new(
+        l1: CacheConfig,
+        l2: CacheConfig,
+        tlb_entries: usize,
+        page_bytes: usize,
+        lat: Latencies,
+    ) -> Self {
+        Self {
+            l1: Cache::new(l1),
+            l2: Cache::new(l2),
+            tlb: Tlb::new(tlb_entries, page_bytes),
+            lat,
+            stall_cycles: 0,
+            accesses: 0,
+            mem_streams: [u64::MAX - 1; 8],
+            mem_stream_next: 0,
+        }
+    }
+
+    /// Access one byte address; returns the stall cycles charged.
+    #[inline]
+    pub fn access(&mut self, addr: u64, write: bool) -> u64 {
+        self.accesses += 1;
+        let mut stall = 0;
+        if !self.tlb.access(addr) {
+            stall += self.lat.tlb_miss;
+        }
+        if !self.l1.access(addr, write) {
+            if self.l2.access(addr, write) {
+                stall += self.lat.l2_hit;
+            } else {
+                let line = addr >> 5; // 32-byte lines throughout
+                if let Some(s) = self.mem_streams.iter_mut().find(|s| line == **s + 1) {
+                    stall += self.lat.memory_seq;
+                    *s = line; // stream advances
+                } else {
+                    stall += self.lat.memory;
+                    self.mem_streams[self.mem_stream_next] = line;
+                    self.mem_stream_next = (self.mem_stream_next + 1) % self.mem_streams.len();
+                }
+            }
+        }
+        self.stall_cycles += stall;
+        stall
+    }
+
+    /// A 16-byte SSE vector load/store: one access per element address but
+    /// charged as a single lookup at the leading address (the PIII splits
+    /// 128-bit ops into two 64-bit µops within one line; modelling the
+    /// leading address is accurate for aligned streams).
+    #[inline]
+    pub fn access_vec4(&mut self, addr: u64, write: bool) -> u64 {
+        self.access(addr, write)
+    }
+
+    /// Simulate a software prefetch of `addr`: the line is brought into
+    /// L1/L2 *without* charging stall cycles (the paper's `prefetchnta`
+    /// overlaps the fetch with compute).
+    pub fn prefetch(&mut self, addr: u64) {
+        let _ = self.tlb.access(addr);
+        if !self.l1.access(addr, false) {
+            let _ = self.l2.access(addr, false);
+        }
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> HierarchyStats {
+        HierarchyStats {
+            l1: self.l1.stats(),
+            l2: self.l2.stats(),
+            tlb: self.tlb.stats(),
+            stall_cycles: self.stall_cycles,
+            accesses: self.accesses,
+        }
+    }
+
+    /// Flush caches, TLB and counters (the paper flushes caches between
+    /// timed calls).
+    pub fn flush(&mut self) {
+        self.l1.flush();
+        self.l2.flush();
+        self.tlb.flush();
+        self.stall_cycles = 0;
+        self.accesses = 0;
+        self.mem_streams = [u64::MAX - 1; 8];
+        self.mem_stream_next = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Hierarchy {
+        Hierarchy::new(
+            CacheConfig { capacity: 256, ways: 2, line_bytes: 32 },
+            CacheConfig { capacity: 1024, ways: 4, line_bytes: 32 },
+            4,
+            4096,
+            Latencies { l2_hit: 10, memory: 50, memory_seq: 50, tlb_miss: 20 },
+        )
+    }
+
+    #[test]
+    fn first_touch_charges_memory_plus_tlb() {
+        let mut h = tiny();
+        let stall = h.access(0, false);
+        assert_eq!(stall, 50 + 20);
+    }
+
+    #[test]
+    fn l1_hit_is_free() {
+        let mut h = tiny();
+        h.access(0, false);
+        assert_eq!(h.access(4, false), 0);
+    }
+
+    #[test]
+    fn l2_hit_charges_l2_latency() {
+        let mut h = tiny();
+        // Fill L1 set 0 (2 ways) with three conflicting lines; the first
+        // line falls out of L1 but stays in the bigger L2.
+        h.access(0, false);
+        h.access(4 * 32, false);
+        h.access(8 * 32, false);
+        let stall = h.access(0, false); // L1 miss, L2 hit, TLB hit
+        assert_eq!(stall, 10);
+    }
+
+    #[test]
+    fn prefetch_fills_without_stall() {
+        let mut h = tiny();
+        h.prefetch(64);
+        let before = h.stats().stall_cycles;
+        let stall = h.access(64, false);
+        assert_eq!(stall, 0, "prefetched line must hit");
+        assert_eq!(h.stats().stall_cycles, before);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut h = tiny();
+        for i in 0..100u64 {
+            h.access(i * 8, false);
+        }
+        let s = h.stats();
+        assert_eq!(s.accesses, 100);
+        assert_eq!(s.l1.accesses, 100);
+        assert_eq!(s.l1.hits + s.l1.misses, 100);
+        assert!(s.stall_cycles > 0);
+        // Inclusion-ish: L2 sees exactly the L1 misses.
+        assert_eq!(s.l2.accesses, s.l1.misses);
+    }
+
+    #[test]
+    fn flush_resets_everything() {
+        let mut h = tiny();
+        h.access(0, true);
+        h.flush();
+        let s = h.stats();
+        assert_eq!(s.accesses, 0);
+        assert_eq!(s.stall_cycles, 0);
+        // And the next access is cold again.
+        assert_eq!(h.access(0, false), 70);
+    }
+}

@@ -1,0 +1,234 @@
+//! The cycle/timing model: compute issue rate + simulated stalls → MFlop/s.
+//!
+//! `cycles = flops / issue_rate + stall_cycles`, where `stall_cycles` come
+//! from the trace-driven hierarchy simulation and `issue_rate` is a
+//! per-algorithm calibrated constant (below). MFlop/s = flops · clock /
+//! cycles. The *shape* of every curve — where naive collapses, where
+//! Emmerald peaks, how ATLAS tracks — emerges from the simulated memory
+//! system; the issue rates only set the flat ceilings.
+
+use super::piii::MachineSpec;
+use super::trace::{self, Layout};
+use crate::sim::hierarchy::HierarchyStats;
+
+/// Which GEMM algorithm to simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Three-loop scalar multiply.
+    Naive,
+    /// ATLAS proxy (blocked scalar).
+    Atlas,
+    /// Emmerald (SSE, packed, prefetched).
+    Emmerald,
+}
+
+impl Algorithm {
+    /// Display name matching the paper's Fig. 2 legend.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Naive => "naive",
+            Algorithm::Atlas => "atlas",
+            Algorithm::Emmerald => "emmerald",
+        }
+    }
+
+    /// Sustained issue rate on the PIII, in flops/cycle, assuming no
+    /// memory stalls (calibration constants, *not* fitted to Fig. 2):
+    ///
+    /// * **Emmerald 2.2** — per 4-element step over 5 columns the kernel
+    ///   issues 6 × 128-bit loads (12 µops on port 2), 5 `mulps` (10 µops,
+    ///   port 0) and 5 `addps` (10 µops, port 1) for 40 flops: load-port
+    ///   bound at ~3.3 flops/cycle before loop overhead, C write-back and
+    ///   panel switching, giving ~2.2 sustained. (The paper measures
+    ///   1.97–1.98 × clock at the L1-resident sweet spot — this ceiling
+    ///   minus the residual stalls the simulator charges.)
+    /// * **ATLAS 1.5** — the P6 x87 has separate pipelined FADD and FMUL
+    ///   units (up to 2 flops/cycle); ATLAS's register-tiled, fxch-scheduled
+    ///   kernels sustain ~75% of that before memory stalls. Its measured
+    ///   0.83 × clock *includes* the memory effects we simulate separately
+    ///   (the simulated total at the paper's peak size lands at ~0.82 ×
+    ///   clock, matching the paper's 375 MFlop/s).
+    /// * **Naive 0.66** — a single dependent x87 accumulation chain
+    ///   (3-cycle add latency, 2 flops per iteration).
+    pub fn compute_model(&self) -> ComputeModel {
+        match self {
+            Algorithm::Naive => ComputeModel { flops_per_cycle: 0.66 },
+            Algorithm::Atlas => ComputeModel { flops_per_cycle: 1.5 },
+            Algorithm::Emmerald => ComputeModel { flops_per_cycle: 2.2 },
+        }
+    }
+}
+
+/// Issue-rate model for an algorithm.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeModel {
+    /// Sustained useful flops per core cycle with an ideal memory system.
+    pub flops_per_cycle: f64,
+}
+
+/// Result of one simulated GEMM.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Algorithm simulated.
+    pub algorithm: Algorithm,
+    /// Problem size (m = n = k).
+    pub size: usize,
+    /// Useful flops (2·m·n·k).
+    pub flops: f64,
+    /// Compute cycles (flops / issue rate).
+    pub compute_cycles: f64,
+    /// Simulated stall cycles.
+    pub stall_cycles: f64,
+    /// Simulated wall-clock seconds on the machine.
+    pub seconds: f64,
+    /// Simulated MFlop/s.
+    pub mflops: f64,
+    /// Raw hierarchy counters.
+    pub stats: HierarchyStats,
+}
+
+/// Block geometry used by the simulated optimised algorithms (the paper's
+/// values; mb sized so an mb×kb A block occupies half the 512 KB L2).
+pub mod geometry {
+    /// Emmerald L1 block depth (paper: 336).
+    pub const EMMERALD_KB: usize = 336;
+    /// Emmerald L2 row block.
+    pub const EMMERALD_MB: usize = 192;
+    /// Emmerald dot products per inner loop (paper: 5).
+    pub const EMMERALD_NR: usize = 5;
+    /// ATLAS-proxy k block.
+    pub const ATLAS_KB: usize = 256;
+    /// ATLAS-proxy row block.
+    pub const ATLAS_MB: usize = 128;
+}
+
+/// Simulate one square GEMM (`m = n = k = size`) with the paper's
+/// methodology: fixed `stride`, cold caches (the hierarchy starts flushed).
+pub fn simulate_gemm(
+    machine: &MachineSpec,
+    algorithm: Algorithm,
+    size: usize,
+    stride: usize,
+) -> SimResult {
+    assert!(stride >= size, "stride {stride} < size {size}");
+    let lay = Layout::with_stride(stride);
+    let mut h = machine.hierarchy();
+    match algorithm {
+        Algorithm::Naive => trace::trace_naive(&mut h, size, size, size, &lay),
+        Algorithm::Atlas => trace::trace_atlas(
+            &mut h,
+            size,
+            size,
+            size,
+            &lay,
+            geometry::ATLAS_KB,
+            geometry::ATLAS_MB,
+        ),
+        Algorithm::Emmerald => trace::trace_emmerald(
+            &mut h,
+            size,
+            size,
+            size,
+            &lay,
+            geometry::EMMERALD_KB,
+            geometry::EMMERALD_MB,
+            geometry::EMMERALD_NR,
+            true,
+        ),
+    }
+    let stats = h.stats();
+    let flops = 2.0 * (size as f64).powi(3);
+    let compute_cycles = flops / algorithm.compute_model().flops_per_cycle;
+    let stall_cycles = stats.stall_cycles as f64;
+    let cycles = compute_cycles + stall_cycles;
+    let seconds = cycles / (machine.clock_mhz * 1e6);
+    SimResult {
+        algorithm,
+        size,
+        flops,
+        compute_cycles,
+        stall_cycles,
+        seconds,
+        mflops: flops / seconds / 1e6,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::piii::{piii_450, piii_550};
+
+    #[test]
+    fn emmerald_peaks_near_paper_at_320() {
+        // Paper: 890 MFlop/s at m=n=k=stride=320 on the PIII-450
+        // (1.97 × clock). The simulated machine must land in that band.
+        let r = simulate_gemm(&piii_450(), Algorithm::Emmerald, 320, 320);
+        assert!(
+            (800.0..950.0).contains(&r.mflops),
+            "simulated peak {:.0} MFlop/s (paper: 890)",
+            r.mflops
+        );
+    }
+
+    #[test]
+    fn ordering_matches_fig2() {
+        // At a mid-size point with the paper's stride-700 methodology:
+        // emmerald > atlas > naive, decisively.
+        for &(algo_hi, algo_lo) in
+            &[(Algorithm::Emmerald, Algorithm::Atlas), (Algorithm::Atlas, Algorithm::Naive)]
+        {
+            let hi = simulate_gemm(&piii_450(), algo_hi, 240, 700);
+            let lo = simulate_gemm(&piii_450(), algo_lo, 240, 700);
+            assert!(
+                hi.mflops > lo.mflops * 1.3,
+                "{} ({:.0}) should beat {} ({:.0})",
+                hi.algorithm.name(),
+                hi.mflops,
+                lo.algorithm.name(),
+                lo.mflops
+            );
+        }
+    }
+
+    #[test]
+    fn emmerald_rate_survives_l2_spill() {
+        // Paper: "peak rates can be maintained as long as A, B and C fit
+        // into main memory" — the 550 MHz machine ran 3696³ at 940 MFlop/s.
+        // Check the rate at an L2-spilling size is within ~15% of the
+        // L2-resident rate (full 3696 is too slow to simulate in a unit
+        // test; the large_matrix bench covers a bigger point).
+        let resident = simulate_gemm(&piii_450(), Algorithm::Emmerald, 256, 448);
+        let spilled = simulate_gemm(&piii_450(), Algorithm::Emmerald, 448, 448);
+        assert!(
+            spilled.mflops > resident.mflops * 0.85,
+            "spilled {:.0} vs resident {:.0}",
+            spilled.mflops,
+            resident.mflops
+        );
+    }
+
+    #[test]
+    fn naive_is_order_of_magnitude_below_emmerald() {
+        let e = simulate_gemm(&piii_450(), Algorithm::Emmerald, 320, 700);
+        let n = simulate_gemm(&piii_450(), Algorithm::Naive, 320, 700);
+        assert!(e.mflops > 4.0 * n.mflops, "emmerald {:.0} naive {:.0}", e.mflops, n.mflops);
+    }
+
+    #[test]
+    fn faster_clock_gives_higher_peak() {
+        let a = simulate_gemm(&piii_450(), Algorithm::Emmerald, 320, 320);
+        let b = simulate_gemm(&piii_550(), Algorithm::Emmerald, 320, 320);
+        assert!(b.mflops > a.mflops);
+    }
+
+    #[test]
+    fn result_accounting_consistent() {
+        let r = simulate_gemm(&piii_450(), Algorithm::Atlas, 96, 128);
+        assert_eq!(r.flops, 2.0 * 96f64.powi(3));
+        let cycles = r.compute_cycles + r.stall_cycles;
+        let expect_secs = cycles / (450.0 * 1e6);
+        assert!((r.seconds - expect_secs).abs() < 1e-12);
+        assert!((r.mflops - r.flops / r.seconds / 1e6).abs() < 1e-6);
+    }
+}

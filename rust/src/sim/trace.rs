@@ -1,0 +1,304 @@
+//! Address-exact memory-trace generators for the three GEMM algorithms.
+//!
+//! Each generator replays the *exact* access schedule of its Rust
+//! counterpart (same loop order, same packing, same vector widths) against
+//! a simulated [`Hierarchy`], so the hit/miss/TLB behaviour is that of the
+//! real algorithm on the modelled machine. Operands are placed at disjoint
+//! bases with the benchmark's row stride, reproducing the paper's
+//! fixed-stride-700 methodology.
+
+use super::hierarchy::Hierarchy;
+
+/// Byte layout of the operands in simulated memory.
+#[derive(Clone, Copy, Debug)]
+pub struct Layout {
+    /// Base address of A.
+    pub a_base: u64,
+    /// Base address of B.
+    pub b_base: u64,
+    /// Base address of C.
+    pub c_base: u64,
+    /// Base address of the packed-B scratch.
+    pub pack_b_base: u64,
+    /// Base address of the packed-A scratch.
+    pub pack_a_base: u64,
+    /// Row stride of A, B and C in *elements* (the paper fixes this at 700).
+    pub stride: usize,
+}
+
+impl Layout {
+    /// Default disjoint placement with the given element stride.
+    pub fn with_stride(stride: usize) -> Self {
+        Self {
+            a_base: 0x1000_0000,
+            b_base: 0x2000_0000,
+            c_base: 0x3000_0000,
+            pack_b_base: 0x0800_0000,
+            pack_a_base: 0x0C00_0000,
+            stride,
+        }
+    }
+
+    #[inline(always)]
+    fn a(&self, r: usize, c: usize) -> u64 {
+        self.a_base + ((r * self.stride + c) as u64) * 4
+    }
+
+    #[inline(always)]
+    fn b(&self, r: usize, c: usize) -> u64 {
+        self.b_base + ((r * self.stride + c) as u64) * 4
+    }
+
+    #[inline(always)]
+    fn c(&self, r: usize, c: usize) -> u64 {
+        self.c_base + ((r * self.stride + c) as u64) * 4
+    }
+
+    /// Packed B: column-contiguous panels (column j's block at j*kb + p).
+    #[inline(always)]
+    fn pb(&self, j: usize, p: usize, kb: usize) -> u64 {
+        self.pack_b_base + ((j * kb + p) as u64) * 4
+    }
+
+    /// Packed A: row-contiguous block rows.
+    #[inline(always)]
+    fn pa(&self, i: usize, p: usize, kb: usize) -> u64 {
+        self.pack_a_base + ((i * kb + p) as u64) * 4
+    }
+}
+
+/// Naive three-loop ijk: for each (i, j), a scalar dot product reading a
+/// row of A and a *strided column* of B, then one C write.
+pub fn trace_naive(h: &mut Hierarchy, m: usize, n: usize, k: usize, lay: &Layout) {
+    for i in 0..m {
+        for j in 0..n {
+            for p in 0..k {
+                h.access(lay.a(i, p), false);
+                h.access(lay.b(p, j), false);
+            }
+            h.access(lay.c(i, j), true);
+        }
+    }
+}
+
+/// ATLAS proxy: packed operands, scalar 2×2 register tile, L1/L2 blocking.
+/// Mirrors `gemm::blocked` (kb-deep k-blocks, mb-row A blocks, width-2
+/// panels; every load is a scalar element).
+pub fn trace_atlas(
+    h: &mut Hierarchy,
+    m: usize,
+    n: usize,
+    k: usize,
+    lay: &Layout,
+    kb: usize,
+    mb: usize,
+) {
+    let mut kk = 0;
+    while kk < k {
+        let kb_eff = kb.min(k - kk);
+        // Pack the whole B k-block (read strided B, write contiguous).
+        for j in 0..n {
+            for p in 0..kb_eff {
+                h.access(lay.b(kk + p, j), false);
+                h.access(lay.pb(j, p, kb_eff), true);
+            }
+        }
+        let mut ii = 0;
+        while ii < m {
+            let mb_eff = mb.min(m - ii);
+            // Pack the A block.
+            for i in 0..mb_eff {
+                for p in 0..kb_eff {
+                    h.access(lay.a(ii + i, kk + p), false);
+                    h.access(lay.pa(i, p, kb_eff), true);
+                }
+            }
+            let mut j0 = 0;
+            while j0 < n {
+                let w = 2.min(n - j0);
+                let mut i = 0;
+                while i < mb_eff {
+                    let hgt = 2.min(mb_eff - i);
+                    // 2×2 scalar tile: per k step, hgt A loads + w B loads.
+                    for p in 0..kb_eff {
+                        for di in 0..hgt {
+                            h.access(lay.pa(i + di, p, kb_eff), false);
+                        }
+                        for dj in 0..w {
+                            h.access(lay.pb(j0 + dj, p, kb_eff), false);
+                        }
+                    }
+                    // C tile read-modify-write.
+                    for di in 0..hgt {
+                        for dj in 0..w {
+                            h.access(lay.c(ii + i + di, j0 + dj), false);
+                            h.access(lay.c(ii + i + di, j0 + dj), true);
+                        }
+                    }
+                    i += hgt;
+                }
+                j0 += w;
+            }
+            ii += mb_eff;
+        }
+        kk += kb_eff;
+    }
+}
+
+/// Emmerald: packed-B panels, SSE vector loads (one lookup per 4 floats),
+/// `nr` simultaneous dot products re-using each A vector, software
+/// prefetch of the streaming A row. Mirrors `gemm::simd`.
+#[allow(clippy::too_many_arguments)]
+pub fn trace_emmerald(
+    h: &mut Hierarchy,
+    m: usize,
+    n: usize,
+    k: usize,
+    lay: &Layout,
+    kb: usize,
+    mb: usize,
+    nr: usize,
+    prefetch: bool,
+) {
+    let pf_dist = 64; // elements ahead, as in the micro-kernel
+    let mut kk = 0;
+    while kk < k {
+        let kb_eff = kb.min(k - kk);
+        // Re-buffering: pack the B k-block into column-contiguous panels.
+        for j in 0..n {
+            for p in 0..kb_eff {
+                h.access(lay.b(kk + p, j), false);
+                h.access(lay.pb(j, p, kb_eff), true);
+            }
+        }
+        let mut ii = 0;
+        while ii < m {
+            let mb_eff = mb.min(m - ii);
+            let mut j0 = 0;
+            while j0 < n {
+                let w = nr.min(n - j0);
+                for i in ii..ii + mb_eff {
+                    if prefetch {
+                        // The kernel prefetches the head of the next row
+                        // while draining the current one; at the trace
+                        // level that means a row's first `pf_dist`
+                        // elements are already in flight when the
+                        // dot-product loop reaches them.
+                        let mut q = 0;
+                        while q < pf_dist.min(kb_eff) {
+                            h.prefetch(lay.a(i, kk + q));
+                            q += 8;
+                        }
+                    }
+                    // The dot-product loop: one A vector re-used w times
+                    // against w packed columns (fig. 1a).
+                    let mut p = 0;
+                    while p < kb_eff {
+                        if prefetch && p % 8 == 0 && p + pf_dist < kb_eff {
+                            h.prefetch(lay.a(i, kk + p + pf_dist));
+                        }
+                        h.access_vec4(lay.a(i, kk + p), false);
+                        for dj in 0..w {
+                            h.access_vec4(lay.pb(j0 + dj, p, kb_eff), false);
+                        }
+                        p += 4;
+                    }
+                    // Write back w dot products (C accumulate).
+                    for dj in 0..w {
+                        h.access(lay.c(i, j0 + dj), false);
+                        h.access(lay.c(i, j0 + dj), true);
+                    }
+                }
+                j0 += w;
+            }
+            ii += mb_eff;
+        }
+        kk += kb_eff;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::piii::piii_450;
+
+    #[test]
+    fn naive_access_count() {
+        let mut h = piii_450().hierarchy();
+        let lay = Layout::with_stride(64);
+        trace_naive(&mut h, 8, 8, 8, &lay);
+        // 2 loads per MAC + 1 store per output.
+        assert_eq!(h.stats().accesses, 2 * 8 * 8 * 8 + 8 * 8);
+    }
+
+    #[test]
+    fn emmerald_issues_fewer_accesses_than_naive() {
+        let size = 64;
+        let lay = Layout::with_stride(size);
+        let mut h1 = piii_450().hierarchy();
+        trace_naive(&mut h1, size, size, size, &lay);
+        let mut h2 = piii_450().hierarchy();
+        trace_emmerald(&mut h2, size, size, size, &lay, 336, 192, 5, true);
+        // Vector loads + A re-use: ≥4× fewer lookups.
+        assert!(
+            h2.stats().accesses * 4 < h1.stats().accesses,
+            "emmerald {} vs naive {}",
+            h2.stats().accesses,
+            h1.stats().accesses
+        );
+    }
+
+    #[test]
+    fn emmerald_l1_hit_rate_is_high_at_paper_peak_size() {
+        // At m=n=k=stride=320 everything is L2-resident and the packed
+        // panel is L1-resident: the paper hits its 890 MFlop/s peak here.
+        let lay = Layout::with_stride(320);
+        let mut h = piii_450().hierarchy();
+        trace_emmerald(&mut h, 320, 320, 320, &lay, 336, 192, 5, true);
+        let s = h.stats();
+        assert!(s.l1.hit_rate() > 0.88, "L1 hit rate {:.3}", s.l1.hit_rate());
+        // The decisive invariant: residual stall cycles are a small
+        // fraction of the compute cycles (≈2.2 flops/cycle ⇒ ~3e7).
+        let flops = 2.0 * 320f64.powi(3);
+        let stall_per_flop = s.stall_cycles as f64 / flops;
+        assert!(stall_per_flop < 0.1, "stalls/flop {stall_per_flop:.3}");
+    }
+
+    #[test]
+    fn naive_thrashes_at_large_stride() {
+        // Column walks at stride 700 blow L1 and the TLB.
+        let lay = Layout::with_stride(700);
+        let mut h = piii_450().hierarchy();
+        trace_naive(&mut h, 128, 128, 128, &lay);
+        let s = h.stats();
+        assert!(s.tlb.miss_rate() > 0.01, "tlb miss rate {:.4}", s.tlb.miss_rate());
+    }
+
+    #[test]
+    fn packing_reduces_tlb_misses() {
+        let lay = Layout::with_stride(700);
+        let size = 160;
+        let mut h_nopack = piii_450().hierarchy();
+        trace_naive(&mut h_nopack, size, size, size, &lay);
+        let mut h_pack = piii_450().hierarchy();
+        trace_emmerald(&mut h_pack, size, size, size, &lay, 336, 192, 5, true);
+        assert!(
+            h_pack.stats().tlb.miss_rate() < h_nopack.stats().tlb.miss_rate(),
+            "packed {:.4} vs naive {:.4}",
+            h_pack.stats().tlb.miss_rate(),
+            h_nopack.stats().tlb.miss_rate()
+        );
+    }
+
+    #[test]
+    fn atlas_trace_runs_and_packs() {
+        let lay = Layout::with_stride(100);
+        let mut h = piii_450().hierarchy();
+        trace_atlas(&mut h, 33, 35, 37, &lay, 32, 16);
+        let s = h.stats();
+        // The 2×2 register tile needs one load per MAC (vs naive's two),
+        // plus packing traffic and C read-modify-writes.
+        assert!(s.accesses as usize > 33 * 35 * 37);
+        assert!((s.accesses as usize) < 2 * 33 * 35 * 37);
+    }
+}

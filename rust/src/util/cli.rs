@@ -1,0 +1,331 @@
+//! Declarative command-line parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, with generated `--help` text. Used by the `emmerald`
+//! binary and every example/bench that takes parameters.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Error produced while parsing the command line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Kind of option.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum OptKind {
+    /// Boolean flag (`--verbose`).
+    Flag,
+    /// Option taking a value (`--size 320` / `--size=320`).
+    Value,
+}
+
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    kind: OptKind,
+    help: &'static str,
+    default: Option<String>,
+}
+
+/// A declarative argument-parser.
+///
+/// ```
+/// use emmerald::util::cli::Cli;
+/// let cli = Cli::new("demo", "demo tool")
+///     .flag("verbose", "chatty output")
+///     .opt("size", "320", "matrix size")
+///     .positional("input", "input path");
+/// let m = cli.parse_from(["demo", "--verbose", "--size=64", "data.bin"]).unwrap();
+/// assert!(m.flag("verbose"));
+/// assert_eq!(m.get_usize("size").unwrap(), 64);
+/// assert_eq!(m.positional(0).unwrap(), "data.bin");
+/// ```
+#[derive(Clone, Debug)]
+pub struct Cli {
+    name: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parse result: matched options and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Matches {
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    /// New parser with a program name and one-line description.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// Add a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, kind: OptKind::Flag, help, default: None });
+        self
+    }
+
+    /// Add a value option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            kind: OptKind::Value,
+            help,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Add a required value option (no default).
+    pub fn opt_required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, kind: OptKind::Value, help, default: None });
+        self
+    }
+
+    /// Declare a positional argument (for help text; parsing is permissive).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Generated help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push('\n');
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let mut line = match o.kind {
+                OptKind::Flag => format!("  --{}", o.name),
+                OptKind::Value => format!("  --{} <v>", o.name),
+            };
+            if let Some(d) = &o.default {
+                line.push_str(&format!(" [default: {d}]"));
+            }
+            s.push_str(&format!("{line}\n      {}\n", o.help));
+        }
+        s.push_str("  --help\n      print this help\n");
+        s
+    }
+
+    fn spec(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Parse from an iterator whose first element is the program name.
+    pub fn parse_from<I, S>(&self, args: I) -> Result<Matches, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut m = Matches::default();
+        for o in &self.opts {
+            match o.kind {
+                OptKind::Flag => {
+                    m.flags.insert(o.name, false);
+                }
+                OptKind::Value => {
+                    if let Some(d) = &o.default {
+                        m.values.insert(o.name, d.clone());
+                    }
+                }
+            }
+        }
+        let args: Vec<String> = args.into_iter().map(Into::into).collect();
+        let mut i = 1; // skip program name
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.help()));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .spec(&key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}")))?;
+                match spec.kind {
+                    OptKind::Flag => {
+                        if inline.is_some() {
+                            return Err(CliError(format!("flag --{key} takes no value")));
+                        }
+                        m.flags.insert(spec.name, true);
+                    }
+                    OptKind::Value => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                args.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                            }
+                        };
+                        m.values.insert(spec.name, v);
+                    }
+                }
+            } else {
+                m.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // Required options must be present.
+        for o in &self.opts {
+            if o.kind == OptKind::Value && o.default.is_none() && !m.values.contains_key(o.name) {
+                return Err(CliError(format!("missing required option --{}", o.name)));
+            }
+        }
+        Ok(m)
+    }
+
+    /// Parse `std::env::args()`, printing help/errors and exiting on failure.
+    pub fn parse(&self) -> Matches {
+        match self.parse_from(std::env::args()) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Matches {
+    /// Flag state (false when absent).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Raw string value of an option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Parse an option as `usize`.
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.parse_as(name)
+    }
+
+    /// Parse an option as `u64`.
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.parse_as(name)
+    }
+
+    /// Parse an option as `f64`.
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.parse_as(name)
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("option --{name} not provided")))?;
+        raw.parse::<T>()
+            .map_err(|e| CliError(format!("--{name}={raw}: {e}")))
+    }
+
+    /// Positional argument by index.
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    /// All positionals.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test tool")
+            .flag("verbose", "talk")
+            .opt("size", "320", "size")
+            .opt_required("out", "output")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cli().parse_from(["t", "--out", "x"]).unwrap();
+        assert_eq!(m.get_usize("size").unwrap(), 320);
+        assert!(!m.flag("verbose"));
+        assert_eq!(m.get("out"), Some("x"));
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let m = cli().parse_from(["t", "--size=64", "--out", "y", "--verbose"]).unwrap();
+        assert_eq!(m.get_usize("size").unwrap(), 64);
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = cli().parse_from(["t"]).unwrap_err();
+        assert!(e.0.contains("--out"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = cli().parse_from(["t", "--nope", "--out", "x"]).unwrap_err();
+        assert!(e.0.contains("unknown option"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let m = cli().parse_from(["t", "--out", "x", "a", "b"]).unwrap();
+        assert_eq!(m.positional(0), Some("a"));
+        assert_eq!(m.positional(1), Some("b"));
+        assert_eq!(m.positionals().len(), 2);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let m = cli().parse_from(["t", "--size", "NaNx", "--out", "x"]).unwrap();
+        assert!(m.get_usize("size").is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cli().help();
+        assert!(h.contains("--size"));
+        assert!(h.contains("--verbose"));
+        assert!(h.contains("[default: 320]"));
+    }
+
+    #[test]
+    fn flag_with_value_is_error() {
+        let e = cli().parse_from(["t", "--verbose=1", "--out", "x"]).unwrap_err();
+        assert!(e.0.contains("takes no value"));
+    }
+}

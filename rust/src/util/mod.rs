@@ -1,0 +1,26 @@
+//! Library substrates.
+//!
+//! The offline crate registry for this build carries only the `xla` crate's
+//! dependency closure, so the facilities normally imported from `clap`,
+//! `rand`, `proptest`, `serde_json` etc. are implemented here as small,
+//! fully-tested modules:
+//!
+//! * [`cli`] — declarative command-line parsing with generated help.
+//! * [`prng`] — deterministic pseudo-random number generation
+//!   (SplitMix64 / PCG32) used by tests, benches and data generators.
+//! * [`stats`] — robust summary statistics for timing samples.
+//! * [`timer`] — wall-clock timing and cache-flushing helpers (the paper
+//!   flushes caches between timed `sgemm` calls).
+//! * [`table`] — aligned ASCII table / CSV rendering for bench reports.
+//! * [`json`] — a minimal JSON writer for machine-readable bench output.
+//! * [`threadpool`] — a fixed-size worker pool used by the coordinator.
+//! * [`testkit`] — a miniature property-based testing harness.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod testkit;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,156 @@
+//! A fixed-size worker thread pool (tokio is unavailable offline; the
+//! coordinator's concurrency needs are served by plain threads + channels,
+//! which is also closer to the 1999-era MPI-style cluster the paper used).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads executing boxed closures.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    handles: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(size);
+        for idx in 0..size {
+            let rx = Arc::clone(&rx);
+            let in_flight = Arc::clone(&in_flight);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("emmerald-worker-{idx}"))
+                    .spawn(move || worker_loop(rx, in_flight))
+                    .expect("spawn worker"),
+            );
+        }
+        Self { tx, handles, in_flight, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job for execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        while self.in_flight.load(Ordering::SeqCst) != 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Run `f(i)` for `i in 0..n`, blocking until all complete, and return
+    /// results in order. `f` is cloned per invocation.
+    pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + Clone + 'static,
+    {
+        let (tx, rx): (Sender<(usize, T)>, Receiver<(usize, T)>) = channel();
+        for i in 0..n {
+            let tx = tx.clone();
+            let f = f.clone();
+            self.execute(move || {
+                let out = f(i);
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx.iter() {
+            slots[i] = Some(v);
+        }
+        slots.into_iter().map(|s| s.expect("all jobs completed")).collect()
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, in_flight: Arc<AtomicUsize>) {
+    loop {
+        let msg = {
+            let guard = rx.lock().expect("pool receiver lock");
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => {
+                job();
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+            }
+            Ok(Msg::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map_indexed(50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_size_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.map_indexed(3, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not deadlock
+    }
+}

@@ -1,0 +1,138 @@
+//! Wall-clock timing and cache-flushing.
+//!
+//! The paper's methodology (§4): *wall clock time on an unloaded machine is
+//! used rather than CPU time* and *caches are flushed between calls to
+//! sgemm()*. [`Stopwatch`] provides the former, [`CacheFlusher`] the latter.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Simple wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn seconds(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.seconds();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Time one closure invocation in seconds.
+pub fn time_once<F: FnOnce()>(f: F) -> f64 {
+    let t = Stopwatch::start();
+    f();
+    t.seconds()
+}
+
+/// Evicts the CPU caches by streaming over a buffer larger than the
+/// last-level cache, reproducing the paper's "caches are flushed between
+/// calls" methodology without privileged instructions (`wbinvd` needs
+/// ring 0; a strided read+write walk over >LLC bytes evicts all ways).
+pub struct CacheFlusher {
+    buf: Vec<u8>,
+}
+
+/// Default flush buffer: 64 MiB, comfortably larger than any LLC we run on.
+pub const DEFAULT_FLUSH_BYTES: usize = 64 << 20;
+
+impl CacheFlusher {
+    /// Create a flusher with the default (64 MiB) buffer.
+    pub fn new() -> Self {
+        Self::with_bytes(DEFAULT_FLUSH_BYTES)
+    }
+
+    /// Create a flusher with an explicit buffer size.
+    pub fn with_bytes(bytes: usize) -> Self {
+        Self { buf: vec![1u8; bytes.max(64)] }
+    }
+
+    /// Walk the buffer once (read-modify-write each cache line), evicting
+    /// previously cached data. Returns a checksum so the walk cannot be
+    /// optimised away.
+    pub fn flush(&mut self) -> u64 {
+        let mut acc = 0u64;
+        // 64-byte stride touches every cache line exactly once.
+        let mut i = 0;
+        while i < self.buf.len() {
+            // Read-modify-write forces the line into M state, displacing
+            // whatever previously occupied the set.
+            self.buf[i] = self.buf[i].wrapping_add(1);
+            acc = acc.wrapping_add(self.buf[i] as u64);
+            i += 64;
+        }
+        black_box(acc)
+    }
+}
+
+impl Default for CacheFlusher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let t = Stopwatch::start();
+        let a = t.seconds();
+        let b = t.seconds();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn time_once_positive() {
+        let s = time_once(|| {
+            let mut x = 0u64;
+            for i in 0..10_000u64 {
+                x = x.wrapping_add(i);
+            }
+            black_box(x);
+        });
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn flusher_touches_every_line() {
+        let mut f = CacheFlusher::with_bytes(4096);
+        let c1 = f.flush();
+        let c2 = f.flush();
+        // Each flush increments every touched byte, so checksums differ.
+        assert_ne!(c1, c2);
+        assert_eq!(f.buf.len(), 4096);
+        // Every 64th byte was bumped twice, others untouched.
+        assert_eq!(f.buf[0], 3);
+        assert_eq!(f.buf[1], 1);
+        assert_eq!(f.buf[64], 3);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Stopwatch::start();
+        let _ = t.lap();
+        let after = t.seconds();
+        assert!(after < 1.0, "lap should restart the clock");
+    }
+}

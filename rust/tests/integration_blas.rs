@@ -1,0 +1,157 @@
+//! Integration tests for the public BLAS API across all backends.
+
+use emmerald::blas::{
+    available_backends, sgemm, sgemm_matrix, Backend, BlasError, Matrix, Transpose,
+};
+use emmerald::util::testkit::assert_allclose;
+
+fn square(backend: Backend, n: usize, a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(n, n);
+    let ldc = c.ld();
+    sgemm(
+        backend,
+        Transpose::No,
+        Transpose::No,
+        n,
+        n,
+        n,
+        1.0,
+        a.data(),
+        a.ld(),
+        b.data(),
+        b.ld(),
+        0.0,
+        c.data_mut(),
+        ldc,
+    )
+    .unwrap();
+    c
+}
+
+#[test]
+fn all_backends_agree_at_multiple_sizes() {
+    for &n in &[1usize, 17, 64, 130, 320] {
+        let a = Matrix::random(n, n, n as u64, -1.0, 1.0);
+        let b = Matrix::random(n, n, (n + 1) as u64, -1.0, 1.0);
+        let c_ref = square(Backend::Naive, n, &a, &b);
+        for backend in available_backends() {
+            let c = square(backend, n, &a, &b);
+            assert_allclose(
+                c.data(),
+                c_ref.data(),
+                2e-4,
+                1e-4,
+                &format!("{} at n={n}", backend.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_methodology_fixed_stride_700() {
+    // The paper's benchmark layout: logical size < stride = 700.
+    let (n, stride) = (96usize, 700usize);
+    let a = Matrix::random_strided(n, n, stride, 1);
+    let b = Matrix::random_strided(n, n, stride, 2);
+    let mut c_ref = Matrix::zeros_strided(n, n, stride);
+    let ld = stride;
+    sgemm(Backend::Naive, Transpose::No, Transpose::No, n, n, n, 1.0, a.data(), ld, b.data(), ld, 0.0, c_ref.data_mut(), ld)
+        .unwrap();
+    for backend in available_backends() {
+        let mut c = Matrix::zeros_strided(n, n, stride);
+        sgemm(backend, Transpose::No, Transpose::No, n, n, n, 1.0, a.data(), ld, b.data(), ld, 0.0, c.data_mut(), ld)
+            .unwrap();
+        assert!(c.max_abs_diff(&c_ref) < 1e-3, "{} strided", backend.name());
+        // Row padding must be untouched (zeros_strided starts at 0).
+        assert_eq!(c.data()[n], 0.0, "{} wrote into padding", backend.name());
+    }
+}
+
+#[test]
+fn rectangular_and_transposed_combinations() {
+    let (m, n, k) = (33, 47, 129);
+    for backend in available_backends() {
+        for (ta, tb) in [
+            (Transpose::No, Transpose::No),
+            (Transpose::Yes, Transpose::No),
+            (Transpose::No, Transpose::Yes),
+            (Transpose::Yes, Transpose::Yes),
+        ] {
+            let a = if ta == Transpose::No {
+                Matrix::random(m, k, 7, -1.0, 1.0)
+            } else {
+                Matrix::random(k, m, 7, -1.0, 1.0)
+            };
+            let b = if tb == Transpose::No {
+                Matrix::random(k, n, 8, -1.0, 1.0)
+            } else {
+                Matrix::random(n, k, 8, -1.0, 1.0)
+            };
+            let mut c = Matrix::from_fn(m, n, |r, c| (r + c) as f32 * 0.1);
+            let mut c_ref = c.clone();
+            sgemm_matrix(backend, ta, tb, 0.7, &a, &b, 1.3, &mut c).unwrap();
+            sgemm_matrix(Backend::Naive, ta, tb, 0.7, &a, &b, 1.3, &mut c_ref).unwrap();
+            assert!(
+                c.max_abs_diff(&c_ref) < 1e-3,
+                "{} ta={ta:?} tb={tb:?}",
+                backend.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn error_paths_are_reported() {
+    let a = vec![0.0f32; 10];
+    let b = vec![0.0f32; 10];
+    let mut c = vec![0.0f32; 10];
+    // Bad ld.
+    let err =
+        sgemm(Backend::Simd, Transpose::No, Transpose::No, 2, 2, 5, 1.0, &a, 3, &b, 2, 0.0, &mut c, 2);
+    assert!(matches!(err, Err(BlasError::BadLeadingDim { .. })));
+    // Short C buffer.
+    let err =
+        sgemm(Backend::Simd, Transpose::No, Transpose::No, 4, 4, 2, 1.0, &a, 2, &b, 4, 0.0, &mut c, 4);
+    assert!(matches!(err, Err(BlasError::BufferTooSmall { operand: "C", .. })));
+}
+
+#[test]
+fn beta_zero_overwrites_nan_poisoned_c() {
+    // BLAS semantics: beta = 0 must ignore (not propagate) old C contents.
+    let n = 8;
+    let a = Matrix::random(n, n, 3, -1.0, 1.0);
+    let b = Matrix::random(n, n, 4, -1.0, 1.0);
+    for backend in available_backends() {
+        let mut c = Matrix::from_fn(n, n, |_, _| f32::NAN);
+        let ldc = c.ld();
+        sgemm(backend, Transpose::No, Transpose::No, n, n, n, 1.0, a.data(), n, b.data(), n, 0.0, c.data_mut(), ldc)
+            .unwrap();
+        assert!(
+            c.data().iter().all(|v| v.is_finite()),
+            "{} propagated NaN through beta=0",
+            backend.name()
+        );
+    }
+}
+
+#[test]
+fn accumulation_chains_compose() {
+    // C = A·B computed in two k-halves with beta=1 must equal one shot.
+    let (m, n, k) = (24, 31, 64);
+    let a = Matrix::random(m, k, 5, -1.0, 1.0);
+    let b = Matrix::random(k, n, 6, -1.0, 1.0);
+    for backend in available_backends() {
+        let mut once = Matrix::zeros(m, n);
+        sgemm_matrix(backend, Transpose::No, Transpose::No, 1.0, &a, &b, 0.0, &mut once).unwrap();
+
+        // Two halves via views over the same storage.
+        let a1 = Matrix::from_fn(m, k / 2, |r, c| a.get(r, c));
+        let a2 = Matrix::from_fn(m, k - k / 2, |r, c| a.get(r, c + k / 2));
+        let b1 = Matrix::from_fn(k / 2, n, |r, c| b.get(r, c));
+        let b2 = Matrix::from_fn(k - k / 2, n, |r, c| b.get(r + k / 2, c));
+        let mut twice = Matrix::zeros(m, n);
+        sgemm_matrix(backend, Transpose::No, Transpose::No, 1.0, &a1, &b1, 0.0, &mut twice).unwrap();
+        sgemm_matrix(backend, Transpose::No, Transpose::No, 1.0, &a2, &b2, 1.0, &mut twice).unwrap();
+        assert!(once.max_abs_diff(&twice) < 1e-3, "{} split-k", backend.name());
+    }
+}

@@ -1,0 +1,149 @@
+//! Property-based tests for the coordinator's data-parallel invariants.
+
+use emmerald::blas::{Backend, Matrix};
+use emmerald::coordinator::{Coordinator, EngineFactory, GradEngine, NativeEngine, TrainConfig};
+use emmerald::nn::sgd::average_grads;
+use emmerald::nn::{Dataset, Mlp, MlpGrads};
+use emmerald::util::testkit::check;
+use std::sync::Arc;
+
+#[test]
+fn prop_sharded_gradient_equals_serial_gradient() {
+    // For any random model/data/sharding, the weighted average of
+    // per-shard gradients equals the full-batch gradient.
+    check("sharded ≍ serial", 20, |g| {
+        let features = g.rng.range_usize(3, 10);
+        let classes = g.rng.range_usize(2, 5);
+        let hidden = g.rng.range_usize(4, 12);
+        let n = g.rng.range_usize(8, 40);
+        let mlp = Mlp::init(&[features, hidden, classes], g.rng.next_u64(), Backend::Naive);
+        let data = Dataset::gaussian_clusters(n, features, classes, 0.4, g.rng.next_u64());
+
+        let (x_full, y_full) = data.slice(0, n);
+        let (_, g_full) = mlp.loss_and_grad(&x_full, &y_full);
+
+        // Random contiguous partition of the batch.
+        let mut parts: Vec<(usize, MlpGrads)> = Vec::new();
+        let mut start = 0;
+        while start < n {
+            let len = g.rng.range_usize(1, n - start);
+            let (x, y) = data.slice(start, len);
+            let (_, grad) = mlp.loss_and_grad(&x, &y);
+            parts.push((len, grad));
+            start += len;
+        }
+        let avg = average_grads(&parts, &mlp);
+        for (a, b) in avg.d_weights.iter().zip(&g_full.d_weights) {
+            assert!(a.max_abs_diff(b) < 1e-4, "sharded != serial ({} parts)", parts.len());
+        }
+    });
+}
+
+#[test]
+fn prop_training_is_deterministic_under_fixed_seed() {
+    check("deterministic training", 6, |g| {
+        let seed = g.rng.next_u64();
+        let run = || {
+            let mlp = Mlp::init(&[6, 10, 3], seed, Backend::Naive);
+            let data = Dataset::gaussian_clusters(64, 6, 3, 0.3, seed ^ 1);
+            let cfg =
+                TrainConfig { workers: 2, shard_batch: 8, steps: 5, lr: 0.3, log_every: 0 };
+            let mut coord = Coordinator::new(cfg, mlp, data).unwrap();
+            let mut engine = NativeEngine::new(Backend::Naive);
+            coord.train_sequential(&mut engine).unwrap()
+        };
+        let a = run();
+        let b = run();
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.loss, sb.loss, "divergence at step {}", sa.step);
+        }
+    });
+}
+
+#[test]
+fn prop_every_step_processes_every_worker_shard_once() {
+    // A counting engine observes exactly workers × steps shard calls, each
+    // with the configured batch size.
+    struct Counting {
+        inner: NativeEngine,
+        calls: Arc<std::sync::atomic::AtomicUsize>,
+        rows: Arc<std::sync::atomic::AtomicUsize>,
+    }
+    impl GradEngine for Counting {
+        fn loss_and_grad(
+            &mut self,
+            mlp: &Mlp,
+            x: &Matrix,
+            y: &Matrix,
+        ) -> anyhow::Result<(f32, MlpGrads)> {
+            self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            self.rows.fetch_add(x.rows(), std::sync::atomic::Ordering::SeqCst);
+            self.inner.loss_and_grad(mlp, x, y)
+        }
+        fn name(&self) -> String {
+            "counting".into()
+        }
+    }
+
+    check("routing exactly once", 8, |g| {
+        let workers = g.rng.range_usize(1, 4);
+        let steps = g.rng.range_usize(1, 6);
+        let batch = 8;
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let rows = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let mlp = Mlp::init(&[4, 6, 2], g.rng.next_u64(), Backend::Naive);
+        let data = Dataset::gaussian_clusters(128, 4, 2, 0.4, g.rng.next_u64());
+        let cfg = TrainConfig { workers, shard_batch: batch, steps, lr: 0.2, log_every: 0 };
+        let mut coord = Coordinator::new(cfg, mlp, data).unwrap();
+        let (c2, r2) = (Arc::clone(&calls), Arc::clone(&rows));
+        let factory: Arc<EngineFactory> = Arc::new(move |_| {
+            Ok(Box::new(Counting {
+                inner: NativeEngine::new(Backend::Naive),
+                calls: Arc::clone(&c2),
+                rows: Arc::clone(&r2),
+            }) as _)
+        });
+        coord.train_threaded(factory).unwrap();
+        assert_eq!(calls.load(std::sync::atomic::Ordering::SeqCst), workers * steps);
+        assert_eq!(rows.load(std::sync::atomic::Ordering::SeqCst), workers * steps * batch);
+    });
+}
+
+#[test]
+fn prop_single_failure_reroutes_and_completes() {
+    check("failure rerouting", 5, |g| {
+        struct Flaky {
+            inner: NativeEngine,
+            fail: bool,
+        }
+        impl GradEngine for Flaky {
+            fn loss_and_grad(
+                &mut self,
+                mlp: &Mlp,
+                x: &Matrix,
+                y: &Matrix,
+            ) -> anyhow::Result<(f32, MlpGrads)> {
+                if self.fail {
+                    anyhow::bail!("injected");
+                }
+                self.inner.loss_and_grad(mlp, x, y)
+            }
+            fn name(&self) -> String {
+                "flaky".into()
+            }
+        }
+        let workers = g.rng.range_usize(2, 4);
+        let bad = g.rng.range_usize(0, workers - 1);
+        let steps = g.rng.range_usize(2, 5);
+        let mlp = Mlp::init(&[4, 6, 2], g.rng.next_u64(), Backend::Naive);
+        let data = Dataset::gaussian_clusters(96, 4, 2, 0.4, g.rng.next_u64());
+        let cfg = TrainConfig { workers, shard_batch: 8, steps, lr: 0.2, log_every: 0 };
+        let mut coord = Coordinator::new(cfg, mlp, data).unwrap();
+        let factory: Arc<EngineFactory> = Arc::new(move |wid| {
+            Ok(Box::new(Flaky { inner: NativeEngine::new(Backend::Naive), fail: wid == bad }) as _)
+        });
+        let r = coord.train_threaded(factory).unwrap();
+        assert_eq!(r.rerouted, 1, "exactly the one failed shard reroutes");
+        assert_eq!(r.steps.len(), steps, "run completes");
+    });
+}

@@ -1,0 +1,153 @@
+//! Property-based tests: every optimised backend ≍ naive over random
+//! shapes, strides, transposes and scalars (the testkit substrate replaces
+//! proptest in this offline build).
+
+use emmerald::blas::{sgemm, Backend, Matrix, Transpose};
+use emmerald::gemm::pack::{kpad_for, PackedB};
+use emmerald::gemm::{BlockParams, Unroll};
+use emmerald::util::testkit::{assert_allclose, check, Gen};
+
+fn random_case(g: &mut Gen, backend: Backend) {
+    let m = g.dim(48);
+    let n = g.dim(48);
+    let k = g.dim(96);
+    let transa = g.rng.chance(0.5);
+    let transb = g.rng.chance(0.5);
+    let (ar, ac) = if transa { (k, m) } else { (m, k) };
+    let (br, bc) = if transb { (n, k) } else { (k, n) };
+    let lda = ac + g.rng.range_usize(0, 5);
+    let ldb = bc + g.rng.range_usize(0, 3);
+    let ldc = n + g.rng.range_usize(0, 4);
+    let a = Matrix::random_strided(ar, ac, lda, g.rng.next_u64());
+    let b = Matrix::random_strided(br, bc, ldb, g.rng.next_u64());
+    let c0 = Matrix::random_strided(m, n, ldc, g.rng.next_u64());
+    let alpha = g.rng.f32_range(-2.0, 2.0);
+    let beta = if g.rng.chance(0.3) { 0.0 } else { g.rng.f32_range(-1.5, 1.5) };
+    let ta = if transa { Transpose::Yes } else { Transpose::No };
+    let tb = if transb { Transpose::Yes } else { Transpose::No };
+
+    let mut c_got = c0.clone();
+    let mut c_ref = c0.clone();
+    sgemm(backend, ta, tb, m, n, k, alpha, a.data(), lda, b.data(), ldb, beta, c_got.data_mut(), ldc)
+        .unwrap();
+    sgemm(Backend::Naive, ta, tb, m, n, k, alpha, a.data(), lda, b.data(), ldb, beta, c_ref.data_mut(), ldc)
+        .unwrap();
+    assert_allclose(
+        c_got.data(),
+        c_ref.data(),
+        5e-4,
+        1e-4,
+        &format!("{} m={m} n={n} k={k} ta={transa} tb={transb} α={alpha} β={beta}", backend.name()),
+    );
+}
+
+#[test]
+fn prop_simd_matches_naive() {
+    check("simd ≍ naive", 120, |g| random_case(g, Backend::Simd));
+}
+
+#[test]
+fn prop_blocked_matches_naive() {
+    check("blocked ≍ naive", 120, |g| random_case(g, Backend::Blocked));
+}
+
+#[test]
+fn prop_avx2_matches_naive() {
+    if !(std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma"))
+    {
+        eprintln!("SKIP: no AVX2+FMA");
+        return;
+    }
+    check("avx2 ≍ naive", 120, |g| random_case(g, Backend::Avx2));
+}
+
+#[test]
+fn prop_random_block_geometry_is_always_correct() {
+    // The driver must be correct for *any* legal block geometry, not just
+    // the tuned ones (this is what makes the autotuner safe).
+    check("simd geometry", 60, |g| {
+        let p = BlockParams {
+            kb: g.rng.range_usize(1, 80),
+            mb: g.rng.range_usize(1, 40),
+            nr: g.rng.range_usize(1, 8),
+            unroll: [Unroll::X1, Unroll::X2, Unroll::X4][g.rng.range_usize(0, 2)],
+            prefetch: g.rng.chance(0.5),
+            pack_b: g.rng.chance(0.8),
+            pack_a: g.rng.chance(0.3),
+        };
+        let m = g.dim(40);
+        let n = g.dim(40);
+        let k = g.dim(90);
+        let a = Matrix::random(m, k, g.rng.next_u64(), -1.0, 1.0);
+        let b = Matrix::random(k, n, g.rng.next_u64(), -1.0, 1.0);
+        let mut c_got = Matrix::zeros(m, n);
+        let mut c_ref = Matrix::zeros(m, n);
+        emmerald::gemm::simd::gemm(
+            &p,
+            Transpose::No,
+            Transpose::No,
+            1.0,
+            a.view(),
+            b.view(),
+            0.0,
+            &mut c_got.view_mut(),
+        );
+        emmerald::gemm::naive::gemm(
+            Transpose::No,
+            Transpose::No,
+            1.0,
+            a.view(),
+            b.view(),
+            0.0,
+            &mut c_ref.view_mut(),
+        );
+        assert_allclose(c_got.data(), c_ref.data(), 5e-4, 1e-4, &format!("geometry {p:?}"));
+    });
+}
+
+#[test]
+fn prop_packed_b_is_a_permutation_of_the_block() {
+    // Packing must copy every element of the k-block exactly once, pad
+    // with zeros, and place column j at panel j/nr, lane j%nr.
+    check("packB permutation", 80, |g| {
+        let rows = g.dim(40);
+        let cols = g.dim(30);
+        let b = Matrix::random(rows, cols, g.rng.next_u64(), -1.0, 1.0);
+        let nr = g.rng.range_usize(1, 8);
+        let kk = g.rng.range_usize(0, rows - 1);
+        let kb_eff = g.rng.range_usize(1, rows - kk);
+        let mut pb = PackedB::new(nr);
+        pb.pack(b.view(), Transpose::No, kk, kb_eff, cols);
+        assert_eq!(pb.kpad(), kpad_for(kb_eff));
+        for j in 0..cols {
+            let (panel, lane) = (j / nr, j % nr);
+            let col = pb.col_ptr(panel, lane);
+            for p in 0..pb.kpad() {
+                let got = unsafe { *col.add(p) };
+                let want = if p < kb_eff { b.get(kk + p, j) } else { 0.0 };
+                assert_eq!(got, want, "col {j} p {p}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_scale_invariance() {
+    // sgemm(α·A, B) == α · sgemm(A, B) for the SIMD backend (exact for
+    // powers of two).
+    check("scale invariance", 40, |g| {
+        let m = g.dim(24);
+        let n = g.dim(24);
+        let k = g.dim(48);
+        let a = Matrix::random(m, k, g.rng.next_u64(), -1.0, 1.0);
+        let b = Matrix::random(k, n, g.rng.next_u64(), -1.0, 1.0);
+        let a2 = Matrix::from_fn(m, k, |r, c| 2.0 * a.get(r, c));
+        let mut c1 = Matrix::zeros(m, n);
+        let mut c2 = Matrix::zeros(m, n);
+        emmerald::blas::sgemm_matrix(Backend::Simd, Transpose::No, Transpose::No, 1.0, &a2, &b, 0.0, &mut c1)
+            .unwrap();
+        emmerald::blas::sgemm_matrix(Backend::Simd, Transpose::No, Transpose::No, 2.0, &a, &b, 0.0, &mut c2)
+            .unwrap();
+        assert_allclose(c1.data(), c2.data(), 1e-6, 1e-6, "2A·B vs 2·(A·B)");
+    });
+}

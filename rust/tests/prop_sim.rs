@@ -1,0 +1,121 @@
+//! Property-based tests for the PIII simulator substrate.
+
+use emmerald::sim::cache::{Cache, CacheConfig};
+use emmerald::sim::piii::{piii_450, piii_550};
+use emmerald::sim::timing::{simulate_gemm, Algorithm};
+use emmerald::sim::tlb::Tlb;
+use emmerald::util::testkit::{check, Gen};
+
+fn random_cache(g: &mut Gen) -> Cache {
+    let ways = 1 << g.rng.range_usize(0, 3); // 1..8
+    let sets = 1 << g.rng.range_usize(1, 6); // 2..64
+    let line = 1 << g.rng.range_usize(4, 6); // 16..64
+    Cache::new(CacheConfig { capacity: sets * ways * line, ways, line_bytes: line })
+}
+
+#[test]
+fn prop_cache_accounting_invariants() {
+    check("hits+misses=accesses", 60, |g| {
+        let mut c = random_cache(g);
+        let n = g.rng.range_usize(100, 3000);
+        for _ in 0..n {
+            c.access(g.rng.next_u32() as u64 % 65536, g.rng.chance(0.3));
+        }
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, s.accesses);
+        assert_eq!(s.accesses, n as u64);
+        assert!(s.writebacks <= s.misses, "writebacks only on evictions");
+    });
+}
+
+#[test]
+fn prop_repeat_access_always_hits() {
+    check("temporal locality", 60, |g| {
+        let mut c = random_cache(g);
+        let addr = g.rng.next_u32() as u64 % 65536;
+        c.access(addr, false);
+        assert!(c.access(addr, false), "immediate re-access must hit");
+        assert!(c.probe(addr));
+    });
+}
+
+#[test]
+fn prop_bigger_cache_never_misses_more() {
+    // Monotonicity (same ways/line, more sets) on a random trace — LRU
+    // set-associative caches with identical indexing granularity.
+    check("capacity monotone", 30, |g| {
+        let line = 32;
+        let ways = 4;
+        let small_sets = 8usize;
+        let big_sets = 32usize;
+        let mut small = Cache::new(CacheConfig { capacity: small_sets * ways * line, ways, line_bytes: line });
+        let mut big = Cache::new(CacheConfig { capacity: big_sets * ways * line, ways, line_bytes: line });
+        // Sequential+strided mix keeps this within LRU's stack property.
+        let n = g.rng.range_usize(200, 2000);
+        let stride = g.rng.range_usize(1, 512) as u64;
+        for i in 0..n {
+            let addr = (i as u64 * stride) % 131072;
+            small.access(addr, false);
+            big.access(addr, false);
+        }
+        assert!(
+            big.stats().misses <= small.stats().misses,
+            "bigger cache missed more: {} vs {}",
+            big.stats().misses,
+            small.stats().misses
+        );
+    });
+}
+
+#[test]
+fn prop_tlb_accounting() {
+    check("tlb", 60, |g| {
+        let entries = g.rng.range_usize(1, 64);
+        let mut t = Tlb::new(entries, 4096);
+        let n = g.rng.range_usize(50, 1000);
+        for _ in 0..n {
+            t.access(g.rng.next_u32() as u64);
+        }
+        let s = t.stats();
+        assert_eq!(s.accesses, n as u64);
+        assert!(s.misses <= s.accesses);
+        // Re-touching the last page must hit.
+        let page = 0xABC000u64;
+        t.access(page);
+        assert!(t.access(page + 100));
+    });
+}
+
+#[test]
+fn prop_sim_results_are_deterministic_and_consistent() {
+    check("sim determinism", 6, |g| {
+        let size = [16, 24, 32, 48][g.rng.range_usize(0, 3)];
+        let stride = size + g.rng.range_usize(0, 64);
+        let algo = [Algorithm::Naive, Algorithm::Atlas, Algorithm::Emmerald][g.rng.range_usize(0, 2)];
+        let r1 = simulate_gemm(&piii_450(), algo, size, stride);
+        let r2 = simulate_gemm(&piii_450(), algo, size, stride);
+        assert_eq!(r1.stats.stall_cycles, r2.stats.stall_cycles, "simulation must be deterministic");
+        assert!((r1.mflops - r2.mflops).abs() < 1e-9);
+        // Consistency: mflops = flops / seconds / 1e6, cycles add up.
+        assert!((r1.flops - 2.0 * (size as f64).powi(3)).abs() < 1.0);
+        assert!(r1.mflops > 0.0 && r1.seconds > 0.0);
+        // Clock scaling: 550 is faster in wall-clock for the same trace.
+        let r550 = simulate_gemm(&piii_550(), algo, size, stride);
+        assert!(r550.mflops >= r1.mflops * 0.95);
+    });
+}
+
+#[test]
+fn prop_stall_cycles_bounded_by_worst_case() {
+    check("stall bound", 8, |g| {
+        let size = [16, 32, 48][g.rng.range_usize(0, 2)];
+        let algo = [Algorithm::Naive, Algorithm::Atlas, Algorithm::Emmerald][g.rng.range_usize(0, 2)];
+        let r = simulate_gemm(&piii_450(), algo, size, size + 4);
+        let worst_per_access =
+            (piii_450().latencies.memory + piii_450().latencies.tlb_miss) as u64;
+        assert!(
+            r.stats.stall_cycles <= r.stats.accesses * worst_per_access,
+            "stalls exceed worst case"
+        );
+    });
+}
