@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 gate: build, test, lint. Run from anywhere; CI runs exactly this.
+#
+#   ./ci.sh                 # full gate
+#   CI_SKIP_CLIPPY=1 ./ci.sh  # when the toolchain has no clippy component
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [ "${CI_SKIP_CLIPPY:-0}" = "1" ]; then
+    echo "== clippy skipped (CI_SKIP_CLIPPY=1) =="
+elif cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== clippy not installed; skipped =="
+fi
+
+echo "CI gate passed."

@@ -1,0 +1,116 @@
+//! Dispatch overhead: what does the registry + heuristic layer cost on
+//! top of calling a kernel directly?
+//!
+//! The dispatch subsystem must be free at production sizes and near-free
+//! even at small ones — the whole point of a runtime registry is to spend
+//! nanoseconds choosing and microseconds computing. This bench times
+//! `sgemm(Backend::Dispatch, ..)` against a *direct* call to the very
+//! kernel the dispatcher selects for that shape, at small sizes where the
+//! overhead is most visible, and **guards** that the median overhead at
+//! 64×64 stays under 5% (exit code 1 otherwise, so CI can run this
+//! binary as a regression gate).
+
+use emmerald::bench::{gemm_flops, Bencher, FlushMode, Report};
+use emmerald::blas::{sgemm, Backend, Matrix, Transpose};
+use emmerald::gemm::dispatch::GemmShape;
+use emmerald::gemm::{avx2, simd, GemmDispatch, KernelId};
+
+fn run_direct(id: KernelId, d: &GemmDispatch, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let mut cv = c.view_mut();
+    match id {
+        KernelId::Avx2 => avx2::gemm(
+            d.params_avx2(),
+            Transpose::No,
+            Transpose::No,
+            1.0,
+            a.view(),
+            b.view(),
+            0.0,
+            &mut cv,
+        ),
+        _ => simd::gemm(
+            d.params_sse(),
+            Transpose::No,
+            Transpose::No,
+            1.0,
+            a.view(),
+            b.view(),
+            0.0,
+            &mut cv,
+        ),
+    }
+}
+
+fn run_dispatched(n: usize, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    sgemm(
+        Backend::Dispatch,
+        Transpose::No,
+        Transpose::No,
+        n,
+        n,
+        n,
+        1.0,
+        a.data(),
+        a.ld(),
+        b.data(),
+        b.ld(),
+        0.0,
+        c.data_mut(),
+        c.ld(),
+    )
+    .expect("dispatched sgemm");
+}
+
+fn main() {
+    let d = GemmDispatch::default();
+    if !d.has_sse() {
+        println!("dispatch_overhead: no SSE on this host; nothing to compare");
+        return;
+    }
+    let mut report = Report::new(
+        "Dispatch overhead — sgemm(Backend::Dispatch) vs direct kernel call",
+        &["size", "path"],
+    );
+    let mut guard_failed = false;
+    for n in [16usize, 32, 64, 128] {
+        let a = Matrix::random(n, n, 1, -1.0, 1.0);
+        let b = Matrix::random(n, n, 2, -1.0, 1.0);
+        let mut c = Matrix::zeros(n, n);
+        let flops = gemm_flops(n, n, n);
+        let picked = d.select(
+            &GemmShape { m: n, n, k: n, transa: Transpose::No, transb: Transpose::No },
+            1.0,
+        );
+
+        let mut bench = Bencher::new(3, 7).flush_mode(FlushMode::Warm).min_sample_secs(0.01);
+        let direct = bench.run(&format!("direct/{}", picked.name()), flops, || {
+            run_direct(picked, &d, &a, &b, &mut c);
+        });
+        let mut bench = Bencher::new(3, 7).flush_mode(FlushMode::Warm).min_sample_secs(0.01);
+        let dispatched = bench.run("dispatched", flops, || {
+            run_dispatched(n, &a, &b, &mut c);
+        });
+
+        // Median-of-samples comparison; mflops is inversely proportional
+        // to time, so overhead = direct/dispatched - 1 in rate terms.
+        let overhead = direct.mflops() / dispatched.mflops() - 1.0;
+        println!(
+            "n={n:<4} direct {:>8.1} MFlop/s  dispatched {:>8.1} MFlop/s  overhead {:>6.2}%  (kernel: {})",
+            direct.mflops(),
+            dispatched.mflops(),
+            overhead * 100.0,
+            picked.name()
+        );
+        if n == 64 && overhead > 0.05 {
+            guard_failed = true;
+        }
+        report.add(&[n.to_string(), "direct".into()], direct);
+        report.add(&[n.to_string(), "dispatched".into()], dispatched);
+    }
+    report.emit("dispatch_overhead");
+    if guard_failed {
+        eprintln!("FAIL: dispatch overhead at 64x64 exceeded the 5% budget");
+        std::process::exit(1);
+    }
+    println!("PASS: dispatch overhead at 64x64 within the 5% budget");
+}

@@ -138,6 +138,29 @@ pub struct TuneResult {
     pub log: Vec<TunePoint>,
 }
 
+/// Map a tuned kernel family onto its dispatch-registry identity.
+impl TuneKernel {
+    /// The [`KernelId`] whose geometry this search tunes.
+    pub fn kernel_id(&self) -> crate::gemm::KernelId {
+        match self {
+            TuneKernel::Sse => crate::gemm::KernelId::Simd,
+            TuneKernel::Avx2 => crate::gemm::KernelId::Avx2,
+            TuneKernel::Blocked => crate::gemm::KernelId::Blocked,
+        }
+    }
+}
+
+/// Run the empirical search and install the winner into the process-wide
+/// [`crate::gemm::dispatch`] heuristic table, so every subsequent
+/// [`crate::blas::Backend::Dispatch`] call runs the tuned geometry —
+/// ATLAS's install-time loop feeding the production hot path.
+pub fn tune_and_install(spec: &TuneSpec) -> TuneResult {
+    let result = tune(spec);
+    crate::gemm::dispatch::install_tuned(spec.kernel.kernel_id(), result.best)
+        .expect("tuned parameters come from a validated candidate grid");
+    result
+}
+
 /// Run the empirical search (ATLAS's install-time loop).
 pub fn tune(spec: &TuneSpec) -> TuneResult {
     let n = spec.probe_size;
@@ -246,6 +269,31 @@ mod tests {
         };
         let r = tune(&spec);
         assert_eq!(r.log.len(), 2);
+    }
+
+    #[test]
+    fn tune_and_install_feeds_the_global_dispatcher() {
+        use crate::gemm::dispatch::{global_snapshot, install_tuned};
+        // This test mutates process-global state; any candidate geometry
+        // is *correct* for concurrent tests (only performance differs),
+        // and the prior geometry is restored below to keep the suite
+        // order-independent.
+        let before = *global_snapshot().params_sse();
+        let spec = TuneSpec {
+            kernel: TuneKernel::Sse,
+            probe_size: 64,
+            samples: 1,
+            kbs: vec![48],
+            mbs: vec![24],
+            nrs: vec![5],
+            unrolls: vec![Unroll::X2],
+        };
+        let r = tune_and_install(&spec);
+        assert_eq!(r.best.kb, 48);
+        let snap = global_snapshot();
+        assert_eq!(snap.params_sse(), &r.best, "winner must land in the dispatch table");
+        assert_eq!(spec.kernel.kernel_id(), crate::gemm::KernelId::Simd);
+        install_tuned(crate::gemm::KernelId::Simd, before).expect("restore prior geometry");
     }
 
     #[test]

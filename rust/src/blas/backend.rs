@@ -14,7 +14,7 @@
 use super::error::BlasError;
 use super::matrix::{MatMut, MatRef};
 use super::Transpose;
-use crate::gemm::{self, BlockParams};
+use crate::gemm;
 
 /// Implementation selector for [`super::sgemm`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,18 +27,23 @@ pub enum Backend {
     Simd,
     /// Emmerald re-tuned for AVX2 + FMA (extension).
     Avx2,
-    /// Pick the fastest backend available on this CPU.
+    /// Route through the [`crate::gemm::dispatch`] registry: runtime
+    /// CPU-feature detection plus shape heuristics over *every* kernel in
+    /// the crate (including the parallel and Strassen drivers).
+    Dispatch,
+    /// The default: an alias for [`Backend::Dispatch`].
     Auto,
 }
 
 impl Backend {
-    /// Parse a backend name (`naive|blocked|simd|avx2|auto`).
+    /// Parse a backend name (`naive|blocked|simd|avx2|dispatch|auto`).
     pub fn parse(s: &str) -> Result<Self, BlasError> {
         match s.to_ascii_lowercase().as_str() {
             "naive" => Ok(Backend::Naive),
             "blocked" | "atlas" => Ok(Backend::Blocked),
             "simd" | "sse" | "emmerald" => Ok(Backend::Simd),
             "avx2" => Ok(Backend::Avx2),
+            "dispatch" => Ok(Backend::Dispatch),
             "auto" => Ok(Backend::Auto),
             _ => Err(BlasError::BackendUnavailable("unknown backend name")),
         }
@@ -51,6 +56,7 @@ impl Backend {
             Backend::Blocked => "blocked",
             Backend::Simd => "emmerald-sse",
             Backend::Avx2 => "emmerald-avx2",
+            Backend::Dispatch => "dispatch",
             Backend::Auto => "auto",
         }
     }
@@ -61,37 +67,29 @@ impl Backend {
             Backend::Naive => Ok(Resolved::Naive),
             Backend::Blocked => Ok(Resolved::Blocked),
             Backend::Simd => {
-                if cfg!(target_arch = "x86_64") && std::arch::is_x86_feature_detected!("sse") {
+                if gemm::dispatch::detect_sse() {
                     Ok(Resolved::Simd)
                 } else {
                     Err(BlasError::BackendUnavailable("emmerald-sse (needs SSE)"))
                 }
             }
             Backend::Avx2 => {
-                if cfg!(target_arch = "x86_64")
-                    && std::arch::is_x86_feature_detected!("avx2")
-                    && std::arch::is_x86_feature_detected!("fma")
-                {
+                if gemm::dispatch::detect_avx2() {
                     Ok(Resolved::Avx2)
                 } else {
                     Err(BlasError::BackendUnavailable("emmerald-avx2 (needs AVX2+FMA)"))
                 }
             }
-            Backend::Auto => {
-                for candidate in [Backend::Avx2, Backend::Simd] {
-                    if let Ok(r) = candidate.resolve() {
-                        return Ok(r);
-                    }
-                }
-                Ok(Resolved::Blocked)
-            }
+            // The dispatcher is always available: it degrades to the best
+            // kernel the CPU actually has.
+            Backend::Dispatch | Backend::Auto => Ok(Resolved::Dispatch),
         }
     }
 }
 
 /// All backends executable on this CPU.
 pub fn available_backends() -> Vec<Backend> {
-    [Backend::Naive, Backend::Blocked, Backend::Simd, Backend::Avx2]
+    [Backend::Naive, Backend::Blocked, Backend::Simd, Backend::Avx2, Backend::Dispatch]
         .into_iter()
         .filter(|b| b.resolve().is_ok())
         .collect()
@@ -104,10 +102,16 @@ pub(crate) enum Resolved {
     Blocked,
     Simd,
     Avx2,
+    Dispatch,
 }
 
 impl Resolved {
     /// Run the GEMM on validated views.
+    ///
+    /// Explicit kernel backends read their block geometry from the
+    /// process-wide dispatch table, so `sgemm(Backend::Simd, ..)`,
+    /// `sgemm_batch(Backend::Simd, ..)` and the dispatcher itself all
+    /// run the same (possibly autotuned) geometry.
     pub(crate) fn dispatch(
         self,
         transa: Transpose,
@@ -118,10 +122,11 @@ impl Resolved {
         beta: f32,
         mut c: MatMut<'_>,
     ) {
+        use crate::gemm::dispatch::{tuned_params, KernelId};
         match self {
             Resolved::Naive => gemm::naive::gemm(transa, transb, alpha, a, b, beta, &mut c),
             Resolved::Blocked => gemm::blocked::gemm(
-                &BlockParams::atlas_proxy(),
+                &tuned_params(KernelId::Blocked),
                 transa,
                 transb,
                 alpha,
@@ -131,7 +136,7 @@ impl Resolved {
                 &mut c,
             ),
             Resolved::Simd => gemm::simd::gemm(
-                &BlockParams::emmerald_sse(),
+                &tuned_params(KernelId::Simd),
                 transa,
                 transb,
                 alpha,
@@ -141,7 +146,7 @@ impl Resolved {
                 &mut c,
             ),
             Resolved::Avx2 => gemm::avx2::gemm(
-                &BlockParams::emmerald_avx2(),
+                &tuned_params(KernelId::Avx2),
                 transa,
                 transb,
                 alpha,
@@ -150,6 +155,9 @@ impl Resolved {
                 beta,
                 &mut c,
             ),
+            Resolved::Dispatch => {
+                gemm::dispatch::gemm_auto(transa, transb, alpha, a, b, beta, &mut c);
+            }
         }
     }
 }
@@ -164,20 +172,23 @@ mod tests {
         assert_eq!(Backend::parse("ATLAS").unwrap(), Backend::Blocked);
         assert_eq!(Backend::parse("emmerald").unwrap(), Backend::Simd);
         assert_eq!(Backend::parse("avx2").unwrap(), Backend::Avx2);
+        assert_eq!(Backend::parse("dispatch").unwrap(), Backend::Dispatch);
         assert_eq!(Backend::parse("auto").unwrap(), Backend::Auto);
         assert!(Backend::parse("gpu").is_err());
     }
 
     #[test]
-    fn auto_resolves_to_something() {
-        assert!(Backend::Auto.resolve().is_ok());
+    fn auto_resolves_to_the_dispatcher() {
+        assert_eq!(Backend::Auto.resolve().unwrap(), Resolved::Dispatch);
+        assert_eq!(Backend::Dispatch.resolve().unwrap(), Resolved::Dispatch);
     }
 
     #[test]
-    fn naive_and_blocked_always_available() {
+    fn naive_blocked_dispatch_always_available() {
         let av = available_backends();
         assert!(av.contains(&Backend::Naive));
         assert!(av.contains(&Backend::Blocked));
+        assert!(av.contains(&Backend::Dispatch));
     }
 
     #[cfg(target_arch = "x86_64")]

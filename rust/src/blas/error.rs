@@ -47,6 +47,16 @@ pub enum BlasError {
     BadTranspose(char),
     /// The requested backend is not available on this CPU.
     BackendUnavailable(&'static str),
+    /// Batched output items overlap: the batch stride does not cover one
+    /// item's extent (batched API only).
+    BadBatchStride {
+        /// Which operand.
+        operand: &'static str,
+        /// The offending batch stride.
+        stride: usize,
+        /// Minimum stride: one item's element extent `(rows-1)*ld + cols`.
+        need: usize,
+    },
 }
 
 impl BlasError {
@@ -82,6 +92,12 @@ impl fmt::Display for BlasError {
             BlasError::BadTranspose(c) => write!(f, "invalid transpose flag '{c}' (want n/N/t/T)"),
             BlasError::BackendUnavailable(b) => {
                 write!(f, "backend {b} is not available on this CPU")
+            }
+            BlasError::BadBatchStride { operand, stride, need } => {
+                write!(
+                    f,
+                    "operand {operand}: batch stride {stride} overlaps items needing {need} elements"
+                )
             }
         }
     }

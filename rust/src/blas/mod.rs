@@ -104,6 +104,51 @@ pub fn sgemm(
     Ok(())
 }
 
+/// Strided-batch SGEMM: `C_i = alpha · op(A_i) op(B_i) + beta · C_i` for
+/// `i in 0..batch`, with `X_i = x[i * stride_x ..]` (stride 0 broadcasts a
+/// read-only operand — the cuBLAS `gemmStridedBatched` convention).
+///
+/// [`Backend::Dispatch`]/[`Backend::Auto`] run the full batched driver
+/// (shared-B folding, per-worker packing scratch, thread fan-out — see
+/// [`crate::gemm::batch`]); explicit backends run their kernel per item
+/// with the same validation and amortised packing buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_batch(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    stride_a: usize,
+    b: &[f32],
+    ldb: usize,
+    stride_b: usize,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+    stride_c: usize,
+    batch: usize,
+) -> Result<(), BlasError> {
+    use crate::gemm::batch::{gemm_batch_impl, BatchStrides};
+    use crate::gemm::dispatch::{with_global, KernelId};
+
+    let forced = match backend.resolve()? {
+        backend::Resolved::Naive => Some(KernelId::Naive),
+        backend::Resolved::Blocked => Some(KernelId::Blocked),
+        backend::Resolved::Simd => Some(KernelId::Simd),
+        backend::Resolved::Avx2 => Some(KernelId::Avx2),
+        backend::Resolved::Dispatch => None,
+    };
+    let strides = BatchStrides { a: stride_a, b: stride_b, c: stride_c };
+    with_global(|d| {
+        gemm_batch_impl(d, forced, transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc, batch, strides)
+    })
+}
+
 /// Convenience wrapper over [`sgemm`] for owned [`Matrix`] values
 /// (`C = alpha * op(A) op(B) + beta * C`).
 pub fn sgemm_matrix(
@@ -276,6 +321,91 @@ mod tests {
         assert_eq!(Transpose::from_char('n').unwrap(), Transpose::No);
         assert_eq!(Transpose::from_char('T').unwrap(), Transpose::Yes);
         assert!(Transpose::from_char('q').is_err());
+    }
+
+    #[test]
+    fn sgemm_batch_matches_looped_sgemm() {
+        let (m, n, k, batch) = (3usize, 4usize, 5usize, 3usize);
+        let a: Vec<f32> = (0..batch * m * k).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..batch * k * n).map(|i| (i as f32).cos()).collect();
+        let c0: Vec<f32> = (0..batch * m * n).map(|i| i as f32 * 0.1).collect();
+        for backend in [Backend::Naive, Backend::Dispatch] {
+            let mut c_got = c0.clone();
+            let mut c_ref = c0.clone();
+            sgemm_batch(
+                backend,
+                Transpose::No,
+                Transpose::No,
+                m,
+                n,
+                k,
+                1.25,
+                &a,
+                k,
+                m * k,
+                &b,
+                n,
+                k * n,
+                0.5,
+                &mut c_got,
+                n,
+                m * n,
+                batch,
+            )
+            .unwrap();
+            for i in 0..batch {
+                sgemm(
+                    Backend::Naive,
+                    Transpose::No,
+                    Transpose::No,
+                    m,
+                    n,
+                    k,
+                    1.25,
+                    &a[i * m * k..],
+                    k,
+                    &b[i * k * n..],
+                    n,
+                    0.5,
+                    &mut c_ref[i * m * n..],
+                    n,
+                )
+                .unwrap();
+            }
+            crate::util::testkit::assert_allclose(
+                &c_got,
+                &c_ref,
+                5e-4,
+                1e-4,
+                &format!("sgemm_batch {}", backend.name()),
+            );
+        }
+    }
+
+    #[test]
+    fn sgemm_batch_rejects_overlapping_c() {
+        let mut c = vec![0.0f32; 16];
+        let err = sgemm_batch(
+            Backend::Naive,
+            Transpose::No,
+            Transpose::No,
+            2,
+            2,
+            2,
+            1.0,
+            &[0.0; 16],
+            2,
+            4,
+            &[0.0; 16],
+            2,
+            4,
+            0.0,
+            &mut c,
+            2,
+            1, // < item extent 4
+            2,
+        );
+        assert!(matches!(err, Err(BlasError::BadBatchStride { .. })));
     }
 
     #[test]

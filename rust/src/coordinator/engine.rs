@@ -36,6 +36,21 @@ impl NativeEngine {
     }
 }
 
+impl Default for NativeEngine {
+    /// The production default: every SGEMM in the worker's backprop goes
+    /// through the [`crate::gemm::dispatch`] registry.
+    ///
+    /// Caveat for *threaded* coordinators with large layers: the
+    /// dispatcher's parallel tier has no awareness of the worker threads
+    /// above it, so `workers × threads` can oversubscribe the host once
+    /// per-shard GEMMs exceed `parallel_min_flops` (~33 Mflop). Pass an
+    /// explicit serial backend (`Backend::Avx2`/`Simd`) to such workers;
+    /// a shared thread budget is a ROADMAP item.
+    fn default() -> Self {
+        Self::new(Backend::Dispatch)
+    }
+}
+
 impl GradEngine for NativeEngine {
     fn loss_and_grad(&mut self, mlp: &Mlp, x: &Matrix, y: &Matrix) -> Result<(f32, MlpGrads)> {
         // Re-target the snapshot at this engine's backend (cheap relative
@@ -177,5 +192,20 @@ mod tests {
     #[test]
     fn pjrt_engine_requires_artifacts() {
         assert!(PjrtEngine::new("/definitely/not/here").is_err());
+    }
+
+    #[test]
+    fn default_engine_dispatches_and_matches_naive_backprop() {
+        let mlp = Mlp::init(&[5, 8, 2], 9, Backend::Naive);
+        let d = Dataset::gaussian_clusters(8, 5, 2, 0.3, 6);
+        let (x, y) = d.slice(0, 8);
+        let (l_ref, g_ref) = mlp.loss_and_grad(&x, &y);
+        let mut engine = NativeEngine::default();
+        assert!(engine.name().contains("dispatch"));
+        let (l_got, g_got) = engine.loss_and_grad(&mlp, &x, &y).unwrap();
+        assert!((l_ref - l_got).abs() < 1e-4);
+        for (a, b) in g_ref.d_weights.iter().zip(&g_got.d_weights) {
+            assert!(a.max_abs_diff(b) < 1e-4);
+        }
     }
 }

@@ -7,8 +7,9 @@
 //! progression the paper itself anticipates: the algorithm is parameterised
 //! by SIMD width and register count, not tied to the PIII.
 
+use super::pack::Scratch;
 use super::params::BlockParams;
-use super::simd::{gemm_vec, VecIsa};
+use super::simd::{gemm_vec, gemm_vec_scratch, VecIsa};
 use crate::blas::{MatMut, MatRef, Transpose};
 
 /// Emmerald SGEMM on AVX2+FMA: `C = alpha * op(A) op(B) + beta * C`.
@@ -26,6 +27,23 @@ pub fn gemm(
     c: &mut MatMut<'_>,
 ) {
     gemm_vec(VecIsa::Avx2, params, transa, transb, alpha, a, b, beta, c);
+}
+
+/// As [`gemm`], but reusing caller-provided packing buffers (see
+/// [`super::simd::gemm_with_scratch`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_scratch(
+    params: &BlockParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+    scratch: &mut Scratch,
+) {
+    gemm_vec_scratch(VecIsa::Avx2, params, transa, transb, alpha, a, b, beta, c, scratch);
 }
 
 #[cfg(test)]

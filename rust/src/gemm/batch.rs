@@ -1,0 +1,601 @@
+//! Batched GEMM: many same-shaped multiplies over strided tensor slabs.
+//!
+//! The modern workloads the paper motivates (neural networks, im2col
+//! convolution) rarely issue one big GEMM — they issue *batches* of
+//! same-shaped GEMMs. Calling [`crate::blas::sgemm`] in a loop repays the
+//! packing and thread-spawn overhead per item; this driver amortises both:
+//!
+//! * **Shared-B fold**: when every item multiplies against the same `B`
+//!   (`strides.b == 0`) and the per-item `A`/`C` slabs tile contiguously,
+//!   the whole batch is folded into a single `(batch·m) × n × k` GEMM —
+//!   `B` is re-buffered once for the entire batch and the parallel driver
+//!   sees the full row space. This is exactly the im2col convolution
+//!   shape (`nn::conv::Conv2d::forward_batched`).
+//! * **Per-item fan-out**: otherwise items are distributed over the
+//!   dispatcher's worker threads; each worker reuses one packing
+//!   [`Scratch`] across all of its items, so buffers are allocated once
+//!   per worker rather than once per GEMM.
+//!
+//! Item `i` computes `C_i = alpha · op(A_i) op(B_i) + beta · C_i` with
+//! `X_i = x[i * strides.x ..]`; a stride of zero broadcasts the operand
+//! (only valid for the read-only `A`/`B`).
+
+use super::dispatch::{GemmDispatch, KernelId};
+use super::pack::Scratch;
+use super::{blocked, naive};
+use crate::blas::{BlasError, MatMut, MatRef, Transpose};
+
+/// Element offsets between consecutive batch items in each operand slab.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchStrides {
+    /// Stride between `A_i` and `A_{i+1}` (0 = all items share `A`).
+    pub a: usize,
+    /// Stride between `B_i` and `B_{i+1}` (0 = all items share `B`).
+    pub b: usize,
+    /// Stride between `C_i` and `C_{i+1}` (must cover an item, no overlap).
+    pub c: usize,
+}
+
+impl BatchStrides {
+    /// Densely packed items: each operand's items are back-to-back
+    /// (`lda = k`-style contiguous layouts).
+    pub fn contiguous(m: usize, n: usize, k: usize) -> Self {
+        Self { a: m * k, b: k * n, c: m * n }
+    }
+
+    /// Densely packed `A`/`C` items sharing a single `B` (the im2col /
+    /// weight-stationary layout).
+    pub fn shared_b(m: usize, n: usize, k: usize) -> Self {
+        Self { a: m * k, b: 0, c: m * n }
+    }
+}
+
+/// Batched GEMM through the dispatcher's heuristics. See the module docs
+/// for layout semantics; shapes follow [`crate::blas::sgemm`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_batch(
+    d: &GemmDispatch,
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+    batch: usize,
+    strides: BatchStrides,
+) -> Result<(), BlasError> {
+    gemm_batch_impl(d, None, transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc, batch, strides)
+}
+
+/// As [`gemm_batch`], but forcing one serial kernel for every item
+/// (the explicit-backend path of [`crate::blas::sgemm_batch`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_batch_impl(
+    d: &GemmDispatch,
+    forced: Option<KernelId>,
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+    batch: usize,
+    strides: BatchStrides,
+) -> Result<(), BlasError> {
+    if batch == 0 || m == 0 || n == 0 {
+        return Ok(());
+    }
+
+    // Stored shapes of the operands (as in `sgemm`).
+    let (ar, ac) = match transa {
+        Transpose::No => (m, k),
+        Transpose::Yes => (k, m),
+    };
+    let (br, bc) = match transb {
+        Transpose::No => (k, n),
+        Transpose::Yes => (n, k),
+    };
+
+    // ---- Validation pass (everything checked before any compute or any
+    // thread is spawned; the execution pass may then unwrap freely). ----
+    validate_operand("C", m, n, ldc, strides.c, batch, c.len(), true)?;
+    let compute = alpha != 0.0 && k != 0;
+    if compute {
+        validate_operand("A", ar, ac, lda, strides.a, batch, a.len(), false)?;
+        validate_operand("B", br, bc, ldb, strides.b, batch, b.len(), false)?;
+    }
+
+    // Pure beta-scale: no A/B reads at all.
+    if !compute {
+        for cs in item_slices(c, strides.c, batch) {
+            MatMut::new(cs, m, n, ldc).expect("validated").scale(beta);
+        }
+        return Ok(());
+    }
+
+    // ---- Shared-B fold: one GEMM over the stacked row space. ----
+    let foldable = transa == Transpose::No
+        && transb == Transpose::No
+        && strides.b == 0
+        && strides.a == m * lda
+        && strides.c == m * ldc;
+    if foldable {
+        let rows = batch * m;
+        let a_all = MatRef::new(a, rows, k, lda).expect("validated");
+        let b_one = MatRef::new(b, k, n, ldb).expect("validated");
+        let mut c_all = MatMut::new(c, rows, n, ldc).expect("validated");
+        match forced {
+            Some(id) => d.gemm_with(id, transa, transb, alpha, a_all, b_one, beta, &mut c_all),
+            None => d.gemm(transa, transb, alpha, a_all, b_one, beta, &mut c_all),
+        };
+        return Ok(());
+    }
+
+    // ---- Per-item execution, fanned out over worker threads. ----
+    let shape = super::dispatch::GemmShape { m, n, k, transa, transb };
+    let serial = forced.unwrap_or_else(|| d.select_serial(&shape, alpha));
+    let slices = item_slices(c, strides.c, batch);
+    // Thread spawn/join costs tens of microseconds; don't pay it unless
+    // the whole batch carries at least a parallel-worthy amount of work
+    // (the same knob the single-GEMM parallel tier uses).
+    let total_flops = batch as f64 * shape.flops();
+    let workers = if total_flops >= d.config().parallel_min_flops {
+        d.threads().min(batch)
+    } else {
+        1
+    };
+    let job = ItemJob {
+        d,
+        serial,
+        transa,
+        transb,
+        a_shape: (ar, ac, lda),
+        b_shape: (br, bc, ldb),
+        c_shape: (m, n, ldc),
+        alpha,
+        beta,
+        a,
+        b,
+        strides,
+    };
+
+    if workers <= 1 {
+        run_item_group(&job, slices.into_iter().enumerate().collect());
+    } else {
+        let group_size = batch.div_ceil(workers);
+        let mut groups: Vec<Vec<(usize, &mut [f32])>> = Vec::with_capacity(workers);
+        let mut current: Vec<(usize, &mut [f32])> = Vec::with_capacity(group_size);
+        for pair in slices.into_iter().enumerate() {
+            current.push(pair);
+            if current.len() == group_size {
+                groups.push(std::mem::take(&mut current));
+            }
+        }
+        if !current.is_empty() {
+            groups.push(current);
+        }
+        let job = &job;
+        std::thread::scope(|scope| {
+            for group in groups {
+                scope.spawn(move || run_item_group(job, group));
+            }
+        });
+    }
+    Ok(())
+}
+
+/// Everything a worker needs to run its share of a batch (read-only;
+/// shared by reference across the worker threads).
+struct ItemJob<'a> {
+    d: &'a GemmDispatch,
+    serial: KernelId,
+    transa: Transpose,
+    transb: Transpose,
+    /// Stored (rows, cols, ld) of each operand / the output.
+    a_shape: (usize, usize, usize),
+    b_shape: (usize, usize, usize),
+    c_shape: (usize, usize, usize),
+    alpha: f32,
+    beta: f32,
+    a: &'a [f32],
+    b: &'a [f32],
+    strides: BatchStrides,
+}
+
+/// Run a contiguous group of batch items with one reused packing scratch.
+fn run_item_group(job: &ItemJob<'_>, items: Vec<(usize, &mut [f32])>) {
+    let (ar, ac, lda) = job.a_shape;
+    let (br, bc, ldb) = job.b_shape;
+    let (m, n, ldc) = job.c_shape;
+    let mut scratch = Scratch::new();
+    for (i, cs) in items {
+        let av = MatRef::new(&job.a[i * job.strides.a..], ar, ac, lda).expect("validated");
+        let bv = MatRef::new(&job.b[i * job.strides.b..], br, bc, ldb).expect("validated");
+        let mut cv = MatMut::new(cs, m, n, ldc).expect("validated");
+        run_serial_scratch(
+            job.d,
+            job.serial,
+            job.transa,
+            job.transb,
+            job.alpha,
+            av,
+            bv,
+            job.beta,
+            &mut cv,
+            &mut scratch,
+        );
+    }
+}
+
+/// One item on one serial kernel, reusing the worker's packing scratch
+/// where the kernel supports it.
+#[allow(clippy::too_many_arguments)]
+fn run_serial_scratch(
+    d: &GemmDispatch,
+    id: KernelId,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+    scratch: &mut Scratch,
+) {
+    match id {
+        KernelId::Avx2 if d.has_avx2() => {
+            super::avx2::gemm_with_scratch(d.params_avx2(), transa, transb, alpha, a, b, beta, c, scratch);
+        }
+        KernelId::Avx2 | KernelId::Simd if d.has_sse() => {
+            super::simd::gemm_with_scratch(d.params_sse(), transa, transb, alpha, a, b, beta, c, scratch);
+        }
+        KernelId::Naive => naive::gemm(transa, transb, alpha, a, b, beta, c),
+        KernelId::Blocked | KernelId::Avx2 | KernelId::Simd => {
+            blocked::gemm(&d.config().blocked, transa, transb, alpha, a, b, beta, c);
+        }
+        // Parallel/Strassen are whole-problem drivers with no per-item
+        // meaning (and nesting the parallel driver inside the batch
+        // fan-out would multiply thread counts); unreachable from the
+        // public batch APIs, but degrade to the best serial kernel.
+        KernelId::Parallel | KernelId::Strassen => {
+            run_serial_scratch(d, d.best_serial_vector(), transa, transb, alpha, a, b, beta, c, scratch);
+        }
+    }
+}
+
+/// Split `c` into one mutable slice per batch item (validated up front).
+fn item_slices(c: &mut [f32], stride_c: usize, batch: usize) -> Vec<&mut [f32]> {
+    if batch == 1 {
+        vec![c]
+    } else {
+        c.chunks_mut(stride_c).take(batch).collect()
+    }
+}
+
+/// Validate one operand slab: leading dimension, per-item extent, stride
+/// coverage (output items must not overlap) and total slab length.
+#[allow(clippy::too_many_arguments)]
+fn validate_operand(
+    operand: &'static str,
+    rows: usize,
+    cols: usize,
+    ld: usize,
+    stride: usize,
+    batch: usize,
+    len: usize,
+    is_output: bool,
+) -> Result<(), BlasError> {
+    if rows == 0 || cols == 0 {
+        return Ok(());
+    }
+    if ld < cols {
+        return Err(BlasError::BadLeadingDim { operand, ld, cols });
+    }
+    let item_need = (rows - 1) * ld + cols;
+    // Overlapping (or interleaved) *output* items would race under the
+    // thread fan-out and double-apply beta serially; inputs are read-only,
+    // so any stride (including overlapping windows and 0 = broadcast) is
+    // fine as long as the slab is long enough.
+    if batch > 1 && is_output && stride < item_need {
+        return Err(BlasError::BadBatchStride { operand, stride, need: item_need });
+    }
+    let need = (batch - 1) * stride + item_need;
+    if len < need {
+        return Err(BlasError::BufferTooSmall { operand, need, got: len });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{sgemm, Backend, Matrix};
+    use crate::gemm::dispatch::DispatchConfig;
+    use crate::util::prng::Pcg32;
+    use crate::util::testkit::assert_allclose;
+
+    /// Oracle: the naive per-item loop this whole module must match.
+    #[allow(clippy::too_many_arguments)]
+    fn per_item_naive(
+        transa: Transpose,
+        transb: Transpose,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        a: &[f32],
+        lda: usize,
+        b: &[f32],
+        ldb: usize,
+        beta: f32,
+        c: &mut [f32],
+        ldc: usize,
+        batch: usize,
+        strides: BatchStrides,
+    ) {
+        for i in 0..batch {
+            sgemm(
+                Backend::Naive,
+                transa,
+                transb,
+                m,
+                n,
+                k,
+                alpha,
+                &a[i * strides.a..],
+                lda,
+                &b[i * strides.b..],
+                ldb,
+                beta,
+                &mut c[i * strides.c..],
+                ldc,
+            )
+            .unwrap();
+        }
+    }
+
+    fn rand_vec(seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        let mut v = vec![0.0f32; len];
+        rng.fill_f32(&mut v, -1.0, 1.0);
+        v
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn check_batch(
+        d: &GemmDispatch,
+        transa: Transpose,
+        transb: Transpose,
+        (m, n, k): (usize, usize, usize),
+        batch: usize,
+        strides: BatchStrides,
+        (lda, ldb, ldc): (usize, usize, usize),
+        seed: u64,
+        what: &str,
+    ) {
+        let (ar, _ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+        let (br, _bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+        let a_len = strides.a * (batch - 1) + ar * lda;
+        let b_len = strides.b * (batch - 1) + br * ldb;
+        let c_len = strides.c * (batch - 1) + m * ldc;
+        let a = rand_vec(seed, a_len);
+        let b = rand_vec(seed ^ 0xB, b_len);
+        let mut c_got = rand_vec(seed ^ 0xC, c_len);
+        let mut c_ref = c_got.clone();
+        gemm_batch(d, transa, transb, m, n, k, 0.75, &a, lda, &b, ldb, 0.5, &mut c_got, ldc, batch, strides)
+            .unwrap();
+        per_item_naive(transa, transb, m, n, k, 0.75, &a, lda, &b, ldb, 0.5, &mut c_ref, ldc, batch, strides);
+        assert_allclose(&c_got, &c_ref, 5e-4, 1e-4, what);
+    }
+
+    #[test]
+    fn contiguous_batch_matches_per_item_loop() {
+        let d = GemmDispatch::default();
+        let (m, n, k) = (9usize, 7usize, 11usize);
+        check_batch(
+            &d,
+            Transpose::No,
+            Transpose::No,
+            (m, n, k),
+            5,
+            BatchStrides::contiguous(m, n, k),
+            (k, n, n),
+            0xBA7C,
+            "contiguous batch",
+        );
+    }
+
+    #[test]
+    fn shared_b_fold_matches_per_item_loop() {
+        let d = GemmDispatch::default();
+        let (m, n, k) = (6usize, 10usize, 8usize);
+        check_batch(
+            &d,
+            Transpose::No,
+            Transpose::No,
+            (m, n, k),
+            4,
+            BatchStrides::shared_b(m, n, k),
+            (k, n, n),
+            0x5B0F,
+            "shared-B fold",
+        );
+    }
+
+    #[test]
+    fn padded_strides_and_transposes_match_per_item_loop() {
+        let d = GemmDispatch::default();
+        // ld > logical width and inter-item gaps: nothing may leak across
+        // the padding, transposed operands take the general path.
+        let (m, n, k) = (5usize, 6usize, 7usize);
+        let (lda, ldb, ldc) = (m + 2, n + 3, n + 1); // transa=Yes: A stored k×m
+        let strides = BatchStrides { a: (k) * lda + 5, b: (n) * ldb + 2, c: m * ldc + 4 };
+        check_batch(
+            &d,
+            Transpose::Yes,
+            Transpose::Yes,
+            (m, n, k),
+            3,
+            strides,
+            (lda, ldb, ldc),
+            0x9AD5,
+            "padded strided batch TT",
+        );
+    }
+
+    #[test]
+    fn many_items_exercise_the_thread_fanout() {
+        // parallel_min_flops = 0 forces the fan-out even at test sizes.
+        let cfg =
+            DispatchConfig { threads: 3, parallel_min_flops: 0.0, ..DispatchConfig::default() };
+        let d = GemmDispatch::new(cfg);
+        let (m, n, k) = (8usize, 5usize, 16usize);
+        // Non-foldable (padded C stride) so the per-item fan-out runs.
+        let strides = BatchStrides { a: m * k, b: k * n, c: m * n + 7 };
+        check_batch(
+            &d,
+            Transpose::No,
+            Transpose::No,
+            (m, n, k),
+            11,
+            strides,
+            (k, n, n),
+            0xFA20,
+            "thread fan-out",
+        );
+    }
+
+    #[test]
+    fn batch_zero_and_degenerate_dims_are_noops() {
+        let d = GemmDispatch::default();
+        let mut c = vec![3.0f32; 8];
+        gemm_batch(&d, Transpose::No, Transpose::No, 2, 2, 2, 1.0, &[], 2, &[], 2, 0.0, &mut c, 2, 0, BatchStrides::contiguous(2, 2, 2))
+            .unwrap();
+        assert!(c.iter().all(|&x| x == 3.0), "batch=0 must not touch C");
+        gemm_batch(&d, Transpose::No, Transpose::No, 0, 2, 2, 1.0, &[], 2, &[1.0; 4], 2, 0.0, &mut c, 2, 2, BatchStrides::contiguous(0, 2, 2))
+            .unwrap();
+        assert!(c.iter().all(|&x| x == 3.0), "m=0 must not touch C");
+    }
+
+    #[test]
+    fn k_zero_scales_every_item_by_beta() {
+        let d = GemmDispatch::default();
+        let (m, n) = (2usize, 3usize);
+        let mut c = vec![2.0f32; 2 * (m * n)];
+        gemm_batch(&d, Transpose::No, Transpose::No, m, n, 0, 1.0, &[], 1, &[], 1, 0.5, &mut c, n, 2, BatchStrides::contiguous(m, n, 0))
+            .unwrap();
+        assert!(c.iter().all(|&x| x == 1.0), "{c:?}");
+    }
+
+    #[test]
+    fn overlapping_output_items_are_rejected() {
+        let d = GemmDispatch::default();
+        let mut c = vec![0.0f32; 100];
+        let a = vec![0.0f32; 100];
+        let b = vec![0.0f32; 100];
+        // C items need 4 elements each but stride is 2 → overlap.
+        let strides = BatchStrides { a: 4, b: 4, c: 2 };
+        let err = gemm_batch(&d, Transpose::No, Transpose::No, 2, 2, 2, 1.0, &a, 2, &b, 2, 0.0, &mut c, 2, 3, strides);
+        assert!(matches!(err, Err(BlasError::BadBatchStride { operand: "C", .. })), "{err:?}");
+    }
+
+    #[test]
+    fn short_slab_is_rejected() {
+        let d = GemmDispatch::default();
+        let mut c = vec![0.0f32; 12];
+        let a = vec![0.0f32; 7]; // needs 2 items × stride 4 → 8
+        let b = vec![0.0f32; 100];
+        let err = gemm_batch(
+            &d,
+            Transpose::No,
+            Transpose::No,
+            2,
+            2,
+            2,
+            1.0,
+            &a,
+            2,
+            &b,
+            2,
+            0.0,
+            &mut c,
+            2,
+            2,
+            BatchStrides::contiguous(2, 2, 2),
+        );
+        assert!(matches!(err, Err(BlasError::BufferTooSmall { operand: "A", .. })), "{err:?}");
+    }
+
+    #[test]
+    fn forced_kernel_batches_match_too() {
+        let (m, n, k) = (7usize, 9usize, 13usize);
+        let batch = 3usize;
+        let strides = BatchStrides::contiguous(m, n, k);
+        let a = rand_vec(1, strides.a * batch);
+        let b = rand_vec(2, strides.b * batch);
+        let c0 = rand_vec(3, strides.c * batch);
+        let mut c_ref = c0.clone();
+        per_item_naive(Transpose::No, Transpose::No, m, n, k, 1.0, &a, k, &b, n, 0.0, &mut c_ref, n, batch, strides);
+        let d = GemmDispatch::default();
+        for id in [KernelId::Naive, KernelId::Blocked, KernelId::Simd, KernelId::Avx2] {
+            let mut c_got = c0.clone();
+            gemm_batch_impl(
+                &d,
+                Some(id),
+                Transpose::No,
+                Transpose::No,
+                m,
+                n,
+                k,
+                1.0,
+                &a,
+                k,
+                &b,
+                n,
+                0.0,
+                &mut c_got,
+                n,
+                batch,
+                strides,
+            )
+            .unwrap();
+            assert_allclose(&c_got, &c_ref, 5e-4, 1e-4, &format!("forced {id:?} batch"));
+        }
+    }
+
+    #[test]
+    fn fold_equals_explicit_loop_with_matrix_api() {
+        // The fold path must equal composing the items by hand with the
+        // Matrix API (deterministic shapes; exercises beta on every item).
+        let d = GemmDispatch::default();
+        let (m, n, k, batch) = (4usize, 5usize, 6usize, 3usize);
+        let a = rand_vec(11, batch * m * k);
+        let b = rand_vec(12, k * n);
+        let mut c = vec![1.0f32; batch * m * n];
+        gemm_batch(&d, Transpose::No, Transpose::No, m, n, k, 2.0, &a, k, &b, n, -1.0, &mut c, n, batch, BatchStrides::shared_b(m, n, k))
+            .unwrap();
+        for i in 0..batch {
+            let ai = Matrix::from_fn(m, k, |r, col| a[i * m * k + r * k + col]);
+            let bi = Matrix::from_fn(k, n, |r, col| b[r * n + col]);
+            let mut ci = Matrix::from_fn(m, n, |_, _| 1.0);
+            crate::blas::sgemm_matrix(Backend::Naive, Transpose::No, Transpose::No, 2.0, &ai, &bi, -1.0, &mut ci)
+                .unwrap();
+            let got = &c[i * m * n..(i + 1) * m * n];
+            assert_allclose(got, ci.data(), 5e-4, 1e-4, &format!("fold item {i}"));
+        }
+    }
+}

@@ -1,0 +1,855 @@
+//! Runtime kernel dispatch: one production entry point over every backend.
+//!
+//! The paper's thesis is that GEMM wins by matching the kernel to the
+//! machine; this module extends that to matching the kernel to the *call*.
+//! It maintains a registry of every implementation in the crate — naive,
+//! blocked (ATLAS proxy), Emmerald SSE, Emmerald AVX2, thread-parallel and
+//! Strassen–Winograd — with runtime CPU-feature detection, and selects one
+//! per call from shape-based heuristics:
+//!
+//! * **tiny problems** go to the naive triple loop (packing and blocking
+//!   overhead would dominate),
+//! * **large no-transpose problems** go to the thread-parallel driver
+//!   (row-sliced over the widest available serial kernel),
+//! * **huge square-ish no-transpose problems on a single-threaded
+//!   config** go to Strassen–Winograd (the asymptotic win above the
+//!   crossover the `strassen_crossover` bench measures; with threads
+//!   available, row-parallelism wins at full vector-kernel precision),
+//! * **everything else** goes to the widest serial vector kernel the CPU
+//!   supports (AVX2+FMA, else SSE, else the scalar blocked proxy).
+//!
+//! The block geometries used by the vector kernels are part of the
+//! dispatcher state, so [`crate::autotune::tune_and_install`] can feed
+//! empirical search results straight into the hot path.
+//!
+//! A process-wide instance backs [`crate::blas::Backend::Dispatch`] (and
+//! [`crate::blas::Backend::Auto`], which now resolves to it); construct a
+//! local [`GemmDispatch`] for custom thresholds or deterministic tests.
+
+use super::params::BlockParams;
+use super::simd::VecIsa;
+use super::{blocked, naive, parallel, simd, strassen};
+use crate::blas::{Backend, MatMut, MatRef, Matrix, Transpose};
+use std::sync::{OnceLock, RwLock};
+
+/// Identifier of one GEMM implementation in the registry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelId {
+    /// Three nested loops (also the correctness oracle).
+    Naive,
+    /// Cache-blocked scalar GEMM (ATLAS proxy).
+    Blocked,
+    /// Emmerald SSE (the paper's kernel).
+    Simd,
+    /// Emmerald AVX2 + FMA.
+    Avx2,
+    /// Thread-parallel row-sliced driver over the widest vector kernel.
+    Parallel,
+    /// Strassen–Winograd recursion with an Emmerald base case.
+    Strassen,
+}
+
+impl KernelId {
+    /// Every kernel, in registry order.
+    pub const ALL: [KernelId; 6] = [
+        KernelId::Naive,
+        KernelId::Blocked,
+        KernelId::Simd,
+        KernelId::Avx2,
+        KernelId::Parallel,
+        KernelId::Strassen,
+    ];
+
+    /// Human-readable name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelId::Naive => "naive",
+            KernelId::Blocked => "blocked",
+            KernelId::Simd => "emmerald-sse",
+            KernelId::Avx2 => "emmerald-avx2",
+            KernelId::Parallel => "parallel",
+            KernelId::Strassen => "strassen",
+        }
+    }
+
+    /// CPU-feature requirement, for the registry listing.
+    pub fn requires(self) -> &'static str {
+        match self {
+            KernelId::Naive | KernelId::Blocked => "none",
+            KernelId::Simd | KernelId::Parallel => "sse",
+            KernelId::Avx2 => "avx2+fma",
+            KernelId::Strassen => "none (base case uses best serial kernel)",
+        }
+    }
+
+    /// Whether this kernel can run on the current CPU.
+    pub fn available(self) -> bool {
+        match self {
+            KernelId::Naive | KernelId::Blocked | KernelId::Strassen => true,
+            KernelId::Simd | KernelId::Parallel => detect_sse(),
+            KernelId::Avx2 => detect_avx2(),
+        }
+    }
+}
+
+/// Single source of truth for SSE availability (shared with
+/// [`crate::blas::Backend`]'s resolver).
+pub(crate) fn detect_sse() -> bool {
+    cfg!(target_arch = "x86_64") && std::arch::is_x86_feature_detected!("sse")
+}
+
+/// Single source of truth for AVX2+FMA availability.
+pub(crate) fn detect_avx2() -> bool {
+    cfg!(target_arch = "x86_64")
+        && std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("fma")
+}
+
+/// One registry row: a kernel plus its availability on this CPU.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelInfo {
+    /// Which kernel.
+    pub id: KernelId,
+    /// `id.name()`, denormalised for table rendering.
+    pub name: &'static str,
+    /// Feature requirement description.
+    pub requires: &'static str,
+    /// Detected at call time on this CPU.
+    pub available: bool,
+}
+
+/// Enumerate every kernel with its availability on this CPU.
+pub fn registry() -> Vec<KernelInfo> {
+    KernelId::ALL
+        .iter()
+        .map(|&id| KernelInfo {
+            id,
+            name: id.name(),
+            requires: id.requires(),
+            available: id.available(),
+        })
+        .collect()
+}
+
+/// The logical shape of one GEMM call, as the heuristics see it.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmShape {
+    /// Output rows.
+    pub m: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Dot-product length.
+    pub k: usize,
+    /// Logical transposition of `A`.
+    pub transa: Transpose,
+    /// Logical transposition of `B`.
+    pub transb: Transpose,
+}
+
+impl GemmShape {
+    /// Useful flops (the paper's `2MNK`).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Largest dimension.
+    pub fn max_dim(&self) -> usize {
+        self.m.max(self.n).max(self.k)
+    }
+
+    /// Smallest dimension.
+    pub fn min_dim(&self) -> usize {
+        self.m.min(self.n).min(self.k)
+    }
+
+    /// True when neither operand is logically transposed.
+    pub fn no_trans(&self) -> bool {
+        self.transa == Transpose::No && self.transb == Transpose::No
+    }
+}
+
+/// Heuristic thresholds and kernel geometries for a [`GemmDispatch`].
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchConfig {
+    /// Problems with every dimension at or below this go to [`KernelId::Naive`]
+    /// (blocking/packing setup would cost more than the multiply).
+    pub tiny_dim: usize,
+    /// Minimum `2MNK` flops before the thread-parallel driver is worth its
+    /// spawn/join overhead (given more than one thread).
+    pub parallel_min_flops: f64,
+    /// Minimum smallest-dimension before Strassen–Winograd beats the
+    /// blocked SIMD kernel's constant factor (the crossover question the
+    /// paper left open; `strassen_crossover` measures it empirically).
+    pub strassen_min_dim: usize,
+    /// Recursion cutoff handed to the Strassen driver.
+    pub strassen_cutoff: usize,
+    /// Worker threads available to the parallel driver and the batched API.
+    pub threads: usize,
+    /// Block geometry for the SSE kernel (autotune can overwrite).
+    pub sse: BlockParams,
+    /// Block geometry for the AVX2 kernel (autotune can overwrite).
+    pub avx2: BlockParams,
+    /// Block geometry for the scalar blocked proxy (autotune can overwrite).
+    pub blocked: BlockParams,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        Self {
+            tiny_dim: 8,
+            // The 2MNK flop count of one 256³ GEMM; below this a serial
+            // vector kernel finishes before threads are even scheduled.
+            parallel_min_flops: 2.0 * 256.0 * 256.0 * 256.0,
+            strassen_min_dim: 1024,
+            strassen_cutoff: strassen::DEFAULT_CUTOFF,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            sse: BlockParams::emmerald_sse(),
+            avx2: BlockParams::emmerald_avx2(),
+            blocked: BlockParams::atlas_proxy(),
+        }
+    }
+}
+
+/// The dispatcher: detected CPU features + heuristic configuration.
+#[derive(Clone, Debug)]
+pub struct GemmDispatch {
+    cfg: DispatchConfig,
+    have_sse: bool,
+    have_avx2: bool,
+}
+
+impl GemmDispatch {
+    /// Probe CPU features once and bind the configuration.
+    pub fn new(cfg: DispatchConfig) -> Self {
+        Self { cfg, have_sse: detect_sse(), have_avx2: detect_avx2() }
+    }
+
+    /// As [`new`](Self::new), but with vector ISAs *masked off* (features
+    /// can be hidden, never faked — the unsafe kernels only run when the
+    /// CPU really supports them). For deterministic selection tests and
+    /// for measuring the scalar fallback path.
+    pub fn with_masked_features(cfg: DispatchConfig, allow_sse: bool, allow_avx2: bool) -> Self {
+        let probed = Self::new(cfg);
+        Self {
+            cfg,
+            have_sse: probed.have_sse && allow_sse,
+            have_avx2: probed.have_avx2 && allow_avx2,
+        }
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &DispatchConfig {
+        &self.cfg
+    }
+
+    /// Worker threads the parallel paths may use.
+    pub fn threads(&self) -> usize {
+        self.cfg.threads.max(1)
+    }
+
+    /// True when the SSE kernel is usable.
+    pub fn has_sse(&self) -> bool {
+        self.have_sse
+    }
+
+    /// True when the AVX2 kernel is usable.
+    pub fn has_avx2(&self) -> bool {
+        self.have_avx2
+    }
+
+    /// Block geometry the SSE kernel will run with.
+    pub fn params_sse(&self) -> &BlockParams {
+        &self.cfg.sse
+    }
+
+    /// Block geometry the AVX2 kernel will run with.
+    pub fn params_avx2(&self) -> &BlockParams {
+        &self.cfg.avx2
+    }
+
+    /// Install tuned block parameters for one kernel family (the autotune
+    /// feed). Parameters are validated; families without a geometry
+    /// (naive/parallel/strassen) are ignored. Returns whether anything
+    /// was updated.
+    pub fn set_tuned(&mut self, id: KernelId, params: BlockParams) -> Result<bool, String> {
+        params.validate()?;
+        match id {
+            KernelId::Simd => self.cfg.sse = params,
+            KernelId::Avx2 => self.cfg.avx2 = params,
+            KernelId::Blocked => self.cfg.blocked = params,
+            KernelId::Naive | KernelId::Parallel | KernelId::Strassen => return Ok(false),
+        }
+        Ok(true)
+    }
+
+    /// The widest serial kernel this CPU supports — the single source of
+    /// the AVX2 → SSE → blocked preference ladder.
+    pub fn best_serial_vector(&self) -> KernelId {
+        if self.have_avx2 {
+            KernelId::Avx2
+        } else if self.have_sse {
+            KernelId::Simd
+        } else {
+            KernelId::Blocked
+        }
+    }
+
+    /// The serial kernel the heuristics would pick for this shape
+    /// (never `Parallel` or `Strassen`) — used for per-item work inside
+    /// the batched driver and as the fallback for degraded calls.
+    pub fn select_serial(&self, shape: &GemmShape, alpha: f32) -> KernelId {
+        if alpha == 0.0 || shape.k == 0 || shape.max_dim() <= self.cfg.tiny_dim {
+            return KernelId::Naive;
+        }
+        self.best_serial_vector()
+    }
+
+    /// Pick a kernel for one call. Pure function of (shape, alpha, config,
+    /// CPU features): the selected kernel is always available and always
+    /// supports the call (transposed operands never select
+    /// `Parallel`/`Strassen`).
+    pub fn select(&self, shape: &GemmShape, alpha: f32) -> KernelId {
+        let serial = self.select_serial(shape, alpha);
+        if serial == KernelId::Naive || serial == KernelId::Blocked || !shape.no_trans() {
+            return serial;
+        }
+        // Parallel outranks Strassen whenever threads exist: row-slicing
+        // scales near-linearly at full vector-kernel precision, while the
+        // serial Strassen recursion only shaves ~23% of flops per level
+        // and costs ~1 bit of f32 accuracy each level. Strassen is the
+        // single-threaded big-problem tier.
+        if self.threads() > 1 && shape.m >= 2 && shape.flops() >= self.cfg.parallel_min_flops {
+            return KernelId::Parallel;
+        }
+        if self.threads() <= 1 && shape.min_dim() >= self.cfg.strassen_min_dim {
+            return KernelId::Strassen;
+        }
+        serial
+    }
+
+    /// Run one GEMM through the heuristics. Returns the kernel that ran.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm(
+        &self,
+        transa: Transpose,
+        transb: Transpose,
+        alpha: f32,
+        a: MatRef<'_>,
+        b: MatRef<'_>,
+        beta: f32,
+        c: &mut MatMut<'_>,
+    ) -> KernelId {
+        let shape = shape_of(transa, transb, a, c);
+        assert_coherent(&shape, a, b);
+        let id = self.select(&shape, alpha);
+        self.run(id, &shape, transa, transb, alpha, a, b, beta, c)
+    }
+
+    /// Run one GEMM on a *specific* kernel (the conformance suite drives
+    /// every registry entry through this). Calls a kernel cannot express —
+    /// transposed operands for `Parallel`/`Strassen`, a vector kernel on a
+    /// CPU without the ISA — degrade to the best serial kernel so the call
+    /// always completes. Returns the kernel that actually ran.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_with(
+        &self,
+        id: KernelId,
+        transa: Transpose,
+        transb: Transpose,
+        alpha: f32,
+        a: MatRef<'_>,
+        b: MatRef<'_>,
+        beta: f32,
+        c: &mut MatMut<'_>,
+    ) -> KernelId {
+        let shape = shape_of(transa, transb, a, c);
+        assert_coherent(&shape, a, b);
+        self.run(id, &shape, transa, transb, alpha, a, b, beta, c)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        &self,
+        id: KernelId,
+        shape: &GemmShape,
+        transa: Transpose,
+        transb: Transpose,
+        alpha: f32,
+        a: MatRef<'_>,
+        b: MatRef<'_>,
+        beta: f32,
+        c: &mut MatMut<'_>,
+    ) -> KernelId {
+        match id {
+            KernelId::Naive => {
+                naive::gemm(transa, transb, alpha, a, b, beta, c);
+                KernelId::Naive
+            }
+            KernelId::Blocked => {
+                blocked::gemm(&self.cfg.blocked, transa, transb, alpha, a, b, beta, c);
+                KernelId::Blocked
+            }
+            KernelId::Simd => {
+                if !self.have_sse {
+                    return self.run(KernelId::Blocked, shape, transa, transb, alpha, a, b, beta, c);
+                }
+                simd::gemm(&self.cfg.sse, transa, transb, alpha, a, b, beta, c);
+                KernelId::Simd
+            }
+            KernelId::Avx2 => {
+                if !self.have_avx2 {
+                    return self.run(KernelId::Simd, shape, transa, transb, alpha, a, b, beta, c);
+                }
+                super::avx2::gemm(&self.cfg.avx2, transa, transb, alpha, a, b, beta, c);
+                KernelId::Avx2
+            }
+            KernelId::Parallel => {
+                // Mirror gemm_parallel_vec's internal serial fallback so
+                // the returned id names the kernel that actually ran.
+                let usable_threads = self.threads().min(shape.m.max(1));
+                if !shape.no_trans() || !self.have_sse || usable_threads <= 1 || shape.m < 2 {
+                    return self.run_serial_vector(shape, transa, transb, alpha, a, b, beta, c);
+                }
+                let (isa, params) = match self.best_serial_vector() {
+                    KernelId::Avx2 => (VecIsa::Avx2, &self.cfg.avx2),
+                    _ => (VecIsa::Sse, &self.cfg.sse),
+                };
+                match parallel::gemm_parallel_vec(
+                    isa,
+                    self.threads(),
+                    params,
+                    alpha,
+                    a,
+                    b,
+                    beta,
+                    c,
+                ) {
+                    Ok(()) => KernelId::Parallel,
+                    // Shape mismatch can only come from caller-constructed
+                    // inconsistent views; recover via the serial path.
+                    Err(_) => self.run_serial_vector(shape, transa, transb, alpha, a, b, beta, c),
+                }
+            }
+            KernelId::Strassen => {
+                if !shape.no_trans() || alpha == 0.0 || shape.min_dim() == 0 {
+                    return self.run_serial_vector(shape, transa, transb, alpha, a, b, beta, c);
+                }
+                self.run_strassen(alpha, a, b, beta, c);
+                KernelId::Strassen
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_serial_vector(
+        &self,
+        shape: &GemmShape,
+        transa: Transpose,
+        transb: Transpose,
+        alpha: f32,
+        a: MatRef<'_>,
+        b: MatRef<'_>,
+        beta: f32,
+        c: &mut MatMut<'_>,
+    ) -> KernelId {
+        let id = self.select_serial(shape, alpha);
+        self.run(id, shape, transa, transb, alpha, a, b, beta, c)
+    }
+
+    /// Strassen path: materialise contiguous operands, recurse, then apply
+    /// `alpha`/`beta` (the recursion itself computes plain `A·B`).
+    fn run_strassen(&self, alpha: f32, a: MatRef<'_>, b: MatRef<'_>, beta: f32, c: &mut MatMut<'_>) {
+        let base = match self.best_serial_vector() {
+            KernelId::Avx2 => Backend::Avx2,
+            KernelId::Simd => Backend::Simd,
+            _ => Backend::Blocked,
+        };
+        // Copies are O(n²) against an O(n^2.8) multiply: noise at the
+        // sizes that reach this path.
+        let a_own = Matrix::from_fn(a.rows(), a.cols(), |r, col| a.get(r, col));
+        let b_own = Matrix::from_fn(b.rows(), b.cols(), |r, col| b.get(r, col));
+        let t = strassen::strassen_matmul(&a_own, &b_own, self.cfg.strassen_cutoff, base);
+        c.scale(beta);
+        for r in 0..c.rows() {
+            for col in 0..c.cols() {
+                let v = c.get(r, col) + alpha * t.get(r, col);
+                c.set(r, col, v);
+            }
+        }
+    }
+}
+
+impl Default for GemmDispatch {
+    fn default() -> Self {
+        Self::new(DispatchConfig::default())
+    }
+}
+
+/// Every kernel (serial ones included) reads through unchecked indexing
+/// that trusts `op(A)` to be `m×k` and `op(B)` to be `k×n`; incoherent
+/// views must be rejected loudly here, not discovered as out-of-bounds
+/// reads inside a kernel. (`blas::sgemm` constructs coherent views by
+/// definition; this guards direct `GemmDispatch` callers.)
+fn assert_coherent(shape: &GemmShape, a: MatRef<'_>, b: MatRef<'_>) {
+    if shape.m == 0 || shape.n == 0 {
+        return;
+    }
+    let (ar, ac) = match shape.transa {
+        Transpose::No => (shape.m, shape.k),
+        Transpose::Yes => (shape.k, shape.m),
+    };
+    let (br, bc) = match shape.transb {
+        Transpose::No => (shape.k, shape.n),
+        Transpose::Yes => (shape.n, shape.k),
+    };
+    assert!(
+        a.rows() == ar && a.cols() == ac,
+        "dispatch: A stored {}x{}, call needs {}x{} (m={} n={} k={} ta={:?})",
+        a.rows(),
+        a.cols(),
+        ar,
+        ac,
+        shape.m,
+        shape.n,
+        shape.k,
+        shape.transa
+    );
+    assert!(
+        b.rows() == br && b.cols() == bc,
+        "dispatch: B stored {}x{}, call needs {}x{} (m={} n={} k={} tb={:?})",
+        b.rows(),
+        b.cols(),
+        br,
+        bc,
+        shape.m,
+        shape.n,
+        shape.k,
+        shape.transb
+    );
+}
+
+fn shape_of(transa: Transpose, transb: Transpose, a: MatRef<'_>, c: &MatMut<'_>) -> GemmShape {
+    GemmShape {
+        m: c.rows(),
+        n: c.cols(),
+        k: match transa {
+            Transpose::No => a.cols(),
+            Transpose::Yes => a.rows(),
+        },
+        transa,
+        transb,
+    }
+}
+
+static GLOBAL: OnceLock<RwLock<GemmDispatch>> = OnceLock::new();
+
+fn global_lock() -> &'static RwLock<GemmDispatch> {
+    GLOBAL.get_or_init(|| RwLock::new(GemmDispatch::default()))
+}
+
+/// Run `f` against the process-wide dispatcher.
+///
+/// The dispatcher is *cloned out of the lock* (it is a small plain-data
+/// struct) so the lock is never held across kernel execution — a long
+/// GEMM must not block [`install_tuned`], and a queued writer must not
+/// stall other dispatch calls.
+pub fn with_global<R>(f: impl FnOnce(&GemmDispatch) -> R) -> R {
+    let snapshot = {
+        let guard = global_lock().read().unwrap_or_else(|e| e.into_inner());
+        guard.clone()
+    };
+    f(&snapshot)
+}
+
+/// The block geometry the process-wide dispatcher currently carries for
+/// one kernel family (tuned via [`install_tuned`], defaults otherwise).
+/// Families without a geometry return the SSE default.
+pub fn tuned_params(id: KernelId) -> BlockParams {
+    with_global(|d| match id {
+        KernelId::Avx2 => d.cfg.avx2,
+        KernelId::Blocked => d.cfg.blocked,
+        _ => d.cfg.sse,
+    })
+}
+
+/// One GEMM through the process-wide dispatcher (the implementation behind
+/// [`crate::blas::Backend::Dispatch`]). Returns the kernel that ran.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_auto(
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+) -> KernelId {
+    with_global(|d| d.gemm(transa, transb, alpha, a, b, beta, c))
+}
+
+/// Install tuned block parameters into the process-wide dispatcher.
+/// Returns whether the kernel family carries a geometry that was updated.
+pub fn install_tuned(id: KernelId, params: BlockParams) -> Result<bool, String> {
+    let mut guard = global_lock().write().unwrap_or_else(|e| e.into_inner());
+    guard.set_tuned(id, params)
+}
+
+/// Clone the process-wide dispatcher (inspection / diagnostics).
+pub fn global_snapshot() -> GemmDispatch {
+    with_global(|d| d.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::testutil::{check_grid, check_one};
+    use crate::util::testkit::assert_allclose;
+
+    fn no_no() -> (Transpose, Transpose) {
+        (Transpose::No, Transpose::No)
+    }
+
+    #[test]
+    fn registry_lists_all_kernels_with_baselines_available() {
+        let reg = registry();
+        assert_eq!(reg.len(), KernelId::ALL.len());
+        for info in &reg {
+            assert_eq!(info.name, info.id.name());
+            if matches!(info.id, KernelId::Naive | KernelId::Blocked | KernelId::Strassen) {
+                assert!(info.available, "{} must always be available", info.name);
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            // SSE is part of the x86-64 baseline.
+            assert!(KernelId::Simd.available());
+            assert!(KernelId::Parallel.available());
+        }
+    }
+
+    #[test]
+    fn selection_honours_shape_heuristics() {
+        if !detect_sse() {
+            eprintln!("SKIP: no SSE — scalar-only selection covered elsewhere");
+            return;
+        }
+        let cfg = DispatchConfig {
+            tiny_dim: 8,
+            parallel_min_flops: 2.0 * 64.0 * 64.0 * 64.0,
+            strassen_min_dim: 256,
+            threads: 4,
+            ..DispatchConfig::default()
+        };
+        let d = GemmDispatch::new(cfg);
+        let serial = d.select_serial(
+            &GemmShape { m: 32, n: 32, k: 32, transa: Transpose::No, transb: Transpose::No },
+            1.0,
+        );
+        let shape = |m, n, k, ta, tb| GemmShape { m, n, k, transa: ta, transb: tb };
+
+        // Tiny → naive, regardless of transposes.
+        assert_eq!(d.select(&shape(4, 8, 2, Transpose::No, Transpose::No), 1.0), KernelId::Naive);
+        assert_eq!(d.select(&shape(8, 8, 8, Transpose::Yes, Transpose::No), 1.0), KernelId::Naive);
+        // alpha == 0 / k == 0 are pure beta-scales.
+        assert_eq!(d.select(&shape(500, 500, 500, Transpose::No, Transpose::No), 0.0), KernelId::Naive);
+        assert_eq!(d.select(&shape(500, 500, 0, Transpose::No, Transpose::No), 1.0), KernelId::Naive);
+        // Mid-size → the serial vector kernel.
+        assert_eq!(d.select(&shape(32, 32, 32, Transpose::No, Transpose::No), 1.0), serial);
+        // Large no-transpose → parallel (outranks strassen when threaded).
+        assert_eq!(d.select(&shape(128, 128, 128, Transpose::No, Transpose::No), 1.0), KernelId::Parallel);
+        assert_eq!(d.select(&shape(300, 300, 300, Transpose::No, Transpose::No), 1.0), KernelId::Parallel);
+        // Huge no-transpose on a single-threaded config → strassen.
+        let d1 = GemmDispatch::new(DispatchConfig { threads: 1, ..cfg });
+        assert_eq!(d1.select(&shape(300, 300, 300, Transpose::No, Transpose::No), 1.0), KernelId::Strassen);
+        // Single-row output cannot row-split → serial even above threshold.
+        assert_eq!(d.select(&shape(1, 512, 512, Transpose::No, Transpose::No), 1.0), serial);
+        // Transposed operands never select parallel/strassen.
+        assert_eq!(d.select(&shape(300, 300, 300, Transpose::Yes, Transpose::No), 1.0), serial);
+        assert_eq!(d.select(&shape(128, 128, 128, Transpose::No, Transpose::Yes), 1.0), serial);
+        // Selected kernels are always available.
+        for &(m, n, k) in &[(4usize, 4usize, 4usize), (64, 64, 64), (300, 300, 300)] {
+            let id = d.select(&shape(m, n, k, Transpose::No, Transpose::No), 1.0);
+            assert!(id.available(), "selected unavailable kernel {id:?}");
+        }
+    }
+
+    #[test]
+    fn single_thread_config_never_selects_parallel() {
+        let cfg = DispatchConfig {
+            threads: 1,
+            parallel_min_flops: 0.0,
+            ..DispatchConfig::default()
+        };
+        let d = GemmDispatch::new(cfg);
+        let s = GemmShape { m: 200, n: 200, k: 200, transa: Transpose::No, transb: Transpose::No };
+        assert_ne!(d.select(&s, 1.0), KernelId::Parallel);
+    }
+
+    #[test]
+    fn masked_features_fall_back_to_blocked() {
+        let d = GemmDispatch::with_masked_features(DispatchConfig::default(), false, false);
+        assert!(!d.has_sse());
+        assert!(!d.has_avx2());
+        let s = GemmShape { m: 64, n: 64, k: 64, transa: Transpose::No, transb: Transpose::No };
+        assert_eq!(d.select(&s, 1.0), KernelId::Blocked);
+        // Running a vector kernel on the masked dispatcher degrades to
+        // blocked and still computes the right answer.
+        check_one(
+            &|ta, tb, alpha, a, b, beta, c| {
+                d.gemm_with(KernelId::Avx2, ta, tb, alpha, a, b, beta, c);
+            },
+            "masked-avx2",
+            Transpose::No,
+            Transpose::No,
+            9,
+            11,
+            13,
+            1.5,
+            0.5,
+            0xD15,
+        );
+    }
+
+    #[test]
+    fn dispatch_matches_naive_on_grid() {
+        let d = GemmDispatch::default();
+        check_grid(
+            &move |ta, tb, alpha, a, b, beta, c| {
+                d.gemm(ta, tb, alpha, a, b, beta, c);
+            },
+            "dispatch",
+        );
+    }
+
+    #[test]
+    fn dispatch_matches_naive_with_aggressive_thresholds() {
+        // Thresholds low enough that the grid crosses the naive→vector and
+        // vector→parallel boundaries (strassen kept out: its multi-level
+        // f32 error needs looser tolerances, covered separately below).
+        let cfg = DispatchConfig {
+            tiny_dim: 4,
+            parallel_min_flops: 2.0 * 16.0 * 16.0 * 16.0,
+            strassen_min_dim: usize::MAX,
+            threads: 3,
+            ..DispatchConfig::default()
+        };
+        let d = GemmDispatch::new(cfg);
+        check_grid(
+            &move |ta, tb, alpha, a, b, beta, c| {
+                d.gemm(ta, tb, alpha, a, b, beta, c);
+            },
+            "dispatch-aggressive",
+        );
+    }
+
+    #[test]
+    fn every_kernel_passes_the_grid_when_forced() {
+        // The cross-backend conformance core: each registry kernel, forced
+        // through the same grid. Strassen's recursion cutoff (256) keeps
+        // grid-sized problems on its exact base case, so the shared
+        // tolerance holds for it too.
+        let d = GemmDispatch::default();
+        for info in registry() {
+            let id = info.id;
+            let dd = d.clone();
+            check_grid(
+                &move |ta, tb, alpha, a, b, beta, c| {
+                    dd.gemm_with(id, ta, tb, alpha, a, b, beta, c);
+                },
+                &format!("forced-{}", info.name),
+            );
+        }
+    }
+
+    #[test]
+    fn deep_strassen_via_dispatch_matches_naive() {
+        if !detect_sse() {
+            eprintln!("SKIP: no SSE");
+            return;
+        }
+        let cfg = DispatchConfig {
+            strassen_min_dim: 32,
+            strassen_cutoff: 16,
+            // Strassen is the single-threaded big-problem tier.
+            threads: 1,
+            ..DispatchConfig::default()
+        };
+        let d = GemmDispatch::new(cfg);
+        let (m, n, k) = (70usize, 65usize, 72usize);
+        let a = Matrix::random(m, k, 41, -1.0, 1.0);
+        let b = Matrix::random(k, n, 42, -1.0, 1.0);
+        let mut c_got = Matrix::from_fn(m, n, |r, col| (r * n + col) as f32 * 0.001);
+        let mut c_ref = c_got.clone();
+        let (ta, tb) = no_no();
+        let ran = d.gemm(ta, tb, 0.5, a.view(), b.view(), 1.5, &mut c_got.view_mut());
+        assert_eq!(ran, KernelId::Strassen);
+        naive::gemm(ta, tb, 0.5, a.view(), b.view(), 1.5, &mut c_ref.view_mut());
+        // Multi-level f32 Strassen: looser tolerance (≈1 bit per level).
+        assert_allclose(c_got.data(), c_ref.data(), 5e-3, 2e-3, "deep strassen dispatch");
+    }
+
+    #[test]
+    fn gemm_reports_the_kernel_that_ran() {
+        let cfg = DispatchConfig {
+            tiny_dim: 4,
+            parallel_min_flops: 2.0 * 32.0 * 32.0 * 32.0,
+            strassen_min_dim: usize::MAX,
+            threads: 2,
+            ..DispatchConfig::default()
+        };
+        let d = GemmDispatch::new(cfg);
+        let run = |m: usize, n: usize, k: usize| {
+            let a = Matrix::random(m, k, 1, -1.0, 1.0);
+            let b = Matrix::random(k, n, 2, -1.0, 1.0);
+            let mut c = Matrix::zeros(m, n);
+            let (ta, tb) = no_no();
+            d.gemm(ta, tb, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut())
+        };
+        assert_eq!(run(2, 3, 4), KernelId::Naive);
+        if d.has_sse() {
+            assert_eq!(run(48, 48, 48), KernelId::Parallel);
+        }
+        let mid = run(16, 16, 16);
+        assert!(mid == KernelId::Avx2 || mid == KernelId::Simd || mid == KernelId::Blocked);
+    }
+
+    #[test]
+    fn tuned_parameters_are_validated_and_installed() {
+        let mut d = GemmDispatch::default();
+        let good = BlockParams { kb: 64, mb: 32, nr: 4, ..BlockParams::emmerald_sse() };
+        assert_eq!(d.set_tuned(KernelId::Simd, good), Ok(true));
+        assert_eq!(d.params_sse().kb, 64);
+        assert_eq!(d.set_tuned(KernelId::Parallel, good), Ok(false));
+        let bad = BlockParams { nr: 9, ..good };
+        assert!(d.set_tuned(KernelId::Avx2, bad).is_err());
+        // And the dispatcher still computes correctly with tuned geometry.
+        check_one(
+            &|ta, tb, alpha, a, b, beta, c| {
+                d.gemm(ta, tb, alpha, a, b, beta, c);
+            },
+            "tuned-dispatch",
+            Transpose::No,
+            Transpose::Yes,
+            17,
+            19,
+            23,
+            -1.0,
+            1.0,
+            0x7E57,
+        );
+    }
+
+    #[test]
+    fn global_dispatcher_runs_and_reports() {
+        let a = Matrix::random(12, 9, 5, -1.0, 1.0);
+        let b = Matrix::random(9, 14, 6, -1.0, 1.0);
+        let mut c_got = Matrix::zeros(12, 14);
+        let mut c_ref = Matrix::zeros(12, 14);
+        let (ta, tb) = no_no();
+        let ran = gemm_auto(ta, tb, 1.0, a.view(), b.view(), 0.0, &mut c_got.view_mut());
+        assert!(ran.available());
+        naive::gemm(ta, tb, 1.0, a.view(), b.view(), 0.0, &mut c_ref.view_mut());
+        assert_allclose(c_got.data(), c_ref.data(), 2e-4, 1e-5, "global dispatch");
+        assert!(global_snapshot().threads() >= 1);
+    }
+}

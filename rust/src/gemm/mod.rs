@@ -23,9 +23,16 @@
 //! * [`blocked`] — the ATLAS proxy: identical blocking, *scalar* kernel.
 //! * [`simd`] — the Emmerald driver (SSE).
 //! * [`avx2`] — the Emmerald driver re-tuned for AVX2 + FMA (extension).
+//! * [`dispatch`] — the production entry point: a kernel registry with
+//!   runtime CPU-feature detection and shape-based selection over every
+//!   backend (including [`parallel`] and [`strassen`]).
+//! * [`batch`] — batched GEMM over strided tensor slabs, amortising
+//!   packing and thread spawn across the batch.
 
 pub mod avx2;
+pub mod batch;
 pub mod blocked;
+pub mod dispatch;
 pub mod parallel;
 pub mod strassen;
 pub mod microkernel;
@@ -34,6 +41,8 @@ pub mod pack;
 pub mod params;
 pub mod simd;
 
+pub use batch::{gemm_batch, BatchStrides};
+pub use dispatch::{registry, DispatchConfig, GemmDispatch, KernelId, KernelInfo};
 pub use params::{BlockParams, Unroll};
 
 #[cfg(test)]

@@ -47,6 +47,20 @@ impl PackedB {
         Self { buf: Vec::new(), nr, kpad: 0, kb_eff: 0, n: 0 }
     }
 
+    /// Re-target the buffer at a different panel width, keeping the
+    /// allocation. Lets one scratch buffer serve GEMMs with different
+    /// `nr` (the batched driver reuses a per-worker buffer across items).
+    pub fn ensure_nr(&mut self, nr: usize) {
+        assert!((1..=8).contains(&nr));
+        if self.nr != nr {
+            self.nr = nr;
+            // Invalidate the logical contents; the allocation survives.
+            self.kpad = 0;
+            self.kb_eff = 0;
+            self.n = 0;
+        }
+    }
+
     /// Pack rows `kk .. kk+kb_eff` of `op(B)` (all `n` columns).
     ///
     /// `b` is the *stored* matrix; `transb` says whether `op(B) = B` or
@@ -184,6 +198,31 @@ impl Default for PackedA {
     }
 }
 
+/// Reusable packing scratch for the blocked drivers.
+///
+/// The serial entry points allocate one of these per call; the batched
+/// driver ([`crate::gemm::batch`]) keeps one per worker thread so the
+/// packing buffers are allocated once and reused across every GEMM in the
+/// batch — the paper's re-buffering cost amortised over the whole batch.
+#[derive(Debug)]
+pub struct Scratch {
+    pub(crate) a: PackedA,
+    pub(crate) b: PackedB,
+}
+
+impl Scratch {
+    /// Fresh, empty scratch buffers.
+    pub fn new() -> Self {
+        Self { a: PackedA::new(), b: PackedB::new(1) }
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +298,113 @@ mod tests {
         assert!(pb.bytes() < big);
         assert_eq!(pb.panels(), 1);
         assert_eq!(pb.kb_eff(), 2);
+    }
+
+    #[test]
+    fn ensure_nr_retargets_and_invalidates() {
+        let b = Matrix::from_fn(10, 10, |r, c| (r + c) as f32);
+        let mut pb = PackedB::new(5);
+        pb.pack(b.view(), Transpose::No, 0, 8, 10);
+        assert_eq!(pb.panels(), 2);
+        pb.ensure_nr(3);
+        pb.pack(b.view(), Transpose::No, 0, 8, 10);
+        assert_eq!(pb.panels(), 4);
+        assert_eq!(pb.panel_width(3), 1);
+        // Same nr is a no-op: contents stay valid.
+        pb.ensure_nr(3);
+        assert_eq!(pb.kb_eff(), 8);
+    }
+
+    #[test]
+    fn k_not_a_multiple_of_pad_granule() {
+        // kb_eff = 13 pads to 16; every padded tail element must be zero
+        // for every lane, or the SIMD full-vector loop reads garbage.
+        let b = Matrix::from_fn(13, 6, |r, c| (r * 10 + c) as f32 + 1.0);
+        let mut pb = PackedB::new(4);
+        pb.pack(b.view(), Transpose::No, 0, 13, 6);
+        assert_eq!(pb.kpad(), 16);
+        for j in 0..6 {
+            let col = pb.col_ptr(j / 4, j % 4);
+            for p in 0..16 {
+                let got = unsafe { *col.add(p) };
+                let want = if p < 13 { b.get(p, j) } else { 0.0 };
+                assert_eq!(got, want, "col {j} p {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn n_not_a_multiple_of_panel_width() {
+        // 7 columns at nr = 5: one full panel + a 2-wide fringe panel whose
+        // unused lanes stay zero.
+        let b = Matrix::from_fn(4, 7, |r, c| (r * 7 + c) as f32 + 1.0);
+        let mut pb = PackedB::new(5);
+        pb.pack(b.view(), Transpose::No, 0, 4, 7);
+        assert_eq!(pb.panels(), 2);
+        assert_eq!(pb.panel_width(0), 5);
+        assert_eq!(pb.panel_width(1), 2);
+        // Fringe panel, in-range lane.
+        let col = pb.col_ptr(1, 1);
+        let vals: Vec<f32> = (0..4).map(|p| unsafe { *col.add(p) }).collect();
+        assert_eq!(vals, vec![7.0, 14.0, 21.0, 28.0]);
+    }
+
+    #[test]
+    fn single_column_matrix_packs() {
+        let b = Matrix::from_fn(5, 1, |r, _| (r + 1) as f32);
+        let mut pb = PackedB::new(5);
+        pb.pack(b.view(), Transpose::No, 0, 5, 1);
+        assert_eq!(pb.panels(), 1);
+        assert_eq!(pb.panel_width(0), 1);
+        let col = pb.col_ptr(0, 0);
+        let vals: Vec<f32> = (0..5).map(|p| unsafe { *col.add(p) }).collect();
+        assert_eq!(vals, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn single_row_a_block_packs() {
+        // mb_eff = 1 with a k-fringe (kb_eff = 3 → kpad = 8).
+        let a = Matrix::from_fn(1, 5, |_, c| (c + 1) as f32);
+        let mut pa = PackedA::new();
+        pa.pack(a.view(), Transpose::No, 0, 1, 2, 3);
+        let r0: Vec<f32> = (0..8).map(|p| unsafe { *pa.row_ptr(0).add(p) }).collect();
+        assert_eq!(&r0[..3], &[3.0, 4.0, 5.0]);
+        assert_eq!(&r0[3..], &[0.0; 5]);
+    }
+
+    #[test]
+    fn strided_source_roundtrips_logical_values_only() {
+        // Source stride wider than the logical width: the pack must read
+        // the logical elements and never the -77 padding sentinels.
+        let b = Matrix::random_strided(9, 4, 9, 0xFACE);
+        let mut pb = PackedB::new(3);
+        pb.pack(b.view(), Transpose::No, 2, 6, 4);
+        for j in 0..4 {
+            let col = pb.col_ptr(j / 3, j % 3);
+            for p in 0..6 {
+                let got = unsafe { *col.add(p) };
+                assert_eq!(got, b.get(2 + p, j), "col {j} p {p}");
+                assert_ne!(got, -77.0, "sentinel leaked into packed panel");
+            }
+        }
+        // Same property for transposed packing from a strided source.
+        let mut pt = PackedB::new(2);
+        pt.pack(b.view(), Transpose::Yes, 1, 3, 5);
+        for j in 0..5 {
+            let col = pt.col_ptr(j / 2, j % 2);
+            for p in 0..3 {
+                // op(B)[kk+p][j] = B[j][kk+p]
+                assert_eq!(unsafe { *col.add(p) }, b.get(j, 1 + p), "T col {j} p {p}");
+            }
+        }
+        // PackedA from the same strided source.
+        let mut pa = PackedA::new();
+        pa.pack(b.view(), Transpose::No, 3, 2, 1, 3);
+        for i in 0..2 {
+            for p in 0..3 {
+                assert_eq!(unsafe { *pa.row_ptr(i).add(p) }, b.get(3 + i, 1 + p), "A row {i} p {p}");
+            }
+        }
     }
 
     #[test]

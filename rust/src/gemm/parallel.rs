@@ -9,13 +9,30 @@
 //! did).
 
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
-use crate::gemm::{simd, BlockParams};
+use crate::gemm::simd::{gemm_vec, VecIsa};
+use crate::gemm::BlockParams;
 
 /// `C = alpha · A·B + beta · C` over `threads` worker threads
 /// (no-transpose operands; the coordinator's training path never needs
 /// transposed parallel GEMM — transposes are handled by the serial API).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_parallel(
+    threads: usize,
+    params: &BlockParams,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+) -> Result<(), BlasError> {
+    gemm_parallel_vec(VecIsa::Sse, threads, params, alpha, a, b, beta, c)
+}
+
+/// ISA-parameterised variant: the dispatch layer routes here with AVX2
+/// when the host supports it, so every thread runs the widest kernel.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_parallel_vec(
+    isa: VecIsa,
     threads: usize,
     params: &BlockParams,
     alpha: f32,
@@ -32,7 +49,7 @@ pub fn gemm_parallel(
     }
     let threads = threads.max(1).min(m.max(1));
     if threads == 1 || m < 2 {
-        simd::gemm(params, Transpose::No, Transpose::No, alpha, a, b, beta, c);
+        gemm_vec(isa, params, Transpose::No, Transpose::No, alpha, a, b, beta, c);
         return Ok(());
     }
 
@@ -55,7 +72,8 @@ pub fn gemm_parallel(
             let a_slice = a.block(r0, 0, rows, k);
             let params = *params;
             scope.spawn(move || {
-                simd::gemm(
+                gemm_vec(
+                    isa,
                     &params,
                     Transpose::No,
                     Transpose::No,

@@ -16,7 +16,7 @@
 //! registers inside the micro-kernel and is written once per panel.
 
 use super::microkernel;
-use super::pack::{PackedA, PackedB};
+use super::pack::Scratch;
 use super::params::BlockParams;
 use crate::blas::{MatMut, MatRef, Transpose};
 
@@ -43,6 +43,23 @@ pub fn gemm(
     gemm_vec(VecIsa::Sse, params, transa, transb, alpha, a, b, beta, c);
 }
 
+/// As [`gemm`], but reusing caller-provided packing buffers — the batched
+/// driver calls this so packing allocation is amortised across a batch.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_scratch(
+    params: &BlockParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+    scratch: &mut Scratch,
+) {
+    gemm_vec_scratch(VecIsa::Sse, params, transa, transb, alpha, a, b, beta, c, scratch);
+}
+
 /// Shared blocked driver over the SSE / AVX2 micro-kernels.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_vec(
@@ -55,6 +72,24 @@ pub(crate) fn gemm_vec(
     b: MatRef<'_>,
     beta: f32,
     c: &mut MatMut<'_>,
+) {
+    let mut scratch = Scratch::new();
+    gemm_vec_scratch(isa, params, transa, transb, alpha, a, b, beta, c, &mut scratch);
+}
+
+/// The driver proper, parameterised over reusable packing scratch.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_vec_scratch(
+    isa: VecIsa,
+    params: &BlockParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+    scratch: &mut Scratch,
 ) {
     params.validate().expect("invalid block parameters");
     let m = c.rows();
@@ -72,8 +107,8 @@ pub(crate) fn gemm_vec(
     // packing becomes mandatory when op(A)'s rows are strided in storage.
     let need_pack_a = params.pack_a || transa == Transpose::Yes;
 
-    let mut packed_b = PackedB::new(params.nr);
-    let mut packed_a = PackedA::new();
+    scratch.b.ensure_nr(params.nr);
+    let (packed_a, packed_b) = (&mut scratch.a, &mut scratch.b);
     let mut sums = [0.0f32; 8];
     let mut sums2 = [0.0f32; 8];
     let mut cols: Vec<*const f32> = Vec::with_capacity(params.nr);
@@ -247,6 +282,47 @@ mod tests {
             &move |ta, tb, alpha, a, b, beta, c| gemm(&p, ta, tb, alpha, a, b, beta, c),
             "simd-packa",
         );
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_and_widths() {
+        // One Scratch must serve a sequence of GEMMs with different
+        // shapes and panel widths (the batched-driver usage pattern).
+        use crate::blas::Matrix;
+        use crate::util::testkit::assert_allclose;
+        let mut scratch = crate::gemm::pack::Scratch::new();
+        for (i, &(m, n, k, nr)) in
+            [(17usize, 9usize, 23usize, 5usize), (4, 4, 4, 2), (33, 15, 40, 7), (1, 1, 1, 5)]
+                .iter()
+                .enumerate()
+        {
+            let p = BlockParams { nr, kb: 16, mb: 8, ..BlockParams::emmerald_sse() };
+            let a = Matrix::random(m, k, i as u64, -1.0, 1.0);
+            let b = Matrix::random(k, n, 100 + i as u64, -1.0, 1.0);
+            let mut c_got = Matrix::zeros(m, n);
+            let mut c_ref = Matrix::zeros(m, n);
+            gemm_with_scratch(
+                &p,
+                Transpose::No,
+                Transpose::No,
+                1.0,
+                a.view(),
+                b.view(),
+                0.0,
+                &mut c_got.view_mut(),
+                &mut scratch,
+            );
+            crate::gemm::naive::gemm(
+                Transpose::No,
+                Transpose::No,
+                1.0,
+                a.view(),
+                b.view(),
+                0.0,
+                &mut c_ref.view_mut(),
+            );
+            assert_allclose(c_got.data(), c_ref.data(), 2e-4, 1e-5, &format!("scratch reuse {i}"));
+        }
     }
 
     #[test]

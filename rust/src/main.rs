@@ -6,7 +6,10 @@
 //! * `sweep`     — Fig. 2 on the host: MFlop/s vs size for all backends.
 //! * `sim`       — Fig. 2 on the simulated PIII (the paper's units).
 //! * `train`     — distributed MLP training (the §4 application).
-//! * `autotune`  — ATLAS-style parameter search for the host kernels.
+//! * `autotune`  — ATLAS-style parameter search for the host kernels
+//!                 (winners feed the dispatch heuristics).
+//! * `dispatch`  — show the kernel registry and what the dispatcher would
+//!                 pick for a given shape.
 //! * `artifacts` — list the AOT artifacts and their metadata.
 //! * `verify`    — cross-check every backend (and PJRT if artifacts are
 //!                 built) against the naive oracle.
@@ -32,12 +35,13 @@ fn main() {
         "sim" => cmd_sim(rest),
         "train" => cmd_train(rest),
         "autotune" => cmd_autotune(rest),
+        "dispatch" => cmd_dispatch(rest),
         "artifacts" => cmd_artifacts(rest),
         "verify" => cmd_verify(rest),
         _ => {
             println!(
                 "emmerald {} — SGEMM reproduction (Aberdeen & Baxter)\n\n\
-                 USAGE: emmerald <gemm|sweep|sim|train|autotune|artifacts|verify> [options]\n\
+                 USAGE: emmerald <gemm|sweep|sim|train|autotune|dispatch|artifacts|verify> [options]\n\
                  Run a subcommand with --help for its options.",
                 emmerald::VERSION
             );
@@ -78,7 +82,7 @@ fn run_square(backend: Backend, n: usize, a: &Matrix, b: &Matrix, c: &mut Matrix
 fn cmd_gemm(argv: Vec<String>) -> i32 {
     let cli = Cli::new("emmerald gemm", "run one SGEMM and verify against naive")
         .opt("size", "320", "square size (m=n=k)")
-        .opt("backend", "auto", "naive|blocked|simd|avx2|auto")
+        .opt("backend", "auto", "naive|blocked|simd|avx2|dispatch|auto")
         .opt("samples", "5", "timing samples");
     let m = parse(&cli, argv);
     let n = m.get_usize("size").unwrap();
@@ -248,7 +252,7 @@ fn cmd_autotune(argv: Vec<String>) -> i32 {
         _ => emmerald::autotune::TuneSpec::sse_default(probe),
     };
     spec.samples = 3;
-    let r = emmerald::autotune::tune(&spec);
+    let r = emmerald::autotune::tune_and_install(&spec);
     let mut table = Table::new(["kb", "mb", "nr", "MFlop/s"]);
     for p in &r.log {
         table.row([
@@ -260,8 +264,49 @@ fn cmd_autotune(argv: Vec<String>) -> i32 {
     }
     println!("{}", table.render());
     println!(
-        "winner: kb={} mb={} nr={} at {:.1} MFlop/s (paper: kb=336, nr=5)",
-        r.best.kb, r.best.mb, r.best.nr, r.best_mflops
+        "winner: kb={} mb={} nr={} at {:.1} MFlop/s (paper: kb=336, nr=5) — installed into the {} dispatch table",
+        r.best.kb,
+        r.best.mb,
+        r.best.nr,
+        r.best_mflops,
+        spec.kernel.kernel_id().name()
+    );
+    0
+}
+
+fn cmd_dispatch(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("emmerald dispatch", "kernel registry + selection preview")
+        .opt("m", "512", "output rows")
+        .opt("n", "512", "output cols")
+        .opt("k", "512", "dot-product length");
+    let matches = parse(&cli, argv);
+    let mut table = Table::new(["kernel", "requires", "available"]);
+    for info in emmerald::gemm::registry() {
+        table.row([
+            info.name.to_string(),
+            info.requires.to_string(),
+            if info.available { "yes".into() } else { "no".into() },
+        ]);
+    }
+    println!("{}", table.render());
+    let d = emmerald::gemm::dispatch::global_snapshot();
+    let (m, n, k) =
+        (matches.get_usize("m").unwrap(), matches.get_usize("n").unwrap(), matches.get_usize("k").unwrap());
+    for (ta, tb, label) in [
+        (Transpose::No, Transpose::No, "NN"),
+        (Transpose::Yes, Transpose::No, "TN"),
+        (Transpose::No, Transpose::Yes, "NT"),
+    ] {
+        let shape = emmerald::gemm::dispatch::GemmShape { m, n, k, transa: ta, transb: tb };
+        println!("{m}x{n}x{k} {label} → {}", d.select(&shape, 1.0).name());
+    }
+    println!(
+        "threads={} sse(kb={},nr={}) avx2(kb={},nr={})",
+        d.threads(),
+        d.params_sse().kb,
+        d.params_sse().nr,
+        d.params_avx2().kb,
+        d.params_avx2().nr
     );
     0
 }

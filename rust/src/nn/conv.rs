@@ -82,6 +82,56 @@ impl Conv2d {
         out
     }
 
+    /// Forward convolution through the batched dispatch subsystem.
+    ///
+    /// Equivalent to [`forward`](Self::forward), but expressed as a
+    /// shared-B batch: each image's `oh·ow` patch rows form one batch item
+    /// and every item multiplies the same (materialised-transpose) kernel
+    /// matrix. The batched driver folds this into a single GEMM, so the
+    /// kernel panel is re-buffered once for the whole batch and the
+    /// parallel backend sees the full `n·oh·ow` row space — the
+    /// weight-stationary layout every GEMM-based framework uses.
+    pub fn forward_batched(
+        &self,
+        input: &[f32],
+        n: usize,
+        h: usize,
+        w: usize,
+        kernels: &Matrix,
+    ) -> Matrix {
+        assert_eq!(kernels.rows(), self.out_channels);
+        assert_eq!(kernels.cols(), self.in_channels * self.kernel * self.kernel);
+        let patches = self.im2col(input, n, h, w);
+        let kt = kernels.transposed(); // (C·K·K) × F, contiguous
+        let (oh, ow) = self.out_hw(h, w);
+        let rows_per_item = oh * ow;
+        let ckk = kernels.cols();
+        let f = self.out_channels;
+        let mut out = Matrix::zeros(patches.rows(), f);
+        crate::gemm::dispatch::with_global(|d| {
+            crate::gemm::gemm_batch(
+                d,
+                Transpose::No,
+                Transpose::No,
+                rows_per_item,
+                f,
+                ckk,
+                1.0,
+                patches.data(),
+                ckk,
+                kt.data(),
+                f,
+                0.0,
+                out.data_mut(),
+                f,
+                n,
+                crate::gemm::BatchStrides { a: rows_per_item * ckk, b: 0, c: rows_per_item * f },
+            )
+        })
+        .expect("conv gemm_batch");
+        out
+    }
+
     /// GEMM flops of one forward call.
     pub fn flops(&self, n: usize, h: usize, w: usize) -> f64 {
         let (oh, ow) = self.out_hw(h, w);
@@ -177,6 +227,19 @@ mod tests {
                 &format!("conv {}", backend.name()),
             );
         }
+    }
+
+    #[test]
+    fn batched_forward_matches_direct_and_serial_forward() {
+        let cfg = Conv2d { in_channels: 3, out_channels: 6, kernel: 3, stride: 1 };
+        let (n, h, w) = (4usize, 8usize, 9usize);
+        let input = rand_input(7, n * 3 * h * w);
+        let kernels = Matrix::random(6, 3 * 9, 8, -1.0, 1.0);
+        let want = conv2d_direct(&cfg, &input, n, h, w, &kernels);
+        let got = cfg.forward_batched(&input, n, h, w, &kernels);
+        assert_allclose(got.data(), want.data(), 2e-4, 1e-4, "batched conv vs direct");
+        let serial = cfg.forward(&input, n, h, w, &kernels, Backend::Dispatch);
+        assert_allclose(got.data(), serial.data(), 2e-4, 1e-4, "batched conv vs serial");
     }
 
     #[test]

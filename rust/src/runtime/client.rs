@@ -133,6 +133,32 @@ impl<'rt> PjrtGemm<'rt> {
         }
         Ok(out.remove(0).into_data())
     }
+
+    /// Batched `C_i = A_i · B_i` over `batch` stacked n×n items.
+    ///
+    /// The artifact has a fixed n×n ABI, so the batch runs as `batch`
+    /// executions of the *same* cached executable — compilation happens at
+    /// most once for the whole batch (the PJRT analogue of the native
+    /// batched driver's amortised packing).
+    pub fn matmul_batch(&self, a: &[f32], b: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let item = self.n * self.n;
+        if a.len() != batch * item || b.len() != batch * item {
+            bail!(
+                "matmul_batch: need {} elements per operand for batch {batch} of {}x{} items, got a={} b={}",
+                batch * item,
+                self.n,
+                self.n,
+                a.len(),
+                b.len()
+            );
+        }
+        let mut out = Vec::with_capacity(batch * item);
+        for i in 0..batch {
+            let c = self.matmul(&a[i * item..(i + 1) * item], &b[i * item..(i + 1) * item])?;
+            out.extend_from_slice(&c);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]

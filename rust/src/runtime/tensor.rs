@@ -101,6 +101,69 @@ impl Tensor {
             _ => bail!("tensor is {}-d, expected 2-d", self.dims.len()),
         }
     }
+
+    /// Batched matrix multiply through the native dispatch subsystem:
+    /// `out[i] = self[i] · other[i]`.
+    ///
+    /// Shapes follow the JAX/NumPy `matmul` batching rules restricted to
+    /// rank ≤ 3: `self` is `[b, m, k]` or `[m, k]`, `other` is `[b, k, n]`
+    /// or `[k, n]`; a 2-d operand broadcasts across the batch (stride-0 in
+    /// the underlying [`crate::gemm::gemm_batch`] call, so a broadcast `B`
+    /// is re-buffered once for the whole batch). The result is
+    /// `[b, m, n]`, or `[m, n]` when both operands are 2-d.
+    pub fn batched_matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (ba, ma, ka) = split_batch_dims(self, "lhs")?;
+        let (bb, kb, nb) = split_batch_dims(other, "rhs")?;
+        if ka != kb {
+            bail!("batched_matmul inner dims disagree: lhs k={ka}, rhs k={kb}");
+        }
+        let batch = match (ba, bb) {
+            (Some(x), Some(y)) if x != y => {
+                bail!("batched_matmul batch dims disagree: {x} vs {y}")
+            }
+            (Some(x), _) => x,
+            (None, Some(y)) => y,
+            (None, None) => 1,
+        };
+        let stride_a = if ba.is_some() { ma * ka } else { 0 };
+        let stride_b = if bb.is_some() { ka * nb } else { 0 };
+        let out_dims = if ba.is_none() && bb.is_none() {
+            vec![ma, nb]
+        } else {
+            vec![batch, ma, nb]
+        };
+        let mut out = Tensor::zeros(out_dims);
+        crate::gemm::dispatch::with_global(|d| {
+            crate::gemm::gemm_batch(
+                d,
+                crate::blas::Transpose::No,
+                crate::blas::Transpose::No,
+                ma,
+                nb,
+                ka,
+                1.0,
+                &self.data,
+                ka,
+                &other.data,
+                nb,
+                0.0,
+                &mut out.data,
+                nb,
+                batch,
+                crate::gemm::BatchStrides { a: stride_a, b: stride_b, c: ma * nb },
+            )
+        })?;
+        Ok(out)
+    }
+}
+
+/// Split a rank-2/3 tensor into (batch, rows, cols).
+fn split_batch_dims(t: &Tensor, what: &str) -> Result<(Option<usize>, usize, usize)> {
+    match t.dims() {
+        &[r, c] => Ok((None, r, c)),
+        &[b, r, c] => Ok((Some(b), r, c)),
+        _ => bail!("{what} tensor is {}-d, batched_matmul needs 2-d or 3-d", t.dims().len()),
+    }
 }
 
 #[cfg(test)]
@@ -151,5 +214,69 @@ mod tests {
         let a = Tensor::random(vec![3, 3], 9, -1.0, 1.0);
         let b = Tensor::random(vec![3, 3], 9, -1.0, 1.0);
         assert_eq!(a, b);
+    }
+
+    fn naive_item_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn batched_matmul_matches_per_item_naive() {
+        let (b, m, k, n) = (3usize, 4usize, 5usize, 6usize);
+        let x = Tensor::random(vec![b, m, k], 21, -1.0, 1.0);
+        let y = Tensor::random(vec![b, k, n], 22, -1.0, 1.0);
+        let out = x.batched_matmul(&y).unwrap();
+        assert_eq!(out.dims(), &[b, m, n]);
+        for i in 0..b {
+            let want =
+                naive_item_matmul(&x.data()[i * m * k..], &y.data()[i * k * n..], m, k, n);
+            let got = &out.data()[i * m * n..(i + 1) * m * n];
+            crate::util::testkit::assert_allclose(got, &want, 5e-4, 1e-4, &format!("item {i}"));
+        }
+    }
+
+    #[test]
+    fn batched_matmul_broadcasts_2d_rhs() {
+        let (b, m, k, n) = (4usize, 3usize, 7usize, 2usize);
+        let x = Tensor::random(vec![b, m, k], 31, -1.0, 1.0);
+        let y = Tensor::random(vec![k, n], 32, -1.0, 1.0);
+        let out = x.batched_matmul(&y).unwrap();
+        assert_eq!(out.dims(), &[b, m, n]);
+        for i in 0..b {
+            let want = naive_item_matmul(&x.data()[i * m * k..], y.data(), m, k, n);
+            let got = &out.data()[i * m * n..(i + 1) * m * n];
+            crate::util::testkit::assert_allclose(got, &want, 5e-4, 1e-4, &format!("bcast {i}"));
+        }
+    }
+
+    #[test]
+    fn batched_matmul_two_2d_operands_is_plain_matmul() {
+        let x = Tensor::random(vec![3, 4], 41, -1.0, 1.0);
+        let y = Tensor::random(vec![4, 5], 42, -1.0, 1.0);
+        let out = x.batched_matmul(&y).unwrap();
+        assert_eq!(out.dims(), &[3, 5]);
+        let want = naive_item_matmul(x.data(), y.data(), 3, 4, 5);
+        crate::util::testkit::assert_allclose(out.data(), &want, 5e-4, 1e-4, "2d×2d");
+    }
+
+    #[test]
+    fn batched_matmul_rejects_mismatches() {
+        let x = Tensor::random(vec![2, 3, 4], 1, -1.0, 1.0);
+        let bad_k = Tensor::random(vec![2, 5, 6], 2, -1.0, 1.0);
+        assert!(x.batched_matmul(&bad_k).is_err());
+        let bad_batch = Tensor::random(vec![3, 4, 6], 3, -1.0, 1.0);
+        assert!(x.batched_matmul(&bad_batch).is_err());
+        let bad_rank = Tensor::random(vec![24], 4, -1.0, 1.0);
+        assert!(x.batched_matmul(&bad_rank).is_err());
     }
 }

@@ -1,0 +1,236 @@
+//! Cross-backend conformance suite.
+//!
+//! Every kernel in the dispatch registry — naive, blocked, SSE, AVX2,
+//! parallel, Strassen — is driven through the *same* shape/transpose/
+//! alpha-beta grid against the naive oracle, via the public
+//! [`GemmDispatch::gemm_with`] forcing API. A kernel that cannot express a
+//! case (vector ISA missing, transposed operands for the whole-problem
+//! drivers) must degrade and still produce the right answer, so the whole
+//! grid runs for every registry entry unconditionally.
+
+use emmerald::blas::{sgemm, Backend, Matrix, Transpose};
+use emmerald::gemm::dispatch::GemmShape;
+use emmerald::gemm::{registry, BatchStrides, DispatchConfig, GemmDispatch, KernelId};
+use emmerald::util::testkit::{assert_allclose, check, Gen};
+
+/// The conformance grid: shapes crossing block, panel and vector-width
+/// boundaries, all four transpose combinations, four alpha/beta pairs.
+const SHAPES: [(usize, usize, usize); 12] = [
+    (1, 1, 1),
+    (1, 5, 4),
+    (2, 3, 1),
+    (5, 5, 5),
+    (7, 11, 13),
+    (8, 10, 16),
+    (16, 16, 16),
+    (17, 19, 23),
+    (32, 6, 40),
+    (3, 64, 7),
+    (33, 34, 35),
+    (64, 64, 64),
+];
+
+fn oracle(
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    beta: f32,
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+) {
+    sgemm(
+        Backend::Naive,
+        transa,
+        transb,
+        m,
+        n,
+        k,
+        alpha,
+        a.data(),
+        a.ld(),
+        b.data(),
+        b.ld(),
+        beta,
+        c.data_mut(),
+        c.ld(),
+    )
+    .unwrap();
+}
+
+fn run_grid_for(d: &GemmDispatch, id: KernelId) {
+    let mut seed = 0xC0F0u64;
+    for &(m, n, k) in &SHAPES {
+        for transa in [Transpose::No, Transpose::Yes] {
+            for transb in [Transpose::No, Transpose::Yes] {
+                for &(alpha, beta) in &[(1.0f32, 0.0f32), (0.5, 2.0), (-1.0, 1.0), (0.0, 0.5)] {
+                    seed += 1;
+                    let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+                    let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+                    // Strided storage shakes out indexing bugs.
+                    let a = Matrix::random_strided(ar, ac, ac + 3, seed);
+                    let b = Matrix::random_strided(br, bc, bc + 1, seed ^ 0xAB);
+                    let mut c_got = Matrix::random_strided(m, n, n + 2, seed ^ 0xCD);
+                    let mut c_ref = c_got.clone();
+                    let ran = d.gemm_with(
+                        id,
+                        transa,
+                        transb,
+                        alpha,
+                        a.view(),
+                        b.view(),
+                        beta,
+                        &mut c_got.view_mut(),
+                    );
+                    assert!(ran.available(), "{id:?} degraded to unavailable {ran:?}");
+                    oracle(transa, transb, m, n, k, alpha, beta, &a, &b, &mut c_ref);
+                    assert_allclose(
+                        c_got.data(),
+                        c_ref.data(),
+                        2e-4,
+                        1e-5,
+                        &format!(
+                            "conformance {} m={m} n={n} k={k} ta={transa:?} tb={transb:?} α={alpha} β={beta}",
+                            id.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_registry_kernel_conforms_on_the_grid() {
+    let d = GemmDispatch::default();
+    for info in registry() {
+        run_grid_for(&d, info.id);
+    }
+}
+
+#[test]
+fn auto_selection_conforms_across_heuristic_boundaries() {
+    // Thresholds tuned so the grid itself crosses naive→vector→parallel
+    // boundaries; every selected kernel must agree with the oracle.
+    let cfg = DispatchConfig {
+        tiny_dim: 4,
+        parallel_min_flops: 2.0 * 24.0 * 24.0 * 24.0,
+        strassen_min_dim: usize::MAX, // multi-level f32 error needs looser bars
+        threads: 3,
+        ..DispatchConfig::default()
+    };
+    let d = GemmDispatch::new(cfg);
+    let mut seed = 0x51D3u64;
+    for &(m, n, k) in &SHAPES {
+        seed += 1;
+        let a = Matrix::random(m, k, seed, -1.0, 1.0);
+        let b = Matrix::random(k, n, seed ^ 0x9, -1.0, 1.0);
+        let mut c_got = Matrix::zeros(m, n);
+        let mut c_ref = Matrix::zeros(m, n);
+        let shape = GemmShape { m, n, k, transa: Transpose::No, transb: Transpose::No };
+        let picked = d.select(&shape, 1.0);
+        assert!(picked.available(), "picked unavailable {picked:?} for {m}x{n}x{k}");
+        let ran = d.gemm(Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut c_got.view_mut());
+        assert_eq!(ran, picked, "gemm must run what select reports");
+        oracle(Transpose::No, Transpose::No, m, n, k, 1.0, 0.0, &a, &b, &mut c_ref);
+        assert_allclose(c_got.data(), c_ref.data(), 2e-4, 1e-5, &format!("auto {m}x{n}x{k}"));
+    }
+}
+
+#[test]
+fn prop_dispatch_selection_is_stable_and_conformant() {
+    // Random shapes/scalars: selection is deterministic (same shape →
+    // same kernel), the selected kernel is available, and the result
+    // matches the oracle.
+    let d = GemmDispatch::default();
+    check("dispatch selection conformance", 60, |g: &mut Gen| {
+        let m = g.dim(48);
+        let n = g.dim(48);
+        let k = g.dim(64);
+        let alpha = g.rng.f32_range(-2.0, 2.0);
+        let shape = GemmShape { m, n, k, transa: Transpose::No, transb: Transpose::No };
+        let id1 = d.select(&shape, alpha);
+        let id2 = d.select(&shape, alpha);
+        assert_eq!(id1, id2, "selection must be deterministic");
+        assert!(id1.available());
+        let a = Matrix::random(m, k, g.rng.next_u64(), -1.0, 1.0);
+        let b = Matrix::random(k, n, g.rng.next_u64(), -1.0, 1.0);
+        let mut c_got = Matrix::zeros(m, n);
+        let mut c_ref = Matrix::zeros(m, n);
+        d.gemm(Transpose::No, Transpose::No, alpha, a.view(), b.view(), 0.0, &mut c_got.view_mut());
+        oracle(Transpose::No, Transpose::No, m, n, k, alpha, 0.0, &a, &b, &mut c_ref);
+        assert_allclose(c_got.data(), c_ref.data(), 5e-4, 1e-4, "prop dispatch");
+    });
+}
+
+#[test]
+fn batched_fold_and_fanout_agree_with_each_other() {
+    // The same batch computed through the fold fast path (shared B,
+    // contiguous items) and through the general fan-out (forced by a
+    // padded C stride) must agree. parallel_min_flops = 0 makes the
+    // fan-out genuinely threaded even at test sizes.
+    let d = GemmDispatch::new(DispatchConfig {
+        threads: 2,
+        parallel_min_flops: 0.0,
+        ..DispatchConfig::default()
+    });
+    let (m, n, k, batch) = (12usize, 9usize, 17usize, 6usize);
+    let a: Vec<f32> = (0..batch * m * k).map(|i| ((i * 37 % 100) as f32 - 50.0) / 50.0).collect();
+    let b: Vec<f32> = (0..k * n).map(|i| ((i * 53 % 100) as f32 - 50.0) / 50.0).collect();
+
+    let mut c_fold = vec![0.25f32; batch * m * n];
+    emmerald::gemm::gemm_batch(
+        &d,
+        Transpose::No,
+        Transpose::No,
+        m,
+        n,
+        k,
+        1.5,
+        &a,
+        k,
+        &b,
+        n,
+        0.5,
+        &mut c_fold,
+        n,
+        batch,
+        BatchStrides::shared_b(m, n, k),
+    )
+    .unwrap();
+
+    let pad = 5usize;
+    let mut c_pad = vec![0.25f32; batch * (m * n + pad)];
+    emmerald::gemm::gemm_batch(
+        &d,
+        Transpose::No,
+        Transpose::No,
+        m,
+        n,
+        k,
+        1.5,
+        &a,
+        k,
+        &b,
+        n,
+        0.5,
+        &mut c_pad,
+        n,
+        batch,
+        BatchStrides { a: m * k, b: 0, c: m * n + pad },
+    )
+    .unwrap();
+
+    for i in 0..batch {
+        let fold = &c_fold[i * m * n..(i + 1) * m * n];
+        let fan = &c_pad[i * (m * n + pad)..i * (m * n + pad) + m * n];
+        assert_allclose(fan, fold, 5e-4, 1e-4, &format!("fold vs fan-out item {i}"));
+        // Inter-item padding untouched by the fan-out path.
+        for p in 0..pad {
+            assert_eq!(c_pad[i * (m * n + pad) + m * n + p], 0.25, "padding clobbered");
+        }
+    }
+}

@@ -2,7 +2,7 @@
 //! shapes, strides, transposes and scalars (the testkit substrate replaces
 //! proptest in this offline build).
 
-use emmerald::blas::{sgemm, Backend, Matrix, Transpose};
+use emmerald::blas::{sgemm, sgemm_batch, Backend, Matrix, Transpose};
 use emmerald::gemm::pack::{kpad_for, PackedB};
 use emmerald::gemm::{BlockParams, Unroll};
 use emmerald::util::testkit::{assert_allclose, check, Gen};
@@ -44,6 +44,110 @@ fn random_case(g: &mut Gen, backend: Backend) {
 #[test]
 fn prop_simd_matches_naive() {
     check("simd ≍ naive", 120, |g| random_case(g, Backend::Simd));
+}
+
+#[test]
+fn prop_dispatch_matches_naive() {
+    // The dispatcher is the new default (`Backend::Auto`); it must hold
+    // the same contract as every explicit backend over the full random
+    // shape/stride/transpose/scalar space.
+    check("dispatch ≍ naive", 120, |g| random_case(g, Backend::Dispatch));
+}
+
+#[test]
+fn prop_gemm_batch_matches_per_item_naive() {
+    // The batched API against the obvious oracle: a per-item naive loop.
+    // Random batch counts, random per-operand batch strides (minimal,
+    // padded, or 0 = broadcast for A/B), random leading dimensions, and
+    // `Gen::dim` edge shapes.
+    check("gemm_batch ≍ per-item naive", 50, |g| {
+        let batch = g.rng.range_usize(1, 5);
+        let m = g.dim(20);
+        let n = g.dim(20);
+        let k = g.dim(32);
+        let transa = if g.rng.chance(0.5) { Transpose::Yes } else { Transpose::No };
+        let transb = if g.rng.chance(0.5) { Transpose::Yes } else { Transpose::No };
+        let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+        let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+        let lda = ac + g.rng.range_usize(0, 4);
+        let ldb = bc + g.rng.range_usize(0, 3);
+        let ldc = n + g.rng.range_usize(0, 3);
+        let a_item = (ar - 1) * lda + ac;
+        let b_item = (br - 1) * ldb + bc;
+        let c_item = (m - 1) * ldc + n;
+        // Broadcast / dense / padded strides for the read-only operands;
+        // dense or padded (never overlapping) for C.
+        let stride_a =
+            if g.rng.chance(0.25) { 0 } else { a_item + g.rng.range_usize(0, 9) };
+        let stride_b =
+            if g.rng.chance(0.25) { 0 } else { b_item + g.rng.range_usize(0, 7) };
+        let stride_c = c_item + g.rng.range_usize(0, 8);
+        let a = g.matrix(1, (batch - 1) * stride_a + a_item);
+        let b = g.matrix(1, (batch - 1) * stride_b + b_item);
+        let c0 = g.matrix(1, (batch - 1) * stride_c + c_item);
+        let alpha = g.rng.f32_range(-2.0, 2.0);
+        let beta = if g.rng.chance(0.3) { 0.0 } else { g.rng.f32_range(-1.5, 1.5) };
+
+        let mut c_got = c0.clone();
+        sgemm_batch(
+            Backend::Dispatch,
+            transa,
+            transb,
+            m,
+            n,
+            k,
+            alpha,
+            &a,
+            lda,
+            stride_a,
+            &b,
+            ldb,
+            stride_b,
+            beta,
+            &mut c_got,
+            ldc,
+            stride_c,
+            batch,
+        )
+        .unwrap();
+
+        let mut c_ref = c0.clone();
+        for i in 0..batch {
+            sgemm(
+                Backend::Naive,
+                transa,
+                transb,
+                m,
+                n,
+                k,
+                alpha,
+                &a[i * stride_a..],
+                lda,
+                &b[i * stride_b..],
+                ldb,
+                beta,
+                &mut c_ref[i * stride_c..],
+                ldc,
+            )
+            .unwrap();
+        }
+        assert_allclose(
+            &c_got,
+            &c_ref,
+            5e-4,
+            1e-4,
+            &format!(
+                "batch={batch} m={m} n={n} k={k} ta={transa:?} tb={transb:?} sa={stride_a} sb={stride_b} sc={stride_c}"
+            ),
+        );
+        // Inter-item C padding must be untouched.
+        for i in 0..batch.saturating_sub(1) {
+            for p in c_item..stride_c {
+                let idx = i * stride_c + p;
+                assert_eq!(c_got[idx], c0[idx], "batch padding clobbered at item {i} off {p}");
+            }
+        }
+    });
 }
 
 #[test]

@@ -1,0 +1,195 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The crate registry for this build is empty, so the subset of `anyhow`
+//! that the Emmerald runtime and coordinator actually use is implemented
+//! here: [`Error`], the [`Result`] alias, the [`Context`] extension trait
+//! (for both `Result` and `Option`), and the [`bail!`]/[`anyhow!`] macros.
+//!
+//! Semantics match upstream where it matters to callers:
+//!
+//! * any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?`,
+//! * `.context(..)` / `.with_context(..)` prepend a layer of description,
+//! * `{:#}` (and plain `{}`) formatting renders the whole context chain as
+//!   `outermost: ...: root cause`, which is what the test-suite greps for.
+//!
+//! Differences from upstream: no backtraces, no downcasting — none of the
+//! in-tree consumers use either.
+
+use std::fmt;
+
+/// A type-erased error: the accumulated context chain, outermost first.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+
+    fn wrap<C: fmt::Display, E: fmt::Display>(context: C, cause: E) -> Self {
+        Self { msg: format!("{context}: {cause}") }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what keeps the blanket `From` below coherent (same trick as upstream).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::Error;
+    use std::fmt;
+
+    /// Internal unification of "errors that can absorb a context layer":
+    /// [`Error`] itself plus every standard error. Mirrors upstream's
+    /// private `ext::StdError` trait.
+    pub trait ContextError {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error;
+    }
+
+    impl ContextError for Error {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            Error::wrap(context, self)
+        }
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> ContextError for E {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            Error::wrap(context, self)
+        }
+    }
+}
+
+/// Extension trait providing `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed description.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error (or `None`) with a lazily-built description.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::ContextError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::Error::msg(::std::format!($($arg)*)))
+    };
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        let rendered = format!("{e:#}");
+        assert!(rendered.starts_with("reading manifest: "), "{rendered}");
+        assert!(rendered.contains("missing thing"));
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result_stacks() {
+        let r: Result<()> = Err(Error::msg("root"));
+        let e = r.with_context(|| format!("layer {}", 2)).unwrap_err();
+        assert_eq!(format!("{e}"), "layer 2: root");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing here").unwrap_err();
+        assert_eq!(e.to_string(), "nothing here");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 3);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "failed with code 3");
+        let e = anyhow!("standalone {}", "msg");
+        assert_eq!(e.to_string(), "standalone msg");
+    }
+}

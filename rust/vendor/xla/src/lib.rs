@@ -1,0 +1,250 @@
+//! Offline stub of the `xla` crate (xla_extension 0.5.1 PJRT bindings).
+//!
+//! The real bindings link the multi-hundred-megabyte XLA runtime, which is
+//! not present in this build environment. This stub keeps the exact API
+//! surface `emmerald::runtime` compiles against, split in two tiers:
+//!
+//! * **Functional**: [`Literal`] and [`ArrayShape`] — host-side tensor
+//!   construction, reshape and extraction work for real, so the
+//!   `Tensor ↔ Literal` conversion layer (and its tests) behaves
+//!   identically to the real crate.
+//! * **Unavailable**: [`PjRtClient`], compilation and execution — every
+//!   entry point reports a descriptive [`Error`]. All PJRT consumers in
+//!   the tree already treat "runtime not available" as a skip condition
+//!   (no artifacts built ⇒ tests skip, CLI prints a hint), so swapping the
+//!   real crate back in is a pure `Cargo.toml` change.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (the real crate's `Error` is also a display-able enum).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "XLA runtime unavailable in this offline build: {what} requires the \
+         real xla_extension bindings"
+    ))
+}
+
+/// Array dimensions of a literal.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-side value: either a dense f32 array or a tuple of literals.
+///
+/// Only f32 arrays are constructible through the public API, matching the
+/// SGEMM/MLP ABI (`f32` is the sole dtype in the artifact manifests).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Literal {
+    /// Dense row-major f32 array.
+    Array {
+        /// Dimension sizes (empty = scalar).
+        dims: Vec<i64>,
+        /// Row-major element data.
+        data: Vec<f32>,
+    },
+    /// Tuple of literals (produced by tuple-rooted computations).
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// A rank-1 literal from a slice.
+    pub fn vec1(values: &[f32]) -> Literal {
+        Literal::Array { dims: vec![values.len() as i64], data: values.to_vec() }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { data, .. } => {
+                let want: i64 = dims.iter().product();
+                if want < 0 || want as usize != data.len() {
+                    return Err(Error(format!(
+                        "reshape to {:?} ({} elements) from {} elements",
+                        dims,
+                        want,
+                        data.len()
+                    )));
+                }
+                Ok(Literal::Array { dims: dims.to_vec(), data: data.clone() })
+            }
+            Literal::Tuple(_) => Err(Error("cannot reshape a tuple literal".into())),
+        }
+    }
+
+    /// Shape of an array literal (error on tuples).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, .. } => Ok(ArrayShape { dims: dims.clone() }),
+            Literal::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+        }
+    }
+
+    /// Extract the elements of an array literal.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_literal(self)
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            Literal::Array { .. } => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Element types extractable from a [`Literal`] (f32 only, like the ABI).
+pub trait NativeType: Sized {
+    /// Extract a flat element vector.
+    fn from_literal(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn from_literal(lit: &Literal) -> Result<Vec<f32>> {
+        match lit {
+            Literal::Array { data, .. } => Ok(data.clone()),
+            Literal::Tuple(_) => Err(Error("tuple literal has no element data".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: parsing always reports unavailability).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file (unavailable in the stub).
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        Err(Error(format!(
+            "cannot parse HLO text {}: the offline xla stub has no HLO parser",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client (unavailable in the stub).
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Backend platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation (unavailable in the stub).
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable (stub: never constructible, execution fails).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments (unavailable in the stub).
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy back to a host literal (unavailable in the stub).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let lit = Literal::vec1(&[7.5]);
+        let s = lit.reshape(&[]).unwrap();
+        assert_eq!(s.array_shape().unwrap().dims(), &[] as &[i64]);
+    }
+
+    #[test]
+    fn reshape_rejects_bad_count() {
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn tuple_accessors() {
+        let t = Literal::Tuple(vec![Literal::vec1(&[1.0])]);
+        assert!(t.array_shape().is_err());
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+        assert!(Literal::vec1(&[1.0]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}
