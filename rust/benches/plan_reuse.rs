@@ -1,0 +1,105 @@
+//! Plan reuse: what does planned execution with prepacked operands buy
+//! over repeated positional `sgemm` calls?
+//!
+//! Three tiers at the same shape:
+//!
+//! 1. `sgemm` — the compatibility shim: validate + select + pack B, every
+//!    call.
+//! 2. `plan.run` — plan built once; validation is length checks only, the
+//!    kernel and geometry are already resolved, but B still re-packs.
+//! 3. `plan.run_packed_b` — plan built once **and** B packed once; the
+//!    per-call work is exactly the micro-kernel sweep.
+//!
+//! Measured at the acceptance shape 256×256×256 and at the
+//! weight-stationary inference shape 8×256×256 (skinny activations ×
+//! resident weight), where packing is a large fraction of the work.
+//! **Guards** that prepacked planned execution beats repeated `sgemm` at
+//! 256³ (exit code 1 otherwise, so CI can use this binary as a gate).
+
+use emmerald::bench::{gemm_flops, Bencher, FlushMode, Report};
+use emmerald::blas::{sgemm, Backend, GemmContext, Matrix, Transpose};
+
+fn bench_shape(
+    ctx: &GemmContext,
+    report: &mut Report,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> (f64, f64, f64) {
+    let a = Matrix::random(m, k, 1, -1.0, 1.0);
+    let b = Matrix::random(k, n, 2, -1.0, 1.0);
+    let mut c = Matrix::zeros(m, n);
+    let flops = gemm_flops(m, n, k);
+    let label = format!("{m}x{n}x{k}");
+
+    let mut bench = Bencher::new(3, 9).flush_mode(FlushMode::Warm).min_sample_secs(0.01);
+    let positional = bench.run(&format!("sgemm/{label}"), flops, || {
+        sgemm(
+            Backend::Dispatch,
+            Transpose::No,
+            Transpose::No,
+            m,
+            n,
+            k,
+            1.0,
+            a.data(),
+            a.ld(),
+            b.data(),
+            b.ld(),
+            0.0,
+            c.data_mut(),
+            c.ld(),
+        )
+        .expect("sgemm");
+    });
+
+    let plan = ctx.gemm().plan(m, n, k).expect("plan");
+    let mut bench = Bencher::new(3, 9).flush_mode(FlushMode::Warm).min_sample_secs(0.01);
+    let planned = bench.run(&format!("plan/{label}"), flops, || {
+        plan.run(a.data(), b.data(), c.data_mut()).expect("plan.run");
+    });
+
+    let packed = ctx.pack_b(Transpose::No, k, n, b.data(), b.ld()).expect("pack_b");
+    let mut bench = Bencher::new(3, 9).flush_mode(FlushMode::Warm).min_sample_secs(0.01);
+    let prepacked = bench.run(&format!("plan+packedB/{label}"), flops, || {
+        plan.run_packed_b(a.data(), &packed, c.data_mut()).expect("run_packed_b");
+    });
+
+    println!(
+        "{label:>12}  sgemm {:>9.1}  plan {:>9.1}  plan+packedB {:>9.1} MFlop/s  (packed speedup {:>+6.2}% over sgemm)",
+        positional.mflops(),
+        planned.mflops(),
+        prepacked.mflops(),
+        (prepacked.mflops() / positional.mflops() - 1.0) * 100.0,
+    );
+    report.add(&[label.clone(), "sgemm".into()], positional.clone());
+    report.add(&[label.clone(), "plan".into()], planned.clone());
+    report.add(&[label, "plan+packedB".into()], prepacked.clone());
+    (positional.mflops(), planned.mflops(), prepacked.mflops())
+}
+
+fn main() {
+    let ctx = GemmContext::global();
+    let mut report = Report::new(
+        "Plan reuse — repeated sgemm vs planned execution vs prepacked B",
+        &["shape", "path"],
+    );
+    println!(
+        "context: thread budget {} — every tier runs inside the shared pool",
+        ctx.threads()
+    );
+
+    // The acceptance shape: planned + prepacked must beat repeated sgemm.
+    let (sgemm_256, _, packed_256) = bench_shape(ctx, &mut report, 256, 256, 256);
+    // The weight-stationary shape: packing dominates, the win is large.
+    bench_shape(ctx, &mut report, 8, 256, 256);
+
+    report.emit("plan_reuse");
+    if packed_256 <= sgemm_256 {
+        eprintln!(
+            "FAIL: prepacked planned execution ({packed_256:.1} MFlop/s) did not beat repeated sgemm ({sgemm_256:.1} MFlop/s) at 256x256x256"
+        );
+        std::process::exit(1);
+    }
+    println!("PASS: prepacked planned execution beats repeated sgemm at 256x256x256");
+}

@@ -1,0 +1,209 @@
+//! Persistent autotune cache: tuned [`BlockParams`] per (CPU model,
+//! kernel), serialised to disk ATLAS-install style.
+//!
+//! [`super::tune_and_install`] feeds the in-process dispatch table, but
+//! winners used to die with the process. This module persists them as
+//! JSON (via [`crate::util::json`]) so the next process starts with the
+//! machine's tuned geometry: [`crate::gemm::plan::GemmContext::global`]
+//! calls [`load_host_entries`] at init.
+//!
+//! Default location: `~/.cache/emmerald/tuned.json`. The
+//! `EMMERALD_TUNE_CACHE` environment variable overrides the path (tests
+//! point it at a temp file); the values `off` / `0` / empty disable
+//! persistence entirely.
+
+use crate::gemm::{BlockParams, KernelId, Unroll};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Environment variable overriding the cache file path.
+pub const ENV_PATH: &str = "EMMERALD_TUNE_CACHE";
+
+/// Resolve the cache file path (`None` = persistence disabled).
+pub fn cache_path() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var(ENV_PATH) {
+        if p.is_empty() || p == "off" || p == "0" {
+            return None;
+        }
+        return Some(PathBuf::from(p));
+    }
+    std::env::var_os("HOME")
+        .map(|home| PathBuf::from(home).join(".cache").join("emmerald").join("tuned.json"))
+}
+
+/// A stable identifier for the machine the parameters were tuned on.
+/// Block geometry is cache-hierarchy-specific, so entries are keyed by
+/// CPU model and only replayed on a matching host.
+pub fn cpu_model() -> String {
+    if let Ok(info) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in info.lines() {
+            if let Some(rest) = line.strip_prefix("model name") {
+                if let Some((_, v)) = rest.split_once(':') {
+                    return v.trim().to_string();
+                }
+            }
+        }
+    }
+    format!("unknown-{}", std::env::consts::ARCH)
+}
+
+fn entry_to_json(cpu: &str, kernel: KernelId, p: &BlockParams) -> Json {
+    Json::obj([
+        ("cpu", cpu.into()),
+        ("kernel", kernel.name().into()),
+        ("kb", p.kb.into()),
+        ("mb", p.mb.into()),
+        ("nr", p.nr.into()),
+        ("unroll", p.unroll.factor().into()),
+        ("prefetch", p.prefetch.into()),
+        ("pack_b", p.pack_b.into()),
+        ("pack_a", p.pack_a.into()),
+    ])
+}
+
+fn entry_from_json(j: &Json) -> Option<(String, KernelId, BlockParams)> {
+    let cpu = j.get("cpu")?.as_str()?.to_string();
+    let kernel = KernelId::from_name(j.get("kernel")?.as_str()?)?;
+    let params = BlockParams {
+        kb: j.get("kb")?.as_usize()?,
+        mb: j.get("mb")?.as_usize()?,
+        nr: j.get("nr")?.as_usize()?,
+        unroll: Unroll::from_factor(j.get("unroll")?.as_usize()?)?,
+        prefetch: j.get("prefetch")?.as_bool()?,
+        pack_b: j.get("pack_b")?.as_bool()?,
+        pack_a: j.get("pack_a")?.as_bool()?,
+    };
+    params.validate().ok()?;
+    Some((cpu, kernel, params))
+}
+
+/// Load every well-formed entry from a cache file (missing or corrupt
+/// files yield an empty list — the cache is strictly best-effort).
+pub fn load_entries(path: &Path) -> Vec<(String, KernelId, BlockParams)> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    let Ok(doc) = Json::parse(&text) else {
+        return Vec::new();
+    };
+    doc.get("entries")
+        .and_then(Json::as_arr)
+        .map(|items| items.iter().filter_map(entry_from_json).collect())
+        .unwrap_or_default()
+}
+
+/// Entries from the configured cache file that match this host's CPU
+/// model — what the global [`crate::gemm::plan::GemmContext`] installs at
+/// init.
+pub fn load_host_entries() -> Vec<(KernelId, BlockParams)> {
+    let Some(path) = cache_path() else {
+        return Vec::new();
+    };
+    let host = cpu_model();
+    load_entries(&path)
+        .into_iter()
+        .filter(|(cpu, _, _)| *cpu == host)
+        .map(|(_, id, p)| (id, p))
+        .collect()
+}
+
+/// Insert-or-replace one `(cpu, kernel)` entry in a cache file.
+///
+/// Read-modify-write with an atomic publish: the new document is written
+/// to a process-unique temp file in the same directory and renamed over
+/// the cache, so concurrent readers never observe a torn file. (Two
+/// simultaneous writers can still last-write-win a whole document — an
+/// acceptable loss for a best-effort cache.)
+pub fn save_entry(
+    path: &Path,
+    cpu: &str,
+    kernel: KernelId,
+    params: &BlockParams,
+) -> std::io::Result<()> {
+    let mut entries = load_entries(path);
+    entries.retain(|(c, id, _)| !(c == cpu && *id == kernel));
+    entries.push((cpu.to_string(), kernel, *params));
+    let doc = Json::obj([
+        ("version", 1usize.into()),
+        (
+            "entries",
+            Json::arr(entries.iter().map(|(c, id, p)| entry_to_json(c, *id, p))),
+        ),
+    ]);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, doc.render())?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Persist a tuning winner for this host under the configured cache path.
+/// Returns the path written, or `None` when persistence is disabled or
+/// the write failed (the cache never blocks tuning).
+pub fn save_host_entry(kernel: KernelId, params: &BlockParams) -> Option<PathBuf> {
+    let path = cache_path()?;
+    save_entry(&path, &cpu_model(), kernel, params).ok()?;
+    Some(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_file(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "emmerald-tune-cache-{}-{}.json",
+            std::process::id(),
+            tag
+        ))
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_replace() {
+        let path = temp_file("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let p1 = BlockParams { kb: 128, mb: 64, nr: 4, ..BlockParams::emmerald_sse() };
+        save_entry(&path, "cpu-a", KernelId::Simd, &p1).unwrap();
+        let p2 = BlockParams { kb: 256, ..p1 };
+        save_entry(&path, "cpu-b", KernelId::Simd, &p2).unwrap();
+        let p3 = BlockParams { kb: 336, ..p1 };
+        save_entry(&path, "cpu-a", KernelId::Avx2, &p3).unwrap();
+        // Replacing an existing (cpu, kernel) pair keeps one entry.
+        let p4 = BlockParams { kb: 448, ..p1 };
+        save_entry(&path, "cpu-a", KernelId::Simd, &p4).unwrap();
+        let entries = load_entries(&path);
+        assert_eq!(entries.len(), 3);
+        let a_simd: Vec<_> = entries
+            .iter()
+            .filter(|(c, id, _)| c == "cpu-a" && *id == KernelId::Simd)
+            .collect();
+        assert_eq!(a_simd.len(), 1);
+        assert_eq!(a_simd[0].2.kb, 448);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_or_missing_files_load_empty() {
+        let path = temp_file("corrupt");
+        let _ = std::fs::remove_file(&path);
+        assert!(load_entries(&path).is_empty());
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(load_entries(&path).is_empty());
+        // Well-formed JSON with a bogus entry: the entry is skipped.
+        std::fs::write(
+            &path,
+            r#"{"version":1,"entries":[{"cpu":"x","kernel":"emmerald-sse","kb":0,"mb":1,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
+        )
+        .unwrap();
+        assert!(load_entries(&path).is_empty(), "invalid kb=0 must not load");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cpu_model_is_nonempty_and_stable() {
+        let a = cpu_model();
+        assert!(!a.is_empty());
+        assert_eq!(a, cpu_model());
+    }
+}

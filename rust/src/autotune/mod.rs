@@ -14,6 +14,8 @@
 //! per flop from the block geometry — useful as a cross-check and for
 //! pruning the search space.
 
+pub mod cache;
+
 use crate::bench::{gemm_flops, Bencher, FlushMode};
 use crate::blas::{Matrix, Transpose};
 use crate::gemm::{avx2, blocked, simd, BlockParams, Unroll};
@@ -154,11 +156,24 @@ impl TuneKernel {
 /// [`crate::gemm::dispatch`] heuristic table, so every subsequent
 /// [`crate::blas::Backend::Dispatch`] call runs the tuned geometry —
 /// ATLAS's install-time loop feeding the production hot path.
+///
+/// Use [`tune_install_and_persist`] to additionally record the winner in
+/// the on-disk cache for future processes.
 pub fn tune_and_install(spec: &TuneSpec) -> TuneResult {
     let result = tune(spec);
     crate::gemm::dispatch::install_tuned(spec.kernel.kernel_id(), result.best)
         .expect("tuned parameters come from a validated candidate grid");
     result
+}
+
+/// As [`tune_and_install`], and also persist the winner to the on-disk
+/// cache (see [`cache`]) so future processes on this machine start tuned.
+/// Returns the cache path written, if persistence is enabled and the
+/// write succeeded (the cache is best-effort and never fails tuning).
+pub fn tune_install_and_persist(spec: &TuneSpec) -> (TuneResult, Option<std::path::PathBuf>) {
+    let result = tune_and_install(spec);
+    let path = cache::save_host_entry(spec.kernel.kernel_id(), &result.best);
+    (result, path)
 }
 
 /// Run the empirical search (ATLAS's install-time loop).

@@ -1,0 +1,175 @@
+//! Positional BLAS entry points, implemented as thin compatibility shims
+//! over the planned-execution API.
+//!
+//! [`sgemm`] and [`sgemm_batch`] keep the classic 14/18-argument BLAS
+//! signatures for drop-in use, but each call now builds and runs a
+//! **one-shot [`crate::gemm::plan::GemmPlan`]** on the shared
+//! [`GemmContext`]: validation, kernel selection and the worker-thread
+//! split all happen in the context, and parallel work draws from its
+//! single process-wide thread budget. Repeated-shape workloads should
+//! build the plan once (`ctx.gemm()...plan(m, n, k)?`) and call
+//! [`crate::gemm::plan::GemmPlan::run`] instead — same kernels, none of
+//! the per-call setup — and weight-like operands should be prepacked with
+//! [`GemmContext::pack_b`].
+
+use super::backend::{Backend, Resolved};
+use super::error::BlasError;
+use super::matrix::Matrix;
+use super::Transpose;
+use crate::gemm::batch::BatchStrides;
+use crate::gemm::plan::GemmContext;
+use crate::gemm::KernelId;
+
+/// Map an explicit backend onto a forced registry kernel (`None` = let
+/// the dispatch heuristics choose), checking CPU features.
+fn forced_kernel(backend: Backend) -> Result<Option<KernelId>, BlasError> {
+    Ok(match backend.resolve()? {
+        Resolved::Naive => Some(KernelId::Naive),
+        Resolved::Blocked => Some(KernelId::Blocked),
+        Resolved::Simd => Some(KernelId::Simd),
+        Resolved::Avx2 => Some(KernelId::Avx2),
+        Resolved::Dispatch => None,
+    })
+}
+
+/// General matrix-matrix multiply: `C = alpha * op(A) * op(B) + beta * C`.
+///
+/// * `op(A)` is `m × k`, `op(B)` is `k × n`, `C` is `m × n`.
+/// * `a` stores `A` row-major with leading dimension `lda` (so `A` is
+///   `m × k` storage when `transa == No`, `k × m` when `Yes`); same for `b`.
+/// * Degenerate dimensions (`m`, `n` or `k` = 0) are valid: `k == 0`
+///   scales `C` by `beta`; `m == 0` or `n == 0` is a no-op.
+///
+/// This is the crate's compatibility entry point; `backend` selects the
+/// implementation ([`Backend::Auto`] picks the fastest available). It
+/// builds and runs a one-shot plan on the shared [`GemmContext`]; see the
+/// module docs for the planned alternative when shapes repeat.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+) -> Result<(), BlasError> {
+    let forced = forced_kernel(backend)?;
+    let mut builder = GemmContext::global()
+        .gemm()
+        .transpose_a(transa)
+        .transpose_b(transb)
+        .alpha(alpha)
+        .beta(beta)
+        .lda(lda)
+        .ldb(ldb)
+        .ldc(ldc);
+    if let Some(id) = forced {
+        builder = builder.kernel(id);
+    }
+    builder.plan(m, n, k)?.run(a, b, c)
+}
+
+/// Strided-batch SGEMM: `C_i = alpha · op(A_i) op(B_i) + beta · C_i` for
+/// `i in 0..batch`, with `X_i = x[i * stride_x ..]` (stride 0 broadcasts a
+/// read-only operand — the cuBLAS `gemmStridedBatched` convention).
+///
+/// A one-shot plan on the shared [`GemmContext`]:
+/// [`Backend::Dispatch`]/[`Backend::Auto`] run the full batched driver
+/// (shared-B folding, per-worker packing scratch, fan-out over the
+/// context's thread budget — see [`crate::gemm::batch`]); explicit
+/// backends run their kernel per item with the same validation and
+/// amortised packing buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_batch(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    stride_a: usize,
+    b: &[f32],
+    ldb: usize,
+    stride_b: usize,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+    stride_c: usize,
+    batch: usize,
+) -> Result<(), BlasError> {
+    let forced = forced_kernel(backend)?;
+    let mut builder = GemmContext::global()
+        .gemm()
+        .transpose_a(transa)
+        .transpose_b(transb)
+        .alpha(alpha)
+        .beta(beta)
+        .lda(lda)
+        .ldb(ldb)
+        .ldc(ldc);
+    if let Some(id) = forced {
+        builder = builder.kernel(id);
+    }
+    let strides = BatchStrides { a: stride_a, b: stride_b, c: stride_c };
+    builder.plan(m, n, k)?.run_batch(a, b, c, batch, strides)
+}
+
+/// Convenience wrapper over [`sgemm`] for owned [`Matrix`] values
+/// (`C = alpha * op(A) op(B) + beta * C`).
+pub fn sgemm_matrix(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: &Matrix,
+    b: &Matrix,
+    beta: f32,
+    c: &mut Matrix,
+) -> Result<(), BlasError> {
+    let (m, ka) = match transa {
+        Transpose::No => (a.rows(), a.cols()),
+        Transpose::Yes => (a.cols(), a.rows()),
+    };
+    let (kb, n) = match transb {
+        Transpose::No => (b.rows(), b.cols()),
+        Transpose::Yes => (b.cols(), b.rows()),
+    };
+    if ka != kb {
+        return Err(BlasError::DimMismatch { m, n, k: ka, other_k: kb });
+    }
+    if c.rows() != m || c.cols() != n {
+        return Err(BlasError::ShapeMismatch {
+            what: "C",
+            expect: (m, n),
+            got: (c.rows(), c.cols()),
+        });
+    }
+    let (lda, ldb, ldc) = (a.ld(), b.ld(), c.ld());
+    sgemm(
+        backend,
+        transa,
+        transb,
+        m,
+        n,
+        ka,
+        alpha,
+        a.data(),
+        lda,
+        b.data(),
+        ldb,
+        beta,
+        c.data_mut(),
+        ldc,
+    )
+}

@@ -12,8 +12,6 @@
 //!   (the "what Emmerald becomes on a modern core" extension).
 
 use super::error::BlasError;
-use super::matrix::{MatMut, MatRef};
-use super::Transpose;
 use crate::gemm;
 
 /// Implementation selector for [`super::sgemm`].
@@ -96,6 +94,12 @@ pub fn available_backends() -> Vec<Backend> {
 }
 
 /// A concrete, feature-checked implementation.
+///
+/// The `sgemm`/`sgemm_batch` shims map each variant onto a forced
+/// [`gemm::KernelId`] (or the dispatch heuristics for `Dispatch`) and run
+/// it through a one-shot [`gemm::plan::GemmPlan`], so explicit backends,
+/// planned execution and the dispatcher all share one execution path and
+/// one (possibly autotuned) geometry table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub(crate) enum Resolved {
     Naive,
@@ -103,63 +107,6 @@ pub(crate) enum Resolved {
     Simd,
     Avx2,
     Dispatch,
-}
-
-impl Resolved {
-    /// Run the GEMM on validated views.
-    ///
-    /// Explicit kernel backends read their block geometry from the
-    /// process-wide dispatch table, so `sgemm(Backend::Simd, ..)`,
-    /// `sgemm_batch(Backend::Simd, ..)` and the dispatcher itself all
-    /// run the same (possibly autotuned) geometry.
-    pub(crate) fn dispatch(
-        self,
-        transa: Transpose,
-        transb: Transpose,
-        alpha: f32,
-        a: MatRef<'_>,
-        b: MatRef<'_>,
-        beta: f32,
-        mut c: MatMut<'_>,
-    ) {
-        use crate::gemm::dispatch::{tuned_params, KernelId};
-        match self {
-            Resolved::Naive => gemm::naive::gemm(transa, transb, alpha, a, b, beta, &mut c),
-            Resolved::Blocked => gemm::blocked::gemm(
-                &tuned_params(KernelId::Blocked),
-                transa,
-                transb,
-                alpha,
-                a,
-                b,
-                beta,
-                &mut c,
-            ),
-            Resolved::Simd => gemm::simd::gemm(
-                &tuned_params(KernelId::Simd),
-                transa,
-                transb,
-                alpha,
-                a,
-                b,
-                beta,
-                &mut c,
-            ),
-            Resolved::Avx2 => gemm::avx2::gemm(
-                &tuned_params(KernelId::Avx2),
-                transa,
-                transb,
-                alpha,
-                a,
-                b,
-                beta,
-                &mut c,
-            ),
-            Resolved::Dispatch => {
-                gemm::dispatch::gemm_auto(transa, transb, alpha, a, b, beta, &mut c);
-            }
-        }
-    }
 }
 
 #[cfg(test)]

@@ -57,6 +57,9 @@ pub enum BlasError {
         /// Minimum stride: one item's element extent `(rows-1)*ld + cols`.
         need: usize,
     },
+    /// A prepacked operand was built under a different kernel geometry
+    /// than the plan resolved to (planned API only).
+    PlanMismatch(&'static str),
 }
 
 impl BlasError {
@@ -89,7 +92,9 @@ impl fmt::Display for BlasError {
             BlasError::ShapeMismatch { what, expect, got } => {
                 write!(f, "operand {what}: expected {}x{}, got {}x{}", expect.0, expect.1, got.0, got.1)
             }
-            BlasError::BadTranspose(c) => write!(f, "invalid transpose flag '{c}' (want n/N/t/T)"),
+            BlasError::BadTranspose(c) => {
+                write!(f, "invalid transpose flag '{c}' (want n/N, t/T or c/C)")
+            }
             BlasError::BackendUnavailable(b) => {
                 write!(f, "backend {b} is not available on this CPU")
             }
@@ -99,6 +104,7 @@ impl fmt::Display for BlasError {
                     "operand {operand}: batch stride {stride} overlaps items needing {need} elements"
                 )
             }
+            BlasError::PlanMismatch(msg) => write!(f, "plan mismatch: {msg}"),
         }
     }
 }

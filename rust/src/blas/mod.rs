@@ -1,7 +1,33 @@
 //! Level-3 BLAS `SGEMM` public interface.
 //!
 //! Emmerald implements the `SGEMM` interface of Level-3 BLAS (paper §1) so
-//! it can drop into BLAS-based libraries. This module is the public API:
+//! it can drop into BLAS-based libraries. Since the planned-execution
+//! redesign, the positional entry points in this module ([`sgemm`],
+//! [`sgemm_batch`], [`sgemm_matrix`] — see [`mod@api`]) are **thin
+//! compatibility shims**: each call builds and runs a one-shot
+//! [`GemmPlan`] on the shared [`GemmContext`], which owns the kernel
+//! registry, the process-wide worker-thread budget and the autotune
+//! state. New code with repeated shapes or reusable weight operands
+//! should use the planned API directly:
+//!
+//! ```
+//! use emmerald::blas::{GemmContext, Transpose};
+//!
+//! let ctx = GemmContext::global();
+//! let (m, n, k) = (3, 4, 5);
+//! let a: Vec<f32> = (0..m * k).map(|i| i as f32).collect();
+//! let b: Vec<f32> = (0..k * n).map(|i| (i % 7) as f32).collect();
+//! let mut c = vec![0.0f32; m * n];
+//!
+//! // Plan once (kernel, geometry and thread split resolved here) ...
+//! let plan = ctx.gemm().plan(m, n, k).unwrap();
+//! // ... execute many times; pack B once and reuse it across runs.
+//! let packed = ctx.pack_b(Transpose::No, k, n, &b, n).unwrap();
+//! plan.run(&a, &b, &mut c).unwrap();
+//! plan.run_packed_b(&a, &packed, &mut c).unwrap();
+//! ```
+//!
+//! The classic positional call keeps working unchanged:
 //!
 //! ```
 //! use emmerald::blas::{sgemm, Backend, Transpose};
@@ -22,6 +48,7 @@
 //! stored matrix. Transposition is expressed logically via [`Transpose`] —
 //! no data is moved.
 
+pub mod api;
 mod backend;
 mod error;
 pub mod level1;
@@ -29,12 +56,16 @@ pub mod level2;
 mod matrix;
 pub mod syrk;
 
+pub use api::{sgemm, sgemm_batch, sgemm_matrix};
 pub use backend::{available_backends, Backend};
 pub use level1::{isamax, saxpy, sdot, snrm2, sscal};
 pub use level2::sgemv;
 pub use syrk::ssyrk_lower;
 pub use error::BlasError;
 pub use matrix::{MatMut, MatRef, Matrix};
+// The planned-execution API lives in `gemm::plan`; re-exported here
+// because it is the public surface most callers should reach for.
+pub use crate::gemm::plan::{GemmBuilder, GemmContext, GemmPlan, PackedA, PackedB};
 
 /// Logical transposition of an operand (`op(X) = X` or `Xᵀ`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,156 +77,16 @@ pub enum Transpose {
 }
 
 impl Transpose {
-    /// Parse from the BLAS character convention ('n'/'N' or 't'/'T').
+    /// Parse from the BLAS character convention: 'n'/'N' (no transpose),
+    /// 't'/'T' (transpose), or 'c'/'C' (conjugate transpose — identical
+    /// to 'T' for real single precision).
     pub fn from_char(c: char) -> Result<Self, BlasError> {
         match c {
             'n' | 'N' => Ok(Transpose::No),
-            't' | 'T' => Ok(Transpose::Yes),
+            't' | 'T' | 'c' | 'C' => Ok(Transpose::Yes),
             other => Err(BlasError::BadTranspose(other)),
         }
     }
-}
-
-/// General matrix-matrix multiply: `C = alpha * op(A) * op(B) + beta * C`.
-///
-/// * `op(A)` is `m × k`, `op(B)` is `k × n`, `C` is `m × n`.
-/// * `a` stores `A` row-major with leading dimension `lda` (so `A` is
-///   `m × k` storage when `transa == No`, `k × m` when `Yes`); same for `b`.
-/// * Degenerate dimensions (`m`, `n` or `k` = 0) are valid: `k == 0`
-///   scales `C` by `beta`; `m == 0` or `n == 0` is a no-op.
-///
-/// This is the crate's primary entry point; `backend` selects the
-/// implementation ([`Backend::Auto`] picks the fastest available).
-#[allow(clippy::too_many_arguments)]
-pub fn sgemm(
-    backend: Backend,
-    transa: Transpose,
-    transb: Transpose,
-    m: usize,
-    n: usize,
-    k: usize,
-    alpha: f32,
-    a: &[f32],
-    lda: usize,
-    b: &[f32],
-    ldb: usize,
-    beta: f32,
-    c: &mut [f32],
-    ldc: usize,
-) -> Result<(), BlasError> {
-    // Stored shapes of A and B.
-    let (ar, ac) = match transa {
-        Transpose::No => (m, k),
-        Transpose::Yes => (k, m),
-    };
-    let (br, bc) = match transb {
-        Transpose::No => (k, n),
-        Transpose::Yes => (n, k),
-    };
-    let a = MatRef::new(a, ar, ac, lda).map_err(|e| e.operand("A"))?;
-    let b = MatRef::new(b, br, bc, ldb).map_err(|e| e.operand("B"))?;
-    let c = MatMut::new(c, m, n, ldc).map_err(|e| e.operand("C"))?;
-
-    if m == 0 || n == 0 {
-        return Ok(());
-    }
-
-    backend.resolve()?.dispatch(transa, transb, alpha, a, b, beta, c);
-    Ok(())
-}
-
-/// Strided-batch SGEMM: `C_i = alpha · op(A_i) op(B_i) + beta · C_i` for
-/// `i in 0..batch`, with `X_i = x[i * stride_x ..]` (stride 0 broadcasts a
-/// read-only operand — the cuBLAS `gemmStridedBatched` convention).
-///
-/// [`Backend::Dispatch`]/[`Backend::Auto`] run the full batched driver
-/// (shared-B folding, per-worker packing scratch, thread fan-out — see
-/// [`crate::gemm::batch`]); explicit backends run their kernel per item
-/// with the same validation and amortised packing buffers.
-#[allow(clippy::too_many_arguments)]
-pub fn sgemm_batch(
-    backend: Backend,
-    transa: Transpose,
-    transb: Transpose,
-    m: usize,
-    n: usize,
-    k: usize,
-    alpha: f32,
-    a: &[f32],
-    lda: usize,
-    stride_a: usize,
-    b: &[f32],
-    ldb: usize,
-    stride_b: usize,
-    beta: f32,
-    c: &mut [f32],
-    ldc: usize,
-    stride_c: usize,
-    batch: usize,
-) -> Result<(), BlasError> {
-    use crate::gemm::batch::{gemm_batch_impl, BatchStrides};
-    use crate::gemm::dispatch::{with_global, KernelId};
-
-    let forced = match backend.resolve()? {
-        backend::Resolved::Naive => Some(KernelId::Naive),
-        backend::Resolved::Blocked => Some(KernelId::Blocked),
-        backend::Resolved::Simd => Some(KernelId::Simd),
-        backend::Resolved::Avx2 => Some(KernelId::Avx2),
-        backend::Resolved::Dispatch => None,
-    };
-    let strides = BatchStrides { a: stride_a, b: stride_b, c: stride_c };
-    with_global(|d| {
-        gemm_batch_impl(d, forced, transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc, batch, strides)
-    })
-}
-
-/// Convenience wrapper over [`sgemm`] for owned [`Matrix`] values
-/// (`C = alpha * op(A) op(B) + beta * C`).
-pub fn sgemm_matrix(
-    backend: Backend,
-    transa: Transpose,
-    transb: Transpose,
-    alpha: f32,
-    a: &Matrix,
-    b: &Matrix,
-    beta: f32,
-    c: &mut Matrix,
-) -> Result<(), BlasError> {
-    let (m, ka) = match transa {
-        Transpose::No => (a.rows(), a.cols()),
-        Transpose::Yes => (a.cols(), a.rows()),
-    };
-    let (kb, n) = match transb {
-        Transpose::No => (b.rows(), b.cols()),
-        Transpose::Yes => (b.cols(), b.rows()),
-    };
-    if ka != kb {
-        return Err(BlasError::DimMismatch { m, n, k: ka, other_k: kb });
-    }
-    if c.rows() != m || c.cols() != n {
-        return Err(BlasError::ShapeMismatch {
-            what: "C",
-            expect: (m, n),
-            got: (c.rows(), c.cols()),
-        });
-    }
-    let (lda, ldb, ldc) = (a.ld(), b.ld(), c.ld());
-    sgemm(
-        backend,
-        transa,
-        transb,
-        m,
-        n,
-        ka,
-        alpha,
-        a.data(),
-        lda,
-        b.data(),
-        ldb,
-        beta,
-        c.data_mut(),
-        ldc,
-    )
 }
 
 #[cfg(test)]
@@ -319,8 +210,33 @@ mod tests {
     #[test]
     fn transpose_from_char() {
         assert_eq!(Transpose::from_char('n').unwrap(), Transpose::No);
+        assert_eq!(Transpose::from_char('N').unwrap(), Transpose::No);
+        assert_eq!(Transpose::from_char('t').unwrap(), Transpose::Yes);
         assert_eq!(Transpose::from_char('T').unwrap(), Transpose::Yes);
         assert!(Transpose::from_char('q').is_err());
+        assert!(Transpose::from_char(' ').is_err());
+    }
+
+    #[test]
+    fn transpose_from_char_accepts_conjugate() {
+        // BLAS 'C' (conjugate transpose) equals 'T' for real f32.
+        assert_eq!(Transpose::from_char('c').unwrap(), Transpose::Yes);
+        assert_eq!(Transpose::from_char('C').unwrap(), Transpose::Yes);
+    }
+
+    #[test]
+    fn conjugate_transpose_computes_like_t() {
+        let (m, n, k) = (3usize, 4usize, 5usize);
+        let a: Vec<f32> = (0..k * m).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32).cos()).collect();
+        let mut c_t = vec![0.0f32; m * n];
+        let mut c_c = vec![0.0f32; m * n];
+        let tc = Transpose::from_char('C').unwrap();
+        sgemm(Backend::Naive, Transpose::Yes, Transpose::No, m, n, k, 1.0, &a, m, &b, n, 0.0, &mut c_t, n)
+            .unwrap();
+        sgemm(Backend::Naive, tc, Transpose::No, m, n, k, 1.0, &a, m, &b, n, 0.0, &mut c_c, n)
+            .unwrap();
+        assert_eq!(c_t, c_c);
     }
 
     #[test]

@@ -12,6 +12,19 @@ pub trait GradEngine {
     /// Compute loss and gradients of `mlp` on one batch shard.
     fn loss_and_grad(&mut self, mlp: &Mlp, x: &Matrix, y: &Matrix) -> Result<(f32, MlpGrads)>;
 
+    /// Compute loss and gradients for several shards at once. The default
+    /// loops [`loss_and_grad`](Self::loss_and_grad); engines that can
+    /// batch (the native engine's shared-weight `sgemm_batch` backprop)
+    /// override this — the sequential trainer calls it with the whole
+    /// step's shard list.
+    fn loss_and_grad_multi(
+        &mut self,
+        mlp: &Mlp,
+        shards: &[(Matrix, Matrix)],
+    ) -> Result<Vec<(f32, MlpGrads)>> {
+        shards.iter().map(|(x, y)| self.loss_and_grad(mlp, x, y)).collect()
+    }
+
     /// Engine label for logs.
     fn name(&self) -> String;
 
@@ -23,6 +36,28 @@ pub trait GradEngine {
 
 /// Constructs a fresh engine for worker `id` on the worker's own thread.
 pub type EngineFactory = dyn Fn(usize) -> Result<Box<dyn GradEngine>> + Send + Sync;
+
+/// Stack equal-shaped matrices vertically into one contiguous row-major
+/// matrix (bulk row copies, not per-element access).
+fn stack_rows<'a>(mats: impl ExactSizeIterator<Item = &'a Matrix>) -> Matrix {
+    let mut parts = mats.peekable();
+    let (rows, cols) = {
+        let first = parts.peek().expect("at least one matrix to stack");
+        (first.rows(), first.cols())
+    };
+    let count = parts.len();
+    let mut out = Matrix::zeros(rows * count, cols);
+    let mut dst = 0usize;
+    for m in parts {
+        assert_eq!((m.rows(), m.cols()), (rows, cols), "ragged stack");
+        for r in 0..rows {
+            let src = r * m.ld();
+            out.data_mut()[dst..dst + cols].copy_from_slice(&m.data()[src..src + cols]);
+            dst += cols;
+        }
+    }
+    out
+}
 
 /// Native engine: Rust backprop with a selectable SGEMM backend.
 pub struct NativeEngine {
@@ -38,14 +73,12 @@ impl NativeEngine {
 
 impl Default for NativeEngine {
     /// The production default: every SGEMM in the worker's backprop goes
-    /// through the [`crate::gemm::dispatch`] registry.
-    ///
-    /// Caveat for *threaded* coordinators with large layers: the
-    /// dispatcher's parallel tier has no awareness of the worker threads
-    /// above it, so `workers × threads` can oversubscribe the host once
-    /// per-shard GEMMs exceed `parallel_min_flops` (~33 Mflop). Pass an
-    /// explicit serial backend (`Backend::Avx2`/`Simd`) to such workers;
-    /// a shared thread budget is a ROADMAP item.
+    /// through the [`crate::gemm::dispatch`] registry, and all parallel
+    /// work draws from the shared
+    /// [`crate::gemm::plan::GemmContext`] thread budget — nesting
+    /// threaded training above the parallel GEMM tier no longer
+    /// oversubscribes the host (each fork-join shares the one pool, with
+    /// the calling worker participating).
     fn default() -> Self {
         Self::new(Backend::Dispatch)
     }
@@ -58,6 +91,33 @@ impl GradEngine for NativeEngine {
         let mut local = mlp.clone();
         local.backend = self.backend;
         Ok(local.loss_and_grad(x, y))
+    }
+
+    /// Batched backprop: equal-sized shards are stacked into one matrix
+    /// pair and routed through
+    /// [`Mlp::loss_and_grad_sharded`] — the forward and `dh` passes fold
+    /// over the shared weights and the per-shard `dW`s run as one
+    /// `sgemm_batch` per layer, instead of per-shard serial SGEMMs.
+    fn loss_and_grad_multi(
+        &mut self,
+        mlp: &Mlp,
+        shards: &[(Matrix, Matrix)],
+    ) -> Result<Vec<(f32, MlpGrads)>> {
+        let uniform = shards
+            .first()
+            .map(|(x0, _)| {
+                x0.rows() > 0 && shards.iter().all(|(x, _)| x.rows() == x0.rows())
+            })
+            .unwrap_or(false);
+        if !uniform {
+            // Ragged shard sizes fall back to the serial loop.
+            return shards.iter().map(|(x, y)| self.loss_and_grad(mlp, x, y)).collect();
+        }
+        let x_all = stack_rows(shards.iter().map(|(x, _)| x));
+        let y_all = stack_rows(shards.iter().map(|(_, y)| y));
+        let mut local = mlp.clone();
+        local.backend = self.backend;
+        Ok(local.loss_and_grad_sharded(&x_all, &y_all, shards.len()))
     }
 
     fn name(&self) -> String {

@@ -149,13 +149,19 @@ impl Coordinator {
         let mut total_flops = 0.0;
         for step in 0..self.cfg.steps {
             let t = Stopwatch::start();
+            // One multi-shard call per step: batching engines (the native
+            // one) fold the shared-weight GEMMs across the whole step.
+            let shards: Vec<(Matrix, Matrix)> =
+                (0..self.cfg.workers).map(|w| self.shard(step, w)).collect();
+            let results = engine
+                .loss_and_grad_multi(&self.mlp, &shards)
+                .with_context(|| format!("step {step}"))?;
+            if results.len() != shards.len() {
+                bail!("engine returned {} results for {} shards", results.len(), shards.len());
+            }
             let mut parts = Vec::with_capacity(self.cfg.workers);
             let mut loss_sum = 0.0f64;
-            for w in 0..self.cfg.workers {
-                let (x, y) = self.shard(step, w);
-                let (loss, grads) = engine
-                    .loss_and_grad(&self.mlp, &x, &y)
-                    .with_context(|| format!("step {step} worker {w}"))?;
+            for ((x, _), (loss, grads)) in shards.iter().zip(results) {
                 loss_sum += loss as f64 * x.rows() as f64;
                 parts.push((x.rows(), grads));
             }

@@ -24,6 +24,7 @@ use super::dispatch::{GemmDispatch, KernelId};
 use super::pack::Scratch;
 use super::{blocked, naive};
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
+use crate::util::threadpool::{run_borrowed_on, ThreadPool};
 
 /// Element offsets between consecutive batch items in each operand slab.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,8 +51,9 @@ impl BatchStrides {
     }
 }
 
-/// Batched GEMM through the dispatcher's heuristics. See the module docs
-/// for layout semantics; shapes follow [`crate::blas::sgemm`].
+/// Batched GEMM through the dispatcher's heuristics, on the process-wide
+/// worker pool. See the module docs for layout semantics; shapes follow
+/// [`crate::blas::sgemm`].
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_batch(
     d: &GemmDispatch,
@@ -71,14 +73,36 @@ pub fn gemm_batch(
     batch: usize,
     strides: BatchStrides,
 ) -> Result<(), BlasError> {
-    gemm_batch_impl(d, None, transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc, batch, strides)
+    gemm_batch_on(
+        d,
+        super::plan::global_pool(),
+        None,
+        transa,
+        transb,
+        m,
+        n,
+        k,
+        alpha,
+        a,
+        lda,
+        b,
+        ldb,
+        beta,
+        c,
+        ldc,
+        batch,
+        strides,
+    )
 }
 
-/// As [`gemm_batch`], but forcing one serial kernel for every item
-/// (the explicit-backend path of [`crate::blas::sgemm_batch`]).
+/// The driver proper: explicit worker pool (`None` = serial sweep) and an
+/// optional forced serial kernel (the explicit-backend path of
+/// [`crate::blas::sgemm_batch`]; the planned API routes its context's
+/// pool through here).
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_batch_impl(
+pub(crate) fn gemm_batch_on(
     d: &GemmDispatch,
+    pool: Option<&ThreadPool>,
     forced: Option<KernelId>,
     transa: Transpose,
     transb: Transpose,
@@ -139,8 +163,8 @@ pub(crate) fn gemm_batch_impl(
         let b_one = MatRef::new(b, k, n, ldb).expect("validated");
         let mut c_all = MatMut::new(c, rows, n, ldc).expect("validated");
         match forced {
-            Some(id) => d.gemm_with(id, transa, transb, alpha, a_all, b_one, beta, &mut c_all),
-            None => d.gemm(transa, transb, alpha, a_all, b_one, beta, &mut c_all),
+            Some(id) => d.gemm_with_on(pool, id, transa, transb, alpha, a_all, b_one, beta, &mut c_all),
+            None => d.gemm_on(pool, transa, transb, alpha, a_all, b_one, beta, &mut c_all),
         };
         return Ok(());
     }
@@ -188,12 +212,14 @@ pub(crate) fn gemm_batch_impl(
         if !current.is_empty() {
             groups.push(current);
         }
+        // Fan the groups out over the shared worker pool (each worker
+        // keeps one packing scratch across all of its items).
         let job = &job;
-        std::thread::scope(|scope| {
-            for group in groups {
-                scope.spawn(move || run_item_group(job, group));
-            }
-        });
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = groups
+            .into_iter()
+            .map(|group| Box::new(move || run_item_group(job, group)) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        run_borrowed_on(pool, jobs);
     }
     Ok(())
 }
@@ -553,8 +579,9 @@ mod tests {
         let d = GemmDispatch::default();
         for id in [KernelId::Naive, KernelId::Blocked, KernelId::Simd, KernelId::Avx2] {
             let mut c_got = c0.clone();
-            gemm_batch_impl(
+            gemm_batch_on(
                 &d,
+                None,
                 Some(id),
                 Transpose::No,
                 Transpose::No,

@@ -30,7 +30,7 @@ use super::params::BlockParams;
 use super::simd::VecIsa;
 use super::{blocked, naive, parallel, simd, strassen};
 use crate::blas::{Backend, MatMut, MatRef, Matrix, Transpose};
-use std::sync::{OnceLock, RwLock};
+use crate::util::threadpool::ThreadPool;
 
 /// Identifier of one GEMM implementation in the registry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -89,6 +89,12 @@ impl KernelId {
             KernelId::Simd | KernelId::Parallel => detect_sse(),
             KernelId::Avx2 => detect_avx2(),
         }
+    }
+
+    /// Inverse of [`name`](Self::name) (the autotune cache stores kernel
+    /// names on disk).
+    pub fn from_name(s: &str) -> Option<KernelId> {
+        KernelId::ALL.iter().copied().find(|id| id.name() == s)
     }
 }
 
@@ -328,6 +334,8 @@ impl GemmDispatch {
     }
 
     /// Run one GEMM through the heuristics. Returns the kernel that ran.
+    /// Parallel work executes on the process-wide
+    /// [`crate::gemm::plan::GemmContext`] thread budget.
     #[allow(clippy::too_many_arguments)]
     pub fn gemm(
         &self,
@@ -339,10 +347,27 @@ impl GemmDispatch {
         beta: f32,
         c: &mut MatMut<'_>,
     ) -> KernelId {
+        self.gemm_on(super::plan::global_pool(), transa, transb, alpha, a, b, beta, c)
+    }
+
+    /// As [`gemm`](Self::gemm), on an explicit worker pool (`None` = run
+    /// any parallel split serially on the calling thread).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn gemm_on(
+        &self,
+        pool: Option<&ThreadPool>,
+        transa: Transpose,
+        transb: Transpose,
+        alpha: f32,
+        a: MatRef<'_>,
+        b: MatRef<'_>,
+        beta: f32,
+        c: &mut MatMut<'_>,
+    ) -> KernelId {
         let shape = shape_of(transa, transb, a, c);
         assert_coherent(&shape, a, b);
         let id = self.select(&shape, alpha);
-        self.run(id, &shape, transa, transb, alpha, a, b, beta, c)
+        self.run(pool, id, &shape, transa, transb, alpha, a, b, beta, c)
     }
 
     /// Run one GEMM on a *specific* kernel (the conformance suite drives
@@ -362,14 +387,33 @@ impl GemmDispatch {
         beta: f32,
         c: &mut MatMut<'_>,
     ) -> KernelId {
+        self.gemm_with_on(super::plan::global_pool(), id, transa, transb, alpha, a, b, beta, c)
+    }
+
+    /// As [`gemm_with`](Self::gemm_with), on an explicit worker pool (the
+    /// planned API routes its own context's pool through here).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn gemm_with_on(
+        &self,
+        pool: Option<&ThreadPool>,
+        id: KernelId,
+        transa: Transpose,
+        transb: Transpose,
+        alpha: f32,
+        a: MatRef<'_>,
+        b: MatRef<'_>,
+        beta: f32,
+        c: &mut MatMut<'_>,
+    ) -> KernelId {
         let shape = shape_of(transa, transb, a, c);
         assert_coherent(&shape, a, b);
-        self.run(id, &shape, transa, transb, alpha, a, b, beta, c)
+        self.run(pool, id, &shape, transa, transb, alpha, a, b, beta, c)
     }
 
     #[allow(clippy::too_many_arguments)]
     fn run(
         &self,
+        pool: Option<&ThreadPool>,
         id: KernelId,
         shape: &GemmShape,
         transa: Transpose,
@@ -391,14 +435,14 @@ impl GemmDispatch {
             }
             KernelId::Simd => {
                 if !self.have_sse {
-                    return self.run(KernelId::Blocked, shape, transa, transb, alpha, a, b, beta, c);
+                    return self.run(pool, KernelId::Blocked, shape, transa, transb, alpha, a, b, beta, c);
                 }
                 simd::gemm(&self.cfg.sse, transa, transb, alpha, a, b, beta, c);
                 KernelId::Simd
             }
             KernelId::Avx2 => {
                 if !self.have_avx2 {
-                    return self.run(KernelId::Simd, shape, transa, transb, alpha, a, b, beta, c);
+                    return self.run(pool, KernelId::Simd, shape, transa, transb, alpha, a, b, beta, c);
                 }
                 super::avx2::gemm(&self.cfg.avx2, transa, transb, alpha, a, b, beta, c);
                 KernelId::Avx2
@@ -408,7 +452,7 @@ impl GemmDispatch {
                 // the returned id names the kernel that actually ran.
                 let usable_threads = self.threads().min(shape.m.max(1));
                 if !shape.no_trans() || !self.have_sse || usable_threads <= 1 || shape.m < 2 {
-                    return self.run_serial_vector(shape, transa, transb, alpha, a, b, beta, c);
+                    return self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c);
                 }
                 let (isa, params) = match self.best_serial_vector() {
                     KernelId::Avx2 => (VecIsa::Avx2, &self.cfg.avx2),
@@ -416,6 +460,7 @@ impl GemmDispatch {
                 };
                 match parallel::gemm_parallel_vec(
                     isa,
+                    pool,
                     self.threads(),
                     params,
                     alpha,
@@ -427,12 +472,12 @@ impl GemmDispatch {
                     Ok(()) => KernelId::Parallel,
                     // Shape mismatch can only come from caller-constructed
                     // inconsistent views; recover via the serial path.
-                    Err(_) => self.run_serial_vector(shape, transa, transb, alpha, a, b, beta, c),
+                    Err(_) => self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c),
                 }
             }
             KernelId::Strassen => {
                 if !shape.no_trans() || alpha == 0.0 || shape.min_dim() == 0 {
-                    return self.run_serial_vector(shape, transa, transb, alpha, a, b, beta, c);
+                    return self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c);
                 }
                 self.run_strassen(alpha, a, b, beta, c);
                 KernelId::Strassen
@@ -443,6 +488,7 @@ impl GemmDispatch {
     #[allow(clippy::too_many_arguments)]
     fn run_serial_vector(
         &self,
+        pool: Option<&ThreadPool>,
         shape: &GemmShape,
         transa: Transpose,
         transb: Transpose,
@@ -453,7 +499,7 @@ impl GemmDispatch {
         c: &mut MatMut<'_>,
     ) -> KernelId {
         let id = self.select_serial(shape, alpha);
-        self.run(id, shape, transa, transb, alpha, a, b, beta, c)
+        self.run(pool, id, shape, transa, transb, alpha, a, b, beta, c)
     }
 
     /// Strassen path: materialise contiguous operands, recurse, then apply
@@ -541,23 +587,15 @@ fn shape_of(transa: Transpose, transb: Transpose, a: MatRef<'_>, c: &MatMut<'_>)
     }
 }
 
-static GLOBAL: OnceLock<RwLock<GemmDispatch>> = OnceLock::new();
-
-fn global_lock() -> &'static RwLock<GemmDispatch> {
-    GLOBAL.get_or_init(|| RwLock::new(GemmDispatch::default()))
-}
-
-/// Run `f` against the process-wide dispatcher.
+/// Run `f` against the process-wide dispatcher (owned, together with the
+/// worker pool and autotune state, by [`crate::gemm::plan::GemmContext`]).
 ///
-/// The dispatcher is *cloned out of the lock* (it is a small plain-data
-/// struct) so the lock is never held across kernel execution — a long
-/// GEMM must not block [`install_tuned`], and a queued writer must not
-/// stall other dispatch calls.
+/// The dispatcher is *cloned out of the context's lock* (it is a small
+/// plain-data struct) so the lock is never held across kernel execution —
+/// a long GEMM must not block [`install_tuned`], and a queued writer must
+/// not stall other dispatch calls.
 pub fn with_global<R>(f: impl FnOnce(&GemmDispatch) -> R) -> R {
-    let snapshot = {
-        let guard = global_lock().read().unwrap_or_else(|e| e.into_inner());
-        guard.clone()
-    };
+    let snapshot = super::plan::GemmContext::global().snapshot();
     f(&snapshot)
 }
 
@@ -590,13 +628,12 @@ pub fn gemm_auto(
 /// Install tuned block parameters into the process-wide dispatcher.
 /// Returns whether the kernel family carries a geometry that was updated.
 pub fn install_tuned(id: KernelId, params: BlockParams) -> Result<bool, String> {
-    let mut guard = global_lock().write().unwrap_or_else(|e| e.into_inner());
-    guard.set_tuned(id, params)
+    super::plan::GemmContext::global().install_tuned(id, params)
 }
 
 /// Clone the process-wide dispatcher (inspection / diagnostics).
 pub fn global_snapshot() -> GemmDispatch {
-    with_global(|d| d.clone())
+    super::plan::GemmContext::global().snapshot()
 }
 
 #[cfg(test)]

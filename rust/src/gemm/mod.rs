@@ -23,17 +23,23 @@
 //! * [`blocked`] — the ATLAS proxy: identical blocking, *scalar* kernel.
 //! * [`simd`] — the Emmerald driver (SSE).
 //! * [`avx2`] — the Emmerald driver re-tuned for AVX2 + FMA (extension).
-//! * [`dispatch`] — the production entry point: a kernel registry with
-//!   runtime CPU-feature detection and shape-based selection over every
-//!   backend (including [`parallel`] and [`strassen`]).
+//! * [`dispatch`] — the kernel registry: runtime CPU-feature detection and
+//!   shape-based selection over every backend (including [`parallel`] and
+//!   [`strassen`]).
 //! * [`batch`] — batched GEMM over strided tensor slabs, amortising
 //!   packing and thread spawn across the batch.
+//! * [`plan`] — the production entry point: [`plan::GemmContext`] (kernel
+//!   registry + shared worker-thread budget + autotune state) builds
+//!   [`plan::GemmPlan`]s that resolve kernel/geometry/split once and
+//!   execute many times, with [`plan::PackedA`]/[`plan::PackedB`]
+//!   prepacked-operand handles for weight-stationary workloads.
 
 pub mod avx2;
 pub mod batch;
 pub mod blocked;
 pub mod dispatch;
 pub mod parallel;
+pub mod plan;
 pub mod strassen;
 pub mod microkernel;
 pub mod naive;
@@ -44,6 +50,7 @@ pub mod simd;
 pub use batch::{gemm_batch, BatchStrides};
 pub use dispatch::{registry, DispatchConfig, GemmDispatch, KernelId, KernelInfo};
 pub use params::{BlockParams, Unroll};
+pub use plan::{GemmBuilder, GemmContext, GemmPlan, PackedA, PackedB};
 
 #[cfg(test)]
 pub(crate) mod testutil {

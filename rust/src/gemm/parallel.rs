@@ -2,19 +2,26 @@
 //!
 //! The paper scaled across nodes (196 PIIIs, one process per CPU);
 //! the modern single-box analogue is thread parallelism over row blocks
-//! of `C`. Each thread runs the same Emmerald driver on an `m/t`-row
+//! of `C`. Each worker runs the same Emmerald driver on an `m/t`-row
 //! horizontal slice — slices write disjoint rows of `C`, so no
 //! synchronisation is needed beyond the final join. `B` is shared
-//! read-only (each thread re-packs its own panels, like each cluster node
-//! did).
+//! read-only (each worker re-packs its own panels, like each cluster node
+//! did; [`crate::gemm::plan::GemmPlan::run_packed_b`] removes even that).
+//!
+//! Execution happens on the shared [`crate::gemm::plan::GemmContext`]
+//! worker pool (fork-join with the caller participating), so the parallel
+//! tier draws from the single process-wide thread budget instead of
+//! spawning and joining its own threads per call.
 
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
 use crate::gemm::simd::{gemm_vec, VecIsa};
 use crate::gemm::BlockParams;
+use crate::util::threadpool::{run_borrowed_on, ThreadPool};
 
-/// `C = alpha · A·B + beta · C` over `threads` worker threads
-/// (no-transpose operands; the coordinator's training path never needs
-/// transposed parallel GEMM — transposes are handled by the serial API).
+/// `C = alpha · A·B + beta · C` split over up to `threads` row slices on
+/// the process-wide worker pool (no-transpose operands; the coordinator's
+/// training path never needs transposed parallel GEMM — transposes are
+/// handled by the serial API).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_parallel(
     threads: usize,
@@ -25,14 +32,17 @@ pub fn gemm_parallel(
     beta: f32,
     c: &mut MatMut<'_>,
 ) -> Result<(), BlasError> {
-    gemm_parallel_vec(VecIsa::Sse, threads, params, alpha, a, b, beta, c)
+    gemm_parallel_vec(VecIsa::Sse, crate::gemm::plan::global_pool(), threads, params, alpha, a, b, beta, c)
 }
 
-/// ISA-parameterised variant: the dispatch layer routes here with AVX2
-/// when the host supports it, so every thread runs the widest kernel.
+/// ISA- and pool-parameterised variant: the dispatch layer routes here
+/// with AVX2 when the host supports it and with the active context's
+/// worker pool, so every slice runs the widest kernel inside the shared
+/// thread budget. `pool: None` degrades to a serial sweep of the slices.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_parallel_vec(
     isa: VecIsa,
+    pool: Option<&ThreadPool>,
     threads: usize,
     params: &BlockParams,
     alpha: f32,
@@ -53,25 +63,11 @@ pub(crate) fn gemm_parallel_vec(
         return Ok(());
     }
 
-    // Split C (and A) into `threads` disjoint row slices via the safe
-    // `MatMut::split_rows` (the matrix analogue of `split_at_mut`).
-    let rows_per = m.div_ceil(threads);
-    let mut slices: Vec<(usize, MatMut<'_>)> = Vec::with_capacity(threads);
-    let mut rest = c.reborrow();
-    let mut r0 = 0;
-    while r0 < m {
-        let rows = rows_per.min(m - r0);
-        let (top, bottom) = rest.split_rows(rows);
-        slices.push((r0, top));
-        rest = bottom;
-        r0 += rows;
-    }
-    std::thread::scope(|scope| {
-        for (r0, mut c_slice) in slices {
-            let rows = c_slice.rows();
-            let a_slice = a.block(r0, 0, rows, k);
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = row_slices(a, c.reborrow(), threads)
+        .into_iter()
+        .map(|(a_slice, mut c_slice)| {
             let params = *params;
-            scope.spawn(move || {
+            Box::new(move || {
                 gemm_vec(
                     isa,
                     &params,
@@ -83,10 +79,38 @@ pub(crate) fn gemm_parallel_vec(
                     beta,
                     &mut c_slice,
                 );
-            });
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    run_borrowed_on(pool, jobs);
     Ok(())
+}
+
+/// Split `C` (and the matching row blocks of `A`) into up to `threads`
+/// disjoint row slices via the safe `MatMut::split_rows` (the matrix
+/// analogue of `split_at_mut`). The single source of the parallel tier's
+/// split policy — the prepacked planned path
+/// ([`crate::gemm::plan::GemmPlan::run_packed_b`]) slices through here
+/// too, which is what keeps its results bit-identical to this driver's.
+pub(crate) fn row_slices<'a>(
+    a: MatRef<'a>,
+    c: MatMut<'a>,
+    threads: usize,
+) -> Vec<(MatRef<'a>, MatMut<'a>)> {
+    let m = c.rows();
+    let k = a.cols();
+    let rows_per = m.div_ceil(threads.max(1));
+    let mut out = Vec::with_capacity(threads);
+    let mut rest = c;
+    let mut r0 = 0;
+    while r0 < m {
+        let rows = rows_per.min(m - r0);
+        let (top, bottom) = rest.split_rows(rows);
+        out.push((a.block(r0, 0, rows, k), top));
+        rest = bottom;
+        r0 += rows;
+    }
+    out
 }
 
 #[cfg(test)]

@@ -29,6 +29,17 @@ impl Unroll {
             Unroll::X4 => 4,
         }
     }
+
+    /// Inverse of [`factor`](Self::factor) (the autotune cache stores the
+    /// numeric factor on disk).
+    pub fn from_factor(f: usize) -> Option<Self> {
+        match f {
+            1 => Some(Unroll::X1),
+            2 => Some(Unroll::X2),
+            4 => Some(Unroll::X4),
+            _ => None,
+        }
+    }
 }
 
 /// Geometry and feature toggles for the blocked GEMM drivers.
@@ -171,5 +182,9 @@ mod tests {
         assert_eq!(Unroll::X1.factor(), 1);
         assert_eq!(Unroll::X2.factor(), 2);
         assert_eq!(Unroll::X4.factor(), 4);
+        for u in [Unroll::X1, Unroll::X2, Unroll::X4] {
+            assert_eq!(Unroll::from_factor(u.factor()), Some(u));
+        }
+        assert_eq!(Unroll::from_factor(3), None);
     }
 }

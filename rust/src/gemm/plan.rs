@@ -1,0 +1,985 @@
+//! Planned-execution GEMM: [`GemmContext`] + [`GemmPlan`] + prepacked
+//! operands.
+//!
+//! The paper's core lesson is that GEMM performance is won by staging data
+//! through the memory hierarchy *once* and reusing it; the positional
+//! [`crate::blas::sgemm`] entry point re-validates, re-selects a kernel and
+//! re-packs `B` on every call. This module separates **plan** from
+//! **execute** the way production GEMM libraries do:
+//!
+//! * [`GemmContext`] owns the kernel registry ([`GemmDispatch`]), the
+//!   process-wide worker pool (a single thread budget shared by the
+//!   parallel tier, the batched driver and every caller above them), and
+//!   the autotune state. [`GemmContext::global`] is the shared instance
+//!   behind the `blas` compatibility shims; it loads persistently cached
+//!   autotune winners at first use.
+//! * [`GemmContext::gemm`] starts a typed builder:
+//!   `ctx.gemm().transpose_a(..).alpha(..).plan(m, n, k)?` resolves the
+//!   kernel, block geometry and parallel split **once** into a
+//!   [`GemmPlan`], which then executes any number of times via
+//!   [`GemmPlan::run`] with only cheap buffer-length validation per call.
+//! * [`GemmContext::pack_b`] / [`GemmContext::pack_a`] pre-pack a whole
+//!   operand into the panel-major layout of [`super::pack`], so
+//!   weight-like matrices are re-buffered once and reused across calls and
+//!   across batch items ([`GemmPlan::run_packed_b`] /
+//!   [`GemmPlan::run_packed`]).
+//!
+//! Thread budget: the context owns the only GEMM worker pool in the
+//! process. Fork-join groups are executed with the *caller participating*
+//! ([`crate::util::threadpool::ThreadPool::run_borrowed`]), so nested
+//! parallelism (threaded training × parallel GEMM tier × batch fan-out)
+//! shares one budget instead of multiplying thread counts, and the
+//! per-call spawn/join cost of the old scoped-thread drivers is gone.
+
+use super::dispatch::{DispatchConfig, GemmDispatch, GemmShape, KernelId};
+use super::pack;
+use super::params::BlockParams;
+use super::simd::VecIsa;
+use super::{batch, microkernel};
+use crate::blas::{BlasError, MatMut, MatRef, Transpose};
+use crate::util::threadpool::{run_borrowed_on, ThreadPool};
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Shared planning/execution context: kernel registry + worker pool +
+/// autotune state. Cheap to clone (the clones share one pool and one
+/// dispatch table).
+#[derive(Clone)]
+pub struct GemmContext {
+    inner: Arc<CtxInner>,
+}
+
+struct CtxInner {
+    dispatch: RwLock<GemmDispatch>,
+    /// `budget - 1` workers; the calling thread is the budget's last slot.
+    pool: Option<ThreadPool>,
+    budget: usize,
+}
+
+static GLOBAL: OnceLock<GemmContext> = OnceLock::new();
+
+impl GemmContext {
+    /// A context with the given heuristic configuration (probes CPU
+    /// features; spawns `threads - 1` pool workers).
+    pub fn new(cfg: DispatchConfig) -> Self {
+        Self::from_dispatch(GemmDispatch::new(cfg))
+    }
+
+    /// A context around a pre-built dispatcher (used by tests that mask
+    /// CPU features or pin thresholds).
+    pub fn from_dispatch(d: GemmDispatch) -> Self {
+        let budget = d.threads().max(1);
+        let pool = (budget > 1).then(|| ThreadPool::new(budget - 1));
+        Self { inner: Arc::new(CtxInner { dispatch: RwLock::new(d), pool, budget }) }
+    }
+
+    /// The process-wide context: backs [`crate::blas::sgemm`],
+    /// [`crate::blas::sgemm_batch`] and [`crate::gemm::dispatch`]'s global
+    /// entry points. Initialised on first use with default heuristics plus
+    /// any autotune winners persisted by a previous process (see
+    /// [`crate::autotune::cache`]).
+    pub fn global() -> &'static GemmContext {
+        GLOBAL.get_or_init(|| {
+            let ctx = GemmContext::new(DispatchConfig::default());
+            for (id, params) in crate::autotune::cache::load_host_entries() {
+                // Entries were validated at load; a failure here only means
+                // the kernel family carries no geometry.
+                let _ = ctx.install_tuned(id, params);
+            }
+            ctx
+        })
+    }
+
+    /// Total worker-thread budget (pool workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.inner.budget
+    }
+
+    /// The context's worker pool (`None` on a single-thread budget).
+    pub(crate) fn pool(&self) -> Option<&ThreadPool> {
+        self.inner.pool.as_ref()
+    }
+
+    /// Clone the current dispatcher state (registry + geometries).
+    pub fn snapshot(&self) -> GemmDispatch {
+        self.inner.dispatch.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Install tuned block parameters for one kernel family (the autotune
+    /// feed). Plans created *after* this call see the new geometry;
+    /// existing plans keep their resolved snapshot.
+    pub fn install_tuned(&self, id: KernelId, params: BlockParams) -> Result<bool, String> {
+        let mut guard = self.inner.dispatch.write().unwrap_or_else(|e| e.into_inner());
+        guard.set_tuned(id, params)
+    }
+
+    /// Start building a plan: `ctx.gemm().transpose_a(..).plan(m, n, k)`.
+    pub fn gemm(&self) -> GemmBuilder {
+        GemmBuilder {
+            ctx: self.clone(),
+            transa: Transpose::No,
+            transb: Transpose::No,
+            alpha: 1.0,
+            beta: 0.0,
+            lda: None,
+            ldb: None,
+            ldc: None,
+            force: None,
+        }
+    }
+
+    /// Pre-pack `op(B)` (`k × n`) into panel-major k-blocks using this
+    /// context's current vector-kernel geometry. The handle is reusable
+    /// across every plan (and batch item) whose `k`/`n` and geometry
+    /// match — the weight-stationary layout.
+    pub fn pack_b(
+        &self,
+        transb: Transpose,
+        k: usize,
+        n: usize,
+        b: &[f32],
+        ldb: usize,
+    ) -> Result<PackedB, BlasError> {
+        let (br, bc) = match transb {
+            Transpose::No => (k, n),
+            Transpose::Yes => (n, k),
+        };
+        let bv = MatRef::new(b, br, bc, ldb).map_err(|e| e.operand("B"))?;
+        let (_, params) = pack_geometry(&self.snapshot());
+        let mut blocks = Vec::new();
+        let mut offsets = Vec::new();
+        let mut kk = 0;
+        while kk < k {
+            let kb_eff = params.kb_eff(k, kk);
+            let mut pb = pack::PackedB::new(params.nr);
+            pb.pack(bv, transb, kk, kb_eff, n);
+            blocks.push(pb);
+            offsets.push(kk);
+            kk += kb_eff;
+        }
+        Ok(PackedB { blocks, offsets, k, n, kb: params.kb, nr: params.nr })
+    }
+
+    /// Pre-pack `op(A)` (`m × k`) into row-major blocks matching this
+    /// context's current vector-kernel geometry, for
+    /// [`GemmPlan::run_packed`].
+    pub fn pack_a(
+        &self,
+        transa: Transpose,
+        m: usize,
+        k: usize,
+        a: &[f32],
+        lda: usize,
+    ) -> Result<PackedA, BlasError> {
+        let (ar, ac) = match transa {
+            Transpose::No => (m, k),
+            Transpose::Yes => (k, m),
+        };
+        let av = MatRef::new(a, ar, ac, lda).map_err(|e| e.operand("A"))?;
+        let (_, params) = pack_geometry(&self.snapshot());
+        let mut blocks = Vec::new();
+        let mut kk = 0;
+        while kk < k {
+            let kb_eff = params.kb_eff(k, kk);
+            let mut row_blocks = Vec::new();
+            let mut ii = 0;
+            while ii < m {
+                let mb_eff = params.mb.min(m - ii);
+                let mut pa = pack::PackedA::new();
+                pa.pack(av, transa, ii, mb_eff, kk, kb_eff);
+                row_blocks.push(pa);
+                ii += mb_eff;
+            }
+            blocks.push(row_blocks);
+            kk += kb_eff;
+        }
+        Ok(PackedA { blocks, k, m, kb: params.kb, mb: params.mb })
+    }
+
+    /// Run a group of borrowed jobs on this context's thread budget (the
+    /// execution primitive behind the parallel tier and batch fan-out).
+    pub(crate) fn run_jobs<'s>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        run_borrowed_on(self.pool(), jobs);
+    }
+}
+
+impl std::fmt::Debug for GemmContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GemmContext")
+            .field("threads", &self.inner.budget)
+            .field("dispatch", &self.snapshot())
+            .finish()
+    }
+}
+
+/// The global context's worker pool, for the compatibility paths that
+/// enter the parallel tier without a context in hand.
+pub(crate) fn global_pool() -> Option<&'static ThreadPool> {
+    GemmContext::global().pool()
+}
+
+/// The packing geometry (and vector ISA) the context's best serial vector
+/// kernel runs with — the layout contract between `pack_*` and
+/// `run_packed*`.
+fn pack_geometry(d: &GemmDispatch) -> (Option<VecIsa>, BlockParams) {
+    match d.best_serial_vector() {
+        KernelId::Avx2 => (Some(VecIsa::Avx2), *d.params_avx2()),
+        KernelId::Simd => (Some(VecIsa::Sse), *d.params_sse()),
+        // Scalar hosts execute the prepacked layout through a scalar
+        // panel kernel; the SSE geometry is a fine layout default.
+        _ => (None, *d.params_sse()),
+    }
+}
+
+/// Typed builder for a [`GemmPlan`]. Obtained from [`GemmContext::gemm`].
+#[derive(Clone, Debug)]
+pub struct GemmBuilder {
+    ctx: GemmContext,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    beta: f32,
+    lda: Option<usize>,
+    ldb: Option<usize>,
+    ldc: Option<usize>,
+    force: Option<KernelId>,
+}
+
+impl GemmBuilder {
+    /// Logical transposition of `A` (default: [`Transpose::No`]).
+    pub fn transpose_a(mut self, t: Transpose) -> Self {
+        self.transa = t;
+        self
+    }
+
+    /// Logical transposition of `B` (default: [`Transpose::No`]).
+    pub fn transpose_b(mut self, t: Transpose) -> Self {
+        self.transb = t;
+        self
+    }
+
+    /// Scale on `op(A)·op(B)` (default 1.0).
+    pub fn alpha(mut self, alpha: f32) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    /// Scale on the existing `C` (default 0.0 — overwrite).
+    pub fn beta(mut self, beta: f32) -> Self {
+        self.beta = beta;
+        self
+    }
+
+    /// Leading dimension of the stored `A` (default: its stored width).
+    pub fn lda(mut self, lda: usize) -> Self {
+        self.lda = Some(lda);
+        self
+    }
+
+    /// Leading dimension of the stored `B` (default: its stored width).
+    pub fn ldb(mut self, ldb: usize) -> Self {
+        self.ldb = Some(ldb);
+        self
+    }
+
+    /// Leading dimension of `C` (default: `n`).
+    pub fn ldc(mut self, ldc: usize) -> Self {
+        self.ldc = Some(ldc);
+        self
+    }
+
+    /// Force a specific kernel instead of the shape heuristics (the
+    /// explicit-backend compatibility path; unavailable kernels degrade
+    /// exactly as [`GemmDispatch::gemm_with`] does).
+    pub fn kernel(mut self, id: KernelId) -> Self {
+        self.force = Some(id);
+        self
+    }
+
+    /// Resolve the plan: validate leading dimensions, select the kernel
+    /// and freeze the dispatcher state (block geometry, thread split).
+    pub fn plan(self, m: usize, n: usize, k: usize) -> Result<GemmPlan, BlasError> {
+        let (ar, ac) = match self.transa {
+            Transpose::No => (m, k),
+            Transpose::Yes => (k, m),
+        };
+        let (br, bc) = match self.transb {
+            Transpose::No => (k, n),
+            Transpose::Yes => (n, k),
+        };
+        let lda = self.lda.unwrap_or(ac.max(1));
+        let ldb = self.ldb.unwrap_or(bc.max(1));
+        let ldc = self.ldc.unwrap_or(n.max(1));
+        if lda < ac {
+            return Err(BlasError::BadLeadingDim { operand: "A", ld: lda, cols: ac });
+        }
+        if ldb < bc {
+            return Err(BlasError::BadLeadingDim { operand: "B", ld: ldb, cols: bc });
+        }
+        if ldc < n {
+            return Err(BlasError::BadLeadingDim { operand: "C", ld: ldc, cols: n });
+        }
+        let dispatch = self.ctx.snapshot();
+        let shape = GemmShape { m, n, k, transa: self.transa, transb: self.transb };
+        let kernel = self.force.unwrap_or_else(|| dispatch.select(&shape, self.alpha));
+        Ok(GemmPlan {
+            ctx: self.ctx,
+            dispatch,
+            shape,
+            alpha: self.alpha,
+            beta: self.beta,
+            lda,
+            ldb,
+            ldc,
+            kernel,
+            forced: self.force,
+        })
+    }
+}
+
+/// A resolved GEMM: fixed shape/transposes/scalars/strides, a selected
+/// kernel and a frozen geometry snapshot. Execute repeatedly with
+/// [`run`](Self::run) (same plan, different buffers); executions are
+/// deterministic — running a plan twice on the same inputs produces
+/// bit-identical output.
+#[derive(Clone, Debug)]
+pub struct GemmPlan {
+    ctx: GemmContext,
+    dispatch: GemmDispatch,
+    shape: GemmShape,
+    alpha: f32,
+    beta: f32,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+    kernel: KernelId,
+    forced: Option<KernelId>,
+}
+
+impl GemmPlan {
+    /// The kernel the plan resolved to.
+    pub fn kernel(&self) -> KernelId {
+        self.kernel
+    }
+
+    /// Output rows.
+    pub fn m(&self) -> usize {
+        self.shape.m
+    }
+
+    /// Output columns.
+    pub fn n(&self) -> usize {
+        self.shape.n
+    }
+
+    /// Dot-product length.
+    pub fn k(&self) -> usize {
+        self.shape.k
+    }
+
+    /// The context the plan executes on.
+    pub fn context(&self) -> &GemmContext {
+        &self.ctx
+    }
+
+    fn views<'x>(
+        &self,
+        a: &'x [f32],
+        b: &'x [f32],
+        c: &'x mut [f32],
+    ) -> Result<(MatRef<'x>, MatRef<'x>, MatMut<'x>), BlasError> {
+        let (ar, ac) = match self.shape.transa {
+            Transpose::No => (self.shape.m, self.shape.k),
+            Transpose::Yes => (self.shape.k, self.shape.m),
+        };
+        let (br, bc) = match self.shape.transb {
+            Transpose::No => (self.shape.k, self.shape.n),
+            Transpose::Yes => (self.shape.n, self.shape.k),
+        };
+        let av = MatRef::new(a, ar, ac, self.lda).map_err(|e| e.operand("A"))?;
+        let bv = MatRef::new(b, br, bc, self.ldb).map_err(|e| e.operand("B"))?;
+        let cv = MatMut::new(c, self.shape.m, self.shape.n, self.ldc).map_err(|e| e.operand("C"))?;
+        Ok((av, bv, cv))
+    }
+
+    /// Execute the plan: `C = alpha · op(A) op(B) + beta · C`. Only buffer
+    /// lengths are validated per call; kernel, geometry and thread split
+    /// were resolved at plan time.
+    pub fn run(&self, a: &[f32], b: &[f32], c: &mut [f32]) -> Result<(), BlasError> {
+        let (av, bv, mut cv) = self.views(a, b, c)?;
+        if self.shape.m == 0 || self.shape.n == 0 {
+            return Ok(());
+        }
+        self.dispatch.gemm_with_on(
+            self.ctx.pool(),
+            self.kernel,
+            self.shape.transa,
+            self.shape.transb,
+            self.alpha,
+            av,
+            bv,
+            self.beta,
+            &mut cv,
+        );
+        Ok(())
+    }
+
+    /// Execute the plan over a strided batch (`batch` items with the
+    /// plan's shape; see [`crate::gemm::batch`] for layout semantics).
+    /// Runs on the context's thread budget.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_batch(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        batch: usize,
+        strides: batch::BatchStrides,
+    ) -> Result<(), BlasError> {
+        batch::gemm_batch_on(
+            &self.dispatch,
+            self.ctx.pool(),
+            self.forced,
+            self.shape.transa,
+            self.shape.transb,
+            self.shape.m,
+            self.shape.n,
+            self.shape.k,
+            self.alpha,
+            a,
+            self.lda,
+            b,
+            self.ldb,
+            self.beta,
+            c,
+            self.ldc,
+            batch,
+            strides,
+        )
+    }
+
+    /// Execute with a prepacked `B` (packed once via
+    /// [`GemmContext::pack_b`], reused across calls): the re-buffering
+    /// stage of every k-block is skipped entirely. Uses the plan's
+    /// parallel row split when the plan resolved to the parallel tier.
+    pub fn run_packed_b(&self, a: &[f32], b: &PackedB, c: &mut [f32]) -> Result<(), BlasError> {
+        let (isa, params) = self.packed_geometry(b)?;
+        let (ar, ac) = match self.shape.transa {
+            Transpose::No => (self.shape.m, self.shape.k),
+            Transpose::Yes => (self.shape.k, self.shape.m),
+        };
+        let av = MatRef::new(a, ar, ac, self.lda).map_err(|e| e.operand("A"))?;
+        let mut cv =
+            MatMut::new(c, self.shape.m, self.shape.n, self.ldc).map_err(|e| e.operand("C"))?;
+        let m = self.shape.m;
+        if m == 0 || self.shape.n == 0 {
+            return Ok(());
+        }
+        let threads = if self.kernel == KernelId::Parallel && self.shape.transa == Transpose::No {
+            self.dispatch.threads().min(m)
+        } else {
+            1
+        };
+        if threads <= 1 || m < 2 {
+            prepacked_gemm(isa, &params, self.shape.transa, self.alpha, ASource::Raw(av), b, self.beta, &mut cv);
+            return Ok(());
+        }
+        // Row-sliced parallel execution sharing the one prepacked B (same
+        // split policy as the parallel tier, via parallel::row_slices).
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = super::parallel::row_slices(av, cv, threads)
+            .into_iter()
+            .map(|(a_slice, mut c_slice)| {
+                let alpha = self.alpha;
+                let beta = self.beta;
+                Box::new(move || {
+                    prepacked_gemm(isa, &params, Transpose::No, alpha, ASource::Raw(a_slice), b, beta, &mut c_slice);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.ctx.run_jobs(jobs);
+        Ok(())
+    }
+
+    /// Execute with both operands prepacked (serial; the fully
+    /// weight-stationary path).
+    pub fn run_packed(&self, a: &PackedA, b: &PackedB, c: &mut [f32]) -> Result<(), BlasError> {
+        let (isa, params) = self.packed_geometry(b)?;
+        if a.k != self.shape.k || a.m != self.shape.m {
+            return Err(BlasError::ShapeMismatch {
+                what: "PackedA",
+                expect: (self.shape.m, self.shape.k),
+                got: (a.m, a.k),
+            });
+        }
+        if a.kb != params.kb || a.mb != params.mb {
+            return Err(BlasError::PlanMismatch(
+                "PackedA block geometry differs from the plan's kernel geometry; repack with the current context",
+            ));
+        }
+        let mut cv =
+            MatMut::new(c, self.shape.m, self.shape.n, self.ldc).map_err(|e| e.operand("C"))?;
+        if self.shape.m == 0 || self.shape.n == 0 {
+            return Ok(());
+        }
+        prepacked_gemm(isa, &params, self.shape.transa, self.alpha, ASource::Packed(a), b, self.beta, &mut cv);
+        Ok(())
+    }
+
+    /// Shared validation for the prepacked paths.
+    fn packed_geometry(&self, b: &PackedB) -> Result<(Option<VecIsa>, BlockParams), BlasError> {
+        if b.k != self.shape.k || b.n != self.shape.n {
+            return Err(BlasError::ShapeMismatch {
+                what: "PackedB",
+                expect: (self.shape.k, self.shape.n),
+                got: (b.k, b.n),
+            });
+        }
+        let (isa, params) = pack_geometry(&self.dispatch);
+        if b.kb != params.kb || b.nr != params.nr {
+            return Err(BlasError::PlanMismatch(
+                "PackedB panel geometry differs from the plan's kernel geometry; repack with the current context",
+            ));
+        }
+        Ok((isa, params))
+    }
+}
+
+/// A whole `op(B)` prepacked into panel-major k-blocks (the paper's
+/// re-buffering, hoisted out of the call). Created by
+/// [`GemmContext::pack_b`]; shareable across threads and reusable across
+/// any number of [`GemmPlan::run_packed_b`] calls and batch items.
+#[derive(Debug)]
+pub struct PackedB {
+    blocks: Vec<pack::PackedB>,
+    offsets: Vec<usize>,
+    k: usize,
+    n: usize,
+    kb: usize,
+    nr: usize,
+}
+
+impl PackedB {
+    /// Logical `k` (rows of `op(B)`).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Logical `n` (columns of `op(B)`).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Panel width the buffer was packed with.
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    /// Bytes held across all k-blocks (diagnostic).
+    pub fn bytes(&self) -> usize {
+        self.blocks.iter().map(pack::PackedB::bytes).sum()
+    }
+}
+
+/// A whole `op(A)` prepacked into row-major blocks. Created by
+/// [`GemmContext::pack_a`] for [`GemmPlan::run_packed`].
+#[derive(Debug)]
+pub struct PackedA {
+    /// `blocks[kblock][rowblock]`, mirroring the driver's loop nest.
+    blocks: Vec<Vec<pack::PackedA>>,
+    k: usize,
+    m: usize,
+    kb: usize,
+    mb: usize,
+}
+
+impl PackedA {
+    /// Logical `m` (rows of `op(A)`).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Logical `k` (columns of `op(A)`).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+/// Where the driver streams `A` rows from.
+#[derive(Clone, Copy)]
+enum ASource<'x> {
+    Raw(MatRef<'x>),
+    Packed(&'x PackedA),
+}
+
+/// The blocked driver over prepacked `B` panels: identical loop nest and
+/// micro-kernel calls to [`super::simd::gemm`] (so results are
+/// bit-identical to a packing run through the same vector kernel — the
+/// prepacked paths always execute this driver, whatever kernel the plan's
+/// heuristics picked for unpacked runs), minus every `pack` invocation
+/// the prepacked operands make redundant.
+#[allow(clippy::too_many_arguments)]
+fn prepacked_gemm(
+    isa: Option<VecIsa>,
+    params: &BlockParams,
+    transa: Transpose,
+    alpha: f32,
+    a: ASource<'_>,
+    pb: &PackedB,
+    beta: f32,
+    c: &mut MatMut<'_>,
+) {
+    let m = c.rows();
+    let n = c.cols();
+    let k = pb.k;
+    c.scale(beta);
+    if alpha == 0.0 || k == 0 || m == 0 || n == 0 {
+        return;
+    }
+
+    // Raw A still needs per-block packing when its rows are strided in
+    // storage (transposed) or the ablation toggle asks for it.
+    let need_pack_a = match a {
+        ASource::Raw(_) => params.pack_a || transa == Transpose::Yes,
+        ASource::Packed(_) => false,
+    };
+    let mut scratch_a = pack::PackedA::new();
+    let mut sums = [0.0f32; 8];
+    let mut sums2 = [0.0f32; 8];
+    let mut cols: Vec<*const f32> = Vec::with_capacity(params.nr);
+
+    for (kbi, block) in pb.blocks.iter().enumerate() {
+        let kk = pb.offsets[kbi];
+        let kb_eff = block.kb_eff();
+        let mut ii = 0;
+        while ii < m {
+            let mb_eff = params.mb.min(m - ii);
+            if need_pack_a {
+                if let ASource::Raw(av) = a {
+                    scratch_a.pack(av, transa, ii, mb_eff, kk, kb_eff);
+                }
+            }
+            let npanels = n.div_ceil(params.nr);
+            for p in 0..npanels {
+                let j0 = p * params.nr;
+                let w = params.nr.min(n - j0);
+                cols.clear();
+                for j in 0..w {
+                    cols.push(block.col_ptr(p, j));
+                }
+                let row_ptr = |i: usize| -> *const f32 {
+                    match a {
+                        ASource::Packed(pa) => pa.blocks[kbi][ii / params.mb].row_ptr(i),
+                        ASource::Raw(av) => {
+                            if need_pack_a {
+                                scratch_a.row_ptr(i)
+                            } else {
+                                av.row_ptr(ii + i).wrapping_add(kk)
+                            }
+                        }
+                    }
+                };
+                let mut i = 0;
+                while i < mb_eff {
+                    let arow = row_ptr(i);
+                    // AVX2 fast path: two A rows per pass re-use every B
+                    // vector (mirrors the packing driver exactly).
+                    if isa == Some(VecIsa::Avx2) && i + 1 < mb_eff {
+                        let arow1 = row_ptr(i + 1);
+                        // SAFETY: rows are readable for kb_eff elements
+                        // (packed rows are kpad >= kb_eff long; raw rows
+                        // have kk + kb_eff <= k <= a.cols()); packed
+                        // columns are kpad long; w <= 8.
+                        unsafe {
+                            microkernel::avx2_dot_panel2_dyn(
+                                arow,
+                                arow1,
+                                kb_eff,
+                                &cols,
+                                params.unroll,
+                                params.prefetch,
+                                &mut sums,
+                                &mut sums2,
+                            );
+                            for j in 0..w {
+                                let o0 = c.get_unchecked(ii + i, j0 + j);
+                                c.set_unchecked(ii + i, j0 + j, o0 + alpha * sums[j]);
+                                let o1 = c.get_unchecked(ii + i + 1, j0 + j);
+                                c.set_unchecked(ii + i + 1, j0 + j, o1 + alpha * sums2[j]);
+                            }
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    // SAFETY: same bounds argument as above; `isa` is only
+                    // Some(_) when the CPU supports that ISA (feature bits
+                    // come from runtime detection, never faked).
+                    unsafe {
+                        match isa {
+                            Some(VecIsa::Sse) => microkernel::sse_dot_panel_dyn(
+                                arow,
+                                kb_eff,
+                                &cols,
+                                params.unroll,
+                                params.prefetch,
+                                &mut sums,
+                            ),
+                            Some(VecIsa::Avx2) => microkernel::avx2_dot_panel_dyn(
+                                arow,
+                                kb_eff,
+                                &cols,
+                                params.unroll,
+                                params.prefetch,
+                                &mut sums,
+                            ),
+                            None => scalar_dot_panel(arow, kb_eff, &cols, &mut sums),
+                        }
+                        for j in 0..w {
+                            let old = c.get_unchecked(ii + i, j0 + j);
+                            c.set_unchecked(ii + i, j0 + j, old + alpha * sums[j]);
+                        }
+                    }
+                    i += 1;
+                }
+            }
+            ii += mb_eff;
+        }
+    }
+}
+
+/// Scalar fallback panel kernel for hosts without SSE: one dot product per
+/// packed column.
+///
+/// # Safety
+/// `arow` and every pointer in `cols` must be readable for `kb_eff`
+/// elements; `cols.len() <= 8`.
+unsafe fn scalar_dot_panel(
+    arow: *const f32,
+    kb_eff: usize,
+    cols: &[*const f32],
+    sums: &mut [f32; 8],
+) {
+    for (j, &cp) in cols.iter().enumerate() {
+        let mut acc = 0.0f32;
+        for p in 0..kb_eff {
+            acc += *arow.add(p) * *cp.add(p);
+        }
+        sums[j] = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+    use crate::gemm::naive;
+    use crate::util::testkit::assert_allclose;
+
+    fn ctx_serial() -> GemmContext {
+        GemmContext::new(DispatchConfig { threads: 1, ..DispatchConfig::default() })
+    }
+
+    #[test]
+    fn builder_defaults_and_validation() {
+        let ctx = ctx_serial();
+        let plan = ctx.gemm().plan(4, 5, 6).unwrap();
+        assert_eq!((plan.m(), plan.n(), plan.k()), (4, 5, 6));
+        // Bad leading dimension is a plan-time error.
+        let err = ctx.gemm().lda(2).plan(4, 5, 6);
+        assert!(matches!(err, Err(BlasError::BadLeadingDim { operand: "A", .. })));
+        // Short buffers are a run-time error.
+        let plan = ctx.gemm().plan(2, 2, 2).unwrap();
+        let err = plan.run(&[0.0; 3], &[0.0; 4], &mut [0.0; 4]);
+        assert!(matches!(err, Err(BlasError::BufferTooSmall { operand: "A", .. })));
+    }
+
+    #[test]
+    fn plan_matches_oracle_and_reruns_identically() {
+        let ctx = ctx_serial();
+        let (m, n, k) = (17usize, 13usize, 21usize);
+        let a = Matrix::random(m, k, 1, -1.0, 1.0);
+        let b = Matrix::random(k, n, 2, -1.0, 1.0);
+        let plan = ctx.gemm().alpha(0.75).beta(0.25).plan(m, n, k).unwrap();
+        let c0: Vec<f32> = (0..m * n).map(|i| i as f32 * 0.01).collect();
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        plan.run(a.data(), b.data(), &mut c1).unwrap();
+        plan.run(a.data(), b.data(), &mut c2).unwrap();
+        assert_eq!(c1, c2, "same plan, same inputs must be bit-identical");
+        let mut c_ref = Matrix::from_fn(m, n, |r, col| c0[r * n + col]);
+        naive::gemm(
+            Transpose::No,
+            Transpose::No,
+            0.75,
+            a.view(),
+            b.view(),
+            0.25,
+            &mut c_ref.view_mut(),
+        );
+        assert_allclose(&c1, c_ref.data(), 2e-4, 1e-5, "plan vs naive");
+    }
+
+    #[test]
+    fn prepacked_b_matches_plain_run_bitwise() {
+        if !crate::gemm::dispatch::detect_sse() {
+            eprintln!("SKIP: no SSE — scalar prepacked path covered by oracle tests");
+            return;
+        }
+        let ctx = ctx_serial();
+        // Fringe k (padding) and fringe n (partial panel).
+        let (m, n, k) = (23usize, 7usize, 13usize);
+        let a = Matrix::random(m, k, 3, -1.0, 1.0);
+        let b = Matrix::random(k, n, 4, -1.0, 1.0);
+        let packed = ctx.pack_b(Transpose::No, k, n, b.data(), b.ld()).unwrap();
+        let plan = ctx.gemm().beta(1.0).plan(m, n, k).unwrap();
+        let c0: Vec<f32> = (0..m * n).map(|i| (i % 5) as f32).collect();
+        let mut c_plain = c0.clone();
+        let mut c_packed = c0.clone();
+        plan.run(a.data(), b.data(), &mut c_plain).unwrap();
+        plan.run_packed_b(a.data(), &packed, &mut c_packed).unwrap();
+        assert_eq!(c_plain, c_packed, "prepacked B must be bit-identical to the packing run");
+    }
+
+    #[test]
+    fn prepacked_b_reused_across_m_shapes() {
+        let ctx = ctx_serial();
+        let (n, k) = (9usize, 29usize);
+        let b = Matrix::random(k, n, 7, -1.0, 1.0);
+        let packed = ctx.pack_b(Transpose::No, k, n, b.data(), b.ld()).unwrap();
+        for (seed, m) in [(10u64, 1usize), (11, 4), (12, 17), (13, 40)] {
+            let a = Matrix::random(m, k, seed, -1.0, 1.0);
+            let plan = ctx.gemm().plan(m, n, k).unwrap();
+            let mut c = vec![0.0f32; m * n];
+            plan.run_packed_b(a.data(), &packed, &mut c).unwrap();
+            let mut c_ref = Matrix::zeros(m, n);
+            naive::gemm(
+                Transpose::No,
+                Transpose::No,
+                1.0,
+                a.view(),
+                b.view(),
+                0.0,
+                &mut c_ref.view_mut(),
+            );
+            assert_allclose(&c, c_ref.data(), 2e-4, 1e-5, &format!("packed reuse m={m}"));
+        }
+    }
+
+    #[test]
+    fn prepacked_transposed_b_and_a() {
+        let ctx = ctx_serial();
+        let (m, n, k) = (12usize, 11usize, 19usize);
+        // B stored n×k (transb = Yes), A stored k×m (transa = Yes).
+        let b = Matrix::random(n, k, 21, -1.0, 1.0);
+        let a = Matrix::random(k, m, 22, -1.0, 1.0);
+        let packed_b = ctx.pack_b(Transpose::Yes, k, n, b.data(), b.ld()).unwrap();
+        let packed_a = ctx.pack_a(Transpose::Yes, m, k, a.data(), a.ld()).unwrap();
+        let plan = ctx
+            .gemm()
+            .transpose_a(Transpose::Yes)
+            .transpose_b(Transpose::Yes)
+            .alpha(-0.5)
+            .beta(0.5)
+            .plan(m, n, k)
+            .unwrap();
+        let c0: Vec<f32> = (0..m * n).map(|i| (i as f32).sin()).collect();
+        let mut c_b = c0.clone();
+        let mut c_ab = c0.clone();
+        plan.run_packed_b(a.data(), &packed_b, &mut c_b).unwrap();
+        plan.run_packed(&packed_a, &packed_b, &mut c_ab).unwrap();
+        let mut c_ref = Matrix::from_fn(m, n, |r, col| c0[r * n + col]);
+        naive::gemm(
+            Transpose::Yes,
+            Transpose::Yes,
+            -0.5,
+            a.view(),
+            b.view(),
+            0.5,
+            &mut c_ref.view_mut(),
+        );
+        assert_allclose(&c_b, c_ref.data(), 2e-4, 1e-5, "packed-B TT");
+        assert_allclose(&c_ab, c_ref.data(), 2e-4, 1e-5, "packed-AB TT");
+    }
+
+    #[test]
+    fn parallel_plan_with_prepacked_b_matches_serial() {
+        let cfg = DispatchConfig {
+            threads: 3,
+            parallel_min_flops: 0.0,
+            ..DispatchConfig::default()
+        };
+        let ctx = GemmContext::new(cfg);
+        let (m, n, k) = (37usize, 19usize, 23usize);
+        let a = Matrix::random(m, k, 31, -1.0, 1.0);
+        let b = Matrix::random(k, n, 32, -1.0, 1.0);
+        let packed = ctx.pack_b(Transpose::No, k, n, b.data(), b.ld()).unwrap();
+        let plan = ctx.gemm().plan(m, n, k).unwrap();
+        if crate::gemm::dispatch::detect_sse() {
+            assert_eq!(plan.kernel(), KernelId::Parallel);
+        }
+        let mut c = vec![0.0f32; m * n];
+        plan.run_packed_b(a.data(), &packed, &mut c).unwrap();
+        let mut c_ref = Matrix::zeros(m, n);
+        naive::gemm(Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut c_ref.view_mut());
+        assert_allclose(&c, c_ref.data(), 5e-4, 1e-4, "parallel prepacked");
+    }
+
+    #[test]
+    fn packed_mismatches_are_rejected() {
+        let ctx = ctx_serial();
+        let b = Matrix::random(8, 8, 40, -1.0, 1.0);
+        let packed = ctx.pack_b(Transpose::No, 8, 8, b.data(), b.ld()).unwrap();
+        // Wrong k.
+        let plan = ctx.gemm().plan(4, 8, 9).unwrap();
+        let a = vec![0.0f32; 4 * 9];
+        let mut c = vec![0.0f32; 4 * 8];
+        assert!(matches!(
+            plan.run_packed_b(&a, &packed, &mut c),
+            Err(BlasError::ShapeMismatch { what: "PackedB", .. })
+        ));
+        // Wrong geometry: repack under different tuned params.
+        let ctx2 = ctx_serial();
+        ctx2.install_tuned(
+            crate::gemm::dispatch::detect_avx2()
+                .then_some(KernelId::Avx2)
+                .unwrap_or(KernelId::Simd),
+            BlockParams { kb: 64, nr: 4, ..BlockParams::emmerald_sse() },
+        )
+        .unwrap();
+        let packed2 = ctx2.pack_b(Transpose::No, 8, 8, b.data(), b.ld()).unwrap();
+        let plan = ctx.gemm().plan(4, 8, 8).unwrap();
+        let a = vec![0.0f32; 4 * 8];
+        if packed2.nr() != packed.nr() || packed2.bytes() != packed.bytes() {
+            assert!(matches!(
+                plan.run_packed_b(&a, &packed2, &mut c),
+                Err(BlasError::PlanMismatch(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_behave_like_sgemm() {
+        let ctx = ctx_serial();
+        // k = 0 scales by beta.
+        let plan = ctx.gemm().beta(0.5).plan(2, 2, 0).unwrap();
+        let mut c = vec![2.0f32; 4];
+        plan.run(&[], &[], &mut c).unwrap();
+        assert_eq!(c, vec![1.0; 4]);
+        // m = 0 is a no-op.
+        let plan = ctx.gemm().plan(0, 5, 3).unwrap();
+        let mut c: Vec<f32> = vec![];
+        plan.run(&[], &[1.0; 15], &mut c).unwrap();
+        // Prepacked with k = 0: beta-scale only.
+        let packed = ctx.pack_b(Transpose::No, 0, 3, &[], 3).unwrap();
+        let plan = ctx.gemm().beta(0.0).plan(2, 3, 0).unwrap();
+        let mut c = vec![9.0f32; 6];
+        plan.run_packed_b(&[], &packed, &mut c).unwrap();
+        assert_eq!(c, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn global_context_is_shared_and_threaded() {
+        let ctx = GemmContext::global();
+        assert!(ctx.threads() >= 1);
+        let again = GemmContext::global();
+        assert!(Arc::ptr_eq(&ctx.inner, &again.inner));
+    }
+}

@@ -6,8 +6,12 @@
 //!
 //! The crate provides:
 //!
-//! * [`blas`] — a Level-3 BLAS `SGEMM` interface with selectable backends,
-//!   the public API most users want ([`blas::sgemm`]).
+//! * [`blas`] — a Level-3 BLAS `SGEMM` interface with selectable backends.
+//!   The production surface is the planned-execution API
+//!   ([`blas::GemmContext`] / [`blas::GemmPlan`]: resolve kernel, block
+//!   geometry and thread split once, execute many times, with
+//!   [`blas::PackedA`]/[`blas::PackedB`] prepacked-operand handles);
+//!   [`blas::sgemm`] remains as a positional compatibility shim over it.
 //! * [`gemm`] — the paper's contribution: the Emmerald SSE micro-kernel
 //!   (five concurrent dot products in eight XMM registers), B re-buffering,
 //!   L1/L2 cache blocking, prefetching and full inner-loop unrolling,

@@ -252,7 +252,7 @@ fn cmd_autotune(argv: Vec<String>) -> i32 {
         _ => emmerald::autotune::TuneSpec::sse_default(probe),
     };
     spec.samples = 3;
-    let r = emmerald::autotune::tune_and_install(&spec);
+    let (r, cached) = emmerald::autotune::tune_install_and_persist(&spec);
     let mut table = Table::new(["kb", "mb", "nr", "MFlop/s"]);
     for p in &r.log {
         table.row([
@@ -271,6 +271,10 @@ fn cmd_autotune(argv: Vec<String>) -> i32 {
         r.best_mflops,
         spec.kernel.kernel_id().name()
     );
+    match cached {
+        Some(path) => println!("persisted to {} (loaded automatically at next start)", path.display()),
+        None => println!("persistence disabled or failed (set {} to a writable path)", emmerald::autotune::cache::ENV_PATH),
+    }
     0
 }
 
@@ -307,6 +311,15 @@ fn cmd_dispatch(argv: Vec<String>) -> i32 {
         d.params_sse().nr,
         d.params_avx2().kb,
         d.params_avx2().nr
+    );
+    let ctx = emmerald::gemm::GemmContext::global();
+    println!(
+        "context: shared thread budget {} (caller + {} pool workers); tune cache: {}",
+        ctx.threads(),
+        ctx.threads().saturating_sub(1),
+        emmerald::autotune::cache::cache_path()
+            .map(|p| p.display().to_string())
+            .unwrap_or_else(|| "disabled".into())
     );
     0
 }

@@ -12,7 +12,7 @@
 //! which is exactly how 1999-era (and many current) frameworks spent
 //! their convolution flops in SGEMM.
 
-use crate::blas::{sgemm_matrix, Backend, Matrix, Transpose};
+use crate::blas::{sgemm_matrix, Backend, GemmContext, Matrix, PackedB, Transpose};
 
 /// Convolution geometry (valid padding, unit dilation).
 #[derive(Clone, Copy, Debug)]
@@ -132,12 +132,85 @@ impl Conv2d {
         out
     }
 
+    /// Pre-pack the kernel matrix for repeated forward calls: the
+    /// materialised-transpose weight (`(C·K·K) × F`) is re-buffered into
+    /// panel-major form **once** on `ctx` and then reused by every
+    /// [`forward_packed`](Self::forward_packed) call — the
+    /// weight-stationary inference layout (frozen weights, streaming
+    /// activations).
+    pub fn pack_kernels(&self, kernels: &Matrix, ctx: &GemmContext) -> PackedConvKernels {
+        assert_eq!(kernels.rows(), self.out_channels);
+        assert_eq!(kernels.cols(), self.in_channels * self.kernel * self.kernel);
+        let kt = kernels.transposed(); // (C·K·K) × F, contiguous
+        let packed = ctx
+            .pack_b(Transpose::No, kt.rows(), kt.cols(), kt.data(), kt.ld())
+            .expect("kernel matrix is a valid view");
+        PackedConvKernels {
+            ctx: ctx.clone(),
+            packed,
+            kt,
+            ckk: kernels.cols(),
+            f: self.out_channels,
+        }
+    }
+
+    /// Forward convolution through prepacked kernels: equivalent to
+    /// [`forward`](Self::forward), but the weight panel re-buffering is
+    /// already done, so only im2col and the planned GEMM run per call.
+    ///
+    /// If the context's tuned geometry changed since
+    /// [`pack_kernels`](Self::pack_kernels), the stale pack is bypassed
+    /// and the call falls back to the plain packing path (the handle
+    /// keeps the raw transposed kernels for exactly this) — always
+    /// correct, just without the prepacking win until repacked.
+    pub fn forward_packed(
+        &self,
+        input: &[f32],
+        n: usize,
+        h: usize,
+        w: usize,
+        kernels: &PackedConvKernels,
+    ) -> Matrix {
+        assert_eq!(kernels.f, self.out_channels, "packed kernels are for a different geometry");
+        assert_eq!(kernels.ckk, self.in_channels * self.kernel * self.kernel);
+        let patches = self.im2col(input, n, h, w);
+        let mut out = Matrix::zeros(patches.rows(), kernels.f);
+        let plan = kernels
+            .ctx
+            .gemm()
+            .ldb(kernels.kt.ld())
+            .plan(patches.rows(), kernels.f, kernels.ckk)
+            .expect("validated shapes");
+        if plan.run_packed_b(patches.data(), &kernels.packed, out.data_mut()).is_err() {
+            plan.run(patches.data(), kernels.kt.data(), out.data_mut()).expect("validated shapes");
+        }
+        out
+    }
+
     /// GEMM flops of one forward call.
     pub fn flops(&self, n: usize, h: usize, w: usize) -> f64 {
         let (oh, ow) = self.out_hw(h, w);
         2.0 * (n * oh * ow) as f64
             * (self.in_channels * self.kernel * self.kernel) as f64
             * self.out_channels as f64
+    }
+}
+
+/// Kernel weights prepacked for [`Conv2d::forward_packed`]: holds the
+/// panel-major buffer and the [`GemmContext`] it was packed on.
+pub struct PackedConvKernels {
+    ctx: GemmContext,
+    packed: PackedB,
+    /// Raw transposed kernels, kept for the stale-geometry fallback.
+    kt: Matrix,
+    ckk: usize,
+    f: usize,
+}
+
+impl PackedConvKernels {
+    /// Bytes held by the packed weight panels (diagnostic).
+    pub fn bytes(&self) -> usize {
+        self.packed.bytes()
     }
 }
 
@@ -240,6 +313,33 @@ mod tests {
         assert_allclose(got.data(), want.data(), 2e-4, 1e-4, "batched conv vs direct");
         let serial = cfg.forward(&input, n, h, w, &kernels, Backend::Dispatch);
         assert_allclose(got.data(), serial.data(), 2e-4, 1e-4, "batched conv vs serial");
+    }
+
+    #[test]
+    fn packed_kernels_reused_across_batches_match_direct() {
+        // Local context: immune to concurrent global install_tuned calls.
+        let ctx = crate::blas::GemmContext::new(crate::gemm::DispatchConfig {
+            threads: 1,
+            ..crate::gemm::DispatchConfig::default()
+        });
+        let cfg = Conv2d { in_channels: 2, out_channels: 5, kernel: 3, stride: 1 };
+        let kernels = Matrix::random(5, 2 * 9, 9, -1.0, 1.0);
+        let packed = cfg.pack_kernels(&kernels, &ctx);
+        assert!(packed.bytes() > 0);
+        // One pack, several forward calls with different batch sizes and
+        // spatial dims (the inference-serving pattern).
+        for (seed, n, h, w) in [(11u64, 1usize, 6usize, 6usize), (12, 3, 8, 7), (13, 2, 5, 9)] {
+            let input = rand_input(seed, n * 2 * h * w);
+            let want = conv2d_direct(&cfg, &input, n, h, w, &kernels);
+            let got = cfg.forward_packed(&input, n, h, w, &packed);
+            assert_allclose(
+                got.data(),
+                want.data(),
+                2e-4,
+                1e-4,
+                &format!("packed conv n={n} {h}x{w}"),
+            );
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //!
 //! which matches the paper's application: *all* heavy math is GEMM.
 
-use crate::blas::{sgemm, Backend, Matrix, Transpose};
+use crate::blas::{sgemm, sgemm_batch, Backend, GemmContext, Matrix, PackedB, Transpose};
 use crate::util::prng::Pcg32;
 
 /// MLP parameters: per layer a weight matrix (fan_in × fan_out) and bias.
@@ -67,6 +67,22 @@ impl Mlp {
             + self.biases.iter().map(|b| b.len()).sum::<usize>()
     }
 
+    /// Bias + activation for layer `l`, in place (tanh on hidden layers,
+    /// linear on the output layer).
+    fn bias_activate(&self, z: &mut Matrix, l: usize) {
+        let last = l == self.n_layers() - 1;
+        let cols = z.cols();
+        for r in 0..z.rows() {
+            for c in 0..cols {
+                let mut v = z.get(r, c) + self.biases[l][c];
+                if !last {
+                    v = v.tanh();
+                }
+                z.set(r, c, v);
+            }
+        }
+    }
+
     /// Forward pass: returns per-layer activations, `acts[0] = x`,
     /// `acts[n] = logits` (length `n_layers + 1`).
     pub fn forward_all(&self, x: &Matrix) -> Vec<Matrix> {
@@ -93,17 +109,7 @@ impl Mlp {
                 w.cols(),
             )
             .expect("forward sgemm");
-            // Bias + activation.
-            let last = l == self.n_layers() - 1;
-            for r in 0..batch {
-                for c in 0..w.cols() {
-                    let mut v = z.get(r, c) + self.biases[l][c];
-                    if !last {
-                        v = v.tanh();
-                    }
-                    z.set(r, c, v);
-                }
-            }
+            self.bias_activate(&mut z, l);
             acts.push(z);
         }
         acts
@@ -114,13 +120,63 @@ impl Mlp {
         self.forward_all(x).pop().expect("nonempty activations")
     }
 
-    /// Mean softmax cross-entropy of logits vs one-hot targets.
-    pub fn loss_from_logits(logits: &Matrix, y_onehot: &Matrix) -> f32 {
-        assert_eq!(logits.rows(), y_onehot.rows());
-        assert_eq!(logits.cols(), y_onehot.cols());
-        let batch = logits.rows();
+    /// Pre-pack every layer's weight matrix on `ctx` (paper §3
+    /// re-buffering, hoisted out of the forward pass). The handle stays
+    /// valid while the weights are unchanged — the inference /
+    /// evaluation case — and is reused across every subsequent
+    /// [`forward_packed`](Self::forward_packed) call and batch.
+    pub fn pack_weights(&self, ctx: &GemmContext) -> PackedMlpWeights {
+        let layers = self
+            .weights
+            .iter()
+            .map(|w| {
+                ctx.pack_b(Transpose::No, w.rows(), w.cols(), w.data(), w.ld())
+                    .expect("weight matrices are valid views")
+            })
+            .collect();
+        PackedMlpWeights { ctx: ctx.clone(), layers, sizes: self.sizes.clone() }
+    }
+
+    /// Forward pass through prepacked weights: each layer runs a planned
+    /// GEMM with its weight panel already re-buffered, so repeated
+    /// forward calls (inference, evaluation loops) skip all packing work.
+    ///
+    /// If the context's tuned geometry changed since
+    /// [`pack_weights`](Self::pack_weights) (an autotune install landed in
+    /// between), the stale pack is bypassed and the layer falls back to
+    /// the plain packing path — always correct, just without the
+    /// prepacking win until the caller repacks.
+    pub fn forward_packed(&self, packed: &PackedMlpWeights, x: &Matrix) -> Matrix {
+        assert_eq!(packed.sizes, self.sizes, "packed weights are for a different architecture");
+        assert_eq!(x.cols(), self.sizes[0], "input width mismatch");
+        let batch = x.rows();
+        let mut h = x.clone();
+        for l in 0..self.n_layers() {
+            let w = &self.weights[l];
+            let plan = packed
+                .ctx
+                .gemm()
+                .lda(h.ld())
+                .ldb(w.ld())
+                .plan(batch, w.cols(), w.rows())
+                .expect("validated shapes");
+            let mut z = Matrix::zeros(batch, w.cols());
+            if plan.run_packed_b(h.data(), &packed.layers[l], z.data_mut()).is_err() {
+                plan.run(h.data(), w.data(), z.data_mut()).expect("validated shapes");
+            }
+            self.bias_activate(&mut z, l);
+            h = z;
+        }
+        h
+    }
+
+    /// Mean softmax cross-entropy over the row range `[r0, r1)` — the
+    /// shared core of [`loss_from_logits`](Self::loss_from_logits) and the
+    /// per-shard losses of
+    /// [`loss_and_grad_sharded`](Self::loss_and_grad_sharded).
+    fn loss_rows(logits: &Matrix, y_onehot: &Matrix, r0: usize, r1: usize) -> f32 {
         let mut total = 0.0f64;
-        for r in 0..batch {
+        for r in r0..r1 {
             let mut maxv = f32::NEG_INFINITY;
             for c in 0..logits.cols() {
                 maxv = maxv.max(logits.get(r, c));
@@ -136,17 +192,63 @@ impl Mlp {
                 }
             }
         }
-        (total / batch as f64) as f32
+        (total / (r1 - r0) as f64) as f32
     }
 
-    /// Loss + full gradients for a batch (one-hot targets).
+    /// Mean softmax cross-entropy of logits vs one-hot targets.
+    pub fn loss_from_logits(logits: &Matrix, y_onehot: &Matrix) -> f32 {
+        assert_eq!(logits.rows(), y_onehot.rows());
+        assert_eq!(logits.cols(), y_onehot.cols());
+        Self::loss_rows(logits, y_onehot, 0, logits.rows())
+    }
+
+    /// Loss + full gradients for a batch (one-hot targets). The whole
+    /// batch is one shard of
+    /// [`loss_and_grad_sharded`](Self::loss_and_grad_sharded), so the
+    /// serial and batched backprop paths share one implementation.
     pub fn loss_and_grad(&self, x: &Matrix, y_onehot: &Matrix) -> (f32, MlpGrads) {
+        self.loss_and_grad_sharded(x, y_onehot, 1).pop().expect("exactly one shard")
+    }
+
+    /// Loss + gradients for `shards` equal row-slices of one stacked
+    /// batch, computed with **batched** GEMMs (ROADMAP "batched
+    /// backprop"): the forward pass and the `dh` backward pass run once
+    /// over the stacked rows (the shared-weight fold — every shard
+    /// multiplies the same `W`), and the per-shard `dW = h_sᵀ·dz_s`
+    /// gradients run as a single strided [`sgemm_batch`] per layer
+    /// instead of `shards` serial SGEMMs.
+    ///
+    /// Shard `s` covers rows `[s·r, (s+1)·r)` with `r = x.rows()/shards`
+    /// (`x.rows()` must divide evenly); the result matches calling
+    /// [`loss_and_grad`](Self::loss_and_grad) on each slice.
+    pub fn loss_and_grad_sharded(
+        &self,
+        x: &Matrix,
+        y_onehot: &Matrix,
+        shards: usize,
+    ) -> Vec<(f32, MlpGrads)> {
+        assert!(shards >= 1, "need at least one shard");
+        let batch = x.rows();
+        assert_eq!(y_onehot.rows(), batch);
+        assert_eq!(
+            y_onehot.cols(),
+            *self.sizes.last().expect("at least two layer sizes"),
+            "target width mismatch"
+        );
+        assert_eq!(
+            batch % shards,
+            0,
+            "batch of {batch} rows does not split into {shards} equal shards"
+        );
+        let rows = batch / shards;
         let acts = self.forward_all(x);
         let logits = &acts[self.n_layers()];
-        let loss = Self::loss_from_logits(logits, y_onehot);
-        let batch = x.rows();
 
-        // dz at the output: (softmax(logits) - y) / batch.
+        // Per-shard losses, and dz at the output normalised by the
+        // *shard* size (each shard is its own backprop problem).
+        let losses: Vec<f32> = (0..shards)
+            .map(|s| Self::loss_rows(logits, y_onehot, s * rows, (s + 1) * rows))
+            .collect();
         let mut dz = Matrix::zeros(batch, logits.cols());
         for r in 0..batch {
             let mut maxv = f32::NEG_INFINITY;
@@ -159,53 +261,73 @@ impl Mlp {
             }
             for c in 0..logits.cols() {
                 let sm = (logits.get(r, c) - maxv).exp() / denom;
-                dz.set(r, c, (sm - y_onehot.get(r, c)) / batch as f32);
+                dz.set(r, c, (sm - y_onehot.get(r, c)) / rows as f32);
             }
         }
 
-        let mut d_weights = vec![Matrix::zeros(0, 0); self.n_layers()];
-        let mut d_biases = vec![Vec::new(); self.n_layers()];
+        let mut grads: Vec<MlpGrads> = (0..shards).map(|_| MlpGrads::zeros_like(self)).collect();
         for l in (0..self.n_layers()).rev() {
-            let h = &acts[l]; // input to layer l
+            let h = &acts[l];
             let w = &self.weights[l];
-            // dW = hᵀ dz  (fan_in × fan_out)
-            let mut dw = Matrix::zeros(w.rows(), w.cols());
-            sgemm(
+            let (fan_in, fan_out) = (w.rows(), w.cols());
+            // dW_s = h_sᵀ · dz_s for every shard in one strided batch:
+            // item s's A is rows [s·r, (s+1)·r) of the stacked h (stored
+            // r × fan_in at element offset s·r·ld), likewise for dz. The
+            // single-shard case (the plain loss_and_grad path) writes
+            // straight into the final gradient matrix; multi-shard output
+            // goes through one staging slab (batched C must be one slab).
+            let mut single = if shards == 1 { Matrix::zeros(fan_in, fan_out) } else { Matrix::zeros(0, 0) };
+            let mut staged = if shards > 1 { vec![0.0f32; shards * fan_in * fan_out] } else { Vec::new() };
+            let c_slab: &mut [f32] = if shards == 1 { single.data_mut() } else { &mut staged };
+            sgemm_batch(
                 self.backend,
                 Transpose::Yes,
                 Transpose::No,
-                w.rows(),
-                w.cols(),
-                batch,
+                fan_in,
+                fan_out,
+                rows,
                 1.0,
                 h.data(),
                 h.ld(),
+                rows * h.ld(),
                 dz.data(),
                 dz.ld(),
+                rows * dz.ld(),
                 0.0,
-                dw.data_mut(),
-                w.cols(),
+                c_slab,
+                fan_out,
+                fan_in * fan_out,
+                shards,
             )
-            .expect("dW sgemm");
-            // db = column sums of dz.
-            let mut db = vec![0.0f32; w.cols()];
-            for r in 0..batch {
-                for c in 0..w.cols() {
-                    db[c] += dz.get(r, c);
+            .expect("dW sgemm_batch");
+            for (s, g) in grads.iter_mut().enumerate() {
+                if shards == 1 {
+                    g.d_weights[l] = std::mem::replace(&mut single, Matrix::zeros(0, 0));
+                } else {
+                    let mut dw = Matrix::zeros(fan_in, fan_out);
+                    dw.data_mut()
+                        .copy_from_slice(&staged[s * fan_in * fan_out..(s + 1) * fan_in * fan_out]);
+                    g.d_weights[l] = dw;
                 }
+                let mut db = vec![0.0f32; fan_out];
+                for r in s * rows..(s + 1) * rows {
+                    for c in 0..fan_out {
+                        db[c] += dz.get(r, c);
+                    }
+                }
+                g.d_biases[l] = db;
             }
-            d_weights[l] = dw;
-            d_biases[l] = db;
             if l > 0 {
-                // dh = dz Wᵀ  (batch × fan_in), then dz_{l-1} = dh ⊙ tanh'.
-                let mut dh = Matrix::zeros(batch, w.rows());
+                // dh = dz · Wᵀ over the whole stack at once (shared
+                // weight; rows are independent), then tanh'.
+                let mut dh = Matrix::zeros(batch, fan_in);
                 sgemm(
                     self.backend,
                     Transpose::No,
                     Transpose::Yes,
                     batch,
-                    w.rows(),
-                    w.cols(),
+                    fan_in,
+                    fan_out,
                     1.0,
                     dz.data(),
                     dz.ld(),
@@ -213,19 +335,19 @@ impl Mlp {
                     w.ld(),
                     0.0,
                     dh.data_mut(),
-                    w.rows(),
+                    fan_in,
                 )
                 .expect("dh sgemm");
                 for r in 0..batch {
-                    for c in 0..w.rows() {
-                        let hv = acts[l].get(r, c); // = tanh(z_{l-1})
+                    for c in 0..fan_in {
+                        let hv = acts[l].get(r, c);
                         dh.set(r, c, dh.get(r, c) * (1.0 - hv * hv));
                     }
                 }
                 dz = dh;
             }
         }
-        (loss, MlpGrads { d_weights, d_biases })
+        losses.into_iter().zip(grads).collect()
     }
 
     /// Classification accuracy of logits vs one-hot targets.
@@ -260,6 +382,27 @@ impl Mlp {
             .map(|(&i, &o)| 2.0 * batch as f64 * i as f64 * o as f64)
             .sum();
         3.0 * fwd
+    }
+}
+
+/// Per-layer prepacked weight panels bound to the [`GemmContext`] that
+/// packed them (created by [`Mlp::pack_weights`], consumed by
+/// [`Mlp::forward_packed`]). Weight-stationary: pack once, run many.
+pub struct PackedMlpWeights {
+    ctx: GemmContext,
+    layers: Vec<PackedB>,
+    sizes: Vec<usize>,
+}
+
+impl PackedMlpWeights {
+    /// Layer sizes the pack was built for.
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Total bytes held by the packed panels (diagnostic).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(PackedB::bytes).sum()
     }
 }
 
@@ -415,6 +558,71 @@ mod tests {
             assert!(a.max_abs_diff(b) < 1e-6);
         }
         assert!(g.max_abs() > 0.0);
+    }
+
+    #[test]
+    fn sharded_backprop_matches_per_shard_serial() {
+        let mlp = Mlp::init(&[7, 10, 4], 21, Backend::Dispatch);
+        let (shards, rows) = (3usize, 5usize);
+        let batch = shards * rows;
+        let x = Matrix::random(batch, 7, 22, -1.0, 1.0);
+        let y = onehot(&(0..batch).map(|i| i % 4).collect::<Vec<_>>(), 4);
+        let got = mlp.loss_and_grad_sharded(&x, &y, shards);
+        assert_eq!(got.len(), shards);
+        for s in 0..shards {
+            let xs = Matrix::from_fn(rows, 7, |r, c| x.get(s * rows + r, c));
+            let ys = Matrix::from_fn(rows, 4, |r, c| y.get(s * rows + r, c));
+            let (loss_ref, grads_ref) = mlp.loss_and_grad(&xs, &ys);
+            let (loss_got, grads_got) = &got[s];
+            assert!(
+                (loss_got - loss_ref).abs() < 1e-4,
+                "shard {s}: loss {loss_got} vs {loss_ref}"
+            );
+            for (a, b) in grads_got.d_weights.iter().zip(&grads_ref.d_weights) {
+                assert!(a.max_abs_diff(b) < 1e-4, "shard {s} dW mismatch");
+            }
+            for (a, b) in grads_got.d_biases.iter().zip(&grads_ref.d_biases) {
+                for (x1, x2) in a.iter().zip(b) {
+                    assert!((x1 - x2).abs() < 1e-4, "shard {s} db mismatch");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_backprop_single_shard_equals_loss_and_grad() {
+        let mlp = Mlp::init(&[5, 9, 3], 31, Backend::Naive);
+        let x = Matrix::random(6, 5, 32, -1.0, 1.0);
+        let y = onehot(&[0, 1, 2, 0, 1, 2], 3);
+        let (l_ref, g_ref) = mlp.loss_and_grad(&x, &y);
+        let mut got = mlp.loss_and_grad_sharded(&x, &y, 1);
+        assert_eq!(got.len(), 1);
+        let (l_got, g_got) = got.pop().unwrap();
+        assert!((l_got - l_ref).abs() < 1e-5);
+        for (a, b) in g_got.d_weights.iter().zip(&g_ref.d_weights) {
+            assert!(a.max_abs_diff(b) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn packed_forward_matches_plain_forward() {
+        // Local context: immune to concurrent global install_tuned calls.
+        let ctx = crate::blas::GemmContext::new(crate::gemm::DispatchConfig {
+            threads: 1,
+            ..crate::gemm::DispatchConfig::default()
+        });
+        let mlp = Mlp::init(&[6, 12, 5], 41, Backend::Dispatch);
+        let packed = mlp.pack_weights(&ctx);
+        assert_eq!(packed.sizes(), &[6, 12, 5]);
+        assert!(packed.bytes() > 0);
+        // Reused across several batches (the evaluation-loop pattern).
+        for (seed, batch) in [(42u64, 1usize), (43, 4), (44, 9)] {
+            let x = Matrix::random(batch, 6, seed, -1.0, 1.0);
+            let plain = mlp.forward(&x);
+            let fast = mlp.forward_packed(&packed, &x);
+            assert_eq!((fast.rows(), fast.cols()), (batch, 5));
+            assert!(plain.max_abs_diff(&fast) < 1e-4, "batch {batch}");
+        }
     }
 
     #[test]

@@ -102,7 +102,28 @@ impl Tensor {
         }
     }
 
-    /// Batched matrix multiply through the native dispatch subsystem:
+    /// Plain 2-d matrix multiply through the shared
+    /// [`crate::gemm::plan::GemmContext`]: builds a one-shot plan (kernel,
+    /// geometry and thread split resolved in the context) and runs it.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, k) = self.as_2d().context("matmul lhs")?;
+        let (k2, n) = other.as_2d().context("matmul rhs")?;
+        if k != k2 {
+            bail!("matmul inner dims disagree: lhs k={k}, rhs k={k2}");
+        }
+        let mut out = Tensor::zeros(vec![m, n]);
+        let plan = crate::gemm::plan::GemmContext::global()
+            .gemm()
+            .plan(m, n, k)
+            .map_err(|e| anyhow::anyhow!("matmul plan: {e}"))?;
+        plan.run(&self.data, &other.data, &mut out.data)
+            .map_err(|e| anyhow::anyhow!("matmul run: {e}"))?;
+        Ok(out)
+    }
+
+    /// Batched matrix multiply through the native dispatch subsystem
+    /// (threads drawn from the shared
+    /// [`crate::gemm::plan::GemmContext`] budget):
     /// `out[i] = self[i] · other[i]`.
     ///
     /// Shapes follow the JAX/NumPy `matmul` batching rules restricted to
@@ -228,6 +249,20 @@ mod tests {
             }
         }
         c
+    }
+
+    #[test]
+    fn matmul_matches_naive_and_rejects_mismatch() {
+        let x = Tensor::random(vec![5, 7], 51, -1.0, 1.0);
+        let y = Tensor::random(vec![7, 4], 52, -1.0, 1.0);
+        let out = x.matmul(&y).unwrap();
+        assert_eq!(out.dims(), &[5, 4]);
+        let want = naive_item_matmul(x.data(), y.data(), 5, 7, 4);
+        crate::util::testkit::assert_allclose(out.data(), &want, 5e-4, 1e-4, "matmul");
+        let bad = Tensor::random(vec![6, 4], 53, -1.0, 1.0);
+        assert!(x.matmul(&bad).is_err());
+        let not2d = Tensor::random(vec![2, 3, 4], 54, -1.0, 1.0);
+        assert!(not2d.matmul(&y).is_err());
     }
 
     #[test]

@@ -12,8 +12,11 @@
 //! * [`timer`] — wall-clock timing and cache-flushing helpers (the paper
 //!   flushes caches between timed `sgemm` calls).
 //! * [`table`] — aligned ASCII table / CSV rendering for bench reports.
-//! * [`json`] — a minimal JSON writer for machine-readable bench output.
-//! * [`threadpool`] — a fixed-size worker pool used by the coordinator.
+//! * [`json`] — a minimal JSON writer/parser for machine-readable bench
+//!   output and the persistent autotune cache.
+//! * [`threadpool`] — a fixed-size worker pool with scoped fork-join
+//!   execution: the coordinator's workers and the process-wide GEMM
+//!   thread budget ([`crate::gemm::plan::GemmContext`]) both run on it.
 //! * [`testkit`] — a miniature property-based testing harness.
 
 pub mod cli;

@@ -1,10 +1,18 @@
 //! A fixed-size worker thread pool (tokio is unavailable offline; the
 //! coordinator's concurrency needs are served by plain threads + channels,
 //! which is also closer to the 1999-era MPI-style cluster the paper used).
+//!
+//! Beyond the classic `'static` job queue ([`ThreadPool::execute`]), the
+//! pool offers [`ThreadPool::run_borrowed`]: a scoped fork-join primitive
+//! that runs closures *borrowing* caller data across the pool's workers —
+//! the execution substrate behind the process-wide GEMM thread budget
+//! ([`crate::gemm::plan::GemmContext`]). The caller always participates in
+//! draining its own job queue, so progress is guaranteed even when every
+//! pool worker is busy (nested fork-joins cannot deadlock).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -15,8 +23,11 @@ enum Msg {
 }
 
 /// A fixed pool of worker threads executing boxed closures.
+///
+/// Submission endpoints are internally synchronised, so a pool can be
+/// shared across threads (`&ThreadPool` / `Arc<ThreadPool>`).
 pub struct ThreadPool {
-    tx: Sender<Msg>,
+    tx: Mutex<Sender<Msg>>,
     handles: Vec<JoinHandle<()>>,
     in_flight: Arc<AtomicUsize>,
     size: usize,
@@ -40,7 +51,7 @@ impl ThreadPool {
                     .expect("spawn worker"),
             );
         }
-        Self { tx, handles, in_flight, size }
+        Self { tx: Mutex::new(tx), handles, in_flight, size }
     }
 
     /// Number of worker threads.
@@ -51,7 +62,61 @@ impl ThreadPool {
     /// Submit a job for execution.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.in_flight.fetch_add(1, Ordering::SeqCst);
-        self.tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+        let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+        tx.send(Msg::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Run borrowed jobs to completion across the pool, fork-join style.
+    ///
+    /// The calling thread executes jobs too (it is one of the effective
+    /// workers), and up to `size()` pool workers help drain the queue.
+    /// Blocks until every job has finished, so the jobs may freely borrow
+    /// data from the caller's stack. A panicking job is contained and its
+    /// original payload re-raised on the caller once the whole group has
+    /// completed.
+    pub fn run_borrowed<'s>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        // SAFETY: the 's borrows inside the jobs are only accessed while
+        // this call is running — we do not return until `pending` hits
+        // zero, i.e. until every job (wherever it ran) has finished, and
+        // leftover helper tasks only ever observe an empty queue.
+        let jobs: Vec<Job> = jobs
+            .into_iter()
+            .map(|j| unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 's>, Job>(j)
+            })
+            .collect();
+        let queue = Arc::new(BorrowedQueue {
+            jobs: Mutex::new(jobs),
+            pending: Mutex::new(n),
+            done: Condvar::new(),
+            panic_payload: Mutex::new(None),
+        });
+        // The caller takes one share of the work; workers cover the rest.
+        for _ in 0..self.size.min(n.saturating_sub(1)) {
+            let q = Arc::clone(&queue);
+            self.execute(move || drain_borrowed(&q));
+        }
+        drain_borrowed(&queue);
+        // Sleep (not spin) until the stragglers running on pool workers
+        // have finished their last jobs.
+        let mut pending = queue.pending.lock().unwrap_or_else(|e| e.into_inner());
+        while *pending != 0 {
+            pending = queue
+                .done
+                .wait(pending)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        drop(pending);
+        let payload = queue.panic_payload.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(payload) = payload {
+            // Re-raise the first captured panic with its original payload,
+            // matching what std::thread::scope would have propagated.
+            std::panic::resume_unwind(payload);
+        }
     }
 
     /// Block until every submitted job has finished.
@@ -86,6 +151,48 @@ impl ThreadPool {
     }
 }
 
+/// Run borrowed jobs on `pool` when one is available, else serially on the
+/// calling thread — the degenerate single-thread budget.
+pub fn run_borrowed_on<'s>(pool: Option<&ThreadPool>, jobs: Vec<Box<dyn FnOnce() + Send + 's>>) {
+    match pool {
+        Some(p) => p.run_borrowed(jobs),
+        None => {
+            for job in jobs {
+                job();
+            }
+        }
+    }
+}
+
+/// One fork-join group: its jobs, how many are unfinished (condvar-signalled
+/// at zero), and the first captured panic payload, if any.
+struct BorrowedQueue {
+    jobs: Mutex<Vec<Job>>,
+    pending: Mutex<usize>,
+    done: Condvar,
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+/// Pop-and-run jobs until the group's queue is empty.
+fn drain_borrowed(q: &BorrowedQueue) {
+    loop {
+        let job = {
+            let mut guard = q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+            guard.pop()
+        };
+        let Some(job) = job else { return };
+        if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+            let mut slot = q.panic_payload.lock().unwrap_or_else(|e| e.into_inner());
+            slot.get_or_insert(payload);
+        }
+        let mut pending = q.pending.lock().unwrap_or_else(|e| e.into_inner());
+        *pending -= 1;
+        if *pending == 0 {
+            q.done.notify_all();
+        }
+    }
+}
+
 fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, in_flight: Arc<AtomicUsize>) {
     loop {
         let msg = {
@@ -104,9 +211,11 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>, in_flight: Arc<AtomicUsize>) {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
+        let tx = self.tx.lock().unwrap_or_else(|e| e.into_inner());
         for _ in 0..self.handles.len() {
-            let _ = self.tx.send(Msg::Shutdown);
+            let _ = tx.send(Msg::Shutdown);
         }
+        drop(tx);
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -152,5 +261,81 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| {});
         drop(pool); // must not deadlock
+    }
+
+    #[test]
+    fn run_borrowed_sees_stack_data() {
+        let pool = ThreadPool::new(3);
+        let mut out = vec![0u64; 64];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(8)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 8 + j) as u64;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_borrowed(jobs);
+        assert_eq!(out, (0..64u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_borrowed_nested_does_not_deadlock() {
+        // Saturate a 1-worker pool with fork-joins that fork again from
+        // inside a job; the caller-participates rule keeps this live.
+        let pool = Arc::new(ThreadPool::new(1));
+        let counter = Arc::new(AtomicU64::new(0));
+        let inner_pool = Arc::clone(&pool);
+        let c = Arc::clone(&counter);
+        let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&inner_pool);
+                let c = Arc::clone(&c);
+                Box::new(move || {
+                    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            let c = Arc::clone(&c);
+                            Box::new(move || {
+                                c.fetch_add(1, Ordering::SeqCst);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.run_borrowed(jobs);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_borrowed(outer);
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn run_borrowed_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| {}), Box::new(|| panic!("boom"))];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_borrowed(jobs);
+        }));
+        // The original payload is re-raised, not a generic wrapper.
+        let payload = r.unwrap_err();
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // Pool is still usable afterwards.
+        let out = pool.map_indexed(3, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn run_borrowed_on_none_runs_serially() {
+        let mut hits = 0u32;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = {
+            let hits = &mut hits;
+            vec![Box::new(move || *hits += 1)]
+        };
+        run_borrowed_on(None, jobs);
+        assert_eq!(hits, 1);
     }
 }

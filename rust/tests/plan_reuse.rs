@@ -1,0 +1,288 @@
+//! Conformance suite for the planned-execution API: a `GemmPlan` executed
+//! repeatedly — and `PackedA`/`PackedB` handles reused across shapes and
+//! batch items — must match fresh positional `sgemm` calls bit-for-bit
+//! (same kernels, same arithmetic order) and the naive oracle within
+//! tolerance, including fringe m/n/k and strided C.
+
+use emmerald::blas::{sgemm, sgemm_batch, Backend, GemmContext, Matrix, Transpose};
+use emmerald::gemm::KernelId;
+use emmerald::util::prng::Pcg32;
+use emmerald::util::testkit::assert_allclose;
+
+fn rand_vec(seed: u64, len: usize) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    let mut v = vec![0.0f32; len];
+    rng.fill_f32(&mut v, -1.0, 1.0);
+    v
+}
+
+/// Naive triple-loop oracle over flat row-major buffers with explicit lds.
+#[allow(clippy::too_many_arguments)]
+fn oracle(
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                let av = match transa {
+                    Transpose::No => a[i * lda + p],
+                    Transpose::Yes => a[p * lda + i],
+                };
+                let bv = match transb {
+                    Transpose::No => b[p * ldb + j],
+                    Transpose::Yes => b[j * ldb + p],
+                };
+                acc += (av as f64) * (bv as f64);
+            }
+            c[i * ldc + j] = alpha * acc as f32 + beta * c[i * ldc + j];
+        }
+    }
+}
+
+#[test]
+fn plan_executed_twice_is_bitwise_identical_and_matches_fresh_sgemm() {
+    let ctx = GemmContext::global();
+    // Fringe and non-fringe shapes, including strided C.
+    for &(m, n, k, ldc_pad, seed) in &[
+        (1usize, 1usize, 1usize, 0usize, 0x10u64),
+        (5, 7, 13, 0, 0x11),
+        (7, 5, 13, 3, 0x12),
+        (33, 17, 40, 2, 0x13),
+        (64, 64, 64, 0, 0x14),
+    ] {
+        let ldc = n + ldc_pad;
+        let a = rand_vec(seed, m * k);
+        let b = rand_vec(seed ^ 0xB, k * n);
+        let c0 = rand_vec(seed ^ 0xC, m * ldc);
+        let plan = ctx.gemm().alpha(1.25).beta(-0.5).ldc(ldc).plan(m, n, k).unwrap();
+
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        plan.run(&a, &b, &mut c1).unwrap();
+        plan.run(&a, &b, &mut c2).unwrap();
+        assert_eq!(c1, c2, "plan re-run must be bit-identical ({m}x{n}x{k})");
+
+        // A fresh positional call resolves the same kernel from the same
+        // context, so it must agree bit-for-bit.
+        let mut c3 = c0.clone();
+        sgemm(Backend::Dispatch, Transpose::No, Transpose::No, m, n, k, 1.25, &a, k, &b, n, -0.5, &mut c3, ldc)
+            .unwrap();
+        assert_eq!(c1, c3, "plan vs fresh sgemm must be bit-identical ({m}x{n}x{k})");
+
+        let mut c_ref = c0.clone();
+        oracle(Transpose::No, Transpose::No, m, n, k, 1.25, &a, k, &b, n, -0.5, &mut c_ref, ldc);
+        assert_allclose(&c1, &c_ref, 5e-4, 1e-4, &format!("plan vs oracle {m}x{n}x{k}"));
+    }
+}
+
+#[test]
+fn packed_b_reused_across_shapes_matches_oracle_and_plain_plan() {
+    let ctx = GemmContext::global();
+    // Fringe k (padding granule) and fringe n (partial last panel).
+    let (n, k) = (11usize, 21usize);
+    let b = rand_vec(0xB0, k * n);
+    let packed = ctx.pack_b(Transpose::No, k, n, &b, n).unwrap();
+    for &(m, seed) in &[(1usize, 0x20u64), (3, 0x21), (16, 0x22), (33, 0x23)] {
+        let a = rand_vec(seed, m * k);
+        let plan = ctx.gemm().beta(0.25).plan(m, n, k).unwrap();
+        let c0 = rand_vec(seed ^ 0xF, m * n);
+        let mut c_packed = c0.clone();
+        plan.run_packed_b(&a, &packed, &mut c_packed).unwrap();
+
+        let mut c_ref = c0.clone();
+        oracle(Transpose::No, Transpose::No, m, n, k, 1.0, &a, k, &b, n, 0.25, &mut c_ref, n);
+        assert_allclose(&c_packed, &c_ref, 5e-4, 1e-4, &format!("packed m={m} vs oracle"));
+
+        if KernelId::Simd.available() {
+            // Same kernel family, same geometry, same arithmetic order:
+            // the prepacked run is bit-identical to the packing run.
+            let mut c_plain = c0.clone();
+            plan.run(&a, &b, &mut c_plain).unwrap();
+            assert_eq!(c_packed, c_plain, "packed vs plain plan m={m}");
+        }
+    }
+}
+
+#[test]
+fn packed_b_reused_across_batch_items_matches_sgemm_batch() {
+    let ctx = GemmContext::global();
+    let (m, n, k, batch) = (6usize, 9usize, 14usize, 5usize);
+    let a = rand_vec(1, batch * m * k);
+    let b = rand_vec(2, k * n);
+    let c0 = rand_vec(3, batch * m * n);
+
+    // One PackedB shared by every batch item, via per-item planned runs.
+    let packed = ctx.pack_b(Transpose::No, k, n, &b, n).unwrap();
+    let plan = ctx.gemm().alpha(0.75).beta(0.5).plan(m, n, k).unwrap();
+    let mut c_packed = c0.clone();
+    for i in 0..batch {
+        plan.run_packed_b(&a[i * m * k..(i + 1) * m * k], &packed, &mut c_packed[i * m * n..(i + 1) * m * n])
+            .unwrap();
+    }
+
+    // Reference 1: the batched driver's shared-B fold.
+    let mut c_fold = c0.clone();
+    sgemm_batch(
+        Backend::Dispatch,
+        Transpose::No,
+        Transpose::No,
+        m,
+        n,
+        k,
+        0.75,
+        &a,
+        k,
+        m * k,
+        &b,
+        n,
+        0,
+        0.5,
+        &mut c_fold,
+        n,
+        m * n,
+        batch,
+    )
+    .unwrap();
+    assert_allclose(&c_packed, &c_fold, 5e-4, 1e-4, "packed items vs shared-B fold");
+
+    // Reference 2: per-item naive oracle.
+    let mut c_ref = c0.clone();
+    for i in 0..batch {
+        oracle(
+            Transpose::No,
+            Transpose::No,
+            m,
+            n,
+            k,
+            0.75,
+            &a[i * m * k..],
+            k,
+            &b,
+            n,
+            0.5,
+            &mut c_ref[i * m * n..],
+            n,
+        );
+    }
+    assert_allclose(&c_packed, &c_ref, 5e-4, 1e-4, "packed items vs oracle");
+}
+
+#[test]
+fn packed_runs_leave_strided_c_padding_untouched() {
+    let ctx = GemmContext::global();
+    let (m, n, k) = (9usize, 7usize, 12usize);
+    let ldc = n + 3;
+    let a = rand_vec(0x51, m * k);
+    let b = rand_vec(0x52, k * n);
+    let packed = ctx.pack_b(Transpose::No, k, n, &b, n).unwrap();
+    let plan = ctx.gemm().ldc(ldc).plan(m, n, k).unwrap();
+    let mut c = vec![-77.0f32; m * ldc];
+    plan.run_packed_b(&a, &packed, &mut c).unwrap();
+    for r in 0..m {
+        for p in n..ldc {
+            assert_eq!(c[r * ldc + p], -77.0, "padding clobbered at row {r} col {p}");
+        }
+        for j in 0..n {
+            assert_ne!(c[r * ldc + j], -77.0, "logical element untouched at row {r} col {j}");
+        }
+    }
+}
+
+#[test]
+fn packed_a_and_b_match_transposed_oracle() {
+    let ctx = GemmContext::global();
+    let (m, n, k) = (14usize, 10usize, 17usize);
+    // A stored k×m (transa=Yes), B stored n×k (transb=Yes).
+    let a = rand_vec(0x61, k * m);
+    let b = rand_vec(0x62, n * k);
+    let packed_a = ctx.pack_a(Transpose::Yes, m, k, &a, m).unwrap();
+    let packed_b = ctx.pack_b(Transpose::Yes, k, n, &b, k).unwrap();
+    let plan = ctx
+        .gemm()
+        .transpose_a(Transpose::Yes)
+        .transpose_b(Transpose::Yes)
+        .alpha(2.0)
+        .plan(m, n, k)
+        .unwrap();
+    let mut c1 = vec![0.0f32; m * n];
+    let mut c2 = vec![0.0f32; m * n];
+    plan.run_packed(&packed_a, &packed_b, &mut c1).unwrap();
+    plan.run_packed(&packed_a, &packed_b, &mut c2).unwrap();
+    assert_eq!(c1, c2, "packed re-run must be bit-identical");
+    let mut c_ref = vec![0.0f32; m * n];
+    oracle(Transpose::Yes, Transpose::Yes, m, n, k, 2.0, &a, m, &b, k, 0.0, &mut c_ref, n);
+    assert_allclose(&c1, &c_ref, 5e-4, 1e-4, "packed A+B TT vs oracle");
+}
+
+#[test]
+fn plan_run_batch_matches_looped_plan_runs() {
+    let ctx = GemmContext::global();
+    let (m, n, k, batch) = (4usize, 6usize, 8usize, 3usize);
+    let strides = emmerald::gemm::BatchStrides::contiguous(m, n, k);
+    let a = rand_vec(0x71, batch * m * k);
+    let b = rand_vec(0x72, batch * k * n);
+    let c0 = rand_vec(0x73, batch * m * n);
+    let plan = ctx.gemm().alpha(1.5).beta(-1.0).plan(m, n, k).unwrap();
+    let mut c_batch = c0.clone();
+    plan.run_batch(&a, &b, &mut c_batch, batch, strides).unwrap();
+    let mut c_loop = c0.clone();
+    for i in 0..batch {
+        plan.run(
+            &a[i * m * k..(i + 1) * m * k],
+            &b[i * k * n..(i + 1) * k * n],
+            &mut c_loop[i * m * n..(i + 1) * m * n],
+        )
+        .unwrap();
+    }
+    assert_allclose(&c_batch, &c_loop, 5e-4, 1e-4, "run_batch vs looped runs");
+}
+
+#[test]
+fn forced_kernel_plans_match_their_backend() {
+    let ctx = GemmContext::global();
+    let (m, n, k) = (13usize, 9usize, 15usize);
+    let a = rand_vec(0x81, m * k);
+    let b = rand_vec(0x82, k * n);
+    for (kernel, backend) in [
+        (KernelId::Naive, Backend::Naive),
+        (KernelId::Blocked, Backend::Blocked),
+        (KernelId::Simd, Backend::Simd),
+        (KernelId::Avx2, Backend::Avx2),
+    ] {
+        if !kernel.available() {
+            continue;
+        }
+        let plan = ctx.gemm().kernel(kernel).plan(m, n, k).unwrap();
+        assert_eq!(plan.kernel(), kernel);
+        let mut c_plan = vec![0.5f32; m * n];
+        let mut c_pos = vec![0.5f32; m * n];
+        plan.run(&a, &b, &mut c_plan).unwrap();
+        sgemm(backend, Transpose::No, Transpose::No, m, n, k, 1.0, &a, k, &b, n, 0.0, &mut c_pos, n)
+            .unwrap();
+        assert_eq!(c_plan, c_pos, "forced {kernel:?} vs positional backend");
+    }
+}
+
+#[test]
+fn matrix_helper_still_works_through_shims() {
+    // The Matrix convenience wrapper rides the same one-shot plan path.
+    let a = Matrix::from_fn(3, 2, |i, j| (i + j) as f32);
+    let b = Matrix::from_fn(2, 4, |i, j| (i * 4 + j) as f32);
+    let mut c = Matrix::zeros(3, 4);
+    emmerald::blas::sgemm_matrix(Backend::Auto, Transpose::No, Transpose::No, 1.0, &a, &b, 0.0, &mut c)
+        .unwrap();
+    assert_eq!(c.get(1, 2), 14.0);
+}
