@@ -8,9 +8,12 @@ cd "$(dirname "$0")/rust"
 
 # Hermetic tests: a developer's persisted autotune winners
 # (~/.cache/emmerald/tuned.json) must not leak machine-specific kernel
-# geometry into the suite. Tests that exercise the cache use explicit
-# temp paths, so disabling the default location loses no coverage.
-export EMMERALD_TUNE_CACHE="${EMMERALD_TUNE_CACHE:-off}"
+# geometry into the suite. Point the override at a fresh temp dir (rather
+# than disabling it) so the cache code path itself stays exercised while
+# every tier-1 run starts from a clean slate. util::testkit's
+# hermetic_tune_cache() provides the same guarantee for bare `cargo test`
+# runs outside this script.
+export EMMERALD_TUNE_CACHE="${EMMERALD_TUNE_CACHE:-$(mktemp -d /tmp/emmerald-tune-XXXXXX)/tuned.json}"
 
 echo "== cargo build --release =="
 cargo build --release

@@ -1,0 +1,83 @@
+//! Parallel prepacked execution: what does splitting `run_packed`'s
+//! row-block loop across the context pool buy over the serial sweep?
+//!
+//! Both contexts run the *same* prepacked panel driver on the same
+//! prepacked operands (results are bit-identical — asserted before
+//! timing); the only difference is the thread budget. Measured at the
+//! acceptance shape 512×512×512.
+//!
+//! **Guards** that parallel `run_packed` beats serial `run_packed` at
+//! 512³ when at least two threads are available (exit code 1 otherwise,
+//! so CI can use this binary as a gate). Single-core hosts skip-pass.
+
+use emmerald::bench::{gemm_flops, Bencher, FlushMode, Report};
+use emmerald::blas::{GemmContext, Matrix, Transpose};
+use emmerald::gemm::{DispatchConfig, KernelId};
+
+fn main() {
+    let ctx_par = GemmContext::global();
+    if ctx_par.threads() < 2 {
+        println!("SKIP-PASS: single-thread budget ({}) — nothing to parallelise", ctx_par.threads());
+        return;
+    }
+    let ctx_ser = GemmContext::new(DispatchConfig { threads: 1, ..DispatchConfig::default() });
+
+    let (m, n, k) = (512usize, 512usize, 512usize);
+    let a = Matrix::random(m, k, 1, -1.0, 1.0);
+    let b = Matrix::random(k, n, 2, -1.0, 1.0);
+    let flops = gemm_flops(m, n, k);
+
+    let build = |ctx: &GemmContext| {
+        let pa = ctx.pack_a(Transpose::No, m, k, a.data(), a.ld()).expect("pack_a");
+        let pb = ctx.pack_b(Transpose::No, k, n, b.data(), b.ld()).expect("pack_b");
+        let plan = ctx.gemm().plan(m, n, k).expect("plan");
+        (pa, pb, plan)
+    };
+    let (pa_p, pb_p, plan_par) = build(ctx_par);
+    let (pa_s, pb_s, plan_ser) = build(&ctx_ser);
+    assert_eq!(plan_par.kernel(), KernelId::Parallel, "512^3 must resolve to the parallel tier");
+
+    // Same driver, same split-invariant arithmetic: bit-identical outputs.
+    let mut c_par = vec![0.0f32; m * n];
+    let mut c_ser = vec![0.0f32; m * n];
+    plan_par.run_packed(&pa_p, &pb_p, &mut c_par).expect("parallel run_packed");
+    plan_ser.run_packed(&pa_s, &pb_s, &mut c_ser).expect("serial run_packed");
+    assert_eq!(c_par, c_ser, "parallel run_packed must be bit-identical to serial");
+
+    let mut report = Report::new(
+        "Prepacked parallel — run_packed across the context pool vs serial",
+        &["path"],
+    );
+    println!("context: thread budget {} (serial comparison budget 1)", ctx_par.threads());
+
+    let mut bench = Bencher::new(2, 7).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+    let serial = bench.run("run_packed/serial", flops, || {
+        plan_ser.run_packed(&pa_s, &pb_s, &mut c_ser).expect("serial run_packed");
+    });
+    let mut bench = Bencher::new(2, 7).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+    let parallel = bench.run("run_packed/parallel", flops, || {
+        plan_par.run_packed(&pa_p, &pb_p, &mut c_par).expect("parallel run_packed");
+    });
+
+    println!(
+        "512x512x512  serial {:>9.1}  parallel {:>9.1} MFlop/s  (speedup {:.2}x on {} threads)",
+        serial.mflops(),
+        parallel.mflops(),
+        parallel.mflops() / serial.mflops(),
+        ctx_par.threads(),
+    );
+    report.add(&["serial".into()], serial.clone());
+    report.add(&["parallel".into()], parallel.clone());
+    report.emit("packed_parallel");
+
+    if parallel.mflops() <= serial.mflops() {
+        eprintln!(
+            "FAIL: parallel run_packed ({:.1} MFlop/s) did not beat serial run_packed ({:.1} MFlop/s) at 512x512x512 with {} threads",
+            parallel.mflops(),
+            serial.mflops(),
+            ctx_par.threads(),
+        );
+        std::process::exit(1);
+    }
+    println!("PASS: parallel run_packed beats serial run_packed at 512x512x512");
+}

@@ -19,8 +19,25 @@ use std::path::{Path, PathBuf};
 /// Environment variable overriding the cache file path.
 pub const ENV_PATH: &str = "EMMERALD_TUNE_CACHE";
 
+/// Process-local path override, taking precedence over `EMMERALD_TUNE_CACHE`
+/// and the home-directory default. First call wins; set via
+/// [`set_path_override`] (mutating the environment at runtime is not
+/// thread-safe, so the test harness pins the path through this instead).
+static PATH_OVERRIDE: std::sync::OnceLock<Option<PathBuf>> = std::sync::OnceLock::new();
+
+/// Install a process-local cache path (`None` disables persistence).
+/// Only the first call has any effect; returns whether it took. Used by
+/// `util::testkit::hermetic_tune_cache` to keep test runs from inheriting
+/// a developer's `~/.cache/emmerald/tuned.json`.
+pub fn set_path_override(path: Option<PathBuf>) -> bool {
+    PATH_OVERRIDE.set(path).is_ok()
+}
+
 /// Resolve the cache file path (`None` = persistence disabled).
 pub fn cache_path() -> Option<PathBuf> {
+    if let Some(over) = PATH_OVERRIDE.get() {
+        return over.clone();
+    }
     if let Ok(p) = std::env::var(ENV_PATH) {
         if p.is_empty() || p == "off" || p == "0" {
             return None;

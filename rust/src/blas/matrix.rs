@@ -80,19 +80,45 @@ impl<'a> MatRef<'a> {
 }
 
 /// Mutable strided view over `f32` data.
+///
+/// Stored as a raw pointer + length rather than `&mut [f32]` so the view
+/// can be split along *either* axis: two column slices of a strided matrix
+/// interleave in storage (every row of the left slice is followed by the
+/// right slice's part of that row), which two `&mut [f32]` halves cannot
+/// express. The invariant is that a `MatMut` grants exclusive access to
+/// its **logical** elements (`(r, c)` with `r < rows`, `c < cols`) only;
+/// sibling views produced by [`split_rows`](Self::split_rows) /
+/// [`split_cols`](Self::split_cols) may share a backing range but never a
+/// logical element, so the accessors below never race.
 #[derive(Debug)]
 pub struct MatMut<'a> {
-    data: &'a mut [f32],
+    ptr: *mut f32,
+    len: usize,
     rows: usize,
     cols: usize,
     ld: usize,
+    _marker: std::marker::PhantomData<&'a mut [f32]>,
 }
+
+// SAFETY: a MatMut carries the exclusive capability to touch its logical
+// elements (it is created from a `&mut [f32]` and siblings are logically
+// disjoint), exactly like the `&mut [f32]` it used to wrap — sending that
+// capability to another thread is sound. Not `Sync`: `&MatMut` exposes
+// `as_ref`, which must not observe a sibling's concurrent writes.
+unsafe impl Send for MatMut<'_> {}
 
 impl<'a> MatMut<'a> {
     /// Construct a view, validating `ld` and the backing length.
     pub fn new(data: &'a mut [f32], rows: usize, cols: usize, ld: usize) -> Result<Self, BlasError> {
         validate(rows, cols, ld, data.len())?;
-        Ok(Self { data, rows, cols, ld })
+        Ok(Self {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            rows,
+            cols,
+            ld,
+            _marker: std::marker::PhantomData,
+        })
     }
 
     /// Rows of the stored matrix.
@@ -114,14 +140,16 @@ impl<'a> MatMut<'a> {
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f32 {
         assert!(r < self.rows && c < self.cols);
-        self.data[r * self.ld + c]
+        // SAFETY: logical indices validated against the view's extent.
+        unsafe { *self.ptr.add(r * self.ld + c) }
     }
 
     /// Bounds-checked element write.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         assert!(r < self.rows && c < self.cols);
-        self.data[r * self.ld + c] = v;
+        // SAFETY: logical indices validated against the view's extent.
+        unsafe { *self.ptr.add(r * self.ld + c) = v }
     }
 
     /// Unchecked element read.
@@ -130,7 +158,7 @@ impl<'a> MatMut<'a> {
     /// Caller must guarantee `r < rows && c < cols`.
     #[inline(always)]
     pub unsafe fn get_unchecked(&self, r: usize, c: usize) -> f32 {
-        *self.data.get_unchecked(r * self.ld + c)
+        *self.ptr.add(r * self.ld + c)
     }
 
     /// Unchecked element write.
@@ -139,45 +167,90 @@ impl<'a> MatMut<'a> {
     /// Caller must guarantee `r < rows && c < cols`.
     #[inline(always)]
     pub unsafe fn set_unchecked(&mut self, r: usize, c: usize, v: f32) {
-        *self.data.get_unchecked_mut(r * self.ld + c) = v;
+        *self.ptr.add(r * self.ld + c) = v;
     }
 
     /// Mutable pointer to the start of row `r`.
     #[inline(always)]
     pub fn row_ptr_mut(&mut self, r: usize) -> *mut f32 {
         debug_assert!(r < self.rows);
-        unsafe { self.data.as_mut_ptr().add(r * self.ld) }
+        unsafe { self.ptr.add(r * self.ld) }
     }
 
     /// Reborrow as an immutable view.
+    ///
+    /// Must not be called while a sibling view (from
+    /// [`split_cols`](Self::split_cols)) is being written on another
+    /// thread: the returned slice spans the full backing range, padding
+    /// columns included.
     pub fn as_ref(&self) -> MatRef<'_> {
-        MatRef { data: self.data, rows: self.rows, cols: self.cols, ld: self.ld }
+        // SAFETY: the backing range was a valid &mut [f32] at construction
+        // and `&self` pauses this view's own writes for the borrow.
+        let data = unsafe { std::slice::from_raw_parts(self.ptr, self.len) };
+        MatRef { data, rows: self.rows, cols: self.cols, ld: self.ld }
     }
 
     /// Reborrow as a shorter-lived mutable view.
     pub fn reborrow(&mut self) -> MatMut<'_> {
-        MatMut { data: self.data, rows: self.rows, cols: self.cols, ld: self.ld }
+        MatMut { ptr: self.ptr, len: self.len, rows: self.rows, cols: self.cols, ld: self.ld, _marker: std::marker::PhantomData }
     }
 
     /// Split into two disjoint row ranges at row `r` (the matrix analogue
     /// of `split_at_mut`); used by the thread-parallel GEMM driver.
     pub fn split_rows(self, r: usize) -> (MatMut<'a>, MatMut<'a>) {
         assert!(r <= self.rows, "split row {r} > rows {}", self.rows);
-        let (top, bottom) = self.data.split_at_mut(r * self.ld);
+        // A tight last row may end before r*ld; clamp so the halves stay
+        // within the original backing range.
+        let off = (r * self.ld).min(self.len);
         (
-            MatMut { data: top, rows: r, cols: self.cols, ld: self.ld },
-            MatMut { data: bottom, rows: self.rows - r, cols: self.cols, ld: self.ld },
+            MatMut { ptr: self.ptr, len: off, rows: r, cols: self.cols, ld: self.ld, _marker: std::marker::PhantomData },
+            MatMut {
+                // SAFETY: off <= len, so the offset pointer stays in range.
+                ptr: unsafe { self.ptr.add(off) },
+                len: self.len - off,
+                rows: self.rows - r,
+                cols: self.cols,
+                ld: self.ld,
+                _marker: std::marker::PhantomData,
+            },
+        )
+    }
+
+    /// Split into two disjoint column ranges at column `c` (left keeps
+    /// columns `0..c`, right gets `c..cols`); used by the thread-parallel
+    /// GEMM driver's column split for skinny row spaces. The halves
+    /// interleave in storage (same rows, same stride) but their logical
+    /// elements are disjoint — the raw-pointer representation exists for
+    /// exactly this split.
+    pub fn split_cols(self, c: usize) -> (MatMut<'a>, MatMut<'a>) {
+        assert!(c <= self.cols, "split col {c} > cols {}", self.cols);
+        let off = c.min(self.len);
+        (
+            MatMut { ptr: self.ptr, len: self.len, rows: self.rows, cols: c, ld: self.ld, _marker: std::marker::PhantomData },
+            MatMut {
+                // SAFETY: off <= len, so the offset pointer stays in range.
+                ptr: unsafe { self.ptr.add(off) },
+                len: self.len - off,
+                rows: self.rows,
+                cols: self.cols - c,
+                ld: self.ld,
+                _marker: std::marker::PhantomData,
+            },
         )
     }
 
     /// Reborrow a mutable sub-view of `nr × nc` starting at `(r0, c0)`.
     pub fn block_mut(&mut self, r0: usize, c0: usize, nr: usize, nc: usize) -> MatMut<'_> {
         assert!(r0 + nr <= self.rows && c0 + nc <= self.cols, "block out of range");
+        let off = (r0 * self.ld + c0).min(self.len);
         MatMut {
-            data: &mut self.data[r0 * self.ld + c0..],
+            // SAFETY: off <= len, so the offset pointer stays in range.
+            ptr: unsafe { self.ptr.add(off) },
+            len: self.len - off,
             rows: nr,
             cols: nc,
             ld: self.ld,
+            _marker: std::marker::PhantomData,
         }
     }
 
@@ -189,11 +262,15 @@ impl<'a> MatMut<'a> {
             return;
         }
         for r in 0..self.rows {
-            let base = r * self.ld;
+            // SAFETY: row r's logical elements are contiguous and in
+            // bounds; &mut self holds off every other access to them.
+            let row = unsafe {
+                std::slice::from_raw_parts_mut(self.ptr.add(r * self.ld), self.cols)
+            };
             if beta == 0.0 {
-                self.data[base..base + self.cols].fill(0.0);
+                row.fill(0.0);
             } else {
-                for v in &mut self.data[base..base + self.cols] {
+                for v in row {
                     *v *= beta;
                 }
             }
@@ -313,7 +390,14 @@ impl Matrix {
 
     /// Mutable view of the whole matrix.
     pub fn view_mut(&mut self) -> MatMut<'_> {
-        MatMut { data: &mut self.data, rows: self.rows, cols: self.cols, ld: self.ld }
+        MatMut {
+            ptr: self.data.as_mut_ptr(),
+            len: self.data.len(),
+            rows: self.rows,
+            cols: self.cols,
+            ld: self.ld,
+            _marker: std::marker::PhantomData,
+        }
     }
 
     /// Logical transpose (materialised copy).
@@ -427,6 +511,56 @@ mod tests {
         let (top, bottom) = m.view_mut().split_rows(3);
         assert_eq!(top.rows(), 3);
         assert_eq!(bottom.rows(), 0);
+    }
+
+    #[test]
+    fn split_cols_disjoint_and_complete() {
+        let mut m = Matrix::from_fn(4, 6, |r, c| (r * 10 + c) as f32);
+        {
+            let v = m.view_mut();
+            let (mut left, mut right) = v.split_cols(2);
+            assert_eq!((left.rows(), left.cols()), (4, 2));
+            assert_eq!((right.rows(), right.cols()), (4, 4));
+            assert_eq!(left.get(3, 1), 31.0);
+            assert_eq!(right.get(0, 0), 2.0);
+            assert_eq!(right.get(3, 3), 35.0);
+            left.set(0, 0, -1.0);
+            right.set(3, 3, -2.0);
+        }
+        assert_eq!(m.get(0, 0), -1.0);
+        assert_eq!(m.get(3, 5), -2.0);
+        // Every other element untouched.
+        assert_eq!(m.get(2, 1), 21.0);
+        assert_eq!(m.get(2, 4), 24.0);
+    }
+
+    #[test]
+    fn split_cols_edges_and_strided() {
+        let mut m = Matrix::zeros(3, 4);
+        let (left, right) = m.view_mut().split_cols(0);
+        assert_eq!(left.cols(), 0);
+        assert_eq!(right.cols(), 4);
+        let (left, right) = m.view_mut().split_cols(4);
+        assert_eq!(left.cols(), 4);
+        assert_eq!(right.cols(), 0);
+        // Strided storage: the padding sentinel between logical columns
+        // and the stride tail must survive writes through both halves.
+        let mut s = Matrix::random_strided(3, 4, 7, 9);
+        {
+            let v = s.view_mut();
+            let (mut left, mut right) = v.split_cols(2);
+            for r in 0..3 {
+                left.set(r, 0, 1.0);
+                right.set(r, 1, 2.0);
+            }
+        }
+        for r in 0..3 {
+            assert_eq!(s.get(r, 0), 1.0);
+            assert_eq!(s.get(r, 3), 2.0);
+            for p in 4..7 {
+                assert_eq!(s.data()[r * 7 + p], -77.0, "stride padding clobbered");
+            }
+        }
     }
 
     #[test]

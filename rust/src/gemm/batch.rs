@@ -6,11 +6,13 @@
 //! packing and thread-spawn overhead per item; this driver amortises both:
 //!
 //! * **Shared-B fold**: when every item multiplies against the same `B`
-//!   (`strides.b == 0`) and the per-item `A`/`C` slabs tile contiguously,
-//!   the whole batch is folded into a single `(batch·m) × n × k` GEMM —
-//!   `B` is re-buffered once for the entire batch and the parallel driver
-//!   sees the full row space. This is exactly the im2col convolution
-//!   shape (`nn::conv::Conv2d::forward_batched`).
+//!   (`strides.b == 0`), `A` is un-transposed, and the per-item `A`/`C`
+//!   slabs tile contiguously, the whole batch is folded into a single
+//!   `(batch·m) × n × k` GEMM — `B` is re-buffered once for the entire
+//!   batch and the parallel driver sees the full row space. This is
+//!   exactly the im2col convolution shape
+//!   (`nn::conv::Conv2d::forward_batched`), and with `transb == Yes` the
+//!   backprop-shaped `dH = dZ · Wᵀ` batch folds too.
 //! * **Per-item fan-out**: otherwise items are distributed over the
 //!   dispatcher's worker threads; each worker reuses one packing
 //!   [`Scratch`] across all of its items, so buffers are allocated once
@@ -151,16 +153,18 @@ pub(crate) fn gemm_batch_on(
         return Ok(());
     }
 
-    // ---- Shared-B fold: one GEMM over the stacked row space. ----
+    // ---- Shared-B fold: one GEMM over the stacked row space. A must be
+    // un-transposed (items stack along rows of op(A)); B may be logically
+    // transposed — transb passes straight through, and the dispatcher's
+    // parallel tier is layout-complete. ----
     let foldable = transa == Transpose::No
-        && transb == Transpose::No
         && strides.b == 0
         && strides.a == m * lda
         && strides.c == m * ldc;
     if foldable {
         let rows = batch * m;
         let a_all = MatRef::new(a, rows, k, lda).expect("validated");
-        let b_one = MatRef::new(b, k, n, ldb).expect("validated");
+        let b_one = MatRef::new(b, br, bc, ldb).expect("validated");
         let mut c_all = MatMut::new(c, rows, n, ldc).expect("validated");
         match forced {
             Some(id) => d.gemm_with_on(pool, id, transa, transb, alpha, a_all, b_one, beta, &mut c_all),
@@ -459,6 +463,25 @@ mod tests {
             (k, n, n),
             0x5B0F,
             "shared-B fold",
+        );
+    }
+
+    #[test]
+    fn shared_transposed_b_folds_and_matches() {
+        // transb = Yes no longer blocks the fold: B stored n×k, shared by
+        // every item (the dH = dZ·Wᵀ backprop shape).
+        let d = GemmDispatch::default();
+        let (m, n, k) = (6usize, 10usize, 8usize);
+        check_batch(
+            &d,
+            Transpose::No,
+            Transpose::Yes,
+            (m, n, k),
+            4,
+            BatchStrides { a: m * k, b: 0, c: m * n },
+            (k, k, n),
+            0x5B1F,
+            "shared-Bᵀ fold",
         );
     }
 

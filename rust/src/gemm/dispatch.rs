@@ -9,8 +9,12 @@
 //!
 //! * **tiny problems** go to the naive triple loop (packing and blocking
 //!   overhead would dominate),
-//! * **large no-transpose problems** go to the thread-parallel driver
-//!   (row-sliced over the widest available serial kernel),
+//! * **large problems in any layout** go to the thread-parallel driver
+//!   (row- or column-sliced over the widest available serial kernel; each
+//!   slice packs its own transposed panels, so TN/NT/TT parallelise too,
+//!   and `m == 1` splits over columns instead of falling to one thread),
+//! * **pure beta-scales** (`alpha == 0` or `k == 0`) of a large `C` sweep
+//!   it over the shared pool; small ones stay on the naive loop,
 //! * **huge square-ish no-transpose problems on a single-threaded
 //!   config** go to Strassen–Winograd (the asymptotic win above the
 //!   crossover the `strassen_crossover` bench measures; with threads
@@ -43,7 +47,8 @@ pub enum KernelId {
     Simd,
     /// Emmerald AVX2 + FMA.
     Avx2,
-    /// Thread-parallel row-sliced driver over the widest vector kernel.
+    /// Thread-parallel driver over the widest vector kernel: row- or
+    /// column-sliced, layout-complete (each slice packs its own panels).
     Parallel,
     /// Strassen–Winograd recursion with an Emmerald base case.
     Strassen,
@@ -183,6 +188,10 @@ pub struct DispatchConfig {
     /// Minimum `2MNK` flops before the thread-parallel driver is worth its
     /// spawn/join overhead (given more than one thread).
     pub parallel_min_flops: f64,
+    /// Minimum `C` elements (`m·n`) before a pure beta-scale (`alpha == 0`
+    /// or `k == 0`) is worth sweeping over the worker pool instead of the
+    /// serial naive loop.
+    pub parallel_min_scale: usize,
     /// Minimum smallest-dimension before Strassen–Winograd beats the
     /// blocked SIMD kernel's constant factor (the crossover question the
     /// paper left open; `strassen_crossover` measures it empirically).
@@ -206,6 +215,9 @@ impl Default for DispatchConfig {
             // The 2MNK flop count of one 256³ GEMM; below this a serial
             // vector kernel finishes before threads are even scheduled.
             parallel_min_flops: 2.0 * 256.0 * 256.0 * 256.0,
+            // A 1Mi-element C (≈4 MB): below this a beta-scale is a
+            // cache-speed sweep not worth the pool fork-join.
+            parallel_min_scale: 1 << 20,
             strassen_min_dim: 1024,
             strassen_cutoff: strassen::DEFAULT_CUTOFF,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
@@ -312,22 +324,39 @@ impl GemmDispatch {
 
     /// Pick a kernel for one call. Pure function of (shape, alpha, config,
     /// CPU features): the selected kernel is always available and always
-    /// supports the call (transposed operands never select
-    /// `Parallel`/`Strassen`).
+    /// supports the call. Any transa/transb combination may select
+    /// `Parallel` (each slice packs its own transposed panels); only
+    /// `Strassen` stays no-transpose-only.
     pub fn select(&self, shape: &GemmShape, alpha: f32) -> KernelId {
         let serial = self.select_serial(shape, alpha);
-        if serial == KernelId::Naive || serial == KernelId::Blocked || !shape.no_trans() {
+        // Pure beta-scale: no kernel work at all, but a huge C is still
+        // worth sweeping over the pool instead of one thread.
+        if alpha == 0.0 || shape.k == 0 {
+            if self.have_sse
+                && self.threads() > 1
+                && shape.m.max(shape.n) >= 2
+                && shape.m.saturating_mul(shape.n) >= self.cfg.parallel_min_scale
+            {
+                return KernelId::Parallel;
+            }
             return serial;
         }
-        // Parallel outranks Strassen whenever threads exist: row-slicing
+        if serial == KernelId::Naive || serial == KernelId::Blocked {
+            return serial;
+        }
+        // Parallel outranks Strassen whenever threads exist: slicing
         // scales near-linearly at full vector-kernel precision, while the
         // serial Strassen recursion only shaves ~23% of flops per level
         // and costs ~1 bit of f32 accuracy each level. Strassen is the
-        // single-threaded big-problem tier.
-        if self.threads() > 1 && shape.m >= 2 && shape.flops() >= self.cfg.parallel_min_flops {
+        // single-threaded big-problem tier. m == 1 splits over columns,
+        // so only a 1×1 output is unsplittable.
+        if self.threads() > 1
+            && shape.m.max(shape.n) >= 2
+            && shape.flops() >= self.cfg.parallel_min_flops
+        {
             return KernelId::Parallel;
         }
-        if self.threads() <= 1 && shape.min_dim() >= self.cfg.strassen_min_dim {
+        if self.threads() <= 1 && shape.no_trans() && shape.min_dim() >= self.cfg.strassen_min_dim {
             return KernelId::Strassen;
         }
         serial
@@ -372,9 +401,10 @@ impl GemmDispatch {
 
     /// Run one GEMM on a *specific* kernel (the conformance suite drives
     /// every registry entry through this). Calls a kernel cannot express —
-    /// transposed operands for `Parallel`/`Strassen`, a vector kernel on a
-    /// CPU without the ISA — degrade to the best serial kernel so the call
-    /// always completes. Returns the kernel that actually ran.
+    /// transposed operands for `Strassen`, an unsplittable output for
+    /// `Parallel`, a vector kernel on a CPU without the ISA — degrade to
+    /// the best serial kernel so the call always completes. Returns the
+    /// kernel that actually ran.
     #[allow(clippy::too_many_arguments)]
     pub fn gemm_with(
         &self,
@@ -448,10 +478,13 @@ impl GemmDispatch {
                 KernelId::Avx2
             }
             KernelId::Parallel => {
-                // Mirror gemm_parallel_vec's internal serial fallback so
-                // the returned id names the kernel that actually ran.
-                let usable_threads = self.threads().min(shape.m.max(1));
-                if !shape.no_trans() || !self.have_sse || usable_threads <= 1 || shape.m < 2 {
+                // Mirror gemm_parallel_vec's internal fallbacks so the
+                // returned id names the kernel that actually ran. A pure
+                // beta-scale needs no vector ISA (the sweep touches no
+                // kernel); compute does.
+                let pure_scale = alpha == 0.0 || shape.k == 0;
+                let split = parallel::split_axis(shape.m, shape.n, self.threads());
+                if split == parallel::Split::Serial || (!pure_scale && !self.have_sse) {
                     return self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c);
                 }
                 let (isa, params) = match self.best_serial_vector() {
@@ -463,6 +496,8 @@ impl GemmDispatch {
                     pool,
                     self.threads(),
                     params,
+                    transa,
+                    transb,
                     alpha,
                     a,
                     b,
@@ -687,27 +722,68 @@ mod tests {
         // Tiny → naive, regardless of transposes.
         assert_eq!(d.select(&shape(4, 8, 2, Transpose::No, Transpose::No), 1.0), KernelId::Naive);
         assert_eq!(d.select(&shape(8, 8, 8, Transpose::Yes, Transpose::No), 1.0), KernelId::Naive);
-        // alpha == 0 / k == 0 are pure beta-scales.
+        // alpha == 0 / k == 0 are pure beta-scales: naive below the scale
+        // threshold, the parallel sweep above it.
         assert_eq!(d.select(&shape(500, 500, 500, Transpose::No, Transpose::No), 0.0), KernelId::Naive);
         assert_eq!(d.select(&shape(500, 500, 0, Transpose::No, Transpose::No), 1.0), KernelId::Naive);
+        assert_eq!(d.select(&shape(2048, 2048, 0, Transpose::No, Transpose::No), 1.0), KernelId::Parallel);
+        assert_eq!(d.select(&shape(1200, 1200, 64, Transpose::No, Transpose::No), 0.0), KernelId::Parallel);
         // Mid-size → the serial vector kernel.
         assert_eq!(d.select(&shape(32, 32, 32, Transpose::No, Transpose::No), 1.0), serial);
-        // Large no-transpose → parallel (outranks strassen when threaded).
+        // Large → parallel (outranks strassen when threaded).
         assert_eq!(d.select(&shape(128, 128, 128, Transpose::No, Transpose::No), 1.0), KernelId::Parallel);
         assert_eq!(d.select(&shape(300, 300, 300, Transpose::No, Transpose::No), 1.0), KernelId::Parallel);
-        // Huge no-transpose on a single-threaded config → strassen.
+        // Huge no-transpose on a single-threaded config → strassen;
+        // transposed stays on the serial vector kernel there.
         let d1 = GemmDispatch::new(DispatchConfig { threads: 1, ..cfg });
         assert_eq!(d1.select(&shape(300, 300, 300, Transpose::No, Transpose::No), 1.0), KernelId::Strassen);
-        // Single-row output cannot row-split → serial even above threshold.
-        assert_eq!(d.select(&shape(1, 512, 512, Transpose::No, Transpose::No), 1.0), serial);
-        // Transposed operands never select parallel/strassen.
-        assert_eq!(d.select(&shape(300, 300, 300, Transpose::Yes, Transpose::No), 1.0), serial);
-        assert_eq!(d.select(&shape(128, 128, 128, Transpose::No, Transpose::Yes), 1.0), serial);
+        assert_eq!(d1.select(&shape(300, 300, 300, Transpose::Yes, Transpose::No), 1.0), serial);
+        // Single-row output splits over columns → still parallel.
+        assert_eq!(d.select(&shape(1, 512, 512, Transpose::No, Transpose::No), 1.0), KernelId::Parallel);
+        // A 1×1 output has nothing to split.
+        assert_eq!(d.select(&shape(1, 1, 100_000_000, Transpose::No, Transpose::No), 1.0), serial);
+        // Transposed operands parallelise too (pack-on-split).
+        assert_eq!(d.select(&shape(300, 300, 300, Transpose::Yes, Transpose::No), 1.0), KernelId::Parallel);
+        assert_eq!(d.select(&shape(128, 128, 128, Transpose::No, Transpose::Yes), 1.0), KernelId::Parallel);
+        assert_eq!(d.select(&shape(128, 128, 128, Transpose::Yes, Transpose::Yes), 1.0), KernelId::Parallel);
         // Selected kernels are always available.
         for &(m, n, k) in &[(4usize, 4usize, 4usize), (64, 64, 64), (300, 300, 300)] {
             let id = d.select(&shape(m, n, k, Transpose::No, Transpose::No), 1.0);
             assert!(id.available(), "selected unavailable kernel {id:?}");
         }
+    }
+
+    #[test]
+    fn parallel_beta_scale_matches_naive() {
+        if !detect_sse() {
+            eprintln!("SKIP: no SSE — the parallel scale sweep is gated on the parallel tier");
+            return;
+        }
+        let cfg = DispatchConfig {
+            threads: 3,
+            parallel_min_scale: 64,
+            ..DispatchConfig::default()
+        };
+        let d = GemmDispatch::new(cfg);
+        let (m, n, k) = (20usize, 10usize, 5usize);
+        let shape = GemmShape { m, n, k, transa: Transpose::No, transb: Transpose::No };
+        assert_eq!(d.select(&shape, 0.0), KernelId::Parallel);
+        let a = Matrix::random(m, k, 1, -1.0, 1.0);
+        let b = Matrix::random(k, n, 2, -1.0, 1.0);
+        let mut c_got = Matrix::from_fn(m, n, |r, col| (r * n + col) as f32);
+        let mut c_ref = c_got.clone();
+        let (ta, tb) = no_no();
+        let ran = d.gemm(ta, tb, 0.0, a.view(), b.view(), 0.5, &mut c_got.view_mut());
+        assert_eq!(ran, KernelId::Parallel);
+        naive::gemm(ta, tb, 0.0, a.view(), b.view(), 0.5, &mut c_ref.view_mut());
+        assert_eq!(c_got.data(), c_ref.data(), "beta-scale must be exact");
+        // k == 0 takes the same path with empty operands.
+        let a0 = Matrix::zeros(m, 0);
+        let b0 = Matrix::zeros(0, n);
+        let ran = d.gemm(ta, tb, 1.0, a0.view(), b0.view(), 2.0, &mut c_got.view_mut());
+        assert_eq!(ran, KernelId::Parallel);
+        c_ref.view_mut().scale(2.0);
+        assert_eq!(c_got.data(), c_ref.data());
     }
 
     #[test]

@@ -1,27 +1,173 @@
 //! Thread-parallel GEMM driver.
 //!
 //! The paper scaled across nodes (196 PIIIs, one process per CPU);
-//! the modern single-box analogue is thread parallelism over row blocks
-//! of `C`. Each worker runs the same Emmerald driver on an `m/t`-row
-//! horizontal slice — slices write disjoint rows of `C`, so no
-//! synchronisation is needed beyond the final join. `B` is shared
-//! read-only (each worker re-packs its own panels, like each cluster node
-//! did; [`crate::gemm::plan::GemmPlan::run_packed_b`] removes even that).
+//! the modern single-box analogue is thread parallelism over slices of
+//! `C`. The tier is **layout-complete**: every transa/transb combination
+//! parallelises, because each worker runs the same Emmerald driver on its
+//! slice and that driver packs its own transposed panels — pack-on-split,
+//! the composition Benson & Ballard showed beats bolting threads onto an
+//! unpacked sweep. Two split axes:
+//!
+//! * **Row split** (the default when `op(A)` has at least one row per
+//!   worker): each worker takes an `m/t`-row horizontal slice of `C` and
+//!   the matching rows of `op(A)`; `B` is shared read-only.
+//! * **Column split** (skinny row spaces — `m == 1`, or fewer rows than
+//!   workers with a wider column space): each worker takes an `n/t`-column
+//!   vertical slice of `C` and the matching columns of `op(B)`; `A` is
+//!   shared read-only.
+//!
+//! Slices write disjoint elements of `C` ([`crate::blas::MatMut`]'s
+//! raw-pointer representation makes the interleaved column split
+//! expressible), so no synchronisation is needed beyond the final join.
+//! [`split_axis`] is the single source of the split policy — the prepacked
+//! planned paths ([`crate::gemm::plan::GemmPlan::run_packed_b`] /
+//! [`crate::gemm::plan::GemmPlan::run_packed`]) choose their axis through
+//! it too. Results are bit-identical to the serial driver for any split:
+//! each `C` element's dot products accumulate in the same order whichever
+//! slice it lands in.
 //!
 //! Execution happens on the shared [`crate::gemm::plan::GemmContext`]
 //! worker pool (fork-join with the caller participating), so the parallel
 //! tier draws from the single process-wide thread budget instead of
-//! spawning and joining its own threads per call.
+//! spawning and joining its own threads per call. Pure beta-scales
+//! (`alpha == 0` or `k == 0`) sweep `C` over the same pool.
 
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
 use crate::gemm::simd::{gemm_vec, VecIsa};
 use crate::gemm::BlockParams;
 use crate::util::threadpool::{run_borrowed_on, ThreadPool};
 
-/// `C = alpha · A·B + beta · C` split over up to `threads` row slices on
-/// the process-wide worker pool (no-transpose operands; the coordinator's
-/// training path never needs transposed parallel GEMM — transposes are
-/// handled by the serial API).
+/// Which axis of `C` the parallel tier splits, and into how many slices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Split {
+    /// No exploitable parallelism (one thread, or a 1×1 output).
+    Serial,
+    /// Horizontal slices: rows of `C` + matching rows of `op(A)`.
+    Rows(usize),
+    /// Vertical slices: columns of `C` + matching columns of `op(B)`.
+    Cols(usize),
+}
+
+/// The parallel tier's split policy — the single decision point shared by
+/// the packing driver ([`gemm_parallel_vec`]) and the prepacked planned
+/// paths, so every parallel execution of one problem slices the same way.
+///
+/// Rows win whenever they can feed every worker (better locality: `B`
+/// panels are reused across a worker's whole row slice); skinny row
+/// spaces fall over to the column split instead of dropping threads.
+pub(crate) fn split_axis(m: usize, n: usize, threads: usize) -> Split {
+    let t = threads.max(1);
+    if t <= 1 || m.max(n) < 2 {
+        return Split::Serial;
+    }
+    if m >= t {
+        return Split::Rows(t);
+    }
+    if n > m {
+        return Split::Cols(t.min(n));
+    }
+    Split::Rows(t.min(m))
+}
+
+/// Split `0..len` into at most `slices` contiguous spans `(start, len)`
+/// whose starts are multiples of `align` (the final span absorbs the
+/// fringe). `align == 1` reproduces the tier's classic ceil-divide row
+/// split; the prepacked paths pass the block granule (`mb` rows / `nr`
+/// columns) because a packed block is indivisible.
+pub(crate) fn chunk_spans(len: usize, slices: usize, align: usize) -> Vec<(usize, usize)> {
+    let align = align.max(1);
+    let per = len.div_ceil(slices.max(1)).div_ceil(align) * align;
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < len {
+        let span = per.min(len - start);
+        out.push((start, span));
+        start += span;
+    }
+    out
+}
+
+/// Split `C` into up to `slices` disjoint row slices (starts aligned to
+/// `align`), each paired with its start row.
+pub(crate) fn c_row_slices(c: MatMut<'_>, slices: usize, align: usize) -> Vec<(usize, MatMut<'_>)> {
+    let m = c.rows();
+    let mut out = Vec::new();
+    let mut rest = c;
+    for (r0, rows) in chunk_spans(m, slices, align) {
+        let (top, bottom) = rest.split_rows(rows);
+        out.push((r0, top));
+        rest = bottom;
+    }
+    out
+}
+
+/// Split `C` into up to `slices` disjoint column slices (starts aligned to
+/// `align`), each paired with its start column.
+pub(crate) fn c_col_slices(c: MatMut<'_>, slices: usize, align: usize) -> Vec<(usize, MatMut<'_>)> {
+    let n = c.cols();
+    let mut out = Vec::new();
+    let mut rest = c;
+    for (c0, cols) in chunk_spans(n, slices, align) {
+        let (left, right) = rest.split_cols(cols);
+        out.push((c0, left));
+        rest = right;
+    }
+    out
+}
+
+/// Rows `r0 .. r0+rows` of `op(A)` as a view of the *stored* matrix
+/// (columns of storage when `A` is logically transposed).
+fn op_a_rows<'a>(a: MatRef<'a>, transa: Transpose, r0: usize, rows: usize) -> MatRef<'a> {
+    match transa {
+        Transpose::No => a.block(r0, 0, rows, a.cols()),
+        Transpose::Yes => a.block(0, r0, a.rows(), rows),
+    }
+}
+
+/// Columns `c0 .. c0+cols` of `op(B)` as a view of the *stored* matrix
+/// (rows of storage when `B` is logically transposed).
+fn op_b_cols<'a>(b: MatRef<'a>, transb: Transpose, c0: usize, cols: usize) -> MatRef<'a> {
+    match transb {
+        Transpose::No => b.block(0, c0, b.rows(), cols),
+        Transpose::Yes => b.block(c0, 0, cols, b.cols()),
+    }
+}
+
+/// Row slices of `C` paired with the matching rows of `op(A)` — the
+/// row-split work list (shared with
+/// [`crate::gemm::plan::GemmPlan::run_packed_b`], which is what keeps the
+/// prepacked parallel runs bit-identical to this driver's).
+pub(crate) fn row_slices<'a>(
+    a: MatRef<'a>,
+    transa: Transpose,
+    c: MatMut<'a>,
+    slices: usize,
+    align: usize,
+) -> Vec<(usize, MatRef<'a>, MatMut<'a>)> {
+    c_row_slices(c, slices, align)
+        .into_iter()
+        .map(|(r0, cs)| (r0, op_a_rows(a, transa, r0, cs.rows()), cs))
+        .collect()
+}
+
+/// Column slices of `C` paired with the matching columns of `op(B)` — the
+/// column-split twin of [`row_slices`].
+pub(crate) fn col_slices<'a>(
+    b: MatRef<'a>,
+    transb: Transpose,
+    c: MatMut<'a>,
+    slices: usize,
+    align: usize,
+) -> Vec<(usize, MatRef<'a>, MatMut<'a>)> {
+    c_col_slices(c, slices, align)
+        .into_iter()
+        .map(|(c0, cs)| (c0, op_b_cols(b, transb, c0, cs.cols()), cs))
+        .collect()
+}
+
+/// `C = alpha · A·B + beta · C` split over up to `threads` slices on the
+/// process-wide worker pool (no-transpose convenience wrapper; the
+/// dispatch layer routes transposed calls through [`gemm_parallel_vec`]).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_parallel(
     threads: usize,
@@ -32,19 +178,35 @@ pub fn gemm_parallel(
     beta: f32,
     c: &mut MatMut<'_>,
 ) -> Result<(), BlasError> {
-    gemm_parallel_vec(VecIsa::Sse, crate::gemm::plan::global_pool(), threads, params, alpha, a, b, beta, c)
+    gemm_parallel_vec(
+        VecIsa::Sse,
+        crate::gemm::plan::global_pool(),
+        threads,
+        params,
+        Transpose::No,
+        Transpose::No,
+        alpha,
+        a,
+        b,
+        beta,
+        c,
+    )
 }
 
-/// ISA- and pool-parameterised variant: the dispatch layer routes here
-/// with AVX2 when the host supports it and with the active context's
+/// ISA-, layout- and pool-parameterised driver: the dispatch layer routes
+/// here with AVX2 when the host supports it and with the active context's
 /// worker pool, so every slice runs the widest kernel inside the shared
-/// thread budget. `pool: None` degrades to a serial sweep of the slices.
+/// thread budget. All four transa/transb combinations are supported —
+/// each slice's serial driver packs its own transposed panels. `pool:
+/// None` degrades to a serial sweep of the slices.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_parallel_vec(
     isa: VecIsa,
     pool: Option<&ThreadPool>,
     threads: usize,
     params: &BlockParams,
+    transa: Transpose,
+    transb: Transpose,
     alpha: f32,
     a: MatRef<'_>,
     b: MatRef<'_>,
@@ -53,64 +215,94 @@ pub(crate) fn gemm_parallel_vec(
 ) -> Result<(), BlasError> {
     let m = c.rows();
     let n = c.cols();
-    let k = a.cols();
-    if a.rows() != m || b.rows() != k || b.cols() != n {
-        return Err(BlasError::DimMismatch { m, n, k, other_k: b.rows() });
+    // k is read off op(A), so A can only mismatch on m; each check below
+    // names the operand/dimension that actually disagreed.
+    let k = match transa {
+        Transpose::No => a.cols(),
+        Transpose::Yes => a.rows(),
+    };
+    let a_m = match transa {
+        Transpose::No => a.rows(),
+        Transpose::Yes => a.cols(),
+    };
+    if a_m != m {
+        let expect = match transa {
+            Transpose::No => (m, k),
+            Transpose::Yes => (k, m),
+        };
+        return Err(BlasError::ShapeMismatch { what: "A", expect, got: (a.rows(), a.cols()) });
     }
-    let threads = threads.max(1).min(m.max(1));
-    if threads == 1 || m < 2 {
-        gemm_vec(isa, params, Transpose::No, Transpose::No, alpha, a, b, beta, c);
+    let (b_k, b_n) = match transb {
+        Transpose::No => (b.rows(), b.cols()),
+        Transpose::Yes => (b.cols(), b.rows()),
+    };
+    if b_n != n {
+        let expect = match transb {
+            Transpose::No => (k, n),
+            Transpose::Yes => (n, k),
+        };
+        return Err(BlasError::ShapeMismatch { what: "B", expect, got: (b.rows(), b.cols()) });
+    }
+    if b_k != k {
+        return Err(BlasError::DimMismatch { m, n, k, other_k: b_k });
+    }
+    if m == 0 || n == 0 {
         return Ok(());
     }
 
-    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = row_slices(a, c.reborrow(), threads)
-        .into_iter()
-        .map(|(a_slice, mut c_slice)| {
-            let params = *params;
-            Box::new(move || {
-                gemm_vec(
-                    isa,
-                    &params,
-                    Transpose::No,
-                    Transpose::No,
-                    alpha,
-                    a_slice,
-                    b,
-                    beta,
-                    &mut c_slice,
-                );
-            }) as Box<dyn FnOnce() + Send + '_>
-        })
-        .collect();
-    run_borrowed_on(pool, jobs);
-    Ok(())
-}
+    let split = split_axis(m, n, threads);
 
-/// Split `C` (and the matching row blocks of `A`) into up to `threads`
-/// disjoint row slices via the safe `MatMut::split_rows` (the matrix
-/// analogue of `split_at_mut`). The single source of the parallel tier's
-/// split policy — the prepacked planned path
-/// ([`crate::gemm::plan::GemmPlan::run_packed_b`]) slices through here
-/// too, which is what keeps its results bit-identical to this driver's.
-pub(crate) fn row_slices<'a>(
-    a: MatRef<'a>,
-    c: MatMut<'a>,
-    threads: usize,
-) -> Vec<(MatRef<'a>, MatMut<'a>)> {
-    let m = c.rows();
-    let k = a.cols();
-    let rows_per = m.div_ceil(threads.max(1));
-    let mut out = Vec::with_capacity(threads);
-    let mut rest = c;
-    let mut r0 = 0;
-    while r0 < m {
-        let rows = rows_per.min(m - r0);
-        let (top, bottom) = rest.split_rows(rows);
-        out.push((a.block(r0, 0, rows, k), top));
-        rest = bottom;
-        r0 += rows;
+    // Pure beta-scale: no kernel work — sweep C's slices over the pool.
+    if alpha == 0.0 || k == 0 {
+        match split {
+            Split::Serial => c.scale(beta),
+            Split::Rows(t) | Split::Cols(t) => {
+                let by_rows = matches!(split, Split::Rows(_));
+                let slices = if by_rows {
+                    c_row_slices(c.reborrow(), t, 1)
+                } else {
+                    c_col_slices(c.reborrow(), t, 1)
+                };
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slices
+                    .into_iter()
+                    .map(|(_, mut cs)| {
+                        Box::new(move || cs.scale(beta)) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                run_borrowed_on(pool, jobs);
+            }
+        }
+        return Ok(());
     }
-    out
+
+    match split {
+        Split::Serial => gemm_vec(isa, params, transa, transb, alpha, a, b, beta, c),
+        Split::Rows(t) => {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = row_slices(a, transa, c.reborrow(), t, 1)
+                .into_iter()
+                .map(|(_, a_slice, mut c_slice)| {
+                    let params = *params;
+                    Box::new(move || {
+                        gemm_vec(isa, &params, transa, transb, alpha, a_slice, b, beta, &mut c_slice);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            run_borrowed_on(pool, jobs);
+        }
+        Split::Cols(t) => {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = col_slices(b, transb, c.reborrow(), t, 1)
+                .into_iter()
+                .map(|(_, b_slice, mut c_slice)| {
+                    let params = *params;
+                    Box::new(move || {
+                        gemm_vec(isa, &params, transa, transb, alpha, a, b_slice, beta, &mut c_slice);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            run_borrowed_on(pool, jobs);
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -139,6 +331,38 @@ mod tests {
         assert_allclose(c.data(), c_ref.data(), 5e-4, 1e-4, &format!("parallel t={threads} {m}x{n}x{k}"));
     }
 
+    /// All four layouts vs the naive oracle, on strided operands.
+    fn check_layout(threads: usize, transa: Transpose, transb: Transpose, m: usize, n: usize, k: usize) {
+        let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+        let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+        let a = Matrix::random_strided(ar, ac, ac + 3, 7);
+        let b = Matrix::random_strided(br, bc, bc + 1, 8);
+        let mut c = Matrix::random_strided(m, n, n + 2, 9);
+        let mut c_ref = c.clone();
+        gemm_parallel_vec(
+            VecIsa::Sse,
+            crate::gemm::plan::global_pool(),
+            threads,
+            &BlockParams::emmerald_sse(),
+            transa,
+            transb,
+            0.75,
+            a.view(),
+            b.view(),
+            0.5,
+            &mut c.view_mut(),
+        )
+        .unwrap();
+        crate::gemm::naive::gemm(transa, transb, 0.75, a.view(), b.view(), 0.5, &mut c_ref.view_mut());
+        assert_allclose(
+            c.data(),
+            c_ref.data(),
+            5e-4,
+            1e-4,
+            &format!("parallel t={threads} {m}x{n}x{k} ta={transa:?} tb={transb:?}"),
+        );
+    }
+
     #[test]
     fn matches_serial_various_thread_counts() {
         for threads in [1usize, 2, 3, 4, 7] {
@@ -153,24 +377,148 @@ mod tests {
 
     #[test]
     fn single_row() {
+        // m == 1 takes the column split instead of running serial.
         check(4, 1, 33, 21);
     }
 
     #[test]
-    fn dim_mismatch_rejected() {
-        let a = Matrix::zeros(4, 5);
-        let b = Matrix::zeros(6, 3); // k mismatch
+    fn all_layouts_row_and_column_split() {
+        for ta in [Transpose::No, Transpose::Yes] {
+            for tb in [Transpose::No, Transpose::Yes] {
+                check_layout(3, ta, tb, 37, 29, 41); // row split
+                check_layout(4, ta, tb, 1, 53, 19); // column split (m == 1)
+                check_layout(8, ta, tb, 3, 61, 23); // column split (m < t)
+            }
+        }
+    }
+
+    #[test]
+    fn bit_identical_to_serial_driver_for_every_split() {
+        // The split-invariance claim the prepacked paths rely on: any
+        // row/column split produces exactly the serial driver's bits.
+        let p = BlockParams::emmerald_sse();
+        for (ta, tb) in [
+            (Transpose::No, Transpose::No),
+            (Transpose::Yes, Transpose::No),
+            (Transpose::No, Transpose::Yes),
+            (Transpose::Yes, Transpose::Yes),
+        ] {
+            for &(m, n, k) in &[(23usize, 17usize, 31usize), (1, 40, 13), (5, 48, 9)] {
+                let (ar, ac) = if ta == Transpose::No { (m, k) } else { (k, m) };
+                let (br, bc) = if tb == Transpose::No { (k, n) } else { (n, k) };
+                let a = Matrix::random(ar, ac, 21, -1.0, 1.0);
+                let b = Matrix::random(br, bc, 22, -1.0, 1.0);
+                let c0 = Matrix::random(m, n, 23, -1.0, 1.0);
+                let mut c_serial = c0.clone();
+                gemm_vec(VecIsa::Sse, &p, ta, tb, 0.5, a.view(), b.view(), 1.25, &mut c_serial.view_mut());
+                for threads in [2usize, 3, 7] {
+                    let mut c_par = c0.clone();
+                    gemm_parallel_vec(
+                        VecIsa::Sse,
+                        crate::gemm::plan::global_pool(),
+                        threads,
+                        &p,
+                        ta,
+                        tb,
+                        0.5,
+                        a.view(),
+                        b.view(),
+                        1.25,
+                        &mut c_par.view_mut(),
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        c_par.data(),
+                        c_serial.data(),
+                        "split must be bit-identical to serial (t={threads} {m}x{n}x{k} ta={ta:?} tb={tb:?})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_axis_policy() {
+        assert_eq!(split_axis(64, 64, 1), Split::Serial);
+        assert_eq!(split_axis(1, 1, 8), Split::Serial);
+        assert_eq!(split_axis(64, 64, 4), Split::Rows(4));
+        assert_eq!(split_axis(1, 4096, 8), Split::Cols(8));
+        assert_eq!(split_axis(3, 512, 8), Split::Cols(8));
+        assert_eq!(split_axis(4096, 1, 8), Split::Rows(8));
+        assert_eq!(split_axis(3, 2, 8), Split::Rows(3));
+        assert_eq!(split_axis(1, 3, 8), Split::Cols(3));
+    }
+
+    #[test]
+    fn chunk_spans_cover_and_align() {
+        assert_eq!(chunk_spans(10, 3, 1), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(chunk_spans(512, 8, 128), vec![(0, 128), (128, 128), (256, 128), (384, 128)]);
+        assert_eq!(chunk_spans(300, 4, 128), vec![(0, 128), (128, 128), (256, 44)]);
+        assert_eq!(chunk_spans(0, 4, 16), vec![]);
+        assert_eq!(chunk_spans(5, 8, 1), vec![(0, 1), (1, 1), (2, 1), (3, 1), (4, 1)]);
+    }
+
+    #[test]
+    fn pure_beta_scale_runs_parallel_and_respects_padding() {
+        // alpha == 0: parallel sweep must scale the logical area only.
+        let (m, n, k) = (9usize, 7usize, 5usize);
+        let a = Matrix::random(m, k, 1, -1.0, 1.0);
+        let b = Matrix::random(k, n, 2, -1.0, 1.0);
+        let mut c = Matrix::random_strided(m, n, n + 3, 5);
+        let expect = Matrix::from_fn(m, n, |r, j| c.get(r, j) * 2.0);
+        gemm_parallel(4, &BlockParams::emmerald_sse(), 0.0, a.view(), b.view(), 2.0, &mut c.view_mut())
+            .unwrap();
+        for r in 0..m {
+            for j in 0..n {
+                assert_eq!(c.get(r, j), expect.get(r, j), "scaled value at ({r},{j})");
+            }
+            for p in n..n + 3 {
+                assert_eq!(c.data()[r * (n + 3) + p], -77.0, "padding clobbered at row {r}");
+            }
+        }
+        // k == 0 likewise (empty operands).
+        let a0 = Matrix::zeros(m, 0);
+        let b0 = Matrix::zeros(0, n);
+        let mut c0 = Matrix::from_fn(m, n, |_, _| 3.0);
+        gemm_parallel(4, &BlockParams::emmerald_sse(), 1.0, a0.view(), b0.view(), 0.5, &mut c0.view_mut())
+            .unwrap();
+        assert!(c0.data().iter().all(|&x| x == 1.5));
+    }
+
+    #[test]
+    fn mismatched_a_rows_reports_a() {
+        let a = Matrix::zeros(3, 5); // op(A) rows 3 != m 4
+        let b = Matrix::zeros(5, 3);
         let mut c = Matrix::zeros(4, 3);
-        let err = gemm_parallel(
-            2,
-            &BlockParams::emmerald_sse(),
-            1.0,
-            a.view(),
-            b.view(),
-            0.0,
-            &mut c.view_mut(),
+        let err = gemm_parallel(2, &BlockParams::emmerald_sse(), 1.0, a.view(), b.view(), 0.0, &mut c.view_mut());
+        assert!(
+            matches!(err, Err(BlasError::ShapeMismatch { what: "A", expect: (4, 5), got: (3, 5) })),
+            "{err:?}"
         );
-        assert!(err.is_err());
+    }
+
+    #[test]
+    fn mismatched_b_cols_reports_b() {
+        let a = Matrix::zeros(4, 5);
+        let b = Matrix::zeros(5, 7); // op(B) cols 7 != n 3
+        let mut c = Matrix::zeros(4, 3);
+        let err = gemm_parallel(2, &BlockParams::emmerald_sse(), 1.0, a.view(), b.view(), 0.0, &mut c.view_mut());
+        assert!(
+            matches!(err, Err(BlasError::ShapeMismatch { what: "B", expect: (5, 3), got: (5, 7) })),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn mismatched_k_reports_dim_mismatch() {
+        let a = Matrix::zeros(4, 5);
+        let b = Matrix::zeros(6, 3); // op(B) rows 6 != k 5
+        let mut c = Matrix::zeros(4, 3);
+        let err = gemm_parallel(2, &BlockParams::emmerald_sse(), 1.0, a.view(), b.view(), 0.0, &mut c.view_mut());
+        assert!(
+            matches!(err, Err(BlasError::DimMismatch { m: 4, n: 3, k: 5, other_k: 6 })),
+            "{err:?}"
+        );
     }
 
     #[test]
@@ -185,6 +533,21 @@ mod tests {
             for p in n..n + 3 {
                 assert_eq!(c.data()[r * (n + 3) + p], -77.0, "padding clobbered at row {r}");
             }
+        }
+    }
+
+    #[test]
+    fn strided_c_padding_untouched_column_split() {
+        // m == 1 forces the column split; the slices interleave in storage,
+        // so a stray write would land in the stride padding.
+        let (m, n, k) = (1usize, 29usize, 13usize);
+        let a = Matrix::random(m, k, 6, -1.0, 1.0);
+        let b = Matrix::random(k, n, 7, -1.0, 1.0);
+        let mut c = Matrix::random_strided(m, n, n + 4, 8);
+        gemm_parallel(5, &BlockParams::emmerald_sse(), 1.0, a.view(), b.view(), 0.0, &mut c.view_mut())
+            .unwrap();
+        for p in n..n + 4 {
+            assert_eq!(c.data()[p], -77.0, "padding clobbered at col {p}");
         }
     }
 }

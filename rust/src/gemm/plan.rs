@@ -459,8 +459,11 @@ impl GemmPlan {
 
     /// Execute with a prepacked `B` (packed once via
     /// [`GemmContext::pack_b`], reused across calls): the re-buffering
-    /// stage of every k-block is skipped entirely. Uses the plan's
-    /// parallel row split when the plan resolved to the parallel tier.
+    /// stage of every k-block is skipped entirely. When the plan resolved
+    /// to the parallel tier this splits over the context pool — rows of
+    /// `op(A)` for tall outputs, panel-aligned columns of the shared
+    /// `PackedB` for skinny ones — via the parallel tier's split policy
+    /// ([`crate::gemm::parallel`]), for every transa/transb combination.
     pub fn run_packed_b(&self, a: &[f32], b: &PackedB, c: &mut [f32]) -> Result<(), BlasError> {
         let (isa, params) = self.packed_geometry(b)?;
         let (ar, ac) = match self.shape.transa {
@@ -468,39 +471,60 @@ impl GemmPlan {
             Transpose::Yes => (self.shape.k, self.shape.m),
         };
         let av = MatRef::new(a, ar, ac, self.lda).map_err(|e| e.operand("A"))?;
-        let mut cv =
+        let cv =
             MatMut::new(c, self.shape.m, self.shape.n, self.ldc).map_err(|e| e.operand("C"))?;
-        let m = self.shape.m;
-        if m == 0 || self.shape.n == 0 {
+        let (m, n) = (self.shape.m, self.shape.n);
+        if m == 0 || n == 0 {
             return Ok(());
         }
-        let threads = if self.kernel == KernelId::Parallel && self.shape.transa == Transpose::No {
-            self.dispatch.threads().min(m)
-        } else {
-            1
-        };
-        if threads <= 1 || m < 2 {
-            prepacked_gemm(isa, &params, self.shape.transa, self.alpha, ASource::Raw(av), b, self.beta, &mut cv);
-            return Ok(());
+        let transa = self.shape.transa;
+        let (alpha, beta) = (self.alpha, self.beta);
+        let threads = if self.kernel == KernelId::Parallel { self.dispatch.threads() } else { 1 };
+        match super::parallel::split_axis(m, n, threads) {
+            super::parallel::Split::Serial => {
+                let mut cv = cv;
+                prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(av), 0, b, 0, beta, &mut cv);
+            }
+            super::parallel::Split::Rows(t) => {
+                // Row-sliced execution sharing the one prepacked B (same
+                // split boundaries as the packing parallel driver, via
+                // parallel::row_slices — which is what keeps the results
+                // bit-identical to it).
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    super::parallel::row_slices(av, transa, cv, t, 1)
+                        .into_iter()
+                        .map(|(_, a_slice, mut c_slice)| {
+                            Box::new(move || {
+                                prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(a_slice), 0, b, 0, beta, &mut c_slice);
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                self.ctx.run_jobs(jobs);
+            }
+            super::parallel::Split::Cols(t) => {
+                // Column slices aligned to the panel width so each worker
+                // reads whole panels of the shared PackedB; A is shared.
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    super::parallel::c_col_slices(cv, t, params.nr)
+                        .into_iter()
+                        .map(|(c0, mut c_slice)| {
+                            Box::new(move || {
+                                prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(av), 0, b, c0, beta, &mut c_slice);
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                self.ctx.run_jobs(jobs);
+            }
         }
-        // Row-sliced parallel execution sharing the one prepacked B (same
-        // split policy as the parallel tier, via parallel::row_slices).
-        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = super::parallel::row_slices(av, cv, threads)
-            .into_iter()
-            .map(|(a_slice, mut c_slice)| {
-                let alpha = self.alpha;
-                let beta = self.beta;
-                Box::new(move || {
-                    prepacked_gemm(isa, &params, Transpose::No, alpha, ASource::Raw(a_slice), b, beta, &mut c_slice);
-                }) as Box<dyn FnOnce() + Send + '_>
-            })
-            .collect();
-        self.ctx.run_jobs(jobs);
         Ok(())
     }
 
-    /// Execute with both operands prepacked (serial; the fully
-    /// weight-stationary path).
+    /// Execute with both operands prepacked (the fully weight-stationary
+    /// path). When the plan resolved to the parallel tier, the row-block
+    /// loop splits across the context pool at `mb` granularity (a packed
+    /// row block is indivisible); skinny outputs split over panel-aligned
+    /// columns instead — the same axis policy as every other parallel
+    /// path.
     pub fn run_packed(&self, a: &PackedA, b: &PackedB, c: &mut [f32]) -> Result<(), BlasError> {
         let (isa, params) = self.packed_geometry(b)?;
         if a.k != self.shape.k || a.m != self.shape.m {
@@ -515,12 +539,45 @@ impl GemmPlan {
                 "PackedA block geometry differs from the plan's kernel geometry; repack with the current context",
             ));
         }
-        let mut cv =
+        let cv =
             MatMut::new(c, self.shape.m, self.shape.n, self.ldc).map_err(|e| e.operand("C"))?;
-        if self.shape.m == 0 || self.shape.n == 0 {
+        let (m, n) = (self.shape.m, self.shape.n);
+        if m == 0 || n == 0 {
             return Ok(());
         }
-        prepacked_gemm(isa, &params, self.shape.transa, self.alpha, ASource::Packed(a), b, self.beta, &mut cv);
+        let transa = self.shape.transa;
+        let (alpha, beta) = (self.alpha, self.beta);
+        let threads = if self.kernel == KernelId::Parallel { self.dispatch.threads() } else { 1 };
+        match super::parallel::split_axis(m, n, threads) {
+            super::parallel::Split::Serial => {
+                let mut cv = cv;
+                prepacked_gemm(isa, &params, transa, alpha, ASource::Packed(a), 0, b, 0, beta, &mut cv);
+            }
+            super::parallel::Split::Rows(t) => {
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    super::parallel::c_row_slices(cv, t, params.mb)
+                        .into_iter()
+                        .map(|(r0, mut c_slice)| {
+                            Box::new(move || {
+                                prepacked_gemm(isa, &params, transa, alpha, ASource::Packed(a), r0, b, 0, beta, &mut c_slice);
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                self.ctx.run_jobs(jobs);
+            }
+            super::parallel::Split::Cols(t) => {
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    super::parallel::c_col_slices(cv, t, params.nr)
+                        .into_iter()
+                        .map(|(c0, mut c_slice)| {
+                            Box::new(move || {
+                                prepacked_gemm(isa, &params, transa, alpha, ASource::Packed(a), 0, b, c0, beta, &mut c_slice);
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                self.ctx.run_jobs(jobs);
+            }
+        }
         Ok(())
     }
 
@@ -616,6 +673,12 @@ enum ASource<'x> {
 /// prepacked paths always execute this driver, whatever kernel the plan's
 /// heuristics picked for unpacked runs), minus every `pack` invocation
 /// the prepacked operands make redundant.
+///
+/// `c` may be a parallel slice of the full output: `row0`/`col0` are its
+/// global offsets, used to locate the matching prepacked `A` row blocks
+/// and `B` panels. `row0` must be a multiple of `mb` when `A` is
+/// prepacked; `col0` must be a multiple of `nr` (panel-aligned) — the
+/// parallel split helpers guarantee both.
 #[allow(clippy::too_many_arguments)]
 fn prepacked_gemm(
     isa: Option<VecIsa>,
@@ -623,17 +686,21 @@ fn prepacked_gemm(
     transa: Transpose,
     alpha: f32,
     a: ASource<'_>,
+    row0: usize,
     pb: &PackedB,
+    col0: usize,
     beta: f32,
     c: &mut MatMut<'_>,
 ) {
     let m = c.rows();
     let n = c.cols();
     let k = pb.k;
+    debug_assert_eq!(col0 % params.nr, 0, "column slices must be panel-aligned");
     c.scale(beta);
     if alpha == 0.0 || k == 0 || m == 0 || n == 0 {
         return;
     }
+    let p0 = col0 / params.nr;
 
     // Raw A still needs per-block packing when its rows are strided in
     // storage (transposed) or the ablation toggle asks for it.
@@ -663,11 +730,11 @@ fn prepacked_gemm(
                 let w = params.nr.min(n - j0);
                 cols.clear();
                 for j in 0..w {
-                    cols.push(block.col_ptr(p, j));
+                    cols.push(block.col_ptr(p0 + p, j));
                 }
                 let row_ptr = |i: usize| -> *const f32 {
                     match a {
-                        ASource::Packed(pa) => pa.blocks[kbi][ii / params.mb].row_ptr(i),
+                        ASource::Packed(pa) => pa.blocks[kbi][(row0 + ii) / params.mb].row_ptr(i),
                         ASource::Raw(av) => {
                             if need_pack_a {
                                 scratch_a.row_ptr(i)

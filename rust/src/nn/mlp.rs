@@ -319,7 +319,9 @@ impl Mlp {
             }
             if l > 0 {
                 // dh = dz · Wᵀ over the whole stack at once (shared
-                // weight; rows are independent), then tanh'.
+                // weight; rows are independent), then tanh'. The NT layout
+                // rides the dispatcher's parallel tier for big stacks —
+                // each row slice packs its own Wᵀ panels (pack-on-split).
                 let mut dh = Matrix::zeros(batch, fan_in);
                 sgemm(
                     self.backend,

@@ -17,6 +17,22 @@
 
 use super::prng::Pcg32;
 
+/// Point the persistent-autotune-cache path at a per-process temp file
+/// (unless the caller already pinned one), so tests never inherit a
+/// developer's `~/.cache/emmerald/tuned.json` — a stale tuned entry would
+/// silently change the kernel geometry the suite runs with. Idempotent
+/// and thread-safe (first call wins, via a process-local override rather
+/// than `std::env::set_var`); call it at the top of any test that touches
+/// `GemmContext::global()`. `ci.sh` additionally exports
+/// `EMMERALD_TUNE_CACHE` so whole tier-1 runs are hermetic even for tests
+/// that skip this call.
+pub fn hermetic_tune_cache() {
+    let path = std::env::temp_dir()
+        .join(format!("emmerald-test-tune-{}", std::process::id()))
+        .join("tuned.json");
+    crate::autotune::cache::set_path_override(Some(path));
+}
+
 /// Per-case generation context handed to the property closure.
 pub struct Gen {
     /// The seeded generator for this case.
@@ -58,6 +74,7 @@ pub fn base_seed() -> u64 {
 /// Run `cases` random cases of `prop`. Panics (with seed + case index in the
 /// message) if any case panics.
 pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, prop: F) {
+    hermetic_tune_cache();
     let seed = base_seed();
     for case in 0..cases {
         // Derive an independent per-case stream so failures reproduce in

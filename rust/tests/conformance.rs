@@ -11,7 +11,7 @@
 use emmerald::blas::{sgemm, Backend, Matrix, Transpose};
 use emmerald::gemm::dispatch::GemmShape;
 use emmerald::gemm::{registry, BatchStrides, DispatchConfig, GemmDispatch, KernelId};
-use emmerald::util::testkit::{assert_allclose, check, Gen};
+use emmerald::util::testkit::{assert_allclose, check, hermetic_tune_cache, Gen};
 
 /// The conformance grid: shapes crossing block, panel and vector-width
 /// boundaries, all four transpose combinations, four alpha/beta pairs.
@@ -105,6 +105,7 @@ fn run_grid_for(d: &GemmDispatch, id: KernelId) {
 
 #[test]
 fn every_registry_kernel_conforms_on_the_grid() {
+    hermetic_tune_cache();
     let d = GemmDispatch::default();
     for info in registry() {
         run_grid_for(&d, info.id);
@@ -113,8 +114,10 @@ fn every_registry_kernel_conforms_on_the_grid() {
 
 #[test]
 fn auto_selection_conforms_across_heuristic_boundaries() {
+    hermetic_tune_cache();
     // Thresholds tuned so the grid itself crosses naive→vector→parallel
-    // boundaries; every selected kernel must agree with the oracle.
+    // boundaries; every selected kernel must agree with the oracle — now
+    // for all four layouts, since the parallel tier is layout-complete.
     let cfg = DispatchConfig {
         tiny_dim: 4,
         parallel_min_flops: 2.0 * 24.0 * 24.0 * 24.0,
@@ -125,18 +128,120 @@ fn auto_selection_conforms_across_heuristic_boundaries() {
     let d = GemmDispatch::new(cfg);
     let mut seed = 0x51D3u64;
     for &(m, n, k) in &SHAPES {
-        seed += 1;
-        let a = Matrix::random(m, k, seed, -1.0, 1.0);
-        let b = Matrix::random(k, n, seed ^ 0x9, -1.0, 1.0);
-        let mut c_got = Matrix::zeros(m, n);
-        let mut c_ref = Matrix::zeros(m, n);
-        let shape = GemmShape { m, n, k, transa: Transpose::No, transb: Transpose::No };
-        let picked = d.select(&shape, 1.0);
-        assert!(picked.available(), "picked unavailable {picked:?} for {m}x{n}x{k}");
-        let ran = d.gemm(Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut c_got.view_mut());
-        assert_eq!(ran, picked, "gemm must run what select reports");
-        oracle(Transpose::No, Transpose::No, m, n, k, 1.0, 0.0, &a, &b, &mut c_ref);
-        assert_allclose(c_got.data(), c_ref.data(), 2e-4, 1e-5, &format!("auto {m}x{n}x{k}"));
+        for transa in [Transpose::No, Transpose::Yes] {
+            for transb in [Transpose::No, Transpose::Yes] {
+                seed += 1;
+                let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+                let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+                let a = Matrix::random(ar, ac, seed, -1.0, 1.0);
+                let b = Matrix::random(br, bc, seed ^ 0x9, -1.0, 1.0);
+                let mut c_got = Matrix::zeros(m, n);
+                let mut c_ref = Matrix::zeros(m, n);
+                let shape = GemmShape { m, n, k, transa, transb };
+                let picked = d.select(&shape, 1.0);
+                assert!(picked.available(), "picked unavailable {picked:?} for {m}x{n}x{k}");
+                let ran = d.gemm(transa, transb, 1.0, a.view(), b.view(), 0.0, &mut c_got.view_mut());
+                assert_eq!(ran, picked, "gemm must run what select reports");
+                oracle(transa, transb, m, n, k, 1.0, 0.0, &a, &b, &mut c_ref);
+                assert_allclose(
+                    c_got.data(),
+                    c_ref.data(),
+                    2e-4,
+                    1e-5,
+                    &format!("auto {m}x{n}x{k} ta={transa:?} tb={transb:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_kernel_runs_transposed_and_skinny_layouts_without_degrading() {
+    hermetic_tune_cache();
+    if !KernelId::Parallel.available() {
+        eprintln!("SKIP: no SSE — parallel tier unavailable");
+        return;
+    }
+    let d = GemmDispatch::new(DispatchConfig { threads: 3, ..DispatchConfig::default() });
+    let mut seed = 0x9A11u64;
+    // Row-split shapes, column-split shapes (m == 1 and m < threads).
+    for &(m, n, k) in &[(48usize, 37usize, 29usize), (1, 64, 33), (2, 96, 17)] {
+        for transa in [Transpose::No, Transpose::Yes] {
+            for transb in [Transpose::No, Transpose::Yes] {
+                seed += 1;
+                let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+                let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+                let a = Matrix::random_strided(ar, ac, ac + 3, seed);
+                let b = Matrix::random_strided(br, bc, bc + 1, seed ^ 0xAB);
+                let mut c_got = Matrix::random_strided(m, n, n + 2, seed ^ 0xCD);
+                let mut c_ref = c_got.clone();
+                let ran = d.gemm_with(
+                    KernelId::Parallel,
+                    transa,
+                    transb,
+                    0.75,
+                    a.view(),
+                    b.view(),
+                    0.5,
+                    &mut c_got.view_mut(),
+                );
+                assert_eq!(
+                    ran,
+                    KernelId::Parallel,
+                    "parallel must not degrade for {m}x{n}x{k} ta={transa:?} tb={transb:?}"
+                );
+                oracle(transa, transb, m, n, k, 0.75, 0.5, &a, &b, &mut c_ref);
+                assert_allclose(
+                    c_got.data(),
+                    c_ref.data(),
+                    5e-4,
+                    1e-4,
+                    &format!("parallel layout {m}x{n}x{k} ta={transa:?} tb={transb:?}"),
+                );
+                // Strided-C padding sentinels survive every split.
+                for r in 0..m {
+                    for p in n..n + 2 {
+                        assert_eq!(
+                            c_got.data()[r * (n + 2) + p],
+                            -77.0,
+                            "padding clobbered at ({r},{p}) ta={transa:?} tb={transb:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_beta_scale_conforms_and_respects_padding() {
+    hermetic_tune_cache();
+    if !KernelId::Parallel.available() {
+        eprintln!("SKIP: no SSE — parallel tier unavailable");
+        return;
+    }
+    // Low scale threshold so a test-sized C takes the pool sweep.
+    let d = GemmDispatch::new(DispatchConfig {
+        threads: 3,
+        parallel_min_scale: 32,
+        ..DispatchConfig::default()
+    });
+    let (m, n, k) = (11usize, 9usize, 7usize);
+    let shape = GemmShape { m, n, k, transa: Transpose::No, transb: Transpose::No };
+    assert_eq!(d.select(&shape, 0.0), KernelId::Parallel, "alpha == 0 above threshold must parallelise");
+    let a = Matrix::random(m, k, 1, -1.0, 1.0);
+    let b = Matrix::random(k, n, 2, -1.0, 1.0);
+    let mut c_got = Matrix::random_strided(m, n, n + 3, 3);
+    let c_before = c_got.clone();
+    let ran = d.gemm(Transpose::No, Transpose::No, 0.0, a.view(), b.view(), -0.5, &mut c_got.view_mut());
+    assert_eq!(ran, KernelId::Parallel);
+    for r in 0..m {
+        for j in 0..n {
+            assert_eq!(c_got.get(r, j), c_before.get(r, j) * -0.5, "scale at ({r},{j})");
+        }
+        for p in n..n + 3 {
+            assert_eq!(c_got.data()[r * (n + 3) + p], -77.0, "padding clobbered at ({r},{p})");
+        }
     }
 }
 
@@ -168,6 +273,7 @@ fn prop_dispatch_selection_is_stable_and_conformant() {
 
 #[test]
 fn batched_fold_and_fanout_agree_with_each_other() {
+    hermetic_tune_cache();
     // The same batch computed through the fold fast path (shared B,
     // contiguous items) and through the general fan-out (forced by a
     // padded C stride) must agree. parallel_min_flops = 0 makes the

@@ -5,9 +5,9 @@
 //! tolerance, including fringe m/n/k and strided C.
 
 use emmerald::blas::{sgemm, sgemm_batch, Backend, GemmContext, Matrix, Transpose};
-use emmerald::gemm::KernelId;
+use emmerald::gemm::{DispatchConfig, KernelId};
 use emmerald::util::prng::Pcg32;
-use emmerald::util::testkit::assert_allclose;
+use emmerald::util::testkit::{assert_allclose, hermetic_tune_cache};
 
 fn rand_vec(seed: u64, len: usize) -> Vec<f32> {
     let mut rng = Pcg32::new(seed);
@@ -54,6 +54,7 @@ fn oracle(
 
 #[test]
 fn plan_executed_twice_is_bitwise_identical_and_matches_fresh_sgemm() {
+    hermetic_tune_cache();
     let ctx = GemmContext::global();
     // Fringe and non-fringe shapes, including strided C.
     for &(m, n, k, ldc_pad, seed) in &[
@@ -90,6 +91,7 @@ fn plan_executed_twice_is_bitwise_identical_and_matches_fresh_sgemm() {
 
 #[test]
 fn packed_b_reused_across_shapes_matches_oracle_and_plain_plan() {
+    hermetic_tune_cache();
     let ctx = GemmContext::global();
     // Fringe k (padding granule) and fringe n (partial last panel).
     let (n, k) = (11usize, 21usize);
@@ -118,6 +120,7 @@ fn packed_b_reused_across_shapes_matches_oracle_and_plain_plan() {
 
 #[test]
 fn packed_b_reused_across_batch_items_matches_sgemm_batch() {
+    hermetic_tune_cache();
     let ctx = GemmContext::global();
     let (m, n, k, batch) = (6usize, 9usize, 14usize, 5usize);
     let a = rand_vec(1, batch * m * k);
@@ -182,6 +185,7 @@ fn packed_b_reused_across_batch_items_matches_sgemm_batch() {
 
 #[test]
 fn packed_runs_leave_strided_c_padding_untouched() {
+    hermetic_tune_cache();
     let ctx = GemmContext::global();
     let (m, n, k) = (9usize, 7usize, 12usize);
     let ldc = n + 3;
@@ -203,6 +207,7 @@ fn packed_runs_leave_strided_c_padding_untouched() {
 
 #[test]
 fn packed_a_and_b_match_transposed_oracle() {
+    hermetic_tune_cache();
     let ctx = GemmContext::global();
     let (m, n, k) = (14usize, 10usize, 17usize);
     // A stored k×m (transa=Yes), B stored n×k (transb=Yes).
@@ -227,8 +232,160 @@ fn packed_a_and_b_match_transposed_oracle() {
     assert_allclose(&c1, &c_ref, 5e-4, 1e-4, "packed A+B TT vs oracle");
 }
 
+/// Contexts for the parallel-vs-serial prepacked comparisons: identical
+/// geometry, different thread budgets, a zero flop threshold so
+/// test-sized problems genuinely take the parallel tier.
+fn par_and_serial_ctx() -> (GemmContext, GemmContext) {
+    let par = GemmContext::new(DispatchConfig {
+        threads: 3,
+        parallel_min_flops: 0.0,
+        ..DispatchConfig::default()
+    });
+    let ser = GemmContext::new(DispatchConfig { threads: 1, ..DispatchConfig::default() });
+    (par, ser)
+}
+
+#[test]
+fn parallel_run_packed_matches_serial_run_packed_bitwise() {
+    hermetic_tune_cache();
+    let (ctx_par, ctx_ser) = par_and_serial_ctx();
+    // Row-split and column-split shapes, all four layouts.
+    for &(m, n, k) in &[(67usize, 45usize, 53usize), (1, 83, 29), (2, 90, 31)] {
+        for transa in [Transpose::No, Transpose::Yes] {
+            for transb in [Transpose::No, Transpose::Yes] {
+                let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+                let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+                let a = rand_vec(0x90 ^ (m as u64), ar * ac);
+                let b = rand_vec(0x91 ^ (n as u64), br * bc);
+                let c0 = rand_vec(0x92, m * n);
+
+                let build = |ctx: &GemmContext| {
+                    let pa = ctx.pack_a(transa, m, k, &a, ac).unwrap();
+                    let pb = ctx.pack_b(transb, k, n, &b, bc).unwrap();
+                    let plan = ctx
+                        .gemm()
+                        .transpose_a(transa)
+                        .transpose_b(transb)
+                        .alpha(0.75)
+                        .beta(0.5)
+                        .plan(m, n, k)
+                        .unwrap();
+                    (pa, pb, plan)
+                };
+                let (pa_p, pb_p, plan_par) = build(&ctx_par);
+                let (pa_s, pb_s, plan_ser) = build(&ctx_ser);
+                if KernelId::Parallel.available() {
+                    assert_eq!(
+                        plan_par.kernel(),
+                        KernelId::Parallel,
+                        "parallel ctx must resolve Parallel for {m}x{n}x{k} ta={transa:?} tb={transb:?}"
+                    );
+                }
+                let mut c_par = c0.clone();
+                let mut c_ser = c0.clone();
+                plan_par.run_packed(&pa_p, &pb_p, &mut c_par).unwrap();
+                plan_ser.run_packed(&pa_s, &pb_s, &mut c_ser).unwrap();
+                assert_eq!(
+                    c_par, c_ser,
+                    "parallel run_packed must be bit-identical to serial ({m}x{n}x{k} ta={transa:?} tb={transb:?})"
+                );
+                // And both agree with the naive oracle.
+                let mut c_ref = c0.clone();
+                oracle(transa, transb, m, n, k, 0.75, &a, ac, &b, bc, 0.5, &mut c_ref, n);
+                assert_allclose(
+                    &c_par,
+                    &c_ref,
+                    5e-4,
+                    1e-4,
+                    &format!("run_packed vs oracle {m}x{n}x{k} ta={transa:?} tb={transb:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_run_packed_b_matches_packing_parallel_driver_bitwise() {
+    hermetic_tune_cache();
+    let (ctx_par, _) = par_and_serial_ctx();
+    // The prepacked-B parallel run shares row boundaries with the packing
+    // parallel driver, so it must be bit-identical to plan.run on the
+    // same parallel context — including transposed A (pack-on-split) and
+    // the skinny column split.
+    for &(m, n, k) in &[(41usize, 27usize, 33usize), (1, 61, 24), (2, 70, 19)] {
+        for transa in [Transpose::No, Transpose::Yes] {
+            for transb in [Transpose::No, Transpose::Yes] {
+                let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+                let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+                let a = rand_vec(0xA0, ar * ac);
+                let b = rand_vec(0xA1, br * bc);
+                let c0 = rand_vec(0xA2, m * n);
+                let packed = ctx_par.pack_b(transb, k, n, &b, bc).unwrap();
+                let plan = ctx_par
+                    .gemm()
+                    .transpose_a(transa)
+                    .transpose_b(transb)
+                    .beta(1.0)
+                    .plan(m, n, k)
+                    .unwrap();
+                let mut c_packed = c0.clone();
+                let mut c_plain = c0.clone();
+                plan.run_packed_b(&a, &packed, &mut c_packed).unwrap();
+                plan.run(&a, &b, &mut c_plain).unwrap();
+                if KernelId::Simd.available() {
+                    assert_eq!(
+                        c_packed, c_plain,
+                        "prepacked-B parallel run must be bit-identical to the packing driver ({m}x{n}x{k} ta={transa:?} tb={transb:?})"
+                    );
+                }
+                let mut c_ref = c0.clone();
+                oracle(transa, transb, m, n, k, 1.0, &a, ac, &b, bc, 1.0, &mut c_ref, n);
+                assert_allclose(
+                    &c_packed,
+                    &c_ref,
+                    5e-4,
+                    1e-4,
+                    &format!("run_packed_b vs oracle {m}x{n}x{k} ta={transa:?} tb={transb:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_packed_runs_leave_strided_c_padding_untouched() {
+    hermetic_tune_cache();
+    let (ctx_par, _) = par_and_serial_ctx();
+    // Row split (tall) and column split (skinny) both write through
+    // interleaved strided views; the -77 sentinels must survive.
+    for &(m, n, k) in &[(33usize, 18usize, 21usize), (1, 40, 16), (2, 44, 13)] {
+        let ldc = n + 3;
+        let a = rand_vec(0xB0, m * k);
+        let b = rand_vec(0xB1, k * n);
+        let packed_a = ctx_par.pack_a(Transpose::No, m, k, &a, k).unwrap();
+        let packed_b = ctx_par.pack_b(Transpose::No, k, n, &b, n).unwrap();
+        let plan = ctx_par.gemm().ldc(ldc).plan(m, n, k).unwrap();
+        for variant in ["run_packed_b", "run_packed"] {
+            let mut c = vec![-77.0f32; m * ldc];
+            match variant {
+                "run_packed_b" => plan.run_packed_b(&a, &packed_b, &mut c).unwrap(),
+                _ => plan.run_packed(&packed_a, &packed_b, &mut c).unwrap(),
+            }
+            for r in 0..m {
+                for p in n..ldc {
+                    assert_eq!(c[r * ldc + p], -77.0, "{variant}: padding clobbered at ({r},{p}) {m}x{n}x{k}");
+                }
+                for j in 0..n {
+                    assert_ne!(c[r * ldc + j], -77.0, "{variant}: logical element untouched at ({r},{j})");
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn plan_run_batch_matches_looped_plan_runs() {
+    hermetic_tune_cache();
     let ctx = GemmContext::global();
     let (m, n, k, batch) = (4usize, 6usize, 8usize, 3usize);
     let strides = emmerald::gemm::BatchStrides::contiguous(m, n, k);
@@ -252,6 +409,7 @@ fn plan_run_batch_matches_looped_plan_runs() {
 
 #[test]
 fn forced_kernel_plans_match_their_backend() {
+    hermetic_tune_cache();
     let ctx = GemmContext::global();
     let (m, n, k) = (13usize, 9usize, 15usize);
     let a = rand_vec(0x81, m * k);
