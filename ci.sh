@@ -21,6 +21,11 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Ablation guard: the outer-product tile tier must not regress below the
+# dot-panel AVX2 kernel at 512^3 and 1024^3 (skip-passes without AVX2).
+echo "== cargo bench --bench tile_vs_dot (tile >= dot guard) =="
+cargo bench --bench tile_vs_dot
+
 # Tier-1 lint: clippy over every target (lib, tests, benches, examples)
 # with warnings promoted to errors. CI_SKIP_CLIPPY=1 is the only escape
 # hatch for toolchains that ship without the clippy component.

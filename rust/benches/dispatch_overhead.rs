@@ -13,11 +13,21 @@
 use emmerald::bench::{gemm_flops, Bencher, FlushMode, Report};
 use emmerald::blas::{sgemm, Backend, Matrix, Transpose};
 use emmerald::gemm::dispatch::GemmShape;
-use emmerald::gemm::{avx2, simd, GemmDispatch, KernelId};
+use emmerald::gemm::{avx2, simd, tile, GemmDispatch, KernelId};
 
 fn run_direct(id: KernelId, d: &GemmDispatch, a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let mut cv = c.view_mut();
     match id {
+        KernelId::Avx2Tile => tile::gemm(
+            d.params_tile(),
+            Transpose::No,
+            Transpose::No,
+            1.0,
+            a.view(),
+            b.view(),
+            0.0,
+            &mut cv,
+        ),
         KernelId::Avx2 => avx2::gemm(
             d.params_avx2(),
             Transpose::No,

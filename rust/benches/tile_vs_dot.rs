@@ -1,0 +1,112 @@
+//! Ablation guard: the outer-product register-tiled tier vs the
+//! dot-panel AVX2 kernel — the design experiment behind `gemm::tile`.
+//!
+//! The dot-panel kernel pays a horizontal reduction plus a store per `kb`
+//! multiply-adds and reloads `A`/`B` vectors per FMA; the 6×16 tile holds
+//! `C` resident in 12 YMM accumulators and amortises every load across
+//! the tile. This binary measures both on identical problems and
+//! **guards** that the tile tier is at least as fast at 512³ and 1024³
+//! (exit code 1 otherwise, so `ci.sh` can gate on it). Hosts without
+//! AVX2+FMA skip-pass — there is no tile tier to regress.
+
+use emmerald::bench::{gemm_flops, Bencher, FlushMode, Report};
+use emmerald::blas::{Matrix, Transpose};
+use emmerald::gemm::{DispatchConfig, GemmDispatch, KernelId};
+use emmerald::util::testkit::assert_allclose;
+
+fn main() {
+    if !KernelId::Avx2Tile.available() {
+        println!("SKIP-PASS: no AVX2+FMA — tile tier unavailable on this host");
+        return;
+    }
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[usize] = if quick { &[512] } else { &[512, 1024] };
+    // Serial apples-to-apples: both kernels forced, one thread.
+    let d = GemmDispatch::new(DispatchConfig { threads: 1, ..DispatchConfig::default() });
+
+    let mut report = Report::new(
+        "TILE vs DOT — outer-product 6x16 tier vs dot-panel AVX2 (serial GFLOP/s)",
+        &["size", "kernel"],
+    );
+    let mut failed = false;
+    for &n in sizes {
+        let a = Matrix::random(n, n, 1, -1.0, 1.0);
+        let b = Matrix::random(n, n, 2, -1.0, 1.0);
+        let flops = gemm_flops(n, n, n);
+        let mut c_tile = Matrix::zeros(n, n);
+        let mut c_dot = Matrix::zeros(n, n);
+
+        // Correctness before speed: both kernels agree on the problem.
+        let ran = d.gemm_with(
+            KernelId::Avx2Tile,
+            Transpose::No,
+            Transpose::No,
+            1.0,
+            a.view(),
+            b.view(),
+            0.0,
+            &mut c_tile.view_mut(),
+        );
+        assert_eq!(ran, KernelId::Avx2Tile, "forced tile must not degrade here");
+        d.gemm_with(
+            KernelId::Avx2,
+            Transpose::No,
+            Transpose::No,
+            1.0,
+            a.view(),
+            b.view(),
+            0.0,
+            &mut c_dot.view_mut(),
+        );
+        assert_allclose(c_tile.data(), c_dot.data(), 5e-4, 1e-4, &format!("tile vs dot at {n}"));
+
+        let mut bench = Bencher::new(1, 5).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+        let dot = bench.run("dot", flops, || {
+            d.gemm_with(
+                KernelId::Avx2,
+                Transpose::No,
+                Transpose::No,
+                1.0,
+                a.view(),
+                b.view(),
+                0.0,
+                &mut c_dot.view_mut(),
+            );
+        });
+        let mut bench = Bencher::new(1, 5).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+        let tile = bench.run("tile", flops, || {
+            d.gemm_with(
+                KernelId::Avx2Tile,
+                Transpose::No,
+                Transpose::No,
+                1.0,
+                a.view(),
+                b.view(),
+                0.0,
+                &mut c_tile.view_mut(),
+            );
+        });
+
+        println!(
+            "{n}x{n}x{n}  dot {:>9.2}  tile {:>9.2} GFLOP/s  (tile/dot {:.2}x)",
+            dot.mflops() / 1000.0,
+            tile.mflops() / 1000.0,
+            tile.mflops() / dot.mflops(),
+        );
+        report.add(&[n.to_string(), "dot".into()], dot.clone());
+        report.add(&[n.to_string(), "tile".into()], tile.clone());
+        if tile.mflops() < dot.mflops() {
+            eprintln!(
+                "FAIL: tile tier ({:.1} MFlop/s) lost to the dot-panel AVX2 kernel ({:.1} MFlop/s) at {n}^3",
+                tile.mflops(),
+                dot.mflops(),
+            );
+            failed = true;
+        }
+    }
+    report.emit("tile_vs_dot");
+    if failed {
+        std::process::exit(1);
+    }
+    println!("PASS: tile tier >= dot-panel AVX2 at every measured size");
+}

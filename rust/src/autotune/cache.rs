@@ -12,7 +12,7 @@
 //! point it at a temp file); the values `off` / `0` / empty disable
 //! persistence entirely.
 
-use crate::gemm::{BlockParams, KernelId, Unroll};
+use crate::gemm::{BlockParams, KernelId, TileParams, Unroll};
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
@@ -64,6 +64,17 @@ pub fn cpu_model() -> String {
     format!("unknown-{}", std::env::consts::ARCH)
 }
 
+/// Everything one cache file holds: dot-kernel block geometries, the
+/// tile tier's geometry and the measured Strassen crossover, each keyed
+/// by CPU model. Kept as one document so every save preserves the other
+/// sections (read-modify-write over the whole file).
+#[derive(Debug, Default)]
+struct CacheDoc {
+    entries: Vec<(String, KernelId, BlockParams)>,
+    tile_entries: Vec<(String, TileParams)>,
+    strassen_entries: Vec<(String, usize)>,
+}
+
 fn entry_to_json(cpu: &str, kernel: KernelId, p: &BlockParams) -> Json {
     Json::obj([
         ("cpu", cpu.into()),
@@ -94,19 +105,99 @@ fn entry_from_json(j: &Json) -> Option<(String, KernelId, BlockParams)> {
     Some((cpu, kernel, params))
 }
 
-/// Load every well-formed entry from a cache file (missing or corrupt
-/// files yield an empty list — the cache is strictly best-effort).
-pub fn load_entries(path: &Path) -> Vec<(String, KernelId, BlockParams)> {
+fn tile_entry_to_json(cpu: &str, p: &TileParams) -> Json {
+    Json::obj([
+        ("cpu", cpu.into()),
+        ("mr", p.mr.into()),
+        ("nr", p.nr.into()),
+        ("kc", p.kc.into()),
+        ("mc", p.mc.into()),
+        ("nc", p.nc.into()),
+        ("prefetch", p.prefetch.into()),
+    ])
+}
+
+fn tile_entry_from_json(j: &Json) -> Option<(String, TileParams)> {
+    let cpu = j.get("cpu")?.as_str()?.to_string();
+    let params = TileParams {
+        mr: j.get("mr")?.as_usize()?,
+        nr: j.get("nr")?.as_usize()?,
+        kc: j.get("kc")?.as_usize()?,
+        mc: j.get("mc")?.as_usize()?,
+        nc: j.get("nc")?.as_usize()?,
+        prefetch: j.get("prefetch")?.as_bool()?,
+    };
+    params.validate().ok()?;
+    Some((cpu, params))
+}
+
+fn strassen_entry_from_json(j: &Json) -> Option<(String, usize)> {
+    let cpu = j.get("cpu")?.as_str()?.to_string();
+    let min_dim = j.get("min_dim")?.as_usize()?;
+    (min_dim > 0).then_some((cpu, min_dim))
+}
+
+/// Parse a whole cache file (missing or corrupt files yield an empty
+/// document — the cache is strictly best-effort; unknown sections and
+/// malformed entries are skipped).
+fn load_doc(path: &Path) -> CacheDoc {
     let Ok(text) = std::fs::read_to_string(path) else {
-        return Vec::new();
+        return CacheDoc::default();
     };
     let Ok(doc) = Json::parse(&text) else {
-        return Vec::new();
+        return CacheDoc::default();
     };
-    doc.get("entries")
-        .and_then(Json::as_arr)
-        .map(|items| items.iter().filter_map(entry_from_json).collect())
-        .unwrap_or_default()
+    CacheDoc {
+        entries: doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .map(|items| items.iter().filter_map(entry_from_json).collect())
+            .unwrap_or_default(),
+        tile_entries: doc
+            .get("tile_entries")
+            .and_then(Json::as_arr)
+            .map(|items| items.iter().filter_map(tile_entry_from_json).collect())
+            .unwrap_or_default(),
+        strassen_entries: doc
+            .get("strassen_entries")
+            .and_then(Json::as_arr)
+            .map(|items| items.iter().filter_map(strassen_entry_from_json).collect())
+            .unwrap_or_default(),
+    }
+}
+
+/// Atomically publish a whole cache document (temp file + rename, so
+/// concurrent readers never observe a torn file).
+fn save_doc(path: &Path, doc: &CacheDoc) -> std::io::Result<()> {
+    let json = Json::obj([
+        ("version", 2usize.into()),
+        (
+            "entries",
+            Json::arr(doc.entries.iter().map(|(c, id, p)| entry_to_json(c, *id, p))),
+        ),
+        (
+            "tile_entries",
+            Json::arr(doc.tile_entries.iter().map(|(c, p)| tile_entry_to_json(c, p))),
+        ),
+        (
+            "strassen_entries",
+            Json::arr(doc.strassen_entries.iter().map(|(c, d)| {
+                Json::obj([("cpu", c.as_str().into()), ("min_dim", (*d).into())])
+            })),
+        ),
+    ]);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, json.render())?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Load every well-formed dot-kernel entry from a cache file (missing or
+/// corrupt files yield an empty list — the cache is strictly best-effort).
+pub fn load_entries(path: &Path) -> Vec<(String, KernelId, BlockParams)> {
+    load_doc(path).entries
 }
 
 /// Entries from the configured cache file that match this host's CPU
@@ -124,35 +215,39 @@ pub fn load_host_entries() -> Vec<(KernelId, BlockParams)> {
         .collect()
 }
 
-/// Insert-or-replace one `(cpu, kernel)` entry in a cache file.
+/// Insert-or-replace one `(cpu, kernel)` dot-geometry entry in a cache
+/// file.
 ///
-/// Read-modify-write with an atomic publish: the new document is written
-/// to a process-unique temp file in the same directory and renamed over
-/// the cache, so concurrent readers never observe a torn file. (Two
-/// simultaneous writers can still last-write-win a whole document — an
-/// acceptable loss for a best-effort cache.)
+/// Read-modify-write with an atomic publish (see [`save_doc`]); the tile
+/// and Strassen sections ride along untouched. (Two simultaneous writers
+/// can still last-write-win a whole document — an acceptable loss for a
+/// best-effort cache.)
 pub fn save_entry(
     path: &Path,
     cpu: &str,
     kernel: KernelId,
     params: &BlockParams,
 ) -> std::io::Result<()> {
-    let mut entries = load_entries(path);
-    entries.retain(|(c, id, _)| !(c == cpu && *id == kernel));
-    entries.push((cpu.to_string(), kernel, *params));
-    let doc = Json::obj([
-        ("version", 1usize.into()),
-        (
-            "entries",
-            Json::arr(entries.iter().map(|(c, id, p)| entry_to_json(c, *id, p))),
-        ),
-    ]);
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
-    std::fs::write(&tmp, doc.render())?;
-    std::fs::rename(&tmp, path)
+    let mut doc = load_doc(path);
+    doc.entries.retain(|(c, id, _)| !(c == cpu && *id == kernel));
+    doc.entries.push((cpu.to_string(), kernel, *params));
+    save_doc(path, &doc)
+}
+
+/// Insert-or-replace the tile-tier geometry for one CPU.
+pub fn save_tile_entry(path: &Path, cpu: &str, params: &TileParams) -> std::io::Result<()> {
+    let mut doc = load_doc(path);
+    doc.tile_entries.retain(|(c, _)| c != cpu);
+    doc.tile_entries.push((cpu.to_string(), *params));
+    save_doc(path, &doc)
+}
+
+/// Insert-or-replace the measured Strassen crossover for one CPU.
+pub fn save_strassen_entry(path: &Path, cpu: &str, min_dim: usize) -> std::io::Result<()> {
+    let mut doc = load_doc(path);
+    doc.strassen_entries.retain(|(c, _)| c != cpu);
+    doc.strassen_entries.push((cpu.to_string(), min_dim));
+    save_doc(path, &doc)
 }
 
 /// Persist a tuning winner for this host under the configured cache path.
@@ -162,6 +257,42 @@ pub fn save_host_entry(kernel: KernelId, params: &BlockParams) -> Option<PathBuf
     let path = cache_path()?;
     save_entry(&path, &cpu_model(), kernel, params).ok()?;
     Some(path)
+}
+
+/// Persist this host's tuned tile geometry (best-effort, like
+/// [`save_host_entry`]).
+pub fn save_host_tile_entry(params: &TileParams) -> Option<PathBuf> {
+    let path = cache_path()?;
+    save_tile_entry(&path, &cpu_model(), params).ok()?;
+    Some(path)
+}
+
+/// Persist this host's measured Strassen crossover (best-effort).
+pub fn save_host_strassen_entry(min_dim: usize) -> Option<PathBuf> {
+    let path = cache_path()?;
+    save_strassen_entry(&path, &cpu_model(), min_dim).ok()?;
+    Some(path)
+}
+
+/// Everything cached for this host in **one** file read + parse: the
+/// dot-kernel entries, the tile geometry and the Strassen crossover —
+/// what [`crate::gemm::plan::GemmContext::global`] installs at init.
+#[allow(clippy::type_complexity)]
+pub fn load_host_tuned() -> (Vec<(KernelId, BlockParams)>, Option<TileParams>, Option<usize>) {
+    let Some(path) = cache_path() else {
+        return (Vec::new(), None, None);
+    };
+    let host = cpu_model();
+    let doc = load_doc(&path);
+    (
+        doc.entries
+            .into_iter()
+            .filter(|(c, _, _)| *c == host)
+            .map(|(_, id, p)| (id, p))
+            .collect(),
+        doc.tile_entries.into_iter().find(|(c, _)| *c == host).map(|(_, p)| p),
+        doc.strassen_entries.into_iter().find(|(c, _)| *c == host).map(|(_, d)| d),
+    )
 }
 
 #[cfg(test)]
@@ -214,6 +345,49 @@ mod tests {
         )
         .unwrap();
         assert!(load_entries(&path).is_empty(), "invalid kb=0 must not load");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tile_and_strassen_sections_roundtrip_and_coexist() {
+        let path = temp_file("tile-strassen");
+        let _ = std::fs::remove_file(&path);
+        // A dot entry first; the tile/strassen saves must preserve it.
+        let dot = BlockParams { kb: 128, mb: 64, nr: 4, ..BlockParams::emmerald_sse() };
+        save_entry(&path, "cpu-a", KernelId::Simd, &dot).unwrap();
+        let tile = TileParams { mr: 4, kc: 128, mc: 48, nc: 160, ..TileParams::avx2_6x16() };
+        save_tile_entry(&path, "cpu-a", &tile).unwrap();
+        save_tile_entry(&path, "cpu-b", &TileParams::avx2_6x16()).unwrap();
+        save_strassen_entry(&path, "cpu-a", 768).unwrap();
+        // Replace: one entry per cpu survives.
+        let tile2 = TileParams { kc: 192, ..tile };
+        save_tile_entry(&path, "cpu-a", &tile2).unwrap();
+        save_strassen_entry(&path, "cpu-a", 1536).unwrap();
+        let doc = load_doc(&path);
+        assert_eq!(doc.entries.len(), 1, "dot entry must survive tile/strassen saves");
+        assert_eq!(doc.tile_entries.len(), 2);
+        let a_tile = doc.tile_entries.iter().find(|(c, _)| c == "cpu-a").unwrap();
+        assert_eq!(a_tile.1.kc, 192);
+        assert_eq!(doc.strassen_entries, vec![("cpu-a".to_string(), 1536)]);
+        // And a dot save preserves the other sections in turn.
+        save_entry(&path, "cpu-b", KernelId::Avx2, &dot).unwrap();
+        let doc = load_doc(&path);
+        assert_eq!(doc.tile_entries.len(), 2);
+        assert_eq!(doc.strassen_entries.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn invalid_tile_and_strassen_entries_are_skipped() {
+        let path = temp_file("tile-bad");
+        std::fs::write(
+            &path,
+            r#"{"version":2,"entries":[],"tile_entries":[{"cpu":"x","mr":9,"nr":16,"kc":256,"mc":72,"nc":480,"prefetch":true}],"strassen_entries":[{"cpu":"x","min_dim":0}]}"#,
+        )
+        .unwrap();
+        let doc = load_doc(&path);
+        assert!(doc.tile_entries.is_empty(), "mr=9 must not load");
+        assert!(doc.strassen_entries.is_empty(), "min_dim=0 must not load");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -17,8 +17,8 @@
 pub mod cache;
 
 use crate::bench::{gemm_flops, Bencher, FlushMode};
-use crate::blas::{Matrix, Transpose};
-use crate::gemm::{avx2, blocked, simd, BlockParams, Unroll};
+use crate::blas::{Backend, Matrix, Transpose};
+use crate::gemm::{avx2, blocked, simd, tile, BlockParams, TileParams, Unroll};
 
 /// Which kernel family to tune.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -202,6 +202,253 @@ pub fn tune(spec: &TuneSpec) -> TuneResult {
     TuneResult { best: best.params, best_mflops: best.mflops, log }
 }
 
+/// Search space for the outer-product tile tier ([`crate::gemm::tile`]).
+/// The tile's geometry is (MR, kc, mc, nc) — NR is pinned by the ISA —
+/// so it gets its own spec rather than abusing [`TuneSpec`]'s dot-kernel
+/// fields.
+#[derive(Clone, Debug)]
+pub struct TileTuneSpec {
+    /// Probe problem size (m = n = k).
+    pub probe_size: usize,
+    /// Timing samples per candidate (median taken).
+    pub samples: usize,
+    /// Candidate tile heights (MR).
+    pub mrs: Vec<usize>,
+    /// Candidate k-block depths.
+    pub kcs: Vec<usize>,
+    /// Candidate row-block heights (rounded up to a multiple of each MR).
+    pub mcs: Vec<usize>,
+    /// Candidate column-block widths (must be multiples of NR).
+    pub ncs: Vec<usize>,
+}
+
+impl TileTuneSpec {
+    /// The default pruned grid around the 6×16 operating point.
+    pub fn avx2_default(probe_size: usize) -> Self {
+        Self {
+            probe_size,
+            samples: 3,
+            mrs: vec![4, 6],
+            kcs: vec![128, 256, 384],
+            mcs: vec![48, 72, 120],
+            ncs: vec![256, 480, 960],
+        }
+    }
+
+    /// All candidate parameter sets (mc snapped up to a multiple of mr,
+    /// deduplicated).
+    pub fn candidates(&self) -> Vec<TileParams> {
+        let mut out: Vec<TileParams> = Vec::new();
+        for &mr in &self.mrs {
+            for &kc in &self.kcs {
+                for &mc in &self.mcs {
+                    for &nc in &self.ncs {
+                        let p = TileParams {
+                            mr,
+                            mc: mc.div_ceil(mr) * mr,
+                            kc,
+                            nc,
+                            ..TileParams::avx2_6x16()
+                        };
+                        if p.validate().is_ok() && !out.contains(&p) {
+                            out.push(p);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One measured tile candidate.
+#[derive(Clone, Debug)]
+pub struct TileTunePoint {
+    /// The parameters measured.
+    pub params: TileParams,
+    /// Median MFlop/s.
+    pub mflops: f64,
+}
+
+/// Tile search outcome.
+#[derive(Clone, Debug)]
+pub struct TileTuneResult {
+    /// Fastest parameters found.
+    pub best: TileParams,
+    /// MFlop/s of the winner.
+    pub best_mflops: f64,
+    /// Every candidate with its measured rate, in search order.
+    pub log: Vec<TileTunePoint>,
+}
+
+/// Run the empirical tile search (same methodology as [`tune`], over the
+/// tile tier's geometry).
+pub fn tune_tile(spec: &TileTuneSpec) -> TileTuneResult {
+    let n = spec.probe_size;
+    let a = Matrix::random(n, n, 0xA77A5, -1.0, 1.0);
+    let b = Matrix::random(n, n, 0xB00B5, -1.0, 1.0);
+    let mut c = Matrix::zeros(n, n);
+    let flops = gemm_flops(n, n, n);
+
+    let mut log = Vec::new();
+    let mut best: Option<TileTunePoint> = None;
+    for params in spec.candidates() {
+        let mut bencher =
+            Bencher::new(1, spec.samples).flush_mode(FlushMode::Warm).min_sample_secs(0.01);
+        let r = bencher.run("tile candidate", flops, || {
+            tile::gemm(
+                &params,
+                Transpose::No,
+                Transpose::No,
+                1.0,
+                a.view(),
+                b.view(),
+                0.0,
+                &mut c.view_mut(),
+            );
+        });
+        let point = TileTunePoint { params, mflops: r.mflops() };
+        if best.as_ref().map(|b| point.mflops > b.mflops).unwrap_or(true) {
+            best = Some(point.clone());
+        }
+        log.push(point);
+    }
+    let best = best.expect("nonempty tile candidate grid");
+    TileTuneResult { best: best.params, best_mflops: best.mflops, log }
+}
+
+/// Run the tile search and install the winner into the process-wide
+/// dispatcher (freshly packed operands pick up the new layout).
+pub fn tune_tile_and_install(spec: &TileTuneSpec) -> TileTuneResult {
+    let result = tune_tile(spec);
+    crate::gemm::dispatch::install_tuned_tile(result.best)
+        .expect("tile winner comes from a validated candidate grid");
+    result
+}
+
+/// As [`tune_tile_and_install`], also persisting the winner to the
+/// on-disk cache. Returns the cache path written, if any.
+pub fn tune_tile_install_and_persist(spec: &TileTuneSpec) -> (TileTuneResult, Option<std::path::PathBuf>) {
+    let result = tune_tile_and_install(spec);
+    let path = cache::save_host_tile_entry(&result.best);
+    (result, path)
+}
+
+/// Probe plan for the Strassen crossover measurement: the sizes swept
+/// (ascending) and the samples per point — the `strassen_crossover`
+/// bench's methodology packaged as an autotune pass, closing the
+/// ROADMAP item that left `strassen_min_dim` at a fixed 1024.
+#[derive(Clone, Debug)]
+pub struct CrossoverSpec {
+    /// Square sizes measured, ascending.
+    pub sizes: Vec<usize>,
+    /// Timing samples per point (median taken).
+    pub samples: usize,
+}
+
+impl Default for CrossoverSpec {
+    fn default() -> Self {
+        Self { sizes: vec![256, 512, 768, 1024], samples: 3 }
+    }
+}
+
+/// One measured crossover point: flat-kernel vs Strassen-hybrid rates in
+/// *classic* (2n³) effective MFlop/s, directly comparable.
+#[derive(Clone, Debug)]
+pub struct CrossoverPoint {
+    /// Square problem size.
+    pub size: usize,
+    /// Flat serial vector kernel rate.
+    pub flat_mflops: f64,
+    /// Strassen hybrid effective rate.
+    pub hybrid_mflops: f64,
+}
+
+/// Crossover measurement outcome.
+#[derive(Clone, Debug)]
+pub struct CrossoverResult {
+    /// The derived `DispatchConfig::strassen_min_dim`: the smallest
+    /// measured size where the hybrid beat the flat kernel **and kept
+    /// beating it for the rest of the sweep** (one noisy early win must
+    /// not route every larger problem to a slower path), or twice the
+    /// largest probed size when the hybrid lost at the top of the sweep
+    /// (the crossover, if it exists, lies beyond it).
+    pub min_dim: usize,
+    /// Whether a crossover was actually observed inside the sweep.
+    pub observed: bool,
+    /// Every measured point, in sweep order.
+    pub log: Vec<CrossoverPoint>,
+}
+
+/// Measure where serial Strassen–Winograd starts beating the flat serial
+/// vector kernel (both single-threaded — Strassen is the dispatcher's
+/// single-threaded big-problem tier) and derive `strassen_min_dim`.
+pub fn tune_strassen_crossover(spec: &CrossoverSpec) -> CrossoverResult {
+    use crate::gemm::strassen::{strassen_matmul, DEFAULT_CUTOFF};
+    assert!(!spec.sizes.is_empty(), "crossover sweep needs at least one size");
+    let backend = if crate::gemm::dispatch::detect_avx2() {
+        Backend::Avx2Tile
+    } else if crate::gemm::dispatch::detect_sse() {
+        Backend::Simd
+    } else {
+        Backend::Blocked
+    };
+    let mut log = Vec::new();
+    for &n in &spec.sizes {
+        let a = Matrix::random(n, n, 1, -1.0, 1.0);
+        let b = Matrix::random(n, n, 2, -1.0, 1.0);
+        let classic = gemm_flops(n, n, n);
+        let mut c = Matrix::zeros(n, n);
+        let mut bencher =
+            Bencher::new(1, spec.samples).flush_mode(FlushMode::Warm).min_sample_secs(0.02);
+        let flat = bencher
+            .run("flat", classic, || {
+                crate::blas::sgemm_matrix(backend, Transpose::No, Transpose::No, 1.0, &a, &b, 0.0, &mut c)
+                    .expect("flat kernel");
+            })
+            .mflops();
+        let mut bencher =
+            Bencher::new(1, spec.samples).flush_mode(FlushMode::Warm).min_sample_secs(0.02);
+        let hybrid = bencher
+            .run("hybrid", classic, || {
+                let _ = strassen_matmul(&a, &b, DEFAULT_CUTOFF, backend);
+            })
+            .mflops();
+        log.push(CrossoverPoint { size: n, flat_mflops: flat, hybrid_mflops: hybrid });
+    }
+    // The crossover is the start of the *trailing* run of hybrid wins:
+    // a single noisy win below sizes where the flat kernel still clearly
+    // dominates must not be installed as the permanent threshold.
+    let mut min_dim = None;
+    for point in log.iter().rev() {
+        if point.hybrid_mflops > point.flat_mflops {
+            min_dim = Some(point.size);
+        } else {
+            break;
+        }
+    }
+    let observed = min_dim.is_some();
+    CrossoverResult {
+        min_dim: min_dim.unwrap_or(spec.sizes.last().unwrap() * 2),
+        observed,
+        log,
+    }
+}
+
+/// Measure the crossover, install it into the process-wide dispatcher
+/// and persist it in the tuned cache (like block sizes). Returns the
+/// result and the cache path written, if any.
+pub fn tune_strassen_install_and_persist(
+    spec: &CrossoverSpec,
+) -> (CrossoverResult, Option<std::path::PathBuf>) {
+    let result = tune_strassen_crossover(spec);
+    crate::gemm::plan::GemmContext::global()
+        .install_strassen_min_dim(result.min_dim)
+        .expect("measured crossover is positive");
+    let path = cache::save_host_strassen_entry(result.min_dim);
+    (result, path)
+}
+
 /// PHiPAC-style analytic model: estimated memory-hierarchy traffic in
 /// bytes per useful flop for an `n × n × n` problem, given an L1 budget.
 ///
@@ -309,6 +556,52 @@ mod tests {
         assert_eq!(snap.params_sse(), &r.best, "winner must land in the dispatch table");
         assert_eq!(spec.kernel.kernel_id(), crate::gemm::KernelId::Simd);
         install_tuned(crate::gemm::KernelId::Simd, before).expect("restore prior geometry");
+    }
+
+    #[test]
+    fn tile_candidates_align_and_dedupe() {
+        let spec = TileTuneSpec::avx2_default(64);
+        let cands = spec.candidates();
+        assert!(!cands.is_empty());
+        for p in &cands {
+            assert!(p.validate().is_ok(), "candidate {p:?} must validate");
+            assert_eq!(p.mc % p.mr, 0);
+        }
+        // mc = 48/72/120 are multiples of both 4 and 6, so the snapped
+        // grid has no duplicates: 2 * 3 * 3 * 3 candidates.
+        assert_eq!(cands.len(), 2 * 3 * 3 * 3);
+    }
+
+    #[test]
+    fn tune_tile_returns_a_winner_from_the_grid() {
+        let spec = TileTuneSpec {
+            probe_size: 64,
+            samples: 1,
+            mrs: vec![2, 6],
+            kcs: vec![32],
+            mcs: vec![12],
+            ncs: vec![32],
+        };
+        let r = tune_tile(&spec);
+        assert_eq!(r.log.len(), 2);
+        assert!(r.best_mflops > 0.0);
+        assert!(spec.candidates().contains(&r.best));
+    }
+
+    #[test]
+    fn strassen_crossover_derives_a_min_dim() {
+        // A tiny sweep (sizes far below any real crossover): the result
+        // must be one of the probed sizes or the 2×-beyond fallback, and
+        // the log must carry both rates per point.
+        let spec = CrossoverSpec { sizes: vec![48, 64], samples: 1 };
+        let r = tune_strassen_crossover(&spec);
+        assert_eq!(r.log.len(), 2);
+        assert!(r.log.iter().all(|p| p.flat_mflops > 0.0 && p.hybrid_mflops > 0.0));
+        if r.observed {
+            assert!(spec.sizes.contains(&r.min_dim));
+        } else {
+            assert_eq!(r.min_dim, 128);
+        }
     }
 
     #[test]

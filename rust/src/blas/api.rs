@@ -28,6 +28,7 @@ fn forced_kernel(backend: Backend) -> Result<Option<KernelId>, BlasError> {
         Resolved::Blocked => Some(KernelId::Blocked),
         Resolved::Simd => Some(KernelId::Simd),
         Resolved::Avx2 => Some(KernelId::Avx2),
+        Resolved::Avx2Tile => Some(KernelId::Avx2Tile),
         Resolved::Dispatch => None,
     })
 }

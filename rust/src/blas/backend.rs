@@ -25,6 +25,10 @@ pub enum Backend {
     Simd,
     /// Emmerald re-tuned for AVX2 + FMA (extension).
     Avx2,
+    /// Outer-product register-tiled AVX2+FMA kernel: an MR×NR tile of `C`
+    /// resident in registers (the fastest serial tier; what dispatch
+    /// picks on modern cores).
+    Avx2Tile,
     /// Route through the [`crate::gemm::dispatch`] registry: runtime
     /// CPU-feature detection plus shape heuristics over *every* kernel in
     /// the crate (including the parallel and Strassen drivers).
@@ -34,13 +38,14 @@ pub enum Backend {
 }
 
 impl Backend {
-    /// Parse a backend name (`naive|blocked|simd|avx2|dispatch|auto`).
+    /// Parse a backend name (`naive|blocked|simd|avx2|tile|dispatch|auto`).
     pub fn parse(s: &str) -> Result<Self, BlasError> {
         match s.to_ascii_lowercase().as_str() {
             "naive" => Ok(Backend::Naive),
             "blocked" | "atlas" => Ok(Backend::Blocked),
             "simd" | "sse" | "emmerald" => Ok(Backend::Simd),
             "avx2" => Ok(Backend::Avx2),
+            "tile" | "avx2-tile" => Ok(Backend::Avx2Tile),
             "dispatch" => Ok(Backend::Dispatch),
             "auto" => Ok(Backend::Auto),
             _ => Err(BlasError::BackendUnavailable("unknown backend name")),
@@ -54,6 +59,7 @@ impl Backend {
             Backend::Blocked => "blocked",
             Backend::Simd => "emmerald-sse",
             Backend::Avx2 => "emmerald-avx2",
+            Backend::Avx2Tile => "avx2-tile",
             Backend::Dispatch => "dispatch",
             Backend::Auto => "auto",
         }
@@ -78,6 +84,13 @@ impl Backend {
                     Err(BlasError::BackendUnavailable("emmerald-avx2 (needs AVX2+FMA)"))
                 }
             }
+            Backend::Avx2Tile => {
+                if gemm::dispatch::detect_avx2() {
+                    Ok(Resolved::Avx2Tile)
+                } else {
+                    Err(BlasError::BackendUnavailable("avx2-tile (needs AVX2+FMA)"))
+                }
+            }
             // The dispatcher is always available: it degrades to the best
             // kernel the CPU actually has.
             Backend::Dispatch | Backend::Auto => Ok(Resolved::Dispatch),
@@ -87,10 +100,17 @@ impl Backend {
 
 /// All backends executable on this CPU.
 pub fn available_backends() -> Vec<Backend> {
-    [Backend::Naive, Backend::Blocked, Backend::Simd, Backend::Avx2, Backend::Dispatch]
-        .into_iter()
-        .filter(|b| b.resolve().is_ok())
-        .collect()
+    [
+        Backend::Naive,
+        Backend::Blocked,
+        Backend::Simd,
+        Backend::Avx2,
+        Backend::Avx2Tile,
+        Backend::Dispatch,
+    ]
+    .into_iter()
+    .filter(|b| b.resolve().is_ok())
+    .collect()
 }
 
 /// A concrete, feature-checked implementation.
@@ -106,6 +126,7 @@ pub(crate) enum Resolved {
     Blocked,
     Simd,
     Avx2,
+    Avx2Tile,
     Dispatch,
 }
 

@@ -287,14 +287,17 @@ fn run_serial_scratch(
     scratch: &mut Scratch,
 ) {
     match id {
+        KernelId::Avx2Tile if d.has_avx2() => {
+            super::tile::gemm_with_scratch(d.params_tile(), transa, transb, alpha, a, b, beta, c, scratch);
+        }
         KernelId::Avx2 if d.has_avx2() => {
             super::avx2::gemm_with_scratch(d.params_avx2(), transa, transb, alpha, a, b, beta, c, scratch);
         }
-        KernelId::Avx2 | KernelId::Simd if d.has_sse() => {
+        KernelId::Avx2Tile | KernelId::Avx2 | KernelId::Simd if d.has_sse() => {
             super::simd::gemm_with_scratch(d.params_sse(), transa, transb, alpha, a, b, beta, c, scratch);
         }
         KernelId::Naive => naive::gemm(transa, transb, alpha, a, b, beta, c),
-        KernelId::Blocked | KernelId::Avx2 | KernelId::Simd => {
+        KernelId::Blocked | KernelId::Avx2Tile | KernelId::Avx2 | KernelId::Simd => {
             blocked::gemm(&d.config().blocked, transa, transb, alpha, a, b, beta, c);
         }
         // Parallel/Strassen are whole-problem drivers with no per-item

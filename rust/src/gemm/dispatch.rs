@@ -30,9 +30,10 @@
 //! [`crate::blas::Backend::Auto`], which now resolves to it); construct a
 //! local [`GemmDispatch`] for custom thresholds or deterministic tests.
 
-use super::params::BlockParams;
+use super::params::{BlockParams, TileParams};
+use super::parallel::SerialVecKernel;
 use super::simd::VecIsa;
-use super::{blocked, naive, parallel, simd, strassen};
+use super::{blocked, naive, parallel, simd, strassen, tile};
 use crate::blas::{Backend, MatMut, MatRef, Matrix, Transpose};
 use crate::util::threadpool::ThreadPool;
 
@@ -47,6 +48,9 @@ pub enum KernelId {
     Simd,
     /// Emmerald AVX2 + FMA.
     Avx2,
+    /// Outer-product register-tiled AVX2+FMA kernel (MR×NR tile of `C`
+    /// resident in registers) — the fastest serial tier.
+    Avx2Tile,
     /// Thread-parallel driver over the widest vector kernel: row- or
     /// column-sliced, layout-complete (each slice packs its own panels).
     Parallel,
@@ -56,11 +60,12 @@ pub enum KernelId {
 
 impl KernelId {
     /// Every kernel, in registry order.
-    pub const ALL: [KernelId; 6] = [
+    pub const ALL: [KernelId; 7] = [
         KernelId::Naive,
         KernelId::Blocked,
         KernelId::Simd,
         KernelId::Avx2,
+        KernelId::Avx2Tile,
         KernelId::Parallel,
         KernelId::Strassen,
     ];
@@ -72,6 +77,7 @@ impl KernelId {
             KernelId::Blocked => "blocked",
             KernelId::Simd => "emmerald-sse",
             KernelId::Avx2 => "emmerald-avx2",
+            KernelId::Avx2Tile => "avx2-tile",
             KernelId::Parallel => "parallel",
             KernelId::Strassen => "strassen",
         }
@@ -82,7 +88,7 @@ impl KernelId {
         match self {
             KernelId::Naive | KernelId::Blocked => "none",
             KernelId::Simd | KernelId::Parallel => "sse",
-            KernelId::Avx2 => "avx2+fma",
+            KernelId::Avx2 | KernelId::Avx2Tile => "avx2+fma",
             KernelId::Strassen => "none (base case uses best serial kernel)",
         }
     }
@@ -92,7 +98,7 @@ impl KernelId {
         match self {
             KernelId::Naive | KernelId::Blocked | KernelId::Strassen => true,
             KernelId::Simd | KernelId::Parallel => detect_sse(),
-            KernelId::Avx2 => detect_avx2(),
+            KernelId::Avx2 | KernelId::Avx2Tile => detect_avx2(),
         }
     }
 
@@ -206,6 +212,14 @@ pub struct DispatchConfig {
     pub avx2: BlockParams,
     /// Block geometry for the scalar blocked proxy (autotune can overwrite).
     pub blocked: BlockParams,
+    /// Tile geometry for the outer-product register-tiled kernel
+    /// (autotune can overwrite).
+    pub tile: TileParams,
+    /// Minimum output rows before the outer-product tile tier outranks
+    /// the dot-panel AVX2 kernel. Below this the last (only) MR-strip is
+    /// mostly zero padding, so the row-oriented dot kernel wins —
+    /// gemv-shaped calls (`m < 4` under the default) stay on it.
+    pub tile_min_m: usize,
 }
 
 impl Default for DispatchConfig {
@@ -224,6 +238,8 @@ impl Default for DispatchConfig {
             sse: BlockParams::emmerald_sse(),
             avx2: BlockParams::emmerald_avx2(),
             blocked: BlockParams::atlas_proxy(),
+            tile: TileParams::avx2_6x16(),
+            tile_min_m: 4,
         }
     }
 }
@@ -285,26 +301,51 @@ impl GemmDispatch {
         &self.cfg.avx2
     }
 
+    /// Tile geometry the outer-product kernel will run with.
+    pub fn params_tile(&self) -> &TileParams {
+        &self.cfg.tile
+    }
+
     /// Install tuned block parameters for one kernel family (the autotune
     /// feed). Parameters are validated; families without a geometry
-    /// (naive/parallel/strassen) are ignored. Returns whether anything
-    /// was updated.
+    /// (naive/parallel/strassen — and the tile tier, which carries a
+    /// [`TileParams`], see [`set_tuned_tile`](Self::set_tuned_tile)) are
+    /// ignored. Returns whether anything was updated.
     pub fn set_tuned(&mut self, id: KernelId, params: BlockParams) -> Result<bool, String> {
         params.validate()?;
         match id {
             KernelId::Simd => self.cfg.sse = params,
             KernelId::Avx2 => self.cfg.avx2 = params,
             KernelId::Blocked => self.cfg.blocked = params,
-            KernelId::Naive | KernelId::Parallel | KernelId::Strassen => return Ok(false),
+            KernelId::Naive | KernelId::Avx2Tile | KernelId::Parallel | KernelId::Strassen => {
+                return Ok(false)
+            }
         }
         Ok(true)
     }
 
+    /// Install tuned tile geometry for the outer-product tier.
+    pub fn set_tuned_tile(&mut self, params: TileParams) -> Result<(), String> {
+        params.validate()?;
+        self.cfg.tile = params;
+        Ok(())
+    }
+
+    /// Install a tuned Strassen crossover (the `strassen_crossover`
+    /// measurement replacing the fixed default).
+    pub fn set_strassen_min_dim(&mut self, min_dim: usize) -> Result<(), String> {
+        if min_dim == 0 {
+            return Err("strassen_min_dim must be positive".into());
+        }
+        self.cfg.strassen_min_dim = min_dim;
+        Ok(())
+    }
+
     /// The widest serial kernel this CPU supports — the single source of
-    /// the AVX2 → SSE → blocked preference ladder.
+    /// the tile → AVX2 → SSE → blocked preference ladder.
     pub fn best_serial_vector(&self) -> KernelId {
         if self.have_avx2 {
-            KernelId::Avx2
+            KernelId::Avx2Tile
         } else if self.have_sse {
             KernelId::Simd
         } else {
@@ -315,11 +356,29 @@ impl GemmDispatch {
     /// The serial kernel the heuristics would pick for this shape
     /// (never `Parallel` or `Strassen`) — used for per-item work inside
     /// the batched driver and as the fallback for degraded calls.
+    /// Gemv-shaped outputs (`m < tile_min_m`) stay on the dot-panel AVX2
+    /// kernel: a tile row would be mostly zero padding.
     pub fn select_serial(&self, shape: &GemmShape, alpha: f32) -> KernelId {
         if alpha == 0.0 || shape.k == 0 || shape.max_dim() <= self.cfg.tiny_dim {
             return KernelId::Naive;
         }
-        self.best_serial_vector()
+        let best = self.best_serial_vector();
+        if best == KernelId::Avx2Tile && shape.m < self.cfg.tile_min_m {
+            return KernelId::Avx2;
+        }
+        best
+    }
+
+    /// The serial vector kernel (with its geometry) that parallel slices
+    /// run — one decision point shared with the parallel driver. Applies
+    /// the same gemv-shape guard as [`select_serial`](Self::select_serial)
+    /// (`m` is the full output height; row slices inherit the choice).
+    pub(crate) fn serial_vec_kernel(&self, m: usize) -> SerialVecKernel {
+        match self.best_serial_vector() {
+            KernelId::Avx2Tile if m >= self.cfg.tile_min_m => SerialVecKernel::Tile(self.cfg.tile),
+            KernelId::Avx2Tile | KernelId::Avx2 => SerialVecKernel::Dot(VecIsa::Avx2, self.cfg.avx2),
+            _ => SerialVecKernel::Dot(VecIsa::Sse, self.cfg.sse),
+        }
     }
 
     /// Pick a kernel for one call. Pure function of (shape, alpha, config,
@@ -477,6 +536,13 @@ impl GemmDispatch {
                 super::avx2::gemm(&self.cfg.avx2, transa, transb, alpha, a, b, beta, c);
                 KernelId::Avx2
             }
+            KernelId::Avx2Tile => {
+                if !self.have_avx2 {
+                    return self.run(pool, KernelId::Simd, shape, transa, transb, alpha, a, b, beta, c);
+                }
+                tile::gemm(&self.cfg.tile, transa, transb, alpha, a, b, beta, c);
+                KernelId::Avx2Tile
+            }
             KernelId::Parallel => {
                 // Mirror gemm_parallel_vec's internal fallbacks so the
                 // returned id names the kernel that actually ran. A pure
@@ -487,15 +553,10 @@ impl GemmDispatch {
                 if split == parallel::Split::Serial || (!pure_scale && !self.have_sse) {
                     return self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c);
                 }
-                let (isa, params) = match self.best_serial_vector() {
-                    KernelId::Avx2 => (VecIsa::Avx2, &self.cfg.avx2),
-                    _ => (VecIsa::Sse, &self.cfg.sse),
-                };
                 match parallel::gemm_parallel_vec(
-                    isa,
+                    &self.serial_vec_kernel(shape.m),
                     pool,
                     self.threads(),
-                    params,
                     transa,
                     transb,
                     alpha,
@@ -541,6 +602,7 @@ impl GemmDispatch {
     /// `alpha`/`beta` (the recursion itself computes plain `A·B`).
     fn run_strassen(&self, alpha: f32, a: MatRef<'_>, b: MatRef<'_>, beta: f32, c: &mut MatMut<'_>) {
         let base = match self.best_serial_vector() {
+            KernelId::Avx2Tile => Backend::Avx2Tile,
             KernelId::Avx2 => Backend::Avx2,
             KernelId::Simd => Backend::Simd,
             _ => Backend::Blocked,
@@ -636,13 +698,25 @@ pub fn with_global<R>(f: impl FnOnce(&GemmDispatch) -> R) -> R {
 
 /// The block geometry the process-wide dispatcher currently carries for
 /// one kernel family (tuned via [`install_tuned`], defaults otherwise).
-/// Families without a geometry return the SSE default.
+/// Families without a [`BlockParams`] geometry (including the tile tier —
+/// see [`tuned_tile_params`]) return the SSE default.
 pub fn tuned_params(id: KernelId) -> BlockParams {
     with_global(|d| match id {
         KernelId::Avx2 => d.cfg.avx2,
         KernelId::Blocked => d.cfg.blocked,
         _ => d.cfg.sse,
     })
+}
+
+/// The tile geometry the process-wide dispatcher currently carries for
+/// the outer-product tier.
+pub fn tuned_tile_params() -> TileParams {
+    with_global(|d| d.cfg.tile)
+}
+
+/// Install tuned tile geometry into the process-wide dispatcher.
+pub fn install_tuned_tile(params: TileParams) -> Result<(), String> {
+    super::plan::GemmContext::global().install_tuned_tile(params)
 }
 
 /// One GEMM through the process-wide dispatcher (the implementation behind
@@ -719,6 +793,18 @@ mod tests {
         );
         let shape = |m, n, k, ta, tb| GemmShape { m, n, k, transa: ta, transb: tb };
 
+        // AVX2 hosts head the serial ladder with the tile tier, keeping
+        // the dot kernel for gemv-shaped outputs.
+        if detect_avx2() {
+            assert_eq!(
+                d.select_serial(&shape(32, 32, 32, Transpose::No, Transpose::No), 1.0),
+                KernelId::Avx2Tile
+            );
+            assert_eq!(
+                d.select_serial(&shape(2, 64, 64, Transpose::No, Transpose::No), 1.0),
+                KernelId::Avx2
+            );
+        }
         // Tiny → naive, regardless of transposes.
         assert_eq!(d.select(&shape(4, 8, 2, Transpose::No, Transpose::No), 1.0), KernelId::Naive);
         assert_eq!(d.select(&shape(8, 8, 8, Transpose::Yes, Transpose::No), 1.0), KernelId::Naive);
@@ -740,8 +826,11 @@ mod tests {
         assert_eq!(d1.select(&shape(300, 300, 300, Transpose::Yes, Transpose::No), 1.0), serial);
         // Single-row output splits over columns → still parallel.
         assert_eq!(d.select(&shape(1, 512, 512, Transpose::No, Transpose::No), 1.0), KernelId::Parallel);
-        // A 1×1 output has nothing to split.
-        assert_eq!(d.select(&shape(1, 1, 100_000_000, Transpose::No, Transpose::No), 1.0), serial);
+        // A 1×1 output has nothing to split; gemv-shaped selection (its
+        // own serial pick for m = 1, never the tile tier).
+        let s11 = shape(1, 1, 100_000_000, Transpose::No, Transpose::No);
+        assert_eq!(d.select(&s11, 1.0), d.select_serial(&s11, 1.0));
+        assert_ne!(d.select_serial(&s11, 1.0), KernelId::Avx2Tile);
         // Transposed operands parallelise too (pack-on-split).
         assert_eq!(d.select(&shape(300, 300, 300, Transpose::Yes, Transpose::No), 1.0), KernelId::Parallel);
         assert_eq!(d.select(&shape(128, 128, 128, Transpose::No, Transpose::Yes), 1.0), KernelId::Parallel);
@@ -923,7 +1012,12 @@ mod tests {
             assert_eq!(run(48, 48, 48), KernelId::Parallel);
         }
         let mid = run(16, 16, 16);
-        assert!(mid == KernelId::Avx2 || mid == KernelId::Simd || mid == KernelId::Blocked);
+        assert!(
+            mid == KernelId::Avx2Tile
+                || mid == KernelId::Avx2
+                || mid == KernelId::Simd
+                || mid == KernelId::Blocked
+        );
     }
 
     #[test]

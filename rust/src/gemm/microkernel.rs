@@ -207,7 +207,90 @@ pub unsafe fn sse_dot_panel_strided(
     }
 }
 
-/// AVX2+FMA micro-kernel: the Emmerald structure at 8-wide.
+/// AVX2+FMA micro-kernel over `R` rows of `A` at once — the one body
+/// behind [`avx2_dot_panel`] and [`avx2_dot_panel2`] (which had drifted
+/// apart in prefetch handling before being unified): every `B` vector is
+/// re-used against all `R` `A` rows, so load pressure drops from `W+R`
+/// loads per `R·W` FMAs as `R` grows. `R = 2` with `W = 6` is the
+/// FMA-bound operating point of the dot tier on a 16-register file
+/// (2 A + 12 accumulators + B streams ≤ 16).
+///
+/// Each `A` row is prefetched at the same distance — the drift this
+/// unification removes was panel2 prefetching both rows while the
+/// single-row kernel used a shorter pipeline.
+///
+/// # Safety
+/// Every `rows[i]` and every `cols[j]` readable for `len` f32s; AVX2 and
+/// FMA must be available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn avx2_dot_panel_rows<const R: usize, const W: usize, const U: usize>(
+    rows: [*const f32; R],
+    len: usize,
+    cols: [*const f32; W],
+    prefetch: bool,
+) -> [[f32; W]; R] {
+    let mut acc = [[_mm256_setzero_ps(); W]; R];
+    let step = 8 * U;
+    let mut p = 0;
+    while p + step <= len {
+        if prefetch {
+            for r in rows {
+                _mm_prefetch::<_MM_HINT_T0>(r.add(p + PREFETCH_DIST).cast());
+            }
+        }
+        for u in 0..U {
+            let off = p + 8 * u;
+            let mut va = [_mm256_setzero_ps(); R];
+            for (i, r) in rows.iter().enumerate() {
+                va[i] = _mm256_loadu_ps(r.add(off));
+            }
+            for (j, &col) in cols.iter().enumerate() {
+                let vb = _mm256_loadu_ps(col.add(off));
+                for i in 0..R {
+                    acc[i][j] = _mm256_fmadd_ps(va[i], vb, acc[i][j]);
+                }
+            }
+        }
+        p += step;
+    }
+    while p + 8 <= len {
+        let mut va = [_mm256_setzero_ps(); R];
+        for (i, r) in rows.iter().enumerate() {
+            va[i] = _mm256_loadu_ps(r.add(p));
+        }
+        for (j, &col) in cols.iter().enumerate() {
+            let vb = _mm256_loadu_ps(col.add(p));
+            for i in 0..R {
+                acc[i][j] = _mm256_fmadd_ps(va[i], vb, acc[i][j]);
+            }
+        }
+        p += 8;
+    }
+    let mut out = [[0.0f32; W]; R];
+    for i in 0..R {
+        for j in 0..W {
+            out[i][j] = hsum256(acc[i][j]);
+        }
+    }
+    while p < len {
+        let mut av = [0.0f32; R];
+        for (i, r) in rows.iter().enumerate() {
+            av[i] = *r.add(p);
+        }
+        for (j, &col) in cols.iter().enumerate() {
+            let bv = *col.add(p);
+            for i in 0..R {
+                out[i][j] += av[i] * bv;
+            }
+        }
+        p += 1;
+    }
+    out
+}
+
+/// AVX2+FMA micro-kernel: the Emmerald structure at 8-wide
+/// (single-row instantiation of [`avx2_dot_panel_rows`]).
 ///
 /// # Safety
 /// Pointer contract as [`sse_dot_panel`]; AVX2 and FMA must be available.
@@ -219,52 +302,18 @@ pub unsafe fn avx2_dot_panel<const W: usize, const U: usize>(
     cols: [*const f32; W],
     prefetch: bool,
 ) -> [f32; W] {
-    let mut acc = [_mm256_setzero_ps(); W];
-    let step = 8 * U;
-    let mut p = 0;
-    while p + step <= len {
-        if prefetch {
-            _mm_prefetch::<_MM_HINT_T0>(a.add(p + PREFETCH_DIST).cast());
-        }
-        for u in 0..U {
-            let off = p + 8 * u;
-            let va = _mm256_loadu_ps(a.add(off));
-            for j in 0..W {
-                acc[j] = _mm256_fmadd_ps(va, _mm256_loadu_ps(cols[j].add(off)), acc[j]);
-            }
-        }
-        p += step;
-    }
-    while p + 8 <= len {
-        let va = _mm256_loadu_ps(a.add(p));
-        for j in 0..W {
-            acc[j] = _mm256_fmadd_ps(va, _mm256_loadu_ps(cols[j].add(p)), acc[j]);
-        }
-        p += 8;
-    }
-    let mut out = [0.0f32; W];
-    for j in 0..W {
-        out[j] = hsum256(acc[j]);
-    }
-    while p < len {
-        let av = *a.add(p);
-        for j in 0..W {
-            out[j] += av * *cols[j].add(p);
-        }
-        p += 1;
-    }
+    let [out] = avx2_dot_panel_rows::<1, W, U>([a], len, cols, prefetch);
     out
 }
 
-/// AVX2+FMA micro-kernel over **two** rows of `A` at once.
+/// AVX2+FMA micro-kernel over **two** rows of `A` at once
+/// (two-row instantiation of [`avx2_dot_panel_rows`]).
 ///
 /// The paper's 1×W structure issues `W+1` loads per `W` FMAs, which on a
 /// modern two-load-port core caps throughput at `2W/(W+1)` FMAs/cycle —
 /// load-bound. Re-using each `B` vector against two `A` rows halves the
 /// load pressure (`W+2` loads per `2W` FMAs) and makes the kernel
-/// FMA-bound. This is the natural continuation of the paper's register
-/// strategy on a 16-register file (2 A + 2·W accumulators ≤ 16 for W=6)
-/// and the main host-side win of the perf pass (see EXPERIMENTS.md §Perf).
+/// FMA-bound.
 ///
 /// # Safety
 /// `a0`, `a1` and every `cols[j]` readable for `len` f32s; AVX2+FMA.
@@ -277,53 +326,7 @@ pub unsafe fn avx2_dot_panel2<const W: usize, const U: usize>(
     cols: [*const f32; W],
     prefetch: bool,
 ) -> [[f32; W]; 2] {
-    let mut acc0 = [_mm256_setzero_ps(); W];
-    let mut acc1 = [_mm256_setzero_ps(); W];
-    let step = 8 * U;
-    let mut p = 0;
-    while p + step <= len {
-        if prefetch {
-            _mm_prefetch::<_MM_HINT_T0>(a0.add(p + PREFETCH_DIST).cast());
-            _mm_prefetch::<_MM_HINT_T0>(a1.add(p + PREFETCH_DIST).cast());
-        }
-        for u in 0..U {
-            let off = p + 8 * u;
-            let va0 = _mm256_loadu_ps(a0.add(off));
-            let va1 = _mm256_loadu_ps(a1.add(off));
-            for j in 0..W {
-                let vb = _mm256_loadu_ps(cols[j].add(off));
-                acc0[j] = _mm256_fmadd_ps(va0, vb, acc0[j]);
-                acc1[j] = _mm256_fmadd_ps(va1, vb, acc1[j]);
-            }
-        }
-        p += step;
-    }
-    while p + 8 <= len {
-        let va0 = _mm256_loadu_ps(a0.add(p));
-        let va1 = _mm256_loadu_ps(a1.add(p));
-        for j in 0..W {
-            let vb = _mm256_loadu_ps(cols[j].add(p));
-            acc0[j] = _mm256_fmadd_ps(va0, vb, acc0[j]);
-            acc1[j] = _mm256_fmadd_ps(va1, vb, acc1[j]);
-        }
-        p += 8;
-    }
-    let mut out = [[0.0f32; W]; 2];
-    for j in 0..W {
-        out[0][j] = hsum256(acc0[j]);
-        out[1][j] = hsum256(acc1[j]);
-    }
-    while p < len {
-        let av0 = *a0.add(p);
-        let av1 = *a1.add(p);
-        for j in 0..W {
-            let bv = *cols[j].add(p);
-            out[0][j] += av0 * bv;
-            out[1][j] += av1 * bv;
-        }
-        p += 1;
-    }
-    out
+    avx2_dot_panel_rows::<2, W, U>([a0, a1], len, cols, prefetch)
 }
 
 /// Runtime-width dispatcher over [`avx2_dot_panel2`]. Writes row 0's dot
@@ -498,6 +501,33 @@ mod tests {
                 };
                 let expect: Vec<f32> = bs[..w].iter().map(|b| ref_dot(&a, b)).collect();
                 assert_allclose(&out, &expect, 1e-4, 1e-5, &format!("avx2 w={w} len={len}"));
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_two_row_kernel_agrees_with_two_single_row_calls() {
+        // The dedup contract: panel2 (R = 2) must produce exactly the
+        // bits of two independent single-row runs — the per-row FMA
+        // chains are independent whatever R is.
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            eprintln!("skipping: no AVX2+FMA");
+            return;
+        }
+        for &len in &[5usize, 8, 33, 100] {
+            let a0 = rand_vec(11, len);
+            let a1 = rand_vec(12, len);
+            let bs: Vec<Vec<f32>> = (0..6).map(|j| rand_vec(300 + j, len)).collect();
+            let cols: [*const f32; 6] = std::array::from_fn(|j| bs[j].as_ptr());
+            unsafe {
+                let both = avx2_dot_panel2::<6, 2>(a0.as_ptr(), a1.as_ptr(), len, cols, true);
+                let one0 = avx2_dot_panel::<6, 2>(a0.as_ptr(), len, cols, true);
+                let one1 = avx2_dot_panel::<6, 2>(a1.as_ptr(), len, cols, true);
+                assert_eq!(both[0], one0, "row 0 len={len}");
+                assert_eq!(both[1], one1, "row 1 len={len}");
             }
         }
     }

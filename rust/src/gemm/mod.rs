@@ -12,17 +12,33 @@
 //!    through with prefetch hints; the inner loop is unrolled; an outer
 //!    L2-level blocking keeps peak rates for matrices far larger than L2.
 //!
+//! On modern cores a third idea outranks both: **outer-product register
+//! tiling** ([`tile`]). The dot-product strategy holds one row of partial
+//! sums and pays a horizontal reduction per `C` element — the right trade
+//! for 8 XMM registers. A 16-register AVX2+FMA file instead holds an
+//! entire `MR × NR` tile of `C` resident in registers: per k step the
+//! kernel broadcasts `MR` values of `A'` against `NR` values of `B'` and
+//! issues `MR·NR/8` FMAs, reusing every load `MR` (resp. `NR`) times with
+//! zero horizontal sums and one store per `MR·NR·kc` FMAs. Dispatch picks
+//! the tile tier on AVX2+FMA hosts for every shape tall enough to fill a
+//! tile row (`m ≥ tile_min_m`); the dot-panel kernels remain as the
+//! paper-faithful baseline, the gemv-shaped fallback and the
+//! `tile_vs_dot` ablation point.
+//!
 //! Modules:
 //!
 //! * [`params`] — block geometry + optimisation toggles (every §3 technique
 //!   can be switched off individually for the ablation benches).
 //! * [`naive`] — the paper's naive 3-loop comparator.
-//! * [`pack`] — re-buffering: panel-major packing of `B`, row packing of `A`.
+//! * [`pack`] — re-buffering: panel-major packing of `B`, row packing of
+//!   `A`, plus the tile tier's MR-strip / NR-panel k-major layouts.
 //! * [`microkernel`] — the SSE dot-product micro-kernels (`nr` = 1..=8) and
 //!   their scalar + AVX2 counterparts.
 //! * [`blocked`] — the ATLAS proxy: identical blocking, *scalar* kernel.
 //! * [`simd`] — the Emmerald driver (SSE).
 //! * [`avx2`] — the Emmerald driver re-tuned for AVX2 + FMA (extension).
+//! * [`tile`] — the outer-product register-tiled tier (AVX2+FMA 6×16
+//!   micro-kernel with C-resident accumulation; scalar reference tile).
 //! * [`dispatch`] — the kernel registry: runtime CPU-feature detection and
 //!   shape-based selection over every backend (including [`parallel`] and
 //!   [`strassen`]).
@@ -46,10 +62,11 @@ pub mod naive;
 pub mod pack;
 pub mod params;
 pub mod simd;
+pub mod tile;
 
 pub use batch::{gemm_batch, BatchStrides};
 pub use dispatch::{registry, DispatchConfig, GemmDispatch, KernelId, KernelInfo};
-pub use params::{BlockParams, Unroll};
+pub use params::{BlockParams, TileParams, Unroll};
 pub use plan::{GemmBuilder, GemmContext, GemmPlan, PackedA, PackedB};
 
 #[cfg(test)]

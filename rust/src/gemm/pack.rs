@@ -198,6 +198,197 @@ impl Default for PackedA {
     }
 }
 
+/// A block of `op(A)` packed in **MR-row strips** for the outer-product
+/// tile kernel ([`crate::gemm::tile`]).
+///
+/// Layout: strip `s` covers rows `s*mr .. s*mr+mr` of the block and
+/// occupies `mr * kc_eff` consecutive floats; within a strip the data is
+/// k-major — offset `p*mr + l` holds `op(A)[row s*mr+l][kk+p]`. The
+/// micro-kernel broadcasts `mr` consecutive values per k step. Rows past
+/// the block's edge are zero-filled so fringe strips run the full-MR
+/// kernel (the padded lanes are masked out at writeback).
+#[derive(Debug)]
+pub struct TilePackedA {
+    buf: Vec<f32>,
+    mr: usize,
+    kc_eff: usize,
+    rows: usize,
+}
+
+impl TilePackedA {
+    /// An empty packed buffer.
+    pub fn new() -> Self {
+        Self { buf: Vec::new(), mr: 1, kc_eff: 0, rows: 0 }
+    }
+
+    /// Pack the `mb_eff × kb_eff` block of `op(A)` at `(ii, kk)` into
+    /// `mr`-row strips.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack(
+        &mut self,
+        a: MatRef<'_>,
+        transa: Transpose,
+        ii: usize,
+        mb_eff: usize,
+        kk: usize,
+        kb_eff: usize,
+        mr: usize,
+    ) {
+        assert!(mr >= 1);
+        let strips = mb_eff.div_ceil(mr).max(1);
+        self.buf.clear();
+        self.buf.resize(strips * mr * kb_eff.max(1), 0.0);
+        self.mr = mr;
+        self.kc_eff = kb_eff;
+        self.rows = mb_eff;
+        for s in 0..strips {
+            let base = s * mr * kb_eff;
+            let h = mr.min(mb_eff.saturating_sub(s * mr));
+            for p in 0..kb_eff {
+                for l in 0..h {
+                    let i = s * mr + l;
+                    // SAFETY: caller guarantees the block is in range.
+                    self.buf[base + p * mr + l] = unsafe {
+                        match transa {
+                            Transpose::No => a.get_unchecked(ii + i, kk + p),
+                            Transpose::Yes => a.get_unchecked(kk + p, ii + i),
+                        }
+                    };
+                }
+                // Rows h..mr stay zero (buf was zero-filled).
+            }
+        }
+    }
+
+    /// Number of strips currently packed.
+    pub fn strips(&self) -> usize {
+        self.rows.div_ceil(self.mr).max(1)
+    }
+
+    /// Logical height of strip `s` (the last strip may be shorter).
+    pub fn strip_height(&self, s: usize) -> usize {
+        self.mr.min(self.rows - s * self.mr)
+    }
+
+    /// Pointer to packed strip `s` (`mr * kc_eff` floats, k-major).
+    #[inline(always)]
+    pub fn strip_ptr(&self, s: usize) -> *const f32 {
+        debug_assert!(s < self.strips());
+        unsafe { self.buf.as_ptr().add(s * self.mr * self.kc_eff) }
+    }
+
+    /// Unpadded k depth of the packed block.
+    pub fn kc_eff(&self) -> usize {
+        self.kc_eff
+    }
+
+    /// Bytes currently held (diagnostic).
+    pub fn bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<f32>()
+    }
+}
+
+impl Default for TilePackedA {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A block of `op(B)` packed in **NR-column panels** for the outer-product
+/// tile kernel — the paper's re-buffering generalised to the tile's NR
+/// and re-ordered k-major.
+///
+/// Layout: panel `q` covers columns `j0 + q*nr ..` and occupies
+/// `nr * kc_eff` consecutive floats; offset `p*nr + l` holds
+/// `op(B)[kk+p][j0 + q*nr + l]`. One k step of the micro-kernel loads the
+/// panel's `nr` consecutive values as two full vectors. Columns past the
+/// block's edge are zero-filled (masked out at writeback).
+#[derive(Debug)]
+pub struct TilePackedB {
+    buf: Vec<f32>,
+    nr: usize,
+    kc_eff: usize,
+    cols: usize,
+}
+
+impl TilePackedB {
+    /// An empty packed buffer.
+    pub fn new() -> Self {
+        Self { buf: Vec::new(), nr: 1, kc_eff: 0, cols: 0 }
+    }
+
+    /// Pack rows `kk .. kk+kb_eff` of `op(B)`, columns `j0 .. j0+nb_eff`,
+    /// into `nr`-column panels.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack(
+        &mut self,
+        b: MatRef<'_>,
+        transb: Transpose,
+        kk: usize,
+        kb_eff: usize,
+        j0: usize,
+        nb_eff: usize,
+        nr: usize,
+    ) {
+        assert!(nr >= 1);
+        let panels = nb_eff.div_ceil(nr).max(1);
+        self.buf.clear();
+        self.buf.resize(panels * nr * kb_eff.max(1), 0.0);
+        self.nr = nr;
+        self.kc_eff = kb_eff;
+        self.cols = nb_eff;
+        for q in 0..panels {
+            let base = q * nr * kb_eff;
+            let w = nr.min(nb_eff.saturating_sub(q * nr));
+            for p in 0..kb_eff {
+                for l in 0..w {
+                    let j = j0 + q * nr + l;
+                    // SAFETY: caller guarantees the block is in range.
+                    self.buf[base + p * nr + l] = unsafe {
+                        match transb {
+                            Transpose::No => b.get_unchecked(kk + p, j),
+                            Transpose::Yes => b.get_unchecked(j, kk + p),
+                        }
+                    };
+                }
+            }
+        }
+    }
+
+    /// Number of panels currently packed.
+    pub fn panels(&self) -> usize {
+        self.cols.div_ceil(self.nr).max(1)
+    }
+
+    /// Logical width of panel `q` (the last panel may be narrower).
+    pub fn panel_width(&self, q: usize) -> usize {
+        self.nr.min(self.cols - q * self.nr)
+    }
+
+    /// Pointer to packed panel `q` (`nr * kc_eff` floats, k-major).
+    #[inline(always)]
+    pub fn panel_ptr(&self, q: usize) -> *const f32 {
+        debug_assert!(q < self.panels());
+        unsafe { self.buf.as_ptr().add(q * self.nr * self.kc_eff) }
+    }
+
+    /// Unpadded k depth of the packed block.
+    pub fn kc_eff(&self) -> usize {
+        self.kc_eff
+    }
+
+    /// Bytes currently held (diagnostic).
+    pub fn bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<f32>()
+    }
+}
+
+impl Default for TilePackedB {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Reusable packing scratch for the blocked drivers.
 ///
 /// The serial entry points allocate one of these per call; the batched
@@ -208,12 +399,16 @@ impl Default for PackedA {
 pub struct Scratch {
     pub(crate) a: PackedA,
     pub(crate) b: PackedB,
+    /// Tile-layout buffers for the outer-product tier (empty until the
+    /// tile driver first runs through this scratch).
+    pub(crate) ta: TilePackedA,
+    pub(crate) tb: TilePackedB,
 }
 
 impl Scratch {
     /// Fresh, empty scratch buffers.
     pub fn new() -> Self {
-        Self { a: PackedA::new(), b: PackedB::new(1) }
+        Self { a: PackedA::new(), b: PackedB::new(1), ta: TilePackedA::new(), tb: TilePackedB::new() }
     }
 }
 
@@ -403,6 +598,83 @@ mod tests {
         for i in 0..2 {
             for p in 0..3 {
                 assert_eq!(unsafe { *pa.row_ptr(i).add(p) }, b.get(3 + i, 1 + p), "A row {i} p {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_a_strips_are_k_major_and_zero_padded() {
+        // 5 rows at mr = 2: strips [0,1], [2,3], [4,pad].
+        let a = Matrix::from_fn(6, 9, |r, c| (r * 10 + c) as f32 + 1.0);
+        let mut ta = TilePackedA::new();
+        ta.pack(a.view(), Transpose::No, 1, 5, 2, 3, 2);
+        assert_eq!(ta.strips(), 3);
+        assert_eq!(ta.strip_height(0), 2);
+        assert_eq!(ta.strip_height(2), 1);
+        assert_eq!(ta.kc_eff(), 3);
+        // Strip 1 covers block rows 2..4 = stored rows 3..5, k = 2..5.
+        // k-major: [A[3][2], A[4][2], A[3][3], A[4][3], A[3][4], A[4][4]].
+        let s1: Vec<f32> = (0..6).map(|p| unsafe { *ta.strip_ptr(1).add(p) }).collect();
+        assert_eq!(s1, vec![33.0, 43.0, 34.0, 44.0, 35.0, 45.0]);
+        // Fringe strip: real row 5 interleaved with zero padding.
+        let s2: Vec<f32> = (0..6).map(|p| unsafe { *ta.strip_ptr(2).add(p) }).collect();
+        assert_eq!(s2, vec![53.0, 0.0, 54.0, 0.0, 55.0, 0.0]);
+    }
+
+    #[test]
+    fn tile_a_transposed_reads_columns() {
+        // op(A) = Aᵀ with A stored 6x4; block rows 1..3 of op(A), k 2..5.
+        let a = Matrix::from_fn(6, 4, |r, c| (r * 10 + c) as f32);
+        let mut ta = TilePackedA::new();
+        ta.pack(a.view(), Transpose::Yes, 1, 2, 2, 3, 2);
+        // op(A)[i][p] = A[p][i]; strip 0, k-major pairs (rows 1,2 of op(A)):
+        // p=2: A[2][1], A[2][2]; p=3: A[3][1], A[3][2]; p=4: ...
+        let s0: Vec<f32> = (0..6).map(|p| unsafe { *ta.strip_ptr(0).add(p) }).collect();
+        assert_eq!(s0, vec![21.0, 22.0, 31.0, 32.0, 41.0, 42.0]);
+    }
+
+    #[test]
+    fn tile_b_panels_are_k_major_and_zero_padded() {
+        // 7 columns at nr = 4: panel 0 full, panel 1 is 3 wide + padding.
+        let b = Matrix::from_fn(5, 9, |r, c| (r * 10 + c) as f32 + 1.0);
+        let mut tb = TilePackedB::new();
+        tb.pack(b.view(), Transpose::No, 1, 2, 2, 7, 4);
+        assert_eq!(tb.panels(), 2);
+        assert_eq!(tb.panel_width(0), 4);
+        assert_eq!(tb.panel_width(1), 3);
+        // Panel 0, k-major: row kk+p of B, columns 2..6.
+        let p0: Vec<f32> = (0..8).map(|p| unsafe { *tb.panel_ptr(0).add(p) }).collect();
+        assert_eq!(p0, vec![13.0, 14.0, 15.0, 16.0, 23.0, 24.0, 25.0, 26.0]);
+        // Panel 1: columns 6..9 + one zero lane.
+        let p1: Vec<f32> = (0..8).map(|p| unsafe { *tb.panel_ptr(1).add(p) }).collect();
+        assert_eq!(p1, vec![17.0, 18.0, 19.0, 0.0, 27.0, 28.0, 29.0, 0.0]);
+    }
+
+    #[test]
+    fn tile_b_transposed_reads_rows() {
+        // op(B) = Bᵀ with B stored 5x6; op(B) is 6x5. Columns 1..4 of
+        // op(B) are rows 1..4 of B.
+        let b = Matrix::from_fn(5, 6, |r, c| (r * 10 + c) as f32);
+        let mut tb = TilePackedB::new();
+        tb.pack(b.view(), Transpose::Yes, 2, 2, 1, 3, 4);
+        // op(B)[kk+p][j] = B[j][kk+p]: p=0 → B[1][2], B[2][2], B[3][2], pad.
+        let p0: Vec<f32> = (0..8).map(|p| unsafe { *tb.panel_ptr(0).add(p) }).collect();
+        assert_eq!(p0, vec![12.0, 22.0, 32.0, 0.0, 13.0, 23.0, 33.0, 0.0]);
+    }
+
+    #[test]
+    fn tile_buffers_reuse_without_stale_data() {
+        let b = Matrix::from_fn(20, 20, |r, c| (r + c) as f32 + 1.0);
+        let mut tb = TilePackedB::new();
+        tb.pack(b.view(), Transpose::No, 0, 16, 0, 20, 16);
+        let big = tb.bytes();
+        // Repack smaller with a fringe panel: padding must be zero, not
+        // stale values from the larger pack.
+        tb.pack(b.view(), Transpose::No, 0, 2, 0, 3, 16);
+        assert!(tb.bytes() < big);
+        for p in 0..2 {
+            for l in 3..16 {
+                assert_eq!(unsafe { *tb.panel_ptr(0).add(p * 16 + l) }, 0.0, "stale lane {l} at k {p}");
             }
         }
     }

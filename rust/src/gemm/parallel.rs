@@ -33,9 +33,62 @@
 //! (`alpha == 0` or `k == 0`) sweep `C` over the same pool.
 
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
+use crate::gemm::params::TileParams;
 use crate::gemm::simd::{gemm_vec, VecIsa};
-use crate::gemm::BlockParams;
+use crate::gemm::{tile, BlockParams};
 use crate::util::threadpool::{run_borrowed_on, ThreadPool};
+
+/// The serial kernel (with its frozen geometry) each parallel slice runs:
+/// a dot-panel Emmerald driver or the outer-product tile driver.
+/// [`crate::gemm::dispatch::GemmDispatch::serial_vec_kernel`] is the one
+/// place that decides which; slices only execute it.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum SerialVecKernel {
+    /// The paper's dot-product drivers (SSE or AVX2).
+    Dot(VecIsa, BlockParams),
+    /// The outer-product register-tiled tier.
+    Tile(TileParams),
+}
+
+impl SerialVecKernel {
+    /// Run one slice through the kernel's serial driver.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run(
+        &self,
+        transa: Transpose,
+        transb: Transpose,
+        alpha: f32,
+        a: MatRef<'_>,
+        b: MatRef<'_>,
+        beta: f32,
+        c: &mut MatMut<'_>,
+    ) {
+        match self {
+            SerialVecKernel::Dot(isa, p) => gemm_vec(*isa, p, transa, transb, alpha, a, b, beta, c),
+            SerialVecKernel::Tile(p) => tile::gemm(p, transa, transb, alpha, a, b, beta, c),
+        }
+    }
+
+    /// Row-split granule: tile slices start on MR-strip boundaries so
+    /// interior slices carry no padded fringe strips. (Any alignment is
+    /// *correct* — per-element accumulation order is pure k order and
+    /// fringe writeback rounds identically — this is a locality choice.)
+    fn row_align(&self) -> usize {
+        match self {
+            SerialVecKernel::Dot(..) => 1,
+            SerialVecKernel::Tile(p) => p.mr,
+        }
+    }
+
+    /// Column-split granule (NR panels for the tile tier, see
+    /// [`row_align`](Self::row_align)).
+    fn col_align(&self) -> usize {
+        match self {
+            SerialVecKernel::Dot(..) => 1,
+            SerialVecKernel::Tile(p) => p.nr,
+        }
+    }
+}
 
 /// Which axis of `C` the parallel tier splits, and into how many slices.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -179,10 +232,9 @@ pub fn gemm_parallel(
     c: &mut MatMut<'_>,
 ) -> Result<(), BlasError> {
     gemm_parallel_vec(
-        VecIsa::Sse,
+        &SerialVecKernel::Dot(VecIsa::Sse, *params),
         crate::gemm::plan::global_pool(),
         threads,
-        params,
         Transpose::No,
         Transpose::No,
         alpha,
@@ -193,18 +245,18 @@ pub fn gemm_parallel(
     )
 }
 
-/// ISA-, layout- and pool-parameterised driver: the dispatch layer routes
-/// here with AVX2 when the host supports it and with the active context's
-/// worker pool, so every slice runs the widest kernel inside the shared
-/// thread budget. All four transa/transb combinations are supported —
-/// each slice's serial driver packs its own transposed panels. `pool:
-/// None` degrades to a serial sweep of the slices.
+/// Kernel-, layout- and pool-parameterised driver: the dispatch layer
+/// routes here with the widest serial kernel the host supports (the
+/// outer-product tile tier on AVX2+FMA) and with the active context's
+/// worker pool, so every slice runs that kernel inside the shared thread
+/// budget. All four transa/transb combinations are supported — each
+/// slice's serial driver packs its own transposed panels (and strips).
+/// `pool: None` degrades to a serial sweep of the slices.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_parallel_vec(
-    isa: VecIsa,
+    kern: &SerialVecKernel,
     pool: Option<&ThreadPool>,
     threads: usize,
-    params: &BlockParams,
     transa: Transpose,
     transb: Transpose,
     alpha: f32,
@@ -276,29 +328,31 @@ pub(crate) fn gemm_parallel_vec(
     }
 
     match split {
-        Split::Serial => gemm_vec(isa, params, transa, transb, alpha, a, b, beta, c),
+        Split::Serial => kern.run(transa, transb, alpha, a, b, beta, c),
         Split::Rows(t) => {
-            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = row_slices(a, transa, c.reborrow(), t, 1)
-                .into_iter()
-                .map(|(_, a_slice, mut c_slice)| {
-                    let params = *params;
-                    Box::new(move || {
-                        gemm_vec(isa, &params, transa, transb, alpha, a_slice, b, beta, &mut c_slice);
-                    }) as Box<dyn FnOnce() + Send + '_>
-                })
-                .collect();
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                row_slices(a, transa, c.reborrow(), t, kern.row_align())
+                    .into_iter()
+                    .map(|(_, a_slice, mut c_slice)| {
+                        let kern = *kern;
+                        Box::new(move || {
+                            kern.run(transa, transb, alpha, a_slice, b, beta, &mut c_slice);
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
             run_borrowed_on(pool, jobs);
         }
         Split::Cols(t) => {
-            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = col_slices(b, transb, c.reborrow(), t, 1)
-                .into_iter()
-                .map(|(_, b_slice, mut c_slice)| {
-                    let params = *params;
-                    Box::new(move || {
-                        gemm_vec(isa, &params, transa, transb, alpha, a, b_slice, beta, &mut c_slice);
-                    }) as Box<dyn FnOnce() + Send + '_>
-                })
-                .collect();
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                col_slices(b, transb, c.reborrow(), t, kern.col_align())
+                    .into_iter()
+                    .map(|(_, b_slice, mut c_slice)| {
+                        let kern = *kern;
+                        Box::new(move || {
+                            kern.run(transa, transb, alpha, a, b_slice, beta, &mut c_slice);
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
             run_borrowed_on(pool, jobs);
         }
     }
@@ -340,10 +394,9 @@ mod tests {
         let mut c = Matrix::random_strided(m, n, n + 2, 9);
         let mut c_ref = c.clone();
         gemm_parallel_vec(
-            VecIsa::Sse,
+            &SerialVecKernel::Dot(VecIsa::Sse, BlockParams::emmerald_sse()),
             crate::gemm::plan::global_pool(),
             threads,
-            &BlockParams::emmerald_sse(),
             transa,
             transb,
             0.75,
@@ -414,10 +467,9 @@ mod tests {
                 for threads in [2usize, 3, 7] {
                     let mut c_par = c0.clone();
                     gemm_parallel_vec(
-                        VecIsa::Sse,
+                        &SerialVecKernel::Dot(VecIsa::Sse, p),
                         crate::gemm::plan::global_pool(),
                         threads,
-                        &p,
                         ta,
                         tb,
                         0.5,
@@ -431,6 +483,55 @@ mod tests {
                         c_par.data(),
                         c_serial.data(),
                         "split must be bit-identical to serial (t={threads} {m}x{n}x{k} ta={ta:?} tb={tb:?})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_kernel_bit_identical_to_serial_for_every_split() {
+        // The outer-product tier's bit-stability contract: any row or
+        // column split (MR/NR-aligned or not — the final slice rarely is)
+        // reproduces the serial tile driver's exact bits, because each C
+        // element accumulates in pure k order and the fringe writeback
+        // rounds identically to the vector writeback. Runs the AVX2 tile
+        // on capable hosts and the scalar reference tile elsewhere.
+        let p = TileParams { kc: 16, mc: 12, nc: 32, ..TileParams::avx2_6x16() };
+        let kern = SerialVecKernel::Tile(p);
+        for (ta, tb) in [
+            (Transpose::No, Transpose::No),
+            (Transpose::Yes, Transpose::No),
+            (Transpose::No, Transpose::Yes),
+            (Transpose::Yes, Transpose::Yes),
+        ] {
+            for &(m, n, k) in &[(23usize, 37usize, 31usize), (2, 40, 13), (50, 7, 9)] {
+                let (ar, ac) = if ta == Transpose::No { (m, k) } else { (k, m) };
+                let (br, bc) = if tb == Transpose::No { (k, n) } else { (n, k) };
+                let a = Matrix::random(ar, ac, 31, -1.0, 1.0);
+                let b = Matrix::random(br, bc, 32, -1.0, 1.0);
+                let c0 = Matrix::random(m, n, 33, -1.0, 1.0);
+                let mut c_serial = c0.clone();
+                tile::gemm(&p, ta, tb, 0.5, a.view(), b.view(), 1.25, &mut c_serial.view_mut());
+                for threads in [2usize, 3, 7] {
+                    let mut c_par = c0.clone();
+                    gemm_parallel_vec(
+                        &kern,
+                        crate::gemm::plan::global_pool(),
+                        threads,
+                        ta,
+                        tb,
+                        0.5,
+                        a.view(),
+                        b.view(),
+                        1.25,
+                        &mut c_par.view_mut(),
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        c_par.data(),
+                        c_serial.data(),
+                        "tile split must be bit-identical to serial (t={threads} {m}x{n}x{k} ta={ta:?} tb={tb:?})"
                     );
                 }
             }

@@ -148,6 +148,85 @@ impl Default for BlockParams {
     }
 }
 
+/// Geometry of the outer-product register-tiled kernel tier
+/// ([`crate::gemm::tile`]).
+///
+/// Where [`BlockParams`] describes the paper's dot-product kernels (one
+/// row of `A'` against `nr` packed columns, horizontal reduction per
+/// element), this describes a BLIS-style MR×NR tile of `C` held entirely
+/// in registers: `A` is packed in MR-row strips, `B` in NR-column panels,
+/// and the micro-kernel performs `MR·NR` FMAs per `MR + NR` loaded
+/// elements with zero horizontal sums and one store per `MR·NR·kc` FMAs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileParams {
+    /// Tile rows: `C` rows accumulated in registers at once. With
+    /// `nr = 16` (two 8-wide vectors) the AVX2 register budget is
+    /// `2·mr` accumulators + 2 `B` streams + 1 broadcast of `A`, so
+    /// `mr = 6` uses 15 of the 16 YMM registers.
+    pub mr: usize,
+    /// Tile columns: `C` columns produced per micro-kernel call. Fixed at
+    /// two vector widths (16 f32 on AVX2) to feed both FMA ports.
+    pub nr: usize,
+    /// k-block depth: the packed `A` strip (`mr × kc`) and `B` panel
+    /// (`kc × nr`) streamed by one micro-kernel call.
+    pub kc: usize,
+    /// Row-block height (multiple of `mr`): rows of packed `A` kept hot
+    /// in L2 across the `B` panels of one jc block.
+    pub mc: usize,
+    /// Column-block width (multiple of `nr`): columns of packed `B`
+    /// staged per jc iteration.
+    pub nc: usize,
+    /// Issue prefetch hints for the packed `B` panel stream.
+    pub prefetch: bool,
+}
+
+impl TileParams {
+    /// Default AVX2+FMA geometry: 6×16 tile (12 YMM accumulators),
+    /// `kc = 256` (A strip 6 KB + B panel 16 KB stay L1/L2-friendly),
+    /// `mc = 72` (A block ≈ 72 KB in L2), `nc = 480` (B block ≈ 480 KB).
+    pub fn avx2_6x16() -> Self {
+        Self { mr: 6, nr: 16, kc: 256, mc: 72, nc: 480, prefetch: true }
+    }
+
+    /// Narrower 4×16 tile: 8 accumulators, more headroom for the compiler
+    /// on cores where the 6×16 tile spills (an autotune candidate).
+    pub fn avx2_4x16() -> Self {
+        Self { mr: 4, ..Self::avx2_6x16() }
+    }
+
+    /// Effective k-block size (never zero, never beyond k).
+    pub fn kc_eff(&self, k: usize, kk: usize) -> usize {
+        self.kc.min(k - kk).max(1)
+    }
+
+    /// Validate invariants: supported tile shape, positive blocks aligned
+    /// to the tile granule (a packed strip/panel is indivisible).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(1..=super::tile::MAX_MR).contains(&self.mr) {
+            return Err(format!("tile mr must be in 1..={}, got {}", super::tile::MAX_MR, self.mr));
+        }
+        if self.nr != super::tile::NR {
+            return Err(format!("tile nr must be {}, got {}", super::tile::NR, self.nr));
+        }
+        if self.kc == 0 {
+            return Err("tile kc must be positive".into());
+        }
+        if self.mc == 0 || self.mc % self.mr != 0 {
+            return Err(format!("tile mc must be a positive multiple of mr: mc={} mr={}", self.mc, self.mr));
+        }
+        if self.nc == 0 || self.nc % self.nr != 0 {
+            return Err(format!("tile nc must be a positive multiple of nr: nc={} nr={}", self.nc, self.nr));
+        }
+        Ok(())
+    }
+}
+
+impl Default for TileParams {
+    fn default() -> Self {
+        Self::avx2_6x16()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,6 +254,27 @@ mod tests {
         assert!(BlockParams { nr: 0, ..BlockParams::default() }.validate().is_err());
         assert!(BlockParams { nr: 9, ..BlockParams::default() }.validate().is_err());
         assert!(BlockParams { kb: 0, ..BlockParams::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn tile_validation() {
+        assert!(TileParams::avx2_6x16().validate().is_ok());
+        assert!(TileParams::avx2_4x16().validate().is_ok());
+        assert!(TileParams { mr: 0, ..TileParams::default() }.validate().is_err());
+        assert!(TileParams { mr: 9, ..TileParams::default() }.validate().is_err());
+        assert!(TileParams { nr: 8, ..TileParams::default() }.validate().is_err());
+        assert!(TileParams { kc: 0, ..TileParams::default() }.validate().is_err());
+        // mc/nc must align to the tile granule.
+        assert!(TileParams { mc: 70, ..TileParams::default() }.validate().is_err());
+        assert!(TileParams { nc: 100, ..TileParams::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn tile_kc_eff_clamps() {
+        let p = TileParams { kc: 100, ..TileParams::default() };
+        assert_eq!(p.kc_eff(250, 0), 100);
+        assert_eq!(p.kc_eff(250, 200), 50);
+        assert_eq!(p.kc_eff(1, 0), 1);
     }
 
     #[test]

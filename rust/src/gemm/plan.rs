@@ -33,8 +33,9 @@
 
 use super::dispatch::{DispatchConfig, GemmDispatch, GemmShape, KernelId};
 use super::pack;
-use super::params::BlockParams;
+use super::params::{BlockParams, TileParams};
 use super::simd::VecIsa;
+use super::tile;
 use super::{batch, microkernel};
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
 use crate::util::threadpool::{run_borrowed_on, ThreadPool};
@@ -80,10 +81,17 @@ impl GemmContext {
     pub fn global() -> &'static GemmContext {
         GLOBAL.get_or_init(|| {
             let ctx = GemmContext::new(DispatchConfig::default());
-            for (id, params) in crate::autotune::cache::load_host_entries() {
+            let (entries, tile, strassen) = crate::autotune::cache::load_host_tuned();
+            for (id, params) in entries {
                 // Entries were validated at load; a failure here only means
                 // the kernel family carries no geometry.
                 let _ = ctx.install_tuned(id, params);
+            }
+            if let Some(tp) = tile {
+                let _ = ctx.install_tuned_tile(tp);
+            }
+            if let Some(min_dim) = strassen {
+                let _ = ctx.install_strassen_min_dim(min_dim);
             }
             ctx
         })
@@ -112,6 +120,21 @@ impl GemmContext {
         guard.set_tuned(id, params)
     }
 
+    /// Install tuned tile geometry for the outer-product tier (operands
+    /// packed *after* this call use the new layout; existing packed
+    /// handles keep theirs and are rejected by geometry validation).
+    pub fn install_tuned_tile(&self, params: TileParams) -> Result<(), String> {
+        let mut guard = self.inner.dispatch.write().unwrap_or_else(|e| e.into_inner());
+        guard.set_tuned_tile(params)
+    }
+
+    /// Install a measured Strassen crossover (the `strassen_crossover`
+    /// autotune result replacing the fixed default threshold).
+    pub fn install_strassen_min_dim(&self, min_dim: usize) -> Result<(), String> {
+        let mut guard = self.inner.dispatch.write().unwrap_or_else(|e| e.into_inner());
+        guard.set_strassen_min_dim(min_dim)
+    }
+
     /// Start building a plan: `ctx.gemm().transpose_a(..).plan(m, n, k)`.
     pub fn gemm(&self) -> GemmBuilder {
         GemmBuilder {
@@ -127,10 +150,12 @@ impl GemmContext {
         }
     }
 
-    /// Pre-pack `op(B)` (`k × n`) into panel-major k-blocks using this
-    /// context's current vector-kernel geometry. The handle is reusable
-    /// across every plan (and batch item) whose `k`/`n` and geometry
-    /// match — the weight-stationary layout.
+    /// Pre-pack `op(B)` (`k × n`) into the k-blocked panel layout of this
+    /// context's best serial kernel — NR-column tile panels on AVX2+FMA
+    /// hosts (the outer-product tier's layout), column-contiguous dot
+    /// panels otherwise. The handle is reusable across every plan (and
+    /// batch item) whose `k`/`n` and geometry match — the
+    /// weight-stationary layout.
     pub fn pack_b(
         &self,
         transb: Transpose,
@@ -144,24 +169,41 @@ impl GemmContext {
             Transpose::Yes => (n, k),
         };
         let bv = MatRef::new(b, br, bc, ldb).map_err(|e| e.operand("B"))?;
-        let (_, params) = pack_geometry(&self.snapshot());
-        let mut blocks = Vec::new();
         let mut offsets = Vec::new();
-        let mut kk = 0;
-        while kk < k {
-            let kb_eff = params.kb_eff(k, kk);
-            let mut pb = pack::PackedB::new(params.nr);
-            pb.pack(bv, transb, kk, kb_eff, n);
-            blocks.push(pb);
-            offsets.push(kk);
-            kk += kb_eff;
-        }
-        Ok(PackedB { blocks, offsets, k, n, kb: params.kb, nr: params.nr })
+        let storage = match pack_geometry(&self.snapshot()) {
+            PackGeometry::Dot(_, params) => {
+                let mut blocks = Vec::new();
+                let mut kk = 0;
+                while kk < k {
+                    let kb_eff = params.kb_eff(k, kk);
+                    let mut pb = pack::PackedB::new(params.nr);
+                    pb.pack(bv, transb, kk, kb_eff, n);
+                    blocks.push(pb);
+                    offsets.push(kk);
+                    kk += kb_eff;
+                }
+                PackedBStorage::Dot { blocks, kb: params.kb, nr: params.nr }
+            }
+            PackGeometry::Tile(tp) => {
+                let mut blocks = Vec::new();
+                let mut kk = 0;
+                while kk < k {
+                    let kc_eff = tp.kc_eff(k, kk);
+                    let mut tb = pack::TilePackedB::new();
+                    tb.pack(bv, transb, kk, kc_eff, 0, n, tp.nr);
+                    blocks.push(tb);
+                    offsets.push(kk);
+                    kk += kc_eff;
+                }
+                PackedBStorage::Tile { blocks, kc: tp.kc, nr: tp.nr }
+            }
+        };
+        Ok(PackedB { storage, offsets, k, n })
     }
 
-    /// Pre-pack `op(A)` (`m × k`) into row-major blocks matching this
-    /// context's current vector-kernel geometry, for
-    /// [`GemmPlan::run_packed`].
+    /// Pre-pack `op(A)` (`m × k`) into the k-blocked row layout of this
+    /// context's best serial kernel — MR-row tile strips on AVX2+FMA
+    /// hosts, contiguous rows otherwise — for [`GemmPlan::run_packed`].
     pub fn pack_a(
         &self,
         transa: Transpose,
@@ -175,30 +217,65 @@ impl GemmContext {
             Transpose::Yes => (k, m),
         };
         let av = MatRef::new(a, ar, ac, lda).map_err(|e| e.operand("A"))?;
-        let (_, params) = pack_geometry(&self.snapshot());
-        let mut blocks = Vec::new();
-        let mut kk = 0;
-        while kk < k {
-            let kb_eff = params.kb_eff(k, kk);
-            let mut row_blocks = Vec::new();
-            let mut ii = 0;
-            while ii < m {
-                let mb_eff = params.mb.min(m - ii);
-                let mut pa = pack::PackedA::new();
-                pa.pack(av, transa, ii, mb_eff, kk, kb_eff);
-                row_blocks.push(pa);
-                ii += mb_eff;
+        let storage = match pack_geometry(&self.snapshot()) {
+            PackGeometry::Dot(_, params) => {
+                let mut blocks = Vec::new();
+                let mut kk = 0;
+                while kk < k {
+                    let kb_eff = params.kb_eff(k, kk);
+                    let mut row_blocks = Vec::new();
+                    let mut ii = 0;
+                    while ii < m {
+                        let mb_eff = params.mb.min(m - ii);
+                        let mut pa = pack::PackedA::new();
+                        pa.pack(av, transa, ii, mb_eff, kk, kb_eff);
+                        row_blocks.push(pa);
+                        ii += mb_eff;
+                    }
+                    blocks.push(row_blocks);
+                    kk += kb_eff;
+                }
+                PackedAStorage::Dot { blocks, kb: params.kb, mb: params.mb }
             }
-            blocks.push(row_blocks);
-            kk += kb_eff;
-        }
-        Ok(PackedA { blocks, k, m, kb: params.kb, mb: params.mb })
+            PackGeometry::Tile(tp) => {
+                let mut blocks = Vec::new();
+                let mut kk = 0;
+                while kk < k {
+                    let kc_eff = tp.kc_eff(k, kk);
+                    let mut row_blocks = Vec::new();
+                    let mut ii = 0;
+                    while ii < m {
+                        let mc_eff = tp.mc.min(m - ii);
+                        let mut ta = pack::TilePackedA::new();
+                        ta.pack(av, transa, ii, mc_eff, kk, kc_eff, tp.mr);
+                        row_blocks.push(ta);
+                        ii += mc_eff;
+                    }
+                    blocks.push(row_blocks);
+                    kk += kc_eff;
+                }
+                PackedAStorage::Tile { blocks, kc: tp.kc, mc: tp.mc, mr: tp.mr }
+            }
+        };
+        Ok(PackedA { storage, k, m })
     }
 
     /// Run a group of borrowed jobs on this context's thread budget (the
     /// execution primitive behind the parallel tier and batch fan-out).
     pub(crate) fn run_jobs<'s>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 's>>) {
         run_borrowed_on(self.pool(), jobs);
+    }
+
+    /// Fork-join one job per slice on the context pool — the shared
+    /// scaffolding of every parallel prepacked split (`f` is borrowed by
+    /// every worker, so it only needs `Sync`).
+    fn run_sliced<T: Send>(&self, slices: Vec<T>, f: impl Fn(T) + Sync) {
+        let f = &f;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slices
+            .into_iter()
+            .map(|s| Box::new(move || f(s)) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        self.run_jobs(jobs);
     }
 }
 
@@ -217,16 +294,24 @@ pub(crate) fn global_pool() -> Option<&'static ThreadPool> {
     GemmContext::global().pool()
 }
 
-/// The packing geometry (and vector ISA) the context's best serial vector
-/// kernel runs with — the layout contract between `pack_*` and
-/// `run_packed*`.
-fn pack_geometry(d: &GemmDispatch) -> (Option<VecIsa>, BlockParams) {
+/// The packed-operand layout family the context's best serial kernel
+/// consumes — the layout contract between `pack_*` and `run_packed*`.
+enum PackGeometry {
+    /// The dot-panel layout (column-contiguous B panels, row-packed A)
+    /// with the ISA that will execute it (`None` = scalar panel kernel).
+    Dot(Option<VecIsa>, BlockParams),
+    /// The outer-product tile layout (k-major NR panels / MR strips).
+    Tile(TileParams),
+}
+
+fn pack_geometry(d: &GemmDispatch) -> PackGeometry {
     match d.best_serial_vector() {
-        KernelId::Avx2 => (Some(VecIsa::Avx2), *d.params_avx2()),
-        KernelId::Simd => (Some(VecIsa::Sse), *d.params_sse()),
+        KernelId::Avx2Tile => PackGeometry::Tile(*d.params_tile()),
+        KernelId::Avx2 => PackGeometry::Dot(Some(VecIsa::Avx2), *d.params_avx2()),
+        KernelId::Simd => PackGeometry::Dot(Some(VecIsa::Sse), *d.params_sse()),
         // Scalar hosts execute the prepacked layout through a scalar
         // panel kernel; the SSE geometry is a fine layout default.
-        _ => (None, *d.params_sse()),
+        _ => PackGeometry::Dot(None, *d.params_sse()),
     }
 }
 
@@ -459,13 +544,15 @@ impl GemmPlan {
 
     /// Execute with a prepacked `B` (packed once via
     /// [`GemmContext::pack_b`], reused across calls): the re-buffering
-    /// stage of every k-block is skipped entirely. When the plan resolved
-    /// to the parallel tier this splits over the context pool — rows of
-    /// `op(A)` for tall outputs, panel-aligned columns of the shared
-    /// `PackedB` for skinny ones — via the parallel tier's split policy
+    /// stage of every k-block is skipped entirely. Runs the layout's
+    /// kernel — the outer-product tile driver for tile-packed operands,
+    /// the dot-panel driver otherwise. When the plan resolved to the
+    /// parallel tier this splits over the context pool — rows of `op(A)`
+    /// for tall outputs, panel-aligned columns of the shared `PackedB`
+    /// for skinny ones — via the parallel tier's split policy
     /// ([`crate::gemm::parallel`]), for every transa/transb combination.
     pub fn run_packed_b(&self, a: &[f32], b: &PackedB, c: &mut [f32]) -> Result<(), BlasError> {
-        let (isa, params) = self.packed_geometry(b)?;
+        let geom = self.packed_geometry(b)?;
         let (ar, ac) = match self.shape.transa {
             Transpose::No => (self.shape.m, self.shape.k),
             Transpose::Yes => (self.shape.k, self.shape.m),
@@ -480,40 +567,70 @@ impl GemmPlan {
         let transa = self.shape.transa;
         let (alpha, beta) = (self.alpha, self.beta);
         let threads = if self.kernel == KernelId::Parallel { self.dispatch.threads() } else { 1 };
-        match super::parallel::split_axis(m, n, threads) {
-            super::parallel::Split::Serial => {
-                let mut cv = cv;
-                prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(av), 0, b, 0, beta, &mut cv);
+        match geom {
+            PackGeometry::Dot(isa, params) => {
+                let PackedBStorage::Dot { blocks, .. } = &b.storage else { unreachable!() };
+                let bb = DotB { blocks, offsets: &b.offsets, k: b.k };
+                match super::parallel::split_axis(m, n, threads) {
+                    super::parallel::Split::Serial => {
+                        let mut cv = cv;
+                        prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(av), 0, bb, 0, beta, &mut cv);
+                    }
+                    // Row-sliced execution sharing the one prepacked B
+                    // (same split boundaries as the packing parallel
+                    // driver, via parallel::row_slices — which is what
+                    // keeps the results bit-identical to it).
+                    super::parallel::Split::Rows(t) => self.ctx.run_sliced(
+                        super::parallel::row_slices(av, transa, cv, t, 1),
+                        |(_, a_slice, mut c_slice)| {
+                            prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(a_slice), 0, bb, 0, beta, &mut c_slice);
+                        },
+                    ),
+                    // Column slices aligned to the panel width so each
+                    // worker reads whole panels of the shared PackedB; A
+                    // is shared.
+                    super::parallel::Split::Cols(t) => self.ctx.run_sliced(
+                        super::parallel::c_col_slices(cv, t, params.nr),
+                        |(c0, mut c_slice)| {
+                            prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(av), 0, bb, c0, beta, &mut c_slice);
+                        },
+                    ),
+                }
             }
-            super::parallel::Split::Rows(t) => {
-                // Row-sliced execution sharing the one prepacked B (same
-                // split boundaries as the packing parallel driver, via
-                // parallel::row_slices — which is what keeps the results
-                // bit-identical to it).
-                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                    super::parallel::row_slices(av, transa, cv, t, 1)
-                        .into_iter()
-                        .map(|(_, a_slice, mut c_slice)| {
-                            Box::new(move || {
-                                prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(a_slice), 0, b, 0, beta, &mut c_slice);
-                            }) as Box<dyn FnOnce() + Send + '_>
-                        })
-                        .collect();
-                self.ctx.run_jobs(jobs);
-            }
-            super::parallel::Split::Cols(t) => {
-                // Column slices aligned to the panel width so each worker
-                // reads whole panels of the shared PackedB; A is shared.
-                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                    super::parallel::c_col_slices(cv, t, params.nr)
-                        .into_iter()
-                        .map(|(c0, mut c_slice)| {
-                            Box::new(move || {
-                                prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(av), 0, b, c0, beta, &mut c_slice);
-                            }) as Box<dyn FnOnce() + Send + '_>
-                        })
-                        .collect();
-                self.ctx.run_jobs(jobs);
+            PackGeometry::Tile(tp) => {
+                let PackedBStorage::Tile { blocks, .. } = &b.storage else { unreachable!() };
+                let offsets = &b.offsets;
+                match super::parallel::split_axis(m, n, threads) {
+                    super::parallel::Split::Serial => {
+                        let mut cv = cv;
+                        tile::prepacked_gemm(
+                            &tp,
+                            alpha,
+                            tile::TileA::Raw { a: av, transa },
+                            0,
+                            blocks,
+                            offsets,
+                            0,
+                            beta,
+                            &mut cv,
+                        );
+                    }
+                    // MR-strip-aligned row slices: interior slices carry
+                    // no padded fringe strips (any alignment would still
+                    // be bit-identical — see gemm::tile).
+                    super::parallel::Split::Rows(t) => self.ctx.run_sliced(
+                        super::parallel::row_slices(av, transa, cv, t, tp.mr),
+                        |(_, a_slice, mut c_slice)| {
+                            tile::prepacked_gemm(&tp, alpha, tile::TileA::Raw { a: a_slice, transa }, 0, blocks, offsets, 0, beta, &mut c_slice);
+                        },
+                    ),
+                    super::parallel::Split::Cols(t) => self.ctx.run_sliced(
+                        super::parallel::c_col_slices(cv, t, tp.nr),
+                        |(c0, mut c_slice)| {
+                            tile::prepacked_gemm(&tp, alpha, tile::TileA::Raw { a: av, transa }, 0, blocks, offsets, c0, beta, &mut c_slice);
+                        },
+                    ),
+                }
             }
         }
         Ok(())
@@ -526,18 +643,13 @@ impl GemmPlan {
     /// columns instead — the same axis policy as every other parallel
     /// path.
     pub fn run_packed(&self, a: &PackedA, b: &PackedB, c: &mut [f32]) -> Result<(), BlasError> {
-        let (isa, params) = self.packed_geometry(b)?;
+        let geom = self.packed_geometry(b)?;
         if a.k != self.shape.k || a.m != self.shape.m {
             return Err(BlasError::ShapeMismatch {
                 what: "PackedA",
                 expect: (self.shape.m, self.shape.k),
                 got: (a.m, a.k),
             });
-        }
-        if a.kb != params.kb || a.mb != params.mb {
-            return Err(BlasError::PlanMismatch(
-                "PackedA block geometry differs from the plan's kernel geometry; repack with the current context",
-            ));
         }
         let cv =
             MatMut::new(c, self.shape.m, self.shape.n, self.ldc).map_err(|e| e.operand("C"))?;
@@ -548,41 +660,79 @@ impl GemmPlan {
         let transa = self.shape.transa;
         let (alpha, beta) = (self.alpha, self.beta);
         let threads = if self.kernel == KernelId::Parallel { self.dispatch.threads() } else { 1 };
-        match super::parallel::split_axis(m, n, threads) {
-            super::parallel::Split::Serial => {
-                let mut cv = cv;
-                prepacked_gemm(isa, &params, transa, alpha, ASource::Packed(a), 0, b, 0, beta, &mut cv);
+        const MISMATCH: BlasError = BlasError::PlanMismatch(
+            "PackedA block geometry differs from the plan's kernel geometry; repack with the current context",
+        );
+        match geom {
+            PackGeometry::Dot(isa, params) => {
+                let PackedAStorage::Dot { blocks, kb, mb } = &a.storage else {
+                    return Err(MISMATCH);
+                };
+                if *kb != params.kb || *mb != params.mb {
+                    return Err(MISMATCH);
+                }
+                let PackedBStorage::Dot { blocks: b_blocks, .. } = &b.storage else { unreachable!() };
+                let bb = DotB { blocks: b_blocks, offsets: &b.offsets, k: b.k };
+                let aa = ASource::Packed { blocks, mb: params.mb };
+                match super::parallel::split_axis(m, n, threads) {
+                    super::parallel::Split::Serial => {
+                        let mut cv = cv;
+                        prepacked_gemm(isa, &params, transa, alpha, aa, 0, bb, 0, beta, &mut cv);
+                    }
+                    super::parallel::Split::Rows(t) => self.ctx.run_sliced(
+                        super::parallel::c_row_slices(cv, t, params.mb),
+                        |(r0, mut c_slice)| {
+                            prepacked_gemm(isa, &params, transa, alpha, aa, r0, bb, 0, beta, &mut c_slice);
+                        },
+                    ),
+                    super::parallel::Split::Cols(t) => self.ctx.run_sliced(
+                        super::parallel::c_col_slices(cv, t, params.nr),
+                        |(c0, mut c_slice)| {
+                            prepacked_gemm(isa, &params, transa, alpha, aa, 0, bb, c0, beta, &mut c_slice);
+                        },
+                    ),
+                }
             }
-            super::parallel::Split::Rows(t) => {
-                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                    super::parallel::c_row_slices(cv, t, params.mb)
-                        .into_iter()
-                        .map(|(r0, mut c_slice)| {
-                            Box::new(move || {
-                                prepacked_gemm(isa, &params, transa, alpha, ASource::Packed(a), r0, b, 0, beta, &mut c_slice);
-                            }) as Box<dyn FnOnce() + Send + '_>
-                        })
-                        .collect();
-                self.ctx.run_jobs(jobs);
-            }
-            super::parallel::Split::Cols(t) => {
-                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                    super::parallel::c_col_slices(cv, t, params.nr)
-                        .into_iter()
-                        .map(|(c0, mut c_slice)| {
-                            Box::new(move || {
-                                prepacked_gemm(isa, &params, transa, alpha, ASource::Packed(a), 0, b, c0, beta, &mut c_slice);
-                            }) as Box<dyn FnOnce() + Send + '_>
-                        })
-                        .collect();
-                self.ctx.run_jobs(jobs);
+            PackGeometry::Tile(tp) => {
+                let PackedAStorage::Tile { blocks, kc, mc, mr } = &a.storage else {
+                    return Err(MISMATCH);
+                };
+                if *kc != tp.kc || *mc != tp.mc || *mr != tp.mr {
+                    return Err(MISMATCH);
+                }
+                let PackedBStorage::Tile { blocks: b_blocks, .. } = &b.storage else { unreachable!() };
+                let offsets = &b.offsets;
+                let aa = tile::TileA::Packed { blocks };
+                match super::parallel::split_axis(m, n, threads) {
+                    super::parallel::Split::Serial => {
+                        let mut cv = cv;
+                        tile::prepacked_gemm(&tp, alpha, aa, 0, b_blocks, offsets, 0, beta, &mut cv);
+                    }
+                    // A packed row block (`mc` rows) is indivisible:
+                    // slices split at mc granularity so each worker
+                    // indexes whole blocks.
+                    super::parallel::Split::Rows(t) => self.ctx.run_sliced(
+                        super::parallel::c_row_slices(cv, t, tp.mc),
+                        |(r0, mut c_slice)| {
+                            tile::prepacked_gemm(&tp, alpha, aa, r0, b_blocks, offsets, 0, beta, &mut c_slice);
+                        },
+                    ),
+                    super::parallel::Split::Cols(t) => self.ctx.run_sliced(
+                        super::parallel::c_col_slices(cv, t, tp.nr),
+                        |(c0, mut c_slice)| {
+                            tile::prepacked_gemm(&tp, alpha, aa, 0, b_blocks, offsets, c0, beta, &mut c_slice);
+                        },
+                    ),
+                }
             }
         }
         Ok(())
     }
 
-    /// Shared validation for the prepacked paths.
-    fn packed_geometry(&self, b: &PackedB) -> Result<(Option<VecIsa>, BlockParams), BlasError> {
+    /// Shared validation for the prepacked paths: shape match, then the
+    /// handle's layout family and geometry must match what the plan's
+    /// dispatcher would pack today.
+    fn packed_geometry(&self, b: &PackedB) -> Result<PackGeometry, BlasError> {
         if b.k != self.shape.k || b.n != self.shape.n {
             return Err(BlasError::ShapeMismatch {
                 what: "PackedB",
@@ -590,28 +740,46 @@ impl GemmPlan {
                 got: (b.k, b.n),
             });
         }
-        let (isa, params) = pack_geometry(&self.dispatch);
-        if b.kb != params.kb || b.nr != params.nr {
+        let geom = pack_geometry(&self.dispatch);
+        let ok = match (&geom, &b.storage) {
+            (PackGeometry::Dot(_, params), PackedBStorage::Dot { kb, nr, .. }) => {
+                *kb == params.kb && *nr == params.nr
+            }
+            (PackGeometry::Tile(tp), PackedBStorage::Tile { kc, nr, .. }) => {
+                *kc == tp.kc && *nr == tp.nr
+            }
+            _ => false,
+        };
+        if !ok {
             return Err(BlasError::PlanMismatch(
                 "PackedB panel geometry differs from the plan's kernel geometry; repack with the current context",
             ));
         }
-        Ok((isa, params))
+        Ok(geom)
     }
 }
 
 /// A whole `op(B)` prepacked into panel-major k-blocks (the paper's
 /// re-buffering, hoisted out of the call). Created by
-/// [`GemmContext::pack_b`]; shareable across threads and reusable across
-/// any number of [`GemmPlan::run_packed_b`] calls and batch items.
+/// [`GemmContext::pack_b`] in the layout of the context's best serial
+/// kernel (tile panels on AVX2+FMA hosts, dot panels otherwise);
+/// shareable across threads and reusable across any number of
+/// [`GemmPlan::run_packed_b`] calls and batch items.
 #[derive(Debug)]
 pub struct PackedB {
-    blocks: Vec<pack::PackedB>,
+    storage: PackedBStorage,
     offsets: Vec<usize>,
     k: usize,
     n: usize,
-    kb: usize,
-    nr: usize,
+}
+
+/// The layout family a [`PackedB`] was packed in.
+#[derive(Debug)]
+enum PackedBStorage {
+    /// Column-contiguous dot panels (`kb`/`nr` of the dot kernel).
+    Dot { blocks: Vec<pack::PackedB>, kb: usize, nr: usize },
+    /// k-major NR panels for the outer-product tile kernel.
+    Tile { blocks: Vec<pack::TilePackedB>, kc: usize, nr: usize },
 }
 
 impl PackedB {
@@ -627,25 +795,43 @@ impl PackedB {
 
     /// Panel width the buffer was packed with.
     pub fn nr(&self) -> usize {
-        self.nr
+        match &self.storage {
+            PackedBStorage::Dot { nr, .. } | PackedBStorage::Tile { nr, .. } => *nr,
+        }
+    }
+
+    /// Whether the handle carries the outer-product tile layout.
+    pub fn is_tile(&self) -> bool {
+        matches!(self.storage, PackedBStorage::Tile { .. })
     }
 
     /// Bytes held across all k-blocks (diagnostic).
     pub fn bytes(&self) -> usize {
-        self.blocks.iter().map(pack::PackedB::bytes).sum()
+        match &self.storage {
+            PackedBStorage::Dot { blocks, .. } => blocks.iter().map(pack::PackedB::bytes).sum(),
+            PackedBStorage::Tile { blocks, .. } => blocks.iter().map(pack::TilePackedB::bytes).sum(),
+        }
     }
 }
 
-/// A whole `op(A)` prepacked into row-major blocks. Created by
+/// A whole `op(A)` prepacked into row blocks (contiguous rows for the dot
+/// kernels, MR strips for the tile tier). Created by
 /// [`GemmContext::pack_a`] for [`GemmPlan::run_packed`].
 #[derive(Debug)]
 pub struct PackedA {
-    /// `blocks[kblock][rowblock]`, mirroring the driver's loop nest.
-    blocks: Vec<Vec<pack::PackedA>>,
+    storage: PackedAStorage,
     k: usize,
     m: usize,
-    kb: usize,
-    mb: usize,
+}
+
+/// The layout family a [`PackedA`] was packed in
+/// (`blocks[kblock][rowblock]`, mirroring the drivers' loop nests).
+#[derive(Debug)]
+enum PackedAStorage {
+    /// Row-contiguous blocks for the dot kernels.
+    Dot { blocks: Vec<Vec<pack::PackedA>>, kb: usize, mb: usize },
+    /// MR-strip blocks for the outer-product tile kernel.
+    Tile { blocks: Vec<Vec<pack::TilePackedA>>, kc: usize, mc: usize, mr: usize },
 }
 
 impl PackedA {
@@ -658,13 +844,26 @@ impl PackedA {
     pub fn k(&self) -> usize {
         self.k
     }
+
+    /// Whether the handle carries the outer-product tile layout.
+    pub fn is_tile(&self) -> bool {
+        matches!(self.storage, PackedAStorage::Tile { .. })
+    }
 }
 
-/// Where the driver streams `A` rows from.
+/// Where the dot-panel prepacked driver streams `A` rows from.
 #[derive(Clone, Copy)]
 enum ASource<'x> {
     Raw(MatRef<'x>),
-    Packed(&'x PackedA),
+    Packed { blocks: &'x [Vec<pack::PackedA>], mb: usize },
+}
+
+/// Borrowed view of a dot-layout prepacked `B` (blocks + k offsets).
+#[derive(Clone, Copy)]
+struct DotB<'x> {
+    blocks: &'x [pack::PackedB],
+    offsets: &'x [usize],
+    k: usize,
 }
 
 /// The blocked driver over prepacked `B` panels: identical loop nest and
@@ -687,7 +886,7 @@ fn prepacked_gemm(
     alpha: f32,
     a: ASource<'_>,
     row0: usize,
-    pb: &PackedB,
+    pb: DotB<'_>,
     col0: usize,
     beta: f32,
     c: &mut MatMut<'_>,
@@ -706,7 +905,7 @@ fn prepacked_gemm(
     // storage (transposed) or the ablation toggle asks for it.
     let need_pack_a = match a {
         ASource::Raw(_) => params.pack_a || transa == Transpose::Yes,
-        ASource::Packed(_) => false,
+        ASource::Packed { .. } => false,
     };
     let mut scratch_a = pack::PackedA::new();
     let mut sums = [0.0f32; 8];
@@ -734,7 +933,7 @@ fn prepacked_gemm(
                 }
                 let row_ptr = |i: usize| -> *const f32 {
                     match a {
-                        ASource::Packed(pa) => pa.blocks[kbi][(row0 + ii) / params.mb].row_ptr(i),
+                        ASource::Packed { blocks, mb } => blocks[kbi][(row0 + ii) / mb].row_ptr(i),
                         ASource::Raw(av) => {
                             if need_pack_a {
                                 scratch_a.row_ptr(i)
@@ -1020,6 +1219,38 @@ mod tests {
                 Err(BlasError::PlanMismatch(_))
             ));
         }
+    }
+
+    #[test]
+    fn tile_packed_geometry_mismatch_is_rejected() {
+        // Tile-layout handles carry (kc, mc, mr); a plan whose context
+        // was tuned to a different tile geometry must refuse them.
+        if !crate::gemm::dispatch::detect_avx2() {
+            eprintln!("SKIP: no AVX2+FMA — prepacked operands use the dot layout here");
+            return;
+        }
+        let ctx = ctx_serial();
+        let b = Matrix::random(20, 10, 40, -1.0, 1.0);
+        let packed = ctx.pack_b(Transpose::No, 20, 10, b.data(), b.ld()).unwrap();
+        assert!(packed.is_tile());
+        let ctx2 = ctx_serial();
+        ctx2.install_tuned_tile(TileParams { kc: 128, ..TileParams::avx2_6x16() }).unwrap();
+        let plan2 = ctx2.gemm().plan(8, 10, 20).unwrap();
+        let a = vec![0.0f32; 8 * 20];
+        let mut c = vec![0.0f32; 8 * 10];
+        assert!(matches!(
+            plan2.run_packed_b(&a, &packed, &mut c),
+            Err(BlasError::PlanMismatch(_))
+        ));
+        // A PackedA from the untuned context against the tuned plan
+        // (with a matching PackedB) is likewise rejected.
+        let pa = ctx.pack_a(Transpose::No, 8, 20, &a, 20).unwrap();
+        assert!(pa.is_tile());
+        let pb2 = ctx2.pack_b(Transpose::No, 20, 10, b.data(), b.ld()).unwrap();
+        assert!(matches!(
+            plan2.run_packed(&pa, &pb2, &mut c),
+            Err(BlasError::PlanMismatch(_))
+        ));
     }
 
     #[test]

@@ -1,0 +1,512 @@
+//! Outer-product register-tiled GEMM — the fastest serial tier.
+//!
+//! The paper's dot-product kernel (§2, fig. 1a) computes `W` dot products
+//! at once and pays a horizontal reduction plus a store per `kb`
+//! multiply-adds — the right trade on a PIII with 8 XMM registers. On
+//! AVX2+FMA the register file holds an entire `MR × NR` tile of `C`, so
+//! the BLIS-style **outer product** wins instead: per k step the kernel
+//! loads `NR` values of `B'` (two vectors) and broadcasts `MR` values of
+//! `A'`, then issues `MR · NR/8` FMAs — every loaded element is reused
+//! `MR` (resp. `NR`) times, there are **zero horizontal sums**, and `C`
+//! is touched once per `MR · NR · kc` FMAs. With the default 6×16 tile
+//! the budget is 12 YMM accumulators + 2 `B` streams + 1 `A` broadcast =
+//! 15 of 16 registers.
+//!
+//! Both operands are packed ([`crate::gemm::pack::TilePackedA`] MR-row
+//! strips, [`crate::gemm::pack::TilePackedB`] NR-column panels, both
+//! k-major) so the kernel's loads are unit-stride. Fringe tiles (edge
+//! rows/columns) run the same full-size kernel against zero-padded
+//! strips/panels and write back through a stack [`TempTile`] with a
+//! masked scalar pass whose per-element arithmetic (`f32::mul_add`) is
+//! bit-identical to a lane of the vector writeback — which is what makes
+//! serial, thread-parallel and prepacked executions of one problem
+//! produce the same bits (each `C` element accumulates in pure k order,
+//! and full-vs-fringe tile membership cannot change the rounding).
+//!
+//! A scalar reference tile covers non-AVX2 hosts and anchors the
+//! conformance suite; the dot-panel kernels ([`super::simd`],
+//! [`super::avx2`]) remain as the paper-faithful baseline and the
+//! `tile_vs_dot` ablation point.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+use super::pack::{Scratch, TilePackedA, TilePackedB};
+use super::params::TileParams;
+use crate::blas::{MatMut, MatRef, Transpose};
+
+/// Tile width in f32 lanes (two 8-wide AVX2 vectors, feeding both FMA
+/// execution ports).
+pub const NR: usize = 16;
+
+/// Largest supported tile height. `6 × 16` is the largest tile whose
+/// accumulators (`2·mr`), `B` streams (2) and `A` broadcast (1) fit the
+/// 16-register YMM file.
+pub const MAX_MR: usize = 6;
+
+/// Prefetch distance into the packed `B` panel, in f32 elements (four
+/// 64-byte lines ahead; one k step consumes exactly one line).
+const PREFETCH_B: usize = 64;
+
+/// One MR×NR accumulator tile on the stack, used for fringe writeback.
+type TempTile = [f32; MAX_MR * NR];
+
+/// The AVX2+FMA outer-product micro-kernel: `dst (MR×NR) ⟵ A'·B'` over a
+/// `kc`-deep packed strip/panel pair.
+///
+/// `ap` is an MR-strip (`kc × MR`, k-major), `bp` an NR-panel
+/// (`kc × NR`, k-major). With `accumulate` the result is folded into
+/// `dst` as `dst += alpha · acc` (one fused multiply-add per element);
+/// otherwise the raw accumulators are stored (the [`TempTile`] path,
+/// `alpha` unused).
+///
+/// # Safety
+/// * `ap` readable for `kc * MR` f32s, `bp` for `kc * NR` f32s.
+/// * `dst` writable at rows `i*dst_ld`, `i < MR`, each row `NR` wide.
+/// * AVX2 and FMA must be available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn avx2_tile<const MR: usize>(
+    ap: *const f32,
+    bp: *const f32,
+    kc: usize,
+    alpha: f32,
+    dst: *mut f32,
+    dst_ld: usize,
+    accumulate: bool,
+    prefetch: bool,
+) {
+    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+    for p in 0..kc {
+        if prefetch {
+            // wrapping_add: the prefetch address runs past the packed
+            // panel near its end, and ptr::add would make that UB even
+            // though the hint itself can never fault.
+            _mm_prefetch::<_MM_HINT_T0>(bp.wrapping_add(p * NR + PREFETCH_B).cast());
+        }
+        let b0 = _mm256_loadu_ps(bp.add(p * NR));
+        let b1 = _mm256_loadu_ps(bp.add(p * NR + 8));
+        let arow = ap.add(p * MR);
+        for (i, a) in acc.iter_mut().enumerate() {
+            let av = _mm256_broadcast_ss(&*arow.add(i));
+            a[0] = _mm256_fmadd_ps(av, b0, a[0]);
+            a[1] = _mm256_fmadd_ps(av, b1, a[1]);
+        }
+    }
+    if accumulate {
+        let va = _mm256_set1_ps(alpha);
+        for (i, a) in acc.iter().enumerate() {
+            let row = dst.add(i * dst_ld);
+            _mm256_storeu_ps(row, _mm256_fmadd_ps(va, a[0], _mm256_loadu_ps(row)));
+            _mm256_storeu_ps(row.add(8), _mm256_fmadd_ps(va, a[1], _mm256_loadu_ps(row.add(8))));
+        }
+    } else {
+        for (i, a) in acc.iter().enumerate() {
+            let row = dst.add(i * dst_ld);
+            _mm256_storeu_ps(row, a[0]);
+            _mm256_storeu_ps(row.add(8), a[1]);
+        }
+    }
+}
+
+/// Runtime-MR dispatcher over [`avx2_tile`].
+///
+/// # Safety
+/// Contract of [`avx2_tile`] with `1 <= mr <= MAX_MR`.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn avx2_tile_dyn(
+    mr: usize,
+    ap: *const f32,
+    bp: *const f32,
+    kc: usize,
+    alpha: f32,
+    dst: *mut f32,
+    dst_ld: usize,
+    accumulate: bool,
+    prefetch: bool,
+) {
+    match mr {
+        1 => avx2_tile::<1>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        2 => avx2_tile::<2>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        3 => avx2_tile::<3>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        4 => avx2_tile::<4>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        5 => avx2_tile::<5>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        6 => avx2_tile::<6>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        _ => unreachable!("tile mr {mr} out of range"),
+    }
+}
+
+/// Masked fringe writeback: fold `h × w` elements of a raw accumulator
+/// tile into `C` with one *fused* multiply-add per element, so a fringe
+/// element rounds exactly like a lane of [`avx2_tile`]'s vector
+/// writeback (the bit-stability contract of the module docs).
+///
+/// # Safety
+/// `dst` writable at rows `i*dst_ld` for `i < h`, each row `w` wide;
+/// FMA must be available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+unsafe fn avx2_tile_fringe(tmp: &TempTile, alpha: f32, dst: *mut f32, dst_ld: usize, h: usize, w: usize) {
+    for i in 0..h {
+        for j in 0..w {
+            let p = dst.add(i * dst_ld + j);
+            *p = alpha.mul_add(tmp[i * NR + j], *p);
+        }
+    }
+}
+
+/// Scalar reference tile: the same outer-product loop order as
+/// [`avx2_tile`] without SIMD — the conformance anchor and the non-AVX2
+/// fallback. Accumulates the raw `mr × NR` product into `tmp` (k-major
+/// broadcast of `A`, `NR`-wide sweep of `B` per step).
+///
+/// # Safety
+/// `ap` readable for `kc * mr` f32s, `bp` for `kc * NR` f32s.
+unsafe fn scalar_tile_into(ap: *const f32, bp: *const f32, kc: usize, mr: usize, tmp: &mut TempTile) {
+    for p in 0..kc {
+        for i in 0..mr {
+            let av = *ap.add(p * mr + i);
+            let row = &mut tmp[i * NR..(i + 1) * NR];
+            for (j, t) in row.iter_mut().enumerate() {
+                *t += av * *bp.add(p * NR + j);
+            }
+        }
+    }
+}
+
+/// Run every tile of one packed (A block, B block) pair against `C`.
+///
+/// `ta` covers `C` rows `i_base ..` (its strip count), `tb`'s panels
+/// `panel0 ..` cover `C` columns `j_base .. j_base + nb_eff`. `C` has
+/// already been beta-scaled; each tile folds `alpha · A'B'` in.
+#[allow(clippy::too_many_arguments)]
+fn tile_block(
+    params: &TileParams,
+    use_avx2: bool,
+    ta: &TilePackedA,
+    tb: &TilePackedB,
+    panel0: usize,
+    alpha: f32,
+    c: &mut MatMut<'_>,
+    i_base: usize,
+    j_base: usize,
+    nb_eff: usize,
+    kc_eff: usize,
+) {
+    let (mr, nr) = (params.mr, params.nr);
+    let ldc = c.ld();
+    let strips = ta.strips();
+    let npanels = nb_eff.div_ceil(nr);
+    for q in 0..npanels {
+        let j0 = j_base + q * nr;
+        let w = nr.min(nb_eff - q * nr);
+        let bp = tb.panel_ptr(panel0 + q);
+        for s in 0..strips {
+            let i0 = i_base + s * mr;
+            let h = ta.strip_height(s);
+            let ap = ta.strip_ptr(s);
+            let cptr = c.row_ptr_mut(i0).wrapping_add(j0);
+            // SAFETY: strips/panels are packed `kc_eff` deep and padded to
+            // full mr/nr lanes; the C tile spans rows i0..i0+h < c.rows()
+            // and cols j0..j0+w < c.cols() (full-tile vector writeback only
+            // runs when h == mr and w == nr, so its 16-wide rows stay
+            // inside the logical width); use_avx2 comes from runtime
+            // feature detection, never faked.
+            unsafe {
+                #[cfg(target_arch = "x86_64")]
+                if use_avx2 {
+                    if h == mr && w == nr {
+                        avx2_tile_dyn(mr, ap, bp, kc_eff, alpha, cptr, ldc, true, params.prefetch);
+                    } else {
+                        let mut tmp: TempTile = [0.0; MAX_MR * NR];
+                        avx2_tile_dyn(mr, ap, bp, kc_eff, 0.0, tmp.as_mut_ptr(), NR, false, params.prefetch);
+                        avx2_tile_fringe(&tmp, alpha, cptr, ldc, h, w);
+                    }
+                    continue;
+                }
+                let _ = use_avx2;
+                let mut tmp: TempTile = [0.0; MAX_MR * NR];
+                scalar_tile_into(ap, bp, kc_eff, mr, &mut tmp);
+                for i in 0..h {
+                    for j in 0..w {
+                        let pd = cptr.add(i * ldc + j);
+                        *pd += alpha * tmp[i * NR + j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Tile-tier SGEMM: `C = alpha * op(A) op(B) + beta * C`.
+///
+/// Runs the AVX2+FMA micro-kernel when the CPU supports it and the
+/// scalar reference tile otherwise — always available, fastest on
+/// AVX2+FMA (where [`crate::gemm::dispatch`] selects it).
+pub fn gemm(
+    params: &TileParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+) {
+    let mut scratch = Scratch::new();
+    gemm_with_scratch(params, transa, transb, alpha, a, b, beta, c, &mut scratch);
+}
+
+/// As [`gemm`], reusing caller-provided packing buffers (the batched
+/// driver amortises packing allocation across a batch this way).
+///
+/// Loop nest (BLIS order): `jc` over `nc`-wide column blocks, `pc` over
+/// `kc`-deep k blocks (pack `B'`), `ic` over `mc`-tall row blocks (pack
+/// `A'`), then panels × strips of tiles — `B'` panels stay hot across
+/// every `A` strip of the block.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_with_scratch(
+    params: &TileParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    beta: f32,
+    c: &mut MatMut<'_>,
+    scratch: &mut Scratch,
+) {
+    params.validate().expect("invalid tile parameters");
+    let m = c.rows();
+    let n = c.cols();
+    let k = match transa {
+        Transpose::No => a.cols(),
+        Transpose::Yes => a.rows(),
+    };
+    c.scale(beta);
+    if alpha == 0.0 || k == 0 || m == 0 || n == 0 {
+        return;
+    }
+    let use_avx2 = super::dispatch::detect_avx2();
+    let (ta, tb) = (&mut scratch.ta, &mut scratch.tb);
+    let mut jc = 0;
+    while jc < n {
+        let nc_eff = params.nc.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc_eff = params.kc_eff(k, pc);
+            tb.pack(b, transb, pc, kc_eff, jc, nc_eff, params.nr);
+            let mut ic = 0;
+            while ic < m {
+                let mc_eff = params.mc.min(m - ic);
+                ta.pack(a, transa, ic, mc_eff, pc, kc_eff, params.mr);
+                tile_block(params, use_avx2, ta, tb, 0, alpha, c, ic, jc, nc_eff, kc_eff);
+                ic += mc_eff;
+            }
+            pc += kc_eff;
+        }
+        jc += nc_eff;
+    }
+}
+
+/// Where the prepacked tile driver streams `A` from.
+#[derive(Clone, Copy)]
+pub(crate) enum TileA<'x> {
+    /// Unpacked `op(A)`: each (row block, k block) is packed on the fly.
+    Raw { a: MatRef<'x>, transa: Transpose },
+    /// Whole-operand prepack: `blocks[kblock][rowblock]`
+    /// (see [`crate::gemm::plan::PackedA`]).
+    Packed { blocks: &'x [Vec<TilePackedA>] },
+}
+
+/// The tile driver over a whole-operand prepacked `B` (and optionally
+/// `A`): identical micro-kernel calls in identical k order to
+/// [`gemm_with_scratch`], minus the packing work the prepacked operands
+/// make redundant — so results are bit-identical to a packing run.
+///
+/// `c` may be a parallel slice of the full output: `row0`/`col0` are its
+/// global offsets. `col0` must be panel-aligned (multiple of `nr`);
+/// `row0` must be a multiple of `mc` when `A` is prepacked (a packed row
+/// block is indivisible). The parallel split helpers guarantee both.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn prepacked_gemm(
+    params: &TileParams,
+    alpha: f32,
+    a: TileA<'_>,
+    row0: usize,
+    b_blocks: &[TilePackedB],
+    b_offsets: &[usize],
+    col0: usize,
+    beta: f32,
+    c: &mut MatMut<'_>,
+) {
+    let m = c.rows();
+    let n = c.cols();
+    debug_assert_eq!(col0 % params.nr, 0, "column slices must be panel-aligned");
+    c.scale(beta);
+    if alpha == 0.0 || m == 0 || n == 0 || b_blocks.is_empty() {
+        return;
+    }
+    let use_avx2 = super::dispatch::detect_avx2();
+    let p0 = col0 / params.nr;
+    let mut scratch_a = TilePackedA::new();
+    for (kbi, tb) in b_blocks.iter().enumerate() {
+        let kk = b_offsets[kbi];
+        let kc_eff = tb.kc_eff();
+        let mut ic = 0;
+        while ic < m {
+            let mc_eff = params.mc.min(m - ic);
+            let ta: &TilePackedA = match a {
+                TileA::Raw { a, transa } => {
+                    scratch_a.pack(a, transa, ic, mc_eff, kk, kc_eff, params.mr);
+                    &scratch_a
+                }
+                TileA::Packed { blocks } => &blocks[kbi][(row0 + ic) / params.mc],
+            };
+            tile_block(params, use_avx2, ta, tb, p0, alpha, c, ic, 0, n, kc_eff);
+            ic += mc_eff;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+    use crate::gemm::testutil::check_grid;
+    use crate::util::testkit::assert_allclose;
+
+    #[test]
+    fn matches_naive_on_grid() {
+        check_grid(
+            &|ta, tb, alpha, a, b, beta, c| gemm(&TileParams::avx2_6x16(), ta, tb, alpha, a, b, beta, c),
+            "tile-6x16",
+        );
+    }
+
+    #[test]
+    fn matches_naive_with_tiny_blocks() {
+        // Tiny blocks force every fringe path: k fringe, partial row
+        // blocks, fringe strips and fringe panels.
+        let p = TileParams { mr: 2, kc: 3, mc: 4, nc: 16, ..TileParams::avx2_6x16() };
+        check_grid(&move |ta, tb, alpha, a, b, beta, c| gemm(&p, ta, tb, alpha, a, b, beta, c), "tile-tiny");
+    }
+
+    #[test]
+    fn all_mr_heights_correct() {
+        for mr in 1..=MAX_MR {
+            let p = TileParams { mr, mc: mr * 2, kc: 16, nc: 32, ..TileParams::avx2_6x16() };
+            check_grid(
+                &move |ta, tb, alpha, a, b, beta, c| gemm(&p, ta, tb, alpha, a, b, beta, c),
+                &format!("tile-mr{mr}"),
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes() {
+        let mut scratch = Scratch::new();
+        for (i, &(m, n, k)) in [(17usize, 9usize, 23usize), (4, 4, 4), (33, 47, 40), (1, 1, 1)].iter().enumerate() {
+            let p = TileParams { kc: 16, mc: 12, nc: 32, ..TileParams::avx2_6x16() };
+            let a = Matrix::random(m, k, i as u64, -1.0, 1.0);
+            let b = Matrix::random(k, n, 100 + i as u64, -1.0, 1.0);
+            let mut c_got = Matrix::zeros(m, n);
+            let mut c_ref = Matrix::zeros(m, n);
+            gemm_with_scratch(
+                &p,
+                Transpose::No,
+                Transpose::No,
+                1.0,
+                a.view(),
+                b.view(),
+                0.0,
+                &mut c_got.view_mut(),
+                &mut scratch,
+            );
+            crate::gemm::naive::gemm(
+                Transpose::No,
+                Transpose::No,
+                1.0,
+                a.view(),
+                b.view(),
+                0.0,
+                &mut c_ref.view_mut(),
+            );
+            assert_allclose(c_got.data(), c_ref.data(), 2e-4, 1e-5, &format!("tile scratch reuse {i}"));
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn scalar_tile_matches_avx2_tile_values() {
+        // The scalar reference and the AVX2 kernel compute the same
+        // product (within reassociation-free FMA tolerance) on the same
+        // packed data — the conformance anchor for the vector kernel.
+        if !crate::gemm::dispatch::detect_avx2() {
+            eprintln!("SKIP: no AVX2+FMA");
+            return;
+        }
+        let (mr, kc) = (6usize, 37usize);
+        let a = Matrix::random(mr, kc, 7, -1.0, 1.0);
+        let b = Matrix::random(kc, NR, 8, -1.0, 1.0);
+        let mut ta = TilePackedA::new();
+        ta.pack(a.view(), Transpose::No, 0, mr, 0, kc, mr);
+        let mut tb = TilePackedB::new();
+        tb.pack(b.view(), Transpose::No, 0, kc, 0, NR, NR);
+        let mut scalar: TempTile = [0.0; MAX_MR * NR];
+        let mut vector: TempTile = [0.0; MAX_MR * NR];
+        unsafe {
+            scalar_tile_into(ta.strip_ptr(0), tb.panel_ptr(0), kc, mr, &mut scalar);
+            avx2_tile_dyn(mr, ta.strip_ptr(0), tb.panel_ptr(0), kc, 0.0, vector.as_mut_ptr(), NR, false, true);
+        }
+        assert_allclose(&vector[..mr * NR], &scalar[..mr * NR], 1e-4, 1e-5, "avx2 vs scalar tile");
+    }
+
+    #[test]
+    fn fringe_tiles_leave_padding_untouched() {
+        // Strided C with sentinel padding: fringe writeback must stay
+        // inside the logical area.
+        let (m, n, k) = (7usize, 19usize, 23usize);
+        let a = Matrix::random(m, k, 3, -1.0, 1.0);
+        let b = Matrix::random(k, n, 4, -1.0, 1.0);
+        let mut c = Matrix::random_strided(m, n, n + 5, 5);
+        let mut c_ref = c.clone();
+        gemm(&TileParams::avx2_6x16(), Transpose::No, Transpose::No, 0.5, a.view(), b.view(), 1.5, &mut c.view_mut());
+        crate::gemm::naive::gemm(Transpose::No, Transpose::No, 0.5, a.view(), b.view(), 1.5, &mut c_ref.view_mut());
+        for r in 0..m {
+            for j in 0..n {
+                let got = c.get(r, j);
+                let want = c_ref.get(r, j);
+                assert!((got - want).abs() <= 1e-4 + 2e-4 * want.abs(), "({r},{j}): {got} vs {want}");
+            }
+            for p in n..n + 5 {
+                assert_eq!(c.data()[r * (n + 5) + p], -77.0, "padding clobbered at row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_scale_by_beta() {
+        let p = TileParams::avx2_6x16();
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 4);
+        let mut c = Matrix::from_fn(3, 4, |_, _| 2.0);
+        gemm(&p, Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.5, &mut c.view_mut());
+        assert!(c.data().iter().all(|&x| x == 1.0));
+        // alpha == 0 likewise.
+        let a = Matrix::random(3, 5, 1, -1.0, 1.0);
+        let b = Matrix::random(5, 4, 2, -1.0, 1.0);
+        gemm(&p, Transpose::No, Transpose::No, 0.0, a.view(), b.view(), 0.0, &mut c.view_mut());
+        assert!(c.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn register_budget_documented_invariant() {
+        // 6×16 on AVX2: 12 accumulators + 2 B streams + 1 A broadcast
+        // must fit the 16-register YMM file.
+        let p = TileParams::avx2_6x16();
+        assert!(p.mr * (p.nr / 8) + p.nr / 8 + 1 <= 16);
+        assert_eq!(p.nr, NR);
+    }
+}

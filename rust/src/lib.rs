@@ -16,10 +16,13 @@
 //!   (five concurrent dot products in eight XMM registers), B re-buffering,
 //!   L1/L2 cache blocking, prefetching and full inner-loop unrolling,
 //!   together with the naive and ATLAS-proxy baselines it is evaluated
-//!   against — plus [`gemm::dispatch`], the production entry point that
-//!   picks a kernel per call from CPU features and shape heuristics, and
-//!   [`gemm::batch`], the strided-batch GEMM driver behind
-//!   [`blas::sgemm_batch`] and the tensor/conv batched paths.
+//!   against — plus [`gemm::tile`], the outer-product register-tiled
+//!   AVX2+FMA tier (a 6×16 tile of `C` resident in registers) that heads
+//!   the serial ladder on modern cores, [`gemm::dispatch`], the
+//!   production entry point that picks a kernel per call from CPU
+//!   features and shape heuristics, and [`gemm::batch`], the
+//!   strided-batch GEMM driver behind [`blas::sgemm_batch`] and the
+//!   tensor/conv batched paths.
 //! * [`sim`] — a trace-driven Pentium III memory-hierarchy simulator
 //!   (L1/L2/TLB + 4-wide SIMD timing model) used to reproduce the paper's
 //!   figures in the paper's own units (MFlop/s on a 450 MHz PIII).

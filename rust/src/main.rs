@@ -238,10 +238,15 @@ fn cmd_train(argv: Vec<String>) -> i32 {
 
 fn cmd_autotune(argv: Vec<String>) -> i32 {
     let cli = Cli::new("emmerald autotune", "ATLAS-style block-size search")
-        .opt("kernel", "sse", "sse|avx2|blocked")
+        .opt("kernel", "sse", "sse|avx2|tile|blocked|strassen")
         .opt("probe", "448", "probe problem size");
     let m = parse(&cli, argv);
     let probe = m.get_usize("probe").unwrap();
+    match m.get("kernel").unwrap() {
+        "tile" => return autotune_tile(probe),
+        "strassen" => return autotune_strassen(probe),
+        _ => {}
+    }
     let mut spec = match m.get("kernel").unwrap() {
         "blocked" => emmerald::autotune::TuneSpec::blocked_default(probe),
         "avx2" => {
@@ -270,6 +275,65 @@ fn cmd_autotune(argv: Vec<String>) -> i32 {
         r.best.nr,
         r.best_mflops,
         spec.kernel.kernel_id().name()
+    );
+    match cached {
+        Some(path) => println!("persisted to {} (loaded automatically at next start)", path.display()),
+        None => println!("persistence disabled or failed (set {} to a writable path)", emmerald::autotune::cache::ENV_PATH),
+    }
+    0
+}
+
+/// `emmerald autotune --kernel tile`: search (MR, kc, mc, nc) for the
+/// outer-product tile tier and persist the winner.
+fn autotune_tile(probe: usize) -> i32 {
+    let spec = emmerald::autotune::TileTuneSpec::avx2_default(probe);
+    let (r, cached) = emmerald::autotune::tune_tile_install_and_persist(&spec);
+    let mut table = Table::new(["mr", "kc", "mc", "nc", "MFlop/s"]);
+    for p in &r.log {
+        table.row([
+            p.params.mr.to_string(),
+            p.params.kc.to_string(),
+            p.params.mc.to_string(),
+            p.params.nc.to_string(),
+            fnum(p.mflops, 1),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "winner: {}x{} tile, kc={} mc={} nc={} at {:.1} MFlop/s — installed into the avx2-tile dispatch table",
+        r.best.mr, r.best.nr, r.best.kc, r.best.mc, r.best.nc, r.best_mflops
+    );
+    match cached {
+        Some(path) => println!("persisted to {} (loaded automatically at next start)", path.display()),
+        None => println!("persistence disabled or failed (set {} to a writable path)", emmerald::autotune::cache::ENV_PATH),
+    }
+    0
+}
+
+/// `emmerald autotune --kernel strassen`: measure the Strassen crossover
+/// and install/persist it as `strassen_min_dim`. `--probe` adds a sweep
+/// point (so `--probe 2048` extends the default 256..1024 ladder).
+fn autotune_strassen(probe: usize) -> i32 {
+    let mut spec = emmerald::autotune::CrossoverSpec::default();
+    if !spec.sizes.contains(&probe) {
+        spec.sizes.push(probe);
+        spec.sizes.sort_unstable();
+    }
+    let (r, cached) = emmerald::autotune::tune_strassen_install_and_persist(&spec);
+    let mut table = Table::new(["size", "flat MFlop/s", "hybrid MFlop/s", "hybrid/flat"]);
+    for p in &r.log {
+        table.row([
+            p.size.to_string(),
+            fnum(p.flat_mflops, 1),
+            fnum(p.hybrid_mflops, 1),
+            fnum(p.hybrid_mflops / p.flat_mflops, 2),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "strassen_min_dim = {} ({}) — installed into the dispatch heuristics",
+        r.min_dim,
+        if r.observed { "measured crossover" } else { "no crossover in sweep; 2x largest probe" }
     );
     match cached {
         Some(path) => println!("persisted to {} (loaded automatically at next start)", path.display()),
@@ -311,6 +375,18 @@ fn cmd_dispatch(argv: Vec<String>) -> i32 {
         d.params_sse().nr,
         d.params_avx2().kb,
         d.params_avx2().nr
+    );
+    let tp = d.params_tile();
+    println!(
+        "tile tier: {} — {}x{} tile, tuned (mr={}, kc={}, mc={}, nc={}); strassen_min_dim={}",
+        if emmerald::gemm::KernelId::Avx2Tile.available() { "available (avx2+fma)" } else { "unavailable on this CPU" },
+        tp.mr,
+        tp.nr,
+        tp.mr,
+        tp.kc,
+        tp.mc,
+        tp.nc,
+        d.config().strassen_min_dim,
     );
     let ctx = emmerald::gemm::GemmContext::global();
     println!(

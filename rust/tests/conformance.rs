@@ -246,6 +246,179 @@ fn parallel_beta_scale_conforms_and_respects_padding() {
 }
 
 #[test]
+fn avx2_tile_fringe_grid_conforms() {
+    hermetic_tune_cache();
+    // The tile tier's fringe grid: every m/n/k combination of 1, MR−1,
+    // MR+1, NR−1, NR+1 (MR = 6, NR = 16) across all four transpose
+    // layouts, with strided operands and rotating alpha/beta pairs. On
+    // hosts without AVX2+FMA the forced call degrades (and still must
+    // match the oracle), which keeps the grid meaningful everywhere.
+    let d = GemmDispatch::default();
+    let dims = [1usize, 5, 7, 15, 17];
+    let scalars = [(1.0f32, 0.0f32), (0.5, 2.0), (-1.0, 1.0), (0.0, 0.5)];
+    let mut seed = 0x711Eu64;
+    let mut case = 0usize;
+    for &m in &dims {
+        for &n in &dims {
+            for &k in &dims {
+                for transa in [Transpose::No, Transpose::Yes] {
+                    for transb in [Transpose::No, Transpose::Yes] {
+                        let (alpha, beta) = scalars[case % scalars.len()];
+                        case += 1;
+                        seed += 1;
+                        let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+                        let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+                        let a = Matrix::random_strided(ar, ac, ac + 3, seed);
+                        let b = Matrix::random_strided(br, bc, bc + 1, seed ^ 0xAB);
+                        let mut c_got = Matrix::random_strided(m, n, n + 2, seed ^ 0xCD);
+                        let mut c_ref = c_got.clone();
+                        d.gemm_with(
+                            KernelId::Avx2Tile,
+                            transa,
+                            transb,
+                            alpha,
+                            a.view(),
+                            b.view(),
+                            beta,
+                            &mut c_got.view_mut(),
+                        );
+                        oracle(transa, transb, m, n, k, alpha, beta, &a, &b, &mut c_ref);
+                        assert_allclose(
+                            c_got.data(),
+                            c_ref.data(),
+                            2e-4,
+                            1e-5,
+                            &format!("tile fringe m={m} n={n} k={k} ta={transa:?} tb={transb:?} α={alpha} β={beta}"),
+                        );
+                        for r in 0..m {
+                            for p in n..n + 2 {
+                                assert_eq!(
+                                    c_got.data()[r * (n + 2) + p],
+                                    -77.0,
+                                    "tile clobbered C padding at ({r},{p})"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // 257 crosses every block boundary (kc, mc, nc and the fringe of
+    // each): spot-check it on every axis, plus the full cube once.
+    let mut seed = 0x257u64;
+    for (i, &(m, n, k)) in
+        [(257usize, 17usize, 7usize), (7, 257, 17), (17, 7, 257), (257, 257, 257)].iter().enumerate()
+    {
+        let (transa, transb) = [
+            (Transpose::No, Transpose::No),
+            (Transpose::Yes, Transpose::No),
+            (Transpose::No, Transpose::Yes),
+            (Transpose::Yes, Transpose::Yes),
+        ][i % 4];
+        seed += 1;
+        let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+        let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+        let a = Matrix::random_strided(ar, ac, ac + 3, seed);
+        let b = Matrix::random_strided(br, bc, bc + 1, seed ^ 0xAB);
+        let mut c_got = Matrix::random_strided(m, n, n + 2, seed ^ 0xCD);
+        let mut c_ref = c_got.clone();
+        d.gemm_with(KernelId::Avx2Tile, transa, transb, 0.75, a.view(), b.view(), 0.5, &mut c_got.view_mut());
+        oracle(transa, transb, m, n, k, 0.75, 0.5, &a, &b, &mut c_ref);
+        assert_allclose(
+            c_got.data(),
+            c_ref.data(),
+            5e-4,
+            1e-4,
+            &format!("tile 257-boundary m={m} n={n} k={k} ta={transa:?} tb={transb:?}"),
+        );
+    }
+}
+
+#[test]
+fn avx2_tile_bitwise_stable_across_serial_parallel_prepacked() {
+    hermetic_tune_cache();
+    // The acceptance contract: one problem, executed through the serial
+    // tile driver, the thread-parallel tier and both prepacked paths,
+    // must produce identical bits (per-element accumulation is pure k
+    // order; fringe writeback rounds exactly like the vector writeback).
+    // The prepacked layout is only the tile layout on AVX2+FMA hosts.
+    if !KernelId::Avx2Tile.available() {
+        eprintln!("SKIP: no AVX2+FMA — prepacked operands use the dot layout here");
+        return;
+    }
+    let ctx_ser = emmerald::blas::GemmContext::new(DispatchConfig {
+        threads: 1,
+        ..DispatchConfig::default()
+    });
+    let ctx_par = emmerald::blas::GemmContext::new(DispatchConfig {
+        threads: 3,
+        parallel_min_flops: 0.0,
+        ..DispatchConfig::default()
+    });
+    let mut seed = 0xB17u64;
+    for (transa, transb) in [
+        (Transpose::No, Transpose::No),
+        (Transpose::Yes, Transpose::No),
+        (Transpose::No, Transpose::Yes),
+        (Transpose::Yes, Transpose::Yes),
+    ] {
+        for &(m, n, k) in &[(37usize, 29usize, 41usize), (64, 48, 16), (6, 16, 8), (61, 33, 257)] {
+            seed += 1;
+            let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+            let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+            let a = Matrix::random(ar, ac, seed, -1.0, 1.0);
+            let b = Matrix::random(br, bc, seed ^ 0x55, -1.0, 1.0);
+            let c0: Vec<f32> = Matrix::random(m, n, seed ^ 0x99, -1.0, 1.0).data().to_vec();
+            let what = format!("{m}x{n}x{k} ta={transa:?} tb={transb:?}");
+
+            // Serial reference: the tile kernel through a forced plan.
+            let plan_ser = ctx_ser
+                .gemm()
+                .transpose_a(transa)
+                .transpose_b(transb)
+                .alpha(0.75)
+                .beta(0.5)
+                .kernel(KernelId::Avx2Tile)
+                .plan(m, n, k)
+                .unwrap();
+            let mut c_serial = c0.clone();
+            plan_ser.run(a.data(), b.data(), &mut c_serial).unwrap();
+
+            // Thread-parallel execution of the same problem.
+            let plan_par = ctx_par
+                .gemm()
+                .transpose_a(transa)
+                .transpose_b(transb)
+                .alpha(0.75)
+                .beta(0.5)
+                .plan(m, n, k)
+                .unwrap();
+            assert_eq!(plan_par.kernel(), KernelId::Parallel, "{what}: must take the parallel tier");
+            let mut c_par = c0.clone();
+            plan_par.run(a.data(), b.data(), &mut c_par).unwrap();
+            assert_eq!(c_par, c_serial, "{what}: parallel != serial bits");
+
+            // Prepacked B, serial and parallel.
+            for (ctx, plan, label) in
+                [(&ctx_ser, &plan_ser, "serial"), (&ctx_par, &plan_par, "parallel")]
+            {
+                let pb = ctx.pack_b(transb, k, n, b.data(), b.ld()).unwrap();
+                assert!(pb.is_tile(), "{what}: AVX2 host must pack the tile layout");
+                let mut c_pb = c0.clone();
+                plan.run_packed_b(a.data(), &pb, &mut c_pb).unwrap();
+                assert_eq!(c_pb, c_serial, "{what}: {label} run_packed_b != serial bits");
+
+                let pa = ctx.pack_a(transa, m, k, a.data(), a.ld()).unwrap();
+                let mut c_pab = c0.clone();
+                plan.run_packed(&pa, &pb, &mut c_pab).unwrap();
+                assert_eq!(c_pab, c_serial, "{what}: {label} run_packed != serial bits");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_dispatch_selection_is_stable_and_conformant() {
     // Random shapes/scalars: selection is deterministic (same shape →
     // same kernel), the selected kernel is available, and the result

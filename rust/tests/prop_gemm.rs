@@ -4,7 +4,7 @@
 
 use emmerald::blas::{sgemm, sgemm_batch, Backend, Matrix, Transpose};
 use emmerald::gemm::pack::{kpad_for, PackedB};
-use emmerald::gemm::{BlockParams, Unroll};
+use emmerald::gemm::{BlockParams, TileParams, Unroll};
 use emmerald::util::testkit::{assert_allclose, check, Gen};
 
 fn random_case(g: &mut Gen, backend: Backend) {
@@ -163,6 +163,88 @@ fn prop_avx2_matches_naive() {
         return;
     }
     check("avx2 ≍ naive", 120, |g| random_case(g, Backend::Avx2));
+}
+
+#[test]
+fn prop_tile_backend_matches_naive() {
+    if !emmerald::gemm::KernelId::Avx2Tile.available() {
+        eprintln!("SKIP: no AVX2+FMA");
+        return;
+    }
+    check("avx2-tile ≍ naive", 120, |g| random_case(g, Backend::Avx2Tile));
+}
+
+#[test]
+fn prop_tile_random_geometry_is_always_correct() {
+    // The tile driver must be correct for *any* legal tile geometry (the
+    // tile autotuner's safety property), across random shapes, strides,
+    // transposes and scalars. Runs the AVX2 micro-kernel where available
+    // and the scalar reference tile elsewhere.
+    check("tile geometry", 60, |g| {
+        let mr = g.rng.range_usize(1, 6);
+        let p = TileParams {
+            mr,
+            nr: 16,
+            kc: g.rng.range_usize(1, 80),
+            mc: mr * g.rng.range_usize(1, 6),
+            nc: 16 * g.rng.range_usize(1, 4),
+            prefetch: g.rng.chance(0.5),
+        };
+        let m = g.dim(40);
+        let n = g.dim(40);
+        let k = g.dim(90);
+        let transa = if g.rng.chance(0.5) { Transpose::Yes } else { Transpose::No };
+        let transb = if g.rng.chance(0.5) { Transpose::Yes } else { Transpose::No };
+        let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+        let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+        let a = Matrix::random_strided(ar, ac, ac + g.rng.range_usize(0, 4), g.rng.next_u64());
+        let b = Matrix::random_strided(br, bc, bc + g.rng.range_usize(0, 3), g.rng.next_u64());
+        let mut c_got = Matrix::random_strided(m, n, n + g.rng.range_usize(0, 4), g.rng.next_u64());
+        let mut c_ref = c_got.clone();
+        let alpha = g.rng.f32_range(-2.0, 2.0);
+        let beta = if g.rng.chance(0.3) { 0.0 } else { g.rng.f32_range(-1.5, 1.5) };
+        emmerald::gemm::tile::gemm(&p, transa, transb, alpha, a.view(), b.view(), beta, &mut c_got.view_mut());
+        emmerald::gemm::naive::gemm(transa, transb, alpha, a.view(), b.view(), beta, &mut c_ref.view_mut());
+        assert_allclose(c_got.data(), c_ref.data(), 5e-4, 1e-4, &format!("tile geometry {p:?}"));
+    });
+}
+
+#[test]
+fn prop_tile_plan_reruns_bitwise_and_matches_prepacked() {
+    // Planned tile execution: re-running one plan is bit-stable, and a
+    // prepacked-B run agrees bitwise with the unpacked run whenever the
+    // prepack carries the tile layout (AVX2 hosts; the dot layout keeps
+    // its own bitwise guarantees in plan_reuse.rs).
+    check("tile plan rerun", 30, |g| {
+        let ctx = emmerald::blas::GemmContext::new(emmerald::gemm::DispatchConfig {
+            threads: 1,
+            ..emmerald::gemm::DispatchConfig::default()
+        });
+        let m = g.dim(40).max(4);
+        let n = g.dim(40);
+        let k = g.dim(60);
+        let a = Matrix::random(m, k, g.rng.next_u64(), -1.0, 1.0);
+        let b = Matrix::random(k, n, g.rng.next_u64(), -1.0, 1.0);
+        let plan = ctx
+            .gemm()
+            .kernel(emmerald::gemm::KernelId::Avx2Tile)
+            .beta(0.25)
+            .plan(m, n, k)
+            .unwrap();
+        let c0 = g.matrix(m, n);
+        let mut c1 = c0.clone();
+        let mut c2 = c0.clone();
+        plan.run(a.data(), b.data(), &mut c1).unwrap();
+        plan.run(a.data(), b.data(), &mut c2).unwrap();
+        assert_eq!(c1, c2, "plan rerun must be bit-identical");
+        if emmerald::gemm::KernelId::Avx2Tile.available() {
+            let pb = ctx.pack_b(Transpose::No, k, n, b.data(), b.ld()).unwrap();
+            assert!(pb.is_tile());
+            let mut c3 = c0.clone();
+            plan.run_packed_b(a.data(), &pb, &mut c3).unwrap();
+            assert_eq!(c3, c1, "prepacked tile B must match the packing run bitwise");
+        }
+    });
 }
 
 #[test]
