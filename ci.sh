@@ -26,6 +26,12 @@ cargo test -q
 echo "== cargo bench --bench tile_vs_dot (tile >= dot guard) =="
 cargo bench --bench tile_vs_dot
 
+# DGEMM guard: the f64 6x8 tile tier must stay >= 2x the naive triple
+# loop at 512^3 — catches dispatch mis-routing or a broken f64 kernel
+# (skip-passes without AVX2).
+echo "== cargo bench --bench dgemm_tile_vs_naive (f64 tile >= 2x naive guard) =="
+cargo bench --bench dgemm_tile_vs_naive
+
 # Tier-1 lint: clippy over every target (lib, tests, benches, examples)
 # with warnings promoted to errors. CI_SKIP_CLIPPY=1 is the only escape
 # hatch for toolchains that ship without the clippy component.

@@ -17,9 +17,9 @@ use emmerald::sim::trace::{trace_emmerald, Layout};
 fn main() {
     let n = 448usize;
     let flops = gemm_flops(n, n, n);
-    let a = Matrix::random(n, n, 1, -1.0, 1.0);
-    let b = Matrix::random(n, n, 2, -1.0, 1.0);
-    let mut c = Matrix::zeros(n, n);
+    let a = Matrix::<f32>::random(n, n, 1, -1.0, 1.0);
+    let b = Matrix::<f32>::random(n, n, 2, -1.0, 1.0);
+    let mut c = Matrix::<f32>::zeros(n, n);
 
     let mut report = Report::new("NR5 — dot products per inner loop (paper: 5 is best)", &["nr"]);
     let mut best = (0usize, 0.0f64);

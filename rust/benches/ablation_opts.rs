@@ -17,9 +17,9 @@ fn main() {
     let n = 448usize;
     let stride = 700usize;
     let flops = gemm_flops(n, n, n);
-    let a = Matrix::random_strided(n, n, stride, 1);
-    let b = Matrix::random_strided(n, n, stride, 2);
-    let mut c = Matrix::zeros_strided(n, n, stride);
+    let a = Matrix::<f32>::random_strided(n, n, stride, 1);
+    let b = Matrix::<f32>::random_strided(n, n, stride, 2);
+    let mut c = Matrix::<f32>::zeros_strided(n, n, stride);
 
     let base = BlockParams::emmerald_sse();
     let variants: Vec<(&str, BlockParams)> = vec![

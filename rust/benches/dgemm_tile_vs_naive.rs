@@ -1,0 +1,77 @@
+//! CI guard for the f64 kernel ladder: the 6×8 outer-product tile tier
+//! must beat the naive triple loop by a wide margin at 512³, or the
+//! DGEMM subsystem has regressed to scalar speed.
+//!
+//! The bar is deliberately conservative (≥ 2× naive — in practice the
+//! vector tile is an order of magnitude faster) so the guard is about
+//! wiring, not about machine-to-machine variance: it fails when dispatch
+//! stops routing f64 to the vector tier or the f64 micro-kernel breaks,
+//! not when a noisy neighbour steals half the core. Hosts without
+//! AVX2+FMA skip-pass — there is no f64 vector tier to regress.
+//!
+//! Exit code 1 on failure so `ci.sh` can gate on it.
+
+use emmerald::bench::{gemm_flops, Bencher, FlushMode, Report};
+use emmerald::blas::{Matrix, Transpose};
+use emmerald::gemm::{naive, tile, ElementId, KernelId, TileParams};
+
+fn main() {
+    if !KernelId::Avx2Tile.available_for(ElementId::F64) {
+        println!("SKIP-PASS: no AVX2+FMA — f64 tile tier unavailable on this host");
+        return;
+    }
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n: usize = 512;
+    let naive_n: usize = if quick { 128 } else { 256 };
+
+    let a = Matrix::<f64>::random(n, n, 1, -1.0, 1.0);
+    let b = Matrix::<f64>::random(n, n, 2, -1.0, 1.0);
+    let mut c_tile = Matrix::<f64>::zeros(n, n);
+    let mut c_ref = Matrix::<f64>::zeros(n, n);
+    let params = TileParams::avx2_6x8_f64();
+
+    // Correctness before speed.
+    tile::gemm(&params, Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut c_tile.view_mut());
+    naive::gemm(Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut c_ref.view_mut());
+    let mut worst = 0.0f64;
+    for i in 0..n * n {
+        let want = c_ref.data()[i];
+        worst = worst.max((c_tile.data()[i] - want).abs() / (1.0 + want.abs()));
+    }
+    assert!(worst < 1e-12, "f64 tile disagrees with naive: rel err {worst:e}");
+
+    let mut report = Report::new(
+        "DGEMM — f64 6x8 tile tier vs naive triple loop (MFlop/s)",
+        &["size", "kernel"],
+    );
+
+    // Naive is measured at a smaller size (it is O(n³) at ~1 flop/cycle;
+    // 512³ would dominate CI time) — MFlop/s compares fairly across sizes.
+    let a_s = Matrix::<f64>::random(naive_n, naive_n, 3, -1.0, 1.0);
+    let b_s = Matrix::<f64>::random(naive_n, naive_n, 4, -1.0, 1.0);
+    let mut c_s = Matrix::<f64>::zeros(naive_n, naive_n);
+    let mut bench = Bencher::new(1, 3).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+    let r_naive = bench.run("naive-f64", gemm_flops(naive_n, naive_n, naive_n), || {
+        naive::gemm(Transpose::No, Transpose::No, 1.0, a_s.view(), b_s.view(), 0.0, &mut c_s.view_mut());
+    });
+    report.add(&[naive_n.to_string(), "naive".into()], r_naive.clone());
+
+    let mut bench = Bencher::new(1, 3).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+    let r_tile = bench.run("tile-f64", gemm_flops(n, n, n), || {
+        tile::gemm(&params, Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut c_tile.view_mut());
+    });
+    report.add(&[n.to_string(), "tile-6x8".into()], r_tile.clone());
+    report.emit("dgemm_tile_vs_naive");
+
+    let speedup = r_tile.mflops() / r_naive.mflops();
+    println!(
+        "f64 tile {:.1} MFlop/s vs naive {:.1} MFlop/s — {speedup:.2}x",
+        r_tile.mflops(),
+        r_naive.mflops()
+    );
+    if speedup < 2.0 {
+        println!("FAIL: f64 tile tier below 2x naive — the DGEMM vector path has regressed");
+        std::process::exit(1);
+    }
+    println!("PASS: f64 tile ≥ 2x naive");
+}

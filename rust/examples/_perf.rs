@@ -3,9 +3,9 @@ use emmerald::blas::{Matrix, Transpose};
 use emmerald::gemm::{avx2, simd, BlockParams};
 fn main() {
     for n in [320usize, 448, 640] {
-        let a = Matrix::random(n, n, 1, -1.0, 1.0);
-        let b = Matrix::random(n, n, 2, -1.0, 1.0);
-        let mut c = Matrix::zeros(n, n);
+        let a = Matrix::<f32>::random(n, n, 1, -1.0, 1.0);
+        let b = Matrix::<f32>::random(n, n, 2, -1.0, 1.0);
+        let mut c = Matrix::<f32>::zeros(n, n);
         let flops = gemm_flops(n, n, n);
         for (name, is_avx) in [("sse", false), ("avx2", true)] {
             let p = if is_avx { BlockParams::emmerald_avx2() } else { BlockParams::emmerald_sse() };

@@ -12,9 +12,16 @@
 //! point it at a temp file); the values `off` / `0` / empty disable
 //! persistence entirely.
 
-use crate::gemm::{BlockParams, KernelId, TileParams, Unroll};
+use crate::gemm::{BlockParams, ElementId, KernelId, TileParams, Unroll};
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
+
+/// On-disk schema version. **v3** added the `element` key to the dot and
+/// tile sections (entries are now keyed `(cpu, kernel, element)`); files
+/// with a missing, older or unknown version are **discarded wholesale**
+/// — never a parse error — so upgrading the crate silently re-tunes
+/// rather than replaying geometry under the wrong key.
+pub const SCHEMA_VERSION: usize = 3;
 
 /// Environment variable overriding the cache file path.
 pub const ENV_PATH: &str = "EMMERALD_TUNE_CACHE";
@@ -70,14 +77,15 @@ pub fn cpu_model() -> String {
 /// sections (read-modify-write over the whole file).
 #[derive(Debug, Default)]
 struct CacheDoc {
-    entries: Vec<(String, KernelId, BlockParams)>,
-    tile_entries: Vec<(String, TileParams)>,
+    entries: Vec<(String, ElementId, KernelId, BlockParams)>,
+    tile_entries: Vec<(String, ElementId, TileParams)>,
     strassen_entries: Vec<(String, usize)>,
 }
 
-fn entry_to_json(cpu: &str, kernel: KernelId, p: &BlockParams) -> Json {
+fn entry_to_json(cpu: &str, element: ElementId, kernel: KernelId, p: &BlockParams) -> Json {
     Json::obj([
         ("cpu", cpu.into()),
+        ("element", element.name().into()),
         ("kernel", kernel.name().into()),
         ("kb", p.kb.into()),
         ("mb", p.mb.into()),
@@ -89,8 +97,9 @@ fn entry_to_json(cpu: &str, kernel: KernelId, p: &BlockParams) -> Json {
     ])
 }
 
-fn entry_from_json(j: &Json) -> Option<(String, KernelId, BlockParams)> {
+fn entry_from_json(j: &Json) -> Option<(String, ElementId, KernelId, BlockParams)> {
     let cpu = j.get("cpu")?.as_str()?.to_string();
+    let element = ElementId::from_name(j.get("element")?.as_str()?)?;
     let kernel = KernelId::from_name(j.get("kernel")?.as_str()?)?;
     let params = BlockParams {
         kb: j.get("kb")?.as_usize()?,
@@ -102,12 +111,13 @@ fn entry_from_json(j: &Json) -> Option<(String, KernelId, BlockParams)> {
         pack_a: j.get("pack_a")?.as_bool()?,
     };
     params.validate().ok()?;
-    Some((cpu, kernel, params))
+    Some((cpu, element, kernel, params))
 }
 
-fn tile_entry_to_json(cpu: &str, p: &TileParams) -> Json {
+fn tile_entry_to_json(cpu: &str, element: ElementId, p: &TileParams) -> Json {
     Json::obj([
         ("cpu", cpu.into()),
+        ("element", element.name().into()),
         ("mr", p.mr.into()),
         ("nr", p.nr.into()),
         ("kc", p.kc.into()),
@@ -117,8 +127,9 @@ fn tile_entry_to_json(cpu: &str, p: &TileParams) -> Json {
     ])
 }
 
-fn tile_entry_from_json(j: &Json) -> Option<(String, TileParams)> {
+fn tile_entry_from_json(j: &Json) -> Option<(String, ElementId, TileParams)> {
     let cpu = j.get("cpu")?.as_str()?.to_string();
+    let element = ElementId::from_name(j.get("element")?.as_str()?)?;
     let params = TileParams {
         mr: j.get("mr")?.as_usize()?,
         nr: j.get("nr")?.as_usize()?,
@@ -128,7 +139,7 @@ fn tile_entry_from_json(j: &Json) -> Option<(String, TileParams)> {
         prefetch: j.get("prefetch")?.as_bool()?,
     };
     params.validate().ok()?;
-    Some((cpu, params))
+    Some((cpu, element, params))
 }
 
 fn strassen_entry_from_json(j: &Json) -> Option<(String, usize)> {
@@ -139,7 +150,11 @@ fn strassen_entry_from_json(j: &Json) -> Option<(String, usize)> {
 
 /// Parse a whole cache file (missing or corrupt files yield an empty
 /// document — the cache is strictly best-effort; unknown sections and
-/// malformed entries are skipped).
+/// malformed entries are skipped). Files written by an **older or
+/// unknown schema version are discarded wholesale** (see
+/// [`SCHEMA_VERSION`]): pre-v3 entries carry no `element` key and must
+/// not be replayed under a guessed one — the next autotune run simply
+/// rewrites the file at the current version.
 fn load_doc(path: &Path) -> CacheDoc {
     let Ok(text) = std::fs::read_to_string(path) else {
         return CacheDoc::default();
@@ -147,6 +162,9 @@ fn load_doc(path: &Path) -> CacheDoc {
     let Ok(doc) = Json::parse(&text) else {
         return CacheDoc::default();
     };
+    if doc.get("version").and_then(Json::as_usize) != Some(SCHEMA_VERSION) {
+        return CacheDoc::default();
+    }
     CacheDoc {
         entries: doc
             .get("entries")
@@ -170,14 +188,14 @@ fn load_doc(path: &Path) -> CacheDoc {
 /// concurrent readers never observe a torn file).
 fn save_doc(path: &Path, doc: &CacheDoc) -> std::io::Result<()> {
     let json = Json::obj([
-        ("version", 2usize.into()),
+        ("version", SCHEMA_VERSION.into()),
         (
             "entries",
-            Json::arr(doc.entries.iter().map(|(c, id, p)| entry_to_json(c, *id, p))),
+            Json::arr(doc.entries.iter().map(|(c, e, id, p)| entry_to_json(c, *e, *id, p))),
         ),
         (
             "tile_entries",
-            Json::arr(doc.tile_entries.iter().map(|(c, p)| tile_entry_to_json(c, p))),
+            Json::arr(doc.tile_entries.iter().map(|(c, e, p)| tile_entry_to_json(c, *e, p))),
         ),
         (
             "strassen_entries",
@@ -194,29 +212,30 @@ fn save_doc(path: &Path, doc: &CacheDoc) -> std::io::Result<()> {
     std::fs::rename(&tmp, path)
 }
 
-/// Load every well-formed dot-kernel entry from a cache file (missing or
-/// corrupt files yield an empty list — the cache is strictly best-effort).
-pub fn load_entries(path: &Path) -> Vec<(String, KernelId, BlockParams)> {
+/// Load every well-formed dot-kernel entry from a cache file (missing,
+/// corrupt or old-versioned files yield an empty list — the cache is
+/// strictly best-effort).
+pub fn load_entries(path: &Path) -> Vec<(String, ElementId, KernelId, BlockParams)> {
     load_doc(path).entries
 }
 
 /// Entries from the configured cache file that match this host's CPU
 /// model — what the global [`crate::gemm::plan::GemmContext`] installs at
 /// init.
-pub fn load_host_entries() -> Vec<(KernelId, BlockParams)> {
+pub fn load_host_entries() -> Vec<(ElementId, KernelId, BlockParams)> {
     let Some(path) = cache_path() else {
         return Vec::new();
     };
     let host = cpu_model();
     load_entries(&path)
         .into_iter()
-        .filter(|(cpu, _, _)| *cpu == host)
-        .map(|(_, id, p)| (id, p))
+        .filter(|(cpu, _, _, _)| *cpu == host)
+        .map(|(_, e, id, p)| (e, id, p))
         .collect()
 }
 
-/// Insert-or-replace one `(cpu, kernel)` dot-geometry entry in a cache
-/// file.
+/// Insert-or-replace one `(cpu, kernel, element)` dot-geometry entry in
+/// a cache file.
 ///
 /// Read-modify-write with an atomic publish (see [`save_doc`]); the tile
 /// and Strassen sections ride along untouched. (Two simultaneous writers
@@ -225,20 +244,26 @@ pub fn load_host_entries() -> Vec<(KernelId, BlockParams)> {
 pub fn save_entry(
     path: &Path,
     cpu: &str,
+    element: ElementId,
     kernel: KernelId,
     params: &BlockParams,
 ) -> std::io::Result<()> {
     let mut doc = load_doc(path);
-    doc.entries.retain(|(c, id, _)| !(c == cpu && *id == kernel));
-    doc.entries.push((cpu.to_string(), kernel, *params));
+    doc.entries.retain(|(c, e, id, _)| !(c == cpu && *e == element && *id == kernel));
+    doc.entries.push((cpu.to_string(), element, kernel, *params));
     save_doc(path, &doc)
 }
 
-/// Insert-or-replace the tile-tier geometry for one CPU.
-pub fn save_tile_entry(path: &Path, cpu: &str, params: &TileParams) -> std::io::Result<()> {
+/// Insert-or-replace the tile-tier geometry for one `(cpu, element)`.
+pub fn save_tile_entry(
+    path: &Path,
+    cpu: &str,
+    element: ElementId,
+    params: &TileParams,
+) -> std::io::Result<()> {
     let mut doc = load_doc(path);
-    doc.tile_entries.retain(|(c, _)| c != cpu);
-    doc.tile_entries.push((cpu.to_string(), *params));
+    doc.tile_entries.retain(|(c, e, _)| !(c == cpu && *e == element));
+    doc.tile_entries.push((cpu.to_string(), element, *params));
     save_doc(path, &doc)
 }
 
@@ -253,17 +278,17 @@ pub fn save_strassen_entry(path: &Path, cpu: &str, min_dim: usize) -> std::io::R
 /// Persist a tuning winner for this host under the configured cache path.
 /// Returns the path written, or `None` when persistence is disabled or
 /// the write failed (the cache never blocks tuning).
-pub fn save_host_entry(kernel: KernelId, params: &BlockParams) -> Option<PathBuf> {
+pub fn save_host_entry(element: ElementId, kernel: KernelId, params: &BlockParams) -> Option<PathBuf> {
     let path = cache_path()?;
-    save_entry(&path, &cpu_model(), kernel, params).ok()?;
+    save_entry(&path, &cpu_model(), element, kernel, params).ok()?;
     Some(path)
 }
 
 /// Persist this host's tuned tile geometry (best-effort, like
 /// [`save_host_entry`]).
-pub fn save_host_tile_entry(params: &TileParams) -> Option<PathBuf> {
+pub fn save_host_tile_entry(element: ElementId, params: &TileParams) -> Option<PathBuf> {
     let path = cache_path()?;
-    save_tile_entry(&path, &cpu_model(), params).ok()?;
+    save_tile_entry(&path, &cpu_model(), element, params).ok()?;
     Some(path)
 }
 
@@ -274,25 +299,42 @@ pub fn save_host_strassen_entry(min_dim: usize) -> Option<PathBuf> {
     Some(path)
 }
 
+/// Everything cached for this host, grouped for one-shot install at
+/// [`crate::gemm::plan::GemmContext::global`] init.
+#[derive(Debug, Default)]
+pub struct HostTuned {
+    /// Dot-kernel geometries, keyed `(element, kernel)`.
+    pub entries: Vec<(ElementId, KernelId, BlockParams)>,
+    /// Tile-tier geometries, one per element.
+    pub tiles: Vec<(ElementId, TileParams)>,
+    /// Measured Strassen crossover (f32-only tier).
+    pub strassen: Option<usize>,
+}
+
 /// Everything cached for this host in **one** file read + parse: the
-/// dot-kernel entries, the tile geometry and the Strassen crossover —
+/// dot-kernel entries, the tile geometries and the Strassen crossover —
 /// what [`crate::gemm::plan::GemmContext::global`] installs at init.
-#[allow(clippy::type_complexity)]
-pub fn load_host_tuned() -> (Vec<(KernelId, BlockParams)>, Option<TileParams>, Option<usize>) {
+pub fn load_host_tuned() -> HostTuned {
     let Some(path) = cache_path() else {
-        return (Vec::new(), None, None);
+        return HostTuned::default();
     };
     let host = cpu_model();
     let doc = load_doc(&path);
-    (
-        doc.entries
+    HostTuned {
+        entries: doc
+            .entries
+            .into_iter()
+            .filter(|(c, _, _, _)| *c == host)
+            .map(|(_, e, id, p)| (e, id, p))
+            .collect(),
+        tiles: doc
+            .tile_entries
             .into_iter()
             .filter(|(c, _, _)| *c == host)
-            .map(|(_, id, p)| (id, p))
+            .map(|(_, e, p)| (e, p))
             .collect(),
-        doc.tile_entries.into_iter().find(|(c, _)| *c == host).map(|(_, p)| p),
-        doc.strassen_entries.into_iter().find(|(c, _)| *c == host).map(|(_, d)| d),
-    )
+        strassen: doc.strassen_entries.into_iter().find(|(c, _)| *c == host).map(|(_, d)| d),
+    }
 }
 
 #[cfg(test)]
@@ -312,22 +354,32 @@ mod tests {
         let path = temp_file("roundtrip");
         let _ = std::fs::remove_file(&path);
         let p1 = BlockParams { kb: 128, mb: 64, nr: 4, ..BlockParams::emmerald_sse() };
-        save_entry(&path, "cpu-a", KernelId::Simd, &p1).unwrap();
+        save_entry(&path, "cpu-a", ElementId::F32, KernelId::Simd, &p1).unwrap();
         let p2 = BlockParams { kb: 256, ..p1 };
-        save_entry(&path, "cpu-b", KernelId::Simd, &p2).unwrap();
+        save_entry(&path, "cpu-b", ElementId::F32, KernelId::Simd, &p2).unwrap();
         let p3 = BlockParams { kb: 336, ..p1 };
-        save_entry(&path, "cpu-a", KernelId::Avx2, &p3).unwrap();
-        // Replacing an existing (cpu, kernel) pair keeps one entry.
+        save_entry(&path, "cpu-a", ElementId::F32, KernelId::Avx2, &p3).unwrap();
+        // The same (cpu, kernel) under a different element is a distinct
+        // entry — the v3 key is (cpu, kernel, element).
+        let p64 = BlockParams { kb: 224, ..p1 };
+        save_entry(&path, "cpu-a", ElementId::F64, KernelId::Avx2, &p64).unwrap();
+        // Replacing an existing (cpu, element, kernel) triple keeps one.
         let p4 = BlockParams { kb: 448, ..p1 };
-        save_entry(&path, "cpu-a", KernelId::Simd, &p4).unwrap();
+        save_entry(&path, "cpu-a", ElementId::F32, KernelId::Simd, &p4).unwrap();
         let entries = load_entries(&path);
-        assert_eq!(entries.len(), 3);
+        assert_eq!(entries.len(), 4);
         let a_simd: Vec<_> = entries
             .iter()
-            .filter(|(c, id, _)| c == "cpu-a" && *id == KernelId::Simd)
+            .filter(|(c, e, id, _)| c == "cpu-a" && *e == ElementId::F32 && *id == KernelId::Simd)
             .collect();
         assert_eq!(a_simd.len(), 1);
-        assert_eq!(a_simd[0].2.kb, 448);
+        assert_eq!(a_simd[0].3.kb, 448);
+        let a_avx2_f64: Vec<_> = entries
+            .iter()
+            .filter(|(c, e, id, _)| c == "cpu-a" && *e == ElementId::F64 && *id == KernelId::Avx2)
+            .collect();
+        assert_eq!(a_avx2_f64.len(), 1);
+        assert_eq!(a_avx2_f64[0].3.kb, 224);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -338,13 +390,49 @@ mod tests {
         assert!(load_entries(&path).is_empty());
         std::fs::write(&path, "{not json").unwrap();
         assert!(load_entries(&path).is_empty());
-        // Well-formed JSON with a bogus entry: the entry is skipped.
+        // Well-formed current-version JSON with a bogus entry: skipped.
         std::fs::write(
             &path,
-            r#"{"version":1,"entries":[{"cpu":"x","kernel":"emmerald-sse","kb":0,"mb":1,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
+            r#"{"version":3,"entries":[{"cpu":"x","element":"f32","kernel":"emmerald-sse","kb":0,"mb":1,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
         )
         .unwrap();
         assert!(load_entries(&path).is_empty(), "invalid kb=0 must not load");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn old_or_unknown_schema_versions_are_discarded_not_errors() {
+        let path = temp_file("migrate");
+        // A perfectly valid v2 document (the pre-element schema): every
+        // section is discarded — the entries carry no element key and
+        // must not be replayed under a guessed one.
+        std::fs::write(
+            &path,
+            r#"{"version":2,"entries":[{"cpu":"x","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}],"tile_entries":[{"cpu":"x","mr":6,"nr":16,"kc":256,"mc":72,"nc":480,"prefetch":true}],"strassen_entries":[{"cpu":"x","min_dim":768}]}"#,
+        )
+        .unwrap();
+        let doc = load_doc(&path);
+        assert!(doc.entries.is_empty(), "v2 entries must be discarded");
+        assert!(doc.tile_entries.is_empty(), "v2 tile entries must be discarded");
+        assert!(doc.strassen_entries.is_empty(), "v2 strassen entries must be discarded");
+        // Missing and future versions likewise.
+        std::fs::write(&path, r#"{"entries":[]}"#).unwrap();
+        assert!(load_entries(&path).is_empty());
+        std::fs::write(&path, r#"{"version":99,"entries":[]}"#).unwrap();
+        assert!(load_entries(&path).is_empty());
+        // And a save over an old file migrates it to the current version
+        // (old content dropped, new entry present).
+        std::fs::write(
+            &path,
+            r#"{"version":2,"entries":[{"cpu":"x","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
+        )
+        .unwrap();
+        let p = BlockParams { kb: 96, mb: 32, nr: 4, ..BlockParams::emmerald_sse() };
+        save_entry(&path, "cpu-m", ElementId::F64, KernelId::Avx2, &p).unwrap();
+        let entries = load_entries(&path);
+        assert_eq!(entries.len(), 1, "old-version content must not survive migration");
+        assert_eq!(entries[0].0, "cpu-m");
+        assert_eq!(entries[0].1, ElementId::F64);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -354,25 +442,37 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         // A dot entry first; the tile/strassen saves must preserve it.
         let dot = BlockParams { kb: 128, mb: 64, nr: 4, ..BlockParams::emmerald_sse() };
-        save_entry(&path, "cpu-a", KernelId::Simd, &dot).unwrap();
+        save_entry(&path, "cpu-a", ElementId::F32, KernelId::Simd, &dot).unwrap();
         let tile = TileParams { mr: 4, kc: 128, mc: 48, nc: 160, ..TileParams::avx2_6x16() };
-        save_tile_entry(&path, "cpu-a", &tile).unwrap();
-        save_tile_entry(&path, "cpu-b", &TileParams::avx2_6x16()).unwrap();
+        save_tile_entry(&path, "cpu-a", ElementId::F32, &tile).unwrap();
+        save_tile_entry(&path, "cpu-b", ElementId::F32, &TileParams::avx2_6x16()).unwrap();
+        // An f64 tile entry for the same cpu coexists with the f32 one.
+        save_tile_entry(&path, "cpu-a", ElementId::F64, &TileParams::avx2_6x8_f64()).unwrap();
         save_strassen_entry(&path, "cpu-a", 768).unwrap();
-        // Replace: one entry per cpu survives.
+        // Replace: one entry per (cpu, element) survives.
         let tile2 = TileParams { kc: 192, ..tile };
-        save_tile_entry(&path, "cpu-a", &tile2).unwrap();
+        save_tile_entry(&path, "cpu-a", ElementId::F32, &tile2).unwrap();
         save_strassen_entry(&path, "cpu-a", 1536).unwrap();
         let doc = load_doc(&path);
         assert_eq!(doc.entries.len(), 1, "dot entry must survive tile/strassen saves");
-        assert_eq!(doc.tile_entries.len(), 2);
-        let a_tile = doc.tile_entries.iter().find(|(c, _)| c == "cpu-a").unwrap();
-        assert_eq!(a_tile.1.kc, 192);
+        assert_eq!(doc.tile_entries.len(), 3);
+        let a_tile = doc
+            .tile_entries
+            .iter()
+            .find(|(c, e, _)| c == "cpu-a" && *e == ElementId::F32)
+            .unwrap();
+        assert_eq!(a_tile.2.kc, 192);
+        let a_tile64 = doc
+            .tile_entries
+            .iter()
+            .find(|(c, e, _)| c == "cpu-a" && *e == ElementId::F64)
+            .unwrap();
+        assert_eq!(a_tile64.2.nr, 8);
         assert_eq!(doc.strassen_entries, vec![("cpu-a".to_string(), 1536)]);
         // And a dot save preserves the other sections in turn.
-        save_entry(&path, "cpu-b", KernelId::Avx2, &dot).unwrap();
+        save_entry(&path, "cpu-b", ElementId::F32, KernelId::Avx2, &dot).unwrap();
         let doc = load_doc(&path);
-        assert_eq!(doc.tile_entries.len(), 2);
+        assert_eq!(doc.tile_entries.len(), 3);
         assert_eq!(doc.strassen_entries.len(), 1);
         let _ = std::fs::remove_file(&path);
     }
@@ -382,7 +482,7 @@ mod tests {
         let path = temp_file("tile-bad");
         std::fs::write(
             &path,
-            r#"{"version":2,"entries":[],"tile_entries":[{"cpu":"x","mr":9,"nr":16,"kc":256,"mc":72,"nc":480,"prefetch":true}],"strassen_entries":[{"cpu":"x","min_dim":0}]}"#,
+            r#"{"version":3,"entries":[],"tile_entries":[{"cpu":"x","element":"f32","mr":9,"nr":16,"kc":256,"mc":72,"nc":480,"prefetch":true}],"strassen_entries":[{"cpu":"x","min_dim":0}]}"#,
         )
         .unwrap();
         let doc = load_doc(&path);

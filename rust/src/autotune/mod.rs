@@ -18,35 +18,47 @@ pub mod cache;
 
 use crate::bench::{gemm_flops, Bencher, FlushMode};
 use crate::blas::{Backend, Matrix, Transpose};
-use crate::gemm::{avx2, blocked, simd, tile, BlockParams, TileParams, Unroll};
+use crate::gemm::{avx2, blocked, simd, tile, BlockParams, ElementId, TileParams, Unroll};
 
 /// Which kernel family to tune.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TuneKernel {
-    /// Emmerald SSE.
+    /// Emmerald SSE (f32).
     Sse,
-    /// Emmerald AVX2 (if available).
+    /// Emmerald AVX2 (f32, if available).
     Avx2,
-    /// ATLAS-proxy scalar kernel.
+    /// ATLAS-proxy scalar kernel (f32).
     Blocked,
+    /// Emmerald AVX2 in f64 — the DGEMM dot tier (`emmerald autotune
+    /// --element f64 --kernel avx2`).
+    Avx2F64,
 }
 
 impl TuneKernel {
-    fn run(&self, p: &BlockParams, a: &Matrix, b: &Matrix, c: &mut Matrix) {
-        let (m, n) = (c.rows(), c.cols());
-        let k = a.cols();
-        let _ = (m, n, k);
+    /// One probe GEMM through the kernel family under tune, in any
+    /// element precision (the drivers are element-generic; the variant
+    /// only picks the family).
+    fn run<T: crate::gemm::Element>(&self, p: &BlockParams, a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
         let mut cv = c.view_mut();
         match self {
             TuneKernel::Sse => {
-                simd::gemm(p, Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut cv)
+                simd::gemm(p, Transpose::No, Transpose::No, T::ONE, a.view(), b.view(), T::ZERO, &mut cv)
             }
-            TuneKernel::Avx2 => {
-                avx2::gemm(p, Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut cv)
+            TuneKernel::Avx2 | TuneKernel::Avx2F64 => {
+                avx2::gemm(p, Transpose::No, Transpose::No, T::ONE, a.view(), b.view(), T::ZERO, &mut cv)
             }
             TuneKernel::Blocked => {
-                blocked::gemm(p, Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut cv)
+                blocked::gemm(p, Transpose::No, Transpose::No, T::ONE, a.view(), b.view(), T::ZERO, &mut cv)
             }
+        }
+    }
+
+    /// Which element this search probes (and which table the winner is
+    /// installed into).
+    pub fn element(&self) -> ElementId {
+        match self {
+            TuneKernel::Avx2F64 => ElementId::F64,
+            _ => ElementId::F32,
         }
     }
 }
@@ -146,7 +158,7 @@ impl TuneKernel {
     pub fn kernel_id(&self) -> crate::gemm::KernelId {
         match self {
             TuneKernel::Sse => crate::gemm::KernelId::Simd,
-            TuneKernel::Avx2 => crate::gemm::KernelId::Avx2,
+            TuneKernel::Avx2 | TuneKernel::Avx2F64 => crate::gemm::KernelId::Avx2,
             TuneKernel::Blocked => crate::gemm::KernelId::Blocked,
         }
     }
@@ -161,7 +173,7 @@ impl TuneKernel {
 /// the on-disk cache for future processes.
 pub fn tune_and_install(spec: &TuneSpec) -> TuneResult {
     let result = tune(spec);
-    crate::gemm::dispatch::install_tuned(spec.kernel.kernel_id(), result.best)
+    crate::gemm::dispatch::install_tuned_for(spec.kernel.element(), spec.kernel.kernel_id(), result.best)
         .expect("tuned parameters come from a validated candidate grid");
     result
 }
@@ -172,17 +184,27 @@ pub fn tune_and_install(spec: &TuneSpec) -> TuneResult {
 /// write succeeded (the cache is best-effort and never fails tuning).
 pub fn tune_install_and_persist(spec: &TuneSpec) -> (TuneResult, Option<std::path::PathBuf>) {
     let result = tune_and_install(spec);
-    let path = cache::save_host_entry(spec.kernel.kernel_id(), &result.best);
+    let path = cache::save_host_entry(spec.kernel.element(), spec.kernel.kernel_id(), &result.best);
     (result, path)
 }
 
 /// Run the empirical search (ATLAS's install-time loop).
 pub fn tune(spec: &TuneSpec) -> TuneResult {
+    match spec.kernel.element() {
+        ElementId::F32 => tune_probe::<f32>(spec),
+        ElementId::F64 => tune_probe::<f64>(spec),
+    }
+}
+
+/// The search loop proper, monomorphised per probed element (operands
+/// are allocated in the element under tune only).
+fn tune_probe<T: crate::gemm::Element>(spec: &TuneSpec) -> TuneResult {
     let n = spec.probe_size;
-    let a = Matrix::random(n, n, 0xA77A5, -1.0, 1.0);
-    let b = Matrix::random(n, n, 0xB00B5, -1.0, 1.0);
-    let mut c = Matrix::zeros(n, n);
     let flops = gemm_flops(n, n, n);
+    let (lo, hi) = (T::from_f64(-1.0), T::from_f64(1.0));
+    let a = Matrix::<T>::random(n, n, 0xA77A5, lo, hi);
+    let b = Matrix::<T>::random(n, n, 0xB00B5, lo, hi);
+    let mut c = Matrix::<T>::zeros(n, n);
 
     let mut log = Vec::new();
     let mut best: Option<TunePoint> = None;
@@ -208,6 +230,9 @@ pub fn tune(spec: &TuneSpec) -> TuneResult {
 /// fields.
 #[derive(Clone, Debug)]
 pub struct TileTuneSpec {
+    /// Element precision under tune (picks the 6×16 f32 or 6×8 f64
+    /// kernel family and the dispatch table the winner lands in).
+    pub element: ElementId,
     /// Probe problem size (m = n = k).
     pub probe_size: usize,
     /// Timing samples per candidate (median taken).
@@ -226,6 +251,7 @@ impl TileTuneSpec {
     /// The default pruned grid around the 6×16 operating point.
     pub fn avx2_default(probe_size: usize) -> Self {
         Self {
+            element: ElementId::F32,
             probe_size,
             samples: 3,
             mrs: vec![4, 6],
@@ -235,9 +261,25 @@ impl TileTuneSpec {
         }
     }
 
+    /// The default pruned f64 grid around the 6×8 operating point (same
+    /// cache footprints as the f32 grid — elements twice as wide, panels
+    /// half as many columns).
+    pub fn avx2_f64_default(probe_size: usize) -> Self {
+        Self { element: ElementId::F64, ..Self::avx2_default(probe_size) }
+    }
+
+    /// The element's base geometry (fixes NR).
+    fn base(&self) -> TileParams {
+        match self.element {
+            ElementId::F32 => TileParams::avx2_6x16(),
+            ElementId::F64 => TileParams::avx2_6x8_f64(),
+        }
+    }
+
     /// All candidate parameter sets (mc snapped up to a multiple of mr,
-    /// deduplicated).
+    /// nc to a multiple of the element's NR, deduplicated).
     pub fn candidates(&self) -> Vec<TileParams> {
+        let base = self.base();
         let mut out: Vec<TileParams> = Vec::new();
         for &mr in &self.mrs {
             for &kc in &self.kcs {
@@ -247,8 +289,8 @@ impl TileTuneSpec {
                             mr,
                             mc: mc.div_ceil(mr) * mr,
                             kc,
-                            nc,
-                            ..TileParams::avx2_6x16()
+                            nc: nc.div_ceil(base.nr) * base.nr,
+                            ..base
                         };
                         if p.validate().is_ok() && !out.contains(&p) {
                             out.push(p);
@@ -282,13 +324,22 @@ pub struct TileTuneResult {
 }
 
 /// Run the empirical tile search (same methodology as [`tune`], over the
-/// tile tier's geometry).
+/// tile tier's geometry, in the spec's element precision).
 pub fn tune_tile(spec: &TileTuneSpec) -> TileTuneResult {
+    match spec.element {
+        ElementId::F32 => tune_tile_probe::<f32>(spec),
+        ElementId::F64 => tune_tile_probe::<f64>(spec),
+    }
+}
+
+/// The tile search loop proper, monomorphised per probed element.
+fn tune_tile_probe<T: crate::gemm::Element>(spec: &TileTuneSpec) -> TileTuneResult {
     let n = spec.probe_size;
-    let a = Matrix::random(n, n, 0xA77A5, -1.0, 1.0);
-    let b = Matrix::random(n, n, 0xB00B5, -1.0, 1.0);
-    let mut c = Matrix::zeros(n, n);
     let flops = gemm_flops(n, n, n);
+    let (lo, hi) = (T::from_f64(-1.0), T::from_f64(1.0));
+    let a = Matrix::<T>::random(n, n, 0xA77A5, lo, hi);
+    let b = Matrix::<T>::random(n, n, 0xB00B5, lo, hi);
+    let mut c = Matrix::<T>::zeros(n, n);
 
     let mut log = Vec::new();
     let mut best: Option<TileTunePoint> = None;
@@ -296,16 +347,7 @@ pub fn tune_tile(spec: &TileTuneSpec) -> TileTuneResult {
         let mut bencher =
             Bencher::new(1, spec.samples).flush_mode(FlushMode::Warm).min_sample_secs(0.01);
         let r = bencher.run("tile candidate", flops, || {
-            tile::gemm(
-                &params,
-                Transpose::No,
-                Transpose::No,
-                1.0,
-                a.view(),
-                b.view(),
-                0.0,
-                &mut c.view_mut(),
-            );
+            tile::gemm(&params, Transpose::No, Transpose::No, T::ONE, a.view(), b.view(), T::ZERO, &mut c.view_mut());
         });
         let point = TileTunePoint { params, mflops: r.mflops() };
         if best.as_ref().map(|b| point.mflops > b.mflops).unwrap_or(true) {
@@ -321,7 +363,7 @@ pub fn tune_tile(spec: &TileTuneSpec) -> TileTuneResult {
 /// dispatcher (freshly packed operands pick up the new layout).
 pub fn tune_tile_and_install(spec: &TileTuneSpec) -> TileTuneResult {
     let result = tune_tile(spec);
-    crate::gemm::dispatch::install_tuned_tile(result.best)
+    crate::gemm::dispatch::install_tuned_tile_for(spec.element, result.best)
         .expect("tile winner comes from a validated candidate grid");
     result
 }
@@ -330,7 +372,7 @@ pub fn tune_tile_and_install(spec: &TileTuneSpec) -> TileTuneResult {
 /// on-disk cache. Returns the cache path written, if any.
 pub fn tune_tile_install_and_persist(spec: &TileTuneSpec) -> (TileTuneResult, Option<std::path::PathBuf>) {
     let result = tune_tile_and_install(spec);
-    let path = cache::save_host_tile_entry(&result.best);
+    let path = cache::save_host_tile_entry(spec.element, &result.best);
     (result, path)
 }
 
@@ -575,6 +617,7 @@ mod tests {
     #[test]
     fn tune_tile_returns_a_winner_from_the_grid() {
         let spec = TileTuneSpec {
+            element: ElementId::F32,
             probe_size: 64,
             samples: 1,
             mrs: vec![2, 6],
@@ -586,6 +629,55 @@ mod tests {
         assert_eq!(r.log.len(), 2);
         assert!(r.best_mflops > 0.0);
         assert!(spec.candidates().contains(&r.best));
+    }
+
+    #[test]
+    fn tune_tile_f64_probes_the_6x8_family() {
+        let spec = TileTuneSpec {
+            element: ElementId::F64,
+            probe_size: 48,
+            samples: 1,
+            mrs: vec![2, 6],
+            kcs: vec![32],
+            mcs: vec![12],
+            ncs: vec![16],
+        };
+        let cands = spec.candidates();
+        assert!(cands.iter().all(|p| p.nr == 8), "f64 candidates carry nr = 8");
+        let r = tune_tile(&spec);
+        assert_eq!(r.log.len(), cands.len());
+        assert!(r.best_mflops > 0.0);
+        assert_eq!(r.best.nr, 8);
+    }
+
+    #[test]
+    fn tune_f64_dot_kernel_runs_and_installs() {
+        if !crate::gemm::dispatch::detect_avx2() {
+            eprintln!("SKIP: no AVX2+FMA — the f64 dot kernel has no probe target");
+            return;
+        }
+        crate::util::testkit::hermetic_tune_cache();
+        let spec = TuneSpec {
+            kernel: TuneKernel::Avx2F64,
+            probe_size: 64,
+            samples: 1,
+            kbs: vec![48, 96],
+            mbs: vec![24],
+            nrs: vec![5],
+            unrolls: vec![Unroll::X2],
+        };
+        assert_eq!(spec.kernel.element(), ElementId::F64);
+        let r = tune_and_install(&spec);
+        assert_eq!(r.log.len(), 2);
+        let snap = crate::gemm::dispatch::global_snapshot();
+        assert_eq!(snap.params_avx2_f64(), &r.best, "winner must land in the f64 table");
+        // Restore the default so the suite stays order-independent.
+        crate::gemm::dispatch::install_tuned_for(
+            ElementId::F64,
+            crate::gemm::KernelId::Avx2,
+            BlockParams::emmerald_avx2(),
+        )
+        .unwrap();
     }
 
     #[test]

@@ -17,6 +17,7 @@ use super::error::BlasError;
 use super::matrix::Matrix;
 use super::Transpose;
 use crate::gemm::batch::BatchStrides;
+use crate::gemm::element::Element;
 use crate::gemm::plan::GemmContext;
 use crate::gemm::KernelId;
 
@@ -62,9 +63,58 @@ pub fn sgemm(
     c: &mut [f32],
     ldc: usize,
 ) -> Result<(), BlasError> {
+    gemm(backend, transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// Double-precision GEMM (`DGEMM`): exactly [`sgemm`]'s contract in f64.
+///
+/// Runs the element-generic kernel ladder — the f64 outer-product tile
+/// kernel (6×8) or 4-wide AVX2 dot kernel where available, the scalar
+/// blocked proxy otherwise, thread-parallel above the flop threshold —
+/// through a one-shot plan on the shared [`GemmContext`]. The SSE tier
+/// and Strassen are f32-only and are never selected for f64.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) -> Result<(), BlasError> {
+    gemm(backend, transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// The element-generic positional GEMM behind [`sgemm`] and [`dgemm`]
+/// (use those for the classic BLAS names, this for generic code).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm<T: Element>(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    b: &[T],
+    ldb: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+) -> Result<(), BlasError> {
     let forced = forced_kernel(backend)?;
     let mut builder = GemmContext::global()
-        .gemm()
+        .gemm_for::<T>()
         .transpose_a(transa)
         .transpose_b(transb)
         .alpha(alpha)
@@ -109,9 +159,68 @@ pub fn sgemm_batch(
     stride_c: usize,
     batch: usize,
 ) -> Result<(), BlasError> {
+    gemm_batch(
+        backend, transa, transb, m, n, k, alpha, a, lda, stride_a, b, ldb, stride_b, beta, c,
+        ldc, stride_c, batch,
+    )
+}
+
+/// Strided-batch DGEMM: [`sgemm_batch`]'s contract in f64 (shared-B
+/// folding, per-worker packing scratch and the thread fan-out all run
+/// the f64 kernel ladder).
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_batch(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    stride_a: usize,
+    b: &[f64],
+    ldb: usize,
+    stride_b: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+    stride_c: usize,
+    batch: usize,
+) -> Result<(), BlasError> {
+    gemm_batch(
+        backend, transa, transb, m, n, k, alpha, a, lda, stride_a, b, ldb, stride_b, beta, c,
+        ldc, stride_c, batch,
+    )
+}
+
+/// The element-generic strided-batch GEMM behind [`sgemm_batch`] and
+/// [`dgemm_batch`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_batch<T: Element>(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: T,
+    a: &[T],
+    lda: usize,
+    stride_a: usize,
+    b: &[T],
+    ldb: usize,
+    stride_b: usize,
+    beta: T,
+    c: &mut [T],
+    ldc: usize,
+    stride_c: usize,
+    batch: usize,
+) -> Result<(), BlasError> {
     let forced = forced_kernel(backend)?;
     let mut builder = GemmContext::global()
-        .gemm()
+        .gemm_for::<T>()
         .transpose_a(transa)
         .transpose_b(transb)
         .alpha(alpha)
@@ -138,6 +247,35 @@ pub fn sgemm_matrix(
     beta: f32,
     c: &mut Matrix,
 ) -> Result<(), BlasError> {
+    gemm_matrix(backend, transa, transb, alpha, a, b, beta, c)
+}
+
+/// Convenience wrapper over [`dgemm`] for owned `Matrix<f64>` values.
+pub fn dgemm_matrix(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f64,
+    a: &Matrix<f64>,
+    b: &Matrix<f64>,
+    beta: f64,
+    c: &mut Matrix<f64>,
+) -> Result<(), BlasError> {
+    gemm_matrix(backend, transa, transb, alpha, a, b, beta, c)
+}
+
+/// The element-generic [`Matrix`] wrapper behind [`sgemm_matrix`] and
+/// [`dgemm_matrix`].
+pub fn gemm_matrix<T: Element>(
+    backend: Backend,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: T,
+    a: &Matrix<T>,
+    b: &Matrix<T>,
+    beta: T,
+    c: &mut Matrix<T>,
+) -> Result<(), BlasError> {
     let (m, ka) = match transa {
         Transpose::No => (a.rows(), a.cols()),
         Transpose::Yes => (a.cols(), a.rows()),
@@ -157,7 +295,7 @@ pub fn sgemm_matrix(
         });
     }
     let (lda, ldb, ldc) = (a.ld(), b.ld(), c.ld());
-    sgemm(
+    gemm(
         backend,
         transa,
         transb,

@@ -1,25 +1,32 @@
-//! Strided matrix storage and views.
+//! Strided matrix storage and views, generic over the element precision.
 //!
 //! All Emmerald matrices are **row-major** with an explicit leading
 //! dimension (`ld`): element `(r, c)` lives at `data[r * ld + c]` and
 //! `ld >= cols`. The paper's benchmark methodology fixes the stride at 700
 //! for every size, so strided views (rows longer than their logical width)
 //! are first-class throughout.
+//!
+//! Since the element-generic precision subsystem
+//! ([`crate::gemm::element`]), every type here carries an element
+//! parameter `T: Element` with **`f32` as the default** — `Matrix`,
+//! `MatRef<'_>` and `MatMut<'_>` written without a parameter mean exactly
+//! what they always did, and `Matrix<f64>` is the DGEMM storage type.
 
 use super::error::BlasError;
+use crate::gemm::element::Element;
 
-/// Immutable strided view over `f32` data.
+/// Immutable strided view over element data.
 #[derive(Clone, Copy, Debug)]
-pub struct MatRef<'a> {
-    data: &'a [f32],
+pub struct MatRef<'a, T = f32> {
+    data: &'a [T],
     rows: usize,
     cols: usize,
     ld: usize,
 }
 
-impl<'a> MatRef<'a> {
+impl<'a, T: Element> MatRef<'a, T> {
     /// Construct a view, validating `ld` and the backing length.
-    pub fn new(data: &'a [f32], rows: usize, cols: usize, ld: usize) -> Result<Self, BlasError> {
+    pub fn new(data: &'a [T], rows: usize, cols: usize, ld: usize) -> Result<Self, BlasError> {
         validate(rows, cols, ld, data.len())?;
         Ok(Self { data, rows, cols, ld })
     }
@@ -40,13 +47,13 @@ impl<'a> MatRef<'a> {
     }
 
     /// Raw backing slice.
-    pub fn data(&self) -> &'a [f32] {
+    pub fn data(&self) -> &'a [T] {
         self.data
     }
 
     /// Bounds-checked element access.
     #[inline]
-    pub fn get(&self, r: usize, c: usize) -> f32 {
+    pub fn get(&self, r: usize, c: usize) -> T {
         assert!(r < self.rows && c < self.cols, "({r},{c}) out of {}x{}", self.rows, self.cols);
         self.data[r * self.ld + c]
     }
@@ -56,19 +63,19 @@ impl<'a> MatRef<'a> {
     /// # Safety
     /// Caller must guarantee `r < rows && c < cols`.
     #[inline(always)]
-    pub unsafe fn get_unchecked(&self, r: usize, c: usize) -> f32 {
+    pub unsafe fn get_unchecked(&self, r: usize, c: usize) -> T {
         *self.data.get_unchecked(r * self.ld + c)
     }
 
     /// Pointer to the start of row `r`.
     #[inline(always)]
-    pub fn row_ptr(&self, r: usize) -> *const f32 {
+    pub fn row_ptr(&self, r: usize) -> *const T {
         debug_assert!(r < self.rows);
         unsafe { self.data.as_ptr().add(r * self.ld) }
     }
 
     /// Sub-view of `nr × nc` starting at `(r0, c0)` (same stride).
-    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> MatRef<'a> {
+    pub fn block(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> MatRef<'a, T> {
         assert!(r0 + nr <= self.rows && c0 + nc <= self.cols, "block out of range");
         MatRef {
             data: &self.data[r0 * self.ld + c0..],
@@ -79,37 +86,37 @@ impl<'a> MatRef<'a> {
     }
 }
 
-/// Mutable strided view over `f32` data.
+/// Mutable strided view over element data.
 ///
-/// Stored as a raw pointer + length rather than `&mut [f32]` so the view
+/// Stored as a raw pointer + length rather than `&mut [T]` so the view
 /// can be split along *either* axis: two column slices of a strided matrix
 /// interleave in storage (every row of the left slice is followed by the
-/// right slice's part of that row), which two `&mut [f32]` halves cannot
+/// right slice's part of that row), which two `&mut [T]` halves cannot
 /// express. The invariant is that a `MatMut` grants exclusive access to
 /// its **logical** elements (`(r, c)` with `r < rows`, `c < cols`) only;
 /// sibling views produced by [`split_rows`](Self::split_rows) /
 /// [`split_cols`](Self::split_cols) may share a backing range but never a
 /// logical element, so the accessors below never race.
 #[derive(Debug)]
-pub struct MatMut<'a> {
-    ptr: *mut f32,
+pub struct MatMut<'a, T = f32> {
+    ptr: *mut T,
     len: usize,
     rows: usize,
     cols: usize,
     ld: usize,
-    _marker: std::marker::PhantomData<&'a mut [f32]>,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
 // SAFETY: a MatMut carries the exclusive capability to touch its logical
-// elements (it is created from a `&mut [f32]` and siblings are logically
-// disjoint), exactly like the `&mut [f32]` it used to wrap — sending that
+// elements (it is created from a `&mut [T]` and siblings are logically
+// disjoint), exactly like the `&mut [T]` it used to wrap — sending that
 // capability to another thread is sound. Not `Sync`: `&MatMut` exposes
 // `as_ref`, which must not observe a sibling's concurrent writes.
-unsafe impl Send for MatMut<'_> {}
+unsafe impl<T: Send> Send for MatMut<'_, T> {}
 
-impl<'a> MatMut<'a> {
+impl<'a, T: Element> MatMut<'a, T> {
     /// Construct a view, validating `ld` and the backing length.
-    pub fn new(data: &'a mut [f32], rows: usize, cols: usize, ld: usize) -> Result<Self, BlasError> {
+    pub fn new(data: &'a mut [T], rows: usize, cols: usize, ld: usize) -> Result<Self, BlasError> {
         validate(rows, cols, ld, data.len())?;
         Ok(Self {
             ptr: data.as_mut_ptr(),
@@ -138,7 +145,7 @@ impl<'a> MatMut<'a> {
 
     /// Bounds-checked element read.
     #[inline]
-    pub fn get(&self, r: usize, c: usize) -> f32 {
+    pub fn get(&self, r: usize, c: usize) -> T {
         assert!(r < self.rows && c < self.cols);
         // SAFETY: logical indices validated against the view's extent.
         unsafe { *self.ptr.add(r * self.ld + c) }
@@ -146,7 +153,7 @@ impl<'a> MatMut<'a> {
 
     /// Bounds-checked element write.
     #[inline]
-    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
         assert!(r < self.rows && c < self.cols);
         // SAFETY: logical indices validated against the view's extent.
         unsafe { *self.ptr.add(r * self.ld + c) = v }
@@ -157,7 +164,7 @@ impl<'a> MatMut<'a> {
     /// # Safety
     /// Caller must guarantee `r < rows && c < cols`.
     #[inline(always)]
-    pub unsafe fn get_unchecked(&self, r: usize, c: usize) -> f32 {
+    pub unsafe fn get_unchecked(&self, r: usize, c: usize) -> T {
         *self.ptr.add(r * self.ld + c)
     }
 
@@ -166,13 +173,13 @@ impl<'a> MatMut<'a> {
     /// # Safety
     /// Caller must guarantee `r < rows && c < cols`.
     #[inline(always)]
-    pub unsafe fn set_unchecked(&mut self, r: usize, c: usize, v: f32) {
+    pub unsafe fn set_unchecked(&mut self, r: usize, c: usize, v: T) {
         *self.ptr.add(r * self.ld + c) = v;
     }
 
     /// Mutable pointer to the start of row `r`.
     #[inline(always)]
-    pub fn row_ptr_mut(&mut self, r: usize) -> *mut f32 {
+    pub fn row_ptr_mut(&mut self, r: usize) -> *mut T {
         debug_assert!(r < self.rows);
         unsafe { self.ptr.add(r * self.ld) }
     }
@@ -183,21 +190,21 @@ impl<'a> MatMut<'a> {
     /// [`split_cols`](Self::split_cols)) is being written on another
     /// thread: the returned slice spans the full backing range, padding
     /// columns included.
-    pub fn as_ref(&self) -> MatRef<'_> {
-        // SAFETY: the backing range was a valid &mut [f32] at construction
+    pub fn as_ref(&self) -> MatRef<'_, T> {
+        // SAFETY: the backing range was a valid &mut [T] at construction
         // and `&self` pauses this view's own writes for the borrow.
         let data = unsafe { std::slice::from_raw_parts(self.ptr, self.len) };
         MatRef { data, rows: self.rows, cols: self.cols, ld: self.ld }
     }
 
     /// Reborrow as a shorter-lived mutable view.
-    pub fn reborrow(&mut self) -> MatMut<'_> {
+    pub fn reborrow(&mut self) -> MatMut<'_, T> {
         MatMut { ptr: self.ptr, len: self.len, rows: self.rows, cols: self.cols, ld: self.ld, _marker: std::marker::PhantomData }
     }
 
     /// Split into two disjoint row ranges at row `r` (the matrix analogue
     /// of `split_at_mut`); used by the thread-parallel GEMM driver.
-    pub fn split_rows(self, r: usize) -> (MatMut<'a>, MatMut<'a>) {
+    pub fn split_rows(self, r: usize) -> (MatMut<'a, T>, MatMut<'a, T>) {
         assert!(r <= self.rows, "split row {r} > rows {}", self.rows);
         // A tight last row may end before r*ld; clamp so the halves stay
         // within the original backing range.
@@ -222,7 +229,7 @@ impl<'a> MatMut<'a> {
     /// interleave in storage (same rows, same stride) but their logical
     /// elements are disjoint — the raw-pointer representation exists for
     /// exactly this split.
-    pub fn split_cols(self, c: usize) -> (MatMut<'a>, MatMut<'a>) {
+    pub fn split_cols(self, c: usize) -> (MatMut<'a, T>, MatMut<'a, T>) {
         assert!(c <= self.cols, "split col {c} > cols {}", self.cols);
         let off = c.min(self.len);
         (
@@ -240,7 +247,7 @@ impl<'a> MatMut<'a> {
     }
 
     /// Reborrow a mutable sub-view of `nr × nc` starting at `(r0, c0)`.
-    pub fn block_mut(&mut self, r0: usize, c0: usize, nr: usize, nc: usize) -> MatMut<'_> {
+    pub fn block_mut(&mut self, r0: usize, c0: usize, nr: usize, nc: usize) -> MatMut<'_, T> {
         assert!(r0 + nr <= self.rows && c0 + nc <= self.cols, "block out of range");
         let off = (r0 * self.ld + c0).min(self.len);
         MatMut {
@@ -257,8 +264,8 @@ impl<'a> MatMut<'a> {
     /// Scale every element of the logical matrix by `beta`
     /// (`beta == 0` writes zeros, discarding any NaN/Inf in C, matching
     /// BLAS semantics).
-    pub fn scale(&mut self, beta: f32) {
-        if beta == 1.0 {
+    pub fn scale(&mut self, beta: T) {
+        if beta == T::ONE {
             return;
         }
         for r in 0..self.rows {
@@ -267,8 +274,8 @@ impl<'a> MatMut<'a> {
             let row = unsafe {
                 std::slice::from_raw_parts_mut(self.ptr.add(r * self.ld), self.cols)
             };
-            if beta == 0.0 {
-                row.fill(0.0);
+            if beta == T::ZERO {
+                row.fill(T::ZERO);
             } else {
                 for v in row {
                     *v *= beta;
@@ -294,28 +301,28 @@ fn validate(rows: usize, cols: usize, ld: usize, len: usize) -> Result<(), BlasE
 
 /// Owned row-major matrix (contiguous or padded to a stride).
 #[derive(Clone, Debug, PartialEq)]
-pub struct Matrix {
-    data: Vec<f32>,
+pub struct Matrix<T = f32> {
+    data: Vec<T>,
     rows: usize,
     cols: usize,
     ld: usize,
 }
 
-impl Matrix {
+impl<T: Element> Matrix<T> {
     /// Zero-filled `rows × cols` matrix with `ld == cols`.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Self { data: vec![0.0; rows * cols], rows, cols, ld: cols }
+        Self { data: vec![T::ZERO; rows * cols], rows, cols, ld: cols }
     }
 
     /// Zero-filled matrix with an explicit stride (`ld >= cols`), matching
     /// the paper's fixed-stride benchmarking layout.
     pub fn zeros_strided(rows: usize, cols: usize, ld: usize) -> Self {
         assert!(ld >= cols, "ld {ld} < cols {cols}");
-        Self { data: vec![0.0; rows.max(1) * ld], rows, cols, ld }
+        Self { data: vec![T::ZERO; rows.max(1) * ld], rows, cols, ld }
     }
 
     /// Build from a function of (row, col).
-    pub fn from_fn<F: FnMut(usize, usize) -> f32>(rows: usize, cols: usize, mut f: F) -> Self {
+    pub fn from_fn<F: FnMut(usize, usize) -> T>(rows: usize, cols: usize, mut f: F) -> Self {
         let mut m = Self::zeros(rows, cols);
         for r in 0..rows {
             for c in 0..cols {
@@ -325,11 +332,14 @@ impl Matrix {
         m
     }
 
-    /// Uniform-random matrix in `[lo, hi)` from a seed (deterministic).
-    pub fn random(rows: usize, cols: usize, seed: u64, lo: f32, hi: f32) -> Self {
+    /// Uniform-random matrix in `[lo, hi)` from a seed (deterministic;
+    /// the f32 instantiation draws exactly the pre-refactor bit stream).
+    pub fn random(rows: usize, cols: usize, seed: u64, lo: T, hi: T) -> Self {
         let mut rng = crate::util::prng::Pcg32::new(seed);
         let mut m = Self::zeros(rows, cols);
-        rng.fill_f32(&mut m.data, lo, hi);
+        for v in m.data.iter_mut() {
+            *v = T::sample(&mut rng, lo, hi);
+        }
         m
     }
 
@@ -338,9 +348,11 @@ impl Matrix {
     pub fn random_strided(rows: usize, cols: usize, ld: usize, seed: u64) -> Self {
         let mut m = Self::zeros_strided(rows, cols, ld);
         let mut rng = crate::util::prng::Pcg32::new(seed);
+        let (lo, hi) = (T::from_f64(-1.0), T::from_f64(1.0));
+        let sentinel = T::from_f64(-77.0);
         for r in 0..rows {
             for c in 0..ld {
-                m.data[r * ld + c] = if c < cols { rng.f32_range(-1.0, 1.0) } else { -77.0 };
+                m.data[r * ld + c] = if c < cols { T::sample(&mut rng, lo, hi) } else { sentinel };
             }
         }
         m
@@ -362,34 +374,34 @@ impl Matrix {
     }
 
     /// Backing storage.
-    pub fn data(&self) -> &[f32] {
+    pub fn data(&self) -> &[T] {
         &self.data
     }
 
     /// Mutable backing storage.
-    pub fn data_mut(&mut self) -> &mut [f32] {
+    pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 
     /// Element read.
-    pub fn get(&self, r: usize, c: usize) -> f32 {
+    pub fn get(&self, r: usize, c: usize) -> T {
         assert!(r < self.rows && c < self.cols);
         self.data[r * self.ld + c]
     }
 
     /// Element write.
-    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
         assert!(r < self.rows && c < self.cols);
         self.data[r * self.ld + c] = v;
     }
 
     /// Immutable view of the whole matrix.
-    pub fn view(&self) -> MatRef<'_> {
+    pub fn view(&self) -> MatRef<'_, T> {
         MatRef { data: &self.data, rows: self.rows, cols: self.cols, ld: self.ld }
     }
 
     /// Mutable view of the whole matrix.
-    pub fn view_mut(&mut self) -> MatMut<'_> {
+    pub fn view_mut(&mut self) -> MatMut<'_, T> {
         MatMut {
             ptr: self.data.as_mut_ptr(),
             len: self.data.len(),
@@ -401,14 +413,14 @@ impl Matrix {
     }
 
     /// Logical transpose (materialised copy).
-    pub fn transposed(&self) -> Matrix {
+    pub fn transposed(&self) -> Matrix<T> {
         Matrix::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
     }
 
     /// Maximum absolute element difference over the logical area.
-    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+    pub fn max_abs_diff(&self, other: &Matrix<T>) -> T {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        let mut worst = 0.0f32;
+        let mut worst = T::ZERO;
         for r in 0..self.rows {
             for c in 0..self.cols {
                 worst = worst.max((self.get(r, c) - other.get(r, c)).abs());
@@ -429,12 +441,12 @@ mod tests {
         assert!(MatRef::new(&d, 2, 5, 4).is_err()); // ld < cols
         assert!(MatRef::new(&d, 3, 5, 5).is_err()); // too short
         assert!(MatRef::new(&d, 2, 4, 6).is_ok()); // (2-1)*6+4 = 10 fits exactly
-        assert!(MatRef::new(&[], 0, 5, 5).is_ok()); // empty is fine
+        assert!(MatRef::<f32>::new(&[], 0, 5, 5).is_ok()); // empty is fine
     }
 
     #[test]
     fn get_set_strided() {
-        let mut m = Matrix::zeros_strided(3, 2, 4);
+        let mut m = Matrix::<f32>::zeros_strided(3, 2, 4);
         m.set(2, 1, 9.0);
         assert_eq!(m.get(2, 1), 9.0);
         assert_eq!(m.data()[2 * 4 + 1], 9.0);
@@ -453,7 +465,7 @@ mod tests {
 
     #[test]
     fn block_mut_writes_through() {
-        let mut m = Matrix::zeros(4, 4);
+        let mut m = Matrix::<f32>::zeros(4, 4);
         {
             let mut b = m.view_mut();
             let mut b = b.block_mut(2, 2, 2, 2);
@@ -467,7 +479,7 @@ mod tests {
 
     #[test]
     fn scale_semantics() {
-        let mut m = Matrix::from_fn(2, 2, |_, _| 3.0);
+        let mut m = Matrix::<f32>::from_fn(2, 2, |_, _| 3.0);
         m.view_mut().scale(2.0);
         assert_eq!(m.get(0, 0), 6.0);
         // beta = 0 must overwrite even NaN.
@@ -478,7 +490,7 @@ mod tests {
 
     #[test]
     fn scale_respects_padding() {
-        let mut m = Matrix::random_strided(2, 3, 5, 1);
+        let mut m = Matrix::<f32>::random_strided(2, 3, 5, 1);
         let pad_before = m.data()[3]; // sentinel -77
         m.view_mut().scale(0.0);
         assert_eq!(m.data()[3], pad_before, "padding must not be scaled");
@@ -504,7 +516,7 @@ mod tests {
 
     #[test]
     fn split_rows_edges() {
-        let mut m = Matrix::zeros(3, 2);
+        let mut m = Matrix::<f32>::zeros(3, 2);
         let (top, bottom) = m.view_mut().split_rows(0);
         assert_eq!(top.rows(), 0);
         assert_eq!(bottom.rows(), 3);
@@ -536,7 +548,7 @@ mod tests {
 
     #[test]
     fn split_cols_edges_and_strided() {
-        let mut m = Matrix::zeros(3, 4);
+        let mut m = Matrix::<f32>::zeros(3, 4);
         let (left, right) = m.view_mut().split_cols(0);
         assert_eq!(left.cols(), 0);
         assert_eq!(right.cols(), 4);
@@ -545,7 +557,7 @@ mod tests {
         assert_eq!(right.cols(), 0);
         // Strided storage: the padding sentinel between logical columns
         // and the stride tail must survive writes through both halves.
-        let mut s = Matrix::random_strided(3, 4, 7, 9);
+        let mut s = Matrix::<f32>::random_strided(3, 4, 7, 9);
         {
             let v = s.view_mut();
             let (mut left, mut right) = v.split_cols(2);
@@ -565,7 +577,7 @@ mod tests {
 
     #[test]
     fn reborrow_shares_storage() {
-        let mut m = Matrix::zeros(2, 2);
+        let mut m = Matrix::<f32>::zeros(2, 2);
         {
             let mut v = m.view_mut();
             let mut r = v.reborrow();
@@ -576,22 +588,35 @@ mod tests {
 
     #[test]
     fn transpose_roundtrip() {
-        let m = Matrix::random(3, 5, 7, -1.0, 1.0);
+        let m = Matrix::<f32>::random(3, 5, 7, -1.0, 1.0);
         let tt = m.transposed().transposed();
         assert_eq!(m, tt);
     }
 
     #[test]
     fn random_is_deterministic() {
-        let a = Matrix::random(4, 4, 42, -1.0, 1.0);
-        let b = Matrix::random(4, 4, 42, -1.0, 1.0);
+        let a = Matrix::<f32>::random(4, 4, 42, -1.0, 1.0);
+        let b = Matrix::<f32>::random(4, 4, 42, -1.0, 1.0);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn f64_matrix_roundtrips_and_differs_in_width() {
+        let a = Matrix::<f64>::random(4, 4, 42, -1.0, 1.0);
+        let b = Matrix::<f64>::random(4, 4, 42, -1.0, 1.0);
+        assert_eq!(a, b);
+        let tt = a.transposed().transposed();
+        assert_eq!(a, tt);
+        // The strided f64 variant carries the same sentinel discipline.
+        let s = Matrix::<f64>::random_strided(2, 3, 5, 7);
+        assert_eq!(s.data()[3], -77.0);
+        assert!(s.get(1, 2).abs() <= 1.0);
     }
 
     #[test]
     #[should_panic]
     fn out_of_bounds_get_panics() {
-        let m = Matrix::zeros(2, 2);
+        let m = Matrix::<f32>::zeros(2, 2);
         let _ = m.get(2, 0);
     }
 }

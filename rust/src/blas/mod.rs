@@ -47,6 +47,19 @@
 //! distance in elements between consecutive rows; `ld >= cols` of the
 //! stored matrix. Transposition is expressed logically via [`Transpose`] —
 //! no data is moved.
+//!
+//! ## Precision / migration note
+//!
+//! Since the element-generic subsystem ([`crate::gemm::element`]) every
+//! entry point also exists in **double precision**: [`dgemm`],
+//! [`dgemm_batch`], [`dgemm_matrix`], [`dsyrk_lower`], and
+//! `GemmContext::gemm_for::<f64>()` for planned execution. The classic
+//! `sgemm*` signatures are unchanged (they are now thin monomorphic
+//! shims over the generic [`gemm`]/[`gemm_batch`]/[`gemm_matrix`] — call
+//! the generic names from generic code). `Matrix`, `MatRef` and `MatMut`
+//! carry an element parameter with `f32` as the default, so existing
+//! code compiles and computes bit-identically; `Matrix<f64>` is the
+//! DGEMM storage type.
 
 pub mod api;
 mod backend;
@@ -56,11 +69,11 @@ pub mod level2;
 mod matrix;
 pub mod syrk;
 
-pub use api::{sgemm, sgemm_batch, sgemm_matrix};
+pub use api::{dgemm, dgemm_batch, dgemm_matrix, gemm, gemm_batch, gemm_matrix, sgemm, sgemm_batch, sgemm_matrix};
 pub use backend::{available_backends, Backend};
 pub use level1::{isamax, saxpy, sdot, snrm2, sscal};
 pub use level2::sgemv;
-pub use syrk::ssyrk_lower;
+pub use syrk::{dsyrk_lower, ssyrk_lower, syrk_lower};
 pub use error::BlasError;
 pub use matrix::{MatMut, MatRef, Matrix};
 // The planned-execution API lives in `gemm::plan`; re-exported here

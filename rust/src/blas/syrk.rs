@@ -8,20 +8,45 @@
 //! full kernel speed.
 
 use super::matrix::{MatMut, MatRef};
-use super::{sgemm, Backend, BlasError, Transpose};
+use super::{Backend, BlasError, Transpose};
+use crate::gemm::element::Element;
 
 /// Block size for the tiled update.
 const NB: usize = 64;
 
-/// `C = alpha * A * Aᵀ + beta * C`, updating only the lower triangle of
-/// the `n × n` matrix `C` (`A` is `n × k`). The strict upper triangle is
-/// left untouched.
+/// `C = alpha * A * Aᵀ + beta * C` in f32 (`SSYRK`): the monomorphic
+/// shim over [`syrk_lower`].
 pub fn ssyrk_lower(
     backend: Backend,
     alpha: f32,
     a: MatRef<'_>,
     beta: f32,
     c: &mut MatMut<'_>,
+) -> Result<(), BlasError> {
+    syrk_lower(backend, alpha, a, beta, c)
+}
+
+/// `C = alpha * A * Aᵀ + beta * C` in f64 (`DSYRK`) — the update the
+/// double-precision Cholesky tier (`dpotrf`) consumes.
+pub fn dsyrk_lower(
+    backend: Backend,
+    alpha: f64,
+    a: MatRef<'_, f64>,
+    beta: f64,
+    c: &mut MatMut<'_, f64>,
+) -> Result<(), BlasError> {
+    syrk_lower(backend, alpha, a, beta, c)
+}
+
+/// `C = alpha * A * Aᵀ + beta * C`, updating only the lower triangle of
+/// the `n × n` matrix `C` (`A` is `n × k`). The strict upper triangle is
+/// left untouched. Generic over the element precision.
+pub fn syrk_lower<T: Element>(
+    backend: Backend,
+    alpha: T,
+    a: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) -> Result<(), BlasError> {
     let n = a.rows();
     let k = a.cols();
@@ -34,7 +59,7 @@ pub fn ssyrk_lower(
         // Diagonal block: direct lower-triangle dot products.
         for i in i0..i0 + ib {
             for j in i0..=i {
-                let mut acc = 0.0f32;
+                let mut acc = T::ZERO;
                 for p in 0..k {
                     // SAFETY: i, j < n and p < k.
                     unsafe { acc += a.get_unchecked(i, p) * a.get_unchecked(j, p) };
@@ -55,7 +80,7 @@ pub fn ssyrk_lower(
             let panel_slice = unsafe {
                 std::slice::from_raw_parts_mut(c_panel.row_ptr_mut(0), (pr - 1) * ld + pc)
             };
-            sgemm(
+            super::api::gemm(
                 backend,
                 Transpose::No,
                 Transpose::Yes,

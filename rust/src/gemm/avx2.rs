@@ -7,24 +7,27 @@
 //! progression the paper itself anticipates: the algorithm is parameterised
 //! by SIMD width and register count, not tied to the PIII.
 
+use super::element::Element;
 use super::pack::Scratch;
 use super::params::BlockParams;
 use super::simd::{gemm_vec, gemm_vec_scratch, VecIsa};
 use crate::blas::{MatMut, MatRef, Transpose};
 
-/// Emmerald SGEMM on AVX2+FMA: `C = alpha * op(A) op(B) + beta * C`.
+/// Emmerald GEMM on AVX2+FMA: `C = alpha * op(A) op(B) + beta * C`.
+/// Generic over the element precision: f32 runs the 8-wide kernels, f64
+/// the 4-wide YMM instantiations.
 ///
 /// Callers must ensure AVX2 and FMA are available (the
 /// [`crate::blas::Backend`] dispatcher checks at resolve time).
-pub fn gemm(
+pub fn gemm<T: Element>(
     params: &BlockParams,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) {
     gemm_vec(VecIsa::Avx2, params, transa, transb, alpha, a, b, beta, c);
 }
@@ -32,16 +35,16 @@ pub fn gemm(
 /// As [`gemm`], but reusing caller-provided packing buffers (see
 /// [`super::simd::gemm_with_scratch`]).
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_with_scratch(
+pub fn gemm_with_scratch<T: Element>(
     params: &BlockParams,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
-    scratch: &mut Scratch,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
+    scratch: &mut Scratch<T>,
 ) {
     gemm_vec_scratch(VecIsa::Avx2, params, transa, transb, alpha, a, b, beta, c, scratch);
 }

@@ -23,7 +23,9 @@
 //! (only valid for the read-only `A`/`B`).
 
 use super::dispatch::{GemmDispatch, KernelId};
+use super::element::{Element, ElementId};
 use super::pack::Scratch;
+use super::simd::VecIsa;
 use super::{blocked, naive};
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
 use crate::util::threadpool::{run_borrowed_on, ThreadPool};
@@ -57,20 +59,20 @@ impl BatchStrides {
 /// worker pool. See the module docs for layout semantics; shapes follow
 /// [`crate::blas::sgemm`].
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_batch(
+pub fn gemm_batch<T: Element>(
     d: &GemmDispatch,
     transa: Transpose,
     transb: Transpose,
     m: usize,
     n: usize,
     k: usize,
-    alpha: f32,
-    a: &[f32],
+    alpha: T,
+    a: &[T],
     lda: usize,
-    b: &[f32],
+    b: &[T],
     ldb: usize,
-    beta: f32,
-    c: &mut [f32],
+    beta: T,
+    c: &mut [T],
     ldc: usize,
     batch: usize,
     strides: BatchStrides,
@@ -102,7 +104,7 @@ pub fn gemm_batch(
 /// [`crate::blas::sgemm_batch`]; the planned API routes its context's
 /// pool through here).
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_batch_on(
+pub(crate) fn gemm_batch_on<T: Element>(
     d: &GemmDispatch,
     pool: Option<&ThreadPool>,
     forced: Option<KernelId>,
@@ -111,13 +113,13 @@ pub(crate) fn gemm_batch_on(
     m: usize,
     n: usize,
     k: usize,
-    alpha: f32,
-    a: &[f32],
+    alpha: T,
+    a: &[T],
     lda: usize,
-    b: &[f32],
+    b: &[T],
     ldb: usize,
-    beta: f32,
-    c: &mut [f32],
+    beta: T,
+    c: &mut [T],
     ldc: usize,
     batch: usize,
     strides: BatchStrides,
@@ -139,7 +141,7 @@ pub(crate) fn gemm_batch_on(
     // ---- Validation pass (everything checked before any compute or any
     // thread is spawned; the execution pass may then unwrap freely). ----
     validate_operand("C", m, n, ldc, strides.c, batch, c.len(), true)?;
-    let compute = alpha != 0.0 && k != 0;
+    let compute = alpha != T::ZERO && k != 0;
     if compute {
         validate_operand("A", ar, ac, lda, strides.a, batch, a.len(), false)?;
         validate_operand("B", br, bc, ldb, strides.b, batch, b.len(), false)?;
@@ -175,7 +177,7 @@ pub(crate) fn gemm_batch_on(
 
     // ---- Per-item execution, fanned out over worker threads. ----
     let shape = super::dispatch::GemmShape { m, n, k, transa, transb };
-    let serial = forced.unwrap_or_else(|| d.select_serial(&shape, alpha));
+    let serial = forced.unwrap_or_else(|| d.select_serial_t::<T>(&shape, alpha));
     let slices = item_slices(c, strides.c, batch);
     // Thread spawn/join costs tens of microseconds; don't pay it unless
     // the whole batch carries at least a parallel-worthy amount of work
@@ -205,8 +207,8 @@ pub(crate) fn gemm_batch_on(
         run_item_group(&job, slices.into_iter().enumerate().collect());
     } else {
         let group_size = batch.div_ceil(workers);
-        let mut groups: Vec<Vec<(usize, &mut [f32])>> = Vec::with_capacity(workers);
-        let mut current: Vec<(usize, &mut [f32])> = Vec::with_capacity(group_size);
+        let mut groups: Vec<Vec<(usize, &mut [T])>> = Vec::with_capacity(workers);
+        let mut current: Vec<(usize, &mut [T])> = Vec::with_capacity(group_size);
         for pair in slices.into_iter().enumerate() {
             current.push(pair);
             if current.len() == group_size {
@@ -230,7 +232,7 @@ pub(crate) fn gemm_batch_on(
 
 /// Everything a worker needs to run its share of a batch (read-only;
 /// shared by reference across the worker threads).
-struct ItemJob<'a> {
+struct ItemJob<'a, T> {
     d: &'a GemmDispatch,
     serial: KernelId,
     transa: Transpose,
@@ -239,15 +241,15 @@ struct ItemJob<'a> {
     a_shape: (usize, usize, usize),
     b_shape: (usize, usize, usize),
     c_shape: (usize, usize, usize),
-    alpha: f32,
-    beta: f32,
-    a: &'a [f32],
-    b: &'a [f32],
+    alpha: T,
+    beta: T,
+    a: &'a [T],
+    b: &'a [T],
     strides: BatchStrides,
 }
 
 /// Run a contiguous group of batch items with one reused packing scratch.
-fn run_item_group(job: &ItemJob<'_>, items: Vec<(usize, &mut [f32])>) {
+fn run_item_group<T: Element>(job: &ItemJob<'_, T>, items: Vec<(usize, &mut [T])>) {
     let (ar, ac, lda) = job.a_shape;
     let (br, bc, ldb) = job.b_shape;
     let (m, n, ldc) = job.c_shape;
@@ -272,29 +274,38 @@ fn run_item_group(job: &ItemJob<'_>, items: Vec<(usize, &mut [f32])>) {
 }
 
 /// One item on one serial kernel, reusing the worker's packing scratch
-/// where the kernel supports it.
+/// where the kernel supports it. Element-aware: f64 items route AVX2
+/// kernels through the f64 geometries and never touch the f32-only SSE
+/// tier; a compensated-f32 config routes compute through the
+/// compensated driver.
 #[allow(clippy::too_many_arguments)]
-fn run_serial_scratch(
+fn run_serial_scratch<T: Element>(
     d: &GemmDispatch,
     id: KernelId,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
-    scratch: &mut Scratch,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
+    scratch: &mut Scratch<T>,
 ) {
+    // Compensated-f32 mode intercepts every per-item compute — through
+    // the same GemmDispatch helper the serial dispatch path uses, so
+    // batched and per-call compensated results can never diverge.
+    if d.comp_intercept(transa, transb, alpha, a, b, beta, c) {
+        return;
+    }
     match id {
         KernelId::Avx2Tile if d.has_avx2() => {
-            super::tile::gemm_with_scratch(d.params_tile(), transa, transb, alpha, a, b, beta, c, scratch);
+            super::tile::gemm_with_scratch(d.params_tile_t::<T>(), transa, transb, alpha, a, b, beta, c, scratch);
         }
         KernelId::Avx2 if d.has_avx2() => {
-            super::avx2::gemm_with_scratch(d.params_avx2(), transa, transb, alpha, a, b, beta, c, scratch);
+            super::simd::gemm_vec_scratch(VecIsa::Avx2, d.params_dot_t::<T>(VecIsa::Avx2), transa, transb, alpha, a, b, beta, c, scratch);
         }
-        KernelId::Avx2Tile | KernelId::Avx2 | KernelId::Simd if d.has_sse() => {
-            super::simd::gemm_with_scratch(d.params_sse(), transa, transb, alpha, a, b, beta, c, scratch);
+        KernelId::Avx2Tile | KernelId::Avx2 | KernelId::Simd if d.has_sse() && T::ID == ElementId::F32 => {
+            super::simd::gemm_vec_scratch(VecIsa::Sse, d.params_dot_t::<T>(VecIsa::Sse), transa, transb, alpha, a, b, beta, c, scratch);
         }
         KernelId::Naive => naive::gemm(transa, transb, alpha, a, b, beta, c),
         KernelId::Blocked | KernelId::Avx2Tile | KernelId::Avx2 | KernelId::Simd => {
@@ -305,13 +316,13 @@ fn run_serial_scratch(
         // fan-out would multiply thread counts); unreachable from the
         // public batch APIs, but degrade to the best serial kernel.
         KernelId::Parallel | KernelId::Strassen => {
-            run_serial_scratch(d, d.best_serial_vector(), transa, transb, alpha, a, b, beta, c, scratch);
+            run_serial_scratch(d, d.best_serial_vector_t::<T>(), transa, transb, alpha, a, b, beta, c, scratch);
         }
     }
 }
 
 /// Split `c` into one mutable slice per batch item (validated up front).
-fn item_slices(c: &mut [f32], stride_c: usize, batch: usize) -> Vec<&mut [f32]> {
+fn item_slices<T>(c: &mut [T], stride_c: usize, batch: usize) -> Vec<&mut [T]> {
     if batch == 1 {
         vec![c]
     } else {

@@ -12,21 +12,24 @@
 //! cannot legally turn those serial FP chains into SIMD, so the proxy
 //! stays honest.
 
+use super::element::Element;
 use super::microkernel::scalar_dot_tile;
 use super::pack::{PackedA, PackedB};
 use super::params::BlockParams;
 use crate::blas::{MatMut, MatRef, Transpose};
 
-/// ATLAS-proxy SGEMM: `C = alpha * op(A) op(B) + beta * C`.
-pub fn gemm(
+/// ATLAS-proxy GEMM: `C = alpha * op(A) op(B) + beta * C` (generic over
+/// the element precision — the f64 instantiation is the scalar DGEMM
+/// tier on hosts without AVX2).
+pub fn gemm<T: Element>(
     params: &BlockParams,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) {
     params.validate().expect("invalid block parameters");
     let m = c.rows();
@@ -36,15 +39,15 @@ pub fn gemm(
         Transpose::Yes => a.rows(),
     };
     c.scale(beta);
-    if alpha == 0.0 || k == 0 || m == 0 || n == 0 {
+    if alpha == T::ZERO || k == 0 || m == 0 || n == 0 {
         return;
     }
 
     // ATLAS copies blocks of both operands; panel width 2 = the register
     // tile's N dimension.
     let nr = 2usize;
-    let mut packed_b = PackedB::new(nr);
-    let mut packed_a = PackedA::new();
+    let mut packed_b = PackedB::<T>::new(nr);
+    let mut packed_a = PackedA::<T>::new();
 
     let mut kk = 0;
     while kk < k {
@@ -67,7 +70,7 @@ pub fn gemm(
                     unsafe {
                         match (h, w) {
                             (2, 2) => {
-                                let t = scalar_dot_tile::<2, 2>(
+                                let t = scalar_dot_tile::<T, 2, 2>(
                                     [packed_a.row_ptr(i), packed_a.row_ptr(i + 1)],
                                     kb_eff,
                                     [packed_b.col_ptr(p, 0), packed_b.col_ptr(p, 1)],
@@ -76,7 +79,7 @@ pub fn gemm(
                                 accumulate(c, ii + i + 1, j0, alpha, &t[1][..2]);
                             }
                             (2, 1) => {
-                                let t = scalar_dot_tile::<2, 1>(
+                                let t = scalar_dot_tile::<T, 2, 1>(
                                     [packed_a.row_ptr(i), packed_a.row_ptr(i + 1)],
                                     kb_eff,
                                     [packed_b.col_ptr(p, 0)],
@@ -85,7 +88,7 @@ pub fn gemm(
                                 accumulate(c, ii + i + 1, j0, alpha, &t[1][..1]);
                             }
                             (1, 2) => {
-                                let t = scalar_dot_tile::<1, 2>(
+                                let t = scalar_dot_tile::<T, 1, 2>(
                                     [packed_a.row_ptr(i)],
                                     kb_eff,
                                     [packed_b.col_ptr(p, 0), packed_b.col_ptr(p, 1)],
@@ -93,7 +96,7 @@ pub fn gemm(
                                 accumulate(c, ii + i, j0, alpha, &t[0][..2]);
                             }
                             (1, 1) => {
-                                let t = scalar_dot_tile::<1, 1>(
+                                let t = scalar_dot_tile::<T, 1, 1>(
                                     [packed_a.row_ptr(i)],
                                     kb_eff,
                                     [packed_b.col_ptr(p, 0)],
@@ -114,7 +117,7 @@ pub fn gemm(
 
 /// `C[row, j0..] += alpha * sums`.
 #[inline(always)]
-fn accumulate(c: &mut MatMut<'_>, row: usize, j0: usize, alpha: f32, sums: &[f32]) {
+fn accumulate<T: Element>(c: &mut MatMut<'_, T>, row: usize, j0: usize, alpha: T, sums: &[T]) {
     for (j, &s) in sums.iter().enumerate() {
         // SAFETY: caller guarantees row < m and j0 + sums.len() <= n.
         unsafe {

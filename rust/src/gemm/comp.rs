@@ -1,0 +1,196 @@
+//! Compensated-f32 accumulation: f32 storage with ~f64 dot-product
+//! accuracy.
+//!
+//! Benson & Ballard (arXiv:1409.2908) note that numerical stability is
+//! the main objection to fast-GEMM variants; the classic answer for users
+//! who cannot move to f64 storage is **compensated accumulation**: each
+//! dot product runs the two-term Dot2 scheme (Ogita–Rump–Oishi) in which
+//! every product's rounding error is recovered exactly with an FMA
+//! (Dekker's TwoProduct) and every addition's rounding error exactly with
+//! Knuth's TwoSum, all errors draining into a second accumulator folded
+//! in once at the end. The result carries roughly twice the working
+//! precision — in practice the f32 rounding of the f64 dot product —
+//! at ~2–4× the arithmetic cost of the plain kernel.
+//!
+//! The mode is selected via
+//! [`crate::gemm::dispatch::DispatchConfig::accumulation`]
+//! ([`crate::gemm::dispatch::Accumulation::CompensatedF32`]): dispatch
+//! then routes every f32 compute call — scalar tier and dot tier alike,
+//! serial or thread-parallel — through [`gemm`] below instead of the
+//! plain kernels. (The prepacked planned paths keep their plain layouts:
+//! compensation is a per-call accuracy mode, not a packed format.)
+//! f64 calls are unaffected — f64 *is* the accuracy target.
+//!
+//! Structure: `op(B)` is re-buffered once into full-depth column panels
+//! (the paper's packing, with `kb = k`: compensation must see the whole
+//! dot product to carry its error term across what would otherwise be
+//! k-block boundaries), `op(A)` rows are packed only when strided in
+//! storage, and each `C` element gets one compensated dot product —
+//! per-element results are independent and k-ordered, so any row or
+//! column split of `C` is bit-identical to the serial sweep (the same
+//! contract the plain tiers guarantee, relied on by the parallel tier).
+
+use super::microkernel::comp_dot_scalar;
+use super::pack::{PackedA, PackedB};
+use super::params::BlockParams;
+use crate::blas::{MatMut, MatRef, Transpose};
+
+/// Compensated SGEMM: `C = alpha * op(A) op(B) + beta * C` with Dot2
+/// accumulation per element (see module docs).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm(
+    params: &BlockParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: MatRef<'_, f32>,
+    b: MatRef<'_, f32>,
+    beta: f32,
+    c: &mut MatMut<'_, f32>,
+) {
+    params.validate().expect("invalid block parameters");
+    let m = c.rows();
+    let n = c.cols();
+    let k = match transa {
+        Transpose::No => a.cols(),
+        Transpose::Yes => a.rows(),
+    };
+    c.scale(beta);
+    if alpha == 0.0 || k == 0 || m == 0 || n == 0 {
+        return;
+    }
+    let use_avx2 = super::dispatch::detect_avx2();
+
+    // Full-depth packing: one panel sweep sees the entire dot product.
+    let mut packed_b = PackedB::new(params.nr);
+    packed_b.pack(b, transb, 0, k, n);
+    let need_pack_a = params.pack_a || transa == Transpose::Yes;
+    let mut packed_a = PackedA::new();
+
+    let mut ii = 0;
+    while ii < m {
+        let mb_eff = params.mb.min(m - ii);
+        if need_pack_a {
+            packed_a.pack(a, transa, ii, mb_eff, 0, k);
+        }
+        let npanels = n.div_ceil(params.nr);
+        for p in 0..npanels {
+            let j0 = p * params.nr;
+            let w = params.nr.min(n - j0);
+            for i in 0..mb_eff {
+                let arow: *const f32 = if need_pack_a {
+                    packed_a.row_ptr(i)
+                } else {
+                    a.row_ptr(ii + i)
+                };
+                for j in 0..w {
+                    // SAFETY: packed columns are kpad >= k elements long;
+                    // raw A rows are k elements (transa == No there);
+                    // ii+i < m and j0+j < n by loop bounds; use_avx2 comes
+                    // from runtime feature detection.
+                    unsafe {
+                        let col = packed_b.col_ptr(p, j);
+                        let s = {
+                            #[cfg(target_arch = "x86_64")]
+                            {
+                                if use_avx2 {
+                                    super::microkernel::comp_dot_avx2(arow, col, k)
+                                } else {
+                                    comp_dot_scalar(arow, col, k)
+                                }
+                            }
+                            #[cfg(not(target_arch = "x86_64"))]
+                            {
+                                let _ = use_avx2;
+                                comp_dot_scalar(arow, col, k)
+                            }
+                        };
+                        let old = c.get_unchecked(ii + i, j0 + j);
+                        // Plain writeback: the compensated sum is already
+                        // a single correctly-rounded value.
+                        c.set_unchecked(ii + i, j0 + j, old + alpha * s);
+                    }
+                }
+            }
+        }
+        ii += mb_eff;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+    use crate::gemm::testutil::check_grid;
+    use crate::gemm::BlockParams;
+
+    #[test]
+    fn matches_naive_on_grid() {
+        // Correctness first: the compensated driver is a full GEMM.
+        check_grid(
+            &|ta, tb, alpha, a, b, beta, c| {
+                gemm(&BlockParams::emmerald_sse(), ta, tb, alpha, a, b, beta, c)
+            },
+            "comp-f32",
+        );
+    }
+
+    #[test]
+    fn row_and_column_independence_is_bitwise() {
+        // Each C element's compensated dot is independent of every other
+        // element — computing a sub-block in isolation reproduces the
+        // full run's bits (the split-invariance the parallel tier uses).
+        let (m, n, k) = (9usize, 11usize, 333usize);
+        let a = Matrix::<f32>::random(m, k, 1, -1.0, 1.0);
+        let b = Matrix::<f32>::random(k, n, 2, -1.0, 1.0);
+        let p = BlockParams::emmerald_sse();
+        let mut full = Matrix::<f32>::zeros(m, n);
+        gemm(&p, Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut full.view_mut());
+        let mut top = Matrix::<f32>::zeros(3, n);
+        gemm(
+            &p,
+            Transpose::No,
+            Transpose::No,
+            1.0,
+            a.view().block(0, 0, 3, k),
+            b.view(),
+            0.0,
+            &mut top.view_mut(),
+        );
+        for r in 0..3 {
+            for j in 0..n {
+                assert_eq!(full.get(r, j), top.get(r, j), "({r},{j}) differs");
+            }
+        }
+    }
+
+    #[test]
+    fn beats_plain_f32_on_ill_conditioned_inputs() {
+        // Large alternating summands with small signal: the plain f32
+        // kernels lose most of the signal to cancellation, Dot2 keeps it.
+        let (m, n, k) = (4usize, 3usize, 2048usize);
+        let a = Matrix::<f32>::from_fn(m, k, |r, p| {
+            let big = if p % 2 == 0 { 3.0e4 } else { -3.0e4 };
+            big + ((r * 31 + p * 7) % 13) as f32 * 0.125
+        });
+        let b = Matrix::<f32>::from_fn(k, n, |_, j| 1.0 + j as f32 * 1.0e-4);
+        // f64 oracle.
+        let a64 = Matrix::<f64>::from_fn(m, k, |r, p| a.get(r, p) as f64);
+        let b64 = Matrix::<f64>::from_fn(k, n, |p, j| b.get(p, j) as f64);
+        let mut c64 = Matrix::<f64>::zeros(m, n);
+        crate::gemm::naive::gemm(Transpose::No, Transpose::No, 1.0, a64.view(), b64.view(), 0.0, &mut c64.view_mut());
+        let mut plain = Matrix::<f32>::zeros(m, n);
+        crate::gemm::naive::gemm(Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut plain.view_mut());
+        let mut comp = Matrix::<f32>::zeros(m, n);
+        gemm(&BlockParams::emmerald_sse(), Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut comp.view_mut());
+        let mut err_plain = 0.0f64;
+        let mut err_comp = 0.0f64;
+        for r in 0..m {
+            for j in 0..n {
+                err_plain = err_plain.max((plain.get(r, j) as f64 - c64.get(r, j)).abs());
+                err_comp = err_comp.max((comp.get(r, j) as f64 - c64.get(r, j)).abs());
+            }
+        }
+        assert!(err_comp <= err_plain, "comp {err_comp:e} vs plain {err_plain:e}");
+    }
+}

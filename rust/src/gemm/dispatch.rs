@@ -30,11 +30,12 @@
 //! [`crate::blas::Backend::Auto`], which now resolves to it); construct a
 //! local [`GemmDispatch`] for custom thresholds or deterministic tests.
 
+use super::element::{Element, ElementId};
 use super::params::{BlockParams, TileParams};
 use super::parallel::SerialVecKernel;
 use super::simd::VecIsa;
-use super::{blocked, naive, parallel, simd, strassen, tile};
-use crate::blas::{Backend, MatMut, MatRef, Matrix, Transpose};
+use super::{blocked, naive, parallel, simd, tile};
+use crate::blas::{Backend, MatMut, MatRef, Transpose};
 use crate::util::threadpool::ThreadPool;
 
 /// Identifier of one GEMM implementation in the registry.
@@ -102,6 +103,24 @@ impl KernelId {
         }
     }
 
+    /// Whether this kernel can run on the current CPU **for a given
+    /// element precision**. The SSE tier and the Strassen recursion are
+    /// f32-only; everything else has an f64 instantiation (the AVX2 dot
+    /// and tile tiers at half the lane count).
+    pub fn available_for(self, element: ElementId) -> bool {
+        match element {
+            ElementId::F32 => self.available(),
+            ElementId::F64 => match self {
+                KernelId::Naive | KernelId::Blocked => true,
+                // The f64 parallel compute tier slices over the AVX2
+                // ladder; without it dispatch degrades f64 to the serial
+                // scalar proxy (only the pure beta-scale sweep splits).
+                KernelId::Avx2 | KernelId::Avx2Tile | KernelId::Parallel => detect_avx2(),
+                KernelId::Simd | KernelId::Strassen => false,
+            },
+        }
+    }
+
     /// Inverse of [`name`](Self::name) (the autotune cache stores kernel
     /// names on disk).
     pub fn from_name(s: &str) -> Option<KernelId> {
@@ -135,15 +154,21 @@ pub struct KernelInfo {
     pub available: bool,
 }
 
-/// Enumerate every kernel with its availability on this CPU.
+/// Enumerate every kernel with its availability on this CPU (f32).
 pub fn registry() -> Vec<KernelInfo> {
+    registry_for(ElementId::F32)
+}
+
+/// Enumerate every kernel with its availability on this CPU for one
+/// element precision (`emmerald dispatch --element f64` renders this).
+pub fn registry_for(element: ElementId) -> Vec<KernelInfo> {
     KernelId::ALL
         .iter()
         .map(|&id| KernelInfo {
             id,
             name: id.name(),
             requires: id.requires(),
-            available: id.available(),
+            available: id.available_for(element),
         })
         .collect()
 }
@@ -185,6 +210,20 @@ impl GemmShape {
     }
 }
 
+/// Accumulation mode for f32 GEMM (see [`crate::gemm::comp`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Accumulation {
+    /// Plain working-precision accumulation (the default).
+    #[default]
+    Standard,
+    /// Two-term compensated (Kahan/Dekker Dot2) accumulation for f32:
+    /// f32 storage with ~f64 dot-product accuracy, at ~2–4× kernel cost.
+    /// Routes every f32 compute call — scalar and dot tiers, serial or
+    /// parallel — through the compensated driver; f64 calls and the
+    /// prepacked planned paths are unaffected.
+    CompensatedF32,
+}
+
 /// Heuristic thresholds and kernel geometries for a [`GemmDispatch`].
 #[derive(Clone, Copy, Debug)]
 pub struct DispatchConfig {
@@ -215,6 +254,15 @@ pub struct DispatchConfig {
     /// Tile geometry for the outer-product register-tiled kernel
     /// (autotune can overwrite).
     pub tile: TileParams,
+    /// Block geometry for the f64 AVX2 dot kernel (4-wide YMM lanes;
+    /// autotune can overwrite via the f64-keyed entry points).
+    pub avx2_f64: BlockParams,
+    /// Tile geometry for the f64 outer-product kernel (6×8; autotune can
+    /// overwrite via the f64-keyed entry points).
+    pub tile_f64: TileParams,
+    /// f32 accumulation mode (standard or compensated — see
+    /// [`Accumulation`]).
+    pub accumulation: Accumulation,
     /// Minimum output rows before the outer-product tile tier outranks
     /// the dot-panel AVX2 kernel. Below this the last (only) MR-strip is
     /// mostly zero padding, so the row-oriented dot kernel wins —
@@ -233,12 +281,15 @@ impl Default for DispatchConfig {
             // cache-speed sweep not worth the pool fork-join.
             parallel_min_scale: 1 << 20,
             strassen_min_dim: 1024,
-            strassen_cutoff: strassen::DEFAULT_CUTOFF,
+            strassen_cutoff: super::strassen::DEFAULT_CUTOFF,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             sse: BlockParams::emmerald_sse(),
             avx2: BlockParams::emmerald_avx2(),
             blocked: BlockParams::atlas_proxy(),
             tile: TileParams::avx2_6x16(),
+            avx2_f64: BlockParams::emmerald_avx2(),
+            tile_f64: TileParams::avx2_6x8_f64(),
+            accumulation: Accumulation::Standard,
             tile_min_m: 4,
         }
     }
@@ -306,6 +357,35 @@ impl GemmDispatch {
         &self.cfg.tile
     }
 
+    /// Block geometry the f64 AVX2 dot kernel will run with.
+    pub fn params_avx2_f64(&self) -> &BlockParams {
+        &self.cfg.avx2_f64
+    }
+
+    /// Tile geometry the f64 outer-product kernel will run with.
+    pub fn params_tile_f64(&self) -> &TileParams {
+        &self.cfg.tile_f64
+    }
+
+    /// The dot-kernel geometry for element `T` on `isa` (f64 carries one
+    /// AVX2 geometry; its SSE slot is the scalar-panel fallback and runs
+    /// the same geometry).
+    pub(crate) fn params_dot_t<T: Element>(&self, isa: VecIsa) -> &BlockParams {
+        match (T::ID, isa) {
+            (ElementId::F32, VecIsa::Sse) => &self.cfg.sse,
+            (ElementId::F32, VecIsa::Avx2) => &self.cfg.avx2,
+            (ElementId::F64, _) => &self.cfg.avx2_f64,
+        }
+    }
+
+    /// The tile geometry for element `T`.
+    pub(crate) fn params_tile_t<T: Element>(&self) -> &TileParams {
+        match T::ID {
+            ElementId::F32 => &self.cfg.tile,
+            ElementId::F64 => &self.cfg.tile_f64,
+        }
+    }
+
     /// Install tuned block parameters for one kernel family (the autotune
     /// feed). Parameters are validated; families without a geometry
     /// (naive/parallel/strassen — and the tile tier, which carries a
@@ -324,10 +404,60 @@ impl GemmDispatch {
         Ok(true)
     }
 
-    /// Install tuned tile geometry for the outer-product tier.
+    /// Install tuned tile geometry for the outer-product tier (f32).
     pub fn set_tuned_tile(&mut self, params: TileParams) -> Result<(), String> {
+        self.set_tuned_tile_for(ElementId::F32, params)
+    }
+
+    /// Install tuned block parameters for one `(kernel, element)` pair —
+    /// the element-keyed autotune feed. f64 carries geometry for the
+    /// AVX2 dot kernel only (its other families are f32-only or
+    /// geometry-free); returns whether anything was updated.
+    pub fn set_tuned_for(
+        &mut self,
+        element: ElementId,
+        id: KernelId,
+        params: BlockParams,
+    ) -> Result<bool, String> {
+        match element {
+            ElementId::F32 => self.set_tuned(id, params),
+            ElementId::F64 => {
+                params.validate()?;
+                match id {
+                    KernelId::Avx2 => {
+                        self.cfg.avx2_f64 = params;
+                        Ok(true)
+                    }
+                    _ => Ok(false),
+                }
+            }
+        }
+    }
+
+    /// Install tuned tile geometry for one element. The geometry's `nr`
+    /// must match the element's vector width (16 f32 / 8 f64 lanes).
+    pub fn set_tuned_tile_for(
+        &mut self,
+        element: ElementId,
+        params: TileParams,
+    ) -> Result<(), String> {
         params.validate()?;
-        self.cfg.tile = params;
+        let want_nr = match element {
+            ElementId::F32 => tile::NR,
+            ElementId::F64 => tile::NR / 2,
+        };
+        if params.nr != want_nr {
+            return Err(format!(
+                "tile nr {} does not match element {} (needs {})",
+                params.nr,
+                element.name(),
+                want_nr
+            ));
+        }
+        match element {
+            ElementId::F32 => self.cfg.tile = params,
+            ElementId::F64 => self.cfg.tile_f64 = params,
+        }
         Ok(())
     }
 
@@ -342,14 +472,32 @@ impl GemmDispatch {
     }
 
     /// The widest serial kernel this CPU supports — the single source of
-    /// the tile → AVX2 → SSE → blocked preference ladder.
+    /// the tile → AVX2 → SSE → blocked preference ladder (f32).
     pub fn best_serial_vector(&self) -> KernelId {
-        if self.have_avx2 {
-            KernelId::Avx2Tile
-        } else if self.have_sse {
-            KernelId::Simd
-        } else {
-            KernelId::Blocked
+        self.best_serial_vector_t::<f32>()
+    }
+
+    /// The widest serial kernel this CPU supports for element `T`. The
+    /// f64 ladder has no SSE rung (no f64 SSE kernel): tile → AVX2 dot →
+    /// blocked scalar.
+    pub fn best_serial_vector_t<T: Element>(&self) -> KernelId {
+        match T::ID {
+            ElementId::F32 => {
+                if self.have_avx2 {
+                    KernelId::Avx2Tile
+                } else if self.have_sse {
+                    KernelId::Simd
+                } else {
+                    KernelId::Blocked
+                }
+            }
+            ElementId::F64 => {
+                if self.have_avx2 {
+                    KernelId::Avx2Tile
+                } else {
+                    KernelId::Blocked
+                }
+            }
         }
     }
 
@@ -359,10 +507,15 @@ impl GemmDispatch {
     /// Gemv-shaped outputs (`m < tile_min_m`) stay on the dot-panel AVX2
     /// kernel: a tile row would be mostly zero padding.
     pub fn select_serial(&self, shape: &GemmShape, alpha: f32) -> KernelId {
-        if alpha == 0.0 || shape.k == 0 || shape.max_dim() <= self.cfg.tiny_dim {
+        self.select_serial_t::<f32>(shape, alpha)
+    }
+
+    /// Element-generic twin of [`select_serial`](Self::select_serial).
+    pub fn select_serial_t<T: Element>(&self, shape: &GemmShape, alpha: T) -> KernelId {
+        if alpha == T::ZERO || shape.k == 0 || shape.max_dim() <= self.cfg.tiny_dim {
             return KernelId::Naive;
         }
-        let best = self.best_serial_vector();
+        let best = self.best_serial_vector_t::<T>();
         if best == KernelId::Avx2Tile && shape.m < self.cfg.tile_min_m {
             return KernelId::Avx2;
         }
@@ -373,11 +526,20 @@ impl GemmDispatch {
     /// run — one decision point shared with the parallel driver. Applies
     /// the same gemv-shape guard as [`select_serial`](Self::select_serial)
     /// (`m` is the full output height; row slices inherit the choice).
-    pub(crate) fn serial_vec_kernel(&self, m: usize) -> SerialVecKernel {
-        match self.best_serial_vector() {
-            KernelId::Avx2Tile if m >= self.cfg.tile_min_m => SerialVecKernel::Tile(self.cfg.tile),
-            KernelId::Avx2Tile | KernelId::Avx2 => SerialVecKernel::Dot(VecIsa::Avx2, self.cfg.avx2),
-            _ => SerialVecKernel::Dot(VecIsa::Sse, self.cfg.sse),
+    /// Under [`Accumulation::CompensatedF32`], f32 slices run the
+    /// compensated driver.
+    pub(crate) fn serial_vec_kernel_t<T: Element>(&self, m: usize) -> SerialVecKernel {
+        if T::ID == ElementId::F32 && self.cfg.accumulation == Accumulation::CompensatedF32 {
+            return SerialVecKernel::Comp(self.cfg.sse);
+        }
+        match self.best_serial_vector_t::<T>() {
+            KernelId::Avx2Tile if m >= self.cfg.tile_min_m => {
+                SerialVecKernel::Tile(*self.params_tile_t::<T>())
+            }
+            KernelId::Avx2Tile | KernelId::Avx2 => {
+                SerialVecKernel::Dot(VecIsa::Avx2, *self.params_dot_t::<T>(VecIsa::Avx2))
+            }
+            _ => SerialVecKernel::Dot(VecIsa::Sse, *self.params_dot_t::<T>(VecIsa::Sse)),
         }
     }
 
@@ -387,10 +549,17 @@ impl GemmDispatch {
     /// `Parallel` (each slice packs its own transposed panels); only
     /// `Strassen` stays no-transpose-only.
     pub fn select(&self, shape: &GemmShape, alpha: f32) -> KernelId {
-        let serial = self.select_serial(shape, alpha);
+        self.select_t::<f32>(shape, alpha)
+    }
+
+    /// Element-generic twin of [`select`](Self::select): the same
+    /// heuristics with the element's kernel table — f64 never selects
+    /// the SSE tier (no f64 kernel) or Strassen (precision-first tier).
+    pub fn select_t<T: Element>(&self, shape: &GemmShape, alpha: T) -> KernelId {
+        let serial = self.select_serial_t::<T>(shape, alpha);
         // Pure beta-scale: no kernel work at all, but a huge C is still
         // worth sweeping over the pool instead of one thread.
-        if alpha == 0.0 || shape.k == 0 {
+        if alpha == T::ZERO || shape.k == 0 {
             if self.have_sse
                 && self.threads() > 1
                 && shape.m.max(shape.n) >= 2
@@ -415,7 +584,11 @@ impl GemmDispatch {
         {
             return KernelId::Parallel;
         }
-        if self.threads() <= 1 && shape.no_trans() && shape.min_dim() >= self.cfg.strassen_min_dim {
+        if T::ID == ElementId::F32
+            && self.threads() <= 1
+            && shape.no_trans()
+            && shape.min_dim() >= self.cfg.strassen_min_dim
+        {
             return KernelId::Strassen;
         }
         serial
@@ -424,16 +597,22 @@ impl GemmDispatch {
     /// Run one GEMM through the heuristics. Returns the kernel that ran.
     /// Parallel work executes on the process-wide
     /// [`crate::gemm::plan::GemmContext`] thread budget.
+    ///
+    /// Under [`Accumulation::CompensatedF32`], f32 compute calls execute
+    /// the compensated driver ([`crate::gemm::comp`]) regardless of the
+    /// selected serial kernel; the returned id then names the
+    /// *selection* (the shape/ISA decision), not the arithmetic — the
+    /// parallel tier keeps its id and runs compensated slices.
     #[allow(clippy::too_many_arguments)]
-    pub fn gemm(
+    pub fn gemm<T: Element>(
         &self,
         transa: Transpose,
         transb: Transpose,
-        alpha: f32,
-        a: MatRef<'_>,
-        b: MatRef<'_>,
-        beta: f32,
-        c: &mut MatMut<'_>,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
     ) -> KernelId {
         self.gemm_on(super::plan::global_pool(), transa, transb, alpha, a, b, beta, c)
     }
@@ -441,40 +620,43 @@ impl GemmDispatch {
     /// As [`gemm`](Self::gemm), on an explicit worker pool (`None` = run
     /// any parallel split serially on the calling thread).
     #[allow(clippy::too_many_arguments)]
-    pub(crate) fn gemm_on(
+    pub(crate) fn gemm_on<T: Element>(
         &self,
         pool: Option<&ThreadPool>,
         transa: Transpose,
         transb: Transpose,
-        alpha: f32,
-        a: MatRef<'_>,
-        b: MatRef<'_>,
-        beta: f32,
-        c: &mut MatMut<'_>,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
     ) -> KernelId {
         let shape = shape_of(transa, transb, a, c);
         assert_coherent(&shape, a, b);
-        let id = self.select(&shape, alpha);
+        let id = self.select_t::<T>(&shape, alpha);
         self.run(pool, id, &shape, transa, transb, alpha, a, b, beta, c)
     }
 
     /// Run one GEMM on a *specific* kernel (the conformance suite drives
     /// every registry entry through this). Calls a kernel cannot express —
     /// transposed operands for `Strassen`, an unsplittable output for
-    /// `Parallel`, a vector kernel on a CPU without the ISA — degrade to
-    /// the best serial kernel so the call always completes. Returns the
-    /// kernel that actually ran.
+    /// `Parallel`, a vector kernel on a CPU without the ISA, any f32-only
+    /// tier in f64 — degrade to the best serial kernel so the call always
+    /// completes. Returns the kernel that actually ran — except under
+    /// [`Accumulation::CompensatedF32`], where f32 compute executes the
+    /// compensated driver and the forced id is echoed back (see
+    /// [`gemm`](Self::gemm)).
     #[allow(clippy::too_many_arguments)]
-    pub fn gemm_with(
+    pub fn gemm_with<T: Element>(
         &self,
         id: KernelId,
         transa: Transpose,
         transb: Transpose,
-        alpha: f32,
-        a: MatRef<'_>,
-        b: MatRef<'_>,
-        beta: f32,
-        c: &mut MatMut<'_>,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
     ) -> KernelId {
         self.gemm_with_on(super::plan::global_pool(), id, transa, transb, alpha, a, b, beta, c)
     }
@@ -482,37 +664,70 @@ impl GemmDispatch {
     /// As [`gemm_with`](Self::gemm_with), on an explicit worker pool (the
     /// planned API routes its own context's pool through here).
     #[allow(clippy::too_many_arguments)]
-    pub(crate) fn gemm_with_on(
+    pub(crate) fn gemm_with_on<T: Element>(
         &self,
         pool: Option<&ThreadPool>,
         id: KernelId,
         transa: Transpose,
         transb: Transpose,
-        alpha: f32,
-        a: MatRef<'_>,
-        b: MatRef<'_>,
-        beta: f32,
-        c: &mut MatMut<'_>,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
     ) -> KernelId {
         let shape = shape_of(transa, transb, a, c);
         assert_coherent(&shape, a, b);
         self.run(pool, id, &shape, transa, transb, alpha, a, b, beta, c)
     }
 
+    /// The one decision point for [`Accumulation::CompensatedF32`]: when
+    /// the mode is active for this element and the call is real compute
+    /// (`alpha != 0` — a `k == 0` call degenerates correctly inside the
+    /// compensated driver), run the compensated driver and return `true`.
+    /// Both the serial dispatch path and the batched per-item path route
+    /// through this, so their arithmetic can never diverge.
     #[allow(clippy::too_many_arguments)]
-    fn run(
+    pub(crate) fn comp_intercept<T: Element>(
+        &self,
+        transa: Transpose,
+        transb: Transpose,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
+    ) -> bool {
+        if T::ID == ElementId::F32
+            && self.cfg.accumulation == Accumulation::CompensatedF32
+            && alpha != T::ZERO
+        {
+            T::comp_gemm(&self.cfg.sse, transa, transb, alpha, a, b, beta, c);
+            return true;
+        }
+        false
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run<T: Element>(
         &self,
         pool: Option<&ThreadPool>,
         id: KernelId,
         shape: &GemmShape,
         transa: Transpose,
         transb: Transpose,
-        alpha: f32,
-        a: MatRef<'_>,
-        b: MatRef<'_>,
-        beta: f32,
-        c: &mut MatMut<'_>,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
     ) -> KernelId {
+        // Compensated-f32 mode intercepts every serial compute kernel
+        // (the parallel tier composes instead: its slices run the
+        // compensated driver via serial_vec_kernel_t).
+        if id != KernelId::Parallel && self.comp_intercept(transa, transb, alpha, a, b, beta, c) {
+            return id;
+        }
         match id {
             KernelId::Naive => {
                 naive::gemm(transa, transb, alpha, a, b, beta, c);
@@ -523,24 +738,37 @@ impl GemmDispatch {
                 KernelId::Blocked
             }
             KernelId::Simd => {
-                if !self.have_sse {
+                // The SSE tier is f32-only; f64 degrades straight to the
+                // scalar blocked proxy (dispatch never selects it — this
+                // covers forced calls).
+                if !self.have_sse || T::ID == ElementId::F64 {
                     return self.run(pool, KernelId::Blocked, shape, transa, transb, alpha, a, b, beta, c);
                 }
-                simd::gemm(&self.cfg.sse, transa, transb, alpha, a, b, beta, c);
+                simd::gemm_vec(VecIsa::Sse, &self.cfg.sse, transa, transb, alpha, a, b, beta, c);
                 KernelId::Simd
             }
             KernelId::Avx2 => {
                 if !self.have_avx2 {
                     return self.run(pool, KernelId::Simd, shape, transa, transb, alpha, a, b, beta, c);
                 }
-                super::avx2::gemm(&self.cfg.avx2, transa, transb, alpha, a, b, beta, c);
+                simd::gemm_vec(
+                    VecIsa::Avx2,
+                    self.params_dot_t::<T>(VecIsa::Avx2),
+                    transa,
+                    transb,
+                    alpha,
+                    a,
+                    b,
+                    beta,
+                    c,
+                );
                 KernelId::Avx2
             }
             KernelId::Avx2Tile => {
                 if !self.have_avx2 {
                     return self.run(pool, KernelId::Simd, shape, transa, transb, alpha, a, b, beta, c);
                 }
-                tile::gemm(&self.cfg.tile, transa, transb, alpha, a, b, beta, c);
+                tile::gemm(self.params_tile_t::<T>(), transa, transb, alpha, a, b, beta, c);
                 KernelId::Avx2Tile
             }
             KernelId::Parallel => {
@@ -548,13 +776,21 @@ impl GemmDispatch {
                 // returned id names the kernel that actually ran. A pure
                 // beta-scale needs no vector ISA (the sweep touches no
                 // kernel); compute does.
-                let pure_scale = alpha == 0.0 || shape.k == 0;
+                let pure_scale = alpha == T::ZERO || shape.k == 0;
                 let split = parallel::split_axis(shape.m, shape.n, self.threads());
-                if split == parallel::Split::Serial || (!pure_scale && !self.have_sse) {
+                // No vector tier for this element (f64 on a non-AVX2
+                // host, any element without SSE): compute degrades to
+                // the serial ladder — parallel slices would otherwise
+                // run a different scalar kernel than the serial Blocked
+                // path and break the serial/parallel bit-identity
+                // contract. (select_t never picks Parallel here; this
+                // covers forced calls.) Pure beta-scales still sweep.
+                let no_vector = self.best_serial_vector_t::<T>() == KernelId::Blocked;
+                if split == parallel::Split::Serial || (!pure_scale && (!self.have_sse || no_vector)) {
                     return self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c);
                 }
                 match parallel::gemm_parallel_vec(
-                    &self.serial_vec_kernel(shape.m),
+                    &self.serial_vec_kernel_t::<T>(shape.m),
                     pool,
                     self.threads(),
                     transa,
@@ -572,53 +808,41 @@ impl GemmDispatch {
                 }
             }
             KernelId::Strassen => {
-                if !shape.no_trans() || alpha == 0.0 || shape.min_dim() == 0 {
+                if !shape.no_trans() || alpha == T::ZERO || shape.min_dim() == 0 {
                     return self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c);
                 }
-                self.run_strassen(alpha, a, b, beta, c);
-                KernelId::Strassen
+                let base = match self.best_serial_vector() {
+                    KernelId::Avx2Tile => Backend::Avx2Tile,
+                    KernelId::Avx2 => Backend::Avx2,
+                    KernelId::Simd => Backend::Simd,
+                    _ => Backend::Blocked,
+                };
+                // The element hook runs the recursion (f32) or reports
+                // "no Strassen tier" (f64 → serial vector ladder).
+                if T::strassen(self.cfg.strassen_cutoff, base, alpha, a, b, beta, c) {
+                    KernelId::Strassen
+                } else {
+                    self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c)
+                }
             }
         }
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn run_serial_vector(
+    fn run_serial_vector<T: Element>(
         &self,
         pool: Option<&ThreadPool>,
         shape: &GemmShape,
         transa: Transpose,
         transb: Transpose,
-        alpha: f32,
-        a: MatRef<'_>,
-        b: MatRef<'_>,
-        beta: f32,
-        c: &mut MatMut<'_>,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
     ) -> KernelId {
-        let id = self.select_serial(shape, alpha);
+        let id = self.select_serial_t::<T>(shape, alpha);
         self.run(pool, id, shape, transa, transb, alpha, a, b, beta, c)
-    }
-
-    /// Strassen path: materialise contiguous operands, recurse, then apply
-    /// `alpha`/`beta` (the recursion itself computes plain `A·B`).
-    fn run_strassen(&self, alpha: f32, a: MatRef<'_>, b: MatRef<'_>, beta: f32, c: &mut MatMut<'_>) {
-        let base = match self.best_serial_vector() {
-            KernelId::Avx2Tile => Backend::Avx2Tile,
-            KernelId::Avx2 => Backend::Avx2,
-            KernelId::Simd => Backend::Simd,
-            _ => Backend::Blocked,
-        };
-        // Copies are O(n²) against an O(n^2.8) multiply: noise at the
-        // sizes that reach this path.
-        let a_own = Matrix::from_fn(a.rows(), a.cols(), |r, col| a.get(r, col));
-        let b_own = Matrix::from_fn(b.rows(), b.cols(), |r, col| b.get(r, col));
-        let t = strassen::strassen_matmul(&a_own, &b_own, self.cfg.strassen_cutoff, base);
-        c.scale(beta);
-        for r in 0..c.rows() {
-            for col in 0..c.cols() {
-                let v = c.get(r, col) + alpha * t.get(r, col);
-                c.set(r, col, v);
-            }
-        }
     }
 }
 
@@ -633,7 +857,7 @@ impl Default for GemmDispatch {
 /// views must be rejected loudly here, not discovered as out-of-bounds
 /// reads inside a kernel. (`blas::sgemm` constructs coherent views by
 /// definition; this guards direct `GemmDispatch` callers.)
-fn assert_coherent(shape: &GemmShape, a: MatRef<'_>, b: MatRef<'_>) {
+fn assert_coherent<T: Element>(shape: &GemmShape, a: MatRef<'_, T>, b: MatRef<'_, T>) {
     if shape.m == 0 || shape.n == 0 {
         return;
     }
@@ -671,7 +895,7 @@ fn assert_coherent(shape: &GemmShape, a: MatRef<'_>, b: MatRef<'_>) {
     );
 }
 
-fn shape_of(transa: Transpose, transb: Transpose, a: MatRef<'_>, c: &MatMut<'_>) -> GemmShape {
+fn shape_of<T: Element>(transa: Transpose, transb: Transpose, a: MatRef<'_, T>, c: &MatMut<'_, T>) -> GemmShape {
     GemmShape {
         m: c.rows(),
         n: c.cols(),
@@ -722,14 +946,14 @@ pub fn install_tuned_tile(params: TileParams) -> Result<(), String> {
 /// One GEMM through the process-wide dispatcher (the implementation behind
 /// [`crate::blas::Backend::Dispatch`]). Returns the kernel that ran.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_auto(
+pub fn gemm_auto<T: Element>(
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) -> KernelId {
     with_global(|d| d.gemm(transa, transb, alpha, a, b, beta, c))
 }
@@ -740,6 +964,31 @@ pub fn install_tuned(id: KernelId, params: BlockParams) -> Result<bool, String> 
     super::plan::GemmContext::global().install_tuned(id, params)
 }
 
+/// Install element-keyed tuned block parameters into the process-wide
+/// dispatcher (the `--element f64` autotune feed).
+pub fn install_tuned_for(
+    element: ElementId,
+    id: KernelId,
+    params: BlockParams,
+) -> Result<bool, String> {
+    super::plan::GemmContext::global().install_tuned_for(element, id, params)
+}
+
+/// Install element-keyed tuned tile geometry into the process-wide
+/// dispatcher.
+pub fn install_tuned_tile_for(element: ElementId, params: TileParams) -> Result<(), String> {
+    super::plan::GemmContext::global().install_tuned_tile_for(element, params)
+}
+
+/// The tile geometry the process-wide dispatcher currently carries for
+/// one element.
+pub fn tuned_tile_params_for(element: ElementId) -> TileParams {
+    with_global(|d| match element {
+        ElementId::F32 => d.cfg.tile,
+        ElementId::F64 => d.cfg.tile_f64,
+    })
+}
+
 /// Clone the process-wide dispatcher (inspection / diagnostics).
 pub fn global_snapshot() -> GemmDispatch {
     super::plan::GemmContext::global().snapshot()
@@ -748,6 +997,7 @@ pub fn global_snapshot() -> GemmDispatch {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::blas::Matrix;
     use crate::gemm::testutil::{check_grid, check_one};
     use crate::util::testkit::assert_allclose;
 
@@ -1001,9 +1251,9 @@ mod tests {
         };
         let d = GemmDispatch::new(cfg);
         let run = |m: usize, n: usize, k: usize| {
-            let a = Matrix::random(m, k, 1, -1.0, 1.0);
-            let b = Matrix::random(k, n, 2, -1.0, 1.0);
-            let mut c = Matrix::zeros(m, n);
+            let a = Matrix::<f32>::random(m, k, 1, -1.0, 1.0);
+            let b = Matrix::<f32>::random(k, n, 2, -1.0, 1.0);
+            let mut c = Matrix::<f32>::zeros(m, n);
             let (ta, tb) = no_no();
             d.gemm(ta, tb, 1.0, a.view(), b.view(), 0.0, &mut c.view_mut())
         };

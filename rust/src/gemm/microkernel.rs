@@ -17,12 +17,20 @@
 //! are reduced horizontally and written back — one store per `kb`
 //! multiply-adds, which is the whole point.
 //!
-//! Three kernel families are provided:
+//! Four kernel families are provided:
 //!
-//! * [`sse_dot_panel_dyn`] — the paper's kernel (SSE, 4-wide).
-//! * [`avx2_dot_panel_dyn`] — the same structure on AVX2+FMA (8-wide).
+//! * [`sse_dot_panel_dyn`] — the paper's kernel (SSE, 4-wide f32).
+//! * [`avx2_dot_panel_dyn`] — the same structure on AVX2+FMA (8-wide
+//!   f32), with [`avx2_dot_panel_dyn_f64`] as the 4-wide f64 YMM
+//!   instantiation (the DGEMM dot tier).
 //! * [`scalar_dot_tile`] — a scalar register-tiled kernel used by the
-//!   ATLAS-proxy backend (ATLAS did not use SSE on the PIII).
+//!   ATLAS-proxy backend (ATLAS did not use SSE on the PIII); generic
+//!   over [`Element`].
+//! * [`comp_dot_avx2`] / [`comp_dot_scalar`] — compensated (two-term
+//!   Kahan/Dekker, a.k.a. Dot2) f32 dot products: every product's
+//!   rounding error is recovered exactly with an FMA and every
+//!   accumulation error with a TwoSum, giving f32 storage with roughly
+//!   f64 dot-product accuracy (see [`crate::gemm::comp`]).
 //!
 //! Plus [`sse_dot_panel_strided`], which reads `B` through its original
 //! strided layout — the "no re-buffering" ablation.
@@ -30,6 +38,7 @@
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
 
+use super::element::Element;
 use super::params::Unroll;
 
 /// Prefetch distance in elements (16 f32 = one 64-byte line; fetch four
@@ -417,18 +426,19 @@ pub unsafe fn avx2_dot_panel_dyn(
 /// proxy's kernel — same blocking discipline as Emmerald, no SIMD. Each
 /// accumulator is an independent serial FP chain, which (absent
 /// fast-math) the compiler cannot legally vectorise, faithfully modelling
-/// ATLAS's scalar code generation.
+/// ATLAS's scalar code generation. Generic over [`Element`] (the f64
+/// instantiation is the DGEMM ATLAS proxy).
 ///
 /// # Safety
-/// Every `arows[i]` and `bcols[j]` must be readable for `len` f32s.
-pub unsafe fn scalar_dot_tile<const MR: usize, const NR: usize>(
-    arows: [*const f32; MR],
+/// Every `arows[i]` and `bcols[j]` must be readable for `len` elements.
+pub unsafe fn scalar_dot_tile<T: Element, const MR: usize, const NR: usize>(
+    arows: [*const T; MR],
     len: usize,
-    bcols: [*const f32; NR],
-) -> [[f32; NR]; MR] {
-    let mut acc = [[0.0f32; NR]; MR];
+    bcols: [*const T; NR],
+) -> [[T; NR]; MR] {
+    let mut acc = [[T::ZERO; NR]; MR];
     for p in 0..len {
-        let mut av = [0.0f32; MR];
+        let mut av = [T::ZERO; MR];
         for i in 0..MR {
             av[i] = *arows[i].add(p);
         }
@@ -440,6 +450,313 @@ pub unsafe fn scalar_dot_tile<const MR: usize, const NR: usize>(
         }
     }
     acc
+}
+
+/// Scalar dot-panel fallback: one plain dot product per packed column —
+/// the panel kernel for hosts (or elements) without a vector ISA, and
+/// the SSE tier's f64 stand-in.
+///
+/// # Safety
+/// `a` and every pointer in `cols` must be readable for `len` elements;
+/// `out.len() >= cols.len()`.
+pub unsafe fn scalar_dot_panel<T: Element>(a: *const T, len: usize, cols: &[*const T], out: &mut [T]) {
+    for (j, &cp) in cols.iter().enumerate() {
+        let mut acc = T::ZERO;
+        for p in 0..len {
+            acc += *a.add(p) * *cp.add(p);
+        }
+        out[j] = acc;
+    }
+}
+
+/// Scalar strided-B fallback (the "no re-buffering" ablation without a
+/// vector ISA): each column is a `(ptr, stride)` stream.
+///
+/// # Safety
+/// `a` readable for `len` elements; each `cols[j].0` readable at offsets
+/// `p * cols[j].1` for `p < len`; `out.len() >= cols.len()`.
+pub unsafe fn scalar_dot_panel_strided<T: Element>(
+    a: *const T,
+    len: usize,
+    cols: &[(*const T, usize)],
+    out: &mut [T],
+) {
+    for (j, &(bp, stride)) in cols.iter().enumerate() {
+        let mut acc = T::ZERO;
+        for p in 0..len {
+            acc += *a.add(p) * *bp.add(p * stride);
+        }
+        out[j] = acc;
+    }
+}
+
+/// Horizontal sum of a 256-bit f64 vector.
+///
+/// # Safety
+/// Requires AVX.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+unsafe fn hsum256d(v: __m256d) -> f64 {
+    let lo = _mm256_castpd256_pd128(v);
+    let hi = _mm256_extractf128_pd::<1>(v);
+    let sum2 = _mm_add_pd(lo, hi);
+    let hi1 = _mm_unpackhi_pd(sum2, sum2);
+    _mm_cvtsd_f64(_mm_add_sd(sum2, hi1))
+}
+
+/// AVX2+FMA f64 micro-kernel over `R` rows of `A` at once — the 4-wide
+/// YMM twin of [`avx2_dot_panel_rows`]: same loop structure, same
+/// prefetch distance in cache lines (f64 elements are twice as wide, so
+/// half the element distance), 4-lane vectors and one fused multiply-add
+/// per lane-step.
+///
+/// # Safety
+/// Every `rows[i]` and every `cols[j]` readable for `len` f64s; AVX2 and
+/// FMA must be available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn avx2_dot_panel_rows_f64<const R: usize, const W: usize, const U: usize>(
+    rows: [*const f64; R],
+    len: usize,
+    cols: [*const f64; W],
+    prefetch: bool,
+) -> [[f64; W]; R] {
+    let mut acc = [[_mm256_setzero_pd(); W]; R];
+    let step = 4 * U;
+    let mut p = 0;
+    while p + step <= len {
+        if prefetch {
+            for r in rows {
+                // wrapping_add: the prefetch address can run past the
+                // row's allocation near its end, and ptr::add would make
+                // that UB even though the hint itself can never fault.
+                _mm_prefetch::<_MM_HINT_T0>(r.wrapping_add(p + PREFETCH_DIST / 2).cast());
+            }
+        }
+        for u in 0..U {
+            let off = p + 4 * u;
+            let mut va = [_mm256_setzero_pd(); R];
+            for (i, r) in rows.iter().enumerate() {
+                va[i] = _mm256_loadu_pd(r.add(off));
+            }
+            for (j, &col) in cols.iter().enumerate() {
+                let vb = _mm256_loadu_pd(col.add(off));
+                for i in 0..R {
+                    acc[i][j] = _mm256_fmadd_pd(va[i], vb, acc[i][j]);
+                }
+            }
+        }
+        p += step;
+    }
+    while p + 4 <= len {
+        let mut va = [_mm256_setzero_pd(); R];
+        for (i, r) in rows.iter().enumerate() {
+            va[i] = _mm256_loadu_pd(r.add(p));
+        }
+        for (j, &col) in cols.iter().enumerate() {
+            let vb = _mm256_loadu_pd(col.add(p));
+            for i in 0..R {
+                acc[i][j] = _mm256_fmadd_pd(va[i], vb, acc[i][j]);
+            }
+        }
+        p += 4;
+    }
+    let mut out = [[0.0f64; W]; R];
+    for i in 0..R {
+        for j in 0..W {
+            out[i][j] = hsum256d(acc[i][j]);
+        }
+    }
+    while p < len {
+        let mut av = [0.0f64; R];
+        for (i, r) in rows.iter().enumerate() {
+            av[i] = *r.add(p);
+        }
+        for (j, &col) in cols.iter().enumerate() {
+            let bv = *col.add(p);
+            for i in 0..R {
+                out[i][j] += av[i] * bv;
+            }
+        }
+        p += 1;
+    }
+    out
+}
+
+/// Runtime-width dispatcher over the single-row f64 AVX2 kernel.
+///
+/// # Safety
+/// `a` and every `cols[j]` readable for `len` f64s; `1 <= cols.len() <= 8`
+/// and `out.len() >= cols.len()`; AVX2+FMA must be available.
+#[cfg(target_arch = "x86_64")]
+pub unsafe fn avx2_dot_panel_dyn_f64(
+    a: *const f64,
+    len: usize,
+    cols: &[*const f64],
+    unroll: Unroll,
+    prefetch: bool,
+    out: &mut [f64],
+) {
+    macro_rules! go {
+        ($w:literal) => {{
+            let mut arr = [std::ptr::null::<f64>(); $w];
+            arr.copy_from_slice(&cols[..$w]);
+            let [r] = match unroll {
+                Unroll::X1 => avx2_dot_panel_rows_f64::<1, $w, 1>([a], len, arr, prefetch),
+                Unroll::X2 => avx2_dot_panel_rows_f64::<1, $w, 2>([a], len, arr, prefetch),
+                Unroll::X4 => avx2_dot_panel_rows_f64::<1, $w, 4>([a], len, arr, prefetch),
+            };
+            out[..$w].copy_from_slice(&r);
+        }};
+    }
+    match cols.len() {
+        1 => go!(1),
+        2 => go!(2),
+        3 => go!(3),
+        4 => go!(4),
+        5 => go!(5),
+        6 => go!(6),
+        7 => go!(7),
+        8 => go!(8),
+        w => unreachable!("panel width {w} out of range"),
+    }
+}
+
+/// Runtime-width dispatcher over the two-row f64 AVX2 kernel (the f64
+/// twin of [`avx2_dot_panel2_dyn`]; per-row FMA chains are independent,
+/// so each row's bits equal a single-row run — same dedup contract as
+/// the f32 kernel).
+///
+/// # Safety
+/// `a0`, `a1` and every `cols[j]` readable for `len` f64s;
+/// `1 <= cols.len() <= 8`, both outs at least `cols.len()` long;
+/// AVX2+FMA must be available.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn avx2_dot_panel2_dyn_f64(
+    a0: *const f64,
+    a1: *const f64,
+    len: usize,
+    cols: &[*const f64],
+    unroll: Unroll,
+    prefetch: bool,
+    out0: &mut [f64],
+    out1: &mut [f64],
+) {
+    macro_rules! go {
+        ($w:literal) => {{
+            let mut arr = [std::ptr::null::<f64>(); $w];
+            arr.copy_from_slice(&cols[..$w]);
+            let r = match unroll {
+                Unroll::X1 => avx2_dot_panel_rows_f64::<2, $w, 1>([a0, a1], len, arr, prefetch),
+                Unroll::X2 => avx2_dot_panel_rows_f64::<2, $w, 2>([a0, a1], len, arr, prefetch),
+                Unroll::X4 => avx2_dot_panel_rows_f64::<2, $w, 4>([a0, a1], len, arr, prefetch),
+            };
+            out0[..$w].copy_from_slice(&r[0]);
+            out1[..$w].copy_from_slice(&r[1]);
+        }};
+    }
+    match cols.len() {
+        1 => go!(1),
+        2 => go!(2),
+        3 => go!(3),
+        4 => go!(4),
+        5 => go!(5),
+        6 => go!(6),
+        7 => go!(7),
+        8 => go!(8),
+        w => unreachable!("panel width {w} out of range"),
+    }
+}
+
+/// Compensated (Dot2 / Ogita–Rump–Oishi) scalar f32 dot product.
+///
+/// Per step the product's rounding error is recovered *exactly* with an
+/// FMA (Dekker's TwoProduct: `e = fma(x, y, -x·y)`), and the
+/// accumulation's rounding error exactly with Knuth's branchless TwoSum;
+/// both error terms feed a second (Kahan-style) accumulator folded in at
+/// the end. The result carries roughly twice the working precision — in
+/// practice indistinguishable from an f64 dot product rounded to f32.
+///
+/// # Safety
+/// `a` and `b` must be readable for `len` f32s.
+pub unsafe fn comp_dot_scalar(a: *const f32, b: *const f32, len: usize) -> f32 {
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    for p in 0..len {
+        let x = *a.add(p);
+        let y = *b.add(p);
+        let prod = x * y;
+        let perr = x.mul_add(y, -prod);
+        // Knuth TwoSum (branchless, exact for any magnitudes).
+        let t = s + prod;
+        let z = t - s;
+        let serr = (s - (t - z)) + (prod - z);
+        s = t;
+        c += perr + serr;
+    }
+    s + c
+}
+
+/// Compensated (Dot2) f32 dot product, vectorised: eight independent
+/// per-lane (sum, compensation) pairs run the same TwoProduct/TwoSum
+/// step as [`comp_dot_scalar`], then the lane sums are reduced with a
+/// scalar compensated pass and the lane compensations folded in.
+///
+/// # Safety
+/// `a` and `b` must be readable for `len` f32s; AVX2 and FMA must be
+/// available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn comp_dot_avx2(a: *const f32, b: *const f32, len: usize) -> f32 {
+    let mut vs = _mm256_setzero_ps();
+    let mut vc = _mm256_setzero_ps();
+    let mut p = 0;
+    while p + 8 <= len {
+        let va = _mm256_loadu_ps(a.add(p));
+        let vb = _mm256_loadu_ps(b.add(p));
+        let prod = _mm256_mul_ps(va, vb);
+        // TwoProduct: exact error of va*vb via fused multiply-subtract.
+        let perr = _mm256_fmsub_ps(va, vb, prod);
+        // Knuth TwoSum, branchless.
+        let t = _mm256_add_ps(vs, prod);
+        let z = _mm256_sub_ps(t, vs);
+        let serr = _mm256_add_ps(
+            _mm256_sub_ps(vs, _mm256_sub_ps(t, z)),
+            _mm256_sub_ps(prod, z),
+        );
+        vs = t;
+        vc = _mm256_add_ps(vc, _mm256_add_ps(perr, serr));
+        p += 8;
+    }
+    let mut lane_s = [0.0f32; 8];
+    let mut lane_c = [0.0f32; 8];
+    _mm256_storeu_ps(lane_s.as_mut_ptr(), vs);
+    _mm256_storeu_ps(lane_c.as_mut_ptr(), vc);
+    // Compensated horizontal reduction of the lane sums.
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    for i in 0..8 {
+        let t = s + lane_s[i];
+        let z = t - s;
+        c += (s - (t - z)) + (lane_s[i] - z);
+        s = t;
+        c += lane_c[i];
+    }
+    // Scalar tail, same per-element step as comp_dot_scalar.
+    while p < len {
+        let x = *a.add(p);
+        let y = *b.add(p);
+        let prod = x * y;
+        let perr = x.mul_add(y, -prod);
+        let t = s + prod;
+        let z = t - s;
+        let serr = (s - (t - z)) + (prod - z);
+        s = t;
+        c += perr + serr;
+        p += 1;
+    }
+    s + c
 }
 
 #[cfg(test)]
@@ -558,7 +875,7 @@ mod tests {
         let b0 = rand_vec(7, len);
         let b1 = rand_vec(8, len);
         let acc = unsafe {
-            scalar_dot_tile::<2, 2>([a0.as_ptr(), a1.as_ptr()], len, [b0.as_ptr(), b1.as_ptr()])
+            scalar_dot_tile::<f32, 2, 2>([a0.as_ptr(), a1.as_ptr()], len, [b0.as_ptr(), b1.as_ptr()])
         };
         assert!((acc[0][0] - ref_dot(&a0, &b0)).abs() < 1e-4);
         assert!((acc[0][1] - ref_dot(&a0, &b1)).abs() < 1e-4);
@@ -568,8 +885,127 @@ mod tests {
 
     #[test]
     fn scalar_tile_len_zero() {
-        let acc = unsafe { scalar_dot_tile::<1, 1>([std::ptr::NonNull::dangling().as_ptr()], 0, [std::ptr::NonNull::dangling().as_ptr()]) };
+        let acc = unsafe { scalar_dot_tile::<f32, 1, 1>([std::ptr::NonNull::dangling().as_ptr()], 0, [std::ptr::NonNull::dangling().as_ptr()]) };
         assert_eq!(acc[0][0], 0.0);
+    }
+
+    fn rand_vec_f64(seed: u64, len: usize) -> Vec<f64> {
+        let mut rng = Pcg32::new(seed);
+        (0..len).map(|_| rng.f64() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn scalar_tile_f64_matches_reference() {
+        let len = 53;
+        let a0 = rand_vec_f64(15, len);
+        let b0 = rand_vec_f64(16, len);
+        let acc = unsafe { scalar_dot_tile::<f64, 1, 1>([a0.as_ptr()], len, [b0.as_ptr()]) };
+        let want: f64 = a0.iter().zip(&b0).map(|(x, y)| x * y).sum();
+        assert!((acc[0][0] - want).abs() < 1e-12);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_f64_matches_reference_all_widths() {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            eprintln!("skipping: no AVX2+FMA");
+            return;
+        }
+        for &len in &[1usize, 3, 4, 5, 15, 16, 17, 100, 336] {
+            let a = rand_vec_f64(2, len);
+            let bs: Vec<Vec<f64>> = (0..8).map(|j| rand_vec_f64(200 + j, len)).collect();
+            for w in 1..=8usize {
+                let cols: Vec<*const f64> = bs[..w].iter().map(|b| b.as_ptr()).collect();
+                for unroll in [Unroll::X1, Unroll::X2, Unroll::X4] {
+                    let mut out = vec![0.0f64; w];
+                    unsafe {
+                        avx2_dot_panel_dyn_f64(a.as_ptr(), len, &cols, unroll, true, &mut out)
+                    };
+                    for j in 0..w {
+                        let want: f64 = a.iter().zip(&bs[j]).map(|(x, y)| x * y).sum();
+                        assert!(
+                            (out[j] - want).abs() < 1e-10 * (1.0 + want.abs()),
+                            "f64 w={w} len={len} j={j}: {} vs {want}",
+                            out[j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_f64_two_row_kernel_agrees_with_two_single_row_calls() {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            eprintln!("skipping: no AVX2+FMA");
+            return;
+        }
+        for &len in &[5usize, 4, 33, 100] {
+            let a0 = rand_vec_f64(11, len);
+            let a1 = rand_vec_f64(12, len);
+            let bs: Vec<Vec<f64>> = (0..6).map(|j| rand_vec_f64(300 + j, len)).collect();
+            let cols: Vec<*const f64> = bs.iter().map(|b| b.as_ptr()).collect();
+            let mut out0 = vec![0.0f64; 6];
+            let mut out1 = vec![0.0f64; 6];
+            let mut one0 = vec![0.0f64; 6];
+            let mut one1 = vec![0.0f64; 6];
+            unsafe {
+                avx2_dot_panel2_dyn_f64(a0.as_ptr(), a1.as_ptr(), len, &cols, Unroll::X2, true, &mut out0, &mut out1);
+                avx2_dot_panel_dyn_f64(a0.as_ptr(), len, &cols, Unroll::X2, true, &mut one0);
+                avx2_dot_panel_dyn_f64(a1.as_ptr(), len, &cols, Unroll::X2, true, &mut one1);
+            }
+            assert_eq!(out0, one0, "row 0 len={len}");
+            assert_eq!(out1, one1, "row 1 len={len}");
+        }
+    }
+
+    #[test]
+    fn compensated_dot_beats_plain_on_cancellation() {
+        // Ill-conditioned summands: large alternating terms whose sum
+        // cancels to a small residual. Dot2 must be at least as accurate
+        // as the plain f32 dot (and in practice match the f64 result).
+        let len = 4096usize;
+        let mut rng = Pcg32::new(99);
+        let mut a = vec![0.0f32; len];
+        let mut b = vec![0.0f32; len];
+        for i in 0..len {
+            let big = if i % 2 == 0 { 1.0e4 } else { -1.0e4 };
+            a[i] = big + rng.f32_range(-1.0, 1.0);
+            b[i] = 1.0 + rng.f32_range(-1.0e-3, 1.0e-3);
+        }
+        let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let plain: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let comp = unsafe { comp_dot_scalar(a.as_ptr(), b.as_ptr(), len) };
+        let err_plain = (plain as f64 - exact).abs();
+        let err_comp = (comp as f64 - exact).abs();
+        assert!(err_comp <= err_plain, "comp {err_comp:e} vs plain {err_plain:e}");
+        // And the compensated result is within one f32 ulp-ish of exact.
+        assert!(err_comp <= 1e-3 * exact.abs().max(1.0), "comp err {err_comp:e}");
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn compensated_avx2_matches_scalar_accuracy() {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            eprintln!("skipping: no AVX2+FMA");
+            return;
+        }
+        for &len in &[1usize, 7, 8, 9, 64, 333, 1000] {
+            let a = rand_vec(5, len);
+            let b = rand_vec(6, len);
+            let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let s = unsafe { comp_dot_scalar(a.as_ptr(), b.as_ptr(), len) };
+            let v = unsafe { comp_dot_avx2(a.as_ptr(), b.as_ptr(), len) };
+            assert!((s as f64 - exact).abs() <= 1e-5 * (1.0 + exact.abs()), "scalar len={len}");
+            assert!((v as f64 - exact).abs() <= 1e-5 * (1.0 + exact.abs()), "avx2 len={len}");
+        }
     }
 
     #[cfg(target_arch = "x86_64")]

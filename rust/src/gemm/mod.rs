@@ -25,8 +25,20 @@
 //! paper-faithful baseline, the gemv-shaped fallback and the
 //! `tile_vs_dot` ablation point.
 //!
+//! Since the element-generic precision subsystem the whole ladder is
+//! generic over [`element::Element`] — **f32 (SGEMM) and f64 (DGEMM)** —
+//! with `f32` as the default type parameter everywhere. Per element only
+//! the micro-kernel instantiation changes (8- vs 4-wide YMM lanes, 6×16
+//! vs 6×8 tiles); blocking, packing, planning, batching and the parallel
+//! split are shared generic code, and dispatch keeps per-element kernel
+//! tables and tuned geometries. A compensated-f32 accumulation mode
+//! ([`comp`], selected via [`dispatch::Accumulation::CompensatedF32`])
+//! gives f32 storage with ~f64 dot-product accuracy.
+//!
 //! Modules:
 //!
+//! * [`element`] — the sealed element trait (f32, f64): lane widths,
+//!   packing granularity and the per-element kernel hooks.
 //! * [`params`] — block geometry + optimisation toggles (every §3 technique
 //!   can be switched off individually for the ablation benches).
 //! * [`naive`] — the paper's naive 3-loop comparator.
@@ -53,7 +65,9 @@
 pub mod avx2;
 pub mod batch;
 pub mod blocked;
+pub mod comp;
 pub mod dispatch;
+pub mod element;
 pub mod parallel;
 pub mod plan;
 pub mod strassen;
@@ -65,7 +79,8 @@ pub mod simd;
 pub mod tile;
 
 pub use batch::{gemm_batch, BatchStrides};
-pub use dispatch::{registry, DispatchConfig, GemmDispatch, KernelId, KernelInfo};
+pub use dispatch::{registry, registry_for, Accumulation, DispatchConfig, GemmDispatch, KernelId, KernelInfo};
+pub use element::{Element, ElementId};
 pub use params::{BlockParams, TileParams, Unroll};
 pub use plan::{GemmBuilder, GemmContext, GemmPlan, PackedA, PackedB};
 
@@ -107,6 +122,71 @@ pub(crate) mod testutil {
 
         let label = format!("{what} m={m} n={n} k={k} ta={transa:?} tb={transb:?} α={alpha} β={beta}");
         assert_allclose(c_got.data(), c_ref.data(), 2e-4, 1e-5, &label);
+    }
+
+    /// Type of a full f64 GEMM implementation under test.
+    pub type GemmFn64 =
+        dyn Fn(Transpose, Transpose, f64, MatRef<'_, f64>, MatRef<'_, f64>, f64, &mut MatMut<'_, f64>);
+
+    /// Check `imp` against the f64 naive oracle for one configuration.
+    #[allow(clippy::too_many_arguments)]
+    pub fn check_one_f64(
+        imp: &GemmFn64,
+        what: &str,
+        transa: Transpose,
+        transb: Transpose,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        beta: f64,
+        seed: u64,
+    ) {
+        let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+        let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+        let a = Matrix::<f64>::random_strided(ar, ac.max(1), ac.max(1) + 3, seed);
+        let b = Matrix::<f64>::random_strided(br, bc.max(1), bc.max(1) + 1, seed ^ 0xABCD);
+        let mut c_ref = Matrix::<f64>::random_strided(m, n.max(1), n.max(1) + 2, seed ^ 0x1234);
+        let mut c_got = c_ref.clone();
+
+        super::naive::gemm(transa, transb, alpha, a.view(), b.view(), beta, &mut c_ref.view_mut());
+        imp(transa, transb, alpha, a.view(), b.view(), beta, &mut c_got.view_mut());
+
+        let label = format!("{what} m={m} n={n} k={k} ta={transa:?} tb={transb:?} α={alpha} β={beta}");
+        crate::util::testkit::assert_allclose_f64(c_got.data(), c_ref.data(), 1e-12, 1e-13, &label);
+    }
+
+    /// The f64 twin of [`check_grid`] — same shapes, the f64 oracle.
+    pub fn check_grid_f64(imp: &GemmFn64, what: &str) {
+        let shapes = [
+            (1, 1, 1),
+            (1, 5, 4),
+            (2, 3, 1),
+            (4, 5, 8),
+            (5, 5, 5),
+            (7, 11, 13),
+            (8, 8, 8),
+            (16, 16, 16),
+            (17, 19, 23),
+            (32, 32, 32),
+            (33, 17, 65),
+            (64, 64, 64),
+            (1, 64, 64),
+            (64, 1, 64),
+            (64, 64, 1),
+        ];
+        for (ta, tb) in [
+            (Transpose::No, Transpose::No),
+            (Transpose::Yes, Transpose::No),
+            (Transpose::No, Transpose::Yes),
+            (Transpose::Yes, Transpose::Yes),
+        ] {
+            for &(m, n, k) in &shapes {
+                for &(alpha, beta) in &[(1.0, 0.0), (0.5, 1.5), (0.0, 0.5)] {
+                    check_one_f64(imp, what, ta, tb, m, n, k, alpha, beta, 0xD6E * (m + n + k) as u64);
+                }
+            }
+        }
     }
 
     /// Standard grid used by each backend's test module.

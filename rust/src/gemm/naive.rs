@@ -2,20 +2,23 @@
 //!
 //! This is both the lower baseline of Fig. 2 and the in-crate correctness
 //! oracle every other backend is tested against. It is deliberately
-//! straightforward; the accumulation is done in `f32` like the optimised
-//! kernels so results are bit-comparable in tolerance terms.
+//! straightforward; the accumulation is done in the working element
+//! precision like the optimised kernels so results are bit-comparable in
+//! tolerance terms. Generic over [`Element`]: the `f64` instantiation is
+//! the DGEMM oracle the double-precision conformance grid runs against.
 
+use super::element::Element;
 use crate::blas::{MatMut, MatRef, Transpose};
 
 /// `C = alpha * op(A) op(B) + beta * C`, three-loop version.
-pub fn gemm(
+pub fn gemm<T: Element>(
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) {
     let m = c.rows();
     let n = c.cols();
@@ -24,12 +27,12 @@ pub fn gemm(
         Transpose::Yes => a.rows(),
     };
     c.scale(beta);
-    if alpha == 0.0 || k == 0 {
+    if alpha == T::ZERO || k == 0 {
         return;
     }
     for i in 0..m {
         for j in 0..n {
-            let mut acc = 0.0f32;
+            let mut acc = T::ZERO;
             for p in 0..k {
                 // SAFETY: i < m, j < n, p < k by loop bounds; view shapes
                 // were validated at construction.
@@ -60,7 +63,7 @@ mod tests {
 
     #[test]
     fn identity_times_x_is_x() {
-        let eye = Matrix::from_fn(4, 4, |r, c| if r == c { 1.0 } else { 0.0 });
+        let eye = Matrix::<f32>::from_fn(4, 4, |r, c| if r == c { 1.0 } else { 0.0 });
         let x = Matrix::random(4, 4, 3, -1.0, 1.0);
         let mut c = Matrix::zeros(4, 4);
         gemm(Transpose::No, Transpose::No, 1.0, eye.view(), x.view(), 0.0, &mut c.view_mut());
@@ -79,9 +82,9 @@ mod tests {
 
     #[test]
     fn alpha_beta_combine() {
-        let a = Matrix::from_fn(2, 2, |_, _| 1.0);
-        let b = Matrix::from_fn(2, 2, |_, _| 1.0);
-        let mut c = Matrix::from_fn(2, 2, |_, _| 10.0);
+        let a = Matrix::<f32>::from_fn(2, 2, |_, _| 1.0);
+        let b = Matrix::<f32>::from_fn(2, 2, |_, _| 1.0);
+        let mut c = Matrix::<f32>::from_fn(2, 2, |_, _| 10.0);
         // C = 3 * (A*B) + 0.5 * C = 3*2 + 5 = 11
         gemm(Transpose::No, Transpose::No, 3.0, a.view(), b.view(), 0.5, &mut c.view_mut());
         assert!(c.data().iter().all(|&x| (x - 11.0).abs() < 1e-6));
@@ -90,8 +93,8 @@ mod tests {
     #[test]
     fn transpose_equals_materialised_transpose() {
         // C(5,4) = Aᵀ(5,3) · Bᵀ(3,4) with A stored 3×5 and B stored 4×3.
-        let a = Matrix::random(3, 5, 1, -1.0, 1.0);
-        let b = Matrix::random(4, 3, 2, -1.0, 1.0);
+        let a = Matrix::<f32>::random(3, 5, 1, -1.0, 1.0);
+        let b = Matrix::<f32>::random(4, 3, 2, -1.0, 1.0);
         let mut c1 = Matrix::zeros(5, 4);
         gemm(Transpose::Yes, Transpose::Yes, 1.0, a.view(), b.view(), 0.0, &mut c1.view_mut());
         let at = a.transposed();

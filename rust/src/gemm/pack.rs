@@ -14,6 +14,7 @@
 //! necessary when `A` is logically transposed (its rows are then strided
 //! in memory) and is exposed as an ablation toggle otherwise.
 
+use super::element::Element;
 use crate::blas::{MatRef, Transpose};
 
 /// Columns are padded to a multiple of this many f32 lanes so both the
@@ -32,15 +33,15 @@ pub fn kpad_for(k: usize) -> usize {
 /// (logical column `p*nr + j`) occupies `kpad` consecutive floats, the
 /// first `kb_eff` holding data and the rest zeros.
 #[derive(Debug)]
-pub struct PackedB {
-    buf: Vec<f32>,
+pub struct PackedB<T = f32> {
+    buf: Vec<T>,
     nr: usize,
     kpad: usize,
     kb_eff: usize,
     n: usize,
 }
 
-impl PackedB {
+impl<T: Element> PackedB<T> {
     /// An empty packed buffer for panels of `nr` columns.
     pub fn new(nr: usize) -> Self {
         assert!((1..=8).contains(&nr));
@@ -65,12 +66,12 @@ impl PackedB {
     ///
     /// `b` is the *stored* matrix; `transb` says whether `op(B) = B` or
     /// `Bᵀ`. The buffer is reused across calls (no allocation once warm).
-    pub fn pack(&mut self, b: MatRef<'_>, transb: Transpose, kk: usize, kb_eff: usize, n: usize) {
+    pub fn pack(&mut self, b: MatRef<'_, T>, transb: Transpose, kk: usize, kb_eff: usize, n: usize) {
         let kpad = kpad_for(kb_eff);
         let panels = n.div_ceil(self.nr).max(1);
         let need = panels * self.nr * kpad;
         self.buf.clear();
-        self.buf.resize(need, 0.0);
+        self.buf.resize(need, T::ZERO);
         self.kpad = kpad;
         self.kb_eff = kb_eff;
         self.n = n;
@@ -111,7 +112,7 @@ impl PackedB {
 
     /// Pointer to the packed column `j` (0-based within panel `p`).
     #[inline(always)]
-    pub fn col_ptr(&self, p: usize, j: usize) -> *const f32 {
+    pub fn col_ptr(&self, p: usize, j: usize) -> *const T {
         debug_assert!(j < self.panel_width(p));
         unsafe { self.buf.as_ptr().add((p * self.nr + j) * self.kpad) }
     }
@@ -128,19 +129,19 @@ impl PackedB {
 
     /// Bytes currently held (diagnostic; the L1-residency argument).
     pub fn bytes(&self) -> usize {
-        self.buf.len() * std::mem::size_of::<f32>()
+        self.buf.len() * std::mem::size_of::<T>()
     }
 }
 
 /// A row block of `op(A)` packed row-major with zero-padded rows.
 #[derive(Debug)]
-pub struct PackedA {
-    buf: Vec<f32>,
+pub struct PackedA<T = f32> {
+    buf: Vec<T>,
     kpad: usize,
     rows: usize,
 }
 
-impl PackedA {
+impl<T: Element> PackedA<T> {
     /// An empty packed buffer.
     pub fn new() -> Self {
         Self { buf: Vec::new(), kpad: 0, rows: 0 }
@@ -149,7 +150,7 @@ impl PackedA {
     /// Pack the `mb_eff × kb_eff` block of `op(A)` at `(ii, kk)`.
     pub fn pack(
         &mut self,
-        a: MatRef<'_>,
+        a: MatRef<'_, T>,
         transa: Transpose,
         ii: usize,
         mb_eff: usize,
@@ -158,7 +159,7 @@ impl PackedA {
     ) {
         let kpad = kpad_for(kb_eff);
         self.buf.clear();
-        self.buf.resize(mb_eff.max(1) * kpad, 0.0);
+        self.buf.resize(mb_eff.max(1) * kpad, T::ZERO);
         self.kpad = kpad;
         self.rows = mb_eff;
         for i in 0..mb_eff {
@@ -181,7 +182,7 @@ impl PackedA {
 
     /// Pointer to packed row `i` (length `kpad`, zero-padded tail).
     #[inline(always)]
-    pub fn row_ptr(&self, i: usize) -> *const f32 {
+    pub fn row_ptr(&self, i: usize) -> *const T {
         debug_assert!(i < self.rows);
         unsafe { self.buf.as_ptr().add(i * self.kpad) }
     }
@@ -192,7 +193,7 @@ impl PackedA {
     }
 }
 
-impl Default for PackedA {
+impl<T: Element> Default for PackedA<T> {
     fn default() -> Self {
         Self::new()
     }
@@ -208,14 +209,14 @@ impl Default for PackedA {
 /// the block's edge are zero-filled so fringe strips run the full-MR
 /// kernel (the padded lanes are masked out at writeback).
 #[derive(Debug)]
-pub struct TilePackedA {
-    buf: Vec<f32>,
+pub struct TilePackedA<T = f32> {
+    buf: Vec<T>,
     mr: usize,
     kc_eff: usize,
     rows: usize,
 }
 
-impl TilePackedA {
+impl<T: Element> TilePackedA<T> {
     /// An empty packed buffer.
     pub fn new() -> Self {
         Self { buf: Vec::new(), mr: 1, kc_eff: 0, rows: 0 }
@@ -226,7 +227,7 @@ impl TilePackedA {
     #[allow(clippy::too_many_arguments)]
     pub fn pack(
         &mut self,
-        a: MatRef<'_>,
+        a: MatRef<'_, T>,
         transa: Transpose,
         ii: usize,
         mb_eff: usize,
@@ -237,7 +238,7 @@ impl TilePackedA {
         assert!(mr >= 1);
         let strips = mb_eff.div_ceil(mr).max(1);
         self.buf.clear();
-        self.buf.resize(strips * mr * kb_eff.max(1), 0.0);
+        self.buf.resize(strips * mr * kb_eff.max(1), T::ZERO);
         self.mr = mr;
         self.kc_eff = kb_eff;
         self.rows = mb_eff;
@@ -270,9 +271,9 @@ impl TilePackedA {
         self.mr.min(self.rows - s * self.mr)
     }
 
-    /// Pointer to packed strip `s` (`mr * kc_eff` floats, k-major).
+    /// Pointer to packed strip `s` (`mr * kc_eff` elements, k-major).
     #[inline(always)]
-    pub fn strip_ptr(&self, s: usize) -> *const f32 {
+    pub fn strip_ptr(&self, s: usize) -> *const T {
         debug_assert!(s < self.strips());
         unsafe { self.buf.as_ptr().add(s * self.mr * self.kc_eff) }
     }
@@ -284,11 +285,11 @@ impl TilePackedA {
 
     /// Bytes currently held (diagnostic).
     pub fn bytes(&self) -> usize {
-        self.buf.len() * std::mem::size_of::<f32>()
+        self.buf.len() * std::mem::size_of::<T>()
     }
 }
 
-impl Default for TilePackedA {
+impl<T: Element> Default for TilePackedA<T> {
     fn default() -> Self {
         Self::new()
     }
@@ -304,14 +305,14 @@ impl Default for TilePackedA {
 /// panel's `nr` consecutive values as two full vectors. Columns past the
 /// block's edge are zero-filled (masked out at writeback).
 #[derive(Debug)]
-pub struct TilePackedB {
-    buf: Vec<f32>,
+pub struct TilePackedB<T = f32> {
+    buf: Vec<T>,
     nr: usize,
     kc_eff: usize,
     cols: usize,
 }
 
-impl TilePackedB {
+impl<T: Element> TilePackedB<T> {
     /// An empty packed buffer.
     pub fn new() -> Self {
         Self { buf: Vec::new(), nr: 1, kc_eff: 0, cols: 0 }
@@ -322,7 +323,7 @@ impl TilePackedB {
     #[allow(clippy::too_many_arguments)]
     pub fn pack(
         &mut self,
-        b: MatRef<'_>,
+        b: MatRef<'_, T>,
         transb: Transpose,
         kk: usize,
         kb_eff: usize,
@@ -333,7 +334,7 @@ impl TilePackedB {
         assert!(nr >= 1);
         let panels = nb_eff.div_ceil(nr).max(1);
         self.buf.clear();
-        self.buf.resize(panels * nr * kb_eff.max(1), 0.0);
+        self.buf.resize(panels * nr * kb_eff.max(1), T::ZERO);
         self.nr = nr;
         self.kc_eff = kb_eff;
         self.cols = nb_eff;
@@ -365,9 +366,9 @@ impl TilePackedB {
         self.nr.min(self.cols - q * self.nr)
     }
 
-    /// Pointer to packed panel `q` (`nr * kc_eff` floats, k-major).
+    /// Pointer to packed panel `q` (`nr * kc_eff` elements, k-major).
     #[inline(always)]
-    pub fn panel_ptr(&self, q: usize) -> *const f32 {
+    pub fn panel_ptr(&self, q: usize) -> *const T {
         debug_assert!(q < self.panels());
         unsafe { self.buf.as_ptr().add(q * self.nr * self.kc_eff) }
     }
@@ -379,11 +380,11 @@ impl TilePackedB {
 
     /// Bytes currently held (diagnostic).
     pub fn bytes(&self) -> usize {
-        self.buf.len() * std::mem::size_of::<f32>()
+        self.buf.len() * std::mem::size_of::<T>()
     }
 }
 
-impl Default for TilePackedB {
+impl<T: Element> Default for TilePackedB<T> {
     fn default() -> Self {
         Self::new()
     }
@@ -396,23 +397,23 @@ impl Default for TilePackedB {
 /// packing buffers are allocated once and reused across every GEMM in the
 /// batch — the paper's re-buffering cost amortised over the whole batch.
 #[derive(Debug)]
-pub struct Scratch {
-    pub(crate) a: PackedA,
-    pub(crate) b: PackedB,
+pub struct Scratch<T = f32> {
+    pub(crate) a: PackedA<T>,
+    pub(crate) b: PackedB<T>,
     /// Tile-layout buffers for the outer-product tier (empty until the
     /// tile driver first runs through this scratch).
-    pub(crate) ta: TilePackedA,
-    pub(crate) tb: TilePackedB,
+    pub(crate) ta: TilePackedA<T>,
+    pub(crate) tb: TilePackedB<T>,
 }
 
-impl Scratch {
+impl<T: Element> Scratch<T> {
     /// Fresh, empty scratch buffers.
     pub fn new() -> Self {
         Self { a: PackedA::new(), b: PackedB::new(1), ta: TilePackedA::new(), tb: TilePackedB::new() }
     }
 }
 
-impl Default for Scratch {
+impl<T: Element> Default for Scratch<T> {
     fn default() -> Self {
         Self::new()
     }
@@ -571,7 +572,7 @@ mod tests {
     fn strided_source_roundtrips_logical_values_only() {
         // Source stride wider than the logical width: the pack must read
         // the logical elements and never the -77 padding sentinels.
-        let b = Matrix::random_strided(9, 4, 9, 0xFACE);
+        let b = Matrix::<f32>::random_strided(9, 4, 9, 0xFACE);
         let mut pb = PackedB::new(3);
         pb.pack(b.view(), Transpose::No, 2, 6, 4);
         for j in 0..4 {
@@ -683,7 +684,7 @@ mod tests {
     fn paper_panel_footprint() {
         // The paper's B' (336 × 5 f32) must land at ≈6.7 KB — the L1
         // residency argument of fig. 1(b).
-        let b = Matrix::zeros(336, 5);
+        let b = Matrix::<f32>::zeros(336, 5);
         let mut pb = PackedB::new(5);
         pb.pack(b.view(), Transpose::No, 0, 336, 5);
         assert_eq!(pb.bytes(), 336 * 5 * 4);

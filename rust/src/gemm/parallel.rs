@@ -33,39 +33,47 @@
 //! (`alpha == 0` or `k == 0`) sweep `C` over the same pool.
 
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
+use crate::gemm::element::Element;
 use crate::gemm::params::TileParams;
 use crate::gemm::simd::{gemm_vec, VecIsa};
 use crate::gemm::{tile, BlockParams};
 use crate::util::threadpool::{run_borrowed_on, ThreadPool};
 
 /// The serial kernel (with its frozen geometry) each parallel slice runs:
-/// a dot-panel Emmerald driver or the outer-product tile driver.
+/// a dot-panel Emmerald driver, the outer-product tile driver, or the
+/// compensated-f32 accumulation driver.
 /// [`crate::gemm::dispatch::GemmDispatch::serial_vec_kernel`] is the one
-/// place that decides which; slices only execute it.
+/// place that decides which; slices only execute it. The variants carry
+/// plain geometry (no element type): the same value drives any
+/// [`Element`] through [`run`](Self::run).
 #[derive(Clone, Copy, Debug)]
 pub(crate) enum SerialVecKernel {
     /// The paper's dot-product drivers (SSE or AVX2).
     Dot(VecIsa, BlockParams),
     /// The outer-product register-tiled tier.
     Tile(TileParams),
+    /// The compensated-accumulation driver (two-term Kahan/Dekker; f32's
+    /// [`Element::comp_gemm`] — f64 slices run the standard dot driver).
+    Comp(BlockParams),
 }
 
 impl SerialVecKernel {
     /// Run one slice through the kernel's serial driver.
     #[allow(clippy::too_many_arguments)]
-    pub(crate) fn run(
+    pub(crate) fn run<T: Element>(
         &self,
         transa: Transpose,
         transb: Transpose,
-        alpha: f32,
-        a: MatRef<'_>,
-        b: MatRef<'_>,
-        beta: f32,
-        c: &mut MatMut<'_>,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
     ) {
         match self {
             SerialVecKernel::Dot(isa, p) => gemm_vec(*isa, p, transa, transb, alpha, a, b, beta, c),
             SerialVecKernel::Tile(p) => tile::gemm(p, transa, transb, alpha, a, b, beta, c),
+            SerialVecKernel::Comp(p) => T::comp_gemm(p, transa, transb, alpha, a, b, beta, c),
         }
     }
 
@@ -75,7 +83,7 @@ impl SerialVecKernel {
     /// fringe writeback rounds identically — this is a locality choice.)
     fn row_align(&self) -> usize {
         match self {
-            SerialVecKernel::Dot(..) => 1,
+            SerialVecKernel::Dot(..) | SerialVecKernel::Comp(..) => 1,
             SerialVecKernel::Tile(p) => p.mr,
         }
     }
@@ -84,7 +92,7 @@ impl SerialVecKernel {
     /// [`row_align`](Self::row_align)).
     fn col_align(&self) -> usize {
         match self {
-            SerialVecKernel::Dot(..) => 1,
+            SerialVecKernel::Dot(..) | SerialVecKernel::Comp(..) => 1,
             SerialVecKernel::Tile(p) => p.nr,
         }
     }
@@ -142,7 +150,7 @@ pub(crate) fn chunk_spans(len: usize, slices: usize, align: usize) -> Vec<(usize
 
 /// Split `C` into up to `slices` disjoint row slices (starts aligned to
 /// `align`), each paired with its start row.
-pub(crate) fn c_row_slices(c: MatMut<'_>, slices: usize, align: usize) -> Vec<(usize, MatMut<'_>)> {
+pub(crate) fn c_row_slices<T: Element>(c: MatMut<'_, T>, slices: usize, align: usize) -> Vec<(usize, MatMut<'_, T>)> {
     let m = c.rows();
     let mut out = Vec::new();
     let mut rest = c;
@@ -156,7 +164,7 @@ pub(crate) fn c_row_slices(c: MatMut<'_>, slices: usize, align: usize) -> Vec<(u
 
 /// Split `C` into up to `slices` disjoint column slices (starts aligned to
 /// `align`), each paired with its start column.
-pub(crate) fn c_col_slices(c: MatMut<'_>, slices: usize, align: usize) -> Vec<(usize, MatMut<'_>)> {
+pub(crate) fn c_col_slices<T: Element>(c: MatMut<'_, T>, slices: usize, align: usize) -> Vec<(usize, MatMut<'_, T>)> {
     let n = c.cols();
     let mut out = Vec::new();
     let mut rest = c;
@@ -170,7 +178,7 @@ pub(crate) fn c_col_slices(c: MatMut<'_>, slices: usize, align: usize) -> Vec<(u
 
 /// Rows `r0 .. r0+rows` of `op(A)` as a view of the *stored* matrix
 /// (columns of storage when `A` is logically transposed).
-fn op_a_rows<'a>(a: MatRef<'a>, transa: Transpose, r0: usize, rows: usize) -> MatRef<'a> {
+fn op_a_rows<'a, T: Element>(a: MatRef<'a, T>, transa: Transpose, r0: usize, rows: usize) -> MatRef<'a, T> {
     match transa {
         Transpose::No => a.block(r0, 0, rows, a.cols()),
         Transpose::Yes => a.block(0, r0, a.rows(), rows),
@@ -179,7 +187,7 @@ fn op_a_rows<'a>(a: MatRef<'a>, transa: Transpose, r0: usize, rows: usize) -> Ma
 
 /// Columns `c0 .. c0+cols` of `op(B)` as a view of the *stored* matrix
 /// (rows of storage when `B` is logically transposed).
-fn op_b_cols<'a>(b: MatRef<'a>, transb: Transpose, c0: usize, cols: usize) -> MatRef<'a> {
+fn op_b_cols<'a, T: Element>(b: MatRef<'a, T>, transb: Transpose, c0: usize, cols: usize) -> MatRef<'a, T> {
     match transb {
         Transpose::No => b.block(0, c0, b.rows(), cols),
         Transpose::Yes => b.block(c0, 0, cols, b.cols()),
@@ -190,13 +198,13 @@ fn op_b_cols<'a>(b: MatRef<'a>, transb: Transpose, c0: usize, cols: usize) -> Ma
 /// row-split work list (shared with
 /// [`crate::gemm::plan::GemmPlan::run_packed_b`], which is what keeps the
 /// prepacked parallel runs bit-identical to this driver's).
-pub(crate) fn row_slices<'a>(
-    a: MatRef<'a>,
+pub(crate) fn row_slices<'a, T: Element>(
+    a: MatRef<'a, T>,
     transa: Transpose,
-    c: MatMut<'a>,
+    c: MatMut<'a, T>,
     slices: usize,
     align: usize,
-) -> Vec<(usize, MatRef<'a>, MatMut<'a>)> {
+) -> Vec<(usize, MatRef<'a, T>, MatMut<'a, T>)> {
     c_row_slices(c, slices, align)
         .into_iter()
         .map(|(r0, cs)| (r0, op_a_rows(a, transa, r0, cs.rows()), cs))
@@ -205,13 +213,13 @@ pub(crate) fn row_slices<'a>(
 
 /// Column slices of `C` paired with the matching columns of `op(B)` — the
 /// column-split twin of [`row_slices`].
-pub(crate) fn col_slices<'a>(
-    b: MatRef<'a>,
+pub(crate) fn col_slices<'a, T: Element>(
+    b: MatRef<'a, T>,
     transb: Transpose,
-    c: MatMut<'a>,
+    c: MatMut<'a, T>,
     slices: usize,
     align: usize,
-) -> Vec<(usize, MatRef<'a>, MatMut<'a>)> {
+) -> Vec<(usize, MatRef<'a, T>, MatMut<'a, T>)> {
     c_col_slices(c, slices, align)
         .into_iter()
         .map(|(c0, cs)| (c0, op_b_cols(b, transb, c0, cs.cols()), cs))
@@ -222,14 +230,14 @@ pub(crate) fn col_slices<'a>(
 /// process-wide worker pool (no-transpose convenience wrapper; the
 /// dispatch layer routes transposed calls through [`gemm_parallel_vec`]).
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_parallel(
+pub fn gemm_parallel<T: Element>(
     threads: usize,
     params: &BlockParams,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) -> Result<(), BlasError> {
     gemm_parallel_vec(
         &SerialVecKernel::Dot(VecIsa::Sse, *params),
@@ -253,17 +261,17 @@ pub fn gemm_parallel(
 /// slice's serial driver packs its own transposed panels (and strips).
 /// `pool: None` degrades to a serial sweep of the slices.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_parallel_vec(
+pub(crate) fn gemm_parallel_vec<T: Element>(
     kern: &SerialVecKernel,
     pool: Option<&ThreadPool>,
     threads: usize,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) -> Result<(), BlasError> {
     let m = c.rows();
     let n = c.cols();
@@ -305,7 +313,7 @@ pub(crate) fn gemm_parallel_vec(
     let split = split_axis(m, n, threads);
 
     // Pure beta-scale: no kernel work — sweep C's slices over the pool.
-    if alpha == 0.0 || k == 0 {
+    if alpha == T::ZERO || k == 0 {
         match split {
             Split::Serial => c.scale(beta),
             Split::Rows(t) | Split::Cols(t) => {
@@ -459,9 +467,9 @@ mod tests {
             for &(m, n, k) in &[(23usize, 17usize, 31usize), (1, 40, 13), (5, 48, 9)] {
                 let (ar, ac) = if ta == Transpose::No { (m, k) } else { (k, m) };
                 let (br, bc) = if tb == Transpose::No { (k, n) } else { (n, k) };
-                let a = Matrix::random(ar, ac, 21, -1.0, 1.0);
-                let b = Matrix::random(br, bc, 22, -1.0, 1.0);
-                let c0 = Matrix::random(m, n, 23, -1.0, 1.0);
+                let a = Matrix::<f32>::random(ar, ac, 21, -1.0, 1.0);
+                let b = Matrix::<f32>::random(br, bc, 22, -1.0, 1.0);
+                let c0 = Matrix::<f32>::random(m, n, 23, -1.0, 1.0);
                 let mut c_serial = c0.clone();
                 gemm_vec(VecIsa::Sse, &p, ta, tb, 0.5, a.view(), b.view(), 1.25, &mut c_serial.view_mut());
                 for threads in [2usize, 3, 7] {
@@ -508,9 +516,9 @@ mod tests {
             for &(m, n, k) in &[(23usize, 37usize, 31usize), (2, 40, 13), (50, 7, 9)] {
                 let (ar, ac) = if ta == Transpose::No { (m, k) } else { (k, m) };
                 let (br, bc) = if tb == Transpose::No { (k, n) } else { (n, k) };
-                let a = Matrix::random(ar, ac, 31, -1.0, 1.0);
-                let b = Matrix::random(br, bc, 32, -1.0, 1.0);
-                let c0 = Matrix::random(m, n, 33, -1.0, 1.0);
+                let a = Matrix::<f32>::random(ar, ac, 31, -1.0, 1.0);
+                let b = Matrix::<f32>::random(br, bc, 32, -1.0, 1.0);
+                let c0 = Matrix::<f32>::random(m, n, 33, -1.0, 1.0);
                 let mut c_serial = c0.clone();
                 tile::gemm(&p, ta, tb, 0.5, a.view(), b.view(), 1.25, &mut c_serial.view_mut());
                 for threads in [2usize, 3, 7] {

@@ -194,6 +194,14 @@ impl TileParams {
         Self { mr: 4, ..Self::avx2_6x16() }
     }
 
+    /// Default AVX2+FMA **f64** geometry: 6×8 tile — the same 12-YMM
+    /// accumulator budget at 4 lanes per register (DGEMM). `kc = 256`
+    /// keeps the B panel at 8·256·8 = 16 KB, exactly the f32 footprint
+    /// (elements are twice as wide, the panel half as many columns).
+    pub fn avx2_6x8_f64() -> Self {
+        Self { mr: 6, nr: 8, kc: 256, mc: 72, nc: 480, prefetch: true }
+    }
+
     /// Effective k-block size (never zero, never beyond k).
     pub fn kc_eff(&self, k: usize, kk: usize) -> usize {
         self.kc.min(k - kk).max(1)
@@ -205,8 +213,16 @@ impl TileParams {
         if !(1..=super::tile::MAX_MR).contains(&self.mr) {
             return Err(format!("tile mr must be in 1..={}, got {}", super::tile::MAX_MR, self.mr));
         }
-        if self.nr != super::tile::NR {
-            return Err(format!("tile nr must be {}, got {}", super::tile::NR, self.nr));
+        // Two 256-bit vectors per element width: 16 f32 lanes or 8 f64
+        // lanes. The drivers additionally assert nr == T::TILE_NR for
+        // the element they run.
+        if self.nr != super::tile::NR && self.nr != super::tile::NR / 2 {
+            return Err(format!(
+                "tile nr must be {} (f32) or {} (f64), got {}",
+                super::tile::NR,
+                super::tile::NR / 2,
+                self.nr
+            ));
         }
         if self.kc == 0 {
             return Err("tile kc must be positive".into());
@@ -260,9 +276,12 @@ mod tests {
     fn tile_validation() {
         assert!(TileParams::avx2_6x16().validate().is_ok());
         assert!(TileParams::avx2_4x16().validate().is_ok());
+        assert!(TileParams::avx2_6x8_f64().validate().is_ok());
         assert!(TileParams { mr: 0, ..TileParams::default() }.validate().is_err());
         assert!(TileParams { mr: 9, ..TileParams::default() }.validate().is_err());
-        assert!(TileParams { nr: 8, ..TileParams::default() }.validate().is_err());
+        // nr 8 is the f64 tile width (nc must stay a multiple of nr).
+        assert!(TileParams { nr: 8, ..TileParams::default() }.validate().is_ok());
+        assert!(TileParams { nr: 5, ..TileParams::default() }.validate().is_err());
         assert!(TileParams { kc: 0, ..TileParams::default() }.validate().is_err());
         // mc/nc must align to the tile granule.
         assert!(TileParams { mc: 70, ..TileParams::default() }.validate().is_err());

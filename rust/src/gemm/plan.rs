@@ -31,12 +31,14 @@
 //! shares one budget instead of multiplying thread counts, and the
 //! per-call spawn/join cost of the old scoped-thread drivers is gone.
 
+use super::batch;
 use super::dispatch::{DispatchConfig, GemmDispatch, GemmShape, KernelId};
+use super::element::{Element, ElementId};
+use super::microkernel;
 use super::pack;
 use super::params::{BlockParams, TileParams};
 use super::simd::VecIsa;
 use super::tile;
-use super::{batch, microkernel};
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
 use crate::util::threadpool::{run_borrowed_on, ThreadPool};
 use std::sync::{Arc, OnceLock, RwLock};
@@ -81,16 +83,16 @@ impl GemmContext {
     pub fn global() -> &'static GemmContext {
         GLOBAL.get_or_init(|| {
             let ctx = GemmContext::new(DispatchConfig::default());
-            let (entries, tile, strassen) = crate::autotune::cache::load_host_tuned();
-            for (id, params) in entries {
+            let tuned = crate::autotune::cache::load_host_tuned();
+            for (element, id, params) in tuned.entries {
                 // Entries were validated at load; a failure here only means
-                // the kernel family carries no geometry.
-                let _ = ctx.install_tuned(id, params);
+                // the kernel family carries no geometry for that element.
+                let _ = ctx.install_tuned_for(element, id, params);
             }
-            if let Some(tp) = tile {
-                let _ = ctx.install_tuned_tile(tp);
+            for (element, tp) in tuned.tiles {
+                let _ = ctx.install_tuned_tile_for(element, tp);
             }
-            if let Some(min_dim) = strassen {
+            if let Some(min_dim) = tuned.strassen {
                 let _ = ctx.install_strassen_min_dim(min_dim);
             }
             ctx
@@ -128,6 +130,28 @@ impl GemmContext {
         guard.set_tuned_tile(params)
     }
 
+    /// Install element-keyed tuned block parameters (the `--element f64`
+    /// autotune feed; F32 routes to [`install_tuned`](Self::install_tuned)).
+    pub fn install_tuned_for(
+        &self,
+        element: ElementId,
+        id: KernelId,
+        params: BlockParams,
+    ) -> Result<bool, String> {
+        let mut guard = self.inner.dispatch.write().unwrap_or_else(|e| e.into_inner());
+        guard.set_tuned_for(element, id, params)
+    }
+
+    /// Install element-keyed tuned tile geometry.
+    pub fn install_tuned_tile_for(
+        &self,
+        element: ElementId,
+        params: TileParams,
+    ) -> Result<(), String> {
+        let mut guard = self.inner.dispatch.write().unwrap_or_else(|e| e.into_inner());
+        guard.set_tuned_tile_for(element, params)
+    }
+
     /// Install a measured Strassen crossover (the `strassen_crossover`
     /// autotune result replacing the fixed default threshold).
     pub fn install_strassen_min_dim(&self, min_dim: usize) -> Result<(), String> {
@@ -135,14 +159,22 @@ impl GemmContext {
         guard.set_strassen_min_dim(min_dim)
     }
 
-    /// Start building a plan: `ctx.gemm().transpose_a(..).plan(m, n, k)`.
+    /// Start building an f32 (SGEMM) plan:
+    /// `ctx.gemm().transpose_a(..).plan(m, n, k)`.
     pub fn gemm(&self) -> GemmBuilder {
+        self.gemm_for::<f32>()
+    }
+
+    /// Start building a plan for any element precision —
+    /// `ctx.gemm_for::<f64>()` is the DGEMM entry
+    /// ([`crate::blas::dgemm`] is the positional shim over it).
+    pub fn gemm_for<T: Element>(&self) -> GemmBuilder<T> {
         GemmBuilder {
             ctx: self.clone(),
             transa: Transpose::No,
             transb: Transpose::No,
-            alpha: 1.0,
-            beta: 0.0,
+            alpha: T::ONE,
+            beta: T::ZERO,
             lda: None,
             ldb: None,
             ldc: None,
@@ -156,21 +188,21 @@ impl GemmContext {
     /// panels otherwise. The handle is reusable across every plan (and
     /// batch item) whose `k`/`n` and geometry match — the
     /// weight-stationary layout.
-    pub fn pack_b(
+    pub fn pack_b<T: Element>(
         &self,
         transb: Transpose,
         k: usize,
         n: usize,
-        b: &[f32],
+        b: &[T],
         ldb: usize,
-    ) -> Result<PackedB, BlasError> {
+    ) -> Result<PackedB<T>, BlasError> {
         let (br, bc) = match transb {
             Transpose::No => (k, n),
             Transpose::Yes => (n, k),
         };
         let bv = MatRef::new(b, br, bc, ldb).map_err(|e| e.operand("B"))?;
         let mut offsets = Vec::new();
-        let storage = match pack_geometry(&self.snapshot()) {
+        let storage = match pack_geometry_t::<T>(&self.snapshot()) {
             PackGeometry::Dot(_, params) => {
                 let mut blocks = Vec::new();
                 let mut kk = 0;
@@ -204,20 +236,20 @@ impl GemmContext {
     /// Pre-pack `op(A)` (`m × k`) into the k-blocked row layout of this
     /// context's best serial kernel — MR-row tile strips on AVX2+FMA
     /// hosts, contiguous rows otherwise — for [`GemmPlan::run_packed`].
-    pub fn pack_a(
+    pub fn pack_a<T: Element>(
         &self,
         transa: Transpose,
         m: usize,
         k: usize,
-        a: &[f32],
+        a: &[T],
         lda: usize,
-    ) -> Result<PackedA, BlasError> {
+    ) -> Result<PackedA<T>, BlasError> {
         let (ar, ac) = match transa {
             Transpose::No => (m, k),
             Transpose::Yes => (k, m),
         };
         let av = MatRef::new(a, ar, ac, lda).map_err(|e| e.operand("A"))?;
-        let storage = match pack_geometry(&self.snapshot()) {
+        let storage = match pack_geometry_t::<T>(&self.snapshot()) {
             PackGeometry::Dot(_, params) => {
                 let mut blocks = Vec::new();
                 let mut kk = 0;
@@ -304,32 +336,33 @@ enum PackGeometry {
     Tile(TileParams),
 }
 
-fn pack_geometry(d: &GemmDispatch) -> PackGeometry {
-    match d.best_serial_vector() {
-        KernelId::Avx2Tile => PackGeometry::Tile(*d.params_tile()),
-        KernelId::Avx2 => PackGeometry::Dot(Some(VecIsa::Avx2), *d.params_avx2()),
+fn pack_geometry_t<T: Element>(d: &GemmDispatch) -> PackGeometry {
+    match d.best_serial_vector_t::<T>() {
+        KernelId::Avx2Tile => PackGeometry::Tile(*d.params_tile_t::<T>()),
+        KernelId::Avx2 => PackGeometry::Dot(Some(VecIsa::Avx2), *d.params_dot_t::<T>(VecIsa::Avx2)),
         KernelId::Simd => PackGeometry::Dot(Some(VecIsa::Sse), *d.params_sse()),
         // Scalar hosts execute the prepacked layout through a scalar
-        // panel kernel; the SSE geometry is a fine layout default.
-        _ => PackGeometry::Dot(None, *d.params_sse()),
+        // panel kernel; the element's dot geometry is the layout default.
+        _ => PackGeometry::Dot(None, *d.params_dot_t::<T>(VecIsa::Sse)),
     }
 }
 
-/// Typed builder for a [`GemmPlan`]. Obtained from [`GemmContext::gemm`].
+/// Typed builder for a [`GemmPlan`]. Obtained from [`GemmContext::gemm`]
+/// (f32) or [`GemmContext::gemm_for`] (any element).
 #[derive(Clone, Debug)]
-pub struct GemmBuilder {
+pub struct GemmBuilder<T = f32> {
     ctx: GemmContext,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    beta: f32,
+    alpha: T,
+    beta: T,
     lda: Option<usize>,
     ldb: Option<usize>,
     ldc: Option<usize>,
     force: Option<KernelId>,
 }
 
-impl GemmBuilder {
+impl<T: Element> GemmBuilder<T> {
     /// Logical transposition of `A` (default: [`Transpose::No`]).
     pub fn transpose_a(mut self, t: Transpose) -> Self {
         self.transa = t;
@@ -342,14 +375,14 @@ impl GemmBuilder {
         self
     }
 
-    /// Scale on `op(A)·op(B)` (default 1.0).
-    pub fn alpha(mut self, alpha: f32) -> Self {
+    /// Scale on `op(A)·op(B)` (default 1).
+    pub fn alpha(mut self, alpha: T) -> Self {
         self.alpha = alpha;
         self
     }
 
-    /// Scale on the existing `C` (default 0.0 — overwrite).
-    pub fn beta(mut self, beta: f32) -> Self {
+    /// Scale on the existing `C` (default 0 — overwrite).
+    pub fn beta(mut self, beta: T) -> Self {
         self.beta = beta;
         self
     }
@@ -382,7 +415,7 @@ impl GemmBuilder {
 
     /// Resolve the plan: validate leading dimensions, select the kernel
     /// and freeze the dispatcher state (block geometry, thread split).
-    pub fn plan(self, m: usize, n: usize, k: usize) -> Result<GemmPlan, BlasError> {
+    pub fn plan(self, m: usize, n: usize, k: usize) -> Result<GemmPlan<T>, BlasError> {
         let (ar, ac) = match self.transa {
             Transpose::No => (m, k),
             Transpose::Yes => (k, m),
@@ -405,7 +438,7 @@ impl GemmBuilder {
         }
         let dispatch = self.ctx.snapshot();
         let shape = GemmShape { m, n, k, transa: self.transa, transb: self.transb };
-        let kernel = self.force.unwrap_or_else(|| dispatch.select(&shape, self.alpha));
+        let kernel = self.force.unwrap_or_else(|| dispatch.select_t::<T>(&shape, self.alpha));
         Ok(GemmPlan {
             ctx: self.ctx,
             dispatch,
@@ -427,12 +460,12 @@ impl GemmBuilder {
 /// deterministic — running a plan twice on the same inputs produces
 /// bit-identical output.
 #[derive(Clone, Debug)]
-pub struct GemmPlan {
+pub struct GemmPlan<T = f32> {
     ctx: GemmContext,
     dispatch: GemmDispatch,
     shape: GemmShape,
-    alpha: f32,
-    beta: f32,
+    alpha: T,
+    beta: T,
     lda: usize,
     ldb: usize,
     ldc: usize,
@@ -440,7 +473,7 @@ pub struct GemmPlan {
     forced: Option<KernelId>,
 }
 
-impl GemmPlan {
+impl<T: Element> GemmPlan<T> {
     /// The kernel the plan resolved to.
     pub fn kernel(&self) -> KernelId {
         self.kernel
@@ -466,12 +499,13 @@ impl GemmPlan {
         &self.ctx
     }
 
+    #[allow(clippy::type_complexity)]
     fn views<'x>(
         &self,
-        a: &'x [f32],
-        b: &'x [f32],
-        c: &'x mut [f32],
-    ) -> Result<(MatRef<'x>, MatRef<'x>, MatMut<'x>), BlasError> {
+        a: &'x [T],
+        b: &'x [T],
+        c: &'x mut [T],
+    ) -> Result<(MatRef<'x, T>, MatRef<'x, T>, MatMut<'x, T>), BlasError> {
         let (ar, ac) = match self.shape.transa {
             Transpose::No => (self.shape.m, self.shape.k),
             Transpose::Yes => (self.shape.k, self.shape.m),
@@ -489,7 +523,7 @@ impl GemmPlan {
     /// Execute the plan: `C = alpha · op(A) op(B) + beta · C`. Only buffer
     /// lengths are validated per call; kernel, geometry and thread split
     /// were resolved at plan time.
-    pub fn run(&self, a: &[f32], b: &[f32], c: &mut [f32]) -> Result<(), BlasError> {
+    pub fn run(&self, a: &[T], b: &[T], c: &mut [T]) -> Result<(), BlasError> {
         let (av, bv, mut cv) = self.views(a, b, c)?;
         if self.shape.m == 0 || self.shape.n == 0 {
             return Ok(());
@@ -514,9 +548,9 @@ impl GemmPlan {
     #[allow(clippy::too_many_arguments)]
     pub fn run_batch(
         &self,
-        a: &[f32],
-        b: &[f32],
-        c: &mut [f32],
+        a: &[T],
+        b: &[T],
+        c: &mut [T],
         batch: usize,
         strides: batch::BatchStrides,
     ) -> Result<(), BlasError> {
@@ -551,7 +585,7 @@ impl GemmPlan {
     /// for tall outputs, panel-aligned columns of the shared `PackedB`
     /// for skinny ones — via the parallel tier's split policy
     /// ([`crate::gemm::parallel`]), for every transa/transb combination.
-    pub fn run_packed_b(&self, a: &[f32], b: &PackedB, c: &mut [f32]) -> Result<(), BlasError> {
+    pub fn run_packed_b(&self, a: &[T], b: &PackedB<T>, c: &mut [T]) -> Result<(), BlasError> {
         let geom = self.packed_geometry(b)?;
         let (ar, ac) = match self.shape.transa {
             Transpose::No => (self.shape.m, self.shape.k),
@@ -642,7 +676,7 @@ impl GemmPlan {
     /// row block is indivisible); skinny outputs split over panel-aligned
     /// columns instead — the same axis policy as every other parallel
     /// path.
-    pub fn run_packed(&self, a: &PackedA, b: &PackedB, c: &mut [f32]) -> Result<(), BlasError> {
+    pub fn run_packed(&self, a: &PackedA<T>, b: &PackedB<T>, c: &mut [T]) -> Result<(), BlasError> {
         let geom = self.packed_geometry(b)?;
         if a.k != self.shape.k || a.m != self.shape.m {
             return Err(BlasError::ShapeMismatch {
@@ -732,7 +766,7 @@ impl GemmPlan {
     /// Shared validation for the prepacked paths: shape match, then the
     /// handle's layout family and geometry must match what the plan's
     /// dispatcher would pack today.
-    fn packed_geometry(&self, b: &PackedB) -> Result<PackGeometry, BlasError> {
+    fn packed_geometry(&self, b: &PackedB<T>) -> Result<PackGeometry, BlasError> {
         if b.k != self.shape.k || b.n != self.shape.n {
             return Err(BlasError::ShapeMismatch {
                 what: "PackedB",
@@ -740,7 +774,7 @@ impl GemmPlan {
                 got: (b.k, b.n),
             });
         }
-        let geom = pack_geometry(&self.dispatch);
+        let geom = pack_geometry_t::<T>(&self.dispatch);
         let ok = match (&geom, &b.storage) {
             (PackGeometry::Dot(_, params), PackedBStorage::Dot { kb, nr, .. }) => {
                 *kb == params.kb && *nr == params.nr
@@ -766,8 +800,8 @@ impl GemmPlan {
 /// shareable across threads and reusable across any number of
 /// [`GemmPlan::run_packed_b`] calls and batch items.
 #[derive(Debug)]
-pub struct PackedB {
-    storage: PackedBStorage,
+pub struct PackedB<T = f32> {
+    storage: PackedBStorage<T>,
     offsets: Vec<usize>,
     k: usize,
     n: usize,
@@ -775,14 +809,14 @@ pub struct PackedB {
 
 /// The layout family a [`PackedB`] was packed in.
 #[derive(Debug)]
-enum PackedBStorage {
+enum PackedBStorage<T> {
     /// Column-contiguous dot panels (`kb`/`nr` of the dot kernel).
-    Dot { blocks: Vec<pack::PackedB>, kb: usize, nr: usize },
+    Dot { blocks: Vec<pack::PackedB<T>>, kb: usize, nr: usize },
     /// k-major NR panels for the outer-product tile kernel.
-    Tile { blocks: Vec<pack::TilePackedB>, kc: usize, nr: usize },
+    Tile { blocks: Vec<pack::TilePackedB<T>>, kc: usize, nr: usize },
 }
 
-impl PackedB {
+impl<T: Element> PackedB<T> {
     /// Logical `k` (rows of `op(B)`).
     pub fn k(&self) -> usize {
         self.k
@@ -818,8 +852,8 @@ impl PackedB {
 /// kernels, MR strips for the tile tier). Created by
 /// [`GemmContext::pack_a`] for [`GemmPlan::run_packed`].
 #[derive(Debug)]
-pub struct PackedA {
-    storage: PackedAStorage,
+pub struct PackedA<T = f32> {
+    storage: PackedAStorage<T>,
     k: usize,
     m: usize,
 }
@@ -827,14 +861,14 @@ pub struct PackedA {
 /// The layout family a [`PackedA`] was packed in
 /// (`blocks[kblock][rowblock]`, mirroring the drivers' loop nests).
 #[derive(Debug)]
-enum PackedAStorage {
+enum PackedAStorage<T> {
     /// Row-contiguous blocks for the dot kernels.
-    Dot { blocks: Vec<Vec<pack::PackedA>>, kb: usize, mb: usize },
+    Dot { blocks: Vec<Vec<pack::PackedA<T>>>, kb: usize, mb: usize },
     /// MR-strip blocks for the outer-product tile kernel.
-    Tile { blocks: Vec<Vec<pack::TilePackedA>>, kc: usize, mc: usize, mr: usize },
+    Tile { blocks: Vec<Vec<pack::TilePackedA<T>>>, kc: usize, mc: usize, mr: usize },
 }
 
-impl PackedA {
+impl<T: Element> PackedA<T> {
     /// Logical `m` (rows of `op(A)`).
     pub fn m(&self) -> usize {
         self.m
@@ -853,15 +887,15 @@ impl PackedA {
 
 /// Where the dot-panel prepacked driver streams `A` rows from.
 #[derive(Clone, Copy)]
-enum ASource<'x> {
-    Raw(MatRef<'x>),
-    Packed { blocks: &'x [Vec<pack::PackedA>], mb: usize },
+enum ASource<'x, T> {
+    Raw(MatRef<'x, T>),
+    Packed { blocks: &'x [Vec<pack::PackedA<T>>], mb: usize },
 }
 
 /// Borrowed view of a dot-layout prepacked `B` (blocks + k offsets).
 #[derive(Clone, Copy)]
-struct DotB<'x> {
-    blocks: &'x [pack::PackedB],
+struct DotB<'x, T> {
+    blocks: &'x [pack::PackedB<T>],
     offsets: &'x [usize],
     k: usize,
 }
@@ -879,24 +913,24 @@ struct DotB<'x> {
 /// prepacked; `col0` must be a multiple of `nr` (panel-aligned) — the
 /// parallel split helpers guarantee both.
 #[allow(clippy::too_many_arguments)]
-fn prepacked_gemm(
+fn prepacked_gemm<T: Element>(
     isa: Option<VecIsa>,
     params: &BlockParams,
     transa: Transpose,
-    alpha: f32,
-    a: ASource<'_>,
+    alpha: T,
+    a: ASource<'_, T>,
     row0: usize,
-    pb: DotB<'_>,
+    pb: DotB<'_, T>,
     col0: usize,
-    beta: f32,
-    c: &mut MatMut<'_>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) {
     let m = c.rows();
     let n = c.cols();
     let k = pb.k;
     debug_assert_eq!(col0 % params.nr, 0, "column slices must be panel-aligned");
     c.scale(beta);
-    if alpha == 0.0 || k == 0 || m == 0 || n == 0 {
+    if alpha == T::ZERO || k == 0 || m == 0 || n == 0 {
         return;
     }
     let p0 = col0 / params.nr;
@@ -907,10 +941,10 @@ fn prepacked_gemm(
         ASource::Raw(_) => params.pack_a || transa == Transpose::Yes,
         ASource::Packed { .. } => false,
     };
-    let mut scratch_a = pack::PackedA::new();
-    let mut sums = [0.0f32; 8];
-    let mut sums2 = [0.0f32; 8];
-    let mut cols: Vec<*const f32> = Vec::with_capacity(params.nr);
+    let mut scratch_a = pack::PackedA::<T>::new();
+    let mut sums = [T::ZERO; 8];
+    let mut sums2 = [T::ZERO; 8];
+    let mut cols: Vec<*const T> = Vec::with_capacity(params.nr);
 
     for (kbi, block) in pb.blocks.iter().enumerate() {
         let kk = pb.offsets[kbi];
@@ -931,7 +965,7 @@ fn prepacked_gemm(
                 for j in 0..w {
                     cols.push(block.col_ptr(p0 + p, j));
                 }
-                let row_ptr = |i: usize| -> *const f32 {
+                let row_ptr = |i: usize| -> *const T {
                     match a {
                         ASource::Packed { blocks, mb } => blocks[kbi][(row0 + ii) / mb].row_ptr(i),
                         ASource::Raw(av) => {
@@ -955,7 +989,7 @@ fn prepacked_gemm(
                         // have kk + kb_eff <= k <= a.cols()); packed
                         // columns are kpad long; w <= 8.
                         unsafe {
-                            microkernel::avx2_dot_panel2_dyn(
+                            T::dot_panel2_dyn(
                                 arow,
                                 arow1,
                                 kb_eff,
@@ -980,7 +1014,8 @@ fn prepacked_gemm(
                     // come from runtime detection, never faked).
                     unsafe {
                         match isa {
-                            Some(VecIsa::Sse) => microkernel::sse_dot_panel_dyn(
+                            Some(vec_isa) => T::dot_panel_dyn(
+                                vec_isa,
                                 arow,
                                 kb_eff,
                                 &cols,
@@ -988,15 +1023,7 @@ fn prepacked_gemm(
                                 params.prefetch,
                                 &mut sums,
                             ),
-                            Some(VecIsa::Avx2) => microkernel::avx2_dot_panel_dyn(
-                                arow,
-                                kb_eff,
-                                &cols,
-                                params.unroll,
-                                params.prefetch,
-                                &mut sums,
-                            ),
-                            None => scalar_dot_panel(arow, kb_eff, &cols, &mut sums),
+                            None => microkernel::scalar_dot_panel(arow, kb_eff, &cols, &mut sums),
                         }
                         for j in 0..w {
                             let old = c.get_unchecked(ii + i, j0 + j);
@@ -1008,27 +1035,6 @@ fn prepacked_gemm(
             }
             ii += mb_eff;
         }
-    }
-}
-
-/// Scalar fallback panel kernel for hosts without SSE: one dot product per
-/// packed column.
-///
-/// # Safety
-/// `arow` and every pointer in `cols` must be readable for `kb_eff`
-/// elements; `cols.len() <= 8`.
-unsafe fn scalar_dot_panel(
-    arow: *const f32,
-    kb_eff: usize,
-    cols: &[*const f32],
-    sums: &mut [f32; 8],
-) {
-    for (j, &cp) in cols.iter().enumerate() {
-        let mut acc = 0.0f32;
-        for p in 0..kb_eff {
-            acc += *arow.add(p) * *cp.add(p);
-        }
-        sums[j] = acc;
     }
 }
 

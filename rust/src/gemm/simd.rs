@@ -15,30 +15,33 @@
 //! rows; the `A` row streams through with prefetch; `C` accumulates in
 //! registers inside the micro-kernel and is written once per panel.
 
-use super::microkernel;
+use super::element::Element;
 use super::pack::Scratch;
 use super::params::BlockParams;
 use crate::blas::{MatMut, MatRef, Transpose};
 
-/// Which vector ISA the shared driver dispatches to.
+/// Which vector ISA the shared driver dispatches to. Kernel selection per
+/// element goes through [`Element::dot_panel_dyn`]: f32 has SSE and AVX2
+/// instantiations, f64 has AVX2 (4-wide YMM) with a scalar panel standing
+/// in for SSE.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub(crate) enum VecIsa {
+pub enum VecIsa {
     /// 4-wide SSE (the paper's kernel).
     Sse,
     /// 8-wide AVX2 + FMA (modern extension).
     Avx2,
 }
 
-/// Emmerald SGEMM on SSE: `C = alpha * op(A) op(B) + beta * C`.
-pub fn gemm(
+/// Emmerald GEMM on the SSE tier: `C = alpha * op(A) op(B) + beta * C`.
+pub fn gemm<T: Element>(
     params: &BlockParams,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) {
     gemm_vec(VecIsa::Sse, params, transa, transb, alpha, a, b, beta, c);
 }
@@ -46,32 +49,32 @@ pub fn gemm(
 /// As [`gemm`], but reusing caller-provided packing buffers — the batched
 /// driver calls this so packing allocation is amortised across a batch.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_with_scratch(
+pub fn gemm_with_scratch<T: Element>(
     params: &BlockParams,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
-    scratch: &mut Scratch,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
+    scratch: &mut Scratch<T>,
 ) {
     gemm_vec_scratch(VecIsa::Sse, params, transa, transb, alpha, a, b, beta, c, scratch);
 }
 
-/// Shared blocked driver over the SSE / AVX2 micro-kernels.
+/// Shared blocked driver over the per-element micro-kernels.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_vec(
+pub(crate) fn gemm_vec<T: Element>(
     isa: VecIsa,
     params: &BlockParams,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) {
     let mut scratch = Scratch::new();
     gemm_vec_scratch(isa, params, transa, transb, alpha, a, b, beta, c, &mut scratch);
@@ -79,17 +82,17 @@ pub(crate) fn gemm_vec(
 
 /// The driver proper, parameterised over reusable packing scratch.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_vec_scratch(
+pub(crate) fn gemm_vec_scratch<T: Element>(
     isa: VecIsa,
     params: &BlockParams,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
-    scratch: &mut Scratch,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
+    scratch: &mut Scratch<T>,
 ) {
     params.validate().expect("invalid block parameters");
     let m = c.rows();
@@ -99,7 +102,7 @@ pub(crate) fn gemm_vec_scratch(
         Transpose::Yes => a.rows(),
     };
     c.scale(beta);
-    if alpha == 0.0 || k == 0 || m == 0 || n == 0 {
+    if alpha == T::ZERO || k == 0 || m == 0 || n == 0 {
         return;
     }
 
@@ -109,10 +112,10 @@ pub(crate) fn gemm_vec_scratch(
 
     scratch.b.ensure_nr(params.nr);
     let (packed_a, packed_b) = (&mut scratch.a, &mut scratch.b);
-    let mut sums = [0.0f32; 8];
-    let mut sums2 = [0.0f32; 8];
-    let mut cols: Vec<*const f32> = Vec::with_capacity(params.nr);
-    let mut cols_strided: Vec<(*const f32, usize)> = Vec::with_capacity(params.nr);
+    let mut sums = [T::ZERO; 8];
+    let mut sums2 = [T::ZERO; 8];
+    let mut cols: Vec<*const T> = Vec::with_capacity(params.nr);
+    let mut cols_strided: Vec<(*const T, usize)> = Vec::with_capacity(params.nr);
 
     let mut kk = 0;
     while kk < k {
@@ -148,7 +151,7 @@ pub(crate) fn gemm_vec_scratch(
                 }
                 let mut i = 0;
                 while i < mb_eff {
-                    let arow: *const f32 = if need_pack_a {
+                    let arow: *const T = if need_pack_a {
                         packed_a.row_ptr(i)
                     } else {
                         // Row ii+i of A, offset kk: contiguous kb_eff f32s.
@@ -157,7 +160,7 @@ pub(crate) fn gemm_vec_scratch(
                     // AVX2 fast path: two A rows per pass re-use every B
                     // vector (see microkernel::avx2_dot_panel2).
                     if isa == VecIsa::Avx2 && params.pack_b && i + 1 < mb_eff {
-                        let arow1: *const f32 = if need_pack_a {
+                        let arow1: *const T = if need_pack_a {
                             packed_a.row_ptr(i + 1)
                         } else {
                             a.row_ptr(ii + i + 1).wrapping_add(kk)
@@ -165,7 +168,7 @@ pub(crate) fn gemm_vec_scratch(
                         // SAFETY: same bounds argument as the single-row
                         // path, applied to rows i and i+1.
                         unsafe {
-                            microkernel::avx2_dot_panel2_dyn(
+                            T::dot_panel2_dyn(
                                 arow,
                                 arow1,
                                 kb_eff,
@@ -192,31 +195,17 @@ pub(crate) fn gemm_vec_scratch(
                     // MatRef bounds. w <= 8 and sums has 8 slots.
                     unsafe {
                         if params.pack_b {
-                            match isa {
-                                VecIsa::Sse => microkernel::sse_dot_panel_dyn(
-                                    arow,
-                                    kb_eff,
-                                    &cols,
-                                    params.unroll,
-                                    params.prefetch,
-                                    &mut sums,
-                                ),
-                                VecIsa::Avx2 => microkernel::avx2_dot_panel_dyn(
-                                    arow,
-                                    kb_eff,
-                                    &cols,
-                                    params.unroll,
-                                    params.prefetch,
-                                    &mut sums,
-                                ),
-                            }
-                        } else {
-                            microkernel::sse_dot_panel_strided(
+                            T::dot_panel_dyn(
+                                isa,
                                 arow,
                                 kb_eff,
-                                &cols_strided,
+                                &cols,
+                                params.unroll,
+                                params.prefetch,
                                 &mut sums,
                             );
+                        } else {
+                            T::dot_panel_strided(arow, kb_eff, &cols_strided, &mut sums);
                         }
                     }
                     for j in 0..w {

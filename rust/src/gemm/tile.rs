@@ -6,22 +6,28 @@
 //! AVX2+FMA the register file holds an entire `MR × NR` tile of `C`, so
 //! the BLIS-style **outer product** wins instead: per k step the kernel
 //! loads `NR` values of `B'` (two vectors) and broadcasts `MR` values of
-//! `A'`, then issues `MR · NR/8` FMAs — every loaded element is reused
-//! `MR` (resp. `NR`) times, there are **zero horizontal sums**, and `C`
-//! is touched once per `MR · NR · kc` FMAs. With the default 6×16 tile
-//! the budget is 12 YMM accumulators + 2 `B` streams + 1 `A` broadcast =
-//! 15 of 16 registers.
+//! `A'`, then issues `MR · NR/LANES` FMAs — every loaded element is
+//! reused `MR` (resp. `NR`) times, there are **zero horizontal sums**,
+//! and `C` is touched once per `MR · NR · kc` FMAs.
+//!
+//! The tier is generic over the element precision
+//! ([`crate::gemm::element::Element`]). Per element the tile is two
+//! 256-bit vectors wide: **6×16 for f32** (12 YMM accumulators + 2 `B`
+//! streams + 1 `A` broadcast = 15 of 16 registers) and **6×8 for f64**
+//! (the same 12-accumulator budget at 4 lanes per register) — the
+//! register-tiling analysis of the paper carries over unchanged, only
+//! the lane count halves.
 //!
 //! Both operands are packed ([`crate::gemm::pack::TilePackedA`] MR-row
-//! strips, [`crate::gemm::pack::TilePackedB`] NR-column panels, both
-//! k-major) so the kernel's loads are unit-stride. Fringe tiles (edge
-//! rows/columns) run the same full-size kernel against zero-padded
-//! strips/panels and write back through a stack [`TempTile`] with a
-//! masked scalar pass whose per-element arithmetic (`f32::mul_add`) is
-//! bit-identical to a lane of the vector writeback — which is what makes
-//! serial, thread-parallel and prepacked executions of one problem
-//! produce the same bits (each `C` element accumulates in pure k order,
-//! and full-vs-fringe tile membership cannot change the rounding).
+//! strips, [`crate::gemm::pack::TilePackedB`] NR-panel, both k-major) so
+//! the kernel's loads are unit-stride. Fringe tiles (edge rows/columns)
+//! run the same full-size kernel against zero-padded strips/panels and
+//! write back through a stack [`TempTile`] with a masked scalar pass
+//! whose per-element arithmetic (`mul_add`) is bit-identical to a lane
+//! of the vector writeback — which is what makes serial, thread-parallel
+//! and prepacked executions of one problem produce the same bits, in
+//! both precisions (each `C` element accumulates in pure k order, and
+//! full-vs-fringe tile membership cannot change the rounding).
 //!
 //! A scalar reference tile covers non-AVX2 hosts and anchors the
 //! conformance suite; the dot-panel kernels ([`super::simd`],
@@ -31,28 +37,33 @@
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
 
+use super::element::Element;
 use super::pack::{Scratch, TilePackedA, TilePackedB};
 use super::params::TileParams;
 use crate::blas::{MatMut, MatRef, Transpose};
 
 /// Tile width in f32 lanes (two 8-wide AVX2 vectors, feeding both FMA
-/// execution ports).
+/// execution ports). The f64 tier's width is [`Element::TILE_NR`] = 8.
 pub const NR: usize = 16;
 
-/// Largest supported tile height. `6 × 16` is the largest tile whose
-/// accumulators (`2·mr`), `B` streams (2) and `A` broadcast (1) fit the
-/// 16-register YMM file.
+/// Largest supported tile height (both precisions). `6 × NR` is the
+/// largest tile whose accumulators (`2·mr`), `B` streams (2) and `A`
+/// broadcast (1) fit the 16-register YMM file.
 pub const MAX_MR: usize = 6;
 
-/// Prefetch distance into the packed `B` panel, in f32 elements (four
-/// 64-byte lines ahead; one k step consumes exactly one line).
-const PREFETCH_B: usize = 64;
+/// Prefetch distance into the packed `B` panel, in *elements* per
+/// element width (four 64-byte lines ahead; one k step consumes exactly
+/// one line in either precision).
+const PREFETCH_B_F32: usize = 64;
+const PREFETCH_B_F64: usize = 32;
 
-/// One MR×NR accumulator tile on the stack, used for fringe writeback.
-type TempTile = [f32; MAX_MR * NR];
+/// One MR×NR accumulator tile on the stack, used for fringe writeback
+/// (sized for the widest element; the f64 tier uses the first
+/// `MAX_MR * 8` slots with row stride `TILE_NR`).
+type TempTile<T> = [T; MAX_MR * NR];
 
-/// The AVX2+FMA outer-product micro-kernel: `dst (MR×NR) ⟵ A'·B'` over a
-/// `kc`-deep packed strip/panel pair.
+/// The AVX2+FMA outer-product micro-kernel (f32): `dst (MR×16) ⟵ A'·B'`
+/// over a `kc`-deep packed strip/panel pair.
 ///
 /// `ap` is an MR-strip (`kc × MR`, k-major), `bp` an NR-panel
 /// (`kc × NR`, k-major). With `accumulate` the result is folded into
@@ -61,8 +72,8 @@ type TempTile = [f32; MAX_MR * NR];
 /// `alpha` unused).
 ///
 /// # Safety
-/// * `ap` readable for `kc * MR` f32s, `bp` for `kc * NR` f32s.
-/// * `dst` writable at rows `i*dst_ld`, `i < MR`, each row `NR` wide.
+/// * `ap` readable for `kc * MR` f32s, `bp` for `kc * 16` f32s.
+/// * `dst` writable at rows `i*dst_ld`, `i < MR`, each row 16 wide.
 /// * AVX2 and FMA must be available.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
@@ -82,7 +93,7 @@ unsafe fn avx2_tile<const MR: usize>(
             // wrapping_add: the prefetch address runs past the packed
             // panel near its end, and ptr::add would make that UB even
             // though the hint itself can never fault.
-            _mm_prefetch::<_MM_HINT_T0>(bp.wrapping_add(p * NR + PREFETCH_B).cast());
+            _mm_prefetch::<_MM_HINT_T0>(bp.wrapping_add(p * NR + PREFETCH_B_F32).cast());
         }
         let b0 = _mm256_loadu_ps(bp.add(p * NR));
         let b1 = _mm256_loadu_ps(bp.add(p * NR + 8));
@@ -109,13 +120,65 @@ unsafe fn avx2_tile<const MR: usize>(
     }
 }
 
-/// Runtime-MR dispatcher over [`avx2_tile`].
+/// The AVX2+FMA outer-product micro-kernel (f64): `dst (MR×8) ⟵ A'·B'` —
+/// the 4-wide twin of [`avx2_tile`] with an identical register budget
+/// (`2·MR` accumulators + 2 `B` streams + 1 broadcast).
+///
+/// # Safety
+/// * `ap` readable for `kc * MR` f64s, `bp` for `kc * 8` f64s.
+/// * `dst` writable at rows `i*dst_ld`, `i < MR`, each row 8 wide.
+/// * AVX2 and FMA must be available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn avx2_tile_f64<const MR: usize>(
+    ap: *const f64,
+    bp: *const f64,
+    kc: usize,
+    alpha: f64,
+    dst: *mut f64,
+    dst_ld: usize,
+    accumulate: bool,
+    prefetch: bool,
+) {
+    const NRD: usize = 8;
+    let mut acc = [[_mm256_setzero_pd(); 2]; MR];
+    for p in 0..kc {
+        if prefetch {
+            _mm_prefetch::<_MM_HINT_T0>(bp.wrapping_add(p * NRD + PREFETCH_B_F64).cast());
+        }
+        let b0 = _mm256_loadu_pd(bp.add(p * NRD));
+        let b1 = _mm256_loadu_pd(bp.add(p * NRD + 4));
+        let arow = ap.add(p * MR);
+        for (i, a) in acc.iter_mut().enumerate() {
+            let av = _mm256_broadcast_sd(&*arow.add(i));
+            a[0] = _mm256_fmadd_pd(av, b0, a[0]);
+            a[1] = _mm256_fmadd_pd(av, b1, a[1]);
+        }
+    }
+    if accumulate {
+        let va = _mm256_set1_pd(alpha);
+        for (i, a) in acc.iter().enumerate() {
+            let row = dst.add(i * dst_ld);
+            _mm256_storeu_pd(row, _mm256_fmadd_pd(va, a[0], _mm256_loadu_pd(row)));
+            _mm256_storeu_pd(row.add(4), _mm256_fmadd_pd(va, a[1], _mm256_loadu_pd(row.add(4))));
+        }
+    } else {
+        for (i, a) in acc.iter().enumerate() {
+            let row = dst.add(i * dst_ld);
+            _mm256_storeu_pd(row, a[0]);
+            _mm256_storeu_pd(row.add(4), a[1]);
+        }
+    }
+}
+
+/// Runtime-MR dispatcher over [`avx2_tile`] (the f32
+/// [`Element::avx2_tile_dyn`] hook).
 ///
 /// # Safety
 /// Contract of [`avx2_tile`] with `1 <= mr <= MAX_MR`.
 #[cfg(target_arch = "x86_64")]
 #[allow(clippy::too_many_arguments)]
-unsafe fn avx2_tile_dyn(
+pub(crate) unsafe fn avx2_tile_dyn_f32(
     mr: usize,
     ap: *const f32,
     bp: *const f32,
@@ -137,39 +200,106 @@ unsafe fn avx2_tile_dyn(
     }
 }
 
-/// Masked fringe writeback: fold `h × w` elements of a raw accumulator
-/// tile into `C` with one *fused* multiply-add per element, so a fringe
-/// element rounds exactly like a lane of [`avx2_tile`]'s vector
-/// writeback (the bit-stability contract of the module docs).
+/// Runtime-MR dispatcher over [`avx2_tile_f64`] (the f64
+/// [`Element::avx2_tile_dyn`] hook).
 ///
 /// # Safety
-/// `dst` writable at rows `i*dst_ld` for `i < h`, each row `w` wide;
-/// FMA must be available.
+/// Contract of [`avx2_tile_f64`] with `1 <= mr <= MAX_MR`.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn avx2_tile_dyn_f64(
+    mr: usize,
+    ap: *const f64,
+    bp: *const f64,
+    kc: usize,
+    alpha: f64,
+    dst: *mut f64,
+    dst_ld: usize,
+    accumulate: bool,
+    prefetch: bool,
+) {
+    match mr {
+        1 => avx2_tile_f64::<1>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        2 => avx2_tile_f64::<2>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        3 => avx2_tile_f64::<3>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        4 => avx2_tile_f64::<4>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        5 => avx2_tile_f64::<5>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        6 => avx2_tile_f64::<6>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+        _ => unreachable!("tile mr {mr} out of range"),
+    }
+}
+
+/// Masked f32 fringe writeback: fold `h × w` elements of a raw
+/// accumulator tile into `C` with one *fused* multiply-add per element,
+/// so a fringe element rounds exactly like a lane of [`avx2_tile`]'s
+/// vector writeback (the bit-stability contract of the module docs).
+///
+/// # Safety
+/// `tmp` readable at rows `i*tmp_ld` for `i < h`; `dst` writable at rows
+/// `i*dst_ld` for `i < h`, each row `w` wide; FMA must be available.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "fma")]
-unsafe fn avx2_tile_fringe(tmp: &TempTile, alpha: f32, dst: *mut f32, dst_ld: usize, h: usize, w: usize) {
+pub(crate) unsafe fn tile_fringe_f32(
+    tmp: *const f32,
+    tmp_ld: usize,
+    alpha: f32,
+    dst: *mut f32,
+    dst_ld: usize,
+    h: usize,
+    w: usize,
+) {
     for i in 0..h {
         for j in 0..w {
             let p = dst.add(i * dst_ld + j);
-            *p = alpha.mul_add(tmp[i * NR + j], *p);
+            *p = alpha.mul_add(*tmp.add(i * tmp_ld + j), *p);
         }
     }
 }
 
-/// Scalar reference tile: the same outer-product loop order as
-/// [`avx2_tile`] without SIMD — the conformance anchor and the non-AVX2
-/// fallback. Accumulates the raw `mr × NR` product into `tmp` (k-major
-/// broadcast of `A`, `NR`-wide sweep of `B` per step).
+/// Masked f64 fringe writeback (the f64 twin of [`tile_fringe_f32`]).
 ///
 /// # Safety
-/// `ap` readable for `kc * mr` f32s, `bp` for `kc * NR` f32s.
-unsafe fn scalar_tile_into(ap: *const f32, bp: *const f32, kc: usize, mr: usize, tmp: &mut TempTile) {
+/// As [`tile_fringe_f32`], in f64s.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "fma")]
+pub(crate) unsafe fn tile_fringe_f64(
+    tmp: *const f64,
+    tmp_ld: usize,
+    alpha: f64,
+    dst: *mut f64,
+    dst_ld: usize,
+    h: usize,
+    w: usize,
+) {
+    for i in 0..h {
+        for j in 0..w {
+            let p = dst.add(i * dst_ld + j);
+            *p = alpha.mul_add(*tmp.add(i * tmp_ld + j), *p);
+        }
+    }
+}
+
+/// Scalar reference tile: the same outer-product loop order as the
+/// vector kernels without SIMD — the conformance anchor and the non-AVX2
+/// fallback. Accumulates the raw `mr × T::TILE_NR` product into `tmp`
+/// (k-major broadcast of `A`, `TILE_NR`-wide sweep of `B` per step).
+///
+/// # Safety
+/// `ap` readable for `kc * mr` elements, `bp` for `kc * T::TILE_NR`.
+unsafe fn scalar_tile_into<T: Element>(
+    ap: *const T,
+    bp: *const T,
+    kc: usize,
+    mr: usize,
+    tmp: &mut TempTile<T>,
+) {
+    let nr = T::TILE_NR;
     for p in 0..kc {
         for i in 0..mr {
             let av = *ap.add(p * mr + i);
-            let row = &mut tmp[i * NR..(i + 1) * NR];
+            let row = &mut tmp[i * nr..(i + 1) * nr];
             for (j, t) in row.iter_mut().enumerate() {
-                *t += av * *bp.add(p * NR + j);
+                *t += av * *bp.add(p * nr + j);
             }
         }
     }
@@ -181,20 +311,21 @@ unsafe fn scalar_tile_into(ap: *const f32, bp: *const f32, kc: usize, mr: usize,
 /// `panel0 ..` cover `C` columns `j_base .. j_base + nb_eff`. `C` has
 /// already been beta-scaled; each tile folds `alpha · A'B'` in.
 #[allow(clippy::too_many_arguments)]
-fn tile_block(
+fn tile_block<T: Element>(
     params: &TileParams,
     use_avx2: bool,
-    ta: &TilePackedA,
-    tb: &TilePackedB,
+    ta: &TilePackedA<T>,
+    tb: &TilePackedB<T>,
     panel0: usize,
-    alpha: f32,
-    c: &mut MatMut<'_>,
+    alpha: T,
+    c: &mut MatMut<'_, T>,
     i_base: usize,
     j_base: usize,
     nb_eff: usize,
     kc_eff: usize,
 ) {
     let (mr, nr) = (params.mr, params.nr);
+    debug_assert_eq!(nr, T::TILE_NR, "tile nr must match the element's vector geometry");
     let ldc = c.ld();
     let strips = ta.strips();
     let npanels = nb_eff.div_ceil(nr);
@@ -210,28 +341,26 @@ fn tile_block(
             // SAFETY: strips/panels are packed `kc_eff` deep and padded to
             // full mr/nr lanes; the C tile spans rows i0..i0+h < c.rows()
             // and cols j0..j0+w < c.cols() (full-tile vector writeback only
-            // runs when h == mr and w == nr, so its 16-wide rows stay
+            // runs when h == mr and w == nr, so its NR-wide rows stay
             // inside the logical width); use_avx2 comes from runtime
             // feature detection, never faked.
             unsafe {
-                #[cfg(target_arch = "x86_64")]
                 if use_avx2 {
                     if h == mr && w == nr {
-                        avx2_tile_dyn(mr, ap, bp, kc_eff, alpha, cptr, ldc, true, params.prefetch);
+                        T::avx2_tile_dyn(mr, ap, bp, kc_eff, alpha, cptr, ldc, true, params.prefetch);
                     } else {
-                        let mut tmp: TempTile = [0.0; MAX_MR * NR];
-                        avx2_tile_dyn(mr, ap, bp, kc_eff, 0.0, tmp.as_mut_ptr(), NR, false, params.prefetch);
-                        avx2_tile_fringe(&tmp, alpha, cptr, ldc, h, w);
+                        let mut tmp: TempTile<T> = [T::ZERO; MAX_MR * NR];
+                        T::avx2_tile_dyn(mr, ap, bp, kc_eff, T::ZERO, tmp.as_mut_ptr(), nr, false, params.prefetch);
+                        T::tile_fringe(tmp.as_ptr(), nr, alpha, cptr, ldc, h, w);
                     }
                     continue;
                 }
-                let _ = use_avx2;
-                let mut tmp: TempTile = [0.0; MAX_MR * NR];
+                let mut tmp: TempTile<T> = [T::ZERO; MAX_MR * NR];
                 scalar_tile_into(ap, bp, kc_eff, mr, &mut tmp);
                 for i in 0..h {
                     for j in 0..w {
                         let pd = cptr.add(i * ldc + j);
-                        *pd += alpha * tmp[i * NR + j];
+                        *pd += alpha * tmp[i * nr + j];
                     }
                 }
             }
@@ -239,20 +368,20 @@ fn tile_block(
     }
 }
 
-/// Tile-tier SGEMM: `C = alpha * op(A) op(B) + beta * C`.
+/// Tile-tier GEMM: `C = alpha * op(A) op(B) + beta * C`.
 ///
-/// Runs the AVX2+FMA micro-kernel when the CPU supports it and the
-/// scalar reference tile otherwise — always available, fastest on
+/// Runs the element's AVX2+FMA micro-kernel when the CPU supports it and
+/// the scalar reference tile otherwise — always available, fastest on
 /// AVX2+FMA (where [`crate::gemm::dispatch`] selects it).
-pub fn gemm(
+pub fn gemm<T: Element>(
     params: &TileParams,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) {
     let mut scratch = Scratch::new();
     gemm_with_scratch(params, transa, transb, alpha, a, b, beta, c, &mut scratch);
@@ -266,18 +395,26 @@ pub fn gemm(
 /// `A'`), then panels × strips of tiles — `B'` panels stay hot across
 /// every `A` strip of the block.
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_with_scratch(
+pub fn gemm_with_scratch<T: Element>(
     params: &TileParams,
     transa: Transpose,
     transb: Transpose,
-    alpha: f32,
-    a: MatRef<'_>,
-    b: MatRef<'_>,
-    beta: f32,
-    c: &mut MatMut<'_>,
-    scratch: &mut Scratch,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
+    scratch: &mut Scratch<T>,
 ) {
     params.validate().expect("invalid tile parameters");
+    assert_eq!(
+        params.nr,
+        T::TILE_NR,
+        "tile nr {} does not match element {} (TILE_NR {})",
+        params.nr,
+        T::ID.name(),
+        T::TILE_NR
+    );
     let m = c.rows();
     let n = c.cols();
     let k = match transa {
@@ -285,7 +422,7 @@ pub fn gemm_with_scratch(
         Transpose::Yes => a.rows(),
     };
     c.scale(beta);
-    if alpha == 0.0 || k == 0 || m == 0 || n == 0 {
+    if alpha == T::ZERO || k == 0 || m == 0 || n == 0 {
         return;
     }
     let use_avx2 = super::dispatch::detect_avx2();
@@ -312,12 +449,12 @@ pub fn gemm_with_scratch(
 
 /// Where the prepacked tile driver streams `A` from.
 #[derive(Clone, Copy)]
-pub(crate) enum TileA<'x> {
+pub(crate) enum TileA<'x, T = f32> {
     /// Unpacked `op(A)`: each (row block, k block) is packed on the fly.
-    Raw { a: MatRef<'x>, transa: Transpose },
+    Raw { a: MatRef<'x, T>, transa: Transpose },
     /// Whole-operand prepack: `blocks[kblock][rowblock]`
     /// (see [`crate::gemm::plan::PackedA`]).
-    Packed { blocks: &'x [Vec<TilePackedA>] },
+    Packed { blocks: &'x [Vec<TilePackedA<T>>] },
 }
 
 /// The tile driver over a whole-operand prepacked `B` (and optionally
@@ -330,22 +467,22 @@ pub(crate) enum TileA<'x> {
 /// `row0` must be a multiple of `mc` when `A` is prepacked (a packed row
 /// block is indivisible). The parallel split helpers guarantee both.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn prepacked_gemm(
+pub(crate) fn prepacked_gemm<T: Element>(
     params: &TileParams,
-    alpha: f32,
-    a: TileA<'_>,
+    alpha: T,
+    a: TileA<'_, T>,
     row0: usize,
-    b_blocks: &[TilePackedB],
+    b_blocks: &[TilePackedB<T>],
     b_offsets: &[usize],
     col0: usize,
-    beta: f32,
-    c: &mut MatMut<'_>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
 ) {
     let m = c.rows();
     let n = c.cols();
     debug_assert_eq!(col0 % params.nr, 0, "column slices must be panel-aligned");
     c.scale(beta);
-    if alpha == 0.0 || m == 0 || n == 0 || b_blocks.is_empty() {
+    if alpha == T::ZERO || m == 0 || n == 0 || b_blocks.is_empty() {
         return;
     }
     let use_avx2 = super::dispatch::detect_avx2();
@@ -357,7 +494,7 @@ pub(crate) fn prepacked_gemm(
         let mut ic = 0;
         while ic < m {
             let mc_eff = params.mc.min(m - ic);
-            let ta: &TilePackedA = match a {
+            let ta: &TilePackedA<T> = match a {
                 TileA::Raw { a, transa } => {
                     scratch_a.pack(a, transa, ic, mc_eff, kk, kc_eff, params.mr);
                     &scratch_a
@@ -374,7 +511,7 @@ pub(crate) fn prepacked_gemm(
 mod tests {
     use super::*;
     use crate::blas::Matrix;
-    use crate::gemm::testutil::check_grid;
+    use crate::gemm::testutil::{check_grid, check_grid_f64};
     use crate::util::testkit::assert_allclose;
 
     #[test]
@@ -382,6 +519,24 @@ mod tests {
         check_grid(
             &|ta, tb, alpha, a, b, beta, c| gemm(&TileParams::avx2_6x16(), ta, tb, alpha, a, b, beta, c),
             "tile-6x16",
+        );
+    }
+
+    #[test]
+    fn f64_matches_naive_on_grid() {
+        check_grid_f64(
+            &|ta, tb, alpha, a, b, beta, c| gemm(&TileParams::avx2_6x8_f64(), ta, tb, alpha, a, b, beta, c),
+            "tile-6x8-f64",
+        );
+    }
+
+    #[test]
+    fn f64_matches_naive_with_tiny_blocks() {
+        // Tiny blocks force every fringe path in the f64 tier too.
+        let p = TileParams { mr: 2, kc: 3, mc: 4, nc: 8, ..TileParams::avx2_6x8_f64() };
+        check_grid_f64(
+            &move |ta, tb, alpha, a, b, beta, c| gemm(&p, ta, tb, alpha, a, b, beta, c),
+            "tile-tiny-f64",
         );
     }
 
@@ -405,12 +560,23 @@ mod tests {
     }
 
     #[test]
+    fn all_mr_heights_correct_f64() {
+        for mr in 1..=MAX_MR {
+            let p = TileParams { mr, mc: mr * 2, kc: 16, nc: 16, ..TileParams::avx2_6x8_f64() };
+            check_grid_f64(
+                &move |ta, tb, alpha, a, b, beta, c| gemm(&p, ta, tb, alpha, a, b, beta, c),
+                &format!("tile-f64-mr{mr}"),
+            );
+        }
+    }
+
+    #[test]
     fn scratch_reuse_across_shapes() {
         let mut scratch = Scratch::new();
         for (i, &(m, n, k)) in [(17usize, 9usize, 23usize), (4, 4, 4), (33, 47, 40), (1, 1, 1)].iter().enumerate() {
             let p = TileParams { kc: 16, mc: 12, nc: 32, ..TileParams::avx2_6x16() };
-            let a = Matrix::random(m, k, i as u64, -1.0, 1.0);
-            let b = Matrix::random(k, n, 100 + i as u64, -1.0, 1.0);
+            let a = Matrix::<f32>::random(m, k, i as u64, -1.0, 1.0);
+            let b = Matrix::<f32>::random(k, n, 100 + i as u64, -1.0, 1.0);
             let mut c_got = Matrix::zeros(m, n);
             let mut c_ref = Matrix::zeros(m, n);
             gemm_with_scratch(
@@ -448,19 +614,50 @@ mod tests {
             return;
         }
         let (mr, kc) = (6usize, 37usize);
-        let a = Matrix::random(mr, kc, 7, -1.0, 1.0);
-        let b = Matrix::random(kc, NR, 8, -1.0, 1.0);
+        let a = Matrix::<f32>::random(mr, kc, 7, -1.0, 1.0);
+        let b = Matrix::<f32>::random(kc, NR, 8, -1.0, 1.0);
         let mut ta = TilePackedA::new();
         ta.pack(a.view(), Transpose::No, 0, mr, 0, kc, mr);
         let mut tb = TilePackedB::new();
         tb.pack(b.view(), Transpose::No, 0, kc, 0, NR, NR);
-        let mut scalar: TempTile = [0.0; MAX_MR * NR];
-        let mut vector: TempTile = [0.0; MAX_MR * NR];
+        let mut scalar: TempTile<f32> = [0.0; MAX_MR * NR];
+        let mut vector: TempTile<f32> = [0.0; MAX_MR * NR];
         unsafe {
             scalar_tile_into(ta.strip_ptr(0), tb.panel_ptr(0), kc, mr, &mut scalar);
-            avx2_tile_dyn(mr, ta.strip_ptr(0), tb.panel_ptr(0), kc, 0.0, vector.as_mut_ptr(), NR, false, true);
+            avx2_tile_dyn_f32(mr, ta.strip_ptr(0), tb.panel_ptr(0), kc, 0.0, vector.as_mut_ptr(), NR, false, true);
         }
         assert_allclose(&vector[..mr * NR], &scalar[..mr * NR], 1e-4, 1e-5, "avx2 vs scalar tile");
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn scalar_tile_matches_avx2_tile_values_f64() {
+        if !crate::gemm::dispatch::detect_avx2() {
+            eprintln!("SKIP: no AVX2+FMA");
+            return;
+        }
+        let nr = <f64 as Element>::TILE_NR;
+        let (mr, kc) = (6usize, 37usize);
+        let a = Matrix::<f64>::random(mr, kc, 7, -1.0, 1.0);
+        let b = Matrix::<f64>::random(kc, nr, 8, -1.0, 1.0);
+        let mut ta = TilePackedA::new();
+        ta.pack(a.view(), Transpose::No, 0, mr, 0, kc, mr);
+        let mut tb = TilePackedB::new();
+        tb.pack(b.view(), Transpose::No, 0, kc, 0, nr, nr);
+        let mut scalar: TempTile<f64> = [0.0; MAX_MR * NR];
+        let mut vector: TempTile<f64> = [0.0; MAX_MR * NR];
+        unsafe {
+            scalar_tile_into(ta.strip_ptr(0), tb.panel_ptr(0), kc, mr, &mut scalar);
+            avx2_tile_dyn_f64(mr, ta.strip_ptr(0), tb.panel_ptr(0), kc, 0.0, vector.as_mut_ptr(), nr, false, true);
+        }
+        for i in 0..mr * nr {
+            assert!(
+                (vector[i] - scalar[i]).abs() < 1e-12 * (1.0 + scalar[i].abs()),
+                "f64 tile lane {i}: {} vs {}",
+                vector[i],
+                scalar[i]
+            );
+        }
     }
 
     #[test]
@@ -468,9 +665,9 @@ mod tests {
         // Strided C with sentinel padding: fringe writeback must stay
         // inside the logical area.
         let (m, n, k) = (7usize, 19usize, 23usize);
-        let a = Matrix::random(m, k, 3, -1.0, 1.0);
-        let b = Matrix::random(k, n, 4, -1.0, 1.0);
-        let mut c = Matrix::random_strided(m, n, n + 5, 5);
+        let a = Matrix::<f32>::random(m, k, 3, -1.0, 1.0);
+        let b = Matrix::<f32>::random(k, n, 4, -1.0, 1.0);
+        let mut c = Matrix::<f32>::random_strided(m, n, n + 5, 5);
         let mut c_ref = c.clone();
         gemm(&TileParams::avx2_6x16(), Transpose::No, Transpose::No, 0.5, a.view(), b.view(), 1.5, &mut c.view_mut());
         crate::gemm::naive::gemm(Transpose::No, Transpose::No, 0.5, a.view(), b.view(), 1.5, &mut c_ref.view_mut());
@@ -487,26 +684,50 @@ mod tests {
     }
 
     #[test]
+    fn fringe_tiles_leave_padding_untouched_f64() {
+        let (m, n, k) = (7usize, 11usize, 23usize);
+        let a = Matrix::<f64>::random(m, k, 3, -1.0, 1.0);
+        let b = Matrix::<f64>::random(k, n, 4, -1.0, 1.0);
+        let mut c = Matrix::<f64>::random_strided(m, n, n + 5, 5);
+        let mut c_ref = c.clone();
+        gemm(&TileParams::avx2_6x8_f64(), Transpose::No, Transpose::No, 0.5, a.view(), b.view(), 1.5, &mut c.view_mut());
+        crate::gemm::naive::gemm(Transpose::No, Transpose::No, 0.5, a.view(), b.view(), 1.5, &mut c_ref.view_mut());
+        for r in 0..m {
+            for j in 0..n {
+                let got = c.get(r, j);
+                let want = c_ref.get(r, j);
+                assert!((got - want).abs() <= 1e-10 + 1e-10 * want.abs(), "({r},{j}): {got} vs {want}");
+            }
+            for p in n..n + 5 {
+                assert_eq!(c.data()[r * (n + 5) + p], -77.0, "padding clobbered at row {r}");
+            }
+        }
+    }
+
+    #[test]
     fn degenerate_dims_scale_by_beta() {
         let p = TileParams::avx2_6x16();
-        let a = Matrix::zeros(3, 0);
-        let b = Matrix::zeros(0, 4);
-        let mut c = Matrix::from_fn(3, 4, |_, _| 2.0);
+        let a = Matrix::<f32>::zeros(3, 0);
+        let b = Matrix::<f32>::zeros(0, 4);
+        let mut c = Matrix::<f32>::from_fn(3, 4, |_, _| 2.0);
         gemm(&p, Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.5, &mut c.view_mut());
         assert!(c.data().iter().all(|&x| x == 1.0));
         // alpha == 0 likewise.
-        let a = Matrix::random(3, 5, 1, -1.0, 1.0);
-        let b = Matrix::random(5, 4, 2, -1.0, 1.0);
+        let a = Matrix::<f32>::random(3, 5, 1, -1.0, 1.0);
+        let b = Matrix::<f32>::random(5, 4, 2, -1.0, 1.0);
         gemm(&p, Transpose::No, Transpose::No, 0.0, a.view(), b.view(), 0.0, &mut c.view_mut());
         assert!(c.data().iter().all(|&x| x == 0.0));
     }
 
     #[test]
     fn register_budget_documented_invariant() {
-        // 6×16 on AVX2: 12 accumulators + 2 B streams + 1 A broadcast
-        // must fit the 16-register YMM file.
+        // 6×16 f32 and 6×8 f64 on AVX2: 12 accumulators + 2 B streams +
+        // 1 A broadcast must fit the 16-register YMM file.
         let p = TileParams::avx2_6x16();
         assert!(p.mr * (p.nr / 8) + p.nr / 8 + 1 <= 16);
         assert_eq!(p.nr, NR);
+        let pd = TileParams::avx2_6x8_f64();
+        assert!(pd.mr * (pd.nr / 4) + pd.nr / 4 + 1 <= 16);
+        assert_eq!(pd.nr, <f64 as Element>::TILE_NR);
     }
 }

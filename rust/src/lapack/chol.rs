@@ -7,8 +7,11 @@
 //! 3. update the trailing matrix with **SSYRK** — which is where
 //!    ~n³/3 of the flops go, all through the Emmerald kernel.
 
-use crate::blas::syrk::ssyrk_lower;
+use crate::blas::syrk::syrk_lower;
 use crate::blas::{Backend, Matrix};
+use crate::gemm::element::{Element, ElementId};
+use crate::gemm::simd::VecIsa;
+use crate::gemm::KernelId;
 use std::fmt;
 
 /// Factorisation errors.
@@ -34,22 +37,53 @@ impl fmt::Display for LapackError {
 
 impl std::error::Error for LapackError {}
 
-/// Panel width.
-const NB: usize = 64;
+/// Untuned panel width (the pre-autotune default, kept as the fallback).
+const NB_DEFAULT: usize = 64;
+
+/// Panel width for the blocked factorisation: taken from the
+/// [`crate::gemm::BlockParams`] installed in the process-wide dispatcher
+/// for the kernel family **and element** the given backend will execute
+/// (the autotuned `mb` row-block height — the trailing SYRK/GEMM updates
+/// are `mb`-tall row panels, so the two blockings agree), falling back
+/// to [`NB_DEFAULT`] when the family carries no geometry for that
+/// element (the naive backend; the SSE tier in f64, which degrades to
+/// the scalar proxy) or the geometry is degenerate. `dpotrf` after
+/// `emmerald autotune --element f64` blocks on the tuned f64 geometry,
+/// not the f32 one.
+fn panel_width<T: Element>(backend: Backend) -> usize {
+    let d = crate::gemm::dispatch::global_snapshot();
+    let params = match backend {
+        Backend::Naive => None,
+        Backend::Simd => (T::ID == ElementId::F32).then(|| *d.params_sse()),
+        Backend::Avx2 | Backend::Avx2Tile => Some(*d.params_dot_t::<T>(VecIsa::Avx2)),
+        Backend::Blocked => Some(d.config().blocked),
+        Backend::Auto | Backend::Dispatch => match d.best_serial_vector_t::<T>() {
+            KernelId::Avx2Tile | KernelId::Avx2 => Some(*d.params_dot_t::<T>(VecIsa::Avx2)),
+            KernelId::Simd => Some(*d.params_sse()),
+            _ => None,
+        },
+    };
+    match params {
+        Some(p) if p.mb >= 8 => p.mb.min(512),
+        _ => NB_DEFAULT,
+    }
+}
 
 /// Blocked SPOTRF (lower): returns `L` with `A = L Lᵀ`. `a` must be
-/// square; only its lower triangle is read.
-pub fn cholesky_blocked(a: &Matrix, backend: Backend) -> Result<Matrix, LapackError> {
+/// square; only its lower triangle is read. Generic over the element
+/// precision — [`dpotrf`] is the f64 entry point.
+pub fn cholesky_blocked<T: Element>(a: &Matrix<T>, backend: Backend) -> Result<Matrix<T>, LapackError> {
     if a.rows() != a.cols() {
         return Err(LapackError::BadShape);
     }
     let n = a.rows();
+    let nb = panel_width::<T>(backend);
     // Work in a lower-triangular copy.
-    let mut l = Matrix::from_fn(n, n, |r, c| if c <= r { a.get(r, c) } else { 0.0 });
+    let mut l = Matrix::from_fn(n, n, |r, c| if c <= r { a.get(r, c) } else { T::ZERO });
 
     let mut j0 = 0;
     while j0 < n {
-        let jb = NB.min(n - j0);
+        let jb = nb.min(n - j0);
         // 1. Unblocked Cholesky of the diagonal block.
         for j in j0..j0 + jb {
             // d = A[j][j] - Σ_{p<j, p>=j0…} … (the trailing update has
@@ -58,7 +92,7 @@ pub fn cholesky_blocked(a: &Matrix, backend: Backend) -> Result<Matrix, LapackEr
             for p in j0..j {
                 d -= l.get(j, p) * l.get(j, p);
             }
-            if d <= 0.0 || !d.is_finite() {
+            if d <= T::ZERO || !d.is_finite() {
                 return Err(LapackError::NotPositiveDefinite(j));
             }
             let djj = d.sqrt();
@@ -77,7 +111,7 @@ pub fn cholesky_blocked(a: &Matrix, backend: Backend) -> Result<Matrix, LapackEr
             let rows = n - (j0 + jb);
             let l21 = Matrix::from_fn(rows, jb, |r, c| l.get(j0 + jb + r, j0 + c));
             let mut trailing = Matrix::from_fn(rows, rows, |r, c| l.get(j0 + jb + r, j0 + jb + c));
-            ssyrk_lower(backend, -1.0, l21.view(), 1.0, &mut trailing.view_mut())
+            syrk_lower(backend, -T::ONE, l21.view(), T::ONE, &mut trailing.view_mut())
                 .map_err(|_| LapackError::BadShape)?;
             for r in 0..rows {
                 for c in 0..=r {
@@ -90,15 +124,28 @@ pub fn cholesky_blocked(a: &Matrix, backend: Backend) -> Result<Matrix, LapackEr
     Ok(l)
 }
 
+/// Blocked DPOTRF (lower): the f64 instantiation of
+/// [`cholesky_blocked`] — every trailing update runs through the f64
+/// kernel ladder (DSYRK → DGEMM).
+pub fn dpotrf(a: &Matrix<f64>, backend: Backend) -> Result<Matrix<f64>, LapackError> {
+    cholesky_blocked(a, backend)
+}
+
+/// Blocked SPOTRF (lower): the classic f32 name for
+/// [`cholesky_blocked`].
+pub fn spotrf(a: &Matrix<f32>, backend: Backend) -> Result<Matrix<f32>, LapackError> {
+    cholesky_blocked(a, backend)
+}
+
 /// Solve `A x = b` for SPD `A` via Cholesky: forward then back
-/// substitution against `L` / `Lᵀ`.
-pub fn cholesky_solve(l: &Matrix, b: &[f32]) -> Result<Vec<f32>, LapackError> {
+/// substitution against `L` / `Lᵀ`. Generic over the element precision.
+pub fn cholesky_solve<T: Element>(l: &Matrix<T>, b: &[T]) -> Result<Vec<T>, LapackError> {
     let n = l.rows();
     if l.cols() != n || b.len() != n {
         return Err(LapackError::BadShape);
     }
     // L y = b.
-    let mut y = vec![0.0f32; n];
+    let mut y = vec![T::ZERO; n];
     for i in 0..n {
         let mut acc = b[i];
         for p in 0..i {
@@ -107,7 +154,7 @@ pub fn cholesky_solve(l: &Matrix, b: &[f32]) -> Result<Vec<f32>, LapackError> {
         y[i] = acc / l.get(i, i);
     }
     // Lᵀ x = y.
-    let mut x = vec![0.0f32; n];
+    let mut x = vec![T::ZERO; n];
     for i in (0..n).rev() {
         let mut acc = y[i];
         for p in i + 1..n {
@@ -193,8 +240,89 @@ mod tests {
 
     #[test]
     fn rejects_non_square() {
-        let a = Matrix::zeros(3, 4);
+        let a = Matrix::<f32>::zeros(3, 4);
         assert_eq!(cholesky_blocked(&a, Backend::Naive), Err(LapackError::BadShape));
+    }
+
+    #[test]
+    fn panel_width_untuned_backends_fall_back() {
+        // The naive backend carries no BlockParams: NB stays at the
+        // pre-autotune default. Kernel-backed families take the installed
+        // geometry's mb (128 by default for the SSE/AVX2 families). The
+        // SSE tier is f32-only, so its f64 panel width is the fallback.
+        assert_eq!(panel_width::<f32>(Backend::Naive), NB_DEFAULT);
+        assert_eq!(panel_width::<f64>(Backend::Naive), NB_DEFAULT);
+        assert_eq!(panel_width::<f64>(Backend::Simd), NB_DEFAULT);
+        let simd_nb = panel_width::<f32>(Backend::Simd);
+        assert!(simd_nb >= 8 && simd_nb <= 512);
+        let avx2_f64_nb = panel_width::<f64>(Backend::Avx2);
+        assert!(avx2_f64_nb >= 8 && avx2_f64_nb <= 512);
+    }
+
+    /// Random SPD f64 matrix: A = M Mᵀ + n·I.
+    fn spd64(n: usize, seed: u64) -> Matrix<f64> {
+        let m = Matrix::<f64>::random(n, n, seed, -1.0, 1.0);
+        let mut a = Matrix::<f64>::zeros(n, n);
+        crate::blas::dgemm_matrix(Backend::Naive, Transpose::No, Transpose::Yes, 1.0, &m, &m, 0.0, &mut a)
+            .unwrap();
+        for i in 0..n {
+            a.set(i, i, a.get(i, i) + n as f64 * 0.1 + 1.0);
+        }
+        a
+    }
+
+    #[test]
+    fn dpotrf_reconstructs_a_from_l() {
+        for &n in &[1usize, 5, 64, 130] {
+            let a = spd64(n, n as u64);
+            let l = dpotrf(&a, Backend::Auto).unwrap();
+            let mut recon = Matrix::<f64>::zeros(n, n);
+            crate::blas::dgemm_matrix(Backend::Naive, Transpose::No, Transpose::Yes, 1.0, &l, &l, 0.0, &mut recon)
+                .unwrap();
+            for i in 0..n {
+                for j in 0..=i {
+                    let want = a.get(i, j);
+                    assert!(
+                        (recon.get(i, j) - want).abs() < 1e-8 * (1.0 + want.abs()),
+                        "n={n} ({i},{j}): {} vs {want}",
+                        recon.get(i, j)
+                    );
+                }
+            }
+            for i in 0..n {
+                assert!(l.get(i, i) > 0.0);
+                for j in i + 1..n {
+                    assert_eq!(l.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dpotrf_solve_recovers_known_x() {
+        let n = 96;
+        let a = spd64(n, 3);
+        let mut rng = crate::util::prng::Pcg32::new(7);
+        let x_true: Vec<f64> = (0..n).map(|_| rng.f64() * 2.0 - 1.0).collect();
+        let mut b = vec![0.0f64; n];
+        for i in 0..n {
+            b[i] = (0..n).map(|j| a.get(i, j) * x_true[j]).sum();
+        }
+        let l = dpotrf(&a, Backend::Auto).unwrap();
+        let x = cholesky_solve(&l, &b).unwrap();
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-7, "x[{i}]: {} vs {}", x[i], x_true[i]);
+        }
+    }
+
+    #[test]
+    fn dpotrf_rejects_indefinite() {
+        let mut a = spd64(8, 5);
+        a.set(4, 4, -5.0);
+        match dpotrf(&a, Backend::Naive) {
+            Err(LapackError::NotPositiveDefinite(i)) => assert!(i <= 4),
+            other => panic!("expected NotPositiveDefinite, got {other:?}"),
+        }
     }
 
     #[test]

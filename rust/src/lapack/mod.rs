@@ -5,8 +5,12 @@
 //! the performance of single-precision libraries based on BLAS (such as
 //! LAPACK)". This module demonstrates that claim with the canonical
 //! LAPACK building block — blocked Cholesky factorisation — whose flops
-//! are dominated by SGEMM/SSYRK calls into our kernel.
+//! are dominated by SGEMM/SSYRK calls into our kernel. Since the
+//! element-generic precision subsystem the factorisation is generic over
+//! f32/f64: [`spotrf`] and [`dpotrf`] are the classic names, and the
+//! panel width follows the autotuned [`crate::gemm::BlockParams`]
+//! installed in the dispatcher (64 when untuned).
 
 mod chol;
 
-pub use chol::{cholesky_blocked, cholesky_solve, LapackError};
+pub use chol::{cholesky_blocked, cholesky_solve, dpotrf, spotrf, LapackError};

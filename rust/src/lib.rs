@@ -6,12 +6,16 @@
 //!
 //! The crate provides:
 //!
-//! * [`blas`] — a Level-3 BLAS `SGEMM` interface with selectable backends.
-//!   The production surface is the planned-execution API
+//! * [`blas`] — a Level-3 BLAS `SGEMM`/`DGEMM` interface with selectable
+//!   backends, generic over the element precision
+//!   ([`gemm::element::Element`]: f32 and f64 through the whole kernel
+//!   ladder, plus a compensated-f32 accumulation mode). The production
+//!   surface is the planned-execution API
 //!   ([`blas::GemmContext`] / [`blas::GemmPlan`]: resolve kernel, block
 //!   geometry and thread split once, execute many times, with
 //!   [`blas::PackedA`]/[`blas::PackedB`] prepacked-operand handles);
-//!   [`blas::sgemm`] remains as a positional compatibility shim over it.
+//!   [`blas::sgemm`] / [`blas::dgemm`] remain as positional
+//!   compatibility shims over it.
 //! * [`gemm`] — the paper's contribution: the Emmerald SSE micro-kernel
 //!   (five concurrent dot products in eight XMM registers), B re-buffering,
 //!   L1/L2 cache blocking, prefetching and full inner-loop unrolling,

@@ -239,17 +239,45 @@ fn cmd_train(argv: Vec<String>) -> i32 {
 fn cmd_autotune(argv: Vec<String>) -> i32 {
     let cli = Cli::new("emmerald autotune", "ATLAS-style block-size search")
         .opt("kernel", "sse", "sse|avx2|tile|blocked|strassen")
+        .opt("element", "f32", "f32|f64 — element precision to tune (f64: avx2|tile only)")
         .opt("probe", "448", "probe problem size");
     let m = parse(&cli, argv);
     let probe = m.get_usize("probe").unwrap();
-    match m.get("kernel").unwrap() {
-        "tile" => return autotune_tile(probe),
-        "strassen" => return autotune_strassen(probe),
+    let element = match emmerald::gemm::ElementId::from_name(m.get("element").unwrap()) {
+        Some(e) => e,
+        None => {
+            eprintln!("unknown element '{}' (use f32 or f64)", m.get("element").unwrap());
+            return 2;
+        }
+    };
+    if m.get("kernel").unwrap() == "avx2" && !emmerald::gemm::KernelId::Avx2.available() {
+        // The AVX2 probe executes target_feature kernels directly;
+        // running it without the ISA would be an illegal instruction.
+        eprintln!("--kernel avx2 needs AVX2+FMA on this host");
+        return 2;
+    }
+    match (m.get("kernel").unwrap(), element) {
+        ("tile", _) => return autotune_tile(probe, element),
+        ("strassen", emmerald::gemm::ElementId::F32) => return autotune_strassen(probe),
+        ("strassen", emmerald::gemm::ElementId::F64) => {
+            eprintln!("the Strassen tier is f32-only (f64 has no Strassen rung)");
+            return 2;
+        }
         _ => {}
     }
-    let mut spec = match m.get("kernel").unwrap() {
-        "blocked" => emmerald::autotune::TuneSpec::blocked_default(probe),
-        "avx2" => {
+    let mut spec = match (m.get("kernel").unwrap(), element) {
+        (_, emmerald::gemm::ElementId::F64) => {
+            // The f64 dot tier has one tunable kernel family: AVX2.
+            if m.get("kernel").unwrap() != "avx2" {
+                eprintln!("--element f64 supports --kernel avx2 or tile (no f64 SSE/blocked grid)");
+                return 2;
+            }
+            let mut s = emmerald::autotune::TuneSpec::sse_default(probe);
+            s.kernel = emmerald::autotune::TuneKernel::Avx2F64;
+            s
+        }
+        ("blocked", _) => emmerald::autotune::TuneSpec::blocked_default(probe),
+        ("avx2", _) => {
             let mut s = emmerald::autotune::TuneSpec::sse_default(probe);
             s.kernel = emmerald::autotune::TuneKernel::Avx2;
             s
@@ -269,11 +297,12 @@ fn cmd_autotune(argv: Vec<String>) -> i32 {
     }
     println!("{}", table.render());
     println!(
-        "winner: kb={} mb={} nr={} at {:.1} MFlop/s (paper: kb=336, nr=5) — installed into the {} dispatch table",
+        "winner: kb={} mb={} nr={} at {:.1} MFlop/s (paper: kb=336, nr=5) — installed into the {} {} dispatch table",
         r.best.kb,
         r.best.mb,
         r.best.nr,
         r.best_mflops,
+        spec.kernel.element().name(),
         spec.kernel.kernel_id().name()
     );
     match cached {
@@ -283,10 +312,14 @@ fn cmd_autotune(argv: Vec<String>) -> i32 {
     0
 }
 
-/// `emmerald autotune --kernel tile`: search (MR, kc, mc, nc) for the
-/// outer-product tile tier and persist the winner.
-fn autotune_tile(probe: usize) -> i32 {
-    let spec = emmerald::autotune::TileTuneSpec::avx2_default(probe);
+/// `emmerald autotune --kernel tile [--element f64]`: search
+/// (MR, kc, mc, nc) for the outer-product tile tier and persist the
+/// winner under the element's cache key.
+fn autotune_tile(probe: usize, element: emmerald::gemm::ElementId) -> i32 {
+    let spec = match element {
+        emmerald::gemm::ElementId::F32 => emmerald::autotune::TileTuneSpec::avx2_default(probe),
+        emmerald::gemm::ElementId::F64 => emmerald::autotune::TileTuneSpec::avx2_f64_default(probe),
+    };
     let (r, cached) = emmerald::autotune::tune_tile_install_and_persist(&spec);
     let mut table = Table::new(["mr", "kc", "mc", "nc", "MFlop/s"]);
     for p in &r.log {
@@ -300,8 +333,8 @@ fn autotune_tile(probe: usize) -> i32 {
     }
     println!("{}", table.render());
     println!(
-        "winner: {}x{} tile, kc={} mc={} nc={} at {:.1} MFlop/s — installed into the avx2-tile dispatch table",
-        r.best.mr, r.best.nr, r.best.kc, r.best.mc, r.best.nc, r.best_mflops
+        "winner: {}x{} tile, kc={} mc={} nc={} at {:.1} MFlop/s — installed into the {} avx2-tile dispatch table",
+        r.best.mr, r.best.nr, r.best.kc, r.best.mc, r.best.nc, r.best_mflops, element.name()
     );
     match cached {
         Some(path) => println!("persisted to {} (loaded automatically at next start)", path.display()),
@@ -346,16 +379,25 @@ fn cmd_dispatch(argv: Vec<String>) -> i32 {
     let cli = Cli::new("emmerald dispatch", "kernel registry + selection preview")
         .opt("m", "512", "output rows")
         .opt("n", "512", "output cols")
-        .opt("k", "512", "dot-product length");
+        .opt("k", "512", "dot-product length")
+        .opt("element", "f32", "f32|f64 — element precision previewed");
     let matches = parse(&cli, argv);
+    let element = match emmerald::gemm::ElementId::from_name(matches.get("element").unwrap()) {
+        Some(e) => e,
+        None => {
+            eprintln!("unknown element '{}' (use f32 or f64)", matches.get("element").unwrap());
+            return 2;
+        }
+    };
     let mut table = Table::new(["kernel", "requires", "available"]);
-    for info in emmerald::gemm::registry() {
+    for info in emmerald::gemm::registry_for(element) {
         table.row([
             info.name.to_string(),
             info.requires.to_string(),
             if info.available { "yes".into() } else { "no".into() },
         ]);
     }
+    println!("element: {}", element.name());
     println!("{}", table.render());
     let d = emmerald::gemm::dispatch::global_snapshot();
     let (m, n, k) =
@@ -366,20 +408,35 @@ fn cmd_dispatch(argv: Vec<String>) -> i32 {
         (Transpose::No, Transpose::Yes, "NT"),
     ] {
         let shape = emmerald::gemm::dispatch::GemmShape { m, n, k, transa: ta, transb: tb };
-        println!("{m}x{n}x{k} {label} → {}", d.select(&shape, 1.0).name());
+        let picked = match element {
+            emmerald::gemm::ElementId::F32 => d.select_t::<f32>(&shape, 1.0f32),
+            emmerald::gemm::ElementId::F64 => d.select_t::<f64>(&shape, 1.0f64),
+        };
+        println!("{m}x{n}x{k} {label} → {}", picked.name());
     }
+    match element {
+        emmerald::gemm::ElementId::F32 => println!(
+            "threads={} sse(kb={},nr={}) avx2(kb={},nr={})",
+            d.threads(),
+            d.params_sse().kb,
+            d.params_sse().nr,
+            d.params_avx2().kb,
+            d.params_avx2().nr
+        ),
+        emmerald::gemm::ElementId::F64 => println!(
+            "threads={} avx2-f64(kb={},nr={}) [no f64 SSE tier]",
+            d.threads(),
+            d.params_avx2_f64().kb,
+            d.params_avx2_f64().nr
+        ),
+    }
+    let tp = match element {
+        emmerald::gemm::ElementId::F32 => d.params_tile(),
+        emmerald::gemm::ElementId::F64 => d.params_tile_f64(),
+    };
     println!(
-        "threads={} sse(kb={},nr={}) avx2(kb={},nr={})",
-        d.threads(),
-        d.params_sse().kb,
-        d.params_sse().nr,
-        d.params_avx2().kb,
-        d.params_avx2().nr
-    );
-    let tp = d.params_tile();
-    println!(
-        "tile tier: {} — {}x{} tile, tuned (mr={}, kc={}, mc={}, nc={}); strassen_min_dim={}",
-        if emmerald::gemm::KernelId::Avx2Tile.available() { "available (avx2+fma)" } else { "unavailable on this CPU" },
+        "tile tier: {} — {}x{} tile, tuned (mr={}, kc={}, mc={}, nc={}); strassen_min_dim={}{}",
+        if emmerald::gemm::KernelId::Avx2Tile.available_for(element) { "available (avx2+fma)" } else { "unavailable on this CPU" },
         tp.mr,
         tp.nr,
         tp.mr,
@@ -387,6 +444,7 @@ fn cmd_dispatch(argv: Vec<String>) -> i32 {
         tp.mc,
         tp.nc,
         d.config().strassen_min_dim,
+        if element == emmerald::gemm::ElementId::F64 { " (f32-only tier)" } else { "" },
     );
     let ctx = emmerald::gemm::GemmContext::global();
     println!(

@@ -116,6 +116,26 @@ pub fn assert_allclose(actual: &[f32], expected: &[f32], rtol: f32, atol: f32, w
     }
 }
 
+/// The f64 twin of [`assert_allclose`], used by the DGEMM conformance
+/// suite (double-precision tolerances are ~1e9 times tighter).
+pub fn assert_allclose_f64(actual: &[f64], expected: &[f64], rtol: f64, atol: f64, what: &str) {
+    assert_eq!(actual.len(), expected.len(), "{what}: length mismatch");
+    let mut worst: Option<(usize, f64, f64, f64)> = None;
+    for (i, (&a, &e)) in actual.iter().zip(expected).enumerate() {
+        let err = (a - e).abs();
+        let tol = atol + rtol * e.abs();
+        if err > tol {
+            let margin = err - tol;
+            if worst.map(|(_, _, _, m)| margin > m).unwrap_or(true) {
+                worst = Some((i, a, e, margin));
+            }
+        }
+    }
+    if let Some((i, a, e, _)) = worst {
+        panic!("{what}: mismatch at [{i}]: actual={a} expected={e} (rtol={rtol}, atol={atol})");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -298,7 +298,7 @@ fn prop_packed_b_is_a_permutation_of_the_block() {
     check("packB permutation", 80, |g| {
         let rows = g.dim(40);
         let cols = g.dim(30);
-        let b = Matrix::random(rows, cols, g.rng.next_u64(), -1.0, 1.0);
+        let b = Matrix::<f32>::random(rows, cols, g.rng.next_u64(), -1.0, 1.0);
         let nr = g.rng.range_usize(1, 8);
         let kk = g.rng.range_usize(0, rows - 1);
         let kb_eff = g.rng.range_usize(1, rows - kk);
