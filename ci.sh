@@ -15,6 +15,21 @@ cd "$(dirname "$0")/rust"
 # runs outside this script.
 export EMMERALD_TUNE_CACHE="${EMMERALD_TUNE_CACHE:-$(mktemp -d /tmp/emmerald-tune-XXXXXX)/tuned.json}"
 
+# Hermeticity gate: every integration-test file must opt in to the tune-cache
+# override itself — either by calling util::testkit::hermetic_tune_cache()
+# in each test, or by going through the check() property harness (which
+# calls it on entry). This keeps bare `cargo test` runs hermetic too, not
+# just runs launched through this script.
+echo "== test hermeticity check =="
+hermetic_bad=0
+for f in tests/*.rs; do
+    if ! grep -q -e 'hermetic_tune_cache' -e 'check(' "$f"; then
+        echo "FAIL: $f never calls hermetic_tune_cache() (directly or via check())"
+        hermetic_bad=1
+    fi
+done
+[ "$hermetic_bad" = "0" ] || exit 1
+
 echo "== cargo build --release =="
 cargo build --release
 
@@ -31,6 +46,13 @@ cargo bench --bench tile_vs_dot
 # (skip-passes without AVX2).
 echo "== cargo bench --bench dgemm_tile_vs_naive (f64 tile >= 2x naive guard) =="
 cargo bench --bench dgemm_tile_vs_naive
+
+# Fused-epilogue guard: bias+activation folded into the GEMM writeback must
+# not lose to the GEMM-then-separate-pass route at MLP layer shapes, and the
+# fused-im2col conv path must peak-allocate less than materialised im2col
+# (skip-passes without AVX2).
+echo "== cargo bench --bench fused_epilogue (fused >= two-pass + conv alloc guard) =="
+cargo bench --bench fused_epilogue -- --quick
 
 # Tier-1 lint: clippy over every target (lib, tests, benches, examples)
 # with warnings promoted to errors. CI_SKIP_CLIPPY=1 is the only escape

@@ -1,0 +1,146 @@
+//! Fused-epilogue guard: bias + activation applied inside the GEMM
+//! writeback must not lose to the GEMM-then-separate-pass route at MLP
+//! layer shapes (one traversal of `C` instead of two), and the
+//! fused-im2col conv path must allocate strictly less transient memory
+//! than the materialised im2col lowering (that is the whole point of
+//! packing patches on the fly). Exit code 1 on regression so `ci.sh`
+//! gates on it; hosts without AVX2+FMA skip-pass like `tile_vs_dot`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use emmerald::bench::{gemm_flops, Bencher, FlushMode, Report};
+use emmerald::blas::{Backend, GemmContext, Matrix};
+use emmerald::gemm::{Activation, DispatchConfig, Epilogue, KernelId};
+use emmerald::nn::conv::Conv2d;
+
+/// Counting allocator: tracks live bytes and the high-water mark, so the
+/// conv comparison can measure *peak transient allocation* per call.
+struct CountingAlloc;
+
+static CURRENT: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let cur = CURRENT.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(cur, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        CURRENT.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Peak bytes allocated above the baseline while running `f`.
+fn peak_alloc_during(f: impl FnOnce()) -> usize {
+    let base = CURRENT.load(Ordering::Relaxed);
+    PEAK.store(base, Ordering::Relaxed);
+    f();
+    PEAK.load(Ordering::Relaxed).saturating_sub(base)
+}
+
+fn main() {
+    if !KernelId::Avx2Tile.available() {
+        println!("SKIP-PASS: no AVX2+FMA — fused-epilogue guard needs the tile tier");
+        return;
+    }
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut failed = false;
+
+    // ---- MLP layer shapes: fused vs GEMM + separate bias/tanh pass ----
+    let ctx = GemmContext::new(DispatchConfig { threads: 1, ..DispatchConfig::default() });
+    let shapes: &[(usize, usize, usize)] =
+        if quick { &[(256, 768, 768)] } else { &[(256, 768, 256), (256, 768, 768), (256, 10, 768)] };
+    let mut report = Report::new(
+        "FUSED EPILOGUE — bias+tanh in the writeback vs separate pass (serial GFLOP/s)",
+        &["m", "n", "k", "route"],
+    );
+    for &(m, n, k) in shapes {
+        let a = Matrix::random(m, k, 1, -1.0, 1.0);
+        let b = Matrix::random(k, n, 2, -1.0, 1.0);
+        let bias: Vec<f32> = (0..n).map(|j| ((j % 13) as f32 - 6.0) / 6.0).collect();
+        let ep = Epilogue::new().bias_row(bias).activation(Activation::Tanh);
+        let flops = gemm_flops(m, n, k);
+
+        let fused_plan = ctx.gemm().epilogue(ep.clone()).plan(m, n, k).unwrap();
+        let plain_plan = ctx.gemm().plan(m, n, k).unwrap();
+        let mut c = Matrix::zeros(m, n);
+
+        let mut bench = Bencher::new(1, 5).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+        let two_pass = bench.run("two-pass", flops, || {
+            plain_plan.run(a.data(), b.data(), c.data_mut()).unwrap();
+            ep.apply(&mut c.view_mut(), 0, 0);
+        });
+        let mut bench = Bencher::new(1, 5).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+        let fused = bench.run("fused", flops, || {
+            fused_plan.run(a.data(), b.data(), c.data_mut()).unwrap();
+        });
+
+        println!(
+            "{m}x{n}x{k}  two-pass {:>8.2}  fused {:>8.2} GFLOP/s  (fused/two-pass {:.2}x)",
+            two_pass.mflops() / 1000.0,
+            fused.mflops() / 1000.0,
+            fused.mflops() / two_pass.mflops(),
+        );
+        report.add(&[m.to_string(), n.to_string(), k.to_string(), "two-pass".into()], two_pass.clone());
+        report.add(&[m.to_string(), n.to_string(), k.to_string(), "fused".into()], fused.clone());
+        // 5% noise margin: fused must not lose to doing strictly more work.
+        if fused.mflops() < 0.95 * two_pass.mflops() {
+            eprintln!(
+                "FAIL: fused epilogue ({:.1} MFlop/s) lost to the two-pass route ({:.1} MFlop/s) at {m}x{n}x{k}",
+                fused.mflops(),
+                two_pass.mflops(),
+            );
+            failed = true;
+        }
+    }
+    report.emit("fused_epilogue");
+
+    // ---- Conv: fused im2col must beat materialised im2col on peak allocation ----
+    let cfg = Conv2d { in_channels: 8, out_channels: 8, kernel: 3, stride: 1, padding: 1, dilation: 1 };
+    let (n_img, h, w) = (4usize, 32usize, 32usize);
+    let input: Vec<f32> = (0..n_img * cfg.in_channels * h * w)
+        .map(|i| ((i * 37 % 100) as f32 - 50.0) / 50.0)
+        .collect();
+    let kernels = Matrix::random(cfg.out_channels, cfg.in_channels * 9, 3, -1.0, 1.0);
+    // Warm both routes once: global-context setup, pools and lazily-grown
+    // scratch must not count against either measurement.
+    let warm_fused = cfg.forward(&input, n_img, h, w, &kernels, Backend::Dispatch);
+    let warm_mat = cfg.forward(&input, n_img, h, w, &kernels, Backend::Avx2Tile);
+    assert!(warm_fused.max_abs_diff(&warm_mat) < 2e-4, "fused and materialised conv disagree");
+
+    let fused_peak = peak_alloc_during(|| {
+        let out = cfg.forward(&input, n_img, h, w, &kernels, Backend::Dispatch);
+        std::hint::black_box(&out);
+    });
+    let mat_peak = peak_alloc_during(|| {
+        let out = cfg.forward(&input, n_img, h, w, &kernels, Backend::Avx2Tile);
+        std::hint::black_box(&out);
+    });
+    println!(
+        "conv {n_img}x{}x{h}x{w} k3p1: peak alloc fused {:.0} KiB vs materialised {:.0} KiB",
+        cfg.in_channels,
+        fused_peak as f64 / 1024.0,
+        mat_peak as f64 / 1024.0,
+    );
+    if fused_peak >= mat_peak {
+        eprintln!(
+            "FAIL: fused conv peak allocation ({fused_peak} B) not below the materialised im2col path ({mat_peak} B)"
+        );
+        failed = true;
+    }
+
+    if failed {
+        std::process::exit(1);
+    }
+    println!("PASS: fused epilogue >= two-pass at every shape; fused conv allocates less than im2col");
+}

@@ -79,6 +79,7 @@ pub use matrix::{MatMut, MatRef, Matrix};
 // The planned-execution API lives in `gemm::plan`; re-exported here
 // because it is the public surface most callers should reach for.
 pub use crate::gemm::plan::{GemmBuilder, GemmContext, GemmPlan, PackedA, PackedB};
+pub use crate::gemm::epilogue::{Activation, Bias, Epilogue};
 
 /// Logical transposition of an operand (`op(X) = X` or `Xᵀ`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

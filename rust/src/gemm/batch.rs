@@ -24,7 +24,8 @@
 
 use super::dispatch::{GemmDispatch, KernelId};
 use super::element::{Element, ElementId};
-use super::pack::Scratch;
+use super::epilogue::{Bias, Epilogue};
+use super::pack::{BSource, Scratch};
 use super::simd::VecIsa;
 use super::{blocked, naive};
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
@@ -96,6 +97,7 @@ pub fn gemm_batch<T: Element>(
         ldc,
         batch,
         strides,
+        None,
     )
 }
 
@@ -123,6 +125,7 @@ pub(crate) fn gemm_batch_on<T: Element>(
     ldc: usize,
     batch: usize,
     strides: BatchStrides,
+    ep: Option<&Epilogue<T>>,
 ) -> Result<(), BlasError> {
     if batch == 0 || m == 0 || n == 0 {
         return Ok(());
@@ -147,10 +150,15 @@ pub(crate) fn gemm_batch_on<T: Element>(
         validate_operand("B", br, bc, ldb, strides.b, batch, b.len(), false)?;
     }
 
-    // Pure beta-scale: no A/B reads at all.
+    // Pure beta-scale: no A/B reads at all (the epilogue still lands on
+    // every item's scaled C, at per-item (0,0) offsets).
     if !compute {
         for cs in item_slices(c, strides.c, batch) {
-            MatMut::new(cs, m, n, ldc).expect("validated").scale(beta);
+            let mut cv = MatMut::new(cs, m, n, ldc).expect("validated");
+            cv.scale(beta);
+            if let Some(e) = ep {
+                e.apply(&mut cv, 0, 0);
+            }
         }
         return Ok(());
     }
@@ -158,20 +166,23 @@ pub(crate) fn gemm_batch_on<T: Element>(
     // ---- Shared-B fold: one GEMM over the stacked row space. A must be
     // un-transposed (items stack along rows of op(A)); B may be logically
     // transposed — transb passes straight through, and the dispatcher's
-    // parallel tier is layout-complete. ----
+    // parallel tier is layout-complete. A column-bias epilogue blocks the
+    // fold for batch > 1: it indexes per item-row, and the stacked GEMM
+    // would stretch it across `batch·m` rows (row biases index columns,
+    // which folding leaves untouched).
+    // ----
+    let ep_folds = batch == 1 || !matches!(ep, Some(Epilogue { bias: Bias::Col(_), .. }));
     let foldable = transa == Transpose::No
         && strides.b == 0
         && strides.a == m * lda
-        && strides.c == m * ldc;
+        && strides.c == m * ldc
+        && ep_folds;
     if foldable {
         let rows = batch * m;
         let a_all = MatRef::new(a, rows, k, lda).expect("validated");
         let b_one = MatRef::new(b, br, bc, ldb).expect("validated");
         let mut c_all = MatMut::new(c, rows, n, ldc).expect("validated");
-        match forced {
-            Some(id) => d.gemm_with_on(pool, id, transa, transb, alpha, a_all, b_one, beta, &mut c_all),
-            None => d.gemm_on(pool, transa, transb, alpha, a_all, b_one, beta, &mut c_all),
-        };
+        d.gemm_ep_on(pool, forced, transa, transb, alpha, a_all, b_one, beta, &mut c_all, ep);
         return Ok(());
     }
 
@@ -201,6 +212,7 @@ pub(crate) fn gemm_batch_on<T: Element>(
         a,
         b,
         strides,
+        ep,
     };
 
     if workers <= 1 {
@@ -246,6 +258,8 @@ struct ItemJob<'a, T> {
     a: &'a [T],
     b: &'a [T],
     strides: BatchStrides,
+    /// Fused epilogue, applied per item at that item's (0,0) C origin.
+    ep: Option<&'a Epilogue<T>>,
 }
 
 /// Run a contiguous group of batch items with one reused packing scratch.
@@ -269,6 +283,7 @@ fn run_item_group<T: Element>(job: &ItemJob<'_, T>, items: Vec<(usize, &mut [T])
             job.beta,
             &mut cv,
             &mut scratch,
+            job.ep,
         );
     }
 }
@@ -290,33 +305,48 @@ fn run_serial_scratch<T: Element>(
     beta: T,
     c: &mut MatMut<'_, T>,
     scratch: &mut Scratch<T>,
+    ep: Option<&Epilogue<T>>,
 ) {
     // Compensated-f32 mode intercepts every per-item compute — through
     // the same GemmDispatch helper the serial dispatch path uses, so
-    // batched and per-call compensated results can never diverge.
+    // batched and per-call compensated results can never diverge. The
+    // epilogue lands as a post-pass (bitwise identical: the stored value
+    // is the same value a fused writeback would transform).
     if d.comp_intercept(transa, transb, alpha, a, b, beta, c) {
+        if let Some(e) = ep {
+            e.apply(c, 0, 0);
+        }
         return;
     }
+    let fused = ep.map(|e| (e, 0, 0));
     match id {
         KernelId::Avx2Tile if d.has_avx2() => {
-            super::tile::gemm_with_scratch(d.params_tile_t::<T>(), transa, transb, alpha, a, b, beta, c, scratch);
+            super::tile::gemm_scratch_ep(d.params_tile_t::<T>(), transa, alpha, a, BSource::Mat(b, transb), beta, c, scratch, fused);
         }
         KernelId::Avx2 if d.has_avx2() => {
-            super::simd::gemm_vec_scratch(VecIsa::Avx2, d.params_dot_t::<T>(VecIsa::Avx2), transa, transb, alpha, a, b, beta, c, scratch);
+            super::simd::gemm_vec_scratch_ep(VecIsa::Avx2, d.params_dot_t::<T>(VecIsa::Avx2), transa, transb, alpha, a, b, beta, c, scratch, fused);
         }
         KernelId::Avx2Tile | KernelId::Avx2 | KernelId::Simd if d.has_sse() && T::ID == ElementId::F32 => {
-            super::simd::gemm_vec_scratch(VecIsa::Sse, d.params_dot_t::<T>(VecIsa::Sse), transa, transb, alpha, a, b, beta, c, scratch);
+            super::simd::gemm_vec_scratch_ep(VecIsa::Sse, d.params_dot_t::<T>(VecIsa::Sse), transa, transb, alpha, a, b, beta, c, scratch, fused);
         }
-        KernelId::Naive => naive::gemm(transa, transb, alpha, a, b, beta, c),
+        KernelId::Naive => {
+            naive::gemm(transa, transb, alpha, a, b, beta, c);
+            if let Some(e) = ep {
+                e.apply(c, 0, 0);
+            }
+        }
         KernelId::Blocked | KernelId::Avx2Tile | KernelId::Avx2 | KernelId::Simd => {
             blocked::gemm(&d.config().blocked, transa, transb, alpha, a, b, beta, c);
+            if let Some(e) = ep {
+                e.apply(c, 0, 0);
+            }
         }
         // Parallel/Strassen are whole-problem drivers with no per-item
         // meaning (and nesting the parallel driver inside the batch
         // fan-out would multiply thread counts); unreachable from the
         // public batch APIs, but degrade to the best serial kernel.
         KernelId::Parallel | KernelId::Strassen => {
-            run_serial_scratch(d, d.best_serial_vector_t::<T>(), transa, transb, alpha, a, b, beta, c, scratch);
+            run_serial_scratch(d, d.best_serial_vector_t::<T>(), transa, transb, alpha, a, b, beta, c, scratch, ep);
         }
     }
 }
@@ -635,6 +665,7 @@ mod tests {
                 n,
                 batch,
                 strides,
+                None,
             )
             .unwrap();
             assert_allclose(&c_got, &c_ref, 5e-4, 1e-4, &format!("forced {id:?} batch"));

@@ -31,6 +31,7 @@
 //! local [`GemmDispatch`] for custom thresholds or deterministic tests.
 
 use super::element::{Element, ElementId};
+use super::epilogue::Epilogue;
 use super::params::{BlockParams, TileParams};
 use super::parallel::SerialVecKernel;
 use super::simd::VecIsa;
@@ -634,7 +635,34 @@ impl GemmDispatch {
         let shape = shape_of(transa, transb, a, c);
         assert_coherent(&shape, a, b);
         let id = self.select_t::<T>(&shape, alpha);
-        self.run(pool, id, &shape, transa, transb, alpha, a, b, beta, c)
+        self.run(pool, id, &shape, transa, transb, alpha, a, b, beta, c, None)
+    }
+
+    /// As [`gemm_on`](Self::gemm_on) / [`gemm_with_on`](Self::gemm_with_on)
+    /// (forced kernel optional), with a fused epilogue. Kernels with a
+    /// fused writeback (the dot, tile and parallel tiers) apply it as
+    /// each `C` element is stored; scalar tiers (naive, blocked,
+    /// Strassen, compensated) apply it as a post-pass over `C` — bitwise
+    /// identical, since the store is exact and the same scalar function
+    /// runs on the same value either way.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn gemm_ep_on<T: Element>(
+        &self,
+        pool: Option<&ThreadPool>,
+        forced: Option<KernelId>,
+        transa: Transpose,
+        transb: Transpose,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
+        ep: Option<&Epilogue<T>>,
+    ) -> KernelId {
+        let shape = shape_of(transa, transb, a, c);
+        assert_coherent(&shape, a, b);
+        let id = forced.unwrap_or_else(|| self.select_t::<T>(&shape, alpha));
+        self.run(pool, id, &shape, transa, transb, alpha, a, b, beta, c, ep)
     }
 
     /// Run one GEMM on a *specific* kernel (the conformance suite drives
@@ -678,7 +706,7 @@ impl GemmDispatch {
     ) -> KernelId {
         let shape = shape_of(transa, transb, a, c);
         assert_coherent(&shape, a, b);
-        self.run(pool, id, &shape, transa, transb, alpha, a, b, beta, c)
+        self.run(pool, id, &shape, transa, transb, alpha, a, b, beta, c, None)
     }
 
     /// The one decision point for [`Accumulation::CompensatedF32`]: when
@@ -721,20 +749,32 @@ impl GemmDispatch {
         b: MatRef<'_, T>,
         beta: T,
         c: &mut MatMut<'_, T>,
+        ep: Option<&Epilogue<T>>,
     ) -> KernelId {
         // Compensated-f32 mode intercepts every serial compute kernel
         // (the parallel tier composes instead: its slices run the
-        // compensated driver via serial_vec_kernel_t).
+        // compensated driver via serial_vec_kernel_t). Epilogues land as
+        // a post-pass: the compensated writeback is exact, so the pass
+        // is bitwise identical to a fused application.
         if id != KernelId::Parallel && self.comp_intercept(transa, transb, alpha, a, b, beta, c) {
+            if let Some(e) = ep {
+                e.apply(c, 0, 0);
+            }
             return id;
         }
         match id {
             KernelId::Naive => {
                 naive::gemm(transa, transb, alpha, a, b, beta, c);
+                if let Some(e) = ep {
+                    e.apply(c, 0, 0);
+                }
                 KernelId::Naive
             }
             KernelId::Blocked => {
                 blocked::gemm(&self.cfg.blocked, transa, transb, alpha, a, b, beta, c);
+                if let Some(e) = ep {
+                    e.apply(c, 0, 0);
+                }
                 KernelId::Blocked
             }
             KernelId::Simd => {
@@ -742,16 +782,27 @@ impl GemmDispatch {
                 // scalar blocked proxy (dispatch never selects it — this
                 // covers forced calls).
                 if !self.have_sse || T::ID == ElementId::F64 {
-                    return self.run(pool, KernelId::Blocked, shape, transa, transb, alpha, a, b, beta, c);
+                    return self.run(pool, KernelId::Blocked, shape, transa, transb, alpha, a, b, beta, c, ep);
                 }
-                simd::gemm_vec(VecIsa::Sse, &self.cfg.sse, transa, transb, alpha, a, b, beta, c);
+                simd::gemm_vec_ep(
+                    VecIsa::Sse,
+                    &self.cfg.sse,
+                    transa,
+                    transb,
+                    alpha,
+                    a,
+                    b,
+                    beta,
+                    c,
+                    ep.map(|e| (e, 0, 0)),
+                );
                 KernelId::Simd
             }
             KernelId::Avx2 => {
                 if !self.have_avx2 {
-                    return self.run(pool, KernelId::Simd, shape, transa, transb, alpha, a, b, beta, c);
+                    return self.run(pool, KernelId::Simd, shape, transa, transb, alpha, a, b, beta, c, ep);
                 }
-                simd::gemm_vec(
+                simd::gemm_vec_ep(
                     VecIsa::Avx2,
                     self.params_dot_t::<T>(VecIsa::Avx2),
                     transa,
@@ -761,14 +812,25 @@ impl GemmDispatch {
                     b,
                     beta,
                     c,
+                    ep.map(|e| (e, 0, 0)),
                 );
                 KernelId::Avx2
             }
             KernelId::Avx2Tile => {
                 if !self.have_avx2 {
-                    return self.run(pool, KernelId::Simd, shape, transa, transb, alpha, a, b, beta, c);
+                    return self.run(pool, KernelId::Simd, shape, transa, transb, alpha, a, b, beta, c, ep);
                 }
-                tile::gemm(self.params_tile_t::<T>(), transa, transb, alpha, a, b, beta, c);
+                tile::gemm_ep(
+                    self.params_tile_t::<T>(),
+                    transa,
+                    transb,
+                    alpha,
+                    a,
+                    b,
+                    beta,
+                    c,
+                    ep.map(|e| (e, 0, 0)),
+                );
                 KernelId::Avx2Tile
             }
             KernelId::Parallel => {
@@ -787,9 +849,9 @@ impl GemmDispatch {
                 // covers forced calls.) Pure beta-scales still sweep.
                 let no_vector = self.best_serial_vector_t::<T>() == KernelId::Blocked;
                 if split == parallel::Split::Serial || (!pure_scale && (!self.have_sse || no_vector)) {
-                    return self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c);
+                    return self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c, ep);
                 }
-                match parallel::gemm_parallel_vec(
+                match parallel::gemm_parallel_vec_ep(
                     &self.serial_vec_kernel_t::<T>(shape.m),
                     pool,
                     self.threads(),
@@ -800,16 +862,17 @@ impl GemmDispatch {
                     b,
                     beta,
                     c,
+                    ep,
                 ) {
                     Ok(()) => KernelId::Parallel,
                     // Shape mismatch can only come from caller-constructed
                     // inconsistent views; recover via the serial path.
-                    Err(_) => self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c),
+                    Err(_) => self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c, ep),
                 }
             }
             KernelId::Strassen => {
                 if !shape.no_trans() || alpha == T::ZERO || shape.min_dim() == 0 {
-                    return self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c);
+                    return self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c, ep);
                 }
                 let base = match self.best_serial_vector() {
                     KernelId::Avx2Tile => Backend::Avx2Tile,
@@ -820,9 +883,12 @@ impl GemmDispatch {
                 // The element hook runs the recursion (f32) or reports
                 // "no Strassen tier" (f64 → serial vector ladder).
                 if T::strassen(self.cfg.strassen_cutoff, base, alpha, a, b, beta, c) {
+                    if let Some(e) = ep {
+                        e.apply(c, 0, 0);
+                    }
                     KernelId::Strassen
                 } else {
-                    self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c)
+                    self.run_serial_vector(pool, shape, transa, transb, alpha, a, b, beta, c, ep)
                 }
             }
         }
@@ -840,9 +906,10 @@ impl GemmDispatch {
         b: MatRef<'_, T>,
         beta: T,
         c: &mut MatMut<'_, T>,
+        ep: Option<&Epilogue<T>>,
     ) -> KernelId {
         let id = self.select_serial_t::<T>(shape, alpha);
-        self.run(pool, id, shape, transa, transb, alpha, a, b, beta, c)
+        self.run(pool, id, shape, transa, transb, alpha, a, b, beta, c, ep)
     }
 }
 

@@ -40,6 +40,7 @@
 //! | Strassen–Winograd     | yes          | — (degrades to serial) |
 //! | batched / planned     | yes          | yes                    |
 //! | compensated mode      | yes (Dot2)   | n/a (already f64)      |
+//! | fused epilogue        | yes          | yes                    |
 
 use super::params::{BlockParams, Unroll};
 use super::simd::VecIsa;
@@ -131,6 +132,10 @@ pub trait Element:
     fn max(self, other: Self) -> Self;
     /// Square root (the LAPACK tier's pivot op).
     fn sqrt(self) -> Self;
+    /// Hyperbolic tangent (the fused-epilogue activation the MLP layer
+    /// uses; f32 delegates to `f32::tanh` so fused results stay bitwise
+    /// identical to the legacy separate bias+tanh pass).
+    fn tanh(self) -> Self;
     /// Finiteness check (the LAPACK tier's pivot guard).
     fn is_finite(self) -> bool;
     /// One uniform draw in `[lo, hi)` — f32 draws exactly the bits the
@@ -291,6 +296,11 @@ impl Element for f32 {
     #[inline(always)]
     fn sqrt(self) -> f32 {
         f32::sqrt(self)
+    }
+
+    #[inline(always)]
+    fn tanh(self) -> f32 {
+        f32::tanh(self)
     }
 
     #[inline(always)]
@@ -468,6 +478,11 @@ impl Element for f64 {
     #[inline(always)]
     fn sqrt(self) -> f64 {
         f64::sqrt(self)
+    }
+
+    #[inline(always)]
+    fn tanh(self) -> f64 {
+        f64::tanh(self)
     }
 
     #[inline(always)]

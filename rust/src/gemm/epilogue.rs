@@ -1,0 +1,292 @@
+//! Fused GEMM epilogues: bias + activation + clamp applied **inside** the
+//! kernels' C writeback.
+//!
+//! The paper's lesson is that GEMM performance is won by respecting the
+//! memory hierarchy — and the `nn` layer used to throw part of that win
+//! away by making one or two extra full passes over `C` (bias-add, then
+//! activation) after `sgemm` returned. An [`Epilogue`] describes those
+//! trailing element-wise ops declaratively; the drivers apply it to each
+//! `C` element exactly once, immediately after that element's final
+//! k-block has been accumulated, while the cache line is still hot. One
+//! traversal of `C` instead of two or three.
+//!
+//! Semantics: with `y = alpha·(A·B)[r][c] + beta·C[r][c]` the stored
+//! result is `clamp(activation(y + bias[r or c]))`. The epilogue sees
+//! **global** row/column indices of `C`, whichever driver slice computes
+//! the element — that is what keeps fused results bitwise identical
+//! across the serial, parallel and prepacked drivers, and bitwise
+//! identical to running the plain GEMM followed by [`Epilogue::apply`]
+//! as a separate pass (same scalar function, same order, applied to the
+//! same accumulated value).
+//!
+//! Attach one to a plan via `GemmBuilder::epilogue`; `nn::Mlp` and the
+//! fused conv path route their bias/activation through it.
+
+use super::element::Element;
+use crate::blas::{BlasError, MatMut};
+
+/// Bias vector added to every element of `C` before activation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Bias<T = f32> {
+    /// No bias.
+    None,
+    /// One value per **column** of `C` (length `n`), added to every row —
+    /// the MLP-layer shape (one bias per output feature).
+    Row(Vec<T>),
+    /// One value per **row** of `C` (length `m`), added to every column.
+    Col(Vec<T>),
+}
+
+/// Element-wise activation applied after the bias add.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    /// Identity.
+    None,
+    /// `max(x, 0)`.
+    Relu,
+    /// The tanh-approximated GELU:
+    /// `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`.
+    Gelu,
+    /// Hyperbolic tangent (the paper-era MLP's hidden activation);
+    /// bitwise identical to the legacy separate bias+`tanh` pass.
+    Tanh,
+}
+
+/// A fused epilogue descriptor: `C ← clamp(act(C + bias))` applied in the
+/// kernels' writeback. Build with the fluent setters, attach via
+/// `GemmBuilder::epilogue`. The default value is the identity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Epilogue<T = f32> {
+    /// Bias vector (validated against the plan's `m`/`n` at plan time).
+    pub bias: Bias<T>,
+    /// Activation applied after the bias add.
+    pub activation: Activation,
+    /// Optional saturating clamp `(lo, hi)` applied last.
+    pub clamp: Option<(T, T)>,
+}
+
+impl<T: Element> Default for Epilogue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Element> Epilogue<T> {
+    /// The identity epilogue (no bias, no activation, no clamp).
+    pub fn new() -> Self {
+        Self { bias: Bias::None, activation: Activation::None, clamp: None }
+    }
+
+    /// Add `bias[c]` to every element of column `c` (length-`n` vector —
+    /// one bias per output feature).
+    pub fn bias_row(mut self, bias: Vec<T>) -> Self {
+        self.bias = Bias::Row(bias);
+        self
+    }
+
+    /// Add `bias[r]` to every element of row `r` (length-`m` vector).
+    pub fn bias_col(mut self, bias: Vec<T>) -> Self {
+        self.bias = Bias::Col(bias);
+        self
+    }
+
+    /// Set the activation.
+    pub fn activation(mut self, act: Activation) -> Self {
+        self.activation = act;
+        self
+    }
+
+    /// Saturate the result into `[lo, hi]` after the activation.
+    pub fn clamp(mut self, lo: T, hi: T) -> Self {
+        self.clamp = Some((lo, hi));
+        self
+    }
+
+    /// Whether this epilogue is the identity (drivers skip fusion then,
+    /// so an identity epilogue is bitwise equal to a plain GEMM).
+    pub fn is_identity(&self) -> bool {
+        matches!(self.bias, Bias::None)
+            && matches!(self.activation, Activation::None)
+            && self.clamp.is_none()
+    }
+
+    /// Validate the bias length against the output shape `m × n`.
+    pub fn validate(&self, m: usize, n: usize) -> Result<(), BlasError> {
+        match &self.bias {
+            Bias::None => Ok(()),
+            Bias::Row(v) if v.len() == n => Ok(()),
+            Bias::Row(v) => Err(BlasError::ShapeMismatch {
+                what: "epilogue row bias",
+                expect: (1, n),
+                got: (1, v.len()),
+            }),
+            Bias::Col(v) if v.len() == m => Ok(()),
+            Bias::Col(v) => Err(BlasError::ShapeMismatch {
+                what: "epilogue col bias",
+                expect: (1, m),
+                got: (1, v.len()),
+            }),
+        }
+    }
+
+    /// The scalar epilogue: bias add, then activation, then clamp.
+    /// `r`/`c` are **global** indices into `C` (see module docs).
+    #[inline]
+    pub fn apply_scalar(&self, v: T, r: usize, c: usize) -> T {
+        let mut v = v;
+        match &self.bias {
+            Bias::None => {}
+            Bias::Row(bias) => v += bias[c],
+            Bias::Col(bias) => v += bias[r],
+        }
+        v = match self.activation {
+            Activation::None => v,
+            Activation::Relu => v.max(T::ZERO),
+            Activation::Gelu => gelu(v),
+            Activation::Tanh => v.tanh(),
+        };
+        if let Some((lo, hi)) = self.clamp {
+            if v < lo {
+                v = lo;
+            }
+            if v > hi {
+                v = hi;
+            }
+        }
+        v
+    }
+
+    /// Apply the epilogue to a whole `C` view as a separate pass. The
+    /// view starts at global element `(r0, c0)` of the logical output —
+    /// the drivers use this for slices and for kernels without a fused
+    /// writeback (it is bitwise identical to fusion: same scalar
+    /// function on the same accumulated values), and the test-suites use
+    /// it as the unfused reference.
+    pub fn apply(&self, c: &mut MatMut<'_, T>, r0: usize, c0: usize) {
+        if self.is_identity() {
+            return;
+        }
+        for r in 0..c.rows() {
+            for col in 0..c.cols() {
+                let v = self.apply_scalar(c.get(r, col), r0 + r, c0 + col);
+                c.set(r, col, v);
+            }
+        }
+    }
+}
+
+/// Tanh-approximated GELU, computed in `T` arithmetic so f32 and f64
+/// results are each self-consistent across every driver.
+#[inline]
+fn gelu<T: Element>(x: T) -> T {
+    // sqrt(2/pi) and the cubic coefficient of Hendrycks & Gimpel (2016).
+    let c = T::from_f64(0.797_884_560_802_865_4);
+    let a = T::from_f64(0.044_715);
+    let half = T::from_f64(0.5);
+    let inner = c * (x + a * x * x * x);
+    half * x * (T::ONE + inner.tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+
+    #[test]
+    fn identity_detection_and_noop_apply() {
+        let ep = Epilogue::<f32>::new();
+        assert!(ep.is_identity());
+        assert!(!ep.clone().activation(Activation::Relu).is_identity());
+        assert!(!ep.clone().bias_row(vec![1.0]).is_identity());
+        assert!(!ep.clone().clamp(0.0, 1.0).is_identity());
+        let mut m = Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        let before = m.data().to_vec();
+        ep.apply(&mut m.view_mut(), 0, 0);
+        assert_eq!(m.data(), &before[..]);
+    }
+
+    #[test]
+    fn bias_orientation_and_order() {
+        // Row bias indexes by column, Col bias by row; bias is added
+        // before the activation.
+        let ep = Epilogue::new().bias_row(vec![10.0, 20.0, 30.0]);
+        assert_eq!(ep.apply_scalar(1.0f32, 5, 2), 31.0);
+        let ep = Epilogue::new().bias_col(vec![10.0, 20.0]).activation(Activation::Relu);
+        assert_eq!(ep.apply_scalar(-15.0f32, 1, 7), 5.0);
+        assert_eq!(ep.apply_scalar(-25.0f32, 1, 7), 0.0);
+    }
+
+    #[test]
+    fn clamp_saturates_after_activation() {
+        let ep = Epilogue::new().activation(Activation::Relu).clamp(0.5, 2.0);
+        assert_eq!(ep.apply_scalar(-1.0f32, 0, 0), 0.5); // relu→0, clamp lo
+        assert_eq!(ep.apply_scalar(1.0f32, 0, 0), 1.0);
+        assert_eq!(ep.apply_scalar(9.0f32, 0, 0), 2.0);
+    }
+
+    #[test]
+    fn tanh_matches_std() {
+        let ep = Epilogue::new().bias_row(vec![0.25]).activation(Activation::Tanh);
+        let x = 0.75f32;
+        assert_eq!(ep.apply_scalar(x, 0, 0), (x + 0.25).tanh());
+    }
+
+    #[test]
+    fn gelu_fixed_points_and_sign() {
+        assert_eq!(gelu(0.0f32), 0.0);
+        // GELU(x) ≈ x for large x, ≈ 0 for very negative x.
+        assert!((gelu(6.0f32) - 6.0).abs() < 1e-4);
+        assert!(gelu(-6.0f32).abs() < 1e-4);
+        // f64 path agrees with an f64 reference evaluation.
+        let x = 0.5f64;
+        let want = 0.5 * x * (1.0 + (0.797_884_560_802_865_4 * (x + 0.044_715 * x * x * x)).tanh());
+        assert_eq!(gelu(x), want);
+    }
+
+    #[test]
+    fn validate_checks_bias_lengths() {
+        assert!(Epilogue::<f32>::new().validate(3, 4).is_ok());
+        assert!(Epilogue::new().bias_row(vec![0.0; 4]).validate(3, 4).is_ok());
+        assert!(Epilogue::new().bias_col(vec![0.0; 3]).validate(3, 4).is_ok());
+        assert!(matches!(
+            Epilogue::new().bias_row(vec![0.0; 3]).validate(3, 4),
+            Err(BlasError::ShapeMismatch { what: "epilogue row bias", .. })
+        ));
+        assert!(matches!(
+            Epilogue::new().bias_col(vec![0.0; 4]).validate(3, 4),
+            Err(BlasError::ShapeMismatch { what: "epilogue col bias", .. })
+        ));
+    }
+
+    #[test]
+    fn apply_uses_global_offsets() {
+        // A 2×2 view representing the slice of C at global (1, 2) must
+        // index the bias vectors at the global positions.
+        let ep = Epilogue::new().bias_row(vec![0.0, 0.0, 100.0, 200.0]);
+        let mut m = Matrix::zeros(2, 2);
+        ep.apply(&mut m.view_mut(), 1, 2);
+        assert_eq!(m.get(0, 0), 100.0);
+        assert_eq!(m.get(1, 1), 200.0);
+        let ep = Epilogue::new().bias_col(vec![0.0, 7.0, 9.0]);
+        let mut m = Matrix::zeros(2, 2);
+        ep.apply(&mut m.view_mut(), 1, 2);
+        assert_eq!(m.get(0, 1), 7.0);
+        assert_eq!(m.get(1, 0), 9.0);
+    }
+
+    #[test]
+    fn apply_matches_scalar_everywhere() {
+        let ep = Epilogue::new()
+            .bias_row((0..5).map(|i| i as f32 * 0.3 - 0.7).collect())
+            .activation(Activation::Gelu)
+            .clamp(-0.5, 0.6);
+        let src = Matrix::from_fn(4, 5, |r, c| (r as f32 - 1.5) * 0.4 + c as f32 * 0.1);
+        let mut got = src.clone();
+        ep.apply(&mut got.view_mut(), 0, 0);
+        for r in 0..4 {
+            for c in 0..5 {
+                assert_eq!(got.get(r, c), ep.apply_scalar(src.get(r, c), r, c));
+            }
+        }
+    }
+}

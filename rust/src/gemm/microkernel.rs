@@ -34,6 +34,15 @@
 //!
 //! Plus [`sse_dot_panel_strided`], which reads `B` through its original
 //! strided layout — the "no re-buffering" ablation.
+//!
+//! Fused epilogues (bias / activation / clamp — see
+//! [`crate::gemm::epilogue`]) never reach this layer: the panels here
+//! produce raw partial dot products, and the drivers above
+//! ([`crate::gemm::simd`], [`crate::gemm::tile`], the prepacked planned
+//! paths) apply the epilogue in their *writeback* of the final k-block,
+//! where the accumulated value for each `C` element is complete. Keeping
+//! the micro-kernels epilogue-free keeps their register budgets and
+//! unroll structure exactly as the paper describes.
 
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;

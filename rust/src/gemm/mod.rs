@@ -61,6 +61,11 @@
 //!   [`plan::GemmPlan`]s that resolve kernel/geometry/split once and
 //!   execute many times, with [`plan::PackedA`]/[`plan::PackedB`]
 //!   prepacked-operand handles for weight-stationary workloads.
+//! * [`epilogue`] — fused epilogues ([`epilogue::Epilogue`]: bias +
+//!   activation + clamp) applied inside the kernels' C writeback — one
+//!   traversal of `C` instead of two or three, bitwise identical across
+//!   the serial, parallel and prepacked drivers. Attach via
+//!   `GemmBuilder::epilogue`.
 
 pub mod avx2;
 pub mod batch;
@@ -68,6 +73,7 @@ pub mod blocked;
 pub mod comp;
 pub mod dispatch;
 pub mod element;
+pub mod epilogue;
 pub mod parallel;
 pub mod plan;
 pub mod strassen;
@@ -81,6 +87,7 @@ pub mod tile;
 pub use batch::{gemm_batch, BatchStrides};
 pub use dispatch::{registry, registry_for, Accumulation, DispatchConfig, GemmDispatch, KernelId, KernelInfo};
 pub use element::{Element, ElementId};
+pub use epilogue::{Activation, Bias, Epilogue};
 pub use params::{BlockParams, TileParams, Unroll};
 pub use plan::{GemmBuilder, GemmContext, GemmPlan, PackedA, PackedB};
 

@@ -17,6 +17,53 @@
 use super::element::Element;
 use crate::blas::{MatRef, Transpose};
 
+/// A *virtual* `op(B)` operand: anything that can hand the packers one
+/// logical element per `(row, col)` index. The packers stream such a
+/// source panel-by-panel into the normal packed layouts, so a producer
+/// that can compute its elements on demand — the fused-im2col conv view
+/// ([`crate::nn::conv::Im2ColRef`]) is the motivating case — never has
+/// to materialise the full matrix: only the packed k-block scratch
+/// (`kc × nc` elements) ever exists in memory.
+///
+/// Indices are in the *logical* (already-transposed) orientation: `get(r,
+/// c)` is `op(B)[r][c]`, with `r < rows()` and `c < cols()`.
+pub trait PanelSource<T> {
+    /// Logical row count of `op(B)` (the GEMM `k`).
+    fn rows(&self) -> usize;
+    /// Logical column count of `op(B)` (the GEMM `n`).
+    fn cols(&self) -> usize;
+    /// The logical element `op(B)[r][c]`.
+    fn get(&self, r: usize, c: usize) -> T;
+}
+
+/// A `B` operand as the tile driver sees it: a stored matrix plus its
+/// transpose flag, or a virtual [`PanelSource`] packed on demand.
+#[derive(Clone, Copy)]
+pub(crate) enum BSource<'s, T = f32> {
+    /// A stored matrix (the normal GEMM path).
+    Mat(MatRef<'s, T>, Transpose),
+    /// A virtual source; elements are computed during packing.
+    Virtual(&'s dyn PanelSource<T>),
+}
+
+impl<T: Element> BSource<'_, T> {
+    /// Pack a k-block of this source into `tb`'s NR-panel layout.
+    pub(crate) fn pack_tile(
+        &self,
+        tb: &mut TilePackedB<T>,
+        kk: usize,
+        kb_eff: usize,
+        j0: usize,
+        nb_eff: usize,
+        nr: usize,
+    ) {
+        match *self {
+            BSource::Mat(b, transb) => tb.pack(b, transb, kk, kb_eff, j0, nb_eff, nr),
+            BSource::Virtual(src) => tb.pack_from(src, kk, kb_eff, j0, nb_eff, nr),
+        }
+    }
+}
+
 /// Columns are padded to a multiple of this many f32 lanes so both the
 /// 4-wide SSE and 8-wide AVX2 kernels can run their full-vector loop on
 /// the same buffer.
@@ -356,6 +403,38 @@ impl<T: Element> TilePackedB<T> {
         }
     }
 
+    /// [`pack`](Self::pack) from a virtual [`PanelSource`] instead of a
+    /// stored matrix: identical layout, elements pulled on demand (the
+    /// fused-im2col conv path packs patch windows straight into panels
+    /// without ever materialising the im2col matrix).
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_from(
+        &mut self,
+        src: &dyn PanelSource<T>,
+        kk: usize,
+        kb_eff: usize,
+        j0: usize,
+        nb_eff: usize,
+        nr: usize,
+    ) {
+        assert!(nr >= 1);
+        let panels = nb_eff.div_ceil(nr).max(1);
+        self.buf.clear();
+        self.buf.resize(panels * nr * kb_eff.max(1), T::ZERO);
+        self.nr = nr;
+        self.kc_eff = kb_eff;
+        self.cols = nb_eff;
+        for q in 0..panels {
+            let base = q * nr * kb_eff;
+            let w = nr.min(nb_eff.saturating_sub(q * nr));
+            for p in 0..kb_eff {
+                for l in 0..w {
+                    self.buf[base + p * nr + l] = src.get(kk + p, j0 + q * nr + l);
+                }
+            }
+        }
+    }
+
     /// Number of panels currently packed.
     pub fn panels(&self) -> usize {
         self.cols.div_ceil(self.nr).max(1)
@@ -676,6 +755,65 @@ mod tests {
         for p in 0..2 {
             for l in 3..16 {
                 assert_eq!(unsafe { *tb.panel_ptr(0).add(p * 16 + l) }, 0.0, "stale lane {l} at k {p}");
+            }
+        }
+    }
+
+    /// A [`PanelSource`] view over a stored matrix — the trivial virtual
+    /// source used to pin `pack_from` to `pack`.
+    struct MatSource<'a>(&'a Matrix);
+
+    impl PanelSource<f32> for MatSource<'_> {
+        fn rows(&self) -> usize {
+            self.0.rows()
+        }
+        fn cols(&self) -> usize {
+            self.0.cols()
+        }
+        fn get(&self, r: usize, c: usize) -> f32 {
+            self.0.get(r, c)
+        }
+    }
+
+    #[test]
+    fn pack_from_matches_pack_including_fringes() {
+        // Same k-block + column window, panel fringe and all: the virtual
+        // pack must produce byte-identical panels to the matrix pack.
+        let b = Matrix::from_fn(9, 11, |r, c| (r * 13 + c) as f32 + 0.5);
+        let mut direct = TilePackedB::new();
+        let mut virt = TilePackedB::new();
+        for &(kk, kb_eff, j0, nb_eff, nr) in
+            &[(0, 9, 0, 11, 4), (2, 5, 3, 7, 4), (1, 3, 8, 3, 16), (0, 1, 0, 1, 1)]
+        {
+            direct.pack(b.view(), Transpose::No, kk, kb_eff, j0, nb_eff, nr);
+            virt.pack_from(&MatSource(&b), kk, kb_eff, j0, nb_eff, nr);
+            assert_eq!(direct.panels(), virt.panels());
+            assert_eq!(direct.kc_eff(), virt.kc_eff());
+            for q in 0..direct.panels() {
+                for o in 0..nr * kb_eff {
+                    let d = unsafe { *direct.panel_ptr(q).add(o) };
+                    let v = unsafe { *virt.panel_ptr(q).add(o) };
+                    assert_eq!(d, v, "kk={kk} kb={kb_eff} j0={j0} nb={nb_eff} nr={nr} q={q} o={o}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bsource_variants_pack_identically() {
+        let b = Matrix::from_fn(6, 9, |r, c| (r * 9 + c) as f32 - 20.0);
+        let src = MatSource(&b);
+        let mut from_mat = TilePackedB::new();
+        let mut from_virt = TilePackedB::new();
+        BSource::Mat(b.view(), Transpose::No).pack_tile(&mut from_mat, 1, 4, 2, 7, 4);
+        BSource::<f32>::Virtual(&src).pack_tile(&mut from_virt, 1, 4, 2, 7, 4);
+        for q in 0..from_mat.panels() {
+            for o in 0..4 * 4 {
+                assert_eq!(
+                    unsafe { *from_mat.panel_ptr(q).add(o) },
+                    unsafe { *from_virt.panel_ptr(q).add(o) },
+                    "q={q} o={o}"
+                );
             }
         }
     }

@@ -34,8 +34,10 @@
 
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
 use crate::gemm::element::Element;
+use crate::gemm::epilogue::Epilogue;
 use crate::gemm::params::TileParams;
-use crate::gemm::simd::{gemm_vec, VecIsa};
+use crate::gemm::simd::{gemm_vec, gemm_vec_ep, VecIsa};
+use crate::gemm::tile::EpRef;
 use crate::gemm::{tile, BlockParams};
 use crate::util::threadpool::{run_borrowed_on, ThreadPool};
 
@@ -74,6 +76,38 @@ impl SerialVecKernel {
             SerialVecKernel::Dot(isa, p) => gemm_vec(*isa, p, transa, transb, alpha, a, b, beta, c),
             SerialVecKernel::Tile(p) => tile::gemm(p, transa, transb, alpha, a, b, beta, c),
             SerialVecKernel::Comp(p) => T::comp_gemm(p, transa, transb, alpha, a, b, beta, c),
+        }
+    }
+
+    /// As [`run`](Self::run), with a fused epilogue carrying the slice's
+    /// global `(row, col)` offsets. The dot and tile drivers fuse it into
+    /// their writeback; the compensated driver (whose writeback lives
+    /// behind [`Element::comp_gemm`]) applies it as a post-pass over the
+    /// slice — bitwise identical, since both orders apply the same scalar
+    /// function to the same accumulated value.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_ep<T: Element>(
+        &self,
+        transa: Transpose,
+        transb: Transpose,
+        alpha: T,
+        a: MatRef<'_, T>,
+        b: MatRef<'_, T>,
+        beta: T,
+        c: &mut MatMut<'_, T>,
+        ep: EpRef<'_, T>,
+    ) {
+        match self {
+            SerialVecKernel::Dot(isa, p) => {
+                gemm_vec_ep(*isa, p, transa, transb, alpha, a, b, beta, c, ep)
+            }
+            SerialVecKernel::Tile(p) => tile::gemm_ep(p, transa, transb, alpha, a, b, beta, c, ep),
+            SerialVecKernel::Comp(p) => {
+                T::comp_gemm(p, transa, transb, alpha, a, b, beta, c);
+                if let Some((e, ro, co)) = ep {
+                    e.apply(c, ro, co);
+                }
+            }
         }
     }
 
@@ -273,6 +307,28 @@ pub(crate) fn gemm_parallel_vec<T: Element>(
     beta: T,
     c: &mut MatMut<'_, T>,
 ) -> Result<(), BlasError> {
+    gemm_parallel_vec_ep(kern, pool, threads, transa, transb, alpha, a, b, beta, c, None)
+}
+
+/// As [`gemm_parallel_vec`], with an optional fused epilogue. Each slice
+/// job forwards the epilogue together with the slice's global row/col
+/// offset into C, so bias vectors index the full matrix regardless of
+/// how the split landed — results are bitwise identical across thread
+/// counts and split axes.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_parallel_vec_ep<T: Element>(
+    kern: &SerialVecKernel,
+    pool: Option<&ThreadPool>,
+    threads: usize,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
+    ep: Option<&Epilogue<T>>,
+) -> Result<(), BlasError> {
     let m = c.rows();
     let n = c.cols();
     // k is read off op(A), so A can only mismatch on m; each check below
@@ -312,10 +368,16 @@ pub(crate) fn gemm_parallel_vec<T: Element>(
 
     let split = split_axis(m, n, threads);
 
-    // Pure beta-scale: no kernel work — sweep C's slices over the pool.
+    // Pure beta-scale: no kernel work — sweep C's slices over the pool,
+    // still applying the epilogue at each slice's global offset.
     if alpha == T::ZERO || k == 0 {
         match split {
-            Split::Serial => c.scale(beta),
+            Split::Serial => {
+                c.scale(beta);
+                if let Some(e) = ep {
+                    e.apply(c, 0, 0);
+                }
+            }
             Split::Rows(t) | Split::Cols(t) => {
                 let by_rows = matches!(split, Split::Rows(_));
                 let slices = if by_rows {
@@ -325,8 +387,14 @@ pub(crate) fn gemm_parallel_vec<T: Element>(
                 };
                 let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slices
                     .into_iter()
-                    .map(|(_, mut cs)| {
-                        Box::new(move || cs.scale(beta)) as Box<dyn FnOnce() + Send + '_>
+                    .map(|(o0, mut cs)| {
+                        Box::new(move || {
+                            cs.scale(beta);
+                            if let Some(e) = ep {
+                                let (ro, co) = if by_rows { (o0, 0) } else { (0, o0) };
+                                e.apply(&mut cs, ro, co);
+                            }
+                        }) as Box<dyn FnOnce() + Send + '_>
                     })
                     .collect();
                 run_borrowed_on(pool, jobs);
@@ -336,15 +404,24 @@ pub(crate) fn gemm_parallel_vec<T: Element>(
     }
 
     match split {
-        Split::Serial => kern.run(transa, transb, alpha, a, b, beta, c),
+        Split::Serial => kern.run_ep(transa, transb, alpha, a, b, beta, c, ep.map(|e| (e, 0, 0))),
         Split::Rows(t) => {
             let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
                 row_slices(a, transa, c.reborrow(), t, kern.row_align())
                     .into_iter()
-                    .map(|(_, a_slice, mut c_slice)| {
+                    .map(|(r0, a_slice, mut c_slice)| {
                         let kern = *kern;
                         Box::new(move || {
-                            kern.run(transa, transb, alpha, a_slice, b, beta, &mut c_slice);
+                            kern.run_ep(
+                                transa,
+                                transb,
+                                alpha,
+                                a_slice,
+                                b,
+                                beta,
+                                &mut c_slice,
+                                ep.map(|e| (e, r0, 0)),
+                            );
                         }) as Box<dyn FnOnce() + Send + '_>
                     })
                     .collect();
@@ -354,10 +431,19 @@ pub(crate) fn gemm_parallel_vec<T: Element>(
             let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
                 col_slices(b, transb, c.reborrow(), t, kern.col_align())
                     .into_iter()
-                    .map(|(_, b_slice, mut c_slice)| {
+                    .map(|(c0, b_slice, mut c_slice)| {
                         let kern = *kern;
                         Box::new(move || {
-                            kern.run(transa, transb, alpha, a, b_slice, beta, &mut c_slice);
+                            kern.run_ep(
+                                transa,
+                                transb,
+                                alpha,
+                                a,
+                                b_slice,
+                                beta,
+                                &mut c_slice,
+                                ep.map(|e| (e, 0, c0)),
+                            );
                         }) as Box<dyn FnOnce() + Send + '_>
                     })
                     .collect();

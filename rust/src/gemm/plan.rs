@@ -34,6 +34,7 @@
 use super::batch;
 use super::dispatch::{DispatchConfig, GemmDispatch, GemmShape, KernelId};
 use super::element::{Element, ElementId};
+use super::epilogue::Epilogue;
 use super::microkernel;
 use super::pack;
 use super::params::{BlockParams, TileParams};
@@ -179,6 +180,7 @@ impl GemmContext {
             ldb: None,
             ldc: None,
             force: None,
+            epilogue: None,
         }
     }
 
@@ -360,6 +362,7 @@ pub struct GemmBuilder<T = f32> {
     ldb: Option<usize>,
     ldc: Option<usize>,
     force: Option<KernelId>,
+    epilogue: Option<Epilogue<T>>,
 }
 
 impl<T: Element> GemmBuilder<T> {
@@ -413,6 +416,19 @@ impl<T: Element> GemmBuilder<T> {
         self
     }
 
+    /// Fuse an [`Epilogue`] (bias + activation + clamp) into the GEMM
+    /// writeback: every execution of the plan stores
+    /// `clamp(act(alpha·op(A)op(B) + beta·C + bias))` in a single
+    /// traversal of `C`. Bias shapes are validated at
+    /// [`plan`](Self::plan) time against `(m, n)`. Applies to
+    /// [`GemmPlan::run`], [`GemmPlan::run_batch`] (per item) and the
+    /// prepacked paths; results are bitwise identical across kernels'
+    /// writeback styles, thread counts and prepacked/plain execution.
+    pub fn epilogue(mut self, ep: Epilogue<T>) -> Self {
+        self.epilogue = Some(ep);
+        self
+    }
+
     /// Resolve the plan: validate leading dimensions, select the kernel
     /// and freeze the dispatcher state (block geometry, thread split).
     pub fn plan(self, m: usize, n: usize, k: usize) -> Result<GemmPlan<T>, BlasError> {
@@ -436,6 +452,9 @@ impl<T: Element> GemmBuilder<T> {
         if ldc < n {
             return Err(BlasError::BadLeadingDim { operand: "C", ld: ldc, cols: n });
         }
+        if let Some(ep) = &self.epilogue {
+            ep.validate(m, n)?;
+        }
         let dispatch = self.ctx.snapshot();
         let shape = GemmShape { m, n, k, transa: self.transa, transb: self.transb };
         let kernel = self.force.unwrap_or_else(|| dispatch.select_t::<T>(&shape, self.alpha));
@@ -450,6 +469,7 @@ impl<T: Element> GemmBuilder<T> {
             ldc,
             kernel,
             forced: self.force,
+            epilogue: self.epilogue,
         })
     }
 }
@@ -471,6 +491,7 @@ pub struct GemmPlan<T = f32> {
     ldc: usize,
     kernel: KernelId,
     forced: Option<KernelId>,
+    epilogue: Option<Epilogue<T>>,
 }
 
 impl<T: Element> GemmPlan<T> {
@@ -528,9 +549,9 @@ impl<T: Element> GemmPlan<T> {
         if self.shape.m == 0 || self.shape.n == 0 {
             return Ok(());
         }
-        self.dispatch.gemm_with_on(
+        self.dispatch.gemm_ep_on(
             self.ctx.pool(),
-            self.kernel,
+            Some(self.kernel),
             self.shape.transa,
             self.shape.transb,
             self.alpha,
@@ -538,6 +559,7 @@ impl<T: Element> GemmPlan<T> {
             bv,
             self.beta,
             &mut cv,
+            self.epilogue.as_ref(),
         );
         Ok(())
     }
@@ -573,6 +595,7 @@ impl<T: Element> GemmPlan<T> {
             self.ldc,
             batch,
             strides,
+            self.epilogue.as_ref(),
         )
     }
 
@@ -600,6 +623,7 @@ impl<T: Element> GemmPlan<T> {
         }
         let transa = self.shape.transa;
         let (alpha, beta) = (self.alpha, self.beta);
+        let ep = self.epilogue.as_ref();
         let threads = if self.kernel == KernelId::Parallel { self.dispatch.threads() } else { 1 };
         match geom {
             PackGeometry::Dot(isa, params) => {
@@ -608,7 +632,7 @@ impl<T: Element> GemmPlan<T> {
                 match super::parallel::split_axis(m, n, threads) {
                     super::parallel::Split::Serial => {
                         let mut cv = cv;
-                        prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(av), 0, bb, 0, beta, &mut cv);
+                        prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(av), 0, bb, 0, beta, &mut cv, ep.map(|e| (e, 0, 0)));
                     }
                     // Row-sliced execution sharing the one prepacked B
                     // (same split boundaries as the packing parallel
@@ -616,8 +640,8 @@ impl<T: Element> GemmPlan<T> {
                     // keeps the results bit-identical to it).
                     super::parallel::Split::Rows(t) => self.ctx.run_sliced(
                         super::parallel::row_slices(av, transa, cv, t, 1),
-                        |(_, a_slice, mut c_slice)| {
-                            prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(a_slice), 0, bb, 0, beta, &mut c_slice);
+                        |(r0, a_slice, mut c_slice)| {
+                            prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(a_slice), 0, bb, 0, beta, &mut c_slice, ep.map(|e| (e, r0, 0)));
                         },
                     ),
                     // Column slices aligned to the panel width so each
@@ -626,7 +650,7 @@ impl<T: Element> GemmPlan<T> {
                     super::parallel::Split::Cols(t) => self.ctx.run_sliced(
                         super::parallel::c_col_slices(cv, t, params.nr),
                         |(c0, mut c_slice)| {
-                            prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(av), 0, bb, c0, beta, &mut c_slice);
+                            prepacked_gemm(isa, &params, transa, alpha, ASource::Raw(av), 0, bb, c0, beta, &mut c_slice, ep.map(|e| (e, 0, c0)));
                         },
                     ),
                 }
@@ -647,6 +671,7 @@ impl<T: Element> GemmPlan<T> {
                             0,
                             beta,
                             &mut cv,
+                            ep.map(|e| (e, 0, 0)),
                         );
                     }
                     // MR-strip-aligned row slices: interior slices carry
@@ -654,14 +679,14 @@ impl<T: Element> GemmPlan<T> {
                     // be bit-identical — see gemm::tile).
                     super::parallel::Split::Rows(t) => self.ctx.run_sliced(
                         super::parallel::row_slices(av, transa, cv, t, tp.mr),
-                        |(_, a_slice, mut c_slice)| {
-                            tile::prepacked_gemm(&tp, alpha, tile::TileA::Raw { a: a_slice, transa }, 0, blocks, offsets, 0, beta, &mut c_slice);
+                        |(r0, a_slice, mut c_slice)| {
+                            tile::prepacked_gemm(&tp, alpha, tile::TileA::Raw { a: a_slice, transa }, 0, blocks, offsets, 0, beta, &mut c_slice, ep.map(|e| (e, r0, 0)));
                         },
                     ),
                     super::parallel::Split::Cols(t) => self.ctx.run_sliced(
                         super::parallel::c_col_slices(cv, t, tp.nr),
                         |(c0, mut c_slice)| {
-                            tile::prepacked_gemm(&tp, alpha, tile::TileA::Raw { a: av, transa }, 0, blocks, offsets, c0, beta, &mut c_slice);
+                            tile::prepacked_gemm(&tp, alpha, tile::TileA::Raw { a: av, transa }, 0, blocks, offsets, c0, beta, &mut c_slice, ep.map(|e| (e, 0, c0)));
                         },
                     ),
                 }
@@ -693,6 +718,7 @@ impl<T: Element> GemmPlan<T> {
         }
         let transa = self.shape.transa;
         let (alpha, beta) = (self.alpha, self.beta);
+        let ep = self.epilogue.as_ref();
         let threads = if self.kernel == KernelId::Parallel { self.dispatch.threads() } else { 1 };
         const MISMATCH: BlasError = BlasError::PlanMismatch(
             "PackedA block geometry differs from the plan's kernel geometry; repack with the current context",
@@ -711,18 +737,18 @@ impl<T: Element> GemmPlan<T> {
                 match super::parallel::split_axis(m, n, threads) {
                     super::parallel::Split::Serial => {
                         let mut cv = cv;
-                        prepacked_gemm(isa, &params, transa, alpha, aa, 0, bb, 0, beta, &mut cv);
+                        prepacked_gemm(isa, &params, transa, alpha, aa, 0, bb, 0, beta, &mut cv, ep.map(|e| (e, 0, 0)));
                     }
                     super::parallel::Split::Rows(t) => self.ctx.run_sliced(
                         super::parallel::c_row_slices(cv, t, params.mb),
                         |(r0, mut c_slice)| {
-                            prepacked_gemm(isa, &params, transa, alpha, aa, r0, bb, 0, beta, &mut c_slice);
+                            prepacked_gemm(isa, &params, transa, alpha, aa, r0, bb, 0, beta, &mut c_slice, ep.map(|e| (e, r0, 0)));
                         },
                     ),
                     super::parallel::Split::Cols(t) => self.ctx.run_sliced(
                         super::parallel::c_col_slices(cv, t, params.nr),
                         |(c0, mut c_slice)| {
-                            prepacked_gemm(isa, &params, transa, alpha, aa, 0, bb, c0, beta, &mut c_slice);
+                            prepacked_gemm(isa, &params, transa, alpha, aa, 0, bb, c0, beta, &mut c_slice, ep.map(|e| (e, 0, c0)));
                         },
                     ),
                 }
@@ -740,7 +766,7 @@ impl<T: Element> GemmPlan<T> {
                 match super::parallel::split_axis(m, n, threads) {
                     super::parallel::Split::Serial => {
                         let mut cv = cv;
-                        tile::prepacked_gemm(&tp, alpha, aa, 0, b_blocks, offsets, 0, beta, &mut cv);
+                        tile::prepacked_gemm(&tp, alpha, aa, 0, b_blocks, offsets, 0, beta, &mut cv, ep.map(|e| (e, 0, 0)));
                     }
                     // A packed row block (`mc` rows) is indivisible:
                     // slices split at mc granularity so each worker
@@ -748,13 +774,13 @@ impl<T: Element> GemmPlan<T> {
                     super::parallel::Split::Rows(t) => self.ctx.run_sliced(
                         super::parallel::c_row_slices(cv, t, tp.mc),
                         |(r0, mut c_slice)| {
-                            tile::prepacked_gemm(&tp, alpha, aa, r0, b_blocks, offsets, 0, beta, &mut c_slice);
+                            tile::prepacked_gemm(&tp, alpha, aa, r0, b_blocks, offsets, 0, beta, &mut c_slice, ep.map(|e| (e, r0, 0)));
                         },
                     ),
                     super::parallel::Split::Cols(t) => self.ctx.run_sliced(
                         super::parallel::c_col_slices(cv, t, tp.nr),
                         |(c0, mut c_slice)| {
-                            tile::prepacked_gemm(&tp, alpha, aa, 0, b_blocks, offsets, c0, beta, &mut c_slice);
+                            tile::prepacked_gemm(&tp, alpha, aa, 0, b_blocks, offsets, c0, beta, &mut c_slice, ep.map(|e| (e, 0, c0)));
                         },
                     ),
                 }
@@ -912,6 +938,12 @@ struct DotB<'x, T> {
 /// and `B` panels. `row0` must be a multiple of `mb` when `A` is
 /// prepacked; `col0` must be a multiple of `nr` (panel-aligned) — the
 /// parallel split helpers guarantee both.
+///
+/// `ep` carries a fused epilogue plus the slice's global (row, col)
+/// offsets for bias indexing (independent of `row0`/`col0`, which stay 0
+/// on row-sliced runs where `A` itself was sliced). It is applied inside
+/// the writeback of the *last* k-block only — each C element is
+/// transformed exactly once, after its dot product is complete.
 #[allow(clippy::too_many_arguments)]
 fn prepacked_gemm<T: Element>(
     isa: Option<VecIsa>,
@@ -924,6 +956,7 @@ fn prepacked_gemm<T: Element>(
     col0: usize,
     beta: T,
     c: &mut MatMut<'_, T>,
+    ep: tile::EpRef<'_, T>,
 ) {
     let m = c.rows();
     let n = c.cols();
@@ -931,6 +964,9 @@ fn prepacked_gemm<T: Element>(
     debug_assert_eq!(col0 % params.nr, 0, "column slices must be panel-aligned");
     c.scale(beta);
     if alpha == T::ZERO || k == 0 || m == 0 || n == 0 {
+        if let Some((e, ro, co)) = ep {
+            e.apply(c, ro, co);
+        }
         return;
     }
     let p0 = col0 / params.nr;
@@ -949,6 +985,9 @@ fn prepacked_gemm<T: Element>(
     for (kbi, block) in pb.blocks.iter().enumerate() {
         let kk = pb.offsets[kbi];
         let kb_eff = block.kb_eff();
+        // The epilogue fuses into the last k-block's writeback only:
+        // earlier blocks leave partial sums that must stay untransformed.
+        let fused = if kbi == pb.blocks.len() - 1 { ep } else { None };
         let mut ii = 0;
         while ii < m {
             let mb_eff = params.mb.min(m - ii);
@@ -1001,9 +1040,15 @@ fn prepacked_gemm<T: Element>(
                             );
                             for j in 0..w {
                                 let o0 = c.get_unchecked(ii + i, j0 + j);
-                                c.set_unchecked(ii + i, j0 + j, o0 + alpha * sums[j]);
+                                let mut v0 = o0 + alpha * sums[j];
                                 let o1 = c.get_unchecked(ii + i + 1, j0 + j);
-                                c.set_unchecked(ii + i + 1, j0 + j, o1 + alpha * sums2[j]);
+                                let mut v1 = o1 + alpha * sums2[j];
+                                if let Some((e, ro, co)) = fused {
+                                    v0 = e.apply_scalar(v0, ro + ii + i, co + j0 + j);
+                                    v1 = e.apply_scalar(v1, ro + ii + i + 1, co + j0 + j);
+                                }
+                                c.set_unchecked(ii + i, j0 + j, v0);
+                                c.set_unchecked(ii + i + 1, j0 + j, v1);
                             }
                         }
                         i += 2;
@@ -1027,7 +1072,11 @@ fn prepacked_gemm<T: Element>(
                         }
                         for j in 0..w {
                             let old = c.get_unchecked(ii + i, j0 + j);
-                            c.set_unchecked(ii + i, j0 + j, old + alpha * sums[j]);
+                            let mut v = old + alpha * sums[j];
+                            if let Some((e, ro, co)) = fused {
+                                v = e.apply_scalar(v, ro + ii + i, co + j0 + j);
+                            }
+                            c.set_unchecked(ii + i, j0 + j, v);
                         }
                     }
                     i += 1;

@@ -18,6 +18,7 @@
 use super::element::Element;
 use super::pack::Scratch;
 use super::params::BlockParams;
+use super::tile::EpRef;
 use crate::blas::{MatMut, MatRef, Transpose};
 
 /// Which vector ISA the shared driver dispatches to. Kernel selection per
@@ -80,6 +81,25 @@ pub(crate) fn gemm_vec<T: Element>(
     gemm_vec_scratch(isa, params, transa, transb, alpha, a, b, beta, c, &mut scratch);
 }
 
+/// As [`gemm_vec`], with a fused epilogue (fresh scratch) — the dispatch
+/// and parallel tiers' entry.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_vec_ep<T: Element>(
+    isa: VecIsa,
+    params: &BlockParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
+    ep: EpRef<'_, T>,
+) {
+    let mut scratch = Scratch::new();
+    gemm_vec_scratch_ep(isa, params, transa, transb, alpha, a, b, beta, c, &mut scratch, ep);
+}
+
 /// The driver proper, parameterised over reusable packing scratch.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_vec_scratch<T: Element>(
@@ -94,6 +114,27 @@ pub(crate) fn gemm_vec_scratch<T: Element>(
     c: &mut MatMut<'_, T>,
     scratch: &mut Scratch<T>,
 ) {
+    gemm_vec_scratch_ep(isa, params, transa, transb, alpha, a, b, beta, c, scratch, None);
+}
+
+/// The full dot-tier driver, with an optional fused epilogue applied to
+/// each `C` element as its **last k block**'s dot products are written
+/// back (the element's value is complete there; earlier k blocks write
+/// plain partial sums).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_vec_scratch_ep<T: Element>(
+    isa: VecIsa,
+    params: &BlockParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
+    scratch: &mut Scratch<T>,
+    ep: EpRef<'_, T>,
+) {
     params.validate().expect("invalid block parameters");
     let m = c.rows();
     let n = c.cols();
@@ -103,6 +144,11 @@ pub(crate) fn gemm_vec_scratch<T: Element>(
     };
     c.scale(beta);
     if alpha == T::ZERO || k == 0 || m == 0 || n == 0 {
+        // No product to accumulate, but the epilogue still applies to
+        // the beta-scaled output.
+        if let Some((e, ro, co)) = ep {
+            e.apply(c, ro, co);
+        }
         return;
     }
 
@@ -120,6 +166,9 @@ pub(crate) fn gemm_vec_scratch<T: Element>(
     let mut kk = 0;
     while kk < k {
         let kb_eff = params.kb_eff(k, kk);
+        // Fuse the epilogue into the writeback of each element's final
+        // k block only (its accumulated value is complete there).
+        let fused = if kk + kb_eff == k { ep } else { None };
         if params.pack_b {
             packed_b.pack(b, transb, kk, kb_eff, n);
         }
@@ -180,9 +229,15 @@ pub(crate) fn gemm_vec_scratch<T: Element>(
                             );
                             for j in 0..w {
                                 let o0 = c.get_unchecked(ii + i, j0 + j);
-                                c.set_unchecked(ii + i, j0 + j, o0 + alpha * sums[j]);
+                                let mut v0 = o0 + alpha * sums[j];
                                 let o1 = c.get_unchecked(ii + i + 1, j0 + j);
-                                c.set_unchecked(ii + i + 1, j0 + j, o1 + alpha * sums2[j]);
+                                let mut v1 = o1 + alpha * sums2[j];
+                                if let Some((e, ro, co)) = fused {
+                                    v0 = e.apply_scalar(v0, ro + ii + i, co + j0 + j);
+                                    v1 = e.apply_scalar(v1, ro + ii + i + 1, co + j0 + j);
+                                }
+                                c.set_unchecked(ii + i, j0 + j, v0);
+                                c.set_unchecked(ii + i + 1, j0 + j, v1);
                             }
                         }
                         i += 2;
@@ -212,7 +267,11 @@ pub(crate) fn gemm_vec_scratch<T: Element>(
                         // SAFETY: ii+i < m, j0+j < n.
                         unsafe {
                             let old = c.get_unchecked(ii + i, j0 + j);
-                            c.set_unchecked(ii + i, j0 + j, old + alpha * sums[j]);
+                            let mut v = old + alpha * sums[j];
+                            if let Some((e, ro, co)) = fused {
+                                v = e.apply_scalar(v, ro + ii + i, co + j0 + j);
+                            }
+                            c.set_unchecked(ii + i, j0 + j, v);
                         }
                     }
                     i += 1;

@@ -38,9 +38,17 @@
 use std::arch::x86_64::*;
 
 use super::element::Element;
-use super::pack::{Scratch, TilePackedA, TilePackedB};
+use super::epilogue::Epilogue;
+use super::pack::{BSource, Scratch, TilePackedA, TilePackedB};
 use super::params::TileParams;
 use crate::blas::{MatMut, MatRef, Transpose};
+
+/// A fused epilogue as the drivers thread it: the descriptor plus the
+/// **global** `(row, col)` offset of the `C` slice being written (the
+/// epilogue indexes its bias vectors globally, whichever parallel slice
+/// an element lands in — the bit-stability contract of
+/// [`crate::gemm::epilogue`]).
+pub(crate) type EpRef<'e, T> = Option<(&'e Epilogue<T>, usize, usize)>;
 
 /// Tile width in f32 lanes (two 8-wide AVX2 vectors, feeding both FMA
 /// execution ports). The f64 tier's width is [`Element::TILE_NR`] = 8.
@@ -310,6 +318,11 @@ unsafe fn scalar_tile_into<T: Element>(
 /// `ta` covers `C` rows `i_base ..` (its strip count), `tb`'s panels
 /// `panel0 ..` cover `C` columns `j_base .. j_base + nb_eff`. `C` has
 /// already been beta-scaled; each tile folds `alpha · A'B'` in.
+///
+/// `ep` is the fused epilogue for this block, `Some` only on the **last
+/// k block** of each `C` element (the drivers guarantee this): right
+/// after a tile's writeback — full-vector, `TempTile` fringe or scalar —
+/// the epilogue sweeps the same `h × w` window while it is still hot.
 #[allow(clippy::too_many_arguments)]
 fn tile_block<T: Element>(
     params: &TileParams,
@@ -323,6 +336,7 @@ fn tile_block<T: Element>(
     j_base: usize,
     nb_eff: usize,
     kc_eff: usize,
+    ep: EpRef<'_, T>,
 ) {
     let (mr, nr) = (params.mr, params.nr);
     debug_assert_eq!(nr, T::TILE_NR, "tile nr must match the element's vector geometry");
@@ -353,14 +367,24 @@ fn tile_block<T: Element>(
                         T::avx2_tile_dyn(mr, ap, bp, kc_eff, T::ZERO, tmp.as_mut_ptr(), nr, false, params.prefetch);
                         T::tile_fringe(tmp.as_ptr(), nr, alpha, cptr, ldc, h, w);
                     }
-                    continue;
+                } else {
+                    let mut tmp: TempTile<T> = [T::ZERO; MAX_MR * NR];
+                    scalar_tile_into(ap, bp, kc_eff, mr, &mut tmp);
+                    for i in 0..h {
+                        for j in 0..w {
+                            let pd = cptr.add(i * ldc + j);
+                            *pd += alpha * tmp[i * nr + j];
+                        }
+                    }
                 }
-                let mut tmp: TempTile<T> = [T::ZERO; MAX_MR * NR];
-                scalar_tile_into(ap, bp, kc_eff, mr, &mut tmp);
-                for i in 0..h {
-                    for j in 0..w {
-                        let pd = cptr.add(i * ldc + j);
-                        *pd += alpha * tmp[i * nr + j];
+                // Fused epilogue: sweep the tile we just stored, indexing
+                // the bias at the element's global C coordinates.
+                if let Some((e, ro, co)) = ep {
+                    for i in 0..h {
+                        for j in 0..w {
+                            let pd = cptr.add(i * ldc + j);
+                            *pd = e.apply_scalar(*pd, ro + i0 + i, co + j0 + j);
+                        }
                     }
                 }
             }
@@ -389,11 +413,6 @@ pub fn gemm<T: Element>(
 
 /// As [`gemm`], reusing caller-provided packing buffers (the batched
 /// driver amortises packing allocation across a batch this way).
-///
-/// Loop nest (BLIS order): `jc` over `nc`-wide column blocks, `pc` over
-/// `kc`-deep k blocks (pack `B'`), `ic` over `mc`-tall row blocks (pack
-/// `A'`), then panels × strips of tiles — `B'` panels stay hot across
-/// every `A` strip of the block.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_with_scratch<T: Element>(
     params: &TileParams,
@@ -405,6 +424,49 @@ pub fn gemm_with_scratch<T: Element>(
     beta: T,
     c: &mut MatMut<'_, T>,
     scratch: &mut Scratch<T>,
+) {
+    gemm_scratch_ep(params, transa, alpha, a, BSource::Mat(b, transb), beta, c, scratch, None);
+}
+
+/// As [`gemm`], with a fused epilogue (fresh scratch) — the dispatch and
+/// parallel tiers' entry.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_ep<T: Element>(
+    params: &TileParams,
+    transa: Transpose,
+    transb: Transpose,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
+    ep: EpRef<'_, T>,
+) {
+    let mut scratch = Scratch::new();
+    gemm_scratch_ep(params, transa, alpha, a, BSource::Mat(b, transb), beta, c, &mut scratch, ep);
+}
+
+/// The full tile driver: `B` as a stored matrix or a virtual
+/// [`PanelSource`](crate::gemm::pack::PanelSource) packed on demand
+/// (the fused-im2col conv path), plus an optional fused epilogue applied
+/// on each element's **last k block**.
+///
+/// Loop nest (BLIS order): `jc` over `nc`-wide column blocks, `pc` over
+/// `kc`-deep k blocks (pack `B'`), `ic` over `mc`-tall row blocks (pack
+/// `A'`), then panels × strips of tiles — `B'` panels stay hot across
+/// every `A` strip of the block. A virtual `B` therefore only ever
+/// exists as the current `kc × nc` packed block.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_scratch_ep<T: Element>(
+    params: &TileParams,
+    transa: Transpose,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: BSource<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
+    scratch: &mut Scratch<T>,
+    ep: EpRef<'_, T>,
 ) {
     params.validate().expect("invalid tile parameters");
     assert_eq!(
@@ -423,6 +485,11 @@ pub fn gemm_with_scratch<T: Element>(
     };
     c.scale(beta);
     if alpha == T::ZERO || k == 0 || m == 0 || n == 0 {
+        // No product to accumulate, but the epilogue still applies to
+        // the beta-scaled output.
+        if let Some((e, ro, co)) = ep {
+            e.apply(c, ro, co);
+        }
         return;
     }
     let use_avx2 = super::dispatch::detect_avx2();
@@ -433,12 +500,15 @@ pub fn gemm_with_scratch<T: Element>(
         let mut pc = 0;
         while pc < k {
             let kc_eff = params.kc_eff(k, pc);
-            tb.pack(b, transb, pc, kc_eff, jc, nc_eff, params.nr);
+            b.pack_tile(tb, pc, kc_eff, jc, nc_eff, params.nr);
+            // Fuse the epilogue into the writeback of each element's
+            // final k block only (its value is complete there).
+            let ep_blk = if pc + kc_eff == k { ep } else { None };
             let mut ic = 0;
             while ic < m {
                 let mc_eff = params.mc.min(m - ic);
                 ta.pack(a, transa, ic, mc_eff, pc, kc_eff, params.mr);
-                tile_block(params, use_avx2, ta, tb, 0, alpha, c, ic, jc, nc_eff, kc_eff);
+                tile_block(params, use_avx2, ta, tb, 0, alpha, c, ic, jc, nc_eff, kc_eff, ep_blk);
                 ic += mc_eff;
             }
             pc += kc_eff;
@@ -466,6 +536,11 @@ pub(crate) enum TileA<'x, T = f32> {
 /// global offsets. `col0` must be panel-aligned (multiple of `nr`);
 /// `row0` must be a multiple of `mc` when `A` is prepacked (a packed row
 /// block is indivisible). The parallel split helpers guarantee both.
+///
+/// `ep` is an optional fused epilogue with the slice's global `(row,
+/// col)` offsets; it is applied on each element's last k block exactly
+/// as in [`gemm_scratch_ep`], so prepacked fused runs stay bit-identical
+/// to packing runs.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn prepacked_gemm<T: Element>(
     params: &TileParams,
@@ -477,12 +552,16 @@ pub(crate) fn prepacked_gemm<T: Element>(
     col0: usize,
     beta: T,
     c: &mut MatMut<'_, T>,
+    ep: EpRef<'_, T>,
 ) {
     let m = c.rows();
     let n = c.cols();
     debug_assert_eq!(col0 % params.nr, 0, "column slices must be panel-aligned");
     c.scale(beta);
     if alpha == T::ZERO || m == 0 || n == 0 || b_blocks.is_empty() {
+        if let Some((e, ro, co)) = ep {
+            e.apply(c, ro, co);
+        }
         return;
     }
     let use_avx2 = super::dispatch::detect_avx2();
@@ -491,6 +570,7 @@ pub(crate) fn prepacked_gemm<T: Element>(
     for (kbi, tb) in b_blocks.iter().enumerate() {
         let kk = b_offsets[kbi];
         let kc_eff = tb.kc_eff();
+        let ep_blk = if kbi == b_blocks.len() - 1 { ep } else { None };
         let mut ic = 0;
         while ic < m {
             let mc_eff = params.mc.min(m - ic);
@@ -501,7 +581,7 @@ pub(crate) fn prepacked_gemm<T: Element>(
                 }
                 TileA::Packed { blocks } => &blocks[kbi][(row0 + ic) / params.mc],
             };
-            tile_block(params, use_avx2, ta, tb, p0, alpha, c, ic, 0, n, kc_eff);
+            tile_block(params, use_avx2, ta, tb, p0, alpha, c, ic, 0, n, kc_eff, ep_blk);
             ic += mc_eff;
         }
     }

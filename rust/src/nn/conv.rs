@@ -2,7 +2,8 @@
 //! motivates ("a range of applications such as artificial neural networks
 //! benefit from GEMM").
 //!
-//! A 2-D convolution over NCHW input is lowered to one SGEMM:
+//! A 2-D convolution over NCHW input is lowered to one SGEMM. The classic
+//! lowering *materialises* the patch matrix first:
 //!
 //! ```text
 //! patches = im2col(input)         # (N·OH·OW) × (C·KH·KW)
@@ -10,11 +11,22 @@
 //! ```
 //!
 //! which is exactly how 1999-era (and many current) frameworks spent
-//! their convolution flops in SGEMM.
+//! their convolution flops in SGEMM — at the cost of an intermediate
+//! `(N·OH·OW) × (C·K·K)` allocation that can dwarf the input.
+//!
+//! The default path here fuses that lowering into the GEMM's own packing
+//! stage instead: [`Im2ColRef`] presents the patch matrix as a virtual
+//! [`PanelSource`] and the tile driver packs convolution patches straight
+//! into its L1-resident `B` panels, resolving padding, stride and
+//! dilation per element *while packing*. The full patch matrix is never
+//! allocated — only the driver's existing `kc × nc` packed block exists
+//! at any time.
 
-use crate::blas::{sgemm_matrix, Backend, GemmContext, Matrix, PackedB, Transpose};
+use crate::blas::{sgemm_matrix, Backend, GemmContext, Matrix, Transpose};
+use crate::gemm::pack::{BSource, PanelSource, Scratch};
+use crate::gemm::{tile, TileParams};
 
-/// Convolution geometry (valid padding, unit dilation).
+/// Convolution geometry (zero padding, arbitrary stride and dilation).
 #[derive(Clone, Copy, Debug)]
 pub struct Conv2d {
     /// Input channels.
@@ -25,17 +37,50 @@ pub struct Conv2d {
     pub kernel: usize,
     /// Stride.
     pub stride: usize,
+    /// Implicit zero padding on every spatial edge.
+    pub padding: usize,
+    /// Dilation: spacing between kernel taps (1 = dense kernel).
+    pub dilation: usize,
 }
 
 impl Conv2d {
     /// Output spatial size for an `h × w` input.
     pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
-        assert!(h >= self.kernel && w >= self.kernel, "input smaller than kernel");
-        ((h - self.kernel) / self.stride + 1, (w - self.kernel) / self.stride + 1)
+        assert!(
+            self.kernel >= 1 && self.stride >= 1 && self.dilation >= 1,
+            "degenerate conv geometry"
+        );
+        let eff = self.dilation * (self.kernel - 1) + 1;
+        assert!(
+            h + 2 * self.padding >= eff && w + 2 * self.padding >= eff,
+            "padded input smaller than dilated kernel"
+        );
+        (
+            (h + 2 * self.padding - eff) / self.stride + 1,
+            (w + 2 * self.padding - eff) / self.stride + 1,
+        )
+    }
+
+    /// Input coordinate read by output position `o`, kernel tap `kq`,
+    /// along an axis of extent `limit`; `None` when the tap lands in the
+    /// zero-padding border.
+    #[inline]
+    fn in_coord(&self, o: usize, kq: usize, limit: usize) -> Option<usize> {
+        let i = (o * self.stride + kq * self.dilation) as isize - self.padding as isize;
+        if i >= 0 && (i as usize) < limit {
+            Some(i as usize)
+        } else {
+            None
+        }
     }
 
     /// im2col: lower an NCHW batch (`n × c × h × w`, flat slice) into the
-    /// patch matrix of shape `(n·oh·ow) × (c·k·k)`.
+    /// patch matrix of shape `(n·oh·ow) × (c·k·k)`. Padding taps are
+    /// stored as explicit zeros.
+    ///
+    /// This is the *materialising* lowering — kept as the oracle for the
+    /// fused [`Im2ColRef`] path and for the explicit-backend ablation
+    /// route in [`forward`](Self::forward).
     pub fn im2col(&self, input: &[f32], n: usize, h: usize, w: usize) -> Matrix {
         let c = self.in_channels;
         assert_eq!(input.len(), n * c * h * w, "input length mismatch");
@@ -49,9 +94,13 @@ impl Conv2d {
                     for ch in 0..c {
                         for ky in 0..k {
                             for kx in 0..k {
-                                let iy = oy * self.stride + ky;
-                                let ix = ox * self.stride + kx;
-                                let v = input[((img * c + ch) * h + iy) * w + ix];
+                                let v = match (self.in_coord(oy, ky, h), self.in_coord(ox, kx, w))
+                                {
+                                    (Some(iy), Some(ix)) => {
+                                        input[((img * c + ch) * h + iy) * w + ix]
+                                    }
+                                    _ => 0.0,
+                                };
                                 out.set(row, (ch * k + ky) * k + kx, v);
                             }
                         }
@@ -62,8 +111,51 @@ impl Conv2d {
         out
     }
 
+    /// The fused forward: one serial tile-driver GEMM whose `B` operand
+    /// is an [`Im2ColRef`] — patches are packed straight from the input,
+    /// never materialised. Natural fused orientation is
+    /// `outᵗ = kernels · patchesᵗ` (`F × N·OH·OW`); one transpose-copy
+    /// restores the public `(N·OH·OW) × F` layout.
+    fn forward_fused(
+        &self,
+        input: &[f32],
+        n: usize,
+        h: usize,
+        w: usize,
+        kernels: &Matrix,
+        params: &TileParams,
+    ) -> Matrix {
+        let src = Im2ColRef::new(self, input, n, h, w);
+        let cols = src.cols();
+        let mut out_t = Matrix::zeros(self.out_channels, cols);
+        let mut scratch = Scratch::new();
+        tile::gemm_scratch_ep(
+            params,
+            Transpose::No,
+            1.0,
+            kernels.view(),
+            BSource::Virtual(&src),
+            0.0,
+            &mut out_t.view_mut(),
+            &mut scratch,
+            None,
+        );
+        let mut out = Matrix::zeros(cols, self.out_channels);
+        for f in 0..self.out_channels {
+            for p in 0..cols {
+                out.set(p, f, out_t.get(f, p));
+            }
+        }
+        out
+    }
+
     /// Forward convolution: `kernels` is `F × (C·K·K)` row-major, output
-    /// is `(n·oh·ow) × F` (one GEMM through the selected backend).
+    /// is `(n·oh·ow) × F`.
+    ///
+    /// [`Backend::Dispatch`]/[`Backend::Auto`] take the fused-im2col path
+    /// (no patch matrix is allocated). An explicit kernel backend forces
+    /// the classic materialised lowering through that backend — the
+    /// ablation route the benches compare against.
     pub fn forward(
         &self,
         input: &[f32],
@@ -75,22 +167,37 @@ impl Conv2d {
     ) -> Matrix {
         assert_eq!(kernels.rows(), self.out_channels);
         assert_eq!(kernels.cols(), self.in_channels * self.kernel * self.kernel);
-        let patches = self.im2col(input, n, h, w);
-        let mut out = Matrix::zeros(patches.rows(), self.out_channels);
-        sgemm_matrix(backend, Transpose::No, Transpose::Yes, 1.0, &patches, kernels, 0.0, &mut out)
-            .expect("conv sgemm");
-        out
+        match backend {
+            Backend::Dispatch | Backend::Auto => {
+                let params = crate::gemm::dispatch::with_global(|d| *d.params_tile_t::<f32>());
+                self.forward_fused(input, n, h, w, kernels, &params)
+            }
+            _ => {
+                let patches = self.im2col(input, n, h, w);
+                let mut out = Matrix::zeros(patches.rows(), self.out_channels);
+                sgemm_matrix(
+                    backend,
+                    Transpose::No,
+                    Transpose::Yes,
+                    1.0,
+                    &patches,
+                    kernels,
+                    0.0,
+                    &mut out,
+                )
+                .expect("conv sgemm");
+                out
+            }
+        }
     }
 
-    /// Forward convolution through the batched dispatch subsystem.
+    /// Forward convolution over a whole batch.
     ///
-    /// Equivalent to [`forward`](Self::forward), but expressed as a
-    /// shared-B batch: each image's `oh·ow` patch rows form one batch item
-    /// and every item multiplies the same (materialised-transpose) kernel
-    /// matrix. The batched driver folds this into a single GEMM, so the
-    /// kernel panel is re-buffered once for the whole batch and the
-    /// parallel backend sees the full `n·oh·ow` row space — the
-    /// weight-stationary layout every GEMM-based framework uses.
+    /// Equivalent to [`forward`](Self::forward) with the default backend:
+    /// the fused path already presents the full `n·oh·ow` patch-column
+    /// space to one GEMM (the weight-stationary layout the old shared-B
+    /// batch fold existed to recover), so the batch *is* the single fused
+    /// GEMM — no im2col matrix, no per-item dispatch.
     pub fn forward_batched(
         &self,
         input: &[f32],
@@ -101,68 +208,33 @@ impl Conv2d {
     ) -> Matrix {
         assert_eq!(kernels.rows(), self.out_channels);
         assert_eq!(kernels.cols(), self.in_channels * self.kernel * self.kernel);
-        let patches = self.im2col(input, n, h, w);
-        let kt = kernels.transposed(); // (C·K·K) × F, contiguous
-        let (oh, ow) = self.out_hw(h, w);
-        let rows_per_item = oh * ow;
-        let ckk = kernels.cols();
-        let f = self.out_channels;
-        let mut out = Matrix::zeros(patches.rows(), f);
-        crate::gemm::dispatch::with_global(|d| {
-            crate::gemm::gemm_batch(
-                d,
-                Transpose::No,
-                Transpose::No,
-                rows_per_item,
-                f,
-                ckk,
-                1.0,
-                patches.data(),
-                ckk,
-                kt.data(),
-                f,
-                0.0,
-                out.data_mut(),
-                f,
-                n,
-                crate::gemm::BatchStrides { a: rows_per_item * ckk, b: 0, c: rows_per_item * f },
-            )
-        })
-        .expect("conv gemm_batch");
-        out
+        let params = crate::gemm::dispatch::with_global(|d| *d.params_tile_t::<f32>());
+        self.forward_fused(input, n, h, w, kernels, &params)
     }
 
-    /// Pre-pack the kernel matrix for repeated forward calls: the
-    /// materialised-transpose weight (`(C·K·K) × F`) is re-buffered into
-    /// panel-major form **once** on `ctx` and then reused by every
-    /// [`forward_packed`](Self::forward_packed) call — the
-    /// weight-stationary inference layout (frozen weights, streaming
-    /// activations).
+    /// Capture the kernel matrix for repeated forward calls.
+    ///
+    /// In the fused-im2col layout the weights are the GEMM's **A**
+    /// operand, used in their natural `F × (C·K·K)` orientation — the
+    /// weight transpose and panel prepack the old path needed per handle
+    /// are gone, and the tile driver re-buffers the (small) weight block
+    /// per k block on the fly. The handle owns a copy of the weights and
+    /// pins the [`GemmContext`] whose tuned tile geometry every
+    /// [`forward_packed`](Self::forward_packed) call runs with.
     pub fn pack_kernels(&self, kernels: &Matrix, ctx: &GemmContext) -> PackedConvKernels {
         assert_eq!(kernels.rows(), self.out_channels);
         assert_eq!(kernels.cols(), self.in_channels * self.kernel * self.kernel);
-        let kt = kernels.transposed(); // (C·K·K) × F, contiguous
-        let packed = ctx
-            .pack_b(Transpose::No, kt.rows(), kt.cols(), kt.data(), kt.ld())
-            .expect("kernel matrix is a valid view");
         PackedConvKernels {
             ctx: ctx.clone(),
-            packed,
-            kt,
+            kernels: kernels.clone(),
             ckk: kernels.cols(),
             f: self.out_channels,
         }
     }
 
-    /// Forward convolution through prepacked kernels: equivalent to
-    /// [`forward`](Self::forward), but the weight panel re-buffering is
-    /// already done, so only im2col and the planned GEMM run per call.
-    ///
-    /// If the context's tuned geometry changed since
-    /// [`pack_kernels`](Self::pack_kernels), the stale pack is bypassed
-    /// and the call falls back to the plain packing path (the handle
-    /// keeps the raw transposed kernels for exactly this) — always
-    /// correct, just without the prepacking win until repacked.
+    /// Forward convolution through a captured kernel handle: the fused
+    /// im2col GEMM on the handle's context — only the streamed-packing
+    /// GEMM runs per call; no patch matrix, no weight transpose.
     pub fn forward_packed(
         &self,
         input: &[f32],
@@ -173,18 +245,8 @@ impl Conv2d {
     ) -> Matrix {
         assert_eq!(kernels.f, self.out_channels, "packed kernels are for a different geometry");
         assert_eq!(kernels.ckk, self.in_channels * self.kernel * self.kernel);
-        let patches = self.im2col(input, n, h, w);
-        let mut out = Matrix::zeros(patches.rows(), kernels.f);
-        let plan = kernels
-            .ctx
-            .gemm()
-            .ldb(kernels.kt.ld())
-            .plan(patches.rows(), kernels.f, kernels.ckk)
-            .expect("validated shapes");
-        if plan.run_packed_b(patches.data(), &kernels.packed, out.data_mut()).is_err() {
-            plan.run(patches.data(), kernels.kt.data(), out.data_mut()).expect("validated shapes");
-        }
-        out
+        let params = *kernels.ctx.snapshot().params_tile_t::<f32>();
+        self.forward_fused(input, n, h, w, &kernels.kernels, &params)
     }
 
     /// GEMM flops of one forward call.
@@ -196,21 +258,76 @@ impl Conv2d {
     }
 }
 
-/// Kernel weights prepacked for [`Conv2d::forward_packed`]: holds the
-/// panel-major buffer and the [`GemmContext`] it was packed on.
+/// A zero-materialisation view of the im2col patch matrix, shaped
+/// `(C·K·K) × (N·OH·OW)` — the transpose of [`Conv2d::im2col`]'s output.
+///
+/// Implements [`PanelSource`], so the tile driver's `B`-pack pulls
+/// convolution patches straight out of the NCHW input while building its
+/// L1-resident panels: padding, stride and dilation are resolved per
+/// element at pack time, and out-of-bounds taps read as the implicit
+/// zero border.
+pub struct Im2ColRef<'a> {
+    cfg: Conv2d,
+    input: &'a [f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+}
+
+impl<'a> Im2ColRef<'a> {
+    /// View `input` (NCHW, flat) as the `(C·K·K) × (n·oh·ow)` patch
+    /// matrix of `cfg`.
+    pub fn new(cfg: &Conv2d, input: &'a [f32], n: usize, h: usize, w: usize) -> Self {
+        assert_eq!(input.len(), n * cfg.in_channels * h * w, "input length mismatch");
+        let (oh, ow) = cfg.out_hw(h, w);
+        Im2ColRef { cfg: *cfg, input, n, h, w, oh, ow }
+    }
+}
+
+impl PanelSource<f32> for Im2ColRef<'_> {
+    fn rows(&self) -> usize {
+        self.cfg.in_channels * self.cfg.kernel * self.cfg.kernel
+    }
+
+    fn cols(&self) -> usize {
+        self.n * self.oh * self.ow
+    }
+
+    #[inline]
+    fn get(&self, r: usize, col: usize) -> f32 {
+        let k = self.cfg.kernel;
+        let ch = r / (k * k);
+        let ky = (r / k) % k;
+        let kx = r % k;
+        let img = col / (self.oh * self.ow);
+        let oy = (col / self.ow) % self.oh;
+        let ox = col % self.ow;
+        match (self.cfg.in_coord(oy, ky, self.h), self.cfg.in_coord(ox, kx, self.w)) {
+            (Some(iy), Some(ix)) => {
+                self.input[((img * self.cfg.in_channels + ch) * self.h + iy) * self.w + ix]
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+/// Kernel weights captured for [`Conv2d::forward_packed`]: the fused
+/// im2col path uses the raw `F × (C·K·K)` weights as the GEMM's `A`
+/// operand, so the handle owns a copy plus the [`GemmContext`] whose
+/// tuned tile geometry the fused GEMM runs with.
 pub struct PackedConvKernels {
     ctx: GemmContext,
-    packed: PackedB,
-    /// Raw transposed kernels, kept for the stale-geometry fallback.
-    kt: Matrix,
+    kernels: Matrix,
     ckk: usize,
     f: usize,
 }
 
 impl PackedConvKernels {
-    /// Bytes held by the packed weight panels (diagnostic).
+    /// Bytes held by the owned weight matrix (diagnostic).
     pub fn bytes(&self) -> usize {
-        self.packed.bytes()
+        self.kernels.data().len() * std::mem::size_of::<f32>()
     }
 }
 
@@ -235,10 +352,12 @@ pub fn conv2d_direct(
                     for ch in 0..c {
                         for ky in 0..k {
                             for kx in 0..k {
-                                let iy = oy * cfg.stride + ky;
-                                let ix = ox * cfg.stride + kx;
-                                acc += input[((img * c + ch) * h + iy) * w + ix]
-                                    * kernels.get(f, (ch * k + ky) * k + kx);
+                                if let (Some(iy), Some(ix)) =
+                                    (cfg.in_coord(oy, ky, h), cfg.in_coord(ox, kx, w))
+                                {
+                                    acc += input[((img * c + ch) * h + iy) * w + ix]
+                                        * kernels.get(f, (ch * k + ky) * k + kx);
+                                }
                             }
                         }
                     }
@@ -265,16 +384,24 @@ mod tests {
 
     #[test]
     fn output_geometry() {
-        let cfg = Conv2d { in_channels: 3, out_channels: 8, kernel: 3, stride: 1 };
+        let cfg =
+            Conv2d { in_channels: 3, out_channels: 8, kernel: 3, stride: 1, padding: 0, dilation: 1 };
         assert_eq!(cfg.out_hw(8, 10), (6, 8));
         let cfg2 = Conv2d { kernel: 3, stride: 2, ..cfg };
         assert_eq!(cfg2.out_hw(9, 9), (4, 4));
+        // "Same" padding for a dense 3×3 stride-1 kernel.
+        let cfg3 = Conv2d { padding: 1, ..cfg };
+        assert_eq!(cfg3.out_hw(8, 10), (8, 10));
+        // Dilation 2 stretches the 3×3 kernel to an effective 5×5.
+        let cfg4 = Conv2d { dilation: 2, ..cfg };
+        assert_eq!(cfg4.out_hw(8, 10), (4, 6));
     }
 
     #[test]
     fn im2col_identity_kernel_1x1() {
         // 1×1 kernel, stride 1: patches are just the channel values.
-        let cfg = Conv2d { in_channels: 2, out_channels: 2, kernel: 1, stride: 1 };
+        let cfg =
+            Conv2d { in_channels: 2, out_channels: 2, kernel: 1, stride: 1, padding: 0, dilation: 1 };
         let input: Vec<f32> = (0..2 * 2 * 2 * 2).map(|i| i as f32).collect(); // n=2,c=2,h=2,w=2
         let p = cfg.im2col(&input, 2, 2, 2);
         assert_eq!((p.rows(), p.cols()), (8, 2));
@@ -284,8 +411,42 @@ mod tests {
     }
 
     #[test]
+    fn im2col_ref_is_transpose_of_materialised_im2col() {
+        // The virtual panel source must agree with the materialised
+        // lowering entry-for-entry, padding zeros included.
+        for (pad, stride, dil) in [(0usize, 1usize, 1usize), (1, 1, 1), (2, 2, 1), (1, 1, 2), (1, 2, 2)]
+        {
+            let cfg = Conv2d {
+                in_channels: 2,
+                out_channels: 3,
+                kernel: 3,
+                stride,
+                padding: pad,
+                dilation: dil,
+            };
+            let (n, h, w) = (2usize, 6usize, 7usize);
+            let input =
+                rand_input(40 + (pad * 25 + stride * 5 + dil) as u64, n * 2 * h * w);
+            let dense = cfg.im2col(&input, n, h, w);
+            let view = Im2ColRef::new(&cfg, &input, n, h, w);
+            assert_eq!(view.rows(), dense.cols());
+            assert_eq!(view.cols(), dense.rows());
+            for r in 0..view.rows() {
+                for col in 0..view.cols() {
+                    assert_eq!(
+                        view.get(r, col),
+                        dense.get(col, r),
+                        "im2col_ref ({r},{col}) pad={pad} s={stride} d={dil}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn gemm_conv_matches_direct_all_backends() {
-        let cfg = Conv2d { in_channels: 3, out_channels: 5, kernel: 3, stride: 1 };
+        let cfg =
+            Conv2d { in_channels: 3, out_channels: 5, kernel: 3, stride: 1, padding: 0, dilation: 1 };
         let (n, h, w) = (2usize, 7usize, 9usize);
         let input = rand_input(1, n * 3 * h * w);
         let kernels = Matrix::random(5, 3 * 3 * 3, 2, -1.0, 1.0);
@@ -303,8 +464,39 @@ mod tests {
     }
 
     #[test]
+    fn padded_dilated_strided_conv_matches_direct() {
+        // The fused path and the materialised ablation path against the
+        // nested-loop oracle across padding / stride / dilation / 1×1
+        // edge cases.
+        for (i, &(pad, stride, dil, k)) in
+            [(1usize, 1usize, 1usize, 3usize), (2, 2, 1, 3), (1, 1, 2, 3), (0, 2, 2, 3), (2, 1, 1, 1), (0, 1, 2, 2)]
+                .iter()
+                .enumerate()
+        {
+            let cfg = Conv2d {
+                in_channels: 2,
+                out_channels: 4,
+                kernel: k,
+                stride,
+                padding: pad,
+                dilation: dil,
+            };
+            let (n, h, w) = (2usize, 8usize, 9usize);
+            let input = rand_input(60 + i as u64, n * 2 * h * w);
+            let kernels = Matrix::random(4, 2 * k * k, 70 + i as u64, -1.0, 1.0);
+            let want = conv2d_direct(&cfg, &input, n, h, w, &kernels);
+            let label = format!("conv pad={pad} s={stride} d={dil} k={k}");
+            let fused = cfg.forward(&input, n, h, w, &kernels, Backend::Dispatch);
+            assert_allclose(fused.data(), want.data(), 2e-4, 1e-4, &format!("{label} fused"));
+            let legacy = cfg.forward(&input, n, h, w, &kernels, Backend::Blocked);
+            assert_allclose(legacy.data(), want.data(), 2e-4, 1e-4, &format!("{label} im2col"));
+        }
+    }
+
+    #[test]
     fn batched_forward_matches_direct_and_serial_forward() {
-        let cfg = Conv2d { in_channels: 3, out_channels: 6, kernel: 3, stride: 1 };
+        let cfg =
+            Conv2d { in_channels: 3, out_channels: 6, kernel: 3, stride: 1, padding: 0, dilation: 1 };
         let (n, h, w) = (4usize, 8usize, 9usize);
         let input = rand_input(7, n * 3 * h * w);
         let kernels = Matrix::random(6, 3 * 9, 8, -1.0, 1.0);
@@ -322,7 +514,8 @@ mod tests {
             threads: 1,
             ..crate::gemm::DispatchConfig::default()
         });
-        let cfg = Conv2d { in_channels: 2, out_channels: 5, kernel: 3, stride: 1 };
+        let cfg =
+            Conv2d { in_channels: 2, out_channels: 5, kernel: 3, stride: 1, padding: 1, dilation: 1 };
         let kernels = Matrix::random(5, 2 * 9, 9, -1.0, 1.0);
         let packed = cfg.pack_kernels(&kernels, &ctx);
         assert!(packed.bytes() > 0);
@@ -344,7 +537,8 @@ mod tests {
 
     #[test]
     fn strided_conv_matches_direct() {
-        let cfg = Conv2d { in_channels: 2, out_channels: 4, kernel: 3, stride: 2 };
+        let cfg =
+            Conv2d { in_channels: 2, out_channels: 4, kernel: 3, stride: 2, padding: 0, dilation: 1 };
         let (n, h, w) = (1usize, 11usize, 11usize);
         let input = rand_input(3, n * 2 * h * w);
         let kernels = Matrix::random(4, 2 * 9, 4, -1.0, 1.0);
@@ -355,7 +549,8 @@ mod tests {
 
     #[test]
     fn flops_formula() {
-        let cfg = Conv2d { in_channels: 3, out_channels: 8, kernel: 3, stride: 1 };
+        let cfg =
+            Conv2d { in_channels: 3, out_channels: 8, kernel: 3, stride: 1, padding: 0, dilation: 1 };
         let (oh, ow) = cfg.out_hw(8, 8);
         assert_eq!(cfg.flops(2, 8, 8), 2.0 * (2 * oh * ow) as f64 * 27.0 * 8.0);
     }

@@ -11,8 +11,17 @@
 //! ```
 //!
 //! which matches the paper's application: *all* heavy math is GEMM.
+//!
+//! On the default backend the per-layer bias add and tanh ride the GEMM
+//! itself as a fused [`Epilogue`] (row bias + [`Activation::Tanh`] on
+//! hidden layers, bias only on the output layer): the kernels apply them
+//! inside the `C` writeback, so the forward pass makes one traversal of
+//! each activation matrix instead of two. Explicit kernel backends keep
+//! the separate bias/activation pass — the ablation route.
 
-use crate::blas::{sgemm, sgemm_batch, Backend, GemmContext, Matrix, PackedB, Transpose};
+use crate::blas::{
+    sgemm, sgemm_batch, Activation, Backend, Epilogue, GemmContext, Matrix, PackedB, Transpose,
+};
 use crate::util::prng::Pcg32;
 
 /// MLP parameters: per layer a weight matrix (fan_in × fan_out) and bias.
@@ -67,8 +76,19 @@ impl Mlp {
             + self.biases.iter().map(|b| b.len()).sum::<usize>()
     }
 
+    /// The fused epilogue of layer `l`: row bias plus tanh on hidden
+    /// layers, bias only on the output layer. `f32::tanh` backs both this
+    /// and [`bias_activate`](Self::bias_activate), so the fused and
+    /// separate-pass routes produce identical activations.
+    fn layer_epilogue(&self, l: usize) -> Epilogue {
+        let act = if l == self.n_layers() - 1 { Activation::None } else { Activation::Tanh };
+        Epilogue::new().bias_row(self.biases[l].clone()).activation(act)
+    }
+
     /// Bias + activation for layer `l`, in place (tanh on hidden layers,
-    /// linear on the output layer).
+    /// linear on the output layer) — the separate-pass twin of
+    /// [`layer_epilogue`](Self::layer_epilogue), used by the explicit
+    /// kernel backends.
     fn bias_activate(&self, z: &mut Matrix, l: usize) {
         let last = l == self.n_layers() - 1;
         let cols = z.cols();
@@ -88,28 +108,41 @@ impl Mlp {
     pub fn forward_all(&self, x: &Matrix) -> Vec<Matrix> {
         assert_eq!(x.cols(), self.sizes[0], "input width mismatch");
         let batch = x.rows();
+        let fused = matches!(self.backend, Backend::Dispatch | Backend::Auto);
         let mut acts = vec![x.clone()];
         for l in 0..self.n_layers() {
             let w = &self.weights[l];
             let mut z = Matrix::zeros(batch, w.cols());
-            sgemm(
-                self.backend,
-                Transpose::No,
-                Transpose::No,
-                batch,
-                w.cols(),
-                w.rows(),
-                1.0,
-                acts[l].data(),
-                acts[l].ld(),
-                w.data(),
-                w.ld(),
-                0.0,
-                z.data_mut(),
-                w.cols(),
-            )
-            .expect("forward sgemm");
-            self.bias_activate(&mut z, l);
+            if fused {
+                // Bias + activation fused into the GEMM writeback.
+                let plan = GemmContext::global()
+                    .gemm()
+                    .lda(acts[l].ld())
+                    .ldb(w.ld())
+                    .epilogue(self.layer_epilogue(l))
+                    .plan(batch, w.cols(), w.rows())
+                    .expect("validated shapes");
+                plan.run(acts[l].data(), w.data(), z.data_mut()).expect("validated shapes");
+            } else {
+                sgemm(
+                    self.backend,
+                    Transpose::No,
+                    Transpose::No,
+                    batch,
+                    w.cols(),
+                    w.rows(),
+                    1.0,
+                    acts[l].data(),
+                    acts[l].ld(),
+                    w.data(),
+                    w.ld(),
+                    0.0,
+                    z.data_mut(),
+                    w.cols(),
+                )
+                .expect("forward sgemm");
+                self.bias_activate(&mut z, l);
+            }
             acts.push(z);
         }
         acts
@@ -140,6 +173,9 @@ impl Mlp {
     /// Forward pass through prepacked weights: each layer runs a planned
     /// GEMM with its weight panel already re-buffered, so repeated
     /// forward calls (inference, evaluation loops) skip all packing work.
+    /// Bias and activation ride each layer's GEMM as its fused epilogue —
+    /// the prepacked drivers apply them in the writeback, bit-identical
+    /// to the packing path.
     ///
     /// If the context's tuned geometry changed since
     /// [`pack_weights`](Self::pack_weights) (an autotune install landed in
@@ -158,13 +194,13 @@ impl Mlp {
                 .gemm()
                 .lda(h.ld())
                 .ldb(w.ld())
+                .epilogue(self.layer_epilogue(l))
                 .plan(batch, w.cols(), w.rows())
                 .expect("validated shapes");
             let mut z = Matrix::zeros(batch, w.cols());
             if plan.run_packed_b(h.data(), &packed.layers[l], z.data_mut()).is_err() {
                 plan.run(h.data(), w.data(), z.data_mut()).expect("validated shapes");
             }
-            self.bias_activate(&mut z, l);
             h = z;
         }
         h

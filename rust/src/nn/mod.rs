@@ -8,7 +8,16 @@
 //! through the Emmerald kernel — natively here, or through the AOT Pallas
 //! artifact via [`crate::runtime`].
 //!
+//! On the default backend both workloads lean on the GEMM engine's fused
+//! paths: the MLP's per-layer bias + tanh ride each GEMM as a fused
+//! [`crate::gemm::Epilogue`] (one traversal of the activations instead of
+//! two), and [`conv::Conv2d`] never materialises its im2col patch matrix —
+//! [`conv::Im2ColRef`] packs convolution patches straight into the tile
+//! driver's `B` panels.
+//!
 //! * [`mlp`] — parameters, forward, softmax cross-entropy, full backprop.
+//! * [`conv`] — convolution lowered onto GEMM (fused or materialised
+//!   im2col).
 //! * [`data`] — deterministic synthetic classification data (Gaussian
 //!   clusters) so training runs are reproducible without external files.
 //! * [`sgd`] — plain SGD and gradient averaging for data parallelism.
@@ -18,5 +27,6 @@ pub mod data;
 pub mod mlp;
 pub mod sgd;
 
+pub use conv::{Conv2d, Im2ColRef, PackedConvKernels};
 pub use data::Dataset;
 pub use mlp::{Mlp, MlpGrads};

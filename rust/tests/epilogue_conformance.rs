@@ -1,0 +1,371 @@
+//! Fused-epilogue conformance suite.
+//!
+//! The epilogue contract is *bitwise*: a plan with an [`Epilogue`]
+//! attached must produce exactly the bits of the same plan without one
+//! followed by a separate [`Epilogue::apply`] pass — the fused writeback
+//! applies the identical scalar function to the identical accumulated
+//! value, on each element's final k block. That contract is exercised on
+//! the tile tier's fringe grid, across the 257 block-boundary shapes,
+//! across the serial / parallel / prepacked drivers, over strided `C`
+//! storage, and in both precisions.
+
+use emmerald::blas::GemmContext;
+use emmerald::gemm::{
+    Activation, BatchStrides, DispatchConfig, Epilogue, KernelId,
+};
+use emmerald::blas::{Matrix, Transpose};
+use emmerald::util::testkit::{assert_allclose, hermetic_tune_cache};
+
+/// Deterministic bias vector (no RNG plumbing needed per case).
+fn bias_vec(len: usize, salt: usize) -> Vec<f32> {
+    (0..len).map(|i| (((i * 7 + salt * 11) % 13) as f32 - 6.0) / 3.0).collect()
+}
+
+/// Rotating epilogue configurations covering every bias shape,
+/// activation and the clamp, alone and combined.
+fn ep_case(case: usize, m: usize, n: usize) -> Epilogue {
+    match case % 6 {
+        0 => Epilogue::new().bias_row(bias_vec(n, case)),
+        1 => Epilogue::new().bias_col(bias_vec(m, case)).activation(Activation::Relu),
+        2 => Epilogue::new().activation(Activation::Gelu).clamp(-0.5, 0.5),
+        3 => Epilogue::new().bias_row(bias_vec(n, case)).activation(Activation::Tanh),
+        4 => Epilogue::new().clamp(-0.25, 0.75),
+        _ => Epilogue::new().bias_col(bias_vec(m, case)).activation(Activation::Gelu),
+    }
+}
+
+/// One fused-vs-post-pass comparison on strided operands; asserts
+/// bitwise equality of the full `C` buffer (padding sentinels included).
+#[allow(clippy::too_many_arguments)]
+fn check_fused_case(
+    ctx: &GemmContext,
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    beta: f32,
+    ep: &Epilogue,
+    seed: u64,
+    what: &str,
+) {
+    let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+    let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+    // Strided storage shakes out global-vs-local index bugs in the
+    // fused writeback; random_strided pads rows with -77 sentinels.
+    let a = Matrix::random_strided(ar, ac, ac + 3, seed);
+    let b = Matrix::random_strided(br, bc, bc + 1, seed ^ 0xAB);
+    let mut c_got = Matrix::random_strided(m, n, n + 2, seed ^ 0xCD);
+    let mut c_ref = c_got.clone();
+
+    let fused = ctx
+        .gemm()
+        .transpose_a(transa)
+        .transpose_b(transb)
+        .alpha(alpha)
+        .beta(beta)
+        .lda(a.ld())
+        .ldb(b.ld())
+        .ldc(c_got.ld())
+        .epilogue(ep.clone())
+        .plan(m, n, k)
+        .unwrap();
+    fused.run(a.data(), b.data(), c_got.data_mut()).unwrap();
+
+    let plain = ctx
+        .gemm()
+        .transpose_a(transa)
+        .transpose_b(transb)
+        .alpha(alpha)
+        .beta(beta)
+        .lda(a.ld())
+        .ldb(b.ld())
+        .ldc(c_ref.ld())
+        .plan(m, n, k)
+        .unwrap();
+    assert_eq!(fused.kernel(), plain.kernel(), "{what}: epilogue changed kernel selection");
+    plain.run(a.data(), b.data(), c_ref.data_mut()).unwrap();
+    ep.apply(&mut c_ref.view_mut(), 0, 0);
+
+    assert_eq!(c_got.data(), c_ref.data(), "{what}: fused != post-pass bits");
+    // Explicit sentinel check: the fused sweep must respect C's stride.
+    for r in 0..m {
+        for p in n..n + 2 {
+            assert_eq!(c_got.data()[r * (n + 2) + p], -77.0, "{what}: padding clobbered at ({r},{p})");
+        }
+    }
+}
+
+#[test]
+fn fused_epilogue_matches_post_pass_on_fringe_grid() {
+    hermetic_tune_cache();
+    // The tile tier's fringe dims (1, MR±1, NR±1) cubed, all four
+    // transpose layouts, rotating alpha/beta (alpha == 0 exercises the
+    // pure-scale early returns, which must still apply the epilogue) and
+    // rotating epilogue configurations.
+    let ctx = GemmContext::new(DispatchConfig::default());
+    let dims = [1usize, 5, 7, 15, 17];
+    let scalars = [(1.0f32, 0.0f32), (0.5, 2.0), (-1.0, 1.0), (0.0, 0.5)];
+    let mut seed = 0xE91Du64;
+    let mut case = 0usize;
+    for &m in &dims {
+        for &n in &dims {
+            for &k in &dims {
+                for transa in [Transpose::No, Transpose::Yes] {
+                    for transb in [Transpose::No, Transpose::Yes] {
+                        let (alpha, beta) = scalars[case % scalars.len()];
+                        let ep = ep_case(case, m, n);
+                        case += 1;
+                        seed += 1;
+                        check_fused_case(
+                            &ctx,
+                            transa,
+                            transb,
+                            m,
+                            n,
+                            k,
+                            alpha,
+                            beta,
+                            &ep,
+                            seed,
+                            &format!(
+                                "fringe m={m} n={n} k={k} ta={transa:?} tb={transb:?} α={alpha} β={beta} ep#{}",
+                                (case - 1) % 6
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_epilogue_matches_post_pass_across_257_boundaries() {
+    hermetic_tune_cache();
+    // 257 crosses every block boundary (kc, mc, nc and each fringe), so
+    // these shapes prove the "last k block only" bookkeeping across
+    // multi-block traversals in every loop position.
+    let ctx = GemmContext::new(DispatchConfig::default());
+    let layouts = [
+        (Transpose::No, Transpose::No),
+        (Transpose::Yes, Transpose::No),
+        (Transpose::No, Transpose::Yes),
+        (Transpose::Yes, Transpose::Yes),
+    ];
+    for (i, &(m, n, k)) in
+        [(257usize, 17usize, 7usize), (7, 257, 17), (17, 7, 257), (257, 257, 257)].iter().enumerate()
+    {
+        let (transa, transb) = layouts[i % 4];
+        let ep = Epilogue::new()
+            .bias_row(bias_vec(n, i))
+            .activation(Activation::Relu)
+            .clamp(-0.8, 0.9);
+        check_fused_case(
+            &ctx,
+            transa,
+            transb,
+            m,
+            n,
+            k,
+            0.75,
+            0.5,
+            &ep,
+            0x257 + i as u64,
+            &format!("257-boundary m={m} n={n} k={k}"),
+        );
+    }
+}
+
+#[test]
+fn fused_epilogue_bitwise_across_serial_parallel_prepacked() {
+    hermetic_tune_cache();
+    // The tentpole acceptance contract: one fused problem through the
+    // serial tile driver, the thread-parallel tier and both prepacked
+    // paths produces identical bits. Only meaningful where the tile
+    // layout is the packed layout.
+    if !KernelId::Avx2Tile.available() {
+        eprintln!("SKIP: no AVX2+FMA — prepacked operands use the dot layout here");
+        return;
+    }
+    let ctx_ser = GemmContext::new(DispatchConfig { threads: 1, ..DispatchConfig::default() });
+    let ctx_par = GemmContext::new(DispatchConfig {
+        threads: 3,
+        parallel_min_flops: 0.0,
+        ..DispatchConfig::default()
+    });
+    let mut seed = 0xEB17u64;
+    for (transa, transb) in [
+        (Transpose::No, Transpose::No),
+        (Transpose::Yes, Transpose::No),
+        (Transpose::No, Transpose::Yes),
+        (Transpose::Yes, Transpose::Yes),
+    ] {
+        for (ci, &(m, n, k)) in
+            [(37usize, 29usize, 41usize), (64, 48, 16), (6, 16, 8), (61, 33, 257)].iter().enumerate()
+        {
+            seed += 1;
+            let ep = ep_case(ci, m, n);
+            let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+            let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+            let a = Matrix::random(ar, ac, seed, -1.0, 1.0);
+            let b = Matrix::random(br, bc, seed ^ 0x55, -1.0, 1.0);
+            let c0: Vec<f32> = Matrix::random(m, n, seed ^ 0x99, -1.0, 1.0).data().to_vec();
+            let what = format!("{m}x{n}x{k} ta={transa:?} tb={transb:?} ep#{}", ci % 6);
+
+            // Serial reference: the fused tile kernel through a forced plan.
+            let plan_ser = ctx_ser
+                .gemm()
+                .transpose_a(transa)
+                .transpose_b(transb)
+                .alpha(0.75)
+                .beta(0.5)
+                .kernel(KernelId::Avx2Tile)
+                .epilogue(ep.clone())
+                .plan(m, n, k)
+                .unwrap();
+            let mut c_serial = c0.clone();
+            plan_ser.run(a.data(), b.data(), &mut c_serial).unwrap();
+
+            // Fused post-pass equivalence for the forced serial plan.
+            let plain_ser = ctx_ser
+                .gemm()
+                .transpose_a(transa)
+                .transpose_b(transb)
+                .alpha(0.75)
+                .beta(0.5)
+                .kernel(KernelId::Avx2Tile)
+                .plan(m, n, k)
+                .unwrap();
+            let mut c_two_pass = Matrix::zeros(m, n);
+            c_two_pass.data_mut().copy_from_slice(&c0);
+            plain_ser.run(a.data(), b.data(), c_two_pass.data_mut()).unwrap();
+            ep.apply(&mut c_two_pass.view_mut(), 0, 0);
+            assert_eq!(c_two_pass.data(), &c_serial[..], "{what}: fused != two-pass bits");
+
+            // Thread-parallel execution of the same fused problem.
+            let plan_par = ctx_par
+                .gemm()
+                .transpose_a(transa)
+                .transpose_b(transb)
+                .alpha(0.75)
+                .beta(0.5)
+                .epilogue(ep.clone())
+                .plan(m, n, k)
+                .unwrap();
+            assert_eq!(plan_par.kernel(), KernelId::Parallel, "{what}: must take the parallel tier");
+            let mut c_par = c0.clone();
+            plan_par.run(a.data(), b.data(), &mut c_par).unwrap();
+            assert_eq!(c_par, c_serial, "{what}: parallel != serial bits");
+
+            // Prepacked B, and fully prepacked, serial and parallel.
+            for (ctx, plan, label) in
+                [(&ctx_ser, &plan_ser, "serial"), (&ctx_par, &plan_par, "parallel")]
+            {
+                let pb = ctx.pack_b(transb, k, n, b.data(), b.ld()).unwrap();
+                assert!(pb.is_tile(), "{what}: AVX2 host must pack the tile layout");
+                let mut c_pb = c0.clone();
+                plan.run_packed_b(a.data(), &pb, &mut c_pb).unwrap();
+                assert_eq!(c_pb, c_serial, "{what}: {label} run_packed_b != serial bits");
+
+                let pa = ctx.pack_a(transa, m, k, a.data(), a.ld()).unwrap();
+                let mut c_pab = c0.clone();
+                plan.run_packed(&pa, &pb, &mut c_pab).unwrap();
+                assert_eq!(c_pab, c_serial, "{what}: {label} run_packed != serial bits");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_epilogue_f64_matches_post_pass() {
+    hermetic_tune_cache();
+    // The epilogue subsystem is element-generic: same bitwise contract
+    // through the f64 (DGEMM) ladder.
+    let ctx = GemmContext::new(DispatchConfig::default());
+    for (ci, &(m, n, k)) in [(17usize, 15usize, 9usize), (33, 7, 65), (5, 40, 1)].iter().enumerate()
+    {
+        let bias: Vec<f64> = (0..n).map(|i| (((i * 7 + ci) % 13) as f64 - 6.0) / 3.0).collect();
+        let ep = Epilogue::<f64>::new()
+            .bias_row(bias)
+            .activation(Activation::Tanh)
+            .clamp(-0.9, 0.9);
+        let a = Matrix::<f64>::random_strided(m, k, k + 3, 0xF64 + ci as u64);
+        let b = Matrix::<f64>::random_strided(k, n, n + 1, 0xF64 ^ 0xAB);
+        let mut c_got = Matrix::<f64>::random_strided(m, n, n + 2, 0xF64 ^ 0xCD);
+        let mut c_ref = c_got.clone();
+
+        let fused = ctx
+            .gemm_for::<f64>()
+            .alpha(0.5)
+            .beta(1.5)
+            .lda(a.ld())
+            .ldb(b.ld())
+            .ldc(c_got.ld())
+            .epilogue(ep.clone())
+            .plan(m, n, k)
+            .unwrap();
+        fused.run(a.data(), b.data(), c_got.data_mut()).unwrap();
+
+        let plain = ctx
+            .gemm_for::<f64>()
+            .alpha(0.5)
+            .beta(1.5)
+            .lda(a.ld())
+            .ldb(b.ld())
+            .ldc(c_ref.ld())
+            .plan(m, n, k)
+            .unwrap();
+        plain.run(a.data(), b.data(), c_ref.data_mut()).unwrap();
+        ep.apply(&mut c_ref.view_mut(), 0, 0);
+        assert_eq!(c_got.data(), c_ref.data(), "f64 fused != post-pass bits ({m}x{n}x{k})");
+    }
+}
+
+#[test]
+fn batched_epilogue_matches_per_item_runs() {
+    hermetic_tune_cache();
+    // run_batch with an epilogue must equal per-item fused runs — in
+    // particular with a per-row (Col) bias, which the shared-B fold may
+    // NOT fold across stacked items (stacking would stretch the bias
+    // down the whole slab).
+    let ctx = GemmContext::new(DispatchConfig::default());
+    let (m, n, k, batch) = (12usize, 9usize, 17usize, 4usize);
+    let a = Matrix::random(batch * m, k, 0xBA7C, -1.0, 1.0);
+    let b = Matrix::random(k, n, 0xBA7C ^ 0x55, -1.0, 1.0);
+    for (label, ep) in [
+        ("row-bias", Epilogue::new().bias_row(bias_vec(n, 1)).activation(Activation::Relu)),
+        ("col-bias", Epilogue::new().bias_col(bias_vec(m, 2)).activation(Activation::Tanh)),
+        ("clamp", Epilogue::new().clamp(-0.5, 0.5)),
+    ] {
+        let plan = ctx.gemm().epilogue(ep.clone()).plan(m, n, k).unwrap();
+        let mut c_batch = vec![0.0f32; batch * m * n];
+        plan.run_batch(a.data(), b.data(), &mut c_batch, batch, BatchStrides::shared_b(m, n, k))
+            .unwrap();
+        for i in 0..batch {
+            let mut c_item = vec![0.0f32; m * n];
+            plan.run(&a.data()[i * m * k..(i + 1) * m * k], b.data(), &mut c_item).unwrap();
+            // Tolerance, not bits: the fold path may select a different
+            // kernel for the stacked shape than the per-item plan.
+            assert_allclose(
+                &c_batch[i * m * n..(i + 1) * m * n],
+                &c_item,
+                2e-4,
+                1e-5,
+                &format!("{label}: batched item {i} vs per-item fused run"),
+            );
+        }
+    }
+}
+
+#[test]
+fn epilogue_validation_rejects_wrong_bias_lengths() {
+    hermetic_tune_cache();
+    let ctx = GemmContext::new(DispatchConfig::default());
+    // Row bias must have length n, col bias length m.
+    assert!(ctx.gemm().epilogue(Epilogue::new().bias_row(vec![0.0; 5])).plan(4, 6, 3).is_err());
+    assert!(ctx.gemm().epilogue(Epilogue::new().bias_col(vec![0.0; 6])).plan(4, 6, 3).is_err());
+    assert!(ctx.gemm().epilogue(Epilogue::new().bias_row(vec![0.0; 6])).plan(4, 6, 3).is_ok());
+    assert!(ctx.gemm().epilogue(Epilogue::new().bias_col(vec![0.0; 4])).plan(4, 6, 3).is_ok());
+}

@@ -3,7 +3,7 @@
 use emmerald::blas::{
     available_backends, sgemm, sgemm_matrix, Backend, BlasError, Matrix, Transpose,
 };
-use emmerald::util::testkit::assert_allclose;
+use emmerald::util::testkit::{assert_allclose, hermetic_tune_cache};
 
 fn square(backend: Backend, n: usize, a: &Matrix, b: &Matrix) -> Matrix {
     let mut c = Matrix::zeros(n, n);
@@ -30,6 +30,7 @@ fn square(backend: Backend, n: usize, a: &Matrix, b: &Matrix) -> Matrix {
 
 #[test]
 fn all_backends_agree_at_multiple_sizes() {
+    hermetic_tune_cache();
     for &n in &[1usize, 17, 64, 130, 320] {
         let a = Matrix::random(n, n, n as u64, -1.0, 1.0);
         let b = Matrix::random(n, n, (n + 1) as u64, -1.0, 1.0);
@@ -49,6 +50,7 @@ fn all_backends_agree_at_multiple_sizes() {
 
 #[test]
 fn paper_methodology_fixed_stride_700() {
+    hermetic_tune_cache();
     // The paper's benchmark layout: logical size < stride = 700.
     let (n, stride) = (96usize, 700usize);
     let a = Matrix::random_strided(n, n, stride, 1);
@@ -69,6 +71,7 @@ fn paper_methodology_fixed_stride_700() {
 
 #[test]
 fn rectangular_and_transposed_combinations() {
+    hermetic_tune_cache();
     let (m, n, k) = (33, 47, 129);
     for backend in available_backends() {
         for (ta, tb) in [
@@ -102,6 +105,7 @@ fn rectangular_and_transposed_combinations() {
 
 #[test]
 fn error_paths_are_reported() {
+    hermetic_tune_cache();
     let a = vec![0.0f32; 10];
     let b = vec![0.0f32; 10];
     let mut c = vec![0.0f32; 10];
@@ -117,6 +121,7 @@ fn error_paths_are_reported() {
 
 #[test]
 fn beta_zero_overwrites_nan_poisoned_c() {
+    hermetic_tune_cache();
     // BLAS semantics: beta = 0 must ignore (not propagate) old C contents.
     let n = 8;
     let a = Matrix::random(n, n, 3, -1.0, 1.0);
@@ -136,6 +141,7 @@ fn beta_zero_overwrites_nan_poisoned_c() {
 
 #[test]
 fn accumulation_chains_compose() {
+    hermetic_tune_cache();
     // C = A·B computed in two k-halves with beta=1 must equal one shot.
     let (m, n, k) = (24, 31, 64);
     let a = Matrix::random(m, k, 5, -1.0, 1.0);

@@ -9,7 +9,7 @@ use emmerald::blas::{Backend, Matrix};
 use emmerald::coordinator::{GradEngine, NativeEngine, PjrtEngine};
 use emmerald::nn::{Dataset, Mlp};
 use emmerald::runtime::{PjrtGemm, Runtime, Tensor};
-use emmerald::util::testkit::assert_allclose;
+use emmerald::util::testkit::{assert_allclose, hermetic_tune_cache};
 
 fn runtime() -> Option<Runtime> {
     match Runtime::new("artifacts") {
@@ -23,6 +23,7 @@ fn runtime() -> Option<Runtime> {
 
 #[test]
 fn manifest_lists_expected_artifacts() {
+    hermetic_tune_cache();
     let Some(rt) = runtime() else { return };
     let names = rt.registry().names();
     for expect in ["gemm_64", "gemm_320", "gemm_512", "gemm_naive_320", "mlp_forward", "mlp_grad"]
@@ -33,6 +34,7 @@ fn manifest_lists_expected_artifacts() {
 
 #[test]
 fn pallas_gemm_matches_native_naive_at_every_size() {
+    hermetic_tune_cache();
     let Some(rt) = runtime() else { return };
     for name in rt.registry().names() {
         if !name.starts_with("gemm_") || name.contains("naive") {
@@ -59,6 +61,7 @@ fn pallas_gemm_matches_native_naive_at_every_size() {
 
 #[test]
 fn naive_pallas_artifact_agrees_with_emmerald_pallas_artifact() {
+    hermetic_tune_cache();
     let Some(rt) = runtime() else { return };
     let e = PjrtGemm::new(&rt, "gemm_320").unwrap();
     let n = PjrtGemm::new(&rt, "gemm_naive_320").unwrap();
@@ -71,6 +74,7 @@ fn naive_pallas_artifact_agrees_with_emmerald_pallas_artifact() {
 
 #[test]
 fn execute_validates_input_shapes() {
+    hermetic_tune_cache();
     let Some(rt) = runtime() else { return };
     let bad = vec![Tensor::zeros(vec![2, 2]), Tensor::zeros(vec![2, 2])];
     let err = rt.execute("gemm_64", &bad).unwrap_err();
@@ -82,6 +86,7 @@ fn execute_validates_input_shapes() {
 
 #[test]
 fn compile_cache_reuses_executables() {
+    hermetic_tune_cache();
     let Some(rt) = runtime() else { return };
     rt.ensure_compiled("gemm_64").unwrap();
     // Second call is a cache hit (observable as being much faster, but we
@@ -101,6 +106,7 @@ fn compile_cache_reuses_executables() {
 /// backprop on identical parameters and data.
 #[test]
 fn pjrt_grad_matches_native_backprop() {
+    hermetic_tune_cache();
     let Some(_) = runtime() else { return };
     let mut pjrt = match PjrtEngine::new("artifacts") {
         Ok(e) => e,

@@ -3,10 +3,12 @@
 use emmerald::blas::Backend;
 use emmerald::coordinator::{Coordinator, EngineFactory, NativeEngine, PjrtEngine, TrainConfig};
 use emmerald::nn::{Dataset, Mlp};
+use emmerald::util::testkit::hermetic_tune_cache;
 use std::sync::Arc;
 
 #[test]
 fn threaded_native_training_converges() {
+    hermetic_tune_cache();
     let sizes = [16, 32, 4];
     let mlp = Mlp::init(&sizes, 3, Backend::Simd);
     let data = Dataset::gaussian_clusters(512, 16, 4, 0.4, 17);
@@ -24,6 +26,7 @@ fn threaded_native_training_converges() {
 
 #[test]
 fn native_backends_train_identically() {
+    hermetic_tune_cache();
     // The loss trajectory must not depend on which SGEMM backend computes
     // it (same flops, same order of averaging).
     let run = |backend: Backend| {
@@ -49,6 +52,7 @@ fn native_backends_train_identically() {
 
 #[test]
 fn pjrt_training_end_to_end() {
+    hermetic_tune_cache();
     // The full three-layer stack: Rust coordinator → PJRT runtime → HLO
     // artifact containing the JAX MLP built on the Pallas Emmerald kernel.
     let mut engine = match PjrtEngine::new("artifacts") {

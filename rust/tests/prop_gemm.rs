@@ -2,9 +2,9 @@
 //! shapes, strides, transposes and scalars (the testkit substrate replaces
 //! proptest in this offline build).
 
-use emmerald::blas::{sgemm, sgemm_batch, Backend, Matrix, Transpose};
+use emmerald::blas::{sgemm, sgemm_batch, Backend, GemmContext, Matrix, Transpose};
 use emmerald::gemm::pack::{kpad_for, PackedB};
-use emmerald::gemm::{BlockParams, TileParams, Unroll};
+use emmerald::gemm::{Activation, BlockParams, DispatchConfig, Epilogue, TileParams, Unroll};
 use emmerald::util::testkit::{assert_allclose, check, Gen};
 
 fn random_case(g: &mut Gen, backend: Backend) {
@@ -314,6 +314,142 @@ fn prop_packed_b_is_a_permutation_of_the_block() {
                 assert_eq!(got, want, "col {j} p {p}");
             }
         }
+    });
+}
+
+/// A random epilogue: any bias shape, any activation, optional clamp.
+fn random_epilogue(g: &mut Gen, m: usize, n: usize) -> Epilogue {
+    let mut ep = Epilogue::new();
+    match g.rng.range_usize(0, 2) {
+        0 => {}
+        1 => ep = ep.bias_row((0..n).map(|_| g.rng.f32_range(-1.0, 1.0)).collect()),
+        _ => ep = ep.bias_col((0..m).map(|_| g.rng.f32_range(-1.0, 1.0)).collect()),
+    }
+    ep = ep.activation(
+        [Activation::None, Activation::Relu, Activation::Gelu, Activation::Tanh]
+            [g.rng.range_usize(0, 3)],
+    );
+    if g.rng.chance(0.4) {
+        let lo = g.rng.f32_range(-1.0, 0.0);
+        let hi = g.rng.f32_range(0.0, 1.0);
+        ep = ep.clamp(lo, hi);
+    }
+    ep
+}
+
+#[test]
+fn prop_fused_epilogue_matches_post_pass() {
+    // The epilogue contract over the full random space: a fused plan
+    // produces exactly the bits of the same plan without an epilogue
+    // followed by a separate apply pass. Bitwise — the fused writeback
+    // runs the identical scalar function on the identical accumulated
+    // value, so in particular the bias add is exact when β == 0.
+    let ctx = GemmContext::new(DispatchConfig::default());
+    check("fused epilogue ≍ post-pass", 80, |g| {
+        let m = g.dim(40);
+        let n = g.dim(40);
+        let k = g.dim(64);
+        let transa = if g.rng.chance(0.5) { Transpose::Yes } else { Transpose::No };
+        let transb = if g.rng.chance(0.5) { Transpose::Yes } else { Transpose::No };
+        let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+        let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+        let a = Matrix::random_strided(ar, ac, ac + g.rng.range_usize(0, 4), g.rng.next_u64());
+        let b = Matrix::random_strided(br, bc, bc + g.rng.range_usize(0, 3), g.rng.next_u64());
+        let c0 = Matrix::random_strided(m, n, n + g.rng.range_usize(0, 4), g.rng.next_u64());
+        let alpha = g.rng.f32_range(-2.0, 2.0);
+        let beta = if g.rng.chance(0.4) { 0.0 } else { g.rng.f32_range(-1.5, 1.5) };
+        let ep = random_epilogue(g, m, n);
+
+        let mut c_got = c0.clone();
+        ctx.gemm()
+            .transpose_a(transa)
+            .transpose_b(transb)
+            .alpha(alpha)
+            .beta(beta)
+            .lda(a.ld())
+            .ldb(b.ld())
+            .ldc(c_got.ld())
+            .epilogue(ep.clone())
+            .plan(m, n, k)
+            .unwrap()
+            .run(a.data(), b.data(), c_got.data_mut())
+            .unwrap();
+
+        let mut c_ref = c0.clone();
+        ctx.gemm()
+            .transpose_a(transa)
+            .transpose_b(transb)
+            .alpha(alpha)
+            .beta(beta)
+            .lda(a.ld())
+            .ldb(b.ld())
+            .ldc(c_ref.ld())
+            .plan(m, n, k)
+            .unwrap()
+            .run(a.data(), b.data(), c_ref.data_mut())
+            .unwrap();
+        ep.apply(&mut c_ref.view_mut(), 0, 0);
+
+        assert_eq!(
+            c_got.data(),
+            c_ref.data(),
+            "fused != post-pass bits (m={m} n={n} k={k} ta={transa:?} tb={transb:?} α={alpha} β={beta})"
+        );
+    });
+}
+
+#[test]
+fn prop_identity_epilogue_is_plain_gemm() {
+    // An all-defaults epilogue must be a bitwise no-op: attaching it to a
+    // plan changes nothing about the result.
+    let ctx = GemmContext::new(DispatchConfig::default());
+    check("identity epilogue ≍ plain plan", 40, |g| {
+        let m = g.dim(32);
+        let n = g.dim(32);
+        let k = g.dim(48);
+        let a = Matrix::random(m, k, g.rng.next_u64(), -1.0, 1.0);
+        let b = Matrix::random(k, n, g.rng.next_u64(), -1.0, 1.0);
+        let c0 = g.matrix(m, n);
+        let beta = g.rng.f32_range(-1.0, 1.0);
+
+        let mut c_id = c0.clone();
+        ctx.gemm()
+            .beta(beta)
+            .epilogue(Epilogue::new())
+            .plan(m, n, k)
+            .unwrap()
+            .run(a.data(), b.data(), &mut c_id)
+            .unwrap();
+
+        let mut c_plain = c0.clone();
+        ctx.gemm()
+            .beta(beta)
+            .plan(m, n, k)
+            .unwrap()
+            .run(a.data(), b.data(), &mut c_plain)
+            .unwrap();
+        assert_eq!(c_id, c_plain, "identity epilogue changed bits (m={m} n={n} k={k})");
+    });
+}
+
+#[test]
+fn prop_fused_plan_rerun_is_bit_stable() {
+    // Re-running one fused plan on the same inputs is deterministic.
+    let ctx = GemmContext::new(DispatchConfig::default());
+    check("fused plan rerun", 30, |g| {
+        let m = g.dim(32);
+        let n = g.dim(32);
+        let k = g.dim(48);
+        let a = Matrix::random(m, k, g.rng.next_u64(), -1.0, 1.0);
+        let b = Matrix::random(k, n, g.rng.next_u64(), -1.0, 1.0);
+        let c0 = g.matrix(m, n);
+        let ep = random_epilogue(g, m, n);
+        let plan = ctx.gemm().beta(0.25).epilogue(ep).plan(m, n, k).unwrap();
+        let mut c1 = c0.clone();
+        let mut c2 = c0;
+        plan.run(a.data(), b.data(), &mut c1).unwrap();
+        plan.run(a.data(), b.data(), &mut c2).unwrap();
+        assert_eq!(c1, c2, "fused plan rerun must be bit-identical (m={m} n={n} k={k})");
     });
 }
 
