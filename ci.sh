@@ -30,11 +30,25 @@ for f in tests/*.rs; do
 done
 [ "$hermetic_bad" = "0" ] || exit 1
 
+# Repo lint: the unsafe-code policy checker (tools/lint). The self-test
+# seeds one violation of every rule first, so a broken checker fails the
+# gate instead of green-lighting the tree.
+echo "== repo lint self-test (cargo run -p lint -- --self-test) =="
+cargo run -q -p lint -- --self-test
+echo "== repo lint (cargo run -p lint) =="
+cargo run -q -p lint
+
 echo "== cargo build --release =="
 cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+# Checked-raw-pointer pass: the util::ptr verification layer stays active
+# in an optimised build (debug builds always check; this proves the
+# feature-gated release path too).
+echo "== cargo test -q --release --features checked-ptr =="
+cargo test -q --release --features checked-ptr
 
 # Ablation guard: the outer-product tile tier must not regress below the
 # dot-panel AVX2 kernel at 512^3 and 1024^3 (skip-passes without AVX2).
@@ -64,6 +78,34 @@ elif cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
 else
     echo "== clippy not installed; skipped =="
+fi
+
+# Miri tier: interpret the dedicated scalar test file under Miri (UB
+# check over the scalar kernel ladder — dispatch hides the vector ISAs
+# under cfg(miri)). Limited to tests/miri_scalar.rs: Miri is ~100x
+# slower than native, and the vector kernels are out of its reach anyway.
+# Skip-passes where no nightly Miri toolchain is installed.
+if cargo +nightly miri --version >/dev/null 2>&1; then
+    echo "== cargo +nightly miri test --test miri_scalar =="
+    MIRIFLAGS="${MIRIFLAGS:-}" cargo +nightly miri test --test miri_scalar
+else
+    echo "== miri not installed; skipped =="
+fi
+
+# AddressSanitizer tier (opt-in: CI_ASAN=1, needs nightly + the
+# rust-src component). Runs the same scalar-routable test file natively
+# with ASan instrumentation — catches heap overflows the checked-ptr
+# asserts would miss in FFI-adjacent code paths.
+if [ "${CI_ASAN:-0}" = "1" ]; then
+    if cargo +nightly --version >/dev/null 2>&1; then
+        echo "== ASan: cargo +nightly test --test miri_scalar (sanitizer=address) =="
+        RUSTFLAGS="-Zsanitizer=address" \
+            cargo +nightly test --test miri_scalar --target x86_64-unknown-linux-gnu
+    else
+        echo "== ASan requested but no nightly toolchain; skipped =="
+    fi
+else
+    echo "== ASan tier skipped (set CI_ASAN=1 to enable) =="
 fi
 
 echo "CI gate passed."

@@ -4,14 +4,18 @@
 //! immediately to improve the performance of single-precision libraries
 //! based on BLAS"); these are the Level-1 routines a consumer library
 //! expects, vectorised with the same SSE primitives as the GEMM kernel.
+//!
+//! Under Miri the SSE paths are compiled out (`not(miri)`) and the scalar
+//! fallbacks run instead, so the Level-1 surface is interpretable in the
+//! `miri_scalar` UB-check tier.
 
-#[cfg(target_arch = "x86_64")]
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 use std::arch::x86_64::*;
 
 /// Dot product `xᵀ y` (SDOT).
 pub fn sdot(x: &[f32], y: &[f32]) -> f32 {
     assert_eq!(x.len(), y.len(), "sdot length mismatch");
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
         // SAFETY: SSE is part of the x86-64 baseline; one column, width 1.
         unsafe {
@@ -27,14 +31,14 @@ pub fn sdot(x: &[f32], y: &[f32]) -> f32 {
             return out[0];
         }
     }
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
     x.iter().zip(y).map(|(a, b)| a * b).sum()
 }
 
 /// `y += alpha * x` (SAXPY).
 pub fn saxpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len(), "saxpy length mismatch");
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
         // SAFETY: SSE baseline; in-bounds by the length assert.
         unsafe {
@@ -54,7 +58,7 @@ pub fn saxpy(alpha: f32, x: &[f32], y: &mut [f32]) {
             return;
         }
     }
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
     for (yi, xi) in y.iter_mut().zip(x) {
         *yi += alpha * xi;
     }
@@ -62,7 +66,7 @@ pub fn saxpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 
 /// `x *= alpha` (SSCAL).
 pub fn sscal(alpha: f32, x: &mut [f32]) {
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
         // SAFETY: SSE baseline.
         unsafe {
@@ -81,7 +85,7 @@ pub fn sscal(alpha: f32, x: &mut [f32]) {
             return;
         }
     }
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
     for xi in x.iter_mut() {
         *xi *= alpha;
     }

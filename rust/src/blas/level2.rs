@@ -40,8 +40,10 @@ pub fn sgemv(
         Transpose::No => {
             // One kernel dot product per row of A.
             for r in 0..a.rows() {
-                #[cfg(target_arch = "x86_64")]
-                // SAFETY: row r is readable for cols() elements; SSE baseline.
+                #[cfg(all(target_arch = "x86_64", not(miri)))]
+                // SAFETY: row r is readable for cols() elements (the view
+                // invariant `(rows-1)*ld + cols <= data.len()`), x has
+                // cols() elements by the shape check; SSE baseline.
                 let dot = unsafe {
                     let mut out = [0.0f32; 1];
                     crate::gemm::microkernel::sse_dot_panel_dyn(
@@ -54,7 +56,7 @@ pub fn sgemv(
                     );
                     out[0]
                 };
-                #[cfg(not(target_arch = "x86_64"))]
+                #[cfg(not(all(target_arch = "x86_64", not(miri))))]
                 let dot: f32 = (0..a.cols()).map(|c| a.get(r, c) * x[c]).sum();
                 y[r] += alpha * dot;
             }
@@ -62,8 +64,7 @@ pub fn sgemv(
         Transpose::Yes => {
             // y += alpha * Σ_r x[r] · A[r, :]  (row-major-friendly SAXPYs).
             for r in 0..a.rows() {
-                let row =
-                    unsafe { std::slice::from_raw_parts(a.row_ptr(r), a.cols()) };
+                let row = &a.data()[r * a.ld()..][..a.cols()];
                 saxpy(alpha * x[r], row, y);
             }
         }

@@ -11,9 +11,17 @@
 //! parameter `T: Element` with **`f32` as the default** — `Matrix`,
 //! `MatRef<'_>` and `MatMut<'_>` written without a parameter mean exactly
 //! what they always did, and `Matrix<f64>` is the DGEMM storage type.
+//!
+//! Raw access: `MatMut` is built on the checked raw-pointer core
+//! ([`crate::util::ptr::RawMatMut`]) — the pointer arithmetic for row
+//! splits, column splits and sub-windows lives there, verified under
+//! `debug_assertions`/`checked-ptr`, and the kernel drivers obtain
+//! length-carrying spans ([`MatRef::row_span`], [`MatRef::tail_span`])
+//! instead of bare pointers.
 
 use super::error::BlasError;
 use crate::gemm::element::Element;
+use crate::util::ptr::{RawMat, RawMatMut, RawSlice};
 
 /// Immutable strided view over element data.
 #[derive(Clone, Copy, Debug)]
@@ -58,20 +66,36 @@ impl<'a, T: Element> MatRef<'a, T> {
         self.data[r * self.ld + c]
     }
 
-    /// Unchecked element access for hot paths.
-    ///
-    /// # Safety
-    /// Caller must guarantee `r < rows && c < cols`.
-    #[inline(always)]
-    pub unsafe fn get_unchecked(&self, r: usize, c: usize) -> T {
-        *self.data.get_unchecked(r * self.ld + c)
+    /// Checked raw handle over this view — what the packing routines read
+    /// through (debug/`checked-ptr` verified, bare pointer in release).
+    #[inline]
+    pub(crate) fn raw(&self) -> RawMat<T> {
+        RawMat::from_slice(self.data, self.rows, self.cols, self.ld)
     }
 
     /// Pointer to the start of row `r`.
     #[inline(always)]
     pub fn row_ptr(&self, r: usize) -> *const T {
         debug_assert!(r < self.rows);
-        unsafe { self.data.as_ptr().add(r * self.ld) }
+        self.data[r * self.ld..].as_ptr()
+    }
+
+    /// Length-carrying span over `len` elements of row `r` starting at
+    /// column `c0` — the dot drivers' contiguous `A`-row window.
+    #[inline]
+    pub(crate) fn row_span(&self, r: usize, c0: usize, len: usize) -> RawSlice<T> {
+        assert!(r < self.rows && c0 + len <= self.cols, "row span ({r}, {c0}+{len}) out of {}x{}", self.rows, self.cols);
+        let start = r * self.ld + c0;
+        RawSlice::from_slice(&self.data[start..start + len])
+    }
+
+    /// Length-carrying span from `(r, c0)` to the end of the backing
+    /// storage — the strided-`B` ablation path walks this across rows
+    /// with an explicit stride.
+    #[inline]
+    pub(crate) fn tail_span(&self, r: usize, c0: usize) -> RawSlice<T> {
+        assert!(r < self.rows && c0 <= self.cols, "tail span ({r}, {c0}) out of {}x{}", self.rows, self.cols);
+        RawSlice::from_slice(&self.data[r * self.ld + c0..])
     }
 
     /// Sub-view of `nr × nc` starting at `(r0, c0)` (same stride).
@@ -88,22 +112,19 @@ impl<'a, T: Element> MatRef<'a, T> {
 
 /// Mutable strided view over element data.
 ///
-/// Stored as a raw pointer + length rather than `&mut [T]` so the view
-/// can be split along *either* axis: two column slices of a strided matrix
-/// interleave in storage (every row of the left slice is followed by the
-/// right slice's part of that row), which two `&mut [T]` halves cannot
-/// express. The invariant is that a `MatMut` grants exclusive access to
-/// its **logical** elements (`(r, c)` with `r < rows`, `c < cols`) only;
-/// sibling views produced by [`split_rows`](Self::split_rows) /
-/// [`split_cols`](Self::split_cols) may share a backing range but never a
-/// logical element, so the accessors below never race.
+/// Built on a raw handle ([`RawMatMut`]) rather than `&mut [T]` so the
+/// view can be split along *either* axis: two column slices of a strided
+/// matrix interleave in storage (every row of the left slice is followed
+/// by the right slice's part of that row), which two `&mut [T]` halves
+/// cannot express. The invariant is that a `MatMut` grants exclusive
+/// access to its **logical** elements (`(r, c)` with `r < rows`,
+/// `c < cols`) only; sibling views produced by
+/// [`split_rows`](Self::split_rows) / [`split_cols`](Self::split_cols)
+/// may share a backing range but never a logical element, so the
+/// accessors below never race.
 #[derive(Debug)]
 pub struct MatMut<'a, T = f32> {
-    ptr: *mut T,
-    len: usize,
-    rows: usize,
-    cols: usize,
-    ld: usize,
+    raw: RawMatMut<T>,
     _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
@@ -118,70 +139,70 @@ impl<'a, T: Element> MatMut<'a, T> {
     /// Construct a view, validating `ld` and the backing length.
     pub fn new(data: &'a mut [T], rows: usize, cols: usize, ld: usize) -> Result<Self, BlasError> {
         validate(rows, cols, ld, data.len())?;
-        Ok(Self {
-            ptr: data.as_mut_ptr(),
-            len: data.len(),
-            rows,
-            cols,
-            ld,
-            _marker: std::marker::PhantomData,
-        })
+        Ok(Self::from_raw(RawMatMut::from_slice(data, rows, cols, ld)))
+    }
+
+    /// Wrap an already-validated raw handle (module-internal: the handle
+    /// must have come from an exclusive borrow).
+    #[inline]
+    fn from_raw(raw: RawMatMut<T>) -> Self {
+        Self { raw, _marker: std::marker::PhantomData }
     }
 
     /// Rows of the stored matrix.
     pub fn rows(&self) -> usize {
-        self.rows
+        self.raw.rows()
     }
 
     /// Columns of the stored matrix.
     pub fn cols(&self) -> usize {
-        self.cols
+        self.raw.cols()
     }
 
     /// Leading dimension (row stride, in elements).
     pub fn ld(&self) -> usize {
-        self.ld
+        self.raw.ld()
     }
 
     /// Bounds-checked element read.
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> T {
-        assert!(r < self.rows && c < self.cols);
-        // SAFETY: logical indices validated against the view's extent.
-        unsafe { *self.ptr.add(r * self.ld + c) }
+        assert!(r < self.rows() && c < self.cols());
+        // SAFETY: logical indices validated against the view's extent,
+        // and &self pauses this view's own writes.
+        unsafe { self.raw.get(r, c) }
     }
 
     /// Bounds-checked element write.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: T) {
-        assert!(r < self.rows && c < self.cols);
-        // SAFETY: logical indices validated against the view's extent.
-        unsafe { *self.ptr.add(r * self.ld + c) = v }
-    }
-
-    /// Unchecked element read.
-    ///
-    /// # Safety
-    /// Caller must guarantee `r < rows && c < cols`.
-    #[inline(always)]
-    pub unsafe fn get_unchecked(&self, r: usize, c: usize) -> T {
-        *self.ptr.add(r * self.ld + c)
-    }
-
-    /// Unchecked element write.
-    ///
-    /// # Safety
-    /// Caller must guarantee `r < rows && c < cols`.
-    #[inline(always)]
-    pub unsafe fn set_unchecked(&mut self, r: usize, c: usize, v: T) {
-        *self.ptr.add(r * self.ld + c) = v;
+        assert!(r < self.rows() && c < self.cols());
+        // SAFETY: logical indices validated against the view's extent,
+        // and &mut self guarantees exclusivity over them.
+        unsafe { self.raw.set(r, c, v) }
     }
 
     /// Mutable pointer to the start of row `r`.
     #[inline(always)]
     pub fn row_ptr_mut(&mut self, r: usize) -> *mut T {
-        debug_assert!(r < self.rows);
-        unsafe { self.ptr.add(r * self.ld) }
+        self.raw.row_ptr(r)
+    }
+
+    /// Checked pointer to the top-left corner of the `h × w` writeback
+    /// window at `(r0, c0)` — the tile tier's anchor. The whole window is
+    /// verified against the view's extent under
+    /// `debug_assertions`/`checked-ptr`.
+    #[inline]
+    pub(crate) fn window_ptr(&mut self, r0: usize, c0: usize, h: usize, w: usize) -> *mut T {
+        self.raw.window_ptr(r0, c0, h, w)
+    }
+
+    /// Copy of the underlying checked raw handle (crate-internal; the
+    /// caller inherits the exclusivity discipline of `&mut self` for as
+    /// long as it uses the handle).
+    #[inline]
+    pub(crate) fn raw_mut(&mut self) -> RawMatMut<T> {
+        self.raw
     }
 
     /// Reborrow as an immutable view.
@@ -193,72 +214,52 @@ impl<'a, T: Element> MatMut<'a, T> {
     pub fn as_ref(&self) -> MatRef<'_, T> {
         // SAFETY: the backing range was a valid &mut [T] at construction
         // and `&self` pauses this view's own writes for the borrow.
-        let data = unsafe { std::slice::from_raw_parts(self.ptr, self.len) };
-        MatRef { data, rows: self.rows, cols: self.cols, ld: self.ld }
+        let data = unsafe { self.raw.flat() };
+        MatRef { data, rows: self.rows(), cols: self.cols(), ld: self.ld() }
+    }
+
+    /// Reconstruct the full backing range as one mutable slice (stride
+    /// padding included) — the column-panel feed for slice-based APIs.
+    ///
+    /// # Safety
+    /// This view must own its *entire* backing range exclusively — true
+    /// for views over a whole matrix or a [`block_mut`](Self::block_mut)
+    /// of one, never for a [`split_cols`](Self::split_cols) half (whose
+    /// backing range interleaves with its sibling's logical elements).
+    pub(crate) unsafe fn flat_mut(&mut self) -> &mut [T] {
+        // SAFETY: whole-range exclusivity is the caller's contract;
+        // lifetime is tied to &mut self by the signature.
+        unsafe { self.raw.flat_mut() }
     }
 
     /// Reborrow as a shorter-lived mutable view.
     pub fn reborrow(&mut self) -> MatMut<'_, T> {
-        MatMut { ptr: self.ptr, len: self.len, rows: self.rows, cols: self.cols, ld: self.ld, _marker: std::marker::PhantomData }
+        MatMut::from_raw(self.raw)
     }
 
     /// Split into two disjoint row ranges at row `r` (the matrix analogue
-    /// of `split_at_mut`); used by the thread-parallel GEMM driver.
+    /// of `split_at_mut`); used by the thread-parallel GEMM driver. The
+    /// halves' backing ranges cannot overlap (the top half's length is
+    /// clamped to the split offset — see [`RawMatMut::split_rows`]).
     pub fn split_rows(self, r: usize) -> (MatMut<'a, T>, MatMut<'a, T>) {
-        assert!(r <= self.rows, "split row {r} > rows {}", self.rows);
-        // A tight last row may end before r*ld; clamp so the halves stay
-        // within the original backing range.
-        let off = (r * self.ld).min(self.len);
-        (
-            MatMut { ptr: self.ptr, len: off, rows: r, cols: self.cols, ld: self.ld, _marker: std::marker::PhantomData },
-            MatMut {
-                // SAFETY: off <= len, so the offset pointer stays in range.
-                ptr: unsafe { self.ptr.add(off) },
-                len: self.len - off,
-                rows: self.rows - r,
-                cols: self.cols,
-                ld: self.ld,
-                _marker: std::marker::PhantomData,
-            },
-        )
+        let (top, bottom) = self.raw.split_rows(r);
+        (MatMut::from_raw(top), MatMut::from_raw(bottom))
     }
 
     /// Split into two disjoint column ranges at column `c` (left keeps
     /// columns `0..c`, right gets `c..cols`); used by the thread-parallel
     /// GEMM driver's column split for skinny row spaces. The halves
     /// interleave in storage (same rows, same stride) but their logical
-    /// elements are disjoint — the raw-pointer representation exists for
+    /// elements are disjoint — the raw-handle representation exists for
     /// exactly this split.
     pub fn split_cols(self, c: usize) -> (MatMut<'a, T>, MatMut<'a, T>) {
-        assert!(c <= self.cols, "split col {c} > cols {}", self.cols);
-        let off = c.min(self.len);
-        (
-            MatMut { ptr: self.ptr, len: self.len, rows: self.rows, cols: c, ld: self.ld, _marker: std::marker::PhantomData },
-            MatMut {
-                // SAFETY: off <= len, so the offset pointer stays in range.
-                ptr: unsafe { self.ptr.add(off) },
-                len: self.len - off,
-                rows: self.rows,
-                cols: self.cols - c,
-                ld: self.ld,
-                _marker: std::marker::PhantomData,
-            },
-        )
+        let (left, right) = self.raw.split_cols(c);
+        (MatMut::from_raw(left), MatMut::from_raw(right))
     }
 
     /// Reborrow a mutable sub-view of `nr × nc` starting at `(r0, c0)`.
     pub fn block_mut(&mut self, r0: usize, c0: usize, nr: usize, nc: usize) -> MatMut<'_, T> {
-        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols, "block out of range");
-        let off = (r0 * self.ld + c0).min(self.len);
-        MatMut {
-            // SAFETY: off <= len, so the offset pointer stays in range.
-            ptr: unsafe { self.ptr.add(off) },
-            len: self.len - off,
-            rows: nr,
-            cols: nc,
-            ld: self.ld,
-            _marker: std::marker::PhantomData,
-        }
+        MatMut::from_raw(self.raw.window(r0, c0, nr, nc))
     }
 
     /// Scale every element of the logical matrix by `beta`
@@ -268,12 +269,11 @@ impl<'a, T: Element> MatMut<'a, T> {
         if beta == T::ONE {
             return;
         }
-        for r in 0..self.rows {
-            // SAFETY: row r's logical elements are contiguous and in
-            // bounds; &mut self holds off every other access to them.
-            let row = unsafe {
-                std::slice::from_raw_parts_mut(self.ptr.add(r * self.ld), self.cols)
-            };
+        for r in 0..self.rows() {
+            // SAFETY: row r's logical elements are in bounds (r < rows)
+            // and &mut self holds off every other access to them for the
+            // duration of the borrow.
+            let row = unsafe { self.raw.row_slice_mut(r) };
             if beta == T::ZERO {
                 row.fill(T::ZERO);
             } else {
@@ -402,14 +402,7 @@ impl<T: Element> Matrix<T> {
 
     /// Mutable view of the whole matrix.
     pub fn view_mut(&mut self) -> MatMut<'_, T> {
-        MatMut {
-            ptr: self.data.as_mut_ptr(),
-            len: self.data.len(),
-            rows: self.rows,
-            cols: self.cols,
-            ld: self.ld,
-            _marker: std::marker::PhantomData,
-        }
+        MatMut::from_raw(RawMatMut::from_slice(&mut self.data, self.rows, self.cols, self.ld))
     }
 
     /// Logical transpose (materialised copy).
@@ -618,5 +611,31 @@ mod tests {
     fn out_of_bounds_get_panics() {
         let m = Matrix::<f32>::zeros(2, 2);
         let _ = m.get(2, 0);
+    }
+
+    #[test]
+    fn row_and_tail_spans_carry_lengths() {
+        let m = Matrix::from_fn(3, 4, |r, c| (r * 10 + c) as f32);
+        let v = m.view();
+        let row = v.row_span(1, 1, 3);
+        assert_eq!(row.len(), 3);
+        // SAFETY: indices < 3, backing matrix alive for the reads.
+        unsafe {
+            assert_eq!(row.get(0), 11.0);
+            assert_eq!(row.get(2), 13.0);
+        }
+        let tail = v.tail_span(2, 2);
+        assert_eq!(tail.len(), 2);
+        // SAFETY: index < 2.
+        unsafe {
+            assert_eq!(tail.get(0), 22.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_span_rejects_overlong_window() {
+        let m = Matrix::<f32>::zeros(3, 4);
+        let _ = m.view().row_span(0, 2, 3); // 2 + 3 > 4 cols
     }
 }

@@ -56,13 +56,15 @@ pub fn syrk_lower<T: Element>(
     let mut i0 = 0;
     while i0 < n {
         let ib = NB.min(n - i0);
-        // Diagonal block: direct lower-triangle dot products.
+        // Diagonal block: direct lower-triangle dot products over safe
+        // row slices (one bounds check per row pair, not per element).
         for i in i0..i0 + ib {
+            let row_i = &a.data()[i * a.ld()..][..k];
             for j in i0..=i {
+                let row_j = &a.data()[j * a.ld()..][..k];
                 let mut acc = T::ZERO;
-                for p in 0..k {
-                    // SAFETY: i, j < n and p < k.
-                    unsafe { acc += a.get_unchecked(i, p) * a.get_unchecked(j, p) };
+                for (&ai, &aj) in row_i.iter().zip(row_j) {
+                    acc += ai * aj;
                 }
                 let old = c.get(i, j);
                 c.set(i, j, alpha * acc + beta * old);
@@ -76,10 +78,11 @@ pub fn syrk_lower<T: Element>(
             let mut c_panel = c.block_mut(i0 + ib, i0, rows, ib);
             let ld = c_panel.ld();
             // C_panel = alpha * A_lo · A_diagᵀ + beta * C_panel.
-            let (pr, pc) = (c_panel.rows(), c_panel.cols());
-            let panel_slice = unsafe {
-                std::slice::from_raw_parts_mut(c_panel.row_ptr_mut(0), (pr - 1) * ld + pc)
-            };
+            // SAFETY: c_panel is the only live view over C while the
+            // slice exists (&mut c is exclusively borrowed and the
+            // diagonal pass above has finished), so it owns its entire
+            // backing range for the duration of the call.
+            let panel_slice = unsafe { c_panel.flat_mut() };
             super::api::gemm(
                 backend,
                 Transpose::No,

@@ -64,9 +64,13 @@ pub fn gemm<T: Element>(
                 let mut i = 0;
                 while i < mb_eff {
                     let h = 2.min(mb_eff - i);
-                    // SAFETY: packed rows/columns are kpad >= kb_eff f32s
-                    // long; indices are within the packed block by
-                    // construction.
+                    // SAFETY: the kernel reads kb_eff elements per
+                    // pointer; packed A rows and packed B columns are
+                    // kpad >= kb_eff elements long (row_ptr/col_ptr
+                    // verify their full extent in debug), and i+h <=
+                    // mb_eff, w <= panel width keep every pointer a
+                    // valid packed row/column. The writeback goes
+                    // through bounds-checked accessors.
                     unsafe {
                         match (h, w) {
                             (2, 2) => {
@@ -119,11 +123,8 @@ pub fn gemm<T: Element>(
 #[inline(always)]
 fn accumulate<T: Element>(c: &mut MatMut<'_, T>, row: usize, j0: usize, alpha: T, sums: &[T]) {
     for (j, &s) in sums.iter().enumerate() {
-        // SAFETY: caller guarantees row < m and j0 + sums.len() <= n.
-        unsafe {
-            let old = c.get_unchecked(row, j0 + j);
-            c.set_unchecked(row, j0 + j, old + alpha * s);
-        }
+        let old = c.get(row, j0 + j);
+        c.set(row, j0 + j, old + alpha * s);
     }
 }
 

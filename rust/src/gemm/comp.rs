@@ -84,32 +84,31 @@ pub(crate) fn gemm(
                     a.row_ptr(ii + i)
                 };
                 for j in 0..w {
-                    // SAFETY: packed columns are kpad >= k elements long;
-                    // raw A rows are k elements (transa == No there);
-                    // ii+i < m and j0+j < n by loop bounds; use_avx2 comes
-                    // from runtime feature detection.
-                    unsafe {
-                        let col = packed_b.col_ptr(p, j);
-                        let s = {
-                            #[cfg(target_arch = "x86_64")]
-                            {
-                                if use_avx2 {
-                                    super::microkernel::comp_dot_avx2(arow, col, k)
-                                } else {
-                                    comp_dot_scalar(arow, col, k)
-                                }
-                            }
-                            #[cfg(not(target_arch = "x86_64"))]
-                            {
-                                let _ = use_avx2;
+                    let col = packed_b.col_ptr(p, j);
+                    // SAFETY: the dot kernels read k elements per
+                    // pointer — packed B columns are kpad >= k elements
+                    // long, and raw A rows (taken only when transa == No)
+                    // carry a.cols() == k elements; use_avx2 comes from
+                    // runtime feature detection.
+                    let s = unsafe {
+                        #[cfg(target_arch = "x86_64")]
+                        {
+                            if use_avx2 {
+                                super::microkernel::comp_dot_avx2(arow, col, k)
+                            } else {
                                 comp_dot_scalar(arow, col, k)
                             }
-                        };
-                        let old = c.get_unchecked(ii + i, j0 + j);
-                        // Plain writeback: the compensated sum is already
-                        // a single correctly-rounded value.
-                        c.set_unchecked(ii + i, j0 + j, old + alpha * s);
-                    }
+                        }
+                        #[cfg(not(target_arch = "x86_64"))]
+                        {
+                            let _ = use_avx2;
+                            comp_dot_scalar(arow, col, k)
+                        }
+                    };
+                    // Plain writeback: the compensated sum is already a
+                    // single correctly-rounded value.
+                    let old = c.get(ii + i, j0 + j);
+                    c.set(ii + i, j0 + j, old + alpha * s);
                 }
             }
         }

@@ -131,12 +131,23 @@ impl KernelId {
 
 /// Single source of truth for SSE availability (shared with
 /// [`crate::blas::Backend`]'s resolver).
+///
+/// Reports `false` under Miri: the interpreter has no vendor intrinsics,
+/// so every dispatch path degrades to the scalar tiers and the whole
+/// ladder stays checkable for undefined behaviour.
 pub(crate) fn detect_sse() -> bool {
+    if cfg!(miri) {
+        return false;
+    }
     cfg!(target_arch = "x86_64") && std::arch::is_x86_feature_detected!("sse")
 }
 
-/// Single source of truth for AVX2+FMA availability.
+/// Single source of truth for AVX2+FMA availability (`false` under Miri —
+/// see [`detect_sse`]).
 pub(crate) fn detect_avx2() -> bool {
+    if cfg!(miri) {
+        return false;
+    }
     cfg!(target_arch = "x86_64")
         && std::arch::is_x86_feature_detected!("avx2")
         && std::arch::is_x86_feature_detected!("fma")

@@ -324,8 +324,12 @@ impl Element for f32 {
         accumulate: bool,
         prefetch: bool,
     ) {
+        // SAFETY: forwarding the caller's contract verbatim to the f32
+        // monomorphic kernel.
         #[cfg(target_arch = "x86_64")]
-        super::tile::avx2_tile_dyn_f32(mr, ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch);
+        unsafe {
+            super::tile::avx2_tile_dyn_f32(mr, ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch)
+        }
         #[cfg(not(target_arch = "x86_64"))]
         {
             let _ = (mr, ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch);
@@ -342,8 +346,12 @@ impl Element for f32 {
         h: usize,
         w: usize,
     ) {
+        // SAFETY: forwarding the caller's contract verbatim to the f32
+        // monomorphic kernel.
         #[cfg(target_arch = "x86_64")]
-        super::tile::tile_fringe_f32(tmp, tmp_ld, alpha, dst, dst_ld, h, w);
+        unsafe {
+            super::tile::tile_fringe_f32(tmp, tmp_ld, alpha, dst, dst_ld, h, w)
+        }
         #[cfg(not(target_arch = "x86_64"))]
         {
             let _ = (tmp, tmp_ld, alpha, dst, dst_ld, h, w);
@@ -360,15 +368,20 @@ impl Element for f32 {
         prefetch: bool,
         out: &mut [f32],
     ) {
+        // SAFETY: forwarding the caller's contract verbatim to the
+        // selected monomorphic kernel.
         #[cfg(target_arch = "x86_64")]
-        match isa {
-            VecIsa::Sse => super::microkernel::sse_dot_panel_dyn(a, len, cols, unroll, prefetch, out),
-            VecIsa::Avx2 => super::microkernel::avx2_dot_panel_dyn(a, len, cols, unroll, prefetch, out),
+        unsafe {
+            match isa {
+                VecIsa::Sse => super::microkernel::sse_dot_panel_dyn(a, len, cols, unroll, prefetch, out),
+                VecIsa::Avx2 => super::microkernel::avx2_dot_panel_dyn(a, len, cols, unroll, prefetch, out),
+            }
         }
+        // SAFETY: same forwarding, scalar fallback.
         #[cfg(not(target_arch = "x86_64"))]
-        {
+        unsafe {
             let _ = (isa, unroll, prefetch);
-            super::microkernel::scalar_dot_panel(a, len, cols, out);
+            super::microkernel::scalar_dot_panel(a, len, cols, out)
         }
     }
 
@@ -382,10 +395,15 @@ impl Element for f32 {
         out0: &mut [f32],
         out1: &mut [f32],
     ) {
+        // SAFETY: forwarding the caller's contract verbatim to the f32
+        // two-row kernel.
         #[cfg(target_arch = "x86_64")]
-        super::microkernel::avx2_dot_panel2_dyn(a0, a1, len, cols, unroll, prefetch, out0, out1);
+        unsafe {
+            super::microkernel::avx2_dot_panel2_dyn(a0, a1, len, cols, unroll, prefetch, out0, out1)
+        }
+        // SAFETY: same forwarding, one scalar panel per row.
         #[cfg(not(target_arch = "x86_64"))]
-        {
+        unsafe {
             let _ = (unroll, prefetch);
             super::microkernel::scalar_dot_panel(a0, len, cols, out0);
             super::microkernel::scalar_dot_panel(a1, len, cols, out1);
@@ -398,10 +416,17 @@ impl Element for f32 {
         cols: &[(*const f32, usize)],
         out: &mut [f32],
     ) {
+        // SAFETY: forwarding the caller's contract verbatim (SSE is the
+        // x86-64 baseline).
         #[cfg(target_arch = "x86_64")]
-        super::microkernel::sse_dot_panel_strided(a, len, cols, out);
+        unsafe {
+            super::microkernel::sse_dot_panel_strided(a, len, cols, out)
+        }
+        // SAFETY: same forwarding, scalar fallback.
         #[cfg(not(target_arch = "x86_64"))]
-        super::microkernel::scalar_dot_panel_strided(a, len, cols, out);
+        unsafe {
+            super::microkernel::scalar_dot_panel_strided(a, len, cols, out)
+        }
     }
 
     fn comp_gemm(
@@ -506,8 +531,12 @@ impl Element for f64 {
         accumulate: bool,
         prefetch: bool,
     ) {
+        // SAFETY: forwarding the caller's contract verbatim to the f64
+        // monomorphic kernel.
         #[cfg(target_arch = "x86_64")]
-        super::tile::avx2_tile_dyn_f64(mr, ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch);
+        unsafe {
+            super::tile::avx2_tile_dyn_f64(mr, ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch)
+        }
         #[cfg(not(target_arch = "x86_64"))]
         {
             let _ = (mr, ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch);
@@ -524,8 +553,12 @@ impl Element for f64 {
         h: usize,
         w: usize,
     ) {
+        // SAFETY: forwarding the caller's contract verbatim to the f64
+        // monomorphic kernel.
         #[cfg(target_arch = "x86_64")]
-        super::tile::tile_fringe_f64(tmp, tmp_ld, alpha, dst, dst_ld, h, w);
+        unsafe {
+            super::tile::tile_fringe_f64(tmp, tmp_ld, alpha, dst, dst_ld, h, w)
+        }
         #[cfg(not(target_arch = "x86_64"))]
         {
             let _ = (tmp, tmp_ld, alpha, dst, dst_ld, h, w);
@@ -542,21 +575,26 @@ impl Element for f64 {
         prefetch: bool,
         out: &mut [f64],
     ) {
+        // SAFETY: forwarding the caller's contract verbatim to the
+        // selected monomorphic kernel.
         #[cfg(target_arch = "x86_64")]
-        match isa {
-            // The paper's SSE tier has no f64 instantiation (SSE2's
-            // 2-wide f64 lanes are not worth a third kernel family);
-            // dispatch never selects it for f64, and a forced call runs
-            // the scalar panel — correct, merely unvectorised.
-            VecIsa::Sse => super::microkernel::scalar_dot_panel(a, len, cols, out),
-            VecIsa::Avx2 => {
-                super::microkernel::avx2_dot_panel_dyn_f64(a, len, cols, unroll, prefetch, out)
+        unsafe {
+            match isa {
+                // The paper's SSE tier has no f64 instantiation (SSE2's
+                // 2-wide f64 lanes are not worth a third kernel family);
+                // dispatch never selects it for f64, and a forced call runs
+                // the scalar panel — correct, merely unvectorised.
+                VecIsa::Sse => super::microkernel::scalar_dot_panel(a, len, cols, out),
+                VecIsa::Avx2 => {
+                    super::microkernel::avx2_dot_panel_dyn_f64(a, len, cols, unroll, prefetch, out)
+                }
             }
         }
+        // SAFETY: same forwarding, scalar fallback.
         #[cfg(not(target_arch = "x86_64"))]
-        {
+        unsafe {
             let _ = (isa, unroll, prefetch);
-            super::microkernel::scalar_dot_panel(a, len, cols, out);
+            super::microkernel::scalar_dot_panel(a, len, cols, out)
         }
     }
 
@@ -570,10 +608,15 @@ impl Element for f64 {
         out0: &mut [f64],
         out1: &mut [f64],
     ) {
+        // SAFETY: forwarding the caller's contract verbatim to the f64
+        // two-row kernel.
         #[cfg(target_arch = "x86_64")]
-        super::microkernel::avx2_dot_panel2_dyn_f64(a0, a1, len, cols, unroll, prefetch, out0, out1);
+        unsafe {
+            super::microkernel::avx2_dot_panel2_dyn_f64(a0, a1, len, cols, unroll, prefetch, out0, out1)
+        }
+        // SAFETY: same forwarding, one scalar panel per row.
         #[cfg(not(target_arch = "x86_64"))]
-        {
+        unsafe {
             let _ = (unroll, prefetch);
             super::microkernel::scalar_dot_panel(a0, len, cols, out0);
             super::microkernel::scalar_dot_panel(a1, len, cols, out1);
@@ -586,7 +629,9 @@ impl Element for f64 {
         cols: &[(*const f64, usize)],
         out: &mut [f64],
     ) {
-        super::microkernel::scalar_dot_panel_strided(a, len, cols, out);
+        // SAFETY: forwarding the caller's contract verbatim (the strided
+        // f64 path is always scalar).
+        unsafe { super::microkernel::scalar_dot_panel_strided(a, len, cols, out) }
     }
 
     fn comp_gemm(

@@ -43,6 +43,15 @@
 //! where the accumulated value for each `C` element is complete. Keeping
 //! the micro-kernels epilogue-free keeps their register budgets and
 //! unroll structure exactly as the paper describes.
+//!
+//! Unsafe policy: this module is one of the allowlisted ISA-kernel
+//! modules (see `tools/lint`) — raw pointer arithmetic is its job. Every
+//! kernel reads **exactly `len` elements** through each pointer (the
+//! vector loops stop at `p + step <= len`; the scalar tail finishes the
+//! remainder), so the caller contract in each `# Safety` section is the
+//! complete precondition. Prefetch hints use `wrapping_add`: the hint
+//! address may run past the row's allocation near its end, and `ptr::add`
+//! would make that UB even though the hint itself can never fault.
 
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
@@ -62,12 +71,16 @@ pub const PREFETCH_DIST: usize = 64;
 #[cfg(target_arch = "x86_64")]
 #[inline(always)]
 unsafe fn hsum128(v: __m128) -> f32 {
-    // [a b c d] + [c d c d] = [a+c b+d . .]
-    let hi = _mm_movehl_ps(v, v);
-    let sum2 = _mm_add_ps(v, hi);
-    // [a+c b+d . .] + [b+d . . .]
-    let hi1 = _mm_shuffle_ps::<0x55>(sum2, sum2);
-    _mm_cvtss_f32(_mm_add_ss(sum2, hi1))
+    // SAFETY: register-only shuffle/add intrinsics; SSE availability is
+    // the caller's contract (x86-64 baseline).
+    unsafe {
+        // [a b c d] + [c d c d] = [a+c b+d . .]
+        let hi = _mm_movehl_ps(v, v);
+        let sum2 = _mm_add_ps(v, hi);
+        // [a+c b+d . .] + [b+d . . .]
+        let hi1 = _mm_shuffle_ps::<0x55>(sum2, sum2);
+        _mm_cvtss_f32(_mm_add_ss(sum2, hi1))
+    }
 }
 
 /// Horizontal sum of a 256-bit vector.
@@ -77,9 +90,13 @@ unsafe fn hsum128(v: __m128) -> f32 {
 #[cfg(target_arch = "x86_64")]
 #[inline(always)]
 unsafe fn hsum256(v: __m256) -> f32 {
-    let lo = _mm256_castps256_ps128(v);
-    let hi = _mm256_extractf128_ps::<1>(v);
-    hsum128(_mm_add_ps(lo, hi))
+    // SAFETY: register-only intrinsics; AVX availability is the caller's
+    // contract.
+    unsafe {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        hsum128(_mm_add_ps(lo, hi))
+    }
 }
 
 /// SSE micro-kernel: `W` simultaneous dot products of length `len`.
@@ -99,49 +116,55 @@ pub unsafe fn sse_dot_panel<const W: usize, const U: usize>(
     cols: [*const f32; W],
     prefetch: bool,
 ) -> [f32; W] {
-    let mut acc = [_mm_setzero_ps(); W];
-    let step = 4 * U;
-    let mut p = 0;
-    // Main unrolled loop: U vector steps per iteration. The paper unrolls
-    // the whole L1 block; U=4 plus LLVM's scheduling reproduces the effect
-    // without hand-writing 336 iterations.
-    while p + step <= len {
-        if prefetch {
-            // One line of A' per 16 floats consumed, fetched ahead of use
-            // (paper §3: "SSE pre-fetch … to bring A' values into L1").
-            _mm_prefetch::<_MM_HINT_T0>(a.add(p + PREFETCH_DIST).cast());
-        }
-        for u in 0..U {
-            let off = p + 4 * u;
-            let va = _mm_loadu_ps(a.add(off));
-            for j in 0..W {
-                let vb = _mm_loadu_ps(cols[j].add(off));
-                acc[j] = _mm_add_ps(acc[j], _mm_mul_ps(va, vb));
+    // SAFETY: every load is at offset < len (vector loops stop at
+    // p + step <= len, the scalar tail at p < len), within the caller's
+    // readable ranges. The prefetch address uses wrapping_add because it
+    // may point past the row's end — a hint, never a dereference.
+    unsafe {
+        let mut acc = [_mm_setzero_ps(); W];
+        let step = 4 * U;
+        let mut p = 0;
+        // Main unrolled loop: U vector steps per iteration. The paper unrolls
+        // the whole L1 block; U=4 plus LLVM's scheduling reproduces the effect
+        // without hand-writing 336 iterations.
+        while p + step <= len {
+            if prefetch {
+                // One line of A' per 16 floats consumed, fetched ahead of use
+                // (paper §3: "SSE pre-fetch … to bring A' values into L1").
+                _mm_prefetch::<_MM_HINT_T0>(a.wrapping_add(p + PREFETCH_DIST).cast());
             }
+            for u in 0..U {
+                let off = p + 4 * u;
+                let va = _mm_loadu_ps(a.add(off));
+                for j in 0..W {
+                    let vb = _mm_loadu_ps(cols[j].add(off));
+                    acc[j] = _mm_add_ps(acc[j], _mm_mul_ps(va, vb));
+                }
+            }
+            p += step;
         }
-        p += step;
-    }
-    // Vector remainder.
-    while p + 4 <= len {
-        let va = _mm_loadu_ps(a.add(p));
+        // Vector remainder.
+        while p + 4 <= len {
+            let va = _mm_loadu_ps(a.add(p));
+            for j in 0..W {
+                acc[j] = _mm_add_ps(acc[j], _mm_mul_ps(va, _mm_loadu_ps(cols[j].add(p))));
+            }
+            p += 4;
+        }
+        // Horizontal reduction, then the scalar tail (unpacked-A case).
+        let mut out = [0.0f32; W];
         for j in 0..W {
-            acc[j] = _mm_add_ps(acc[j], _mm_mul_ps(va, _mm_loadu_ps(cols[j].add(p))));
+            out[j] = hsum128(acc[j]);
         }
-        p += 4;
-    }
-    // Horizontal reduction, then the scalar tail (unpacked-A case).
-    let mut out = [0.0f32; W];
-    for j in 0..W {
-        out[j] = hsum128(acc[j]);
-    }
-    while p < len {
-        let av = *a.add(p);
-        for j in 0..W {
-            out[j] += av * *cols[j].add(p);
+        while p < len {
+            let av = *a.add(p);
+            for j in 0..W {
+                out[j] += av * *cols[j].add(p);
+            }
+            p += 1;
         }
-        p += 1;
+        out
     }
-    out
 }
 
 /// Runtime-width dispatcher over [`sse_dot_panel`].
@@ -162,10 +185,15 @@ pub unsafe fn sse_dot_panel_dyn(
         ($w:literal) => {{
             let mut arr = [std::ptr::null::<f32>(); $w];
             arr.copy_from_slice(&cols[..$w]);
-            let r = match unroll {
-                Unroll::X1 => sse_dot_panel::<$w, 1>(a, len, arr, prefetch),
-                Unroll::X2 => sse_dot_panel::<$w, 2>(a, len, arr, prefetch),
-                Unroll::X4 => sse_dot_panel::<$w, 4>(a, len, arr, prefetch),
+            // SAFETY: forwarding the caller's pointer contract; the match
+            // arm guarantees arr holds exactly cols.len() live pointers,
+            // and SSE is the x86-64 baseline.
+            let r = unsafe {
+                match unroll {
+                    Unroll::X1 => sse_dot_panel::<$w, 1>(a, len, arr, prefetch),
+                    Unroll::X2 => sse_dot_panel::<$w, 2>(a, len, arr, prefetch),
+                    Unroll::X4 => sse_dot_panel::<$w, 4>(a, len, arr, prefetch),
+                }
             };
             out[..$w].copy_from_slice(&r);
         }};
@@ -201,27 +229,31 @@ pub unsafe fn sse_dot_panel_strided(
     cols: &[(*const f32, usize)],
     out: &mut [f32],
 ) {
-    for (j, &(bp, stride)) in cols.iter().enumerate() {
-        let mut acc = _mm_setzero_ps();
-        let mut p = 0;
-        while p + 4 <= len {
-            let va = _mm_loadu_ps(a.add(p));
-            // Strided gather, one element at a time (SSE has no gather).
-            let vb = _mm_set_ps(
-                *bp.add((p + 3) * stride),
-                *bp.add((p + 2) * stride),
-                *bp.add((p + 1) * stride),
-                *bp.add(p * stride),
-            );
-            acc = _mm_add_ps(acc, _mm_mul_ps(va, vb));
-            p += 4;
+    // SAFETY: a is read at offsets < len, each stream at offsets
+    // p * stride for p < len — exactly the caller's readable ranges.
+    unsafe {
+        for (j, &(bp, stride)) in cols.iter().enumerate() {
+            let mut acc = _mm_setzero_ps();
+            let mut p = 0;
+            while p + 4 <= len {
+                let va = _mm_loadu_ps(a.add(p));
+                // Strided gather, one element at a time (SSE has no gather).
+                let vb = _mm_set_ps(
+                    *bp.add((p + 3) * stride),
+                    *bp.add((p + 2) * stride),
+                    *bp.add((p + 1) * stride),
+                    *bp.add(p * stride),
+                );
+                acc = _mm_add_ps(acc, _mm_mul_ps(va, vb));
+                p += 4;
+            }
+            let mut s = hsum128(acc);
+            while p < len {
+                s += *a.add(p) * *bp.add(p * stride);
+                p += 1;
+            }
+            out[j] = s;
         }
-        let mut s = hsum128(acc);
-        while p < len {
-            s += *a.add(p) * *bp.add(p * stride);
-            p += 1;
-        }
-        out[j] = s;
     }
 }
 
@@ -248,63 +280,68 @@ pub unsafe fn avx2_dot_panel_rows<const R: usize, const W: usize, const U: usize
     cols: [*const f32; W],
     prefetch: bool,
 ) -> [[f32; W]; R] {
-    let mut acc = [[_mm256_setzero_ps(); W]; R];
-    let step = 8 * U;
-    let mut p = 0;
-    while p + step <= len {
-        if prefetch {
-            for r in rows {
-                _mm_prefetch::<_MM_HINT_T0>(r.add(p + PREFETCH_DIST).cast());
+    // SAFETY: every load is at offset < len within the caller's readable
+    // ranges; the prefetch address uses wrapping_add because it may point
+    // past the row's end — a hint, never a dereference.
+    unsafe {
+        let mut acc = [[_mm256_setzero_ps(); W]; R];
+        let step = 8 * U;
+        let mut p = 0;
+        while p + step <= len {
+            if prefetch {
+                for r in rows {
+                    _mm_prefetch::<_MM_HINT_T0>(r.wrapping_add(p + PREFETCH_DIST).cast());
+                }
             }
+            for u in 0..U {
+                let off = p + 8 * u;
+                let mut va = [_mm256_setzero_ps(); R];
+                for (i, r) in rows.iter().enumerate() {
+                    va[i] = _mm256_loadu_ps(r.add(off));
+                }
+                for (j, &col) in cols.iter().enumerate() {
+                    let vb = _mm256_loadu_ps(col.add(off));
+                    for i in 0..R {
+                        acc[i][j] = _mm256_fmadd_ps(va[i], vb, acc[i][j]);
+                    }
+                }
+            }
+            p += step;
         }
-        for u in 0..U {
-            let off = p + 8 * u;
+        while p + 8 <= len {
             let mut va = [_mm256_setzero_ps(); R];
             for (i, r) in rows.iter().enumerate() {
-                va[i] = _mm256_loadu_ps(r.add(off));
+                va[i] = _mm256_loadu_ps(r.add(p));
             }
             for (j, &col) in cols.iter().enumerate() {
-                let vb = _mm256_loadu_ps(col.add(off));
+                let vb = _mm256_loadu_ps(col.add(p));
                 for i in 0..R {
                     acc[i][j] = _mm256_fmadd_ps(va[i], vb, acc[i][j]);
                 }
             }
+            p += 8;
         }
-        p += step;
-    }
-    while p + 8 <= len {
-        let mut va = [_mm256_setzero_ps(); R];
-        for (i, r) in rows.iter().enumerate() {
-            va[i] = _mm256_loadu_ps(r.add(p));
-        }
-        for (j, &col) in cols.iter().enumerate() {
-            let vb = _mm256_loadu_ps(col.add(p));
-            for i in 0..R {
-                acc[i][j] = _mm256_fmadd_ps(va[i], vb, acc[i][j]);
+        let mut out = [[0.0f32; W]; R];
+        for i in 0..R {
+            for j in 0..W {
+                out[i][j] = hsum256(acc[i][j]);
             }
         }
-        p += 8;
-    }
-    let mut out = [[0.0f32; W]; R];
-    for i in 0..R {
-        for j in 0..W {
-            out[i][j] = hsum256(acc[i][j]);
-        }
-    }
-    while p < len {
-        let mut av = [0.0f32; R];
-        for (i, r) in rows.iter().enumerate() {
-            av[i] = *r.add(p);
-        }
-        for (j, &col) in cols.iter().enumerate() {
-            let bv = *col.add(p);
-            for i in 0..R {
-                out[i][j] += av[i] * bv;
+        while p < len {
+            let mut av = [0.0f32; R];
+            for (i, r) in rows.iter().enumerate() {
+                av[i] = *r.add(p);
             }
+            for (j, &col) in cols.iter().enumerate() {
+                let bv = *col.add(p);
+                for i in 0..R {
+                    out[i][j] += av[i] * bv;
+                }
+            }
+            p += 1;
         }
-        p += 1;
+        out
     }
-    out
 }
 
 /// AVX2+FMA micro-kernel: the Emmerald structure at 8-wide
@@ -320,7 +357,9 @@ pub unsafe fn avx2_dot_panel<const W: usize, const U: usize>(
     cols: [*const f32; W],
     prefetch: bool,
 ) -> [f32; W] {
-    let [out] = avx2_dot_panel_rows::<1, W, U>([a], len, cols, prefetch);
+    // SAFETY: forwarding the caller's contract verbatim to the R = 1
+    // instantiation.
+    let [out] = unsafe { avx2_dot_panel_rows::<1, W, U>([a], len, cols, prefetch) };
     out
 }
 
@@ -344,7 +383,9 @@ pub unsafe fn avx2_dot_panel2<const W: usize, const U: usize>(
     cols: [*const f32; W],
     prefetch: bool,
 ) -> [[f32; W]; 2] {
-    avx2_dot_panel_rows::<2, W, U>([a0, a1], len, cols, prefetch)
+    // SAFETY: forwarding the caller's contract verbatim to the R = 2
+    // instantiation.
+    unsafe { avx2_dot_panel_rows::<2, W, U>([a0, a1], len, cols, prefetch) }
 }
 
 /// Runtime-width dispatcher over [`avx2_dot_panel2`]. Writes row 0's dot
@@ -369,10 +410,14 @@ pub unsafe fn avx2_dot_panel2_dyn(
         ($w:literal) => {{
             let mut arr = [std::ptr::null::<f32>(); $w];
             arr.copy_from_slice(&cols[..$w]);
-            let r = match unroll {
-                Unroll::X1 => avx2_dot_panel2::<$w, 1>(a0, a1, len, arr, prefetch),
-                Unroll::X2 => avx2_dot_panel2::<$w, 2>(a0, a1, len, arr, prefetch),
-                Unroll::X4 => avx2_dot_panel2::<$w, 4>(a0, a1, len, arr, prefetch),
+            // SAFETY: forwarding the caller's pointer and AVX2+FMA
+            // contract; arr holds exactly cols.len() live pointers.
+            let r = unsafe {
+                match unroll {
+                    Unroll::X1 => avx2_dot_panel2::<$w, 1>(a0, a1, len, arr, prefetch),
+                    Unroll::X2 => avx2_dot_panel2::<$w, 2>(a0, a1, len, arr, prefetch),
+                    Unroll::X4 => avx2_dot_panel2::<$w, 4>(a0, a1, len, arr, prefetch),
+                }
             };
             out0[..$w].copy_from_slice(&r[0]);
             out1[..$w].copy_from_slice(&r[1]);
@@ -409,10 +454,14 @@ pub unsafe fn avx2_dot_panel_dyn(
         ($w:literal) => {{
             let mut arr = [std::ptr::null::<f32>(); $w];
             arr.copy_from_slice(&cols[..$w]);
-            let r = match unroll {
-                Unroll::X1 => avx2_dot_panel::<$w, 1>(a, len, arr, prefetch),
-                Unroll::X2 => avx2_dot_panel::<$w, 2>(a, len, arr, prefetch),
-                Unroll::X4 => avx2_dot_panel::<$w, 4>(a, len, arr, prefetch),
+            // SAFETY: forwarding the caller's pointer and AVX2+FMA
+            // contract; arr holds exactly cols.len() live pointers.
+            let r = unsafe {
+                match unroll {
+                    Unroll::X1 => avx2_dot_panel::<$w, 1>(a, len, arr, prefetch),
+                    Unroll::X2 => avx2_dot_panel::<$w, 2>(a, len, arr, prefetch),
+                    Unroll::X4 => avx2_dot_panel::<$w, 4>(a, len, arr, prefetch),
+                }
             };
             out[..$w].copy_from_slice(&r);
         }};
@@ -445,20 +494,24 @@ pub unsafe fn scalar_dot_tile<T: Element, const MR: usize, const NR: usize>(
     len: usize,
     bcols: [*const T; NR],
 ) -> [[T; NR]; MR] {
-    let mut acc = [[T::ZERO; NR]; MR];
-    for p in 0..len {
-        let mut av = [T::ZERO; MR];
-        for i in 0..MR {
-            av[i] = *arows[i].add(p);
-        }
-        for (j, &bc) in bcols.iter().enumerate() {
-            let bv = *bc.add(p);
+    // SAFETY: every read is at offset p < len, within the caller's
+    // readable ranges.
+    unsafe {
+        let mut acc = [[T::ZERO; NR]; MR];
+        for p in 0..len {
+            let mut av = [T::ZERO; MR];
             for i in 0..MR {
-                acc[i][j] += av[i] * bv;
+                av[i] = *arows[i].add(p);
+            }
+            for (j, &bc) in bcols.iter().enumerate() {
+                let bv = *bc.add(p);
+                for i in 0..MR {
+                    acc[i][j] += av[i] * bv;
+                }
             }
         }
+        acc
     }
-    acc
 }
 
 /// Scalar dot-panel fallback: one plain dot product per packed column —
@@ -472,7 +525,9 @@ pub unsafe fn scalar_dot_panel<T: Element>(a: *const T, len: usize, cols: &[*con
     for (j, &cp) in cols.iter().enumerate() {
         let mut acc = T::ZERO;
         for p in 0..len {
-            acc += *a.add(p) * *cp.add(p);
+            // SAFETY: p < len; both pointers readable for len elements
+            // by the caller's contract.
+            acc += unsafe { *a.add(p) * *cp.add(p) };
         }
         out[j] = acc;
     }
@@ -493,7 +548,9 @@ pub unsafe fn scalar_dot_panel_strided<T: Element>(
     for (j, &(bp, stride)) in cols.iter().enumerate() {
         let mut acc = T::ZERO;
         for p in 0..len {
-            acc += *a.add(p) * *bp.add(p * stride);
+            // SAFETY: p < len; a readable for len elements and bp at
+            // offsets p * stride by the caller's contract.
+            acc += unsafe { *a.add(p) * *bp.add(p * stride) };
         }
         out[j] = acc;
     }
@@ -506,11 +563,15 @@ pub unsafe fn scalar_dot_panel_strided<T: Element>(
 #[cfg(target_arch = "x86_64")]
 #[inline(always)]
 unsafe fn hsum256d(v: __m256d) -> f64 {
-    let lo = _mm256_castpd256_pd128(v);
-    let hi = _mm256_extractf128_pd::<1>(v);
-    let sum2 = _mm_add_pd(lo, hi);
-    let hi1 = _mm_unpackhi_pd(sum2, sum2);
-    _mm_cvtsd_f64(_mm_add_sd(sum2, hi1))
+    // SAFETY: register-only intrinsics; AVX availability is the caller's
+    // contract.
+    unsafe {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let sum2 = _mm_add_pd(lo, hi);
+        let hi1 = _mm_unpackhi_pd(sum2, sum2);
+        _mm_cvtsd_f64(_mm_add_sd(sum2, hi1))
+    }
 }
 
 /// AVX2+FMA f64 micro-kernel over `R` rows of `A` at once — the 4-wide
@@ -530,66 +591,68 @@ pub unsafe fn avx2_dot_panel_rows_f64<const R: usize, const W: usize, const U: u
     cols: [*const f64; W],
     prefetch: bool,
 ) -> [[f64; W]; R] {
-    let mut acc = [[_mm256_setzero_pd(); W]; R];
-    let step = 4 * U;
-    let mut p = 0;
-    while p + step <= len {
-        if prefetch {
-            for r in rows {
-                // wrapping_add: the prefetch address can run past the
-                // row's allocation near its end, and ptr::add would make
-                // that UB even though the hint itself can never fault.
-                _mm_prefetch::<_MM_HINT_T0>(r.wrapping_add(p + PREFETCH_DIST / 2).cast());
+    // SAFETY: every load is at offset < len within the caller's readable
+    // ranges; the prefetch address uses wrapping_add because it may point
+    // past the row's end — a hint, never a dereference.
+    unsafe {
+        let mut acc = [[_mm256_setzero_pd(); W]; R];
+        let step = 4 * U;
+        let mut p = 0;
+        while p + step <= len {
+            if prefetch {
+                for r in rows {
+                    _mm_prefetch::<_MM_HINT_T0>(r.wrapping_add(p + PREFETCH_DIST / 2).cast());
+                }
             }
+            for u in 0..U {
+                let off = p + 4 * u;
+                let mut va = [_mm256_setzero_pd(); R];
+                for (i, r) in rows.iter().enumerate() {
+                    va[i] = _mm256_loadu_pd(r.add(off));
+                }
+                for (j, &col) in cols.iter().enumerate() {
+                    let vb = _mm256_loadu_pd(col.add(off));
+                    for i in 0..R {
+                        acc[i][j] = _mm256_fmadd_pd(va[i], vb, acc[i][j]);
+                    }
+                }
+            }
+            p += step;
         }
-        for u in 0..U {
-            let off = p + 4 * u;
+        while p + 4 <= len {
             let mut va = [_mm256_setzero_pd(); R];
             for (i, r) in rows.iter().enumerate() {
-                va[i] = _mm256_loadu_pd(r.add(off));
+                va[i] = _mm256_loadu_pd(r.add(p));
             }
             for (j, &col) in cols.iter().enumerate() {
-                let vb = _mm256_loadu_pd(col.add(off));
+                let vb = _mm256_loadu_pd(col.add(p));
                 for i in 0..R {
                     acc[i][j] = _mm256_fmadd_pd(va[i], vb, acc[i][j]);
                 }
             }
+            p += 4;
         }
-        p += step;
-    }
-    while p + 4 <= len {
-        let mut va = [_mm256_setzero_pd(); R];
-        for (i, r) in rows.iter().enumerate() {
-            va[i] = _mm256_loadu_pd(r.add(p));
-        }
-        for (j, &col) in cols.iter().enumerate() {
-            let vb = _mm256_loadu_pd(col.add(p));
-            for i in 0..R {
-                acc[i][j] = _mm256_fmadd_pd(va[i], vb, acc[i][j]);
+        let mut out = [[0.0f64; W]; R];
+        for i in 0..R {
+            for j in 0..W {
+                out[i][j] = hsum256d(acc[i][j]);
             }
         }
-        p += 4;
-    }
-    let mut out = [[0.0f64; W]; R];
-    for i in 0..R {
-        for j in 0..W {
-            out[i][j] = hsum256d(acc[i][j]);
-        }
-    }
-    while p < len {
-        let mut av = [0.0f64; R];
-        for (i, r) in rows.iter().enumerate() {
-            av[i] = *r.add(p);
-        }
-        for (j, &col) in cols.iter().enumerate() {
-            let bv = *col.add(p);
-            for i in 0..R {
-                out[i][j] += av[i] * bv;
+        while p < len {
+            let mut av = [0.0f64; R];
+            for (i, r) in rows.iter().enumerate() {
+                av[i] = *r.add(p);
             }
+            for (j, &col) in cols.iter().enumerate() {
+                let bv = *col.add(p);
+                for i in 0..R {
+                    out[i][j] += av[i] * bv;
+                }
+            }
+            p += 1;
         }
-        p += 1;
+        out
     }
-    out
 }
 
 /// Runtime-width dispatcher over the single-row f64 AVX2 kernel.
@@ -610,10 +673,14 @@ pub unsafe fn avx2_dot_panel_dyn_f64(
         ($w:literal) => {{
             let mut arr = [std::ptr::null::<f64>(); $w];
             arr.copy_from_slice(&cols[..$w]);
-            let [r] = match unroll {
-                Unroll::X1 => avx2_dot_panel_rows_f64::<1, $w, 1>([a], len, arr, prefetch),
-                Unroll::X2 => avx2_dot_panel_rows_f64::<1, $w, 2>([a], len, arr, prefetch),
-                Unroll::X4 => avx2_dot_panel_rows_f64::<1, $w, 4>([a], len, arr, prefetch),
+            // SAFETY: forwarding the caller's pointer and AVX2+FMA
+            // contract; arr holds exactly cols.len() live pointers.
+            let [r] = unsafe {
+                match unroll {
+                    Unroll::X1 => avx2_dot_panel_rows_f64::<1, $w, 1>([a], len, arr, prefetch),
+                    Unroll::X2 => avx2_dot_panel_rows_f64::<1, $w, 2>([a], len, arr, prefetch),
+                    Unroll::X4 => avx2_dot_panel_rows_f64::<1, $w, 4>([a], len, arr, prefetch),
+                }
             };
             out[..$w].copy_from_slice(&r);
         }};
@@ -656,10 +723,14 @@ pub unsafe fn avx2_dot_panel2_dyn_f64(
         ($w:literal) => {{
             let mut arr = [std::ptr::null::<f64>(); $w];
             arr.copy_from_slice(&cols[..$w]);
-            let r = match unroll {
-                Unroll::X1 => avx2_dot_panel_rows_f64::<2, $w, 1>([a0, a1], len, arr, prefetch),
-                Unroll::X2 => avx2_dot_panel_rows_f64::<2, $w, 2>([a0, a1], len, arr, prefetch),
-                Unroll::X4 => avx2_dot_panel_rows_f64::<2, $w, 4>([a0, a1], len, arr, prefetch),
+            // SAFETY: forwarding the caller's pointer and AVX2+FMA
+            // contract; arr holds exactly cols.len() live pointers.
+            let r = unsafe {
+                match unroll {
+                    Unroll::X1 => avx2_dot_panel_rows_f64::<2, $w, 1>([a0, a1], len, arr, prefetch),
+                    Unroll::X2 => avx2_dot_panel_rows_f64::<2, $w, 2>([a0, a1], len, arr, prefetch),
+                    Unroll::X4 => avx2_dot_panel_rows_f64::<2, $w, 4>([a0, a1], len, arr, prefetch),
+                }
             };
             out0[..$w].copy_from_slice(&r[0]);
             out1[..$w].copy_from_slice(&r[1]);
@@ -693,8 +764,9 @@ pub unsafe fn comp_dot_scalar(a: *const f32, b: *const f32, len: usize) -> f32 {
     let mut s = 0.0f32;
     let mut c = 0.0f32;
     for p in 0..len {
-        let x = *a.add(p);
-        let y = *b.add(p);
+        // SAFETY: p < len; both pointers readable for len elements by the
+        // caller's contract.
+        let (x, y) = unsafe { (*a.add(p), *b.add(p)) };
         let prod = x * y;
         let perr = x.mul_add(y, -prod);
         // Knuth TwoSum (branchless, exact for any magnitudes).
@@ -718,54 +790,59 @@ pub unsafe fn comp_dot_scalar(a: *const f32, b: *const f32, len: usize) -> f32 {
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 pub unsafe fn comp_dot_avx2(a: *const f32, b: *const f32, len: usize) -> f32 {
-    let mut vs = _mm256_setzero_ps();
-    let mut vc = _mm256_setzero_ps();
-    let mut p = 0;
-    while p + 8 <= len {
-        let va = _mm256_loadu_ps(a.add(p));
-        let vb = _mm256_loadu_ps(b.add(p));
-        let prod = _mm256_mul_ps(va, vb);
-        // TwoProduct: exact error of va*vb via fused multiply-subtract.
-        let perr = _mm256_fmsub_ps(va, vb, prod);
-        // Knuth TwoSum, branchless.
-        let t = _mm256_add_ps(vs, prod);
-        let z = _mm256_sub_ps(t, vs);
-        let serr = _mm256_add_ps(
-            _mm256_sub_ps(vs, _mm256_sub_ps(t, z)),
-            _mm256_sub_ps(prod, z),
-        );
-        vs = t;
-        vc = _mm256_add_ps(vc, _mm256_add_ps(perr, serr));
-        p += 8;
+    // SAFETY: every load is at offset < len (vector loop stops at
+    // p + 8 <= len, scalar tail at p < len), within the caller's
+    // readable ranges.
+    unsafe {
+        let mut vs = _mm256_setzero_ps();
+        let mut vc = _mm256_setzero_ps();
+        let mut p = 0;
+        while p + 8 <= len {
+            let va = _mm256_loadu_ps(a.add(p));
+            let vb = _mm256_loadu_ps(b.add(p));
+            let prod = _mm256_mul_ps(va, vb);
+            // TwoProduct: exact error of va*vb via fused multiply-subtract.
+            let perr = _mm256_fmsub_ps(va, vb, prod);
+            // Knuth TwoSum, branchless.
+            let t = _mm256_add_ps(vs, prod);
+            let z = _mm256_sub_ps(t, vs);
+            let serr = _mm256_add_ps(
+                _mm256_sub_ps(vs, _mm256_sub_ps(t, z)),
+                _mm256_sub_ps(prod, z),
+            );
+            vs = t;
+            vc = _mm256_add_ps(vc, _mm256_add_ps(perr, serr));
+            p += 8;
+        }
+        let mut lane_s = [0.0f32; 8];
+        let mut lane_c = [0.0f32; 8];
+        _mm256_storeu_ps(lane_s.as_mut_ptr(), vs);
+        _mm256_storeu_ps(lane_c.as_mut_ptr(), vc);
+        // Compensated horizontal reduction of the lane sums.
+        let mut s = 0.0f32;
+        let mut c = 0.0f32;
+        for i in 0..8 {
+            let t = s + lane_s[i];
+            let z = t - s;
+            c += (s - (t - z)) + (lane_s[i] - z);
+            s = t;
+            c += lane_c[i];
+        }
+        // Scalar tail, same per-element step as comp_dot_scalar.
+        while p < len {
+            let x = *a.add(p);
+            let y = *b.add(p);
+            let prod = x * y;
+            let perr = x.mul_add(y, -prod);
+            let t = s + prod;
+            let z = t - s;
+            let serr = (s - (t - z)) + (prod - z);
+            s = t;
+            c += perr + serr;
+            p += 1;
+        }
+        s + c
     }
-    let mut lane_s = [0.0f32; 8];
-    let mut lane_c = [0.0f32; 8];
-    _mm256_storeu_ps(lane_s.as_mut_ptr(), vs);
-    _mm256_storeu_ps(lane_c.as_mut_ptr(), vc);
-    // Compensated horizontal reduction of the lane sums.
-    let mut s = 0.0f32;
-    let mut c = 0.0f32;
-    for i in 0..8 {
-        let t = s + lane_s[i];
-        let z = t - s;
-        c += (s - (t - z)) + (lane_s[i] - z);
-        s = t;
-        c += lane_c[i];
-    }
-    // Scalar tail, same per-element step as comp_dot_scalar.
-    while p < len {
-        let x = *a.add(p);
-        let y = *b.add(p);
-        let prod = x * y;
-        let perr = x.mul_add(y, -prod);
-        let t = s + prod;
-        let z = t - s;
-        let serr = (s - (t - z)) + (prod - z);
-        s = t;
-        c += perr + serr;
-        p += 1;
-    }
-    s + c
 }
 
 #[cfg(test)]

@@ -6,6 +6,11 @@
 //! precision like the optimised kernels so results are bit-comparable in
 //! tolerance terms. Generic over [`Element`]: the `f64` instantiation is
 //! the DGEMM oracle the double-precision conformance grid runs against.
+//!
+//! This module is entirely safe code: the oracle must not share failure
+//! modes with the kernels it checks, so it indexes through the
+//! bounds-checked accessors only (the checked-access cost is exactly what
+//! the Fig. 2 lower baseline is allowed to pay).
 
 use super::element::Element;
 use crate::blas::{MatMut, MatRef, Transpose};
@@ -34,24 +39,18 @@ pub fn gemm<T: Element>(
         for j in 0..n {
             let mut acc = T::ZERO;
             for p in 0..k {
-                // SAFETY: i < m, j < n, p < k by loop bounds; view shapes
-                // were validated at construction.
-                let av = unsafe {
-                    match transa {
-                        Transpose::No => a.get_unchecked(i, p),
-                        Transpose::Yes => a.get_unchecked(p, i),
-                    }
+                let av = match transa {
+                    Transpose::No => a.get(i, p),
+                    Transpose::Yes => a.get(p, i),
                 };
-                let bv = unsafe {
-                    match transb {
-                        Transpose::No => b.get_unchecked(p, j),
-                        Transpose::Yes => b.get_unchecked(j, p),
-                    }
+                let bv = match transb {
+                    Transpose::No => b.get(p, j),
+                    Transpose::Yes => b.get(j, p),
                 };
                 acc += av * bv;
             }
-            let old = unsafe { c.get_unchecked(i, j) };
-            unsafe { c.set_unchecked(i, j, old + alpha * acc) };
+            let old = c.get(i, j);
+            c.set(i, j, old + alpha * acc);
         }
     }
 }

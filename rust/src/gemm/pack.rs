@@ -16,6 +16,7 @@
 
 use super::element::Element;
 use crate::blas::{MatRef, Transpose};
+use crate::util::ptr::RawSlice;
 
 /// A *virtual* `op(B)` operand: anything that can hand the packers one
 /// logical element per `(row, col)` index. The packers stream such a
@@ -114,14 +115,23 @@ impl<T: Element> PackedB<T> {
     /// `b` is the *stored* matrix; `transb` says whether `op(B) = B` or
     /// `Bᵀ`. The buffer is reused across calls (no allocation once warm).
     pub fn pack(&mut self, b: MatRef<'_, T>, transb: Transpose, kk: usize, kb_eff: usize, n: usize) {
+        // Block-range invariant: the requested k-block and column window
+        // must lie inside op(B).
+        match transb {
+            Transpose::No => debug_assert!(kk + kb_eff <= b.rows() && n <= b.cols()),
+            Transpose::Yes => debug_assert!(kk + kb_eff <= b.cols() && n <= b.rows()),
+        }
         let kpad = kpad_for(kb_eff);
         let panels = n.div_ceil(self.nr).max(1);
         let need = panels * self.nr * kpad;
         self.buf.clear();
         self.buf.resize(need, T::ZERO);
+        // Layout invariant: every panel's nr columns of kpad elements fit.
+        debug_assert!(panels * self.nr * kpad <= self.buf.len());
         self.kpad = kpad;
         self.kb_eff = kb_eff;
         self.n = n;
+        let braw = b.raw();
         for j in 0..n {
             let panel = j / self.nr;
             let lane = j % self.nr;
@@ -130,15 +140,18 @@ impl<T: Element> PackedB<T> {
                 Transpose::No => {
                     // Column j of B: strided by ldb in storage.
                     for p in 0..kb_eff {
-                        // SAFETY: kk+p < b.rows(), j < b.cols() — caller
-                        // guarantees the block is in range.
-                        self.buf[base + p] = unsafe { b.get_unchecked(kk + p, j) };
+                        // SAFETY: kk+p < b.rows() and j < b.cols() by the
+                        // block-range invariant asserted above (verified
+                        // again inside the checked handle in debug).
+                        self.buf[base + p] = unsafe { braw.get(kk + p, j) };
                     }
                 }
                 Transpose::Yes => {
                     // Column j of Bᵀ = row j of B: contiguous in storage.
                     for p in 0..kb_eff {
-                        self.buf[base + p] = unsafe { b.get_unchecked(j, kk + p) };
+                        // SAFETY: j < b.rows() and kk+p < b.cols() by the
+                        // block-range invariant asserted above.
+                        self.buf[base + p] = unsafe { braw.get(j, kk + p) };
                     }
                 }
             }
@@ -158,10 +171,26 @@ impl<T: Element> PackedB<T> {
     }
 
     /// Pointer to the packed column `j` (0-based within panel `p`).
+    /// The column's `kpad` elements are verified against the buffer
+    /// length, so the pointer is good for `kpad` reads.
     #[inline(always)]
     pub fn col_ptr(&self, p: usize, j: usize) -> *const T {
         debug_assert!(j < self.panel_width(p));
-        unsafe { self.buf.as_ptr().add((p * self.nr + j) * self.kpad) }
+        let off = (p * self.nr + j) * self.kpad;
+        debug_assert!(off + self.kpad <= self.buf.len());
+        self.buf[off..].as_ptr()
+    }
+
+    /// Length-carrying span of the packed column `j` in panel `p`:
+    /// exactly the column's `kpad` elements (data then zero padding).
+    /// This is what the safe kernel-call wrappers in [`super::simd`]
+    /// consume — the span proves the kernel's read extent at the call
+    /// site instead of trusting a bare pointer.
+    #[inline(always)]
+    pub(crate) fn col_span(&self, p: usize, j: usize) -> RawSlice<T> {
+        assert!(j < self.panel_width(p), "col_span: column {j} out of panel {p}");
+        let off = (p * self.nr + j) * self.kpad;
+        RawSlice::from_slice(&self.buf[off..off + self.kpad])
     }
 
     /// Padded column length.
@@ -204,23 +233,35 @@ impl<T: Element> PackedA<T> {
         kk: usize,
         kb_eff: usize,
     ) {
+        // Block-range invariant: the mb_eff × kb_eff block at (ii, kk)
+        // must lie inside op(A).
+        match transa {
+            Transpose::No => debug_assert!(ii + mb_eff <= a.rows() && kk + kb_eff <= a.cols()),
+            Transpose::Yes => debug_assert!(ii + mb_eff <= a.cols() && kk + kb_eff <= a.rows()),
+        }
         let kpad = kpad_for(kb_eff);
         self.buf.clear();
         self.buf.resize(mb_eff.max(1) * kpad, T::ZERO);
+        // Layout invariant: mb_eff rows of kpad elements fit the buffer.
+        debug_assert!(mb_eff * kpad <= self.buf.len());
         self.kpad = kpad;
         self.rows = mb_eff;
+        let araw = a.raw();
         for i in 0..mb_eff {
             let base = i * kpad;
             match transa {
                 Transpose::No => {
                     for p in 0..kb_eff {
-                        // SAFETY: block range guaranteed by caller.
-                        self.buf[base + p] = unsafe { a.get_unchecked(ii + i, kk + p) };
+                        // SAFETY: ii+i < a.rows(), kk+p < a.cols() by the
+                        // block-range invariant asserted above.
+                        self.buf[base + p] = unsafe { araw.get(ii + i, kk + p) };
                     }
                 }
                 Transpose::Yes => {
                     for p in 0..kb_eff {
-                        self.buf[base + p] = unsafe { a.get_unchecked(kk + p, ii + i) };
+                        // SAFETY: kk+p < a.rows(), ii+i < a.cols() by the
+                        // block-range invariant asserted above.
+                        self.buf[base + p] = unsafe { araw.get(kk + p, ii + i) };
                     }
                 }
             }
@@ -231,7 +272,19 @@ impl<T: Element> PackedA<T> {
     #[inline(always)]
     pub fn row_ptr(&self, i: usize) -> *const T {
         debug_assert!(i < self.rows);
-        unsafe { self.buf.as_ptr().add(i * self.kpad) }
+        let off = i * self.kpad;
+        debug_assert!(off + self.kpad <= self.buf.len());
+        self.buf[off..].as_ptr()
+    }
+
+    /// Length-carrying span of packed row `i`: exactly the row's `kpad`
+    /// elements (data then zero padding). Consumed by the safe
+    /// kernel-call wrappers in [`super::simd`].
+    #[inline(always)]
+    pub(crate) fn row_span(&self, i: usize) -> RawSlice<T> {
+        assert!(i < self.rows, "row_span: row {i} out of {}", self.rows);
+        let off = i * self.kpad;
+        RawSlice::from_slice(&self.buf[off..off + self.kpad])
     }
 
     /// Padded row length.
@@ -283,23 +336,34 @@ impl<T: Element> TilePackedA<T> {
         mr: usize,
     ) {
         assert!(mr >= 1);
+        // Block-range invariant: the mb_eff × kb_eff block at (ii, kk)
+        // must lie inside op(A).
+        match transa {
+            Transpose::No => debug_assert!(ii + mb_eff <= a.rows() && kk + kb_eff <= a.cols()),
+            Transpose::Yes => debug_assert!(ii + mb_eff <= a.cols() && kk + kb_eff <= a.rows()),
+        }
         let strips = mb_eff.div_ceil(mr).max(1);
         self.buf.clear();
         self.buf.resize(strips * mr * kb_eff.max(1), T::ZERO);
+        // k-major layout invariant: strips × mr × kc must fit the buffer.
+        debug_assert!(strips * mr * kb_eff <= self.buf.len());
         self.mr = mr;
         self.kc_eff = kb_eff;
         self.rows = mb_eff;
+        let araw = a.raw();
         for s in 0..strips {
             let base = s * mr * kb_eff;
             let h = mr.min(mb_eff.saturating_sub(s * mr));
             for p in 0..kb_eff {
                 for l in 0..h {
                     let i = s * mr + l;
-                    // SAFETY: caller guarantees the block is in range.
+                    // SAFETY: i < mb_eff (h clamps to the block edge) and
+                    // p < kb_eff, so both indices are inside op(A) by the
+                    // block-range invariant asserted above.
                     self.buf[base + p * mr + l] = unsafe {
                         match transa {
-                            Transpose::No => a.get_unchecked(ii + i, kk + p),
-                            Transpose::Yes => a.get_unchecked(kk + p, ii + i),
+                            Transpose::No => araw.get(ii + i, kk + p),
+                            Transpose::Yes => araw.get(kk + p, ii + i),
                         }
                     };
                 }
@@ -322,7 +386,9 @@ impl<T: Element> TilePackedA<T> {
     #[inline(always)]
     pub fn strip_ptr(&self, s: usize) -> *const T {
         debug_assert!(s < self.strips());
-        unsafe { self.buf.as_ptr().add(s * self.mr * self.kc_eff) }
+        let off = s * self.mr * self.kc_eff;
+        debug_assert!(off + self.mr * self.kc_eff <= self.buf.len());
+        self.buf[off..].as_ptr()
     }
 
     /// Unpadded k depth of the packed block.
@@ -379,23 +445,34 @@ impl<T: Element> TilePackedB<T> {
         nr: usize,
     ) {
         assert!(nr >= 1);
+        // Block-range invariant: the kb_eff × nb_eff window at (kk, j0)
+        // must lie inside op(B).
+        match transb {
+            Transpose::No => debug_assert!(kk + kb_eff <= b.rows() && j0 + nb_eff <= b.cols()),
+            Transpose::Yes => debug_assert!(kk + kb_eff <= b.cols() && j0 + nb_eff <= b.rows()),
+        }
         let panels = nb_eff.div_ceil(nr).max(1);
         self.buf.clear();
         self.buf.resize(panels * nr * kb_eff.max(1), T::ZERO);
+        // k-major layout invariant: panels × nr × kc must fit the buffer.
+        debug_assert!(panels * nr * kb_eff <= self.buf.len());
         self.nr = nr;
         self.kc_eff = kb_eff;
         self.cols = nb_eff;
+        let braw = b.raw();
         for q in 0..panels {
             let base = q * nr * kb_eff;
             let w = nr.min(nb_eff.saturating_sub(q * nr));
             for p in 0..kb_eff {
                 for l in 0..w {
                     let j = j0 + q * nr + l;
-                    // SAFETY: caller guarantees the block is in range.
+                    // SAFETY: j < j0 + nb_eff (w clamps to the window
+                    // edge) and p < kb_eff, so both indices are inside
+                    // op(B) by the block-range invariant asserted above.
                     self.buf[base + p * nr + l] = unsafe {
                         match transb {
-                            Transpose::No => b.get_unchecked(kk + p, j),
-                            Transpose::Yes => b.get_unchecked(j, kk + p),
+                            Transpose::No => braw.get(kk + p, j),
+                            Transpose::Yes => braw.get(j, kk + p),
                         }
                     };
                 }
@@ -418,9 +495,14 @@ impl<T: Element> TilePackedB<T> {
         nr: usize,
     ) {
         assert!(nr >= 1);
+        // Block-range invariant, same as `pack`: the window must lie
+        // inside the virtual op(B).
+        debug_assert!(kk + kb_eff <= src.rows() && j0 + nb_eff <= src.cols());
         let panels = nb_eff.div_ceil(nr).max(1);
         self.buf.clear();
         self.buf.resize(panels * nr * kb_eff.max(1), T::ZERO);
+        // k-major layout invariant: panels × nr × kc must fit the buffer.
+        debug_assert!(panels * nr * kb_eff <= self.buf.len());
         self.nr = nr;
         self.kc_eff = kb_eff;
         self.cols = nb_eff;
@@ -449,7 +531,9 @@ impl<T: Element> TilePackedB<T> {
     #[inline(always)]
     pub fn panel_ptr(&self, q: usize) -> *const T {
         debug_assert!(q < self.panels());
-        unsafe { self.buf.as_ptr().add(q * self.nr * self.kc_eff) }
+        let off = q * self.nr * self.kc_eff;
+        debug_assert!(off + self.nr * self.kc_eff <= self.buf.len());
+        self.buf[off..].as_ptr()
     }
 
     /// Unpadded k depth of the packed block.

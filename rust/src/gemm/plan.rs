@@ -35,11 +35,11 @@ use super::batch;
 use super::dispatch::{DispatchConfig, GemmDispatch, GemmShape, KernelId};
 use super::element::{Element, ElementId};
 use super::epilogue::Epilogue;
-use super::microkernel;
 use super::pack;
 use super::params::{BlockParams, TileParams};
 use super::simd::VecIsa;
 use super::tile;
+use crate::util::ptr::RawSlice;
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
 use crate::util::threadpool::{run_borrowed_on, ThreadPool};
 use std::sync::{Arc, OnceLock, RwLock};
@@ -980,7 +980,7 @@ fn prepacked_gemm<T: Element>(
     let mut scratch_a = pack::PackedA::<T>::new();
     let mut sums = [T::ZERO; 8];
     let mut sums2 = [T::ZERO; 8];
-    let mut cols: Vec<*const T> = Vec::with_capacity(params.nr);
+    let mut cols: Vec<RawSlice<T>> = Vec::with_capacity(params.nr);
 
     for (kbi, block) in pb.blocks.iter().enumerate() {
         let kk = pb.offsets[kbi];
@@ -1002,82 +1002,71 @@ fn prepacked_gemm<T: Element>(
                 let w = params.nr.min(n - j0);
                 cols.clear();
                 for j in 0..w {
-                    cols.push(block.col_ptr(p0 + p, j));
+                    cols.push(block.col_span(p0 + p, j));
                 }
-                let row_ptr = |i: usize| -> *const T {
+                let row_span = |i: usize| -> RawSlice<T> {
                     match a {
-                        ASource::Packed { blocks, mb } => blocks[kbi][(row0 + ii) / mb].row_ptr(i),
+                        ASource::Packed { blocks, mb } => blocks[kbi][(row0 + ii) / mb].row_span(i),
                         ASource::Raw(av) => {
                             if need_pack_a {
-                                scratch_a.row_ptr(i)
+                                scratch_a.row_span(i)
                             } else {
-                                av.row_ptr(ii + i).wrapping_add(kk)
+                                av.row_span(ii + i, kk, kb_eff)
                             }
                         }
                     }
                 };
                 let mut i = 0;
                 while i < mb_eff {
-                    let arow = row_ptr(i);
+                    let arow = row_span(i);
                     // AVX2 fast path: two A rows per pass re-use every B
                     // vector (mirrors the packing driver exactly).
                     if isa == Some(VecIsa::Avx2) && i + 1 < mb_eff {
-                        let arow1 = row_ptr(i + 1);
-                        // SAFETY: rows are readable for kb_eff elements
-                        // (packed rows are kpad >= kb_eff long; raw rows
-                        // have kk + kb_eff <= k <= a.cols()); packed
-                        // columns are kpad long; w <= 8.
-                        unsafe {
-                            T::dot_panel2_dyn(
-                                arow,
-                                arow1,
-                                kb_eff,
-                                &cols,
-                                params.unroll,
-                                params.prefetch,
-                                &mut sums,
-                                &mut sums2,
-                            );
-                            for j in 0..w {
-                                let o0 = c.get_unchecked(ii + i, j0 + j);
-                                let mut v0 = o0 + alpha * sums[j];
-                                let o1 = c.get_unchecked(ii + i + 1, j0 + j);
-                                let mut v1 = o1 + alpha * sums2[j];
-                                if let Some((e, ro, co)) = fused {
-                                    v0 = e.apply_scalar(v0, ro + ii + i, co + j0 + j);
-                                    v1 = e.apply_scalar(v1, ro + ii + i + 1, co + j0 + j);
-                                }
-                                c.set_unchecked(ii + i, j0 + j, v0);
-                                c.set_unchecked(ii + i + 1, j0 + j, v1);
+                        let arow1 = row_span(i + 1);
+                        super::simd::dot_panel2_pass(
+                            arow,
+                            arow1,
+                            kb_eff,
+                            &cols,
+                            params.unroll,
+                            params.prefetch,
+                            &mut sums,
+                            &mut sums2,
+                        );
+                        for j in 0..w {
+                            let o0 = c.get(ii + i, j0 + j);
+                            let mut v0 = o0 + alpha * sums[j];
+                            let o1 = c.get(ii + i + 1, j0 + j);
+                            let mut v1 = o1 + alpha * sums2[j];
+                            if let Some((e, ro, co)) = fused {
+                                v0 = e.apply_scalar(v0, ro + ii + i, co + j0 + j);
+                                v1 = e.apply_scalar(v1, ro + ii + i + 1, co + j0 + j);
                             }
+                            c.set(ii + i, j0 + j, v0);
+                            c.set(ii + i + 1, j0 + j, v1);
                         }
                         i += 2;
                         continue;
                     }
-                    // SAFETY: same bounds argument as above; `isa` is only
-                    // Some(_) when the CPU supports that ISA (feature bits
-                    // come from runtime detection, never faked).
-                    unsafe {
-                        match isa {
-                            Some(vec_isa) => T::dot_panel_dyn(
-                                vec_isa,
-                                arow,
-                                kb_eff,
-                                &cols,
-                                params.unroll,
-                                params.prefetch,
-                                &mut sums,
-                            ),
-                            None => microkernel::scalar_dot_panel(arow, kb_eff, &cols, &mut sums),
+                    match isa {
+                        Some(vec_isa) => super::simd::dot_panel_pass(
+                            vec_isa,
+                            arow,
+                            kb_eff,
+                            &cols,
+                            params.unroll,
+                            params.prefetch,
+                            &mut sums,
+                        ),
+                        None => super::simd::scalar_dot_panel_pass(arow, kb_eff, &cols, &mut sums),
+                    }
+                    for j in 0..w {
+                        let old = c.get(ii + i, j0 + j);
+                        let mut v = old + alpha * sums[j];
+                        if let Some((e, ro, co)) = fused {
+                            v = e.apply_scalar(v, ro + ii + i, co + j0 + j);
                         }
-                        for j in 0..w {
-                            let old = c.get_unchecked(ii + i, j0 + j);
-                            let mut v = old + alpha * sums[j];
-                            if let Some((e, ro, co)) = fused {
-                                v = e.apply_scalar(v, ro + ii + i, co + j0 + j);
-                            }
-                            c.set_unchecked(ii + i, j0 + j, v);
-                        }
+                        c.set(ii + i, j0 + j, v);
                     }
                     i += 1;
                 }

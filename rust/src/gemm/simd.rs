@@ -14,12 +14,21 @@
 //! The B panel (`kb × nr` ≈ 6.7 KB) stays L1-resident across all `mb`
 //! rows; the `A` row streams through with prefetch; `C` accumulates in
 //! registers inside the micro-kernel and is written once per panel.
+//!
+//! Unsafe policy: the blocking driver itself is safe code. Kernel
+//! invocation goes through the three *pass* wrappers below
+//! ([`dot_panel_pass`], [`dot_panel2_pass`], [`dot_panel_strided_pass`]),
+//! which take length-carrying [`RawSlice`] spans instead of bare
+//! pointers, assert every kernel read extent at the call site, and
+//! contain the only `unsafe` blocks in this module. The prepacked
+//! planned path ([`super::plan`]) drives the same wrappers.
 
 use super::element::Element;
 use super::pack::Scratch;
-use super::params::BlockParams;
+use super::params::{BlockParams, Unroll};
 use super::tile::EpRef;
 use crate::blas::{MatMut, MatRef, Transpose};
+use crate::util::ptr::RawSlice;
 
 /// Which vector ISA the shared driver dispatches to. Kernel selection per
 /// element goes through [`Element::dot_panel_dyn`]: f32 has SSE and AVX2
@@ -31,6 +40,135 @@ pub enum VecIsa {
     Sse,
     /// 8-wide AVX2 + FMA (modern extension).
     Avx2,
+}
+
+/// Assert that the requested ISA is actually available before any kernel
+/// with `#[target_feature]` is entered (on non-x86_64 hosts the element
+/// hooks fall back to scalar kernels, so any `isa` value is fine).
+#[inline(always)]
+fn assert_isa_available(isa: VecIsa) {
+    #[cfg(target_arch = "x86_64")]
+    match isa {
+        VecIsa::Sse => assert!(super::dispatch::detect_sse(), "SSE kernel selected without SSE"),
+        VecIsa::Avx2 => {
+            assert!(super::dispatch::detect_avx2(), "AVX2 kernel selected without AVX2+FMA")
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = isa;
+}
+
+/// Safe dot-panel invocation: `cols.len()` simultaneous dot products of
+/// length `len` against one row span of `A'`, written to `out[..w]`.
+///
+/// Every extent the kernel relies on is asserted here (always, in every
+/// build — a handful of integer compares ahead of `O(w·len)` kernel
+/// work), so the wrapped call cannot read out of bounds.
+pub(crate) fn dot_panel_pass<T: Element>(
+    isa: VecIsa,
+    a: RawSlice<T>,
+    len: usize,
+    cols: &[RawSlice<T>],
+    unroll: Unroll,
+    prefetch: bool,
+    out: &mut [T; 8],
+) {
+    let w = cols.len();
+    assert!(w >= 1 && w <= 8, "panel width {w} out of 1..=8");
+    assert!(a.len() >= len, "A row span {} shorter than k-depth {len}", a.len());
+    let mut ptrs = [std::ptr::null::<T>(); 8];
+    for (j, col) in cols.iter().enumerate() {
+        assert!(col.len() >= len, "B column {j} span {} shorter than k-depth {len}", col.len());
+        ptrs[j] = col.as_ptr();
+    }
+    assert_isa_available(isa);
+    // SAFETY: the kernels read exactly `len` elements through each
+    // pointer; the asserts above prove every span is at least that long,
+    // `out` has 8 >= w slots, and the ISA was runtime-verified.
+    unsafe { T::dot_panel_dyn(isa, a.as_ptr(), len, &ptrs[..w], unroll, prefetch, out) }
+}
+
+/// Safe two-row dot-panel invocation (the AVX2 fast path: every `B`
+/// vector re-used against two `A` rows). Same extent discipline as
+/// [`dot_panel_pass`], applied to both row spans.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dot_panel2_pass<T: Element>(
+    a0: RawSlice<T>,
+    a1: RawSlice<T>,
+    len: usize,
+    cols: &[RawSlice<T>],
+    unroll: Unroll,
+    prefetch: bool,
+    out0: &mut [T; 8],
+    out1: &mut [T; 8],
+) {
+    let w = cols.len();
+    assert!(w >= 1 && w <= 8, "panel width {w} out of 1..=8");
+    assert!(a0.len() >= len, "A row 0 span {} shorter than k-depth {len}", a0.len());
+    assert!(a1.len() >= len, "A row 1 span {} shorter than k-depth {len}", a1.len());
+    let mut ptrs = [std::ptr::null::<T>(); 8];
+    for (j, col) in cols.iter().enumerate() {
+        assert!(col.len() >= len, "B column {j} span {} shorter than k-depth {len}", col.len());
+        ptrs[j] = col.as_ptr();
+    }
+    assert_isa_available(VecIsa::Avx2);
+    // SAFETY: the two-row kernel reads exactly `len` elements through
+    // each pointer; the asserts above prove every span is at least that
+    // long, both outs have 8 >= w slots, and AVX2+FMA was verified.
+    unsafe { T::dot_panel2_dyn(a0.as_ptr(), a1.as_ptr(), len, &ptrs[..w], unroll, prefetch, out0, out1) }
+}
+
+/// Safe strided dot-panel invocation (the "no re-buffering" ablation):
+/// each `B` column is a `(span, stride)` stream read at offsets
+/// `p * stride` for `p < len`; the span must cover that last offset.
+pub(crate) fn dot_panel_strided_pass<T: Element>(
+    a: RawSlice<T>,
+    len: usize,
+    cols: &[(RawSlice<T>, usize)],
+    out: &mut [T; 8],
+) {
+    let w = cols.len();
+    assert!(w >= 1 && w <= 8, "panel width {w} out of 1..=8");
+    assert!(a.len() >= len, "A row span {} shorter than k-depth {len}", a.len());
+    let mut ptrs = [(std::ptr::null::<T>(), 0usize); 8];
+    for (j, &(col, stride)) in cols.iter().enumerate() {
+        assert!(
+            len == 0 || (len - 1) * stride < col.len(),
+            "B stream {j}: last offset {} outside span {}",
+            (len - 1) * stride,
+            col.len()
+        );
+        ptrs[j] = (col.as_ptr(), stride);
+    }
+    // Strided kernels use the baseline ISA (SSE gather / scalar): no
+    // feature check needed beyond the x86-64 baseline.
+    // SAFETY: the strided kernels read `a` at offsets < len and each
+    // stream at offsets p * stride for p < len; the asserts above prove
+    // every such offset is inside its span, and out has 8 >= w slots.
+    unsafe { T::dot_panel_strided(a.as_ptr(), len, &ptrs[..w], out) }
+}
+
+/// Safe scalar dot-panel invocation — the no-vector-ISA arm of the
+/// prepacked driver (and the only panel kernel Miri executes). Same
+/// extent discipline as [`dot_panel_pass`], no feature requirement.
+pub(crate) fn scalar_dot_panel_pass<T: Element>(
+    a: RawSlice<T>,
+    len: usize,
+    cols: &[RawSlice<T>],
+    out: &mut [T; 8],
+) {
+    let w = cols.len();
+    assert!(w >= 1 && w <= 8, "panel width {w} out of 1..=8");
+    assert!(a.len() >= len, "A row span {} shorter than k-depth {len}", a.len());
+    let mut ptrs = [std::ptr::null::<T>(); 8];
+    for (j, col) in cols.iter().enumerate() {
+        assert!(col.len() >= len, "B column {j} span {} shorter than k-depth {len}", col.len());
+        ptrs[j] = col.as_ptr();
+    }
+    // SAFETY: the scalar panel reads exactly `len` elements through each
+    // pointer; the asserts above prove every span is at least that long,
+    // and out has 8 >= w slots.
+    unsafe { super::microkernel::scalar_dot_panel(a.as_ptr(), len, &ptrs[..w], out) }
 }
 
 /// Emmerald GEMM on the SSE tier: `C = alpha * op(A) op(B) + beta * C`.
@@ -160,8 +298,8 @@ pub(crate) fn gemm_vec_scratch_ep<T: Element>(
     let (packed_a, packed_b) = (&mut scratch.a, &mut scratch.b);
     let mut sums = [T::ZERO; 8];
     let mut sums2 = [T::ZERO; 8];
-    let mut cols: Vec<*const T> = Vec::with_capacity(params.nr);
-    let mut cols_strided: Vec<(*const T, usize)> = Vec::with_capacity(params.nr);
+    let mut cols: Vec<RawSlice<T>> = Vec::with_capacity(params.nr);
+    let mut cols_strided: Vec<(RawSlice<T>, usize)> = Vec::with_capacity(params.nr);
 
     let mut kk = 0;
     while kk < k {
@@ -185,94 +323,84 @@ pub(crate) fn gemm_vec_scratch_ep<T: Element>(
                 if params.pack_b {
                     cols.clear();
                     for j in 0..w {
-                        cols.push(packed_b.col_ptr(p, j));
+                        cols.push(packed_b.col_span(p, j));
                     }
                 } else {
                     // Ablation path: read op(B) through its stored layout.
+                    // Each stream's span runs to the end of B's backing
+                    // storage, which covers its last read offset
+                    // (kb_eff-1)*stride because op(B)[kk+kb_eff-1, j0+w-1]
+                    // is a logical element of B.
                     cols_strided.clear();
                     for j in 0..w {
-                        let (ptr, stride) = match transb {
-                            Transpose::No => (b.row_ptr(kk).wrapping_add(j0 + j), b.ld()),
-                            Transpose::Yes => (b.row_ptr(j0 + j).wrapping_add(kk), 1),
+                        let (span, stride) = match transb {
+                            Transpose::No => (b.tail_span(kk, j0 + j), b.ld()),
+                            Transpose::Yes => (b.tail_span(j0 + j, kk), 1),
                         };
-                        cols_strided.push((ptr, stride));
+                        cols_strided.push((span, stride));
                     }
                 }
                 let mut i = 0;
                 while i < mb_eff {
-                    let arow: *const T = if need_pack_a {
-                        packed_a.row_ptr(i)
+                    let arow: RawSlice<T> = if need_pack_a {
+                        packed_a.row_span(i)
                     } else {
-                        // Row ii+i of A, offset kk: contiguous kb_eff f32s.
-                        a.row_ptr(ii + i).wrapping_add(kk)
+                        // Row ii+i of A, offset kk: contiguous kb_eff elems.
+                        a.row_span(ii + i, kk, kb_eff)
                     };
                     // AVX2 fast path: two A rows per pass re-use every B
                     // vector (see microkernel::avx2_dot_panel2).
                     if isa == VecIsa::Avx2 && params.pack_b && i + 1 < mb_eff {
-                        let arow1: *const T = if need_pack_a {
-                            packed_a.row_ptr(i + 1)
+                        let arow1: RawSlice<T> = if need_pack_a {
+                            packed_a.row_span(i + 1)
                         } else {
-                            a.row_ptr(ii + i + 1).wrapping_add(kk)
+                            a.row_span(ii + i + 1, kk, kb_eff)
                         };
-                        // SAFETY: same bounds argument as the single-row
-                        // path, applied to rows i and i+1.
-                        unsafe {
-                            T::dot_panel2_dyn(
-                                arow,
-                                arow1,
-                                kb_eff,
-                                &cols,
-                                params.unroll,
-                                params.prefetch,
-                                &mut sums,
-                                &mut sums2,
-                            );
-                            for j in 0..w {
-                                let o0 = c.get_unchecked(ii + i, j0 + j);
-                                let mut v0 = o0 + alpha * sums[j];
-                                let o1 = c.get_unchecked(ii + i + 1, j0 + j);
-                                let mut v1 = o1 + alpha * sums2[j];
-                                if let Some((e, ro, co)) = fused {
-                                    v0 = e.apply_scalar(v0, ro + ii + i, co + j0 + j);
-                                    v1 = e.apply_scalar(v1, ro + ii + i + 1, co + j0 + j);
-                                }
-                                c.set_unchecked(ii + i, j0 + j, v0);
-                                c.set_unchecked(ii + i + 1, j0 + j, v1);
+                        dot_panel2_pass(
+                            arow,
+                            arow1,
+                            kb_eff,
+                            &cols,
+                            params.unroll,
+                            params.prefetch,
+                            &mut sums,
+                            &mut sums2,
+                        );
+                        for j in 0..w {
+                            let o0 = c.get(ii + i, j0 + j);
+                            let mut v0 = o0 + alpha * sums[j];
+                            let o1 = c.get(ii + i + 1, j0 + j);
+                            let mut v1 = o1 + alpha * sums2[j];
+                            if let Some((e, ro, co)) = fused {
+                                v0 = e.apply_scalar(v0, ro + ii + i, co + j0 + j);
+                                v1 = e.apply_scalar(v1, ro + ii + i + 1, co + j0 + j);
                             }
+                            c.set(ii + i, j0 + j, v0);
+                            c.set(ii + i + 1, j0 + j, v1);
                         }
                         i += 2;
                         continue;
                     }
-                    // SAFETY: arow is readable for kb_eff elements (packed
-                    // rows are kpad >= kb_eff long; unpacked rows have
-                    // kk + kb_eff <= k <= a.cols()). Packed columns are
-                    // kpad long; strided columns were validated by the
-                    // MatRef bounds. w <= 8 and sums has 8 slots.
-                    unsafe {
-                        if params.pack_b {
-                            T::dot_panel_dyn(
-                                isa,
-                                arow,
-                                kb_eff,
-                                &cols,
-                                params.unroll,
-                                params.prefetch,
-                                &mut sums,
-                            );
-                        } else {
-                            T::dot_panel_strided(arow, kb_eff, &cols_strided, &mut sums);
-                        }
+                    if params.pack_b {
+                        dot_panel_pass(
+                            isa,
+                            arow,
+                            kb_eff,
+                            &cols,
+                            params.unroll,
+                            params.prefetch,
+                            &mut sums,
+                        );
+                    } else {
+                        dot_panel_strided_pass(arow, kb_eff, &cols_strided, &mut sums);
                     }
                     for j in 0..w {
-                        // SAFETY: ii+i < m, j0+j < n.
-                        unsafe {
-                            let old = c.get_unchecked(ii + i, j0 + j);
-                            let mut v = old + alpha * sums[j];
-                            if let Some((e, ro, co)) = fused {
-                                v = e.apply_scalar(v, ro + ii + i, co + j0 + j);
-                            }
-                            c.set_unchecked(ii + i, j0 + j, v);
+                        let old = c.get(ii + i, j0 + j);
+                        let mut v = old + alpha * sums[j];
+                        if let Some((e, ro, co)) = fused {
+                            v = e.apply_scalar(v, ro + ii + i, co + j0 + j);
                         }
+                        c.set(ii + i, j0 + j, v);
                     }
                     i += 1;
                 }
@@ -382,5 +510,42 @@ mod tests {
                 &format!("simd-nr{nr}"),
             );
         }
+    }
+
+    #[test]
+    #[should_panic]
+    fn dot_panel_pass_rejects_short_column_span() {
+        // The wrapper must catch an undersized span before the kernel
+        // reads through it — in every build profile, not just debug.
+        let a = vec![1.0f32; 16];
+        let short = vec![1.0f32; 8];
+        let cols = [crate::util::ptr::RawSlice::from_slice(&short[..])];
+        let mut out = [0.0f32; 8];
+        dot_panel_pass::<f32>(
+            VecIsa::Sse,
+            crate::util::ptr::RawSlice::from_slice(&a[..]),
+            16,
+            &cols,
+            Unroll::X1,
+            false,
+            &mut out,
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn strided_pass_rejects_span_not_covering_last_offset() {
+        // len=4, stride=3 needs offsets {0,3,6,9}; a 9-element span ends
+        // one short.
+        let a = vec![1.0f32; 4];
+        let b = vec![1.0f32; 9];
+        let cols = [(crate::util::ptr::RawSlice::from_slice(&b[..]), 3usize)];
+        let mut out = [0.0f32; 8];
+        dot_panel_strided_pass::<f32>(
+            crate::util::ptr::RawSlice::from_slice(&a[..]),
+            4,
+            &cols,
+            &mut out,
+        );
     }
 }

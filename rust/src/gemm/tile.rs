@@ -95,35 +95,38 @@ unsafe fn avx2_tile<const MR: usize>(
     accumulate: bool,
     prefetch: bool,
 ) {
-    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
-    for p in 0..kc {
-        if prefetch {
-            // wrapping_add: the prefetch address runs past the packed
-            // panel near its end, and ptr::add would make that UB even
-            // though the hint itself can never fault.
-            _mm_prefetch::<_MM_HINT_T0>(bp.wrapping_add(p * NR + PREFETCH_B_F32).cast());
+    // SAFETY: loads stay inside the packed strip (kc * MR) and panel
+    // (kc * NR); stores hit rows i*dst_ld, i < MR, 16 wide — exactly the
+    // caller's contract. The prefetch address uses wrapping_add because
+    // it runs past the panel near its end (a hint, never a dereference).
+    unsafe {
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        for p in 0..kc {
+            if prefetch {
+                _mm_prefetch::<_MM_HINT_T0>(bp.wrapping_add(p * NR + PREFETCH_B_F32).cast());
+            }
+            let b0 = _mm256_loadu_ps(bp.add(p * NR));
+            let b1 = _mm256_loadu_ps(bp.add(p * NR + 8));
+            let arow = ap.add(p * MR);
+            for (i, a) in acc.iter_mut().enumerate() {
+                let av = _mm256_broadcast_ss(&*arow.add(i));
+                a[0] = _mm256_fmadd_ps(av, b0, a[0]);
+                a[1] = _mm256_fmadd_ps(av, b1, a[1]);
+            }
         }
-        let b0 = _mm256_loadu_ps(bp.add(p * NR));
-        let b1 = _mm256_loadu_ps(bp.add(p * NR + 8));
-        let arow = ap.add(p * MR);
-        for (i, a) in acc.iter_mut().enumerate() {
-            let av = _mm256_broadcast_ss(&*arow.add(i));
-            a[0] = _mm256_fmadd_ps(av, b0, a[0]);
-            a[1] = _mm256_fmadd_ps(av, b1, a[1]);
-        }
-    }
-    if accumulate {
-        let va = _mm256_set1_ps(alpha);
-        for (i, a) in acc.iter().enumerate() {
-            let row = dst.add(i * dst_ld);
-            _mm256_storeu_ps(row, _mm256_fmadd_ps(va, a[0], _mm256_loadu_ps(row)));
-            _mm256_storeu_ps(row.add(8), _mm256_fmadd_ps(va, a[1], _mm256_loadu_ps(row.add(8))));
-        }
-    } else {
-        for (i, a) in acc.iter().enumerate() {
-            let row = dst.add(i * dst_ld);
-            _mm256_storeu_ps(row, a[0]);
-            _mm256_storeu_ps(row.add(8), a[1]);
+        if accumulate {
+            let va = _mm256_set1_ps(alpha);
+            for (i, a) in acc.iter().enumerate() {
+                let row = dst.add(i * dst_ld);
+                _mm256_storeu_ps(row, _mm256_fmadd_ps(va, a[0], _mm256_loadu_ps(row)));
+                _mm256_storeu_ps(row.add(8), _mm256_fmadd_ps(va, a[1], _mm256_loadu_ps(row.add(8))));
+            }
+        } else {
+            for (i, a) in acc.iter().enumerate() {
+                let row = dst.add(i * dst_ld);
+                _mm256_storeu_ps(row, a[0]);
+                _mm256_storeu_ps(row.add(8), a[1]);
+            }
         }
     }
 }
@@ -149,32 +152,37 @@ unsafe fn avx2_tile_f64<const MR: usize>(
     prefetch: bool,
 ) {
     const NRD: usize = 8;
-    let mut acc = [[_mm256_setzero_pd(); 2]; MR];
-    for p in 0..kc {
-        if prefetch {
-            _mm_prefetch::<_MM_HINT_T0>(bp.wrapping_add(p * NRD + PREFETCH_B_F64).cast());
+    // SAFETY: loads stay inside the packed strip (kc * MR) and panel
+    // (kc * 8); stores hit rows i*dst_ld, i < MR, 8 wide — exactly the
+    // caller's contract. Prefetch uses wrapping_add (hint only).
+    unsafe {
+        let mut acc = [[_mm256_setzero_pd(); 2]; MR];
+        for p in 0..kc {
+            if prefetch {
+                _mm_prefetch::<_MM_HINT_T0>(bp.wrapping_add(p * NRD + PREFETCH_B_F64).cast());
+            }
+            let b0 = _mm256_loadu_pd(bp.add(p * NRD));
+            let b1 = _mm256_loadu_pd(bp.add(p * NRD + 4));
+            let arow = ap.add(p * MR);
+            for (i, a) in acc.iter_mut().enumerate() {
+                let av = _mm256_broadcast_sd(&*arow.add(i));
+                a[0] = _mm256_fmadd_pd(av, b0, a[0]);
+                a[1] = _mm256_fmadd_pd(av, b1, a[1]);
+            }
         }
-        let b0 = _mm256_loadu_pd(bp.add(p * NRD));
-        let b1 = _mm256_loadu_pd(bp.add(p * NRD + 4));
-        let arow = ap.add(p * MR);
-        for (i, a) in acc.iter_mut().enumerate() {
-            let av = _mm256_broadcast_sd(&*arow.add(i));
-            a[0] = _mm256_fmadd_pd(av, b0, a[0]);
-            a[1] = _mm256_fmadd_pd(av, b1, a[1]);
-        }
-    }
-    if accumulate {
-        let va = _mm256_set1_pd(alpha);
-        for (i, a) in acc.iter().enumerate() {
-            let row = dst.add(i * dst_ld);
-            _mm256_storeu_pd(row, _mm256_fmadd_pd(va, a[0], _mm256_loadu_pd(row)));
-            _mm256_storeu_pd(row.add(4), _mm256_fmadd_pd(va, a[1], _mm256_loadu_pd(row.add(4))));
-        }
-    } else {
-        for (i, a) in acc.iter().enumerate() {
-            let row = dst.add(i * dst_ld);
-            _mm256_storeu_pd(row, a[0]);
-            _mm256_storeu_pd(row.add(4), a[1]);
+        if accumulate {
+            let va = _mm256_set1_pd(alpha);
+            for (i, a) in acc.iter().enumerate() {
+                let row = dst.add(i * dst_ld);
+                _mm256_storeu_pd(row, _mm256_fmadd_pd(va, a[0], _mm256_loadu_pd(row)));
+                _mm256_storeu_pd(row.add(4), _mm256_fmadd_pd(va, a[1], _mm256_loadu_pd(row.add(4))));
+            }
+        } else {
+            for (i, a) in acc.iter().enumerate() {
+                let row = dst.add(i * dst_ld);
+                _mm256_storeu_pd(row, a[0]);
+                _mm256_storeu_pd(row.add(4), a[1]);
+            }
         }
     }
 }
@@ -197,14 +205,17 @@ pub(crate) unsafe fn avx2_tile_dyn_f32(
     accumulate: bool,
     prefetch: bool,
 ) {
-    match mr {
-        1 => avx2_tile::<1>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        2 => avx2_tile::<2>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        3 => avx2_tile::<3>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        4 => avx2_tile::<4>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        5 => avx2_tile::<5>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        6 => avx2_tile::<6>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        _ => unreachable!("tile mr {mr} out of range"),
+    // SAFETY: forwarding the caller's contract to the mr instantiation.
+    unsafe {
+        match mr {
+            1 => avx2_tile::<1>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            2 => avx2_tile::<2>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            3 => avx2_tile::<3>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            4 => avx2_tile::<4>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            5 => avx2_tile::<5>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            6 => avx2_tile::<6>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            _ => unreachable!("tile mr {mr} out of range"),
+        }
     }
 }
 
@@ -226,14 +237,17 @@ pub(crate) unsafe fn avx2_tile_dyn_f64(
     accumulate: bool,
     prefetch: bool,
 ) {
-    match mr {
-        1 => avx2_tile_f64::<1>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        2 => avx2_tile_f64::<2>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        3 => avx2_tile_f64::<3>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        4 => avx2_tile_f64::<4>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        5 => avx2_tile_f64::<5>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        6 => avx2_tile_f64::<6>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
-        _ => unreachable!("tile mr {mr} out of range"),
+    // SAFETY: forwarding the caller's contract to the mr instantiation.
+    unsafe {
+        match mr {
+            1 => avx2_tile_f64::<1>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            2 => avx2_tile_f64::<2>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            3 => avx2_tile_f64::<3>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            4 => avx2_tile_f64::<4>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            5 => avx2_tile_f64::<5>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            6 => avx2_tile_f64::<6>(ap, bp, kc, alpha, dst, dst_ld, accumulate, prefetch),
+            _ => unreachable!("tile mr {mr} out of range"),
+        }
     }
 }
 
@@ -256,10 +270,14 @@ pub(crate) unsafe fn tile_fringe_f32(
     h: usize,
     w: usize,
 ) {
-    for i in 0..h {
-        for j in 0..w {
-            let p = dst.add(i * dst_ld + j);
-            *p = alpha.mul_add(*tmp.add(i * tmp_ld + j), *p);
+    // SAFETY: every access is at row i < h, column j < w — exactly the
+    // caller's readable/writable window.
+    unsafe {
+        for i in 0..h {
+            for j in 0..w {
+                let p = dst.add(i * dst_ld + j);
+                *p = alpha.mul_add(*tmp.add(i * tmp_ld + j), *p);
+            }
         }
     }
 }
@@ -279,10 +297,14 @@ pub(crate) unsafe fn tile_fringe_f64(
     h: usize,
     w: usize,
 ) {
-    for i in 0..h {
-        for j in 0..w {
-            let p = dst.add(i * dst_ld + j);
-            *p = alpha.mul_add(*tmp.add(i * tmp_ld + j), *p);
+    // SAFETY: every access is at row i < h, column j < w — exactly the
+    // caller's readable/writable window.
+    unsafe {
+        for i in 0..h {
+            for j in 0..w {
+                let p = dst.add(i * dst_ld + j);
+                *p = alpha.mul_add(*tmp.add(i * tmp_ld + j), *p);
+            }
         }
     }
 }
@@ -302,12 +324,17 @@ unsafe fn scalar_tile_into<T: Element>(
     tmp: &mut TempTile<T>,
 ) {
     let nr = T::TILE_NR;
-    for p in 0..kc {
-        for i in 0..mr {
-            let av = *ap.add(p * mr + i);
-            let row = &mut tmp[i * nr..(i + 1) * nr];
-            for (j, t) in row.iter_mut().enumerate() {
-                *t += av * *bp.add(p * nr + j);
+    // SAFETY: reads stay inside the packed strip (kc * mr) and panel
+    // (kc * nr) per the caller's contract; tmp writes are bounds-checked
+    // slice indexing.
+    unsafe {
+        for p in 0..kc {
+            for i in 0..mr {
+                let av = *ap.add(p * mr + i);
+                let row = &mut tmp[i * nr..(i + 1) * nr];
+                for (j, t) in row.iter_mut().enumerate() {
+                    *t += av * *bp.add(p * nr + j);
+                }
             }
         }
     }
@@ -351,13 +378,15 @@ fn tile_block<T: Element>(
             let i0 = i_base + s * mr;
             let h = ta.strip_height(s);
             let ap = ta.strip_ptr(s);
-            let cptr = c.row_ptr_mut(i0).wrapping_add(j0);
+            // window_ptr verifies the whole h × w writeback window sits
+            // inside C's logical extent (debug/`checked-ptr` builds).
+            let cptr = c.window_ptr(i0, j0, h, w);
             // SAFETY: strips/panels are packed `kc_eff` deep and padded to
-            // full mr/nr lanes; the C tile spans rows i0..i0+h < c.rows()
-            // and cols j0..j0+w < c.cols() (full-tile vector writeback only
-            // runs when h == mr and w == nr, so its NR-wide rows stay
-            // inside the logical width); use_avx2 comes from runtime
-            // feature detection, never faked.
+            // full mr/nr lanes; the C tile spans rows i0..i0+h <= c.rows()
+            // and cols j0..j0+w <= c.cols() (checked by window_ptr above;
+            // full-tile vector writeback only runs when h == mr and
+            // w == nr, so its NR-wide rows stay inside the logical width);
+            // use_avx2 comes from runtime feature detection, never faked.
             unsafe {
                 if use_avx2 {
                     if h == mr && w == nr {

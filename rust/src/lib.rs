@@ -61,6 +61,24 @@
 //! .unwrap();
 //! assert!(c.iter().all(|&x| (x - 2.0).abs() < 1e-6));
 //! ```
+//!
+//! ## Safety & verification
+//!
+//! The kernel tiers are `unsafe` by necessity (raw-pointer hot loops,
+//! vendor intrinsics); everything around them is not. The crate's
+//! verification layer ([`util::ptr`], the `checked-ptr` feature, the
+//! repo lint under `tools/lint`, and the Miri tier in `tests/miri_scalar.rs`)
+//! is documented in the README's "Safety & verification" section.
+
+// Every unsafe operation inside an `unsafe fn` must sit in an explicit
+// `unsafe { }` block with its own justification — the 2024-edition rule,
+// enforced today.
+#![deny(unsafe_op_in_unsafe_fn)]
+// Production code documents every unsafe block with a `// SAFETY:`
+// comment (promoted to an error by CI's `-D warnings`); test code is
+// exempt — its unsafe is exercising checked APIs, not upholding subtle
+// invariants.
+#![cfg_attr(not(test), warn(clippy::undocumented_unsafe_blocks))]
 
 pub mod autotune;
 pub mod bench;

@@ -14,6 +14,11 @@
 //! * [`table`] — aligned ASCII table / CSV rendering for bench reports.
 //! * [`json`] — a minimal JSON writer/parser for machine-readable bench
 //!   output and the persistent autotune cache.
+//! * [`ptr`] — the checked raw-pointer core: length/extent-carrying
+//!   `RawSlice`/`RawMat`/`RawMatMut` wrappers that verify every raw
+//!   access under `debug_assertions`/`checked-ptr` and compile to bare
+//!   pointers in release. The only module (outside the ISA kernels)
+//!   allowed to mint raw-memory accesses — see `cargo run -p lint`.
 //! * [`threadpool`] — a fixed-size worker pool with scoped fork-join
 //!   execution: the coordinator's workers and the process-wide GEMM
 //!   thread budget ([`crate::gemm::plan::GemmContext`]) both run on it.
@@ -22,6 +27,7 @@
 pub mod cli;
 pub mod json;
 pub mod prng;
+pub mod ptr;
 pub mod stats;
 pub mod table;
 pub mod testkit;

@@ -1,0 +1,659 @@
+//! Checked raw-pointer core: the only module allowed to mint raw-memory
+//! accesses for the kernel ladder.
+//!
+//! The paper's speedup story lives in hand-packed buffers and SIMD
+//! kernels that index raw memory at every level of the blocking
+//! hierarchy. Everything above the ISA kernels now routes its raw access
+//! through the three wrappers here — [`RawSlice`], [`RawMat`] and
+//! [`RawMatMut`] — which carry their extent (length, rows/cols, leading
+//! dimension) alongside the pointer:
+//!
+//! * **Sub-span arithmetic is safe.** Offsetting ([`RawSlice::slice`],
+//!   [`RawMatMut::split_rows`], [`RawMatMut::window`], …) validates the
+//!   new extent against the old one and moves the pointer with
+//!   `wrapping_add`, so even a bug that slipped past the checks cannot
+//!   manufacture an out-of-provenance pointer — dereferencing is where
+//!   `unsafe` starts, not address computation.
+//! * **Element access is `unsafe` but self-checking.** [`RawSlice::get`],
+//!   [`RawMatMut::set`] and friends verify the index against the carried
+//!   extent under `debug_assertions` *or* the `checked-ptr` cargo
+//!   feature, and compile to a bare pointer dereference in ordinary
+//!   release builds — zero overhead on the benchmarked paths, loud
+//!   panics (instead of silent UB) everywhere tests run.
+//! * **Slice reconstruction lives here.** `from_raw_parts` and
+//!   `from_raw_parts_mut` appear in this module only; the repo lint
+//!   (`cargo run -p lint`) rejects them — and `.add(` / `get_unchecked` —
+//!   anywhere else outside the ISA-kernel allowlist.
+//!
+//! The split invariants the thread-parallel driver relies on are owned
+//! here too: [`RawMatMut::split_rows`] produces halves whose backing
+//! ranges cannot overlap (the top half's length is clamped to the split
+//! offset), and [`RawMatMut::split_cols`] produces interleaved halves
+//! whose *logical* column ranges are disjoint by construction.
+//!
+//! Run the whole suite with every access checked in release mode via
+//! `cargo test --features checked-ptr`.
+
+/// Assert that holds under `debug_assertions` or the `checked-ptr`
+/// feature and compiles to nothing otherwise — the checked/release switch
+/// every element access in this module runs through.
+macro_rules! ptr_check {
+    ($cond:expr, $($msg:tt)*) => {
+        // `if cfg!` (not `#[cfg]`) so the condition always type-checks —
+        // and is always *used* — in every build; release builds fold the
+        // whole branch away.
+        if cfg!(any(debug_assertions, feature = "checked-ptr")) {
+            assert!($cond, $($msg)*);
+        }
+    };
+}
+
+/// Length-carrying immutable span: a `*const T` that knows how many
+/// elements it may read.
+pub struct RawSlice<T> {
+    ptr: *const T,
+    len: usize,
+}
+
+impl<T> Clone for RawSlice<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for RawSlice<T> {}
+
+impl<T> RawSlice<T> {
+    /// Wrap a slice (always safe: the extent is the slice's own).
+    #[inline(always)]
+    pub fn from_slice(s: &[T]) -> Self {
+        Self { ptr: s.as_ptr(), len: s.len() }
+    }
+
+    /// Wrap raw parts.
+    ///
+    /// # Safety
+    /// `ptr` must be readable for `len` elements for as long as reads go
+    /// through the returned span.
+    #[inline(always)]
+    pub unsafe fn from_raw_parts(ptr: *const T, len: usize) -> Self {
+        Self { ptr, len }
+    }
+
+    /// Elements this span may read.
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no element is readable.
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The underlying pointer (for handing to an ISA kernel whose bounds
+    /// a caller has already validated against [`len`](Self::len)).
+    #[inline(always)]
+    pub fn as_ptr(&self) -> *const T {
+        self.ptr
+    }
+
+    /// Sub-span `[start, start + len)`. Safe: the new extent is validated
+    /// against the old one, and the pointer moves with `wrapping_add`.
+    #[inline(always)]
+    pub fn slice(self, start: usize, len: usize) -> Self {
+        assert!(
+            start <= self.len && len <= self.len - start,
+            "RawSlice::slice [{start}, {start}+{len}) out of {}",
+            self.len
+        );
+        Self { ptr: self.ptr.wrapping_add(start), len }
+    }
+
+    /// Checked read.
+    ///
+    /// # Safety
+    /// `i < len()` (verified under `debug_assertions`/`checked-ptr`) and
+    /// the backing memory must still be live.
+    #[inline(always)]
+    pub unsafe fn get(self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        ptr_check!(i < self.len, "RawSlice read {i} out of {}", self.len);
+        // SAFETY: i < len per the caller contract (and the check above),
+        // and the span was constructed over readable memory.
+        unsafe { *self.ptr.add(i) }
+    }
+}
+
+/// Length-carrying mutable span: a `*mut T` that knows its extent.
+pub struct RawSliceMut<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T> Clone for RawSliceMut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for RawSliceMut<T> {}
+
+impl<T> RawSliceMut<T> {
+    /// Wrap a mutable slice.
+    #[inline(always)]
+    pub fn from_slice(s: &mut [T]) -> Self {
+        Self { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// Elements this span may touch.
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no element is reachable.
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The underlying pointer.
+    #[inline(always)]
+    pub fn as_mut_ptr(&self) -> *mut T {
+        self.ptr
+    }
+
+    /// Sub-span `[start, start + len)` (safe, like [`RawSlice::slice`]).
+    #[inline(always)]
+    pub fn slice(self, start: usize, len: usize) -> Self {
+        assert!(
+            start <= self.len && len <= self.len - start,
+            "RawSliceMut::slice [{start}, {start}+{len}) out of {}",
+            self.len
+        );
+        Self { ptr: self.ptr.wrapping_add(start), len }
+    }
+
+    /// Checked read.
+    ///
+    /// # Safety
+    /// `i < len()` and exclusive access to the element (no concurrent
+    /// writer).
+    #[inline(always)]
+    pub unsafe fn get(self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        ptr_check!(i < self.len, "RawSliceMut read {i} out of {}", self.len);
+        // SAFETY: i < len per the caller contract (and the check above).
+        unsafe { *self.ptr.add(i) }
+    }
+
+    /// Checked write.
+    ///
+    /// # Safety
+    /// `i < len()` and this span must hold exclusive access to element
+    /// `i` for the duration of the write.
+    #[inline(always)]
+    pub unsafe fn set(self, i: usize, v: T) {
+        ptr_check!(i < self.len, "RawSliceMut write {i} out of {}", self.len);
+        // SAFETY: i < len per the caller contract (and the check above).
+        unsafe { *self.ptr.add(i) = v }
+    }
+}
+
+/// Row-major strided immutable matrix handle: pointer + backing length +
+/// `(rows, cols, ld)` extent, with every read checked against all three.
+pub struct RawMat<T> {
+    ptr: *const T,
+    len: usize,
+    rows: usize,
+    cols: usize,
+    ld: usize,
+}
+
+impl<T> Clone for RawMat<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for RawMat<T> {}
+
+impl<T> RawMat<T> {
+    /// Wrap a slice as a `rows × cols` matrix with row stride `ld`.
+    /// Always safe; the extent is validated up front (empty matrices may
+    /// carry any `ld`, matching `MatRef`).
+    #[inline]
+    pub fn from_slice(data: &[T], rows: usize, cols: usize, ld: usize) -> Self {
+        assert!(extent_fits(rows, cols, ld, data.len()), "RawMat {rows}x{cols} (ld {ld}) over {} elements", data.len());
+        Self { ptr: data.as_ptr(), len: data.len(), rows, cols, ld }
+    }
+
+    /// Rows of the logical matrix.
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns of the logical matrix.
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row stride in elements.
+    #[inline(always)]
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+
+    /// Checked element read.
+    ///
+    /// # Safety
+    /// `r < rows() && c < cols()` (verified under
+    /// `debug_assertions`/`checked-ptr`) and the backing memory must
+    /// still be live.
+    #[inline(always)]
+    pub unsafe fn get(self, r: usize, c: usize) -> T
+    where
+        T: Copy,
+    {
+        ptr_check!(r < self.rows && c < self.cols, "RawMat read ({r},{c}) out of {}x{}", self.rows, self.cols);
+        // SAFETY: (r, c) is a logical element per the caller contract
+        // (and the check above), so r*ld + c < len by the construction
+        // invariant.
+        unsafe { *self.ptr.add(r * self.ld + c) }
+    }
+}
+
+/// Row-major strided mutable matrix handle — the raw core `MatMut` wraps.
+///
+/// The handle is `Copy` (it is a capability token, not a borrow); the
+/// exclusivity discipline lives in `MatMut`, which never hands out two
+/// handles over overlapping logical elements.
+pub struct RawMatMut<T> {
+    ptr: *mut T,
+    len: usize,
+    rows: usize,
+    cols: usize,
+    ld: usize,
+}
+
+impl<T> Clone for RawMatMut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for RawMatMut<T> {}
+
+impl<T> RawMatMut<T> {
+    /// Wrap a mutable slice as a `rows × cols` matrix with row stride
+    /// `ld`. Always safe; the extent is validated up front.
+    #[inline]
+    pub fn from_slice(data: &mut [T], rows: usize, cols: usize, ld: usize) -> Self {
+        assert!(extent_fits(rows, cols, ld, data.len()), "RawMatMut {rows}x{cols} (ld {ld}) over {} elements", data.len());
+        Self { ptr: data.as_mut_ptr(), len: data.len(), rows, cols, ld }
+    }
+
+    /// Rows of the logical matrix.
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns of the logical matrix.
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row stride in elements.
+    #[inline(always)]
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+
+    /// Backing-range length in elements (logical elements plus stride
+    /// padding).
+    #[inline(always)]
+    pub fn backing_len(&self) -> usize {
+        self.len
+    }
+
+    /// Checked element read.
+    ///
+    /// # Safety
+    /// `r < rows() && c < cols()`, and no concurrent writer to that
+    /// element.
+    #[inline(always)]
+    pub unsafe fn get(self, r: usize, c: usize) -> T
+    where
+        T: Copy,
+    {
+        ptr_check!(r < self.rows && c < self.cols, "RawMatMut read ({r},{c}) out of {}x{}", self.rows, self.cols);
+        // SAFETY: (r, c) is a logical element per the caller contract
+        // (and the check above), so r*ld + c < len by construction.
+        unsafe { *self.ptr.add(r * self.ld + c) }
+    }
+
+    /// Checked element write.
+    ///
+    /// # Safety
+    /// `r < rows() && c < cols()`, and this handle must hold exclusive
+    /// access to that element for the duration of the write.
+    #[inline(always)]
+    pub unsafe fn set(self, r: usize, c: usize, v: T) {
+        ptr_check!(r < self.rows && c < self.cols, "RawMatMut write ({r},{c}) out of {}x{}", self.rows, self.cols);
+        // SAFETY: (r, c) is a logical element per the caller contract
+        // (and the check above), so r*ld + c < len by construction.
+        unsafe { *self.ptr.add(r * self.ld + c) = v }
+    }
+
+    /// Pointer to the start of row `r` (safe: address arithmetic only,
+    /// checked against the row count).
+    #[inline(always)]
+    pub fn row_ptr(self, r: usize) -> *mut T {
+        ptr_check!(r < self.rows, "RawMatMut row {r} out of {}", self.rows);
+        self.ptr.wrapping_add(r * self.ld)
+    }
+
+    /// Pointer to the top-left corner of the `h × w` window at
+    /// `(r0, c0)`, verifying the whole window sits inside the logical
+    /// matrix — the tile tier's checked writeback anchor.
+    #[inline(always)]
+    pub fn window_ptr(self, r0: usize, c0: usize, h: usize, w: usize) -> *mut T {
+        ptr_check!(
+            r0 + h <= self.rows && c0 + w <= self.cols,
+            "RawMatMut window ({r0}+{h}, {c0}+{w}) out of {}x{}",
+            self.rows,
+            self.cols
+        );
+        self.ptr.wrapping_add(r0 * self.ld + c0)
+    }
+
+    /// Split into disjoint row ranges `[0, r)` and `[r, rows)`. The top
+    /// half's backing length is clamped to the split offset, so the two
+    /// halves' backing ranges can never overlap.
+    pub fn split_rows(self, r: usize) -> (Self, Self) {
+        assert!(r <= self.rows, "split row {r} > rows {}", self.rows);
+        // A tight last row may end before r*ld; clamp so the halves stay
+        // within the original backing range.
+        let off = (r * self.ld).min(self.len);
+        (
+            Self { ptr: self.ptr, len: off, rows: r, cols: self.cols, ld: self.ld },
+            Self {
+                ptr: self.ptr.wrapping_add(off),
+                len: self.len - off,
+                rows: self.rows - r,
+                cols: self.cols,
+                ld: self.ld,
+            },
+        )
+    }
+
+    /// Split into disjoint column ranges `[0, c)` and `[c, cols)`. The
+    /// halves interleave in storage (same rows, same stride) but their
+    /// logical column ranges are disjoint by construction — the reason
+    /// this raw representation exists at all.
+    pub fn split_cols(self, c: usize) -> (Self, Self) {
+        assert!(c <= self.cols, "split col {c} > cols {}", self.cols);
+        let off = c.min(self.len);
+        (
+            Self { ptr: self.ptr, len: self.len, rows: self.rows, cols: c, ld: self.ld },
+            Self {
+                ptr: self.ptr.wrapping_add(off),
+                len: self.len - off,
+                rows: self.rows,
+                cols: self.cols - c,
+                ld: self.ld,
+            },
+        )
+    }
+
+    /// Sub-window of `rows × cols` starting at `(r0, c0)`, same stride.
+    pub fn window(self, r0: usize, c0: usize, rows: usize, cols: usize) -> Self {
+        assert!(
+            r0 + rows <= self.rows && c0 + cols <= self.cols,
+            "window ({r0}+{rows}, {c0}+{cols}) out of {}x{}",
+            self.rows,
+            self.cols
+        );
+        let off = (r0 * self.ld + c0).min(self.len);
+        Self { ptr: self.ptr.wrapping_add(off), len: self.len - off, rows, cols, ld: self.ld }
+    }
+
+    /// Reconstruct row `r`'s logical elements as a mutable slice.
+    ///
+    /// # Safety
+    /// `r < rows()` and this handle must hold exclusive access to row
+    /// `r`'s logical elements while the slice lives; the caller chooses a
+    /// lifetime no longer than that exclusivity.
+    #[inline]
+    pub unsafe fn row_slice_mut<'a>(self, r: usize) -> &'a mut [T] {
+        ptr_check!(r < self.rows, "RawMatMut row {r} out of {}", self.rows);
+        // SAFETY: r < rows, so the row's cols logical elements lie inside
+        // the backing range ((rows-1)*ld + cols <= len by construction);
+        // exclusivity is the caller's contract.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(r * self.ld), self.cols) }
+    }
+
+    /// Reconstruct the whole backing range as an immutable slice.
+    ///
+    /// # Safety
+    /// No sibling handle (e.g. the other half of a
+    /// [`split_cols`](Self::split_cols)) may write the range while the
+    /// slice lives; the caller chooses a suitable lifetime.
+    #[inline]
+    pub unsafe fn flat<'a>(self) -> &'a [T] {
+        // SAFETY: the backing range was a valid slice at construction;
+        // quiescence is the caller's contract.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Reconstruct the whole backing range as a mutable slice (stride
+    /// padding included).
+    ///
+    /// # Safety
+    /// This handle must hold exclusive access to the *entire* backing
+    /// range — not just its logical elements — while the slice lives
+    /// (true for handles over a full matrix, never for a `split_cols`
+    /// half).
+    #[inline]
+    pub unsafe fn flat_mut<'a>(self) -> &'a mut [T] {
+        // SAFETY: the backing range was a valid mutable slice at
+        // construction; whole-range exclusivity is the caller's contract.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+// SAFETY: the handles are plain (pointer, extent) records; they carry no
+// thread affinity, and every dereference is unsafe with its own
+// exclusivity contract. Sending one is sound exactly like sending the
+// raw pointer it wraps alongside its bounds.
+unsafe impl<T: Send> Send for RawMatMut<T> {}
+
+/// Shared extent rule for matrix handles: empty matrices fit anything;
+/// otherwise `ld >= cols` and the last logical element must be in range.
+#[inline]
+fn extent_fits(rows: usize, cols: usize, ld: usize, len: usize) -> bool {
+    if rows == 0 || cols == 0 {
+        return true;
+    }
+    ld >= cols && (rows - 1) * ld + cols <= len
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_slice_round_trips() {
+        let v = [1.0f32, 2.0, 3.0, 4.0];
+        let s = RawSlice::from_slice(&v);
+        assert_eq!(s.len(), 4);
+        assert!(!s.is_empty());
+        // SAFETY: indices < 4 over live stack memory.
+        unsafe {
+            assert_eq!(s.get(0), 1.0);
+            assert_eq!(s.get(3), 4.0);
+        }
+        let t = s.slice(1, 2);
+        assert_eq!(t.len(), 2);
+        // SAFETY: indices < 2 over live stack memory.
+        unsafe {
+            assert_eq!(t.get(0), 2.0);
+            assert_eq!(t.get(1), 3.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn raw_slice_subspan_cannot_grow() {
+        let v = [0.0f32; 4];
+        let s = RawSlice::from_slice(&v);
+        let _ = s.slice(2, 3); // 2 + 3 > 4
+    }
+
+    #[test]
+    fn raw_slice_mut_writes() {
+        let mut v = [0.0f32; 3];
+        let s = RawSliceMut::from_slice(&mut v);
+        // SAFETY: index < 3, and `s` is the only live accessor.
+        unsafe {
+            s.set(1, 7.0);
+            assert_eq!(s.get(1), 7.0);
+        }
+        assert_eq!(v[1], 7.0);
+    }
+
+    #[test]
+    fn raw_mat_reads_strided() {
+        let v: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let m = RawMat::from_slice(&v, 3, 2, 4);
+        assert_eq!((m.rows(), m.cols(), m.ld()), (3, 2, 4));
+        // SAFETY: logical indices within 3x2.
+        unsafe {
+            assert_eq!(m.get(0, 0), 0.0);
+            assert_eq!(m.get(2, 1), 9.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn raw_mat_rejects_short_backing() {
+        let v = [0.0f32; 5];
+        let _ = RawMat::from_slice(&v, 3, 2, 4); // needs (3-1)*4+2 = 10
+    }
+
+    #[test]
+    fn raw_mat_mut_window_and_rows() {
+        let mut v: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let m = RawMatMut::from_slice(&mut v, 4, 5, 5);
+        let w = m.window(1, 2, 2, 3);
+        assert_eq!((w.rows(), w.cols()), (2, 3));
+        // SAFETY: (0,0) and (1,2) are logical elements of the window, and
+        // `m`/`w` are the only accessors (w writes, m reads after).
+        unsafe {
+            assert_eq!(w.get(0, 0), 7.0);
+            w.set(1, 2, -1.0);
+            assert_eq!(m.get(2, 4), -1.0);
+        }
+        assert_eq!(v[14], -1.0);
+    }
+
+    #[test]
+    fn split_rows_backing_ranges_disjoint() {
+        let mut v = vec![0.0f32; 10]; // 2 rows x 4 cols, ld 5
+        let m = RawMatMut::from_slice(&mut v, 2, 4, 5);
+        let (top, bottom) = m.split_rows(1);
+        assert_eq!(top.rows(), 1);
+        assert_eq!(bottom.rows(), 1);
+        // The top half's backing range ends where the bottom's begins.
+        assert_eq!(top.backing_len(), 5);
+        assert_eq!(bottom.backing_len(), 5);
+        // SAFETY: each write targets a logical element of its own half,
+        // and the halves are logically disjoint.
+        unsafe {
+            top.set(0, 3, 1.0);
+            bottom.set(0, 0, 2.0);
+        }
+        assert_eq!(v[3], 1.0);
+        assert_eq!(v[5], 2.0);
+    }
+
+    #[test]
+    fn split_rows_tight_last_row() {
+        // 2 rows x 3 cols, ld 4, tight backing: (2-1)*4 + 3 = 7 elements.
+        let mut v = vec![0.0f32; 7];
+        let m = RawMatMut::from_slice(&mut v, 2, 3, 4);
+        let (top, bottom) = m.split_rows(2);
+        assert_eq!(top.rows(), 2);
+        assert_eq!(bottom.rows(), 0);
+        assert_eq!(bottom.backing_len(), 0);
+    }
+
+    #[test]
+    fn split_cols_logical_ranges_disjoint() {
+        let mut v: Vec<f32> = vec![0.0; 12]; // 3 rows x 4 cols, ld 4
+        let m = RawMatMut::from_slice(&mut v, 3, 4, 4);
+        let (left, right) = m.split_cols(1);
+        assert_eq!(left.cols(), 1);
+        assert_eq!(right.cols(), 3);
+        // SAFETY: column ranges are disjoint, so no write aliases.
+        unsafe {
+            left.set(2, 0, 5.0);
+            right.set(2, 2, 6.0);
+        }
+        assert_eq!(v[8], 5.0);
+        assert_eq!(v[11], 6.0);
+    }
+
+    #[test]
+    fn row_and_flat_reconstruction() {
+        let mut v: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let m = RawMatMut::from_slice(&mut v, 2, 3, 5);
+        // SAFETY: m is the only accessor of the backing range.
+        let row1 = unsafe { m.row_slice_mut(1) };
+        assert_eq!(row1, &[5.0, 6.0, 7.0]);
+        row1[0] = -5.0;
+        // SAFETY: the row borrow above has ended; m is again exclusive.
+        let all = unsafe { m.flat() };
+        assert_eq!(all[5], -5.0);
+        assert_eq!(all.len(), 10);
+    }
+
+    #[cfg(any(debug_assertions, feature = "checked-ptr"))]
+    mod checked {
+        use super::super::*;
+
+        #[test]
+        #[should_panic]
+        fn out_of_bounds_read_is_caught() {
+            let v = [0.0f32; 3];
+            let s = RawSlice::from_slice(&v);
+            // SAFETY-TEST: deliberately violates the contract; the
+            // checked mode must catch it before the dereference.
+            let _ = unsafe { s.get(3) };
+        }
+
+        #[test]
+        #[should_panic]
+        fn out_of_bounds_write_is_caught() {
+            let mut v = [0.0f32; 4];
+            let m = RawMatMut::from_slice(&mut v, 2, 2, 2);
+            // SAFETY-TEST: row 2 is out of bounds; checked mode panics
+            // before the dereference.
+            unsafe { m.set(2, 0, 1.0) };
+        }
+
+        #[test]
+        #[should_panic]
+        fn window_ptr_rejects_oversized_tile() {
+            let mut v = [0.0f32; 4];
+            let m = RawMatMut::from_slice(&mut v, 2, 2, 2);
+            let _ = m.window_ptr(1, 0, 2, 2); // 1 + 2 > 2 rows
+        }
+    }
+}

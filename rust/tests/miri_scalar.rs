@@ -1,0 +1,249 @@
+//! The Miri / undefined-behaviour check tier.
+//!
+//! `cargo +nightly miri test --test miri_scalar` interprets this file
+//! under Miri, where CPU-feature detection reports no vector ISA (see
+//! `gemm::dispatch::detect_sse`), so every GEMM call routes through the
+//! scalar tiers — naive, blocked, packing, epilogues, the planner and
+//! the thread pool — and Miri checks each raw-pointer access, borrow
+//! and thread interaction for UB. The same file runs as a plain
+//! integration test on every `cargo test`, so the cases themselves are
+//! continuously exercised even where no nightly toolchain exists.
+//!
+//! Shapes are deliberately tiny: Miri executes ~100x slower than native.
+
+use emmerald::blas::{GemmContext, Matrix, Transpose};
+use emmerald::gemm::{
+    Activation, DispatchConfig, Epilogue, GemmDispatch, KernelId,
+};
+use emmerald::util::testkit::hermetic_tune_cache;
+use emmerald::util::threadpool::ThreadPool;
+
+/// Independent triple-loop reference (not the crate's naive kernel, so
+/// the oracle itself is under test too).
+fn reference(
+    transa: Transpose,
+    transb: Transpose,
+    alpha: f32,
+    a: &Matrix,
+    b: &Matrix,
+    beta: f32,
+    c: &Matrix,
+) -> Matrix {
+    let (m, n) = (c.rows(), c.cols());
+    let k = if transa == Transpose::No { a.cols() } else { a.rows() };
+    let at = |r: usize, p: usize| {
+        if transa == Transpose::No {
+            a.get(r, p)
+        } else {
+            a.get(p, r)
+        }
+    };
+    let bt = |p: usize, col: usize| {
+        if transb == Transpose::No {
+            b.get(p, col)
+        } else {
+            b.get(col, p)
+        }
+    };
+    Matrix::from_fn(m, n, |r, col| {
+        let mut acc = 0.0f32;
+        for p in 0..k {
+            acc += at(r, p) * bt(p, col);
+        }
+        alpha * acc + beta * c.get(r, col)
+    })
+}
+
+/// Fringe-shape grid: dimensions straddling 1, the register-tile edges
+/// (MR = 6, NR = 16) and the packing panel width, all four transpose
+/// layouts, strided storage. Small enough for Miri, sharp enough to hit
+/// every packing fringe.
+const DIMS: [usize; 4] = [1, 5, 7, 17];
+
+fn run_scalar_grid(id: KernelId) {
+    hermetic_tune_cache();
+    let d = GemmDispatch::new(DispatchConfig { threads: 1, ..DispatchConfig::default() });
+    let mut seed = 0x31A5u64;
+    for &m in &DIMS {
+        for &n in &DIMS {
+            let k = (m + n) % 9 + 1; // vary k without cubing the grid
+            for transa in [Transpose::No, Transpose::Yes] {
+                for transb in [Transpose::No, Transpose::Yes] {
+                    seed += 1;
+                    let (alpha, beta) = if seed % 2 == 0 { (1.0, 0.0) } else { (0.5, 2.0) };
+                    let (ar, ac) = if transa == Transpose::No { (m, k) } else { (k, m) };
+                    let (br, bc) = if transb == Transpose::No { (k, n) } else { (n, k) };
+                    let a = Matrix::random_strided(ar, ac, ac + 3, seed);
+                    let b = Matrix::random_strided(br, bc, bc + 1, seed ^ 0xAB);
+                    let mut c = Matrix::random_strided(m, n, n + 2, seed ^ 0xCD);
+                    let want = reference(transa, transb, alpha, &a, &b, beta, &c);
+                    d.gemm_with(id, transa, transb, alpha, a.view(), b.view(), beta, &mut c.view_mut());
+                    for r in 0..m {
+                        for col in 0..n {
+                            let (got, exp) = (c.get(r, col), want.get(r, col));
+                            assert!(
+                                (got - exp).abs() <= 1e-4 * (1.0 + exp.abs()),
+                                "{id:?} m={m} n={n} k={k} ta={transa:?} tb={transb:?} ({r},{col}): {got} vs {exp}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn naive_kernel_is_ub_free_on_fringe_grid() {
+    run_scalar_grid(KernelId::Naive);
+}
+
+#[test]
+fn blocked_kernel_is_ub_free_on_fringe_grid() {
+    run_scalar_grid(KernelId::Blocked);
+}
+
+#[test]
+fn auto_dispatch_routes_scalar_under_miri() {
+    hermetic_tune_cache();
+    // Under Miri the feature probes report no vector ISA, so even the
+    // vector registry entries must degrade to the scalar tiers and the
+    // whole dispatch ladder stays interpretable.
+    if cfg!(miri) {
+        assert!(!KernelId::Simd.available(), "Miri must hide SSE");
+        assert!(!KernelId::Avx2.available(), "Miri must hide AVX2");
+    }
+    let d = GemmDispatch::new(DispatchConfig { threads: 1, ..DispatchConfig::default() });
+    let a = Matrix::random_strided(7, 5, 8, 0xA1);
+    let b = Matrix::random_strided(5, 6, 7, 0xB2);
+    let mut c = Matrix::random_strided(7, 6, 8, 0xC3);
+    let want = reference(Transpose::No, Transpose::No, 1.5, &a, &b, -0.5, &c);
+    for id in [KernelId::Simd, KernelId::Avx2, KernelId::Avx2Tile, KernelId::Parallel] {
+        let mut c_got = c.clone();
+        let ran =
+            d.gemm_with(id, Transpose::No, Transpose::No, 1.5, a.view(), b.view(), -0.5, &mut c_got.view_mut());
+        if cfg!(miri) {
+            assert!(
+                matches!(ran, KernelId::Naive | KernelId::Blocked),
+                "{id:?} ran vector tier {ran:?} under Miri"
+            );
+        }
+        for r in 0..7 {
+            for col in 0..6 {
+                let (got, exp) = (c_got.get(r, col), want.get(r, col));
+                assert!(
+                    (got - exp).abs() <= 1e-4 * (1.0 + exp.abs()),
+                    "forced {id:?} ({r},{col}): {got} vs {exp}"
+                );
+            }
+        }
+    }
+    let _ = d.gemm(Transpose::No, Transpose::No, 1.5, a.view(), b.view(), -0.5, &mut c.view_mut());
+}
+
+#[test]
+fn fused_epilogue_matches_post_pass_on_scalar_tier() {
+    hermetic_tune_cache();
+    // Bitwise contract on the scalar tiers: a planned GEMM with a fused
+    // epilogue produces exactly the bits of the plain plan plus a
+    // separate apply pass. (The scalar tiers apply epilogues as a
+    // post-pass internally, so this doubles as a Miri sweep over the
+    // planner, the epilogue algebra and the strided writeback.)
+    let ctx = GemmContext::new(DispatchConfig { threads: 1, ..DispatchConfig::default() });
+    let mut seed = 0x5EEDu64;
+    for &(m, n, k) in &[(1usize, 5usize, 3usize), (6, 7, 4), (17, 5, 2)] {
+        for case in 0..3usize {
+            seed += 1;
+            let bias_row: Vec<f32> = (0..n).map(|i| (i as f32 - 1.0) / 3.0).collect();
+            let bias_col: Vec<f32> = (0..m).map(|i| (i as f32) / 5.0 - 0.5).collect();
+            let ep = match case {
+                0 => Epilogue::new().bias_row(bias_row).activation(Activation::Relu),
+                1 => Epilogue::new().bias_col(bias_col).clamp(-0.5, 0.5),
+                _ => Epilogue::new().activation(Activation::Gelu),
+            };
+            let a = Matrix::random_strided(m, k, k + 2, seed);
+            let b = Matrix::random_strided(k, n, n + 1, seed ^ 0x77);
+            let mut c_got = Matrix::random_strided(m, n, n + 2, seed ^ 0x99);
+            let mut c_ref = c_got.clone();
+
+            let fused = ctx
+                .gemm()
+                .alpha(0.75)
+                .beta(0.25)
+                .lda(a.ld())
+                .ldb(b.ld())
+                .ldc(c_got.ld())
+                .epilogue(ep.clone())
+                .plan(m, n, k)
+                .unwrap();
+            fused.run(a.data(), b.data(), c_got.data_mut()).unwrap();
+
+            let plain = ctx
+                .gemm()
+                .alpha(0.75)
+                .beta(0.25)
+                .lda(a.ld())
+                .ldb(b.ld())
+                .ldc(c_ref.ld())
+                .plan(m, n, k)
+                .unwrap();
+            plain.run(a.data(), b.data(), c_ref.data_mut()).unwrap();
+            ep.apply(&mut c_ref.view_mut(), 0, 0);
+
+            assert_eq!(
+                c_got.data(),
+                c_ref.data(),
+                "fused != post-pass bits (m={m} n={n} k={k} case={case})"
+            );
+        }
+    }
+}
+
+#[test]
+fn threadpool_contains_and_rethrows_job_panics() {
+    hermetic_tune_cache();
+    // run_borrowed is the unsafe heart of the parallel tier (it
+    // transmutes borrowed closures to 'static for the worker queue);
+    // Miri checks that the borrow really does end before the call
+    // returns, including on the panic path.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let pool = ThreadPool::new(2);
+    let completed = AtomicUsize::new(0);
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+        Box::new(|| {
+            completed.fetch_add(1, Ordering::SeqCst);
+        }),
+        Box::new(|| panic!("seeded job panic")),
+        Box::new(|| {
+            completed.fetch_add(1, Ordering::SeqCst);
+        }),
+        Box::new(|| {
+            completed.fetch_add(1, Ordering::SeqCst);
+        }),
+    ];
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run_borrowed(jobs);
+    }));
+    let payload = caught.expect_err("job panic must re-raise on the caller");
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+        .unwrap_or("<non-string payload>");
+    assert!(msg.contains("seeded job panic"), "unexpected payload: {msg}");
+    // The group ran to completion before the re-raise: every
+    // non-panicking job finished (the panic was contained to its job).
+    assert_eq!(completed.load(Ordering::SeqCst), 3);
+
+    // And the pool is still usable afterwards.
+    let after = AtomicUsize::new(0);
+    pool.run_borrowed(vec![
+        Box::new(|| {
+            after.fetch_add(1, Ordering::SeqCst);
+        }),
+        Box::new(|| {
+            after.fetch_add(1, Ordering::SeqCst);
+        }),
+    ]);
+    assert_eq!(after.load(Ordering::SeqCst), 2);
+}

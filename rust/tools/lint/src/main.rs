@@ -1,0 +1,513 @@
+//! Repo-local static-analysis pass over `rust/src`: the unsafe-code
+//! policy checker (`cargo run -p lint`).
+//!
+//! The crate's safety story (README: "Safety & verification") confines
+//! raw-pointer work to a small set of modules and requires every escape
+//! hatch to be justified in place. `cargo`/`clippy` enforce the
+//! language-level half (`unsafe_op_in_unsafe_fn`,
+//! `undocumented_unsafe_blocks`); this binary enforces the repo-level
+//! half, which no stock lint expresses:
+//!
+//! 1. **Every `unsafe` block carries a `// SAFETY:` comment** within the
+//!    few lines above it (production code only — `#[cfg(test)] mod`
+//!    tails are exempt: their unsafe exercises checked APIs).
+//! 2. **Raw-pointer idioms stay in the allowlist.** `from_raw_parts`,
+//!    `.add(` and `get_unchecked` may appear only in `util/ptr.rs` (the
+//!    checked raw-handle core) and the ISA kernel modules
+//!    (`gemm/microkernel.rs`, `gemm/tile.rs`, `blas/level1.rs`).
+//!    Everything else goes through `util::ptr` handles or safe slices.
+//!    (`wrapping_add` is fine anywhere: it never asserts in-bounds.)
+//! 3. **No `static mut`**, anywhere, tests included.
+//! 4. **Declared-safe modules contain no `unsafe` at all**: the API
+//!    surface (`blas/api.rs`), the planners and dispatch
+//!    (`gemm/plan.rs`, `gemm/dispatch.rs`), the epilogue algebra
+//!    (`gemm/epilogue.rs`), and the application layers (`nn/`,
+//!    `coordinator/`).
+//!
+//! Matching runs on comment- and string-stripped source so prose like
+//! "the unsafe kernels" never trips a rule. `--self-test` seeds one
+//! violation of each rule through the checker and fails unless every one
+//! is caught — run it first in CI so a silently broken checker cannot
+//! green-light the tree.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Files (relative to `src/`, `/`-separated) allowed to use raw-pointer
+/// idioms: the checked core plus the ISA kernel modules it backstops.
+const RAW_ALLOWLIST: &[&str] =
+    &["util/ptr.rs", "gemm/microkernel.rs", "gemm/tile.rs", "blas/level1.rs"];
+
+/// Modules that must stay entirely safe. A directory entry (trailing
+/// `/`) covers every file under it.
+const DECLARED_SAFE: &[&str] = &[
+    "blas/api.rs",
+    "gemm/plan.rs",
+    "gemm/dispatch.rs",
+    "gemm/epilogue.rs",
+    "nn/",
+    "coordinator/",
+];
+
+/// How many lines above an `unsafe` block may hold its SAFETY comment
+/// (covers a multi-line statement between comment and block).
+const SAFETY_LOOKBACK: usize = 8;
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--self-test") {
+        return self_test();
+    }
+    let src_root = match args.first() {
+        Some(p) => PathBuf::from(p),
+        None => Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src"),
+    };
+    let src_root = match src_root.canonicalize() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("lint: cannot resolve source root {}: {e}", src_root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files);
+    files.sort();
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("lint: cannot read {}: {e}", path.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        violations.extend(check_file(&rel, &text));
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    if violations.is_empty() {
+        println!("lint: {} files clean", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("lint: {} violation(s) in {} files", violations.len(), files.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Run every rule against one file's text. `rel` is the path relative to
+/// the source root, `/`-separated.
+fn check_file(rel: &str, text: &str) -> Vec<Violation> {
+    let raw_lines: Vec<&str> = text.lines().collect();
+    let code_lines = strip_comments_and_strings(text);
+    debug_assert_eq!(raw_lines.len(), code_lines.len());
+    let test_tail = test_tail_start(&raw_lines);
+    let in_allowlist = RAW_ALLOWLIST.contains(&rel);
+    let declared_safe = DECLARED_SAFE
+        .iter()
+        .any(|m| if m.ends_with('/') { rel.starts_with(m) } else { rel == *m });
+
+    let mut out = Vec::new();
+    for (i, code) in code_lines.iter().enumerate() {
+        let lineno = i + 1;
+        let in_tests = i >= test_tail;
+
+        // Rule 3: no mutable global state, tests included.
+        if code.contains("static mut") {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "static-mut",
+                message: "`static mut` is banned; use atomics, locks or OnceLock".into(),
+            });
+        }
+        if in_tests {
+            continue;
+        }
+
+        // Rule 4: declared-safe modules carry no unsafe of any kind.
+        if declared_safe && contains_word(code, "unsafe") {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "declared-safe",
+                message: format!(
+                    "`unsafe` in declared-safe module {rel}; route through util::ptr \
+                     handles or the safe kernel-call wrappers"
+                ),
+            });
+        }
+
+        // Rule 2: raw-pointer idioms outside the allowlist.
+        if !in_allowlist {
+            for idiom in ["from_raw_parts", ".add(", "get_unchecked"] {
+                if code.contains(idiom) {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: lineno,
+                        rule: "raw-idiom",
+                        message: format!(
+                            "`{idiom}` outside the raw-pointer allowlist; use util::ptr \
+                             handles or safe slicing"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // Rule 1: every unsafe block is justified in place.
+        if find_unsafe_block(code).is_some() {
+            let from = i.saturating_sub(SAFETY_LOOKBACK);
+            let documented = raw_lines[from..=i].iter().any(|l| l.contains("SAFETY:"));
+            if !documented {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: "undocumented-unsafe",
+                    message: format!(
+                        "unsafe block without a `// SAFETY:` comment within \
+                         {SAFETY_LOOKBACK} lines above"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Index of the first line of the file's `#[cfg(test)] mod` tail (module
+/// convention: test modules close the file), or `lines.len()` if none.
+fn test_tail_start(lines: &[&str]) -> usize {
+    for (i, line) in lines.iter().enumerate() {
+        if line.contains("#[cfg(test)]") {
+            // The attribute must introduce a module (not a helper fn).
+            for follow in lines.iter().skip(i + 1).take(3) {
+                let t = follow.trim_start();
+                if t.starts_with("mod ") || t.starts_with("pub mod ") {
+                    return i;
+                }
+                if !t.is_empty() && !t.starts_with("#[") && !t.starts_with("//") {
+                    break;
+                }
+            }
+        }
+    }
+    lines.len()
+}
+
+/// Column of an `unsafe` keyword introducing a *block* (`unsafe {`), or
+/// `None`. `unsafe fn` / `unsafe impl` / `unsafe trait` declarations are
+/// rule-1-exempt: their obligations live in `# Safety` docs, and their
+/// bodies' blocks are checked individually (`unsafe_op_in_unsafe_fn`).
+fn find_unsafe_block(code: &str) -> Option<usize> {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find("unsafe") {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code.as_bytes()[at - 1].is_ascii_alphanumeric() && code.as_bytes()[at - 1] != b'_';
+        let rest = &code[at + "unsafe".len()..];
+        if before_ok && rest.trim_start().starts_with('{') {
+            return Some(at);
+        }
+        start = at + "unsafe".len();
+    }
+    None
+}
+
+/// Does `code` contain `word` delimited by non-identifier characters?
+fn contains_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let end = at + word.len();
+        let left = at == 0 || !bytes[at - 1].is_ascii_alphanumeric() && bytes[at - 1] != b'_';
+        let right =
+            end == bytes.len() || !bytes[end].is_ascii_alphanumeric() && bytes[end] != b'_';
+        if left && right {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+/// Replace comments and string/char-literal contents with spaces,
+/// preserving the line structure, so rules never match prose. Handles
+/// nested block comments, escapes, and `r#"…"#` raw strings; a char
+/// literal is distinguished from a lifetime by its closing quote.
+fn strip_comments_and_strings(text: &str) -> Vec<String> {
+    #[derive(PartialEq, Clone, Copy)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(usize),
+        Str,
+        RawStr(usize),
+        Char,
+    }
+    let mut st = St::Code;
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let chars: Vec<char> = text.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            out.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => match c {
+                '/' if chars.get(i + 1) == Some(&'/') => {
+                    st = St::LineComment;
+                    cur.push(' ');
+                    i += 1;
+                }
+                '/' if chars.get(i + 1) == Some(&'*') => {
+                    st = St::BlockComment(1);
+                    cur.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                '"' => {
+                    st = St::Str;
+                    cur.push('"');
+                }
+                'r' if matches!(chars.get(i + 1), Some('"') | Some('#')) => {
+                    // Possible raw string: r"…" or r#"…"#.
+                    let mut hashes = 0;
+                    let mut j = i + 1;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        st = St::RawStr(hashes);
+                        for _ in i..=j {
+                            cur.push(' ');
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                    cur.push(c);
+                }
+                '\'' => {
+                    // Char literal ('x', '\n', '\u{…}') vs lifetime ('a).
+                    let is_char = match chars.get(i + 1) {
+                        Some('\\') => true,
+                        Some(_) => chars.get(i + 2) == Some(&'\''),
+                        None => false,
+                    };
+                    if is_char {
+                        st = St::Char;
+                    }
+                    cur.push('\'');
+                }
+                _ => cur.push(c),
+            },
+            St::LineComment => cur.push(' '),
+            St::BlockComment(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if depth == 1 { St::Code } else { St::BlockComment(depth - 1) };
+                    cur.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(depth + 1);
+                    cur.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                cur.push(' ');
+            }
+            St::Str => match c {
+                '\\' => {
+                    // Skip the escaped character — unless it is a line
+                    // continuation, whose newline must keep its line.
+                    cur.push(' ');
+                    i += 1;
+                    if chars.get(i).is_some_and(|&e| e != '\n') {
+                        cur.push(' ');
+                        i += 1;
+                    }
+                    continue;
+                }
+                '"' => {
+                    st = St::Code;
+                    cur.push('"');
+                }
+                _ => cur.push(' '),
+            },
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let closed = (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'));
+                    if closed {
+                        st = St::Code;
+                        for _ in 0..=hashes {
+                            cur.push(' ');
+                        }
+                        i += 1 + hashes;
+                        continue;
+                    }
+                }
+                cur.push(' ');
+            }
+            St::Char => match c {
+                '\\' => {
+                    cur.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                '\'' => {
+                    st = St::Code;
+                    cur.push('\'');
+                }
+                _ => cur.push(' '),
+            },
+        }
+        i += 1;
+    }
+    if !cur.is_empty() || st == St::LineComment {
+        out.push(cur);
+    }
+    out
+}
+
+/// Seed one violation of every rule through the checker and fail unless
+/// each is caught (and a clean snippet stays clean). CI runs this before
+/// the tree pass so a broken checker fails loudly instead of passing
+/// everything.
+fn self_test() -> ExitCode {
+    let cases: &[(&str, &str, &str)] = &[
+        (
+            "undocumented-unsafe",
+            "gemm/blocked.rs",
+            "fn f(p: *const f32) -> f32 {\n    unsafe { *p }\n}\n",
+        ),
+        (
+            "raw-idiom",
+            "gemm/simd.rs",
+            "// SAFETY: seeded violation.\nfn f(p: *const f32) -> f32 {\n    unsafe { *p.add(1) }\n}\n",
+        ),
+        (
+            "static-mut",
+            "util/scratch.rs",
+            "static mut COUNTER: usize = 0;\n",
+        ),
+        (
+            "declared-safe",
+            "gemm/plan.rs",
+            "// SAFETY: seeded violation.\nfn f(p: *const f32) -> f32 {\n    unsafe { *p }\n}\n",
+        ),
+        (
+            "declared-safe",
+            "nn/train.rs",
+            "pub unsafe fn f() {}\n",
+        ),
+    ];
+    let mut failed = false;
+    for (rule, rel, text) in cases {
+        let got = check_file(rel, text);
+        if !got.iter().any(|v| v.rule == *rule) {
+            eprintln!("self-test: seeded `{rule}` violation in {rel} was NOT caught");
+            failed = true;
+        }
+    }
+    // A compliant snippet must stay clean: documented unsafe, raw idiom
+    // inside the allowlist, prose mentioning unsafe in a comment, and a
+    // test-tail unsafe without SAFETY.
+    let clean_cases: &[(&str, &str)] = &[
+        (
+            "gemm/blocked.rs",
+            "// the unsafe kernels are documented\nfn f(p: *const f32) -> f32 {\n    \
+             // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n\
+             #[cfg(test)]\nmod tests {\n    fn g(p: *const f32) -> f32 {\n        \
+             unsafe { *p }\n    }\n}\n",
+        ),
+        ("gemm/microkernel.rs", "// SAFETY: allowlisted module.\nfn f(p: *const f32) -> f32 {\n    unsafe { *p.add(1) }\n}\n"),
+        ("gemm/pack.rs", "fn f(x: usize) -> usize {\n    x.wrapping_add(1)\n}\n"),
+        ("gemm/plan.rs", "// unsafe is banned here, and this comment is fine.\nfn f() {}\n"),
+    ];
+    for (rel, text) in clean_cases {
+        let got = check_file(rel, text);
+        if !got.is_empty() {
+            for v in &got {
+                eprintln!("self-test: clean snippet in {rel} was flagged: {v}");
+            }
+            failed = true;
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        println!("lint: self-test passed ({} seeded violations caught)", cases.len());
+        ExitCode::SUCCESS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripping_preserves_line_count() {
+        let text = "a\n/* b\nc */\nd \"e\nf\"\n";
+        let lines = strip_comments_and_strings(text);
+        assert_eq!(lines.len(), text.lines().count());
+    }
+
+    #[test]
+    fn wrapping_add_is_not_a_raw_idiom() {
+        assert!(check_file("gemm/simd.rs", "fn f(x: usize) -> usize { x.wrapping_add(1) }\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_declaration_is_not_a_block() {
+        assert_eq!(find_unsafe_block("pub unsafe fn f() "), None);
+        assert!(find_unsafe_block("let x = unsafe { *p };").is_some());
+    }
+
+    #[test]
+    fn prose_does_not_trip_declared_safe() {
+        let text = "// the unsafe kernels live elsewhere\nfn f() {}\n";
+        assert!(check_file("gemm/dispatch.rs", text).is_empty());
+    }
+}
