@@ -61,6 +61,12 @@ cargo bench --bench tile_vs_dot
 echo "== cargo bench --bench dgemm_tile_vs_naive (f64 tile >= 2x naive guard) =="
 cargo bench --bench dgemm_tile_vs_naive
 
+# Quantized-tier guard: the int8 maddubs tile must stay >= 2x the f32
+# tile at 512^3 — catches the u8xi8->i32 path regressing to its scalar
+# fallback (skip-passes without AVX2).
+echo "== cargo bench --bench qgemm_vs_sgemm (int8 tile >= 2x f32 tile guard) =="
+cargo bench --bench qgemm_vs_sgemm
+
 # Fused-epilogue guard: bias+activation folded into the GEMM writeback must
 # not lose to the GEMM-then-separate-pass route at MLP layer shapes, and the
 # fused-im2col conv path must peak-allocate less than materialised im2col

@@ -1,0 +1,78 @@
+//! CI guard for the quantized kernel tier: the int8 `maddubs` tile must
+//! beat the f32 tile by a wide margin at 512³, or the `u8 × i8 → i32`
+//! path has regressed to the scalar fallback (or stopped routing to the
+//! AVX2 driver at all).
+//!
+//! The bar is deliberately conservative (≥ 2× the f32 tile — the
+//! instruction budget says ~4×: `vpmaddubsw` + `vpmaddd` retire four
+//! int8 MACs per lane-pair where the f32 tile's FMA does one) so the
+//! guard is about wiring, not machine-to-machine variance. Hosts
+//! without AVX2 skip-pass — both sides would run scalar and the ratio
+//! means nothing.
+//!
+//! Exit code 1 on failure so `ci.sh` can gate on it.
+
+use emmerald::bench::{gemm_flops, Bencher, FlushMode, Report};
+use emmerald::blas::{Matrix, Transpose};
+use emmerald::gemm::{quant, tile, ElementId, KernelId, TileParams};
+
+fn main() {
+    if !KernelId::Avx2Tile.available_for(ElementId::F32) {
+        println!("SKIP-PASS: no AVX2+FMA — the int8 maddubs tile is unavailable on this host");
+        return;
+    }
+    let n: usize = 512;
+
+    // Deterministic operands. The i8 fill stays in [-127, 127] so the
+    // packed handle keeps the vpsignb fast path (as quantized weights
+    // do: the nn quantizer clamps to ±127).
+    let a_q = Matrix::from_fn(n, n, |r, c| (r * 31 + c * 7) as u8);
+    let b_q = Matrix::from_fn(n, n, |r, c| (((r * 13 + c * 11) % 255) as i32 - 127) as i8);
+    let a_f = Matrix::<f32>::random(n, n, 1, -1.0, 1.0);
+    let b_f = Matrix::<f32>::random(n, n, 2, -1.0, 1.0);
+    let mut c_q = Matrix::<i32>::zeros(n, n);
+    let mut c_f = Matrix::<f32>::zeros(n, n);
+    let params = TileParams::avx2_6x16();
+
+    // Correctness before speed: the driver must match the widening
+    // oracle bitwise (checked at a smaller size — the oracle is O(n³)
+    // scalar and 512³ of it would dominate CI time).
+    let s = 96;
+    let sa = a_q.view().block(0, 0, s, s);
+    let sb = b_q.view().block(0, 0, s, s);
+    let mut got = Matrix::<i32>::zeros(s, s);
+    let mut want = Matrix::<i32>::zeros(s, s);
+    quant::qgemm(Transpose::No, Transpose::No, sa, sb, &mut got.view_mut(), false);
+    quant::qgemm_reference(Transpose::No, Transpose::No, sa, sb, &mut want.view_mut(), false);
+    assert_eq!(got.data(), want.data(), "qgemm disagrees with the widening oracle");
+
+    let mut report = Report::new(
+        "QGEMM — int8 maddubs tile vs f32 tile at 512^3 (MFlop/s; 1 MAC = 2 ops)",
+        &["size", "kernel"],
+    );
+
+    let mut bench = Bencher::new(1, 3).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+    let r_f32 = bench.run("tile-f32", gemm_flops(n, n, n), || {
+        tile::gemm(&params, Transpose::No, Transpose::No, 1.0, a_f.view(), b_f.view(), 0.0, &mut c_f.view_mut());
+    });
+    report.add(&[n.to_string(), "tile-f32".into()], r_f32.clone());
+
+    let mut bench = Bencher::new(1, 3).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+    let r_q = bench.run("qgemm-u8i8", gemm_flops(n, n, n), || {
+        quant::qgemm(Transpose::No, Transpose::No, a_q.view(), b_q.view(), &mut c_q.view_mut(), false);
+    });
+    report.add(&[n.to_string(), "qgemm-u8i8".into()], r_q.clone());
+    report.emit("qgemm_vs_sgemm");
+
+    let speedup = r_q.mflops() / r_f32.mflops();
+    println!(
+        "int8 tile {:.1} Mop/s vs f32 tile {:.1} MFlop/s — {speedup:.2}x",
+        r_q.mflops(),
+        r_f32.mflops()
+    );
+    if speedup < 2.0 {
+        println!("FAIL: int8 tile below 2x the f32 tile — the quantized vector path has regressed");
+        std::process::exit(1);
+    }
+    println!("PASS: int8 tile ≥ 2x f32 tile");
+}

@@ -1,5 +1,5 @@
 //! Persistent autotune cache: tuned [`BlockParams`] per (CPU model,
-//! kernel), serialised to disk ATLAS-install style.
+//! kernel, element triple), serialised to disk ATLAS-install style.
 //!
 //! [`super::tune_and_install`] feeds the in-process dispatch table, but
 //! winners used to die with the process. This module persists them as
@@ -12,16 +12,20 @@
 //! point it at a temp file); the values `off` / `0` / empty disable
 //! persistence entirely.
 
-use crate::gemm::{BlockParams, ElementId, KernelId, TileParams, Unroll};
+use crate::gemm::{BlockParams, ElementId, KernelId, TileParams, TripleId, Unroll};
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
-/// On-disk schema version. **v3** added the `element` key to the dot and
-/// tile sections (entries are now keyed `(cpu, kernel, element)`); files
-/// with a missing, older or unknown version are **discarded wholesale**
-/// — never a parse error — so upgrading the crate silently re-tunes
-/// rather than replaying geometry under the wrong key.
-pub const SCHEMA_VERSION: usize = 3;
+/// On-disk schema version. **v4** renamed the per-entry `element` key to
+/// `triple` (the [`crate::gemm::TripleId`] name — `"f32"`, `"f64"`,
+/// `"u8i8i32"`), following the kernel-triple refactor: entries are keyed
+/// `(cpu, kernel, triple)`. Files with a missing, older or unknown
+/// version are **discarded wholesale** — never a parse error — so
+/// upgrading the crate silently re-tunes rather than replaying geometry
+/// under the wrong key. Entries naming a triple this build has no tuned
+/// float tier for (e.g. the quantized `u8i8i32`, whose geometry is fixed
+/// by the maddubs tile) are skipped individually on load, same policy.
+pub const SCHEMA_VERSION: usize = 4;
 
 /// Environment variable overriding the cache file path.
 pub const ENV_PATH: &str = "EMMERALD_TUNE_CACHE";
@@ -85,7 +89,7 @@ struct CacheDoc {
 fn entry_to_json(cpu: &str, element: ElementId, kernel: KernelId, p: &BlockParams) -> Json {
     Json::obj([
         ("cpu", cpu.into()),
-        ("element", element.name().into()),
+        ("triple", element.triple().name().into()),
         ("kernel", kernel.name().into()),
         ("kb", p.kb.into()),
         ("mb", p.mb.into()),
@@ -99,7 +103,9 @@ fn entry_to_json(cpu: &str, element: ElementId, kernel: KernelId, p: &BlockParam
 
 fn entry_from_json(j: &Json) -> Option<(String, ElementId, KernelId, BlockParams)> {
     let cpu = j.get("cpu")?.as_str()?.to_string();
-    let element = ElementId::from_name(j.get("element")?.as_str()?)?;
+    // Unknown triple names and triples without a tuned float tier (the
+    // quantized `u8i8i32`) are skipped, not errors.
+    let element = TripleId::from_name(j.get("triple")?.as_str()?)?.element()?;
     let kernel = KernelId::from_name(j.get("kernel")?.as_str()?)?;
     let params = BlockParams {
         kb: j.get("kb")?.as_usize()?,
@@ -117,7 +123,7 @@ fn entry_from_json(j: &Json) -> Option<(String, ElementId, KernelId, BlockParams
 fn tile_entry_to_json(cpu: &str, element: ElementId, p: &TileParams) -> Json {
     Json::obj([
         ("cpu", cpu.into()),
-        ("element", element.name().into()),
+        ("triple", element.triple().name().into()),
         ("mr", p.mr.into()),
         ("nr", p.nr.into()),
         ("kc", p.kc.into()),
@@ -129,7 +135,7 @@ fn tile_entry_to_json(cpu: &str, element: ElementId, p: &TileParams) -> Json {
 
 fn tile_entry_from_json(j: &Json) -> Option<(String, ElementId, TileParams)> {
     let cpu = j.get("cpu")?.as_str()?.to_string();
-    let element = ElementId::from_name(j.get("element")?.as_str()?)?;
+    let element = TripleId::from_name(j.get("triple")?.as_str()?)?.element()?;
     let params = TileParams {
         mr: j.get("mr")?.as_usize()?,
         nr: j.get("nr")?.as_usize()?,
@@ -152,9 +158,10 @@ fn strassen_entry_from_json(j: &Json) -> Option<(String, usize)> {
 /// document — the cache is strictly best-effort; unknown sections and
 /// malformed entries are skipped). Files written by an **older or
 /// unknown schema version are discarded wholesale** (see
-/// [`SCHEMA_VERSION`]): pre-v3 entries carry no `element` key and must
-/// not be replayed under a guessed one — the next autotune run simply
-/// rewrites the file at the current version.
+/// [`SCHEMA_VERSION`]): v3 entries carry an `element` key where v4 keys
+/// by `triple`, and pre-v3 entries carry neither — neither may be
+/// replayed under a guessed key; the next autotune run simply rewrites
+/// the file at the current version.
 fn load_doc(path: &Path) -> CacheDoc {
     let Ok(text) = std::fs::read_to_string(path) else {
         return CacheDoc::default();
@@ -360,7 +367,7 @@ mod tests {
         let p3 = BlockParams { kb: 336, ..p1 };
         save_entry(&path, "cpu-a", ElementId::F32, KernelId::Avx2, &p3).unwrap();
         // The same (cpu, kernel) under a different element is a distinct
-        // entry — the v3 key is (cpu, kernel, element).
+        // entry — the v4 key is (cpu, kernel, triple).
         let p64 = BlockParams { kb: 224, ..p1 };
         save_entry(&path, "cpu-a", ElementId::F64, KernelId::Avx2, &p64).unwrap();
         // Replacing an existing (cpu, element, kernel) triple keeps one.
@@ -393,28 +400,47 @@ mod tests {
         // Well-formed current-version JSON with a bogus entry: skipped.
         std::fs::write(
             &path,
-            r#"{"version":3,"entries":[{"cpu":"x","element":"f32","kernel":"emmerald-sse","kb":0,"mb":1,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
+            r#"{"version":4,"entries":[{"cpu":"x","triple":"f32","kernel":"emmerald-sse","kb":0,"mb":1,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
         )
         .unwrap();
         assert!(load_entries(&path).is_empty(), "invalid kb=0 must not load");
+        // Entries naming an unknown triple, or the quantized triple (no
+        // tuned float tier), are skipped individually — not errors, and
+        // they must not take the valid neighbours down with them.
+        std::fs::write(
+            &path,
+            r#"{"version":4,"entries":[{"cpu":"x","triple":"u8i8i32","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false},{"cpu":"x","triple":"bf16","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false},{"cpu":"x","triple":"f64","kernel":"emmerald-avx2","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
+        )
+        .unwrap();
+        let entries = load_entries(&path);
+        assert_eq!(entries.len(), 1, "only the f64 entry is loadable");
+        assert_eq!(entries[0].1, ElementId::F64);
         let _ = std::fs::remove_file(&path);
     }
 
     #[test]
     fn old_or_unknown_schema_versions_are_discarded_not_errors() {
         let path = temp_file("migrate");
-        // A perfectly valid v2 document (the pre-element schema): every
-        // section is discarded — the entries carry no element key and
-        // must not be replayed under a guessed one.
+        // A perfectly valid v3 document (the pre-triple schema, entries
+        // keyed by `element`): every section is discarded wholesale —
+        // the tuned numbers would be replayed under the wrong key space
+        // if we guessed `triple` from `element`.
         std::fs::write(
             &path,
-            r#"{"version":2,"entries":[{"cpu":"x","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}],"tile_entries":[{"cpu":"x","mr":6,"nr":16,"kc":256,"mc":72,"nc":480,"prefetch":true}],"strassen_entries":[{"cpu":"x","min_dim":768}]}"#,
+            r#"{"version":3,"entries":[{"cpu":"x","element":"f32","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}],"tile_entries":[{"cpu":"x","element":"f32","mr":6,"nr":16,"kc":256,"mc":72,"nc":480,"prefetch":true}],"strassen_entries":[{"cpu":"x","min_dim":768}]}"#,
         )
         .unwrap();
         let doc = load_doc(&path);
-        assert!(doc.entries.is_empty(), "v2 entries must be discarded");
-        assert!(doc.tile_entries.is_empty(), "v2 tile entries must be discarded");
-        assert!(doc.strassen_entries.is_empty(), "v2 strassen entries must be discarded");
+        assert!(doc.entries.is_empty(), "v3 entries must be discarded");
+        assert!(doc.tile_entries.is_empty(), "v3 tile entries must be discarded");
+        assert!(doc.strassen_entries.is_empty(), "v3 strassen entries must be discarded");
+        // The even older v2 document (no element key at all) likewise.
+        std::fs::write(
+            &path,
+            r#"{"version":2,"entries":[{"cpu":"x","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
+        )
+        .unwrap();
+        assert!(load_doc(&path).entries.is_empty(), "v2 entries must be discarded");
         // Missing and future versions likewise.
         std::fs::write(&path, r#"{"entries":[]}"#).unwrap();
         assert!(load_entries(&path).is_empty());
@@ -424,7 +450,7 @@ mod tests {
         // (old content dropped, new entry present).
         std::fs::write(
             &path,
-            r#"{"version":2,"entries":[{"cpu":"x","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
+            r#"{"version":3,"entries":[{"cpu":"x","element":"f32","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
         )
         .unwrap();
         let p = BlockParams { kb: 96, mb: 32, nr: 4, ..BlockParams::emmerald_sse() };
@@ -433,6 +459,10 @@ mod tests {
         assert_eq!(entries.len(), 1, "old-version content must not survive migration");
         assert_eq!(entries[0].0, "cpu-m");
         assert_eq!(entries[0].1, ElementId::F64);
+        // The rewritten file is v4: entries carry `triple`, not `element`.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""version":4"#) || text.contains(r#""version": 4"#), "{text}");
+        assert!(text.contains("triple"), "v4 entries must be keyed by triple: {text}");
         let _ = std::fs::remove_file(&path);
     }
 
@@ -482,7 +512,7 @@ mod tests {
         let path = temp_file("tile-bad");
         std::fs::write(
             &path,
-            r#"{"version":3,"entries":[],"tile_entries":[{"cpu":"x","element":"f32","mr":9,"nr":16,"kc":256,"mc":72,"nc":480,"prefetch":true}],"strassen_entries":[{"cpu":"x","min_dim":0}]}"#,
+            r#"{"version":4,"entries":[],"tile_entries":[{"cpu":"x","triple":"f32","mr":9,"nr":16,"kc":256,"mc":72,"nc":480,"prefetch":true}],"strassen_entries":[{"cpu":"x","min_dim":0}]}"#,
         )
         .unwrap();
         let doc = load_doc(&path);

@@ -14,10 +14,11 @@
 
 use super::backend::{Backend, Resolved};
 use super::error::BlasError;
-use super::matrix::Matrix;
+use super::matrix::{MatMut, MatRef, Matrix};
 use super::Transpose;
 use crate::gemm::batch::BatchStrides;
 use crate::gemm::element::Element;
+use crate::gemm::epilogue::Requant;
 use crate::gemm::plan::GemmContext;
 use crate::gemm::KernelId;
 
@@ -233,6 +234,79 @@ pub fn gemm_batch<T: Element>(
     }
     let strides = BatchStrides { a: stride_a, b: stride_b, c: stride_c };
     builder.plan(m, n, k)?.run_batch(a, b, c, batch, strides)
+}
+
+/// Quantized GEMM (`u8 × i8 → i32`, exact): `C ⟵ op(A)·op(B)`, or
+/// `C += op(A)·op(B)` (wrapping) with `accumulate`.
+///
+/// The integer tier has no `alpha`/`beta` (integer scaling would
+/// overflow or lose exactness) and no backend argument: dispatch is the
+/// AVX2 `maddubs` tile when the CPU has it and the weights avoid the
+/// `−128` edge case, the exact scalar loop otherwise — both bitwise
+/// identical, serial or parallel. Runs on the shared [`GemmContext`];
+/// for weight-stationary workloads pack `B` once with
+/// [`GemmContext::qpack_b`] and call
+/// [`GemmContext::qgemm_packed_b`] instead.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm(
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[u8],
+    lda: usize,
+    b: &[i8],
+    ldb: usize,
+    c: &mut [i32],
+    ldc: usize,
+    accumulate: bool,
+) -> Result<(), BlasError> {
+    let (ar, ac) = match transa {
+        Transpose::No => (m, k),
+        Transpose::Yes => (k, m),
+    };
+    let (br, bc) = match transb {
+        Transpose::No => (k, n),
+        Transpose::Yes => (n, k),
+    };
+    let av = MatRef::new(a, ar, ac, lda).map_err(|e| e.operand("A"))?;
+    let bv = MatRef::new(b, br, bc, ldb).map_err(|e| e.operand("B"))?;
+    let cv = MatMut::new(c, m, n, ldc).map_err(|e| e.operand("C"))?;
+    GemmContext::global().qgemm(transa, transb, av, bv, cv, accumulate)
+}
+
+/// Quantized GEMM with the fused [`Requant`] writeback:
+/// `C_f32 ⟵ requant(op(A)·op(B))` — zero-point correction, per-row ×
+/// per-channel scales, optional bias and activation applied per element
+/// as the exact i32 sums leave the kernel. Always overwrites `C`.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_requant(
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[u8],
+    lda: usize,
+    b: &[i8],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+    rq: &Requant,
+) -> Result<(), BlasError> {
+    let (ar, ac) = match transa {
+        Transpose::No => (m, k),
+        Transpose::Yes => (k, m),
+    };
+    let (br, bc) = match transb {
+        Transpose::No => (k, n),
+        Transpose::Yes => (n, k),
+    };
+    let av = MatRef::new(a, ar, ac, lda).map_err(|e| e.operand("A"))?;
+    let bv = MatRef::new(b, br, bc, ldb).map_err(|e| e.operand("B"))?;
+    let cv = MatMut::new(c, m, n, ldc).map_err(|e| e.operand("C"))?;
+    GemmContext::global().qgemm_requant(transa, transb, av, bv, cv, rq)
 }
 
 /// Convenience wrapper over [`sgemm`] for owned [`Matrix`] values

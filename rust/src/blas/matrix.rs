@@ -8,9 +8,14 @@
 //!
 //! Since the element-generic precision subsystem
 //! ([`crate::gemm::element`]), every type here carries an element
-//! parameter `T: Element` with **`f32` as the default** — `Matrix`,
-//! `MatRef<'_>` and `MatMut<'_>` written without a parameter mean exactly
-//! what they always did, and `Matrix<f64>` is the DGEMM storage type.
+//! parameter with **`f32` as the default** — `Matrix`, `MatRef<'_>` and
+//! `MatMut<'_>` written without a parameter mean exactly what they always
+//! did, and `Matrix<f64>` is the DGEMM storage type. The kernel-triple
+//! refactor relaxed the storage bound from `Element` to
+//! [`crate::gemm::Scalar`], so the same types also hold the quantized
+//! triple's sides: `Matrix<u8>` activations, `Matrix<i8>` weights and
+//! `Matrix<i32>` accumulator outputs. Only the helpers that need float
+//! algebra (`random*`, `max_abs_diff`) stay `Element`-bound.
 //!
 //! Raw access: `MatMut` is built on the checked raw-pointer core
 //! ([`crate::util::ptr::RawMatMut`]) — the pointer arithmetic for row
@@ -20,7 +25,7 @@
 //! instead of bare pointers.
 
 use super::error::BlasError;
-use crate::gemm::element::Element;
+use crate::gemm::element::{Element, Scalar};
 use crate::util::ptr::{RawMat, RawMatMut, RawSlice};
 
 /// Immutable strided view over element data.
@@ -32,7 +37,7 @@ pub struct MatRef<'a, T = f32> {
     ld: usize,
 }
 
-impl<'a, T: Element> MatRef<'a, T> {
+impl<'a, T: Scalar> MatRef<'a, T> {
     /// Construct a view, validating `ld` and the backing length.
     pub fn new(data: &'a [T], rows: usize, cols: usize, ld: usize) -> Result<Self, BlasError> {
         validate(rows, cols, ld, data.len())?;
@@ -135,7 +140,7 @@ pub struct MatMut<'a, T = f32> {
 // `as_ref`, which must not observe a sibling's concurrent writes.
 unsafe impl<T: Send> Send for MatMut<'_, T> {}
 
-impl<'a, T: Element> MatMut<'a, T> {
+impl<'a, T: Scalar> MatMut<'a, T> {
     /// Construct a view, validating `ld` and the backing length.
     pub fn new(data: &'a mut [T], rows: usize, cols: usize, ld: usize) -> Result<Self, BlasError> {
         validate(rows, cols, ld, data.len())?;
@@ -308,7 +313,7 @@ pub struct Matrix<T = f32> {
     ld: usize,
 }
 
-impl<T: Element> Matrix<T> {
+impl<T: Scalar> Matrix<T> {
     /// Zero-filled `rows × cols` matrix with `ld == cols`.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { data: vec![T::ZERO; rows * cols], rows, cols, ld: cols }
@@ -327,32 +332,6 @@ impl<T: Element> Matrix<T> {
         for r in 0..rows {
             for c in 0..cols {
                 m.data[r * cols + c] = f(r, c);
-            }
-        }
-        m
-    }
-
-    /// Uniform-random matrix in `[lo, hi)` from a seed (deterministic;
-    /// the f32 instantiation draws exactly the pre-refactor bit stream).
-    pub fn random(rows: usize, cols: usize, seed: u64, lo: T, hi: T) -> Self {
-        let mut rng = crate::util::prng::Pcg32::new(seed);
-        let mut m = Self::zeros(rows, cols);
-        for v in m.data.iter_mut() {
-            *v = T::sample(&mut rng, lo, hi);
-        }
-        m
-    }
-
-    /// Uniform-random matrix with explicit stride; the padding tail of each
-    /// row is filled with a sentinel so tests can detect stray writes.
-    pub fn random_strided(rows: usize, cols: usize, ld: usize, seed: u64) -> Self {
-        let mut m = Self::zeros_strided(rows, cols, ld);
-        let mut rng = crate::util::prng::Pcg32::new(seed);
-        let (lo, hi) = (T::from_f64(-1.0), T::from_f64(1.0));
-        let sentinel = T::from_f64(-77.0);
-        for r in 0..rows {
-            for c in 0..ld {
-                m.data[r * ld + c] = if c < cols { T::sample(&mut rng, lo, hi) } else { sentinel };
             }
         }
         m
@@ -408,6 +387,36 @@ impl<T: Element> Matrix<T> {
     /// Logical transpose (materialised copy).
     pub fn transposed(&self) -> Matrix<T> {
         Matrix::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+    }
+}
+
+/// Helpers needing float algebra (sampling, sentinels, |·| distance) keep
+/// the [`Element`] bound; everything storage-shaped above is [`Scalar`].
+impl<T: Element> Matrix<T> {
+    /// Uniform-random matrix in `[lo, hi)` from a seed (deterministic;
+    /// the f32 instantiation draws exactly the pre-refactor bit stream).
+    pub fn random(rows: usize, cols: usize, seed: u64, lo: T, hi: T) -> Self {
+        let mut rng = crate::util::prng::Pcg32::new(seed);
+        let mut m = Self::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = T::sample(&mut rng, lo, hi);
+        }
+        m
+    }
+
+    /// Uniform-random matrix with explicit stride; the padding tail of each
+    /// row is filled with a sentinel so tests can detect stray writes.
+    pub fn random_strided(rows: usize, cols: usize, ld: usize, seed: u64) -> Self {
+        let mut m = Self::zeros_strided(rows, cols, ld);
+        let mut rng = crate::util::prng::Pcg32::new(seed);
+        let (lo, hi) = (T::from_f64(-1.0), T::from_f64(1.0));
+        let sentinel = T::from_f64(-77.0);
+        for r in 0..rows {
+            for c in 0..ld {
+                m.data[r * ld + c] = if c < cols { T::sample(&mut rng, lo, hi) } else { sentinel };
+            }
+        }
+        m
     }
 
     /// Maximum absolute element difference over the logical area.

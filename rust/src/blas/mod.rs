@@ -60,6 +60,15 @@
 //! carry an element parameter with `f32` as the default, so existing
 //! code compiles and computes bit-identically; `Matrix<f64>` is the
 //! DGEMM storage type.
+//!
+//! Since the kernel-triple refactor there is also a **quantized
+//! inference tier** (`u8 × i8 → i32`, exact integers): [`qgemm`] for raw
+//! i32 output and [`qgemm_requant`] for the fused dequantizing writeback
+//! ([`Requant`]: zero-point correction + scales + bias + activation →
+//! f32). It takes no `alpha`/`beta` and no backend argument — integer
+//! accumulation is exact and wrapping, so every execution path (scalar,
+//! AVX2 `maddubs` tile, parallel, prepacked via
+//! [`GemmContext::qpack_b`]) produces identical bits.
 
 pub mod api;
 mod backend;
@@ -69,7 +78,7 @@ pub mod level2;
 mod matrix;
 pub mod syrk;
 
-pub use api::{dgemm, dgemm_batch, dgemm_matrix, gemm, gemm_batch, gemm_matrix, sgemm, sgemm_batch, sgemm_matrix};
+pub use api::{dgemm, dgemm_batch, dgemm_matrix, gemm, gemm_batch, gemm_matrix, qgemm, qgemm_requant, sgemm, sgemm_batch, sgemm_matrix};
 pub use backend::{available_backends, Backend};
 pub use level1::{isamax, saxpy, sdot, snrm2, sscal};
 pub use level2::sgemv;
@@ -79,7 +88,8 @@ pub use matrix::{MatMut, MatRef, Matrix};
 // The planned-execution API lives in `gemm::plan`; re-exported here
 // because it is the public surface most callers should reach for.
 pub use crate::gemm::plan::{GemmBuilder, GemmContext, GemmPlan, PackedA, PackedB};
-pub use crate::gemm::epilogue::{Activation, Bias, Epilogue};
+pub use crate::gemm::epilogue::{Activation, Bias, Epilogue, Requant};
+pub use crate::gemm::quant::QPackedB;
 
 /// Logical transposition of an operand (`op(X) = X` or `Xᵀ`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -336,6 +346,28 @@ mod tests {
             2,
         );
         assert!(matches!(err, Err(BlasError::BadBatchStride { .. })));
+    }
+
+    #[test]
+    fn qgemm_positional_matches_inline_oracle() {
+        let (m, n, k) = (4usize, 5usize, 6usize);
+        let a: Vec<u8> = (0..m * k).map(|i| (i * 19 % 256) as u8).collect();
+        let b: Vec<i8> = (0..k * n).map(|i| ((i * 23 % 255) as i16 - 127) as i8).collect();
+        let mut c = vec![1i32; m * n];
+        qgemm(Transpose::No, Transpose::No, m, n, k, &a, k, &b, n, &mut c, n, true).unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 1i32;
+                for p in 0..k {
+                    want = want.wrapping_add(a[i * k + p] as i32 * b[p * n + j] as i32);
+                }
+                assert_eq!(c[i * n + j], want, "({i},{j})");
+            }
+        }
+        // Bad leading dimension surfaces with the operand tag.
+        let mut c2 = vec![0i32; m * n];
+        let err = qgemm(Transpose::No, Transpose::No, m, n, k, &a, 1, &b, n, &mut c2, n, false);
+        assert!(matches!(err, Err(BlasError::BadLeadingDim { operand: "A", .. })), "{err:?}");
     }
 
     #[test]

@@ -101,6 +101,97 @@ pub fn gemm_batch<T: Element>(
     )
 }
 
+/// Batched quantized GEMM (`u8 × i8 → i32`, exact): every item computes
+/// `C_i ⟵ op(A_i)·op(B_i)` (or `C_i +=` with `accumulate`, wrapping).
+/// Layout semantics follow [`gemm_batch`]; `strides.b == 0` is the
+/// weight-stationary shape and re-packs `B` **once** for the whole batch
+/// (the quantized analogue of the shared-B fold — the packed panels and
+/// column sums are shared read-only across the item fan-out). Results are
+/// bitwise identical to a serial per-item [`super::quant::qgemm`] loop
+/// for any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_batch(
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[u8],
+    lda: usize,
+    b: &[i8],
+    ldb: usize,
+    c: &mut [i32],
+    ldc: usize,
+    accumulate: bool,
+    batch: usize,
+    strides: BatchStrides,
+) -> Result<(), BlasError> {
+    if batch == 0 || m == 0 || n == 0 {
+        return Ok(());
+    }
+    let (ar, ac) = match transa {
+        Transpose::No => (m, k),
+        Transpose::Yes => (k, m),
+    };
+    let (br, bc) = match transb {
+        Transpose::No => (k, n),
+        Transpose::Yes => (n, k),
+    };
+    validate_operand("C", m, n, ldc, strides.c, batch, c.len(), true)?;
+    if k == 0 {
+        // Empty products: overwrite zeros or leave C untouched.
+        if !accumulate {
+            for cs in item_slices(c, strides.c, batch) {
+                let mut cv = MatMut::new(cs, m, n, ldc).expect("validated");
+                for r in 0..m {
+                    for col in 0..n {
+                        cv.set(r, col, 0);
+                    }
+                }
+            }
+        }
+        return Ok(());
+    }
+    validate_operand("A", ar, ac, lda, strides.a, batch, a.len(), false)?;
+    validate_operand("B", br, bc, ldb, strides.b, batch, b.len(), false)?;
+
+    // Shared-B: one packing for the entire batch.
+    let shared_pb = (strides.b == 0 && batch > 1).then(|| {
+        let bv = MatRef::new(b, br, bc, ldb).expect("validated");
+        super::quant::QPackedB::pack(bv, transb, k, n)
+    });
+
+    let items = item_slices(c, strides.c, batch);
+    let run_item = |i: usize, cs: &mut [i32]| {
+        let av = MatRef::new(&a[i * strides.a..], ar, ac, lda).expect("validated");
+        let mut cv = MatMut::new(cs, m, n, ldc).expect("validated");
+        match &shared_pb {
+            Some(pb) => super::quant::qgemm_packed(av, transa, pb, &mut cv, accumulate),
+            None => {
+                let bv = MatRef::new(&b[i * strides.b..], br, bc, ldb).expect("validated");
+                let pb = super::quant::QPackedB::pack(bv, transb, k, n);
+                super::quant::qgemm_packed(av, transa, &pb, &mut cv, accumulate);
+            }
+        }
+    };
+    if batch == 1 {
+        for (i, cs) in items.into_iter().enumerate() {
+            run_item(i, cs);
+        }
+        return Ok(());
+    }
+    // Item fan-out over the process pool; wrapping integer writeback
+    // makes the result independent of how items land on workers.
+    let run_item = &run_item;
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = items
+        .into_iter()
+        .enumerate()
+        .map(|(i, cs)| Box::new(move || run_item(i, cs)) as Box<dyn FnOnce() + Send + '_>)
+        .collect();
+    run_borrowed_on(super::plan::global_pool(), jobs);
+    Ok(())
+}
+
 /// The driver proper: explicit worker pool (`None` = serial sweep) and an
 /// optional forced serial kernel (the explicit-backend path of
 /// [`crate::blas::sgemm_batch`]; the planned API routes its context's
@@ -670,6 +761,37 @@ mod tests {
             .unwrap();
             assert_allclose(&c_got, &c_ref, 5e-4, 1e-4, &format!("forced {id:?} batch"));
         }
+    }
+
+    #[test]
+    fn quantized_batch_matches_per_item_serial_bitwise() {
+        use crate::gemm::quant;
+        let (m, n, k, batch) = (5usize, 7usize, 9usize, 4usize);
+        for strides in [BatchStrides::contiguous(m, n, k), BatchStrides::shared_b(m, n, k)] {
+            let a_len = strides.a * (batch - 1) + m * k;
+            let b_len = strides.b * (batch - 1) + k * n;
+            let a: Vec<u8> = (0..a_len).map(|i| (i * 37 % 256) as u8).collect();
+            let b: Vec<i8> = (0..b_len).map(|i| ((i * 29 % 255) as i16 - 127) as i8).collect();
+            let c0: Vec<i32> = (0..strides.c * (batch - 1) + m * n).map(|i| i as i32 - 50).collect();
+            let mut got = c0.clone();
+            qgemm_batch(Transpose::No, Transpose::No, m, n, k, &a, k, &b, n, &mut got, n, true, batch, strides)
+                .unwrap();
+            let mut want = c0.clone();
+            for i in 0..batch {
+                let av = MatRef::new(&a[i * strides.a..], m, k, k).unwrap();
+                let bv = MatRef::new(&b[i * strides.b..], k, n, n).unwrap();
+                let mut cv = MatMut::new(&mut want[i * strides.c..], m, n, n).unwrap();
+                quant::qgemm(Transpose::No, Transpose::No, av, bv, &mut cv, true);
+            }
+            assert_eq!(got, want, "shared_b={}", strides.b == 0);
+        }
+        // k = 0: overwrite zeros / accumulate no-op.
+        let mut c = vec![7i32; 2 * 6];
+        let st = BatchStrides::contiguous(2, 3, 0);
+        qgemm_batch(Transpose::No, Transpose::No, 2, 3, 0, &[], 1, &[], 1, &mut c, 3, true, 2, st).unwrap();
+        assert!(c.iter().all(|&x| x == 7));
+        qgemm_batch(Transpose::No, Transpose::No, 2, 3, 0, &[], 1, &[], 1, &mut c, 3, false, 2, st).unwrap();
+        assert!(c.iter().all(|&x| x == 0));
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! cannot legally turn those serial FP chains into SIMD, so the proxy
 //! stays honest.
 
-use super::element::Element;
+use super::element::{Element, GemmTriple, Scalar};
 use super::microkernel::scalar_dot_tile;
 use super::pack::{PackedA, PackedB};
 use super::params::BlockParams;
@@ -128,6 +128,128 @@ fn accumulate<T: Element>(c: &mut MatMut<'_, T>, row: usize, j0: usize, alpha: T
     }
 }
 
+/// Triple-generic blocked widening oracle: the same ATLAS-proxy loop
+/// nest over a [`GemmTriple`] — packs `Lhs` rows and `Rhs` panels with
+/// the element-generic buffers and drives the triple-generic 2×2 scalar
+/// tile, accumulating each k block in `K::Acc` and folding into `C`
+/// through [`GemmTriple::acc_to_out`] / [`GemmTriple::out_add`].
+///
+/// For the quantized triple the wrapping i32 arithmetic makes the k
+/// split invisible, so this blocked oracle is **bitwise identical** to
+/// [`super::naive::gemm_triple`] — a second, structurally different
+/// reference the vectorised int8 path is checked against. No
+/// `alpha`/`beta` for the same reason as the naive triple oracle:
+/// scaling is a float-tier concept.
+pub fn gemm_triple<K: GemmTriple>(
+    params: &BlockParams,
+    transa: Transpose,
+    transb: Transpose,
+    a: MatRef<'_, K::Lhs>,
+    b: MatRef<'_, K::Rhs>,
+    c: &mut MatMut<'_, K::Out>,
+    accumulate: bool,
+) {
+    params.validate().expect("invalid block parameters");
+    let m = c.rows();
+    let n = c.cols();
+    let k = match transa {
+        Transpose::No => a.cols(),
+        Transpose::Yes => a.rows(),
+    };
+    if !accumulate {
+        for i in 0..m {
+            for j in 0..n {
+                c.set(i, j, <K::Out as Scalar>::ZERO);
+            }
+        }
+    }
+    if k == 0 || m == 0 || n == 0 {
+        return;
+    }
+
+    let nr = 2usize;
+    let mut packed_b = PackedB::<K::Rhs>::new(nr);
+    let mut packed_a = PackedA::<K::Lhs>::new();
+
+    let mut kk = 0;
+    while kk < k {
+        let kb_eff = params.kb_eff(k, kk);
+        packed_b.pack(b, transb, kk, kb_eff, n);
+        let mut ii = 0;
+        while ii < m {
+            let mb_eff = params.mb.min(m - ii);
+            packed_a.pack(a, transa, ii, mb_eff, kk, kb_eff);
+            let npanels = n.div_ceil(nr);
+            for p in 0..npanels {
+                let j0 = p * nr;
+                let w = nr.min(n - j0);
+                let mut i = 0;
+                while i < mb_eff {
+                    let h = 2.min(mb_eff - i);
+                    // SAFETY: identical extent argument to [`gemm`]: the
+                    // kernel reads kb_eff elements per pointer; packed A
+                    // rows and packed B columns are kpad >= kb_eff long
+                    // (row_ptr/col_ptr verify in debug), and i+h <=
+                    // mb_eff, w <= panel width keep every pointer valid.
+                    // The writeback goes through bounds-checked accessors.
+                    unsafe {
+                        match (h, w) {
+                            (2, 2) => {
+                                let t = scalar_dot_tile::<K, 2, 2>(
+                                    [packed_a.row_ptr(i), packed_a.row_ptr(i + 1)],
+                                    kb_eff,
+                                    [packed_b.col_ptr(p, 0), packed_b.col_ptr(p, 1)],
+                                );
+                                fold::<K>(c, ii + i, j0, &t[0][..2]);
+                                fold::<K>(c, ii + i + 1, j0, &t[1][..2]);
+                            }
+                            (2, 1) => {
+                                let t = scalar_dot_tile::<K, 2, 1>(
+                                    [packed_a.row_ptr(i), packed_a.row_ptr(i + 1)],
+                                    kb_eff,
+                                    [packed_b.col_ptr(p, 0)],
+                                );
+                                fold::<K>(c, ii + i, j0, &t[0][..1]);
+                                fold::<K>(c, ii + i + 1, j0, &t[1][..1]);
+                            }
+                            (1, 2) => {
+                                let t = scalar_dot_tile::<K, 1, 2>(
+                                    [packed_a.row_ptr(i)],
+                                    kb_eff,
+                                    [packed_b.col_ptr(p, 0), packed_b.col_ptr(p, 1)],
+                                );
+                                fold::<K>(c, ii + i, j0, &t[0][..2]);
+                            }
+                            (1, 1) => {
+                                let t = scalar_dot_tile::<K, 1, 1>(
+                                    [packed_a.row_ptr(i)],
+                                    kb_eff,
+                                    [packed_b.col_ptr(p, 0)],
+                                );
+                                fold::<K>(c, ii + i, j0, &t[0][..1]);
+                            }
+                            _ => unreachable!(),
+                        }
+                    }
+                    i += h;
+                }
+            }
+            ii += mb_eff;
+        }
+        kk += kb_eff;
+    }
+}
+
+/// `C[row, j0..] ⟵ out_add(C, acc_to_out(sums))` — the widening
+/// writeback of the triple oracle.
+#[inline(always)]
+fn fold<K: GemmTriple>(c: &mut MatMut<'_, K::Out>, row: usize, j0: usize, sums: &[K::Acc]) {
+    for (j, &s) in sums.iter().enumerate() {
+        let old = c.get(row, j0 + j);
+        c.set(row, j0 + j, K::out_add(old, K::acc_to_out(s)));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +272,34 @@ mod tests {
             &move |ta, tb, alpha, a, b, beta, c| gemm(&p, ta, tb, alpha, a, b, beta, c),
             "blocked-tiny",
         );
+    }
+
+    #[test]
+    fn quantized_blocked_oracle_matches_naive_bitwise() {
+        // Wrapping i32 accumulation is order-independent, so the k-split
+        // blocked oracle must agree with the naive triple oracle exactly
+        // — including saturating inputs — across fringe-forcing blocks.
+        use crate::blas::Matrix;
+        use crate::gemm::element::Qu8i8;
+        let p = BlockParams { kb: 5, mb: 3, ..BlockParams::atlas_proxy() };
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (5, 7, 11), (7, 4, 17), (17, 15, 23)] {
+            let a = Matrix::<u8>::from_fn(m, k, |r, c| ((r * 31 + c * 7) % 256) as u8);
+            let b = Matrix::<i8>::from_fn(k, n, |r, c| (((r * 13 + c * 5) % 255) as i16 - 127) as i8);
+            for accumulate in [false, true] {
+                let mut want = Matrix::<i32>::from_fn(m, n, |r, c| (r * n + c) as i32);
+                let mut got = want.clone();
+                crate::gemm::naive::gemm_triple::<Qu8i8>(
+                    Transpose::No,
+                    Transpose::No,
+                    a.view(),
+                    b.view(),
+                    &mut want.view_mut(),
+                    accumulate,
+                );
+                gemm_triple::<Qu8i8>(&p, Transpose::No, Transpose::No, a.view(), b.view(), &mut got.view_mut(), accumulate);
+                assert_eq!(got.data(), want.data(), "m={m} n={n} k={k} accumulate={accumulate}");
+            }
+        }
     }
 
     #[test]

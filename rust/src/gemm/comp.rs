@@ -17,9 +17,14 @@
 //! ([`crate::gemm::dispatch::Accumulation::CompensatedF32`]): dispatch
 //! then routes every f32 compute call — scalar tier and dot tier alike,
 //! serial or thread-parallel — through [`gemm`] below instead of the
-//! plain kernels. (The prepacked planned paths keep their plain layouts:
-//! compensation is a per-call accuracy mode, not a packed format.)
-//! f64 calls are unaffected — f64 *is* the accuracy target.
+//! plain kernels. The prepacked planned paths
+//! ([`crate::gemm::plan::GemmPlan::run_packed_b`] /
+//! [`crate::gemm::plan::GemmPlan::run_packed`]) participate too: when
+//! the context is in compensated mode they unpack the handles back to
+//! plain layouts and take this driver — compensation must see whole
+//! dot products, so it cannot consume the tile tier's k-blocked packed
+//! formats directly. f64 calls are unaffected — f64 *is* the accuracy
+//! target.
 //!
 //! Structure: `op(B)` is re-buffered once into full-depth column panels
 //! (the paper's packing, with `kb = k`: compensation must see the whole

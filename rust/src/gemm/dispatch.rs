@@ -30,7 +30,7 @@
 //! [`crate::blas::Backend::Auto`], which now resolves to it); construct a
 //! local [`GemmDispatch`] for custom thresholds or deterministic tests.
 
-use super::element::{Element, ElementId};
+use super::element::{Element, ElementId, TripleId};
 use super::epilogue::Epilogue;
 use super::params::{BlockParams, TileParams};
 use super::parallel::SerialVecKernel;
@@ -118,6 +118,24 @@ impl KernelId {
                 // scalar proxy (only the pure beta-scale sweep splits).
                 KernelId::Avx2 | KernelId::Avx2Tile | KernelId::Parallel => detect_avx2(),
                 KernelId::Simd | KernelId::Strassen => false,
+            },
+        }
+    }
+
+    /// Whether this kernel can run on the current CPU **for a given
+    /// kernel triple**. Homogeneous float triples defer to
+    /// [`available_for`](Self::available_for); the quantized u8×i8→i32
+    /// triple has its own table: the scalar oracles always apply, the
+    /// AVX2 `maddubs` tile (and the row-sliced parallel driver over it)
+    /// when the CPU has AVX2 — and the SSE tier, the Strassen recursion
+    /// and the float-only compensated mode **never** do.
+    pub fn available_for_triple(self, triple: TripleId) -> bool {
+        match triple.element() {
+            Some(e) => self.available_for(e),
+            None => match self {
+                KernelId::Naive | KernelId::Blocked => true,
+                KernelId::Avx2Tile | KernelId::Parallel => detect_avx2(),
+                KernelId::Simd | KernelId::Avx2 | KernelId::Strassen => false,
             },
         }
     }
@@ -737,14 +755,21 @@ impl GemmDispatch {
         beta: T,
         c: &mut MatMut<'_, T>,
     ) -> bool {
-        if T::ID == ElementId::F32
-            && self.cfg.accumulation == Accumulation::CompensatedF32
-            && alpha != T::ZERO
-        {
+        if self.comp_active(alpha) {
             T::comp_gemm(&self.cfg.sse, transa, transb, alpha, a, b, beta, c);
             return true;
         }
         false
+    }
+
+    /// Whether [`comp_intercept`](Self::comp_intercept) would fire for
+    /// this element and `alpha` — the predicate alone, so the prepacked
+    /// planned paths can decide to reconstruct their operands *before*
+    /// committing to the plain packed execution.
+    pub(crate) fn comp_active<T: Element>(&self, alpha: T) -> bool {
+        T::ID == ElementId::F32
+            && self.cfg.accumulation == Accumulation::CompensatedF32
+            && alpha != T::ZERO
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -1098,6 +1123,30 @@ mod tests {
             // SSE is part of the x86-64 baseline.
             assert!(KernelId::Simd.available());
             assert!(KernelId::Parallel.available());
+        }
+    }
+
+    #[test]
+    fn quantized_triple_never_routes_to_float_only_tiers() {
+        // The u8×i8→i32 triple has no SSE dot kernel, no Strassen
+        // recursion and no compensated mode; only the scalar oracles and
+        // the AVX2 maddubs tile (plus its parallel driver) may claim it.
+        for id in KernelId::ALL {
+            let avail = id.available_for_triple(TripleId::QU8I8);
+            match id {
+                KernelId::Naive | KernelId::Blocked => assert!(avail, "{}", id.name()),
+                KernelId::Simd | KernelId::Avx2 | KernelId::Strassen => {
+                    assert!(!avail, "{} must never take int8", id.name())
+                }
+                KernelId::Avx2Tile | KernelId::Parallel => {
+                    assert_eq!(avail, detect_avx2(), "{}", id.name())
+                }
+            }
+        }
+        // Float triples defer to the per-element table exactly.
+        for id in KernelId::ALL {
+            assert_eq!(id.available_for_triple(TripleId::F32), id.available_for(ElementId::F32));
+            assert_eq!(id.available_for_triple(TripleId::F64), id.available_for(ElementId::F64));
         }
     }
 

@@ -1,46 +1,68 @@
-//! The element-precision subsystem: one sealed trait, [`Element`], that
-//! the whole kernel ladder is generic over.
+//! The element subsystem: a sealed storage-scalar trait ([`Scalar`]), a
+//! sealed floating-point kernel trait ([`Element`]) layered on top of it,
+//! and the **kernel-triple** trait ([`GemmTriple`]) that names one GEMM
+//! instantiation by its *four* types: `Lhs × Rhs → Out` accumulated in
+//! `Acc`.
 //!
 //! The paper's blocking and packing design is element-width-agnostic: the
-//! register-tiling analysis of §2–§3 applies to 2- and 4-wide f64 SIMD
-//! lanes exactly as it does to 4- and 8-wide f32 ones — only the lane
-//! count, the packing granule and the micro-kernel instruction selection
-//! change. This module captures exactly that per-element surface:
+//! register-tiling analysis of §2–§3 applies to integer multiply-add
+//! exactly as it does to f32 FMA — only the lane count, the packing
+//! granule and the micro-kernel instruction selection change. What *does*
+//! change across instantiations is the type relationship between the
+//! operands: homogeneous floats (f32·f32→f32) share one type everywhere,
+//! while quantized inference multiplies `u8` activations by `i8` weights
+//! into `i32` accumulators. The single-type `Element` spine from the
+//! first refactor could not express that, so the generic layers now hang
+//! off the triple:
 //!
-//! * **Scalar algebra** (`ZERO`/`ONE`, `mul_add`, `abs`, `sqrt`, …) used
-//!   by the generic drivers, oracles and LAPACK tier.
-//! * **SIMD geometry**: [`Element::LANES`] (lanes per 256-bit vector) and
-//!   [`Element::TILE_NR`] (the outer-product tile width — two vectors, so
-//!   16 f32 or 8 f64) — the constants every packing layout and register
-//!   budget derives from.
-//! * **Kernel hooks**: the AVX2+FMA outer-product tile kernel, the
-//!   dot-panel micro-kernels (8-wide f32 next to the new 4-wide f64 YMM
-//!   instantiations), the strided-B ablation kernel, the compensated-f32
-//!   accumulation driver and the Strassen tier. Generic drivers call
-//!   through these hooks; each impl delegates to the *same monomorphic
-//!   functions* that ran before the refactor, which is what keeps the f32
-//!   results bit-for-bit unchanged.
+//! * **[`Scalar`]** — the storage contract every matrix, view and packing
+//!   buffer is generic over: `Copy`, `ZERO`/`ONE`, closed `+`/`*`. It is
+//!   implemented by `f32`, `f64`, `u8`, `i8` and `i32` — exactly the
+//!   types that appear as an Lhs/Rhs/Out/Acc of some supported triple.
+//! * **[`GemmTriple`]** — one kernel instantiation: associated types
+//!   `Lhs`/`Rhs`/`Out`/`Acc`, a [`TripleId`] for dispatch tables and the
+//!   tuned cache, and the widening multiply-accumulate [`madd`]
+//!   (`GemmTriple::madd`) the scalar oracles are built from. A blanket
+//!   impl maps every `T: Element` to the homogeneous triple
+//!   `T × T → T` with `madd(acc, l, r) = acc + l * r` — literally the
+//!   statement the pre-refactor oracles executed, which is what keeps
+//!   f32/f64 results bit-for-bit unchanged and existing callers
+//!   signature-compatible.
+//! * **[`Qu8i8`]** — the quantized triple `u8 × i8 → i32` (accumulated in
+//!   `i32` with wrapping adds, so results are exact mod 2³² and
+//!   independent of summation order — the property the bitwise
+//!   serial/parallel/prepacked conformance contract rests on). `Qu8i8`
+//!   deliberately does *not* implement `Element`: the float-only tiers
+//!   (SSE dot, Strassen, compensated accumulation) are unreachable for it
+//!   at the type level, not merely guarded at runtime.
+//! * **[`Element`]** — the floating-point kernel surface, unchanged in
+//!   role: scalar algebra (`mul_add`, `abs`, `sqrt`, …) for the drivers,
+//!   oracles and LAPACK tier; SIMD geometry ([`Element::LANES`],
+//!   [`Element::TILE_NR`]); and the unsafe kernel hooks (AVX2 tile,
+//!   dot-panels, compensated driver, Strassen). Each impl delegates to
+//!   the same monomorphic kernels as before.
 //!
-//! The trait is **sealed**: exactly [`f32`] (SGEMM) and [`f64`] (DGEMM)
-//! implement it. Everything above the kernels — [`crate::blas::Matrix`]
-//! views, `gemm::{naive, blocked, tile, pack, parallel, batch, plan}`,
-//! dispatch selection and the tuned-parameter cache — is generic over
-//! `T: Element`, with `T = f32` as the default type parameter so the
-//! classic SGEMM surface is unchanged.
+//! Both traits are **sealed**. Everything above the kernels —
+//! [`crate::blas::Matrix`] views, `gemm::{naive, blocked, tile, pack,
+//! parallel, batch, plan}`, dispatch selection and the tuned-parameter
+//! cache — is generic over `T: Scalar` (storage) or `T: Element` /
+//! `K: GemmTriple` (arithmetic), with `T = f32` as the default type
+//! parameter so the classic SGEMM surface is unchanged. The quantized
+//! driver lives in [`crate::gemm::quant`].
 //!
-//! Precision support matrix (kernel × element):
+//! Precision support matrix (kernel × instantiation):
 //!
-//! | tier                  | f32          | f64                    |
-//! |-----------------------|--------------|------------------------|
-//! | naive / blocked       | yes          | yes (generic scalar)   |
-//! | Emmerald SSE dot      | yes (paper)  | — (no f64 SSE kernel)  |
-//! | Emmerald AVX2 dot     | yes (8-wide) | yes (4-wide YMM)       |
-//! | outer-product tile    | yes (6×16)   | yes (6×8, 12 YMM acc)  |
-//! | parallel split        | yes          | yes                    |
-//! | Strassen–Winograd     | yes          | — (degrades to serial) |
-//! | batched / planned     | yes          | yes                    |
-//! | compensated mode      | yes (Dot2)   | n/a (already f64)      |
-//! | fused epilogue        | yes          | yes                    |
+//! | tier                  | f32          | f64                    | u8×i8→i32                   |
+//! |-----------------------|--------------|------------------------|-----------------------------|
+//! | naive / blocked       | yes          | yes (generic scalar)   | yes (widening oracle)       |
+//! | Emmerald SSE dot      | yes (paper)  | — (no f64 SSE kernel)  | — (by construction)         |
+//! | Emmerald AVX2 dot     | yes (8-wide) | yes (4-wide YMM)       | — (tile tier instead)       |
+//! | outer-product tile    | yes (6×16)   | yes (6×8, 12 YMM acc)  | yes (6×16, maddubs+madd)    |
+//! | parallel split        | yes          | yes                    | yes (row split, bitwise)    |
+//! | Strassen–Winograd     | yes          | — (degrades to serial) | — (by construction)         |
+//! | batched / planned     | yes          | yes                    | yes (prepacked qgemm)       |
+//! | compensated mode      | yes (Dot2)   | n/a (already f64)      | n/a (i32 is exact)          |
+//! | fused epilogue        | yes          | yes                    | requant (i32→f32) + bias/act|
 
 use super::params::{BlockParams, Unroll};
 use super::simd::VecIsa;
@@ -50,16 +72,66 @@ use std::fmt::{Debug, Display};
 use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
 
 mod sealed {
-    /// Seals [`super::Element`]: the kernel ladder carries hand-written
-    /// SIMD instantiations per element type, so outside impls cannot be
-    /// meaningful.
+    /// Seals [`super::Scalar`] and [`super::Element`]: the kernel ladder
+    /// carries hand-written SIMD instantiations per type, so outside
+    /// impls cannot be meaningful.
     pub trait Sealed {}
     impl Sealed for f32 {}
     impl Sealed for f64 {}
+    impl Sealed for u8 {}
+    impl Sealed for i8 {}
+    impl Sealed for i32 {}
+}
+
+/// A matrix storage scalar: the bound every view, matrix and packing
+/// buffer is generic over. Implemented by exactly the types that appear
+/// as a side of some supported [`GemmTriple`]: `f32`, `f64`, `u8`, `i8`
+/// and `i32`.
+///
+/// Deliberately minimal — closed `+`/`*` and the two identities are all
+/// the storage layers need (zero-fill of packing pads, `beta`-scaling of
+/// `C`). The floating-point kernel surface lives in the [`Element`]
+/// subtrait; integer arithmetic in the quantized driver goes through
+/// [`GemmTriple::madd`] (wrapping), never through these ops.
+pub trait Scalar:
+    sealed::Sealed
+    + Copy
+    + Default
+    + Send
+    + Sync
+    + PartialEq
+    + Debug
+    + Add<Output = Self>
+    + Mul<Output = Self>
+    + AddAssign
+    + MulAssign
+    + 'static
+{
+    /// Additive identity (packing-pad fill value).
+    const ZERO: Self;
+    /// Multiplicative identity (`beta == ONE` fast path).
+    const ONE: Self;
+}
+
+macro_rules! impl_scalar {
+    ($($t:ty => $zero:expr, $one:expr;)*) => {$(
+        impl Scalar for $t {
+            const ZERO: $t = $zero;
+            const ONE: $t = $one;
+        }
+    )*};
+}
+
+impl_scalar! {
+    f32 => 0.0, 1.0;
+    f64 => 0.0, 1.0;
+    u8 => 0, 1;
+    i8 => 0, 1;
+    i32 => 0, 1;
 }
 
 /// Runtime identity of an [`Element`] instantiation — the key the
-/// dispatch tables and the tuned-parameter cache are segmented by.
+/// float dispatch tables are segmented by.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ElementId {
     /// Single precision (SGEMM — the paper's element).
@@ -69,8 +141,7 @@ pub enum ElementId {
 }
 
 impl ElementId {
-    /// Stable name, as stored in the tuned cache and accepted by the CLI
-    /// `--element` flags.
+    /// Stable name, as accepted by the CLI `--element` flags.
     pub fn name(self) -> &'static str {
         match self {
             ElementId::F32 => "f32",
@@ -86,35 +157,177 @@ impl ElementId {
             _ => None,
         }
     }
+
+    /// The homogeneous kernel triple this element instantiates.
+    pub fn triple(self) -> TripleId {
+        match self {
+            ElementId::F32 => TripleId::F32,
+            ElementId::F64 => TripleId::F64,
+        }
+    }
 }
 
-/// The sealed element trait — see the module docs. `f32` and `f64` only.
+/// Runtime identity of a [`GemmTriple`] instantiation — the key the
+/// dispatch tables and the tuned-parameter cache (schema v4) are
+/// segmented by.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TripleId {
+    /// Homogeneous single precision: `f32 × f32 → f32`.
+    F32,
+    /// Homogeneous double precision: `f64 × f64 → f64`.
+    F64,
+    /// Quantized inference: `u8 × i8 → i32` (i32 accumulate).
+    QU8I8,
+}
+
+impl TripleId {
+    /// Stable name, as stored in the tuned cache (`"triple"` key).
+    pub fn name(self) -> &'static str {
+        match self {
+            TripleId::F32 => "f32",
+            TripleId::F64 => "f64",
+            TripleId::QU8I8 => "u8i8i32",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(TripleId::F32),
+            "f64" => Some(TripleId::F64),
+            "u8i8i32" => Some(TripleId::QU8I8),
+            _ => None,
+        }
+    }
+
+    /// The [`ElementId`] of a homogeneous float triple; `None` for the
+    /// quantized triple (which has no `Element` impl by design).
+    pub fn element(self) -> Option<ElementId> {
+        match self {
+            TripleId::F32 => Some(ElementId::F32),
+            TripleId::F64 => Some(ElementId::F64),
+            TripleId::QU8I8 => None,
+        }
+    }
+}
+
+/// One GEMM kernel instantiation, named by its four types:
+/// `C: Out ⟵ A: Lhs × B: Rhs`, accumulated in `Acc`.
+///
+/// Drivers generic over `K: GemmTriple` take `MatRef<K::Lhs>` /
+/// `MatRef<K::Rhs>` operands and a `MatMut<K::Out>` destination; packing
+/// buffers pack `Lhs` on the A side and `Rhs` on the B side. The scalar
+/// oracles accumulate with [`madd`](Self::madd), so one generic loop
+/// states the arithmetic contract for every instantiation.
+///
+/// The blanket impl for `T: Element` makes every homogeneous float type
+/// its own triple with `madd(acc, l, r) = acc + l * r` — the exact
+/// pre-refactor statement, preserving f32/f64 bits.
+pub trait GemmTriple: Send + Sync + 'static {
+    /// Left operand (A) storage type.
+    type Lhs: Scalar;
+    /// Right operand (B) storage type.
+    type Rhs: Scalar;
+    /// Destination (C) storage type.
+    type Out: Scalar;
+    /// Accumulator type (widening for the quantized triple).
+    type Acc: Scalar;
+    /// Runtime identity (dispatch-table / tuned-cache key).
+    const TRIPLE: TripleId;
+
+    /// One widening multiply-accumulate step: `acc ⊕ (l ⊗ r)`. Floats
+    /// use plain `+`/`*` (bit-compatibility with the pre-refactor
+    /// oracles); integer triples use wrapping adds so accumulation is
+    /// exact mod 2³² and order-independent.
+    fn madd(acc: Self::Acc, l: Self::Lhs, r: Self::Rhs) -> Self::Acc;
+
+    /// Final accumulator → destination conversion (identity for every
+    /// currently supported triple; the quantized requant path converts
+    /// in the epilogue instead, where scales are known).
+    fn acc_to_out(acc: Self::Acc) -> Self::Out;
+
+    /// Accumulate-into-destination addition (`C += result` mode): plain
+    /// `+` for floats, wrapping for integer outputs (exact mod 2³²,
+    /// never a debug overflow panic).
+    fn out_add(a: Self::Out, b: Self::Out) -> Self::Out;
+}
+
+impl<T: Element> GemmTriple for T {
+    type Lhs = T;
+    type Rhs = T;
+    type Out = T;
+    type Acc = T;
+    const TRIPLE: TripleId = <T as Element>::TRIPLE_ID;
+
+    #[inline(always)]
+    fn madd(acc: T, l: T, r: T) -> T {
+        acc + l * r
+    }
+
+    #[inline(always)]
+    fn acc_to_out(acc: T) -> T {
+        acc
+    }
+
+    #[inline(always)]
+    fn out_add(a: T, b: T) -> T {
+        a + b
+    }
+}
+
+/// The quantized-inference triple: `u8` activations × `i8` weights,
+/// accumulated and stored as `i32`.
+///
+/// `madd` wraps (exact mod 2³²): every partial product fits `i32`
+/// (`255 · 127 = 32385`), and wrapping addition is associative and
+/// commutative, so any blocking/threading schedule produces bitwise
+/// identical sums — the foundation of the qgemm conformance contract.
+/// `Qu8i8` implements [`GemmTriple`] but *not* [`Element`]: the
+/// float-only tiers (SSE dot, Strassen, compensated accumulation) cannot
+/// even be named for it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Qu8i8;
+
+impl GemmTriple for Qu8i8 {
+    type Lhs = u8;
+    type Rhs = i8;
+    type Out = i32;
+    type Acc = i32;
+    const TRIPLE: TripleId = TripleId::QU8I8;
+
+    #[inline(always)]
+    fn madd(acc: i32, l: u8, r: i8) -> i32 {
+        acc.wrapping_add((l as i32) * (r as i32))
+    }
+
+    #[inline(always)]
+    fn acc_to_out(acc: i32) -> i32 {
+        acc
+    }
+
+    #[inline(always)]
+    fn out_add(a: i32, b: i32) -> i32 {
+        a.wrapping_add(b)
+    }
+}
+
+/// The sealed floating-point kernel trait — see the module docs. `f32`
+/// and `f64` only; integer scalars stop at [`Scalar`] and reach the
+/// kernels through [`Qu8i8`] instead.
 pub trait Element:
-    sealed::Sealed
-    + Copy
-    + Default
-    + Send
-    + Sync
-    + PartialEq
+    Scalar
     + PartialOrd
-    + Debug
     + Display
-    + Add<Output = Self>
     + Sub<Output = Self>
-    + Mul<Output = Self>
     + Div<Output = Self>
     + Neg<Output = Self>
-    + AddAssign
     + SubAssign
-    + MulAssign
-    + 'static
 {
-    /// Additive identity.
-    const ZERO: Self;
-    /// Multiplicative identity.
-    const ONE: Self;
-    /// Runtime identity (dispatch-table / cache key).
+    /// Runtime identity (float dispatch-table key).
     const ID: ElementId;
+    /// The homogeneous [`TripleId`] (drives the blanket [`GemmTriple`]
+    /// impl and the tuned-cache v4 key).
+    const TRIPLE_ID: TripleId;
     /// Lanes per 256-bit vector (8 f32, 4 f64).
     const LANES: usize;
     /// Outer-product tile width: two 256-bit vectors (16 f32, 8 f64).
@@ -262,9 +475,8 @@ pub trait Element:
 }
 
 impl Element for f32 {
-    const ZERO: f32 = 0.0;
-    const ONE: f32 = 1.0;
     const ID: ElementId = ElementId::F32;
+    const TRIPLE_ID: TripleId = TripleId::F32;
     const LANES: usize = 8;
     const TILE_NR: usize = 16;
 
@@ -469,9 +681,8 @@ impl Element for f32 {
 }
 
 impl Element for f64 {
-    const ZERO: f64 = 0.0;
-    const ONE: f64 = 1.0;
     const ID: ElementId = ElementId::F64;
+    const TRIPLE_ID: TripleId = TripleId::F64;
     const LANES: usize = 4;
     const TILE_NR: usize = 8;
 
@@ -677,6 +888,48 @@ mod tests {
         assert_eq!(ElementId::from_name("f16"), None);
         assert_eq!(<f32 as Element>::ID.name(), "f32");
         assert_eq!(<f64 as Element>::ID.name(), "f64");
+    }
+
+    #[test]
+    fn triple_ids_and_names_roundtrip() {
+        for id in [TripleId::F32, TripleId::F64, TripleId::QU8I8] {
+            assert_eq!(TripleId::from_name(id.name()), Some(id));
+        }
+        assert_eq!(TripleId::from_name("i8i8i32"), None);
+        assert_eq!(<f32 as GemmTriple>::TRIPLE, TripleId::F32);
+        assert_eq!(<f64 as GemmTriple>::TRIPLE, TripleId::F64);
+        assert_eq!(<Qu8i8 as GemmTriple>::TRIPLE, TripleId::QU8I8);
+        // Homogeneous triples round-trip to their element; the quantized
+        // triple deliberately has none.
+        assert_eq!(TripleId::F32.element(), Some(ElementId::F32));
+        assert_eq!(TripleId::F64.element(), Some(ElementId::F64));
+        assert_eq!(TripleId::QU8I8.element(), None);
+        assert_eq!(ElementId::F32.triple(), TripleId::F32);
+        assert_eq!(ElementId::F64.triple(), TripleId::F64);
+    }
+
+    #[test]
+    fn blanket_madd_is_the_pre_refactor_statement() {
+        // The homogeneous blanket impl must compute `acc + l * r` with
+        // plain ops — bit-identical to the old oracles' `acc += av * bv`.
+        let (acc, l, r) = (0.1f32, 0.3f32, 0.7f32);
+        assert_eq!(<f32 as GemmTriple>::madd(acc, l, r).to_bits(), (acc + l * r).to_bits());
+        let (acc, l, r) = (0.1f64, 0.3f64, 0.7f64);
+        assert_eq!(<f64 as GemmTriple>::madd(acc, l, r).to_bits(), (acc + l * r).to_bits());
+    }
+
+    #[test]
+    fn qu8i8_madd_widens_and_wraps() {
+        // Extremes of the operand ranges widen exactly...
+        assert_eq!(Qu8i8::madd(0, 255, 127), 32385);
+        assert_eq!(Qu8i8::madd(0, 255, -128), -32640);
+        // ...and accumulation is wrapping (exact mod 2³², never a debug
+        // overflow panic), hence order-independent.
+        assert_eq!(Qu8i8::madd(i32::MAX, 1, 1), i32::MIN);
+        let terms: [(u8, i8); 3] = [(255, 127), (200, -128), (7, 11)];
+        let fwd = terms.iter().fold(i32::MAX - 10_000, |acc, &(l, r)| Qu8i8::madd(acc, l, r));
+        let rev = terms.iter().rev().fold(i32::MAX - 10_000, |acc, &(l, r)| Qu8i8::madd(acc, l, r));
+        assert_eq!(fwd, rev);
     }
 
     #[test]

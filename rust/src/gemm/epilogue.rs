@@ -175,6 +175,116 @@ impl<T: Element> Epilogue<T> {
     }
 }
 
+/// The quantized-GEMM writeback stage: dequantize a raw i32 dot product
+/// into f32, then bias, activation — the int8 tier's counterpart of
+/// [`Epilogue`], fused into [`crate::gemm::quant`]'s C writeback.
+///
+/// Quantization semantics: the LHS is affine u8 (`real_a =
+/// a_scale·(a − a_zp)`, per-row or uniform — each row of an activation
+/// matrix gets its own range), the RHS symmetric i8 (`real_b =
+/// b_scale·b`, per-channel/column or uniform — the weight convention).
+/// With `S = Σₖ a·b` the raw widening product and `colsum_b[c] = Σₖ
+/// b[k][c]`, the dequantized element is
+///
+/// ```text
+/// v = a_scale[r]·b_scale[c] · (S − a_zp[r]·colsum_b[c]) as f32
+/// ```
+///
+/// then `v += bias[c]` and the activation, in exactly that order. Every
+/// step is per-element with a fixed operation order, so requantized
+/// output is bitwise identical across the serial, parallel and
+/// prepacked drivers and bitwise identical to a separate pass over a
+/// raw i32 GEMM — the same contract [`Epilogue`] gives floats. The zero
+/// -point correction uses wrapping i32 arithmetic like the kernels.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Requant {
+    /// LHS scale: one entry (uniform) or one per row of `C`.
+    pub a_scale: Vec<f32>,
+    /// LHS zero point: one entry (uniform) or one per row of `C`.
+    pub a_zp: Vec<i32>,
+    /// RHS scale: one entry (uniform) or one per column of `C`.
+    pub b_scale: Vec<f32>,
+    /// Optional per-column bias (length `n`), added after dequantization.
+    pub bias: Option<Vec<f32>>,
+    /// Activation applied last.
+    pub activation: Activation,
+}
+
+impl Requant {
+    /// Uniform scales/zero point, no bias, no activation.
+    pub fn uniform(a_scale: f32, a_zp: i32, b_scale: f32) -> Self {
+        Self {
+            a_scale: vec![a_scale],
+            a_zp: vec![a_zp],
+            b_scale: vec![b_scale],
+            bias: None,
+            activation: Activation::None,
+        }
+    }
+
+    /// Per-row LHS quantization and per-channel RHS scales.
+    pub fn per_row(a_scale: Vec<f32>, a_zp: Vec<i32>, b_scale: Vec<f32>) -> Self {
+        Self { a_scale, a_zp, b_scale, bias: None, activation: Activation::None }
+    }
+
+    /// Add a per-column bias (length `n`).
+    pub fn bias(mut self, bias: Vec<f32>) -> Self {
+        self.bias = Some(bias);
+        self
+    }
+
+    /// Set the activation.
+    pub fn activation(mut self, act: Activation) -> Self {
+        self.activation = act;
+        self
+    }
+
+    /// Validate vector lengths against the output shape `m × n`.
+    pub fn validate(&self, m: usize, n: usize) -> Result<(), BlasError> {
+        let check = |what, len: usize, per: usize| -> Result<(), BlasError> {
+            if len == 1 || len == per {
+                Ok(())
+            } else {
+                Err(BlasError::ShapeMismatch { what, expect: (1, per), got: (1, len) })
+            }
+        };
+        check("requant a_scale", self.a_scale.len(), m)?;
+        check("requant a_zp", self.a_zp.len(), m)?;
+        check("requant b_scale", self.b_scale.len(), n)?;
+        if let Some(b) = &self.bias {
+            if b.len() != n {
+                return Err(BlasError::ShapeMismatch {
+                    what: "requant bias",
+                    expect: (1, n),
+                    got: (1, b.len()),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Dequantize one raw sum `s` at global `C` position `(r, c)`, given
+    /// the RHS column sum. This is *the* scalar function: every driver
+    /// path funnels each element through it exactly once.
+    #[inline]
+    pub fn apply_scalar(&self, s: i32, colsum_b: i32, r: usize, c: usize) -> f32 {
+        let zp = self.a_zp[if self.a_zp.len() == 1 { 0 } else { r }];
+        let corrected = s.wrapping_sub(zp.wrapping_mul(colsum_b));
+        let scale = self.a_scale[if self.a_scale.len() == 1 { 0 } else { r }]
+            * self.b_scale[if self.b_scale.len() == 1 { 0 } else { c }];
+        let mut v = scale * corrected as f32;
+        if let Some(bias) = &self.bias {
+            v += bias[c];
+        }
+        match self.activation {
+            Activation::None => v,
+            Activation::Relu => v.max(0.0),
+            Activation::Gelu => gelu(v),
+            Activation::Tanh => v.tanh(),
+        }
+    }
+}
+
 /// Tanh-approximated GELU, computed in `T` arithmetic so f32 and f64
 /// results are each self-consistent across every driver.
 #[inline]
@@ -272,6 +382,52 @@ mod tests {
         ep.apply(&mut m.view_mut(), 1, 2);
         assert_eq!(m.get(0, 1), 7.0);
         assert_eq!(m.get(1, 0), 9.0);
+    }
+
+    #[test]
+    fn requant_zero_point_correction_and_order() {
+        // S = Σ a·b with a ∈ u8, a_zp = 3, colsum_b = Σ b: the corrected
+        // sum must equal Σ (a − zp)·b. One k=2 column by hand:
+        // a = [5, 7], b = [2, −4] → S = 10 − 28 = −18, colsum = −2,
+        // corrected = −18 − 3·(−2) = −12 = (5−3)·2 + (7−3)·(−4). ✓
+        let rq = Requant::uniform(0.5, 3, 0.25);
+        assert_eq!(rq.apply_scalar(-18, -2, 0, 0), 0.5 * 0.25 * -12.0);
+        // Bias lands after scaling, activation last.
+        let rq = Requant::uniform(0.5, 3, 0.25).bias(vec![100.0]).activation(Activation::Relu);
+        assert_eq!(rq.apply_scalar(-18, -2, 0, 0), 100.0 + 0.5 * 0.25 * -12.0);
+        let rq = Requant::uniform(1.0, 0, 1.0).activation(Activation::Relu);
+        assert_eq!(rq.apply_scalar(-5, 0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn requant_indexes_rows_and_channels_globally() {
+        let rq = Requant::per_row(vec![1.0, 2.0], vec![0, 1], vec![1.0, 10.0]);
+        // Row 1, col 1: scale 2·10, zp 1, colsum 4 → 20·(9 − 4) = 100.
+        assert_eq!(rq.apply_scalar(9, 4, 1, 1), 100.0);
+        // Row 0 keeps zp 0: 1·1·9 = 9.
+        assert_eq!(rq.apply_scalar(9, 4, 0, 0), 9.0);
+    }
+
+    #[test]
+    fn requant_validate_checks_lengths() {
+        assert!(Requant::uniform(1.0, 0, 1.0).validate(3, 4).is_ok());
+        assert!(Requant::per_row(vec![1.0; 3], vec![0; 3], vec![1.0; 4]).validate(3, 4).is_ok());
+        assert!(matches!(
+            Requant::per_row(vec![1.0; 2], vec![0; 3], vec![1.0; 4]).validate(3, 4),
+            Err(BlasError::ShapeMismatch { what: "requant a_scale", .. })
+        ));
+        assert!(matches!(
+            Requant::uniform(1.0, 0, 1.0).bias(vec![0.0; 3]).validate(3, 4),
+            Err(BlasError::ShapeMismatch { what: "requant bias", .. })
+        ));
+    }
+
+    #[test]
+    fn requant_wrapping_correction_is_exact_mod_2_32() {
+        // Overflowing zp·colsum must wrap like the kernels do, not panic.
+        let rq = Requant::uniform(1.0, i32::MAX, 2);
+        let corrected = 7i32.wrapping_sub(i32::MAX.wrapping_mul(2));
+        assert_eq!(rq.apply_scalar(7, 2, 0, 0), corrected as f32);
     }
 
     #[test]

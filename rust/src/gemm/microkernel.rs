@@ -25,7 +25,8 @@
 //!   instantiation (the DGEMM dot tier).
 //! * [`scalar_dot_tile`] — a scalar register-tiled kernel used by the
 //!   ATLAS-proxy backend (ATLAS did not use SSE on the PIII); generic
-//!   over [`Element`].
+//!   over the kernel triple [`GemmTriple`] (homogeneous floats via the
+//!   blanket impl, plus the widening u8×i8→i32 instantiation).
 //! * [`comp_dot_avx2`] / [`comp_dot_scalar`] — compensated (two-term
 //!   Kahan/Dekker, a.k.a. Dot2) f32 dot products: every product's
 //!   rounding error is recovered exactly with an FMA and every
@@ -56,7 +57,7 @@
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
 
-use super::element::Element;
+use super::element::{Element, GemmTriple, Scalar};
 use super::params::Unroll;
 
 /// Prefetch distance in elements (16 f32 = one 64-byte line; fetch four
@@ -482,31 +483,37 @@ pub unsafe fn avx2_dot_panel_dyn(
 /// Scalar register-tiled kernel: an `MR × NR` tile of `C` accumulated in
 /// scalar registers over a length-`len` dot product. This is the ATLAS
 /// proxy's kernel — same blocking discipline as Emmerald, no SIMD. Each
-/// accumulator is an independent serial FP chain, which (absent
-/// fast-math) the compiler cannot legally vectorise, faithfully modelling
-/// ATLAS's scalar code generation. Generic over [`Element`] (the f64
-/// instantiation is the DGEMM ATLAS proxy).
+/// accumulator is an independent serial chain, which (absent fast-math)
+/// the compiler cannot legally vectorise for floats, faithfully modelling
+/// ATLAS's scalar code generation.
+///
+/// Generic over the kernel triple [`GemmTriple`]: `A` rows stream
+/// `K::Lhs`, `B` columns stream `K::Rhs`, accumulators are `K::Acc` and
+/// every step goes through [`GemmTriple::madd`]. Homogeneous float
+/// instantiations (`K = f32`/`f64`, via the blanket impl) compute the
+/// exact pre-refactor `acc += av * bv` chain; the quantized instantiation
+/// (`K = Qu8i8`) is the widening u8×i8→i32 scalar tile.
 ///
 /// # Safety
 /// Every `arows[i]` and `bcols[j]` must be readable for `len` elements.
-pub unsafe fn scalar_dot_tile<T: Element, const MR: usize, const NR: usize>(
-    arows: [*const T; MR],
+pub unsafe fn scalar_dot_tile<K: GemmTriple, const MR: usize, const NR: usize>(
+    arows: [*const K::Lhs; MR],
     len: usize,
-    bcols: [*const T; NR],
-) -> [[T; NR]; MR] {
+    bcols: [*const K::Rhs; NR],
+) -> [[K::Acc; NR]; MR] {
     // SAFETY: every read is at offset p < len, within the caller's
     // readable ranges.
     unsafe {
-        let mut acc = [[T::ZERO; NR]; MR];
+        let mut acc = [[<K::Acc as Scalar>::ZERO; NR]; MR];
         for p in 0..len {
-            let mut av = [T::ZERO; MR];
+            let mut av = [<K::Lhs as Scalar>::ZERO; MR];
             for i in 0..MR {
                 av[i] = *arows[i].add(p);
             }
             for (j, &bc) in bcols.iter().enumerate() {
                 let bv = *bc.add(p);
                 for i in 0..MR {
-                    acc[i][j] += av[i] * bv;
+                    acc[i][j] = K::madd(acc[i][j], av[i], bv);
                 }
             }
         }
@@ -988,6 +995,31 @@ mod tests {
         let acc = unsafe { scalar_dot_tile::<f64, 1, 1>([a0.as_ptr()], len, [b0.as_ptr()]) };
         let want: f64 = a0.iter().zip(&b0).map(|(x, y)| x * y).sum();
         assert!((acc[0][0] - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar_tile_qu8i8_matches_widening_reference() {
+        use crate::gemm::element::Qu8i8;
+        // Extremes included: 255 × ±127 per product, 97 terms — an
+        // independent cross-check of the quantized tile arithmetic.
+        let len = 97;
+        let mut rng = Pcg32::new(31);
+        let a0: Vec<u8> = (0..len).map(|_| (rng.next_u32() % 256) as u8).collect();
+        let a1: Vec<u8> = (0..len).map(|_| if rng.next_u32() % 7 == 0 { 255 } else { 1 }).collect();
+        let b0: Vec<i8> = (0..len).map(|_| (rng.next_u32() % 255) as i8).collect();
+        let b1: Vec<i8> = (0..len)
+            .map(|_| if rng.next_u32() % 2 == 0 { 127 } else { -127 })
+            .collect();
+        let acc = unsafe {
+            scalar_dot_tile::<Qu8i8, 2, 2>([a0.as_ptr(), a1.as_ptr()], len, [b0.as_ptr(), b1.as_ptr()])
+        };
+        let dot = |x: &[u8], y: &[i8]| {
+            x.iter().zip(y).fold(0i32, |s, (&l, &r)| s.wrapping_add(l as i32 * r as i32))
+        };
+        assert_eq!(acc[0][0], dot(&a0, &b0));
+        assert_eq!(acc[0][1], dot(&a0, &b1));
+        assert_eq!(acc[1][0], dot(&a1, &b0));
+        assert_eq!(acc[1][1], dot(&a1, &b1));
     }
 
     #[cfg(target_arch = "x86_64")]

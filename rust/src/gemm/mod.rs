@@ -25,20 +25,34 @@
 //! paper-faithful baseline, the gemv-shaped fallback and the
 //! `tile_vs_dot` ablation point.
 //!
-//! Since the element-generic precision subsystem the whole ladder is
-//! generic over [`element::Element`] — **f32 (SGEMM) and f64 (DGEMM)** —
-//! with `f32` as the default type parameter everywhere. Per element only
-//! the micro-kernel instantiation changes (8- vs 4-wide YMM lanes, 6×16
-//! vs 6×8 tiles); blocking, packing, planning, batching and the parallel
-//! split are shared generic code, and dispatch keeps per-element kernel
-//! tables and tuned geometries. A compensated-f32 accumulation mode
-//! ([`comp`], selected via [`dispatch::Accumulation::CompensatedF32`])
-//! gives f32 storage with ~f64 dot-product accuracy.
+//! Since the kernel-triple refactor the whole ladder is generic over
+//! **kernel triples** ([`element::GemmTriple`]): a GEMM is typed by its
+//! `(Lhs, Rhs, Out)` element types plus an accumulator. The homogeneous
+//! float instantiations — **f32 (SGEMM) and f64 (DGEMM)** — come from a
+//! blanket impl over [`element::Element`] (every single-type GEMM is the
+//! triple `(T, T, T)`), so the float API and its numerics are exactly
+//! what they were before the split. Per element only the micro-kernel
+//! instantiation changes (8- vs 4-wide YMM lanes, 6×16 vs 6×8 tiles);
+//! blocking, packing, planning, batching and the parallel split are
+//! shared generic code, and dispatch keeps per-triple kernel tables and
+//! tuned geometries. A compensated-f32 accumulation mode ([`comp`],
+//! selected via [`dispatch::Accumulation::CompensatedF32`]) gives f32
+//! storage with ~f64 dot-product accuracy.
+//!
+//! The first heterogeneous triple is the **quantized inference tier**
+//! ([`quant`], triple [`element::Qu8i8`] = `u8 × i8 → i32`): exact
+//! integer GEMM on an AVX2 `maddubs` tile, with a fused
+//! [`epilogue::Requant`] writeback (zero-point correction + per-channel
+//! scales + bias + activation) dequantizing straight to f32. Integer
+//! accumulation is wrapping — associative — so serial, parallel and
+//! prepacked runs agree *bitwise* by construction.
 //!
 //! Modules:
 //!
-//! * [`element`] — the sealed element trait (f32, f64): lane widths,
-//!   packing granularity and the per-element kernel hooks.
+//! * [`element`] — the sealed scalar/element hierarchy and the kernel
+//!   -triple model: [`element::Scalar`] (storage types, incl. u8/i8/i32),
+//!   [`element::Element`] (full homogeneous GEMM: f32, f64) and
+//!   [`element::GemmTriple`] (the `(Lhs, Rhs, Out, Acc)` kernel typing).
 //! * [`params`] — block geometry + optimisation toggles (every §3 technique
 //!   can be switched off individually for the ablation benches).
 //! * [`naive`] — the paper's naive 3-loop comparator.
@@ -65,7 +79,10 @@
 //!   activation + clamp) applied inside the kernels' C writeback — one
 //!   traversal of `C` instead of two or three, bitwise identical across
 //!   the serial, parallel and prepacked drivers. Attach via
-//!   `GemmBuilder::epilogue`.
+//!   `GemmBuilder::epilogue`. Also home of the quantized tier's
+//!   [`epilogue::Requant`] writeback stage.
+//! * [`quant`] — the quantized inference tier: `u8 × i8 → i32` packing,
+//!   the AVX2 `maddubs` drivers and their safe scalar fallbacks.
 
 pub mod avx2;
 pub mod batch;
@@ -76,6 +93,7 @@ pub mod element;
 pub mod epilogue;
 pub mod parallel;
 pub mod plan;
+pub mod quant;
 pub mod strassen;
 pub mod microkernel;
 pub mod naive;
@@ -84,12 +102,13 @@ pub mod params;
 pub mod simd;
 pub mod tile;
 
-pub use batch::{gemm_batch, BatchStrides};
+pub use batch::{gemm_batch, qgemm_batch, BatchStrides};
 pub use dispatch::{registry, registry_for, Accumulation, DispatchConfig, GemmDispatch, KernelId, KernelInfo};
-pub use element::{Element, ElementId};
-pub use epilogue::{Activation, Bias, Epilogue};
+pub use element::{Element, ElementId, GemmTriple, Qu8i8, Scalar, TripleId};
+pub use epilogue::{Activation, Bias, Epilogue, Requant};
 pub use params::{BlockParams, TileParams, Unroll};
 pub use plan::{GemmBuilder, GemmContext, GemmPlan, PackedA, PackedB};
+pub use quant::{qgemm, qgemm_requant, QPackedB};
 
 #[cfg(test)]
 pub(crate) mod testutil {

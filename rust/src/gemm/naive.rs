@@ -12,7 +12,7 @@
 //! bounds-checked accessors only (the checked-access cost is exactly what
 //! the Fig. 2 lower baseline is allowed to pay).
 
-use super::element::Element;
+use super::element::{Element, GemmTriple, Scalar};
 use crate::blas::{MatMut, MatRef, Transpose};
 
 /// `C = alpha * op(A) op(B) + beta * C`, three-loop version.
@@ -55,10 +55,57 @@ pub fn gemm<T: Element>(
     }
 }
 
+/// Triple-generic widening oracle: `C ⟵ op(A)·op(B)` (or `C +=` when
+/// `accumulate`), three loops, accumulated in `K::Acc` via
+/// [`GemmTriple::madd`].
+///
+/// This is the arithmetic contract of a kernel triple stated as plainly
+/// as possible — for the quantized triple it is *the* reference every
+/// vectorised path must match bitwise (wrapping i32 accumulation is
+/// order-independent); for homogeneous floats at `alpha = 1` it computes
+/// exactly what [`gemm`] computes, through the blanket impl's
+/// `acc + l * r`. No `alpha`/`beta`: scaling is a float-tier concept;
+/// the quantized tier composes scaling into the requant epilogue instead.
+pub fn gemm_triple<K: GemmTriple>(
+    transa: Transpose,
+    transb: Transpose,
+    a: MatRef<'_, K::Lhs>,
+    b: MatRef<'_, K::Rhs>,
+    c: &mut MatMut<'_, K::Out>,
+    accumulate: bool,
+) {
+    let m = c.rows();
+    let n = c.cols();
+    let k = match transa {
+        Transpose::No => a.cols(),
+        Transpose::Yes => a.rows(),
+    };
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = <K::Acc as Scalar>::ZERO;
+            for p in 0..k {
+                let av = match transa {
+                    Transpose::No => a.get(i, p),
+                    Transpose::Yes => a.get(p, i),
+                };
+                let bv = match transb {
+                    Transpose::No => b.get(p, j),
+                    Transpose::Yes => b.get(j, p),
+                };
+                acc = K::madd(acc, av, bv);
+            }
+            let out = K::acc_to_out(acc);
+            let v = if accumulate { K::out_add(c.get(i, j), out) } else { out };
+            c.set(i, j, v);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::blas::Matrix;
+    use crate::gemm::Qu8i8;
 
     #[test]
     fn identity_times_x_is_x() {
@@ -110,5 +157,52 @@ mod tests {
         let mut c = Matrix::from_fn(2, 2, |_, _| 4.0);
         gemm(Transpose::No, Transpose::No, 0.0, a.view(), b.view(), 0.25, &mut c.view_mut());
         assert!(c.data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn homogeneous_triple_oracle_matches_gemm_bitwise() {
+        // The blanket impl's madd is the classic oracle's statement, so
+        // gemm_triple::<f32> at alpha=1/beta=0 must reproduce its bits.
+        let a = Matrix::<f32>::random(5, 4, 11, -1.0, 1.0);
+        let b = Matrix::<f32>::random(4, 6, 12, -1.0, 1.0);
+        let mut c1 = Matrix::zeros(5, 6);
+        let mut c2 = Matrix::zeros(5, 6);
+        gemm(Transpose::No, Transpose::No, 1.0, a.view(), b.view(), 0.0, &mut c1.view_mut());
+        gemm_triple::<f32>(Transpose::No, Transpose::No, a.view(), b.view(), &mut c2.view_mut(), false);
+        assert_eq!(c1.data(), c2.data());
+    }
+
+    #[test]
+    fn quantized_triple_oracle_known_values() {
+        // [[1,2],[3,4]]u8 · [[5,-6],[7,8]]i8 = [[19,10],[43,14]]i32
+        let a = Matrix::<u8>::from_fn(2, 2, |r, c| (r * 2 + c + 1) as u8);
+        let b = Matrix::<i8>::from_fn(2, 2, |r, c| [[5, -6], [7, 8]][r][c]);
+        let mut c = Matrix::<i32>::zeros(2, 2);
+        gemm_triple::<Qu8i8>(Transpose::No, Transpose::No, a.view(), b.view(), &mut c.view_mut(), false);
+        assert_eq!(c.data(), &[19, 10, 43, 14]);
+        // Accumulate mode adds (wrapping) instead of overwriting.
+        gemm_triple::<Qu8i8>(Transpose::No, Transpose::No, a.view(), b.view(), &mut c.view_mut(), true);
+        assert_eq!(c.data(), &[38, 20, 86, 28]);
+    }
+
+    #[test]
+    fn quantized_triple_oracle_transposes_and_saturating_inputs() {
+        // Extremes (255 × ±127) and all four layouts agree with an
+        // explicitly materialised transpose.
+        let a = Matrix::<u8>::from_fn(3, 2, |r, c| if (r + c) % 2 == 0 { 255 } else { 3 });
+        let b = Matrix::<i8>::from_fn(2, 4, |r, c| if (r + c) % 2 == 0 { 127 } else { -127 });
+        let at = Matrix::<u8>::from_fn(2, 3, |r, c| a.get(c, r));
+        let bt = Matrix::<i8>::from_fn(4, 2, |r, c| b.get(c, r));
+        let mut want = Matrix::<i32>::zeros(3, 4);
+        gemm_triple::<Qu8i8>(Transpose::No, Transpose::No, a.view(), b.view(), &mut want.view_mut(), false);
+        for (ta, tb, av, bv) in [
+            (Transpose::Yes, Transpose::No, at.view(), b.view()),
+            (Transpose::No, Transpose::Yes, a.view(), bt.view()),
+            (Transpose::Yes, Transpose::Yes, at.view(), bt.view()),
+        ] {
+            let mut got = Matrix::<i32>::zeros(3, 4);
+            gemm_triple::<Qu8i8>(ta, tb, av, bv, &mut got.view_mut(), false);
+            assert_eq!(got.data(), want.data(), "ta={ta:?} tb={tb:?}");
+        }
     }
 }

@@ -13,8 +13,15 @@
 //! not pack `A` (it streams rows with prefetch), but packing becomes
 //! necessary when `A` is logically transposed (its rows are then strided
 //! in memory) and is exposed as an ablation toggle otherwise.
+//!
+//! All packers are generic over the storage scalar
+//! ([`crate::gemm::Scalar`]), not the float kernel trait: the kernel
+//! triple's A side packs `K::Lhs` and its B side packs `K::Rhs`, so the
+//! same layouts serve f32/f64 GEMM and the quantized `u8`/`i8` tier (the
+//! latter's 4-k-group re-ordering lives in [`crate::gemm::quant`], built
+//! on the same principles).
 
-use super::element::Element;
+use super::element::Scalar;
 use crate::blas::{MatRef, Transpose};
 use crate::util::ptr::RawSlice;
 
@@ -47,7 +54,7 @@ pub(crate) enum BSource<'s, T = f32> {
     Virtual(&'s dyn PanelSource<T>),
 }
 
-impl<T: Element> BSource<'_, T> {
+impl<T: Scalar> BSource<'_, T> {
     /// Pack a k-block of this source into `tb`'s NR-panel layout.
     pub(crate) fn pack_tile(
         &self,
@@ -89,7 +96,7 @@ pub struct PackedB<T = f32> {
     n: usize,
 }
 
-impl<T: Element> PackedB<T> {
+impl<T: Scalar> PackedB<T> {
     /// An empty packed buffer for panels of `nr` columns.
     pub fn new(nr: usize) -> Self {
         assert!((1..=8).contains(&nr));
@@ -193,6 +200,17 @@ impl<T: Element> PackedB<T> {
         RawSlice::from_slice(&self.buf[off..off + self.kpad])
     }
 
+    /// Safe value view of global column `j` (`0..n`): the column's `kpad`
+    /// elements, the first `kb_eff` holding data. Panels are laid out so
+    /// that global column `j` starts exactly at `j * kpad` — used by the
+    /// planned compensated path to reconstruct operand values from a
+    /// packed handle without touching raw pointers.
+    #[inline]
+    pub(crate) fn col(&self, j: usize) -> &[T] {
+        assert!(j < self.n, "col: column {j} out of {}", self.n);
+        &self.buf[j * self.kpad..(j + 1) * self.kpad]
+    }
+
     /// Padded column length.
     pub fn kpad(&self) -> usize {
         self.kpad
@@ -217,7 +235,7 @@ pub struct PackedA<T = f32> {
     rows: usize,
 }
 
-impl<T: Element> PackedA<T> {
+impl<T: Scalar> PackedA<T> {
     /// An empty packed buffer.
     pub fn new() -> Self {
         Self { buf: Vec::new(), kpad: 0, rows: 0 }
@@ -287,13 +305,22 @@ impl<T: Element> PackedA<T> {
         RawSlice::from_slice(&self.buf[off..off + self.kpad])
     }
 
+    /// Safe value view of packed row `i`: the row's `kpad` elements, the
+    /// leading portion holding data (zero tail). Companion of
+    /// [`PackedB::col`] for the planned compensated reconstruction.
+    #[inline]
+    pub(crate) fn row(&self, i: usize) -> &[T] {
+        assert!(i < self.rows, "row: row {i} out of {}", self.rows);
+        &self.buf[i * self.kpad..(i + 1) * self.kpad]
+    }
+
     /// Padded row length.
     pub fn kpad(&self) -> usize {
         self.kpad
     }
 }
 
-impl<T: Element> Default for PackedA<T> {
+impl<T: Scalar> Default for PackedA<T> {
     fn default() -> Self {
         Self::new()
     }
@@ -316,7 +343,7 @@ pub struct TilePackedA<T = f32> {
     rows: usize,
 }
 
-impl<T: Element> TilePackedA<T> {
+impl<T: Scalar> TilePackedA<T> {
     /// An empty packed buffer.
     pub fn new() -> Self {
         Self { buf: Vec::new(), mr: 1, kc_eff: 0, rows: 0 }
@@ -396,13 +423,21 @@ impl<T: Element> TilePackedA<T> {
         self.kc_eff
     }
 
+    /// Safe value read of `op(A)[strip s, lane l][k = p]` from the k-major
+    /// strip layout (compensated reconstruction; bounds-checked).
+    #[inline]
+    pub(crate) fn at(&self, s: usize, p: usize, l: usize) -> T {
+        assert!(s < self.strips() && p < self.kc_eff && l < self.mr);
+        self.buf[s * self.mr * self.kc_eff + p * self.mr + l]
+    }
+
     /// Bytes currently held (diagnostic).
     pub fn bytes(&self) -> usize {
         self.buf.len() * std::mem::size_of::<T>()
     }
 }
 
-impl<T: Element> Default for TilePackedA<T> {
+impl<T: Scalar> Default for TilePackedA<T> {
     fn default() -> Self {
         Self::new()
     }
@@ -425,7 +460,7 @@ pub struct TilePackedB<T = f32> {
     cols: usize,
 }
 
-impl<T: Element> TilePackedB<T> {
+impl<T: Scalar> TilePackedB<T> {
     /// An empty packed buffer.
     pub fn new() -> Self {
         Self { buf: Vec::new(), nr: 1, kc_eff: 0, cols: 0 }
@@ -541,13 +576,21 @@ impl<T: Element> TilePackedB<T> {
         self.kc_eff
     }
 
+    /// Safe value read of `op(B)[k = p][panel q, lane l]` from the k-major
+    /// panel layout (compensated reconstruction; bounds-checked).
+    #[inline]
+    pub(crate) fn at(&self, q: usize, p: usize, l: usize) -> T {
+        assert!(q < self.panels() && p < self.kc_eff && l < self.nr);
+        self.buf[q * self.nr * self.kc_eff + p * self.nr + l]
+    }
+
     /// Bytes currently held (diagnostic).
     pub fn bytes(&self) -> usize {
         self.buf.len() * std::mem::size_of::<T>()
     }
 }
 
-impl<T: Element> Default for TilePackedB<T> {
+impl<T: Scalar> Default for TilePackedB<T> {
     fn default() -> Self {
         Self::new()
     }
@@ -569,14 +612,14 @@ pub struct Scratch<T = f32> {
     pub(crate) tb: TilePackedB<T>,
 }
 
-impl<T: Element> Scratch<T> {
+impl<T: Scalar> Scratch<T> {
     /// Fresh, empty scratch buffers.
     pub fn new() -> Self {
         Self { a: PackedA::new(), b: PackedB::new(1), ta: TilePackedA::new(), tb: TilePackedB::new() }
     }
 }
 
-impl<T: Element> Default for Scratch<T> {
+impl<T: Scalar> Default for Scratch<T> {
     fn default() -> Self {
         Self::new()
     }

@@ -33,7 +33,7 @@
 //! (`alpha == 0` or `k == 0`) sweep `C` over the same pool.
 
 use crate::blas::{BlasError, MatMut, MatRef, Transpose};
-use crate::gemm::element::Element;
+use crate::gemm::element::{Element, Scalar};
 use crate::gemm::epilogue::Epilogue;
 use crate::gemm::params::TileParams;
 use crate::gemm::simd::{gemm_vec, gemm_vec_ep, VecIsa};
@@ -184,7 +184,7 @@ pub(crate) fn chunk_spans(len: usize, slices: usize, align: usize) -> Vec<(usize
 
 /// Split `C` into up to `slices` disjoint row slices (starts aligned to
 /// `align`), each paired with its start row.
-pub(crate) fn c_row_slices<T: Element>(c: MatMut<'_, T>, slices: usize, align: usize) -> Vec<(usize, MatMut<'_, T>)> {
+pub(crate) fn c_row_slices<T: Scalar>(c: MatMut<'_, T>, slices: usize, align: usize) -> Vec<(usize, MatMut<'_, T>)> {
     let m = c.rows();
     let mut out = Vec::new();
     let mut rest = c;
@@ -198,7 +198,7 @@ pub(crate) fn c_row_slices<T: Element>(c: MatMut<'_, T>, slices: usize, align: u
 
 /// Split `C` into up to `slices` disjoint column slices (starts aligned to
 /// `align`), each paired with its start column.
-pub(crate) fn c_col_slices<T: Element>(c: MatMut<'_, T>, slices: usize, align: usize) -> Vec<(usize, MatMut<'_, T>)> {
+pub(crate) fn c_col_slices<T: Scalar>(c: MatMut<'_, T>, slices: usize, align: usize) -> Vec<(usize, MatMut<'_, T>)> {
     let n = c.cols();
     let mut out = Vec::new();
     let mut rest = c;
@@ -212,7 +212,7 @@ pub(crate) fn c_col_slices<T: Element>(c: MatMut<'_, T>, slices: usize, align: u
 
 /// Rows `r0 .. r0+rows` of `op(A)` as a view of the *stored* matrix
 /// (columns of storage when `A` is logically transposed).
-fn op_a_rows<'a, T: Element>(a: MatRef<'a, T>, transa: Transpose, r0: usize, rows: usize) -> MatRef<'a, T> {
+fn op_a_rows<'a, T: Scalar>(a: MatRef<'a, T>, transa: Transpose, r0: usize, rows: usize) -> MatRef<'a, T> {
     match transa {
         Transpose::No => a.block(r0, 0, rows, a.cols()),
         Transpose::Yes => a.block(0, r0, a.rows(), rows),
@@ -221,7 +221,7 @@ fn op_a_rows<'a, T: Element>(a: MatRef<'a, T>, transa: Transpose, r0: usize, row
 
 /// Columns `c0 .. c0+cols` of `op(B)` as a view of the *stored* matrix
 /// (rows of storage when `B` is logically transposed).
-fn op_b_cols<'a, T: Element>(b: MatRef<'a, T>, transb: Transpose, c0: usize, cols: usize) -> MatRef<'a, T> {
+fn op_b_cols<'a, T: Scalar>(b: MatRef<'a, T>, transb: Transpose, c0: usize, cols: usize) -> MatRef<'a, T> {
     match transb {
         Transpose::No => b.block(0, c0, b.rows(), cols),
         Transpose::Yes => b.block(c0, 0, cols, b.cols()),
@@ -232,13 +232,13 @@ fn op_b_cols<'a, T: Element>(b: MatRef<'a, T>, transb: Transpose, c0: usize, col
 /// row-split work list (shared with
 /// [`crate::gemm::plan::GemmPlan::run_packed_b`], which is what keeps the
 /// prepacked parallel runs bit-identical to this driver's).
-pub(crate) fn row_slices<'a, T: Element>(
-    a: MatRef<'a, T>,
+pub(crate) fn row_slices<'a, A: Scalar, T: Scalar>(
+    a: MatRef<'a, A>,
     transa: Transpose,
     c: MatMut<'a, T>,
     slices: usize,
     align: usize,
-) -> Vec<(usize, MatRef<'a, T>, MatMut<'a, T>)> {
+) -> Vec<(usize, MatRef<'a, A>, MatMut<'a, T>)> {
     c_row_slices(c, slices, align)
         .into_iter()
         .map(|(r0, cs)| (r0, op_a_rows(a, transa, r0, cs.rows()), cs))
@@ -247,13 +247,13 @@ pub(crate) fn row_slices<'a, T: Element>(
 
 /// Column slices of `C` paired with the matching columns of `op(B)` — the
 /// column-split twin of [`row_slices`].
-pub(crate) fn col_slices<'a, T: Element>(
-    b: MatRef<'a, T>,
+pub(crate) fn col_slices<'a, B: Scalar, T: Scalar>(
+    b: MatRef<'a, B>,
     transb: Transpose,
     c: MatMut<'a, T>,
     slices: usize,
     align: usize,
-) -> Vec<(usize, MatRef<'a, T>, MatMut<'a, T>)> {
+) -> Vec<(usize, MatRef<'a, B>, MatMut<'a, T>)> {
     c_col_slices(c, slices, align)
         .into_iter()
         .map(|(c0, cs)| (c0, op_b_cols(b, transb, c0, cs.cols()), cs))

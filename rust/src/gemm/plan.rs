@@ -34,13 +34,15 @@
 use super::batch;
 use super::dispatch::{DispatchConfig, GemmDispatch, GemmShape, KernelId};
 use super::element::{Element, ElementId};
-use super::epilogue::Epilogue;
+use super::epilogue::{Epilogue, Requant};
 use super::pack;
+use super::parallel;
 use super::params::{BlockParams, TileParams};
+use super::quant;
 use super::simd::VecIsa;
 use super::tile;
 use crate::util::ptr::RawSlice;
-use crate::blas::{BlasError, MatMut, MatRef, Transpose};
+use crate::blas::{BlasError, MatMut, MatRef, Matrix, Transpose};
 use crate::util::threadpool::{run_borrowed_on, ThreadPool};
 use std::sync::{Arc, OnceLock, RwLock};
 
@@ -310,6 +312,191 @@ impl GemmContext {
             .map(|s| Box::new(move || f(s)) as Box<dyn FnOnce() + Send + '_>)
             .collect();
         self.run_jobs(jobs);
+    }
+
+    // ----- quantized tier (u8 × i8 → i32) ---------------------------------
+    //
+    // The heterogeneous triple does not go through GemmPlan: there is no
+    // alpha/beta, no kernel-family choice beyond "AVX2 tile or scalar",
+    // and no float accumulation mode — so the planned machinery above
+    // would be a shell. The context still owns what matters: the thread
+    // budget (row split over the pool) and the prepacked-B reuse.
+
+    /// Pre-pack `op(B)` (`k × n`) for the quantized tier — the
+    /// weight-stationary handle for [`GemmContext::qgemm_packed_b`] /
+    /// [`GemmContext::qgemm_requant_packed_b`].
+    pub fn qpack_b(
+        &self,
+        transb: Transpose,
+        k: usize,
+        n: usize,
+        b: &[i8],
+        ldb: usize,
+    ) -> Result<quant::QPackedB, BlasError> {
+        let (br, bc) = match transb {
+            Transpose::No => (k, n),
+            Transpose::Yes => (n, k),
+        };
+        let bv = MatRef::new(b, br, bc, ldb).map_err(|e| e.operand("B"))?;
+        Ok(quant::QPackedB::pack(bv, transb, k, n))
+    }
+
+    /// Quantized GEMM: `C ⟵ op(A)·op(B)` (or `C +=` with `accumulate`,
+    /// wrapping) in exact i32, row-split over the context pool. Bitwise
+    /// identical to the serial [`quant::qgemm`] for any thread budget —
+    /// wrapping integer sums are associative, and the row split never
+    /// divides a dot product.
+    pub fn qgemm(
+        &self,
+        transa: Transpose,
+        transb: Transpose,
+        a: MatRef<'_, u8>,
+        b: MatRef<'_, i8>,
+        c: MatMut<'_, i32>,
+        accumulate: bool,
+    ) -> Result<(), BlasError> {
+        let k = match transa {
+            Transpose::No => a.cols(),
+            Transpose::Yes => a.rows(),
+        };
+        let (br, bc) = match transb {
+            Transpose::No => (k, c.cols()),
+            Transpose::Yes => (c.cols(), k),
+        };
+        if (b.rows(), b.cols()) != (br, bc) {
+            return Err(BlasError::ShapeMismatch {
+                what: "quantized B",
+                expect: (br, bc),
+                got: (b.rows(), b.cols()),
+            });
+        }
+        let pb = quant::QPackedB::pack(b, transb, k, c.cols());
+        self.qgemm_packed_b(transa, a, &pb, c, accumulate)
+    }
+
+    /// Quantized GEMM with the fused [`Requant`] writeback into f32
+    /// (always overwrites `C`), row-split over the context pool.
+    pub fn qgemm_requant(
+        &self,
+        transa: Transpose,
+        transb: Transpose,
+        a: MatRef<'_, u8>,
+        b: MatRef<'_, i8>,
+        c: MatMut<'_, f32>,
+        rq: &Requant,
+    ) -> Result<(), BlasError> {
+        let k = match transa {
+            Transpose::No => a.cols(),
+            Transpose::Yes => a.rows(),
+        };
+        let (br, bc) = match transb {
+            Transpose::No => (k, c.cols()),
+            Transpose::Yes => (c.cols(), k),
+        };
+        if (b.rows(), b.cols()) != (br, bc) {
+            return Err(BlasError::ShapeMismatch {
+                what: "quantized B",
+                expect: (br, bc),
+                got: (b.rows(), b.cols()),
+            });
+        }
+        let pb = quant::QPackedB::pack(b, transb, k, c.cols());
+        self.qgemm_requant_packed_b(transa, a, &pb, c, rq)
+    }
+
+    /// Quantized GEMM over a prepacked `B` (from
+    /// [`GemmContext::qpack_b`]): the weight-stationary execution path.
+    pub fn qgemm_packed_b(
+        &self,
+        transa: Transpose,
+        a: MatRef<'_, u8>,
+        pb: &quant::QPackedB,
+        c: MatMut<'_, i32>,
+        accumulate: bool,
+    ) -> Result<(), BlasError> {
+        let (m, n) = (c.rows(), c.cols());
+        self.qcheck_operands(transa, a, pb, m, n)?;
+        if m == 0 || n == 0 {
+            return Ok(());
+        }
+        match parallel::split_axis(m, n, self.threads()) {
+            parallel::Split::Rows(t) => self.run_sliced(
+                parallel::row_slices(a, transa, c, t, quant::QMR),
+                |(_, a_slice, mut c_slice)| {
+                    quant::qgemm_packed(a_slice, transa, pb, &mut c_slice, accumulate)
+                },
+            ),
+            // Column splits never pay here: B is packed whole-width and
+            // shared read-only, so splitting columns would only re-walk A.
+            _ => {
+                let mut c = c;
+                quant::qgemm_packed(a, transa, pb, &mut c, accumulate);
+            }
+        }
+        Ok(())
+    }
+
+    /// Requantizing twin of [`GemmContext::qgemm_packed_b`]. Each row
+    /// slice dequantizes with its *global* row offset, so per-row
+    /// [`Requant`] vectors index identically under any split.
+    pub fn qgemm_requant_packed_b(
+        &self,
+        transa: Transpose,
+        a: MatRef<'_, u8>,
+        pb: &quant::QPackedB,
+        c: MatMut<'_, f32>,
+        rq: &Requant,
+    ) -> Result<(), BlasError> {
+        let (m, n) = (c.rows(), c.cols());
+        self.qcheck_operands(transa, a, pb, m, n)?;
+        rq.validate(m, n)?;
+        if m == 0 || n == 0 {
+            return Ok(());
+        }
+        match parallel::split_axis(m, n, self.threads()) {
+            parallel::Split::Rows(t) => self.run_sliced(
+                parallel::row_slices(a, transa, c, t, quant::QMR),
+                |(r0, a_slice, mut c_slice)| {
+                    quant::qgemm_requant_packed(a_slice, transa, pb, r0, &mut c_slice, rq)
+                },
+            ),
+            _ => {
+                let mut c = c;
+                quant::qgemm_requant_packed(a, transa, pb, 0, &mut c, rq);
+            }
+        }
+        Ok(())
+    }
+
+    /// Shared shape validation of the quantized prepacked paths.
+    fn qcheck_operands(
+        &self,
+        transa: Transpose,
+        a: MatRef<'_, u8>,
+        pb: &quant::QPackedB,
+        m: usize,
+        n: usize,
+    ) -> Result<(), BlasError> {
+        let k = pb.k();
+        let (ar, ac) = match transa {
+            Transpose::No => (m, k),
+            Transpose::Yes => (k, m),
+        };
+        if (a.rows(), a.cols()) != (ar, ac) {
+            return Err(BlasError::ShapeMismatch {
+                what: "quantized A",
+                expect: (ar, ac),
+                got: (a.rows(), a.cols()),
+            });
+        }
+        if pb.n() != n {
+            return Err(BlasError::ShapeMismatch {
+                what: "quantized packed B",
+                expect: (k, n),
+                got: (pb.k(), pb.n()),
+            });
+        }
+        Ok(())
     }
 }
 
@@ -624,6 +811,22 @@ impl<T: Element> GemmPlan<T> {
         let transa = self.shape.transa;
         let (alpha, beta) = (self.alpha, self.beta);
         let ep = self.epilogue.as_ref();
+        // Compensated accumulation intercepts the prepacked path exactly
+        // as it intercepts GemmPlan::run: the packed layout is only a
+        // data staging choice, never an arithmetic one, so op(B) is
+        // rebuilt and the compensated driver (which re-packs at full
+        // depth, per element, in k order) produces bit-identical results
+        // to the packing run. The epilogue stays a bitwise-identical
+        // post-pass, as in dispatch's serial comp interception.
+        if self.dispatch.comp_active(self.alpha) {
+            let bm = b.unpack();
+            let mut cv = cv;
+            self.dispatch.comp_intercept(transa, Transpose::No, alpha, av, bm.view(), beta, &mut cv);
+            if let Some(e) = ep {
+                e.apply(&mut cv, 0, 0);
+            }
+            return Ok(());
+        }
         let threads = if self.kernel == KernelId::Parallel { self.dispatch.threads() } else { 1 };
         match geom {
             PackGeometry::Dot(isa, params) => {
@@ -719,6 +922,27 @@ impl<T: Element> GemmPlan<T> {
         let transa = self.shape.transa;
         let (alpha, beta) = (self.alpha, self.beta);
         let ep = self.epilogue.as_ref();
+        // Same compensated interception as run_packed_b, with op(A)
+        // rebuilt too (both reconstructions are untransposed `m × k` /
+        // `k × n`, hence Transpose::No on both operands).
+        if self.dispatch.comp_active(self.alpha) {
+            let am = a.unpack();
+            let bm = b.unpack();
+            let mut cv = cv;
+            self.dispatch.comp_intercept(
+                Transpose::No,
+                Transpose::No,
+                alpha,
+                am.view(),
+                bm.view(),
+                beta,
+                &mut cv,
+            );
+            if let Some(e) = ep {
+                e.apply(&mut cv, 0, 0);
+            }
+            return Ok(());
+        }
         let threads = if self.kernel == KernelId::Parallel { self.dispatch.threads() } else { 1 };
         const MISMATCH: BlasError = BlasError::PlanMismatch(
             "PackedA block geometry differs from the plan's kernel geometry; repack with the current context",
@@ -872,6 +1096,46 @@ impl<T: Element> PackedB<T> {
             PackedBStorage::Tile { blocks, .. } => blocks.iter().map(pack::TilePackedB::bytes).sum(),
         }
     }
+
+    /// Reconstruct the logical `op(B)` (`k × n`) this handle packed.
+    /// Compensation ([`super::comp`]) is a per-call accuracy mode, not a
+    /// packed format: when [`Accumulation::CompensatedF32`] is active the
+    /// prepacked paths rebuild the operand and run the compensated
+    /// driver, which packs at full depth itself.
+    ///
+    /// [`Accumulation::CompensatedF32`]: super::dispatch::Accumulation::CompensatedF32
+    fn unpack(&self) -> Matrix<T> {
+        let mut out = Matrix::zeros(self.k, self.n);
+        match &self.storage {
+            PackedBStorage::Dot { blocks, .. } => {
+                for (bi, block) in blocks.iter().enumerate() {
+                    let kk = self.offsets[bi];
+                    let kend = self.offsets.get(bi + 1).copied().unwrap_or(self.k);
+                    for j in 0..self.n {
+                        let col = block.col(j);
+                        for p in 0..kend - kk {
+                            out.set(kk + p, j, col[p]);
+                        }
+                    }
+                }
+            }
+            PackedBStorage::Tile { blocks, nr, .. } => {
+                let nr = *nr;
+                for (bi, block) in blocks.iter().enumerate() {
+                    let kk = self.offsets[bi];
+                    for q in 0..block.panels() {
+                        let w = nr.min(self.n - q * nr);
+                        for l in 0..w {
+                            for p in 0..block.kc_eff() {
+                                out.set(kk + p, q * nr + l, block.at(q, p, l));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
 }
 
 /// A whole `op(A)` prepacked into row blocks (contiguous rows for the dot
@@ -908,6 +1172,50 @@ impl<T: Element> PackedA<T> {
     /// Whether the handle carries the outer-product tile layout.
     pub fn is_tile(&self) -> bool {
         matches!(self.storage, PackedAStorage::Tile { .. })
+    }
+
+    /// Reconstruct the logical `op(A)` (`m × k`) this handle packed (the
+    /// compensated prepacked path — see [`PackedB::unpack`]). Block
+    /// origins are `kblock · kb` / `rowblock · mb`: the packing loops
+    /// advance by exactly `kb_eff`/`mb_eff`, which equal the uniform
+    /// block size everywhere but the final fringe block.
+    fn unpack(&self) -> Matrix<T> {
+        let mut out = Matrix::zeros(self.m, self.k);
+        match &self.storage {
+            PackedAStorage::Dot { blocks, kb, mb } => {
+                let (kb, mb) = (*kb, *mb);
+                for (kbi, row_blocks) in blocks.iter().enumerate() {
+                    let kk = kbi * kb;
+                    let kb_eff = kb.min(self.k - kk);
+                    for (rbi, pa) in row_blocks.iter().enumerate() {
+                        let ii = rbi * mb;
+                        for r in 0..mb.min(self.m - ii) {
+                            let row = pa.row(r);
+                            for p in 0..kb_eff {
+                                out.set(ii + r, kk + p, row[p]);
+                            }
+                        }
+                    }
+                }
+            }
+            PackedAStorage::Tile { blocks, kc, mc, mr } => {
+                let (kc, mc, mr) = (*kc, *mc, *mr);
+                for (kbi, row_blocks) in blocks.iter().enumerate() {
+                    let kk = kbi * kc;
+                    for (rbi, ta) in row_blocks.iter().enumerate() {
+                        let ii = rbi * mc;
+                        for s in 0..ta.strips() {
+                            for l in 0..ta.strip_height(s) {
+                                for p in 0..ta.kc_eff() {
+                                    out.set(ii + s * mr + l, kk + p, ta.at(s, p, l));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
     }
 }
 
@@ -1323,5 +1631,114 @@ mod tests {
         assert!(ctx.threads() >= 1);
         let again = GemmContext::global();
         assert!(Arc::ptr_eq(&ctx.inner, &again.inner));
+    }
+
+    #[test]
+    fn compensated_prepacked_paths_match_plain_run_bitwise() {
+        // The ROADMAP carry-over: run_packed_b / run_packed must route
+        // through the same Dot2 driver as GemmPlan::run when
+        // CompensatedF32 is selected — identical k-order per element,
+        // hence identical bits, regardless of how the operands were
+        // staged.
+        use crate::gemm::dispatch::Accumulation;
+        let cfg = DispatchConfig {
+            threads: 1,
+            accumulation: Accumulation::CompensatedF32,
+            ..DispatchConfig::default()
+        };
+        let ctx = GemmContext::new(cfg);
+        // Fringe k (packing pads) and n (partial panel), ill-conditioned
+        // data so plain f32 accumulation would actually differ.
+        let (m, n, k) = (13usize, 7usize, 57usize);
+        let a = Matrix::from_fn(m, k, |r, c| {
+            let big = if c % 3 == 0 { 3.0e7 } else { 1.0 };
+            (((r * 17 + c * 5) % 13) as f32 - 6.0) * big
+        });
+        let b = Matrix::from_fn(k, n, |r, c| {
+            let tiny = if r % 3 == 1 { 1.0e-7 } else { 1.0 };
+            (((r * 7 + c * 11) % 9) as f32 - 4.0) * tiny
+        });
+        let plan = ctx.gemm().alpha(1.25).beta(0.5).plan(m, n, k).unwrap();
+        let packed_b = ctx.pack_b(Transpose::No, k, n, b.data(), b.ld()).unwrap();
+        let packed_a = ctx.pack_a(Transpose::No, m, k, a.data(), a.ld()).unwrap();
+        let c0: Vec<f32> = (0..m * n).map(|i| (i as f32).cos()).collect();
+        let (mut c_plain, mut c_pb, mut c_pab) = (c0.clone(), c0.clone(), c0.clone());
+        plan.run(a.data(), b.data(), &mut c_plain).unwrap();
+        plan.run_packed_b(a.data(), &packed_b, &mut c_pb).unwrap();
+        plan.run_packed(&packed_a, &packed_b, &mut c_pab).unwrap();
+        assert_eq!(c_plain, c_pb, "compensated: packed-B vs plain must be bit-identical");
+        assert_eq!(c_plain, c_pab, "compensated: packed-AB vs plain must be bit-identical");
+        // And the mode is genuinely live: compensated differs from the
+        // standard-accumulation context on this data.
+        let std_ctx = ctx_serial();
+        let std_plan = std_ctx.gemm().alpha(1.25).beta(0.5).plan(m, n, k).unwrap();
+        let mut c_std = c0.clone();
+        std_plan.run(a.data(), b.data(), &mut c_std).unwrap();
+        assert_allclose(&c_plain, &c_std, 1e-2, 1.0, "both modes near the true product");
+    }
+
+    #[test]
+    fn context_qgemm_matches_serial_reference_bitwise() {
+        use crate::gemm::quant;
+        let cfg = DispatchConfig {
+            threads: 4,
+            parallel_min_flops: 0.0,
+            ..DispatchConfig::default()
+        };
+        let ctx = GemmContext::new(cfg);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (5, 17, 7), (37, 19, 23), (64, 33, 12)] {
+            let a = Matrix::<u8>::from_fn(m, k, |r, c| ((r * 29 + c * 3) % 256) as u8);
+            let b =
+                Matrix::<i8>::from_fn(k, n, |r, c| (((r * 7 + c * 13) % 255) as i16 - 127) as i8);
+            let mut c_par = Matrix::<i32>::from_fn(m, n, |r, c| (r + c) as i32);
+            let mut c_ser = c_par.clone();
+            ctx.qgemm(Transpose::No, Transpose::No, a.view(), b.view(), c_par.view_mut(), true)
+                .unwrap();
+            quant::qgemm(Transpose::No, Transpose::No, a.view(), b.view(), &mut c_ser.view_mut(), true);
+            assert_eq!(c_par.data(), c_ser.data(), "m={m} n={n} k={k}");
+        }
+        // Shape mismatches are reported, not mangled.
+        let a = Matrix::<u8>::zeros(4, 5);
+        let b = Matrix::<i8>::zeros(6, 3);
+        let mut c = Matrix::<i32>::zeros(4, 3);
+        assert!(matches!(
+            ctx.qgemm(Transpose::No, Transpose::No, a.view(), b.view(), c.view_mut(), false),
+            Err(BlasError::ShapeMismatch { what: "quantized B", .. })
+        ));
+    }
+
+    #[test]
+    fn context_qgemm_requant_prepacked_reuse() {
+        use crate::gemm::epilogue::Requant;
+        let cfg = DispatchConfig {
+            threads: 3,
+            parallel_min_flops: 0.0,
+            ..DispatchConfig::default()
+        };
+        let ctx = GemmContext::new(cfg);
+        let (n, k) = (21usize, 17usize);
+        let b = Matrix::<i8>::from_fn(k, n, |r, c| (((r * 11 + c * 5) % 255) as i16 - 127) as i8);
+        let pb = ctx.qpack_b(Transpose::No, k, n, b.data(), b.ld()).unwrap();
+        for m in [1usize, 6, 23] {
+            let a = Matrix::<u8>::from_fn(m, k, |r, c| ((r * 41 + c * 13) % 256) as u8);
+            let rq = Requant::uniform(0.02, 3, 0.5);
+            let mut got = Matrix::<f32>::zeros(m, n);
+            ctx.qgemm_requant_packed_b(Transpose::No, a.view(), &pb, got.view_mut(), &rq)
+                .unwrap();
+            let mut want = Matrix::<f32>::zeros(m, n);
+            crate::gemm::quant::qgemm_requant(
+                Transpose::No,
+                Transpose::No,
+                a.view(),
+                b.view(),
+                &mut want.view_mut(),
+                &rq,
+            );
+            // Bitwise: the requant writeback is a pure per-element
+            // function of the exact integer sum.
+            for (g, w) in got.data().iter().zip(want.data()) {
+                assert_eq!(g.to_bits(), w.to_bits(), "m={m}");
+            }
+        }
     }
 }

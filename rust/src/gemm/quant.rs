@@ -1,0 +1,641 @@
+//! The quantized GEMM tier: `u8 × i8 → i32` over the kernel-triple model.
+//!
+//! This is the first heterogeneous instantiation of
+//! [`GemmTriple`](super::element::GemmTriple): activations quantized to
+//! u8 (affine, per-row zero point), weights to i8 (symmetric,
+//! per-channel scale), products accumulated exactly in i32. The paper's
+//! blocking story carries over unchanged — pack both operands into
+//! k-major micro-panels, drive a register-resident tile — but the
+//! arithmetic contract flips from "same rounding in any order" to
+//! **exact integers mod 2³²**: every accumulation uses wrapping i32
+//! adds, which are associative and commutative, so serial, parallel and
+//! prepacked executions are *bitwise identical by construction* rather
+//! than by careful ordering.
+//!
+//! ## The `maddubs` diet
+//!
+//! The AVX2 kernel ([`super::tile`]'s `avx2_qtile`) is built on
+//! `vpmaddubsw`, which multiplies unsigned×signed bytes and *saturates*
+//! the i16 pair sums. Feeding it raw would corrupt large products, so
+//! the packing stage here re-biases the unsigned operand:
+//!
+//! * **A packs `a' = a XOR 0x80`** (= `a − 128` reinterpreted as i8).
+//!   The kernel computes `S' = Σ a'·b` exactly via the
+//!   `vpabsb`/`vpsignb` sign split (`|a'| ≤ 128`, so pair sums stay
+//!   inside i16 — see the kernel docs for the bound); the drivers
+//!   restore `S = S' + 128·colsum(b)` at writeback, with the per-column
+//!   sums of B computed once during packing.
+//! * **B panels screen for `−128`**: `vpsignb` of `b = −128` under a
+//!   negative multiplier overflows, so [`QPackedB`] records
+//!   `has_neg128` and the drivers route such operands to the scalar
+//!   path (the `nn` weight quantizer clamps to ±127, so trained models
+//!   never hit it).
+//! * **Padding is free**: k is padded to multiples of 4 and columns to
+//!   panels of 16, with B pads stored as 0 — a zero B byte kills the
+//!   product whatever the A pad byte holds, and fringe rows/columns are
+//!   masked at writeback.
+//!
+//! Scaling (`alpha`/`beta`) does not exist in this tier: integer scaling
+//! would overflow or lose exactness. The float-facing composition is the
+//! fused [`Requant`] stage instead — zero-point correction, scale,
+//! bias and activation applied per element in the writeback
+//! (`i32 → f32`), bitwise identical across every driver because it is a
+//! pure per-element function of the exact integer sum.
+//!
+//! Entry points: [`qgemm`]/[`qgemm_requant`] here are the serial
+//! reference drivers; [`crate::gemm::plan::GemmContext::qgemm`] adds the
+//! row-sliced parallel split and prepacked-B reuse, and
+//! [`crate::blas::qgemm`] is the positional shim.
+
+use super::dispatch::detect_avx2;
+use super::element::Qu8i8;
+use super::epilogue::Requant;
+use super::naive;
+#[cfg(target_arch = "x86_64")]
+use super::tile::avx2_qtile_dyn;
+use crate::blas::{MatMut, MatRef, Transpose};
+
+/// Tile height of the quantized kernel (same register budget as the
+/// float tiers: 12 i32 YMM accumulators = 6 rows × 2 vectors).
+pub(crate) const QMR: usize = super::tile::MAX_MR;
+
+/// Tile width in i32 lanes (two 256-bit accumulators).
+pub(crate) const QNR: usize = super::tile::NR;
+
+/// k taps consumed per `maddubs`+`madd` step.
+const KGROUP: usize = 4;
+
+/// Row-block height of the drivers (16 full strips; A strips for one
+/// block stay L2-resident while every B panel streams through).
+const QMC: usize = 16 * QMR;
+
+/// A whole `op(B)` (`k × n`) packed for the quantized kernel: 16-column
+/// panels in 64-byte 4-k groups (column `j`, tap `t` of group `g` at
+/// byte `g·64 + (j mod 16)·4 + t` of panel `j / 16`), plus the exact
+/// per-column sums the writeback correction and the [`Requant`] zero
+/// -point correction both need, plus the `−128` screen.
+///
+/// Weight-stationary: pack once via
+/// [`GemmContext::qpack_b`](crate::gemm::plan::GemmContext::qpack_b),
+/// reuse across calls and across the parallel row split (workers share
+/// it read-only).
+#[derive(Clone, Debug)]
+pub struct QPackedB {
+    buf: Vec<i8>,
+    n: usize,
+    k: usize,
+    kgroups: usize,
+    colsums: Vec<i32>,
+    has_neg128: bool,
+}
+
+impl QPackedB {
+    /// Pack `op(B)` (`k × n`). Pads (k to ×4, columns to ×16) are stored
+    /// as 0, which contribute nothing to any product.
+    pub fn pack(b: MatRef<'_, i8>, transb: Transpose, k: usize, n: usize) -> Self {
+        let (br, bc) = match transb {
+            Transpose::No => (k, n),
+            Transpose::Yes => (n, k),
+        };
+        assert_eq!((b.rows(), b.cols()), (br, bc), "QPackedB: op(B) shape mismatch");
+        let kgroups = k.div_ceil(KGROUP);
+        let npanels = n.div_ceil(QNR);
+        let mut buf = vec![0i8; npanels * kgroups * QNR * KGROUP];
+        let mut colsums = vec![0i32; n];
+        let mut has_neg128 = false;
+        for j in 0..n {
+            let panel = (j / QNR) * kgroups * QNR * KGROUP;
+            let lane = (j % QNR) * KGROUP;
+            let mut sum = 0i32;
+            for p in 0..k {
+                let v = match transb {
+                    Transpose::No => b.get(p, j),
+                    Transpose::Yes => b.get(j, p),
+                };
+                has_neg128 |= v == i8::MIN;
+                sum = sum.wrapping_add(v as i32);
+                buf[panel + (p / KGROUP) * QNR * KGROUP + lane + p % KGROUP] = v;
+            }
+            colsums[j] = sum;
+        }
+        Self { buf, n, k, kgroups, colsums, has_neg128 }
+    }
+
+    /// Logical `k` (rows of `op(B)`).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Logical `n` (columns of `op(B)`).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Whether any packed byte is `−128` (the `vpsignb` hazard — the
+    /// drivers fall back to the scalar path when set).
+    pub fn has_neg128(&self) -> bool {
+        self.has_neg128
+    }
+
+    /// Exact `Σₖ op(B)[k][j]` (wrapping), computed during packing.
+    pub fn colsum(&self, j: usize) -> i32 {
+        self.colsums[j]
+    }
+
+    /// Bytes held (diagnostic).
+    pub fn bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Number of 16-column panels.
+    fn panels(&self) -> usize {
+        self.n.div_ceil(QNR)
+    }
+
+    /// Pointer to packed panel `q` (`kgroups * 64` bytes).
+    #[cfg(target_arch = "x86_64")]
+    fn panel_ptr(&self, q: usize) -> *const i8 {
+        assert!(q < self.panels(), "panel {q} out of {}", self.panels());
+        self.buf[q * self.kgroups * QNR * KGROUP..].as_ptr()
+    }
+
+    /// Safe value read of `op(B)[p][j]` back out of the packed layout
+    /// (the scalar drivers index through this; also the layout oracle
+    /// the tests pin).
+    fn b_at(&self, p: usize, j: usize) -> i8 {
+        debug_assert!(p < self.k && j < self.n);
+        self.buf[(j / QNR) * self.kgroups * QNR * KGROUP
+            + (p / KGROUP) * QNR * KGROUP
+            + (j % QNR) * KGROUP
+            + p % KGROUP]
+    }
+}
+
+/// Reusable packing scratch for one row block of `op(A)`: strips of
+/// [`QMR`] rows in 4-k groups (row `l`, tap `t` of group `g` at byte
+/// `g·QMR·4 + l·4 + t`), each byte stored as `a' = a XOR 0x80`. Row and
+/// k pads hold `0x80` (`a' = 0`).
+#[derive(Default)]
+struct QPackedA {
+    buf: Vec<u8>,
+    rows: usize,
+    kgroups: usize,
+}
+
+impl QPackedA {
+    fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pack rows `i0 .. i0+rows` of `op(A)` at full depth `k`.
+    fn pack(&mut self, a: MatRef<'_, u8>, transa: Transpose, i0: usize, rows: usize, k: usize) {
+        let kgroups = k.div_ceil(KGROUP);
+        let strips = rows.div_ceil(QMR).max(1);
+        self.buf.clear();
+        self.buf.resize(strips * kgroups * QMR * KGROUP, 0x80);
+        for s in 0..strips {
+            let base = s * kgroups * QMR * KGROUP;
+            for l in 0..QMR.min(rows - s * QMR) {
+                let r = i0 + s * QMR + l;
+                for p in 0..k {
+                    let v = match transa {
+                        Transpose::No => a.get(r, p),
+                        Transpose::Yes => a.get(p, r),
+                    };
+                    self.buf[base + (p / KGROUP) * QMR * KGROUP + l * KGROUP + p % KGROUP] =
+                        v ^ 0x80;
+                }
+            }
+        }
+        self.rows = rows;
+        self.kgroups = kgroups;
+    }
+
+    fn strips(&self) -> usize {
+        self.rows.div_ceil(QMR).max(1)
+    }
+
+    fn strip_height(&self, s: usize) -> usize {
+        QMR.min(self.rows - s * QMR)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn strip_ptr(&self, s: usize) -> *const u8 {
+        assert!(s < self.strips(), "strip {s} out of {}", self.strips());
+        self.buf[s * self.kgroups * QMR * KGROUP..].as_ptr()
+    }
+}
+
+/// Serial quantized GEMM on views: `C ⟵ op(A)·op(B)` (or `C +=` with
+/// `accumulate`, wrapping), `C` in exact i32. Packs `B` internally; use
+/// the [`GemmContext`](crate::gemm::plan::GemmContext) entry points for
+/// parallel execution and prepacked-B reuse.
+pub fn qgemm(
+    transa: Transpose,
+    transb: Transpose,
+    a: MatRef<'_, u8>,
+    b: MatRef<'_, i8>,
+    c: &mut MatMut<'_, i32>,
+    accumulate: bool,
+) {
+    let k = match transa {
+        Transpose::No => a.cols(),
+        Transpose::Yes => a.rows(),
+    };
+    let pb = QPackedB::pack(b, transb, k, c.cols());
+    qgemm_packed(a, transa, &pb, c, accumulate);
+}
+
+/// Serial quantized GEMM with the fused [`Requant`] writeback:
+/// `C_f32 ⟵ requant(op(A)·op(B))`. Always overwrites `C` (requantized
+/// output composes downstream in f32, not by integer accumulation).
+pub fn qgemm_requant(
+    transa: Transpose,
+    transb: Transpose,
+    a: MatRef<'_, u8>,
+    b: MatRef<'_, i8>,
+    c: &mut MatMut<'_, f32>,
+    rq: &Requant,
+) {
+    let k = match transa {
+        Transpose::No => a.cols(),
+        Transpose::Yes => a.rows(),
+    };
+    let pb = QPackedB::pack(b, transb, k, c.cols());
+    qgemm_requant_packed(a, transa, &pb, 0, c, rq);
+}
+
+/// The raw-i32 driver over a prepacked `B`. `a` covers exactly the rows
+/// of `c` (the parallel row split passes each worker its slice of
+/// `op(A)`). Runs the AVX2 `maddubs` tile when the CPU has it and the
+/// panel passed the `−128` screen; otherwise the safe scalar loop —
+/// both produce identical bits (exact integers mod 2³²).
+pub(crate) fn qgemm_packed(
+    a: MatRef<'_, u8>,
+    transa: Transpose,
+    pb: &QPackedB,
+    c: &mut MatMut<'_, i32>,
+    accumulate: bool,
+) {
+    debug_assert_eq!(c.cols(), pb.n, "qgemm: C width vs packed B");
+    #[cfg(target_arch = "x86_64")]
+    if detect_avx2() && !pb.has_neg128 {
+        qgemm_avx2(a, transa, pb, c, accumulate);
+        return;
+    }
+    qgemm_scalar(a, transa, pb, c, accumulate);
+}
+
+/// The requantizing driver over a prepacked `B`; `row0` is the global
+/// row offset of this `C` slice (the [`Requant`] vectors index global
+/// rows whichever worker computes them).
+pub(crate) fn qgemm_requant_packed(
+    a: MatRef<'_, u8>,
+    transa: Transpose,
+    pb: &QPackedB,
+    row0: usize,
+    c: &mut MatMut<'_, f32>,
+    rq: &Requant,
+) {
+    debug_assert_eq!(c.cols(), pb.n, "qgemm_requant: C width vs packed B");
+    #[cfg(target_arch = "x86_64")]
+    if detect_avx2() && !pb.has_neg128 {
+        qgemm_requant_avx2(a, transa, pb, row0, c, rq);
+        return;
+    }
+    qgemm_requant_scalar(a, transa, pb, row0, c, rq);
+}
+
+/// Safe scalar path (also the Miri diet and the `−128` fallback):
+/// bitwise identical to [`naive::gemm_triple`]`::<`[`Qu8i8`]`>` — the
+/// same wrapping i32 sums, element by element.
+fn qgemm_scalar(
+    a: MatRef<'_, u8>,
+    transa: Transpose,
+    pb: &QPackedB,
+    c: &mut MatMut<'_, i32>,
+    accumulate: bool,
+) {
+    for i in 0..c.rows() {
+        for j in 0..c.cols() {
+            let acc = dot_scalar(a, transa, pb, i, j);
+            let v = if accumulate { c.get(i, j).wrapping_add(acc) } else { acc };
+            c.set(i, j, v);
+        }
+    }
+}
+
+/// Scalar requantizing path.
+fn qgemm_requant_scalar(
+    a: MatRef<'_, u8>,
+    transa: Transpose,
+    pb: &QPackedB,
+    row0: usize,
+    c: &mut MatMut<'_, f32>,
+    rq: &Requant,
+) {
+    for i in 0..c.rows() {
+        for j in 0..c.cols() {
+            let acc = dot_scalar(a, transa, pb, i, j);
+            c.set(i, j, rq.apply_scalar(acc, pb.colsums[j], row0 + i, j));
+        }
+    }
+}
+
+/// One exact widening dot product `Σₖ op(A)[i][k] · op(B)[k][j]`
+/// (wrapping), reading `B` back out of the packed panels.
+#[inline]
+fn dot_scalar(a: MatRef<'_, u8>, transa: Transpose, pb: &QPackedB, i: usize, j: usize) -> i32 {
+    let mut acc = 0i32;
+    for p in 0..pb.k {
+        let av = match transa {
+            Transpose::No => a.get(i, p),
+            Transpose::Yes => a.get(p, i),
+        } as i32;
+        acc = acc.wrapping_add(av * pb.b_at(p, j) as i32);
+    }
+    acc
+}
+
+/// The AVX2 block driver: pack A row blocks on the fly (whole-k — no
+/// k-blocking, so the [`Requant`] twin below can fuse into the one and
+/// only writeback of each element), run the `maddubs` tile per
+/// strip×panel, correct `S = S' + 128·colsum` and store/fold with
+/// fringe masking.
+#[cfg(target_arch = "x86_64")]
+fn qgemm_avx2(
+    a: MatRef<'_, u8>,
+    transa: Transpose,
+    pb: &QPackedB,
+    c: &mut MatMut<'_, i32>,
+    accumulate: bool,
+) {
+    let (m, n) = (c.rows(), c.cols());
+    let mut pa = QPackedA::new();
+    let mut ic = 0;
+    while ic < m {
+        let mc_eff = QMC.min(m - ic);
+        pa.pack(a, transa, ic, mc_eff, pb.k);
+        for q in 0..pb.panels() {
+            let j0 = q * QNR;
+            let w = QNR.min(n - j0);
+            for s in 0..pa.strips() {
+                let i0 = ic + s * QMR;
+                let h = pa.strip_height(s);
+                let tmp = qtile(&pa, s, pb, q);
+                for i in 0..h {
+                    for j in 0..w {
+                        let s_true = tmp[i * QNR + j]
+                            .wrapping_add(128i32.wrapping_mul(pb.colsums[j0 + j]));
+                        let v = if accumulate {
+                            c.get(i0 + i, j0 + j).wrapping_add(s_true)
+                        } else {
+                            s_true
+                        };
+                        c.set(i0 + i, j0 + j, v);
+                    }
+                }
+            }
+        }
+        ic += mc_eff;
+    }
+}
+
+/// The AVX2 requantizing twin of [`qgemm_avx2`]: identical kernel calls,
+/// the writeback dequantizes each corrected sum through
+/// [`Requant::apply_scalar`] at its global `C` coordinates.
+#[cfg(target_arch = "x86_64")]
+fn qgemm_requant_avx2(
+    a: MatRef<'_, u8>,
+    transa: Transpose,
+    pb: &QPackedB,
+    row0: usize,
+    c: &mut MatMut<'_, f32>,
+    rq: &Requant,
+) {
+    let (m, n) = (c.rows(), c.cols());
+    let mut pa = QPackedA::new();
+    let mut ic = 0;
+    while ic < m {
+        let mc_eff = QMC.min(m - ic);
+        pa.pack(a, transa, ic, mc_eff, pb.k);
+        for q in 0..pb.panels() {
+            let j0 = q * QNR;
+            let w = QNR.min(n - j0);
+            for s in 0..pa.strips() {
+                let i0 = ic + s * QMR;
+                let h = pa.strip_height(s);
+                let tmp = qtile(&pa, s, pb, q);
+                for i in 0..h {
+                    for j in 0..w {
+                        let col = j0 + j;
+                        let s_true =
+                            tmp[i * QNR + j].wrapping_add(128i32.wrapping_mul(pb.colsums[col]));
+                        c.set(i0 + i, col, rq.apply_scalar(s_true, pb.colsums[col], row0 + i0 + i, col));
+                    }
+                }
+            }
+        }
+        ic += mc_eff;
+    }
+}
+
+/// Run the `maddubs` tile for one (strip, panel) pair into a stack tile
+/// of raw `S'` sums.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn qtile(pa: &QPackedA, s: usize, pb: &QPackedB, q: usize) -> [i32; QMR * QNR] {
+    let mut tmp = [0i32; QMR * QNR];
+    // SAFETY: the strip holds kgroups·QMR·4 bytes and the panel
+    // kgroups·64 bytes by construction (both buffers are sized and
+    // zero/0x80-padded by their pack methods, and pa/pb were packed at
+    // the same k); tmp is QMR rows × QNR i32s with row stride QNR; the
+    // drivers only take this path after detect_avx2() and the panel's
+    // −128 screen.
+    unsafe {
+        avx2_qtile_dyn(QMR, pa.strip_ptr(s), pb.panel_ptr(q), pb.kgroups, tmp.as_mut_ptr(), QNR);
+    }
+    tmp
+}
+
+/// Bitwise reference for the whole tier, used by the conformance suite:
+/// the naive widening triple oracle over the same views.
+pub fn qgemm_reference(
+    transa: Transpose,
+    transb: Transpose,
+    a: MatRef<'_, u8>,
+    b: MatRef<'_, i8>,
+    c: &mut MatMut<'_, i32>,
+    accumulate: bool,
+) {
+    naive::gemm_triple::<Qu8i8>(transa, transb, a, b, c, accumulate);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+    use crate::gemm::epilogue::Activation;
+
+    fn test_a(m: usize, k: usize, seed: usize) -> Matrix<u8> {
+        Matrix::from_fn(m, k, |r, c| ((r * 31 + c * 7 + seed) % 256) as u8)
+    }
+
+    fn test_b(k: usize, n: usize, seed: usize) -> Matrix<i8> {
+        // Values in [−127, 127] with the extremes well represented.
+        Matrix::from_fn(k, n, |r, c| match (r * 13 + c * 5 + seed) % 17 {
+            0 => 127,
+            1 => -127,
+            x => (x as i16 * 15 - 120) as i8,
+        })
+    }
+
+    #[test]
+    fn packed_b_layout_roundtrips_and_sums() {
+        let (k, n) = (23, 37);
+        let b = test_b(k, n, 3);
+        let pb = QPackedB::pack(b.view(), Transpose::No, k, n);
+        for p in 0..k {
+            for j in 0..n {
+                assert_eq!(pb.b_at(p, j), b.get(p, j), "({p},{j})");
+            }
+        }
+        for j in 0..n {
+            let want: i32 = (0..k).map(|p| b.get(p, j) as i32).sum();
+            assert_eq!(pb.colsum(j), want, "colsum {j}");
+        }
+        assert!(!pb.has_neg128());
+        // Transposed packing reads the stored transpose.
+        let bt = Matrix::<i8>::from_fn(n, k, |r, c| b.get(c, r));
+        let pbt = QPackedB::pack(bt.view(), Transpose::Yes, k, n);
+        for p in 0..k {
+            for j in 0..n {
+                assert_eq!(pbt.b_at(p, j), b.get(p, j));
+            }
+        }
+    }
+
+    #[test]
+    fn neg128_screen_trips() {
+        let mut b = test_b(5, 5, 0);
+        assert!(!QPackedB::pack(b.view(), Transpose::No, 5, 5).has_neg128());
+        b.set(3, 2, i8::MIN);
+        assert!(QPackedB::pack(b.view(), Transpose::No, 5, 5).has_neg128());
+    }
+
+    #[test]
+    fn qgemm_matches_widening_oracle_bitwise() {
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (5, 7, 4), (7, 17, 23), (13, 33, 9), (6, 16, 64)] {
+            let a = test_a(m, k, m + n);
+            let b = test_b(k, n, k);
+            let atr = Matrix::<u8>::from_fn(k, m, |r, c| a.get(c, r));
+            let btr = Matrix::<i8>::from_fn(n, k, |r, c| b.get(c, r));
+            for (ta, tb) in [
+                (Transpose::No, Transpose::No),
+                (Transpose::Yes, Transpose::No),
+                (Transpose::No, Transpose::Yes),
+                (Transpose::Yes, Transpose::Yes),
+            ] {
+                let avw = if ta == Transpose::Yes { atr.view() } else { a.view() };
+                let bvw = if tb == Transpose::Yes { btr.view() } else { b.view() };
+                for accumulate in [false, true] {
+                    let mut want = Matrix::<i32>::from_fn(m, n, |r, c| (r * 3 + c) as i32 - 4);
+                    let mut got = want.clone();
+                    qgemm_reference(ta, tb, avw, bvw, &mut want.view_mut(), accumulate);
+                    qgemm(ta, tb, avw, bvw, &mut got.view_mut(), accumulate);
+                    assert_eq!(
+                        got.data(),
+                        want.data(),
+                        "m={m} n={n} k={k} ta={ta:?} tb={tb:?} acc={accumulate}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn saturating_extremes_are_exact() {
+        // 255 × ±127 at k past one maddubs group: the worst case of the
+        // sign-split diet.
+        let (m, n, k) = (QMR, QNR, 9);
+        let a = Matrix::<u8>::from_fn(m, k, |_, _| 255);
+        let b = Matrix::<i8>::from_fn(k, n, |r, c| if (r + c) % 2 == 0 { 127 } else { -127 });
+        let mut want = Matrix::<i32>::zeros(m, n);
+        let mut got = Matrix::<i32>::zeros(m, n);
+        qgemm_reference(Transpose::No, Transpose::No, a.view(), b.view(), &mut want.view_mut(), false);
+        qgemm(Transpose::No, Transpose::No, a.view(), b.view(), &mut got.view_mut(), false);
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn neg128_weights_fall_back_and_stay_exact() {
+        let (m, n, k) = (7, 19, 12);
+        let a = test_a(m, k, 1);
+        let b = Matrix::<i8>::from_fn(k, n, |r, c| if (r + c) % 5 == 0 { -128 } else { 7 });
+        let mut want = Matrix::<i32>::zeros(m, n);
+        let mut got = Matrix::<i32>::zeros(m, n);
+        qgemm_reference(Transpose::No, Transpose::No, a.view(), b.view(), &mut want.view_mut(), false);
+        qgemm(Transpose::No, Transpose::No, a.view(), b.view(), &mut got.view_mut(), false);
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn strided_c_keeps_padding() {
+        let (m, n, k) = (7, 19, 11);
+        let a = test_a(m, k, 2);
+        let b = test_b(k, n, 5);
+        let ld = n + 4;
+        let mut cbuf = vec![-77i32; m * ld];
+        let mut c = MatMut::new(&mut cbuf, m, n, ld).unwrap();
+        qgemm(Transpose::No, Transpose::No, a.view(), b.view(), &mut c, false);
+        let mut want = Matrix::<i32>::zeros(m, n);
+        qgemm_reference(Transpose::No, Transpose::No, a.view(), b.view(), &mut want.view_mut(), false);
+        for r in 0..m {
+            for j in 0..n {
+                assert_eq!(cbuf[r * ld + j], want.get(r, j), "({r},{j})");
+            }
+            for p in n..ld {
+                assert_eq!(cbuf[r * ld + p], -77, "padding clobbered at row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn requant_matches_separate_pass_bitwise() {
+        let (m, n, k) = (13, 21, 17);
+        let a = test_a(m, k, 4);
+        let b = test_b(k, n, 9);
+        let rq = Requant::per_row(
+            (0..m).map(|r| 0.01 + r as f32 * 0.003).collect(),
+            (0..m).map(|r| (r % 5) as i32 * 3).collect(),
+            (0..n).map(|c| 0.02 + c as f32 * 0.001).collect(),
+        )
+        .bias((0..n).map(|c| c as f32 * 0.25 - 1.0).collect())
+        .activation(Activation::Relu);
+        let mut got = Matrix::<f32>::zeros(m, n);
+        qgemm_requant(Transpose::No, Transpose::No, a.view(), b.view(), &mut got.view_mut(), &rq);
+        // Unfused reference: raw i32 GEMM, then the same scalar function.
+        let mut raw = Matrix::<i32>::zeros(m, n);
+        qgemm_reference(Transpose::No, Transpose::No, a.view(), b.view(), &mut raw.view_mut(), false);
+        let pb = QPackedB::pack(b.view(), Transpose::No, k, n);
+        for r in 0..m {
+            for c in 0..n {
+                let want = rq.apply_scalar(raw.get(r, c), pb.colsum(c), r, c);
+                assert_eq!(got.get(r, c).to_bits(), want.to_bits(), "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_dims() {
+        // k == 0: the product is all-zero (overwrite) or C unchanged
+        // (accumulate).
+        let a = Matrix::<u8>::zeros(3, 0);
+        let b = Matrix::<i8>::zeros(0, 4);
+        let mut c = Matrix::<i32>::from_fn(3, 4, |_, _| 9);
+        qgemm(Transpose::No, Transpose::No, a.view(), b.view(), &mut c.view_mut(), true);
+        assert!(c.data().iter().all(|&x| x == 9));
+        qgemm(Transpose::No, Transpose::No, a.view(), b.view(), &mut c.view_mut(), false);
+        assert!(c.data().iter().all(|&x| x == 0));
+    }
+}

@@ -251,6 +251,111 @@ pub(crate) unsafe fn avx2_tile_dyn_f64(
     }
 }
 
+/// The AVX2 quantized micro-kernel: raw `dst (MR×16) ⟵ Σₖ a'·b` over a
+/// packed u8×i8 strip/panel pair, accumulated in i32 — **exactly**, for
+/// arbitrary inputs on its packed diet, via the sign-split `maddubs`
+/// idiom.
+///
+/// `_mm256_maddubs_epi16(u, s)` multiplies *unsigned* bytes by *signed*
+/// bytes and saturates the i16 pair sums, so it cannot be fed the
+/// operands directly. The packing stage ([`crate::gemm::quant`]) stores
+/// `a' = a XOR 0x80` (= `a − 128` reinterpreted as i8, in [−128, 127]);
+/// the kernel splits each product as `a'·b = |a'| · (sign(a')·b)` with
+/// `vpabsb`/`vpsignb`:
+///
+/// * `|a'| ∈ [0, 128]` is a valid unsigned operand;
+/// * `sign(a')·b` is exact for `b ∈ [−127, 127]` (the packing stage
+///   screens `b = −128`, whose negation overflows `vpsignb`, and routes
+///   such panels to the scalar tier);
+/// * each i16 pair sum then lies in `[−2·128·127, 2·128·127] =
+///   [−32512, 32512]`, strictly inside i16 — `maddubs` **never
+///   saturates** on this diet.
+///
+/// `vpmaddwd` against ones widens the pair sums to one i32 per 4-k
+/// group, added into `2·MR` i32 YMM accumulators. The driver restores
+/// the true sum at writeback as `S = S' + 128·colsum(b)` (wrapping —
+/// all quantized i32 arithmetic is mod 2³², which is what makes serial,
+/// parallel and prepacked runs bitwise identical).
+///
+/// Layouts: `ap` is an MR-strip in 4-k groups (group `g`, row `i`, tap
+/// `t` at byte `g·MR·4 + i·4 + t`); `bp` a 16-column panel in 64-byte
+/// 4-k groups (group `g`, column `j`, tap `t` at byte `g·64 + j·4 + t`)
+/// — so i32 lane `j` of the accumulator pair is column `j` directly,
+/// with no cross-lane shuffles anywhere.
+///
+/// # Safety
+/// * `ap` readable for `kgroups * MR * 4` bytes, `bp` for
+///   `kgroups * 64` bytes; `bp` must contain no `−128` byte.
+/// * `dst` writable at rows `i*dst_ld`, `i < MR`, each row 16 wide.
+/// * AVX2 must be available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_qtile<const MR: usize>(
+    ap: *const u8,
+    bp: *const i8,
+    kgroups: usize,
+    dst: *mut i32,
+    dst_ld: usize,
+) {
+    // SAFETY: loads stay inside the packed strip (kgroups * MR * 4
+    // bytes) and panel (kgroups * 64 bytes); the unaligned 4-byte read
+    // of a row's k group is within the strip; stores hit rows i*dst_ld,
+    // i < MR, 16 i32 lanes wide — exactly the caller's contract.
+    unsafe {
+        let ones = _mm256_set1_epi16(1);
+        let mut acc = [[_mm256_setzero_si256(); 2]; MR];
+        for g in 0..kgroups {
+            let bg = bp.add(g * 64);
+            let vb0 = _mm256_loadu_si256(bg.cast());
+            let vb1 = _mm256_loadu_si256(bg.add(32).cast());
+            let ag = ap.add(g * MR * 4);
+            for (i, a) in acc.iter_mut().enumerate() {
+                let quad = ag.add(i * 4).cast::<i32>().read_unaligned();
+                let va = _mm256_set1_epi32(quad);
+                let aabs = _mm256_abs_epi8(va);
+                let p0 = _mm256_maddubs_epi16(aabs, _mm256_sign_epi8(vb0, va));
+                let p1 = _mm256_maddubs_epi16(aabs, _mm256_sign_epi8(vb1, va));
+                a[0] = _mm256_add_epi32(a[0], _mm256_madd_epi16(p0, ones));
+                a[1] = _mm256_add_epi32(a[1], _mm256_madd_epi16(p1, ones));
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            let row = dst.add(i * dst_ld);
+            _mm256_storeu_si256(row.cast(), a[0]);
+            _mm256_storeu_si256(row.add(8).cast(), a[1]);
+        }
+    }
+}
+
+/// Runtime-MR dispatcher over [`avx2_qtile`]. The u8×i8 triple is not
+/// an [`Element`], so there is no trait hook: the quantized driver
+/// ([`crate::gemm::quant`]) calls this directly.
+///
+/// # Safety
+/// Contract of [`avx2_qtile`] with `1 <= mr <= MAX_MR`.
+#[cfg(target_arch = "x86_64")]
+pub(crate) unsafe fn avx2_qtile_dyn(
+    mr: usize,
+    ap: *const u8,
+    bp: *const i8,
+    kgroups: usize,
+    dst: *mut i32,
+    dst_ld: usize,
+) {
+    // SAFETY: forwarding the caller's contract to the mr instantiation.
+    unsafe {
+        match mr {
+            1 => avx2_qtile::<1>(ap, bp, kgroups, dst, dst_ld),
+            2 => avx2_qtile::<2>(ap, bp, kgroups, dst, dst_ld),
+            3 => avx2_qtile::<3>(ap, bp, kgroups, dst, dst_ld),
+            4 => avx2_qtile::<4>(ap, bp, kgroups, dst, dst_ld),
+            5 => avx2_qtile::<5>(ap, bp, kgroups, dst, dst_ld),
+            6 => avx2_qtile::<6>(ap, bp, kgroups, dst, dst_ld),
+            _ => unreachable!("tile mr {mr} out of range"),
+        }
+    }
+}
+
 /// Masked f32 fringe writeback: fold `h × w` elements of a raw
 /// accumulator tile into `C` with one *fused* multiply-add per element,
 /// so a fringe element rounds exactly like a lane of [`avx2_tile`]'s
@@ -766,6 +871,67 @@ mod tests {
                 vector[i],
                 scalar[i]
             );
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn qtile_matches_widening_scalar_reference() {
+        // Hand-build the quantized packed layouts (documenting them) and
+        // check the maddubs kernel against a plain widening i32 loop —
+        // exact equality, including 255 × ±127 extremes. b = −128 is
+        // excluded per the kernel contract (vpsignb hazard).
+        if !crate::gemm::dispatch::detect_avx2() {
+            eprintln!("SKIP: no AVX2");
+            return;
+        }
+        use crate::util::prng::Pcg32;
+        let (mr, k) = (6usize, 37usize);
+        let kgroups = k.div_ceil(4);
+        let mut rng = Pcg32::new(0x5117);
+        let mut a = vec![0u8; mr * k]; // a[i][p], the *unsigned* operand
+        let mut b = vec![0i8; k * NR]; // b[p][j]
+        for (idx, v) in a.iter_mut().enumerate() {
+            *v = if idx % 11 == 0 { 255 } else { (rng.next_u32() % 256) as u8 };
+        }
+        for (idx, v) in b.iter_mut().enumerate() {
+            *v = match idx % 13 {
+                0 => 127,
+                1 => -127,
+                _ => ((rng.next_u32() % 255) as i16 - 127) as i8,
+            };
+        }
+        // Pack: A strips store a' = a XOR 0x80 at g*mr*4 + i*4 + t; B
+        // panels store i8 at g*64 + j*4 + t; pads beyond k are zero in B
+        // (A pads may be anything — B's zeros kill those products).
+        let mut ap = vec![0u8; kgroups * mr * 4];
+        for i in 0..mr {
+            for p in 0..k {
+                ap[(p / 4) * mr * 4 + i * 4 + (p % 4)] = a[i * k + p] ^ 0x80;
+            }
+        }
+        let mut bp = vec![0i8; kgroups * 64];
+        for p in 0..k {
+            for j in 0..NR {
+                bp[(p / 4) * 64 + j * 4 + (p % 4)] = b[p * NR + j];
+            }
+        }
+        let mut got = [0i32; MAX_MR * NR];
+        // SAFETY: buffers sized exactly to the kernel's contract above;
+        // AVX2 checked at the top; bp contains no −128 (values clamped
+        // to [−127, 127] on construction).
+        unsafe {
+            avx2_qtile_dyn(mr, ap.as_ptr(), bp.as_ptr(), kgroups, got.as_mut_ptr(), NR);
+        }
+        for i in 0..mr {
+            for j in 0..NR {
+                let mut want = 0i32;
+                for p in 0..k {
+                    let aprime = (a[i * k + p] ^ 0x80) as i8 as i32;
+                    want = want.wrapping_add(aprime * b[p * NR + j] as i32);
+                }
+                assert_eq!(got[i * NR + j], want, "qtile ({i},{j})");
+            }
         }
     }
 

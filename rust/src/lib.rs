@@ -7,9 +7,13 @@
 //! The crate provides:
 //!
 //! * [`blas`] — a Level-3 BLAS `SGEMM`/`DGEMM` interface with selectable
-//!   backends, generic over the element precision
-//!   ([`gemm::element::Element`]: f32 and f64 through the whole kernel
-//!   ladder, plus a compensated-f32 accumulation mode). The production
+//!   backends, generic over **kernel triples**
+//!   ([`gemm::element::GemmTriple`]: the homogeneous f32 and f64 triples
+//!   through the whole kernel ladder via [`gemm::element::Element`],
+//!   plus a compensated-f32 accumulation mode, plus the quantized
+//!   `u8 × i8 → i32` inference tier — [`blas::qgemm`] /
+//!   [`blas::qgemm_requant`], exact and bitwise-reproducible across
+//!   serial/parallel/prepacked drivers). The production
 //!   surface is the planned-execution API
 //!   ([`blas::GemmContext`] / [`blas::GemmPlan`]: resolve kernel, block
 //!   geometry and thread split once, execute many times, with

@@ -1,0 +1,304 @@
+//! A single dense layer with a quantized-inference path.
+//!
+//! [`Linear`] is the standalone `y = act(x·W + b)` building block (the
+//! MLP in [`super::mlp`] keeps its own fused training path; this type is
+//! the inference-oriented surface the quantized tier plugs into). The
+//! interesting part is [`Linear::quantize_weights`] /
+//! [`Linear::forward_quantized`]:
+//!
+//! * **Weights** are quantized per output channel, symmetric i8:
+//!   `scale_j = max|W[:,j]| / 127`, `q = round(w / scale_j)` clamped to
+//!   `[−127, 127]`. The clamp deliberately excludes `−128` — the AVX2
+//!   kernel's `vpsignb` cannot negate it, so quantized weights always
+//!   stay on the fast path (see [`crate::gemm::quant`]).
+//! * **Activations** are quantized per row at forward time, affine u8:
+//!   the row's `[min, 0] ∪ [0, max]` range maps onto `[0, 255]` with a
+//!   zero point, so the layer input never needs to be centred.
+//! * The GEMM runs exactly in i32 and dequantizes in the writeback via
+//!   [`Requant`] — zero-point correction, `a_scale[r]·w_scale[c]`, bias
+//!   and activation in one per-element pass, bitwise identical across
+//!   scalar/AVX2/parallel/prepacked drivers.
+//!
+//! Weight packing happens once ([`QuantizedLinear`] owns the packed
+//! panels and column sums); each forward only quantizes the activations
+//! and runs the integer GEMM — the weight-stationary inference shape.
+
+use crate::blas::{BlasError, GemmContext, Matrix, Transpose};
+use crate::gemm::epilogue::{Activation, Epilogue, Requant};
+use crate::gemm::quant::QPackedB;
+use crate::util::prng::Pcg32;
+
+/// Dense layer parameters: `weight` is `fan_in × fan_out`, the optional
+/// bias has `fan_out` entries, and `activation` applies element-wise to
+/// the output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Linear {
+    /// Weight matrix, `fan_in × fan_out`.
+    pub weight: Matrix,
+    /// Per-output-channel bias (length `fan_out`), if any.
+    pub bias: Option<Vec<f32>>,
+    /// Element-wise output activation.
+    pub activation: Activation,
+}
+
+impl Linear {
+    /// Wrap existing parameters.
+    pub fn new(weight: Matrix, bias: Option<Vec<f32>>, activation: Activation) -> Self {
+        if let Some(b) = &bias {
+            assert_eq!(b.len(), weight.cols(), "bias length vs fan_out");
+        }
+        Self { weight, bias, activation }
+    }
+
+    /// Glorot-ish random init (deterministic in `seed`), zero bias.
+    pub fn init(fan_in: usize, fan_out: usize, seed: u64, activation: Activation) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let scale = (2.0 / (fan_in + fan_out) as f32).sqrt();
+        let mut w = Matrix::zeros(fan_in, fan_out);
+        for v in w.data_mut() {
+            *v = rng.normal() * scale;
+        }
+        Self { weight: w, bias: Some(vec![0.0; fan_out]), activation }
+    }
+
+    /// Input width.
+    pub fn fan_in(&self) -> usize {
+        self.weight.rows()
+    }
+
+    /// Output width.
+    pub fn fan_out(&self) -> usize {
+        self.weight.cols()
+    }
+
+    /// The layer's fused epilogue (bias + activation).
+    fn epilogue(&self) -> Epilogue {
+        let mut ep = Epilogue::new().activation(self.activation);
+        if let Some(b) = &self.bias {
+            ep = ep.bias_row(b.clone());
+        }
+        ep
+    }
+
+    /// Full-precision forward: `act(x·W + b)` through a planned f32 GEMM
+    /// on `ctx` with the bias/activation fused into the writeback.
+    pub fn forward(&self, ctx: &GemmContext, x: &Matrix) -> Result<Matrix, BlasError> {
+        assert_eq!(x.cols(), self.fan_in(), "input width mismatch");
+        let mut y = Matrix::zeros(x.rows(), self.fan_out());
+        let plan = ctx
+            .gemm()
+            .lda(x.ld())
+            .ldb(self.weight.ld())
+            .epilogue(self.epilogue())
+            .plan(x.rows(), self.fan_out(), self.fan_in())?;
+        plan.run(x.data(), self.weight.data(), y.data_mut())?;
+        Ok(y)
+    }
+
+    /// Quantize the weights per output channel (symmetric i8, clamped to
+    /// `±127`) and pack them for the quantized kernel. The handle stays
+    /// valid while the weights are unchanged — quantize once, run many.
+    pub fn quantize_weights(&self, ctx: &GemmContext) -> QuantizedLinear {
+        let (fan_in, fan_out) = (self.fan_in(), self.fan_out());
+        let mut w_scale = vec![1.0f32; fan_out];
+        for (j, s) in w_scale.iter_mut().enumerate() {
+            let mut amax = 0.0f32;
+            for i in 0..fan_in {
+                amax = amax.max(self.weight.get(i, j).abs());
+            }
+            if amax > 0.0 {
+                *s = amax / 127.0;
+            }
+        }
+        let q = Matrix::<i8>::from_fn(fan_in, fan_out, |i, j| {
+            (self.weight.get(i, j) / w_scale[j]).round().clamp(-127.0, 127.0) as i8
+        });
+        let packed = ctx
+            .qpack_b(Transpose::No, fan_in, fan_out, q.data(), q.ld())
+            .expect("weight matrix is a valid view");
+        QuantizedLinear {
+            ctx: ctx.clone(),
+            packed,
+            w_scale,
+            bias: self.bias.clone(),
+            activation: self.activation,
+            fan_in,
+        }
+    }
+
+    /// Quantized forward: per-row affine u8 quantization of `x`, the
+    /// exact integer GEMM against the prepacked weights, and the fused
+    /// dequantizing writeback. `q` must come from this layer's
+    /// [`quantize_weights`](Self::quantize_weights).
+    pub fn forward_quantized(&self, q: &QuantizedLinear, x: &Matrix) -> Result<Matrix, BlasError> {
+        assert_eq!(q.fan_in, self.fan_in(), "quantized weights are for a different layer");
+        q.forward(x)
+    }
+}
+
+/// Quantized, packed form of a [`Linear`] layer's weights (plus the
+/// layer's bias/activation, which ride the [`Requant`] writeback).
+pub struct QuantizedLinear {
+    ctx: GemmContext,
+    packed: QPackedB,
+    w_scale: Vec<f32>,
+    bias: Option<Vec<f32>>,
+    activation: Activation,
+    fan_in: usize,
+}
+
+impl QuantizedLinear {
+    /// Per-output-channel weight scales.
+    pub fn weight_scales(&self) -> &[f32] {
+        &self.w_scale
+    }
+
+    /// Bytes held by the packed integer panels (diagnostic).
+    pub fn bytes(&self) -> usize {
+        self.packed.bytes()
+    }
+
+    /// Quantized forward pass (see [`Linear::forward_quantized`]).
+    pub fn forward(&self, x: &Matrix) -> Result<Matrix, BlasError> {
+        assert_eq!(x.cols(), self.fan_in, "input width mismatch");
+        let (xq, a_scale, a_zp) = quantize_rows(x);
+        let mut rq = Requant::per_row(a_scale, a_zp, self.w_scale.clone());
+        if let Some(b) = &self.bias {
+            rq = rq.bias(b.clone());
+        }
+        rq = rq.activation(self.activation);
+        let mut y = Matrix::zeros(x.rows(), self.packed.n());
+        self.ctx
+            .qgemm_requant_packed_b(Transpose::No, xq.view(), &self.packed, y.view_mut(), &rq)?;
+        Ok(y)
+    }
+}
+
+/// Per-row affine u8 quantization: row `r` maps `[min(0, min_r),
+/// max(0, max_r)]` onto `[0, 255]`, so `x ≈ a_scale[r] · (q − a_zp[r])`
+/// with the zero point always representable. Returns the quantized
+/// matrix and the per-row scales/zero points [`Requant`] consumes.
+pub fn quantize_rows(x: &Matrix) -> (Matrix<u8>, Vec<f32>, Vec<i32>) {
+    let (m, n) = (x.rows(), x.cols());
+    let mut a_scale = vec![1.0f32; m];
+    let mut a_zp = vec![0i32; m];
+    for r in 0..m {
+        let (mut lo, mut hi) = (0.0f32, 0.0f32);
+        for c in 0..n {
+            let v = x.get(r, c);
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if hi > lo {
+            let scale = (hi - lo) / 255.0;
+            a_scale[r] = scale;
+            a_zp[r] = (-lo / scale).round().clamp(0.0, 255.0) as i32;
+        }
+    }
+    let q = Matrix::<u8>::from_fn(m, n, |r, c| {
+        ((x.get(r, c) / a_scale[r]).round() as i32 + a_zp[r]).clamp(0, 255) as u8
+    });
+    (q, a_scale, a_zp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_serial() -> GemmContext {
+        GemmContext::new(crate::gemm::DispatchConfig {
+            threads: 1,
+            ..crate::gemm::DispatchConfig::default()
+        })
+    }
+
+    #[test]
+    fn quantize_rows_roundtrips_within_one_step() {
+        let x = Matrix::from_fn(4, 9, |r, c| ((r * 9 + c) as f32 * 0.37).sin() * (r + 1) as f32);
+        let (q, s, zp) = quantize_rows(&x);
+        for r in 0..4 {
+            for c in 0..9 {
+                let deq = s[r] * (q.get(r, c) as i32 - zp[r]) as f32;
+                assert!(
+                    (deq - x.get(r, c)).abs() <= s[r] * 0.75,
+                    "({r},{c}): {} vs {}",
+                    deq,
+                    x.get(r, c)
+                );
+            }
+        }
+        // All-zero rows quantize to exactly zero.
+        let z = Matrix::zeros(2, 5);
+        let (qz, sz, zpz) = quantize_rows(&z);
+        assert!(qz.data().iter().all(|&v| v == 0));
+        assert_eq!((sz[0], zpz[0]), (1.0, 0));
+    }
+
+    #[test]
+    fn quantized_weights_avoid_neg128() {
+        let ctx = ctx_serial();
+        // Weights with a dominant negative entry per channel: symmetric
+        // quantization must clamp at −127, never −128.
+        let layer = Linear::new(
+            Matrix::from_fn(16, 8, |i, j| if i == j { -3.0 } else { 0.01 * (i as f32 - 8.0) }),
+            None,
+            Activation::None,
+        );
+        let q = layer.quantize_weights(&ctx);
+        assert!(!q.packed.has_neg128(), "symmetric clamp must keep the fast path");
+    }
+
+    #[test]
+    fn quantized_forward_matches_manual_dequant_bitwise() {
+        let ctx = ctx_serial();
+        let layer = Linear::init(12, 7, 0xA11CE, Activation::Relu);
+        let q = layer.quantize_weights(&ctx);
+        let x = Matrix::from_fn(5, 12, |r, c| ((r * 12 + c) as f32 * 0.21).cos());
+        let got = layer.forward_quantized(&q, &x).unwrap();
+        // Manual reference: same quantization, naive widening integer
+        // GEMM, same Requant scalar function — must agree bitwise.
+        let (xq, a_scale, a_zp) = quantize_rows(&x);
+        let mut wq = Matrix::<i8>::zeros(12, 7);
+        for j in 0..7 {
+            for i in 0..12 {
+                let v = (layer.weight.get(i, j) / q.w_scale[j]).round().clamp(-127.0, 127.0);
+                wq.set(i, j, v as i8);
+            }
+        }
+        let mut raw = Matrix::<i32>::zeros(5, 7);
+        crate::gemm::quant::qgemm_reference(
+            Transpose::No,
+            Transpose::No,
+            xq.view(),
+            wq.view(),
+            &mut raw.view_mut(),
+            false,
+        );
+        let mut rq = Requant::per_row(a_scale, a_zp, q.w_scale.clone());
+        rq = rq.bias(layer.bias.clone().unwrap()).activation(Activation::Relu);
+        for r in 0..5 {
+            for c in 0..7 {
+                let colsum: i32 = (0..12).map(|p| wq.get(p, c) as i32).sum();
+                let want = rq.apply_scalar(raw.get(r, c), colsum, r, c);
+                assert_eq!(got.get(r, c).to_bits(), want.to_bits(), "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_forward_approximates_f32_forward() {
+        let ctx = ctx_serial();
+        let layer = Linear::init(64, 10, 0xBEEF, Activation::None);
+        let q = layer.quantize_weights(&ctx);
+        let x = Matrix::from_fn(8, 64, |r, c| ((r * 64 + c) as f32 * 0.113).sin());
+        let full = layer.forward(&ctx, &x).unwrap();
+        let quantized = layer.forward_quantized(&q, &x).unwrap();
+        let amax = full.data().iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+        for (g, w) in quantized.data().iter().zip(full.data()) {
+            assert!(
+                (g - w).abs() <= 0.05 * amax,
+                "quantization error too large: {g} vs {w} (amax {amax})"
+            );
+        }
+    }
+}

@@ -18,15 +18,22 @@
 //! * [`mlp`] — parameters, forward, softmax cross-entropy, full backprop.
 //! * [`conv`] — convolution lowered onto GEMM (fused or materialised
 //!   im2col).
+//! * [`linear`] — a standalone dense layer with the **quantized
+//!   inference** path: per-channel i8 weights + per-row affine u8
+//!   activations through the exact `u8 × i8 → i32` GEMM tier
+//!   ([`crate::gemm::quant`]), dequantized in the fused
+//!   [`crate::gemm::Requant`] writeback.
 //! * [`data`] — deterministic synthetic classification data (Gaussian
 //!   clusters) so training runs are reproducible without external files.
 //! * [`sgd`] — plain SGD and gradient averaging for data parallelism.
 
 pub mod conv;
 pub mod data;
+pub mod linear;
 pub mod mlp;
 pub mod sgd;
 
 pub use conv::{Conv2d, Im2ColRef, PackedConvKernels};
 pub use data::Dataset;
+pub use linear::{quantize_rows, Linear, QuantizedLinear};
 pub use mlp::{Mlp, MlpGrads};

@@ -199,6 +199,100 @@ fn fused_epilogue_matches_post_pass_on_scalar_tier() {
     }
 }
 
+/// Independent widening integer reference for the quantized tier
+/// (wrapping i32, written from scratch like [`reference`] so the
+/// crate's own oracle is under test too).
+fn qreference(a: &Matrix<u8>, b: &Matrix<i8>, c0: &Matrix<i32>, accumulate: bool) -> Matrix<i32> {
+    let (m, n) = (c0.rows(), c0.cols());
+    let k = a.cols();
+    Matrix::from_fn(m, n, |r, col| {
+        let mut acc = if accumulate { c0.get(r, col) } else { 0 };
+        for p in 0..k {
+            acc = acc.wrapping_add(i32::from(a.get(r, p)) * i32::from(b.get(p, col)));
+        }
+        acc
+    })
+}
+
+#[test]
+fn quantized_scalar_path_is_ub_free_on_fringe_grid() {
+    hermetic_tune_cache();
+    // Under Miri detect_avx2() reports false, so quant::qgemm routes to
+    // the scalar fallback — packing (XOR-0x80 A strips, k-grouped B
+    // panels, wrapping column sums), the dot loop and the zero-point
+    // writeback all run interpreted. Exactness means bitwise equality.
+    use emmerald::gemm::quant;
+    for &m in &DIMS {
+        for &n in &DIMS {
+            let k = (m * 2 + n) % 9 + 1;
+            for accumulate in [false, true] {
+                let a = Matrix::from_fn(m, k, |r, c| (r * 37 + c * 11) as u8);
+                // Full i8 range including −128: the scalar tier has no
+                // vpsignb hazard, so nothing is special-cased here.
+                let b = Matrix::from_fn(k, n, |r, c| ((r * 29 + c * 13) % 256) as u8 as i8);
+                let c0 = Matrix::from_fn(m, n, |r, c| (r as i32) - 2 * (c as i32));
+                let want = qreference(&a, &b, &c0, accumulate);
+                let mut got = c0.clone();
+                quant::qgemm(Transpose::No, Transpose::No, a.view(), b.view(), &mut got.view_mut(), accumulate);
+                assert_eq!(got.data(), want.data(), "qgemm m={m} n={n} k={k} acc={accumulate}");
+                // The generic naive triple (the crate oracle) must agree too.
+                let mut nv = c0.clone();
+                emmerald::gemm::naive::gemm_triple::<emmerald::gemm::Qu8i8>(
+                    Transpose::No,
+                    Transpose::No,
+                    a.view(),
+                    b.view(),
+                    &mut nv.view_mut(),
+                    accumulate,
+                );
+                assert_eq!(nv.data(), want.data(), "naive triple m={m} n={n} k={k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_requant_writeback_is_ub_free() {
+    hermetic_tune_cache();
+    // The fused requant writeback (zero-point correction + scales + bias
+    // + activation) through the scalar driver, plus the context's
+    // prepacked-B route — covers QPackedB packing and the row-sliced
+    // plan entry under the interpreter.
+    use emmerald::gemm::{quant, Requant};
+    let (m, n, k) = (6, 17, 9);
+    let a = Matrix::from_fn(m, k, |r, c| (r * 41 + c * 7) as u8);
+    let b = Matrix::from_fn(k, n, |r, c| (((r * 23 + c * 5) % 255) as i32 - 127) as i8);
+    let rq = Requant::per_row(
+        (0..m).map(|r| 0.01 + r as f32 * 0.002).collect(),
+        (0..m).map(|r| (r % 5) as i32).collect(),
+        (0..n).map(|c| 0.2 + c as f32 * 0.01).collect(),
+    )
+    .bias((0..n).map(|c| c as f32 / 8.0 - 1.0).collect())
+    .activation(Activation::Relu);
+
+    let mut serial = Matrix::<f32>::zeros(m, n);
+    quant::qgemm_requant(Transpose::No, Transpose::No, a.view(), b.view(), &mut serial.view_mut(), &rq);
+
+    // Scalar reference: raw wrapping sums through Requant::apply_scalar.
+    let raw = qreference(&a, &b, &Matrix::<i32>::zeros(m, n), false);
+    for r in 0..m {
+        for col in 0..n {
+            let mut colsum = 0i32;
+            for p in 0..k {
+                colsum = colsum.wrapping_add(i32::from(b.get(p, col)));
+            }
+            let want = rq.apply_scalar(raw.get(r, col), colsum, r, col);
+            assert_eq!(serial.get(r, col).to_bits(), want.to_bits(), "requant ({r},{col})");
+        }
+    }
+
+    let ctx = GemmContext::new(DispatchConfig { threads: 2, ..DispatchConfig::default() });
+    let pb = ctx.qpack_b(Transpose::No, k, n, b.data(), b.ld()).unwrap();
+    let mut prepacked = Matrix::<f32>::zeros(m, n);
+    ctx.qgemm_requant_packed_b(Transpose::No, a.view(), &pb, prepacked.view_mut(), &rq).unwrap();
+    assert_eq!(prepacked.data(), serial.data(), "prepacked requant != serial bits");
+}
+
 #[test]
 fn threadpool_contains_and_rethrows_job_panics() {
     hermetic_tune_cache();

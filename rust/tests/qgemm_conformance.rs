@@ -1,0 +1,312 @@
+//! Quantized-GEMM conformance suite.
+//!
+//! The `u8 × i8 → i32` tier's contract is **exactness**: integer
+//! accumulation wraps mod 2³², which is associative, so every driver —
+//! the AVX2 `maddubs` tile, its scalar fallback, the parallel row split
+//! and the prepacked-B path — must agree *bitwise* with the widening
+//! naive oracle ([`emmerald::gemm::quant::qgemm_reference`]), not merely
+//! to a tolerance. That contract is exercised on the tile tier's fringe
+//! grid, across 257-dimension block boundaries, at the u8/i8 saturation
+//! extremes, through the `−128` scalar fallback, and through the fused
+//! [`Requant`] writeback against its scalar reference.
+
+use emmerald::blas::{GemmContext, MatMut, MatRef, Matrix, Transpose};
+use emmerald::gemm::quant;
+use emmerald::gemm::{Activation, DispatchConfig, Requant};
+use emmerald::util::testkit::hermetic_tune_cache;
+
+/// Sentinel painted into the padding tail of strided `C` rows.
+const PAD_I32: i32 = -7777;
+const PAD_F32: f32 = -77.0;
+
+/// Deterministic full-range u8 fill.
+fn a_mat(transa: Transpose, m: usize, k: usize, seed: u64) -> Matrix<u8> {
+    let (ar, ac) = match transa {
+        Transpose::No => (m, k),
+        Transpose::Yes => (k, m),
+    };
+    Matrix::from_fn(ar, ac, |r, c| {
+        let x = (r as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((c as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add(seed);
+        (x >> 56) as u8
+    })
+}
+
+/// Deterministic i8 fill over `[-127, 127]` — avoids `−128` so the AVX2
+/// `vpsignb` fast path stays eligible (the hazard gets its own test).
+fn b_mat(transb: Transpose, k: usize, n: usize, seed: u64) -> Matrix<i8> {
+    let (br, bc) = match transb {
+        Transpose::No => (k, n),
+        Transpose::Yes => (n, k),
+    };
+    Matrix::from_fn(br, bc, |r, c| {
+        let x = (r as u64)
+            .wrapping_mul(0xD605_0B53_86D5_2BAD)
+            .wrapping_add((c as u64).wrapping_mul(0x94D0_49BB_1331_11EB))
+            .wrapping_add(seed ^ 0xABCD);
+        (((x >> 40) % 255) as i32 - 127) as i8
+    })
+}
+
+/// Strided `C` buffer: logical `m × n` at leading dimension `ld`, data
+/// filled from `(r, c)`, padding tail painted with [`PAD_I32`].
+fn c_buf(m: usize, n: usize, ld: usize, f: impl Fn(usize, usize) -> i32) -> Vec<i32> {
+    let mut buf = vec![PAD_I32; m * ld];
+    for r in 0..m {
+        for c in 0..n {
+            buf[r * ld + c] = f(r, c);
+        }
+    }
+    buf
+}
+
+fn assert_padding(buf: &[i32], m: usize, n: usize, ld: usize, what: &str) {
+    for r in 0..m {
+        for p in n..ld {
+            assert_eq!(buf[r * ld + p], PAD_I32, "{what}: padding clobbered at ({r},{p})");
+        }
+    }
+}
+
+/// One exactness check: `quant::qgemm` (serial, AVX2 or scalar as
+/// detected) against the widening naive oracle, on strided `C`.
+fn check_exact(transa: Transpose, transb: Transpose, m: usize, n: usize, k: usize, accumulate: bool, seed: u64) {
+    let what = format!("qgemm m={m} n={n} k={k} ta={transa:?} tb={transb:?} acc={accumulate}");
+    let a = a_mat(transa, m, k, seed);
+    let b = b_mat(transb, k, n, seed);
+    let ld = n + 3;
+    let prefill = |r: usize, c: usize| (r * 3 + c) as i32 - 11;
+    let mut got = c_buf(m, n, ld, prefill);
+    let mut expect = got.clone();
+
+    let mut cg = MatMut::new(&mut got, m, n, ld).unwrap();
+    quant::qgemm(transa, transb, a.view(), b.view(), &mut cg, accumulate);
+    let mut ce = MatMut::new(&mut expect, m, n, ld).unwrap();
+    quant::qgemm_reference(transa, transb, a.view(), b.view(), &mut ce, accumulate);
+
+    assert_eq!(got, expect, "{what}: driver != widening oracle");
+    assert_padding(&got, m, n, ld, &what);
+}
+
+#[test]
+fn qgemm_matches_widening_oracle_on_fringe_grid() {
+    hermetic_tune_cache();
+    // The int8 tile's fringe dims (1, MR±1, NR±1) cubed, all four
+    // transpose layouts, alternating accumulate — every (m % MR, n % NR,
+    // k % 4) fringe combination crosses the masked-writeback path.
+    let dims = [1usize, 5, 7, 15, 17];
+    let mut case = 0u64;
+    for &m in &dims {
+        for &n in &dims {
+            for &k in &dims {
+                for transa in [Transpose::No, Transpose::Yes] {
+                    for transb in [Transpose::No, Transpose::Yes] {
+                        case += 1;
+                        check_exact(transa, transb, m, n, k, case % 2 == 0, case);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn qgemm_exact_across_257_block_boundaries() {
+    hermetic_tune_cache();
+    // 257 = one past a power of two, crossing every internal boundary:
+    // m=257 spans three 96-row A blocks (QMC) with a 5-row fringe,
+    // n=257 spans 17 B panels (NR=16) with a 1-column fringe, and k=257
+    // spans 65 k-groups (4) with a 1-deep fringe.
+    for (m, n, k, ta, tb) in [
+        (257, 16, 64, Transpose::No, Transpose::No),
+        (6, 257, 32, Transpose::No, Transpose::Yes),
+        (5, 16, 257, Transpose::Yes, Transpose::No),
+        (257, 17, 96, Transpose::Yes, Transpose::Yes),
+    ] {
+        check_exact(ta, tb, m, n, k, true, (m + n + k) as u64);
+    }
+}
+
+#[test]
+fn qgemm_exact_at_saturation_extremes() {
+    hermetic_tune_cache();
+    // Worst-case magnitudes: every a = 255 (u8 max) against b = ±127
+    // (the i8 extremes the weight quantizer emits). k=64 keeps the true
+    // sums inside i32, so exactness means bit-equality with the plain
+    // widening sum — no hidden i16 saturation in the maddubs pipeline.
+    let (m, n, k) = (8, 32, 64);
+    let a = Matrix::from_fn(m, k, |_, _| 255u8);
+    let b = Matrix::from_fn(k, n, |r, c| if (r + c) % 2 == 0 { 127i8 } else { -127 });
+    let ld = n + 1;
+    let mut got = c_buf(m, n, ld, |_, _| 0);
+    let mut cg = MatMut::new(&mut got, m, n, ld).unwrap();
+    quant::qgemm(Transpose::No, Transpose::No, a.view(), b.view(), &mut cg, false);
+    for r in 0..m {
+        for c in 0..n {
+            let mut want = 0i64;
+            for p in 0..k {
+                want += 255 * i64::from(b.data()[p * n + c]);
+            }
+            assert_eq!(i64::from(got[r * ld + c]), want, "saturation case at ({r},{c})");
+        }
+    }
+    assert_padding(&got, m, n, ld, "saturation");
+}
+
+#[test]
+fn neg128_weights_take_scalar_fallback_and_stay_exact() {
+    hermetic_tune_cache();
+    let ctx = GemmContext::new(DispatchConfig::default());
+    let (m, n, k) = (9, 18, 21);
+    // One −128 anywhere in B poisons vpsignb; the packed handle must
+    // flag it and every driver must still be exact via the fallback.
+    let b = Matrix::from_fn(k, n, |r, c| if (r, c) == (k - 1, n - 1) { -128i8 } else { (r as i8) - (c as i8) });
+    let pb = ctx.qpack_b(Transpose::No, k, n, b.data(), b.ld()).unwrap();
+    assert!(pb.has_neg128(), "the −128 byte must be screened at pack time");
+    check_exact(Transpose::No, Transpose::No, m, n, k, false, 0x128);
+    // And through the context path with the flagged handle:
+    let a = a_mat(Transpose::No, m, k, 0x128);
+    let mut got = Matrix::<i32>::zeros(m, n);
+    ctx.qgemm_packed_b(Transpose::No, a.view(), &pb, got.view_mut(), false).unwrap();
+    let mut expect = Matrix::<i32>::zeros(m, n);
+    quant::qgemm_reference(Transpose::No, Transpose::No, a.view(), b.view(), &mut expect.view_mut(), false);
+    assert_eq!(got.data(), expect.data(), "−128 fallback diverged from oracle");
+}
+
+#[test]
+fn serial_parallel_and_prepacked_agree_bitwise() {
+    hermetic_tune_cache();
+    let par = GemmContext::new(DispatchConfig { threads: 4, ..DispatchConfig::default() });
+    for (m, n, k) in [(64, 33, 48), (97, 16, 257), (17, 64, 5)] {
+        for transa in [Transpose::No, Transpose::Yes] {
+            let what = format!("drivers m={m} n={n} k={k} ta={transa:?}");
+            let a = a_mat(transa, m, k, (m * n + k) as u64);
+            let b = b_mat(Transpose::No, k, n, (m + n * k) as u64);
+            let prefill = |r: usize, c: usize| (r as i32) - (c as i32) * 5;
+
+            let mut serial = Matrix::from_fn(m, n, prefill);
+            quant::qgemm(transa, Transpose::No, a.view(), b.view(), &mut serial.view_mut(), true);
+
+            let mut parallel = Matrix::from_fn(m, n, prefill);
+            par.qgemm(transa, Transpose::No, a.view(), b.view(), parallel.view_mut(), true).unwrap();
+            assert_eq!(serial.data(), parallel.data(), "{what}: serial != parallel");
+
+            let pb = par.qpack_b(Transpose::No, k, n, b.data(), b.ld()).unwrap();
+            let mut prepacked = Matrix::from_fn(m, n, prefill);
+            par.qgemm_packed_b(transa, a.view(), &pb, prepacked.view_mut(), true).unwrap();
+            assert_eq!(serial.data(), prepacked.data(), "{what}: serial != prepacked");
+        }
+    }
+}
+
+/// The scalar requant reference (untransposed operands): raw wrapping
+/// sums from the widening oracle, each funnelled once through
+/// [`Requant::apply_scalar`] with the exact wrapping column sum —
+/// precisely the fused writeback's definition, computed the slow way.
+fn requant_reference(a: &Matrix<u8>, b: &Matrix<i8>, m: usize, n: usize, k: usize, rq: &Requant) -> Matrix<f32> {
+    let mut raw = Matrix::<i32>::zeros(m, n);
+    quant::qgemm_reference(Transpose::No, Transpose::No, a.view(), b.view(), &mut raw.view_mut(), false);
+    let bv = b.view();
+    let colsum = |c: usize| -> i32 {
+        let mut s = 0i32;
+        for p in 0..k {
+            s = s.wrapping_add(i32::from(bv.get(p, c)));
+        }
+        s
+    };
+    Matrix::from_fn(m, n, |r, c| rq.apply_scalar(raw.data()[r * n + c], colsum(c), r, c))
+}
+
+#[test]
+fn requant_writeback_matches_scalar_reference_bitwise() {
+    hermetic_tune_cache();
+    let par = GemmContext::new(DispatchConfig { threads: 3, ..DispatchConfig::default() });
+    for (case, (m, n, k)) in [(0usize, (1, 1, 1)), (1, (7, 17, 23)), (2, (64, 16, 40)), (3, (33, 19, 257))].into_iter() {
+        let what = format!("requant m={m} n={n} k={k} case={case}");
+        let a = a_mat(Transpose::No, m, k, case as u64 + 9);
+        let b = b_mat(Transpose::No, k, n, case as u64 + 90);
+        let rq = match case % 3 {
+            0 => Requant::uniform(0.02, 3, 0.5),
+            1 => Requant::per_row(
+                (0..m).map(|r| 0.01 + r as f32 * 0.003).collect(),
+                (0..m).map(|r| (r % 7) as i32).collect(),
+                (0..n).map(|c| 0.25 + c as f32 * 0.01).collect(),
+            )
+            .bias((0..n).map(|c| c as f32 * 0.125 - 1.0).collect())
+            .activation(Activation::Relu),
+            _ => Requant::uniform(0.004, 128, 0.75).activation(Activation::Tanh),
+        };
+        let expect = requant_reference(&a, &b, m, n, k, &rq);
+
+        // Serial one-shot, parallel context, and prepacked context paths
+        // must all hit the reference bits (the writeback is a pure
+        // per-element function of the exact wrapping sum).
+        let mut serial = Matrix::<f32>::zeros(m, n);
+        quant::qgemm_requant(Transpose::No, Transpose::No, a.view(), b.view(), &mut serial.view_mut(), &rq);
+        let mut parallel = Matrix::<f32>::zeros(m, n);
+        par.qgemm_requant(Transpose::No, Transpose::No, a.view(), b.view(), parallel.view_mut(), &rq).unwrap();
+        let pb = par.qpack_b(Transpose::No, k, n, b.data(), b.ld()).unwrap();
+        let mut prepacked = Matrix::<f32>::zeros(m, n);
+        par.qgemm_requant_packed_b(Transpose::No, a.view(), &pb, prepacked.view_mut(), &rq).unwrap();
+
+        for (name, got) in [("serial", &serial), ("parallel", &parallel), ("prepacked", &prepacked)] {
+            for i in 0..m * n {
+                assert_eq!(
+                    got.data()[i].to_bits(),
+                    expect.data()[i].to_bits(),
+                    "{what}: {name} diverged at flat index {i} ({} vs {})",
+                    got.data()[i],
+                    expect.data()[i],
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn requant_strided_c_keeps_padding() {
+    hermetic_tune_cache();
+    let (m, n, k) = (6, 10, 12);
+    let a = a_mat(Transpose::No, m, k, 5);
+    let b = b_mat(Transpose::No, k, n, 6);
+    let rq = Requant::uniform(0.1, 7, 0.3);
+    let ld = n + 4;
+    let mut buf = vec![PAD_F32; m * ld];
+    let mut c = MatMut::new(&mut buf, m, n, ld).unwrap();
+    quant::qgemm_requant(Transpose::No, Transpose::No, a.view(), b.view(), &mut c, &rq);
+    let expect = requant_reference(&a, &b, m, n, k, &rq);
+    for r in 0..m {
+        for col in 0..n {
+            assert_eq!(buf[r * ld + col].to_bits(), expect.data()[r * n + col].to_bits());
+        }
+        for p in n..ld {
+            assert_eq!(buf[r * ld + p], PAD_F32, "padding clobbered at ({r},{p})");
+        }
+    }
+}
+
+#[test]
+fn degenerate_dims_are_handled() {
+    hermetic_tune_cache();
+    let ctx = GemmContext::new(DispatchConfig::default());
+    // k == 0: overwrite zeroes C, accumulate leaves it untouched.
+    let a = Matrix::<u8>::zeros(3, 0);
+    let b = Matrix::<i8>::zeros(0, 4);
+    let mut c = Matrix::from_fn(3, 4, |r, c| (r + c) as i32 + 1);
+    let keep = c.clone();
+    ctx.qgemm(Transpose::No, Transpose::No, a.view(), b.view(), c.view_mut(), true).unwrap();
+    assert_eq!(c.data(), keep.data(), "k=0 accumulate must be a no-op");
+    ctx.qgemm(Transpose::No, Transpose::No, a.view(), b.view(), c.view_mut(), false).unwrap();
+    assert!(c.data().iter().all(|&v| v == 0), "k=0 overwrite must zero C");
+    // m == 0 / n == 0: nothing to do, must not panic.
+    let e = Matrix::<i8>::zeros(5, 0);
+    let mut empty = Matrix::<i32>::zeros(0, 0);
+    ctx.qgemm(Transpose::No, Transpose::No, Matrix::<u8>::zeros(0, 5).view(), e.view(), empty.view_mut(), false)
+        .unwrap();
+
+    // MatRef::new over an empty slice with rows*cols == 0 is fine; the
+    // positional API routes the same dims through validation.
+    emmerald::blas::qgemm(Transpose::No, Transpose::No, 0, 0, 5, &[], 5, &[], 1, &mut [], 1, false).unwrap();
+}

@@ -14,9 +14,12 @@
 //! 2. **Raw-pointer idioms stay in the allowlist.** `from_raw_parts`,
 //!    `.add(` and `get_unchecked` may appear only in `util/ptr.rs` (the
 //!    checked raw-handle core) and the ISA kernel modules
-//!    (`gemm/microkernel.rs`, `gemm/tile.rs`, `blas/level1.rs`).
-//!    Everything else goes through `util::ptr` handles or safe slices.
-//!    (`wrapping_add` is fine anywhere: it never asserts in-bounds.)
+//!    (`gemm/microkernel.rs`, `gemm/tile.rs`, `gemm/quant.rs`,
+//!    `blas/level1.rs`). Everything else goes through `util::ptr`
+//!    handles or safe slices. (`wrapping_add` is fine anywhere: it
+//!    never asserts in-bounds.) Allowlisted files still owe every
+//!    unsafe block its SAFETY comment — the allowlist relaxes rule 2
+//!    only, never rule 1.
 //! 3. **No `static mut`**, anywhere, tests included.
 //! 4. **Declared-safe modules contain no `unsafe` at all**: the API
 //!    surface (`blas/api.rs`), the planners and dispatch
@@ -34,9 +37,10 @@ use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 /// Files (relative to `src/`, `/`-separated) allowed to use raw-pointer
-/// idioms: the checked core plus the ISA kernel modules it backstops.
+/// idioms: the checked core plus the ISA kernel modules it backstops
+/// (`gemm/quant.rs` hosts the int8 `maddubs` drivers' kernel calls).
 const RAW_ALLOWLIST: &[&str] =
-    &["util/ptr.rs", "gemm/microkernel.rs", "gemm/tile.rs", "blas/level1.rs"];
+    &["util/ptr.rs", "gemm/microkernel.rs", "gemm/tile.rs", "gemm/quant.rs", "blas/level1.rs"];
 
 /// Modules that must stay entirely safe. A directory entry (trailing
 /// `/`) covers every file under it.
@@ -441,6 +445,19 @@ fn self_test() -> ExitCode {
             "nn/train.rs",
             "pub unsafe fn f() {}\n",
         ),
+        // The raw-idiom allowlist must not waive rule 1: an unsafe
+        // kernel call in the int8 driver still owes its SAFETY comment.
+        (
+            "undocumented-unsafe",
+            "gemm/quant.rs",
+            "fn qtile(p: *const u8) -> i32 {\n    unsafe { i32::from(*p) }\n}\n",
+        ),
+        // And the quantized nn surface is declared safe like the rest of nn/.
+        (
+            "declared-safe",
+            "nn/linear.rs",
+            "// SAFETY: seeded violation.\nfn f(p: *const i8) -> i8 {\n    unsafe { *p }\n}\n",
+        ),
     ];
     let mut failed = false;
     for (rule, rel, text) in cases {
@@ -462,6 +479,7 @@ fn self_test() -> ExitCode {
              unsafe { *p }\n    }\n}\n",
         ),
         ("gemm/microkernel.rs", "// SAFETY: allowlisted module.\nfn f(p: *const f32) -> f32 {\n    unsafe { *p.add(1) }\n}\n"),
+        ("gemm/quant.rs", "// SAFETY: allowlisted int8 kernel module.\nfn f(p: *const i8) -> i8 {\n    unsafe { *p.add(1) }\n}\n"),
         ("gemm/pack.rs", "fn f(x: usize) -> usize {\n    x.wrapping_add(1)\n}\n"),
         ("gemm/plan.rs", "// unsafe is banned here, and this comment is fine.\nfn f() {}\n"),
     ];
