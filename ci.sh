@@ -67,6 +67,12 @@ cargo bench --bench dgemm_tile_vs_naive
 echo "== cargo bench --bench qgemm_vs_sgemm (int8 tile >= 2x f32 tile guard) =="
 cargo bench --bench qgemm_vs_sgemm
 
+# Fast-matmul guard: the ⟨m,k,n⟩ recursion must stay >= the classical
+# parallel tile driver at 2048^3 f32 and record BENCH_fastmm.json
+# (skip-passes on <4 worker threads or without AVX2).
+echo "== cargo bench --bench fastmm_vs_classical (fast tier >= classical guard) =="
+cargo bench --bench fastmm_vs_classical
+
 # Fused-epilogue guard: bias+activation folded into the GEMM writeback must
 # not lose to the GEMM-then-separate-pass route at MLP layer shapes, and the
 # fused-im2col conv path must peak-allocate less than materialised im2col

@@ -1,0 +1,132 @@
+//! CI guard for the fast-matmul tier: the ⟨m,k,n⟩ recursion (Strassen–
+//! Winograd / Laderman through `gemm/fastmm`) must beat the classical
+//! parallel tile driver at 2048³ f32, or the sub-2MNK saving has been
+//! eaten by scratch traffic, a broken fringe peel, or the recursion
+//! falling off the pool.
+//!
+//! Effective MFlop/s is reported in *classic* (2mnk) terms on both
+//! sides so the rates are directly comparable: the fast tier "wins"
+//! exactly where its multiply saving outruns its extra passes over
+//! memory. Hosts with fewer than 4 worker threads or without AVX2
+//! skip-pass — below that the BFS fan-out has nobody to feed and the
+//! base case is scalar, so the comparison means nothing.
+//!
+//! Emits `BENCH_fastmm.json` (GFLOP/s at 1024³ and 2048³) under
+//! `target/bench-results/` so the perf trajectory is recorded run over
+//! run. Exit code 1 on failure so `ci.sh` can gate on it.
+
+use emmerald::bench::{gemm_flops, Bencher, FlushMode, Report};
+use emmerald::blas::{sgemm_matrix, Backend, Matrix, Transpose};
+use emmerald::gemm::dispatch::global_snapshot;
+use emmerald::gemm::{ElementId, GemmContext, KernelId, ShapeClass};
+use emmerald::util::testkit::assert_allclose;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let threads = GemmContext::global().threads();
+    if !KernelId::Avx2Tile.available_for(ElementId::F32) {
+        println!("SKIP-PASS: no AVX2+FMA — the fast tier would recurse onto a scalar base case");
+        return;
+    }
+    if threads < 4 {
+        println!(
+            "SKIP-PASS: {threads} worker thread(s) — the BFS product fan-out needs >= 4 to beat row-slicing"
+        );
+        return;
+    }
+
+    let d = global_snapshot();
+    let choice = d
+        .config()
+        .fastmm
+        .choice(ElementId::F32, ShapeClass::Square)
+        .unwrap_or_default();
+
+    // Correctness before speed: the forced fast tier must agree with the
+    // naive oracle at a size spanning a couple of recursion levels (384
+    // over a 256 crossover splits once per axis; odd quadrants exercise
+    // the fringe peel). Multi-level f32 error needs looser bars than the
+    // flat kernels (~1 bit per ⟨2,2,2⟩ level).
+    let s = 384;
+    let a = Matrix::random(s, s, 11, -1.0, 1.0);
+    let b = Matrix::random(s, s, 12, -1.0, 1.0);
+    let mut got = Matrix::zeros(s, s);
+    let mut want = Matrix::zeros(s, s);
+    let ran = d.gemm_with(
+        KernelId::FastMm,
+        Transpose::No,
+        Transpose::No,
+        1.0,
+        a.view(),
+        b.view(),
+        0.0,
+        &mut got.view_mut(),
+    );
+    assert_eq!(ran, KernelId::FastMm, "forcing the fast tier degraded to {ran:?}");
+    sgemm_matrix(Backend::Naive, Transpose::No, Transpose::No, 1.0, &a, &b, 0.0, &mut want)
+        .unwrap();
+    assert_allclose(got.data(), want.data(), 1e-2, 5e-3, "fastmm vs naive oracle at 384^3");
+
+    let sizes: Vec<usize> = if quick { vec![512, 1024] } else { vec![1024, 2048] };
+    let mut report = Report::new(
+        "FASTMM — fast-matmul tier vs classical parallel tile (effective 2n^3 MFlop/s)",
+        &["size", "kernel"],
+    );
+    let mut last_ratio = 0.0f64;
+    for &n in &sizes {
+        let a = Matrix::random(n, n, 1, -1.0, 1.0);
+        let b = Matrix::random(n, n, 2, -1.0, 1.0);
+        let classic = gemm_flops(n, n, n);
+
+        let mut c = Matrix::zeros(n, n);
+        let mut bench = Bencher::new(1, 3).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+        let r_classical = bench.run("parallel-tile", classic, || {
+            d.gemm_with(
+                KernelId::Parallel,
+                Transpose::No,
+                Transpose::No,
+                1.0,
+                a.view(),
+                b.view(),
+                0.0,
+                &mut c.view_mut(),
+            );
+        });
+        report.add(&[n.to_string(), "parallel-tile".into()], r_classical.clone());
+
+        let mut bench = Bencher::new(1, 3).flush_mode(FlushMode::Warm).min_sample_secs(0.05);
+        let r_fast = bench.run(choice.algo.name(), classic, || {
+            d.gemm_with(
+                KernelId::FastMm,
+                Transpose::No,
+                Transpose::No,
+                1.0,
+                a.view(),
+                b.view(),
+                0.0,
+                &mut c.view_mut(),
+            );
+        });
+        report.add(&[n.to_string(), choice.algo.name().into()], r_fast.clone());
+
+        last_ratio = r_fast.mflops() / r_classical.mflops();
+        report.note(format!(
+            "n={n}: fast/classical = {last_ratio:.2} ({:.2} vs {:.2} effective GFLOP/s, {} crossover {})",
+            r_fast.mflops() / 1e3,
+            r_classical.mflops() / 1e3,
+            choice.algo.name(),
+            choice.crossover,
+        ));
+    }
+    report.note("Benson & Ballard: the hybrid DFS/BFS schedule should win at and above ~2048 on multicore; below the crossover the flat tile keeps the lead");
+    report.emit("BENCH_fastmm");
+
+    let top = *sizes.last().unwrap();
+    if last_ratio < 1.0 {
+        println!(
+            "FAIL: fast tier below the classical parallel tile at {top}^3 (ratio {last_ratio:.2}) — the sub-2MNK saving has regressed"
+        );
+        std::process::exit(1);
+    }
+    println!("PASS: fast tier >= classical parallel tile at {top}^3 (ratio {last_ratio:.2})");
+}

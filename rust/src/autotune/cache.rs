@@ -5,27 +5,39 @@
 //! winners used to die with the process. This module persists them as
 //! JSON (via [`crate::util::json`]) so the next process starts with the
 //! machine's tuned geometry: [`crate::gemm::plan::GemmContext::global`]
-//! calls [`load_host_entries`] at init.
+//! calls [`load_host_tuned`] at init.
 //!
 //! Default location: `~/.cache/emmerald/tuned.json`. The
 //! `EMMERALD_TUNE_CACHE` environment variable overrides the path (tests
 //! point it at a temp file); the values `off` / `0` / empty disable
 //! persistence entirely.
 
-use crate::gemm::{BlockParams, ElementId, KernelId, TileParams, TripleId, Unroll};
+use crate::gemm::fastmm::DEFAULT_CROSSOVER;
+use crate::gemm::{
+    BlockParams, ElementId, FastAlgoId, FastmmChoice, KernelId, ShapeClass, TileParams, TripleId,
+    Unroll,
+};
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
-/// On-disk schema version. **v4** renamed the per-entry `element` key to
-/// `triple` (the [`crate::gemm::TripleId`] name — `"f32"`, `"f64"`,
-/// `"u8i8i32"`), following the kernel-triple refactor: entries are keyed
-/// `(cpu, kernel, triple)`. Files with a missing, older or unknown
-/// version are **discarded wholesale** — never a parse error — so
-/// upgrading the crate silently re-tunes rather than replaying geometry
-/// under the wrong key. Entries naming a triple this build has no tuned
-/// float tier for (e.g. the quantized `u8i8i32`, whose geometry is fixed
-/// by the maddubs tile) are skipped individually on load, same policy.
-pub const SCHEMA_VERSION: usize = 4;
+/// On-disk schema version. **v5** made two changes on top of v4's
+/// `(cpu, kernel, triple)` entry keys:
+///
+/// * `tile_entries` are keyed by the full [`TripleId`] — including the
+///   quantized `"u8i8i32"`, whose `maddubs` tile geometry became tunable
+///   — instead of only the float elements;
+/// * the square-only `strassen_entries` section was replaced by
+///   `fastmm_entries`, keying a whole [`FastmmChoice`] (algorithm,
+///   crossover, minimum dimension) by `(cpu, element, shape class)`.
+///
+/// **v4 files migrate on load**: tile entries carry over unchanged, and
+/// each `(cpu, min_dim)` Strassen crossover becomes f32
+/// [`FastAlgoId::Strassen222`] choices across every shape class with the
+/// default crossover — the closest v5 reading of the old measurement.
+/// Files with a missing, pre-v4 or unknown version are **discarded
+/// wholesale** — never a parse error — so upgrading the crate silently
+/// re-tunes rather than replaying geometry under the wrong key.
+pub const SCHEMA_VERSION: usize = 5;
 
 /// Environment variable overriding the cache file path.
 pub const ENV_PATH: &str = "EMMERALD_TUNE_CACHE";
@@ -76,14 +88,15 @@ pub fn cpu_model() -> String {
 }
 
 /// Everything one cache file holds: dot-kernel block geometries, the
-/// tile tier's geometry and the measured Strassen crossover, each keyed
-/// by CPU model. Kept as one document so every save preserves the other
-/// sections (read-modify-write over the whole file).
+/// tile tiers' geometries (triple-keyed — the quantized tile tunes too)
+/// and the fast-matmul choices, each keyed by CPU model. Kept as one
+/// document so every save preserves the other sections
+/// (read-modify-write over the whole file).
 #[derive(Debug, Default)]
 struct CacheDoc {
     entries: Vec<(String, ElementId, KernelId, BlockParams)>,
-    tile_entries: Vec<(String, ElementId, TileParams)>,
-    strassen_entries: Vec<(String, usize)>,
+    tile_entries: Vec<(String, TripleId, TileParams)>,
+    fastmm_entries: Vec<(String, ElementId, ShapeClass, FastmmChoice)>,
 }
 
 fn entry_to_json(cpu: &str, element: ElementId, kernel: KernelId, p: &BlockParams) -> Json {
@@ -120,10 +133,10 @@ fn entry_from_json(j: &Json) -> Option<(String, ElementId, KernelId, BlockParams
     Some((cpu, element, kernel, params))
 }
 
-fn tile_entry_to_json(cpu: &str, element: ElementId, p: &TileParams) -> Json {
+fn tile_entry_to_json(cpu: &str, triple: TripleId, p: &TileParams) -> Json {
     Json::obj([
         ("cpu", cpu.into()),
-        ("triple", element.triple().name().into()),
+        ("triple", triple.name().into()),
         ("mr", p.mr.into()),
         ("nr", p.nr.into()),
         ("kc", p.kc.into()),
@@ -133,9 +146,9 @@ fn tile_entry_to_json(cpu: &str, element: ElementId, p: &TileParams) -> Json {
     ])
 }
 
-fn tile_entry_from_json(j: &Json) -> Option<(String, ElementId, TileParams)> {
+fn tile_entry_from_json(j: &Json) -> Option<(String, TripleId, TileParams)> {
     let cpu = j.get("cpu")?.as_str()?.to_string();
-    let element = TripleId::from_name(j.get("triple")?.as_str()?)?.element()?;
+    let triple = TripleId::from_name(j.get("triple")?.as_str()?)?;
     let params = TileParams {
         mr: j.get("mr")?.as_usize()?,
         nr: j.get("nr")?.as_usize()?,
@@ -145,23 +158,53 @@ fn tile_entry_from_json(j: &Json) -> Option<(String, ElementId, TileParams)> {
         prefetch: j.get("prefetch")?.as_bool()?,
     };
     params.validate().ok()?;
-    Some((cpu, element, params))
+    Some((cpu, triple, params))
 }
 
+fn fastmm_entry_to_json(cpu: &str, element: ElementId, class: ShapeClass, c: &FastmmChoice) -> Json {
+    Json::obj([
+        ("cpu", cpu.into()),
+        ("element", element.name().into()),
+        ("class", class.name().into()),
+        ("algo", c.algo.name().into()),
+        ("crossover", c.crossover.into()),
+        ("min_dim", c.min_dim.into()),
+    ])
+}
+
+fn fastmm_entry_from_json(j: &Json) -> Option<(String, ElementId, ShapeClass, FastmmChoice)> {
+    let cpu = j.get("cpu")?.as_str()?.to_string();
+    let element = ElementId::from_name(j.get("element")?.as_str()?)?;
+    let class = ShapeClass::from_name(j.get("class")?.as_str()?)?;
+    let choice = FastmmChoice {
+        algo: FastAlgoId::from_name(j.get("algo")?.as_str()?)?,
+        crossover: j.get("crossover")?.as_usize()?,
+        min_dim: j.get("min_dim")?.as_usize()?,
+    };
+    // The same guard the install path enforces: degenerate thresholds
+    // must not load (a choice with crossover 0 would recurse forever).
+    (choice.crossover > 0 && choice.min_dim > 0).then_some((cpu, element, class, choice))
+}
+
+/// The v4 `strassen_entries` shape, kept only for migration.
 fn strassen_entry_from_json(j: &Json) -> Option<(String, usize)> {
     let cpu = j.get("cpu")?.as_str()?.to_string();
     let min_dim = j.get("min_dim")?.as_usize()?;
     (min_dim > 0).then_some((cpu, min_dim))
 }
 
+fn section<'a>(doc: &'a Json, key: &str) -> &'a [Json] {
+    doc.get(key).and_then(Json::as_arr).unwrap_or(&[])
+}
+
 /// Parse a whole cache file (missing or corrupt files yield an empty
 /// document — the cache is strictly best-effort; unknown sections and
-/// malformed entries are skipped). Files written by an **older or
-/// unknown schema version are discarded wholesale** (see
-/// [`SCHEMA_VERSION`]): v3 entries carry an `element` key where v4 keys
-/// by `triple`, and pre-v3 entries carry neither — neither may be
-/// replayed under a guessed key; the next autotune run simply rewrites
-/// the file at the current version.
+/// malformed entries are skipped). **v4 files migrate in place** (see
+/// [`SCHEMA_VERSION`]); files written by any other non-current schema
+/// version are discarded wholesale — pre-v4 entries carry an `element`
+/// key where v4+ keys by `triple`, and may not be replayed under a
+/// guessed key; the next autotune run simply rewrites the file at the
+/// current version.
 fn load_doc(path: &Path) -> CacheDoc {
     let Ok(text) = std::fs::read_to_string(path) else {
         return CacheDoc::default();
@@ -169,26 +212,47 @@ fn load_doc(path: &Path) -> CacheDoc {
     let Ok(doc) = Json::parse(&text) else {
         return CacheDoc::default();
     };
-    if doc.get("version").and_then(Json::as_usize) != Some(SCHEMA_VERSION) {
+    let version = doc.get("version").and_then(Json::as_usize);
+    if version != Some(SCHEMA_VERSION) && version != Some(4) {
         return CacheDoc::default();
     }
-    CacheDoc {
-        entries: doc
-            .get("entries")
-            .and_then(Json::as_arr)
-            .map(|items| items.iter().filter_map(entry_from_json).collect())
-            .unwrap_or_default(),
-        tile_entries: doc
-            .get("tile_entries")
-            .and_then(Json::as_arr)
-            .map(|items| items.iter().filter_map(tile_entry_from_json).collect())
-            .unwrap_or_default(),
-        strassen_entries: doc
-            .get("strassen_entries")
-            .and_then(Json::as_arr)
-            .map(|items| items.iter().filter_map(strassen_entry_from_json).collect())
-            .unwrap_or_default(),
+    let mut out = CacheDoc {
+        // The dot and tile sections are shape-compatible across v4/v5
+        // (v4 already wrote triple-named tile keys; it just never held a
+        // "u8i8i32" one).
+        entries: section(&doc, "entries").iter().filter_map(entry_from_json).collect(),
+        tile_entries: section(&doc, "tile_entries")
+            .iter()
+            .filter_map(tile_entry_from_json)
+            .collect(),
+        fastmm_entries: section(&doc, "fastmm_entries")
+            .iter()
+            .filter_map(fastmm_entry_from_json)
+            .collect(),
+    };
+    if version == Some(4) {
+        // Migrate each measured Strassen crossover to its nearest v5
+        // meaning: the ⟨2,2,2⟩ algorithm for every f32 shape class, the
+        // measured min_dim preserved, the recursion crossover at the
+        // built-in default (v4 never measured one).
+        for j in section(&doc, "strassen_entries") {
+            if let Some((cpu, min_dim)) = strassen_entry_from_json(j) {
+                for class in ShapeClass::ALL {
+                    out.fastmm_entries.push((
+                        cpu.clone(),
+                        ElementId::F32,
+                        class,
+                        FastmmChoice {
+                            algo: FastAlgoId::Strassen222,
+                            crossover: DEFAULT_CROSSOVER,
+                            min_dim,
+                        },
+                    ));
+                }
+            }
+        }
     }
+    out
 }
 
 /// Atomically publish a whole cache document (temp file + rename, so
@@ -202,13 +266,15 @@ fn save_doc(path: &Path, doc: &CacheDoc) -> std::io::Result<()> {
         ),
         (
             "tile_entries",
-            Json::arr(doc.tile_entries.iter().map(|(c, e, p)| tile_entry_to_json(c, *e, p))),
+            Json::arr(doc.tile_entries.iter().map(|(c, t, p)| tile_entry_to_json(c, *t, p))),
         ),
         (
-            "strassen_entries",
-            Json::arr(doc.strassen_entries.iter().map(|(c, d)| {
-                Json::obj([("cpu", c.as_str().into()), ("min_dim", (*d).into())])
-            })),
+            "fastmm_entries",
+            Json::arr(
+                doc.fastmm_entries
+                    .iter()
+                    .map(|(c, e, cl, ch)| fastmm_entry_to_json(c, *e, *cl, ch)),
+            ),
         ),
     ]);
     if let Some(parent) = path.parent() {
@@ -245,9 +311,9 @@ pub fn load_host_entries() -> Vec<(ElementId, KernelId, BlockParams)> {
 /// a cache file.
 ///
 /// Read-modify-write with an atomic publish (see [`save_doc`]); the tile
-/// and Strassen sections ride along untouched. (Two simultaneous writers
-/// can still last-write-win a whole document — an acceptable loss for a
-/// best-effort cache.)
+/// and fast-matmul sections ride along untouched. (Two simultaneous
+/// writers can still last-write-win a whole document — an acceptable
+/// loss for a best-effort cache.)
 pub fn save_entry(
     path: &Path,
     cpu: &str,
@@ -261,24 +327,33 @@ pub fn save_entry(
     save_doc(path, &doc)
 }
 
-/// Insert-or-replace the tile-tier geometry for one `(cpu, element)`.
+/// Insert-or-replace the tile-tier geometry for one `(cpu, triple)` —
+/// the float outer-product tiers and the quantized `maddubs` tile share
+/// this section.
 pub fn save_tile_entry(
     path: &Path,
     cpu: &str,
-    element: ElementId,
+    triple: TripleId,
     params: &TileParams,
 ) -> std::io::Result<()> {
     let mut doc = load_doc(path);
-    doc.tile_entries.retain(|(c, e, _)| !(c == cpu && *e == element));
-    doc.tile_entries.push((cpu.to_string(), element, *params));
+    doc.tile_entries.retain(|(c, t, _)| !(c == cpu && *t == triple));
+    doc.tile_entries.push((cpu.to_string(), triple, *params));
     save_doc(path, &doc)
 }
 
-/// Insert-or-replace the measured Strassen crossover for one CPU.
-pub fn save_strassen_entry(path: &Path, cpu: &str, min_dim: usize) -> std::io::Result<()> {
+/// Insert-or-replace the fast-matmul choice for one
+/// `(cpu, element, shape class)` cell.
+pub fn save_fastmm_entry(
+    path: &Path,
+    cpu: &str,
+    element: ElementId,
+    class: ShapeClass,
+    choice: &FastmmChoice,
+) -> std::io::Result<()> {
     let mut doc = load_doc(path);
-    doc.strassen_entries.retain(|(c, _)| c != cpu);
-    doc.strassen_entries.push((cpu.to_string(), min_dim));
+    doc.fastmm_entries.retain(|(c, e, cl, _)| !(c == cpu && *e == element && *cl == class));
+    doc.fastmm_entries.push((cpu.to_string(), element, class, *choice));
     save_doc(path, &doc)
 }
 
@@ -291,18 +366,23 @@ pub fn save_host_entry(element: ElementId, kernel: KernelId, params: &BlockParam
     Some(path)
 }
 
-/// Persist this host's tuned tile geometry (best-effort, like
-/// [`save_host_entry`]).
-pub fn save_host_tile_entry(element: ElementId, params: &TileParams) -> Option<PathBuf> {
+/// Persist this host's tuned tile geometry for one triple (best-effort,
+/// like [`save_host_entry`]).
+pub fn save_host_tile_entry(triple: TripleId, params: &TileParams) -> Option<PathBuf> {
     let path = cache_path()?;
-    save_tile_entry(&path, &cpu_model(), element, params).ok()?;
+    save_tile_entry(&path, &cpu_model(), triple, params).ok()?;
     Some(path)
 }
 
-/// Persist this host's measured Strassen crossover (best-effort).
-pub fn save_host_strassen_entry(min_dim: usize) -> Option<PathBuf> {
+/// Persist this host's measured fast-matmul choice for one
+/// `(element, shape class)` cell (best-effort).
+pub fn save_host_fastmm_entry(
+    element: ElementId,
+    class: ShapeClass,
+    choice: &FastmmChoice,
+) -> Option<PathBuf> {
     let path = cache_path()?;
-    save_strassen_entry(&path, &cpu_model(), min_dim).ok()?;
+    save_fastmm_entry(&path, &cpu_model(), element, class, choice).ok()?;
     Some(path)
 }
 
@@ -312,14 +392,14 @@ pub fn save_host_strassen_entry(min_dim: usize) -> Option<PathBuf> {
 pub struct HostTuned {
     /// Dot-kernel geometries, keyed `(element, kernel)`.
     pub entries: Vec<(ElementId, KernelId, BlockParams)>,
-    /// Tile-tier geometries, one per element.
-    pub tiles: Vec<(ElementId, TileParams)>,
-    /// Measured Strassen crossover (f32-only tier).
-    pub strassen: Option<usize>,
+    /// Tile-tier geometries, one per triple (floats + the quantized tile).
+    pub tiles: Vec<(TripleId, TileParams)>,
+    /// Fast-matmul choices, keyed `(element, shape class)`.
+    pub fastmm: Vec<(ElementId, ShapeClass, FastmmChoice)>,
 }
 
 /// Everything cached for this host in **one** file read + parse: the
-/// dot-kernel entries, the tile geometries and the Strassen crossover —
+/// dot-kernel entries, the tile geometries and the fast-matmul choices —
 /// what [`crate::gemm::plan::GemmContext::global`] installs at init.
 pub fn load_host_tuned() -> HostTuned {
     let Some(path) = cache_path() else {
@@ -338,9 +418,14 @@ pub fn load_host_tuned() -> HostTuned {
             .tile_entries
             .into_iter()
             .filter(|(c, _, _)| *c == host)
-            .map(|(_, e, p)| (e, p))
+            .map(|(_, t, p)| (t, p))
             .collect(),
-        strassen: doc.strassen_entries.into_iter().find(|(c, _)| *c == host).map(|(_, d)| d),
+        fastmm: doc
+            .fastmm_entries
+            .into_iter()
+            .filter(|(c, _, _, _)| *c == host)
+            .map(|(_, e, cl, ch)| (e, cl, ch))
+            .collect(),
     }
 }
 
@@ -367,7 +452,7 @@ mod tests {
         let p3 = BlockParams { kb: 336, ..p1 };
         save_entry(&path, "cpu-a", ElementId::F32, KernelId::Avx2, &p3).unwrap();
         // The same (cpu, kernel) under a different element is a distinct
-        // entry — the v4 key is (cpu, kernel, triple).
+        // entry — the key is (cpu, kernel, triple).
         let p64 = BlockParams { kb: 224, ..p1 };
         save_entry(&path, "cpu-a", ElementId::F64, KernelId::Avx2, &p64).unwrap();
         // Replacing an existing (cpu, element, kernel) triple keeps one.
@@ -400,7 +485,7 @@ mod tests {
         // Well-formed current-version JSON with a bogus entry: skipped.
         std::fs::write(
             &path,
-            r#"{"version":4,"entries":[{"cpu":"x","triple":"f32","kernel":"emmerald-sse","kb":0,"mb":1,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
+            r#"{"version":5,"entries":[{"cpu":"x","triple":"f32","kernel":"emmerald-sse","kb":0,"mb":1,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
         )
         .unwrap();
         assert!(load_entries(&path).is_empty(), "invalid kb=0 must not load");
@@ -409,7 +494,7 @@ mod tests {
         // they must not take the valid neighbours down with them.
         std::fs::write(
             &path,
-            r#"{"version":4,"entries":[{"cpu":"x","triple":"u8i8i32","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false},{"cpu":"x","triple":"bf16","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false},{"cpu":"x","triple":"f64","kernel":"emmerald-avx2","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
+            r#"{"version":5,"entries":[{"cpu":"x","triple":"u8i8i32","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false},{"cpu":"x","triple":"bf16","kernel":"emmerald-sse","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false},{"cpu":"x","triple":"f64","kernel":"emmerald-avx2","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}]}"#,
         )
         .unwrap();
         let entries = load_entries(&path);
@@ -419,8 +504,8 @@ mod tests {
     }
 
     #[test]
-    fn old_or_unknown_schema_versions_are_discarded_not_errors() {
-        let path = temp_file("migrate");
+    fn pre_v4_schemas_are_discarded_not_errors() {
+        let path = temp_file("discard");
         // A perfectly valid v3 document (the pre-triple schema, entries
         // keyed by `element`): every section is discarded wholesale —
         // the tuned numbers would be replayed under the wrong key space
@@ -433,7 +518,7 @@ mod tests {
         let doc = load_doc(&path);
         assert!(doc.entries.is_empty(), "v3 entries must be discarded");
         assert!(doc.tile_entries.is_empty(), "v3 tile entries must be discarded");
-        assert!(doc.strassen_entries.is_empty(), "v3 strassen entries must be discarded");
+        assert!(doc.fastmm_entries.is_empty(), "v3 strassen entries must not migrate");
         // The even older v2 document (no element key at all) likewise.
         std::fs::write(
             &path,
@@ -459,65 +544,124 @@ mod tests {
         assert_eq!(entries.len(), 1, "old-version content must not survive migration");
         assert_eq!(entries[0].0, "cpu-m");
         assert_eq!(entries[0].1, ElementId::F64);
-        // The rewritten file is v4: entries carry `triple`, not `element`.
+        // The rewritten file is v5.
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.contains(r#""version":4"#) || text.contains(r#""version": 4"#), "{text}");
-        assert!(text.contains("triple"), "v4 entries must be keyed by triple: {text}");
+        assert!(text.contains(r#""version":5"#) || text.contains(r#""version": 5"#), "{text}");
         let _ = std::fs::remove_file(&path);
     }
 
     #[test]
-    fn tile_and_strassen_sections_roundtrip_and_coexist() {
-        let path = temp_file("tile-strassen");
+    fn v4_files_migrate_tiles_and_strassen_to_v5() {
+        let path = temp_file("v4-migrate");
+        // A full v4 document: dot entry + two tile entries + one measured
+        // Strassen crossover.
+        std::fs::write(
+            &path,
+            r#"{"version":4,"entries":[{"cpu":"x","triple":"f64","kernel":"emmerald-avx2","kb":128,"mb":64,"nr":5,"unroll":4,"prefetch":true,"pack_b":true,"pack_a":false}],"tile_entries":[{"cpu":"x","triple":"f32","mr":6,"nr":16,"kc":192,"mc":72,"nc":480,"prefetch":true},{"cpu":"y","triple":"f64","mr":6,"nr":8,"kc":256,"mc":72,"nc":480,"prefetch":false}],"strassen_entries":[{"cpu":"x","min_dim":768}]}"#,
+        )
+        .unwrap();
+        let doc = load_doc(&path);
+        // Dot + tile sections carry over unchanged.
+        assert_eq!(doc.entries.len(), 1);
+        assert_eq!(doc.entries[0].1, ElementId::F64);
+        assert_eq!(doc.tile_entries.len(), 2);
+        let f32_tile =
+            doc.tile_entries.iter().find(|(c, t, _)| c == "x" && *t == TripleId::F32).unwrap();
+        assert_eq!(f32_tile.2.kc, 192);
+        // The Strassen crossover becomes an f32 Strassen-⟨2,2,2⟩ choice
+        // in every shape class, min_dim preserved, default crossover.
+        assert_eq!(doc.fastmm_entries.len(), ShapeClass::ALL.len());
+        for class in ShapeClass::ALL {
+            let (_, e, _, ch) = doc
+                .fastmm_entries
+                .iter()
+                .find(|(c, _, cl, _)| c == "x" && *cl == class)
+                .unwrap_or_else(|| panic!("migrated entry for {}", class.name()));
+            assert_eq!(*e, ElementId::F32);
+            assert_eq!(ch.algo, FastAlgoId::Strassen222);
+            assert_eq!(ch.crossover, DEFAULT_CROSSOVER);
+            assert_eq!(ch.min_dim, 768);
+        }
+        // A save rewrites the migrated content at v5, and the migrated
+        // fastmm entries survive the round trip.
+        save_tile_entry(&path, "x", TripleId::QU8I8, &TileParams::qtile_default()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""version":5"#) || text.contains(r#""version": 5"#), "{text}");
+        assert!(!text.contains("strassen_entries"), "v4 section must not be rewritten");
+        let doc = load_doc(&path);
+        assert_eq!(doc.tile_entries.len(), 3);
+        assert_eq!(doc.fastmm_entries.len(), ShapeClass::ALL.len());
         let _ = std::fs::remove_file(&path);
-        // A dot entry first; the tile/strassen saves must preserve it.
+    }
+
+    #[test]
+    fn tile_and_fastmm_sections_roundtrip_and_coexist() {
+        let path = temp_file("tile-fastmm");
+        let _ = std::fs::remove_file(&path);
+        // A dot entry first; the tile/fastmm saves must preserve it.
         let dot = BlockParams { kb: 128, mb: 64, nr: 4, ..BlockParams::emmerald_sse() };
         save_entry(&path, "cpu-a", ElementId::F32, KernelId::Simd, &dot).unwrap();
         let tile = TileParams { mr: 4, kc: 128, mc: 48, nc: 160, ..TileParams::avx2_6x16() };
-        save_tile_entry(&path, "cpu-a", ElementId::F32, &tile).unwrap();
-        save_tile_entry(&path, "cpu-b", ElementId::F32, &TileParams::avx2_6x16()).unwrap();
-        // An f64 tile entry for the same cpu coexists with the f32 one.
-        save_tile_entry(&path, "cpu-a", ElementId::F64, &TileParams::avx2_6x8_f64()).unwrap();
-        save_strassen_entry(&path, "cpu-a", 768).unwrap();
-        // Replace: one entry per (cpu, element) survives.
+        save_tile_entry(&path, "cpu-a", TripleId::F32, &tile).unwrap();
+        save_tile_entry(&path, "cpu-b", TripleId::F32, &TileParams::avx2_6x16()).unwrap();
+        // f64 and quantized tile entries for the same cpu coexist with
+        // the f32 one — the v5 key is the full triple.
+        save_tile_entry(&path, "cpu-a", TripleId::F64, &TileParams::avx2_6x8_f64()).unwrap();
+        let qtile = TileParams { mr: 4, mc: 64, ..TileParams::qtile_default() };
+        save_tile_entry(&path, "cpu-a", TripleId::QU8I8, &qtile).unwrap();
+        let choice = FastmmChoice {
+            algo: FastAlgoId::Laderman333,
+            crossover: 128,
+            min_dim: 600,
+        };
+        save_fastmm_entry(&path, "cpu-a", ElementId::F32, ShapeClass::Square, &choice).unwrap();
+        save_fastmm_entry(&path, "cpu-a", ElementId::F64, ShapeClass::Square, &choice).unwrap();
+        // Replace: one entry per (cpu, triple) / (cpu, element, class).
         let tile2 = TileParams { kc: 192, ..tile };
-        save_tile_entry(&path, "cpu-a", ElementId::F32, &tile2).unwrap();
-        save_strassen_entry(&path, "cpu-a", 1536).unwrap();
+        save_tile_entry(&path, "cpu-a", TripleId::F32, &tile2).unwrap();
+        let choice2 = FastmmChoice { min_dim: 900, ..choice };
+        save_fastmm_entry(&path, "cpu-a", ElementId::F32, ShapeClass::Square, &choice2).unwrap();
         let doc = load_doc(&path);
-        assert_eq!(doc.entries.len(), 1, "dot entry must survive tile/strassen saves");
-        assert_eq!(doc.tile_entries.len(), 3);
-        let a_tile = doc
-            .tile_entries
-            .iter()
-            .find(|(c, e, _)| c == "cpu-a" && *e == ElementId::F32)
-            .unwrap();
+        assert_eq!(doc.entries.len(), 1, "dot entry must survive tile/fastmm saves");
+        assert_eq!(doc.tile_entries.len(), 4);
+        let a_tile =
+            doc.tile_entries.iter().find(|(c, t, _)| c == "cpu-a" && *t == TripleId::F32).unwrap();
         assert_eq!(a_tile.2.kc, 192);
-        let a_tile64 = doc
+        let a_qtile = doc
             .tile_entries
             .iter()
-            .find(|(c, e, _)| c == "cpu-a" && *e == ElementId::F64)
+            .find(|(c, t, _)| c == "cpu-a" && *t == TripleId::QU8I8)
             .unwrap();
-        assert_eq!(a_tile64.2.nr, 8);
-        assert_eq!(doc.strassen_entries, vec![("cpu-a".to_string(), 1536)]);
+        assert_eq!((a_qtile.2.mr, a_qtile.2.mc), (4, 64));
+        assert_eq!(doc.fastmm_entries.len(), 2);
+        let a_sq = doc
+            .fastmm_entries
+            .iter()
+            .find(|(c, e, cl, _)| c == "cpu-a" && *e == ElementId::F32 && *cl == ShapeClass::Square)
+            .unwrap();
+        assert_eq!(a_sq.3.min_dim, 900);
+        assert_eq!(a_sq.3.algo, FastAlgoId::Laderman333);
         // And a dot save preserves the other sections in turn.
         save_entry(&path, "cpu-b", ElementId::F32, KernelId::Avx2, &dot).unwrap();
         let doc = load_doc(&path);
-        assert_eq!(doc.tile_entries.len(), 3);
-        assert_eq!(doc.strassen_entries.len(), 1);
+        assert_eq!(doc.tile_entries.len(), 4);
+        assert_eq!(doc.fastmm_entries.len(), 2);
         let _ = std::fs::remove_file(&path);
     }
 
     #[test]
-    fn invalid_tile_and_strassen_entries_are_skipped() {
+    fn invalid_tile_and_fastmm_entries_are_skipped() {
         let path = temp_file("tile-bad");
         std::fs::write(
             &path,
-            r#"{"version":4,"entries":[],"tile_entries":[{"cpu":"x","triple":"f32","mr":9,"nr":16,"kc":256,"mc":72,"nc":480,"prefetch":true}],"strassen_entries":[{"cpu":"x","min_dim":0}]}"#,
+            r#"{"version":5,"entries":[],"tile_entries":[{"cpu":"x","triple":"f32","mr":9,"nr":16,"kc":256,"mc":72,"nc":480,"prefetch":true}],"fastmm_entries":[{"cpu":"x","element":"f32","class":"square","algo":"strassen222","crossover":0,"min_dim":512},{"cpu":"x","element":"f32","class":"square","algo":"winograd444","crossover":128,"min_dim":512},{"cpu":"x","element":"f64","class":"deep","algo":"laderman333","crossover":96,"min_dim":640}]}"#,
         )
         .unwrap();
         let doc = load_doc(&path);
         assert!(doc.tile_entries.is_empty(), "mr=9 must not load");
-        assert!(doc.strassen_entries.is_empty(), "min_dim=0 must not load");
+        assert_eq!(doc.fastmm_entries.len(), 1, "crossover=0 and unknown algos must not load");
+        assert_eq!(doc.fastmm_entries[0].1, ElementId::F64);
+        assert_eq!(doc.fastmm_entries[0].3.algo, FastAlgoId::Laderman333);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -17,8 +17,12 @@
 pub mod cache;
 
 use crate::bench::{gemm_flops, Bencher, FlushMode};
-use crate::blas::{Backend, Matrix, Transpose};
-use crate::gemm::{avx2, blocked, simd, tile, BlockParams, ElementId, TileParams, Unroll};
+use crate::blas::{Matrix, Transpose};
+use crate::gemm::dispatch::{DispatchConfig, GemmDispatch};
+use crate::gemm::{
+    avx2, blocked, quant, simd, tile, BlockParams, ElementId, FastAlgoId, FastmmChoice,
+    FastmmTable, KernelId, ShapeClass, TileParams, TripleId, Unroll,
+};
 
 /// Which kernel family to tune.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -372,122 +376,332 @@ pub fn tune_tile_and_install(spec: &TileTuneSpec) -> TileTuneResult {
 /// on-disk cache. Returns the cache path written, if any.
 pub fn tune_tile_install_and_persist(spec: &TileTuneSpec) -> (TileTuneResult, Option<std::path::PathBuf>) {
     let result = tune_tile_and_install(spec);
-    let path = cache::save_host_tile_entry(spec.element, &result.best);
+    let path = cache::save_host_tile_entry(spec.element.triple(), &result.best);
     (result, path)
 }
 
-/// Probe plan for the Strassen crossover measurement: the sizes swept
-/// (ascending) and the samples per point — the `strassen_crossover`
-/// bench's methodology packaged as an autotune pass, closing the
-/// ROADMAP item that left `strassen_min_dim` at a fixed 1024.
+/// Probe plan for the fast-matmul selection measurement: which
+/// (element, shape class) cell to tune, the scale sweep (ascending), the
+/// candidate algorithms and the recursion crossover used while probing —
+/// the old `strassen_crossover` bench's methodology generalised to the
+/// per-shape, per-element [`crate::gemm::fastmm`] framework.
 #[derive(Clone, Debug)]
-pub struct CrossoverSpec {
-    /// Square sizes measured, ascending.
+pub struct FastmmSpec {
+    /// Element precision under tune.
+    pub element: ElementId,
+    /// Shape class under tune (fixes the probe aspect ratio).
+    pub class: ShapeClass,
+    /// Sweep scales, ascending (the largest problem dimension).
     pub sizes: Vec<usize>,
     /// Timing samples per point (median taken).
     pub samples: usize,
+    /// Candidate base-case factorizations.
+    pub algos: Vec<FastAlgoId>,
+    /// Recursion cutoff probed (and installed with the winner).
+    pub crossover: usize,
 }
 
-impl Default for CrossoverSpec {
-    fn default() -> Self {
-        Self { sizes: vec![256, 512, 768, 1024], samples: 3 }
-    }
-}
-
-/// One measured crossover point: flat-kernel vs Strassen-hybrid rates in
-/// *classic* (2n³) effective MFlop/s, directly comparable.
-#[derive(Clone, Debug)]
-pub struct CrossoverPoint {
-    /// Square problem size.
-    pub size: usize,
-    /// Flat serial vector kernel rate.
-    pub flat_mflops: f64,
-    /// Strassen hybrid effective rate.
-    pub hybrid_mflops: f64,
-}
-
-/// Crossover measurement outcome.
-#[derive(Clone, Debug)]
-pub struct CrossoverResult {
-    /// The derived `DispatchConfig::strassen_min_dim`: the smallest
-    /// measured size where the hybrid beat the flat kernel **and kept
-    /// beating it for the rest of the sweep** (one noisy early win must
-    /// not route every larger problem to a slower path), or twice the
-    /// largest probed size when the hybrid lost at the top of the sweep
-    /// (the crossover, if it exists, lies beyond it).
-    pub min_dim: usize,
-    /// Whether a crossover was actually observed inside the sweep.
-    pub observed: bool,
-    /// Every measured point, in sweep order.
-    pub log: Vec<CrossoverPoint>,
-}
-
-/// Measure where serial Strassen–Winograd starts beating the flat serial
-/// vector kernel (both single-threaded — Strassen is the dispatcher's
-/// single-threaded big-problem tier) and derive `strassen_min_dim`.
-pub fn tune_strassen_crossover(spec: &CrossoverSpec) -> CrossoverResult {
-    use crate::gemm::strassen::{strassen_matmul, DEFAULT_CUTOFF};
-    assert!(!spec.sizes.is_empty(), "crossover sweep needs at least one size");
-    let backend = if crate::gemm::dispatch::detect_avx2() {
-        Backend::Avx2Tile
-    } else if crate::gemm::dispatch::detect_sse() {
-        Backend::Simd
-    } else {
-        Backend::Blocked
-    };
-    let mut log = Vec::new();
-    for &n in &spec.sizes {
-        let a = Matrix::random(n, n, 1, -1.0, 1.0);
-        let b = Matrix::random(n, n, 2, -1.0, 1.0);
-        let classic = gemm_flops(n, n, n);
-        let mut c = Matrix::zeros(n, n);
-        let mut bencher =
-            Bencher::new(1, spec.samples).flush_mode(FlushMode::Warm).min_sample_secs(0.02);
-        let flat = bencher
-            .run("flat", classic, || {
-                crate::blas::sgemm_matrix(backend, Transpose::No, Transpose::No, 1.0, &a, &b, 0.0, &mut c)
-                    .expect("flat kernel");
-            })
-            .mflops();
-        let mut bencher =
-            Bencher::new(1, spec.samples).flush_mode(FlushMode::Warm).min_sample_secs(0.02);
-        let hybrid = bencher
-            .run("hybrid", classic, || {
-                let _ = strassen_matmul(&a, &b, DEFAULT_CUTOFF, backend);
-            })
-            .mflops();
-        log.push(CrossoverPoint { size: n, flat_mflops: flat, hybrid_mflops: hybrid });
-    }
-    // The crossover is the start of the *trailing* run of hybrid wins:
-    // a single noisy win below sizes where the flat kernel still clearly
-    // dominates must not be installed as the permanent threshold.
-    let mut min_dim = None;
-    for point in log.iter().rev() {
-        if point.hybrid_mflops > point.flat_mflops {
-            min_dim = Some(point.size);
-        } else {
-            break;
+impl FastmmSpec {
+    /// The default sweep for one (element, class) cell.
+    pub fn default_for(element: ElementId, class: ShapeClass) -> Self {
+        Self {
+            element,
+            class,
+            sizes: vec![256, 512, 768, 1024],
+            samples: 3,
+            algos: FastAlgoId::ALL.to_vec(),
+            crossover: crate::gemm::fastmm::DEFAULT_CROSSOVER,
         }
     }
-    let observed = min_dim.is_some();
-    CrossoverResult {
-        min_dim: min_dim.unwrap_or(spec.sizes.last().unwrap() * 2),
+
+    /// The probe `(m, n, k)` at one sweep scale: square, wide-output
+    /// (`k` a quarter of the output edge) or deep (`k` dominating).
+    pub fn shape(&self, n: usize) -> (usize, usize, usize) {
+        match self.class {
+            ShapeClass::Square => (n, n, n),
+            ShapeClass::Flat => (n, n, (n / 4).max(1)),
+            ShapeClass::Deep => ((n / 4).max(1), (n / 4).max(1), n),
+        }
+    }
+}
+
+/// One measured sweep point: classical-tier vs fast-tier rates for one
+/// algorithm, both in *classic* (2mnk) effective MFlop/s, directly
+/// comparable.
+#[derive(Clone, Debug)]
+pub struct FastmmPoint {
+    /// Sweep scale (largest problem dimension).
+    pub size: usize,
+    /// Algorithm measured at this point.
+    pub algo: FastAlgoId,
+    /// Classical (parallel-tile) rate.
+    pub classical_mflops: f64,
+    /// Fast-tier effective rate.
+    pub fast_mflops: f64,
+}
+
+/// Fast-matmul measurement outcome for one (element, class) cell.
+#[derive(Clone, Debug)]
+pub struct FastmmResult {
+    /// The cell tuned.
+    pub element: ElementId,
+    /// The shape class tuned.
+    pub class: ShapeClass,
+    /// The derived choice: the algorithm whose trailing-win run starts
+    /// earliest (ties broken by the higher rate at the sweep top), its
+    /// `min_dim` at the start of that run — or twice the largest probed
+    /// scale when no algorithm won at the top of the sweep (the
+    /// crossover, if it exists, lies beyond it).
+    pub choice: FastmmChoice,
+    /// Whether any fast algorithm actually won inside the sweep.
+    pub observed: bool,
+    /// Every measured point, in (algorithm, sweep) order.
+    pub log: Vec<FastmmPoint>,
+}
+
+/// Measure where each fast algorithm starts beating the classical tier
+/// for one (element, shape class) cell and derive the [`FastmmChoice`]
+/// to install. Both sides run through the same dispatcher entry
+/// ([`GemmDispatch::gemm_with`]) on the process pool, so the comparison
+/// is end-to-end, packing and scheduling included.
+pub fn tune_fastmm(spec: &FastmmSpec) -> FastmmResult {
+    match spec.element {
+        ElementId::F32 => tune_fastmm_probe::<f32>(spec),
+        ElementId::F64 => tune_fastmm_probe::<f64>(spec),
+    }
+}
+
+/// The sweep loop proper, monomorphised per probed element.
+fn tune_fastmm_probe<T: crate::gemm::Element>(spec: &FastmmSpec) -> FastmmResult {
+    assert!(!spec.sizes.is_empty(), "fastmm sweep needs at least one size");
+    assert!(!spec.algos.is_empty(), "fastmm sweep needs at least one algorithm");
+    let classical = GemmDispatch::new(DispatchConfig::default());
+    let (lo, hi) = (T::from_f64(-1.0), T::from_f64(1.0));
+    let mut log = Vec::new();
+    // (start of trailing-win run, rate at sweep top) per algorithm.
+    let mut winners: Vec<(FastAlgoId, Option<usize>, f64)> = Vec::new();
+    for &algo in &spec.algos {
+        let forced = DispatchConfig {
+            fastmm: FastmmTable::uniform(FastmmChoice {
+                algo,
+                crossover: spec.crossover,
+                min_dim: 1,
+            }),
+            ..DispatchConfig::default()
+        };
+        let fast_d = GemmDispatch::new(forced);
+        let mut algo_log = Vec::new();
+        for &n in &spec.sizes {
+            let (m, nn, k) = spec.shape(n);
+            let a = Matrix::<T>::random(m, k, 1, lo, hi);
+            let b = Matrix::<T>::random(k, nn, 2, lo, hi);
+            let classic = gemm_flops(m, nn, k);
+            let mut c = Matrix::<T>::zeros(m, nn);
+            let mut bencher =
+                Bencher::new(1, spec.samples).flush_mode(FlushMode::Warm).min_sample_secs(0.02);
+            let flat = bencher
+                .run("classical", classic, || {
+                    classical.gemm_with(
+                        KernelId::Parallel,
+                        Transpose::No,
+                        Transpose::No,
+                        T::ONE,
+                        a.view(),
+                        b.view(),
+                        T::ZERO,
+                        &mut c.view_mut(),
+                    );
+                })
+                .mflops();
+            let mut bencher =
+                Bencher::new(1, spec.samples).flush_mode(FlushMode::Warm).min_sample_secs(0.02);
+            let fast = bencher
+                .run("fastmm", classic, || {
+                    fast_d.gemm_with(
+                        KernelId::FastMm,
+                        Transpose::No,
+                        Transpose::No,
+                        T::ONE,
+                        a.view(),
+                        b.view(),
+                        T::ZERO,
+                        &mut c.view_mut(),
+                    );
+                })
+                .mflops();
+            algo_log.push(FastmmPoint { size: n, algo, classical_mflops: flat, fast_mflops: fast });
+        }
+        // The install threshold is the start of the *trailing* run of
+        // fast-tier wins: a single noisy win below scales where the
+        // classical tier still clearly dominates must not become the
+        // permanent routing threshold.
+        let mut min_dim = None;
+        for point in algo_log.iter().rev() {
+            if point.fast_mflops > point.classical_mflops {
+                min_dim = Some(point.size);
+            } else {
+                break;
+            }
+        }
+        let top_rate = algo_log.last().map(|p| p.fast_mflops).unwrap_or(0.0);
+        winners.push((algo, min_dim, top_rate));
+        log.extend(algo_log);
+    }
+    // Prefer the algorithm that wins earliest; among equals (including
+    // "never won"), the one fastest at the top of the sweep.
+    let best = winners
+        .iter()
+        .min_by(|a, b| {
+            let ka = a.1.unwrap_or(usize::MAX);
+            let kb = b.1.unwrap_or(usize::MAX);
+            ka.cmp(&kb).then(b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal))
+        })
+        .expect("nonempty algorithm list");
+    let observed = best.1.is_some();
+    FastmmResult {
+        element: spec.element,
+        class: spec.class,
+        choice: FastmmChoice {
+            algo: best.0,
+            crossover: spec.crossover,
+            min_dim: best.1.unwrap_or(spec.sizes.last().unwrap() * 2),
+        },
         observed,
         log,
     }
 }
 
-/// Measure the crossover, install it into the process-wide dispatcher
-/// and persist it in the tuned cache (like block sizes). Returns the
-/// result and the cache path written, if any.
-pub fn tune_strassen_install_and_persist(
-    spec: &CrossoverSpec,
-) -> (CrossoverResult, Option<std::path::PathBuf>) {
-    let result = tune_strassen_crossover(spec);
+/// Measure one (element, class) cell, install the derived choice into
+/// the process-wide dispatcher and persist it in the tuned cache (like
+/// block sizes). Returns the result and the cache path written, if any.
+pub fn tune_fastmm_install_and_persist(
+    spec: &FastmmSpec,
+) -> (FastmmResult, Option<std::path::PathBuf>) {
+    let result = tune_fastmm(spec);
     crate::gemm::plan::GemmContext::global()
-        .install_strassen_min_dim(result.min_dim)
-        .expect("measured crossover is positive");
-    let path = cache::save_host_strassen_entry(result.min_dim);
+        .install_fastmm_choice(spec.element, spec.class, result.choice)
+        .expect("derived fastmm choice has positive thresholds");
+    let path = cache::save_host_fastmm_entry(spec.element, spec.class, &result.choice);
+    (result, path)
+}
+
+/// Search space for the quantized `maddubs` tile
+/// ([`crate::gemm::quant`]). Geometry is (MR, kc, mc) — NR is pinned by
+/// the two-YMM accumulator layout, and nc is irrelevant (B is packed
+/// whole-width) — and any candidate produces identical bits, so this is
+/// a pure wall-clock race like the float tile search.
+#[derive(Clone, Debug)]
+pub struct QTileTuneSpec {
+    /// Probe problem size (m = n = k).
+    pub probe_size: usize,
+    /// Timing samples per candidate (median taken).
+    pub samples: usize,
+    /// Candidate strip heights (MR).
+    pub mrs: Vec<usize>,
+    /// Candidate k-chunk depths (snapped down to whole 4-k groups).
+    pub kcs: Vec<usize>,
+    /// Candidate row-block heights (snapped up to a multiple of each MR).
+    pub mcs: Vec<usize>,
+}
+
+impl QTileTuneSpec {
+    /// The default pruned grid around the PR-8 operating point
+    /// (mr 6, whole-k, 96-row blocks).
+    pub fn avx2_default(probe_size: usize) -> Self {
+        Self {
+            probe_size,
+            samples: 3,
+            mrs: vec![4, 6],
+            kcs: vec![512, 1024, 4096],
+            mcs: vec![48, 96, 192],
+        }
+    }
+
+    /// All candidate parameter sets (deduplicated, each validating).
+    pub fn candidates(&self) -> Vec<TileParams> {
+        let base = TileParams::qtile_default();
+        let mut out: Vec<TileParams> = Vec::new();
+        for &mr in &self.mrs {
+            for &kc in &self.kcs {
+                for &mc in &self.mcs {
+                    let p = TileParams { mr, kc, mc: mc.div_ceil(mr) * mr, ..base };
+                    if p.validate().is_ok() && !out.contains(&p) {
+                        out.push(p);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One measured quantized-tile candidate.
+#[derive(Clone, Debug)]
+pub struct QTileTunePoint {
+    /// The parameters measured.
+    pub params: TileParams,
+    /// Median effective MFlop/s (2mnk integer macs counted as 2 ops).
+    pub mflops: f64,
+}
+
+/// Quantized-tile search outcome.
+#[derive(Clone, Debug)]
+pub struct QTileTuneResult {
+    /// Fastest parameters found.
+    pub best: TileParams,
+    /// MFlop/s of the winner.
+    pub best_mflops: f64,
+    /// Every candidate with its measured rate, in search order.
+    pub log: Vec<QTileTunePoint>,
+}
+
+/// Run the empirical quantized-tile search (same methodology as
+/// [`tune_tile`], over the `u8 × i8 → i32` driver with a prepacked B).
+pub fn tune_qtile(spec: &QTileTuneSpec) -> QTileTuneResult {
+    let n = spec.probe_size;
+    let flops = gemm_flops(n, n, n);
+    // Fixed pseudo-random operands; B avoids −128 so the AVX2 path (the
+    // one under tune) is actually exercised.
+    let a = Matrix::<u8>::from_fn(n, n, |r, c| ((r * 31 + c * 7) % 251) as u8);
+    let b = Matrix::<i8>::from_fn(n, n, |r, c| (((r * 13 + c * 5) % 240) as i32 - 120) as i8);
+    let pb = quant::QPackedB::pack(b.view(), Transpose::No, n, n);
+    let mut c = Matrix::<i32>::zeros(n, n);
+    let mut log = Vec::new();
+    let mut best: Option<QTileTunePoint> = None;
+    for params in spec.candidates() {
+        let mut bencher =
+            Bencher::new(1, spec.samples).flush_mode(FlushMode::Warm).min_sample_secs(0.01);
+        let r = bencher.run("qtile candidate", flops, || {
+            quant::qgemm_packed(a.view(), Transpose::No, &pb, &params, &mut c.view_mut(), false);
+        });
+        let point = QTileTunePoint { params, mflops: r.mflops() };
+        if best.as_ref().map(|b| point.mflops > b.mflops).unwrap_or(true) {
+            best = Some(point.clone());
+        }
+        log.push(point);
+    }
+    let best = best.expect("nonempty qtile candidate grid");
+    QTileTuneResult { best: best.params, best_mflops: best.mflops, log }
+}
+
+/// Run the quantized-tile search and install the winner into the
+/// process-wide dispatcher.
+pub fn tune_qtile_and_install(spec: &QTileTuneSpec) -> QTileTuneResult {
+    let result = tune_qtile(spec);
+    crate::gemm::plan::GemmContext::global()
+        .install_tuned_qtile(result.best)
+        .expect("qtile winner comes from a validated candidate grid");
+    result
+}
+
+/// As [`tune_qtile_and_install`], also persisting the winner to the
+/// on-disk cache under the `u8i8i32` triple. Returns the cache path
+/// written, if any.
+pub fn tune_qtile_install_and_persist(
+    spec: &QTileTuneSpec,
+) -> (QTileTuneResult, Option<std::path::PathBuf>) {
+    let result = tune_qtile_and_install(spec);
+    let path = cache::save_host_tile_entry(TripleId::QU8I8, &result.best);
     (result, path)
 }
 
@@ -681,19 +895,68 @@ mod tests {
     }
 
     #[test]
-    fn strassen_crossover_derives_a_min_dim() {
-        // A tiny sweep (sizes far below any real crossover): the result
-        // must be one of the probed sizes or the 2×-beyond fallback, and
-        // the log must carry both rates per point.
-        let spec = CrossoverSpec { sizes: vec![48, 64], samples: 1 };
-        let r = tune_strassen_crossover(&spec);
-        assert_eq!(r.log.len(), 2);
-        assert!(r.log.iter().all(|p| p.flat_mflops > 0.0 && p.hybrid_mflops > 0.0));
+    fn fastmm_sweep_derives_a_choice() {
+        // A tiny sweep (scales far below any real crossover): the
+        // derived min_dim must be one of the probed scales or the
+        // 2×-beyond fallback, the winning algorithm must come from the
+        // candidate list, and the log must carry both rates for every
+        // (algorithm, scale) pair.
+        let spec = FastmmSpec {
+            sizes: vec![48, 64],
+            samples: 1,
+            crossover: 32,
+            ..FastmmSpec::default_for(ElementId::F32, ShapeClass::Square)
+        };
+        let r = tune_fastmm(&spec);
+        assert_eq!(r.log.len(), 2 * FastAlgoId::ALL.len());
+        assert!(r.log.iter().all(|p| p.classical_mflops > 0.0 && p.fast_mflops > 0.0));
+        assert!(spec.algos.contains(&r.choice.algo));
+        assert_eq!(r.choice.crossover, 32);
         if r.observed {
-            assert!(spec.sizes.contains(&r.min_dim));
+            assert!(spec.sizes.contains(&r.choice.min_dim));
         } else {
-            assert_eq!(r.min_dim, 128);
+            assert_eq!(r.choice.min_dim, 128);
         }
+    }
+
+    #[test]
+    fn fastmm_spec_shapes_land_in_their_class() {
+        for class in ShapeClass::ALL {
+            let spec = FastmmSpec::default_for(ElementId::F64, class);
+            for &n in &[64usize, 256, 1024] {
+                let (m, nn, k) = spec.shape(n);
+                assert_eq!(ShapeClass::of(m, nn, k), class, "scale {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn qtile_candidates_align_and_dedupe() {
+        let spec = QTileTuneSpec::avx2_default(64);
+        let cands = spec.candidates();
+        assert!(!cands.is_empty());
+        for p in &cands {
+            assert!(p.validate().is_ok(), "candidate {p:?} must validate");
+            assert_eq!(p.mc % p.mr, 0);
+            assert_eq!(p.nr, 16, "qtile NR is pinned by the kernel");
+        }
+        // mc 48/96/192 are multiples of both 4 and 6: no duplicates.
+        assert_eq!(cands.len(), 2 * 3 * 3);
+    }
+
+    #[test]
+    fn tune_qtile_returns_a_winner_from_the_grid() {
+        let spec = QTileTuneSpec {
+            probe_size: 64,
+            samples: 1,
+            mrs: vec![3, 6],
+            kcs: vec![32],
+            mcs: vec![24],
+        };
+        let r = tune_qtile(&spec);
+        assert_eq!(r.log.len(), 2);
+        assert!(r.best_mflops > 0.0);
+        assert!(spec.candidates().contains(&r.best));
     }
 
     #[test]

@@ -73,7 +73,9 @@ pub fn sgemm(
 /// kernel (6×8) or 4-wide AVX2 dot kernel where available, the scalar
 /// blocked proxy otherwise, thread-parallel above the flop threshold —
 /// through a one-shot plan on the shared [`GemmContext`]. The SSE tier
-/// and Strassen are f32-only and are never selected for f64.
+/// is f32-only and never selected for f64; the fast-matmul family
+/// (Strassen–Winograd, Laderman) is element-generic and *is* open to
+/// f64 above its tuned per-shape-class threshold.
 #[allow(clippy::too_many_arguments)]
 pub fn dgemm(
     backend: Backend,

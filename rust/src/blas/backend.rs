@@ -31,7 +31,7 @@ pub enum Backend {
     Avx2Tile,
     /// Route through the [`crate::gemm::dispatch`] registry: runtime
     /// CPU-feature detection plus shape heuristics over *every* kernel in
-    /// the crate (including the parallel and Strassen drivers).
+    /// the crate (including the parallel and fast-matmul drivers).
     Dispatch,
     /// The default: an alias for [`Backend::Dispatch`].
     Auto,

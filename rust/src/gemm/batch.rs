@@ -162,15 +162,16 @@ pub fn qgemm_batch(
     });
 
     let items = item_slices(c, strides.c, batch);
+    let qp = *super::dispatch::global_snapshot().params_qtile();
     let run_item = |i: usize, cs: &mut [i32]| {
         let av = MatRef::new(&a[i * strides.a..], ar, ac, lda).expect("validated");
         let mut cv = MatMut::new(cs, m, n, ldc).expect("validated");
         match &shared_pb {
-            Some(pb) => super::quant::qgemm_packed(av, transa, pb, &mut cv, accumulate),
+            Some(pb) => super::quant::qgemm_packed(av, transa, pb, &qp, &mut cv, accumulate),
             None => {
                 let bv = MatRef::new(&b[i * strides.b..], br, bc, ldb).expect("validated");
                 let pb = super::quant::QPackedB::pack(bv, transb, k, n);
-                super::quant::qgemm_packed(av, transa, &pb, &mut cv, accumulate);
+                super::quant::qgemm_packed(av, transa, &pb, &qp, &mut cv, accumulate);
             }
         }
     };
@@ -432,11 +433,11 @@ fn run_serial_scratch<T: Element>(
                 e.apply(c, 0, 0);
             }
         }
-        // Parallel/Strassen are whole-problem drivers with no per-item
-        // meaning (and nesting the parallel driver inside the batch
-        // fan-out would multiply thread counts); unreachable from the
-        // public batch APIs, but degrade to the best serial kernel.
-        KernelId::Parallel | KernelId::Strassen => {
+        // Parallel/FastMm are whole-problem drivers with no per-item
+        // meaning (and nesting either driver inside the batch fan-out
+        // would multiply thread counts); unreachable from the public
+        // batch APIs, but degrade to the best serial kernel.
+        KernelId::Parallel | KernelId::FastMm => {
             run_serial_scratch(d, d.best_serial_vector_t::<T>(), transa, transb, alpha, a, b, beta, c, scratch, ep);
         }
     }

@@ -33,13 +33,13 @@
 //!   independent of summation order — the property the bitwise
 //!   serial/parallel/prepacked conformance contract rests on). `Qu8i8`
 //!   deliberately does *not* implement `Element`: the float-only tiers
-//!   (SSE dot, Strassen, compensated accumulation) are unreachable for it
-//!   at the type level, not merely guarded at runtime.
+//!   (SSE dot, fast-matmul, compensated accumulation) are unreachable for
+//!   it at the type level, not merely guarded at runtime.
 //! * **[`Element`]** — the floating-point kernel surface, unchanged in
 //!   role: scalar algebra (`mul_add`, `abs`, `sqrt`, …) for the drivers,
 //!   oracles and LAPACK tier; SIMD geometry ([`Element::LANES`],
 //!   [`Element::TILE_NR`]); and the unsafe kernel hooks (AVX2 tile,
-//!   dot-panels, compensated driver, Strassen). Each impl delegates to
+//!   dot-panels, compensated driver). Each impl delegates to
 //!   the same monomorphic kernels as before.
 //!
 //! Both traits are **sealed**. Everything above the kernels —
@@ -59,14 +59,14 @@
 //! | Emmerald AVX2 dot     | yes (8-wide) | yes (4-wide YMM)       | — (tile tier instead)       |
 //! | outer-product tile    | yes (6×16)   | yes (6×8, 12 YMM acc)  | yes (6×16, maddubs+madd)    |
 //! | parallel split        | yes          | yes                    | yes (row split, bitwise)    |
-//! | Strassen–Winograd     | yes          | — (degrades to serial) | — (by construction)         |
+//! | fast-matmul family    | yes          | yes (element-generic)  | — (by construction)         |
 //! | batched / planned     | yes          | yes                    | yes (prepacked qgemm)       |
 //! | compensated mode      | yes (Dot2)   | n/a (already f64)      | n/a (i32 is exact)          |
 //! | fused epilogue        | yes          | yes                    | requant (i32→f32) + bias/act|
 
 use super::params::{BlockParams, Unroll};
 use super::simd::VecIsa;
-use crate::blas::{Backend, MatMut, MatRef, Transpose};
+use crate::blas::{MatMut, MatRef, Transpose};
 use crate::util::prng::Pcg32;
 use std::fmt::{Debug, Display};
 use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
@@ -283,8 +283,8 @@ impl<T: Element> GemmTriple for T {
 /// commutative, so any blocking/threading schedule produces bitwise
 /// identical sums — the foundation of the qgemm conformance contract.
 /// `Qu8i8` implements [`GemmTriple`] but *not* [`Element`]: the
-/// float-only tiers (SSE dot, Strassen, compensated accumulation) cannot
-/// even be named for it.
+/// float-only tiers (SSE dot, fast-matmul, compensated accumulation)
+/// cannot even be named for it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Qu8i8;
 
@@ -459,19 +459,6 @@ pub trait Element:
         c: &mut MatMut<'_, Self>,
     );
 
-    /// Strassen–Winograd tier hook: run `C = alpha·A·B + beta·C` through
-    /// the recursion and return `true`, or return `false` when this
-    /// element has no Strassen tier (f64 — the caller degrades to the
-    /// serial vector ladder).
-    fn strassen(
-        cutoff: usize,
-        base: Backend,
-        alpha: Self,
-        a: MatRef<'_, Self>,
-        b: MatRef<'_, Self>,
-        beta: Self,
-        c: &mut MatMut<'_, Self>,
-    ) -> bool;
 }
 
 impl Element for f32 {
@@ -652,31 +639,6 @@ impl Element for f32 {
         c: &mut MatMut<'_, f32>,
     ) {
         super::comp::gemm(params, transa, transb, alpha, a, b, beta, c);
-    }
-
-    fn strassen(
-        cutoff: usize,
-        base: Backend,
-        alpha: f32,
-        a: MatRef<'_, f32>,
-        b: MatRef<'_, f32>,
-        beta: f32,
-        c: &mut MatMut<'_, f32>,
-    ) -> bool {
-        use crate::blas::Matrix;
-        // Copies are O(n²) against an O(n^2.8) multiply: noise at the
-        // sizes that reach this tier.
-        let a_own = Matrix::from_fn(a.rows(), a.cols(), |r, col| a.get(r, col));
-        let b_own = Matrix::from_fn(b.rows(), b.cols(), |r, col| b.get(r, col));
-        let t = super::strassen::strassen_matmul(&a_own, &b_own, cutoff, base);
-        c.scale(beta);
-        for r in 0..c.rows() {
-            for col in 0..c.cols() {
-                let v = c.get(r, col) + alpha * t.get(r, col);
-                c.set(r, col, v);
-            }
-        }
-        true
     }
 }
 
@@ -859,21 +821,6 @@ impl Element for f64 {
         // standard dot-tier driver (AVX2 when available).
         let isa = if super::dispatch::detect_avx2() { VecIsa::Avx2 } else { VecIsa::Sse };
         super::simd::gemm_vec(isa, params, transa, transb, alpha, a, b, beta, c);
-    }
-
-    fn strassen(
-        _cutoff: usize,
-        _base: Backend,
-        _alpha: f64,
-        _a: MatRef<'_, f64>,
-        _b: MatRef<'_, f64>,
-        _beta: f64,
-        _c: &mut MatMut<'_, f64>,
-    ) -> bool {
-        // No f64 Strassen tier: the recursion costs ~1 bit per level and
-        // f64 callers chose precision; dispatch degrades to the serial
-        // vector ladder instead.
-        false
     }
 }
 

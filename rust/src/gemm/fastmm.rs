@@ -1,0 +1,1051 @@
+//! Parallel fast matrix multiplication: a family of ⟨m,k,n⟩ base-case
+//! factorizations run with DFS/BFS hybrid task parallelism.
+//!
+//! A fast algorithm ⟨bm,bk,bn⟩:R multiplies a `bm×bk` block matrix by a
+//! `bk×bn` block matrix with `R < bm·bk·bn` block products, trading the
+//! saved multiplications for extra block additions. Each member is a
+//! triple of integer coefficient tables `(U, V, W)` over the operand
+//! blocks — the classical bilinear form
+//!
+//! ```text
+//!   P_r = (Σ_t U[r,t]·A_t) · (Σ_t V[r,t]·B_t)      r = 0..R
+//!   C_c = Σ_r W[c,r]·P_r
+//! ```
+//!
+//! so one recursion drives every algorithm, generic over [`Element`]
+//! (f32 *and* f64). The framework follows Benson & Ballard ("A Framework
+//! for Practical Parallel Fast Matrix Multiplication", PAPERS.md):
+//!
+//! * **Dynamic peeling**, not padding: each level recurses on the largest
+//!   `(bm·⌊m/bm⌋, bk·⌊k/bk⌋, bn·⌊n/bn⌋)` core and fixes the ≤ bm−1 /
+//!   bk−1 / bn−1 leftover rows/columns with three classical rank-updates
+//!   through the base kernel — no per-level full-matrix copies.
+//! * **Pooled scratch**: every task owns one [`Arena`] free-list whose
+//!   buffers are reused across recursion levels (DFS re-uses the same
+//!   S/T/P triple all the way down) instead of allocating per add/sub.
+//! * **DFS/BFS hybrid scheduling**: while the shared [`ThreadPool`] has
+//!   idle workers, a level fans its R block products out as borrowed
+//!   fork-join tasks (BFS); once the pool is saturated — observed via
+//!   [`ThreadPool::has_idle`] — levels run depth-first with sequential
+//!   scratch reuse. Base cases and fringe fixups run the tiled serial
+//!   kernel ([`SerialVecKernel`]) resolved by the dispatch tables.
+//! * **Run-to-run determinism**: products are *written back* to `C`
+//!   strictly in ascending `r` order whether they were computed BFS or
+//!   DFS, and every task computes its product into a private buffer, so
+//!   the floating-point sum order — hence every output bit — is
+//!   independent of thread timing.
+//!
+//! Accuracy: each recursion level amplifies rounding by a small constant
+//! (≈1 bit per level for Strassen–Winograd; slightly more for
+//! ⟨3,3,3⟩:23), which is why dispatch only routes shapes above the tuned
+//! crossover here and the conformance tests scale tolerances with depth.
+//!
+//! Selection lives in [`FastmmTable`]: per (element, [`ShapeClass`]) the
+//! autotuner persists a [`FastmmChoice`] — winning algorithm, recursion
+//! crossover, and the minimum dimension below which the classical tiers
+//! win (see `autotune::tune_fastmm`).
+
+use super::element::{Element, ElementId};
+use super::parallel::SerialVecKernel;
+use crate::blas::{MatMut, MatRef, Transpose};
+use crate::util::threadpool::{run_borrowed_on, ThreadPool};
+
+/// Default recursion crossover: at or below this dimension the recursion
+/// bottoms out on the serial base kernel. 256 keeps conformance-grid
+/// shapes on the exact base case and matches the measured f32 crossover
+/// region of the tile tier.
+pub const DEFAULT_CROSSOVER: usize = 256;
+
+/// Floor for the crossover: below ~32 the block additions dominate any
+/// saved multiplications and the accuracy loss buys nothing.
+pub const MIN_CROSSOVER: usize = 32;
+
+/// Default minimum smallest-dimension before the fast tier outranks the
+/// classical drivers (the conservative pre-autotune threshold).
+pub const DEFAULT_MIN_DIM: usize = 1024;
+
+/// A subproblem must still carry at least this many core multiply flops
+/// (`ms·ks·ns`) for a BFS fan-out to pay its task and buffer overhead.
+const BFS_MIN_VOLUME: usize = 64 * 64 * 64;
+
+/// Identifier of one fast algorithm in the family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FastAlgoId {
+    /// Strassen–Winograd ⟨2,2,2⟩:7 — 7 products, 15 additions (the
+    /// fewest known for rank 7).
+    Strassen222,
+    /// Laderman ⟨3,3,3⟩:23 — the non-Strassen member; recursing on
+    /// thirds pairs naturally with 3·2ⁿ-ish dimensions where ⟨2,2,2⟩
+    /// peels large fringes.
+    Laderman333,
+}
+
+impl FastAlgoId {
+    /// Every algorithm, in registry order.
+    pub const ALL: [FastAlgoId; 2] = [FastAlgoId::Strassen222, FastAlgoId::Laderman333];
+
+    /// Stable name (persisted by the tuned cache).
+    pub fn name(self) -> &'static str {
+        match self {
+            FastAlgoId::Strassen222 => "strassen222",
+            FastAlgoId::Laderman333 => "laderman333",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn from_name(s: &str) -> Option<FastAlgoId> {
+        FastAlgoId::ALL.iter().copied().find(|id| id.name() == s)
+    }
+
+    /// The algorithm's coefficient tables.
+    pub fn algo(self) -> &'static FastAlgo {
+        match self {
+            FastAlgoId::Strassen222 => &STRASSEN_222,
+            FastAlgoId::Laderman333 => &LADERMAN_333,
+        }
+    }
+}
+
+/// One ⟨bm,bk,bn⟩:R fast algorithm as flat coefficient tables.
+///
+/// Layout (all blocks row-major within their grid):
+/// `u[r·(bm·bk) + i·bk + p]` is the coefficient of A block `(i,p)` in
+/// product `r`; `v[r·(bk·bn) + q·bn + j]` that of B block `(q,j)`;
+/// `w[(x·bn + y)·rank + r]` that of product `r` in C block `(x,y)`.
+/// Every table is certified against the Brent equations by
+/// `brent_equations_hold` below.
+#[derive(Debug)]
+pub struct FastAlgo {
+    /// Which member this is.
+    pub id: FastAlgoId,
+    /// Block rows of A / C.
+    pub bm: usize,
+    /// Block columns of A / block rows of B.
+    pub bk: usize,
+    /// Block columns of B / C.
+    pub bn: usize,
+    /// Number of block products (the tensor rank).
+    pub rank: usize,
+    u: &'static [i8],
+    v: &'static [i8],
+    w: &'static [i8],
+}
+
+/// Strassen–Winograd ⟨2,2,2⟩:7 (the Winograd variant: 15 additions).
+static STRASSEN_222: FastAlgo = FastAlgo {
+    id: FastAlgoId::Strassen222,
+    bm: 2,
+    bk: 2,
+    bn: 2,
+    rank: 7,
+    #[rustfmt::skip]
+    u: &[
+        1, 0, 0, 0,
+        0, 1, 0, 0,
+        1, 1, -1, -1,
+        0, 0, 0, 1,
+        0, 0, 1, 1,
+        -1, 0, 1, 1,
+        1, 0, -1, 0,
+    ],
+    #[rustfmt::skip]
+    v: &[
+        1, 0, 0, 0,
+        0, 0, 1, 0,
+        0, 0, 0, 1,
+        1, -1, -1, 1,
+        -1, 1, 0, 0,
+        1, -1, 0, 1,
+        0, -1, 0, 1,
+    ],
+    #[rustfmt::skip]
+    w: &[
+        1, 1, 0, 0, 0, 0, 0,
+        1, 0, 1, 0, 1, 1, 0,
+        1, 0, 0, -1, 0, 1, 1,
+        1, 0, 0, 0, 1, 1, 1,
+    ],
+};
+
+/// Laderman ⟨3,3,3⟩:23 (all coefficients in {−1, 0, 1}).
+static LADERMAN_333: FastAlgo = FastAlgo {
+    id: FastAlgoId::Laderman333,
+    bm: 3,
+    bk: 3,
+    bn: 3,
+    rank: 23,
+    #[rustfmt::skip]
+    u: &[
+        1, 1, 1, -1, -1, 0, 0, -1, -1,
+        1, 0, 0, -1, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 1, 0, 0, 0, 0,
+        -1, 0, 0, 1, 1, 0, 0, 0, 0,
+        0, 0, 0, 1, 1, 0, 0, 0, 0,
+        1, 0, 0, 0, 0, 0, 0, 0, 0,
+        -1, 0, 0, 0, 0, 0, 1, 1, 0,
+        -1, 0, 0, 0, 0, 0, 1, 0, 0,
+        0, 0, 0, 0, 0, 0, 1, 1, 0,
+        1, 1, 1, 0, -1, -1, -1, -1, 0,
+        0, 0, 0, 0, 0, 0, 0, 1, 0,
+        0, 0, -1, 0, 0, 0, 0, 1, 1,
+        0, 0, 1, 0, 0, 0, 0, 0, -1,
+        0, 0, 1, 0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0, 0, 1, 1,
+        0, 0, -1, 0, 1, 1, 0, 0, 0,
+        0, 0, 1, 0, 0, -1, 0, 0, 0,
+        0, 0, 0, 0, 1, 1, 0, 0, 0,
+        0, 1, 0, 0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 1, 0, 0, 0,
+        0, 0, 0, 1, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0, 1, 0, 0,
+        0, 0, 0, 0, 0, 0, 0, 0, 1,
+    ],
+    #[rustfmt::skip]
+    v: &[
+        0, 0, 0, 0, 1, 0, 0, 0, 0,
+        0, -1, 0, 0, 1, 0, 0, 0, 0,
+        -1, 1, 0, 1, -1, -1, -1, 0, 1,
+        1, -1, 0, 0, 1, 0, 0, 0, 0,
+        -1, 1, 0, 0, 0, 0, 0, 0, 0,
+        1, 0, 0, 0, 0, 0, 0, 0, 0,
+        1, 0, -1, 0, 0, 1, 0, 0, 0,
+        0, 0, 1, 0, 0, -1, 0, 0, 0,
+        -1, 0, 1, 0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 1, 0, 0, 0,
+        -1, 0, 1, 1, -1, -1, -1, 1, 0,
+        0, 0, 0, 0, 1, 0, 1, -1, 0,
+        0, 0, 0, 0, 1, 0, 0, -1, 0,
+        0, 0, 0, 0, 0, 0, 1, 0, 0,
+        0, 0, 0, 0, 0, 0, -1, 1, 0,
+        0, 0, 0, 0, 0, 1, 1, 0, -1,
+        0, 0, 0, 0, 0, 1, 0, 0, -1,
+        0, 0, 0, 0, 0, 0, -1, 0, 1,
+        0, 0, 0, 1, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0, 0, 1, 0,
+        0, 0, 1, 0, 0, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0, 0, 0, 1,
+    ],
+    #[rustfmt::skip]
+    w: &[
+        0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 1, 0, 0, 0, 0,
+        1, 0, 0, 1, 1, 1, 0, 0, 0, 0, 0, 1, 0, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 1, 1, 0, 1, 1, 0, 0, 0, 1, 0, 1, 0, 1, 0, 0, 0, 0, 0,
+        0, 1, 1, 1, 0, 1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 1, 1, 0, 0, 0, 0, 0, 0,
+        0, 1, 0, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0,
+        0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 0, 1, 1, 1, 0, 0, 1, 0, 0,
+        0, 0, 0, 0, 0, 1, 1, 1, 0, 0, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 1, 0,
+        0, 0, 0, 0, 0, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1,
+    ],
+};
+
+/// Coarse shape taxonomy for per-shape autotuned selection. Fast
+/// algorithms trade differently on square, wide-output and deep-`k`
+/// problems, so the tuned cache keys its [`FastmmChoice`] by this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShapeClass {
+    /// No dimension more than 2× the smallest — the classic fast-matmul
+    /// home turf.
+    Square,
+    /// Output-dominated: `m`/`n` stretch past `k`.
+    Flat,
+    /// Inner-dimension dominated (`k` is the largest).
+    Deep,
+}
+
+impl ShapeClass {
+    /// Every class, in index order.
+    pub const ALL: [ShapeClass; 3] = [ShapeClass::Square, ShapeClass::Flat, ShapeClass::Deep];
+
+    /// Classify one `(m, n, k)` shape.
+    pub fn of(m: usize, n: usize, k: usize) -> ShapeClass {
+        let mx = m.max(n).max(k);
+        let mn = m.min(n).min(k).max(1);
+        if mx <= 2 * mn {
+            ShapeClass::Square
+        } else if k >= m && k >= n {
+            ShapeClass::Deep
+        } else {
+            ShapeClass::Flat
+        }
+    }
+
+    /// Stable name (persisted by the tuned cache).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShapeClass::Square => "square",
+            ShapeClass::Flat => "flat",
+            ShapeClass::Deep => "deep",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn from_name(s: &str) -> Option<ShapeClass> {
+        ShapeClass::ALL.iter().copied().find(|c| c.name() == s)
+    }
+
+    fn index(self) -> usize {
+        match self {
+            ShapeClass::Square => 0,
+            ShapeClass::Flat => 1,
+            ShapeClass::Deep => 2,
+        }
+    }
+}
+
+/// One tuned selection: which algorithm, where the recursion bottoms
+/// out, and the smallest dimension at which the fast tier wins at all.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FastmmChoice {
+    /// The winning algorithm for this (element, shape class).
+    pub algo: FastAlgoId,
+    /// Recursion cutoff: subproblems at or below this run the base kernel.
+    pub crossover: usize,
+    /// Minimum smallest-dimension before dispatch routes here.
+    pub min_dim: usize,
+}
+
+impl Default for FastmmChoice {
+    fn default() -> Self {
+        Self {
+            algo: FastAlgoId::Strassen222,
+            crossover: DEFAULT_CROSSOVER,
+            min_dim: DEFAULT_MIN_DIM,
+        }
+    }
+}
+
+/// The dispatch-facing selection table: one optional [`FastmmChoice`]
+/// per (element, shape class). `None` disables the fast tier for that
+/// cell. The default enables the conservative default choice on square
+/// shapes for both elements — rectangular classes stay off until the
+/// autotuner measures a win there.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FastmmTable {
+    choices: [[Option<FastmmChoice>; 3]; 2],
+}
+
+impl Default for FastmmTable {
+    fn default() -> Self {
+        let mut t = Self::disabled();
+        t.set(ElementId::F32, ShapeClass::Square, Some(FastmmChoice::default()));
+        t.set(ElementId::F64, ShapeClass::Square, Some(FastmmChoice::default()));
+        t
+    }
+}
+
+impl FastmmTable {
+    /// A table with every cell disabled (tests pin selection off with
+    /// this the way `strassen_min_dim: usize::MAX` used to).
+    pub fn disabled() -> Self {
+        Self { choices: [[None; 3]; 2] }
+    }
+
+    /// A table with every cell set to `choice`.
+    pub fn uniform(choice: FastmmChoice) -> Self {
+        Self { choices: [[Some(choice); 3]; 2] }
+    }
+
+    fn element_index(element: ElementId) -> usize {
+        match element {
+            ElementId::F32 => 0,
+            ElementId::F64 => 1,
+        }
+    }
+
+    /// The choice for one (element, class) cell, if enabled.
+    pub fn choice(&self, element: ElementId, class: ShapeClass) -> Option<FastmmChoice> {
+        self.choices[Self::element_index(element)][class.index()]
+    }
+
+    /// Set (or disable) one cell.
+    pub fn set(&mut self, element: ElementId, class: ShapeClass, choice: Option<FastmmChoice>) {
+        self.choices[Self::element_index(element)][class.index()] = choice;
+    }
+}
+
+/// Per-task scratch free-list: `take` hands out a zero-initialised
+/// buffer (reusing a returned one when available), `give` returns it.
+/// One arena lives on each task's stack, so DFS recursion reuses the
+/// same few buffers across every level with zero synchronisation.
+struct Arena<T> {
+    free: Vec<Vec<T>>,
+}
+
+impl<T: Element> Arena<T> {
+    fn new() -> Self {
+        Self { free: Vec::new() }
+    }
+
+    fn take(&mut self, len: usize) -> Vec<T> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, T::ZERO);
+        v
+    }
+
+    fn give(&mut self, v: Vec<T>) {
+        self.free.push(v);
+    }
+}
+
+/// Fast-matmul driver: `C = alpha·A·B + beta·C` (no-transpose views;
+/// dispatch degrades transposed calls before reaching here).
+///
+/// `crossover` bottoms the recursion out on `base`; `pool` enables the
+/// BFS fan-out (`None` runs fully DFS on the calling thread). Results
+/// are bitwise identical for any pool size including `None`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_fastmm<T: Element>(
+    algo: FastAlgoId,
+    crossover: usize,
+    base: &SerialVecKernel,
+    pool: Option<&ThreadPool>,
+    alpha: T,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    beta: T,
+    c: &mut MatMut<'_, T>,
+) {
+    if alpha == T::ZERO {
+        base.run(Transpose::No, Transpose::No, alpha, a, b, beta, c);
+        return;
+    }
+    let crossover = crossover.max(MIN_CROSSOVER);
+    // Fold beta in up front so the recursion only knows two writeback
+    // modes: overwrite (`acc = false`) or accumulate (`acc = true`).
+    // `scale` is exact (and a no-op for beta == 1), so this costs one
+    // sweep of C at most and keeps every level's fixups uniform.
+    let acc = if beta == T::ZERO {
+        false
+    } else {
+        c.scale(beta);
+        true
+    };
+    let mut arena = Arena::new();
+    rec(algo.algo(), crossover, base, pool, &mut arena, alpha, acc, a, b, c);
+}
+
+/// One recursion level over strided views: fast core plus dynamically
+/// peeled classical fringes. `C (+)= alpha·A·B` per `acc`.
+#[allow(clippy::too_many_arguments)]
+fn rec<T: Element>(
+    algo: &'static FastAlgo,
+    crossover: usize,
+    base: &SerialVecKernel,
+    pool: Option<&ThreadPool>,
+    arena: &mut Arena<T>,
+    alpha: T,
+    acc: bool,
+    a: MatRef<'_, T>,
+    b: MatRef<'_, T>,
+    c: &mut MatMut<'_, T>,
+) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let beta_eff = if acc { T::ONE } else { T::ZERO };
+    let (ms, ks, ns) = (m / algo.bm, k / algo.bk, n / algo.bn);
+    if m.max(k).max(n) <= crossover || ms == 0 || ks == 0 || ns == 0 {
+        base.run(Transpose::No, Transpose::No, alpha, a, b, beta_eff, c);
+        return;
+    }
+    let (m0, k0, n0) = (ms * algo.bm, ks * algo.bk, ns * algo.bn);
+    let (bm, bk, bn, rank) = (algo.bm, algo.bk, algo.bn, algo.rank);
+
+    // The divisible core as block-grid views (row-major block order,
+    // matching the U/V/W table layout).
+    let ablocks: Vec<MatRef<'_, T>> =
+        (0..bm * bk).map(|t| a.block((t / bk) * ms, (t % bk) * ks, ms, ks)).collect();
+    let bblocks: Vec<MatRef<'_, T>> =
+        (0..bk * bn).map(|t| b.block((t / bn) * ks, (t % bn) * ns, ks, ns)).collect();
+    // First product contributing to each C block: on overwrite runs
+    // that term stores instead of accumulating.
+    let first_r: Vec<usize> = (0..bm * bn)
+        .map(|cb| {
+            (0..rank)
+                .find(|&r| algo.w[cb * rank + r] != 0)
+                .expect("certified algorithms cover every C block")
+        })
+        .collect();
+
+    let fan_out = pool.is_some_and(ThreadPool::has_idle) && ms * ks * ns >= BFS_MIN_VOLUME;
+    if fan_out {
+        // BFS: all R products into private buffers, concurrently. Each
+        // task carries its own arena; nested levels keep deciding
+        // BFS-vs-DFS off pool saturation.
+        let mut p_bufs: Vec<Vec<T>> = (0..rank).map(|_| vec![T::ZERO; ms * ns]).collect();
+        {
+            let ablocks = &ablocks;
+            let bblocks = &bblocks;
+            let base_copy = *base;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = p_bufs
+                .iter_mut()
+                .enumerate()
+                .map(|(r, p_buf)| {
+                    Box::new(move || {
+                        let mut local = Arena::new();
+                        product_into(
+                            algo, crossover, &base_copy, pool, &mut local, ablocks, bblocks, r,
+                            ms, ks, ns, p_buf,
+                        );
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            run_borrowed_on(pool, jobs);
+        }
+        // Serial writeback in ascending r — the same order the DFS arm
+        // uses, which is what makes results schedule-independent.
+        for (r, p_buf) in p_bufs.iter().enumerate() {
+            writeback(algo, c, &first_r, acc, alpha, r, p_buf, ms, ns);
+        }
+    } else {
+        // DFS: one product at a time, arena scratch reused across all R.
+        let mut p_buf = arena.take(ms * ns);
+        for r in 0..rank {
+            product_into(
+                algo, crossover, base, pool, arena, &ablocks, &bblocks, r, ms, ks, ns, &mut p_buf,
+            );
+            writeback(algo, c, &first_r, acc, alpha, r, &p_buf, ms, ns);
+        }
+        arena.give(p_buf);
+    }
+
+    // Classical fixups for the peeled fringes, disjointly covering the
+    // rest of C (and the k remainder of the core):
+    //   core      C[..m0, ..n0] (+)= A[..m0, ..k0]  · B[..k0, ..n0]   (above)
+    //   k fringe  C[..m0, ..n0]  += A[..m0, k0..]   · B[k0.., ..n0]
+    //   n fringe  C[..m0, n0..] (+)= A[..m0, ..]    · B[.., n0..]
+    //   m fringe  C[m0.., ..]   (+)= A[m0.., ..]    · B
+    if k0 < k {
+        let mut c_core = c.block_mut(0, 0, m0, n0);
+        base.run(
+            Transpose::No,
+            Transpose::No,
+            alpha,
+            a.block(0, k0, m0, k - k0),
+            b.block(k0, 0, k - k0, n0),
+            T::ONE,
+            &mut c_core,
+        );
+    }
+    if n0 < n {
+        let mut c_right = c.block_mut(0, n0, m0, n - n0);
+        base.run(
+            Transpose::No,
+            Transpose::No,
+            alpha,
+            a.block(0, 0, m0, k),
+            b.block(0, n0, k, n - n0),
+            beta_eff,
+            &mut c_right,
+        );
+    }
+    if m0 < m {
+        let mut c_bottom = c.block_mut(m0, 0, m - m0, n);
+        base.run(
+            Transpose::No,
+            Transpose::No,
+            alpha,
+            a.block(m0, 0, m - m0, k),
+            b,
+            beta_eff,
+            &mut c_bottom,
+        );
+    }
+}
+
+/// Compute product `r`: assemble `S = Σ U[r]·A_t` and `T = Σ V[r]·B_t`
+/// (borrowing the operand block directly when the row is a lone `+1`),
+/// then recurse `P_r = S·T` into `p_buf`.
+#[allow(clippy::too_many_arguments)]
+fn product_into<T: Element>(
+    algo: &'static FastAlgo,
+    crossover: usize,
+    base: &SerialVecKernel,
+    pool: Option<&ThreadPool>,
+    arena: &mut Arena<T>,
+    ablocks: &[MatRef<'_, T>],
+    bblocks: &[MatRef<'_, T>],
+    r: usize,
+    ms: usize,
+    ks: usize,
+    ns: usize,
+    p_buf: &mut [T],
+) {
+    let (bm, bk, bn) = (algo.bm, algo.bk, algo.bn);
+    let u_row = &algo.u[r * (bm * bk)..(r + 1) * (bm * bk)];
+    let v_row = &algo.v[r * (bk * bn)..(r + 1) * (bk * bn)];
+    let mut s_buf = None;
+    let s_view = match singleton(u_row) {
+        Some(t) => ablocks[t],
+        None => {
+            let mut buf = arena.take(ms * ks);
+            combine(u_row, ablocks, ms, ks, &mut buf);
+            let buf: &Vec<T> = s_buf.insert(buf);
+            MatRef::new(buf, ms, ks, ks).expect("fastmm S scratch view")
+        }
+    };
+    let mut t_buf = None;
+    let t_view = match singleton(v_row) {
+        Some(t) => bblocks[t],
+        None => {
+            let mut buf = arena.take(ks * ns);
+            combine(v_row, bblocks, ks, ns, &mut buf);
+            let buf: &Vec<T> = t_buf.insert(buf);
+            MatRef::new(buf, ks, ns, ns).expect("fastmm T scratch view")
+        }
+    };
+    let mut p_view = MatMut::new(p_buf, ms, ns, ns).expect("fastmm P scratch view");
+    rec(algo, crossover, base, pool, arena, T::ONE, false, s_view, t_view, &mut p_view);
+    if let Some(buf) = s_buf {
+        arena.give(buf);
+    }
+    if let Some(buf) = t_buf {
+        arena.give(buf);
+    }
+}
+
+/// The block index when a coefficient row is exactly one `+1` (the
+/// operand view can then feed the recursion without a copy).
+fn singleton(coefs: &[i8]) -> Option<usize> {
+    let mut found = None;
+    for (t, &cf) in coefs.iter().enumerate() {
+        if cf == 0 {
+            continue;
+        }
+        if cf != 1 || found.is_some() {
+            return None;
+        }
+        found = Some(t);
+    }
+    found
+}
+
+/// `out = Σ coefs[t]·blocks[t]` over `rows×cols` views, in ascending
+/// block order (fixed order ⇒ deterministic rounding).
+fn combine<T: Element>(
+    coefs: &[i8],
+    blocks: &[MatRef<'_, T>],
+    rows: usize,
+    cols: usize,
+    out: &mut [T],
+) {
+    debug_assert_eq!(out.len(), rows * cols);
+    let mut first = true;
+    for (t, &cf) in coefs.iter().enumerate() {
+        if cf == 0 {
+            continue;
+        }
+        let blk = &blocks[t];
+        for i in 0..rows {
+            let row = &mut out[i * cols..(i + 1) * cols];
+            if first {
+                for (j, slot) in row.iter_mut().enumerate() {
+                    let v = blk.get(i, j);
+                    *slot = if cf < 0 { -v } else { v };
+                }
+            } else if cf < 0 {
+                for (j, slot) in row.iter_mut().enumerate() {
+                    *slot -= blk.get(i, j);
+                }
+            } else {
+                for (j, slot) in row.iter_mut().enumerate() {
+                    *slot += blk.get(i, j);
+                }
+            }
+        }
+        first = false;
+    }
+    debug_assert!(!first, "every product reads at least one operand block");
+}
+
+/// Apply product `r` to every C block it contributes to. The first
+/// contribution of an overwrite run stores; everything else accumulates
+/// `± alpha·P_r` — alpha is applied exactly once, here, at the level
+/// that owns the caller's scaling (inner levels recurse with alpha = 1).
+#[allow(clippy::too_many_arguments)]
+fn writeback<T: Element>(
+    algo: &FastAlgo,
+    c: &mut MatMut<'_, T>,
+    first_r: &[usize],
+    acc: bool,
+    alpha: T,
+    r: usize,
+    p: &[T],
+    ms: usize,
+    ns: usize,
+) {
+    let (bm, bn, rank) = (algo.bm, algo.bn, algo.rank);
+    for cb in 0..bm * bn {
+        let wv = algo.w[cb * rank + r];
+        if wv == 0 {
+            continue;
+        }
+        let (x, y) = (cb / bn, cb % bn);
+        let overwrite = !acc && first_r[cb] == r;
+        let mut cblk = c.block_mut(x * ms, y * ns, ms, ns);
+        for i in 0..ms {
+            for j in 0..ns {
+                let mut v = alpha * p[i * ns + j];
+                if wv < 0 {
+                    v = -v;
+                }
+                if overwrite {
+                    cblk.set(i, j, v);
+                } else {
+                    let old = cblk.get(i, j);
+                    cblk.set(i, j, old + v);
+                }
+            }
+        }
+    }
+}
+
+/// Honest arithmetic count of one fast-matmul run on an `m×k · k×n`
+/// problem: rank-based recursion on the divisible core (block products
+/// plus the S/T/C additions the tables actually perform, scaled by
+/// block size) and classical `2mnk` for base cases and peeled fringes.
+/// Replaces the old square-only `strassen_flops` model — rectangular
+/// shapes report their real counts.
+pub fn flops(id: FastAlgoId, m: usize, k: usize, n: usize, crossover: usize) -> f64 {
+    flops_rec(id.algo(), m, k, n, crossover.max(MIN_CROSSOVER))
+}
+
+fn flops_rec(algo: &FastAlgo, m: usize, k: usize, n: usize, crossover: usize) -> f64 {
+    let (ms, ks, ns) = (m / algo.bm, k / algo.bk, n / algo.bn);
+    if m.max(k).max(n) <= crossover || ms == 0 || ks == 0 || ns == 0 {
+        return 2.0 * m as f64 * k as f64 * n as f64;
+    }
+    let (m0, k0, n0) = (ms * algo.bm, ks * algo.bk, ns * algo.bn);
+    let (bm, bk, bn, rank) = (algo.bm, algo.bk, algo.bn, algo.rank);
+    let mut adds = 0.0;
+    for r in 0..rank {
+        let nu = algo.u[r * bm * bk..(r + 1) * (bm * bk)].iter().filter(|&&cf| cf != 0).count();
+        let nv = algo.v[r * bk * bn..(r + 1) * (bk * bn)].iter().filter(|&&cf| cf != 0).count();
+        adds += nu.saturating_sub(1) as f64 * (ms * ks) as f64;
+        adds += nv.saturating_sub(1) as f64 * (ks * ns) as f64;
+    }
+    let w_terms = algo.w.iter().filter(|&&cf| cf != 0).count();
+    adds += w_terms as f64 * (ms * ns) as f64;
+    let mut total = rank as f64 * flops_rec(algo, ms, ks, ns, crossover) + adds;
+    if k0 < k {
+        total += 2.0 * m0 as f64 * (k - k0) as f64 * n0 as f64;
+    }
+    if n0 < n {
+        total += 2.0 * m0 as f64 * k as f64 * (n - n0) as f64;
+    }
+    if m0 < m {
+        total += 2.0 * (m - m0) as f64 * k as f64 * n as f64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::Matrix;
+    use crate::gemm::dispatch::{DispatchConfig, GemmDispatch};
+    use crate::gemm::naive;
+    use crate::util::testkit::{assert_allclose, assert_allclose_f64};
+
+    /// The base kernel dispatch would hand the recursion on this host.
+    fn base_kernel() -> SerialVecKernel {
+        GemmDispatch::new(DispatchConfig::default()).serial_vec_kernel_t::<f32>(64)
+    }
+
+    fn base_kernel_f64() -> SerialVecKernel {
+        GemmDispatch::new(DispatchConfig::default()).serial_vec_kernel_t::<f64>(64)
+    }
+
+    #[test]
+    fn brent_equations_hold_for_every_algorithm() {
+        // Σ_r U[r,(i,p)]·V[r,(q,j)]·W[(x,y),r] = [p=q][i=x][j=y]: the
+        // exact algebraic certificate that each table multiplies
+        // matrices — exhaustive over all block-index combinations.
+        for id in FastAlgoId::ALL {
+            let algo = id.algo();
+            let (bm, bk, bn, rank) = (algo.bm, algo.bk, algo.bn, algo.rank);
+            assert_eq!(algo.u.len(), rank * bm * bk, "{}", id.name());
+            assert_eq!(algo.v.len(), rank * bk * bn, "{}", id.name());
+            assert_eq!(algo.w.len(), bm * bn * rank, "{}", id.name());
+            for i in 0..bm {
+                for p in 0..bk {
+                    for q in 0..bk {
+                        for j in 0..bn {
+                            for x in 0..bm {
+                                for y in 0..bn {
+                                    let mut sum = 0i32;
+                                    for r in 0..rank {
+                                        sum += algo.u[r * (bm * bk) + i * bk + p] as i32
+                                            * algo.v[r * (bk * bn) + q * bn + j] as i32
+                                            * algo.w[(x * bn + y) * rank + r] as i32;
+                                    }
+                                    let want = i32::from(p == q && i == x && j == y);
+                                    assert_eq!(
+                                        sum,
+                                        want,
+                                        "{}: ({i}{p})({q}{j})->({x}{y})",
+                                        id.name()
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shape_class_taxonomy() {
+        assert_eq!(ShapeClass::of(512, 512, 512), ShapeClass::Square);
+        assert_eq!(ShapeClass::of(500, 700, 400), ShapeClass::Square);
+        assert_eq!(ShapeClass::of(2048, 2048, 64), ShapeClass::Flat);
+        assert_eq!(ShapeClass::of(64, 64, 2048), ShapeClass::Deep);
+        assert_eq!(ShapeClass::of(0, 16, 16), ShapeClass::Flat);
+        for class in ShapeClass::ALL {
+            assert_eq!(ShapeClass::from_name(class.name()), Some(class));
+        }
+        for id in FastAlgoId::ALL {
+            assert_eq!(FastAlgoId::from_name(id.name()), Some(id));
+        }
+        assert_eq!(FastAlgoId::from_name("nope"), None);
+    }
+
+    #[test]
+    fn fastmm_table_cells_are_independent() {
+        let mut t = FastmmTable::disabled();
+        assert_eq!(t.choice(ElementId::F32, ShapeClass::Square), None);
+        let ch = FastmmChoice { algo: FastAlgoId::Laderman333, crossover: 64, min_dim: 128 };
+        t.set(ElementId::F64, ShapeClass::Deep, Some(ch));
+        assert_eq!(t.choice(ElementId::F64, ShapeClass::Deep), Some(ch));
+        assert_eq!(t.choice(ElementId::F32, ShapeClass::Deep), None);
+        assert_eq!(t.choice(ElementId::F64, ShapeClass::Square), None);
+        // The default enables square shapes only, both elements.
+        let d = FastmmTable::default();
+        assert!(d.choice(ElementId::F32, ShapeClass::Square).is_some());
+        assert!(d.choice(ElementId::F64, ShapeClass::Square).is_some());
+        assert!(d.choice(ElementId::F32, ShapeClass::Flat).is_none());
+        assert!(d.choice(ElementId::F64, ShapeClass::Deep).is_none());
+    }
+
+    fn run_fastmm_f32(
+        id: FastAlgoId,
+        crossover: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> (Matrix<f32>, Matrix<f32>) {
+        let a = Matrix::random(m, k, 0xA0 + m as u64, -1.0, 1.0);
+        let b = Matrix::random(k, n, 0xB0 + n as u64, -1.0, 1.0);
+        let mut got = Matrix::from_fn(m, n, |r, c| (r * n + c) as f32 * 0.001);
+        let mut want = got.clone();
+        let base = base_kernel();
+        gemm_fastmm(id, crossover, &base, None, alpha, a.view(), b.view(), beta, &mut got.view_mut());
+        naive::gemm(
+            Transpose::No,
+            Transpose::No,
+            alpha,
+            a.view(),
+            b.view(),
+            beta,
+            &mut want.view_mut(),
+        );
+        (got, want)
+    }
+
+    #[test]
+    fn matches_naive_on_odd_and_rectangular_shapes() {
+        // Shapes chosen to exercise every peeling case: odd in one, two
+        // and three dimensions, plus strongly rectangular cores.
+        for id in FastAlgoId::ALL {
+            for &(m, n, k) in &[
+                (64usize, 64usize, 64usize),
+                (33, 47, 29),
+                (70, 31, 65),
+                (96, 100, 90),
+                (128, 40, 128),
+            ] {
+                let (got, want) = run_fastmm_f32(id, 16, m, n, k, 0.75, 0.5);
+                assert_allclose(
+                    got.data(),
+                    want.data(),
+                    5e-3,
+                    2e-3,
+                    &format!("{} {m}x{n}x{k}", id.name()),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overwrite_and_accumulate_semantics() {
+        // beta = 0 must overwrite (NaN in C discarded), beta = 1 must
+        // accumulate exactly once.
+        let (m, n, k) = (40usize, 36usize, 44usize);
+        let a = Matrix::random(m, k, 7, -1.0, 1.0);
+        let b = Matrix::random(k, n, 8, -1.0, 1.0);
+        let base = base_kernel();
+        let mut got = Matrix::from_fn(m, n, |_, _| f32::NAN);
+        gemm_fastmm(
+            FastAlgoId::Strassen222,
+            16,
+            &base,
+            None,
+            1.0,
+            a.view(),
+            b.view(),
+            0.0,
+            &mut got.view_mut(),
+        );
+        assert!(got.data().iter().all(|v| v.is_finite()), "beta=0 must discard NaN in C");
+        let mut want = Matrix::zeros(m, n);
+        naive::gemm(
+            Transpose::No,
+            Transpose::No,
+            1.0,
+            a.view(),
+            b.view(),
+            0.0,
+            &mut want.view_mut(),
+        );
+        assert_allclose(got.data(), want.data(), 5e-3, 2e-3, "overwrite");
+    }
+
+    #[test]
+    fn below_crossover_is_exactly_the_base_kernel() {
+        let (m, n, k) = (48usize, 40usize, 32usize);
+        let a = Matrix::random(m, k, 11, -1.0, 1.0);
+        let b = Matrix::random(k, n, 12, -1.0, 1.0);
+        let base = base_kernel();
+        let mut got = Matrix::from_fn(m, n, |r, c| (r + c) as f32);
+        let mut want = got.clone();
+        gemm_fastmm(
+            FastAlgoId::Laderman333,
+            64,
+            &base,
+            None,
+            1.5,
+            a.view(),
+            b.view(),
+            0.5,
+            &mut got.view_mut(),
+        );
+        // At or below the crossover the driver *is* the base kernel
+        // (after the exact beta pre-scale) — bit-identical.
+        want.view_mut().scale(0.5);
+        base.run(
+            Transpose::No,
+            Transpose::No,
+            1.5,
+            a.view(),
+            b.view(),
+            1.0,
+            &mut want.view_mut(),
+        );
+        assert_eq!(got.data(), want.data(), "below-crossover must be the base kernel");
+    }
+
+    #[test]
+    fn f64_recursion_matches_naive_tightly() {
+        for id in FastAlgoId::ALL {
+            let (m, n, k) = (70usize, 65usize, 72usize);
+            let a = Matrix::<f64>::random(m, k, 21, -1.0, 1.0);
+            let b = Matrix::<f64>::random(k, n, 22, -1.0, 1.0);
+            let base = base_kernel_f64();
+            let mut got = Matrix::<f64>::from_fn(m, n, |r, c| (r * n + c) as f64 * 0.001);
+            let mut want = got.clone();
+            gemm_fastmm(id, 16, &base, None, 0.5, a.view(), b.view(), 1.5, &mut got.view_mut());
+            naive::gemm(
+                Transpose::No,
+                Transpose::No,
+                0.5,
+                a.view(),
+                b.view(),
+                1.5,
+                &mut want.view_mut(),
+            );
+            // f64 headroom: even multi-level recursion stays far inside
+            // f32-grade tolerances.
+            assert_allclose_f64(got.data(), want.data(), 1e-10, 1e-11, id.name());
+        }
+    }
+
+    #[test]
+    fn parallel_is_bitwise_identical_to_serial() {
+        use crate::util::threadpool::ThreadPool;
+        // Crossover at the floor + a shape big enough that the top level
+        // genuinely fans out (ms·ks·ns ≥ BFS_MIN_VOLUME).
+        let (m, n, k) = (260usize, 260usize, 260usize);
+        let a = Matrix::random(m, k, 31, -1.0, 1.0);
+        let b = Matrix::random(k, n, 32, -1.0, 1.0);
+        let base = base_kernel();
+        let pool = ThreadPool::new(3);
+        for id in FastAlgoId::ALL {
+            let mut c_serial = Matrix::from_fn(m, n, |r, c| (r ^ c) as f32 * 1e-3);
+            let mut c_par = c_serial.clone();
+            let mut c_par2 = c_serial.clone();
+            gemm_fastmm(id, 32, &base, None, 1.25, a.view(), b.view(), 0.5, &mut c_serial.view_mut());
+            gemm_fastmm(
+                id,
+                32,
+                &base,
+                Some(&pool),
+                1.25,
+                a.view(),
+                b.view(),
+                0.5,
+                &mut c_par.view_mut(),
+            );
+            gemm_fastmm(
+                id,
+                32,
+                &base,
+                Some(&pool),
+                1.25,
+                a.view(),
+                b.view(),
+                0.5,
+                &mut c_par2.view_mut(),
+            );
+            assert_eq!(
+                c_serial.data(),
+                c_par.data(),
+                "{}: BFS must be bitwise identical to DFS",
+                id.name()
+            );
+            assert_eq!(
+                c_par.data(),
+                c_par2.data(),
+                "{}: parallel runs must be bitwise repeatable",
+                id.name()
+            );
+        }
+    }
+
+    #[test]
+    fn flop_model_beats_classical_and_reports_rectangles_honestly() {
+        // Above the crossover both algorithms save real flops over 2n³.
+        let classical = |m: usize, k: usize, n: usize| 2.0 * m as f64 * k as f64 * n as f64;
+        for id in FastAlgoId::ALL {
+            let fast = flops(id, 4096, 4096, 4096, 256);
+            assert!(
+                fast < classical(4096, 4096, 4096),
+                "{}: {fast} !< classical",
+                id.name()
+            );
+        }
+        // Below the crossover the model is exactly classical.
+        assert_eq!(flops(FastAlgoId::Strassen222, 100, 90, 80, 256), classical(100, 90, 80));
+        // Rectangular honesty: the count follows the actual (m, k, n),
+        // not a cube of the largest dimension.
+        let rect = flops(FastAlgoId::Strassen222, 2048, 512, 2048, 256);
+        assert!(rect < flops(FastAlgoId::Strassen222, 2048, 2048, 2048, 256));
+        assert!(rect > classical(1024, 256, 1024));
+        // And a fringe-heavy odd shape still counts its peel work.
+        let odd = flops(FastAlgoId::Strassen222, 1025, 1025, 1025, 256);
+        assert!(odd > flops(FastAlgoId::Strassen222, 1024, 1024, 1024, 256));
+    }
+}

@@ -67,7 +67,12 @@
 //!   micro-kernel with C-resident accumulation; scalar reference tile).
 //! * [`dispatch`] — the kernel registry: runtime CPU-feature detection and
 //!   shape-based selection over every backend (including [`parallel`] and
-//!   [`strassen`]).
+//!   [`fastmm`]).
+//! * [`fastmm`] — the parallel fast-matmul family: ⟨m,k,n⟩ base-case
+//!   factorizations (Strassen–Winograd ⟨2,2,2⟩:7, Laderman ⟨3,3,3⟩:23)
+//!   recursing over strided views with DFS/BFS hybrid scheduling on the
+//!   shared pool, element-generic and deterministic, with per-shape
+//!   autotuned algorithm/crossover selection.
 //! * [`batch`] — batched GEMM over strided tensor slabs, amortising
 //!   packing and thread spawn across the batch.
 //! * [`plan`] — the production entry point: [`plan::GemmContext`] (kernel
@@ -93,8 +98,8 @@ pub mod element;
 pub mod epilogue;
 pub mod parallel;
 pub mod plan;
+pub mod fastmm;
 pub mod quant;
-pub mod strassen;
 pub mod microkernel;
 pub mod naive;
 pub mod pack;
@@ -105,6 +110,7 @@ pub mod tile;
 pub use batch::{gemm_batch, qgemm_batch, BatchStrides};
 pub use dispatch::{registry, registry_for, Accumulation, DispatchConfig, GemmDispatch, KernelId, KernelInfo};
 pub use element::{Element, ElementId, GemmTriple, Qu8i8, Scalar, TripleId};
+pub use fastmm::{FastAlgoId, FastmmChoice, FastmmTable, ShapeClass};
 pub use epilogue::{Activation, Bias, Epilogue, Requant};
 pub use params::{BlockParams, TileParams, Unroll};
 pub use plan::{GemmBuilder, GemmContext, GemmPlan, PackedA, PackedB};

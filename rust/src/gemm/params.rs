@@ -202,6 +202,16 @@ impl TileParams {
         Self { mr: 6, nr: 8, kc: 256, mc: 72, nc: 480, prefetch: true }
     }
 
+    /// Default geometry for the quantized u8×i8→i32 `maddubs` tile: a
+    /// 6×16 tile over byte elements, `kc` in k-*elements* (grouped by 4
+    /// inside the packed layouts, so a 4096-deep block is 1024 maddubs
+    /// groups ≈ 24 KB of packed A strip), `mc = 96` rows of A hot at
+    /// once. These match the constants the PR-8 kernel hard-coded;
+    /// `tune_qtile` searches (mr, kc, mc) around them.
+    pub fn qtile_default() -> Self {
+        Self { mr: 6, nr: 16, kc: 4096, mc: 96, nc: 480, prefetch: true }
+    }
+
     /// Effective k-block size (never zero, never beyond k).
     pub fn kc_eff(&self, k: usize, kk: usize) -> usize {
         self.kc.min(k - kk).max(1)
@@ -277,6 +287,7 @@ mod tests {
         assert!(TileParams::avx2_6x16().validate().is_ok());
         assert!(TileParams::avx2_4x16().validate().is_ok());
         assert!(TileParams::avx2_6x8_f64().validate().is_ok());
+        assert!(TileParams::qtile_default().validate().is_ok());
         assert!(TileParams { mr: 0, ..TileParams::default() }.validate().is_err());
         assert!(TileParams { mr: 9, ..TileParams::default() }.validate().is_err());
         // nr 8 is the f64 tile width (nc must stay a multiple of nr).

@@ -33,8 +33,9 @@
 
 use super::batch;
 use super::dispatch::{DispatchConfig, GemmDispatch, GemmShape, KernelId};
-use super::element::{Element, ElementId};
+use super::element::{Element, ElementId, TripleId};
 use super::epilogue::{Epilogue, Requant};
+use super::fastmm::{FastmmChoice, ShapeClass};
 use super::pack;
 use super::parallel;
 use super::params::{BlockParams, TileParams};
@@ -92,11 +93,15 @@ impl GemmContext {
                 // the kernel family carries no geometry for that element.
                 let _ = ctx.install_tuned_for(element, id, params);
             }
-            for (element, tp) in tuned.tiles {
-                let _ = ctx.install_tuned_tile_for(element, tp);
+            for (triple, tp) in tuned.tiles {
+                let _ = match triple {
+                    TripleId::F32 => ctx.install_tuned_tile_for(ElementId::F32, tp),
+                    TripleId::F64 => ctx.install_tuned_tile_for(ElementId::F64, tp),
+                    TripleId::QU8I8 => ctx.install_tuned_qtile(tp),
+                };
             }
-            if let Some(min_dim) = tuned.strassen {
-                let _ = ctx.install_strassen_min_dim(min_dim);
+            for (element, class, choice) in tuned.fastmm {
+                let _ = ctx.install_fastmm_choice(element, class, choice);
             }
             ctx
         })
@@ -155,11 +160,25 @@ impl GemmContext {
         guard.set_tuned_tile_for(element, params)
     }
 
-    /// Install a measured Strassen crossover (the `strassen_crossover`
-    /// autotune result replacing the fixed default threshold).
-    pub fn install_strassen_min_dim(&self, min_dim: usize) -> Result<(), String> {
+    /// Install a measured fast-matmul choice for one (element, shape
+    /// class) cell (the `fastmm` autotune result replacing the built-in
+    /// defaults). Plans created *after* this call see the new choice.
+    pub fn install_fastmm_choice(
+        &self,
+        element: ElementId,
+        class: ShapeClass,
+        choice: FastmmChoice,
+    ) -> Result<(), String> {
         let mut guard = self.inner.dispatch.write().unwrap_or_else(|e| e.into_inner());
-        guard.set_strassen_min_dim(min_dim)
+        guard.set_fastmm_choice(element, class, choice)
+    }
+
+    /// Install tuned geometry for the quantized `maddubs` tile (the
+    /// `qtile` autotune feed; pure performance knob — the integer tier
+    /// is bitwise geometry-independent).
+    pub fn install_tuned_qtile(&self, params: TileParams) -> Result<(), String> {
+        let mut guard = self.inner.dispatch.write().unwrap_or_else(|e| e.into_inner());
+        guard.set_tuned_qtile(params)
     }
 
     /// Start building an f32 (SGEMM) plan:
@@ -419,18 +438,19 @@ impl GemmContext {
         if m == 0 || n == 0 {
             return Ok(());
         }
+        let qp = *self.inner.dispatch.read().unwrap_or_else(|e| e.into_inner()).params_qtile();
         match parallel::split_axis(m, n, self.threads()) {
             parallel::Split::Rows(t) => self.run_sliced(
                 parallel::row_slices(a, transa, c, t, quant::QMR),
                 |(_, a_slice, mut c_slice)| {
-                    quant::qgemm_packed(a_slice, transa, pb, &mut c_slice, accumulate)
+                    quant::qgemm_packed(a_slice, transa, pb, &qp, &mut c_slice, accumulate)
                 },
             ),
             // Column splits never pay here: B is packed whole-width and
             // shared read-only, so splitting columns would only re-walk A.
             _ => {
                 let mut c = c;
-                quant::qgemm_packed(a, transa, pb, &mut c, accumulate);
+                quant::qgemm_packed(a, transa, pb, &qp, &mut c, accumulate);
             }
         }
         Ok(())
@@ -453,16 +473,17 @@ impl GemmContext {
         if m == 0 || n == 0 {
             return Ok(());
         }
+        let qp = *self.inner.dispatch.read().unwrap_or_else(|e| e.into_inner()).params_qtile();
         match parallel::split_axis(m, n, self.threads()) {
             parallel::Split::Rows(t) => self.run_sliced(
                 parallel::row_slices(a, transa, c, t, quant::QMR),
                 |(r0, a_slice, mut c_slice)| {
-                    quant::qgemm_requant_packed(a_slice, transa, pb, r0, &mut c_slice, rq)
+                    quant::qgemm_requant_packed(a_slice, transa, pb, &qp, r0, &mut c_slice, rq)
                 },
             ),
             _ => {
                 let mut c = c;
-                quant::qgemm_requant_packed(a, transa, pb, 0, &mut c, rq);
+                quant::qgemm_requant_packed(a, transa, pb, &qp, 0, &mut c, rq);
             }
         }
         Ok(())

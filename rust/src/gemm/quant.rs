@@ -51,12 +51,16 @@ use super::dispatch::detect_avx2;
 use super::element::Qu8i8;
 use super::epilogue::Requant;
 use super::naive;
+use super::params::TileParams;
 #[cfg(target_arch = "x86_64")]
 use super::tile::avx2_qtile_dyn;
 use crate::blas::{MatMut, MatRef, Transpose};
 
-/// Tile height of the quantized kernel (same register budget as the
-/// float tiers: 12 i32 YMM accumulators = 6 rows × 2 vectors).
+/// Maximum tile height of the quantized kernel (same register budget as
+/// the float tiers: 12 i32 YMM accumulators = 6 rows × 2 vectors). The
+/// drivers take their *working* `mr ≤ QMR` from a [`TileParams`] — the
+/// autotuner searches (mr, kc, mc) for this tier just like the float
+/// tile, with [`TileParams::qtile_default`] as the untuned geometry.
 pub(crate) const QMR: usize = super::tile::MAX_MR;
 
 /// Tile width in i32 lanes (two 256-bit accumulators).
@@ -64,10 +68,6 @@ pub(crate) const QNR: usize = super::tile::NR;
 
 /// k taps consumed per `maddubs`+`madd` step.
 const KGROUP: usize = 4;
-
-/// Row-block height of the drivers (16 full strips; A strips for one
-/// block stay L2-resident while every B panel streams through).
-const QMC: usize = 16 * QMR;
 
 /// A whole `op(B)` (`k × n`) packed for the quantized kernel: 16-column
 /// panels in 64-byte 4-k groups (column `j`, tap `t` of group `g` at
@@ -172,57 +172,69 @@ impl QPackedB {
 }
 
 /// Reusable packing scratch for one row block of `op(A)`: strips of
-/// [`QMR`] rows in 4-k groups (row `l`, tap `t` of group `g` at byte
-/// `g·QMR·4 + l·4 + t`), each byte stored as `a' = a XOR 0x80`. Row and
-/// k pads hold `0x80` (`a' = 0`).
-#[derive(Default)]
+/// `mr` rows (`mr ≤` [`QMR`], chosen by the caller's [`TileParams`]) in
+/// 4-k groups (row `l`, tap `t` of group `g` at byte `g·mr·4 + l·4 + t`),
+/// each byte stored as `a' = a XOR 0x80`. Row and k pads hold `0x80`
+/// (`a' = 0`).
 struct QPackedA {
     buf: Vec<u8>,
     rows: usize,
     kgroups: usize,
+    mr: usize,
 }
 
 impl QPackedA {
     fn new() -> Self {
-        Self::default()
+        Self { buf: Vec::new(), rows: 0, kgroups: 0, mr: QMR }
     }
 
-    /// Pack rows `i0 .. i0+rows` of `op(A)` at full depth `k`.
-    fn pack(&mut self, a: MatRef<'_, u8>, transa: Transpose, i0: usize, rows: usize, k: usize) {
+    /// Pack rows `i0 .. i0+rows` of `op(A)` at full depth `k` into
+    /// strips of height `mr`.
+    fn pack(
+        &mut self,
+        a: MatRef<'_, u8>,
+        transa: Transpose,
+        i0: usize,
+        rows: usize,
+        k: usize,
+        mr: usize,
+    ) {
+        debug_assert!((1..=QMR).contains(&mr));
         let kgroups = k.div_ceil(KGROUP);
-        let strips = rows.div_ceil(QMR).max(1);
+        let strips = rows.div_ceil(mr).max(1);
         self.buf.clear();
-        self.buf.resize(strips * kgroups * QMR * KGROUP, 0x80);
+        self.buf.resize(strips * kgroups * mr * KGROUP, 0x80);
         for s in 0..strips {
-            let base = s * kgroups * QMR * KGROUP;
-            for l in 0..QMR.min(rows - s * QMR) {
-                let r = i0 + s * QMR + l;
+            let base = s * kgroups * mr * KGROUP;
+            for l in 0..mr.min(rows - s * mr) {
+                let r = i0 + s * mr + l;
                 for p in 0..k {
                     let v = match transa {
                         Transpose::No => a.get(r, p),
                         Transpose::Yes => a.get(p, r),
                     };
-                    self.buf[base + (p / KGROUP) * QMR * KGROUP + l * KGROUP + p % KGROUP] =
+                    self.buf[base + (p / KGROUP) * mr * KGROUP + l * KGROUP + p % KGROUP] =
                         v ^ 0x80;
                 }
             }
         }
         self.rows = rows;
         self.kgroups = kgroups;
+        self.mr = mr;
     }
 
     fn strips(&self) -> usize {
-        self.rows.div_ceil(QMR).max(1)
+        self.rows.div_ceil(self.mr).max(1)
     }
 
     fn strip_height(&self, s: usize) -> usize {
-        QMR.min(self.rows - s * QMR)
+        self.mr.min(self.rows - s * self.mr)
     }
 
     #[cfg(target_arch = "x86_64")]
     fn strip_ptr(&self, s: usize) -> *const u8 {
         assert!(s < self.strips(), "strip {s} out of {}", self.strips());
-        self.buf[s * self.kgroups * QMR * KGROUP..].as_ptr()
+        self.buf[s * self.kgroups * self.mr * KGROUP..].as_ptr()
     }
 }
 
@@ -243,7 +255,7 @@ pub fn qgemm(
         Transpose::Yes => a.rows(),
     };
     let pb = QPackedB::pack(b, transb, k, c.cols());
-    qgemm_packed(a, transa, &pb, c, accumulate);
+    qgemm_packed(a, transa, &pb, &TileParams::qtile_default(), c, accumulate);
 }
 
 /// Serial quantized GEMM with the fused [`Requant`] writeback:
@@ -262,7 +274,7 @@ pub fn qgemm_requant(
         Transpose::Yes => a.rows(),
     };
     let pb = QPackedB::pack(b, transb, k, c.cols());
-    qgemm_requant_packed(a, transa, &pb, 0, c, rq);
+    qgemm_requant_packed(a, transa, &pb, &TileParams::qtile_default(), 0, c, rq);
 }
 
 /// The raw-i32 driver over a prepacked `B`. `a` covers exactly the rows
@@ -270,17 +282,26 @@ pub fn qgemm_requant(
 /// `op(A)`). Runs the AVX2 `maddubs` tile when the CPU has it and the
 /// panel passed the `−128` screen; otherwise the safe scalar loop —
 /// both produce identical bits (exact integers mod 2³²).
+///
+/// `qp` sets the block geometry (working `mr`, `kc`, `mc`); any valid
+/// [`TileParams`] yields the same bits — wrapping i32 adds are
+/// associative, and the colsum correction is applied once per element
+/// against the *full-k* sums — so the autotuner is free to pick
+/// whatever runs fastest.
 pub(crate) fn qgemm_packed(
     a: MatRef<'_, u8>,
     transa: Transpose,
     pb: &QPackedB,
+    qp: &TileParams,
     c: &mut MatMut<'_, i32>,
     accumulate: bool,
 ) {
     debug_assert_eq!(c.cols(), pb.n, "qgemm: C width vs packed B");
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = qp;
     #[cfg(target_arch = "x86_64")]
     if detect_avx2() && !pb.has_neg128 {
-        qgemm_avx2(a, transa, pb, c, accumulate);
+        qgemm_avx2(a, transa, pb, qp, c, accumulate);
         return;
     }
     qgemm_scalar(a, transa, pb, c, accumulate);
@@ -288,19 +309,23 @@ pub(crate) fn qgemm_packed(
 
 /// The requantizing driver over a prepacked `B`; `row0` is the global
 /// row offset of this `C` slice (the [`Requant`] vectors index global
-/// rows whichever worker computes them).
+/// rows whichever worker computes them). Geometry contract as in
+/// [`qgemm_packed`].
 pub(crate) fn qgemm_requant_packed(
     a: MatRef<'_, u8>,
     transa: Transpose,
     pb: &QPackedB,
+    qp: &TileParams,
     row0: usize,
     c: &mut MatMut<'_, f32>,
     rq: &Requant,
 ) {
     debug_assert_eq!(c.cols(), pb.n, "qgemm_requant: C width vs packed B");
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = qp;
     #[cfg(target_arch = "x86_64")]
     if detect_avx2() && !pb.has_neg128 {
-        qgemm_requant_avx2(a, transa, pb, row0, c, rq);
+        qgemm_requant_avx2(a, transa, pb, qp, row0, c, rq);
         return;
     }
     qgemm_requant_scalar(a, transa, pb, row0, c, rq);
@@ -357,32 +382,47 @@ fn dot_scalar(a: MatRef<'_, u8>, transa: Transpose, pb: &QPackedB, i: usize, j: 
     acc
 }
 
-/// The AVX2 block driver: pack A row blocks on the fly (whole-k — no
-/// k-blocking, so the [`Requant`] twin below can fuse into the one and
-/// only writeback of each element), run the `maddubs` tile per
-/// strip×panel, correct `S = S' + 128·colsum` and store/fold with
-/// fringe masking.
+/// Derive the effective (mr, mc, kc_groups) geometry from a
+/// [`TileParams`]: `mr` clamped to the kernel's register budget, `mc`
+/// rounded down to whole strips, `kc` converted to whole 4-k groups.
+#[cfg(target_arch = "x86_64")]
+fn qgeometry(qp: &TileParams) -> (usize, usize, usize) {
+    let mr = qp.mr.clamp(1, QMR);
+    let mc = (qp.mc / mr * mr).max(mr);
+    let kc_groups = (qp.kc / KGROUP).max(1);
+    (mr, mc, kc_groups)
+}
+
+/// The AVX2 block driver: pack A row blocks on the fly at the working
+/// strip height, run the `maddubs` tile per strip×panel in `kc`-sized
+/// k chunks (partial sums folded with wrapping adds, so chunking never
+/// changes bits), correct `S = S' + 128·colsum` against the full-k
+/// column sums and store/fold with fringe masking — one writeback per
+/// element whatever the geometry, which is what lets the [`Requant`]
+/// twin below fuse.
 #[cfg(target_arch = "x86_64")]
 fn qgemm_avx2(
     a: MatRef<'_, u8>,
     transa: Transpose,
     pb: &QPackedB,
+    qp: &TileParams,
     c: &mut MatMut<'_, i32>,
     accumulate: bool,
 ) {
     let (m, n) = (c.rows(), c.cols());
+    let (mr, mc, kc_groups) = qgeometry(qp);
     let mut pa = QPackedA::new();
     let mut ic = 0;
     while ic < m {
-        let mc_eff = QMC.min(m - ic);
-        pa.pack(a, transa, ic, mc_eff, pb.k);
+        let mc_eff = mc.min(m - ic);
+        pa.pack(a, transa, ic, mc_eff, pb.k, mr);
         for q in 0..pb.panels() {
             let j0 = q * QNR;
             let w = QNR.min(n - j0);
             for s in 0..pa.strips() {
-                let i0 = ic + s * QMR;
+                let i0 = ic + s * mr;
                 let h = pa.strip_height(s);
-                let tmp = qtile(&pa, s, pb, q);
+                let tmp = qtile(&pa, s, pb, q, kc_groups);
                 for i in 0..h {
                     for j in 0..w {
                         let s_true = tmp[i * QNR + j]
@@ -409,23 +449,25 @@ fn qgemm_requant_avx2(
     a: MatRef<'_, u8>,
     transa: Transpose,
     pb: &QPackedB,
+    qp: &TileParams,
     row0: usize,
     c: &mut MatMut<'_, f32>,
     rq: &Requant,
 ) {
     let (m, n) = (c.rows(), c.cols());
+    let (mr, mc, kc_groups) = qgeometry(qp);
     let mut pa = QPackedA::new();
     let mut ic = 0;
     while ic < m {
-        let mc_eff = QMC.min(m - ic);
-        pa.pack(a, transa, ic, mc_eff, pb.k);
+        let mc_eff = mc.min(m - ic);
+        pa.pack(a, transa, ic, mc_eff, pb.k, mr);
         for q in 0..pb.panels() {
             let j0 = q * QNR;
             let w = QNR.min(n - j0);
             for s in 0..pa.strips() {
-                let i0 = ic + s * QMR;
+                let i0 = ic + s * mr;
                 let h = pa.strip_height(s);
-                let tmp = qtile(&pa, s, pb, q);
+                let tmp = qtile(&pa, s, pb, q, kc_groups);
                 for i in 0..h {
                     for j in 0..w {
                         let col = j0 + j;
@@ -441,19 +483,51 @@ fn qgemm_requant_avx2(
 }
 
 /// Run the `maddubs` tile for one (strip, panel) pair into a stack tile
-/// of raw `S'` sums.
+/// of raw `S'` sums, walking k in `kc_groups`-group chunks. The first
+/// chunk stores straight into the tile; later chunks land in a partial
+/// tile and fold in with wrapping adds — associative, so the chunk size
+/// is purely a cache-residency knob.
 #[cfg(target_arch = "x86_64")]
 #[inline]
-fn qtile(pa: &QPackedA, s: usize, pb: &QPackedB, q: usize) -> [i32; QMR * QNR] {
+fn qtile(pa: &QPackedA, s: usize, pb: &QPackedB, q: usize, kc_groups: usize) -> [i32; QMR * QNR] {
+    let mr = pa.mr;
     let mut tmp = [0i32; QMR * QNR];
-    // SAFETY: the strip holds kgroups·QMR·4 bytes and the panel
-    // kgroups·64 bytes by construction (both buffers are sized and
-    // zero/0x80-padded by their pack methods, and pa/pb were packed at
-    // the same k); tmp is QMR rows × QNR i32s with row stride QNR; the
-    // drivers only take this path after detect_avx2() and the panel's
-    // −128 screen.
-    unsafe {
-        avx2_qtile_dyn(QMR, pa.strip_ptr(s), pb.panel_ptr(q), pb.kgroups, tmp.as_mut_ptr(), QNR);
+    let mut g0 = 0;
+    while g0 < pa.kgroups {
+        let gs = kc_groups.min(pa.kgroups - g0);
+        // SAFETY: the strip holds kgroups·mr·4 bytes and the panel
+        // kgroups·64 bytes by construction (both buffers are sized and
+        // zero/0x80-padded by their pack methods, and pa/pb were packed
+        // at the same k), so the g0 offsets plus gs groups stay in
+        // bounds; the destination is mr ≤ QMR rows × QNR i32s with row
+        // stride QNR; the drivers only take this path after
+        // detect_avx2() and the panel's −128 screen.
+        unsafe {
+            if g0 == 0 {
+                avx2_qtile_dyn(
+                    mr,
+                    pa.strip_ptr(s),
+                    pb.panel_ptr(q),
+                    gs,
+                    tmp.as_mut_ptr(),
+                    QNR,
+                );
+            } else {
+                let mut part = [0i32; QMR * QNR];
+                avx2_qtile_dyn(
+                    mr,
+                    pa.strip_ptr(s).add(g0 * mr * KGROUP),
+                    pb.panel_ptr(q).add(g0 * QNR * KGROUP),
+                    gs,
+                    part.as_mut_ptr(),
+                    QNR,
+                );
+                for (t, p) in tmp[..mr * QNR].iter_mut().zip(&part[..mr * QNR]) {
+                    *t = t.wrapping_add(*p);
+                }
+            }
+        }
+        g0 += gs;
     }
     tmp
 }
@@ -548,6 +622,31 @@ mod tests {
                         want.data(),
                         "m={m} n={n} k={k} ta={ta:?} tb={tb:?} acc={accumulate}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_tile_geometry_is_bitwise_identical() {
+        // The geometry contract of qgemm_packed: (mr, kc, mc) is a pure
+        // performance knob. Sweep strip heights, k chunks that force
+        // multi-chunk accumulation, and row blocks down to one strip —
+        // all must reproduce the widening oracle bit for bit.
+        let (m, n, k) = (23, 37, 53);
+        let a = test_a(m, k, 7);
+        let b = test_b(k, n, 11);
+        let mut want = Matrix::<i32>::from_fn(m, n, |r, c| (r + 2 * c) as i32 - 5);
+        let seed_c = want.clone();
+        qgemm_reference(Transpose::No, Transpose::No, a.view(), b.view(), &mut want.view_mut(), true);
+        let pb = QPackedB::pack(b.view(), Transpose::No, k, n);
+        for mr in 1..=QMR {
+            for kc in [4usize, 20, 64, 4096] {
+                for mc in [mr, 24, 96] {
+                    let qp = TileParams { mr, nr: QNR, kc, mc, nc: 480, prefetch: true };
+                    let mut got = seed_c.clone();
+                    qgemm_packed(a.view(), Transpose::No, &pb, &qp, &mut got.view_mut(), true);
+                    assert_eq!(got.data(), want.data(), "mr={mr} kc={kc} mc={mc}");
                 }
             }
         }

@@ -238,8 +238,8 @@ fn cmd_train(argv: Vec<String>) -> i32 {
 
 fn cmd_autotune(argv: Vec<String>) -> i32 {
     let cli = Cli::new("emmerald autotune", "ATLAS-style block-size search")
-        .opt("kernel", "sse", "sse|avx2|tile|blocked|strassen")
-        .opt("element", "f32", "f32|f64 — element precision to tune (f64: avx2|tile only)")
+        .opt("kernel", "sse", "sse|avx2|tile|qtile|blocked|fastmm")
+        .opt("element", "f32", "f32|f64 — element precision to tune (f64: avx2|tile|fastmm)")
         .opt("probe", "448", "probe problem size");
     let m = parse(&cli, argv);
     let probe = m.get_usize("probe").unwrap();
@@ -258,9 +258,10 @@ fn cmd_autotune(argv: Vec<String>) -> i32 {
     }
     match (m.get("kernel").unwrap(), element) {
         ("tile", _) => return autotune_tile(probe, element),
-        ("strassen", emmerald::gemm::ElementId::F32) => return autotune_strassen(probe),
-        ("strassen", emmerald::gemm::ElementId::F64) => {
-            eprintln!("the Strassen tier is f32-only (f64 has no Strassen rung)");
+        ("qtile", _) => return autotune_qtile(probe),
+        ("fastmm", _) => return autotune_fastmm(probe, element),
+        ("strassen", _) => {
+            eprintln!("the Strassen tier became the fast-matmul family; use --kernel fastmm");
             return 2;
         }
         _ => {}
@@ -343,30 +344,69 @@ fn autotune_tile(probe: usize, element: emmerald::gemm::ElementId) -> i32 {
     0
 }
 
-/// `emmerald autotune --kernel strassen`: measure the Strassen crossover
-/// and install/persist it as `strassen_min_dim`. `--probe` adds a sweep
-/// point (so `--probe 2048` extends the default 256..1024 ladder).
-fn autotune_strassen(probe: usize) -> i32 {
-    let mut spec = emmerald::autotune::CrossoverSpec::default();
-    if !spec.sizes.contains(&probe) {
-        spec.sizes.push(probe);
-        spec.sizes.sort_unstable();
+/// `emmerald autotune --kernel fastmm [--element f64]`: race every fast
+/// ⟨m,k,n⟩ algorithm against the classical parallel tier for each shape
+/// class and install/persist the per-class winner. `--probe` adds a
+/// sweep point (so `--probe 2048` extends the default 256..1024 ladder).
+fn autotune_fastmm(probe: usize, element: emmerald::gemm::ElementId) -> i32 {
+    let mut last_cached = None;
+    for class in emmerald::gemm::ShapeClass::ALL {
+        let mut spec = emmerald::autotune::FastmmSpec::default_for(element, class);
+        if !spec.sizes.contains(&probe) {
+            spec.sizes.push(probe);
+            spec.sizes.sort_unstable();
+        }
+        let (r, cached) = emmerald::autotune::tune_fastmm_install_and_persist(&spec);
+        let mut table = Table::new(["size", "algo", "classical MFlop/s", "fast MFlop/s", "fast/classical"]);
+        for p in &r.log {
+            table.row([
+                p.size.to_string(),
+                p.algo.name().to_string(),
+                fnum(p.classical_mflops, 1),
+                fnum(p.fast_mflops, 1),
+                fnum(p.fast_mflops / p.classical_mflops, 2),
+            ]);
+        }
+        println!("[{} {}]", element.name(), class.name());
+        println!("{}", table.render());
+        println!(
+            "{} {}: {} min_dim={} crossover={} ({}) — installed",
+            element.name(),
+            class.name(),
+            r.choice.algo.name(),
+            r.choice.min_dim,
+            r.choice.crossover,
+            if r.observed { "measured win" } else { "no win in sweep; 2x largest probe" }
+        );
+        last_cached = cached;
     }
-    let (r, cached) = emmerald::autotune::tune_strassen_install_and_persist(&spec);
-    let mut table = Table::new(["size", "flat MFlop/s", "hybrid MFlop/s", "hybrid/flat"]);
+    match last_cached {
+        Some(path) => println!("persisted to {} (loaded automatically at next start)", path.display()),
+        None => println!("persistence disabled or failed (set {} to a writable path)", emmerald::autotune::cache::ENV_PATH),
+    }
+    0
+}
+
+/// `emmerald autotune --kernel qtile`: search (MR, kc, mc) for the
+/// quantized `maddubs` tile and persist the winner under the
+/// `u8i8i32` triple. Any geometry is bitwise identical, so this is a
+/// pure wall-clock race.
+fn autotune_qtile(probe: usize) -> i32 {
+    let spec = emmerald::autotune::QTileTuneSpec::avx2_default(probe);
+    let (r, cached) = emmerald::autotune::tune_qtile_install_and_persist(&spec);
+    let mut table = Table::new(["mr", "kc", "mc", "MFlop/s"]);
     for p in &r.log {
         table.row([
-            p.size.to_string(),
-            fnum(p.flat_mflops, 1),
-            fnum(p.hybrid_mflops, 1),
-            fnum(p.hybrid_mflops / p.flat_mflops, 2),
+            p.params.mr.to_string(),
+            p.params.kc.to_string(),
+            p.params.mc.to_string(),
+            fnum(p.mflops, 1),
         ]);
     }
     println!("{}", table.render());
     println!(
-        "strassen_min_dim = {} ({}) — installed into the dispatch heuristics",
-        r.min_dim,
-        if r.observed { "measured crossover" } else { "no crossover in sweep; 2x largest probe" }
+        "winner: mr={} kc={} mc={} at {:.1} MFlop/s — installed into the u8i8i32 dispatch table",
+        r.best.mr, r.best.kc, r.best.mc, r.best_mflops
     );
     match cached {
         Some(path) => println!("persisted to {} (loaded automatically at next start)", path.display()),
@@ -435,7 +475,7 @@ fn cmd_dispatch(argv: Vec<String>) -> i32 {
         emmerald::gemm::ElementId::F64 => d.params_tile_f64(),
     };
     println!(
-        "tile tier: {} — {}x{} tile, tuned (mr={}, kc={}, mc={}, nc={}); strassen_min_dim={}{}",
+        "tile tier: {} — {}x{} tile, tuned (mr={}, kc={}, mc={}, nc={})",
         if emmerald::gemm::KernelId::Avx2Tile.available_for(element) { "available (avx2+fma)" } else { "unavailable on this CPU" },
         tp.mr,
         tp.nr,
@@ -443,9 +483,33 @@ fn cmd_dispatch(argv: Vec<String>) -> i32 {
         tp.kc,
         tp.mc,
         tp.nc,
-        d.config().strassen_min_dim,
-        if element == emmerald::gemm::ElementId::F64 { " (f32-only tier)" } else { "" },
     );
+    let mut fm = Table::new(["class", "algo", "crossover", "min_dim", "flops @ shape"]);
+    let class_here = emmerald::gemm::ShapeClass::of(m, n, k);
+    for class in emmerald::gemm::ShapeClass::ALL {
+        match d.config().fastmm.choice(element, class) {
+            Some(c) => fm.row([
+                format!("{}{}", class.name(), if class == class_here { " *" } else { "" }),
+                c.algo.name().to_string(),
+                c.crossover.to_string(),
+                c.min_dim.to_string(),
+                format!(
+                    "{:.3e} (classical {:.3e})",
+                    emmerald::gemm::fastmm::flops(c.algo, m, k, n, c.crossover),
+                    2.0 * m as f64 * n as f64 * k as f64
+                ),
+            ]),
+            None => fm.row([
+                format!("{}{}", class.name(), if class == class_here { " *" } else { "" }),
+                "off".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    println!("fast-matmul table ({}; * = this shape's class):", element.name());
+    println!("{}", fm.render());
     let ctx = emmerald::gemm::GemmContext::global();
     println!(
         "context: shared thread budget {} (caller + {} pool workers); tune cache: {}",

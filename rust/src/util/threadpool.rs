@@ -59,6 +59,17 @@ impl ThreadPool {
         self.size
     }
 
+    /// Whether the pool currently has spare worker capacity.
+    ///
+    /// A racy snapshot (workers pick up and finish jobs concurrently),
+    /// which is fine for its one consumer: the fast-matmul recursion
+    /// uses it to decide BFS fan-out vs DFS scratch reuse — a pure
+    /// scheduling hint that never affects results, only where the work
+    /// runs.
+    pub fn has_idle(&self) -> bool {
+        self.in_flight.load(Ordering::Relaxed) < self.size
+    }
+
     /// Submit a job for execution.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.in_flight.fetch_add(1, Ordering::SeqCst);

@@ -1,7 +1,7 @@
 //! Cross-backend conformance suite.
 //!
 //! Every kernel in the dispatch registry — naive, blocked, SSE, AVX2,
-//! parallel, Strassen — is driven through the *same* shape/transpose/
+//! parallel, fast-matmul — is driven through the *same* shape/transpose/
 //! alpha-beta grid against the naive oracle, via the public
 //! [`GemmDispatch::gemm_with`] forcing API. A kernel that cannot express a
 //! case (vector ISA missing, transposed operands for the whole-problem
@@ -121,7 +121,7 @@ fn auto_selection_conforms_across_heuristic_boundaries() {
     let cfg = DispatchConfig {
         tiny_dim: 4,
         parallel_min_flops: 2.0 * 24.0 * 24.0 * 24.0,
-        strassen_min_dim: usize::MAX, // multi-level f32 error needs looser bars
+        fastmm: emmerald::gemm::FastmmTable::disabled(), // multi-level f32 error needs looser bars
         threads: 3,
         ..DispatchConfig::default()
     };

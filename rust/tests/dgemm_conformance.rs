@@ -390,25 +390,37 @@ fn dgemm_shared_b_fold_matches_per_item_loop() {
 #[test]
 fn f64_selection_never_picks_f32_only_tiers() {
     hermetic_tune_cache();
-    // The per-element kernel table: f64 has no SSE or Strassen rung, in
-    // any shape regime, including the single-threaded huge-square regime
-    // where f32 selects Strassen.
+    // The per-element kernel table: f64 has no SSE rung in any shape
+    // regime — but unlike the old f32-only Strassen tier, the
+    // fast-matmul family *is* open to f64, so the single-threaded
+    // huge-square regime now selects `FastMm` for both elements.
     use emmerald::gemm::dispatch::GemmShape;
+    use emmerald::gemm::{FastAlgoId, FastmmChoice, FastmmTable};
     let d = emmerald::gemm::GemmDispatch::new(DispatchConfig {
         threads: 1,
-        strassen_min_dim: 64,
+        fastmm: FastmmTable::uniform(FastmmChoice {
+            algo: FastAlgoId::Strassen222,
+            crossover: 256,
+            min_dim: 64,
+        }),
         ..DispatchConfig::default()
     });
     for &(m, n, k) in &[(8usize, 8usize, 8usize), (64, 64, 64), (300, 300, 300), (1, 512, 512)] {
         let shape = GemmShape { m, n, k, transa: Transpose::No, transb: Transpose::No };
         let picked = d.select_t::<f64>(&shape, 1.0f64);
         assert_ne!(picked, KernelId::Simd, "f64 must not select the SSE tier ({m}x{n}x{k})");
-        assert_ne!(picked, KernelId::Strassen, "f64 must not select Strassen ({m}x{n}x{k})");
         assert!(picked.available_for(ElementId::F64), "{picked:?} unavailable for f64");
     }
-    // f32 still selects Strassen in that regime (behaviour unchanged).
+    // The fast tier needs a vector base case to recurse onto; with AVX2
+    // present, f64 selects it where f32 does (behaviour new in the
+    // fast-matmul family — the old Strassen tier excluded f64 by type).
     let shape = GemmShape { m: 300, n: 300, k: 300, transa: Transpose::No, transb: Transpose::No };
-    assert_eq!(d.select_t::<f32>(&shape, 1.0f32), KernelId::Strassen);
+    if KernelId::Avx2.available_for(ElementId::F64) {
+        assert_eq!(d.select_t::<f64>(&shape, 1.0f64), KernelId::FastMm);
+    }
+    if KernelId::Simd.available_for(ElementId::F32) {
+        assert_eq!(d.select_t::<f32>(&shape, 1.0f32), KernelId::FastMm);
+    }
 }
 
 #[test]

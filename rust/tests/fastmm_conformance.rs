@@ -1,0 +1,223 @@
+//! Fast-matmul conformance suite.
+//!
+//! The `gemm/fastmm` recursion — ⟨m,k,n⟩ base-case factorizations over
+//! strided views with dynamically peeled fringes — driven end-to-end
+//! through the public [`GemmDispatch::gemm_with`] forcing API, for both
+//! elements and both certified algorithms:
+//!
+//! * conformance vs the naive oracle on odd / rectangular / fringe
+//!   shapes (level-scaled tolerances: multi-level f32 loses ~1 bit per
+//!   ⟨2,2,2⟩ level, a little more for ⟨3,3,3⟩);
+//! * bitwise run-to-run determinism, *including* serial ≡ parallel —
+//!   the BFS fan-out writes back in the same ascending product order
+//!   the DFS arm uses, so the pool size must not change a single bit;
+//! * a selection property: the fast tier never fires below the tuned
+//!   per-(element, shape-class) minimum dimension.
+
+use emmerald::blas::{dgemm, sgemm_matrix, Backend, Matrix, Transpose};
+use emmerald::gemm::dispatch::GemmShape;
+use emmerald::gemm::{
+    DispatchConfig, FastAlgoId, FastmmChoice, FastmmTable, GemmDispatch, KernelId,
+};
+use emmerald::util::testkit::{assert_allclose, assert_allclose_f64, check, hermetic_tune_cache};
+
+/// Odd, rectangular and fringe-heavy shapes: every one leaves a
+/// remainder against both the ⟨2,2,2⟩ and ⟨3,3,3⟩ block grids at some
+/// recursion level, and the gemv-shaped rows exercise the degenerate
+/// base-case path.
+const SHAPES: [(usize, usize, usize); 8] = [
+    (33, 35, 37),
+    (65, 64, 63),
+    (70, 31, 129),
+    (96, 96, 96),
+    (100, 41, 128),
+    (81, 81, 81),
+    (1, 65, 64),
+    (64, 1, 65),
+];
+
+/// A dispatcher with the fast tier forced on everywhere: tiny minimum
+/// dimension, crossover at the floor so even the grid shapes recurse.
+fn forced(algo: FastAlgoId, threads: usize) -> GemmDispatch {
+    GemmDispatch::new(DispatchConfig {
+        fastmm: FastmmTable::uniform(FastmmChoice { algo, crossover: 32, min_dim: 32 }),
+        threads,
+        ..DispatchConfig::default()
+    })
+}
+
+#[test]
+fn fastmm_f32_conforms_on_odd_rect_fringe_shapes() {
+    hermetic_tune_cache();
+    for algo in FastAlgoId::ALL {
+        let d = forced(algo, 4);
+        let mut seed = 0xFA57u64;
+        for &(m, n, k) in &SHAPES {
+            for &(alpha, beta) in &[(1.0f32, 0.0f32), (0.5, 1.5)] {
+                seed += 1;
+                let a = Matrix::random(m, k, seed, -1.0, 1.0);
+                let b = Matrix::random(k, n, seed ^ 0xB, -1.0, 1.0);
+                let mut c_got = Matrix::random(m, n, seed ^ 0xC, -1.0, 1.0);
+                let mut c_ref = c_got.clone();
+                let ran = d.gemm_with(
+                    KernelId::FastMm,
+                    Transpose::No,
+                    Transpose::No,
+                    alpha,
+                    a.view(),
+                    b.view(),
+                    beta,
+                    &mut c_got.view_mut(),
+                );
+                assert!(ran.available(), "{algo:?} degraded to unavailable {ran:?}");
+                sgemm_matrix(Backend::Naive, Transpose::No, Transpose::No, alpha, &a, &b, beta, &mut c_ref)
+                    .unwrap();
+                assert_allclose(
+                    c_got.data(),
+                    c_ref.data(),
+                    1e-2,
+                    5e-3,
+                    &format!("fastmm f32 {} m={m} n={n} k={k} α={alpha} β={beta}", algo.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fastmm_f64_conforms_on_odd_rect_fringe_shapes() {
+    hermetic_tune_cache();
+    for algo in FastAlgoId::ALL {
+        let d = forced(algo, 4);
+        let mut seed = 0xD0B1u64;
+        for &(m, n, k) in &SHAPES {
+            for &(alpha, beta) in &[(1.0f64, 0.0f64), (-0.5, 2.0)] {
+                seed += 1;
+                let a = Matrix::<f64>::random(m, k, seed, -1.0, 1.0);
+                let b = Matrix::<f64>::random(k, n, seed ^ 0xB, -1.0, 1.0);
+                let mut c_got = Matrix::<f64>::random(m, n, seed ^ 0xC, -1.0, 1.0);
+                let mut c_ref = c_got.clone();
+                let ran = d.gemm_with(
+                    KernelId::FastMm,
+                    Transpose::No,
+                    Transpose::No,
+                    alpha,
+                    a.view(),
+                    b.view(),
+                    beta,
+                    &mut c_got.view_mut(),
+                );
+                assert!(ran.available(), "{algo:?} degraded to unavailable {ran:?}");
+                dgemm(
+                    Backend::Naive,
+                    Transpose::No,
+                    Transpose::No,
+                    m,
+                    n,
+                    k,
+                    alpha,
+                    a.data(),
+                    a.ld(),
+                    b.data(),
+                    b.ld(),
+                    beta,
+                    c_ref.data_mut(),
+                    c_ref.ld(),
+                )
+                .unwrap();
+                // f64 keeps ~11 more mantissa bits through the same
+                // recursion depth, so the bars tighten accordingly.
+                assert_allclose_f64(
+                    c_got.data(),
+                    c_ref.data(),
+                    1e-10,
+                    1e-11,
+                    &format!("fastmm f64 {} m={m} n={n} k={k} α={alpha} β={beta}", algo.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fastmm_is_bitwise_deterministic_serial_vs_parallel_and_run_to_run() {
+    hermetic_tune_cache();
+    for algo in FastAlgoId::ALL {
+        let serial = forced(algo, 1);
+        let pooled = forced(algo, 4);
+        for &(m, n, k) in &[(160usize, 160usize, 160usize), (150, 130, 141)] {
+            let a = Matrix::random(m, k, 7, -1.0, 1.0);
+            let b = Matrix::random(k, n, 8, -1.0, 1.0);
+            let run = |d: &GemmDispatch| {
+                let mut c = Matrix::from_fn(m, n, |r, col| (r + col) as f32 * 0.01);
+                d.gemm_with(
+                    KernelId::FastMm,
+                    Transpose::No,
+                    Transpose::No,
+                    0.75,
+                    a.view(),
+                    b.view(),
+                    0.25,
+                    &mut c.view_mut(),
+                );
+                c
+            };
+            let c_serial = run(&serial);
+            let c_pooled_1 = run(&pooled);
+            let c_pooled_2 = run(&pooled);
+            assert_eq!(
+                c_serial.data(),
+                c_pooled_1.data(),
+                "{} serial vs pooled differ at {m}x{n}x{k}",
+                algo.name()
+            );
+            assert_eq!(
+                c_pooled_1.data(),
+                c_pooled_2.data(),
+                "{} pooled run-to-run differ at {m}x{n}x{k}",
+                algo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_selection_never_fires_below_min_dim() {
+    // The tuned minimum dimension is a hard floor for *selection*: any
+    // shape whose smallest dimension sits below it must route to the
+    // classical tiers, for both elements, whatever the transposes.
+    const MIN_DIM: usize = 64;
+    check("fastmm selection floor", 60, |g| {
+        let d = GemmDispatch::new(DispatchConfig {
+            fastmm: FastmmTable::uniform(FastmmChoice {
+                algo: FastAlgoId::Strassen222,
+                crossover: 64,
+                min_dim: MIN_DIM,
+            }),
+            threads: 4,
+            ..DispatchConfig::default()
+        });
+        let m = g.dim(200);
+        let n = g.dim(200);
+        let k = g.dim(200);
+        for (ta, tb) in [
+            (Transpose::No, Transpose::No),
+            (Transpose::Yes, Transpose::No),
+            (Transpose::No, Transpose::Yes),
+        ] {
+            let shape = GemmShape { m, n, k, transa: ta, transb: tb };
+            if m.min(n).min(k) < MIN_DIM {
+                assert_ne!(
+                    d.select_t::<f32>(&shape, 1.0f32),
+                    KernelId::FastMm,
+                    "f32 selected fastmm below min_dim ({m}x{n}x{k})"
+                );
+                assert_ne!(
+                    d.select_t::<f64>(&shape, 1.0f64),
+                    KernelId::FastMm,
+                    "f64 selected fastmm below min_dim ({m}x{n}x{k})"
+                );
+            }
+        }
+    });
+}

@@ -116,7 +116,7 @@ fn qgemm_matches_widening_oracle_on_fringe_grid() {
 fn qgemm_exact_across_257_block_boundaries() {
     hermetic_tune_cache();
     // 257 = one past a power of two, crossing every internal boundary:
-    // m=257 spans three 96-row A blocks (QMC) with a 5-row fringe,
+    // m=257 spans three 96-row A blocks (default qtile mc) with a 5-row fringe,
     // n=257 spans 17 B panels (NR=16) with a 1-column fringe, and k=257
     // spans 65 k-groups (4) with a 1-deep fringe.
     for (m, n, k, ta, tb) in [
