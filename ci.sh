@@ -80,6 +80,13 @@ cargo bench --bench fastmm_vs_classical
 echo "== cargo bench --bench fused_epilogue (fused >= two-pass + conv alloc guard) =="
 cargo bench --bench fused_epilogue -- --quick
 
+# Serve guard: cache-hit serving (registered weights, warm plan/pack
+# cache) must sustain >= 1.5x the throughput of repack-every-call on the
+# same Zipfian shape mix, and record BENCH_serve.json with the latency
+# percentiles (skip-passes on <4 worker threads).
+echo "== cargo bench --bench serve_saturation (cache-hit >= 1.5x repack guard) =="
+cargo bench --bench serve_saturation
+
 # Tier-1 lint: clippy over every target (lib, tests, benches, examples)
 # with warnings promoted to errors. CI_SKIP_CLIPPY=1 is the only escape
 # hatch for toolchains that ship without the clippy component.

@@ -1,0 +1,123 @@
+//! CI guard for the serve tier: cache-hit serving (registered weights
+//! against the plan/packed-weight cache) must sustain at least 1.5× the
+//! throughput of repack-every-call (inline weight bytes against a
+//! zero-capacity cache) on the same Zipfian shape mix, or the cache has
+//! stopped paying for itself — a broken key, a stampede regression, or
+//! eviction churn swallowing the hits.
+//!
+//! Both arms drive the identical workload (same seed, same menu, same
+//! client count) through `serve::run_driver`; the only deltas are the
+//! service's `cache_capacity` and the operand mode. Latency is
+//! client-observed round trip, so the reported p50/p95/p99 include
+//! admission queueing and the coalescing linger — the quantities a
+//! serving SLO is written against.
+//!
+//! Emits `BENCH_serve.json` (per-arm throughput, latency percentiles,
+//! cache counters) under `target/bench-results/`. Hosts with fewer than
+//! 4 worker threads skip-pass: with no concurrency there is no queueing
+//! and the comparison means nothing. Exit code 1 on failure so `ci.sh`
+//! can gate on it.
+
+use emmerald::bench::{BenchResult, Report};
+use emmerald::gemm::GemmContext;
+use emmerald::serve::{
+    default_shapes, run_driver, DriverConfig, DriverReport, GemmService, ServeConfig, WeightMode,
+};
+use emmerald::util::stats::Summary;
+
+/// Add one arm's numbers to the report: a result row (median request
+/// latency as the timing, effective per-request flops for the MFlop/s
+/// column) plus a note with the serving-facing quantities.
+fn arm_row(report: &mut Report, name: &str, flops: f64, r: &DriverReport) {
+    let result =
+        BenchResult { name: name.to_string(), seconds: Summary::from(&r.latencies), flops };
+    report.add(&[name.to_string()], result);
+    report.note(format!(
+        "{name}: {:.0} req/s over {:.2} s; latency p50 {:.3} / p95 {:.3} / p99 {:.3} ms; {}",
+        r.throughput,
+        r.elapsed,
+        r.latency_p(50.0) * 1e3,
+        r.latency_p(95.0) * 1e3,
+        r.latency_p(99.0) * 1e3,
+        r.stats,
+    ));
+}
+
+fn main() {
+    let threads = GemmContext::global().threads();
+    if threads < 4 {
+        println!(
+            "SKIP-PASS: {threads} worker thread(s) — the saturation mix needs >= 4 for queueing to mean anything"
+        );
+        return;
+    }
+
+    let base = DriverConfig { clients: 4, requests_per_client: 96, ..DriverConfig::default() };
+
+    // Effective per-request flops: the Zipf-weighted mean of 2mnk over
+    // the menu, so both arms' MFlop/s columns are directly comparable.
+    let weights: Vec<f64> =
+        (0..base.shapes.len()).map(|r| 1.0 / ((r + 1) as f64).powf(base.zipf_s)).collect();
+    let total: f64 = weights.iter().sum();
+    let flops: f64 = base
+        .shapes
+        .iter()
+        .zip(&weights)
+        .map(|(s, w)| (2 * s.m * s.n * s.k) as f64 * w / total)
+        .sum();
+
+    // Arm 1: repack-every-call. Zero-capacity cache, weight bytes inline
+    // on every request — the no-service baseline a cache must beat.
+    let repack_svc = GemmService::new(
+        GemmContext::global().clone(),
+        ServeConfig { cache_capacity: 0, ..ServeConfig::default() },
+    );
+    let repack = run_driver(&repack_svc, &DriverConfig { mode: WeightMode::Inline, ..base.clone() });
+    drop(repack_svc);
+
+    // Arm 2: cache-hit serving. Default cache, weights registered once up
+    // front. A short warm pass first so the measured pass is the
+    // steady-state hit path, not first-touch packing.
+    let cached_svc = GemmService::new(GemmContext::global().clone(), ServeConfig::default());
+    let _ = run_driver(
+        &cached_svc,
+        &DriverConfig { mode: WeightMode::Registered, requests_per_client: 8, ..base.clone() },
+    );
+    let cached =
+        run_driver(&cached_svc, &DriverConfig { mode: WeightMode::Registered, ..base.clone() });
+    drop(cached_svc);
+
+    let mut report = Report::new(
+        "SERVE — cache-hit serving vs repack-every-call (Zipfian shape mix, client-observed latency)",
+        &["arm"],
+    );
+    arm_row(&mut report, "repack-every-call", flops, &repack);
+    arm_row(&mut report, "cache-hit", flops, &cached);
+
+    let ratio = cached.throughput / repack.throughput.max(1e-12);
+    report.note(format!(
+        "cache-hit/repack throughput = {ratio:.2} ({:.0} vs {:.0} req/s, {} clients x {} requests, threshold 1.5x)",
+        cached.throughput, repack.throughput, base.clients, base.requests_per_client,
+    ));
+    report.emit("BENCH_serve");
+
+    let expected = base.clients * base.requests_per_client;
+    if repack.failed > 0 || cached.failed > 0 || cached.completed != expected {
+        println!(
+            "FAIL: requests were dropped (repack {}/{}, cached {}/{}) — blocking submit must not shed load",
+            repack.completed, expected, cached.completed, expected,
+        );
+        std::process::exit(1);
+    }
+    if cached.stats.pack_hits == 0 {
+        println!("FAIL: the cached arm recorded zero pack hits — registered weights never hit the cache");
+        std::process::exit(1);
+    }
+    if ratio < 1.5 {
+        println!(
+            "FAIL: cache-hit serving only {ratio:.2}x repack-every-call (needs >= 1.5x) — the packed-weight cache has stopped paying for itself"
+        );
+        std::process::exit(1);
+    }
+    println!("PASS: cache-hit serving {ratio:.2}x repack-every-call (threshold 1.5x)");
+}

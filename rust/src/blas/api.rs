@@ -388,3 +388,90 @@ pub fn gemm_matrix<T: Element>(
         ldc,
     )
 }
+
+/// [`sgemm`]'s contract routed through the process-wide GEMM service
+/// ([`crate::serve::GemmService::global`]): the call is admitted under
+/// the service's backpressure, may coalesce with concurrent identical
+/// requests, and answers from the shape-keyed plan / packed-weight
+/// cache on repeat traffic. Results are bitwise identical to [`sgemm`]
+/// on the dispatch backend (the service executes the same plan through
+/// the prepacked driver). Copy-in/copy-out: operands are snapshotted at
+/// the call, `c` is written back on completion.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_served(
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f32,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    beta: f32,
+    c: &mut [f32],
+    ldc: usize,
+) -> Result<(), crate::serve::ServeError> {
+    let mut spec = crate::serve::PlanSpec::new(m, n, k);
+    spec.transa = transa;
+    spec.transb = transb;
+    spec.alpha = alpha;
+    spec.beta = beta;
+    spec.lda = lda;
+    spec.ldb = ldb;
+    spec.ldc = ldc;
+    let req = crate::serve::SgemmRequest {
+        spec,
+        a: a.to_vec(),
+        b: crate::serve::FOperand::Inline(b.to_vec()),
+        c: Some(c.to_vec()),
+    };
+    let out = crate::serve::GemmService::global().submit(req)?.wait()?;
+    c.copy_from_slice(&out);
+    Ok(())
+}
+
+/// [`qgemm`]'s non-accumulating contract routed through the GEMM
+/// service (see [`sgemm_served`] for the admission/coalescing/caching
+/// semantics). Exact `u8 × i8 → i32`, bitwise identical to [`qgemm`].
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_served(
+    transa: Transpose,
+    transb: Transpose,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[u8],
+    lda: usize,
+    b: &[i8],
+    ldb: usize,
+    c: &mut [i32],
+    ldc: usize,
+) -> Result<(), crate::serve::ServeError> {
+    // Validate the output view up front (the service answers a
+    // contiguous m × n buffer that is copied back row by row).
+    MatMut::new(&mut c[..], m, n, ldc)
+        .map_err(|e| crate::serve::ServeError::Blas(e.operand("C")))?;
+    let mut req = crate::serve::QgemmRequest::new(
+        m,
+        n,
+        k,
+        a.to_vec(),
+        crate::serve::QOperand::Inline(b.to_vec()),
+    );
+    req.transa = transa;
+    req.transb = transb;
+    req.lda = lda;
+    req.ldb = ldb;
+    match crate::serve::GemmService::global().submit_q(req)?.wait()? {
+        crate::serve::QgemmOut::I32(out) => {
+            for r in 0..m {
+                c[r * ldc..r * ldc + n].copy_from_slice(&out[r * n..r * n + n]);
+            }
+            Ok(())
+        }
+        // A request without a requant descriptor always answers i32.
+        crate::serve::QgemmOut::F32(_) => unreachable!("requant-free request answered f32"),
+    }
+}

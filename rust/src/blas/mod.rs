@@ -78,7 +78,7 @@ pub mod level2;
 mod matrix;
 pub mod syrk;
 
-pub use api::{dgemm, dgemm_batch, dgemm_matrix, gemm, gemm_batch, gemm_matrix, qgemm, qgemm_requant, sgemm, sgemm_batch, sgemm_matrix};
+pub use api::{dgemm, dgemm_batch, dgemm_matrix, gemm, gemm_batch, gemm_matrix, qgemm, qgemm_requant, qgemm_served, sgemm, sgemm_batch, sgemm_matrix, sgemm_served};
 pub use backend::{available_backends, Backend};
 pub use level1::{isamax, saxpy, sdot, snrm2, sscal};
 pub use level2::sgemv;

@@ -69,6 +69,17 @@ impl NativeEngine {
     pub fn new(backend: Backend) -> Self {
         Self { backend }
     }
+
+    /// Inference through the process-wide GEMM service
+    /// ([`crate::serve::GemmService::global`]): every layer's plan and
+    /// packed weight panel comes from the service's shared cache, so
+    /// concurrent evaluators of the same snapshot share one packing and
+    /// repeat calls skip all planning/packing work. Logits are bitwise
+    /// identical to [`Mlp::forward`] on the dispatch backend (same plans,
+    /// same prepacked drivers).
+    pub fn infer(&self, mlp: &Mlp, x: &Matrix) -> Matrix {
+        mlp.forward_served(crate::serve::GemmService::global(), x)
+    }
 }
 
 impl Default for NativeEngine {

@@ -17,8 +17,8 @@
 //!   it over the shared pool; small ones stay on the naive loop,
 //! * **huge no-transpose problems above the tuned fast-matmul
 //!   threshold** go to the [`super::fastmm`] family (Strassen–Winograd
-//!   ⟨2,2,2⟩:7 or Laderman ⟨3,3,3⟩:23, picked per (element, shape
-//!   class) by the autotuner) — the sub-2MNK tier, parallelised with
+//!   ⟨2,2,2⟩:7, Laderman ⟨3,3,3⟩:23 or the ⟨4,2,4⟩:28 tensor
+//!   composition, picked per (element, shape class) by the autotuner) — the sub-2MNK tier, parallelised with
 //!   DFS/BFS hybrid scheduling on the shared pool,
 //! * **everything else** goes to the widest serial vector kernel the CPU
 //!   supports (AVX2+FMA, else SSE, else the scalar blocked proxy).

@@ -78,17 +78,28 @@ pub enum FastAlgoId {
     /// thirds pairs naturally with 3·2ⁿ-ish dimensions where ⟨2,2,2⟩
     /// peels large fringes.
     Laderman333,
+    /// ⟨4,2,4⟩:28 — Strassen–Winograd ⟨2,2,2⟩ ⊗ ⟨2,1,2⟩ (28 < 32
+    /// classical products). The rectangular base case quarters the row
+    /// and column spaces while only halving the depth, so it fits flat
+    /// `k ≪ m,n` shapes where the cubic members peel large fringes. A
+    /// bounded flip-graph walk (Kauers–Moosbauer-style, from this very
+    /// decomposition) did not reach the Hopcroft–Kerr rank 26 under the
+    /// {−1,0,1} coefficients the recursion's sign-only combine supports;
+    /// the table slot takes a 26 drop-in if one lands.
+    Kron424,
 }
 
 impl FastAlgoId {
     /// Every algorithm, in registry order.
-    pub const ALL: [FastAlgoId; 2] = [FastAlgoId::Strassen222, FastAlgoId::Laderman333];
+    pub const ALL: [FastAlgoId; 3] =
+        [FastAlgoId::Strassen222, FastAlgoId::Laderman333, FastAlgoId::Kron424];
 
     /// Stable name (persisted by the tuned cache).
     pub fn name(self) -> &'static str {
         match self {
             FastAlgoId::Strassen222 => "strassen222",
             FastAlgoId::Laderman333 => "laderman333",
+            FastAlgoId::Kron424 => "kron424",
         }
     }
 
@@ -102,6 +113,7 @@ impl FastAlgoId {
         match self {
             FastAlgoId::Strassen222 => &STRASSEN_222,
             FastAlgoId::Laderman333 => &LADERMAN_333,
+            FastAlgoId::Kron424 => &KRON_424,
         }
     }
 }
@@ -237,6 +249,100 @@ static LADERMAN_333: FastAlgo = FastAlgo {
         0, 0, 0, 0, 0, 1, 1, 1, 0, 0, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0,
         0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 1, 0,
         0, 0, 0, 0, 0, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1,
+    ],
+};
+
+/// ⟨4,2,4⟩:28 — Strassen–Winograd ⟨2,2,2⟩ tensor-composed with the
+/// ⟨2,1,2⟩ outer product: product (r, si, sj) applies Strassen product
+/// r to the (si, sj) interleave of the 4×-split row/column spaces.
+/// 28 < 32 classical block products; every coefficient stays in
+/// {−1, 0, 1} as `combine`/`writeback` require.
+static KRON_424: FastAlgo = FastAlgo {
+    id: FastAlgoId::Kron424,
+    bm: 4,
+    bk: 2,
+    bn: 4,
+    rank: 28,
+    #[rustfmt::skip]
+    u: &[
+        1, 0, 0, 0, 0, 0, 0, 0,
+        1, 0, 0, 0, 0, 0, 0, 0,
+        0, 0, 1, 0, 0, 0, 0, 0,
+        0, 0, 1, 0, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0, 0, 0,
+        0, 0, 0, 1, 0, 0, 0, 0,
+        0, 0, 0, 1, 0, 0, 0, 0,
+        1, 1, 0, 0, -1, -1, 0, 0,
+        1, 1, 0, 0, -1, -1, 0, 0,
+        0, 0, 1, 1, 0, 0, -1, -1,
+        0, 0, 1, 1, 0, 0, -1, -1,
+        0, 0, 0, 0, 0, 1, 0, 0,
+        0, 0, 0, 0, 0, 1, 0, 0,
+        0, 0, 0, 0, 0, 0, 0, 1,
+        0, 0, 0, 0, 0, 0, 0, 1,
+        0, 0, 0, 0, 1, 1, 0, 0,
+        0, 0, 0, 0, 1, 1, 0, 0,
+        0, 0, 0, 0, 0, 0, 1, 1,
+        0, 0, 0, 0, 0, 0, 1, 1,
+        -1, 0, 0, 0, 1, 1, 0, 0,
+        -1, 0, 0, 0, 1, 1, 0, 0,
+        0, 0, -1, 0, 0, 0, 1, 1,
+        0, 0, -1, 0, 0, 0, 1, 1,
+        1, 0, 0, 0, -1, 0, 0, 0,
+        1, 0, 0, 0, -1, 0, 0, 0,
+        0, 0, 1, 0, 0, 0, -1, 0,
+        0, 0, 1, 0, 0, 0, -1, 0,
+    ],
+    #[rustfmt::skip]
+    v: &[
+        1, 0, 0, 0, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0, 0, 0,
+        1, 0, 0, 0, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 1, 0, 0, 0,
+        0, 0, 0, 0, 0, 1, 0, 0,
+        0, 0, 0, 0, 1, 0, 0, 0,
+        0, 0, 0, 0, 0, 1, 0, 0,
+        0, 0, 0, 0, 0, 0, 1, 0,
+        0, 0, 0, 0, 0, 0, 0, 1,
+        0, 0, 0, 0, 0, 0, 1, 0,
+        0, 0, 0, 0, 0, 0, 0, 1,
+        1, 0, -1, 0, -1, 0, 1, 0,
+        0, 1, 0, -1, 0, -1, 0, 1,
+        1, 0, -1, 0, -1, 0, 1, 0,
+        0, 1, 0, -1, 0, -1, 0, 1,
+        -1, 0, 1, 0, 0, 0, 0, 0,
+        0, -1, 0, 1, 0, 0, 0, 0,
+        -1, 0, 1, 0, 0, 0, 0, 0,
+        0, -1, 0, 1, 0, 0, 0, 0,
+        1, 0, -1, 0, 0, 0, 1, 0,
+        0, 1, 0, -1, 0, 0, 0, 1,
+        1, 0, -1, 0, 0, 0, 1, 0,
+        0, 1, 0, -1, 0, 0, 0, 1,
+        0, 0, -1, 0, 0, 0, 1, 0,
+        0, 0, 0, -1, 0, 0, 0, 1,
+        0, 0, -1, 0, 0, 0, 1, 0,
+        0, 0, 0, -1, 0, 0, 0, 1,
+    ],
+    #[rustfmt::skip]
+    w: &[
+        1, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0,
+        1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0,
+        0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0,
+        0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0,
+        0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 0, 0,
+        0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 0,
+        1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, -1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0,
+        0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, -1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0,
+        1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0,
+        0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0,
+        0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, -1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 0,
+        0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, -1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1,
+        0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 1, 0,
+        0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0, 0, 1,
     ],
 };
 

@@ -69,7 +69,8 @@
 //!   shape-based selection over every backend (including [`parallel`] and
 //!   [`fastmm`]).
 //! * [`fastmm`] — the parallel fast-matmul family: ⟨m,k,n⟩ base-case
-//!   factorizations (Strassen–Winograd ⟨2,2,2⟩:7, Laderman ⟨3,3,3⟩:23)
+//!   factorizations (Strassen–Winograd ⟨2,2,2⟩:7, Laderman ⟨3,3,3⟩:23,
+//!   the ⟨4,2,4⟩:28 tensor composition)
 //!   recursing over strided views with DFS/BFS hybrid scheduling on the
 //!   shared pool, element-generic and deterministic, with per-shape
 //!   autotuned algorithm/crossover selection.

@@ -253,7 +253,7 @@ impl GemmContext {
                 PackedBStorage::Tile { blocks, kc: tp.kc, nr: tp.nr }
             }
         };
-        Ok(PackedB { storage, offsets, k, n })
+        Ok(PackedB { inner: std::sync::Arc::new(PackedBInner { storage, offsets, k, n }) })
     }
 
     /// Pre-pack `op(A)` (`m × k`) into the k-blocked row layout of this
@@ -851,8 +851,8 @@ impl<T: Element> GemmPlan<T> {
         let threads = if self.kernel == KernelId::Parallel { self.dispatch.threads() } else { 1 };
         match geom {
             PackGeometry::Dot(isa, params) => {
-                let PackedBStorage::Dot { blocks, .. } = &b.storage else { unreachable!() };
-                let bb = DotB { blocks, offsets: &b.offsets, k: b.k };
+                let PackedBStorage::Dot { blocks, .. } = &b.inner.storage else { unreachable!() };
+                let bb = DotB { blocks, offsets: &b.inner.offsets, k: b.inner.k };
                 match super::parallel::split_axis(m, n, threads) {
                     super::parallel::Split::Serial => {
                         let mut cv = cv;
@@ -880,8 +880,8 @@ impl<T: Element> GemmPlan<T> {
                 }
             }
             PackGeometry::Tile(tp) => {
-                let PackedBStorage::Tile { blocks, .. } = &b.storage else { unreachable!() };
-                let offsets = &b.offsets;
+                let PackedBStorage::Tile { blocks, .. } = &b.inner.storage else { unreachable!() };
+                let offsets = &b.inner.offsets;
                 match super::parallel::split_axis(m, n, threads) {
                     super::parallel::Split::Serial => {
                         let mut cv = cv;
@@ -976,8 +976,8 @@ impl<T: Element> GemmPlan<T> {
                 if *kb != params.kb || *mb != params.mb {
                     return Err(MISMATCH);
                 }
-                let PackedBStorage::Dot { blocks: b_blocks, .. } = &b.storage else { unreachable!() };
-                let bb = DotB { blocks: b_blocks, offsets: &b.offsets, k: b.k };
+                let PackedBStorage::Dot { blocks: b_blocks, .. } = &b.inner.storage else { unreachable!() };
+                let bb = DotB { blocks: b_blocks, offsets: &b.inner.offsets, k: b.inner.k };
                 let aa = ASource::Packed { blocks, mb: params.mb };
                 match super::parallel::split_axis(m, n, threads) {
                     super::parallel::Split::Serial => {
@@ -1005,8 +1005,8 @@ impl<T: Element> GemmPlan<T> {
                 if *kc != tp.kc || *mc != tp.mc || *mr != tp.mr {
                     return Err(MISMATCH);
                 }
-                let PackedBStorage::Tile { blocks: b_blocks, .. } = &b.storage else { unreachable!() };
-                let offsets = &b.offsets;
+                let PackedBStorage::Tile { blocks: b_blocks, .. } = &b.inner.storage else { unreachable!() };
+                let offsets = &b.inner.offsets;
                 let aa = tile::TileA::Packed { blocks };
                 match super::parallel::split_axis(m, n, threads) {
                     super::parallel::Split::Serial => {
@@ -1038,15 +1038,15 @@ impl<T: Element> GemmPlan<T> {
     /// handle's layout family and geometry must match what the plan's
     /// dispatcher would pack today.
     fn packed_geometry(&self, b: &PackedB<T>) -> Result<PackGeometry, BlasError> {
-        if b.k != self.shape.k || b.n != self.shape.n {
+        if b.inner.k != self.shape.k || b.inner.n != self.shape.n {
             return Err(BlasError::ShapeMismatch {
                 what: "PackedB",
                 expect: (self.shape.k, self.shape.n),
-                got: (b.k, b.n),
+                got: (b.inner.k, b.inner.n),
             });
         }
         let geom = pack_geometry_t::<T>(&self.dispatch);
-        let ok = match (&geom, &b.storage) {
+        let ok = match (&geom, &b.inner.storage) {
             (PackGeometry::Dot(_, params), PackedBStorage::Dot { kb, nr, .. }) => {
                 *kb == params.kb && *nr == params.nr
             }
@@ -1070,8 +1070,27 @@ impl<T: Element> GemmPlan<T> {
 /// kernel (tile panels on AVX2+FMA hosts, dot panels otherwise);
 /// shareable across threads and reusable across any number of
 /// [`GemmPlan::run_packed_b`] calls and batch items.
+///
+/// The handle is a cheap reference: the panel storage lives behind an
+/// `Arc`, so `clone()` is a reference-count bump — a plan/weight cache
+/// (see [`crate::serve`]) can hand the same packed panels to many
+/// concurrent callers without copying them. The payload is immutable
+/// after packing, which is what makes the sharing sound.
 #[derive(Debug)]
 pub struct PackedB<T = f32> {
+    inner: std::sync::Arc<PackedBInner<T>>,
+}
+
+impl<T> Clone for PackedB<T> {
+    /// Reference-count bump; the panel storage is shared, not copied.
+    fn clone(&self) -> Self {
+        Self { inner: std::sync::Arc::clone(&self.inner) }
+    }
+}
+
+/// The immutable payload every clone of a [`PackedB`] handle shares.
+#[derive(Debug)]
+struct PackedBInner<T> {
     storage: PackedBStorage<T>,
     offsets: Vec<usize>,
     k: usize,
@@ -1090,29 +1109,36 @@ enum PackedBStorage<T> {
 impl<T: Element> PackedB<T> {
     /// Logical `k` (rows of `op(B)`).
     pub fn k(&self) -> usize {
-        self.k
+        self.inner.k
     }
 
     /// Logical `n` (columns of `op(B)`).
     pub fn n(&self) -> usize {
-        self.n
+        self.inner.n
     }
 
     /// Panel width the buffer was packed with.
     pub fn nr(&self) -> usize {
-        match &self.storage {
+        match &self.inner.storage {
             PackedBStorage::Dot { nr, .. } | PackedBStorage::Tile { nr, .. } => *nr,
         }
     }
 
     /// Whether the handle carries the outer-product tile layout.
     pub fn is_tile(&self) -> bool {
-        matches!(self.storage, PackedBStorage::Tile { .. })
+        matches!(self.inner.storage, PackedBStorage::Tile { .. })
+    }
+
+    /// Whether two handles share the same panel storage (both are clones
+    /// of one pack). Diagnostic for caches: a hit hands back a handle for
+    /// which this is true against the cached original.
+    pub fn shares_storage(&self, other: &Self) -> bool {
+        std::sync::Arc::ptr_eq(&self.inner, &other.inner)
     }
 
     /// Bytes held across all k-blocks (diagnostic).
     pub fn bytes(&self) -> usize {
-        match &self.storage {
+        match &self.inner.storage {
             PackedBStorage::Dot { blocks, .. } => blocks.iter().map(pack::PackedB::bytes).sum(),
             PackedBStorage::Tile { blocks, .. } => blocks.iter().map(pack::TilePackedB::bytes).sum(),
         }
@@ -1126,13 +1152,14 @@ impl<T: Element> PackedB<T> {
     ///
     /// [`Accumulation::CompensatedF32`]: super::dispatch::Accumulation::CompensatedF32
     fn unpack(&self) -> Matrix<T> {
-        let mut out = Matrix::zeros(self.k, self.n);
-        match &self.storage {
+        let inner = &*self.inner;
+        let mut out = Matrix::zeros(inner.k, inner.n);
+        match &inner.storage {
             PackedBStorage::Dot { blocks, .. } => {
                 for (bi, block) in blocks.iter().enumerate() {
-                    let kk = self.offsets[bi];
-                    let kend = self.offsets.get(bi + 1).copied().unwrap_or(self.k);
-                    for j in 0..self.n {
+                    let kk = inner.offsets[bi];
+                    let kend = inner.offsets.get(bi + 1).copied().unwrap_or(inner.k);
+                    for j in 0..inner.n {
                         let col = block.col(j);
                         for p in 0..kend - kk {
                             out.set(kk + p, j, col[p]);
@@ -1143,9 +1170,9 @@ impl<T: Element> PackedB<T> {
             PackedBStorage::Tile { blocks, nr, .. } => {
                 let nr = *nr;
                 for (bi, block) in blocks.iter().enumerate() {
-                    let kk = self.offsets[bi];
+                    let kk = inner.offsets[bi];
                     for q in 0..block.panels() {
-                        let w = nr.min(self.n - q * nr);
+                        let w = nr.min(inner.n - q * nr);
                         for l in 0..w {
                             for p in 0..block.kc_eff() {
                                 out.set(kk + p, q * nr + l, block.at(q, p, l));

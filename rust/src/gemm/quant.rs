@@ -78,14 +78,17 @@ const KGROUP: usize = 4;
 /// Weight-stationary: pack once via
 /// [`GemmContext::qpack_b`](crate::gemm::plan::GemmContext::qpack_b),
 /// reuse across calls and across the parallel row split (workers share
-/// it read-only).
+/// it read-only). The panel buffer and column sums live behind `Arc`s,
+/// so `clone()` is a reference-count bump — a weight cache can hand the
+/// same packed panels to many holders without copying them (the payload
+/// is immutable after packing).
 #[derive(Clone, Debug)]
 pub struct QPackedB {
-    buf: Vec<i8>,
+    buf: std::sync::Arc<[i8]>,
     n: usize,
     k: usize,
     kgroups: usize,
-    colsums: Vec<i32>,
+    colsums: std::sync::Arc<[i32]>,
     has_neg128: bool,
 }
 
@@ -118,7 +121,7 @@ impl QPackedB {
             }
             colsums[j] = sum;
         }
-        Self { buf, n, k, kgroups, colsums, has_neg128 }
+        Self { buf: buf.into(), n, k, kgroups, colsums: colsums.into(), has_neg128 }
     }
 
     /// Logical `k` (rows of `op(B)`).
@@ -145,6 +148,13 @@ impl QPackedB {
     /// Bytes held (diagnostic).
     pub fn bytes(&self) -> usize {
         self.buf.len()
+    }
+
+    /// Whether two handles share the same panel storage (both are clones
+    /// of one pack). Diagnostic for caches: a hit hands back a handle for
+    /// which this is true against the cached original.
+    pub fn shares_storage(&self, other: &Self) -> bool {
+        std::sync::Arc::ptr_eq(&self.buf, &other.buf)
     }
 
     /// Number of 16-column panels.

@@ -41,6 +41,11 @@
 //!   196-node cluster price/performance accounting.
 //! * [`runtime`] — the PJRT execution path that loads the AOT-compiled
 //!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and runs them from Rust.
+//! * [`serve`] — GEMM-as-a-service: a process-wide [`serve::GemmService`]
+//!   front end that admits concurrent GEMM/QGEMM requests under the
+//!   thread budget, coalesces same-shape/same-weight requests into
+//!   batches, and answers repeat traffic from a shape-keyed LRU cache of
+//!   plans and packed weights ([`serve::PlanCache`]).
 //! * [`bench`] + [`util`] — benchmarking and library substrates (the
 //!   offline build carries no criterion/clap/proptest, so these are
 //!   first-class modules here).
@@ -92,6 +97,7 @@ pub mod gemm;
 pub mod lapack;
 pub mod nn;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

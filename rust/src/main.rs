@@ -9,7 +9,11 @@
 //! * `autotune`  — ATLAS-style parameter search for the host kernels
 //!                 (winners feed the dispatch heuristics).
 //! * `dispatch`  — show the kernel registry and what the dispatcher would
-//!                 pick for a given shape.
+//!                 pick for a given shape (plus live serve-cache counters
+//!                 when the service is up).
+//! * `serve`     — drive the GEMM service with a Zipfian multi-client
+//!                 saturation workload; report throughput, p50/p95/p99
+//!                 latency and the cache counters.
 //! * `artifacts` — list the AOT artifacts and their metadata.
 //! * `verify`    — cross-check every backend (and PJRT if artifacts are
 //!                 built) against the naive oracle.
@@ -36,12 +40,13 @@ fn main() {
         "train" => cmd_train(rest),
         "autotune" => cmd_autotune(rest),
         "dispatch" => cmd_dispatch(rest),
+        "serve" => cmd_serve(rest),
         "artifacts" => cmd_artifacts(rest),
         "verify" => cmd_verify(rest),
         _ => {
             println!(
                 "emmerald {} — SGEMM reproduction (Aberdeen & Baxter)\n\n\
-                 USAGE: emmerald <gemm|sweep|sim|train|autotune|dispatch|artifacts|verify> [options]\n\
+                 USAGE: emmerald <gemm|sweep|sim|train|autotune|dispatch|serve|artifacts|verify> [options]\n\
                  Run a subcommand with --help for its options.",
                 emmerald::VERSION
             );
@@ -519,6 +524,78 @@ fn cmd_dispatch(argv: Vec<String>) -> i32 {
             .map(|p| p.display().to_string())
             .unwrap_or_else(|| "disabled".into())
     );
+    match emmerald::serve::GemmService::global_started() {
+        Some(svc) => {
+            println!(
+                "serve: {} cached entries ({} KiB packed), capacity {}",
+                svc.cache().len(),
+                svc.cache().bytes() / 1024,
+                svc.cache().capacity()
+            );
+            println!("{}", svc.stats());
+        }
+        None => println!("serve: service not started in this process (see `emmerald serve`)"),
+    }
+    0
+}
+
+fn cmd_serve(argv: Vec<String>) -> i32 {
+    let cli = Cli::new("emmerald serve", "saturate the GEMM service with a Zipfian shape mix")
+        .opt("clients", "4", "concurrent client threads")
+        .opt("requests", "128", "requests per client")
+        .opt("zipf", "1.2", "Zipf skew exponent over the shape menu")
+        .opt("seed", "24091", "workload seed")
+        .opt("window-us", "100", "coalesce window, microseconds")
+        .opt("cache", "64", "plan/packed-weight cache capacity in entries (0 = disabled)")
+        .flag("inline", "ship weight bytes with every request instead of registering them");
+    let m = parse(&cli, argv);
+    let cfg = emmerald::serve::ServeConfig {
+        coalesce_window: std::time::Duration::from_micros(m.get_u64("window-us").unwrap()),
+        cache_capacity: m.get_usize("cache").unwrap(),
+        ..Default::default()
+    };
+    let svc =
+        emmerald::serve::GemmService::new(emmerald::gemm::GemmContext::global().clone(), cfg);
+    let dcfg = emmerald::serve::DriverConfig {
+        clients: m.get_usize("clients").unwrap(),
+        requests_per_client: m.get_usize("requests").unwrap(),
+        zipf_s: m.get_f64("zipf").unwrap(),
+        seed: m.get_u64("seed").unwrap(),
+        mode: if m.flag("inline") {
+            emmerald::serve::WeightMode::Inline
+        } else {
+            emmerald::serve::WeightMode::Registered
+        },
+        ..Default::default()
+    };
+    let report = emmerald::serve::run_driver(&svc, &dcfg);
+    println!(
+        "{} requests ({} clients × {}), {} failed, {} shapes (zipf s={})",
+        report.completed + report.failed,
+        dcfg.clients,
+        dcfg.requests_per_client,
+        report.failed,
+        dcfg.shapes.len(),
+        dcfg.zipf_s
+    );
+    println!(
+        "elapsed {:.3} s, throughput {:.1} req/s",
+        report.elapsed, report.throughput
+    );
+    println!(
+        "latency p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  max {:.3} ms",
+        report.latency_p(50.0) * 1e3,
+        report.latency_p(95.0) * 1e3,
+        report.latency_p(99.0) * 1e3,
+        report.latency_p(100.0) * 1e3
+    );
+    println!(
+        "cache: {} entries ({} KiB packed), capacity {}",
+        svc.cache().len(),
+        svc.cache().bytes() / 1024,
+        svc.cache().capacity()
+    );
+    println!("{}", report.stats);
     0
 }
 

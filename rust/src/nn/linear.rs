@@ -126,6 +126,41 @@ impl Linear {
         }
     }
 
+    /// Like [`quantize_weights`](Self::quantize_weights), but the packed
+    /// integer panels come from the GEMM service's shared cache (keyed
+    /// by the quantized bytes' content hash): two instances of the same
+    /// layer — or the same model loaded twice — share **one** packing
+    /// process-wide, and a cache hit is an `Arc` bump, not a repack.
+    /// The quantization itself is identical, so forwards through the
+    /// returned handle are bitwise equal to the uncached path.
+    pub fn quantize_weights_served(&self, svc: &crate::serve::GemmService) -> QuantizedLinear {
+        let (fan_in, fan_out) = (self.fan_in(), self.fan_out());
+        let mut w_scale = vec![1.0f32; fan_out];
+        for (j, s) in w_scale.iter_mut().enumerate() {
+            let mut amax = 0.0f32;
+            for i in 0..fan_in {
+                amax = amax.max(self.weight.get(i, j).abs());
+            }
+            if amax > 0.0 {
+                *s = amax / 127.0;
+            }
+        }
+        let q = Matrix::<i8>::from_fn(fan_in, fan_out, |i, j| {
+            (self.weight.get(i, j) / w_scale[j]).round().clamp(-127.0, 127.0) as i8
+        });
+        let (_, packed) = svc
+            .cached_qpack_b(Transpose::No, fan_in, fan_out, q.data(), q.ld())
+            .expect("weight matrix is a valid view");
+        QuantizedLinear {
+            ctx: svc.context().clone(),
+            packed,
+            w_scale,
+            bias: self.bias.clone(),
+            activation: self.activation,
+            fan_in,
+        }
+    }
+
     /// Quantized forward: per-row affine u8 quantization of `x`, the
     /// exact integer GEMM against the prepacked weights, and the fused
     /// dequantizing writeback. `q` must come from this layer's
@@ -156,6 +191,12 @@ impl QuantizedLinear {
     /// Bytes held by the packed integer panels (diagnostic).
     pub fn bytes(&self) -> usize {
         self.packed.bytes()
+    }
+
+    /// The packed integer panels (diagnostic; lets callers verify cache
+    /// sharing via [`QPackedB::shares_storage`]).
+    pub fn packed(&self) -> &QPackedB {
+        &self.packed
     }
 
     /// Quantized forward pass (see [`Linear::forward_quantized`]).

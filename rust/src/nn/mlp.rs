@@ -206,6 +206,37 @@ impl Mlp {
         h
     }
 
+    /// Forward pass through the GEMM service's shared caches
+    /// ([`crate::serve::GemmService`]): each layer's plan comes from the
+    /// plan cache and each weight panel from the packed-weight cache
+    /// (keyed by content hash), so concurrent model instances — and
+    /// repeated calls — share one packing of every weight process-wide.
+    /// Executes the same plans over the same packed panels as
+    /// [`forward_packed`](Self::forward_packed), so the logits are
+    /// bitwise identical to it (and to the packing path).
+    pub fn forward_served(&self, svc: &crate::serve::GemmService, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.sizes[0], "input width mismatch");
+        let batch = x.rows();
+        let mut h = x.clone();
+        for l in 0..self.n_layers() {
+            let w = &self.weights[l];
+            let mut spec = crate::serve::PlanSpec::new(batch, w.cols(), w.rows());
+            spec.lda = h.ld();
+            spec.ldb = w.ld();
+            spec.epilogue = Some(self.layer_epilogue(l));
+            let plan = svc.cached_plan(&spec).expect("validated shapes");
+            let (_, pb) = svc
+                .cached_pack_b(Transpose::No, w.rows(), w.cols(), w.data(), w.ld())
+                .expect("weight matrices are valid views");
+            let mut z = Matrix::zeros(batch, w.cols());
+            if plan.run_packed_b(h.data(), &pb, z.data_mut()).is_err() {
+                plan.run(h.data(), w.data(), z.data_mut()).expect("validated shapes");
+            }
+            h = z;
+        }
+        h
+    }
+
     /// Mean softmax cross-entropy over the row range `[r0, r1)` — the
     /// shared core of [`loss_from_logits`](Self::loss_from_logits) and the
     /// per-shard losses of

@@ -1,0 +1,560 @@
+//! The shape-keyed plan / packed-weight LRU cache.
+//!
+//! Serving traffic repeats itself: the same weight matrix multiplies
+//! millions of activation batches, and the same handful of shapes make
+//! up almost all calls. [`PlanCache`] exploits both: it memoizes
+//! [`GemmPlan`]s under a full problem key ([`PlanKey`]: shape, transpose
+//! layout, scalars, leading dimensions, epilogue class) and packed
+//! weights ([`PackedB`] / [`QPackedB`]) under a weight key
+//! ([`WeightKey`]: weight identity + operand layout), so panels are
+//! packed **once process-wide** and every subsequent request gets a
+//! reference-counted handle (the Arc-backed handles make a hit a
+//! pointer bump, not a copy).
+//!
+//! Keying rules:
+//!
+//! * A weight's identity is a [`WeightId`] — either caller-provided at
+//!   registration (authoritative: re-registering the same ID
+//!   *invalidates* every entry packed from the old bytes) or derived
+//!   from the operand content by FNV-1a hashing
+//!   ([`content_id_f32`] / [`content_id_i8`]).
+//! * Plans additionally key on the epilogue **class**
+//!   ([`epilogue_class`]): a content fingerprint of bias values,
+//!   activation and clamp, so two requests share a plan only when their
+//!   fused writeback is identical.
+//!
+//! Capacity is a joint entry bound across plans and packed weights;
+//! eviction is least-recently-used (a global access tick, scanned on
+//! overflow — capacities are tens of entries, not millions). Concurrent
+//! misses on one weight are stampede-safe: a per-key [`OnceLock`] lets
+//! exactly one caller pack while the rest block and reuse the result.
+
+use std::collections::HashMap;
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::blas::{BlasError, Transpose};
+use crate::gemm::{Bias, Epilogue, GemmPlan, PackedB, QPackedB, Requant};
+
+use super::stats::ServeStats;
+
+/// Identity of a weight matrix: caller-provided (registration) or a
+/// content hash of the operand bytes.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct WeightId(pub u64);
+
+/// Cache key of one packed weight: who it is and how it was packed.
+/// `transb`/`k`/`n` ride along because one logical weight may legally be
+/// packed under several layouts (e.g. `Bᵀ` in one call, `B` in another).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct WeightKey {
+    /// Weight identity (registration ID or content hash).
+    pub id: WeightId,
+    /// Whether the operand is transposed (`op(B) = Bᵀ`).
+    pub transb: bool,
+    /// Logical rows of `op(B)`.
+    pub k: usize,
+    /// Logical columns of `op(B)`.
+    pub n: usize,
+}
+
+/// Cache key of one [`GemmPlan`]: the full problem statement a plan
+/// freezes. Two requests that agree on every field can share one plan
+/// (and therefore one kernel/geometry/thread-split decision).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct PlanKey {
+    /// Output rows.
+    pub m: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Dot-product length.
+    pub k: usize,
+    /// `op(A) = Aᵀ`.
+    pub transa: bool,
+    /// `op(B) = Bᵀ`.
+    pub transb: bool,
+    /// `alpha` bit pattern (f32).
+    pub alpha: u32,
+    /// `beta` bit pattern (f32).
+    pub beta: u32,
+    /// Leading dimension of `A`.
+    pub lda: usize,
+    /// Leading dimension of `B`.
+    pub ldb: usize,
+    /// Leading dimension of `C`.
+    pub ldc: usize,
+    /// Epilogue class fingerprint ([`epilogue_class`]; 0 = none).
+    pub epilogue: u64,
+}
+
+/// FNV-1a over a byte stream (the offline build carries no hashing
+/// crates; FNV is tiny, deterministic and good enough for cache keys —
+/// caller-provided [`WeightId`]s stay authoritative where collisions
+/// must be impossible).
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a seed.
+const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Content-derived [`WeightId`] for an f32 operand slice (the whole
+/// slice, padding included, plus the layout dims — so two calls collide
+/// only when the bytes *and* the view over them agree).
+pub fn content_id_f32(b: &[f32], transb: Transpose, k: usize, n: usize, ldb: usize) -> WeightId {
+    let mut h = fnv1a(FNV_SEED, &[transb as u8 + 1]);
+    for d in [k, n, ldb] {
+        h = fnv1a(h, &(d as u64).to_le_bytes());
+    }
+    for v in b {
+        h = fnv1a(h, &v.to_bits().to_le_bytes());
+    }
+    WeightId(h)
+}
+
+/// Content-derived [`WeightId`] for an i8 operand slice.
+pub fn content_id_i8(b: &[i8], transb: Transpose, k: usize, n: usize, ldb: usize) -> WeightId {
+    let mut h = fnv1a(FNV_SEED, &[transb as u8 + 9]);
+    for d in [k, n, ldb] {
+        h = fnv1a(h, &(d as u64).to_le_bytes());
+    }
+    for v in b {
+        h = fnv1a(h, &[*v as u8]);
+    }
+    WeightId(h)
+}
+
+/// Fingerprint of an epilogue's *content* (bias variant and values,
+/// activation, clamp): requests share a cached plan only when this
+/// matches, because the plan embeds the epilogue. `None` maps to 0.
+pub fn epilogue_class(ep: Option<&Epilogue>) -> u64 {
+    let Some(e) = ep else { return 0 };
+    let mut h = FNV_SEED;
+    let (tag, values): (u8, &[f32]) = match &e.bias {
+        Bias::None => (1, &[]),
+        Bias::Row(v) => (2, v),
+        Bias::Col(v) => (3, v),
+    };
+    h = fnv1a(h, &[tag]);
+    for v in values {
+        h = fnv1a(h, &v.to_bits().to_le_bytes());
+    }
+    h = fnv1a(h, &[e.activation as u8 + 1]);
+    if let Some((lo, hi)) = e.clamp {
+        h = fnv1a(h, &lo.to_bits().to_le_bytes());
+        h = fnv1a(h, &hi.to_bits().to_le_bytes());
+    }
+    // Reserve 0 for "no epilogue" so PlanKey::epilogue == 0 is unambiguous.
+    h.max(1)
+}
+
+/// Fingerprint of a [`Requant`] descriptor's content (scales, zero
+/// points, bias, activation) — the quantized analogue of
+/// [`epilogue_class`]: requests share a batch only when their fused
+/// requantization is identical.
+pub fn requant_class(rq: &Requant) -> u64 {
+    let mut h = FNV_SEED;
+    for v in &rq.a_scale {
+        h = fnv1a(h, &v.to_bits().to_le_bytes());
+    }
+    h = fnv1a(h, &[0xa5]);
+    for z in &rq.a_zp {
+        h = fnv1a(h, &z.to_le_bytes());
+    }
+    h = fnv1a(h, &[0xb6]);
+    for v in &rq.b_scale {
+        h = fnv1a(h, &v.to_bits().to_le_bytes());
+    }
+    if let Some(bias) = &rq.bias {
+        h = fnv1a(h, &[0xc7]);
+        for v in bias {
+            h = fnv1a(h, &v.to_bits().to_le_bytes());
+        }
+    }
+    h = fnv1a(h, &[rq.activation as u8 + 1]);
+    h.max(1)
+}
+
+/// One cached value plus its last-touch tick (the LRU clock).
+struct Entry<V> {
+    value: V,
+    tick: u64,
+}
+
+/// The three keyed maps behind one lock, sharing one LRU clock.
+#[derive(Default)]
+struct Inner {
+    tick: u64,
+    plans: HashMap<PlanKey, Entry<GemmPlan>>,
+    packs: HashMap<WeightKey, Entry<PackedB>>,
+    qpacks: HashMap<WeightKey, Entry<QPackedB>>,
+}
+
+impl Inner {
+    fn len(&self) -> usize {
+        self.plans.len() + self.packs.len() + self.qpacks.len()
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+}
+
+/// In-flight pack cells: one [`OnceLock`] per missing key, so a miss
+/// stampede elects exactly one packer.
+type Pending<V> = Mutex<HashMap<WeightKey, Arc<OnceLock<Result<V, BlasError>>>>>;
+
+/// The capacity-bounded LRU cache of plans and packed weights (see the
+/// module docs for keying and eviction rules). All methods take `&self`;
+/// the cache is shared via `Arc` between the service and any number of
+/// direct callers.
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+    pending_packs: Pending<PackedB>,
+    pending_qpacks: Pending<QPackedB>,
+    capacity: usize,
+    stats: Arc<ServeStats>,
+}
+
+impl PlanCache {
+    /// New cache bounded to `capacity` total entries (plans + packs;
+    /// `0` disables storage entirely — every lookup misses, which is the
+    /// repack-every-call baseline the bench measures against).
+    pub fn new(capacity: usize, stats: Arc<ServeStats>) -> Self {
+        Self {
+            inner: Mutex::new(Inner::default()),
+            pending_packs: Mutex::new(HashMap::new()),
+            pending_qpacks: Mutex::new(HashMap::new()),
+            capacity,
+            stats,
+        }
+    }
+
+    /// Counters shared with this cache.
+    pub fn stats(&self) -> &Arc<ServeStats> {
+        &self.stats
+    }
+
+    /// Total entries held (plans + packed weights).
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Whether the cache holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The joint entry bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Bytes held by cached packed panels (diagnostic; plans are
+    /// negligible next to panel storage).
+    pub fn bytes(&self) -> usize {
+        let inner = self.lock();
+        inner.packs.values().map(|e| e.value.bytes()).sum::<usize>()
+            + inner.qpacks.values().map(|e| e.value.bytes()).sum::<usize>()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Fetch the plan for `key`, building (and caching) it on a miss.
+    /// Plan construction is cheap relative to packing, so misses build
+    /// under the cache lock — no stampede cell needed.
+    pub fn get_or_insert_plan(
+        &self,
+        key: PlanKey,
+        build: impl FnOnce() -> Result<GemmPlan, BlasError>,
+    ) -> Result<GemmPlan, BlasError> {
+        let mut inner = self.lock();
+        let tick = inner.next_tick();
+        if let Some(e) = inner.plans.get_mut(&key) {
+            e.tick = tick;
+            ServeStats::bump(&self.stats.plan_hits);
+            return Ok(e.value.clone());
+        }
+        ServeStats::bump(&self.stats.plan_misses);
+        let plan = build()?;
+        if self.capacity > 0 {
+            inner.plans.insert(key, Entry { value: plan.clone(), tick });
+            self.evict_over_capacity(&mut inner);
+        }
+        Ok(plan)
+    }
+
+    /// Fetch the packed f32 weight for `key`, packing on a miss. When
+    /// several threads miss the same key at once, exactly one runs
+    /// `pack`; the rest block on its cell and reuse the result (counted
+    /// as hits — they did not pack).
+    pub fn get_or_pack_b(
+        &self,
+        key: WeightKey,
+        pack: impl FnOnce() -> Result<PackedB, BlasError>,
+    ) -> Result<PackedB, BlasError> {
+        if let Some(v) = self.lookup_pack_b(&key) {
+            ServeStats::bump(&self.stats.pack_hits);
+            return Ok(v);
+        }
+        let cell = {
+            let mut pending = self.pending_packs.lock().unwrap_or_else(|e| e.into_inner());
+            Arc::clone(pending.entry(key).or_default())
+        };
+        let mut won = false;
+        let result = cell
+            .get_or_init(|| {
+                won = true;
+                pack()
+            })
+            .clone();
+        if won {
+            ServeStats::bump(&self.stats.pack_misses);
+            if let Ok(v) = &result {
+                self.insert_pack_b(key, v.clone());
+            }
+            self.pending_packs.lock().unwrap_or_else(|e| e.into_inner()).remove(&key);
+        } else {
+            ServeStats::bump(&self.stats.pack_hits);
+        }
+        result
+    }
+
+    /// Quantized twin of [`get_or_pack_b`](Self::get_or_pack_b).
+    pub fn get_or_qpack_b(
+        &self,
+        key: WeightKey,
+        pack: impl FnOnce() -> Result<QPackedB, BlasError>,
+    ) -> Result<QPackedB, BlasError> {
+        if let Some(v) = self.lookup_qpack_b(&key) {
+            ServeStats::bump(&self.stats.pack_hits);
+            return Ok(v);
+        }
+        let cell = {
+            let mut pending = self.pending_qpacks.lock().unwrap_or_else(|e| e.into_inner());
+            Arc::clone(pending.entry(key).or_default())
+        };
+        let mut won = false;
+        let result = cell
+            .get_or_init(|| {
+                won = true;
+                pack()
+            })
+            .clone();
+        if won {
+            ServeStats::bump(&self.stats.pack_misses);
+            if let Ok(v) = &result {
+                self.insert_qpack_b(key, v.clone());
+            }
+            self.pending_qpacks.lock().unwrap_or_else(|e| e.into_inner()).remove(&key);
+        } else {
+            ServeStats::bump(&self.stats.pack_hits);
+        }
+        result
+    }
+
+    fn lookup_pack_b(&self, key: &WeightKey) -> Option<PackedB> {
+        let mut inner = self.lock();
+        let tick = inner.next_tick();
+        inner.packs.get_mut(key).map(|e| {
+            e.tick = tick;
+            e.value.clone()
+        })
+    }
+
+    fn lookup_qpack_b(&self, key: &WeightKey) -> Option<QPackedB> {
+        let mut inner = self.lock();
+        let tick = inner.next_tick();
+        inner.qpacks.get_mut(key).map(|e| {
+            e.tick = tick;
+            e.value.clone()
+        })
+    }
+
+    fn insert_pack_b(&self, key: WeightKey, value: PackedB) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut inner = self.lock();
+        let tick = inner.next_tick();
+        inner.packs.insert(key, Entry { value, tick });
+        self.evict_over_capacity(&mut inner);
+    }
+
+    fn insert_qpack_b(&self, key: WeightKey, value: QPackedB) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut inner = self.lock();
+        let tick = inner.next_tick();
+        inner.qpacks.insert(key, Entry { value, tick });
+        self.evict_over_capacity(&mut inner);
+    }
+
+    /// Drop every cached pack (f32 and quantized, pending cells
+    /// included) whose key carries `id`. Returns the number of stored
+    /// entries removed. Lookups *after* this call never see the old
+    /// bytes; callers already blocked on an in-flight pack of the old
+    /// generation still receive it — invalidation orders with subsequent
+    /// lookups, not concurrent ones.
+    pub fn invalidate_weight(&self, id: WeightId) -> usize {
+        let mut removed = 0;
+        {
+            let mut inner = self.lock();
+            let before = inner.packs.len() + inner.qpacks.len();
+            inner.packs.retain(|k, _| k.id != id);
+            inner.qpacks.retain(|k, _| k.id != id);
+            removed = before - (inner.packs.len() + inner.qpacks.len());
+        }
+        self.pending_packs.lock().unwrap_or_else(|e| e.into_inner()).retain(|k, _| k.id != id);
+        self.pending_qpacks.lock().unwrap_or_else(|e| e.into_inner()).retain(|k, _| k.id != id);
+        ServeStats::add(&self.stats.invalidations, removed as u64);
+        removed
+    }
+
+    /// Evict least-recently-used entries (across all three maps — one
+    /// shared clock) until the joint bound holds.
+    fn evict_over_capacity(&self, inner: &mut Inner) {
+        while inner.len() > self.capacity {
+            let plan_lru = inner.plans.iter().min_by_key(|(_, e)| e.tick).map(|(k, e)| (*k, e.tick));
+            let pack_lru = inner.packs.iter().min_by_key(|(_, e)| e.tick).map(|(k, e)| (*k, e.tick));
+            let qpack_lru =
+                inner.qpacks.iter().min_by_key(|(_, e)| e.tick).map(|(k, e)| (*k, e.tick));
+            let oldest = [
+                plan_lru.map(|(_, t)| t),
+                pack_lru.map(|(_, t)| t),
+                qpack_lru.map(|(_, t)| t),
+            ]
+            .into_iter()
+            .flatten()
+            .min();
+            let Some(oldest) = oldest else { return };
+            if plan_lru.is_some_and(|(_, t)| t == oldest) {
+                inner.plans.remove(&plan_lru.unwrap().0);
+            } else if pack_lru.is_some_and(|(_, t)| t == oldest) {
+                inner.packs.remove(&pack_lru.unwrap().0);
+            } else if let Some((k, _)) = qpack_lru {
+                inner.qpacks.remove(&k);
+            }
+            ServeStats::bump(&self.stats.evictions);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{DispatchConfig, GemmContext};
+
+    fn ctx() -> GemmContext {
+        GemmContext::new(DispatchConfig { threads: 1, ..DispatchConfig::default() })
+    }
+
+    fn wkey(id: u64, k: usize, n: usize) -> WeightKey {
+        WeightKey { id: WeightId(id), transb: false, k, n }
+    }
+
+    fn pack(ctx: &GemmContext, k: usize, n: usize, seed: f32) -> PackedB {
+        let b: Vec<f32> = (0..k * n).map(|i| seed + i as f32 * 0.25).collect();
+        ctx.pack_b(Transpose::No, k, n, &b, n).unwrap()
+    }
+
+    #[test]
+    fn eviction_is_least_recently_used() {
+        crate::util::testkit::hermetic_tune_cache();
+        let ctx = ctx();
+        let cache = PlanCache::new(2, Arc::new(ServeStats::default()));
+        cache.get_or_pack_b(wkey(1, 8, 8), || Ok(pack(&ctx, 8, 8, 1.0))).unwrap();
+        cache.get_or_pack_b(wkey(2, 8, 8), || Ok(pack(&ctx, 8, 8, 2.0))).unwrap();
+        // Touch 1 so 2 becomes the LRU victim.
+        cache.get_or_pack_b(wkey(1, 8, 8), || panic!("must hit")).unwrap();
+        cache.get_or_pack_b(wkey(3, 8, 8), || Ok(pack(&ctx, 8, 8, 3.0))).unwrap();
+        assert_eq!(cache.len(), 2);
+        // 1 survived (hit); 2 was evicted (repack runs); 3 is resident.
+        cache.get_or_pack_b(wkey(1, 8, 8), || panic!("1 must survive")).unwrap();
+        cache.get_or_pack_b(wkey(3, 8, 8), || panic!("3 must be resident")).unwrap();
+        let mut repacked = false;
+        cache
+            .get_or_pack_b(wkey(2, 8, 8), || {
+                repacked = true;
+                Ok(pack(&ctx, 8, 8, 2.0))
+            })
+            .unwrap();
+        assert!(repacked, "2 must have been evicted as the LRU entry");
+        let snap = cache.stats().snapshot();
+        assert!(snap.evictions >= 2, "inserting 4th and repacking 2 evicts twice");
+    }
+
+    #[test]
+    fn capacity_zero_disables_storage() {
+        crate::util::testkit::hermetic_tune_cache();
+        let ctx = ctx();
+        let cache = PlanCache::new(0, Arc::new(ServeStats::default()));
+        for _ in 0..3 {
+            cache.get_or_pack_b(wkey(7, 8, 8), || Ok(pack(&ctx, 8, 8, 7.0))).unwrap();
+        }
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().snapshot().pack_misses, 3);
+    }
+
+    #[test]
+    fn hit_shares_storage_instead_of_copying() {
+        crate::util::testkit::hermetic_tune_cache();
+        let ctx = ctx();
+        let cache = PlanCache::new(8, Arc::new(ServeStats::default()));
+        let first = cache.get_or_pack_b(wkey(5, 16, 16), || Ok(pack(&ctx, 16, 16, 5.0))).unwrap();
+        let second = cache.get_or_pack_b(wkey(5, 16, 16), || panic!("must hit")).unwrap();
+        assert!(first.shares_storage(&second), "a hit must be an Arc bump, not a repack/copy");
+    }
+
+    #[test]
+    fn invalidation_drops_both_tiers_and_counts() {
+        crate::util::testkit::hermetic_tune_cache();
+        let ctx = ctx();
+        let cache = PlanCache::new(8, Arc::new(ServeStats::default()));
+        cache.get_or_pack_b(wkey(9, 8, 8), || Ok(pack(&ctx, 8, 8, 9.0))).unwrap();
+        let qb: Vec<i8> = (0..64).map(|i| (i % 7) as i8 - 3).collect();
+        cache
+            .get_or_qpack_b(wkey(9, 8, 8), || ctx.qpack_b(Transpose::No, 8, 8, &qb, 8))
+            .unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.invalidate_weight(WeightId(9)), 2);
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().snapshot().invalidations, 2);
+    }
+
+    #[test]
+    fn epilogue_class_separates_different_biases() {
+        let a = Epilogue::new().bias_row(vec![1.0, 2.0]);
+        let b = Epilogue::new().bias_row(vec![1.0, 2.5]);
+        let c = Epilogue::new().bias_row(vec![1.0, 2.0]);
+        assert_ne!(epilogue_class(Some(&a)), epilogue_class(Some(&b)));
+        assert_eq!(epilogue_class(Some(&a)), epilogue_class(Some(&c)));
+        assert_eq!(epilogue_class(None), 0);
+        assert_ne!(epilogue_class(Some(&Epilogue::new())), 0);
+    }
+
+    #[test]
+    fn content_ids_differ_on_bytes_and_layout() {
+        let b1 = vec![1.0f32; 12];
+        let mut b2 = b1.clone();
+        b2[7] = 1.5;
+        assert_ne!(content_id_f32(&b1, Transpose::No, 3, 4, 4), content_id_f32(&b2, Transpose::No, 3, 4, 4));
+        assert_ne!(
+            content_id_f32(&b1, Transpose::No, 3, 4, 4),
+            content_id_f32(&b1, Transpose::Yes, 3, 4, 4)
+        );
+        assert_ne!(
+            content_id_f32(&b1, Transpose::No, 3, 4, 4),
+            content_id_f32(&b1, Transpose::No, 4, 3, 3)
+        );
+    }
+}

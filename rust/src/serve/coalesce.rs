@@ -1,0 +1,166 @@
+//! Request coalescing: the bounded queue that folds identical-problem
+//! requests into one batch.
+//!
+//! Two requests coalesce when they would execute **the exact same
+//! plan against the exact same packed weight** — same job class
+//! (f32 / quantized-accumulate / quantized-requant), same [`PlanKey`]
+//! (shape, transposes, scalars, leading dims, epilogue class) and same
+//! [`WeightKey`] (weight identity + layout). That strict key is what
+//! makes coalescing invisible: the batch shares one cached plan and one
+//! packed `B`, and each member runs the same prepacked driver it would
+//! have run alone, so results are bitwise identical to one-shot calls
+//! (the repo's prepacked-execution guarantee).
+//!
+//! The queue itself is a plain `VecDeque` behind the service lock with a
+//! hard capacity — backpressure, not an unbounded buffer. Batch
+//! extraction pops the head and then *removes* every queued job with the
+//! head's key (up to the batch bound), preserving FIFO order among the
+//! survivors, so coalescing never reorders unrelated traffic.
+
+use std::collections::VecDeque;
+
+use super::cache::{PlanKey, WeightKey};
+
+/// Which execution path a job takes (jobs only coalesce within a class).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub(crate) enum JobClass {
+    /// f32 GEMM through a cached [`crate::gemm::GemmPlan`].
+    Sgemm,
+    /// Quantized `u8×i8→i32` accumulate.
+    QgemmAccum,
+    /// Quantized with fused requantization to f32.
+    QgemmRequant,
+}
+
+/// The full coalescing identity of one queued job.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub(crate) struct CoalesceKey {
+    /// Execution path.
+    pub class: JobClass,
+    /// Complete problem statement (shape/layout/scalars/epilogue).
+    pub plan: PlanKey,
+    /// Packed-weight identity (registration ID or content hash).
+    pub weight: WeightKey,
+}
+
+/// Bounded FIFO with keyed batch extraction.
+pub(crate) struct CoalesceQueue<J> {
+    items: VecDeque<J>,
+    capacity: usize,
+}
+
+impl<J> CoalesceQueue<J> {
+    pub(crate) fn new(capacity: usize) -> Self {
+        Self { items: VecDeque::with_capacity(capacity.min(1024)), capacity }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub(crate) fn is_full(&self) -> bool {
+        self.items.len() >= self.capacity
+    }
+
+    /// Enqueue, or hand the job back when full (the caller decides
+    /// whether to block or reject — that is the backpressure policy,
+    /// not the queue's).
+    pub(crate) fn push(&mut self, job: J) -> Result<(), J> {
+        if self.is_full() {
+            return Err(job);
+        }
+        self.items.push_back(job);
+        Ok(())
+    }
+
+    /// Pop the head job plus every queued job sharing its key, up to
+    /// `max` jobs total, preserving the relative order of everything
+    /// left behind. Returns an empty vec only when the queue is empty.
+    pub(crate) fn pop_batch(
+        &mut self,
+        max: usize,
+        key_of: impl Fn(&J) -> CoalesceKey,
+    ) -> Vec<J> {
+        let Some(head) = self.items.pop_front() else {
+            return Vec::new();
+        };
+        let key = key_of(&head);
+        let mut batch = vec![head];
+        let mut i = 0;
+        while i < self.items.len() && batch.len() < max.max(1) {
+            if key_of(&self.items[i]) == key {
+                // O(len) middle removal; queues are tens of entries.
+                batch.push(self.items.remove(i).expect("index in bounds"));
+            } else {
+                i += 1;
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::cache::WeightId;
+
+    fn key(tag: u64) -> CoalesceKey {
+        CoalesceKey {
+            class: JobClass::Sgemm,
+            plan: PlanKey {
+                m: 8,
+                n: 8,
+                k: 8,
+                transa: false,
+                transb: false,
+                alpha: 1.0f32.to_bits(),
+                beta: 0.0f32.to_bits(),
+                lda: 8,
+                ldb: 8,
+                ldc: 8,
+                epilogue: 0,
+            },
+            weight: WeightKey { id: WeightId(tag), transb: false, k: 8, n: 8 },
+        }
+    }
+
+    #[test]
+    fn pop_batch_folds_matching_jobs_and_keeps_order() {
+        let mut q = CoalesceQueue::new(16);
+        for job in [(key(1), 'a'), (key(2), 'b'), (key(1), 'c'), (key(3), 'd'), (key(1), 'e')] {
+            q.push(job).map_err(|_| ()).unwrap();
+        }
+        let batch = q.pop_batch(16, |j| j.0);
+        assert_eq!(batch.iter().map(|j| j.1).collect::<String>(), "ace");
+        assert_eq!(q.len(), 2);
+        let batch = q.pop_batch(16, |j| j.0);
+        assert_eq!(batch.iter().map(|j| j.1).collect::<String>(), "b");
+        let batch = q.pop_batch(16, |j| j.0);
+        assert_eq!(batch.iter().map(|j| j.1).collect::<String>(), "d");
+        assert!(q.pop_batch(16, |j| j.0).is_empty());
+    }
+
+    #[test]
+    fn pop_batch_respects_the_batch_bound() {
+        let mut q = CoalesceQueue::new(16);
+        for tag in 0..6 {
+            q.push((key(9), tag)).map_err(|_| ()).unwrap();
+        }
+        let batch = q.pop_batch(4, |j| j.0);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn push_rejects_when_full() {
+        let mut q = CoalesceQueue::new(2);
+        assert!(q.push((key(1), 0)).is_ok());
+        assert!(q.push((key(1), 1)).is_ok());
+        assert!(q.push((key(1), 2)).is_err());
+        assert!(q.is_full());
+    }
+}

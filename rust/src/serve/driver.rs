@@ -1,0 +1,281 @@
+//! Saturation driver: many client threads pushing a Zipfian shape mix
+//! through a [`GemmService`].
+//!
+//! Serving traffic is skewed — a few hot shapes carry most of the load,
+//! with a long tail of cold ones. The driver models that with a Zipf
+//! distribution over a shape menu (`weight(rank r) ∝ 1/(r+1)^s`): rank 0
+//! dominates, later ranks thin out, so a capacity-bounded cache sees
+//! both the hits that matter and the churn that evicts.
+//!
+//! Each client thread submits blocking requests back-to-back and clocks
+//! the full round trip (admission queueing + coalescing linger +
+//! execution). The merged latencies become the report's p50/p95/p99 —
+//! client-observed numbers, the quantity a serving SLO is written
+//! against. The same driver backs `benches/serve_saturation.rs` and the
+//! `emmerald serve` CLI subcommand; the two bench arms differ only in
+//! the service they drive (caching vs `cache_capacity: 0`) and the
+//! operand mode (registered weights vs inline bytes).
+
+use std::time::Instant;
+
+use crate::util::prng::Pcg32;
+use crate::util::stats::{percentile_sorted, Summary};
+
+use super::service::{FOperand, GemmService, SgemmRequest};
+use super::stats::StatsSnapshot;
+
+/// One GEMM shape in the driver's menu.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shape {
+    /// Output rows (the "batch" axis of a serving workload).
+    pub m: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Dot-product length.
+    pub k: usize,
+}
+
+/// How clients present the `B` operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightMode {
+    /// Weights are registered once up front; requests carry only an ID.
+    /// This is the cache-friendly serving posture.
+    Registered,
+    /// Every request ships the weight bytes inline. Against a
+    /// zero-capacity cache this is the repack-every-call baseline.
+    Inline,
+}
+
+/// Driver knobs.
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    /// Concurrent client threads.
+    pub clients: usize,
+    /// Requests each client submits.
+    pub requests_per_client: usize,
+    /// Shape menu, hot-first (rank 0 gets the most traffic).
+    pub shapes: Vec<Shape>,
+    /// Zipf skew exponent `s` (1.0–1.5 is web-like; larger = hotter head).
+    pub zipf_s: f64,
+    /// Operand mode (see [`WeightMode`]).
+    pub mode: WeightMode,
+    /// PRNG seed (same seed + same menu ⇒ same request sequence, so two
+    /// arms of a comparison see identical traffic).
+    pub seed: u64,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        Self {
+            clients: 4,
+            requests_per_client: 64,
+            shapes: default_shapes(),
+            zipf_s: 1.2,
+            mode: WeightMode::Registered,
+            seed: 0x5e21,
+        }
+    }
+}
+
+/// The default menu: skinny-`m` serving shapes (small activation
+/// batches against wide weights), where packing is a large fraction of
+/// the work — the regime a packed-weight cache exists for.
+pub fn default_shapes() -> Vec<Shape> {
+    vec![
+        Shape { m: 8, n: 512, k: 512 },
+        Shape { m: 4, n: 768, k: 256 },
+        Shape { m: 16, n: 256, k: 512 },
+        Shape { m: 8, n: 384, k: 384 },
+        Shape { m: 4, n: 256, k: 256 },
+        Shape { m: 32, n: 512, k: 128 },
+    ]
+}
+
+/// What the driver measured.
+#[derive(Clone, Debug)]
+pub struct DriverReport {
+    /// Requests answered successfully.
+    pub completed: usize,
+    /// Requests answered with an error.
+    pub failed: usize,
+    /// Wall-clock span of the whole run, seconds.
+    pub elapsed: f64,
+    /// Completed requests per second over the run.
+    pub throughput: f64,
+    /// Client-observed round-trip latencies, seconds, sorted ascending.
+    pub latencies: Vec<f64>,
+    /// Service counters at the end of the run.
+    pub stats: StatsSnapshot,
+}
+
+impl DriverReport {
+    /// Latency percentile (`p` in 0–100), seconds.
+    pub fn latency_p(&self, p: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        percentile_sorted(&self.latencies, p)
+    }
+
+    /// Full latency summary (panics on an empty run).
+    pub fn latency_summary(&self) -> Summary {
+        Summary::from(&self.latencies)
+    }
+}
+
+/// Draw a Zipf rank in `0..n`: inverse-CDF over `1/(r+1)^s`.
+fn zipf_rank(u: f64, cdf: &[f64]) -> usize {
+    match cdf.iter().position(|&c| u < c) {
+        Some(i) => i,
+        None => cdf.len() - 1,
+    }
+}
+
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let weights: Vec<f64> = (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(s)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    weights
+        .iter()
+        .map(|w| {
+            acc += w / total;
+            acc
+        })
+        .collect()
+}
+
+/// Deterministic weight bytes for shape `idx` of the menu (both arms of
+/// a comparison regenerate the same bytes from the same seed).
+fn weight_bytes(cfg: &DriverConfig, idx: usize, shape: Shape) -> Vec<f32> {
+    let mut rng = Pcg32::new(cfg.seed ^ (0xb0 + idx as u64));
+    let mut b = vec![0.0f32; shape.k * shape.n];
+    rng.fill_f32(&mut b, -1.0, 1.0);
+    b
+}
+
+/// Run the saturation workload against `svc` and report client-observed
+/// latency and throughput. In [`WeightMode::Registered`] the driver
+/// registers the menu's weights under IDs `0xd0 + rank` first (replacing
+/// any previous registration of those IDs).
+pub fn run_driver(svc: &GemmService, cfg: &DriverConfig) -> DriverReport {
+    assert!(!cfg.shapes.is_empty(), "driver needs at least one shape");
+    let weights: Vec<Vec<f32>> =
+        cfg.shapes.iter().enumerate().map(|(i, &s)| weight_bytes(cfg, i, s)).collect();
+    let ids: Vec<_> = match cfg.mode {
+        WeightMode::Registered => cfg
+            .shapes
+            .iter()
+            .zip(&weights)
+            .enumerate()
+            .map(|(i, (s, w))| Some(svc.register_weight(0xd0 + i as u64, w.clone(), s.n)))
+            .collect(),
+        WeightMode::Inline => vec![None; cfg.shapes.len()],
+    };
+    let cdf = zipf_cdf(cfg.shapes.len(), cfg.zipf_s);
+
+    let start = Instant::now();
+    let mut per_client: Vec<(Vec<f64>, usize)> = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|client| {
+                let (weights, ids, cdf) = (&weights, &ids, &cdf);
+                scope.spawn(move || {
+                    let mut rng = Pcg32::new(cfg.seed.wrapping_add(1 + client as u64));
+                    // One activation buffer per shape, generated lazily and
+                    // reused — clients resend hot activations, they don't
+                    // re-randomize the world every call.
+                    let mut acts: Vec<Option<Vec<f32>>> = vec![None; cfg.shapes.len()];
+                    let mut lat = Vec::with_capacity(cfg.requests_per_client);
+                    let mut failed = 0usize;
+                    for _ in 0..cfg.requests_per_client {
+                        let rank = zipf_rank(rng.f64(), cdf);
+                        let shape = cfg.shapes[rank];
+                        let a = acts[rank]
+                            .get_or_insert_with(|| {
+                                let mut a = vec![0.0f32; shape.m * shape.k];
+                                rng.fill_f32(&mut a, -1.0, 1.0);
+                                a
+                            })
+                            .clone();
+                        let b = match ids[rank] {
+                            Some(id) => FOperand::Registered(id),
+                            None => FOperand::Inline(weights[rank].clone()),
+                        };
+                        let t0 = Instant::now();
+                        let reply = svc
+                            .submit(SgemmRequest::new(shape.m, shape.n, shape.k, a, b))
+                            .and_then(|t| t.wait());
+                        match reply {
+                            Ok(_) => lat.push(t0.elapsed().as_secs_f64()),
+                            Err(_) => failed += 1,
+                        }
+                    }
+                    (lat, failed)
+                })
+            })
+            .collect();
+        for h in handles {
+            per_client.push(h.join().expect("driver client panicked"));
+        }
+    });
+    let elapsed = start.elapsed().as_secs_f64();
+
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut failed = 0;
+    for (lat, f) in per_client {
+        latencies.extend(lat);
+        failed += f;
+    }
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    let completed = latencies.len();
+    DriverReport {
+        completed,
+        failed,
+        elapsed,
+        throughput: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+        latencies,
+        stats: svc.stats(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{DispatchConfig, GemmContext};
+    use crate::serve::ServeConfig;
+    use crate::util::testkit::hermetic_tune_cache;
+
+    #[test]
+    fn zipf_cdf_is_monotone_and_head_heavy() {
+        let cdf = zipf_cdf(6, 1.2);
+        assert_eq!(cdf.len(), 6);
+        assert!(cdf.windows(2).all(|w| w[0] < w[1]));
+        assert!((cdf[5] - 1.0).abs() < 1e-12);
+        assert!(cdf[0] > 1.0 / 6.0, "rank 0 must be hotter than uniform");
+        assert_eq!(zipf_rank(0.0, &cdf), 0);
+        assert_eq!(zipf_rank(0.9999, &cdf), 5);
+    }
+
+    #[test]
+    fn driver_round_trips_a_small_workload() {
+        hermetic_tune_cache();
+        let ctx = GemmContext::new(DispatchConfig { threads: 1, ..DispatchConfig::default() });
+        let svc = crate::serve::GemmService::new(ctx, ServeConfig::default());
+        let cfg = DriverConfig {
+            clients: 2,
+            requests_per_client: 6,
+            shapes: vec![Shape { m: 4, n: 16, k: 16 }, Shape { m: 8, n: 16, k: 8 }],
+            ..DriverConfig::default()
+        };
+        let report = run_driver(&svc, &cfg);
+        assert_eq!(report.completed, 12);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.stats.completed, 12);
+        assert!(report.latency_p(99.0) >= report.latency_p(50.0));
+        assert!(report.stats.pack_misses >= 2, "each shape packs at least once");
+        assert!(
+            report.stats.pack_hits > 0,
+            "repeat traffic against registered weights must hit the cache"
+        );
+    }
+}

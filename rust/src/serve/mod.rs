@@ -1,0 +1,50 @@
+//! GEMM-as-a-service: concurrent request admission, coalescing, and a
+//! shape-keyed plan / packed-weight cache.
+//!
+//! The paper's kernels assume a caller that owns the machine. A serving
+//! process does not: many threads want GEMMs *now*, the same weight
+//! matrices recur millions of times, and total parallelism must stay
+//! inside one thread budget. This module is that front end, built on
+//! the planned-execution API ([`crate::gemm::GemmContext`]):
+//!
+//! * [`GemmService`] — admission control (bounded queue: [`GemmService::submit`]
+//!   blocks for space, [`GemmService::try_submit`] bounces with
+//!   [`ServeError::Saturated`]), a single dispatcher thread driving the
+//!   context's worker pool, and weight registration.
+//! * [`coalesce`] — requests that would execute the exact same plan
+//!   against the exact same weight fold into one batch; each member
+//!   still runs the prepacked driver it would have run alone, so
+//!   coalesced results are bitwise identical to one-shot calls.
+//! * [`PlanCache`] — capacity-bounded LRU over [`crate::gemm::GemmPlan`]s
+//!   and packed weights ([`crate::gemm::PackedB`] /
+//!   [`crate::gemm::QPackedB`]), keyed by shape/layout/epilogue-class and
+//!   weight identity, stampede-safe, with hit/miss/eviction/invalidation
+//!   counters ([`ServeStats`]).
+//! * [`driver`] — the Zipfian saturation workload behind
+//!   `benches/serve_saturation.rs` and `emmerald serve`, reporting
+//!   client-observed p50/p95/p99 latency and throughput.
+//!
+//! ```
+//! use emmerald::serve::{FOperand, GemmService, SgemmRequest};
+//!
+//! let svc = GemmService::global();
+//! let (m, n, k) = (4, 8, 8);
+//! let id = svc.register_weight(1, vec![0.5f32; k * n], n);
+//! let req = SgemmRequest::new(m, n, k, vec![1.0f32; m * k], FOperand::Registered(id));
+//! let y = svc.submit(req).unwrap().wait().unwrap();
+//! assert_eq!(y.len(), m * n);
+//! ```
+
+pub mod cache;
+pub mod coalesce;
+pub mod driver;
+pub mod service;
+pub mod stats;
+
+pub use cache::{content_id_f32, content_id_i8, epilogue_class, PlanCache, PlanKey, WeightId, WeightKey};
+pub use driver::{default_shapes, run_driver, DriverConfig, DriverReport, Shape, WeightMode};
+pub use service::{
+    FOperand, GemmService, PlanSpec, QOperand, QgemmOut, QgemmReply, QgemmRequest, ServeConfig,
+    ServeError, SgemmReply, SgemmRequest, Ticket,
+};
+pub use stats::{ServeStats, StatsSnapshot};

@@ -1,0 +1,1113 @@
+//! The GEMM service front end: admission, dispatch, execution.
+//!
+//! [`GemmService`] accepts GEMM/QGEMM requests from any number of caller
+//! threads and executes them on **one** dispatcher thread that drives the
+//! context's worker pool — so total compute parallelism stays inside the
+//! process-wide thread budget ([`crate::gemm::GemmContext::threads`]) no
+//! matter how many clients submit at once. Admission control is a
+//! bounded queue: [`submit`](GemmService::submit) blocks for space
+//! (backpressure), [`try_submit`](GemmService::try_submit) returns
+//! [`ServeError::Saturated`] instead.
+//!
+//! The dispatcher pops the head request, folds every queued request with
+//! the same [coalescing key](super::coalesce) into one batch (optionally
+//! lingering for `coalesce_window` to let more arrive), resolves one
+//! cached plan and one cached packed `B` for the batch, and runs each
+//! member through the prepacked driver. Because every member executes
+//! the same plan against the same packed operand it would have used
+//! alone, coalesced results are **bitwise identical** to one-shot calls.
+//!
+//! Weights can be registered up front ([`register_weight`]
+//! (GemmService::register_weight)): the service keeps the raw bytes (so
+//! evicted packs can be rebuilt) and requests reference them by
+//! [`WeightId`] — skipping both the per-request content hash and the
+//! pack. Re-registering an ID invalidates every cache entry packed from
+//! the old bytes before the new ones become visible.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::blas::{BlasError, MatMut, MatRef, Transpose};
+use crate::gemm::{Epilogue, GemmContext, GemmPlan, PackedB, QPackedB, Requant};
+
+use super::cache::{
+    content_id_f32, content_id_i8, epilogue_class, requant_class, PlanCache, PlanKey, WeightId,
+    WeightKey,
+};
+use super::coalesce::{CoalesceKey, CoalesceQueue, JobClass};
+use super::stats::{ServeStats, StatsSnapshot};
+
+/// Errors surfaced by the service (queue-level or from the underlying
+/// BLAS execution).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// `try_submit` found the queue full (backpressure).
+    Saturated,
+    /// The service is shutting down and accepts no new work.
+    ShuttingDown,
+    /// A request referenced a [`WeightId`] that was never registered
+    /// (or was invalidated).
+    UnknownWeight(WeightId),
+    /// The underlying plan/pack/run failed.
+    Blas(BlasError),
+}
+
+impl From<BlasError> for ServeError {
+    fn from(e: BlasError) -> Self {
+        ServeError::Blas(e)
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Saturated => write!(f, "service queue is full"),
+            ServeError::ShuttingDown => write!(f, "service is shutting down"),
+            ServeError::UnknownWeight(id) => write!(f, "unknown weight id {:#x}", id.0),
+            ServeError::Blas(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Service tuning knobs (every field has a serving-sane default).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bound on queued (admitted, not yet executed) requests;
+    /// `0` = derive from the thread budget (`max(8, 4 × threads)`).
+    pub queue_capacity: usize,
+    /// How long the dispatcher lingers after seeing work, letting
+    /// same-key requests arrive to coalesce. Zero disables lingering
+    /// (only already-queued requests fold).
+    pub coalesce_window: Duration,
+    /// Most requests folded into one batch.
+    pub max_coalesce: usize,
+    /// Joint plan + packed-weight cache capacity, in entries
+    /// (`0` disables caching — every request replans and repacks).
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            queue_capacity: 0,
+            coalesce_window: Duration::from_micros(100),
+            max_coalesce: 32,
+            cache_capacity: 64,
+        }
+    }
+}
+
+/// A complete f32 GEMM problem statement — everything a plan freezes.
+/// [`PlanSpec`]s that compare equal share one cached [`GemmPlan`].
+#[derive(Clone, Debug)]
+pub struct PlanSpec {
+    /// `op(A) = Aᵀ`?
+    pub transa: Transpose,
+    /// `op(B) = Bᵀ`?
+    pub transb: Transpose,
+    /// Output rows.
+    pub m: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Dot-product length.
+    pub k: usize,
+    /// Scale on `op(A)·op(B)`.
+    pub alpha: f32,
+    /// Scale on the input `C`.
+    pub beta: f32,
+    /// Leading dimension of `A` (`0` = contiguous).
+    pub lda: usize,
+    /// Leading dimension of `B` (`0` = contiguous).
+    pub ldb: usize,
+    /// Leading dimension of `C` (`0` = contiguous, i.e. `n`).
+    pub ldc: usize,
+    /// Optional fused epilogue (part of the plan identity).
+    pub epilogue: Option<Epilogue>,
+}
+
+impl PlanSpec {
+    /// `C ← A·B` with unit alpha, zero beta, contiguous operands.
+    pub fn new(m: usize, n: usize, k: usize) -> Self {
+        Self {
+            transa: Transpose::No,
+            transb: Transpose::No,
+            m,
+            n,
+            k,
+            alpha: 1.0,
+            beta: 0.0,
+            lda: 0,
+            ldb: 0,
+            ldc: 0,
+            epilogue: None,
+        }
+    }
+
+    /// Set `op(B) = Bᵀ`.
+    pub fn transpose_b(mut self, t: Transpose) -> Self {
+        self.transb = t;
+        self
+    }
+
+    /// Set `op(A) = Aᵀ`.
+    pub fn transpose_a(mut self, t: Transpose) -> Self {
+        self.transa = t;
+        self
+    }
+
+    /// Set alpha.
+    pub fn alpha(mut self, a: f32) -> Self {
+        self.alpha = a;
+        self
+    }
+
+    /// Set beta.
+    pub fn beta(mut self, b: f32) -> Self {
+        self.beta = b;
+        self
+    }
+
+    /// Attach a fused epilogue.
+    pub fn epilogue(mut self, ep: Epilogue) -> Self {
+        self.epilogue = Some(ep);
+        self
+    }
+
+    pub(crate) fn lda_n(&self) -> usize {
+        if self.lda != 0 {
+            self.lda
+        } else {
+            match self.transa {
+                Transpose::No => self.k,
+                Transpose::Yes => self.m,
+            }
+        }
+    }
+
+    pub(crate) fn ldb_n(&self) -> usize {
+        if self.ldb != 0 {
+            self.ldb
+        } else {
+            match self.transb {
+                Transpose::No => self.n,
+                Transpose::Yes => self.k,
+            }
+        }
+    }
+
+    pub(crate) fn ldc_n(&self) -> usize {
+        if self.ldc != 0 {
+            self.ldc
+        } else {
+            self.n
+        }
+    }
+
+    pub(crate) fn plan_key(&self) -> PlanKey {
+        PlanKey {
+            m: self.m,
+            n: self.n,
+            k: self.k,
+            transa: matches!(self.transa, Transpose::Yes),
+            transb: matches!(self.transb, Transpose::Yes),
+            alpha: self.alpha.to_bits(),
+            beta: self.beta.to_bits(),
+            lda: self.lda_n(),
+            ldb: self.ldb_n(),
+            ldc: self.ldc_n(),
+            epilogue: epilogue_class(self.epilogue.as_ref()),
+        }
+    }
+}
+
+/// The `B` operand of an f32 request: bytes supplied inline (identified
+/// by content hash) or a previously registered weight.
+#[derive(Clone, Debug)]
+pub enum FOperand {
+    /// Operand bytes travel with the request; keyed by content hash.
+    Inline(Vec<f32>),
+    /// Reference to a weight registered with
+    /// [`GemmService::register_weight`].
+    Registered(WeightId),
+}
+
+/// The `B` operand of a quantized request.
+#[derive(Clone, Debug)]
+pub enum QOperand {
+    /// Operand bytes travel with the request; keyed by content hash.
+    Inline(Vec<i8>),
+    /// Reference to a weight registered with
+    /// [`GemmService::register_qweight`].
+    Registered(WeightId),
+}
+
+/// One f32 GEMM request. The service answers with the output buffer
+/// (`m × ldc`, row-major).
+#[derive(Clone, Debug)]
+pub struct SgemmRequest {
+    /// Problem statement (shared by every request that coalesces).
+    pub spec: PlanSpec,
+    /// The `A` operand (row-major, leading dimension `spec.lda`).
+    pub a: Vec<f32>,
+    /// The `B` operand (inline or registered).
+    pub b: FOperand,
+    /// Initial `C` (required when `beta != 0` or the epilogue reads
+    /// `C`); `None` starts from zeros.
+    pub c: Option<Vec<f32>>,
+}
+
+impl SgemmRequest {
+    /// `C ← A·B` over contiguous operands.
+    pub fn new(m: usize, n: usize, k: usize, a: Vec<f32>, b: FOperand) -> Self {
+        Self { spec: PlanSpec::new(m, n, k), a, b, c: None }
+    }
+
+    fn weight_key(&self) -> WeightKey {
+        let id = match &self.b {
+            FOperand::Registered(id) => *id,
+            FOperand::Inline(bytes) => {
+                content_id_f32(bytes, self.spec.transb, self.spec.k, self.spec.n, self.spec.ldb_n())
+            }
+        };
+        WeightKey {
+            id,
+            transb: matches!(self.spec.transb, Transpose::Yes),
+            k: self.spec.k,
+            n: self.spec.n,
+        }
+    }
+
+    fn coalesce_key(&self) -> CoalesceKey {
+        CoalesceKey { class: JobClass::Sgemm, plan: self.spec.plan_key(), weight: self.weight_key() }
+    }
+}
+
+/// One quantized `u8 × i8` request. Output is `i32` accumulators, or
+/// `f32` when a [`Requant`] descriptor is attached.
+#[derive(Clone, Debug)]
+pub struct QgemmRequest {
+    /// `op(A) = Aᵀ`?
+    pub transa: Transpose,
+    /// `op(B) = Bᵀ`? (applies when packing an inline operand).
+    pub transb: Transpose,
+    /// Output rows.
+    pub m: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Dot-product length.
+    pub k: usize,
+    /// The `A` operand (row-major `u8`).
+    pub a: Vec<u8>,
+    /// Leading dimension of `A` (`0` = contiguous).
+    pub lda: usize,
+    /// The `B` operand (inline `i8` or registered).
+    pub b: QOperand,
+    /// Leading dimension of `B` (`0` = contiguous; inline packing only).
+    pub ldb: usize,
+    /// Fused requantization: `Some` answers `f32`, `None` answers raw
+    /// `i32` accumulators.
+    pub requant: Option<Requant>,
+}
+
+impl QgemmRequest {
+    /// `C ← A·B` over contiguous operands, raw `i32` output.
+    pub fn new(m: usize, n: usize, k: usize, a: Vec<u8>, b: QOperand) -> Self {
+        Self {
+            transa: Transpose::No,
+            transb: Transpose::No,
+            m,
+            n,
+            k,
+            a,
+            lda: 0,
+            b,
+            ldb: 0,
+            requant: None,
+        }
+    }
+
+    fn lda_n(&self) -> usize {
+        if self.lda != 0 {
+            self.lda
+        } else {
+            match self.transa {
+                Transpose::No => self.k,
+                Transpose::Yes => self.m,
+            }
+        }
+    }
+
+    fn ldb_n(&self) -> usize {
+        if self.ldb != 0 {
+            self.ldb
+        } else {
+            match self.transb {
+                Transpose::No => self.n,
+                Transpose::Yes => self.k,
+            }
+        }
+    }
+
+    fn coalesce_key(&self) -> CoalesceKey {
+        let id = match &self.b {
+            QOperand::Registered(id) => *id,
+            QOperand::Inline(bytes) => {
+                content_id_i8(bytes, self.transb, self.k, self.n, self.ldb_n())
+            }
+        };
+        let class = if self.requant.is_some() { JobClass::QgemmRequant } else { JobClass::QgemmAccum };
+        CoalesceKey {
+            class,
+            plan: PlanKey {
+                m: self.m,
+                n: self.n,
+                k: self.k,
+                transa: matches!(self.transa, Transpose::Yes),
+                transb: matches!(self.transb, Transpose::Yes),
+                alpha: 0,
+                beta: 0,
+                lda: self.lda_n(),
+                ldb: self.ldb_n(),
+                ldc: self.n,
+                epilogue: self.requant.as_ref().map_or(0, requant_class),
+            },
+            weight: WeightKey {
+                id,
+                transb: matches!(self.transb, Transpose::Yes),
+                k: self.k,
+                n: self.n,
+            },
+        }
+    }
+}
+
+/// A quantized request's answer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QgemmOut {
+    /// Raw `i32` accumulators (`m × n`, row-major).
+    I32(Vec<i32>),
+    /// Requantized `f32` output (`m × n`, row-major).
+    F32(Vec<f32>),
+}
+
+/// What an f32 ticket resolves to.
+pub type SgemmReply = Result<Vec<f32>, ServeError>;
+/// What a quantized ticket resolves to.
+pub type QgemmReply = Result<QgemmOut, ServeError>;
+
+/// One-shot completion slot a caller blocks on.
+struct Slot<T> {
+    value: Mutex<Option<T>>,
+    ready: Condvar,
+}
+
+impl<T> Slot<T> {
+    fn new() -> Arc<Self> {
+        Arc::new(Self { value: Mutex::new(None), ready: Condvar::new() })
+    }
+
+    fn fill(&self, v: T) {
+        *self.value.lock().unwrap_or_else(|e| e.into_inner()) = Some(v);
+        self.ready.notify_all();
+    }
+}
+
+/// Handle on an admitted request; [`wait`](Ticket::wait) blocks until
+/// the dispatcher answers.
+pub struct Ticket<T> {
+    slot: Arc<Slot<T>>,
+}
+
+impl<T> Ticket<T> {
+    /// Block until the request completes and take its answer.
+    pub fn wait(self) -> T {
+        let mut g = self.slot.value.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(v) = g.take() {
+                return v;
+            }
+            g = self.slot.ready.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Non-blocking poll: the answer if it is already in.
+    pub fn try_take(&self) -> Option<T> {
+        self.slot.value.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+}
+
+/// Queued work: the coalescing identity plus the request + reply slot.
+enum Payload {
+    Sgemm(Box<SgemmRequest>, Arc<Slot<SgemmReply>>),
+    Qgemm(Box<QgemmRequest>, Arc<Slot<QgemmReply>>),
+}
+
+struct Job {
+    key: CoalesceKey,
+    payload: Payload,
+}
+
+/// Registered weight bytes, kept so evicted packs can be rebuilt.
+#[derive(Clone)]
+enum StoredWeight {
+    F32 { data: Arc<Vec<f32>>, ldb: usize },
+    I8 { data: Arc<Vec<i8>>, ldb: usize },
+}
+
+struct QueueState {
+    q: CoalesceQueue<Job>,
+    paused: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    /// Wakes the dispatcher (job arrived / resumed / shutdown).
+    notify: Condvar,
+    /// Wakes producers blocked on a full queue.
+    space: Condvar,
+}
+
+struct ServiceInner {
+    ctx: GemmContext,
+    cfg: ServeConfig,
+    stats: Arc<ServeStats>,
+    cache: PlanCache,
+    weights: Mutex<HashMap<WeightId, StoredWeight>>,
+    shared: Shared,
+}
+
+/// The process-wide GEMM service (see the [module docs](self)).
+pub struct GemmService {
+    inner: Arc<ServiceInner>,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+static GLOBAL: OnceLock<GemmService> = OnceLock::new();
+
+impl GemmService {
+    /// Start a service over `ctx` with its own dispatcher thread.
+    pub fn new(ctx: GemmContext, cfg: ServeConfig) -> Self {
+        let queue_capacity = if cfg.queue_capacity == 0 {
+            (4 * ctx.threads()).max(8)
+        } else {
+            cfg.queue_capacity
+        };
+        let cfg = ServeConfig { queue_capacity, ..cfg };
+        let stats = Arc::new(ServeStats::default());
+        let inner = Arc::new(ServiceInner {
+            cache: PlanCache::new(cfg.cache_capacity, Arc::clone(&stats)),
+            shared: Shared {
+                state: Mutex::new(QueueState {
+                    q: CoalesceQueue::new(queue_capacity),
+                    paused: false,
+                    shutdown: false,
+                }),
+                notify: Condvar::new(),
+                space: Condvar::new(),
+            },
+            weights: Mutex::new(HashMap::new()),
+            ctx,
+            cfg,
+            stats,
+        });
+        let worker = Arc::clone(&inner);
+        let handle = std::thread::Builder::new()
+            .name("emmerald-serve".into())
+            .spawn(move || dispatch_loop(&worker))
+            .expect("spawn serve dispatcher");
+        Self { inner, dispatcher: Mutex::new(Some(handle)) }
+    }
+
+    /// The shared process-wide service over
+    /// [`GemmContext::global`], started on first use with the default
+    /// config.
+    pub fn global() -> &'static GemmService {
+        GLOBAL.get_or_init(|| GemmService::new(GemmContext::global().clone(), ServeConfig::default()))
+    }
+
+    /// Whether [`global`](Self::global) has been started (without
+    /// starting it).
+    pub fn global_started() -> Option<&'static GemmService> {
+        GLOBAL.get()
+    }
+
+    /// The context this service executes on.
+    pub fn context(&self) -> &GemmContext {
+        &self.inner.ctx
+    }
+
+    /// The plan / packed-weight cache (for diagnostics and direct
+    /// cached-pack access).
+    pub fn cache(&self) -> &PlanCache {
+        &self.inner.cache
+    }
+
+    /// Point-in-time copy of the service counters.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.inner.stats.snapshot()
+    }
+
+    /// Admit an f32 request, blocking while the queue is full.
+    pub fn submit(&self, req: SgemmRequest) -> Result<Ticket<SgemmReply>, ServeError> {
+        let slot = Slot::new();
+        let job =
+            Job { key: req.coalesce_key(), payload: Payload::Sgemm(Box::new(req), Arc::clone(&slot)) };
+        self.push_blocking(job)?;
+        Ok(Ticket { slot })
+    }
+
+    /// Admit an f32 request or bounce immediately when saturated.
+    pub fn try_submit(&self, req: SgemmRequest) -> Result<Ticket<SgemmReply>, ServeError> {
+        let slot = Slot::new();
+        let job =
+            Job { key: req.coalesce_key(), payload: Payload::Sgemm(Box::new(req), Arc::clone(&slot)) };
+        self.push_try(job)?;
+        Ok(Ticket { slot })
+    }
+
+    /// Admit a quantized request, blocking while the queue is full.
+    pub fn submit_q(&self, req: QgemmRequest) -> Result<Ticket<QgemmReply>, ServeError> {
+        let slot = Slot::new();
+        let job =
+            Job { key: req.coalesce_key(), payload: Payload::Qgemm(Box::new(req), Arc::clone(&slot)) };
+        self.push_blocking(job)?;
+        Ok(Ticket { slot })
+    }
+
+    /// Admit a quantized request or bounce immediately when saturated.
+    pub fn try_submit_q(&self, req: QgemmRequest) -> Result<Ticket<QgemmReply>, ServeError> {
+        let slot = Slot::new();
+        let job =
+            Job { key: req.coalesce_key(), payload: Payload::Qgemm(Box::new(req), Arc::clone(&slot)) };
+        self.push_try(job)?;
+        Ok(Ticket { slot })
+    }
+
+    /// Register (or replace) an f32 weight under `id`. Replacing
+    /// invalidates every cache entry packed from the old bytes before
+    /// the new registration becomes visible.
+    pub fn register_weight(&self, id: u64, b: Vec<f32>, ldb: usize) -> WeightId {
+        let id = WeightId(id);
+        let prev = self
+            .inner
+            .weights
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(id, StoredWeight::F32 { data: Arc::new(b), ldb });
+        if prev.is_some() {
+            self.inner.cache.invalidate_weight(id);
+        }
+        id
+    }
+
+    /// Register (or replace) a quantized `i8` weight under `id`.
+    pub fn register_qweight(&self, id: u64, b: Vec<i8>, ldb: usize) -> WeightId {
+        let id = WeightId(id);
+        let prev = self
+            .inner
+            .weights
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(id, StoredWeight::I8 { data: Arc::new(b), ldb });
+        if prev.is_some() {
+            self.inner.cache.invalidate_weight(id);
+        }
+        id
+    }
+
+    /// Drop a registration and every cache entry packed from it.
+    /// Returns the number of cached packs removed.
+    pub fn invalidate_weight(&self, id: WeightId) -> usize {
+        self.inner.weights.lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
+        self.inner.cache.invalidate_weight(id)
+    }
+
+    /// Resolve (and cache) the plan for `spec` — the synchronous
+    /// plan-cache doorway for callers that execute themselves (the nn
+    /// forward paths) rather than going through the queue.
+    pub fn cached_plan(&self, spec: &PlanSpec) -> Result<GemmPlan, ServeError> {
+        let inner = &self.inner;
+        inner
+            .cache
+            .get_or_insert_plan(spec.plan_key(), || build_plan(&inner.ctx, spec))
+            .map_err(Into::into)
+    }
+
+    /// Pack (or fetch the cached pack of) an inline f32 operand, keyed
+    /// by content hash. Returns the key's [`WeightId`] alongside the
+    /// shared handle.
+    pub fn cached_pack_b(
+        &self,
+        transb: Transpose,
+        k: usize,
+        n: usize,
+        b: &[f32],
+        ldb: usize,
+    ) -> Result<(WeightId, PackedB), ServeError> {
+        let id = content_id_f32(b, transb, k, n, ldb);
+        let key = WeightKey { id, transb: matches!(transb, Transpose::Yes), k, n };
+        let pb = self
+            .inner
+            .cache
+            .get_or_pack_b(key, || self.inner.ctx.pack_b(transb, k, n, b, ldb))?;
+        Ok((id, pb))
+    }
+
+    /// Pack (or fetch the cached pack of) an inline `i8` operand, keyed
+    /// by content hash.
+    pub fn cached_qpack_b(
+        &self,
+        transb: Transpose,
+        k: usize,
+        n: usize,
+        b: &[i8],
+        ldb: usize,
+    ) -> Result<(WeightId, QPackedB), ServeError> {
+        let id = content_id_i8(b, transb, k, n, ldb);
+        let key = WeightKey { id, transb: matches!(transb, Transpose::Yes), k, n };
+        let pb = self
+            .inner
+            .cache
+            .get_or_qpack_b(key, || self.inner.ctx.qpack_b(transb, k, n, b, ldb))?;
+        Ok((id, pb))
+    }
+
+    /// Hold dispatch: admitted requests queue up but none execute.
+    /// Lets tests (and bulk submitters) stage a full batch
+    /// deterministically before [`resume`](Self::resume) releases it.
+    pub fn pause(&self) {
+        let mut st = self.inner.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.paused = true;
+        drop(st);
+        self.inner.shared.notify.notify_all();
+    }
+
+    /// Release a [`pause`](Self::pause).
+    pub fn resume(&self) {
+        let mut st = self.inner.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.paused = false;
+        drop(st);
+        self.inner.shared.notify.notify_all();
+    }
+
+    /// Block until every admitted request has been answered.
+    pub fn drain(&self) {
+        loop {
+            {
+                let st = self.inner.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+                if st.q.is_empty() && !st.paused {
+                    // The dispatcher may still be executing the last
+                    // batch; completed == submitted is the real fence.
+                    let s = self.inner.stats.snapshot();
+                    if s.completed + s.rejected >= s.submitted {
+                        return;
+                    }
+                }
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    fn push_blocking(&self, job: Job) -> Result<(), ServeError> {
+        let sh = &self.inner.shared;
+        let mut st = sh.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut job = job;
+        loop {
+            if st.shutdown {
+                return Err(ServeError::ShuttingDown);
+            }
+            match st.q.push(job) {
+                Ok(()) => {
+                    ServeStats::bump(&self.inner.stats.submitted);
+                    drop(st);
+                    sh.notify.notify_all();
+                    return Ok(());
+                }
+                Err(j) => {
+                    job = j;
+                    st = sh.space.wait(st).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+    }
+
+    fn push_try(&self, job: Job) -> Result<(), ServeError> {
+        let sh = &self.inner.shared;
+        let mut st = sh.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.shutdown {
+            return Err(ServeError::ShuttingDown);
+        }
+        match st.q.push(job) {
+            Ok(()) => {
+                ServeStats::bump(&self.inner.stats.submitted);
+                drop(st);
+                sh.notify.notify_all();
+                Ok(())
+            }
+            Err(_) => {
+                ServeStats::bump(&self.inner.stats.rejected);
+                Err(ServeError::Saturated)
+            }
+        }
+    }
+}
+
+impl Drop for GemmService {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.shutdown = true;
+            st.paused = false;
+        }
+        self.inner.shared.notify.notify_all();
+        self.inner.shared.space.notify_all();
+        if let Some(h) = self.dispatcher.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Build the plan `spec` describes on `ctx`.
+fn build_plan(ctx: &GemmContext, spec: &PlanSpec) -> Result<GemmPlan, BlasError> {
+    let mut b = ctx
+        .gemm()
+        .transpose_a(spec.transa)
+        .transpose_b(spec.transb)
+        .alpha(spec.alpha)
+        .beta(spec.beta)
+        .lda(spec.lda_n())
+        .ldb(spec.ldb_n())
+        .ldc(spec.ldc_n());
+    if let Some(ep) = &spec.epilogue {
+        b = b.epilogue(ep.clone());
+    }
+    b.plan(spec.m, spec.n, spec.k)
+}
+
+/// The dispatcher thread: pop → coalesce → execute, until shutdown and
+/// the queue is drained.
+fn dispatch_loop(inner: &ServiceInner) {
+    while let Some(batch) = next_batch(inner) {
+        if batch.is_empty() {
+            continue;
+        }
+        execute_batch(inner, batch);
+    }
+}
+
+/// Block for work, linger for the coalesce window, pop one batch.
+/// `None` means shutdown with an empty queue.
+fn next_batch(inner: &ServiceInner) -> Option<Vec<Job>> {
+    let sh = &inner.shared;
+    let window = inner.cfg.coalesce_window;
+    let max = inner.cfg.max_coalesce;
+    let mut st = sh.state.lock().unwrap_or_else(|e| e.into_inner());
+    loop {
+        if st.shutdown && st.q.is_empty() {
+            return None;
+        }
+        if (st.paused && !st.shutdown) || st.q.is_empty() {
+            st = sh.notify.wait(st).unwrap_or_else(|e| e.into_inner());
+            continue;
+        }
+        if !window.is_zero() && !st.shutdown && st.q.len() < max {
+            // Linger once so same-key requests in flight can fold into
+            // this batch; re-evaluate afterwards (a pause may have
+            // landed during the wait).
+            let (g, _) = sh.notify.wait_timeout(st, window).unwrap_or_else(|e| e.into_inner());
+            st = g;
+            if (st.paused && !st.shutdown) || st.q.is_empty() {
+                continue;
+            }
+        }
+        let batch = st.q.pop_batch(max, |j| j.key);
+        drop(st);
+        sh.space.notify_all();
+        return Some(batch);
+    }
+}
+
+/// Execute one coalesced batch (every job shares the key).
+fn execute_batch(inner: &ServiceInner, batch: Vec<Job>) {
+    if batch.len() > 1 {
+        ServeStats::bump(&inner.stats.coalesced_batches);
+        ServeStats::add(&inner.stats.coalesced_requests, (batch.len() - 1) as u64);
+    }
+    match batch[0].key.class {
+        JobClass::Sgemm => execute_sgemm_batch(inner, batch),
+        JobClass::QgemmAccum | JobClass::QgemmRequant => execute_qgemm_batch(inner, batch),
+    }
+}
+
+/// Look up a registered f32 weight's bytes.
+fn stored_f32(inner: &ServiceInner, id: WeightId) -> Result<(Arc<Vec<f32>>, usize), ServeError> {
+    match inner.weights.lock().unwrap_or_else(|e| e.into_inner()).get(&id) {
+        Some(StoredWeight::F32 { data, ldb }) => Ok((Arc::clone(data), *ldb)),
+        _ => Err(ServeError::UnknownWeight(id)),
+    }
+}
+
+/// Look up a registered `i8` weight's bytes.
+fn stored_i8(inner: &ServiceInner, id: WeightId) -> Result<(Arc<Vec<i8>>, usize), ServeError> {
+    match inner.weights.lock().unwrap_or_else(|e| e.into_inner()).get(&id) {
+        Some(StoredWeight::I8 { data, ldb }) => Ok((Arc::clone(data), *ldb)),
+        _ => Err(ServeError::UnknownWeight(id)),
+    }
+}
+
+fn execute_sgemm_batch(inner: &ServiceInner, batch: Vec<Job>) {
+    let wkey = batch[0].key.weight;
+    let mut items: Vec<(Box<SgemmRequest>, Arc<Slot<SgemmReply>>)> = batch
+        .into_iter()
+        .map(|j| match j.payload {
+            Payload::Sgemm(req, slot) => (req, slot),
+            // The coalesce key separates classes; a mixed batch is a bug.
+            Payload::Qgemm(..) => unreachable!("sgemm batch holds a qgemm job"),
+        })
+        .collect();
+
+    // One plan + one packed B for the whole batch.
+    let spec = items[0].0.spec.clone();
+    let resolved: Result<(GemmPlan, PackedB, Option<Arc<Vec<f32>>>), ServeError> = (|| {
+        let plan = inner.cache.get_or_insert_plan(spec.plan_key(), || build_plan(&inner.ctx, &spec))?;
+        let (pb, stored) = match &items[0].0.b {
+            FOperand::Inline(bytes) => {
+                let pb = inner.cache.get_or_pack_b(wkey, || {
+                    inner.ctx.pack_b(spec.transb, spec.k, spec.n, bytes, spec.ldb_n())
+                })?;
+                (pb, None)
+            }
+            FOperand::Registered(id) => {
+                let (data, ldb) = stored_f32(inner, *id)?;
+                let closure_data = Arc::clone(&data);
+                let pb = inner.cache.get_or_pack_b(wkey, || {
+                    inner.ctx.pack_b(spec.transb, spec.k, spec.n, &closure_data, ldb)
+                })?;
+                (pb, Some(data))
+            }
+        };
+        Ok((plan, pb, stored))
+    })();
+
+    match resolved {
+        Err(e) => {
+            for (_, slot) in items {
+                slot.fill(Err(e.clone()));
+                ServeStats::bump(&inner.stats.completed);
+            }
+        }
+        Ok((plan, pb, stored)) => {
+            for (req, slot) in items.drain(..) {
+                let reply = run_sgemm_item(&plan, &pb, stored.as_deref(), *req);
+                slot.fill(reply);
+                ServeStats::bump(&inner.stats.completed);
+            }
+        }
+    }
+}
+
+/// Run one f32 request through the shared plan + packed B. Falls back
+/// to the unpacked driver (same plan, same kernel) if the packed
+/// geometry no longer matches — results stay bitwise identical because
+/// the plan is the same either way.
+fn run_sgemm_item(
+    plan: &GemmPlan,
+    pb: &PackedB,
+    stored: Option<&Vec<f32>>,
+    req: SgemmRequest,
+) -> SgemmReply {
+    let rows = plan.m();
+    let ldc = req.spec.ldc_n();
+    let mut c = match req.c {
+        Some(c) => c,
+        None => vec![0.0f32; rows * ldc],
+    };
+    match plan.run_packed_b(&req.a, pb, &mut c) {
+        Ok(()) => Ok(c),
+        Err(first) => {
+            let bytes: Option<&[f32]> = match (&req.b, stored) {
+                (FOperand::Inline(b), _) => Some(b),
+                (FOperand::Registered(_), Some(s)) => Some(s),
+                (FOperand::Registered(_), None) => None,
+            };
+            match bytes {
+                Some(b) => plan.run(&req.a, b, &mut c).map(|()| c).map_err(Into::into),
+                None => Err(first.into()),
+            }
+        }
+    }
+}
+
+fn execute_qgemm_batch(inner: &ServiceInner, batch: Vec<Job>) {
+    let wkey = batch[0].key.weight;
+    let items: Vec<(Box<QgemmRequest>, Arc<Slot<QgemmReply>>)> = batch
+        .into_iter()
+        .map(|j| match j.payload {
+            Payload::Qgemm(req, slot) => (req, slot),
+            Payload::Sgemm(..) => unreachable!("qgemm batch holds an sgemm job"),
+        })
+        .collect();
+
+    let first = &items[0].0;
+    let (k, n) = (first.k, first.n);
+    let pb: Result<QPackedB, ServeError> = match &first.b {
+        QOperand::Inline(bytes) => inner
+            .cache
+            .get_or_qpack_b(wkey, || inner.ctx.qpack_b(first.transb, k, n, bytes, first.ldb_n()))
+            .map_err(Into::into),
+        QOperand::Registered(id) => stored_i8(inner, *id).and_then(|(data, ldb)| {
+            inner
+                .cache
+                .get_or_qpack_b(wkey, || inner.ctx.qpack_b(first.transb, k, n, &data, ldb))
+                .map_err(Into::into)
+        }),
+    };
+
+    match pb {
+        Err(e) => {
+            for (_, slot) in items {
+                slot.fill(Err(e.clone()));
+                ServeStats::bump(&inner.stats.completed);
+            }
+        }
+        Ok(pb) => {
+            for (req, slot) in items {
+                slot.fill(run_qgemm_item(inner, &pb, &req));
+                ServeStats::bump(&inner.stats.completed);
+            }
+        }
+    }
+}
+
+/// Run one quantized request against the shared packed B.
+fn run_qgemm_item(inner: &ServiceInner, pb: &QPackedB, req: &QgemmRequest) -> QgemmReply {
+    let (ar, ac) = match req.transa {
+        Transpose::No => (req.m, req.k),
+        Transpose::Yes => (req.k, req.m),
+    };
+    let av = MatRef::new(&req.a, ar, ac, req.lda_n()).map_err(|e| e.operand("A"))?;
+    match &req.requant {
+        None => {
+            let mut c = vec![0i32; req.m * req.n];
+            let cv = MatMut::new(&mut c, req.m, req.n, req.n).map_err(|e| e.operand("C"))?;
+            inner.ctx.qgemm_packed_b(req.transa, av, pb, cv, false)?;
+            Ok(QgemmOut::I32(c))
+        }
+        Some(rq) => {
+            let mut c = vec![0.0f32; req.m * req.n];
+            let cv = MatMut::new(&mut c, req.m, req.n, req.n).map_err(|e| e.operand("C"))?;
+            inner.ctx.qgemm_requant_packed_b(req.transa, av, pb, cv, rq)?;
+            Ok(QgemmOut::F32(c))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::DispatchConfig;
+    use crate::util::testkit::hermetic_tune_cache;
+
+    fn service() -> GemmService {
+        hermetic_tune_cache();
+        let ctx = GemmContext::new(DispatchConfig { threads: 1, ..DispatchConfig::default() });
+        GemmService::new(ctx, ServeConfig::default())
+    }
+
+    fn fill(seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = crate::util::prng::Pcg32::new(seed);
+        let mut v = vec![0.0f32; len];
+        rng.fill_f32(&mut v, -1.0, 1.0);
+        v
+    }
+
+    #[test]
+    fn submit_answers_the_one_shot_result() {
+        let svc = service();
+        let (m, n, k) = (8, 8, 8);
+        let a = fill(1, m * k);
+        let b = fill(2, k * n);
+        let mut want = vec![0.0f32; m * n];
+        crate::blas::sgemm(
+            crate::blas::Backend::Dispatch,
+            Transpose::No,
+            Transpose::No,
+            m,
+            n,
+            k,
+            1.0,
+            &a,
+            k,
+            &b,
+            n,
+            0.0,
+            &mut want,
+            n,
+        )
+        .unwrap();
+        let got = svc
+            .submit(SgemmRequest::new(m, n, k, a, FOperand::Inline(b)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(got, want, "service answer must match the one-shot call bitwise");
+        assert_eq!(svc.stats().completed, 1);
+    }
+
+    #[test]
+    fn pause_stages_a_deterministic_coalesced_batch() {
+        let svc = service();
+        let (m, n, k) = (8, 8, 8);
+        let b = fill(3, k * n);
+        svc.pause();
+        let tickets: Vec<_> = (0..4)
+            .map(|i| {
+                let a = fill(10 + i, m * k);
+                svc.submit(SgemmRequest::new(m, n, k, a, FOperand::Inline(b.clone()))).unwrap()
+            })
+            .collect();
+        svc.resume();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.coalesced_requests, 3, "4 same-key requests fold into one batch");
+        assert_eq!(s.coalesced_batches, 1);
+        assert_eq!(s.completed, 4);
+    }
+
+    #[test]
+    fn try_submit_bounces_when_saturated() {
+        let svc = {
+            hermetic_tune_cache();
+            let ctx = GemmContext::new(DispatchConfig { threads: 1, ..DispatchConfig::default() });
+            GemmService::new(ctx, ServeConfig { queue_capacity: 2, ..ServeConfig::default() })
+        };
+        svc.pause();
+        let b = fill(4, 16);
+        let mk_req = || SgemmRequest::new(4, 4, 4, fill(5, 16), FOperand::Inline(b.clone()));
+        let t1 = svc.try_submit(mk_req()).unwrap();
+        let t2 = svc.try_submit(mk_req()).unwrap();
+        assert!(matches!(svc.try_submit(mk_req()), Err(ServeError::Saturated)));
+        assert_eq!(svc.stats().rejected, 1);
+        svc.resume();
+        t1.wait().unwrap();
+        t2.wait().unwrap();
+    }
+
+    #[test]
+    fn unknown_weight_is_reported() {
+        let svc = service();
+        let reply = svc
+            .submit(SgemmRequest::new(4, 4, 4, vec![0.0; 16], FOperand::Registered(WeightId(42))))
+            .unwrap()
+            .wait();
+        assert!(matches!(reply, Err(ServeError::UnknownWeight(WeightId(42)))));
+    }
+}

@@ -1,0 +1,144 @@
+//! Service observability: relaxed atomic counters plus a copyable
+//! snapshot.
+//!
+//! Every interesting event on the serving path bumps exactly one counter
+//! (hit **or** miss, never both; a coalesced batch of `b` requests counts
+//! one batch and `b − 1` coalesced requests). The counters are plain
+//! `Relaxed` atomics — they are monotone tallies, not synchronization —
+//! so the hot path pays one uncontended RMW per event. [`StatsSnapshot`]
+//! reads them all at one (approximate) instant for reporting; exact
+//! cross-counter consistency is not promised while traffic is in flight,
+//! only once the service is idle.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Live counters of a [`super::GemmService`] (shared by the service, its
+/// cache, and every stats reader).
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Requests admitted into the queue (blocking or `try_` path).
+    pub(crate) submitted: AtomicU64,
+    /// `try_submit` calls bounced by a full queue (backpressure).
+    pub(crate) rejected: AtomicU64,
+    /// Requests whose reply has been sent (success or error).
+    pub(crate) completed: AtomicU64,
+    /// Requests that rode another request's batch (batch size − 1 per
+    /// coalesced batch).
+    pub(crate) coalesced_requests: AtomicU64,
+    /// Executed batches holding more than one request.
+    pub(crate) coalesced_batches: AtomicU64,
+    /// Plan-cache lookups answered from the cache.
+    pub(crate) plan_hits: AtomicU64,
+    /// Plan-cache lookups that had to build a plan.
+    pub(crate) plan_misses: AtomicU64,
+    /// Packed-weight lookups (f32 and quantized) answered from the cache
+    /// or an in-flight pack.
+    pub(crate) pack_hits: AtomicU64,
+    /// Packed-weight lookups that actually packed panels.
+    pub(crate) pack_misses: AtomicU64,
+    /// Cache entries dropped under capacity pressure.
+    pub(crate) evictions: AtomicU64,
+    /// Cache entries dropped because their weight ID was re-registered.
+    pub(crate) invalidations: AtomicU64,
+}
+
+impl ServeStats {
+    /// Bump one counter (relaxed; tallies only, no ordering).
+    pub(crate) fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n` to one counter.
+    pub(crate) fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Copy every counter out.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let read = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        StatsSnapshot {
+            submitted: read(&self.submitted),
+            rejected: read(&self.rejected),
+            completed: read(&self.completed),
+            coalesced_requests: read(&self.coalesced_requests),
+            coalesced_batches: read(&self.coalesced_batches),
+            plan_hits: read(&self.plan_hits),
+            plan_misses: read(&self.plan_misses),
+            pack_hits: read(&self.pack_hits),
+            pack_misses: read(&self.pack_misses),
+            evictions: read(&self.evictions),
+            invalidations: read(&self.invalidations),
+        }
+    }
+}
+
+/// One point-in-time copy of the service counters (see [`ServeStats`]
+/// field docs for the exact meaning of each tally).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// Requests admitted into the queue.
+    pub submitted: u64,
+    /// `try_submit` rejections (backpressure).
+    pub rejected: u64,
+    /// Requests answered.
+    pub completed: u64,
+    /// Requests that rode another request's batch.
+    pub coalesced_requests: u64,
+    /// Batches holding more than one request.
+    pub coalesced_batches: u64,
+    /// Plan-cache hits.
+    pub plan_hits: u64,
+    /// Plan-cache misses (plans built).
+    pub plan_misses: u64,
+    /// Packed-weight cache hits (f32 + quantized).
+    pub pack_hits: u64,
+    /// Packed-weight cache misses (packs performed).
+    pub pack_misses: u64,
+    /// Cache evictions under capacity pressure.
+    pub evictions: u64,
+    /// Cache invalidations from weight re-registration.
+    pub invalidations: u64,
+}
+
+impl fmt::Display for StatsSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "requests: submitted {} rejected {} completed {}",
+            self.submitted, self.rejected, self.completed
+        )?;
+        writeln!(
+            f,
+            "coalesce: {} requests folded into {} multi-request batches",
+            self.coalesced_requests, self.coalesced_batches
+        )?;
+        writeln!(
+            f,
+            "plan cache: {} hits / {} misses; pack cache: {} hits / {} misses",
+            self.plan_hits, self.plan_misses, self.pack_hits, self.pack_misses
+        )?;
+        write!(f, "cache churn: {} evictions, {} invalidations", self.evictions, self.invalidations)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_copies_every_counter() {
+        let s = ServeStats::default();
+        ServeStats::bump(&s.submitted);
+        ServeStats::add(&s.coalesced_requests, 3);
+        ServeStats::bump(&s.pack_misses);
+        let snap = s.snapshot();
+        assert_eq!(snap.submitted, 1);
+        assert_eq!(snap.coalesced_requests, 3);
+        assert_eq!(snap.pack_misses, 1);
+        assert_eq!(snap.rejected, 0);
+        let text = snap.to_string();
+        assert!(text.contains("submitted 1"));
+        assert!(text.contains("3 requests folded"));
+    }
+}

@@ -1,0 +1,365 @@
+//! Conformance suite for the GEMM service (`emmerald::serve`).
+//!
+//! The service's contract is that caching and coalescing are pure
+//! plumbing: a request answered through a cached plan, a cached packed
+//! weight, or as a member of a coalesced batch returns **bitwise** the
+//! same bytes as the equivalent one-shot call — f32 whenever both paths
+//! run the same kernel (the prepacked-vs-unpacked caveat below), and
+//! unconditionally for the exact integer quantized tier. On top of the
+//! value contract, the cache must behave like a cache: LRU eviction
+//! under pressure, one packer per stampede, and stale entries dropped
+//! when a weight ID is re-registered.
+//!
+//! f32 caveat (same as `tests/plan_reuse.rs`): gemv-shaped problems
+//! (`m < tile_min_m` on AVX2 hosts) run the dot kernel unpacked but the
+//! tile layout prepacked, so service-vs-positional bit-identity is
+//! asserted only when both sides run the layout's own kernel. Service
+//! paths against each other (cached vs coalesced vs repeated) share one
+//! plan and one pack, so those comparisons are unconditional.
+
+use std::sync::Arc;
+
+use emmerald::blas::{
+    qgemm, qgemm_served, sgemm, sgemm_served, Backend, GemmContext, Matrix, Transpose,
+};
+use emmerald::gemm::KernelId;
+use emmerald::nn::{Linear, Mlp};
+use emmerald::serve::{
+    FOperand, GemmService, PlanCache, PlanSpec, QOperand, QgemmOut, QgemmRequest, ServeConfig,
+    ServeStats, SgemmRequest, WeightId, WeightKey,
+};
+use emmerald::util::prng::Pcg32;
+use emmerald::util::testkit::{assert_allclose, hermetic_tune_cache};
+
+fn rand_vec(seed: u64, len: usize) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    let mut v = vec![0.0f32; len];
+    rng.fill_f32(&mut v, -1.0, 1.0);
+    v
+}
+
+/// A service over the same context the positional `Backend::Dispatch`
+/// entry points use, so both sides resolve identical plans.
+fn service_over_global() -> GemmService {
+    GemmService::new(GemmContext::global().clone(), ServeConfig::default())
+}
+
+/// Whether prepacked and unpacked drivers run the same kernel for an
+/// `m`-row problem on this host (see the module docs).
+fn tile_consistent(m: usize) -> bool {
+    let snap = GemmContext::global().snapshot();
+    KernelId::Simd.available()
+        && (snap.best_serial_vector() != KernelId::Avx2Tile || m >= snap.config().tile_min_m)
+}
+
+#[test]
+fn served_sgemm_matches_one_shot_and_repeats_hit_the_cache() {
+    hermetic_tune_cache();
+    let svc = service_over_global();
+    let (m, n, k) = (32usize, 24, 16);
+    let b = rand_vec(0x51, k * n);
+    svc.register_weight(7, b.clone(), n);
+
+    let mut replies = Vec::new();
+    for round in 0..3 {
+        let a = rand_vec(0x60, m * k); // same A every round: replies must agree bitwise
+        let got = svc
+            .submit(SgemmRequest::new(m, n, k, a, FOperand::Registered(WeightId(7))))
+            .unwrap()
+            .wait()
+            .unwrap();
+        if round == 0 {
+            let a = rand_vec(0x60, m * k);
+            let mut want = vec![0.0f32; m * n];
+            sgemm(Backend::Dispatch, Transpose::No, Transpose::No, m, n, k, 1.0, &a, k, &b, n, 0.0, &mut want, n)
+                .unwrap();
+            if tile_consistent(m) {
+                assert_eq!(got, want, "service answer vs one-shot sgemm must be bit-identical");
+            }
+            assert_allclose(&got, &want, 5e-4, 1e-4, "service answer vs one-shot sgemm");
+        }
+        replies.push(got);
+    }
+    assert_eq!(replies[0], replies[1], "cached-plan repeat must be bit-identical");
+    assert_eq!(replies[1], replies[2], "cached-pack repeat must be bit-identical");
+
+    let s = svc.stats();
+    assert_eq!(s.plan_misses, 1, "one plan build for three same-spec requests");
+    assert!(s.plan_hits >= 2, "repeats must hit the plan cache (got {})", s.plan_hits);
+    assert_eq!(s.pack_misses, 1, "one packing for three requests against one weight");
+    assert!(s.pack_hits >= 2, "repeats must hit the pack cache (got {})", s.pack_hits);
+}
+
+#[test]
+fn coalesced_batch_is_bitwise_identical_to_one_shot_service_calls() {
+    hermetic_tune_cache();
+    let (m, n, k) = (16usize, 12, 10);
+    let b = rand_vec(0x71, k * n);
+    let activations: Vec<Vec<f32>> = (0..4).map(|i| rand_vec(0x80 + i, m * k)).collect();
+
+    // Arm 1: staged coalesced batch — pause, queue all four, release.
+    let svc = service_over_global();
+    svc.register_weight(3, b.clone(), n);
+    svc.pause();
+    let tickets: Vec<_> = activations
+        .iter()
+        .map(|a| {
+            svc.submit(SgemmRequest::new(m, n, k, a.clone(), FOperand::Registered(WeightId(3))))
+                .unwrap()
+        })
+        .collect();
+    svc.resume();
+    let coalesced: Vec<Vec<f32>> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+    let s = svc.stats();
+    assert_eq!(s.coalesced_batches, 1, "four same-key requests must fold into one batch");
+    assert_eq!(s.coalesced_requests, 3);
+
+    // Arm 2: the same traffic one request at a time on a fresh service.
+    let one_shot = service_over_global();
+    one_shot.register_weight(3, b.clone(), n);
+    for (i, a) in activations.iter().enumerate() {
+        let got = one_shot
+            .submit(SgemmRequest::new(m, n, k, a.clone(), FOperand::Registered(WeightId(3))))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(
+            coalesced[i], got,
+            "coalesced member {i} must be bit-identical to its one-shot run"
+        );
+    }
+}
+
+#[test]
+fn qgemm_service_paths_are_exact() {
+    hermetic_tune_cache();
+    let svc = service_over_global();
+    let (m, n, k) = (9usize, 13, 17);
+    let a: Vec<u8> = (0..m * k).map(|i| (i * 37 % 251) as u8).collect();
+    let b: Vec<i8> = (0..k * n).map(|i| ((i * 29 % 255) as i32 - 127) as i8).collect();
+
+    // The integer tier accumulates mod 2^32 — exact on every path, so
+    // the service must agree with the one-shot driver bitwise,
+    // registered or inline, cached or not.
+    let mut want = vec![0i32; m * n];
+    qgemm(Transpose::No, Transpose::No, m, n, k, &a, k, &b, n, &mut want, n, false).unwrap();
+
+    svc.register_qweight(11, b.clone(), n);
+    // Registered twice (second ride hits the cached pack), then inline
+    // (its own content-hash key, so its own packing).
+    let ops = [
+        QOperand::Registered(WeightId(11)),
+        QOperand::Registered(WeightId(11)),
+        QOperand::Inline(b.clone()),
+    ];
+    for bop in ops {
+        let out = svc
+            .submit_q(QgemmRequest::new(m, n, k, a.clone(), bop))
+            .unwrap()
+            .wait()
+            .unwrap();
+        match out {
+            QgemmOut::I32(got) => assert_eq!(got, want, "service qgemm must be exact"),
+            QgemmOut::F32(_) => panic!("accumulator request answered f32"),
+        }
+    }
+    let s = svc.stats();
+    assert_eq!(s.pack_misses, 2, "one packing per weight key (registered id, content hash)");
+    assert!(s.pack_hits >= 1, "the repeated registered request must hit the cached pack");
+}
+
+#[test]
+fn served_shims_match_their_positional_counterparts() {
+    hermetic_tune_cache();
+    let (m, n, k) = (32usize, 10, 14);
+    let a = rand_vec(0x91, m * k);
+    let b = rand_vec(0x92, k * n);
+    let mut got = vec![0.0f32; m * n];
+    let mut want = vec![0.0f32; m * n];
+    sgemm_served(Transpose::No, Transpose::No, m, n, k, 1.0, &a, k, &b, n, 0.0, &mut got, n)
+        .unwrap();
+    sgemm(Backend::Dispatch, Transpose::No, Transpose::No, m, n, k, 1.0, &a, k, &b, n, 0.0, &mut want, n)
+        .unwrap();
+    if tile_consistent(m) {
+        assert_eq!(got, want, "sgemm_served vs sgemm must be bit-identical");
+    }
+    assert_allclose(&got, &want, 5e-4, 1e-4, "sgemm_served vs sgemm");
+
+    let qa: Vec<u8> = (0..m * k).map(|i| (i * 13 % 256) as u8).collect();
+    let qb: Vec<i8> = (0..k * n).map(|i| ((i * 7 % 255) as i32 - 127) as i8).collect();
+    let ldc = n + 2;
+    let mut qgot = vec![-7i32; m * ldc];
+    let mut qwant = qgot.clone();
+    qgemm_served(Transpose::No, Transpose::No, m, n, k, &qa, k, &qb, n, &mut qgot, ldc).unwrap();
+    qgemm(Transpose::No, Transpose::No, m, n, k, &qa, k, &qb, n, &mut qwant, ldc, false).unwrap();
+    assert_eq!(qgot, qwant, "qgemm_served vs qgemm must be exact, padding included");
+}
+
+#[test]
+fn lru_eviction_under_pressure_and_stale_keys_on_reregistration() {
+    hermetic_tune_cache();
+    let ctx = GemmContext::global().clone();
+    let svc = GemmService::new(ctx, ServeConfig { cache_capacity: 4, ..ServeConfig::default() });
+    let (m, n, k) = (8usize, 8, 8);
+    let a = rand_vec(0xA0, m * k);
+
+    // More distinct inline weights than the cache holds (each request
+    // caches a plan + a pack, so 6 distinct weights overflow 4 slots).
+    for i in 0..6u64 {
+        let b = rand_vec(0xB0 + i, k * n);
+        svc.submit(SgemmRequest::new(m, n, k, a.clone(), FOperand::Inline(b)))
+            .unwrap()
+            .wait()
+            .unwrap();
+    }
+    assert!(svc.stats().evictions > 0, "capacity 4 under 6 weights must evict");
+    assert!(svc.cache().len() <= 4, "cache must stay within capacity");
+
+    // Re-registering an ID must drop entries packed from the old bytes:
+    // the next answer reflects the new weight, not a stale pack.
+    let b_old = rand_vec(0xC0, k * n);
+    let b_new = rand_vec(0xC1, k * n);
+    svc.register_weight(5, b_old, n);
+    svc.submit(SgemmRequest::new(m, n, k, a.clone(), FOperand::Registered(WeightId(5))))
+        .unwrap()
+        .wait()
+        .unwrap();
+    svc.register_weight(5, b_new.clone(), n);
+    assert!(svc.stats().invalidations > 0, "replacing a live weight must invalidate its packs");
+    let got = svc
+        .submit(SgemmRequest::new(m, n, k, a.clone(), FOperand::Registered(WeightId(5))))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let mut want = vec![0.0f32; m * n];
+    sgemm(Backend::Dispatch, Transpose::No, Transpose::No, m, n, k, 1.0, &a, k, &b_new, n, 0.0, &mut want, n)
+        .unwrap();
+    assert_allclose(&got, &want, 5e-4, 1e-4, "post-re-registration answer must use the new bytes");
+}
+
+#[test]
+fn pack_stampede_elects_one_packer_and_every_handle_shares_storage() {
+    hermetic_tune_cache();
+    let ctx = GemmContext::global();
+    let stats = Arc::new(ServeStats::default());
+    let cache = PlanCache::new(8, Arc::clone(&stats));
+    let (k, n) = (24usize, 20);
+    let b = rand_vec(0xD0, k * n);
+    let key = WeightKey { id: WeightId(1), transb: false, k, n };
+
+    let clients = 8usize;
+    let mut handles = Vec::new();
+    std::thread::scope(|scope| {
+        let spawned: Vec<_> = (0..clients)
+            .map(|_| {
+                let (cache, b) = (&cache, &b);
+                scope.spawn(move || {
+                    cache.get_or_pack_b(key, || ctx.pack_b(Transpose::No, k, n, b, n)).unwrap()
+                })
+            })
+            .collect();
+        for h in spawned {
+            handles.push(h.join().expect("stampede client panicked"));
+        }
+    });
+    let s = stats.snapshot();
+    assert_eq!(s.pack_misses, 1, "exactly one thread may pack under a stampede");
+    assert_eq!(s.pack_hits, clients as u64 - 1, "every other thread rides the winner's pack");
+    for h in &handles[1..] {
+        assert!(handles[0].shares_storage(h), "stampede handles must share one allocation");
+    }
+
+    // The shared handle computes the same bytes as a fresh pack.
+    let m = 8usize;
+    let a = rand_vec(0xD1, m * k);
+    let plan = ctx.gemm().plan(m, n, k).unwrap();
+    let fresh = ctx.pack_b(Transpose::No, k, n, &b, n).unwrap();
+    let mut c_shared = vec![0.0f32; m * n];
+    let mut c_fresh = vec![0.0f32; m * n];
+    plan.run_packed_b(&a, &handles[0], &mut c_shared).unwrap();
+    plan.run_packed_b(&a, &fresh, &mut c_fresh).unwrap();
+    assert_eq!(c_shared, c_fresh, "shared cached pack vs fresh pack must be bit-identical");
+}
+
+#[test]
+fn direct_cache_doorways_share_plans_and_packs() {
+    hermetic_tune_cache();
+    let svc = service_over_global();
+    let (m, n, k) = (8usize, 12, 10);
+    let b = rand_vec(0xE0, k * n);
+
+    // Two threads resolve the same inline weight through the synchronous
+    // doorway (the nn forward path): one packing, shared storage.
+    let (p1, p2) = std::thread::scope(|scope| {
+        let h1 = scope.spawn(|| svc.cached_pack_b(Transpose::No, k, n, &b, n).unwrap());
+        let h2 = scope.spawn(|| svc.cached_pack_b(Transpose::No, k, n, &b, n).unwrap());
+        (h1.join().unwrap(), h2.join().unwrap())
+    });
+    assert_eq!(p1.0, p2.0, "same bytes must hash to the same weight id");
+    assert!(p1.1.shares_storage(&p2.1), "cached packs of one weight must share storage");
+    assert_eq!(svc.stats().pack_misses, 1);
+
+    let plan_a = svc.cached_plan(&PlanSpec::new(m, n, k)).unwrap();
+    let plan_b = svc.cached_plan(&PlanSpec::new(m, n, k)).unwrap();
+    let a = rand_vec(0xE1, m * k);
+    let mut c1 = vec![0.0f32; m * n];
+    let mut c2 = vec![0.0f32; m * n];
+    plan_a.run_packed_b(&a, &p1.1, &mut c1).unwrap();
+    plan_b.run_packed_b(&a, &p2.1, &mut c2).unwrap();
+    assert_eq!(c1, c2, "cached plan + cached pack must reproduce bitwise");
+    assert_eq!(svc.stats().plan_misses, 1, "equal specs share one cached plan");
+    assert!(svc.stats().plan_hits >= 1);
+}
+
+#[test]
+fn mlp_forward_served_is_bitwise_identical_to_forward_packed() {
+    hermetic_tune_cache();
+    let svc = service_over_global();
+    let mlp = Mlp::init(&[6, 10, 4], 42, Backend::Dispatch);
+    let x = Matrix::random(9, 6, 7, -1.0, 1.0);
+
+    let packed = mlp.pack_weights(svc.context());
+    let want = mlp.forward_packed(&packed, &x);
+    let got = mlp.forward_served(&svc, &x);
+    assert_eq!(
+        got.data(),
+        want.data(),
+        "forward_served must run the same plans over the same packed panels as forward_packed"
+    );
+
+    // Second call hits both tiers for every layer.
+    let before = svc.stats();
+    let again = mlp.forward_served(&svc, &x);
+    assert_eq!(again.data(), want.data());
+    let after = svc.stats();
+    assert_eq!(after.plan_misses, before.plan_misses, "repeat forward builds no new plans");
+    assert_eq!(after.pack_misses, before.pack_misses, "repeat forward packs nothing");
+    assert!(after.plan_hits >= before.plan_hits + 2);
+    assert!(after.pack_hits >= before.pack_hits + 2);
+}
+
+#[test]
+fn quantize_weights_served_shares_one_packing_across_instances() {
+    hermetic_tune_cache();
+    use emmerald::gemm::Activation;
+    let svc = service_over_global();
+    let layer = Linear::init(12, 8, 3, Activation::Relu);
+    let q_direct = layer.quantize_weights(svc.context());
+    let q1 = layer.quantize_weights_served(&svc);
+    let q2 = layer.quantize_weights_served(&svc);
+    assert!(
+        q1.packed().shares_storage(q2.packed()),
+        "two served quantizations of one layer must share the packed panels"
+    );
+    assert_eq!(svc.stats().pack_misses, 1, "the second quantization must not repack");
+
+    // Identical packed content ⇒ identical (exact integer) forward.
+    let x = Matrix::random(5, 12, 9, -1.0, 1.0);
+    let y_direct = q_direct.forward(&x).unwrap();
+    let y_served = q1.forward(&x).unwrap();
+    assert_eq!(
+        y_served.data(),
+        y_direct.data(),
+        "served quantized forward must match the direct packing bitwise"
+    );
+}

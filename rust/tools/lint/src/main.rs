@@ -25,7 +25,7 @@
 //!    surface (`blas/api.rs`), the planners and dispatch
 //!    (`gemm/plan.rs`, `gemm/dispatch.rs`), the epilogue algebra
 //!    (`gemm/epilogue.rs`), and the application layers (`nn/`,
-//!    `coordinator/`).
+//!    `coordinator/`, `serve/`).
 //!
 //! Matching runs on comment- and string-stripped source so prose like
 //! "the unsafe kernels" never trips a rule. `--self-test` seeds one
@@ -51,6 +51,7 @@ const DECLARED_SAFE: &[&str] = &[
     "gemm/epilogue.rs",
     "nn/",
     "coordinator/",
+    "serve/",
 ];
 
 /// How many lines above an `unsafe` block may hold its SAFETY comment
